@@ -1,0 +1,43 @@
+//! N-Queens (§6.2): irregular task generation via pruning, spawn-only
+//! (`GTAP_ASSUME_NO_TASKWAIT`), solutions accumulated with `atomic_add`.
+//! Compares the GPU model against the simulated 72-core CPU comparator and
+//! single-worker baseline — the paper's headline case (14.6x at n=16).
+//!
+//! ```sh
+//! cargo run --release --example nqueens -- [--n 11] [--cutoff 5]
+//! ```
+
+use gtap::bench::runners::{self, Exec};
+use gtap::util::cli::Args;
+use gtap::util::stats::fmt_time;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let n: i64 = args.get_or("n", 12);
+    let cutoff: i64 = args.get_or("cutoff", 7.min(n - 2).max(1));
+
+    println!("N-Queens n={n}, task cutoff depth {cutoff}");
+    let gpu = runners::run_nqueens(
+        &Exec::gpu_thread(250, 32).no_taskwait(),
+        n,
+        cutoff,
+        false,
+    )?;
+    let cpu = runners::run_nqueens(&Exec::cpu72().no_taskwait(), n, cutoff, false)?;
+    let seq = runners::run_nqueens(&Exec::cpu_seq().no_taskwait(), n, cutoff, false)?;
+
+    println!(
+        "solutions: {} ({} tasks)",
+        gtap::workloads::nqueens::reference(n),
+        gpu.stats.tasks_finished
+    );
+    println!("GTaP (gpu, 250x32 warps): {}", fmt_time(gpu.seconds));
+    println!("OpenMP-like (cpu72):      {}", fmt_time(cpu.seconds));
+    println!("CPU sequential:           {}", fmt_time(seq.seconds));
+    println!(
+        "speedup vs cpu72: {:.2}x | vs sequential: {:.2}x",
+        cpu.seconds / gpu.seconds,
+        seq.seconds / gpu.seconds
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: compile the paper's Program-4 Fibonacci with `gtapc`, show
+//! the state-machine transformation (Program 6), and run it GPU-resident.
+//!
+//! ```sh
+//! cargo run --release --example quickstart -- [--n 20]
+//! ```
+
+use gtap::compiler::{self, pretty};
+use gtap::coordinator::{GtapConfig, Session};
+use gtap::ir::types::Value;
+use gtap::sim::DeviceSpec;
+use gtap::util::cli::Args;
+
+const FIB: &str = r#"
+#pragma gtap function
+int fib(int n) {
+    if (n < 2) return n;
+    int a; int b;
+    #pragma gtap task queue((n - 1) < 2 ? 1 : 0)
+    a = fib(n - 1);
+    #pragma gtap task queue((n - 2) < 2 ? 1 : 0)
+    b = fib(n - 2);
+    #pragma gtap taskwait queue(2)
+    return a + b;
+}
+"#;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let n: i64 = args.get_or("n", 20);
+
+    println!("== GTaP-C source (Program 4) =={FIB}");
+    let module = compiler::compile_default(FIB).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("== gtapc state-machine transformation (cf. Program 6) ==\n");
+    println!("{}", pretty::render_module(&module));
+
+    let cfg = GtapConfig {
+        grid_size: 128,
+        block_size: 32,
+        num_queues: 3, // the queue() clauses above use EPAQ indices 0..2
+        ..Default::default()
+    };
+    let mut session = Session::compile(FIB, cfg, DeviceSpec::h100())?;
+    let stats = session.run("fib", &[Value::from_i64(n)])?;
+    println!("== run ==");
+    println!(
+        "fib({n}) = {} | {} tasks, {} segments, {} steals | simulated {:.3} us",
+        stats.root_result.unwrap().as_i64(),
+        stats.tasks_finished,
+        stats.segments,
+        stats.steals_ok,
+        stats.seconds * 1e6,
+    );
+    assert_eq!(
+        stats.root_result.unwrap().as_i64(),
+        gtap::workloads::fib::reference(n)
+    );
+    println!("OK");
+    Ok(())
+}

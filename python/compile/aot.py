@@ -1,0 +1,63 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* -> artifacts/.
+
+HLO text (NOT ``lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()``)
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which the Rust side's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    lowered = jax.jit(model.warp_payload).lower(*model.example_args())
+    text = to_hlo_text(lowered)
+    path = os.path.join(args.out_dir, "payload.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest = {
+        "payload.hlo.txt": {
+            "entry": "warp_payload",
+            "lanes": model.LANES,
+            "inputs": [
+                "seeds i64[32]",
+                "mem_ops i64[1]",
+                "compute_iters i64[1]",
+                "table f64[1024]",
+            ],
+            "outputs": ["values f64[32]", "checksums i64[32]"],
+            "interpret_pallas": True,
+        }
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(text)} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""L1: the warp-payload Pallas kernel.
+
+The paper's compute hot spot is a warp executing 32 independent
+``do_memory_and_compute`` task payloads in SIMT lockstep. On TPU-like
+hardware there are no warps; the kernel rethinks the insight as
+**batch-and-mask** (DESIGN.md §Hardware-Adaptation): lane-major ``(32,)``
+arrays live in VMEM, the pseudo-random walk and the FMA chain run as
+``fori_loop``s *vectorized across all lanes at once* on the vector unit,
+and the loop trip counts are uniform per call — the divergence-serialization
+effect (mixed trip counts cost ``max`` over the batch) is exactly what EPAQ
+removes by making batches uniform.
+
+``interpret=True`` is mandatory here: real-TPU lowering emits a Mosaic
+custom-call that the CPU PJRT client cannot execute; interpret mode lowers
+to plain HLO, which is what the Rust runtime loads (see
+``/opt/xla-example/README.md``).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import FMA_ADD, FMA_MUL, LANES, LCG_ADD, LCG_MUL, TABLE_SIZE
+
+jax.config.update("jax_enable_x64", True)
+
+MASK64 = jnp.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def _payload_kernel(seeds_ref, mem_ops_ref, iters_ref, table_ref, out_ref):
+    """One warp's payloads: (LANES,) seeds -> (LANES,) f64 results."""
+    seeds = seeds_ref[...].astype(jnp.uint64)
+    mem_ops = mem_ops_ref[0]
+    iters = iters_ref[0]
+    table = table_ref[...]
+
+    # pseudo-random gather walk (LCG over u64, uniform trip count per call)
+    def mem_body(_, carry):
+        idx, acc = carry
+        idx = idx * jnp.uint64(LCG_MUL) + jnp.uint64(LCG_ADD)
+        slot = (idx >> jnp.uint64(33)).astype(jnp.int64) % TABLE_SIZE
+        return idx, acc + table[slot]
+
+    idx0 = seeds
+    acc0 = jnp.zeros((LANES,), dtype=jnp.float64)
+    _, acc = jax.lax.fori_loop(0, jnp.maximum(mem_ops, 0), mem_body, (idx0, acc0))
+
+    x = acc + (seeds_ref[...].astype(jnp.int64) % 97).astype(jnp.float64) * 1e-3
+
+    # dependent FMA chain (the MXU/vector-unit compute phase)
+    def fma_body(_, x):
+        return x * FMA_MUL + FMA_ADD
+
+    x = jax.lax.fori_loop(0, jnp.maximum(iters, 0), fma_body, x)
+    out_ref[...] = x
+
+
+def payload_warp(seeds, mem_ops, compute_iters, table):
+    """Pallas entry: seeds i64[LANES], mem_ops/compute_iters i64[1],
+    table f64[TABLE_SIZE] -> f64[LANES]."""
+    return pl.pallas_call(
+        _payload_kernel,
+        out_shape=jax.ShapeDtypeStruct((LANES,), jnp.float64),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(seeds, mem_ops, compute_iters, table)

@@ -1,0 +1,67 @@
+"""Pure-numpy oracle for the payload kernel — the CORE correctness signal.
+
+``do_memory_and_compute`` (paper §6.3): ``mem_ops`` pseudo-random 64-bit
+gathers from a fixed table followed by ``compute_iters`` dependent FP64
+FMAs. The arithmetic here must match, bit for bit:
+
+* ``rust/src/sim/intrinsics.rs::payload_native`` (the simulator's native
+  path), and
+* ``kernels/payload.py`` (the Pallas kernel lowered to the AOT artifact).
+
+All three share the constants below; an integration test on the Rust side
+executes the AOT artifact via PJRT and compares against its native twin.
+"""
+
+import numpy as np
+
+TABLE_SIZE = 1024
+LCG_MUL = np.uint64(6364136223846793005)
+LCG_ADD = np.uint64(1442695040888963407)
+FMA_MUL = 1.000000119
+FMA_ADD = 0.0000007
+LANES = 32
+
+
+def _splitmix64(x: np.uint64) -> np.uint64:
+    """SplitMix64 mix — must match rust util::prng::mix64."""
+    with np.errstate(over="ignore"):
+        z = (x + np.uint64(0x9E3779B97F4A7C15)) & np.uint64(0xFFFFFFFFFFFFFFFF)
+        z = ((z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)) & np.uint64(
+            0xFFFFFFFFFFFFFFFF
+        )
+        z = ((z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)) & np.uint64(
+            0xFFFFFFFFFFFFFFFF
+        )
+        return z ^ (z >> np.uint64(31))
+
+
+def payload_table() -> np.ndarray:
+    """table[i] = (mix64(i) >> 11) * 2^-53, uniform in [0, 1)."""
+    idx = np.arange(TABLE_SIZE, dtype=np.uint64)
+    mixed = np.array([_splitmix64(i) for i in idx], dtype=np.uint64)
+    return (mixed >> np.uint64(11)).astype(np.float64) * (1.0 / float(1 << 53))
+
+
+_TABLE = payload_table()
+
+
+def payload_ref(seed: int, mem_ops: int, compute_iters: int) -> float:
+    """Scalar reference, mirroring rust payload_native exactly."""
+    idx = np.uint64(seed % (1 << 64))
+    acc = 0.0
+    with np.errstate(over="ignore"):
+        for _ in range(max(mem_ops, 0)):
+            idx = (idx * LCG_MUL + LCG_ADD) & np.uint64(0xFFFFFFFFFFFFFFFF)
+            acc += float(_TABLE[int(idx >> np.uint64(33)) % TABLE_SIZE])
+    x = acc + (seed % 97) * 1e-3
+    for _ in range(max(compute_iters, 0)):
+        x = x * FMA_MUL + FMA_ADD
+    return x
+
+
+def payload_warp_ref(seeds, mem_ops: int, compute_iters: int) -> np.ndarray:
+    """Vectorized-over-lanes reference: one payload per lane."""
+    return np.array(
+        [payload_ref(int(s), mem_ops, compute_iters) for s in seeds],
+        dtype=np.float64,
+    )

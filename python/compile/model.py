@@ -1,0 +1,38 @@
+"""L2: the JAX compute graph around the L1 kernel.
+
+The "model" of this systems paper is the warp-step payload computation: a
+batch of 32 lane seeds runs through the Pallas `payload_warp` kernel, and
+the graph additionally produces the quantized checksum contributions the
+GTaP workloads accumulate (`(int)(x * 2^20)`, see
+`rust/src/workloads/tree.rs`), fused into the same HLO so the Rust hot path
+gets both in one PJRT execution.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.payload import LANES, payload_warp
+
+jax.config.update("jax_enable_x64", True)
+
+CHECKSUM_SCALE = 1048576.0
+
+
+def warp_payload(seeds, mem_ops, compute_iters, table):
+    """(seeds i64[32], mem_ops i64[1], compute_iters i64[1],
+    table f64[1024]) -> (values f64[32], checksums i64[32])."""
+    values = payload_warp(seeds, mem_ops, compute_iters, table)
+    checksums = (values * CHECKSUM_SCALE).astype(jnp.int64)
+    return values, checksums
+
+
+def example_args():
+    """Example arguments fixing the AOT shapes."""
+    from .kernels.ref import TABLE_SIZE
+
+    return (
+        jax.ShapeDtypeStruct((LANES,), jnp.int64),
+        jax.ShapeDtypeStruct((1,), jnp.int64),
+        jax.ShapeDtypeStruct((1,), jnp.int64),
+        jax.ShapeDtypeStruct((TABLE_SIZE,), jnp.float64),
+    )

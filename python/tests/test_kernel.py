@@ -1,0 +1,122 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+The Pallas kernel (interpret mode) must agree with the pure-numpy oracle
+bit-for-bit on the LCG walk and to float ulps on the FMA chain; hypothesis
+sweeps seeds and loop sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.payload import payload_warp
+from compile.kernels.ref import (
+    LANES,
+    TABLE_SIZE,
+    payload_ref,
+    payload_table,
+    payload_warp_ref,
+)
+
+jax.config.update("jax_enable_x64", True)
+
+TABLE = jnp.asarray(payload_table())
+
+
+def run_kernel(seeds, mem_ops, iters):
+    seeds = jnp.asarray(seeds, dtype=jnp.int64)
+    return np.asarray(
+        payload_warp(
+            seeds,
+            jnp.asarray([mem_ops], dtype=jnp.int64),
+            jnp.asarray([iters], dtype=jnp.int64),
+            TABLE,
+        )
+    )
+
+
+def test_table_properties():
+    t = payload_table()
+    assert t.shape == (TABLE_SIZE,)
+    assert ((0.0 <= t) & (t < 1.0)).all()
+    # the table must not be degenerate
+    assert len(np.unique(t)) > TABLE_SIZE // 2
+
+
+def test_zero_ops_is_seed_residue():
+    seeds = np.arange(LANES, dtype=np.int64)
+    out = run_kernel(seeds, 0, 0)
+    want = (seeds % 97).astype(np.float64) * 1e-3
+    np.testing.assert_array_equal(out, want)
+
+
+def test_matches_reference_basic():
+    seeds = np.arange(LANES, dtype=np.int64) * 7919 + 3
+    out = run_kernel(seeds, 16, 100)
+    want = payload_warp_ref(seeds, 16, 100)
+    np.testing.assert_allclose(out, want, rtol=1e-12, atol=0)
+
+
+def test_mem_walk_exact():
+    # mem phase only: gather sums must be exactly equal (integer table path)
+    seeds = np.array([42] * LANES, dtype=np.int64)
+    out = run_kernel(seeds, 64, 0)
+    want = payload_warp_ref(seeds, 64, 0)
+    np.testing.assert_array_equal(out, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed0=st.integers(min_value=0, max_value=2**31 - 1),
+    mem_ops=st.integers(min_value=0, max_value=96),
+    iters=st.integers(min_value=0, max_value=512),
+)
+def test_matches_reference_hypothesis(seed0, mem_ops, iters):
+    seeds = (np.arange(LANES, dtype=np.int64) * 2654435761 + seed0) % (2**31)
+    out = run_kernel(seeds, mem_ops, iters)
+    want = payload_warp_ref(seeds, mem_ops, iters)
+    np.testing.assert_allclose(out, want, rtol=1e-12, atol=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_lanes_independent(seed):
+    # each lane's value depends only on its own seed
+    seeds = np.full(LANES, seed, dtype=np.int64)
+    out_uniform = run_kernel(seeds, 8, 8)
+    assert (out_uniform == out_uniform[0]).all()
+    seeds2 = seeds.copy()
+    seeds2[5] = seed ^ 0x5A5A
+    out_mixed = run_kernel(seeds2, 8, 8)
+    mask = np.ones(LANES, bool)
+    mask[5] = False
+    np.testing.assert_array_equal(out_mixed[mask], out_uniform[mask])
+    if seeds2[5] != seeds[5]:
+        assert out_mixed[5] != out_uniform[5]
+
+
+def test_seed_sensitivity():
+    a = run_kernel(np.full(LANES, 1, np.int64), 32, 32)
+    b = run_kernel(np.full(LANES, 2, np.int64), 32, 32)
+    assert (a != b).all()
+
+
+def test_monotone_fma_growth():
+    # FMA constants are > 1 multiplier with positive add: more iters -> larger
+    seeds = np.full(LANES, 11, np.int64)
+    x1 = run_kernel(seeds, 4, 10)
+    x2 = run_kernel(seeds, 4, 1000)
+    assert (x2 > x1).all()
+
+
+def test_scalar_ref_known_value():
+    # Pin one value so any constant drift is caught loudly. XLA:CPU may
+    # contract the mul+add into a true FMA (one rounding) while the numpy
+    # oracle rounds twice, so agreement is to a few ulps, not bit-exact —
+    # the same tolerance the Rust artifact cross-check uses.
+    v = payload_ref(42, 4, 8)
+    got = run_kernel(np.full(LANES, 42, np.int64), 4, 8)[0]
+    assert got == pytest.approx(v, rel=1e-14)

@@ -1,0 +1,89 @@
+//! Design-choice ablations beyond the paper's own (DESIGN.md calls these
+//! out): quantify each mechanism's contribution on Fibonacci and the
+//! synthetic tree.
+//!
+//! 1. **Immediate-execution buffer** (§4.3.2 "keeps up to 32 newly
+//!    generated tasks for immediate execution"): disabling routes every
+//!    child through the deque — extra push/pop traffic per task.
+//! 2. **Steal batch size** (Algorithm 1's `max_count_to_pop` on the steal
+//!    side): steal-one (classic Chase–Lev discipline) vs stealing a full
+//!    warp batch.
+//! 3. **Hierarchical locality-aware stealing** (paper §7 future work):
+//!    probe same-SM victims first; intra-SM steals are cheaper (one L2
+//!    slice). Implemented as `GtapConfig::locality_aware_steal`.
+
+use gtap::bench::emit::{markdown_table, write_csv, Series};
+use gtap::bench::runners::{self, Exec};
+use gtap::bench::sweep::{full_scale, measure};
+use gtap::util::stats::Summary;
+
+fn main() {
+    let fib_n = if full_scale() { 30 } else { 26 };
+    let tree_d = if full_scale() { 16 } else { 12 };
+    let grid = 250;
+
+    let variants: Vec<(&str, Box<dyn Fn(Exec) -> Exec>)> = vec![
+        ("baseline", Box::new(|e: Exec| e)),
+        (
+            "no-immediate-buffer",
+            Box::new(|mut e: Exec| {
+                e.cfg.immediate_buffer = false;
+                e
+            }),
+        ),
+        (
+            "steal-one",
+            Box::new(|mut e: Exec| {
+                e.cfg.steal_max = Some(1);
+                e
+            }),
+        ),
+        (
+            "locality-aware-steal",
+            Box::new(|mut e: Exec| {
+                e.cfg.locality_aware_steal = true;
+                e
+            }),
+        ),
+    ];
+
+    let benches: Vec<(&str, Box<dyn Fn(&Exec) -> f64>)> = vec![
+        (
+            "fib",
+            Box::new(move |e: &Exec| runners::run_fib(e, fib_n, 0, false).unwrap().seconds),
+        ),
+        (
+            "tree",
+            Box::new(move |e: &Exec| {
+                runners::run_full_tree(e, tree_d, 64, 256, None).unwrap().seconds
+            }),
+        ),
+    ];
+
+    let mut series: Vec<Series> = vec![];
+    for (bname, run) in &benches {
+        let mut points: Vec<(f64, Summary)> = vec![];
+        let mut baseline_median = 0.0;
+        println!("\n## ablations_{bname}\n");
+        for (i, (vname, tweak)) in variants.iter().enumerate() {
+            let s = measure(|seed| run(&tweak(Exec::gpu_thread(grid, 32).seed(seed))));
+            if i == 0 {
+                baseline_median = s.median;
+            }
+            println!(
+                "  {vname:22} {:.4e} s  ({:+.1}% vs baseline)",
+                s.median,
+                100.0 * (s.median - baseline_median) / baseline_median
+            );
+            points.push((i as f64, s));
+        }
+        series.push(Series {
+            label: bname.to_string(),
+            points,
+        });
+    }
+    println!("\n(variant index: 0=baseline, 1=no-immediate-buffer, 2=steal-one, 3=locality-aware)\n");
+    println!("{}", markdown_table("variant", &series));
+    let p = write_csv("ablations", &series).unwrap();
+    println!("wrote {}", p.display());
+}

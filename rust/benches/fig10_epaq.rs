@@ -1,0 +1,112 @@
+//! Figure 10: effect of EPAQ across cutoff depths — normalized execution
+//! time relative to the 1-queue configuration (EPAQ disabled).
+//!
+//! Fibonacci uses three queues (non-cutoff / cutoff-serial / post-taskwait
+//! continuation), N-Queens two (non-cutoff vs cutoff rows), Cilksort three
+//! (non-cutoff / serial-sort / serial-merge). Expected shape (§6.4): ~1.8×
+//! speedup on Fibonacci, no significant difference on N-Queens/Cilksort.
+
+use gtap::bench::emit::{markdown_table, write_csv, Series};
+use gtap::bench::runners::{self, Exec};
+use gtap::bench::settings::grid;
+use gtap::bench::sweep::{full_scale, measure};
+
+fn compare(
+    name: &str,
+    queues: usize,
+    xs: &[i64],
+    run: &dyn Fn(&Exec, i64, bool, u64) -> f64,
+) {
+    let g = grid(2000);
+    let mk = |label: &str, epaq: bool, nq: usize| Series {
+        label: label.to_string(),
+        points: xs
+            .iter()
+            .map(|&x| {
+                (
+                    x as f64,
+                    measure(|seed| {
+                        run(&Exec::gpu_thread(g, 32).queues(nq).seed(seed), x, epaq, seed)
+                    }),
+                )
+            })
+            .collect(),
+    };
+    let series = vec![mk("1-queue", false, 1), mk("epaq", true, queues)];
+    println!("\n## fig10_{name} (seconds; x = cutoff)\n");
+    println!("{}", markdown_table("cutoff", &series));
+    println!("normalized time epaq / 1-queue (<1 = EPAQ faster):");
+    for (i, &x) in xs.iter().enumerate() {
+        println!(
+            "  cutoff {x}: {:.3}",
+            series[1].points[i].1.median / series[0].points[i].1.median
+        );
+    }
+    let p = write_csv(&format!("fig10_{name}"), &series).unwrap();
+    println!("wrote {}", p.display());
+}
+
+fn main() {
+    // EPAQ's fib benefit needs deep oversubscription (the paper's n=40 /
+    // 4000x32 warps, Table 3): batches then genuinely mix serial-cutoff,
+    // recursive and continuation path classes. We keep the paper's grid
+    // and scale n in quick mode (DESIGN.md §8).
+    let fib_n = if full_scale() { 40 } else { 36 };
+    let fib_cutoffs: Vec<i64> = if full_scale() {
+        vec![6, 8, 10, 12, 14]
+    } else {
+        vec![8, 10, 12, 14]
+    };
+    {
+        let g = 4000;
+        let mk = |label: &str, epaq: bool, nq: usize| Series {
+            label: label.to_string(),
+            points: fib_cutoffs
+                .iter()
+                .map(|&x| {
+                    (
+                        x as f64,
+                        measure(|seed| {
+                            runners::run_fib(
+                                &Exec::gpu_thread(g, 32).queues(nq).seed(seed),
+                                fib_n,
+                                x,
+                                epaq,
+                            )
+                            .unwrap()
+                            .seconds
+                        }),
+                    )
+                })
+                .collect(),
+        };
+        let series = vec![mk("1-queue", false, 1), mk("epaq", true, 3)];
+        println!("\n## fig10_fibonacci (seconds; x = cutoff; n={fib_n}, grid={g})\n");
+        println!("{}", markdown_table("cutoff", &series));
+        println!("normalized time epaq / 1-queue (<1 = EPAQ faster):");
+        for (i, &x) in fib_cutoffs.iter().enumerate() {
+            println!(
+                "  cutoff {x}: {:.3}",
+                series[1].points[i].1.median / series[0].points[i].1.median
+            );
+        }
+        let p = write_csv("fig10_fibonacci", &series).unwrap();
+        println!("wrote {}", p.display());
+    }
+
+    let nq_n = if full_scale() { 13 } else { 11 };
+    let nq_cutoffs: Vec<i64> = vec![3, 4, 5, 6];
+    compare("nqueens", 2, &nq_cutoffs, &|e, depth, epaq, _| {
+        runners::run_nqueens(&e.clone().no_taskwait(), nq_n, depth, epaq)
+            .unwrap()
+            .seconds
+    });
+
+    let sort_n: usize = if full_scale() { 1 << 18 } else { 1 << 14 };
+    let sort_cutoffs: Vec<i64> = vec![32, 64, 128, 256];
+    compare("cilksort", 3, &sort_cutoffs, &|e, cutoff, epaq, seed| {
+        runners::run_cilksort(e, sort_n, cutoff, cutoff * 4, epaq, seed)
+            .unwrap()
+            .seconds
+    });
+}

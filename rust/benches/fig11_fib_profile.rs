@@ -1,0 +1,68 @@
+//! Figure 11: Fibonacci profiling with and without EPAQ (paper: n=40,
+//! cutoff=10; scaled here). EPAQ cuts the tail of per-warp task-function
+//! time per persistent-kernel loop by separating serial cutoff tasks,
+//! pre-join recursion and post-join continuations into different queues —
+//! fewer control paths per warp, less intra-warp serialization.
+
+use gtap::bench::emit::write_text;
+use gtap::bench::runners::{self, Exec};
+use gtap::bench::settings::grid;
+use gtap::bench::sweep::{full_scale, measure};
+
+fn main() {
+    // paper setting: n=40, cutoff=10, 4000x32 warps (n scaled in quick mode)
+    let n = if full_scale() { 40 } else { 36 };
+    let cutoff = 10;
+    let g = 4000;
+    let _ = grid(0); // (grid() reserved for the other figures)
+
+    let mut report = String::new();
+    for (label, epaq, queues) in [("1-queue", false, 1usize), ("epaq", true, 3)] {
+        let exec = Exec::gpu_thread(g, 32).queues(queues).profiled();
+        let out = runners::run_fib(&exec, n, cutoff, epaq).unwrap();
+        let qs = out
+            .profiler
+            .busy_time_percentiles(&[0.5, 0.9, 0.99, 1.0]);
+        let groups: f64 = {
+            let busy: Vec<_> = out.profiler.events.iter().filter(|e| e.busy > 0).collect();
+            busy.iter().map(|e| e.path_groups as f64).sum::<f64>() / busy.len().max(1) as f64
+        };
+        println!(
+            "{label:8}: {:.4e} s | busy-cycles p50 {:.0}  p90 {:.0}  p99 {:.0}  max {:.0} | \
+             mean path groups/warp {groups:.2}",
+            out.seconds, qs[0], qs[1], qs[2], qs[3]
+        );
+        report.push_str(&format!(
+            "{label},{},{},{},{},{},{groups}\n",
+            out.seconds, qs[0], qs[1], qs[2], qs[3]
+        ));
+        // per-warp busy-time distribution CSV (the bottom-right histogram)
+        let mut csv = String::from("busy_cycles\n");
+        for e in out.profiler.events.iter().filter(|e| e.busy > 0) {
+            csv.push_str(&format!("{}\n", e.busy));
+        }
+        let p = write_text(&format!("fig11_busytime_{label}.csv"), &csv).unwrap();
+        println!("          wrote {}", p.display());
+    }
+    write_text(
+        "fig11_summary.csv",
+        &format!("label,seconds,p50,p90,p99,max,path_groups\n{report}"),
+    )
+    .unwrap();
+
+    // headline claim: EPAQ speedup on fib
+    let t1 = measure(|seed| {
+        runners::run_fib(&Exec::gpu_thread(g, 32).queues(1).seed(seed), n, cutoff, false)
+            .unwrap()
+            .seconds
+    });
+    let te = measure(|seed| {
+        runners::run_fib(&Exec::gpu_thread(g, 32).queues(3).seed(seed), n, cutoff, true)
+            .unwrap()
+            .seconds
+    });
+    println!(
+        "\nEPAQ speedup on fib(n={n}, cutoff={cutoff}): {:.2}x (paper: up to 1.8x)",
+        t1.median / te.median
+    );
+}

@@ -1,0 +1,116 @@
+//! Figure 3: work stealing vs the global-queue approach, sweeping the
+//! worker count (grid size) at fixed block sizes (32 and 256).
+//!
+//! (a) block-level workers on Full Binary Tree (compute-heavy and
+//!     memory-heavy variants); (b) thread-level workers on Fibonacci,
+//!     N-Queens and Cilksort. Expected shape: work stealing ~1/P then
+//!     saturation; global queue flat-lines early from contention on the
+//!     shared queue words.
+
+use gtap::bench::emit::{markdown_table, write_csv, Series};
+use gtap::bench::runners::{self, Exec};
+use gtap::bench::sweep::{full_scale, measure};
+use gtap::coordinator::SchedulerKind;
+
+fn grids() -> Vec<usize> {
+    if full_scale() {
+        vec![1, 4, 16, 64, 256, 1024, 4096]
+    } else {
+        vec![1, 4, 16, 64, 256]
+    }
+}
+
+fn sweep(
+    label: &str,
+    kind: SchedulerKind,
+    block: usize,
+    run: &dyn Fn(Exec) -> f64,
+    mk: &dyn Fn(usize, usize) -> Exec,
+) -> Series {
+    let points = grids()
+        .into_iter()
+        .map(|g| {
+            let s = measure(|seed| run(mk(g, block).scheduler(kind).seed(seed)));
+            (g as f64, s)
+        })
+        .collect();
+    Series {
+        label: format!("{label}/b{block}"),
+        points,
+    }
+}
+
+fn main() {
+    let mut all: Vec<(String, Vec<Series>)> = vec![];
+
+    // (a) block-level: Full Binary Tree, compute-heavy & memory-heavy
+    let depth = if full_scale() { 12 } else { 9 };
+    for (variant, mem, comp) in [("compute", 0i64, 2048i64), ("memory", 512, 0)] {
+        let mut series = vec![];
+        for block in [32usize, 256] {
+            for (label, kind) in [
+                ("ws", SchedulerKind::WorkStealing),
+                ("gq", SchedulerKind::GlobalQueue),
+            ] {
+                series.push(sweep(
+                    label,
+                    kind,
+                    block,
+                    &|e| {
+                        runners::run_full_tree(&e, depth, mem / e.cfg.block_size as i64 * e.cfg.block_size as i64, comp, None)
+                            .unwrap()
+                            .seconds
+                    },
+                    &Exec::gpu_block,
+                ));
+            }
+        }
+        all.push((format!("fig3a_fbt_{variant}"), series));
+    }
+
+    // (b) thread-level: Fibonacci, N-Queens, Cilksort
+    let fib_n = if full_scale() { 26 } else { 22 };
+    let nq_n = if full_scale() { 12 } else { 10 };
+    let sort_n = if full_scale() { 1 << 18 } else { 1 << 14 };
+    for (name, run) in [
+        (
+            "fib",
+            Box::new(move |e: Exec| runners::run_fib(&e, fib_n, 0, false).unwrap().seconds)
+                as Box<dyn Fn(Exec) -> f64>,
+        ),
+        (
+            "nqueens",
+            Box::new(move |e: Exec| {
+                runners::run_nqueens(&e.no_taskwait(), nq_n, 4, false)
+                    .unwrap()
+                    .seconds
+            }),
+        ),
+        (
+            "cilksort",
+            Box::new(move |e: Exec| {
+                runners::run_cilksort(&e, sort_n, 64, 256, false, 99)
+                    .unwrap()
+                    .seconds
+            }),
+        ),
+    ] {
+        let mut series = vec![];
+        for block in [32usize, 256] {
+            for (label, kind) in [
+                ("ws", SchedulerKind::WorkStealing),
+                ("gq", SchedulerKind::GlobalQueue),
+            ] {
+                series.push(sweep(label, kind, block, run.as_ref(), &Exec::gpu_thread));
+            }
+        }
+        all.push((format!("fig3b_{name}"), series));
+    }
+
+    for (name, series) in &all {
+        println!("\n## {name} (seconds, median [IQR]; x = grid size)\n");
+        println!("{}", markdown_table("grid", series));
+        let p = write_csv(name, series).expect("write csv");
+        println!("wrote {}", p.display());
+    }
+}

@@ -1,0 +1,87 @@
+//! Figure 4: warp-cooperative batched pop/steal (Algorithm 1) vs
+//! element-at-a-time Chase–Lev operations sequentialized within the warp,
+//! sweeping the worker count on Fibonacci, N-Queens and Cilksort
+//! (thread-level workers).
+//!
+//! Expected shape: batched wins almost everywhere; at very large P the
+//! Chase–Lev baseline crosses over (its owner pops avoid the CAS on the
+//! shared `count` word), yet the best time over the sweep stays with the
+//! batched design.
+
+use gtap::bench::emit::{markdown_table, write_csv, Series};
+use gtap::bench::runners::{self, Exec};
+use gtap::bench::sweep::{full_scale, measure};
+use gtap::coordinator::SchedulerKind;
+
+fn main() {
+    let grids: Vec<usize> = if full_scale() {
+        vec![1, 4, 16, 64, 256, 1024, 2048, 4096]
+    } else {
+        vec![1, 4, 16, 64, 256, 512]
+    };
+    let fib_n = if full_scale() { 26 } else { 22 };
+    let nq_n = if full_scale() { 12 } else { 10 };
+    let sort_n = if full_scale() { 1 << 18 } else { 1 << 14 };
+
+    let benches: Vec<(&str, Box<dyn Fn(Exec) -> f64>)> = vec![
+        (
+            "fib",
+            Box::new(move |e: Exec| runners::run_fib(&e, fib_n, 0, false).unwrap().seconds),
+        ),
+        (
+            "nqueens",
+            Box::new(move |e: Exec| {
+                runners::run_nqueens(&e.no_taskwait(), nq_n, 4, false)
+                    .unwrap()
+                    .seconds
+            }),
+        ),
+        (
+            "cilksort",
+            Box::new(move |e: Exec| {
+                runners::run_cilksort(&e, sort_n, 64, 256, false, 99)
+                    .unwrap()
+                    .seconds
+            }),
+        ),
+    ];
+
+    for (name, run) in &benches {
+        let mut series = vec![];
+        for (label, kind) in [
+            ("batched", SchedulerKind::WorkStealing),
+            ("seq-chaselev", SchedulerKind::SequentialChaseLev),
+        ] {
+            let points = grids
+                .iter()
+                .map(|&g| {
+                    let s = measure(|seed| {
+                        run(Exec::gpu_thread(g, 32).scheduler(kind).seed(seed))
+                    });
+                    (g as f64, s)
+                })
+                .collect();
+            series.push(Series {
+                label: label.to_string(),
+                points,
+            });
+        }
+        // the paper's summary claim: best-over-sweep is lower for batched
+        let best = |s: &Series| {
+            s.points
+                .iter()
+                .map(|(_, sm)| sm.median)
+                .fold(f64::INFINITY, f64::min)
+        };
+        println!("\n## fig4_{name} (seconds; x = grid size)\n");
+        println!("{}", markdown_table("grid", &series));
+        println!(
+            "best(batched) = {:.4e}  best(seq-chaselev) = {:.4e}  batched wins: {}",
+            best(&series[0]),
+            best(&series[1]),
+            best(&series[0]) < best(&series[1]),
+        );
+        let p = write_csv(&format!("fig4_{name}"), &series).unwrap();
+        println!("wrote {}", p.display());
+    }
+}

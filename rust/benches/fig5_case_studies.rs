@@ -1,0 +1,157 @@
+//! Figure 5: execution time across problem sizes for the four case studies
+//! (Fibonacci, N-Queens, Mergesort, Cilksort) — GTaP on the GPU model vs
+//! the 72-core CPU task runtime vs single-worker CPU (top: absolute,
+//! bottom: normalized to GTaP).
+//!
+//! Expected shapes (§6.2): fib — GTaP loses small n, overtakes around
+//! n≈28-equivalent; nqueens — GTaP increasingly ahead (paper: 14.6× at
+//! n=16); mergesort — GTaP *much* slower at scale (serial merge tail;
+//! paper: 103× at 10⁷); cilksort — GTaP modestly ahead (memory bound).
+//! Sizes are scaled per DESIGN.md §8.
+
+use gtap::bench::emit::{markdown_table, write_csv, Series};
+use gtap::bench::runners::{self, Exec};
+use gtap::bench::settings::grid;
+use gtap::bench::sweep::{full_scale, measure};
+
+fn three_way(
+    name: &str,
+    xs: &[i64],
+    gtap: &dyn Fn(i64, u64) -> f64,
+    cpu: &dyn Fn(i64, u64) -> f64,
+    seq: &dyn Fn(i64, u64) -> f64,
+) {
+    let mk = |label: &str, f: &dyn Fn(i64, u64) -> f64| Series {
+        label: label.to_string(),
+        points: xs
+            .iter()
+            .map(|&x| (x as f64, measure(|seed| f(x, seed))))
+            .collect(),
+    };
+    let series = vec![mk("GTaP(gpu)", gtap), mk("OpenMP(cpu72)", cpu), mk("CPU-seq", seq)];
+    println!("\n## fig5_{name} (seconds; x = problem size)\n");
+    println!("{}", markdown_table("size", &series));
+    // normalized-to-GTaP rows (the bottom half of Fig. 5)
+    println!("normalized to GTaP (>1 = GTaP faster):");
+    for (i, &x) in xs.iter().enumerate() {
+        let g = series[0].points[i].1.median;
+        println!(
+            "  {x}: cpu72 {:.2}x  seq {:.2}x",
+            series[1].points[i].1.median / g,
+            series[2].points[i].1.median / g
+        );
+    }
+    let p = write_csv(&format!("fig5_{name}"), &series).unwrap();
+    println!("wrote {}", p.display());
+}
+
+fn main() {
+    // Fibonacci: no cutoff — a task per call (Table 3: 4000x32 thread)
+    let fib_ns: Vec<i64> = if full_scale() {
+        vec![16, 20, 24, 26, 28, 30]
+    } else {
+        vec![16, 20, 22, 24]
+    };
+    let g = grid(4000);
+    three_way(
+        "fibonacci",
+        &fib_ns,
+        &|n, seed| {
+            runners::run_fib(&Exec::gpu_thread(g, 32).seed(seed), n, 0, false)
+                .unwrap()
+                .seconds
+        },
+        &|n, seed| {
+            runners::run_fib(&Exec::cpu72().seed(seed), n, 0, false)
+                .unwrap()
+                .seconds
+        },
+        &|n, seed| {
+            runners::run_fib(&Exec::cpu_seq().seed(seed), n, 0, false)
+                .unwrap()
+                .seconds
+        },
+    );
+
+    // N-Queens: cutoff depth 7 scaled to min(n-2, 7); ASSUME_NO_TASKWAIT
+    let nq_ns: Vec<i64> = if full_scale() {
+        vec![8, 9, 10, 11, 12, 13]
+    } else {
+        vec![8, 9, 10, 11]
+    };
+    let g = grid(2000);
+    let depth_for = |n: i64| 7.min(n - 2).max(1);
+    three_way(
+        "nqueens",
+        &nq_ns,
+        &|n, seed| {
+            runners::run_nqueens(
+                &Exec::gpu_thread(g, 32).no_taskwait().seed(seed),
+                n,
+                depth_for(n),
+                false,
+            )
+            .unwrap()
+            .seconds
+        },
+        &|n, seed| {
+            runners::run_nqueens(&Exec::cpu72().no_taskwait().seed(seed), n, depth_for(n), false)
+                .unwrap()
+                .seconds
+        },
+        &|n, seed| {
+            runners::run_nqueens(&Exec::cpu_seq().no_taskwait().seed(seed), n, depth_for(n), false)
+                .unwrap()
+                .seconds
+        },
+    );
+
+    // Mergesort: cutoffs 128 (GTaP) / 4096 (OpenMP), as in §6.2
+    let ms_ns: Vec<i64> = if full_scale() {
+        vec![1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22]
+    } else {
+        vec![1 << 10, 1 << 12, 1 << 14, 1 << 16]
+    };
+    let g = grid(1000);
+    three_way(
+        "mergesort",
+        &ms_ns,
+        &|n, seed| {
+            runners::run_mergesort(&Exec::gpu_thread(g, 32).seed(seed), n as usize, 128, seed)
+                .unwrap()
+                .seconds
+        },
+        &|n, seed| {
+            runners::run_mergesort(&Exec::cpu72().seed(seed), n as usize, 4096, seed)
+                .unwrap()
+                .seconds
+        },
+        &|n, seed| {
+            runners::run_mergesort(&Exec::cpu_seq().seed(seed), n as usize, 4096, seed)
+                .unwrap()
+                .seconds
+        },
+    );
+
+    // Cilksort: Table 3 cutoffs (GTaP 64/256; OpenMP 4096/4096)
+    let g = grid(2000);
+    three_way(
+        "cilksort",
+        &ms_ns,
+        &|n, seed| {
+            runners::run_cilksort(&Exec::gpu_thread(g, 32).seed(seed), n as usize, 64, 256, false, seed)
+                .unwrap()
+                .seconds
+        },
+        &|n, seed| {
+            runners::run_cilksort(&Exec::cpu72().seed(seed), n as usize, 4096, 4096, false, seed)
+                .unwrap()
+                .seconds
+        },
+        &|n, seed| {
+            runners::run_cilksort(&Exec::cpu_seq().seed(seed), n as usize, 4096, 4096, false, seed)
+                .unwrap()
+                .seconds
+        },
+    );
+}

@@ -1,0 +1,49 @@
+//! Figure 6: per-warp timeline of mergesort — blue (task-function time,
+//! intensity = active lanes) vs orange (queue ops / idle). Dumps the
+//! timeline CSV for a subset of warps and prints the busy-fraction summary
+//! that exposes the serial final merge (one warp busy, everyone else idle).
+
+use gtap::bench::emit::write_text;
+use gtap::bench::runners::{self, Exec};
+use gtap::bench::sweep::full_scale;
+
+fn main() {
+    let n = if full_scale() { 1 << 18 } else { 1 << 14 };
+    let exec = Exec::gpu_thread(64, 32).profiled();
+    let out = runners::run_mergesort(&exec, n, 128, 42).unwrap();
+
+    // subset of warps, like the figure
+    let keep = 16u32;
+    let mut csv = String::from("worker,start,busy,overhead,active_lanes,path_groups\n");
+    for e in out.profiler.events.iter().filter(|e| e.worker < keep) {
+        csv.push_str(&format!(
+            "{},{},{},{},{},{}\n",
+            e.worker, e.start, e.busy, e.overhead, e.active_lanes, e.path_groups
+        ));
+    }
+    let p = write_text("fig6_timeline.csv", &csv).unwrap();
+    println!("wrote {} ({} events total)", p.display(), out.profiler.events.len());
+
+    println!("\nper-warp busy fraction (first {keep} warps):");
+    for (w, busy, total) in out.profiler.utilization().iter().take(keep as usize) {
+        println!(
+            "  warp {w:3}: {:5.1}% busy ({busy} / {total} cycles)",
+            100.0 * *busy as f64 / (*total).max(1) as f64
+        );
+    }
+    // The tail of the run is the serial merge: find the last 10% of events
+    // and count distinct busy workers — expect ~1.
+    let t_end = out.profiler.events.iter().map(|e| e.start).max().unwrap_or(0);
+    let cutoff = t_end - t_end / 10;
+    let busy_tail: std::collections::BTreeSet<u32> = out
+        .profiler
+        .events
+        .iter()
+        .filter(|e| e.start >= cutoff && e.busy > 0)
+        .map(|e| e.worker)
+        .collect();
+    println!(
+        "\ndistinct busy warps in the final 10% of the run: {} (the serial merge tail)",
+        busy_tail.len()
+    );
+}

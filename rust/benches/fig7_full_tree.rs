@@ -1,0 +1,71 @@
+//! Figure 7: Full Binary Tree across problem sizes — depth, mem_ops and
+//! compute_iters sweeps; block-level vs thread-level GTaP vs the CPU
+//! comparator, normalized to the CPU (as in §6.3).
+//!
+//! Expected shape: GTaP increasingly ahead as size grows (paper: up to
+//! 9.8× at D=22, 7.6× on the mem_ops sweep, 15.2× on compute_iters);
+//! thread-level ahead of block-level at large D (ample slackness — paper
+//! up to 4.6×), block-level competitive at small D.
+
+use gtap::bench::emit::{markdown_table, write_csv, Series};
+use gtap::bench::runners::{self, Exec};
+use gtap::bench::settings::grid;
+use gtap::bench::sweep::{full_scale, measure};
+
+fn sweep(name: &str, xs: &[i64], f: &dyn Fn(&Exec, i64, u64) -> f64) {
+    let g = grid(1000);
+    let targets: Vec<(&str, Exec)> = vec![
+        ("thread", Exec::gpu_thread(g, 64)),
+        ("block", Exec::gpu_block(g, 64)),
+        ("cpu72", Exec::cpu72()),
+    ];
+    let series: Vec<Series> = targets
+        .iter()
+        .map(|(label, exec)| Series {
+            label: label.to_string(),
+            points: xs
+                .iter()
+                .map(|&x| (x as f64, measure(|seed| f(&exec.clone().seed(seed), x, seed))))
+                .collect(),
+        })
+        .collect();
+    println!("\n## fig7_{name} (seconds)\n");
+    println!("{}", markdown_table(name, &series));
+    println!("normalized to cpu72 (>1 = GTaP faster):");
+    for (i, &x) in xs.iter().enumerate() {
+        let cpu = series[2].points[i].1.median;
+        println!(
+            "  {x}: thread {:.2}x  block {:.2}x",
+            cpu / series[0].points[i].1.median,
+            cpu / series[1].points[i].1.median
+        );
+    }
+    let p = write_csv(&format!("fig7_{name}"), &series).unwrap();
+    println!("wrote {}", p.display());
+}
+
+fn main() {
+    let (d_xs, mem_xs, comp_xs): (Vec<i64>, Vec<i64>, Vec<i64>) = if full_scale() {
+        (
+            vec![6, 8, 10, 12, 14, 16, 18],
+            vec![0, 64, 256, 1024, 4096, 8192],
+            vec![64, 256, 1024, 4096, 16384, 32768],
+        )
+    } else {
+        (
+            vec![6, 8, 10, 12, 14, 16],
+            vec![0, 64, 256, 1024],
+            vec![64, 256, 1024, 4096],
+        )
+    };
+    // fixed "other two" as in §6.3: moderate mem + compute
+    sweep("depth", &d_xs, &|e, d, _| {
+        runners::run_full_tree(e, d, 128, 256, None).unwrap().seconds
+    });
+    sweep("mem_ops", &mem_xs, &|e, m, _| {
+        runners::run_full_tree(e, 10, m, 256, None).unwrap().seconds
+    });
+    sweep("compute_iters", &comp_xs, &|e, c, _| {
+        runners::run_full_tree(e, 10, 128, c, None).unwrap().seconds
+    });
+}

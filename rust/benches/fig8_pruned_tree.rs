@@ -1,0 +1,70 @@
+//! Figure 8: Depth-Dependent Pruned B-ary Tree (B=3, p(d)=1−d/D) across
+//! problem sizes — the irregular, thinning workload where block-level
+//! workers overtake thread-level at large per-task work (paper: up to 2.2×
+//! on the mem_ops sweep and 4.3× on compute_iters) because warps see far
+//! fewer than 32 ready tasks (Fig. 9).
+
+use gtap::bench::emit::{markdown_table, write_csv, Series};
+use gtap::bench::runners::{self, Exec};
+use gtap::bench::settings::grid;
+use gtap::bench::sweep::{full_scale, measure};
+
+fn sweep(name: &str, xs: &[i64], f: &dyn Fn(&Exec, i64, i64) -> f64) {
+    let g = grid(1000);
+    let targets: Vec<(&str, Exec)> = vec![
+        ("thread", Exec::gpu_thread(g, 64)),
+        ("block", Exec::gpu_block(g, 64)),
+        ("cpu72", Exec::cpu72()),
+    ];
+    let series: Vec<Series> = targets
+        .iter()
+        .map(|(label, exec)| Series {
+            label: label.to_string(),
+            points: xs
+                .iter()
+                .map(|&x| {
+                    (
+                        x as f64,
+                        measure(|seed| f(&exec.clone().seed(seed), x, seed as i64)),
+                    )
+                })
+                .collect(),
+        })
+        .collect();
+    println!("\n## fig8_{name} (seconds)\n");
+    println!("{}", markdown_table(name, &series));
+    println!("block/thread time ratio (<1 = block faster):");
+    for (i, &x) in xs.iter().enumerate() {
+        println!(
+            "  {x}: {:.2}",
+            series[1].points[i].1.median / series[0].points[i].1.median
+        );
+    }
+    let p = write_csv(&format!("fig8_{name}"), &series).unwrap();
+    println!("wrote {}", p.display());
+}
+
+fn main() {
+    let (d_xs, mem_xs, comp_xs): (Vec<i64>, Vec<i64>, Vec<i64>) = if full_scale() {
+        (
+            vec![8, 12, 16, 20, 24, 32],
+            vec![0, 64, 256, 1024, 4096, 8192],
+            vec![64, 256, 1024, 4096, 16384],
+        )
+    } else {
+        (
+            vec![8, 12, 16],
+            vec![0, 128, 512],
+            vec![128, 512, 2048],
+        )
+    };
+    sweep("depth", &d_xs, &|e, d, seed| {
+        runners::run_pruned_tree(e, d, 128, 256, seed).unwrap().seconds
+    });
+    sweep("mem_ops", &mem_xs, &|e, m, seed| {
+        runners::run_pruned_tree(e, 14, m, 256, seed).unwrap().seconds
+    });
+    sweep("compute_iters", &comp_xs, &|e, c, seed| {
+        runners::run_pruned_tree(e, 14, 128, c, seed).unwrap().seconds
+    });
+}

@@ -1,0 +1,64 @@
+//! Figure 9: profiling the pruned B-ary tree with thread-level workers —
+//! intra-warp utilization collapses as the tree thins (warps see far fewer
+//! than 32 ready tasks), which is why block-level workers win Fig. 8's
+//! large-work sweeps. Paper setting: D=32, mem_ops=256, compute_iters=8192
+//! (scaled here; GTAP_BENCH_FULL=1 restores it).
+
+use gtap::bench::emit::write_text;
+use gtap::bench::runners::{self, Exec};
+use gtap::bench::settings::grid;
+use gtap::bench::sweep::full_scale;
+
+fn main() {
+    let (d, mem, comp) = if full_scale() {
+        (32, 256, 8192)
+    } else {
+        (16, 128, 1024)
+    };
+    let exec = Exec::gpu_thread(grid(1000), 64).profiled();
+    let out = runners::run_pruned_tree(&exec, d, mem, comp, 5).unwrap();
+
+    println!(
+        "pruned tree D={d} mem_ops={mem} compute_iters={comp}: {} tasks, {:.3e} s",
+        out.stats.tasks_finished, out.seconds
+    );
+    println!(
+        "mean active lanes per busy warp iteration: {:.2} / 32",
+        out.profiler.mean_active_lanes()
+    );
+    let qs = out
+        .profiler
+        .busy_time_percentiles(&[0.1, 0.5, 0.9, 0.99]);
+    println!(
+        "busy-iteration cycles p10/p50/p90/p99: {:.0} / {:.0} / {:.0} / {:.0}",
+        qs[0], qs[1], qs[2], qs[3]
+    );
+
+    // lane-occupancy histogram — the quantitative core of Fig. 9
+    let mut histo = [0u64; 33];
+    for e in &out.profiler.events {
+        if e.active_lanes > 0 {
+            histo[e.active_lanes as usize] += 1;
+        }
+    }
+    let mut csv = String::from("active_lanes,iterations\n");
+    println!("\nactive-lane histogram (busy iterations):");
+    for (lanes, count) in histo.iter().enumerate() {
+        if *count > 0 {
+            println!("  {lanes:2} lanes: {count}");
+        }
+        csv.push_str(&format!("{lanes},{count}\n"));
+    }
+    let p = write_text("fig9_lane_histogram.csv", &csv).unwrap();
+    println!("wrote {}", p.display());
+
+    // compare against the full tree at similar size: utilization should be
+    // much higher there
+    let full = runners::run_full_tree(&Exec::gpu_thread(grid(1000), 64).profiled(), 12, mem, comp, None)
+        .unwrap();
+    println!(
+        "\nfull-binary-tree comparison: mean active lanes {:.2} / 32 (pruned: {:.2})",
+        full.profiler.mean_active_lanes(),
+        out.profiler.mean_active_lanes()
+    );
+}

@@ -1,0 +1,53 @@
+//! Table 3: the per-benchmark evaluation settings, echoed and smoke-run.
+//! Each configuration is validated by executing its benchmark at a small
+//! size under exactly the Table-3 granularity/flags (grid scaled in quick
+//! mode; GTAP_BENCH_FULL=1 uses the paper's worker counts).
+
+use gtap::bench::runners::{self, Exec};
+use gtap::bench::settings::{grid, TABLE3};
+
+fn main() {
+    println!("| Benchmark | Grid Size | Block Size | Granularity | flags |");
+    println!("|---|---|---|---|---|");
+    for s in TABLE3 {
+        println!(
+            "| {} | {} | {} | {} | {} |",
+            s.name,
+            s.grid_size,
+            s.block_size,
+            s.granularity,
+            if s.assume_no_taskwait {
+                "-DGTAP_ASSUME_NO_TASKWAIT"
+            } else {
+                ""
+            }
+        );
+    }
+    println!("\nsmoke-running each setting (scaled grids in quick mode):\n");
+
+    let fib = runners::run_fib(&Exec::gpu_thread(grid(4000), 32), 18, 0, false).unwrap();
+    println!("Fibonacci      ok: {:.3e} s, {} tasks", fib.seconds, fib.stats.tasks_finished);
+
+    let nq = runners::run_nqueens(
+        &Exec::gpu_thread(grid(2000), 32).no_taskwait(),
+        9,
+        4,
+        false,
+    )
+    .unwrap();
+    println!("N-Queens       ok: {:.3e} s, {} tasks", nq.seconds, nq.stats.tasks_finished);
+
+    let ms = runners::run_mergesort(&Exec::gpu_thread(grid(1000), 32), 1 << 13, 128, 1).unwrap();
+    println!("Mergesort      ok: {:.3e} s, {} tasks", ms.seconds, ms.stats.tasks_finished);
+
+    let cs = runners::run_cilksort(&Exec::gpu_thread(grid(2000), 32), 1 << 13, 64, 256, false, 1)
+        .unwrap();
+    println!("Cilksort       ok: {:.3e} s, {} tasks", cs.seconds, cs.stats.tasks_finished);
+
+    let tt = runners::run_full_tree(&Exec::gpu_thread(grid(1000), 64), 8, 64, 128, None).unwrap();
+    let tb = runners::run_full_tree(&Exec::gpu_block(grid(1000), 64), 8, 64, 128, None).unwrap();
+    println!(
+        "SyntheticTree  ok: thread {:.3e} s / block {:.3e} s, {} tasks",
+        tt.seconds, tb.seconds, tt.stats.tasks_finished
+    );
+}

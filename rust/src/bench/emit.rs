@@ -1,0 +1,124 @@
+//! Result rendering: markdown tables on stdout (what the bench prints) and
+//! CSV series under `results/` (what plots consume).
+
+use crate::util::stats::Summary;
+use std::io::Write;
+use std::path::PathBuf;
+
+/// A labelled series of (x, summary) points, e.g. one curve of Fig. 3.
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, Summary)>,
+}
+
+/// Render a set of series as a markdown table: one row per x, one column
+/// per series (median [q1, q3]).
+pub fn markdown_table(x_name: &str, series: &[Series]) -> String {
+    let mut xs: Vec<f64> = series
+        .iter()
+        .flat_map(|s| s.points.iter().map(|(x, _)| *x))
+        .collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.dedup();
+    let mut out = String::new();
+    out.push_str(&format!("| {x_name} |"));
+    for s in series {
+        out.push_str(&format!(" {} |", s.label));
+    }
+    out.push('\n');
+    out.push_str("|---|");
+    for _ in series {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for x in xs {
+        out.push_str(&format!("| {x} |"));
+        for s in series {
+            match s.points.iter().find(|(px, _)| *px == x) {
+                Some((_, sm)) => out.push_str(&format!(
+                    " {:.4e} [{:.2e}, {:.2e}] |",
+                    sm.median, sm.q1, sm.q3
+                )),
+                None => out.push_str(" — |"),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Write series as CSV: `label,x,median,q1,q3,min,max,n`.
+pub fn write_csv(name: &str, series: &[Series]) -> std::io::Result<PathBuf> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.csv"));
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "label,x,median,q1,q3,min,max,n")?;
+    for s in series {
+        for (x, sm) in &s.points {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{}",
+                s.label, x, sm.median, sm.q1, sm.q3, sm.min, sm.max, sm.n
+            )?;
+        }
+    }
+    Ok(path)
+}
+
+/// Write raw text (e.g. timeline CSVs) under results/.
+pub fn write_text(name: &str, content: &str) -> std::io::Result<PathBuf> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+fn results_dir() -> PathBuf {
+    // walk up to the repo root (Cargo.toml) so benches and tests agree
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join("Cargo.toml").exists() {
+            return dir.join("results");
+        }
+        if !dir.pop() {
+            return PathBuf::from("results");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(label: &str, pts: &[(f64, f64)]) -> Series {
+        Series {
+            label: label.into(),
+            points: pts
+                .iter()
+                .map(|&(x, v)| (x, Summary::of(&[v])))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn table_shape() {
+        let t = markdown_table(
+            "P",
+            &[s("ws", &[(1.0, 0.5), (2.0, 0.3)]), s("gq", &[(1.0, 0.6)])],
+        );
+        assert!(t.contains("| P | ws | gq |"), "{t}");
+        assert!(t.contains("| 1 |"), "{t}");
+        assert!(t.contains("— |"), "missing point must render as dash: {t}");
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = write_csv("_test_emit", &[s("a", &[(1.0, 2.0)])]).unwrap();
+        let content = std::fs::read_to_string(&p).unwrap();
+        assert!(content.starts_with("label,x,median"), "{content}");
+        assert!(content.contains("a,1,2"), "{content}");
+        std::fs::remove_file(p).ok();
+    }
+}

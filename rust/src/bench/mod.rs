@@ -1,0 +1,13 @@
+//! Benchmark harness: workload runners, sweeps, statistics and reporting.
+//!
+//! Every `cargo bench` target (one per paper figure/table — see DESIGN.md
+//! §5) is a thin binary over this module: [`runners`] builds and executes a
+//! benchmark configuration on a device, [`sweep`] repeats it across seeds
+//! and reports the paper's median/IQR, [`emit`] renders markdown tables and
+//! CSV series into `results/`, and [`settings`] pins the Table-3
+//! per-benchmark configurations.
+
+pub mod emit;
+pub mod runners;
+pub mod settings;
+pub mod sweep;

@@ -1,0 +1,418 @@
+//! Workload runners: build a [`Session`] for one benchmark configuration,
+//! execute it, validate the result against the native reference, and
+//! return the measurement. Shared by every bench target and example.
+
+use crate::coordinator::{
+    Granularity, GtapConfig, PayloadEngine, RunStats, SchedulerKind, Session,
+};
+use crate::ir::types::Value;
+use crate::sim::profile::Profiler;
+use crate::sim::DeviceSpec;
+use crate::workloads::{bfs, fib, nqueens, sort, tree};
+use anyhow::{ensure, Result};
+
+/// Execution target: device + runtime configuration.
+#[derive(Clone)]
+pub struct Exec {
+    pub device: DeviceSpec,
+    pub cfg: GtapConfig,
+    pub profile: bool,
+}
+
+impl Exec {
+    /// GPU, thread-level workers (warps).
+    pub fn gpu_thread(grid: usize, block: usize) -> Exec {
+        Exec {
+            device: DeviceSpec::h100(),
+            cfg: GtapConfig {
+                grid_size: grid,
+                block_size: block,
+                granularity: Granularity::Thread,
+                ..Default::default()
+            },
+            profile: false,
+        }
+    }
+
+    /// GPU, block-level workers.
+    pub fn gpu_block(grid: usize, block: usize) -> Exec {
+        Exec {
+            device: DeviceSpec::h100(),
+            cfg: GtapConfig {
+                grid_size: grid,
+                block_size: block,
+                granularity: Granularity::Block,
+                ..Default::default()
+            },
+            profile: false,
+        }
+    }
+
+    /// The 72-core CPU comparator (OpenMP-task stand-in): 72 scalar
+    /// workers running the same task DAG on the grace72 cost model.
+    pub fn cpu72() -> Exec {
+        Exec {
+            device: DeviceSpec::grace72(),
+            cfg: GtapConfig {
+                grid_size: 72,
+                block_size: 32,
+                granularity: Granularity::Thread,
+                ..Default::default()
+            },
+            profile: false,
+        }
+    }
+
+    /// Single-worker CPU (the "CPU sequential" baseline of Fig. 5).
+    pub fn cpu_seq() -> Exec {
+        Exec {
+            device: DeviceSpec::grace72(),
+            cfg: GtapConfig {
+                grid_size: 1,
+                block_size: 32,
+                granularity: Granularity::Thread,
+                ..Default::default()
+            },
+            profile: false,
+        }
+    }
+
+    pub fn scheduler(mut self, kind: SchedulerKind) -> Exec {
+        self.cfg.scheduler = kind;
+        self
+    }
+
+    pub fn queues(mut self, n: usize) -> Exec {
+        self.cfg.num_queues = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Exec {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn no_taskwait(mut self) -> Exec {
+        self.cfg.assume_no_taskwait = true;
+        self
+    }
+
+    pub fn profiled(mut self) -> Exec {
+        self.profile = true;
+        self
+    }
+
+    pub fn queue_capacity(mut self, cap: usize) -> Exec {
+        self.cfg.max_tasks_per_warp = cap;
+        self.cfg.max_tasks_per_block = cap;
+        self
+    }
+}
+
+/// A validated measurement.
+pub struct Outcome {
+    pub stats: RunStats,
+    pub seconds: f64,
+    pub profiler: Profiler,
+}
+
+fn run_session(
+    exec: &Exec,
+    source: &str,
+    entry: &str,
+    args: &[Value],
+    engine: Option<&mut dyn PayloadEngine>,
+) -> Result<(Session, Outcome)> {
+    let mut session = Session::compile(source, exec.cfg.clone(), exec.device.clone())?;
+    let mut profiler = if exec.profile {
+        Profiler::enabled()
+    } else {
+        Profiler::disabled()
+    };
+    let stats = session.run_with(entry, args, engine, &mut profiler)?;
+    let seconds = stats.seconds;
+    Ok((
+        session,
+        Outcome {
+            stats,
+            seconds,
+            profiler,
+        },
+    ))
+}
+
+/// Fibonacci (§6.2 / §6.4). Validates against the closed form.
+pub fn run_fib(exec: &Exec, n: i64, cutoff: i64, epaq: bool) -> Result<Outcome> {
+    let src = fib::source(cutoff, epaq);
+    let (_, out) = run_session(exec, &src, "fib", &[Value::from_i64(n)], None)?;
+    let got = out.stats.root_result.expect("fib returns int").as_i64();
+    ensure!(got == fib::reference(n), "fib({n}) = {got}, want {}", fib::reference(n));
+    Ok(out)
+}
+
+/// N-Queens (§6.2). Spawn-only; validated against the backtracking count.
+pub fn run_nqueens(exec: &Exec, n: i64, depth: i64, epaq: bool) -> Result<Outcome> {
+    let src = nqueens::source(depth, epaq);
+    let mut session = Session::compile(&src, exec.cfg.clone(), exec.device.clone())?;
+    let acc = session.alloc(1);
+    let mut profiler = if exec.profile {
+        Profiler::enabled()
+    } else {
+        Profiler::disabled()
+    };
+    let stats = session.run_with(
+        "nqueens",
+        &[
+            Value::from_i64(n),
+            Value::from_i64(0),
+            Value::from_i64(0),
+            Value::from_i64(0),
+            Value::from_i64(0),
+            Value(acc),
+        ],
+        None,
+        &mut profiler,
+    )?;
+    let got = session.memory.read_i64s(acc, 1)[0];
+    ensure!(
+        got == nqueens::reference(n),
+        "nqueens({n}) = {got}, want {}",
+        nqueens::reference(n)
+    );
+    let seconds = stats.seconds;
+    Ok(Outcome {
+        stats,
+        seconds,
+        profiler,
+    })
+}
+
+fn run_sort_impl(exec: &Exec, src: &str, entry: &str, n: usize, seed: u64) -> Result<Outcome> {
+    let mut session = Session::compile(src, exec.cfg.clone(), exec.device.clone())?;
+    let data = session.alloc(n as u64);
+    let tmp = session.alloc(n as u64);
+    let xs = sort::input(n, seed);
+    session.memory.write_i64s(data, &xs);
+    let mut profiler = if exec.profile {
+        Profiler::enabled()
+    } else {
+        Profiler::disabled()
+    };
+    let stats = session.run_with(
+        entry,
+        &[
+            Value(data),
+            Value::from_i64(0),
+            Value::from_i64(n as i64),
+            Value(tmp),
+        ],
+        None,
+        &mut profiler,
+    )?;
+    let got = session.memory.read_i64s(data, n as u64);
+    ensure!(got == sort::reference(&xs), "{entry} output not sorted");
+    let seconds = stats.seconds;
+    Ok(Outcome {
+        stats,
+        seconds,
+        profiler,
+    })
+}
+
+/// Mergesort (§6.2): serial merge tail.
+pub fn run_mergesort(exec: &Exec, n: usize, cutoff: i64, seed: u64) -> Result<Outcome> {
+    run_sort_impl(exec, &sort::mergesort_source(cutoff), "msort", n, seed)
+}
+
+/// Cilksort (§6.2): parallel merge.
+pub fn run_cilksort(
+    exec: &Exec,
+    n: usize,
+    cutoff_sort: i64,
+    cutoff_merge: i64,
+    epaq: bool,
+    seed: u64,
+) -> Result<Outcome> {
+    run_sort_impl(
+        exec,
+        &sort::cilksort_source(cutoff_sort, cutoff_merge, epaq),
+        "csort",
+        n,
+        seed,
+    )
+}
+
+/// Full binary tree (§6.3.1), thread- or block-level per `exec`.
+pub fn run_full_tree(
+    exec: &Exec,
+    depth: i64,
+    mem_ops: i64,
+    compute_iters: i64,
+    engine: Option<&mut dyn PayloadEngine>,
+) -> Result<Outcome> {
+    let seed = 7i64;
+    let block = exec.cfg.granularity == Granularity::Block;
+    let chunks = exec.cfg.block_size as i64;
+    let src = if block {
+        tree::full_tree_block_source(mem_ops, compute_iters, chunks)
+    } else {
+        tree::full_tree_source(mem_ops, compute_iters)
+    };
+    let mut session = Session::compile(&src, exec.cfg.clone(), exec.device.clone())?;
+    let acc = session.alloc(1);
+    let mut profiler = if exec.profile {
+        Profiler::enabled()
+    } else {
+        Profiler::disabled()
+    };
+    let xla = engine.is_some();
+    let stats = session.run_with(
+        "tree",
+        &[Value::from_i64(depth), Value::from_i64(seed), Value(acc)],
+        engine,
+        &mut profiler,
+    )?;
+    let got = session.memory.read_i64s(acc, 1)[0];
+    let want = if block {
+        tree::full_tree_block_reference(depth, seed, mem_ops, compute_iters, chunks)
+    } else {
+        tree::full_tree_reference(depth, seed, mem_ops, compute_iters).0
+    };
+    if xla {
+        // XLA:CPU may contract mul+add to a true FMA: the quantized terms can
+        // each differ by 1 ulp-step, so allow ±1 per task.
+        let tol = stats.tasks_finished as i64 * if block { chunks } else { 1 };
+        ensure!(
+            (got - want).abs() <= tol,
+            "tree checksum {got} vs {want} (tol {tol})"
+        );
+    } else {
+        ensure!(got == want, "tree checksum {got}, want {want}");
+    }
+    let seconds = stats.seconds;
+    Ok(Outcome {
+        stats,
+        seconds,
+        profiler,
+    })
+}
+
+/// Depth-dependent pruned 3-ary tree (§6.3.2).
+pub fn run_pruned_tree(
+    exec: &Exec,
+    max_depth: i64,
+    mem_ops: i64,
+    compute_iters: i64,
+    seed: i64,
+) -> Result<Outcome> {
+    let block = exec.cfg.granularity == Granularity::Block;
+    let chunks = exec.cfg.block_size as i64;
+    let src = if block {
+        tree::pruned_tree_block_source(max_depth, mem_ops, compute_iters, chunks)
+    } else {
+        tree::pruned_tree_source(max_depth, mem_ops, compute_iters)
+    };
+    let mut session = Session::compile(&src, exec.cfg.clone(), exec.device.clone())?;
+    let acc = session.alloc(1);
+    let mut profiler = if exec.profile {
+        Profiler::enabled()
+    } else {
+        Profiler::disabled()
+    };
+    let stats = session.run_with(
+        "ptree",
+        &[Value::from_i64(0), Value::from_i64(seed), Value(acc)],
+        None,
+        &mut profiler,
+    )?;
+    if !block {
+        let got = session.memory.read_i64s(acc, 1)[0];
+        let want = tree::pruned_tree_reference(max_depth, seed, mem_ops, compute_iters).0;
+        ensure!(got == want, "ptree checksum {got}, want {want}");
+    }
+    let seconds = stats.seconds;
+    Ok(Outcome {
+        stats,
+        seconds,
+        profiler,
+    })
+}
+
+/// BFS (Program 5), block-level.
+pub fn run_bfs(exec: &Exec, n: usize, avg_degree: usize, seed: u64) -> Result<Outcome> {
+    let g = bfs::CsrGraph::random(n, avg_degree, seed);
+    let mut session = Session::compile(&bfs::source(), exec.cfg.clone(), exec.device.clone())?;
+    let ro = session.alloc(g.row_offsets.len() as u64);
+    let ci = session.alloc(g.col_indices.len().max(1) as u64);
+    let dp = session.alloc(n as u64);
+    session.memory.write_i64s(ro, &g.row_offsets);
+    session.memory.write_i64s(ci, &g.col_indices);
+    session.memory.write_i64s(dp, &vec![i64::MAX; n]);
+    session.memory.store(dp, 0);
+    let mut profiler = if exec.profile {
+        Profiler::enabled()
+    } else {
+        Profiler::disabled()
+    };
+    let stats = session.run_with(
+        "bfs",
+        &[Value::from_i64(0), Value(ro), Value(ci), Value(dp)],
+        None,
+        &mut profiler,
+    )?;
+    let got = session.memory.read_i64s(dp, n as u64);
+    ensure!(got == g.bfs_reference(0), "bfs depths mismatch");
+    let seconds = stats.seconds;
+    Ok(Outcome {
+        stats,
+        seconds,
+        profiler,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fib_runner_validates() {
+        let out = run_fib(&Exec::gpu_thread(4, 32), 12, 0, false).unwrap();
+        assert!(out.seconds > 0.0);
+    }
+
+    #[test]
+    fn nqueens_runner_validates() {
+        let out = run_nqueens(&Exec::gpu_thread(4, 32).no_taskwait(), 7, 3, false).unwrap();
+        assert!(out.stats.tasks_finished > 0);
+    }
+
+    #[test]
+    fn sort_runners_validate() {
+        run_mergesort(&Exec::gpu_thread(4, 32), 600, 32, 1).unwrap();
+        run_cilksort(&Exec::gpu_thread(4, 32), 600, 32, 64, false, 1).unwrap();
+    }
+
+    #[test]
+    fn tree_runners_validate() {
+        run_full_tree(&Exec::gpu_thread(4, 32), 5, 2, 4, None).unwrap();
+        run_full_tree(&Exec::gpu_block(4, 64), 5, 64, 64, None).unwrap();
+        run_pruned_tree(&Exec::gpu_thread(4, 32), 6, 2, 4, 3).unwrap();
+    }
+
+    #[test]
+    fn bfs_runner_validates() {
+        run_bfs(&Exec::gpu_block(4, 64).no_taskwait(), 120, 3, 5).unwrap();
+    }
+
+    #[test]
+    fn cpu_targets_work() {
+        run_fib(&Exec::cpu72(), 11, 0, false).unwrap();
+        run_fib(&Exec::cpu_seq(), 10, 0, false).unwrap();
+    }
+
+    #[test]
+    fn profiled_run_collects_timeline() {
+        let out = run_fib(&Exec::gpu_thread(4, 32).profiled(), 11, 0, false).unwrap();
+        assert!(!out.profiler.events.is_empty());
+    }
+}

@@ -1,0 +1,65 @@
+//! Table 3: per-benchmark evaluation settings (grid/block/granularity),
+//! plus this reproduction's scaled problem sizes (DESIGN.md §8).
+//!
+//! Paper settings: Fibonacci 4000×32 thread, N-Queens 2000×32 thread
+//! (+`-DGTAP_ASSUME_NO_TASKWAIT`), Mergesort 1000×32 thread, Cilksort
+//! 2000×32 thread, Synthetic Tree 1000×64 block/thread. Default (quick)
+//! mode scales the worker counts and problem sizes down so `cargo bench`
+//! finishes in minutes on one core; `GTAP_BENCH_FULL=1` restores the
+//! paper's worker counts.
+
+use super::sweep::full_scale;
+
+/// One row of Table 3.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchSetting {
+    pub name: &'static str,
+    pub grid_size: usize,
+    pub block_size: usize,
+    pub granularity: &'static str,
+    pub assume_no_taskwait: bool,
+}
+
+/// Table 3, verbatim.
+pub const TABLE3: &[BenchSetting] = &[
+    BenchSetting { name: "Fibonacci", grid_size: 4000, block_size: 32, granularity: "thread", assume_no_taskwait: false },
+    BenchSetting { name: "N-Queens", grid_size: 2000, block_size: 32, granularity: "thread", assume_no_taskwait: true },
+    BenchSetting { name: "Mergesort", grid_size: 1000, block_size: 32, granularity: "thread", assume_no_taskwait: false },
+    BenchSetting { name: "Cilksort", grid_size: 2000, block_size: 32, granularity: "thread", assume_no_taskwait: false },
+    BenchSetting { name: "Synthetic Tree", grid_size: 1000, block_size: 64, granularity: "block/thread", assume_no_taskwait: false },
+];
+
+pub fn lookup(name: &str) -> Option<&'static BenchSetting> {
+    TABLE3.iter().find(|s| s.name == name)
+}
+
+/// Scale a paper grid size down for quick mode.
+pub fn grid(paper: usize) -> usize {
+    if full_scale() {
+        paper
+    } else {
+        (paper / 8).max(32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_rows_present() {
+        assert_eq!(TABLE3.len(), 5);
+        let nq = lookup("N-Queens").unwrap();
+        assert!(nq.assume_no_taskwait);
+        assert_eq!(nq.grid_size, 2000);
+        assert_eq!(lookup("Synthetic Tree").unwrap().block_size, 64);
+    }
+
+    #[test]
+    fn quick_mode_scales_grid() {
+        if !full_scale() {
+            assert_eq!(grid(4000), 500);
+            assert_eq!(grid(100), 32);
+        }
+    }
+}

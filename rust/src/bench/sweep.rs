@@ -1,0 +1,61 @@
+//! Repetition and robust statistics.
+//!
+//! The paper reports "the median over 20 runs with IQR error bars" (§6).
+//! The simulator is deterministic given a seed, so run-to-run variance is
+//! reintroduced the honest way: each repetition uses a distinct seed
+//! (different steal victim sequences, different pruned-tree shapes where
+//! the workload takes a seed). `GTAP_BENCH_RUNS` overrides the repetition
+//! count (default 5 — shapes stabilize quickly; use 20 to match the paper).
+
+use crate::util::stats::Summary;
+
+/// Number of repetitions (env `GTAP_BENCH_RUNS`, default 5).
+pub fn runs() -> usize {
+    std::env::var("GTAP_BENCH_RUNS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5)
+}
+
+/// Whether to run paper-scale sweeps (env `GTAP_BENCH_FULL`).
+pub fn full_scale() -> bool {
+    std::env::var("GTAP_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Measure `f(seed)` over the configured repetitions.
+pub fn measure(mut f: impl FnMut(u64) -> f64) -> Summary {
+    let n = runs();
+    let samples: Vec<f64> = (0..n).map(|i| f(0xBE5E_ED00 + i as u64)).collect();
+    Summary::of(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_aggregates() {
+        std::env::set_var("GTAP_BENCH_RUNS", "4");
+        let mut calls = 0;
+        let s = measure(|seed| {
+            calls += 1;
+            (seed & 0xF) as f64
+        });
+        assert_eq!(s.n, 4);
+        assert_eq!(calls, 4);
+        std::env::remove_var("GTAP_BENCH_RUNS");
+    }
+
+    #[test]
+    fn seeds_distinct() {
+        std::env::set_var("GTAP_BENCH_RUNS", "3");
+        let mut seeds = vec![];
+        measure(|s| {
+            seeds.push(s);
+            0.0
+        });
+        seeds.dedup();
+        assert_eq!(seeds.len(), 3);
+        std::env::remove_var("GTAP_BENCH_RUNS");
+    }
+}

@@ -1,0 +1,450 @@
+//! Statement-level control-flow graph over the (sema-checked) AST.
+//!
+//! The paper computes its spill sets "on the CFG using standard backward
+//! data-flow analysis" (§5.2.3); this module builds that CFG. Nodes are
+//! atomic statements or conditions with use/def sets over alpha-renamed
+//! variable names; structured control flow (if/while/for/parallel_for)
+//! becomes the usual edges, and every `taskwait` gets its own node so the
+//! liveness pass can read off "live immediately after each taskwait".
+
+use crate::ir::ast::*;
+use std::collections::HashMap;
+
+pub type NodeId = usize;
+pub type VarId = usize;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NodeKind {
+    /// Plain statement (decl/assign/spawn/exprstmt/return).
+    Stmt,
+    /// Branch condition (if/while/for/parallel_for header).
+    Cond,
+    /// `taskwait` suspension point; `index` is the 1-based state number.
+    TaskWait { index: usize },
+    /// Synthetic function entry/exit.
+    Entry,
+    Exit,
+}
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub kind: NodeKind,
+    pub uses: Vec<VarId>,
+    pub defs: Vec<VarId>,
+    pub succs: Vec<NodeId>,
+}
+
+/// Control-flow graph of one task function.
+#[derive(Clone, Debug)]
+pub struct Cfg {
+    pub nodes: Vec<Node>,
+    pub entry: NodeId,
+    pub exit: NodeId,
+    /// Interned variable names (alpha-renamed, so globally unique).
+    pub vars: Vec<String>,
+    var_ids: HashMap<String, VarId>,
+    /// Node of each taskwait, in source (pre-order) order — the same order
+    /// codegen assigns state numbers, so `taskwaits[k]` is state `k+1`.
+    pub taskwaits: Vec<NodeId>,
+}
+
+impl Cfg {
+    pub fn var_id(&self, name: &str) -> Option<VarId> {
+        self.var_ids.get(name).copied()
+    }
+
+    fn intern(&mut self, name: &str) -> VarId {
+        if let Some(&id) = self.var_ids.get(name) {
+            return id;
+        }
+        let id = self.vars.len();
+        self.vars.push(name.to_string());
+        self.var_ids.insert(name.to_string(), id);
+        id
+    }
+
+    fn add(&mut self, kind: NodeKind) -> NodeId {
+        self.nodes.push(Node {
+            kind,
+            uses: vec![],
+            defs: vec![],
+            succs: vec![],
+        });
+        self.nodes.len() - 1
+    }
+
+    fn edge(&mut self, from: NodeId, to: NodeId) {
+        if !self.nodes[from].succs.contains(&to) {
+            self.nodes[from].succs.push(to);
+        }
+    }
+
+    /// Build the CFG of a task function body.
+    pub fn build(func: &Function) -> Cfg {
+        let mut cfg = Cfg {
+            nodes: vec![],
+            entry: 0,
+            exit: 0,
+            vars: vec![],
+            var_ids: HashMap::new(),
+            taskwaits: vec![],
+        };
+        cfg.entry = cfg.add(NodeKind::Entry);
+        cfg.exit = cfg.add(NodeKind::Exit);
+        for p in &func.params {
+            cfg.intern(&p.name);
+        }
+        let exit = cfg.exit;
+        let tails = cfg.build_block(&func.body, vec![cfg.entry]);
+        for t in tails {
+            cfg.edge(t, exit);
+        }
+        cfg
+    }
+
+    /// Lower a block: `preds` are the dangling predecessors; returns the new
+    /// dangling tails (empty when all paths returned).
+    fn build_block(&mut self, block: &Block, mut preds: Vec<NodeId>) -> Vec<NodeId> {
+        for s in &block.stmts {
+            if preds.is_empty() {
+                // unreachable code after return — still build nodes so that
+                // use/def information exists, but leave them disconnected.
+                preds = vec![];
+            }
+            preds = self.build_stmt(s, preds);
+        }
+        preds
+    }
+
+    fn connect(&mut self, preds: &[NodeId], to: NodeId) {
+        for &p in preds {
+            self.edge(p, to);
+        }
+    }
+
+    fn build_stmt(&mut self, s: &Stmt, preds: Vec<NodeId>) -> Vec<NodeId> {
+        match s {
+            Stmt::Decl { name, init, .. } => {
+                let n = self.add(NodeKind::Stmt);
+                if let Some(e) = init {
+                    self.uses_of_expr(e, n);
+                }
+                let v = self.intern(name);
+                self.nodes[n].defs.push(v);
+                self.connect(&preds, n);
+                vec![n]
+            }
+            Stmt::Assign { target, value, .. } => {
+                let n = self.add(NodeKind::Stmt);
+                self.uses_of_expr(value, n);
+                match target {
+                    LValue::Var(name) => {
+                        let v = self.intern(name);
+                        self.nodes[n].defs.push(v);
+                    }
+                    LValue::Global(_) => {}
+                    LValue::Index { base, index } => {
+                        self.uses_of_expr(base, n);
+                        self.uses_of_expr(index, n);
+                    }
+                }
+                self.connect(&preds, n);
+                vec![n]
+            }
+            Stmt::ExprStmt { expr, .. } => {
+                let n = self.add(NodeKind::Stmt);
+                self.uses_of_expr(expr, n);
+                self.connect(&preds, n);
+                vec![n]
+            }
+            Stmt::Spawn { queue, call, .. } => {
+                // dest is NOT defined here: the child's result materializes
+                // at the taskwait re-entry (ChildResult), see liveness.
+                let n = self.add(NodeKind::Stmt);
+                for a in &call.args {
+                    self.uses_of_expr(a, n);
+                }
+                if let Some(q) = queue {
+                    self.uses_of_expr(q, n);
+                }
+                self.connect(&preds, n);
+                vec![n]
+            }
+            Stmt::TaskWait { queue, .. } => {
+                let index = self.taskwaits.len() + 1;
+                let n = self.add(NodeKind::TaskWait { index });
+                if let Some(q) = queue {
+                    self.uses_of_expr(q, n);
+                }
+                self.taskwaits.push(n);
+                self.connect(&preds, n);
+                vec![n]
+            }
+            Stmt::Return { value, .. } => {
+                let n = self.add(NodeKind::Stmt);
+                if let Some(e) = value {
+                    self.uses_of_expr(e, n);
+                }
+                self.connect(&preds, n);
+                let exit = self.exit;
+                self.edge(n, exit);
+                vec![] // no fallthrough
+            }
+            Stmt::If {
+                cond,
+                then_blk,
+                else_blk,
+                ..
+            } => {
+                let c = self.add(NodeKind::Cond);
+                self.uses_of_expr(cond, c);
+                self.connect(&preds, c);
+                let mut tails = self.build_block(then_blk, vec![c]);
+                match else_blk {
+                    Some(e) => {
+                        let mut et = self.build_block(e, vec![c]);
+                        tails.append(&mut et);
+                    }
+                    None => tails.push(c),
+                }
+                tails
+            }
+            Stmt::While { cond, body, .. } => {
+                let c = self.add(NodeKind::Cond);
+                self.uses_of_expr(cond, c);
+                self.connect(&preds, c);
+                let tails = self.build_block(body, vec![c]);
+                self.connect(&tails, c); // back edge
+                vec![c]
+            }
+            Stmt::For {
+                init,
+                cond,
+                step,
+                body,
+                ..
+            } => {
+                let mut preds = preds;
+                if let Some(i) = init {
+                    preds = self.build_stmt(i, preds);
+                }
+                let c = self.add(NodeKind::Cond);
+                if let Some(e) = cond {
+                    self.uses_of_expr(e, c);
+                }
+                self.connect(&preds, c);
+                let mut tails = self.build_block(body, vec![c]);
+                if let Some(st) = step {
+                    tails = self.build_stmt(st, tails);
+                }
+                self.connect(&tails, c); // back edge
+                vec![c]
+            }
+            Stmt::ParallelFor {
+                var, lo, hi, body, ..
+            } => {
+                // Model as a loop: header defines the induction var and uses
+                // the bounds; body may iterate many times (back edge).
+                let h = self.add(NodeKind::Cond);
+                self.uses_of_expr(lo, h);
+                self.uses_of_expr(hi, h);
+                let v = self.intern(var);
+                self.nodes[h].defs.push(v);
+                self.connect(&preds, h);
+                let tails = self.build_block(body, vec![h]);
+                self.connect(&tails, h);
+                vec![h]
+            }
+            Stmt::Nested(b) => self.build_block(b, preds),
+        }
+    }
+
+    fn uses_of_expr(&mut self, e: &Expr, node: NodeId) {
+        match e {
+            Expr::IntLit(_) | Expr::FloatLit(_) | Expr::Global(..) => {}
+            Expr::Var(name, _) => {
+                let v = self.intern(name);
+                if !self.nodes[node].uses.contains(&v) {
+                    self.nodes[node].uses.push(v);
+                }
+            }
+            Expr::Unary { expr, .. } | Expr::Cast { expr, .. } => {
+                self.uses_of_expr(expr, node)
+            }
+            Expr::Binary { lhs, rhs, .. } => {
+                self.uses_of_expr(lhs, node);
+                self.uses_of_expr(rhs, node);
+            }
+            Expr::Ternary {
+                cond,
+                then_e,
+                else_e,
+                ..
+            } => {
+                self.uses_of_expr(cond, node);
+                self.uses_of_expr(then_e, node);
+                self.uses_of_expr(else_e, node);
+            }
+            Expr::Call(c) => {
+                for a in &c.args {
+                    self.uses_of_expr(a, node);
+                }
+            }
+            Expr::Index { base, index, .. } => {
+                self.uses_of_expr(base, node);
+                self.uses_of_expr(index, node);
+            }
+        }
+    }
+
+    /// Predecessor lists (computed on demand for the backward analysis).
+    pub fn preds(&self) -> Vec<Vec<NodeId>> {
+        let mut preds = vec![Vec::new(); self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &s in &n.succs {
+                preds[s].push(i);
+            }
+        }
+        preds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{lex::lex, parse::parse, sema::analyze};
+
+    fn cfg_of(src: &str) -> Cfg {
+        let checked = analyze(parse(&lex(src).unwrap()).unwrap()).unwrap();
+        Cfg::build(&checked.tasks[0].func)
+    }
+
+    #[test]
+    fn straight_line_chain() {
+        let cfg = cfg_of("#pragma gtap function\nvoid f(int n) { int x = n; x = x + 1; }");
+        // entry -> decl -> assign -> exit
+        assert_eq!(cfg.nodes.len(), 4);
+        let decl = 2;
+        assert_eq!(cfg.nodes[cfg.entry].succs, vec![decl]);
+        assert_eq!(cfg.nodes[decl].succs, vec![3]);
+        assert_eq!(cfg.nodes[3].succs, vec![cfg.exit]);
+    }
+
+    #[test]
+    fn if_then_else_merges() {
+        let cfg = cfg_of(
+            "#pragma gtap function\nvoid f(int n) { int x = 0; if (n) { x = 1; } else { x = 2; } x = x; }",
+        );
+        // Both arms must flow into the final assignment.
+        let last_assign = cfg
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.kind == NodeKind::Stmt)
+            .map(|(i, _)| i)
+            .max()
+            .unwrap();
+        let preds = cfg.preds();
+        assert_eq!(preds[last_assign].len(), 2);
+    }
+
+    #[test]
+    fn while_has_back_edge() {
+        let cfg = cfg_of("#pragma gtap function\nvoid f(int n) { while (n) { n = n - 1; } }");
+        let cond = cfg
+            .nodes
+            .iter()
+            .position(|n| n.kind == NodeKind::Cond)
+            .unwrap();
+        let body = cfg.nodes[cond]
+            .succs
+            .iter()
+            .copied()
+            .find(|&s| cfg.nodes[s].kind == NodeKind::Stmt)
+            .unwrap();
+        assert!(cfg.nodes[body].succs.contains(&cond), "missing back edge");
+    }
+
+    #[test]
+    fn taskwait_nodes_indexed_in_order() {
+        let cfg = cfg_of(
+            "#pragma gtap function\nvoid t() { return; }\n\
+             #pragma gtap function\nvoid f() {\n#pragma gtap task\nt();\n\
+             #pragma gtap taskwait\n#pragma gtap task\nt();\n#pragma gtap taskwait\n}",
+        );
+        assert_eq!(cfg.taskwaits.len(), 0); // first function is `t`
+        let checked = analyze(
+            parse(
+                &lex("#pragma gtap function\nvoid t() { return; }\n\
+                      #pragma gtap function\nvoid f() {\n#pragma gtap task\nt();\n\
+                      #pragma gtap taskwait\n#pragma gtap task\nt();\n#pragma gtap taskwait\n}")
+                .unwrap(),
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let cfg_f = Cfg::build(&checked.tasks[1].func);
+        assert_eq!(cfg_f.taskwaits.len(), 2);
+        assert_eq!(
+            cfg_f.nodes[cfg_f.taskwaits[0]].kind,
+            NodeKind::TaskWait { index: 1 }
+        );
+        assert_eq!(
+            cfg_f.nodes[cfg_f.taskwaits[1]].kind,
+            NodeKind::TaskWait { index: 2 }
+        );
+    }
+
+    #[test]
+    fn return_cuts_fallthrough() {
+        let cfg = cfg_of(
+            "#pragma gtap function\nint f(int n) { if (n < 2) return n; return n + 1; }",
+        );
+        // The first return's only successor is exit.
+        let ret1 = cfg
+            .nodes
+            .iter()
+            .position(|n| n.kind == NodeKind::Stmt && n.succs == vec![cfg.exit])
+            .unwrap();
+        assert!(cfg.nodes[ret1].uses.len() == 1);
+    }
+
+    #[test]
+    fn spawn_does_not_define_dest() {
+        let checked = analyze(
+            parse(
+                &lex("#pragma gtap function\nint t(int n) { return n; }\n\
+                      #pragma gtap function\nint f(int n) { int a;\n#pragma gtap task\n\
+                      a = t(n);\n#pragma gtap taskwait\nreturn a; }")
+                .unwrap(),
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let cfg = Cfg::build(&checked.tasks[1].func);
+        let a = cfg.var_id("a").unwrap();
+        for n in &cfg.nodes {
+            if n.kind == NodeKind::Stmt {
+                assert!(
+                    !n.defs.contains(&a) || n.uses.is_empty(),
+                    "spawn node must not def its capture dest"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_for_models_loop() {
+        let cfg = cfg_of(
+            "#pragma gtap function\nvoid f(int n) { parallel_for (i in 0..n) { print_int(i); } }",
+        );
+        let header = cfg
+            .nodes
+            .iter()
+            .position(|n| n.kind == NodeKind::Cond)
+            .unwrap();
+        let preds = cfg.preds();
+        // header has a predecessor inside the body (back edge)
+        assert!(preds[header].len() >= 2);
+    }
+}

@@ -1,0 +1,1051 @@
+//! Bytecode generation with state-machine conversion (§5.2.2–5.2.3).
+//!
+//! Each task function becomes one [`FuncCode`] whose `state_entries` table
+//! is the paper's `switch (state)`: entry 0 is the function start; the k-th
+//! `taskwait` compiles to *evaluate queue expr* → [`Insn::PrepareJoin`]
+//! (suspend) and registers `state_entries[k]` as the re-entry pc, where the
+//! capture destinations are materialized from the child records
+//! ([`Insn::ChildResult`], the analogue of `__gtap_load_result` in
+//! Program 6). Every `return` is normalized to *store result field* →
+//! [`Insn::FinishTask`], and a `FinishTask` is appended at the body end —
+//! exactly the paper's rewrite of `return` into `__gtap_finish_task(...)`.
+//!
+//! Variables in the spill set (computed by [`super::liveness`]) are accessed
+//! via task-data loads/stores; everything else lives in per-lane virtual
+//! registers. Parameters are always task-data fields because GTaP copies
+//! arguments at spawn time (firstprivate semantics, §5.1.2).
+//!
+//! Non-task device helpers are expanded inline at their call sites (their
+//! restricted single-return shape was validated by sema).
+
+use super::diag::{CompileError, CompileResult};
+use super::liveness::analyze_spills;
+use super::sema::{CheckedProgram, TypedFunction};
+use crate::ir::ast::*;
+use crate::ir::bytecode::*;
+use crate::ir::intrinsics;
+use crate::ir::layout::{FieldKind, TaskDataLayout};
+use crate::ir::types::Type;
+use std::collections::HashMap;
+
+/// Generate a bytecode [`Module`] from a checked program.
+pub fn generate(checked: &CheckedProgram, max_td_bytes: usize) -> CompileResult<Module> {
+    let func_ids: HashMap<String, FuncId> = checked
+        .tasks
+        .iter()
+        .enumerate()
+        .map(|(i, t)| (t.func.name.clone(), i as FuncId))
+        .collect();
+    let global_addrs: HashMap<String, u64> = checked
+        .globals
+        .iter()
+        .enumerate()
+        .map(|(i, g)| (g.name.clone(), i as u64))
+        .collect();
+
+    let mut funcs = Vec::new();
+    for tf in &checked.tasks {
+        let mut cg = Codegen::new(tf, checked, &func_ids, &global_addrs)?;
+        cg.run()?;
+        let code = cg.finish();
+        if code.layout.bytes() > max_td_bytes {
+            return CompileError::err(
+                tf.func.span,
+                format!(
+                    "task-data record of {:?} is {} bytes, exceeding \
+                     GTAP_MAX_TASK_DATA_SIZE={max_td_bytes} (Table 1)",
+                    tf.func.name,
+                    code.layout.bytes()
+                ),
+            );
+        }
+        funcs.push(code);
+    }
+    Ok(Module {
+        funcs,
+        globals: checked
+            .globals
+            .iter()
+            .map(|g| (g.name.clone(), g.ty))
+            .collect(),
+    })
+}
+
+/// Where a variable lives.
+#[derive(Clone, Copy, Debug)]
+enum Binding {
+    Reg(Reg),
+    Td(u16),
+}
+
+struct Codegen<'a> {
+    tf: &'a TypedFunction,
+    prog: &'a CheckedProgram,
+    func_ids: &'a HashMap<String, FuncId>,
+    global_addrs: &'a HashMap<String, u64>,
+
+    insns: Vec<Insn>,
+    arg_pool: Vec<Reg>,
+    state_entries: Vec<Pc>,
+    layout: TaskDataLayout,
+    bindings: HashMap<String, Binding>,
+    /// Types of inline-expansion temporaries (device-fn params/locals).
+    inline_types: HashMap<String, Type>,
+
+    next_reg: u16,
+    max_reg: u16,
+    /// Temp stack pointer (temps allocated above named registers).
+    temp_base: u16,
+
+    /// Captures awaiting the next taskwait: (dest var, child slot).
+    pending_captures: Vec<(String, u16)>,
+    /// Children spawned since the last taskwait (static count).
+    spawns_in_region: u16,
+    max_children_hint: u16,
+    /// Loop nesting depth (spawn inside a loop ⇒ unbounded children hint).
+    loop_depth: u32,
+    has_taskwait: bool,
+    uses_parfor: bool,
+}
+
+impl<'a> Codegen<'a> {
+    fn new(
+        tf: &'a TypedFunction,
+        prog: &'a CheckedProgram,
+        func_ids: &'a HashMap<String, FuncId>,
+        global_addrs: &'a HashMap<String, u64>,
+    ) -> CompileResult<Codegen<'a>> {
+        let spills = analyze_spills(&tf.func);
+        let mut layout = TaskDataLayout::default();
+        let mut bindings = HashMap::new();
+        // (i) original arguments
+        for p in &tf.func.params {
+            let off = layout.push(&p.name, p.ty, FieldKind::Arg);
+            bindings.insert(p.name.clone(), Binding::Td(off));
+        }
+        // (ii) spilled locals (deterministic order: sort by name)
+        let mut spill_names: Vec<&String> = spills.spilled.iter().collect();
+        spill_names.sort();
+        for name in spill_names {
+            let ty = tf.var_types[name];
+            let off = layout.push(name, ty, FieldKind::Spill);
+            bindings.insert(name.clone(), Binding::Td(off));
+        }
+        // (iii) result field
+        if tf.func.ret != Type::Void {
+            layout.push("__result", tf.func.ret, FieldKind::Result);
+        }
+        // register-resident locals
+        let mut next_reg: u16 = 0;
+        let mut names: Vec<&String> = tf.var_types.keys().collect();
+        names.sort();
+        for name in names {
+            if !bindings.contains_key(name.as_str()) {
+                bindings.insert(name.clone(), Binding::Reg(next_reg));
+                next_reg += 1;
+            }
+        }
+        Ok(Codegen {
+            tf,
+            prog,
+            func_ids,
+            global_addrs,
+            insns: vec![],
+            arg_pool: vec![],
+            state_entries: vec![0],
+            layout,
+            bindings,
+            inline_types: HashMap::new(),
+            temp_base: next_reg,
+            next_reg,
+            max_reg: next_reg,
+            pending_captures: vec![],
+            spawns_in_region: 0,
+            max_children_hint: 0,
+            loop_depth: 0,
+            has_taskwait: spills.num_taskwaits > 0,
+            uses_parfor: false,
+        })
+    }
+
+    fn run(&mut self) -> CompileResult<()> {
+        let body = self.tf.func.body.clone();
+        self.gen_block(&body)?;
+        // normalize: implicit finish at the end of the body
+        self.emit(Insn::FinishTask);
+        Ok(())
+    }
+
+    fn finish(self) -> FuncCode {
+        FuncCode {
+            name: self.tf.func.name.clone(),
+            insns: self.insns,
+            arg_pool: self.arg_pool,
+            state_entries: self.state_entries,
+            nregs: self.max_reg,
+            layout: self.layout,
+            max_children_hint: self.max_children_hint,
+            has_taskwait: self.has_taskwait,
+            uses_parfor: self.uses_parfor,
+            ret: self.tf.func.ret,
+        }
+    }
+
+    // ---- emission helpers -------------------------------------------------
+
+    fn emit(&mut self, i: Insn) -> Pc {
+        self.insns.push(i);
+        (self.insns.len() - 1) as Pc
+    }
+
+    fn here(&self) -> Pc {
+        self.insns.len() as Pc
+    }
+
+    fn temp(&mut self) -> Reg {
+        let r = self.next_reg;
+        self.next_reg += 1;
+        if self.next_reg > self.max_reg {
+            self.max_reg = self.next_reg;
+        }
+        r
+    }
+
+    /// Release temps back to `mark` (stack discipline per statement).
+    fn release_temps(&mut self, mark: u16) {
+        debug_assert!(mark >= self.temp_base);
+        self.next_reg = mark;
+    }
+
+    fn temp_mark(&self) -> u16 {
+        self.next_reg
+    }
+
+    fn const_to(&mut self, val: u64) -> Reg {
+        let r = self.temp();
+        self.emit(Insn::Const { dst: r, val });
+        r
+    }
+
+    fn patch_jmp(&mut self, at: Pc, target: Pc) {
+        match &mut self.insns[at as usize] {
+            Insn::Jmp { target: t } => *t = target,
+            other => panic!("patch_jmp on {other:?}"),
+        }
+    }
+
+    fn patch_br(&mut self, at: Pc, t: Option<Pc>, f: Option<Pc>) {
+        match &mut self.insns[at as usize] {
+            Insn::Br { t: bt, f: bf, .. } => {
+                if let Some(t) = t {
+                    *bt = t;
+                }
+                if let Some(f) = f {
+                    *bf = f;
+                }
+            }
+            other => panic!("patch_br on {other:?}"),
+        }
+    }
+
+    // ---- types ------------------------------------------------------------
+
+    fn var_type(&self, name: &str) -> Type {
+        if let Some(&t) = self.inline_types.get(name) {
+            return t;
+        }
+        self.tf.var_types[name]
+    }
+
+    fn type_of(&self, e: &Expr) -> Type {
+        match e {
+            Expr::IntLit(_) => Type::Int,
+            Expr::FloatLit(_) => Type::Float,
+            Expr::Var(n, _) => self.var_type(n),
+            Expr::Global(g, _) => {
+                self.prog
+                    .globals
+                    .iter()
+                    .find(|d| &d.name == g)
+                    .expect("sema resolved global")
+                    .ty
+            }
+            Expr::Unary { op, expr, .. } => match op {
+                UnOp::Not => Type::Int,
+                _ => self.type_of(expr),
+            },
+            Expr::Binary { op, lhs, rhs, .. } => {
+                use BinOp::*;
+                match op {
+                    Lt | Le | Gt | Ge | Eq | Ne | LAnd | LOr | Rem | And | Or | Xor | Shl
+                    | Shr => Type::Int,
+                    Add | Sub | Mul | Div => {
+                        let lt = self.type_of(lhs);
+                        if lt == Type::Ptr {
+                            Type::Ptr
+                        } else if lt == Type::Float || self.type_of(rhs) == Type::Float {
+                            Type::Float
+                        } else {
+                            Type::Int
+                        }
+                    }
+                }
+            }
+            Expr::Ternary { then_e, .. } => self.type_of(then_e),
+            Expr::Call(c) => {
+                if let Some(sig) = intrinsics::lookup(&c.callee) {
+                    sig.ret
+                } else {
+                    self.prog.devices[&c.callee].func.ret
+                }
+            }
+            Expr::Index { .. } => Type::Int,
+            Expr::Cast { ty, .. } => *ty,
+        }
+    }
+
+    // ---- statements ---------------------------------------------------------
+
+    fn gen_block(&mut self, b: &Block) -> CompileResult<()> {
+        for s in &b.stmts {
+            self.gen_stmt(s)?;
+        }
+        Ok(())
+    }
+
+    fn store_var(&mut self, name: &str, src: Reg) {
+        match self.bindings[name] {
+            Binding::Reg(r) => {
+                self.emit(Insn::Mov { dst: r, src });
+            }
+            Binding::Td(off) => {
+                self.emit(Insn::StTd { off, src });
+            }
+        }
+    }
+
+    fn gen_stmt(&mut self, s: &Stmt) -> CompileResult<()> {
+        let mark = self.temp_mark();
+        match s {
+            Stmt::Decl { name, init, .. } => {
+                if let Some(e) = init {
+                    let r = self.gen_expr(e)?;
+                    self.store_var(name, r);
+                }
+            }
+            Stmt::Assign { target, value, .. } => {
+                let v = self.gen_expr(value)?;
+                match target {
+                    LValue::Var(name) => self.store_var(name, v),
+                    LValue::Global(g) => {
+                        let addr = self.const_to(self.global_addrs[g]);
+                        self.emit(Insn::StG {
+                            addr,
+                            src: v,
+                            cache: CacheOp::Cg,
+                        });
+                    }
+                    LValue::Index { base, index } => {
+                        let b = self.gen_expr(base)?;
+                        let i = self.gen_expr(index)?;
+                        let addr = self.temp();
+                        self.emit(Insn::Bin {
+                            op: BinKind::IAdd,
+                            dst: addr,
+                            a: b,
+                            b: i,
+                        });
+                        self.emit(Insn::StG {
+                            addr,
+                            src: v,
+                            cache: CacheOp::Ca,
+                        });
+                    }
+                }
+            }
+            Stmt::ExprStmt { expr, .. } => {
+                self.gen_expr(expr)?;
+            }
+            Stmt::Return { value, .. } => {
+                if let Some(e) = value {
+                    let r = self.gen_expr(e)?;
+                    let off = self.layout.result_offset().expect("result field");
+                    self.emit(Insn::StTd { off, src: r });
+                }
+                self.emit(Insn::FinishTask);
+            }
+            Stmt::Spawn {
+                queue, dest, call, ..
+            } => {
+                // evaluate args into a contiguous arg-pool run
+                let mut arg_regs = Vec::with_capacity(call.args.len());
+                for a in &call.args {
+                    arg_regs.push(self.gen_expr(a)?);
+                }
+                let queue_reg = match queue {
+                    Some(q) => self.gen_expr(q)?,
+                    None => self.const_to(0),
+                };
+                let arg_base = self.arg_pool.len() as u32;
+                self.arg_pool.extend_from_slice(&arg_regs);
+                let func = self.func_ids[&call.callee];
+                self.emit(Insn::Spawn {
+                    func,
+                    arg_base,
+                    argc: arg_regs.len() as u8,
+                    queue: queue_reg,
+                });
+                if let Some(d) = dest {
+                    self.pending_captures
+                        .push((d.clone(), self.spawns_in_region));
+                }
+                self.spawns_in_region = self.spawns_in_region.saturating_add(1);
+                if self.loop_depth > 0 {
+                    self.max_children_hint = u16::MAX;
+                } else {
+                    self.max_children_hint =
+                        self.max_children_hint.max(self.spawns_in_region);
+                }
+            }
+            Stmt::TaskWait { queue, .. } => {
+                let queue_reg = match queue {
+                    Some(q) => self.gen_expr(q)?,
+                    None => self.const_to(0),
+                };
+                let next_state = self.state_entries.len() as u16;
+                self.emit(Insn::PrepareJoin {
+                    next_state,
+                    queue: queue_reg,
+                });
+                // --- state boundary: re-entry point ---
+                self.release_temps(mark);
+                let entry = self.here();
+                self.state_entries.push(entry);
+                // materialize capture destinations from child records
+                let captures = std::mem::take(&mut self.pending_captures);
+                for (dest, slot) in captures {
+                    let r = self.temp();
+                    self.emit(Insn::ChildResult { dst: r, slot });
+                    self.store_var(&dest, r);
+                }
+                self.spawns_in_region = 0;
+            }
+            Stmt::If {
+                cond,
+                then_blk,
+                else_blk,
+                ..
+            } => {
+                let c = self.gen_expr(cond)?;
+                let br = self.emit(Insn::Br { cond: c, t: 0, f: 0 });
+                let then_pc = self.here();
+                self.gen_block(then_blk)?;
+                match else_blk {
+                    Some(e) => {
+                        let jmp_end = self.emit(Insn::Jmp { target: 0 });
+                        let else_pc = self.here();
+                        self.gen_block(e)?;
+                        let end = self.here();
+                        self.patch_br(br, Some(then_pc), Some(else_pc));
+                        self.patch_jmp(jmp_end, end);
+                    }
+                    None => {
+                        let end = self.here();
+                        self.patch_br(br, Some(then_pc), Some(end));
+                    }
+                }
+            }
+            Stmt::While { cond, body, .. } => {
+                let cond_pc = self.here();
+                let c = self.gen_expr(cond)?;
+                let br = self.emit(Insn::Br { cond: c, t: 0, f: 0 });
+                let body_pc = self.here();
+                self.loop_depth += 1;
+                self.gen_block(body)?;
+                self.loop_depth -= 1;
+                self.emit(Insn::Jmp { target: cond_pc });
+                let end = self.here();
+                self.patch_br(br, Some(body_pc), Some(end));
+            }
+            Stmt::For {
+                init,
+                cond,
+                step,
+                body,
+                ..
+            } => {
+                if let Some(i) = init {
+                    self.gen_stmt(i)?;
+                }
+                let cond_pc = self.here();
+                let br = match cond {
+                    Some(c) => {
+                        let r = self.gen_expr(c)?;
+                        Some(self.emit(Insn::Br { cond: r, t: 0, f: 0 }))
+                    }
+                    None => None,
+                };
+                let body_pc = self.here();
+                self.loop_depth += 1;
+                self.gen_block(body)?;
+                if let Some(st) = step {
+                    self.gen_stmt(st)?;
+                }
+                self.loop_depth -= 1;
+                self.emit(Insn::Jmp { target: cond_pc });
+                let end = self.here();
+                if let Some(br) = br {
+                    self.patch_br(br, Some(body_pc), Some(end));
+                }
+            }
+            Stmt::ParallelFor {
+                var, lo, hi, body, ..
+            } => {
+                self.uses_parfor = true;
+                let lo_r = self.gen_expr(lo)?;
+                let hi_r = self.gen_expr(hi)?;
+                // keep hi in a dedicated temp that survives the loop
+                let trips = self.temp();
+                self.emit(Insn::Bin {
+                    op: BinKind::ISub,
+                    dst: trips,
+                    a: hi_r,
+                    b: lo_r,
+                });
+                self.emit(Insn::ParEnter { trips });
+                // induction var is a named binding (register — parallel_for
+                // cannot contain taskwait, so never spilled)
+                self.store_var(var, lo_r);
+                let var_reg = match self.bindings[var.as_str()] {
+                    Binding::Reg(r) => r,
+                    Binding::Td(_) => unreachable!("parfor var cannot be spilled"),
+                };
+                let cond_pc = self.here();
+                let c = self.temp();
+                self.emit(Insn::Bin {
+                    op: BinKind::ILt,
+                    dst: c,
+                    a: var_reg,
+                    b: hi_r,
+                });
+                let br = self.emit(Insn::Br { cond: c, t: 0, f: 0 });
+                let body_pc = self.here();
+                self.loop_depth += 1;
+                self.gen_block(body)?;
+                self.loop_depth -= 1;
+                let one = self.const_to(1);
+                self.emit(Insn::Bin {
+                    op: BinKind::IAdd,
+                    dst: var_reg,
+                    a: var_reg,
+                    b: one,
+                });
+                self.emit(Insn::Jmp { target: cond_pc });
+                let end = self.here();
+                self.patch_br(br, Some(body_pc), Some(end));
+                self.emit(Insn::ParExit);
+            }
+            Stmt::Nested(b) => self.gen_block(b)?,
+        }
+        // statement boundary: recycle expression temps (named regs persist)
+        if !matches!(s, Stmt::TaskWait { .. }) {
+            self.release_temps(mark);
+        }
+        Ok(())
+    }
+
+    // ---- expressions --------------------------------------------------------
+
+    fn gen_expr(&mut self, e: &Expr) -> CompileResult<Reg> {
+        match e {
+            Expr::IntLit(v) => Ok(self.const_to(*v as u64)),
+            Expr::FloatLit(v) => Ok(self.const_to(v.to_bits())),
+            Expr::Var(name, _) => match self.bindings[name.as_str()] {
+                Binding::Reg(r) => Ok(r),
+                Binding::Td(off) => {
+                    let dst = self.temp();
+                    self.emit(Insn::LdTd { dst, off });
+                    Ok(dst)
+                }
+            },
+            Expr::Global(g, _) => {
+                let addr = self.const_to(self.global_addrs[g]);
+                let dst = self.temp();
+                self.emit(Insn::LdG {
+                    dst,
+                    addr,
+                    cache: CacheOp::Cg,
+                });
+                Ok(dst)
+            }
+            Expr::Unary { op, expr, .. } => {
+                let a = self.gen_expr(expr)?;
+                let ty = self.type_of(expr);
+                let dst = self.temp();
+                let kind = match (op, ty) {
+                    (UnOp::Neg, Type::Float) => UnKind::FNeg,
+                    (UnOp::Neg, _) => UnKind::INeg,
+                    (UnOp::BitNot, _) => UnKind::IBitNot,
+                    (UnOp::Not, _) => UnKind::LNot,
+                };
+                self.emit(Insn::Un { op: kind, dst, a });
+                Ok(dst)
+            }
+            Expr::Binary { op, lhs, rhs, .. } => {
+                use BinOp::*;
+                if matches!(op, LAnd | LOr) {
+                    return self.gen_short_circuit(*op, lhs, rhs);
+                }
+                let a = self.gen_expr(lhs)?;
+                let b = self.gen_expr(rhs)?;
+                let f = self.type_of(lhs) == Type::Float || self.type_of(rhs) == Type::Float;
+                let kind = match (op, f) {
+                    (Add, false) => BinKind::IAdd,
+                    (Sub, false) => BinKind::ISub,
+                    (Mul, false) => BinKind::IMul,
+                    (Div, false) => BinKind::IDiv,
+                    (Rem, _) => BinKind::IRem,
+                    (And, _) => BinKind::IAnd,
+                    (Or, _) => BinKind::IOr,
+                    (Xor, _) => BinKind::IXor,
+                    (Shl, _) => BinKind::IShl,
+                    (Shr, _) => BinKind::IShr,
+                    (Lt, false) => BinKind::ILt,
+                    (Le, false) => BinKind::ILe,
+                    (Gt, false) => BinKind::IGt,
+                    (Ge, false) => BinKind::IGe,
+                    (Eq, false) => BinKind::IEq,
+                    (Ne, false) => BinKind::INe,
+                    (Add, true) => BinKind::FAdd,
+                    (Sub, true) => BinKind::FSub,
+                    (Mul, true) => BinKind::FMul,
+                    (Div, true) => BinKind::FDiv,
+                    (Lt, true) => BinKind::FLt,
+                    (Le, true) => BinKind::FLe,
+                    (Gt, true) => BinKind::FGt,
+                    (Ge, true) => BinKind::FGe,
+                    (Eq, true) => BinKind::FEq,
+                    (Ne, true) => BinKind::FNe,
+                    (LAnd, _) | (LOr, _) => unreachable!(),
+                };
+                let dst = self.temp();
+                self.emit(Insn::Bin { op: kind, dst, a, b });
+                Ok(dst)
+            }
+            Expr::Ternary {
+                cond,
+                then_e,
+                else_e,
+                ..
+            } => {
+                let dst = self.temp();
+                let c = self.gen_expr(cond)?;
+                let br = self.emit(Insn::Br { cond: c, t: 0, f: 0 });
+                let then_pc = self.here();
+                let tr = self.gen_expr(then_e)?;
+                self.emit(Insn::Mov { dst, src: tr });
+                let jmp = self.emit(Insn::Jmp { target: 0 });
+                let else_pc = self.here();
+                let er = self.gen_expr(else_e)?;
+                self.emit(Insn::Mov { dst, src: er });
+                let end = self.here();
+                self.patch_br(br, Some(then_pc), Some(else_pc));
+                self.patch_jmp(jmp, end);
+                Ok(dst)
+            }
+            Expr::Call(c) => self.gen_call(c),
+            Expr::Index { base, index, .. } => {
+                let b = self.gen_expr(base)?;
+                let i = self.gen_expr(index)?;
+                let addr = self.temp();
+                self.emit(Insn::Bin {
+                    op: BinKind::IAdd,
+                    dst: addr,
+                    a: b,
+                    b: i,
+                });
+                let dst = self.temp();
+                self.emit(Insn::LdG {
+                    dst,
+                    addr,
+                    cache: CacheOp::Ca,
+                });
+                Ok(dst)
+            }
+            Expr::Cast { ty, expr, .. } => {
+                let from = self.type_of(expr);
+                let a = self.gen_expr(expr)?;
+                match (from, ty) {
+                    (Type::Int, Type::Float) => {
+                        let dst = self.temp();
+                        self.emit(Insn::Un {
+                            op: UnKind::IToF,
+                            dst,
+                            a,
+                        });
+                        Ok(dst)
+                    }
+                    (Type::Float, Type::Int) => {
+                        let dst = self.temp();
+                        self.emit(Insn::Un {
+                            op: UnKind::FToI,
+                            dst,
+                            a,
+                        });
+                        Ok(dst)
+                    }
+                    // reinterpreting int<->ptr / identity casts are free
+                    _ => Ok(a),
+                }
+            }
+        }
+    }
+
+    fn gen_short_circuit(&mut self, op: BinOp, lhs: &Expr, rhs: &Expr) -> CompileResult<Reg> {
+        let dst = self.temp();
+        let a = self.gen_expr(lhs)?;
+        let br = self.emit(Insn::Br { cond: a, t: 0, f: 0 });
+        let zero = self.const_to(0);
+        let norm = |cg: &mut Self, val: Reg, zero: Reg, dst: Reg| {
+            cg.emit(Insn::Bin {
+                op: BinKind::INe,
+                dst,
+                a: val,
+                b: zero,
+            });
+        };
+        match op {
+            BinOp::LAnd => {
+                // lhs true -> dst = (rhs != 0); lhs false -> dst = 0
+                let rhs_pc = self.here();
+                let b = self.gen_expr(rhs)?;
+                norm(self, b, zero, dst);
+                let jmp = self.emit(Insn::Jmp { target: 0 });
+                let false_pc = self.here();
+                self.emit(Insn::Const { dst, val: 0 });
+                let end = self.here();
+                self.patch_br(br, Some(rhs_pc), Some(false_pc));
+                self.patch_jmp(jmp, end);
+            }
+            BinOp::LOr => {
+                // lhs true -> dst = 1; lhs false -> dst = (rhs != 0)
+                let true_pc = self.here();
+                self.emit(Insn::Const { dst, val: 1 });
+                let jmp = self.emit(Insn::Jmp { target: 0 });
+                let rhs_pc = self.here();
+                let b = self.gen_expr(rhs)?;
+                norm(self, b, zero, dst);
+                let end = self.here();
+                self.patch_br(br, Some(true_pc), Some(rhs_pc));
+                self.patch_jmp(jmp, end);
+            }
+            _ => unreachable!(),
+        }
+        Ok(dst)
+    }
+
+    fn gen_call(&mut self, c: &CallExpr) -> CompileResult<Reg> {
+        // intrinsic?
+        if let Some(sig) = intrinsics::lookup(&c.callee) {
+            let mut arg_regs = Vec::with_capacity(c.args.len());
+            for a in &c.args {
+                arg_regs.push(self.gen_expr(a)?);
+            }
+            let arg_base = self.arg_pool.len() as u32;
+            self.arg_pool.extend_from_slice(&arg_regs);
+            let has_dst = sig.ret != Type::Void;
+            let dst = if has_dst { self.temp() } else { 0 };
+            self.emit(Insn::Intr {
+                id: sig.id,
+                dst,
+                arg_base,
+                argc: arg_regs.len() as u8,
+                has_dst,
+            });
+            return Ok(dst);
+        }
+        // device helper: inline expansion
+        self.inline_device(c)
+    }
+
+    /// Inline a device helper: bind params to evaluated argument registers,
+    /// emit its decls, then its return expression. Sema guarantees the
+    /// restricted shape and acyclicity.
+    fn inline_device(&mut self, c: &CallExpr) -> CompileResult<Reg> {
+        let dev = self.prog.devices[&c.callee].clone();
+        // Names the expansion introduces: params + all locals. Device
+        // functions were alpha-renamed independently, so a local may collide
+        // with a caller variable — save and restore every introduced name.
+        let mut introduced: Vec<String> =
+            dev.func.params.iter().map(|p| p.name.clone()).collect();
+        for s in &dev.func.body.stmts {
+            if let Stmt::Decl { name, .. } = s {
+                introduced.push(name.clone());
+            }
+        }
+        let saved: Vec<(String, Option<Binding>, Option<Type>)> = introduced
+            .iter()
+            .map(|k| {
+                (
+                    k.clone(),
+                    self.bindings.get(k).copied(),
+                    self.inline_types.get(k).copied(),
+                )
+            })
+            .collect();
+
+        // Evaluate arguments in the caller's frame, copying each into a
+        // fresh temp so later argument evaluation cannot clobber it.
+        for (a, p) in c.args.iter().zip(&dev.func.params) {
+            let r = self.gen_expr(a)?;
+            let t = self.temp();
+            self.emit(Insn::Mov { dst: t, src: r });
+            self.bindings.insert(p.name.clone(), Binding::Reg(t));
+            self.inline_types.insert(p.name.clone(), p.ty);
+        }
+
+        let mut result: Reg = 0;
+        for (i, s) in dev.func.body.stmts.iter().enumerate() {
+            match s {
+                Stmt::Decl {
+                    name,
+                    ty,
+                    init: Some(e),
+                    ..
+                } => {
+                    let r = self.gen_expr(e)?;
+                    let t = self.temp();
+                    self.emit(Insn::Mov { dst: t, src: r });
+                    self.bindings.insert(name.clone(), Binding::Reg(t));
+                    self.inline_types.insert(name.clone(), *ty);
+                }
+                Stmt::ExprStmt { expr, .. } => {
+                    self.gen_expr(expr)?;
+                }
+                Stmt::Return { value, .. } => {
+                    debug_assert_eq!(i + 1, dev.func.body.stmts.len());
+                    if let Some(e) = value {
+                        result = self.gen_expr(e)?;
+                    }
+                }
+                _ => unreachable!("sema enforced device shape"),
+            }
+        }
+        // Restore caller bindings shadowed by the expansion.
+        for (k, old_b, old_t) in saved {
+            match old_b {
+                Some(b) => {
+                    self.bindings.insert(k.clone(), b);
+                }
+                None => {
+                    self.bindings.remove(&k);
+                }
+            }
+            match old_t {
+                Some(t) => {
+                    self.inline_types.insert(k, t);
+                }
+                None => {
+                    self.inline_types.remove(&k);
+                }
+            }
+        }
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile_default;
+
+    const FIB: &str = r#"
+        global int d_result;
+        #pragma gtap function
+        int fib(int n) {
+            if (n < 2) return n;
+            int a; int b;
+            #pragma gtap task queue((n - 1) < 2 ? 1 : 0)
+            a = fib(n - 1);
+            #pragma gtap task queue((n - 2) < 2 ? 1 : 0)
+            b = fib(n - 2);
+            #pragma gtap taskwait queue(2)
+            return a + b;
+        }
+    "#;
+
+    #[test]
+    fn fib_compiles_to_two_states() {
+        let m = compile_default(FIB).unwrap();
+        let f = m.func(m.func_id("fib").unwrap());
+        assert_eq!(f.num_states(), 2, "entry + one taskwait re-entry");
+        assert!(f.has_taskwait);
+        assert_eq!(f.max_children_hint, 2);
+        // layout == Program 6: n (arg), a, b (spills), __result
+        assert_eq!(f.layout.words(), 4);
+        assert_eq!(f.layout.offset_of("n"), Some(0));
+        assert!(f.layout.offset_of("a").is_some());
+        assert!(f.layout.offset_of("b").is_some());
+        assert_eq!(f.layout.result_offset(), Some(3));
+    }
+
+    #[test]
+    fn state1_loads_child_results() {
+        let m = compile_default(FIB).unwrap();
+        let f = m.func(0);
+        let entry1 = f.state_entries[1] as usize;
+        // the first instructions of state 1 materialize a and b
+        let slots: Vec<u16> = f.insns[entry1..]
+            .iter()
+            .filter_map(|i| match i {
+                Insn::ChildResult { slot, .. } => Some(*slot),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(slots, vec![0, 1]);
+    }
+
+    #[test]
+    fn spawns_carry_queue_exprs() {
+        let m = compile_default(FIB).unwrap();
+        let f = m.func(0);
+        let spawns = f
+            .insns
+            .iter()
+            .filter(|i| matches!(i, Insn::Spawn { .. }))
+            .count();
+        assert_eq!(spawns, 2);
+        let joins = f
+            .insns
+            .iter()
+            .filter(|i| matches!(i, Insn::PrepareJoin { next_state: 1, .. }))
+            .count();
+        assert_eq!(joins, 1);
+    }
+
+    #[test]
+    fn returns_normalized_to_finish() {
+        let m = compile_default(FIB).unwrap();
+        let f = m.func(0);
+        let finishes = f
+            .insns
+            .iter()
+            .filter(|i| matches!(i, Insn::FinishTask))
+            .count();
+        // `return n`, `return a+b`, and the implicit end-of-body finish
+        assert_eq!(finishes, 3);
+    }
+
+    #[test]
+    fn no_taskwait_single_state() {
+        let m = compile_default(
+            "#pragma gtap function\nvoid leaf(int n) { print_int(n); }",
+        )
+        .unwrap();
+        let f = m.func(0);
+        assert_eq!(f.num_states(), 1);
+        assert!(!f.has_taskwait);
+        assert_eq!(f.layout.words(), 1); // just the arg
+    }
+
+    #[test]
+    fn task_data_size_limit_enforced() {
+        // 6 args + result = 56 bytes > 32-byte cap
+        let params: Vec<String> = (0..6).map(|i| format!("int p{i}")).collect();
+        let src = format!(
+            "#pragma gtap function\nint big({}) {{ return p0; }}",
+            params.join(", ")
+        );
+        let err = crate::compiler::compile(&src, 32).unwrap_err();
+        assert!(err.message.contains("GTAP_MAX_TASK_DATA_SIZE"), "{err}");
+    }
+
+    #[test]
+    fn spawn_in_loop_unbounded_hint() {
+        let m = compile_default(
+            "#pragma gtap function\nvoid c(int x) { print_int(x); }\n\
+             #pragma gtap function\nvoid f(int n) {\n\
+             int i = 0;\n\
+             while (i < n) {\n#pragma gtap task\nc(i);\ni = i + 1; }\n\
+             #pragma gtap taskwait\n}",
+        )
+        .unwrap();
+        let f = m.func(m.func_id("f").unwrap());
+        assert_eq!(f.max_children_hint, u16::MAX);
+    }
+
+    #[test]
+    fn device_helper_inlined() {
+        let m = compile_default(
+            "int twice(int x) { return x * 2; }\n\
+             #pragma gtap function\nint f(int n) { return twice(n) + 1; }",
+        )
+        .unwrap();
+        // only the task function is materialized
+        assert_eq!(m.funcs.len(), 1);
+        let f = m.func(0);
+        // the multiply from `twice` is inline
+        assert!(f
+            .insns
+            .iter()
+            .any(|i| matches!(i, Insn::Bin { op: BinKind::IMul, .. })));
+    }
+
+    #[test]
+    fn parfor_emits_region_markers() {
+        let m = compile_default(
+            "#pragma gtap function\nvoid f(int n) { parallel_for (i in 0..n) { print_int(i); } }",
+        )
+        .unwrap();
+        let f = m.func(0);
+        assert!(f.uses_parfor);
+        assert!(f.insns.iter().any(|i| matches!(i, Insn::ParEnter { .. })));
+        assert!(f.insns.iter().any(|i| matches!(i, Insn::ParExit)));
+    }
+
+    #[test]
+    fn globals_addressed_in_order() {
+        let m = compile_default(
+            "global int g0;\nglobal float g1;\n\
+             #pragma gtap function\nvoid f() { g0 = 1; g1 = 2.0; }",
+        )
+        .unwrap();
+        assert_eq!(m.global_addr("g0"), Some(0));
+        assert_eq!(m.global_addr("g1"), Some(1));
+        assert_eq!(m.globals_words(), 2);
+    }
+
+    #[test]
+    fn short_circuit_branches() {
+        let m = compile_default(
+            "#pragma gtap function\nint f(int a, int b) { return a && b || !a; }",
+        )
+        .unwrap();
+        let f = m.func(0);
+        let brs = f.insns.iter().filter(|i| matches!(i, Insn::Br { .. })).count();
+        assert!(brs >= 2, "short-circuit ops must lower to branches");
+    }
+
+    #[test]
+    fn float_ops_selected() {
+        let m = compile_default(
+            "#pragma gtap function\nfloat f(float x) { return x * 2.0 + 1.0; }",
+        )
+        .unwrap();
+        let f = m.func(0);
+        assert!(f.insns.iter().any(|i| matches!(i, Insn::Bin { op: BinKind::FMul, .. })));
+        assert!(f.insns.iter().any(|i| matches!(i, Insn::Bin { op: BinKind::FAdd, .. })));
+    }
+
+    #[test]
+    fn cast_emits_conversion() {
+        let m = compile_default(
+            "#pragma gtap function\nint f(float x) { return (int) x; }",
+        )
+        .unwrap();
+        assert!(m.func(0)
+            .insns
+            .iter()
+            .any(|i| matches!(i, Insn::Un { op: UnKind::FToI, .. })));
+    }
+}

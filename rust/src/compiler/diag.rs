@@ -1,0 +1,46 @@
+//! Compiler diagnostics.
+
+use crate::ir::ast::Span;
+use std::fmt;
+
+/// A compile-time error with source location.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CompileError {
+    pub span: Span,
+    pub message: String,
+}
+
+pub type CompileResult<T> = Result<T, CompileError>;
+
+impl CompileError {
+    pub fn new(span: Span, message: impl Into<String>) -> CompileError {
+        CompileError {
+            span,
+            message: message.into(),
+        }
+    }
+
+    /// Helper returning `Err` directly.
+    pub fn err<T>(span: Span, message: impl Into<String>) -> CompileResult<T> {
+        Err(Self::new(span, message))
+    }
+}
+
+impl fmt::Display for CompileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "gtapc error at {}: {}", self.span, self.message)
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_location() {
+        let e = CompileError::new(Span { line: 4, col: 9 }, "bad thing");
+        assert_eq!(e.to_string(), "gtapc error at 4:9: bad thing");
+    }
+}

@@ -1,0 +1,515 @@
+//! Lexer for GTaP-C.
+//!
+//! Mostly a conventional C-style tokenizer; the one specialty is pragma
+//! handling. A line of the form `#pragma gtap <kind> …` is turned into a
+//! `Pragma*` token, the remainder of the line is tokenized normally (so
+//! `queue((n - 1) < 2 ? 1 : 0)` is ordinary tokens) and a `PragmaEnd` token
+//! is emitted at the end of that line — pragmas are line-oriented, exactly
+//! as in C.
+
+use super::diag::{CompileError, CompileResult};
+use crate::ir::ast::Span;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    // literals and identifiers
+    Int(i64),
+    Float(f64),
+    Ident(String),
+    // keywords
+    KwInt,
+    KwFloat,
+    KwVoid,
+    KwPtr,
+    KwGlobal,
+    KwReturn,
+    KwIf,
+    KwElse,
+    KwWhile,
+    KwFor,
+    KwParallelFor,
+    KwIn,
+    // pragmas
+    PragmaFunction,
+    PragmaTask,
+    PragmaTaskwait,
+    PragmaEntry,
+    PragmaEnd,
+    // punctuation
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Comma,
+    Semi,
+    Colon,
+    Question,
+    DotDot,
+    // operators
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Percent,
+    Amp,
+    Pipe,
+    Caret,
+    Tilde,
+    Bang,
+    Shl,
+    Shr,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    EqEq,
+    Ne,
+    AndAnd,
+    OrOr,
+    Assign,
+    PlusAssign,
+    MinusAssign,
+    StarAssign,
+    Eof,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Token {
+    pub tok: Tok,
+    pub span: Span,
+}
+
+struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: u32,
+    col: u32,
+    /// When true we are inside a pragma line: a newline emits `PragmaEnd`.
+    in_pragma: bool,
+    out: Vec<Token>,
+}
+
+/// Tokenize GTaP-C source.
+pub fn lex(source: &str) -> CompileResult<Vec<Token>> {
+    let mut lx = Lexer {
+        src: source.as_bytes(),
+        pos: 0,
+        line: 1,
+        col: 1,
+        in_pragma: false,
+        out: Vec::new(),
+    };
+    lx.run()?;
+    Ok(lx.out)
+}
+
+impl<'a> Lexer<'a> {
+    fn span(&self) -> Span {
+        Span {
+            line: self.line,
+            col: self.col,
+        }
+    }
+
+    fn peek(&self) -> u8 {
+        *self.src.get(self.pos).unwrap_or(&0)
+    }
+
+    fn peek2(&self) -> u8 {
+        *self.src.get(self.pos + 1).unwrap_or(&0)
+    }
+
+    fn bump(&mut self) -> u8 {
+        let c = self.peek();
+        self.pos += 1;
+        if c == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        c
+    }
+
+    fn push(&mut self, tok: Tok, span: Span) {
+        self.out.push(Token { tok, span });
+    }
+
+    fn run(&mut self) -> CompileResult<()> {
+        loop {
+            // whitespace & comments
+            loop {
+                let c = self.peek();
+                if c == b'\n' && self.in_pragma {
+                    let sp = self.span();
+                    self.bump();
+                    self.in_pragma = false;
+                    self.push(Tok::PragmaEnd, sp);
+                    continue;
+                }
+                if c == b' ' || c == b'\t' || c == b'\r' || c == b'\n' {
+                    self.bump();
+                    continue;
+                }
+                if c == b'/' && self.peek2() == b'/' {
+                    while self.peek() != b'\n' && self.peek() != 0 {
+                        self.bump();
+                    }
+                    continue;
+                }
+                if c == b'/' && self.peek2() == b'*' {
+                    let sp = self.span();
+                    self.bump();
+                    self.bump();
+                    loop {
+                        if self.peek() == 0 {
+                            return CompileError::err(sp, "unterminated block comment");
+                        }
+                        if self.peek() == b'*' && self.peek2() == b'/' {
+                            self.bump();
+                            self.bump();
+                            break;
+                        }
+                        self.bump();
+                    }
+                    continue;
+                }
+                break;
+            }
+
+            let sp = self.span();
+            let c = self.peek();
+            if c == 0 {
+                if self.in_pragma {
+                    self.push(Tok::PragmaEnd, sp);
+                    self.in_pragma = false;
+                }
+                self.push(Tok::Eof, sp);
+                return Ok(());
+            }
+
+            if c == b'#' {
+                self.lex_pragma(sp)?;
+                continue;
+            }
+            if c.is_ascii_digit() || (c == b'.' && self.peek2().is_ascii_digit()) {
+                self.lex_number(sp)?;
+                continue;
+            }
+            if c.is_ascii_alphabetic() || c == b'_' {
+                self.lex_ident(sp);
+                continue;
+            }
+            self.lex_punct(sp)?;
+        }
+    }
+
+    fn lex_pragma(&mut self, sp: Span) -> CompileResult<()> {
+        // consume '#', expect "pragma gtap <kind>"
+        self.bump();
+        let mut words = Vec::new();
+        for _ in 0..3 {
+            while self.peek() == b' ' || self.peek() == b'\t' {
+                self.bump();
+            }
+            let mut w = String::new();
+            while self.peek().is_ascii_alphanumeric() || self.peek() == b'_' {
+                w.push(self.bump() as char);
+            }
+            words.push(w);
+        }
+        if words[0] != "pragma" || words[1] != "gtap" {
+            return CompileError::err(sp, format!("unsupported preprocessor directive: #{}", words[0]));
+        }
+        let tok = match words[2].as_str() {
+            "function" => Tok::PragmaFunction,
+            "task" => Tok::PragmaTask,
+            "taskwait" => Tok::PragmaTaskwait,
+            "entry" => Tok::PragmaEntry,
+            other => {
+                return CompileError::err(
+                    sp,
+                    format!("unknown gtap pragma {other:?} (expected function/task/taskwait/entry)"),
+                )
+            }
+        };
+        self.push(tok, sp);
+        self.in_pragma = true; // rest of the line (e.g. queue(...)) lexes normally
+        Ok(())
+    }
+
+    fn lex_number(&mut self, sp: Span) -> CompileResult<()> {
+        let start = self.pos;
+        // hex?
+        if self.peek() == b'0' && (self.peek2() == b'x' || self.peek2() == b'X') {
+            self.bump();
+            self.bump();
+            let hstart = self.pos;
+            while self.peek().is_ascii_hexdigit() {
+                self.bump();
+            }
+            let text = std::str::from_utf8(&self.src[hstart..self.pos]).unwrap();
+            let v = i64::from_str_radix(text, 16)
+                .map_err(|e| CompileError::new(sp, format!("bad hex literal: {e}")))?;
+            self.push(Tok::Int(v), sp);
+            return Ok(());
+        }
+        let mut is_float = false;
+        while self.peek().is_ascii_digit() {
+            self.bump();
+        }
+        if self.peek() == b'.' && self.peek2() != b'.' {
+            // not the `..` range operator
+            is_float = true;
+            self.bump();
+            while self.peek().is_ascii_digit() {
+                self.bump();
+            }
+        }
+        if self.peek() == b'e' || self.peek() == b'E' {
+            is_float = true;
+            self.bump();
+            if self.peek() == b'+' || self.peek() == b'-' {
+                self.bump();
+            }
+            while self.peek().is_ascii_digit() {
+                self.bump();
+            }
+        }
+        let text = std::str::from_utf8(&self.src[start..self.pos]).unwrap();
+        if is_float {
+            let v: f64 = text
+                .parse()
+                .map_err(|e| CompileError::new(sp, format!("bad float literal {text:?}: {e}")))?;
+            self.push(Tok::Float(v), sp);
+        } else {
+            let v: i64 = text
+                .parse()
+                .map_err(|e| CompileError::new(sp, format!("bad int literal {text:?}: {e}")))?;
+            self.push(Tok::Int(v), sp);
+        }
+        Ok(())
+    }
+
+    fn lex_ident(&mut self, sp: Span) {
+        let start = self.pos;
+        while self.peek().is_ascii_alphanumeric() || self.peek() == b'_' {
+            self.bump();
+        }
+        let text = std::str::from_utf8(&self.src[start..self.pos]).unwrap();
+        let tok = match text {
+            "int" => Tok::KwInt,
+            "float" => Tok::KwFloat,
+            "void" => Tok::KwVoid,
+            "ptr" => Tok::KwPtr,
+            "global" => Tok::KwGlobal,
+            "return" => Tok::KwReturn,
+            "if" => Tok::KwIf,
+            "else" => Tok::KwElse,
+            "while" => Tok::KwWhile,
+            "for" => Tok::KwFor,
+            "parallel_for" => Tok::KwParallelFor,
+            "in" => Tok::KwIn,
+            // `device` is accepted and ignored for CUDA-source affinity
+            // (`__device__` functions in the paper's listings).
+            "device" | "__device__" => return self.lex_after_device(),
+            _ => Tok::Ident(text.to_string()),
+        };
+        self.push(tok, sp);
+    }
+
+    fn lex_after_device(&mut self) {
+        // `device` / `__device__` qualifiers are a no-op; nothing emitted.
+    }
+
+    fn lex_punct(&mut self, sp: Span) -> CompileResult<()> {
+        let c = self.bump();
+        let two = |lx: &mut Lexer, second: u8, yes: Tok, no: Tok| {
+            if lx.peek() == second {
+                lx.bump();
+                yes
+            } else {
+                no
+            }
+        };
+        let tok = match c {
+            b'(' => Tok::LParen,
+            b')' => Tok::RParen,
+            b'{' => Tok::LBrace,
+            b'}' => Tok::RBrace,
+            b'[' => Tok::LBracket,
+            b']' => Tok::RBracket,
+            b',' => Tok::Comma,
+            b';' => Tok::Semi,
+            b':' => Tok::Colon,
+            b'?' => Tok::Question,
+            b'~' => Tok::Tilde,
+            b'^' => Tok::Caret,
+            b'+' => two(self, b'=', Tok::PlusAssign, Tok::Plus),
+            b'-' => two(self, b'=', Tok::MinusAssign, Tok::Minus),
+            b'*' => two(self, b'=', Tok::StarAssign, Tok::Star),
+            b'/' => Tok::Slash,
+            b'%' => Tok::Percent,
+            b'.' => {
+                if self.peek() == b'.' {
+                    self.bump();
+                    Tok::DotDot
+                } else {
+                    return CompileError::err(sp, "unexpected '.'");
+                }
+            }
+            b'&' => two(self, b'&', Tok::AndAnd, Tok::Amp),
+            b'|' => two(self, b'|', Tok::OrOr, Tok::Pipe),
+            b'!' => two(self, b'=', Tok::Ne, Tok::Bang),
+            b'=' => two(self, b'=', Tok::EqEq, Tok::Assign),
+            b'<' => {
+                if self.peek() == b'<' {
+                    self.bump();
+                    Tok::Shl
+                } else {
+                    two(self, b'=', Tok::Le, Tok::Lt)
+                }
+            }
+            b'>' => {
+                if self.peek() == b'>' {
+                    self.bump();
+                    Tok::Shr
+                } else {
+                    two(self, b'=', Tok::Ge, Tok::Gt)
+                }
+            }
+            other => {
+                return CompileError::err(
+                    sp,
+                    format!("unexpected character {:?}", other as char),
+                )
+            }
+        };
+        self.push(tok, sp);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn basic_tokens() {
+        assert_eq!(
+            toks("int x = 42;"),
+            vec![
+                Tok::KwInt,
+                Tok::Ident("x".into()),
+                Tok::Assign,
+                Tok::Int(42),
+                Tok::Semi,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn float_and_hex_literals() {
+        assert_eq!(
+            toks("1.5 0x1F 2e3"),
+            vec![Tok::Float(1.5), Tok::Int(31), Tok::Float(2000.0), Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn operators() {
+        assert_eq!(
+            toks("a <= b >> 2 && c != d"),
+            vec![
+                Tok::Ident("a".into()),
+                Tok::Le,
+                Tok::Ident("b".into()),
+                Tok::Shr,
+                Tok::Int(2),
+                Tok::AndAnd,
+                Tok::Ident("c".into()),
+                Tok::Ne,
+                Tok::Ident("d".into()),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn pragma_line() {
+        let t = toks("#pragma gtap task queue(1)\nx = f(2);");
+        assert_eq!(t[0], Tok::PragmaTask);
+        assert_eq!(t[1], Tok::Ident("queue".into()));
+        assert_eq!(t[2], Tok::LParen);
+        assert_eq!(t[3], Tok::Int(1));
+        assert_eq!(t[4], Tok::RParen);
+        assert_eq!(t[5], Tok::PragmaEnd);
+        assert_eq!(t[6], Tok::Ident("x".into()));
+    }
+
+    #[test]
+    fn pragma_at_eof_gets_end() {
+        let t = toks("#pragma gtap taskwait");
+        assert_eq!(t[0], Tok::PragmaTaskwait);
+        assert_eq!(t[1], Tok::PragmaEnd);
+        assert_eq!(t[2], Tok::Eof);
+    }
+
+    #[test]
+    fn comments_skipped() {
+        assert_eq!(
+            toks("// line\nint /* block\nspanning */ x"),
+            vec![Tok::KwInt, Tok::Ident("x".into()), Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn device_qualifier_ignored() {
+        assert_eq!(
+            toks("device int fib(int n)"),
+            vec![
+                Tok::KwInt,
+                Tok::Ident("fib".into()),
+                Tok::LParen,
+                Tok::KwInt,
+                Tok::Ident("n".into()),
+                Tok::RParen,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn range_operator_not_float() {
+        assert_eq!(
+            toks("0..n"),
+            vec![Tok::Int(0), Tok::DotDot, Tok::Ident("n".into()), Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn unknown_pragma_rejected() {
+        assert!(lex("#pragma omp parallel").is_err());
+        assert!(lex("#pragma gtap bogus").is_err());
+    }
+
+    #[test]
+    fn spans_track_lines() {
+        let ts = lex("int\nx").unwrap();
+        assert_eq!(ts[0].span.line, 1);
+        assert_eq!(ts[1].span.line, 2);
+    }
+
+    #[test]
+    fn unexpected_char_errors() {
+        assert!(lex("int @x").is_err());
+        assert!(lex("/* unterminated").is_err());
+    }
+}

@@ -1,0 +1,412 @@
+//! Backward liveness analysis and the paper's two conservative spill
+//! criteria (§5.2.3):
+//!
+//! 1. **Live immediately after each taskwait** — computed by standard
+//!    backward data-flow on the CFG (`in = use ∪ (out − def)`,
+//!    `out = ∪ in(succ)`), reading `live_out − def` at every taskwait node.
+//! 2. **Declared before a taskwait and possibly referenced after it** — a
+//!    source-order criterion that keeps the generated switch well-formed
+//!    (re-entry must not jump past a needed initialization).
+//!
+//! The union of both, plus capture destinations (which are written from the
+//! child records at re-entry, like `t->__cap_a = __gtap_load_result(0)` in
+//! Program 6), forms the spill set: those variables live in the task-data
+//! record instead of registers.
+
+use super::cfg::{Cfg, NodeKind};
+use crate::ir::ast::*;
+use std::collections::HashSet;
+
+/// Result of spill analysis for one task function.
+#[derive(Clone, Debug, Default)]
+pub struct SpillAnalysis {
+    /// Alpha-renamed variable names that must live in task data.
+    pub spilled: HashSet<String>,
+    /// Number of taskwaits (the state machine has `1 + taskwaits` states).
+    pub num_taskwaits: usize,
+}
+
+/// Fixed-point backward liveness over the CFG. Returns per-node live-out
+/// bitsets (as `Vec<bool>` keyed by `VarId`).
+pub fn live_out(cfg: &Cfg) -> Vec<Vec<bool>> {
+    let nv = cfg.vars.len();
+    let nn = cfg.nodes.len();
+    let mut live_in = vec![vec![false; nv]; nn];
+    let mut live_out = vec![vec![false; nv]; nn];
+    let mut changed = true;
+    while changed {
+        changed = false;
+        // Reverse order converges faster for mostly-forward CFGs.
+        for n in (0..nn).rev() {
+            let node = &cfg.nodes[n];
+            // out = union of in(succ)
+            for &s in &node.succs {
+                for v in 0..nv {
+                    if live_in[s][v] && !live_out[n][v] {
+                        live_out[n][v] = true;
+                        changed = true;
+                    }
+                }
+            }
+            // in = use ∪ (out − def)
+            for v in 0..nv {
+                let mut li = live_out[n][v];
+                if node.defs.contains(&v) {
+                    li = false;
+                }
+                if node.uses.contains(&v) {
+                    li = true;
+                }
+                if li && !live_in[n][v] {
+                    live_in[n][v] = true;
+                    changed = true;
+                }
+            }
+        }
+    }
+    live_out
+}
+
+/// Compute the spill set of a task function.
+pub fn analyze_spills(func: &Function) -> SpillAnalysis {
+    let cfg = Cfg::build(func);
+    let lo = live_out(&cfg);
+    let mut spilled: HashSet<String> = HashSet::new();
+
+    // Criterion 1: live immediately after each taskwait (minus values the
+    // re-entry itself defines — capture dests are added separately below).
+    for &tw in &cfg.taskwaits {
+        debug_assert!(matches!(cfg.nodes[tw].kind, NodeKind::TaskWait { .. }));
+        for (v, &live) in lo[tw].iter().enumerate() {
+            if live && !cfg.nodes[tw].defs.contains(&v) {
+                spilled.insert(cfg.vars[v].clone());
+            }
+        }
+    }
+
+    // Criterion 2: declared before a taskwait, referenced after it (source
+    // pre-order positions). Params count as declared at position 0.
+    let mut decl_pos: Vec<(String, usize)> = func
+        .params
+        .iter()
+        .map(|p| (p.name.clone(), 0))
+        .collect();
+    let mut ref_pos: Vec<(String, usize)> = Vec::new();
+    let mut tw_pos: Vec<usize> = Vec::new();
+    let mut pos = 0usize;
+    collect_positions(
+        &func.body,
+        &mut pos,
+        &mut decl_pos,
+        &mut ref_pos,
+        &mut tw_pos,
+    );
+    for &p in &tw_pos {
+        for (name, dp) in &decl_pos {
+            if *dp < p && ref_pos.iter().any(|(rn, rp)| rn == name && *rp > p) {
+                spilled.insert(name.clone());
+            }
+        }
+    }
+
+    // Capture destinations are materialized from child records at re-entry;
+    // they live in task data like Program 6's __cap_a/__cap_b.
+    visit_stmts(&func.body, &mut |s| {
+        if let Stmt::Spawn { dest: Some(d), .. } = s {
+            spilled.insert(d.clone());
+        }
+    });
+
+    // Parameters never enter the spill set: they are always task-data
+    // fields (arguments are copied at spawn — §5.1.2).
+    for p in &func.params {
+        spilled.remove(&p.name);
+    }
+
+    SpillAnalysis {
+        spilled,
+        num_taskwaits: cfg.taskwaits.len(),
+    }
+}
+
+/// Pre-order walk recording declaration positions, reference positions
+/// (reads *and* writes), and taskwait positions.
+fn collect_positions(
+    block: &Block,
+    pos: &mut usize,
+    decls: &mut Vec<(String, usize)>,
+    refs: &mut Vec<(String, usize)>,
+    tws: &mut Vec<usize>,
+) {
+    for s in &block.stmts {
+        *pos += 1;
+        let p = *pos;
+        match s {
+            Stmt::Decl { name, init, .. } => {
+                decls.push((name.clone(), p));
+                if let Some(e) = init {
+                    refs_of_expr(e, p, refs);
+                }
+            }
+            Stmt::Assign { target, value, .. } => {
+                refs_of_expr(value, p, refs);
+                match target {
+                    LValue::Var(n) => refs.push((n.clone(), p)),
+                    LValue::Global(_) => {}
+                    LValue::Index { base, index } => {
+                        refs_of_expr(base, p, refs);
+                        refs_of_expr(index, p, refs);
+                    }
+                }
+            }
+            Stmt::ExprStmt { expr, .. } => refs_of_expr(expr, p, refs),
+            Stmt::Spawn { queue, dest, call, .. } => {
+                for a in &call.args {
+                    refs_of_expr(a, p, refs);
+                }
+                if let Some(q) = queue {
+                    refs_of_expr(q, p, refs);
+                }
+                if let Some(d) = dest {
+                    // the capture write happens at the matching taskwait,
+                    // which is after this position in the straight-line
+                    // region sema enforced — record it at the spawn, the
+                    // later read(s) will appear past the taskwait anyway.
+                    refs.push((d.clone(), p));
+                }
+            }
+            Stmt::TaskWait { queue, .. } => {
+                if let Some(q) = queue {
+                    refs_of_expr(q, p, refs);
+                }
+                tws.push(p);
+            }
+            Stmt::Return { value, .. } => {
+                if let Some(e) = value {
+                    refs_of_expr(e, p, refs);
+                }
+            }
+            Stmt::If {
+                cond,
+                then_blk,
+                else_blk,
+                ..
+            } => {
+                refs_of_expr(cond, p, refs);
+                collect_positions(then_blk, pos, decls, refs, tws);
+                if let Some(e) = else_blk {
+                    collect_positions(e, pos, decls, refs, tws);
+                }
+            }
+            Stmt::While { cond, body, .. } => {
+                refs_of_expr(cond, p, refs);
+                collect_positions(body, pos, decls, refs, tws);
+            }
+            Stmt::For {
+                init,
+                cond,
+                step,
+                body,
+                ..
+            } => {
+                if let Some(i) = init {
+                    let b = Block {
+                        stmts: vec![(**i).clone()],
+                    };
+                    collect_positions(&b, pos, decls, refs, tws);
+                }
+                if let Some(c) = cond {
+                    refs_of_expr(c, p, refs);
+                }
+                collect_positions(body, pos, decls, refs, tws);
+                if let Some(st) = step {
+                    let b = Block {
+                        stmts: vec![(**st).clone()],
+                    };
+                    collect_positions(&b, pos, decls, refs, tws);
+                }
+            }
+            Stmt::ParallelFor {
+                var, lo, hi, body, ..
+            } => {
+                decls.push((var.clone(), p));
+                refs_of_expr(lo, p, refs);
+                refs_of_expr(hi, p, refs);
+                collect_positions(body, pos, decls, refs, tws);
+            }
+            Stmt::Nested(b) => collect_positions(b, pos, decls, refs, tws),
+        }
+    }
+}
+
+fn refs_of_expr(e: &Expr, pos: usize, refs: &mut Vec<(String, usize)>) {
+    match e {
+        Expr::IntLit(_) | Expr::FloatLit(_) | Expr::Global(..) => {}
+        Expr::Var(name, _) => refs.push((name.clone(), pos)),
+        Expr::Unary { expr, .. } | Expr::Cast { expr, .. } => refs_of_expr(expr, pos, refs),
+        Expr::Binary { lhs, rhs, .. } => {
+            refs_of_expr(lhs, pos, refs);
+            refs_of_expr(rhs, pos, refs);
+        }
+        Expr::Ternary {
+            cond,
+            then_e,
+            else_e,
+            ..
+        } => {
+            refs_of_expr(cond, pos, refs);
+            refs_of_expr(then_e, pos, refs);
+            refs_of_expr(else_e, pos, refs);
+        }
+        Expr::Call(c) => {
+            for a in &c.args {
+                refs_of_expr(a, pos, refs);
+            }
+        }
+        Expr::Index { base, index, .. } => {
+            refs_of_expr(base, pos, refs);
+            refs_of_expr(index, pos, refs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{lex::lex, parse::parse, sema::analyze};
+
+    fn spills(src: &str, func: &str) -> SpillAnalysis {
+        let checked = analyze(parse(&lex(src).unwrap()).unwrap()).unwrap();
+        analyze_spills(&checked.task(func).unwrap().func)
+    }
+
+    const FIB: &str = r#"
+        #pragma gtap function
+        int fib(int n) {
+            if (n < 2) return n;
+            int a; int b;
+            #pragma gtap task
+            a = fib(n - 1);
+            #pragma gtap task
+            b = fib(n - 2);
+            #pragma gtap taskwait
+            return a + b;
+        }
+    "#;
+
+    #[test]
+    fn fib_spills_match_program6() {
+        // Program 6 spills a and b (n is an Arg field, never in spill set).
+        let sa = spills(FIB, "fib");
+        assert_eq!(sa.num_taskwaits, 1);
+        assert!(sa.spilled.contains("a"), "{:?}", sa.spilled);
+        assert!(sa.spilled.contains("b"), "{:?}", sa.spilled);
+        assert!(!sa.spilled.contains("n"), "params are args, not spills");
+    }
+
+    #[test]
+    fn no_taskwait_no_spills() {
+        let sa = spills(
+            "#pragma gtap function\nvoid f(int n) { int x = n * 2; print_int(x); }",
+            "f",
+        );
+        assert_eq!(sa.num_taskwaits, 0);
+        assert!(sa.spilled.is_empty());
+    }
+
+    #[test]
+    fn value_dead_after_taskwait_not_spilled_by_liveness() {
+        // `t` is used only before the taskwait: criterion 1 must not spill
+        // it. Criterion 2 must not either (no references after).
+        let sa = spills(
+            "#pragma gtap function\nvoid c() { return; }\n\
+             #pragma gtap function\nvoid f(int n) {\n\
+             int t = n * 3; print_int(t);\n\
+             #pragma gtap task\nc();\n\
+             #pragma gtap taskwait\n\
+             print_int(n); }",
+            "f",
+        );
+        assert!(!sa.spilled.contains("t"), "{:?}", sa.spilled);
+    }
+
+    #[test]
+    fn value_used_after_taskwait_spilled() {
+        let sa = spills(
+            "#pragma gtap function\nvoid c() { return; }\n\
+             #pragma gtap function\nvoid f(int n) {\n\
+             int mid = n / 2;\n\
+             #pragma gtap task\nc();\n\
+             #pragma gtap taskwait\n\
+             print_int(mid); }",
+            "f",
+        );
+        assert!(sa.spilled.contains("mid"), "{:?}", sa.spilled);
+    }
+
+    #[test]
+    fn taskwait_in_loop_spills_loop_carried() {
+        // i is live around the loop across the taskwait (criterion 1 via
+        // the back edge).
+        let sa = spills(
+            "#pragma gtap function\nvoid c() { return; }\n\
+             #pragma gtap function\nvoid f(int n) {\n\
+             int i = 0;\n\
+             while (i < n) {\n\
+             #pragma gtap task\nc();\n\
+             #pragma gtap taskwait\n\
+             i = i + 1; } }",
+            "f",
+        );
+        assert_eq!(sa.num_taskwaits, 1);
+        assert!(sa.spilled.contains("i"), "{:?}", sa.spilled);
+    }
+
+    #[test]
+    fn criterion2_spills_declared_before_referenced_after() {
+        // `x` is dead at the taskwait on the taken path (re-assigned after),
+        // but criterion 2 still spills it: declared before, referenced
+        // after. This keeps the generated switch well-formed.
+        let sa = spills(
+            "#pragma gtap function\nvoid c() { return; }\n\
+             #pragma gtap function\nvoid f(int n) {\n\
+             int x = 1;\n\
+             #pragma gtap task\nc();\n\
+             #pragma gtap taskwait\n\
+             x = 2; print_int(x); }",
+            "f",
+        );
+        assert!(sa.spilled.contains("x"), "{:?}", sa.spilled);
+    }
+
+    #[test]
+    fn capture_dests_always_spilled() {
+        let sa = spills(FIB, "fib");
+        assert!(sa.spilled.contains("a") && sa.spilled.contains("b"));
+    }
+
+    #[test]
+    fn multiple_taskwaits_counted() {
+        let sa = spills(
+            "#pragma gtap function\nvoid c() { return; }\n\
+             #pragma gtap function\nvoid f() {\n\
+             #pragma gtap task\nc();\n#pragma gtap taskwait\n\
+             #pragma gtap task\nc();\n#pragma gtap taskwait\n}",
+            "f",
+        );
+        assert_eq!(sa.num_taskwaits, 2);
+    }
+
+    #[test]
+    fn liveness_fixed_point_on_diamond() {
+        // variable live through only one arm of a diamond
+        let src = "#pragma gtap function\nvoid c() { return; }\n\
+                   #pragma gtap function\nvoid f(int n) {\n\
+                   int v = n + 1;\n\
+                   #pragma gtap task\nc();\n\
+                   #pragma gtap taskwait\n\
+                   if (n) { print_int(v); } else { print_int(0); } }";
+        let sa = spills(src, "f");
+        assert!(sa.spilled.contains("v"), "{:?}", sa.spilled);
+    }
+}

@@ -1,0 +1,62 @@
+//! `gtapc` — the GTaP pragma compiler (§5 of the paper).
+//!
+//! The original is a Clang extension that rewrites the CUDA device AST; this
+//! is a self-contained frontend for **GTaP-C**, a C dialect covering the
+//! paper's benchmark programs, with the same pragma surface:
+//!
+//! ```text
+//! #pragma gtap function          → task function (state-machine converted)
+//! #pragma gtap task [queue(e)]   → spawn the immediately following call
+//! #pragma gtap taskwait [queue(e)] → join all direct children since the
+//!                                    previous taskwait; continuation
+//!                                    re-enters at the generated state
+//! ```
+//!
+//! Pipeline (one module per stage):
+//!
+//! 1. [`lex`] — tokens, with pragma-aware line handling.
+//! 2. [`parse`] — recursive-descent parser → [`crate::ir::ast`].
+//! 3. [`sema`] — name resolution with alpha-renaming, type checking, device
+//!    function inlining, and enforcement of the paper's §5.1.4 restrictions
+//!    (task/entry must immediately precede a task-function call; capturing
+//!    spawns must be joined in the same straight-line region; block-level
+//!    `parallel_for` rules).
+//! 4. [`cfg`] + [`liveness`] — statement-level control-flow graph and
+//!    backward data-flow analysis, computing the paper's two conservative
+//!    spill criteria (§5.2.3): values live immediately after each taskwait,
+//!    and values declared before a taskwait that may be referenced after it.
+//! 5. [`codegen`] — state-machine conversion (§5.2.2): one bytecode function
+//!    per task function with a state-entry ("switch") table, returns
+//!    normalized to `__gtap_finish_task`, spilled variables rewritten to
+//!    task-data loads/stores.
+//! 6. [`pretty`] — renders the transformed program as Program-6-style
+//!    pseudo-C (`gtap compile --emit-c`), used by golden tests and docs.
+
+pub mod cfg;
+pub mod codegen;
+pub mod diag;
+pub mod lex;
+pub mod liveness;
+pub mod parse;
+pub mod pretty;
+pub mod sema;
+
+pub use diag::{CompileError, CompileResult};
+
+use crate::ir::Module;
+
+/// Compile GTaP-C source text to a bytecode [`Module`].
+///
+/// `max_task_data_bytes` enforces `GTAP_MAX_TASK_DATA_SIZE` (Table 1).
+pub fn compile(source: &str, max_task_data_bytes: usize) -> CompileResult<Module> {
+    let tokens = lex::lex(source)?;
+    let ast = parse::parse(&tokens)?;
+    let checked = sema::analyze(ast)?;
+    codegen::generate(&checked, max_task_data_bytes)
+}
+
+/// Compile with the default `GTAP_MAX_TASK_DATA_SIZE` (256 bytes, generous
+/// for every paper benchmark).
+pub fn compile_default(source: &str) -> CompileResult<Module> {
+    compile(source, crate::coordinator::config::DEFAULT_MAX_TASK_DATA_SIZE)
+}

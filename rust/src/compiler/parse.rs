@@ -1,0 +1,797 @@
+//! Recursive-descent parser for GTaP-C.
+//!
+//! Enforces the paper's *syntactic* restriction on directives at parse time:
+//! `#pragma gtap task` must be immediately followed by a call to a function
+//! (optionally as an assignment capturing the return value) — statement
+//! blocks are not supported (§5.1.4 "Language/Compiler restrictions").
+//! Whether the callee is actually a `#pragma gtap function` is checked by
+//! sema, which knows the symbol table.
+
+use super::diag::{CompileError, CompileResult};
+use super::lex::{Tok, Token};
+use crate::ir::ast::*;
+use crate::ir::types::Type;
+
+struct Parser<'a> {
+    toks: &'a [Token],
+    pos: usize,
+}
+
+/// Parse a token stream into an AST.
+pub fn parse(tokens: &[Token]) -> CompileResult<Program> {
+    let mut p = Parser {
+        toks: tokens,
+        pos: 0,
+    };
+    p.program()
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+
+    fn peek2(&self) -> &Tok {
+        &self.toks[(self.pos + 1).min(self.toks.len() - 1)].tok
+    }
+
+    fn span(&self) -> Span {
+        self.toks[self.pos].span
+    }
+
+    fn bump(&mut self) -> &Token {
+        let t = &self.toks[self.pos];
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn eat(&mut self, t: &Tok) -> bool {
+        if self.peek() == t {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, t: &Tok, what: &str) -> CompileResult<Span> {
+        let sp = self.span();
+        if self.eat(t) {
+            Ok(sp)
+        } else {
+            CompileError::err(sp, format!("expected {what}, found {:?}", self.peek()))
+        }
+    }
+
+    fn ident(&mut self, what: &str) -> CompileResult<(String, Span)> {
+        let sp = self.span();
+        match self.peek().clone() {
+            Tok::Ident(name) => {
+                self.bump();
+                Ok((name, sp))
+            }
+            other => CompileError::err(sp, format!("expected {what}, found {other:?}")),
+        }
+    }
+
+    fn try_type(&mut self) -> Option<Type> {
+        let ty = match self.peek() {
+            Tok::KwInt => Type::Int,
+            Tok::KwFloat => Type::Float,
+            Tok::KwPtr => Type::Ptr,
+            Tok::KwVoid => Type::Void,
+            _ => return None,
+        };
+        self.bump();
+        Some(ty)
+    }
+
+    // ---- top level ------------------------------------------------------
+
+    fn program(&mut self) -> CompileResult<Program> {
+        let mut prog = Program::default();
+        loop {
+            match self.peek() {
+                Tok::Eof => return Ok(prog),
+                Tok::KwGlobal => prog.globals.push(self.global_decl()?),
+                Tok::PragmaFunction => {
+                    let sp = self.span();
+                    self.bump();
+                    self.expect(&Tok::PragmaEnd, "end of pragma line")?;
+                    let mut f = self.function(sp)?;
+                    f.is_task = true;
+                    prog.functions.push(f);
+                }
+                Tok::PragmaEntry => {
+                    return CompileError::err(
+                        self.span(),
+                        "#pragma gtap entry is host-driven in GTaP-Sim: start the \
+                         root task with Session::run(entry, args) instead",
+                    );
+                }
+                Tok::KwInt | Tok::KwFloat | Tok::KwVoid | Tok::KwPtr => {
+                    let sp = self.span();
+                    let f = self.function(sp)?;
+                    prog.functions.push(f);
+                }
+                other => {
+                    return CompileError::err(
+                        self.span(),
+                        format!("expected declaration, found {other:?}"),
+                    )
+                }
+            }
+        }
+    }
+
+    fn global_decl(&mut self) -> CompileResult<GlobalDecl> {
+        let span = self.span();
+        self.expect(&Tok::KwGlobal, "`global`")?;
+        let ty = self
+            .try_type()
+            .ok_or_else(|| CompileError::new(self.span(), "expected type after `global`"))?;
+        if ty == Type::Void {
+            return CompileError::err(span, "global variables cannot be void");
+        }
+        let (name, _) = self.ident("global variable name")?;
+        self.expect(&Tok::Semi, "';'")?;
+        Ok(GlobalDecl { name, ty, span })
+    }
+
+    fn function(&mut self, span: Span) -> CompileResult<Function> {
+        let ret = self
+            .try_type()
+            .ok_or_else(|| CompileError::new(self.span(), "expected return type"))?;
+        let (name, _) = self.ident("function name")?;
+        self.expect(&Tok::LParen, "'('")?;
+        let mut params = Vec::new();
+        if !self.eat(&Tok::RParen) {
+            loop {
+                let psp = self.span();
+                let ty = self
+                    .try_type()
+                    .ok_or_else(|| CompileError::new(self.span(), "expected parameter type"))?;
+                if ty == Type::Void {
+                    return CompileError::err(psp, "parameters cannot be void");
+                }
+                let (pname, _) = self.ident("parameter name")?;
+                params.push(Param {
+                    name: pname,
+                    ty,
+                    span: psp,
+                });
+                if self.eat(&Tok::RParen) {
+                    break;
+                }
+                self.expect(&Tok::Comma, "',' or ')'")?;
+            }
+        }
+        let body = self.block()?;
+        Ok(Function {
+            name,
+            is_task: false,
+            ret,
+            params,
+            body,
+            span,
+        })
+    }
+
+    // ---- statements -----------------------------------------------------
+
+    fn block(&mut self) -> CompileResult<Block> {
+        self.expect(&Tok::LBrace, "'{'")?;
+        let mut stmts = Vec::new();
+        while !self.eat(&Tok::RBrace) {
+            if *self.peek() == Tok::Eof {
+                return CompileError::err(self.span(), "unexpected end of file in block");
+            }
+            stmts.push(self.stmt()?);
+        }
+        Ok(Block { stmts })
+    }
+
+    /// A `{...}` block, or a single statement wrapped in a block.
+    fn block_or_stmt(&mut self) -> CompileResult<Block> {
+        if *self.peek() == Tok::LBrace {
+            self.block()
+        } else {
+            Ok(Block {
+                stmts: vec![self.stmt()?],
+            })
+        }
+    }
+
+    fn stmt(&mut self) -> CompileResult<Stmt> {
+        let span = self.span();
+        match self.peek().clone() {
+            Tok::KwInt | Tok::KwFloat | Tok::KwPtr => {
+                let s = self.decl(span)?;
+                self.expect(&Tok::Semi, "';'")?;
+                Ok(s)
+            }
+            Tok::PragmaTask => self.spawn_stmt(span),
+            Tok::PragmaTaskwait => {
+                self.bump();
+                let queue = self.opt_queue_clause()?;
+                self.expect(&Tok::PragmaEnd, "end of pragma line")?;
+                Ok(Stmt::TaskWait { queue, span })
+            }
+            Tok::PragmaFunction => CompileError::err(
+                span,
+                "#pragma gtap function must appear at top level, before a function definition",
+            ),
+            Tok::PragmaEntry => CompileError::err(
+                span,
+                "#pragma gtap entry is host-driven in GTaP-Sim (Session::run)",
+            ),
+            Tok::KwIf => {
+                self.bump();
+                self.expect(&Tok::LParen, "'('")?;
+                let cond = self.expr()?;
+                self.expect(&Tok::RParen, "')'")?;
+                let then_blk = self.block_or_stmt()?;
+                let else_blk = if self.eat(&Tok::KwElse) {
+                    Some(self.block_or_stmt()?)
+                } else {
+                    None
+                };
+                Ok(Stmt::If {
+                    cond,
+                    then_blk,
+                    else_blk,
+                    span,
+                })
+            }
+            Tok::KwWhile => {
+                self.bump();
+                self.expect(&Tok::LParen, "'('")?;
+                let cond = self.expr()?;
+                self.expect(&Tok::RParen, "')'")?;
+                let body = self.block_or_stmt()?;
+                Ok(Stmt::While { cond, body, span })
+            }
+            Tok::KwFor => {
+                self.bump();
+                self.expect(&Tok::LParen, "'('")?;
+                let init = if *self.peek() == Tok::Semi {
+                    None
+                } else if matches!(self.peek(), Tok::KwInt | Tok::KwFloat | Tok::KwPtr) {
+                    let sp = self.span();
+                    Some(Box::new(self.decl(sp)?))
+                } else {
+                    let sp = self.span();
+                    Some(Box::new(self.simple_stmt(sp)?))
+                };
+                self.expect(&Tok::Semi, "';'")?;
+                let cond = if *self.peek() == Tok::Semi {
+                    None
+                } else {
+                    Some(self.expr()?)
+                };
+                self.expect(&Tok::Semi, "';'")?;
+                let step = if *self.peek() == Tok::RParen {
+                    None
+                } else {
+                    let sp = self.span();
+                    Some(Box::new(self.simple_stmt(sp)?))
+                };
+                self.expect(&Tok::RParen, "')'")?;
+                let body = self.block_or_stmt()?;
+                Ok(Stmt::For {
+                    init,
+                    cond,
+                    step,
+                    body,
+                    span,
+                })
+            }
+            Tok::KwParallelFor => {
+                self.bump();
+                self.expect(&Tok::LParen, "'('")?;
+                let (var, _) = self.ident("loop variable")?;
+                self.expect(&Tok::KwIn, "`in`")?;
+                let lo = self.expr()?;
+                self.expect(&Tok::DotDot, "'..'")?;
+                let hi = self.expr()?;
+                self.expect(&Tok::RParen, "')'")?;
+                let body = self.block_or_stmt()?;
+                Ok(Stmt::ParallelFor {
+                    var,
+                    lo,
+                    hi,
+                    body,
+                    span,
+                })
+            }
+            Tok::KwReturn => {
+                self.bump();
+                let value = if *self.peek() == Tok::Semi {
+                    None
+                } else {
+                    Some(self.expr()?)
+                };
+                self.expect(&Tok::Semi, "';'")?;
+                Ok(Stmt::Return { value, span })
+            }
+            Tok::LBrace => Ok(Stmt::Nested(self.block()?)),
+            _ => {
+                let s = self.simple_stmt(span)?;
+                self.expect(&Tok::Semi, "';'")?;
+                Ok(s)
+            }
+        }
+    }
+
+    fn decl(&mut self, span: Span) -> CompileResult<Stmt> {
+        let ty = self.try_type().unwrap();
+        if ty == Type::Void {
+            return CompileError::err(span, "cannot declare a void variable");
+        }
+        let (name, _) = self.ident("variable name")?;
+        let init = if self.eat(&Tok::Assign) {
+            Some(self.expr()?)
+        } else {
+            None
+        };
+        Ok(Stmt::Decl {
+            name,
+            ty,
+            init,
+            span,
+        })
+    }
+
+    /// Assignment or expression statement (no trailing `;` consumed — used
+    /// in `for` headers too).
+    fn simple_stmt(&mut self, span: Span) -> CompileResult<Stmt> {
+        let e = self.expr()?;
+        let op = match self.peek() {
+            Tok::Assign => None,
+            Tok::PlusAssign => Some(BinOp::Add),
+            Tok::MinusAssign => Some(BinOp::Sub),
+            Tok::StarAssign => Some(BinOp::Mul),
+            _ => {
+                return Ok(Stmt::ExprStmt { expr: e, span });
+            }
+        };
+        self.bump();
+        let rhs = self.expr()?;
+        let target = self.to_lvalue(&e)?;
+        let value = match op {
+            None => rhs,
+            Some(op) => Expr::Binary {
+                op,
+                lhs: Box::new(e),
+                rhs: Box::new(rhs),
+                span,
+            },
+        };
+        Ok(Stmt::Assign {
+            target,
+            value,
+            span,
+        })
+    }
+
+    fn to_lvalue(&self, e: &Expr) -> CompileResult<LValue> {
+        match e {
+            Expr::Var(name, _) => Ok(LValue::Var(name.clone())),
+            Expr::Index { base, index, .. } => Ok(LValue::Index {
+                base: (**base).clone(),
+                index: (**index).clone(),
+            }),
+            other => CompileError::err(other.span(), "invalid assignment target"),
+        }
+    }
+
+    fn opt_queue_clause(&mut self) -> CompileResult<Option<Expr>> {
+        if let Tok::Ident(name) = self.peek() {
+            if name == "queue" {
+                self.bump();
+                self.expect(&Tok::LParen, "'(' after queue")?;
+                let e = self.expr()?;
+                self.expect(&Tok::RParen, "')'")?;
+                return Ok(Some(e));
+            }
+        }
+        Ok(None)
+    }
+
+    /// `#pragma gtap task [queue(e)]` followed by `x = f(a);` or `f(a);`.
+    fn spawn_stmt(&mut self, span: Span) -> CompileResult<Stmt> {
+        self.bump(); // PragmaTask
+        let queue = self.opt_queue_clause()?;
+        self.expect(&Tok::PragmaEnd, "end of pragma line")?;
+
+        // Restricted form: [ident =] call ;
+        let stmt_span = self.span();
+        if !matches!(self.peek(), Tok::Ident(_)) {
+            return CompileError::err(
+                stmt_span,
+                "#pragma gtap task must be immediately followed by a call to a \
+                 task function (optionally as an assignment); statement blocks \
+                 are not supported",
+            );
+        }
+        let e = self.expr()?;
+        let (dest, call_expr) = if self.eat(&Tok::Assign) {
+            let dest = match &e {
+                Expr::Var(name, _) => name.clone(),
+                _ => {
+                    return CompileError::err(
+                        stmt_span,
+                        "#pragma gtap task assignment target must be a plain variable",
+                    )
+                }
+            };
+            let rhs = self.expr()?;
+            (Some(dest), rhs)
+        } else {
+            (None, e)
+        };
+        self.expect(&Tok::Semi, "';'")?;
+        let call = match call_expr {
+            Expr::Call(c) => c,
+            other => {
+                return CompileError::err(
+                    other.span(),
+                    "#pragma gtap task must be immediately followed by a call to a \
+                     task function (optionally as an assignment); statement blocks \
+                     are not supported",
+                )
+            }
+        };
+        Ok(Stmt::Spawn {
+            queue,
+            dest,
+            call,
+            span,
+        })
+    }
+
+    // ---- expressions (C precedence) --------------------------------------
+
+    fn expr(&mut self) -> CompileResult<Expr> {
+        self.ternary()
+    }
+
+    fn ternary(&mut self) -> CompileResult<Expr> {
+        let cond = self.logic_or()?;
+        if self.eat(&Tok::Question) {
+            let span = self.span();
+            let then_e = self.expr()?;
+            self.expect(&Tok::Colon, "':'")?;
+            let else_e = self.ternary()?;
+            Ok(Expr::Ternary {
+                cond: Box::new(cond),
+                then_e: Box::new(then_e),
+                else_e: Box::new(else_e),
+                span,
+            })
+        } else {
+            Ok(cond)
+        }
+    }
+
+    fn binary_level(
+        &mut self,
+        ops: &[(Tok, BinOp)],
+        next: fn(&mut Self) -> CompileResult<Expr>,
+    ) -> CompileResult<Expr> {
+        let mut lhs = next(self)?;
+        'outer: loop {
+            for (tok, op) in ops {
+                if self.peek() == tok {
+                    let span = self.span();
+                    self.bump();
+                    let rhs = next(self)?;
+                    lhs = Expr::Binary {
+                        op: *op,
+                        lhs: Box::new(lhs),
+                        rhs: Box::new(rhs),
+                        span,
+                    };
+                    continue 'outer;
+                }
+            }
+            return Ok(lhs);
+        }
+    }
+
+    fn logic_or(&mut self) -> CompileResult<Expr> {
+        self.binary_level(&[(Tok::OrOr, BinOp::LOr)], Self::logic_and)
+    }
+
+    fn logic_and(&mut self) -> CompileResult<Expr> {
+        self.binary_level(&[(Tok::AndAnd, BinOp::LAnd)], Self::bit_or)
+    }
+
+    fn bit_or(&mut self) -> CompileResult<Expr> {
+        self.binary_level(&[(Tok::Pipe, BinOp::Or)], Self::bit_xor)
+    }
+
+    fn bit_xor(&mut self) -> CompileResult<Expr> {
+        self.binary_level(&[(Tok::Caret, BinOp::Xor)], Self::bit_and)
+    }
+
+    fn bit_and(&mut self) -> CompileResult<Expr> {
+        self.binary_level(&[(Tok::Amp, BinOp::And)], Self::equality)
+    }
+
+    fn equality(&mut self) -> CompileResult<Expr> {
+        self.binary_level(
+            &[(Tok::EqEq, BinOp::Eq), (Tok::Ne, BinOp::Ne)],
+            Self::relational,
+        )
+    }
+
+    fn relational(&mut self) -> CompileResult<Expr> {
+        self.binary_level(
+            &[
+                (Tok::Lt, BinOp::Lt),
+                (Tok::Le, BinOp::Le),
+                (Tok::Gt, BinOp::Gt),
+                (Tok::Ge, BinOp::Ge),
+            ],
+            Self::shift,
+        )
+    }
+
+    fn shift(&mut self) -> CompileResult<Expr> {
+        self.binary_level(
+            &[(Tok::Shl, BinOp::Shl), (Tok::Shr, BinOp::Shr)],
+            Self::additive,
+        )
+    }
+
+    fn additive(&mut self) -> CompileResult<Expr> {
+        self.binary_level(
+            &[(Tok::Plus, BinOp::Add), (Tok::Minus, BinOp::Sub)],
+            Self::multiplicative,
+        )
+    }
+
+    fn multiplicative(&mut self) -> CompileResult<Expr> {
+        self.binary_level(
+            &[
+                (Tok::Star, BinOp::Mul),
+                (Tok::Slash, BinOp::Div),
+                (Tok::Percent, BinOp::Rem),
+            ],
+            Self::unary,
+        )
+    }
+
+    fn unary(&mut self) -> CompileResult<Expr> {
+        let span = self.span();
+        let op = match self.peek() {
+            Tok::Minus => Some(UnOp::Neg),
+            Tok::Tilde => Some(UnOp::BitNot),
+            Tok::Bang => Some(UnOp::Not),
+            _ => None,
+        };
+        if let Some(op) = op {
+            self.bump();
+            let e = self.unary()?;
+            return Ok(Expr::Unary {
+                op,
+                expr: Box::new(e),
+                span,
+            });
+        }
+        // cast: '(' type ')' unary
+        if *self.peek() == Tok::LParen {
+            if let Tok::KwInt | Tok::KwFloat | Tok::KwPtr = self.peek2() {
+                // lookahead for `( type )`
+                let save = self.pos;
+                self.bump(); // (
+                let ty = self.try_type().unwrap();
+                if self.eat(&Tok::RParen) {
+                    let e = self.unary()?;
+                    return Ok(Expr::Cast {
+                        ty,
+                        expr: Box::new(e),
+                        span,
+                    });
+                }
+                self.pos = save;
+            }
+        }
+        self.postfix()
+    }
+
+    fn postfix(&mut self) -> CompileResult<Expr> {
+        let mut e = self.primary()?;
+        loop {
+            let span = self.span();
+            if self.eat(&Tok::LBracket) {
+                let index = self.expr()?;
+                self.expect(&Tok::RBracket, "']'")?;
+                e = Expr::Index {
+                    base: Box::new(e),
+                    index: Box::new(index),
+                    span,
+                };
+            } else {
+                return Ok(e);
+            }
+        }
+    }
+
+    fn primary(&mut self) -> CompileResult<Expr> {
+        let span = self.span();
+        match self.peek().clone() {
+            Tok::Int(v) => {
+                self.bump();
+                Ok(Expr::IntLit(v))
+            }
+            Tok::Float(v) => {
+                self.bump();
+                Ok(Expr::FloatLit(v))
+            }
+            Tok::Ident(name) => {
+                self.bump();
+                if self.eat(&Tok::LParen) {
+                    let mut args = Vec::new();
+                    if !self.eat(&Tok::RParen) {
+                        loop {
+                            args.push(self.expr()?);
+                            if self.eat(&Tok::RParen) {
+                                break;
+                            }
+                            self.expect(&Tok::Comma, "',' or ')'")?;
+                        }
+                    }
+                    Ok(Expr::Call(CallExpr {
+                        callee: name,
+                        args,
+                        span,
+                    }))
+                } else {
+                    Ok(Expr::Var(name, span))
+                }
+            }
+            Tok::LParen => {
+                self.bump();
+                let e = self.expr()?;
+                self.expect(&Tok::RParen, "')'")?;
+                Ok(e)
+            }
+            other => CompileError::err(span, format!("expected expression, found {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::lex::lex;
+
+    fn parse_src(src: &str) -> CompileResult<Program> {
+        parse(&lex(src).unwrap())
+    }
+
+    #[test]
+    fn parses_fib_program4() {
+        let src = r#"
+            global int d_result;
+            #pragma gtap function
+            device int fib(int n) {
+                if (n < 2) return n;
+                int a; int b;
+                #pragma gtap task queue((n - 1) < 2 ? 1 : 0)
+                a = fib(n - 1);
+                #pragma gtap task queue((n - 2) < 2 ? 1 : 0)
+                b = fib(n - 2);
+                #pragma gtap taskwait queue(2)
+                return a + b;
+            }
+        "#;
+        let prog = parse_src(src).unwrap();
+        assert_eq!(prog.globals.len(), 1);
+        assert_eq!(prog.functions.len(), 1);
+        let f = &prog.functions[0];
+        assert!(f.is_task);
+        assert_eq!(f.name, "fib");
+        assert_eq!(f.params.len(), 1);
+        // body: if, decl, decl, spawn, spawn, taskwait, return
+        assert_eq!(f.body.stmts.len(), 7);
+        assert!(matches!(&f.body.stmts[3], Stmt::Spawn { dest: Some(d), queue: Some(_), .. } if d == "a"));
+        assert!(matches!(&f.body.stmts[5], Stmt::TaskWait { queue: Some(_), .. }));
+    }
+
+    #[test]
+    fn spawn_without_capture() {
+        let prog = parse_src(
+            "#pragma gtap function\nvoid bfs(int v) {\n#pragma gtap task\nbfs(v);\n}",
+        )
+        .unwrap();
+        assert!(
+            matches!(&prog.functions[0].body.stmts[0], Stmt::Spawn { dest: None, queue: None, .. })
+        );
+    }
+
+    #[test]
+    fn spawn_requires_call() {
+        let err = parse_src("#pragma gtap function\nvoid f() {\n#pragma gtap task\nint x = 3;\n}")
+            .unwrap_err();
+        assert!(err.message.contains("immediately followed"), "{err}");
+    }
+
+    #[test]
+    fn spawn_block_rejected() {
+        let err =
+            parse_src("#pragma gtap function\nvoid f() {\n#pragma gtap task\n{ f(); }\n}")
+                .unwrap_err();
+        assert!(err.message.contains("task"), "{err}");
+    }
+
+    #[test]
+    fn for_loop_and_compound_assign() {
+        let prog = parse_src("void f(int n) { for (int i = 0; i < n; i += 1) { n = n - 1; } }")
+            .unwrap();
+        assert!(matches!(&prog.functions[0].body.stmts[0], Stmt::For { .. }));
+    }
+
+    #[test]
+    fn parallel_for() {
+        let prog =
+            parse_src("void f(int n) { parallel_for (i in 0..n) { print_int(i); } }").unwrap();
+        assert!(
+            matches!(&prog.functions[0].body.stmts[0], Stmt::ParallelFor { var, .. } if var == "i")
+        );
+    }
+
+    #[test]
+    fn ternary_precedence() {
+        let prog = parse_src("int f(int n) { return n < 2 ? 1 : 0; }").unwrap();
+        match &prog.functions[0].body.stmts[0] {
+            Stmt::Return { value: Some(Expr::Ternary { .. }), .. } => {}
+            other => panic!("expected ternary return, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cast_vs_paren() {
+        let prog = parse_src("float f(int n) { return (float) n; }").unwrap();
+        match &prog.functions[0].body.stmts[0] {
+            Stmt::Return { value: Some(Expr::Cast { ty: Type::Float, .. }), .. } => {}
+            other => panic!("expected cast, got {other:?}"),
+        }
+        // parenthesized expression still works
+        parse_src("int f(int n) { return (n + 1) * 2; }").unwrap();
+    }
+
+    #[test]
+    fn index_lvalue() {
+        let prog = parse_src("void f(ptr p, int i) { p[i] = p[i + 1]; }").unwrap();
+        assert!(
+            matches!(&prog.functions[0].body.stmts[0], Stmt::Assign { target: LValue::Index { .. }, .. })
+        );
+    }
+
+    #[test]
+    fn entry_pragma_rejected_with_hint() {
+        let err = parse_src("#pragma gtap entry\nint f() { return 0; }").unwrap_err();
+        assert!(err.message.contains("Session::run"), "{err}");
+    }
+
+    #[test]
+    fn nested_blocks() {
+        let prog = parse_src("void f() { { int x = 1; } }").unwrap();
+        assert!(matches!(&prog.functions[0].body.stmts[0], Stmt::Nested(_)));
+    }
+
+    #[test]
+    fn missing_semi_errors() {
+        assert!(parse_src("void f() { int x = 1 }").is_err());
+    }
+
+    #[test]
+    fn global_void_rejected() {
+        assert!(parse_src("global void g;").is_err());
+    }
+}

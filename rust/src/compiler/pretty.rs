@@ -1,0 +1,179 @@
+//! Render a compiled module in Program-6 style: the generated task-data
+//! struct plus a `switch (state)` view of each task function's bytecode.
+//!
+//! `gtap compile --emit-c <file>` prints this; golden tests in
+//! `rust/tests/` pin the structure (states, spills, finish normalization)
+//! against the paper's example transformation.
+
+use crate::ir::bytecode::*;
+use crate::ir::layout::FieldKind;
+
+/// Render the whole module.
+pub fn render_module(m: &Module) -> String {
+    let mut out = String::new();
+    for (name, ty) in &m.globals {
+        out.push_str(&format!(
+            "// global {ty} {name};  (simulated word address {})\n",
+            m.global_addr(name).unwrap()
+        ));
+    }
+    if !m.globals.is_empty() {
+        out.push('\n');
+    }
+    for f in &m.funcs {
+        out.push_str(&render_func(f));
+        out.push('\n');
+    }
+    out
+}
+
+/// Render one task function: struct + state machine.
+pub fn render_func(f: &FuncCode) -> String {
+    let mut out = String::new();
+    // task-data struct (Program 6's fib_task_data)
+    out.push_str(&format!("struct {}_task_data {{\n", f.name));
+    for field in &f.layout.fields {
+        let tag = match field.kind {
+            FieldKind::Arg => "original argument",
+            FieldKind::Spill => "spill variable",
+            FieldKind::Result => "result field",
+        };
+        out.push_str(&format!(
+            "  {} __cap_{}; // {} (word offset {})\n",
+            field.ty, field.name, tag, field.offset
+        ));
+    }
+    out.push_str("};\n\n");
+
+    out.push_str(&format!(
+        "void {}_state_machine_func(void* ptr) {{ // {} registers\n",
+        f.name, f.nregs
+    ));
+    out.push_str("  switch (__gtap_load_state(...)) {\n");
+    for (state, &entry) in f.state_entries.iter().enumerate() {
+        let end = f
+            .state_entries
+            .get(state + 1)
+            .copied()
+            .unwrap_or(f.insns.len() as Pc);
+        out.push_str(&format!("  case {state}: // pc {entry}..{end}\n"));
+        for pc in entry..end {
+            out.push_str(&format!(
+                "    {pc:4}: {}\n",
+                render_insn(f, &f.insns[pc as usize])
+            ));
+        }
+    }
+    out.push_str("  default: __trap();\n  }\n}\n");
+    out
+}
+
+fn args_of(f: &FuncCode, base: u32, argc: u8) -> String {
+    (0..argc as usize)
+        .map(|i| format!("r{}", f.arg_pool[base as usize + i]))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Disassemble one instruction.
+pub fn render_insn(f: &FuncCode, i: &Insn) -> String {
+    match *i {
+        Insn::Const { dst, val } => format!("r{dst} = const {val:#x}"),
+        Insn::Mov { dst, src } => format!("r{dst} = r{src}"),
+        Insn::Bin { op, dst, a, b } => format!("r{dst} = {op:?} r{a}, r{b}"),
+        Insn::Un { op, dst, a } => format!("r{dst} = {op:?} r{a}"),
+        Insn::Jmp { target } => format!("jmp {target}"),
+        Insn::Br { cond, t, f } => format!("br r{cond} ? {t} : {f}"),
+        Insn::LdG { dst, addr, cache } => format!("r{dst} = ld.global.{cache:?} [r{addr}]"),
+        Insn::StG { addr, src, cache } => format!("st.global.{cache:?} [r{addr}] = r{src}"),
+        Insn::LdTd { dst, off } => format!(
+            "r{dst} = t->__cap_{}",
+            f.layout.fields[off as usize].name
+        ),
+        Insn::StTd { off, src } => format!(
+            "t->__cap_{} = r{src}",
+            f.layout.fields[off as usize].name
+        ),
+        Insn::Spawn {
+            func,
+            arg_base,
+            argc,
+            queue,
+        } => format!(
+            "spawn func#{func}({}) queue=r{queue}",
+            args_of(f, arg_base, argc)
+        ),
+        Insn::PrepareJoin { next_state, queue } => {
+            format!("__gtap_prepare_for_join(next_state={next_state}, queue=r{queue}); return")
+        }
+        Insn::FinishTask => "__gtap_finish_task(...); return".to_string(),
+        Insn::ChildResult { dst, slot } => {
+            format!("r{dst} = __gtap_load_result({slot})")
+        }
+        Insn::Intr {
+            id,
+            dst,
+            arg_base,
+            argc,
+            has_dst,
+        } => {
+            if has_dst {
+                format!("r{dst} = {id:?}({})", args_of(f, arg_base, argc))
+            } else {
+                format!("{id:?}({})", args_of(f, arg_base, argc))
+            }
+        }
+        Insn::ParEnter { trips } => format!("__par_enter(trips=r{trips})"),
+        Insn::ParExit => "__par_exit(); __syncthreads()".to_string(),
+        Insn::Trap => "__trap()".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::compiler::compile_default;
+
+    const FIB: &str = r#"
+        #pragma gtap function
+        int fib(int n) {
+            if (n < 2) return n;
+            int a; int b;
+            #pragma gtap task
+            a = fib(n - 1);
+            #pragma gtap task
+            b = fib(n - 2);
+            #pragma gtap taskwait
+            return a + b;
+        }
+    "#;
+
+    #[test]
+    fn render_has_program6_shape() {
+        let m = compile_default(FIB).unwrap();
+        let text = super::render_module(&m);
+        // struct with arg, spills and result — as in Program 6
+        assert!(text.contains("struct fib_task_data {"), "{text}");
+        assert!(text.contains("__cap_n; // original argument"), "{text}");
+        assert!(text.contains("__cap_a; // spill variable"), "{text}");
+        assert!(text.contains("__cap_b; // spill variable"), "{text}");
+        assert!(text.contains("__cap___result; // result field"), "{text}");
+        // switch with both states and the join/finish normalization
+        assert!(text.contains("case 0:"), "{text}");
+        assert!(text.contains("case 1:"), "{text}");
+        assert!(text.contains("__gtap_prepare_for_join(next_state=1"), "{text}");
+        assert!(text.contains("__gtap_load_result(0)"), "{text}");
+        assert!(text.contains("__gtap_load_result(1)"), "{text}");
+        assert!(text.contains("__gtap_finish_task"), "{text}");
+        assert!(text.contains("default: __trap()"), "{text}");
+    }
+
+    #[test]
+    fn render_globals() {
+        let m = compile_default(
+            "global int d_result;\n#pragma gtap function\nvoid f() { d_result = 1; }",
+        )
+        .unwrap();
+        let text = super::render_module(&m);
+        assert!(text.contains("global int d_result"), "{text}");
+    }
+}

@@ -1,0 +1,1212 @@
+//! Semantic analysis: name resolution (with alpha-renaming so downstream
+//! passes are scope-free), type checking with int→float promotion, and
+//! enforcement of the paper's §5.1.4 restrictions:
+//!
+//! * `#pragma gtap task` may only spawn `#pragma gtap function` functions;
+//!   conversely, task functions may not be called as ordinary calls.
+//! * Non-task ("device") functions are restricted to pure helpers — a
+//!   sequence of initialized declarations followed by a single `return` —
+//!   and are expanded inline by codegen (serial leaf work belongs in
+//!   intrinsics, mirroring the paper's factoring of cutoff bodies).
+//! * A value-capturing spawn (`a = fib(n-1);`) must be joined by a
+//!   `taskwait` in the same straight-line region so that the compile-time
+//!   child slot of `__gtap_load_result(slot)` matches the dynamic spawn
+//!   order (the paper has the same implicit requirement: "the parent must
+//!   not use the return value until the corresponding taskwait").
+//! * `taskwait` inside `parallel_for` is rejected (block-level taskwait must
+//!   be reached uniformly by the block, §5.1.3).
+
+use super::diag::{CompileError, CompileResult};
+use crate::ir::ast::*;
+use crate::ir::intrinsics;
+use crate::ir::types::Type;
+use std::collections::{HashMap, HashSet};
+
+/// Output of sema: renamed + promoted AST with per-function type tables.
+#[derive(Clone, Debug)]
+pub struct CheckedProgram {
+    pub globals: Vec<GlobalDecl>,
+    /// Task functions (`#pragma gtap function`), in source order.
+    pub tasks: Vec<TypedFunction>,
+    /// Device helper functions, by name (inlined by codegen).
+    pub devices: HashMap<String, TypedFunction>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TypedFunction {
+    pub func: Function,
+    /// Types of all (uniquely-named) locals and parameters.
+    pub var_types: HashMap<String, Type>,
+}
+
+impl CheckedProgram {
+    pub fn task(&self, name: &str) -> Option<&TypedFunction> {
+        self.tasks.iter().find(|t| t.func.name == name)
+    }
+}
+
+struct FnSig {
+    params: Vec<Type>,
+    ret: Type,
+    is_task: bool,
+}
+
+struct Analyzer {
+    globals: HashMap<String, Type>,
+    fns: HashMap<String, FnSig>,
+}
+
+/// Run semantic analysis over a parsed program.
+pub fn analyze(prog: Program) -> CompileResult<CheckedProgram> {
+    let mut globals = HashMap::new();
+    for g in &prog.globals {
+        if globals.insert(g.name.clone(), g.ty).is_some() {
+            return CompileError::err(g.span, format!("duplicate global {:?}", g.name));
+        }
+    }
+    let mut fns = HashMap::new();
+    for f in &prog.functions {
+        if intrinsics::lookup(&f.name).is_some() {
+            return CompileError::err(
+                f.span,
+                format!("{:?} shadows a builtin intrinsic", f.name),
+            );
+        }
+        if fns
+            .insert(
+                f.name.clone(),
+                FnSig {
+                    params: f.params.iter().map(|p| p.ty).collect(),
+                    ret: f.ret,
+                    is_task: f.is_task,
+                },
+            )
+            .is_some()
+        {
+            return CompileError::err(f.span, format!("duplicate function {:?}", f.name));
+        }
+    }
+    let an = Analyzer { globals, fns };
+
+    let mut tasks = Vec::new();
+    let mut devices = HashMap::new();
+    for f in prog.functions {
+        let checked = an.check_function(f)?;
+        if checked.func.is_task {
+            tasks.push(checked);
+        } else {
+            an.check_device_shape(&checked)?;
+            devices.insert(checked.func.name.clone(), checked);
+        }
+    }
+    an.check_device_acyclic(&devices)?;
+    Ok(CheckedProgram {
+        globals: prog.globals,
+        tasks,
+        devices,
+    })
+}
+
+/// Scope stack for alpha-renaming.
+struct Scopes {
+    stack: Vec<HashMap<String, String>>,
+    used: HashSet<String>,
+    var_types: HashMap<String, Type>,
+}
+
+impl Scopes {
+    fn new() -> Scopes {
+        Scopes {
+            stack: vec![HashMap::new()],
+            used: HashSet::new(),
+            var_types: HashMap::new(),
+        }
+    }
+
+    fn push(&mut self) {
+        self.stack.push(HashMap::new());
+    }
+
+    fn pop(&mut self) {
+        self.stack.pop();
+    }
+
+    fn declare(&mut self, name: &str, ty: Type, span: Span) -> CompileResult<String> {
+        if self.stack.last().unwrap().contains_key(name) {
+            return CompileError::err(
+                span,
+                format!("{name:?} already declared in this scope"),
+            );
+        }
+        let mut unique = name.to_string();
+        let mut k = 1;
+        while !self.used.insert(unique.clone()) {
+            k += 1;
+            unique = format!("{name}@{k}");
+        }
+        self.stack
+            .last_mut()
+            .unwrap()
+            .insert(name.to_string(), unique.clone());
+        self.var_types.insert(unique.clone(), ty);
+        Ok(unique)
+    }
+
+    fn resolve(&self, name: &str) -> Option<&str> {
+        self.stack
+            .iter()
+            .rev()
+            .find_map(|s| s.get(name))
+            .map(|s| s.as_str())
+    }
+
+    fn type_of(&self, unique: &str) -> Type {
+        self.var_types[unique]
+    }
+}
+
+/// Maximum parameters of a task function (spawn requests are fixed-size in
+/// the runtime hot path; mirrors `sim::interp::MAX_TASK_ARGS`).
+pub const MAX_TASK_PARAMS: usize = 8;
+
+impl Analyzer {
+    fn check_function(&self, f: Function) -> CompileResult<TypedFunction> {
+        if f.is_task && f.params.len() > MAX_TASK_PARAMS {
+            return CompileError::err(
+                f.span,
+                format!(
+                    "task function {:?} has {} parameters; at most {MAX_TASK_PARAMS} are supported (pack extra state into a task-data pointer)",
+                    f.name,
+                    f.params.len()
+                ),
+            );
+        }
+        let mut sc = Scopes::new();
+        let mut params = Vec::new();
+        for p in &f.params {
+            let unique = sc.declare(&p.name, p.ty, p.span)?;
+            params.push(Param {
+                name: unique,
+                ty: p.ty,
+                span: p.span,
+            });
+        }
+        let mut ctx = FnCtx {
+            an: self,
+            sc,
+            ret: f.ret,
+            is_task: f.is_task,
+            in_parfor: 0,
+        };
+        let body = ctx.check_block(f.body, true)?;
+        let var_types = ctx.sc.var_types;
+        Ok(TypedFunction {
+            func: Function {
+                name: f.name,
+                is_task: f.is_task,
+                ret: f.ret,
+                params,
+                body,
+                span: f.span,
+            },
+            var_types,
+        })
+    }
+
+    /// Device helpers must be a sequence of initialized decls followed by a
+    /// single `return expr;` (no control flow) — codegen inlines them.
+    fn check_device_shape(&self, tf: &TypedFunction) -> CompileResult<()> {
+        let f = &tf.func;
+        let n = f.body.stmts.len();
+        for (i, s) in f.body.stmts.iter().enumerate() {
+            let ok = match s {
+                Stmt::Decl { init, .. } => init.is_some() && i + 1 < n,
+                Stmt::Return { value, .. } => {
+                    i + 1 == n && (value.is_some() == (f.ret != Type::Void))
+                }
+                Stmt::ExprStmt { .. } => i + 1 < n,
+                _ => false,
+            };
+            if !ok {
+                return CompileError::err(
+                    s.span(),
+                    format!(
+                        "device function {:?} must be initialized declarations followed \
+                         by a single return (factor serial leaf work into intrinsics, \
+                         or mark the function `#pragma gtap function`)",
+                        f.name
+                    ),
+                );
+            }
+        }
+        if n == 0 && f.ret != Type::Void {
+            return CompileError::err(f.span, "non-void device function with empty body");
+        }
+        Ok(())
+    }
+
+    /// Reject (mutually) recursive device helpers: codegen expands them
+    /// inline, so cycles would not terminate.
+    fn check_device_acyclic(
+        &self,
+        devices: &HashMap<String, TypedFunction>,
+    ) -> CompileResult<()> {
+        fn calls_in(block: &Block, out: &mut Vec<(String, Span)>) {
+            visit_stmts(block, &mut |s| {
+                fn expr_calls(e: &Expr, out: &mut Vec<(String, Span)>) {
+                    match e {
+                        Expr::Call(c) => {
+                            out.push((c.callee.clone(), c.span));
+                            for a in &c.args {
+                                expr_calls(a, out);
+                            }
+                        }
+                        Expr::Unary { expr, .. } | Expr::Cast { expr, .. } => {
+                            expr_calls(expr, out)
+                        }
+                        Expr::Binary { lhs, rhs, .. } => {
+                            expr_calls(lhs, out);
+                            expr_calls(rhs, out);
+                        }
+                        Expr::Ternary {
+                            cond,
+                            then_e,
+                            else_e,
+                            ..
+                        } => {
+                            expr_calls(cond, out);
+                            expr_calls(then_e, out);
+                            expr_calls(else_e, out);
+                        }
+                        Expr::Index { base, index, .. } => {
+                            expr_calls(base, out);
+                            expr_calls(index, out);
+                        }
+                        _ => {}
+                    }
+                }
+                match s {
+                    Stmt::Decl { init: Some(e), .. } => expr_calls(e, out),
+                    Stmt::Assign { value, .. } => expr_calls(value, out),
+                    Stmt::Return { value: Some(e), .. } => expr_calls(e, out),
+                    Stmt::ExprStmt { expr, .. } => expr_calls(expr, out),
+                    _ => {}
+                }
+            });
+        }
+        // DFS cycle detection over the device-call graph.
+        let mut color: HashMap<&str, u8> = HashMap::new(); // 1=on stack, 2=done
+        fn dfs<'a>(
+            name: &'a str,
+            devices: &'a HashMap<String, TypedFunction>,
+            color: &mut HashMap<&'a str, u8>,
+            collect: &dyn Fn(&Block, &mut Vec<(String, Span)>),
+        ) -> CompileResult<()> {
+            color.insert(name, 1);
+            let mut calls = Vec::new();
+            collect(&devices[name].func.body, &mut calls);
+            for (callee, span) in calls {
+                if let Some(tf) = devices.get(callee.as_str()) {
+                    match color.get(tf.func.name.as_str()) {
+                        Some(1) => {
+                            return CompileError::err(
+                                span,
+                                format!(
+                                    "recursive device function {callee:?} cannot be \
+                                     inlined; use an intrinsic or a task function"
+                                ),
+                            )
+                        }
+                        Some(2) => {}
+                        _ => {
+                            let key = devices.get_key_value(callee.as_str()).unwrap().0;
+                            dfs(key, devices, color, collect)?
+                        }
+                    }
+                }
+            }
+            *color.get_mut(name).unwrap() = 2;
+            Ok(())
+        }
+        let names: Vec<&str> = devices.keys().map(|s| s.as_str()).collect();
+        for name in names {
+            if !color.contains_key(name) {
+                dfs(name, devices, &mut color, &calls_in)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+struct FnCtx<'a> {
+    an: &'a Analyzer,
+    sc: Scopes,
+    ret: Type,
+    is_task: bool,
+    in_parfor: u32,
+}
+
+impl<'a> FnCtx<'a> {
+    fn check_block(&mut self, block: Block, top: bool) -> CompileResult<Block> {
+        if !top {
+            self.sc.push();
+        }
+        let mut out = Vec::with_capacity(block.stmts.len());
+        // Pending value-capturing spawns awaiting their straight-line
+        // taskwait (cleared at the taskwait; checked at block end).
+        let mut pending_capture: Option<Span> = None;
+        for s in block.stmts {
+            let is_simple = matches!(
+                s,
+                Stmt::Decl { .. } | Stmt::Assign { .. } | Stmt::ExprStmt { .. } | Stmt::Spawn { .. }
+            );
+            if pending_capture.is_some() && !is_simple && !matches!(s, Stmt::TaskWait { .. }) {
+                return CompileError::err(
+                    s.span(),
+                    "control flow between a value-capturing spawn and its taskwait: \
+                     the capturing spawn's child slot must match dynamic spawn order \
+                     (keep capturing spawns and their taskwait in one straight-line \
+                     region)",
+                );
+            }
+            match &s {
+                Stmt::Spawn { dest: Some(_), span, .. } => {
+                    pending_capture.get_or_insert(*span);
+                }
+                Stmt::TaskWait { .. } => {
+                    pending_capture = None;
+                }
+                _ => {}
+            }
+            out.push(self.check_stmt(s)?);
+        }
+        if let Some(span) = pending_capture {
+            return CompileError::err(
+                span,
+                "value-capturing spawn is never joined: add `#pragma gtap taskwait` \
+                 in the same block before it ends",
+            );
+        }
+        if !top {
+            self.sc.pop();
+        }
+        Ok(Block { stmts: out })
+    }
+
+    fn check_stmt(&mut self, s: Stmt) -> CompileResult<Stmt> {
+        match s {
+            Stmt::Decl {
+                name,
+                ty,
+                init,
+                span,
+            } => {
+                let init = match init {
+                    Some(e) => {
+                        let (e, ety) = self.check_expr(e)?;
+                        Some(self.coerce(e, ety, ty, span)?)
+                    }
+                    None => None,
+                };
+                let unique = self.sc.declare(&name, ty, span)?;
+                Ok(Stmt::Decl {
+                    name: unique,
+                    ty,
+                    init,
+                    span,
+                })
+            }
+            Stmt::Assign {
+                target,
+                value,
+                span,
+            } => {
+                let (value, vty) = self.check_expr(value)?;
+                let (target, tty) = self.check_lvalue(target, span)?;
+                let value = self.coerce(value, vty, tty, span)?;
+                Ok(Stmt::Assign {
+                    target,
+                    value,
+                    span,
+                })
+            }
+            Stmt::If {
+                cond,
+                then_blk,
+                else_blk,
+                span,
+            } => {
+                let cond = self.check_cond(cond, span)?;
+                let then_blk = self.check_block(then_blk, false)?;
+                let else_blk = match else_blk {
+                    Some(b) => Some(self.check_block(b, false)?),
+                    None => None,
+                };
+                Ok(Stmt::If {
+                    cond,
+                    then_blk,
+                    else_blk,
+                    span,
+                })
+            }
+            Stmt::While { cond, body, span } => {
+                let cond = self.check_cond(cond, span)?;
+                let body = self.check_block(body, false)?;
+                Ok(Stmt::While { cond, body, span })
+            }
+            Stmt::For {
+                init,
+                cond,
+                step,
+                body,
+                span,
+            } => {
+                // The for-header introduces a scope for its decl.
+                self.sc.push();
+                let init = match init {
+                    Some(s) => Some(Box::new(self.check_stmt(*s)?)),
+                    None => None,
+                };
+                let cond = match cond {
+                    Some(c) => Some(self.check_cond(c, span)?),
+                    None => None,
+                };
+                let step = match step {
+                    Some(s) => Some(Box::new(self.check_stmt(*s)?)),
+                    None => None,
+                };
+                let body = self.check_block(body, false)?;
+                self.sc.pop();
+                Ok(Stmt::For {
+                    init,
+                    cond,
+                    step,
+                    body,
+                    span,
+                })
+            }
+            Stmt::Return { value, span } => {
+                if self.in_parfor > 0 {
+                    return CompileError::err(span, "return inside parallel_for");
+                }
+                let value = match (value, self.ret) {
+                    (None, Type::Void) => None,
+                    (Some(_e), Type::Void) => {
+                        return CompileError::err(span, "void function returning a value")
+                    }
+                    (None, _) => {
+                        return CompileError::err(span, "non-void function must return a value")
+                    }
+                    (Some(e), rt) => {
+                        let (e, ety) = self.check_expr(e)?;
+                        Some(self.coerce(e, ety, rt, span)?)
+                    }
+                };
+                Ok(Stmt::Return { value, span })
+            }
+            Stmt::ExprStmt { expr, span } => {
+                // Must be a call (we have no other side-effecting exprs).
+                match &expr {
+                    Expr::Call(c) => {
+                        if self.an.fns.get(&c.callee).map(|s| s.is_task) == Some(true) {
+                            return CompileError::err(
+                                span,
+                                format!(
+                                    "task function {:?} may only be invoked via \
+                                     #pragma gtap task",
+                                    c.callee
+                                ),
+                            );
+                        }
+                    }
+                    _ => {
+                        return CompileError::err(span, "expression statement has no effect")
+                    }
+                }
+                let (expr, _) = self.check_expr(expr)?;
+                Ok(Stmt::ExprStmt { expr, span })
+            }
+            Stmt::Spawn {
+                queue,
+                dest,
+                call,
+                span,
+            } => {
+                if !self.is_task {
+                    return CompileError::err(
+                        span,
+                        "#pragma gtap task may only appear inside a #pragma gtap function",
+                    );
+                }
+                let sig = self.an.fns.get(&call.callee).ok_or_else(|| {
+                    CompileError::new(span, format!("unknown task function {:?}", call.callee))
+                })?;
+                if !sig.is_task {
+                    return CompileError::err(
+                        span,
+                        format!(
+                            "{:?} is not a task function (annotate it with \
+                             #pragma gtap function)",
+                            call.callee
+                        ),
+                    );
+                }
+                if call.args.len() != sig.params.len() {
+                    return CompileError::err(
+                        span,
+                        format!(
+                            "{:?} expects {} arguments, got {}",
+                            call.callee,
+                            sig.params.len(),
+                            call.args.len()
+                        ),
+                    );
+                }
+                let ret = sig.ret;
+                let ptypes = sig.params.clone();
+                let mut args = Vec::new();
+                for (a, pt) in call.args.into_iter().zip(ptypes) {
+                    let sp = a.span();
+                    let (a, aty) = self.check_expr(a)?;
+                    args.push(self.coerce(a, aty, pt, sp)?);
+                }
+                let dest = match dest {
+                    Some(d) => {
+                        if ret == Type::Void {
+                            return CompileError::err(
+                                span,
+                                format!("cannot capture result of void task {:?}", call.callee),
+                            );
+                        }
+                        let unique = self.sc.resolve(&d).ok_or_else(|| {
+                            CompileError::new(span, format!("unknown variable {d:?}"))
+                        })?;
+                        let dty = self.sc.type_of(unique);
+                        if dty != ret {
+                            return CompileError::err(
+                                span,
+                                format!(
+                                    "spawn result type mismatch: {:?} is {dty}, {:?} \
+                                     returns {ret}",
+                                    d, call.callee
+                                ),
+                            );
+                        }
+                        Some(unique.to_string())
+                    }
+                    None => None,
+                };
+                let queue = match queue {
+                    Some(q) => {
+                        let qs = q.span();
+                        let (q, qt) = self.check_expr(q)?;
+                        if qt != Type::Int {
+                            return CompileError::err(qs, "queue(expr) must be int");
+                        }
+                        Some(q)
+                    }
+                    None => None,
+                };
+                Ok(Stmt::Spawn {
+                    queue,
+                    dest,
+                    call: CallExpr {
+                        callee: call.callee,
+                        args,
+                        span: call.span,
+                    },
+                    span,
+                })
+            }
+            Stmt::TaskWait { queue, span } => {
+                if !self.is_task {
+                    return CompileError::err(
+                        span,
+                        "#pragma gtap taskwait may only appear inside a #pragma gtap function",
+                    );
+                }
+                if self.in_parfor > 0 {
+                    return CompileError::err(
+                        span,
+                        "taskwait inside parallel_for: block-level taskwait must be \
+                         reached by all threads along the same control flow (§5.1.3)",
+                    );
+                }
+                let queue = match queue {
+                    Some(q) => {
+                        let qs = q.span();
+                        let (q, qt) = self.check_expr(q)?;
+                        if qt != Type::Int {
+                            return CompileError::err(qs, "queue(expr) must be int");
+                        }
+                        Some(q)
+                    }
+                    None => None,
+                };
+                Ok(Stmt::TaskWait { queue, span })
+            }
+            Stmt::ParallelFor {
+                var,
+                lo,
+                hi,
+                body,
+                span,
+            } => {
+                let (lo, lot) = self.check_expr(lo)?;
+                let (hi, hit) = self.check_expr(hi)?;
+                if lot != Type::Int || hit != Type::Int {
+                    return CompileError::err(span, "parallel_for bounds must be int");
+                }
+                self.sc.push();
+                let unique = self.sc.declare(&var, Type::Int, span)?;
+                self.in_parfor += 1;
+                let body = self.check_block(body, true)?;
+                self.in_parfor -= 1;
+                self.sc.pop();
+                Ok(Stmt::ParallelFor {
+                    var: unique,
+                    lo,
+                    hi,
+                    body,
+                    span,
+                })
+            }
+            Stmt::Nested(b) => Ok(Stmt::Nested(self.check_block(b, false)?)),
+        }
+    }
+
+    fn check_lvalue(&mut self, lv: LValue, span: Span) -> CompileResult<(LValue, Type)> {
+        match lv {
+            LValue::Var(name) => {
+                if let Some(unique) = self.sc.resolve(&name) {
+                    let ty = self.sc.type_of(unique);
+                    Ok((LValue::Var(unique.to_string()), ty))
+                } else if let Some(&ty) = self.an.globals.get(&name) {
+                    Ok((LValue::Global(name), ty))
+                } else {
+                    CompileError::err(span, format!("unknown variable {name:?}"))
+                }
+            }
+            LValue::Global(g) => {
+                let ty = self.an.globals[&g];
+                Ok((LValue::Global(g), ty))
+            }
+            LValue::Index { base, index } => {
+                let (base, bt) = self.check_expr(base)?;
+                if bt != Type::Ptr {
+                    return CompileError::err(span, format!("indexed base must be ptr, got {bt}"));
+                }
+                let (index, it) = self.check_expr(index)?;
+                if it != Type::Int {
+                    return CompileError::err(span, "index must be int");
+                }
+                // memory is untyped words; stores take int (use float_to_bits
+                // for floats)
+                Ok((LValue::Index { base, index }, Type::Int))
+            }
+        }
+    }
+
+    fn check_cond(&mut self, e: Expr, span: Span) -> CompileResult<Expr> {
+        let (e, ty) = self.check_expr(e)?;
+        if ty != Type::Int {
+            return CompileError::err(span, format!("condition must be int, got {ty}"));
+        }
+        Ok(e)
+    }
+
+    fn coerce(&self, e: Expr, from: Type, to: Type, span: Span) -> CompileResult<Expr> {
+        if from == to {
+            return Ok(e);
+        }
+        if from == Type::Int && to == Type::Float {
+            return Ok(Expr::Cast {
+                ty: Type::Float,
+                expr: Box::new(e),
+                span,
+            });
+        }
+        CompileError::err(span, format!("type mismatch: expected {to}, got {from}"))
+    }
+
+    fn check_expr(&mut self, e: Expr) -> CompileResult<(Expr, Type)> {
+        match e {
+            Expr::IntLit(v) => Ok((Expr::IntLit(v), Type::Int)),
+            Expr::FloatLit(v) => Ok((Expr::FloatLit(v), Type::Float)),
+            Expr::Var(name, span) => {
+                if let Some(unique) = self.sc.resolve(&name) {
+                    let ty = self.sc.type_of(unique);
+                    Ok((Expr::Var(unique.to_string(), span), ty))
+                } else if let Some(&ty) = self.an.globals.get(&name) {
+                    Ok((Expr::Global(name, span), ty))
+                } else {
+                    CompileError::err(span, format!("unknown variable {name:?}"))
+                }
+            }
+            Expr::Global(name, span) => {
+                let ty = self.an.globals[&name];
+                Ok((Expr::Global(name, span), ty))
+            }
+            Expr::Unary { op, expr, span } => {
+                let (expr, ty) = self.check_expr(*expr)?;
+                let rty = match (op, ty) {
+                    (UnOp::Neg, Type::Int) | (UnOp::Neg, Type::Float) => ty,
+                    (UnOp::BitNot, Type::Int) => Type::Int,
+                    (UnOp::Not, Type::Int) => Type::Int,
+                    _ => {
+                        return CompileError::err(
+                            span,
+                            format!("unary {op:?} not defined on {ty}"),
+                        )
+                    }
+                };
+                Ok((
+                    Expr::Unary {
+                        op,
+                        expr: Box::new(expr),
+                        span,
+                    },
+                    rty,
+                ))
+            }
+            Expr::Binary { op, lhs, rhs, span } => {
+                let (lhs, lt) = self.check_expr(*lhs)?;
+                let (rhs, rt) = self.check_expr(*rhs)?;
+                use BinOp::*;
+                // ptr +/- int arithmetic
+                if lt == Type::Ptr && rt == Type::Int && matches!(op, Add | Sub) {
+                    return Ok((
+                        Expr::Binary {
+                            op,
+                            lhs: Box::new(lhs),
+                            rhs: Box::new(rhs),
+                            span,
+                        },
+                        Type::Ptr,
+                    ));
+                }
+                // int→float promotion
+                let (lhs, rhs, ty) = if lt == rt {
+                    (lhs, rhs, lt)
+                } else if lt == Type::Int && rt == Type::Float {
+                    (self.coerce(lhs, lt, Type::Float, span)?, rhs, Type::Float)
+                } else if lt == Type::Float && rt == Type::Int {
+                    (lhs, self.coerce(rhs, rt, Type::Float, span)?, Type::Float)
+                } else {
+                    return CompileError::err(
+                        span,
+                        format!("operands of {op:?} have incompatible types {lt} and {rt}"),
+                    );
+                };
+                let rty = match op {
+                    Add | Sub | Mul | Div => {
+                        if ty == Type::Void {
+                            return CompileError::err(span, "arithmetic on void");
+                        }
+                        ty
+                    }
+                    Rem | And | Or | Xor | Shl | Shr | LAnd | LOr => {
+                        if ty != Type::Int {
+                            return CompileError::err(
+                                span,
+                                format!("{op:?} requires int operands, got {ty}"),
+                            );
+                        }
+                        Type::Int
+                    }
+                    Lt | Le | Gt | Ge | Eq | Ne => {
+                        if ty == Type::Void {
+                            return CompileError::err(span, "comparison on void");
+                        }
+                        Type::Int
+                    }
+                };
+                Ok((
+                    Expr::Binary {
+                        op,
+                        lhs: Box::new(lhs),
+                        rhs: Box::new(rhs),
+                        span,
+                    },
+                    rty,
+                ))
+            }
+            Expr::Ternary {
+                cond,
+                then_e,
+                else_e,
+                span,
+            } => {
+                let cond = self.check_cond(*cond, span)?;
+                let (then_e, tt) = self.check_expr(*then_e)?;
+                let (else_e, et) = self.check_expr(*else_e)?;
+                let (then_e, else_e, ty) = if tt == et {
+                    (then_e, else_e, tt)
+                } else if tt == Type::Int && et == Type::Float {
+                    (
+                        self.coerce(then_e, tt, Type::Float, span)?,
+                        else_e,
+                        Type::Float,
+                    )
+                } else if tt == Type::Float && et == Type::Int {
+                    (
+                        then_e,
+                        self.coerce(else_e, et, Type::Float, span)?,
+                        Type::Float,
+                    )
+                } else {
+                    return CompileError::err(
+                        span,
+                        format!("ternary arms have incompatible types {tt} and {et}"),
+                    );
+                };
+                Ok((
+                    Expr::Ternary {
+                        cond: Box::new(cond),
+                        then_e: Box::new(then_e),
+                        else_e: Box::new(else_e),
+                        span,
+                    },
+                    ty,
+                ))
+            }
+            Expr::Call(c) => {
+                let span = c.span;
+                // intrinsic?
+                if let Some(sig) = intrinsics::lookup(&c.callee) {
+                    if c.args.len() != sig.params.len() {
+                        return CompileError::err(
+                            span,
+                            format!(
+                                "intrinsic {:?} expects {} arguments, got {}",
+                                c.callee,
+                                sig.params.len(),
+                                c.args.len()
+                            ),
+                        );
+                    }
+                    let mut args = Vec::new();
+                    for (a, &pt) in c.args.into_iter().zip(sig.params) {
+                        let sp = a.span();
+                        let (a, aty) = self.check_expr(a)?;
+                        args.push(self.coerce(a, aty, pt, sp)?);
+                    }
+                    return Ok((
+                        Expr::Call(CallExpr {
+                            callee: c.callee,
+                            args,
+                            span,
+                        }),
+                        sig.ret,
+                    ));
+                }
+                // device function?
+                let sig = self.an.fns.get(&c.callee).ok_or_else(|| {
+                    CompileError::new(span, format!("unknown function {:?}", c.callee))
+                })?;
+                if sig.is_task {
+                    return CompileError::err(
+                        span,
+                        format!(
+                            "task function {:?} may only be invoked via #pragma gtap task",
+                            c.callee
+                        ),
+                    );
+                }
+                if c.args.len() != sig.params.len() {
+                    return CompileError::err(
+                        span,
+                        format!(
+                            "{:?} expects {} arguments, got {}",
+                            c.callee,
+                            sig.params.len(),
+                            c.args.len()
+                        ),
+                    );
+                }
+                let ret = sig.ret;
+                let ptypes = sig.params.clone();
+                let mut args = Vec::new();
+                for (a, pt) in c.args.into_iter().zip(ptypes) {
+                    let sp = a.span();
+                    let (a, aty) = self.check_expr(a)?;
+                    args.push(self.coerce(a, aty, pt, sp)?);
+                }
+                Ok((
+                    Expr::Call(CallExpr {
+                        callee: c.callee,
+                        args,
+                        span,
+                    }),
+                    ret,
+                ))
+            }
+            Expr::Index { base, index, span } => {
+                let (base, bt) = self.check_expr(*base)?;
+                if bt != Type::Ptr {
+                    return CompileError::err(span, format!("indexed base must be ptr, got {bt}"));
+                }
+                let (index, it) = self.check_expr(*index)?;
+                if it != Type::Int {
+                    return CompileError::err(span, "index must be int");
+                }
+                Ok((
+                    Expr::Index {
+                        base: Box::new(base),
+                        index: Box::new(index),
+                        span,
+                    },
+                    Type::Int,
+                ))
+            }
+            Expr::Cast { ty, expr, span } => {
+                let (expr, from) = self.check_expr(*expr)?;
+                let ok = matches!(
+                    (from, ty),
+                    (Type::Int, Type::Float)
+                        | (Type::Float, Type::Int)
+                        | (Type::Int, Type::Ptr)
+                        | (Type::Ptr, Type::Int)
+                        | (Type::Int, Type::Int)
+                        | (Type::Float, Type::Float)
+                        | (Type::Ptr, Type::Ptr)
+                );
+                if !ok {
+                    return CompileError::err(span, format!("invalid cast {from} -> {ty}"));
+                }
+                Ok((
+                    Expr::Cast {
+                        ty,
+                        expr: Box::new(expr),
+                        span,
+                    },
+                    ty,
+                ))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{lex::lex, parse::parse};
+
+    fn check(src: &str) -> CompileResult<CheckedProgram> {
+        analyze(parse(&lex(src).unwrap())?)
+    }
+
+    const FIB: &str = r#"
+        #pragma gtap function
+        int fib(int n) {
+            if (n < 2) return n;
+            int a; int b;
+            #pragma gtap task
+            a = fib(n - 1);
+            #pragma gtap task
+            b = fib(n - 2);
+            #pragma gtap taskwait
+            return a + b;
+        }
+    "#;
+
+    #[test]
+    fn fib_passes() {
+        let p = check(FIB).unwrap();
+        assert_eq!(p.tasks.len(), 1);
+        assert_eq!(p.tasks[0].var_types["a"], Type::Int);
+    }
+
+    #[test]
+    fn shadowing_renames() {
+        let p = check(
+            "#pragma gtap function\nvoid f(int n) { int x = 1; { int x = 2; n = x; } }",
+        )
+        .unwrap();
+        let vt = &p.tasks[0].var_types;
+        assert!(vt.contains_key("x"));
+        assert!(vt.contains_key("x@2"));
+    }
+
+    #[test]
+    fn unknown_variable_rejected() {
+        let e = check("#pragma gtap function\nvoid f() { int x = y; }").unwrap_err();
+        assert!(e.message.contains("unknown variable"), "{e}");
+    }
+
+    #[test]
+    fn task_called_directly_rejected() {
+        let e = check(
+            "#pragma gtap function\nint t() { return 1; }\n\
+             #pragma gtap function\nvoid f() { int x = t(); }",
+        )
+        .unwrap_err();
+        assert!(e.message.contains("#pragma gtap task"), "{e}");
+    }
+
+    #[test]
+    fn spawning_non_task_rejected() {
+        let e = check(
+            "int h() { return 1; }\n#pragma gtap function\nvoid f() {\n\
+             #pragma gtap task\nh();\n}",
+        )
+        .unwrap_err();
+        assert!(e.message.contains("not a task function"), "{e}");
+    }
+
+    #[test]
+    fn capture_without_taskwait_rejected() {
+        let e = check(
+            "#pragma gtap function\nint t(int n) { return n; }\n\
+             #pragma gtap function\nvoid f() { int a;\n#pragma gtap task\na = t(1);\n}",
+        )
+        .unwrap_err();
+        assert!(e.message.contains("never joined"), "{e}");
+    }
+
+    #[test]
+    fn control_flow_between_capture_and_join_rejected() {
+        let e = check(
+            "#pragma gtap function\nint t(int n) { return n; }\n\
+             #pragma gtap function\nvoid f(int c) { int a;\n#pragma gtap task\na = t(1);\n\
+             if (c) { c = 0; }\n#pragma gtap taskwait\n}",
+        )
+        .unwrap_err();
+        assert!(e.message.contains("straight-line"), "{e}");
+    }
+
+    #[test]
+    fn void_capture_rejected() {
+        let e = check(
+            "#pragma gtap function\nvoid t() { return; }\n\
+             #pragma gtap function\nvoid f() { int a;\n#pragma gtap task\na = t();\n\
+             #pragma gtap taskwait\n}",
+        )
+        .unwrap_err();
+        assert!(e.message.contains("void"), "{e}");
+    }
+
+    #[test]
+    fn taskwait_inside_parfor_rejected() {
+        let e = check(
+            "#pragma gtap function\nvoid f(int n) { parallel_for (i in 0..n) {\n\
+             #pragma gtap taskwait\n} }",
+        )
+        .unwrap_err();
+        assert!(e.message.contains("parallel_for"), "{e}");
+    }
+
+    #[test]
+    fn spawn_inside_parfor_allowed() {
+        check(
+            "#pragma gtap function\nvoid bfs(int v) { parallel_for (i in 0..v) {\n\
+             if (i > 1) {\n#pragma gtap task\nbfs(i);\n}\n} }",
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn int_to_float_promotion() {
+        let p = check("#pragma gtap function\nfloat f(int n) { return n + 0.5; }").unwrap();
+        match &p.tasks[0].func.body.stmts[0] {
+            Stmt::Return {
+                value: Some(Expr::Binary { lhs, .. }),
+                ..
+            } => assert!(matches!(&**lhs, Expr::Cast { ty: Type::Float, .. })),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn float_bitops_rejected() {
+        let e = check("#pragma gtap function\nfloat f(float x) { return x & x; }").unwrap_err();
+        assert!(e.message.contains("requires int"), "{e}");
+    }
+
+    #[test]
+    fn device_helper_shape_enforced() {
+        // OK: decls + single return
+        check("int half(int x) { int h = x / 2; return h; }").unwrap();
+        // Bad: control flow in device fn
+        let e = check("int bad(int x) { if (x) { return 1; } return 0; }").unwrap_err();
+        assert!(e.message.contains("device function"), "{e}");
+    }
+
+    #[test]
+    fn recursive_device_fn_rejected() {
+        let e = check("int r(int x) { return r(x - 1); }").unwrap_err();
+        assert!(e.message.contains("recursive"), "{e}");
+    }
+
+    #[test]
+    fn mutually_recursive_device_fns_rejected() {
+        let e = check(
+            "int a(int x) { return b(x); }\nint b(int x) { return a(x); }",
+        )
+        .unwrap_err();
+        assert!(e.message.contains("recursive"), "{e}");
+    }
+
+    #[test]
+    fn intrinsic_shadowing_rejected() {
+        let e = check("int payload(int x) { return x; }").unwrap_err();
+        assert!(e.message.contains("intrinsic"), "{e}");
+    }
+
+    #[test]
+    fn intrinsic_arity_checked() {
+        let e = check("#pragma gtap function\nvoid f() { int x = fib_serial(); }").unwrap_err();
+        assert!(e.message.contains("expects 1"), "{e}");
+    }
+
+    #[test]
+    fn globals_resolve() {
+        let p = check(
+            "global int d_result;\n#pragma gtap function\nvoid f(int n) { d_result = n; }",
+        )
+        .unwrap();
+        match &p.tasks[0].func.body.stmts[0] {
+            Stmt::Assign {
+                target: LValue::Global(g),
+                ..
+            } => assert_eq!(g, "d_result"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn queue_must_be_int() {
+        let e = check(
+            "#pragma gtap function\nvoid t() { return; }\n\
+             #pragma gtap function\nvoid f() {\n#pragma gtap task queue(1.5)\nt();\n}",
+        )
+        .unwrap_err();
+        assert!(e.message.contains("queue"), "{e}");
+    }
+
+    #[test]
+    fn taskwait_outside_task_fn_rejected() {
+        let e = check("void f() {\n#pragma gtap taskwait\n}").unwrap_err();
+        assert!(e.message.contains("gtap function"), "{e}");
+    }
+
+    #[test]
+    fn too_many_task_params_rejected() {
+        let params: Vec<String> = (0..9).map(|i| format!("int p{i}")).collect();
+        let src = format!(
+            "#pragma gtap function\nvoid big({}) {{ return; }}",
+            params.join(", ")
+        );
+        let e = check(&src).unwrap_err();
+        assert!(e.message.contains("at most 8"), "{e}");
+        // non-task device helpers are not limited
+        let src_dev = format!("int f({}) {{ return p0; }}", params.join(", "));
+        check(&src_dev).unwrap();
+    }
+
+    #[test]
+    fn ptr_arithmetic() {
+        check("#pragma gtap function\nvoid f(ptr p, int i) { p[0] = p[i]; ptr q = p + 4; p = q; }")
+            .unwrap();
+    }
+}

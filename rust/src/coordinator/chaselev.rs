@@ -1,0 +1,245 @@
+//! Element-at-a-time Chase–Lev deque — the §6.1.2 ablation baseline.
+//!
+//! The comparison point for the warp-cooperative batched operations: a
+//! classic Chase–Lev work-stealing deque [Chase & Lev 2005] whose owner
+//! pop/push touch only `bottom` in the common case (no CAS), while steals
+//! CAS on `top`. To fetch a warp's worth of work, the worker repeats the
+//! single-element operation up to 32 times, *sequentialized within the
+//! warp* — cheap per element at low contention (no lock, owner fast path),
+//! but paying one round-trip per element instead of one per batch.
+//!
+//! The paper's observation (Fig. 4) falls out of these costs: batched ops
+//! win almost everywhere, but at very large worker counts the batched
+//! design's CAS on the shared `count` word becomes the bottleneck while
+//! Chase–Lev owners keep completing local pops without any CAS.
+
+use super::queue::{ContendedWord, QueueOp};
+use super::records::TaskId;
+use crate::sim::config::DeviceSpec;
+
+/// A fixed-capacity Chase–Lev deque (the paper's variant: bounded ring).
+pub struct ChaseLevDeque {
+    ring: Vec<TaskId>,
+    top: usize,    // steal end
+    bottom: usize, // owner end
+    capacity: usize,
+    top_word: ContendedWord,
+}
+
+impl ChaseLevDeque {
+    pub fn new(capacity: usize) -> ChaseLevDeque {
+        assert!(capacity >= 2);
+        ChaseLevDeque {
+            ring: vec![0; capacity],
+            top: 0,
+            bottom: 0,
+            capacity,
+            top_word: ContendedWord::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bottom - self.top
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Owner push of one element: store + bottom bump (no CAS), fence.
+    pub fn push1(&mut self, _now: u64, id: TaskId, dev: &DeviceSpec) -> Option<QueueOp> {
+        if self.len() == self.capacity {
+            return None;
+        }
+        self.ring[self.bottom % self.capacity] = id;
+        self.bottom += 1;
+        Some(QueueOp {
+            taken: 1,
+            cycles: (dev.l2_lat / 4).max(1) + dev.fence,
+        })
+    }
+
+    /// Owner pop of one element. CAS on `top` only in the last-element race.
+    pub fn pop1(&mut self, now: u64, dev: &DeviceSpec) -> (Option<TaskId>, u64) {
+        // decrement bottom, read top
+        let mut cycles = (dev.l2_lat / 4).max(1) + dev.cg_load();
+        if self.len() == 0 {
+            return (None, cycles);
+        }
+        let last = self.len() == 1;
+        if last {
+            // potential race with a thief: resolve by CAS on top
+            cycles += self.top_word.access(now + cycles, dev);
+        }
+        self.bottom -= 1;
+        let id = self.ring[self.bottom % self.capacity];
+        (Some(id), cycles)
+    }
+
+    /// Thief steal of one element: read top/bottom, CAS top.
+    pub fn steal1(&mut self, now: u64, dev: &DeviceSpec) -> (Option<TaskId>, u64) {
+        let mut cycles = 2 * dev.cg_load();
+        if self.len() == 0 {
+            return (None, cycles);
+        }
+        cycles += self.top_word.access(now + cycles, dev);
+        let id = self.ring[self.top % self.capacity];
+        self.top += 1;
+        cycles += dev.cg_load(); // fetch the stolen element
+        (Some(id), cycles)
+    }
+
+    /// Warp-sequentialized batched pop: repeat `pop1` up to `max` times
+    /// (the §6.1.2 baseline's way of filling a warp).
+    pub fn pop_batch(
+        &mut self,
+        now: u64,
+        max: usize,
+        out: &mut Vec<TaskId>,
+        dev: &DeviceSpec,
+    ) -> QueueOp {
+        let mut cycles = 0;
+        let mut taken = 0;
+        for _ in 0..max {
+            let (id, c) = self.pop1(now + cycles, dev);
+            cycles += c;
+            match id {
+                Some(id) => {
+                    out.push(id);
+                    taken += 1;
+                }
+                None => break,
+            }
+        }
+        QueueOp { taken, cycles }
+    }
+
+    /// Warp-sequentialized batched steal: repeat `steal1`.
+    pub fn steal_batch(
+        &mut self,
+        now: u64,
+        max: usize,
+        out: &mut Vec<TaskId>,
+        dev: &DeviceSpec,
+    ) -> QueueOp {
+        let mut cycles = 0;
+        let mut taken = 0;
+        for _ in 0..max {
+            let (id, c) = self.steal1(now + cycles, dev);
+            cycles += c;
+            match id {
+                Some(id) => {
+                    out.push(id);
+                    taken += 1;
+                }
+                None => break,
+            }
+        }
+        QueueOp { taken, cycles }
+    }
+
+    /// Batched push: repeat `push1`.
+    pub fn push_batch(&mut self, now: u64, ids: &[TaskId], dev: &DeviceSpec) -> Option<QueueOp> {
+        if self.len() + ids.len() > self.capacity {
+            return None;
+        }
+        let mut cycles = 0;
+        for &id in ids {
+            cycles += self.push1(now + cycles, id, dev).unwrap().cycles;
+        }
+        Some(QueueOp {
+            taken: ids.len(),
+            cycles,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Runner;
+
+    fn dev() -> DeviceSpec {
+        DeviceSpec::h100()
+    }
+
+    #[test]
+    fn owner_lifo_thief_fifo() {
+        let d = dev();
+        let mut q = ChaseLevDeque::new(8);
+        q.push_batch(0, &[1, 2, 3], &d).unwrap();
+        assert_eq!(q.pop1(0, &d).0, Some(3));
+        assert_eq!(q.steal1(0, &d).0, Some(1));
+        assert_eq!(q.pop1(0, &d).0, Some(2));
+        assert_eq!(q.pop1(0, &d).0, None);
+    }
+
+    #[test]
+    fn batched_ops_sequentialize_cost() {
+        // Cost of popping k elements grows linearly with k — the contrast
+        // with TaskQueue::pop_batch (constant).
+        let d = dev();
+        let mut q = ChaseLevDeque::new(64);
+        q.push_batch(0, &(0..32).collect::<Vec<_>>(), &d).unwrap();
+        let mut out = vec![];
+        let c32 = q.pop_batch(100_000, 32, &mut out, &d).cycles;
+        let mut q1 = ChaseLevDeque::new(64);
+        q1.push_batch(0, &[9], &d).unwrap();
+        let mut o1 = vec![];
+        let c1 = q1.pop_batch(200_000, 32, &mut o1, &d).cycles;
+        assert!(c32 > 10 * c1 / 2, "32 pops must cost ~32x one pop: {c32} vs {c1}");
+    }
+
+    #[test]
+    fn owner_pop_avoids_cas_when_not_last() {
+        let d = dev();
+        let mut q = ChaseLevDeque::new(8);
+        q.push_batch(0, &[1, 2], &d).unwrap();
+        let (_, c_not_last) = q.pop1(0, &d);
+        let (_, c_last) = q.pop1(0, &d);
+        assert!(c_last > c_not_last, "last-element pop pays the CAS");
+    }
+
+    #[test]
+    fn overflow_detected() {
+        let d = dev();
+        let mut q = ChaseLevDeque::new(2);
+        assert!(q.push_batch(0, &[1, 2], &d).is_some());
+        assert!(q.push1(0, 3, &d).is_none());
+        assert!(q.push_batch(0, &[4], &d).is_none());
+    }
+
+    #[test]
+    fn prop_exactly_once() {
+        Runner::new().cases(200).run("chaselev-exactly-once", |g| {
+            let d = dev();
+            let mut q = ChaseLevDeque::new(g.usize(4, 64));
+            let mut next: TaskId = 0;
+            let mut claimed = vec![];
+            for _ in 0..g.usize(1, 80) {
+                match g.int(0, 2) {
+                    0 => {
+                        if q.push1(0, next, &d).is_some() {
+                            next += 1;
+                        }
+                    }
+                    1 => {
+                        if let (Some(id), _) = q.pop1(0, &d) {
+                            claimed.push(id);
+                        }
+                    }
+                    _ => {
+                        if let (Some(id), _) = q.steal1(0, &d) {
+                            claimed.push(id);
+                        }
+                    }
+                }
+            }
+            let mut out = vec![];
+            q.pop_batch(0, usize::MAX, &mut out, &d);
+            claimed.extend(out);
+            claimed.sort_unstable();
+            assert_eq!(claimed, (0..next).collect::<Vec<_>>());
+        });
+    }
+}

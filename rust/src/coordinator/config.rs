@@ -1,0 +1,212 @@
+//! Runtime configuration — the preprocessor macros of Table 1, as a struct.
+//!
+//! The paper exposes these as compile-time macros because CUDA needs static
+//! pool sizes; GTaP-Sim sizes its (bulk pre-allocated) pools at
+//! `gtap_initialize()` time instead, keeping the same names, defaults and
+//! semantics. `GTAP_ASSUME_NO_TASKWAIT` keeps its meaning: join metadata is
+//! omitted from task records, which is only safe (and is checked!) for
+//! programs that never execute `taskwait`.
+
+/// Worker granularity (§4.1): a task runs on one thread (a warp executes up
+/// to 32 tasks in SIMT lockstep) or cooperatively on one thread block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    Thread,
+    Block,
+}
+
+/// Which load-balancing scheduler to use (§6.1 ablations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Work stealing with warp-cooperative batched pop/steal (the paper's
+    /// design, §4.3 / Algorithm 1).
+    WorkStealing,
+    /// Single shared global queue (§6.1.1 baseline).
+    GlobalQueue,
+    /// Work stealing with element-at-a-time Chase–Lev operations,
+    /// sequentialized within the warp (§6.1.2 baseline).
+    SequentialChaseLev,
+}
+
+/// Default `GTAP_MAX_TASK_DATA_SIZE` in bytes.
+pub const DEFAULT_MAX_TASK_DATA_SIZE: usize = 256;
+/// Lanes per warp — fixed by the hardware model (§2.3.1).
+pub const WARP_SIZE: usize = 32;
+
+/// Table 1, plus the scheduler/granularity selectors the paper sets per
+/// benchmark (Table 3).
+#[derive(Clone, Debug)]
+pub struct GtapConfig {
+    /// GTAP_GRID_SIZE: number of thread blocks launched.
+    pub grid_size: usize,
+    /// GTAP_BLOCK_SIZE: threads per block (multiple of 32).
+    pub block_size: usize,
+    /// GTAP_MAX_TASKS_PER_WARP: pending-task capacity per warp
+    /// (thread-level workers) — sizes deques and record pools.
+    pub max_tasks_per_warp: usize,
+    /// GTAP_MAX_TASKS_PER_BLOCK: pending-task capacity per block
+    /// (block-level workers).
+    pub max_tasks_per_block: usize,
+    /// GTAP_MAX_CHILD_TASKS: max children a task may have outstanding
+    /// between joins.
+    pub max_child_tasks: usize,
+    /// GTAP_NUM_QUEUES: EPAQ queue count (thread-level only; 1 = EPAQ off).
+    pub num_queues: usize,
+    /// GTAP_MAX_TASK_DATA_SIZE in bytes (compile-time check).
+    pub max_task_data_size: usize,
+    /// GTAP_ASSUME_NO_TASKWAIT: omit join metadata from records.
+    pub assume_no_taskwait: bool,
+    pub granularity: Granularity,
+    pub scheduler: SchedulerKind,
+    /// Seed for victim selection and any workload randomness.
+    pub seed: u64,
+    /// Keep up to a warp's worth of newly spawned tasks for immediate
+    /// execution instead of enqueuing them (§4.3.2). Ablation knob:
+    /// disabling routes every child through the deque.
+    pub immediate_buffer: bool,
+    /// Max tasks claimed per steal (None = a full warp batch, the paper's
+    /// design; Some(1) = steal-one, the classic Chase–Lev discipline).
+    pub steal_max: Option<usize>,
+    /// Hierarchical locality-aware stealing (paper §7 future work):
+    /// probe same-SM victims first; intra-SM steals avoid cross-SM L2
+    /// traffic and are charged at 60% of the remote cost.
+    pub locality_aware_steal: bool,
+}
+
+impl Default for GtapConfig {
+    fn default() -> Self {
+        GtapConfig {
+            grid_size: 128,
+            block_size: 32,
+            max_tasks_per_warp: 4096,
+            max_tasks_per_block: 4096,
+            max_child_tasks: 16,
+            num_queues: 1,
+            max_task_data_size: DEFAULT_MAX_TASK_DATA_SIZE,
+            assume_no_taskwait: false,
+            granularity: Granularity::Thread,
+            scheduler: SchedulerKind::WorkStealing,
+            seed: 0x6A7A9,
+            immediate_buffer: true,
+            steal_max: None,
+            locality_aware_steal: false,
+        }
+    }
+}
+
+impl GtapConfig {
+    /// Total CUDA threads launched.
+    pub fn total_threads(&self) -> usize {
+        self.grid_size * self.block_size
+    }
+
+    /// Warps per block.
+    pub fn warps_per_block(&self) -> usize {
+        self.block_size / WARP_SIZE
+    }
+
+    /// Number of *workers*: warps for thread-level granularity (each warp
+    /// drives up to 32 tasks), blocks for block-level.
+    pub fn num_workers(&self) -> usize {
+        match self.granularity {
+            Granularity::Thread => self.grid_size * self.warps_per_block(),
+            Granularity::Block => self.grid_size,
+        }
+    }
+
+    /// Per-worker deque capacity.
+    pub fn queue_capacity(&self) -> usize {
+        match self.granularity {
+            Granularity::Thread => self.max_tasks_per_warp,
+            Granularity::Block => self.max_tasks_per_block,
+        }
+    }
+
+    /// Total task-record pool capacity.
+    pub fn record_pool_capacity(&self) -> usize {
+        self.num_workers() * self.queue_capacity()
+    }
+
+    /// Validate invariants; returns a human-readable error.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.block_size == 0 || self.block_size % WARP_SIZE != 0 {
+            return Err(format!(
+                "GTAP_BLOCK_SIZE must be a non-zero multiple of {WARP_SIZE}, got {}",
+                self.block_size
+            ));
+        }
+        if self.grid_size == 0 {
+            return Err("GTAP_GRID_SIZE must be non-zero".into());
+        }
+        if self.num_queues == 0 {
+            return Err("GTAP_NUM_QUEUES must be at least 1".into());
+        }
+        if self.num_queues > 1 && self.granularity == Granularity::Block {
+            return Err(
+                "EPAQ (GTAP_NUM_QUEUES > 1) applies to thread-level workers only \
+                 (§5.1.3: the queue option is not supported for block-level workers)"
+                    .into(),
+            );
+        }
+        if self.queue_capacity() < 2 {
+            return Err("task queue capacity must be at least 2".into());
+        }
+        if self.max_child_tasks == 0 {
+            return Err("GTAP_MAX_CHILD_TASKS must be at least 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_valid() {
+        GtapConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn worker_counts() {
+        let mut c = GtapConfig {
+            grid_size: 10,
+            block_size: 64,
+            ..Default::default()
+        };
+        c.granularity = Granularity::Thread;
+        assert_eq!(c.num_workers(), 20); // 10 blocks * 2 warps
+        assert_eq!(c.total_threads(), 640);
+        c.granularity = Granularity::Block;
+        assert_eq!(c.num_workers(), 10);
+    }
+
+    #[test]
+    fn invalid_block_size_rejected() {
+        let c = GtapConfig {
+            block_size: 48,
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn epaq_on_block_level_rejected() {
+        let c = GtapConfig {
+            num_queues: 3,
+            granularity: Granularity::Block,
+            ..Default::default()
+        };
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("thread-level"), "{err}");
+    }
+
+    #[test]
+    fn zero_queues_rejected() {
+        let c = GtapConfig {
+            num_queues: 0,
+            ..Default::default()
+        };
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! The single shared global queue — the §6.1.1 load-balancing baseline
+//! (Figure 1b).
+//!
+//! All workers push to and pop from one queue. Every operation goes through
+//! the same shared metadata words, so operations from different workers
+//! serialize ([`ContendedWord`]); with hundreds of warps this becomes the
+//! bottleneck — the flat-lining curves of Figure 3. Pops are FIFO (there is
+//! no owner end).
+
+use super::queue::{ContendedWord, QueueOp};
+use super::records::TaskId;
+use crate::sim::config::DeviceSpec;
+
+pub struct GlobalQueue {
+    ring: Vec<TaskId>,
+    head: usize,
+    tail: usize,
+    capacity: usize,
+    head_word: ContendedWord,
+    tail_word: ContendedWord,
+}
+
+impl GlobalQueue {
+    pub fn new(capacity: usize) -> GlobalQueue {
+        assert!(capacity >= 2);
+        GlobalQueue {
+            ring: vec![0; capacity],
+            head: 0,
+            tail: 0,
+            capacity,
+            head_word: ContendedWord::default(),
+            tail_word: ContendedWord::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tail - self.head
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Push a batch: reserve slots by CAS on `tail`, store, fence-publish.
+    pub fn push_batch(&mut self, now: u64, ids: &[TaskId], dev: &DeviceSpec) -> Option<QueueOp> {
+        if self.len() + ids.len() > self.capacity {
+            return None;
+        }
+        let mut cycles = self.tail_word.access(now, dev);
+        for &id in ids {
+            self.ring[self.tail % self.capacity] = id;
+            self.tail += 1;
+        }
+        cycles += (ids.len().div_ceil(8)) as u64 * (dev.l2_lat / 4).max(1) + dev.fence;
+        Some(QueueOp {
+            taken: ids.len(),
+            cycles,
+        })
+    }
+
+    /// Pop a batch from the head (FIFO): CAS-claim on `head`.
+    pub fn pop_batch(
+        &mut self,
+        now: u64,
+        max: usize,
+        out: &mut Vec<TaskId>,
+        dev: &DeviceSpec,
+    ) -> QueueOp {
+        let mut cycles = dev.cg_load();
+        let avail = self.len();
+        if avail == 0 {
+            return QueueOp { taken: 0, cycles };
+        }
+        cycles += self.head_word.access(now + cycles, dev);
+        let claim = avail.min(max);
+        cycles += dev.cg_load();
+        for _ in 0..claim {
+            out.push(self.ring[self.head % self.capacity]);
+            self.head += 1;
+        }
+        QueueOp {
+            taken: claim,
+            cycles,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> DeviceSpec {
+        DeviceSpec::h100()
+    }
+
+    #[test]
+    fn fifo_order() {
+        let d = dev();
+        let mut q = GlobalQueue::new(8);
+        q.push_batch(0, &[1, 2, 3], &d).unwrap();
+        let mut out = vec![];
+        q.pop_batch(0, 2, &mut out, &d);
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn all_workers_contend() {
+        // ten workers popping at the same instant: later ones pay more
+        let d = dev();
+        let mut q = GlobalQueue::new(1024);
+        q.push_batch(0, &(0..512).collect::<Vec<_>>(), &d).unwrap();
+        let mut costs = vec![];
+        for _ in 0..10 {
+            let mut out = vec![];
+            costs.push(q.pop_batch(1_000_000, 32, &mut out, &d).cycles);
+        }
+        assert!(
+            costs.last().unwrap() > &(costs[0] + 8 * d.atomic_serialize),
+            "{costs:?}"
+        );
+    }
+
+    #[test]
+    fn overflow_detected() {
+        let d = dev();
+        let mut q = GlobalQueue::new(2);
+        assert!(q.push_batch(0, &[1, 2], &d).is_some());
+        assert!(q.push_batch(0, &[3], &d).is_none());
+    }
+
+    #[test]
+    fn empty_pop_cheap() {
+        let d = dev();
+        let mut q = GlobalQueue::new(4);
+        let mut out = vec![];
+        let op = q.pop_batch(0, 32, &mut out, &d);
+        assert_eq!(op.taken, 0);
+        assert_eq!(op.cycles, d.cg_load());
+    }
+}

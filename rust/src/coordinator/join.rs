@@ -1,0 +1,231 @@
+//! Join/continuation management (§4.2).
+//!
+//! The runtime side of fork-join: applying a segment's end effect to the
+//! task records. A `PrepareJoin` marks the parent waiting and records the
+//! continuation's EPAQ queue; a `FinishTask` decrements the parent's
+//! pending-children counter (atomic at the L2 coherence point) and, when it
+//! reaches zero with the parent suspended, hands the parent's continuation
+//! back for re-enqueue. Records of finished children are retained until the
+//! parent's post-join segment has consumed their result fields (mirroring
+//! Program 6's `__gtap_load_result`), then released in bulk.
+
+use super::records::{RecordPool, TaskId, NO_TASK};
+use crate::sim::config::DeviceSpec;
+
+/// Effect of finishing a task, to be applied by the scheduler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishEffect {
+    /// No parent action (root task, or parent not yet waiting).
+    None,
+    /// The parent's join is satisfied: re-enqueue its continuation on EPAQ
+    /// queue `queue`.
+    ResumeParent { parent: TaskId, queue: u8 },
+}
+
+/// Apply `__gtap_prepare_for_join(next_state, queue)` to `task`.
+/// Returns `(resume_immediately, cycles)`: when no children are pending the
+/// continuation is runnable at once (it still goes through the queue, as in
+/// the paper — re-entry is by re-enqueue).
+pub fn prepare_join(
+    records: &mut RecordPool,
+    task: TaskId,
+    next_state: u16,
+    queue: u8,
+    dev: &DeviceSpec,
+) -> (bool, u64) {
+    let m = records.meta_mut(task);
+    m.state = next_state;
+    m.join_queue = queue;
+    let cycles = dev.atomic; // publish the waiting flag + state
+    if m.pending_children == 0 {
+        m.waiting = false;
+        (true, cycles)
+    } else {
+        m.waiting = true;
+        (false, cycles)
+    }
+}
+
+/// Apply `__gtap_finish_task()` to `task`.
+///
+/// `assume_no_taskwait` (Table 1) skips join bookkeeping entirely. Returns
+/// the effect plus the cycles charged to the finishing worker.
+pub fn finish_task(
+    records: &mut RecordPool,
+    task: TaskId,
+    assume_no_taskwait: bool,
+    dev: &DeviceSpec,
+) -> (FinishEffect, u64) {
+    let parent = records.meta(task).parent;
+    // Orphan or release any children this task never joined (children of a
+    // parent that finishes without a final taskwait keep running — OpenMP
+    // semantics; their records must not dangle).
+    let mut cycles = 0;
+    if !assume_no_taskwait {
+        let n = records.meta(task).num_children;
+        for slot in 0..n {
+            let child = records.child(task, slot);
+            if child == NO_TASK {
+                continue;
+            }
+            if records.meta(child).done {
+                records.free(child);
+            } else {
+                records.meta_mut(child).parent = NO_TASK;
+            }
+        }
+        if n > 0 {
+            records.meta_mut(task).num_children = 0;
+            records.meta_mut(task).pending_children = 0;
+        }
+    }
+
+    if assume_no_taskwait || parent == NO_TASK {
+        records.free(task);
+        cycles += dev.atomic; // live-task counter decrement
+        return (FinishEffect::None, cycles);
+    }
+
+    // Keep the record: the parent reads the result field at re-entry.
+    records.meta_mut(task).done = true;
+    // Atomic decrement of the parent's pending counter (L2).
+    cycles += dev.atomic;
+    let pm = records.meta_mut(parent);
+    debug_assert!(pm.alive, "finish with dead parent");
+    debug_assert!(pm.pending_children > 0);
+    pm.pending_children -= 1;
+    if pm.pending_children == 0 && pm.waiting {
+        pm.waiting = false;
+        let queue = pm.join_queue;
+        (FinishEffect::ResumeParent { parent, queue }, cycles)
+    } else {
+        (FinishEffect::None, cycles)
+    }
+}
+
+/// After a post-join segment of `parent` completes, release the consumed
+/// children's records and reset the child list for the next join epoch.
+pub fn release_joined_children(records: &mut RecordPool, parent: TaskId) {
+    let n = records.meta(parent).num_children;
+    for slot in 0..n {
+        let child = records.child(parent, slot);
+        if child != NO_TASK && records.meta(child).alive && records.meta(child).done {
+            records.free(child);
+        }
+    }
+    records.reset_children(parent);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::DeviceSpec;
+
+    fn setup() -> (RecordPool, DeviceSpec) {
+        (RecordPool::new(16, 4, 4), DeviceSpec::h100())
+    }
+
+    #[test]
+    fn join_waits_for_all_children() {
+        let (mut r, d) = setup();
+        let parent = r.alloc(0, NO_TASK).unwrap();
+        let c1 = r.alloc(0, parent).unwrap();
+        let c2 = r.alloc(0, parent).unwrap();
+        r.push_child(parent, c1).unwrap();
+        r.push_child(parent, c2).unwrap();
+
+        let (now, _) = prepare_join(&mut r, parent, 1, 2, &d);
+        assert!(!now, "two children pending");
+        assert!(r.meta(parent).waiting);
+        assert_eq!(r.meta(parent).state, 1);
+
+        let (e1, _) = finish_task(&mut r, c1, false, &d);
+        assert_eq!(e1, FinishEffect::None);
+        let (e2, _) = finish_task(&mut r, c2, false, &d);
+        assert_eq!(
+            e2,
+            FinishEffect::ResumeParent { parent, queue: 2 },
+            "last child resumes the parent on the join queue"
+        );
+        assert!(!r.meta(parent).waiting);
+        // children retained for result reads
+        assert!(r.meta(c1).alive && r.meta(c1).done);
+        release_joined_children(&mut r, parent);
+        assert!(!r.meta(c1).alive);
+        assert!(!r.meta(c2).alive);
+        assert_eq!(r.meta(parent).num_children, 0);
+    }
+
+    #[test]
+    fn join_with_no_children_resumes_immediately() {
+        let (mut r, d) = setup();
+        let t = r.alloc(0, NO_TASK).unwrap();
+        let (now, _) = prepare_join(&mut r, t, 1, 0, &d);
+        assert!(now);
+        assert!(!r.meta(t).waiting);
+    }
+
+    #[test]
+    fn children_finish_before_parent_joins() {
+        // The §4.2 race: children complete before the parent suspends.
+        let (mut r, d) = setup();
+        let parent = r.alloc(0, NO_TASK).unwrap();
+        let c = r.alloc(0, parent).unwrap();
+        r.push_child(parent, c).unwrap();
+        let (e, _) = finish_task(&mut r, c, false, &d);
+        assert_eq!(e, FinishEffect::None, "parent not waiting yet");
+        let (now, _) = prepare_join(&mut r, parent, 1, 0, &d);
+        assert!(now, "join already satisfied at suspension");
+    }
+
+    #[test]
+    fn root_finish_frees_record() {
+        let (mut r, d) = setup();
+        let t = r.alloc(0, NO_TASK).unwrap();
+        let (e, _) = finish_task(&mut r, t, false, &d);
+        assert_eq!(e, FinishEffect::None);
+        assert_eq!(r.live(), 0);
+    }
+
+    #[test]
+    fn assume_no_taskwait_frees_immediately() {
+        let (mut r, d) = setup();
+        let parent = r.alloc(0, NO_TASK).unwrap();
+        let c = r.alloc(0, parent).unwrap();
+        // note: no push_child in this mode
+        let (e, _) = finish_task(&mut r, c, true, &d);
+        assert_eq!(e, FinishEffect::None);
+        assert_eq!(r.live(), 1, "child freed, parent alive");
+        assert!(r.meta(parent).alive);
+    }
+
+    #[test]
+    fn unawaited_children_orphaned() {
+        // parent finishes while a spawned child still runs (no taskwait)
+        let (mut r, d) = setup();
+        let parent = r.alloc(0, NO_TASK).unwrap();
+        let c = r.alloc(0, parent).unwrap();
+        r.push_child(parent, c).unwrap();
+        let (e, _) = finish_task(&mut r, parent, false, &d);
+        assert_eq!(e, FinishEffect::None);
+        assert!(!r.meta(parent).alive);
+        assert!(r.meta(c).alive, "running child survives");
+        assert_eq!(r.meta(c).parent, NO_TASK, "child orphaned");
+        // orphan finishing now frees directly
+        let (e, _) = finish_task(&mut r, c, false, &d);
+        assert_eq!(e, FinishEffect::None);
+        assert_eq!(r.live(), 0);
+    }
+
+    #[test]
+    fn done_child_of_finishing_parent_freed() {
+        let (mut r, d) = setup();
+        let parent = r.alloc(0, NO_TASK).unwrap();
+        let c = r.alloc(0, parent).unwrap();
+        r.push_child(parent, c).unwrap();
+        finish_task(&mut r, c, false, &d); // child done, retained
+        assert!(r.meta(c).alive);
+        finish_task(&mut r, parent, false, &d); // parent finishes without join
+        assert_eq!(r.live(), 0, "both records released");
+    }
+}

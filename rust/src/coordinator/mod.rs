@@ -1,0 +1,38 @@
+//! The GTaP device runtime (§4): everything that executes *on the GPU* in
+//! the paper, here running against the SIMT simulator substrate.
+//!
+//! * [`config`] — `GtapConfig`, the runtime parameters of Table 1
+//!   (`GTAP_GRID_SIZE`, `GTAP_BLOCK_SIZE`, queue/pool capacities, EPAQ queue
+//!   count, `GTAP_ASSUME_NO_TASKWAIT`).
+//! * [`records`] — bulk pre-allocated task records indexed by task ID
+//!   (§4.1): payload words, scheduling metadata, join state.
+//! * [`queue`] — the fixed-ring work-stealing deque with warp-cooperative
+//!   batched PopBatch / StealBatch / PushBatch (§4.3, Algorithm 1),
+//!   including the contention cost accounting on `count`/`head`/`lock`.
+//! * [`chaselev`] — the element-at-a-time Chase–Lev deque used as the
+//!   §6.1.2 ablation baseline.
+//! * [`globalq`] — the single shared queue of the §6.1.1 ablation.
+//! * [`policy`] — the scheduler-policy abstraction selecting among them.
+//! * [`join`] — join counters, continuation re-enqueue, child-result
+//!   plumbing (§4.2).
+//! * [`scheduler`] — the persistent-kernel loops for thread-level and
+//!   block-level workers, EPAQ queue selection (§4.4), and termination
+//!   detection.
+//! * [`session`] — the host-facing API: compile a GTaP-C program, size the
+//!   pools, spawn the root task, run to quiescence, read results
+//!   (the `gtap_initialize()` / kernel launch / `gtap_finalize()` flow of
+//!   Program 4).
+
+pub mod chaselev;
+pub mod config;
+pub mod globalq;
+pub mod join;
+pub mod policy;
+pub mod queue;
+pub mod records;
+pub mod scheduler;
+pub mod session;
+
+pub use config::{Granularity, GtapConfig, SchedulerKind};
+pub use scheduler::{PayloadEngine, PayloadReq, RunStats, Scheduler};
+pub use session::Session;

@@ -1,0 +1,213 @@
+//! Scheduler-policy dispatch: the three queue organizations of §6.1.
+//!
+//! [`QueueSet`] presents a uniform push/pop/steal interface over
+//! (i) per-worker batched work-stealing deques with EPAQ multi-queue
+//! support (the paper's design), (ii) the single global queue, and
+//! (iii) per-worker sequential Chase–Lev deques — so the persistent-kernel
+//! scheduler is policy-agnostic and the Fig. 3/4 ablations toggle one enum.
+
+use super::chaselev::ChaseLevDeque;
+use super::config::{GtapConfig, SchedulerKind};
+use super::globalq::GlobalQueue;
+use super::queue::{QueueOp, TaskQueue};
+use super::records::TaskId;
+use crate::sim::config::DeviceSpec;
+
+/// All task queues of a run.
+pub enum QueueSet {
+    /// `queues[worker * num_queues + qidx]` (EPAQ: one deque per queue
+    /// index per worker; §4.4).
+    WorkStealing {
+        queues: Vec<TaskQueue>,
+        num_queues: usize,
+    },
+    Global(GlobalQueue),
+    SeqChaseLev {
+        queues: Vec<ChaseLevDeque>,
+        num_queues: usize,
+    },
+}
+
+impl QueueSet {
+    pub fn for_config(cfg: &GtapConfig) -> QueueSet {
+        let workers = cfg.num_workers();
+        let cap = cfg.queue_capacity();
+        match cfg.scheduler {
+            SchedulerKind::WorkStealing => QueueSet::WorkStealing {
+                queues: (0..workers * cfg.num_queues)
+                    .map(|_| TaskQueue::new(cap))
+                    .collect(),
+                num_queues: cfg.num_queues,
+            },
+            SchedulerKind::GlobalQueue => {
+                // FIFO order expands the task tree breadth-first, so the
+                // shared queue must hold whole frontiers: give it the
+                // aggregate distributed capacity with a generous floor.
+                QueueSet::Global(GlobalQueue::new((workers * cap).max(1 << 20)))
+            }
+            SchedulerKind::SequentialChaseLev => QueueSet::SeqChaseLev {
+                queues: (0..workers * cfg.num_queues)
+                    .map(|_| ChaseLevDeque::new(cap))
+                    .collect(),
+                num_queues: cfg.num_queues,
+            },
+        }
+    }
+
+    /// Whether stealing is meaningful for this policy.
+    pub fn supports_steal(&self) -> bool {
+        !matches!(self, QueueSet::Global(_))
+    }
+
+    /// Pop from `worker`'s own queue `qidx`.
+    pub fn pop(
+        &mut self,
+        worker: usize,
+        qidx: usize,
+        now: u64,
+        max: usize,
+        out: &mut Vec<TaskId>,
+        dev: &DeviceSpec,
+    ) -> QueueOp {
+        match self {
+            QueueSet::WorkStealing { queues, num_queues } => {
+                queues[worker * *num_queues + qidx].pop_batch(now, max, out, dev)
+            }
+            QueueSet::Global(q) => q.pop_batch(now, max, out, dev),
+            QueueSet::SeqChaseLev { queues, num_queues } => {
+                queues[worker * *num_queues + qidx].pop_batch(now, max, out, dev)
+            }
+        }
+    }
+
+    /// Steal from `victim`'s queue `qidx`.
+    pub fn steal(
+        &mut self,
+        victim: usize,
+        qidx: usize,
+        now: u64,
+        max: usize,
+        out: &mut Vec<TaskId>,
+        dev: &DeviceSpec,
+    ) -> QueueOp {
+        match self {
+            QueueSet::WorkStealing { queues, num_queues } => {
+                queues[victim * *num_queues + qidx].steal_batch(now, max, out, dev)
+            }
+            QueueSet::Global(_) => QueueOp {
+                taken: 0,
+                cycles: 0,
+            },
+            QueueSet::SeqChaseLev { queues, num_queues } => {
+                queues[victim * *num_queues + qidx].steal_batch(now, max, out, dev)
+            }
+        }
+    }
+
+    /// Push `ids` to `worker`'s queue `qidx`. `None` = overflow.
+    pub fn push(
+        &mut self,
+        worker: usize,
+        qidx: usize,
+        now: u64,
+        ids: &[TaskId],
+        dev: &DeviceSpec,
+    ) -> Option<QueueOp> {
+        match self {
+            QueueSet::WorkStealing { queues, num_queues } => {
+                queues[worker * *num_queues + qidx].push_batch(now, ids, dev)
+            }
+            QueueSet::Global(q) => q.push_batch(now, ids, dev),
+            QueueSet::SeqChaseLev { queues, num_queues } => {
+                queues[worker * *num_queues + qidx].push_batch(now, ids, dev)
+            }
+        }
+    }
+
+    /// Queued tasks in `worker`'s queue `qidx` (victim preselection).
+    pub fn len_of(&self, worker: usize, qidx: usize) -> usize {
+        match self {
+            QueueSet::WorkStealing { queues, num_queues } => {
+                queues[worker * num_queues + qidx].len()
+            }
+            QueueSet::Global(q) => q.len(),
+            QueueSet::SeqChaseLev { queues, num_queues } => {
+                queues[worker * num_queues + qidx].len()
+            }
+        }
+    }
+
+    /// Total queued tasks (termination diagnostics).
+    pub fn total_len(&self) -> usize {
+        match self {
+            QueueSet::WorkStealing { queues, .. } => queues.iter().map(|q| q.len()).sum(),
+            QueueSet::Global(q) => q.len(),
+            QueueSet::SeqChaseLev { queues, .. } => queues.iter().map(|q| q.len()).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::Granularity;
+
+    fn cfg(kind: SchedulerKind, nq: usize) -> GtapConfig {
+        GtapConfig {
+            grid_size: 2,
+            block_size: 32,
+            num_queues: nq,
+            scheduler: kind,
+            granularity: Granularity::Thread,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn ws_roundtrip_per_worker_per_queue() {
+        let d = DeviceSpec::h100();
+        let mut qs = QueueSet::for_config(&cfg(SchedulerKind::WorkStealing, 3));
+        qs.push(0, 1, 0, &[42], &d).unwrap();
+        assert_eq!(qs.len_of(0, 1), 1);
+        assert_eq!(qs.len_of(0, 0), 0);
+        assert_eq!(qs.len_of(1, 1), 0);
+        let mut out = vec![];
+        let op = qs.pop(0, 1, 0, 32, &mut out, &d);
+        assert_eq!(op.taken, 1);
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn global_ignores_worker_index() {
+        let d = DeviceSpec::h100();
+        let mut qs = QueueSet::for_config(&cfg(SchedulerKind::GlobalQueue, 1));
+        qs.push(0, 0, 0, &[7], &d).unwrap();
+        let mut out = vec![];
+        let op = qs.pop(1, 0, 0, 32, &mut out, &d);
+        assert_eq!(op.taken, 1, "any worker pops the shared queue");
+        assert!(!qs.supports_steal());
+    }
+
+    #[test]
+    fn steal_moves_between_workers() {
+        let d = DeviceSpec::h100();
+        for kind in [SchedulerKind::WorkStealing, SchedulerKind::SequentialChaseLev] {
+            let mut qs = QueueSet::for_config(&cfg(kind, 1));
+            qs.push(0, 0, 0, &[1, 2, 3], &d).unwrap();
+            let mut out = vec![];
+            let op = qs.steal(0, 0, 0, 2, &mut out, &d);
+            assert_eq!(op.taken, 2);
+            assert_eq!(qs.len_of(0, 0), 1);
+            assert!(qs.supports_steal());
+        }
+    }
+
+    #[test]
+    fn total_len_sums() {
+        let d = DeviceSpec::h100();
+        let mut qs = QueueSet::for_config(&cfg(SchedulerKind::WorkStealing, 2));
+        qs.push(0, 0, 0, &[1], &d).unwrap();
+        qs.push(1, 1, 0, &[2, 3], &d).unwrap();
+        assert_eq!(qs.total_len(), 3);
+    }
+}

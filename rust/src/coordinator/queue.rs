@@ -1,0 +1,344 @@
+//! The GTaP task queue: a fixed-size ring-buffer deque with
+//! **warp-cooperative batched** pop / steal / push (§4.3, Program 2,
+//! Algorithm 1).
+//!
+//! Functionally this is a deque of task IDs: the owner pushes and pops at
+//! the tail (LIFO), thieves steal from the head (FIFO), exactly once per
+//! task. The *performance* model mirrors the paper's implementation:
+//!
+//! * `head` and `count` live in global memory (L2 coherence point) and are
+//!   manipulated with CAS; `tail` lives in shared memory (owner-only).
+//! * A per-queue `lock` serializes thieves (at most one steal at a time).
+//! * `PopBatch` (Algorithm 1): lane 0 CAS-claims up to 32 tasks from
+//!   `count`, broadcasts via shuffle, lanes gather IDs in parallel with
+//!   L1-bypassing loads, owner advances `tail` locally.
+//! * `PushBatch`: store IDs, `__threadfence()`, then publish by adding to
+//!   `count`.
+//!
+//! Contention is modeled with [`ContendedWord`]: concurrent atomic RMWs on
+//! the same word serialize behind each other with a per-access window — the
+//! mechanism behind the Fig. 3 global-queue flat-line and the Fig. 4
+//! batched-vs-Chase–Lev crossover at very large worker counts.
+
+use super::records::TaskId;
+use crate::sim::config::DeviceSpec;
+
+/// A shared memory word accessed with atomic RMW: concurrent accessors
+/// serialize. `next_free` is the simulated time the word next accepts an
+/// access.
+#[derive(Clone, Debug, Default)]
+pub struct ContendedWord {
+    next_free: u64,
+}
+
+impl ContendedWord {
+    /// Perform an atomic access at time `now`; returns the cycles charged
+    /// to this accessor (wait + the RMW itself).
+    #[inline]
+    pub fn access(&mut self, now: u64, dev: &DeviceSpec) -> u64 {
+        self.access_window(now, dev, dev.atomic_serialize)
+    }
+
+    /// Atomic access holding the word for a custom serialization window
+    /// (used for locks whose critical section spans several operations).
+    #[inline]
+    pub fn access_window(&mut self, now: u64, dev: &DeviceSpec, window: u64) -> u64 {
+        let start = now.max(self.next_free);
+        let wait = start - now;
+        self.next_free = start + window;
+        wait + dev.atomic
+    }
+}
+
+/// Result of a batched queue operation: claimed task IDs are appended to
+/// the caller's buffer; `cycles` is the cost charged to the calling worker.
+#[derive(Debug, PartialEq, Eq)]
+pub struct QueueOp {
+    pub taken: usize,
+    pub cycles: u64,
+}
+
+/// One fixed-capacity task deque (Program 2).
+pub struct TaskQueue {
+    ring: Vec<TaskId>,
+    head: usize,
+    tail: usize,
+    capacity: usize,
+    /// Contention state of the shared metadata words.
+    count_word: ContendedWord,
+    lock_word: ContendedWord,
+}
+
+impl TaskQueue {
+    pub fn new(capacity: usize) -> TaskQueue {
+        assert!(capacity >= 2);
+        TaskQueue {
+            ring: vec![0; capacity],
+            head: 0,
+            tail: 0,
+            capacity,
+            count_word: ContendedWord::default(),
+            lock_word: ContendedWord::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tail - self.head
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Owner PushBatch: store IDs, fence, publish via `count`.
+    /// Returns `None` if the ring would overflow (Table-1 feasibility).
+    pub fn push_batch(&mut self, now: u64, ids: &[TaskId], dev: &DeviceSpec) -> Option<QueueOp> {
+        if self.len() + ids.len() > self.capacity {
+            return None;
+        }
+        for &id in ids {
+            self.ring[self.tail % self.capacity] = id;
+            self.tail += 1;
+        }
+        // coalesced stores (one transaction per 8 IDs) + fence + publish
+        let stores = (ids.len().div_ceil(8)) as u64 * (dev.l2_lat / 4).max(1);
+        let publish = self.count_word.access(now + stores + dev.fence, dev);
+        Some(QueueOp {
+            taken: ids.len(),
+            cycles: stores + dev.fence + publish,
+        })
+    }
+
+    /// Owner PopBatch (Algorithm 1): claim up to `max` tasks from the tail.
+    pub fn pop_batch(
+        &mut self,
+        now: u64,
+        max: usize,
+        out: &mut Vec<TaskId>,
+        dev: &DeviceSpec,
+    ) -> QueueOp {
+        // lane 0: load count (.cg)
+        let mut cycles = dev.cg_load();
+        let avail = self.len();
+        if avail == 0 {
+            return QueueOp { taken: 0, cycles };
+        }
+        // CAS-claim on count
+        cycles += self.count_word.access(now + cycles, dev);
+        let claim = avail.min(max);
+        // broadcast + parallel gather of IDs (one coalesced transaction)
+        cycles += dev.shfl + dev.cg_load();
+        for _ in 0..claim {
+            self.tail -= 1;
+            out.push(self.ring[self.tail % self.capacity]);
+        }
+        // tail update is shared-memory-local: negligible
+        QueueOp {
+            taken: claim,
+            cycles,
+        }
+    }
+
+    /// Thief StealBatch: lock, CAS-claim from the head, gather, unlock.
+    pub fn steal_batch(
+        &mut self,
+        now: u64,
+        max: usize,
+        out: &mut Vec<TaskId>,
+        dev: &DeviceSpec,
+    ) -> QueueOp {
+        // check count first (.cg) — cheap failure path
+        let mut cycles = dev.cg_load();
+        let avail = self.len();
+        if avail == 0 {
+            return QueueOp { taken: 0, cycles };
+        }
+        // acquire the victim lock: holds for the whole critical section
+        let critical = dev.atomic + 2 * dev.cg_load();
+        cycles += self.lock_word.access_window(now + cycles, dev, critical);
+        // re-check under lock, CAS-claim on count
+        let avail = self.len();
+        if avail == 0 {
+            return QueueOp { taken: 0, cycles };
+        }
+        cycles += self.count_word.access(now + cycles, dev);
+        let claim = avail.min(max);
+        cycles += dev.cg_load(); // gather stolen IDs
+        for _ in 0..claim {
+            out.push(self.ring[self.head % self.capacity]);
+            self.head += 1;
+        }
+        cycles += (dev.l2_lat / 4).max(1); // advance head (release store)
+        QueueOp {
+            taken: claim,
+            cycles,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Runner;
+
+    fn dev() -> DeviceSpec {
+        DeviceSpec::h100()
+    }
+
+    #[test]
+    fn lifo_for_owner_fifo_for_thief() {
+        let d = dev();
+        let mut q = TaskQueue::new(16);
+        q.push_batch(0, &[1, 2, 3, 4], &d).unwrap();
+        let mut got = vec![];
+        let op = q.pop_batch(0, 2, &mut got, &d);
+        assert_eq!(op.taken, 2);
+        assert_eq!(got, vec![4, 3], "owner pops newest first (LIFO)");
+        let mut stolen = vec![];
+        q.steal_batch(0, 2, &mut stolen, &d);
+        assert_eq!(stolen, vec![1, 2], "thief steals oldest first (FIFO)");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn overflow_returns_none() {
+        let d = dev();
+        let mut q = TaskQueue::new(4);
+        assert!(q.push_batch(0, &[1, 2, 3], &d).is_some());
+        assert!(q.push_batch(0, &[4, 5], &d).is_none(), "would exceed capacity");
+        assert_eq!(q.len(), 3, "failed push must not mutate");
+    }
+
+    #[test]
+    fn empty_pop_is_cheap() {
+        let d = dev();
+        let mut q = TaskQueue::new(4);
+        let mut out = vec![];
+        let op = q.pop_batch(0, 32, &mut out, &d);
+        assert_eq!(op.taken, 0);
+        assert_eq!(op.cycles, d.cg_load(), "empty check is one .cg load");
+    }
+
+    #[test]
+    fn ring_wraps() {
+        let d = dev();
+        let mut q = TaskQueue::new(4);
+        for round in 0..10 {
+            q.push_batch(0, &[round, round + 100], &d).unwrap();
+            let mut out = vec![];
+            q.pop_batch(0, 2, &mut out, &d);
+            assert_eq!(out, vec![round + 100, round]);
+        }
+    }
+
+    #[test]
+    fn contention_serializes() {
+        let d = dev();
+        let mut w = ContendedWord::default();
+        // three accessors arriving at the same instant
+        let c1 = w.access(1000, &d);
+        let c2 = w.access(1000, &d);
+        let c3 = w.access(1000, &d);
+        assert_eq!(c1, d.atomic);
+        assert_eq!(c2, d.atomic + d.atomic_serialize);
+        assert_eq!(c3, d.atomic + 2 * d.atomic_serialize);
+        // a late accessor sees a free word
+        let c4 = w.access(1_000_000, &d);
+        assert_eq!(c4, d.atomic);
+    }
+
+    #[test]
+    fn lock_window_spans_critical_section() {
+        let d = dev();
+        let mut w = ContendedWord::default();
+        let window = 500;
+        let _ = w.access_window(0, &d, window);
+        let c2 = w.access_window(0, &d, window);
+        assert!(c2 >= window, "second thief waits out the critical section");
+    }
+
+    #[test]
+    fn batched_pop_cost_independent_of_claim_size() {
+        // the point of Algorithm 1: claiming 32 costs the same as claiming 1
+        let d = dev();
+        let mut q1 = TaskQueue::new(64);
+        q1.push_batch(0, &[0; 1], &d).unwrap();
+        let mut q32 = TaskQueue::new(64);
+        q32.push_batch(0, &(0..32).collect::<Vec<_>>(), &d).unwrap();
+        let mut o1 = vec![];
+        let mut o32 = vec![];
+        let c1 = q1.pop_batch(10_000, 32, &mut o1, &d).cycles;
+        let c32 = q32.pop_batch(10_000, 32, &mut o32, &d).cycles;
+        assert_eq!(c1, c32);
+        assert_eq!(o32.len(), 32);
+    }
+
+    #[test]
+    fn prop_no_task_lost_or_duplicated() {
+        // Property: any interleaving of batched push/pop/steal claims each
+        // pushed ID exactly once (the §4.3 correctness sketch).
+        Runner::new().cases(200).run("queue-exactly-once", |g| {
+            let d = dev();
+            let cap = g.usize(4, 64);
+            let mut q = TaskQueue::new(cap);
+            let mut next_id: TaskId = 0;
+            let mut claimed: Vec<TaskId> = vec![];
+            let mut now = 0u64;
+            for _ in 0..g.usize(1, 60) {
+                now += g.int(1, 1000) as u64;
+                match g.int(0, 2) {
+                    0 => {
+                        let k = g.usize(1, 8);
+                        let ids: Vec<TaskId> = (0..k).map(|i| next_id + i as u32).collect();
+                        if q.push_batch(now, &ids, &d).is_some() {
+                            next_id += k as u32;
+                        }
+                    }
+                    1 => {
+                        let k = g.usize(1, 32);
+                        q.pop_batch(now, k, &mut claimed, &d);
+                    }
+                    _ => {
+                        let k = g.usize(1, 32);
+                        q.steal_batch(now, k, &mut claimed, &d);
+                    }
+                }
+            }
+            // drain the rest
+            q.pop_batch(now, usize::MAX, &mut claimed, &d);
+            claimed.sort_unstable();
+            let expect: Vec<TaskId> = (0..next_id).collect();
+            assert_eq!(claimed, expect, "every pushed ID claimed exactly once");
+        });
+    }
+
+    #[test]
+    fn prop_len_consistent() {
+        Runner::new().cases(100).run("queue-len", |g| {
+            let d = dev();
+            let mut q = TaskQueue::new(32);
+            let mut expected = 0usize;
+            for _ in 0..g.usize(1, 40) {
+                if g.chance(0.5) {
+                    let k = g.usize(1, 4);
+                    if q.push_batch(0, &vec![7; k], &d).is_some() {
+                        expected += k;
+                    }
+                } else {
+                    let mut out = vec![];
+                    let op = if g.chance(0.5) {
+                        q.pop_batch(0, 3, &mut out, &d)
+                    } else {
+                        q.steal_batch(0, 3, &mut out, &d)
+                    };
+                    expected -= op.taken;
+                }
+                assert_eq!(q.len(), expected);
+            }
+        });
+    }
+}

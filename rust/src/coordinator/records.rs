@@ -1,0 +1,260 @@
+//! Task records and the bulk pre-allocated record pool (§4.1).
+//!
+//! GTaP indexes fixed-size task-management storage by *task ID*. Each record
+//! holds (i) the payload (arguments and spilled live values — the task-data
+//! record the compiler laid out) and (ii) scheduling/synchronization
+//! metadata (task function, state, parent/child IDs, pending-children
+//! counter). The pool is bulk-allocated before any task is spawned because
+//! "device-side dynamic allocation inside kernels is limited and often
+//! expensive" — we keep that discipline: all storage lives in flat arrays
+//! sized at `gtap_initialize()` time, and allocation is a free-list pop.
+//!
+//! With `GTAP_ASSUME_NO_TASKWAIT` the child-ID array is not populated
+//! (§ Table 1) — only the live-task accounting needed for termination
+//! remains.
+
+use crate::ir::bytecode::FuncId;
+
+/// Task identifier: an index into the pool.
+pub type TaskId = u32;
+/// Sentinel for "no parent" (the root task).
+pub const NO_TASK: TaskId = u32::MAX;
+
+/// Scheduling/synchronization metadata of one task.
+#[derive(Clone, Debug)]
+pub struct TaskMeta {
+    pub func: FuncId,
+    /// Resumption state (switch selector of §4.2).
+    pub state: u16,
+    pub parent: TaskId,
+    /// Children spawned since the last join epoch.
+    pub num_children: u16,
+    /// Children still running (decremented on child finish).
+    pub pending_children: u16,
+    /// Set between PrepareJoin and re-enqueue: the parent is suspended.
+    pub waiting: bool,
+    /// EPAQ queue chosen at PrepareJoin for the continuation re-enqueue.
+    pub join_queue: u8,
+    /// Finished, record retained so the parent can read the result field.
+    pub done: bool,
+    pub alive: bool,
+}
+
+impl Default for TaskMeta {
+    fn default() -> Self {
+        TaskMeta {
+            func: 0,
+            state: 0,
+            parent: NO_TASK,
+            num_children: 0,
+            pending_children: 0,
+            waiting: false,
+            join_queue: 0,
+            done: false,
+            alive: false,
+        }
+    }
+}
+
+/// Bulk-allocated task-record pool.
+///
+/// Payload words and child-ID slots live in flat arrays
+/// (`capacity × stride`), exactly like the paper's pre-allocated GPU
+/// regions; a record's storage is the slice at `id × stride`.
+pub struct RecordPool {
+    meta: Vec<TaskMeta>,
+    data: Vec<u64>,
+    data_stride: usize,
+    children: Vec<TaskId>,
+    child_stride: usize,
+    free: Vec<TaskId>,
+    /// High-water mark of live records (reported in run stats).
+    peak_live: usize,
+    live: usize,
+}
+
+impl RecordPool {
+    /// `capacity` records, each with `data_words` payload words and
+    /// `max_children` child slots (0 when `GTAP_ASSUME_NO_TASKWAIT`).
+    pub fn new(capacity: usize, data_words: usize, max_children: usize) -> RecordPool {
+        RecordPool {
+            meta: vec![TaskMeta::default(); capacity],
+            data: vec![0; capacity * data_words],
+            data_stride: data_words,
+            children: vec![NO_TASK; capacity * max_children],
+            child_stride: max_children,
+            free: (0..capacity as TaskId).rev().collect(),
+            peak_live: 0,
+            live: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.meta.len()
+    }
+
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    pub fn peak_live(&self) -> usize {
+        self.peak_live
+    }
+
+    pub fn child_capacity(&self) -> usize {
+        self.child_stride
+    }
+
+    /// Allocate a record for a new task. Returns `None` when the pool is
+    /// exhausted (the caller surfaces the Table-1 feasibility error).
+    pub fn alloc(&mut self, func: FuncId, parent: TaskId) -> Option<TaskId> {
+        let id = self.free.pop()?;
+        let m = &mut self.meta[id as usize];
+        debug_assert!(!m.alive, "double allocation of task {id}");
+        *m = TaskMeta {
+            func,
+            parent,
+            alive: true,
+            ..TaskMeta::default()
+        };
+        let base = id as usize * self.data_stride;
+        self.data[base..base + self.data_stride].fill(0);
+        self.live += 1;
+        self.peak_live = self.peak_live.max(self.live);
+        Some(id)
+    }
+
+    /// Release a finished task's record.
+    pub fn free(&mut self, id: TaskId) {
+        let m = &mut self.meta[id as usize];
+        debug_assert!(m.alive, "freeing dead task {id}");
+        m.alive = false;
+        self.live -= 1;
+        self.free.push(id);
+    }
+
+    pub fn meta(&self, id: TaskId) -> &TaskMeta {
+        &self.meta[id as usize]
+    }
+
+    pub fn meta_mut(&mut self, id: TaskId) -> &mut TaskMeta {
+        &mut self.meta[id as usize]
+    }
+
+    /// Task-data payload of `id`.
+    pub fn data(&self, id: TaskId) -> &[u64] {
+        let base = id as usize * self.data_stride;
+        &self.data[base..base + self.data_stride]
+    }
+
+    pub fn data_mut(&mut self, id: TaskId) -> &mut [u64] {
+        let base = id as usize * self.data_stride;
+        &mut self.data[base..base + self.data_stride]
+    }
+
+    /// Record a newly spawned child; returns its slot or `None` when the
+    /// `GTAP_MAX_CHILD_TASKS` bound is exceeded.
+    pub fn push_child(&mut self, parent: TaskId, child: TaskId) -> Option<u16> {
+        let slot = self.meta[parent as usize].num_children;
+        if (slot as usize) >= self.child_stride {
+            return None;
+        }
+        self.children[parent as usize * self.child_stride + slot as usize] = child;
+        let m = &mut self.meta[parent as usize];
+        m.num_children += 1;
+        m.pending_children += 1;
+        Some(slot)
+    }
+
+    /// Child task ID at `slot` of `parent` (valid until the next join epoch).
+    pub fn child(&self, parent: TaskId, slot: u16) -> TaskId {
+        debug_assert!((slot as usize) < self.child_stride);
+        self.children[parent as usize * self.child_stride + slot as usize]
+    }
+
+    /// Reset the child list at a join epoch boundary (after the post-join
+    /// segment consumed the results).
+    pub fn reset_children(&mut self, parent: TaskId) {
+        let m = &mut self.meta[parent as usize];
+        m.num_children = 0;
+        debug_assert_eq!(m.pending_children, 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut p = RecordPool::new(4, 3, 2);
+        let a = p.alloc(0, NO_TASK).unwrap();
+        let b = p.alloc(1, a).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.live(), 2);
+        assert!(p.meta(a).alive);
+        assert_eq!(p.meta(b).parent, a);
+        p.free(b);
+        assert_eq!(p.live(), 1);
+        let c = p.alloc(2, a).unwrap();
+        assert_eq!(c, b, "free list reuses the slot");
+        assert_eq!(p.meta(c).func, 2);
+        assert_eq!(p.meta(c).state, 0, "record reset on reuse");
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut p = RecordPool::new(2, 1, 0);
+        assert!(p.alloc(0, NO_TASK).is_some());
+        assert!(p.alloc(0, NO_TASK).is_some());
+        assert!(p.alloc(0, NO_TASK).is_none());
+    }
+
+    #[test]
+    fn data_isolated_per_record() {
+        let mut p = RecordPool::new(3, 2, 0);
+        let a = p.alloc(0, NO_TASK).unwrap();
+        let b = p.alloc(0, NO_TASK).unwrap();
+        p.data_mut(a)[0] = 11;
+        p.data_mut(b)[0] = 22;
+        assert_eq!(p.data(a)[0], 11);
+        assert_eq!(p.data(b)[0], 22);
+    }
+
+    #[test]
+    fn data_cleared_on_alloc() {
+        let mut p = RecordPool::new(1, 2, 0);
+        let a = p.alloc(0, NO_TASK).unwrap();
+        p.data_mut(a)[1] = 99;
+        p.free(a);
+        let b = p.alloc(0, NO_TASK).unwrap();
+        assert_eq!(p.data(b)[1], 0);
+    }
+
+    #[test]
+    fn children_tracking() {
+        let mut p = RecordPool::new(4, 1, 2);
+        let parent = p.alloc(0, NO_TASK).unwrap();
+        let c0 = p.alloc(0, parent).unwrap();
+        let c1 = p.alloc(0, parent).unwrap();
+        assert_eq!(p.push_child(parent, c0), Some(0));
+        assert_eq!(p.push_child(parent, c1), Some(1));
+        assert_eq!(p.child(parent, 0), c0);
+        assert_eq!(p.child(parent, 1), c1);
+        assert_eq!(p.meta(parent).pending_children, 2);
+        // GTAP_MAX_CHILD_TASKS exceeded
+        let c2 = p.alloc(0, parent).unwrap();
+        assert_eq!(p.push_child(parent, c2), None);
+    }
+
+    #[test]
+    fn peak_live_tracks_high_water() {
+        let mut p = RecordPool::new(8, 1, 0);
+        let ids: Vec<_> = (0..5).map(|_| p.alloc(0, NO_TASK).unwrap()).collect();
+        for id in &ids {
+            p.free(*id);
+        }
+        p.alloc(0, NO_TASK).unwrap();
+        assert_eq!(p.peak_live(), 5);
+    }
+}

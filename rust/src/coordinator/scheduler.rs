@@ -1,0 +1,627 @@
+//! The persistent-kernel scheduler: GTaP's execution engine on the
+//! discrete-event simulator.
+//!
+//! Every worker (a warp for thread-level granularity, a thread block for
+//! block-level, a core on the CPU device) is an actor with its own clock.
+//! The engine always advances the globally-earliest worker, which preserves
+//! causality across queues (a steal at time *t* can only see pushes that
+//! happened before *t*).
+//!
+//! One persistent-kernel iteration of a thread-level worker (§4.3.2):
+//!
+//! 1. Select an EPAQ queue in round-robin order from the previously used
+//!    one (§4.4) and *PopBatch* up to 32 task IDs; if empty, try the other
+//!    queues, then *StealBatch* from random victims; if still empty, back
+//!    off exponentially (idle).
+//! 2. Execute the claimed tasks, one per lane. Lanes run the per-lane
+//!    interpreter; the warp's cost is the divergence-serialized combination
+//!    (`sim::divergence`). Payload calls may suspend for batched XLA
+//!    execution.
+//! 3. Apply effects: allocate and enqueue children (keeping up to a warp's
+//!    worth for immediate execution, pushing the rest — batched pushes),
+//!    process joins and finishes, re-enqueue satisfied continuations.
+//!
+//! SM issue bandwidth: each SM sustains `issue_warps` warp-instructions per
+//! cycle; a worker's iteration start is delayed behind its SM's issue
+//! backlog, so resident warps beyond the issue width only help hide
+//! latency — exactly the occupancy behaviour of §2.3.1.
+
+use super::config::{Granularity, GtapConfig};
+use super::join::{self, FinishEffect};
+use super::policy::QueueSet;
+use super::records::{RecordPool, TaskId, NO_TASK};
+use crate::ir::bytecode::Module;
+use crate::ir::types::Value;
+use crate::sim::config::DeviceSpec;
+use crate::sim::divergence::{self, LanePath};
+use crate::sim::interp::{Interp, LaneFrame, SegmentEnd, SegmentOutput, StepResult};
+use crate::sim::memory::Memory;
+use crate::sim::profile::{Profiler, TimelineEvent};
+use crate::util::prng::Prng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Random victims probed per idle iteration before backing off.
+const STEAL_TRIES: usize = 4;
+/// Idle backoff floor cap in cycles. Persistent kernels poll continuously;
+/// to keep the simulation's event count finite, idle workers poll at an
+/// exponentially decaying rate, capped at the larger of this constant and
+/// elapsed/32 — so a worker's wake-up latency is bounded by ~3% of the
+/// run's elapsed time (a documented, bounded distortion).
+const MAX_BACKOFF: u64 = 4096;
+
+/// One lane's payload request awaiting the AOT kernel.
+#[derive(Clone, Copy, Debug)]
+pub struct PayloadReq {
+    pub seed: i64,
+    pub mem_ops: i64,
+    pub compute_iters: i64,
+}
+
+/// Executes batched `do_memory_and_compute` payloads. Implemented by
+/// `runtime::XlaPayloadEngine` (PJRT, the AOT Pallas kernel) and by the
+/// native fallback used in large sweeps.
+pub trait PayloadEngine {
+    /// Compute results for `reqs`, appending to `out` in order.
+    fn execute(&mut self, reqs: &[PayloadReq], out: &mut Vec<f64>);
+    fn name(&self) -> &'static str;
+}
+
+/// Run statistics.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    /// Makespan in device cycles (including startup).
+    pub cycles: u64,
+    /// Makespan in seconds.
+    pub seconds: f64,
+    /// Tasks that ran to completion.
+    pub tasks_finished: u64,
+    /// State-machine segments executed.
+    pub segments: u64,
+    pub spawns: u64,
+    pub steals_ok: u64,
+    pub steal_attempts: u64,
+    pub pops: u64,
+    pub pushes: u64,
+    /// Worker iterations (incl. idle ones).
+    pub iterations: u64,
+    /// Result value of the root task (non-void entry functions).
+    pub root_result: Option<Value>,
+    pub idle_iterations: u64,
+    pub peak_live_records: usize,
+    /// Captured print_int/print_float output.
+    pub output: Vec<String>,
+}
+
+struct WorkerState {
+    rr_queue: usize,
+    backoff: u64,
+    immediate: Vec<TaskId>,
+    rng: Prng,
+    sm: usize,
+}
+
+/// The scheduler for one run.
+pub struct Scheduler<'a> {
+    pub module: &'a Module,
+    pub cfg: &'a GtapConfig,
+    pub dev: &'a DeviceSpec,
+    pub queues: QueueSet,
+    pub records: RecordPool,
+    workers: Vec<WorkerState>,
+    /// Workers resident on each SM (victim candidates for hierarchical
+    /// stealing).
+    sm_peers: Vec<Vec<usize>>,
+    sm_ready: Vec<u64>,
+    live_tasks: u64,
+    stats: RunStats,
+    frames: Vec<LaneFrame>,
+    batch_max: usize,
+    root: TaskId,
+    // --- reusable hot-path scratch (no allocation per iteration) ---
+    scratch_batch: Vec<TaskId>,
+    scratch_outputs: Vec<Option<SegmentOutput>>,
+    scratch_states: Vec<u16>,
+    scratch_lanes: Vec<LanePath>,
+    scratch_spawned: Vec<Vec<TaskId>>,
+    scratch_conts: Vec<(TaskId, u8)>,
+}
+
+impl<'a> Scheduler<'a> {
+    pub fn new(module: &'a Module, cfg: &'a GtapConfig, dev: &'a DeviceSpec) -> Result<Scheduler<'a>> {
+        cfg.validate().map_err(|e| anyhow!(e))?;
+        let data_words = module
+            .funcs
+            .iter()
+            .map(|f| f.layout.words())
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let child_cap = if cfg.assume_no_taskwait {
+            0
+        } else {
+            let hint = module
+                .funcs
+                .iter()
+                .map(|f| f.max_children_hint as usize)
+                .max()
+                .unwrap_or(0);
+            if hint == u16::MAX as usize {
+                cfg.max_child_tasks
+            } else {
+                hint.min(cfg.max_child_tasks).max(1)
+            }
+        };
+        if cfg.assume_no_taskwait {
+            if let Some(f) = module.funcs.iter().find(|f| f.has_taskwait) {
+                bail!(
+                    "GTAP_ASSUME_NO_TASKWAIT set, but task function {:?} contains \
+                     taskwait (Table 1: only safe for programs that never taskwait)",
+                    f.name
+                );
+            }
+        }
+        if cfg.granularity == Granularity::Thread {
+            if let Some(f) = module.funcs.iter().find(|f| f.uses_parfor) {
+                bail!(
+                    "task function {:?} uses parallel_for, which requires \
+                     block-level workers (§5.1.3)",
+                    f.name
+                );
+            }
+        }
+        let n_workers = cfg.num_workers();
+        let batch_max = match cfg.granularity {
+            Granularity::Thread => dev.warp_width,
+            Granularity::Block => 1,
+        };
+        let warps_per_block = cfg.warps_per_block().max(1);
+        let workers: Vec<WorkerState> = (0..n_workers)
+            .map(|w| {
+                let block = match cfg.granularity {
+                    Granularity::Thread => w / warps_per_block,
+                    Granularity::Block => w,
+                };
+                WorkerState {
+                    rr_queue: 0,
+                    backoff: 0,
+                    immediate: Vec::with_capacity(batch_max),
+                    rng: Prng::stream(cfg.seed, w as u64),
+                    sm: block % dev.sms,
+                }
+            })
+            .collect();
+        // The record pool: sized from per-worker capacity with a generous
+        // floor (the global-queue baseline expands breadth-first and holds
+        // whole tree frontiers live) and a cap to keep host memory sane.
+        // Exhaustion is reported as the Table-1 feasibility error.
+        let pool_cap = (n_workers * cfg.queue_capacity()).clamp(1 << 20, 1 << 22);
+        let mut sm_peers = vec![Vec::new(); dev.sms];
+        for (i, ws) in workers.iter().enumerate() {
+            sm_peers[ws.sm].push(i);
+        }
+        Ok(Scheduler {
+            module,
+            cfg,
+            dev,
+            queues: QueueSet::for_config(cfg),
+            records: RecordPool::new(pool_cap, data_words, child_cap),
+            workers,
+            sm_peers,
+            sm_ready: vec![0; dev.sms],
+            live_tasks: 0,
+            stats: RunStats::default(),
+            frames: (0..batch_max).map(|_| LaneFrame::new()).collect(),
+            batch_max,
+            root: NO_TASK,
+            scratch_batch: Vec::with_capacity(batch_max),
+            scratch_outputs: Vec::with_capacity(batch_max),
+            scratch_states: Vec::with_capacity(batch_max),
+            scratch_lanes: Vec::with_capacity(batch_max),
+            scratch_spawned: (0..cfg.num_queues).map(|_| Vec::new()).collect(),
+            scratch_conts: Vec::new(),
+        })
+    }
+
+    /// Spawn the root task (the `#pragma gtap entry` of Program 4).
+    pub fn spawn_root(&mut self, func_name: &str, args: &[Value]) -> Result<()> {
+        let fid = self
+            .module
+            .func_id(func_name)
+            .with_context(|| format!("no task function named {func_name:?}"))?;
+        let fc = self.module.func(fid);
+        if args.len() != fc.layout.num_args() {
+            bail!(
+                "{func_name:?} takes {} arguments, got {}",
+                fc.layout.num_args(),
+                args.len()
+            );
+        }
+        let id = self
+            .records
+            .alloc(fid, NO_TASK)
+            .context("record pool exhausted at root spawn")?;
+        for (i, a) in args.iter().enumerate() {
+            self.records.data_mut(id)[i] = a.0;
+        }
+        self.live_tasks += 1;
+        self.root = id;
+        self.workers[0].immediate.push(id);
+        Ok(())
+    }
+
+    /// Run the persistent kernel to quiescence.
+    pub fn run(
+        &mut self,
+        mem: &mut Memory,
+        engine: Option<&mut dyn PayloadEngine>,
+        profiler: &mut Profiler,
+    ) -> Result<RunStats> {
+        let mut engine: Option<&mut dyn PayloadEngine> = engine;
+        let mut heap: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::new();
+        let t0 = self.dev.startup;
+        for w in 0..self.workers.len() {
+            heap.push(Reverse((t0, w as u32)));
+        }
+        let mut makespan = t0;
+        let mut log: Vec<String> = Vec::new();
+        while self.live_tasks > 0 {
+            let Reverse((now, w)) = heap.pop().context("scheduler starved with live tasks")?;
+            // fresh reborrow of the engine for this iteration
+            let eng: Option<&mut dyn PayloadEngine> = match engine {
+                Some(ref mut e) => Some(&mut **e),
+                None => None,
+            };
+            let dur = self
+                .worker_iteration(w as usize, now, mem, eng, profiler, &mut log)?
+                .max(1);
+            makespan = makespan.max(now + dur);
+            if self.live_tasks == 0 {
+                break;
+            }
+            heap.push(Reverse((now + dur, w)));
+        }
+        let mut stats = std::mem::take(&mut self.stats);
+        stats.cycles = makespan;
+        stats.seconds = self.dev.seconds(makespan);
+        stats.peak_live_records = self.records.peak_live();
+        stats.output = log;
+        Ok(stats)
+    }
+
+    /// One persistent-kernel iteration. Returns its duration in cycles.
+    fn worker_iteration(
+        &mut self,
+        w: usize,
+        now: u64,
+        mem: &mut Memory,
+        mut engine: Option<&mut dyn PayloadEngine>,
+        profiler: &mut Profiler,
+        log: &mut Vec<String>,
+    ) -> Result<u64> {
+        self.stats.iterations += 1;
+        let dev = self.dev;
+        let nq = self.cfg.num_queues;
+        let mut cost = dev.loop_overhead;
+        let mut batch = std::mem::take(&mut self.scratch_batch);
+        batch.clear();
+
+        // -- 1. acquire work ------------------------------------------------
+        if !self.workers[w].immediate.is_empty() {
+            batch.append(&mut self.workers[w].immediate);
+        } else {
+            // EPAQ round-robin over own queues, starting after the last used
+            for k in 0..nq {
+                let q = (self.workers[w].rr_queue + k) % nq;
+                let op = self.queues.pop(w, q, now + cost, self.batch_max, &mut batch, dev);
+                cost += op.cycles;
+                self.stats.pops += 1;
+                if op.taken > 0 {
+                    self.workers[w].rr_queue = q;
+                    break;
+                }
+            }
+            // work stealing: random victims, optionally probing same-SM
+            // neighbours first (hierarchical stealing, paper §7)
+            if batch.is_empty() && self.queues.supports_steal() && self.workers.len() > 1 {
+                let n_workers = self.workers.len();
+                let steal_max = self.cfg.steal_max.unwrap_or(self.batch_max).max(1);
+                for attempt in 0..STEAL_TRIES {
+                    let local_first =
+                        self.cfg.locality_aware_steal && attempt < STEAL_TRIES / 2;
+                    let victim = if local_first && self.sm_peers[self.workers[w].sm].len() > 1
+                    {
+                        let peers = &self.sm_peers[self.workers[w].sm];
+                        let ws = &mut self.workers[w];
+                        loop {
+                            let v = peers[ws.rng.below_usize(peers.len())];
+                            if v != w {
+                                break v;
+                            }
+                        }
+                    } else {
+                        let ws = &mut self.workers[w];
+                        let mut v = ws.rng.below_usize(n_workers - 1);
+                        if v >= w {
+                            v += 1;
+                        }
+                        v
+                    };
+                    let q = self.workers[w].rr_queue;
+                    self.stats.steal_attempts += 1;
+                    let op =
+                        self.queues
+                            .steal(victim, q, now + cost, steal_max, &mut batch, dev);
+                    // intra-SM steals stay within one L2 slice: cheaper
+                    let same_sm = self.workers[victim].sm == self.workers[w].sm;
+                    cost += if self.cfg.locality_aware_steal && same_sm {
+                        op.cycles * 6 / 10
+                    } else {
+                        op.cycles
+                    };
+                    if op.taken > 0 {
+                        self.stats.steals_ok += 1;
+                        break;
+                    }
+                    // rotate the EPAQ cursor so the next try probes another
+                    // queue class too
+                    if nq > 1 {
+                        self.workers[w].rr_queue = (q + 1) % nq;
+                    }
+                }
+            }
+        }
+
+        if batch.is_empty() {
+            self.scratch_batch = batch;
+            self.stats.idle_iterations += 1;
+            let elapsed_cap = MAX_BACKOFF.max((now.saturating_sub(dev.startup)) / 32);
+            let ws = &mut self.workers[w];
+            ws.backoff = (ws.backoff * 2).clamp(dev.loop_overhead * 4, elapsed_cap);
+            let dur = cost + ws.backoff;
+            profiler.record(TimelineEvent {
+                worker: w as u32,
+                start: now,
+                busy: 0,
+                overhead: dur,
+                active_lanes: 0,
+                path_groups: 0,
+            });
+            return Ok(dur);
+        }
+        self.workers[w].backoff = 0;
+
+        // -- 2. execute the batch (one task per lane) -----------------------
+        let block_width = match self.cfg.granularity {
+            Granularity::Thread => 1,
+            Granularity::Block => self.cfg.block_size as u32,
+        };
+        let interp = Interp {
+            module: self.module,
+            dev,
+            block_width,
+            xla_payload: engine.is_some(),
+        };
+        let mut outputs = std::mem::take(&mut self.scratch_outputs);
+        outputs.clear();
+        outputs.resize(batch.len(), None);
+        let mut entry_states = std::mem::take(&mut self.scratch_states);
+        entry_states.clear();
+        let mut pending: Vec<(usize, PayloadReq)> = Vec::new();
+        for (i, &task) in batch.iter().enumerate() {
+            let meta = self.records.meta(task);
+            let (func, state) = (meta.func, meta.state);
+            entry_states.push(state);
+            let frame = &mut self.frames[i];
+            frame.reset(self.module, task, func, state, i as u32);
+            match interp.run(frame, mem, &mut self.records, log) {
+                StepResult::Done(o) => outputs[i] = Some(o),
+                StepResult::NeedPayload {
+                    seed,
+                    mem_ops,
+                    compute_iters,
+                } => pending.push((
+                    i,
+                    PayloadReq {
+                        seed,
+                        mem_ops,
+                        compute_iters,
+                    },
+                )),
+            }
+        }
+        // payload rounds: batch all suspended lanes through the engine
+        while !pending.is_empty() {
+            let engine = engine
+                .as_deref_mut()
+                .expect("suspension implies an engine");
+            let reqs: Vec<PayloadReq> = pending.iter().map(|(_, r)| *r).collect();
+            let mut vals = Vec::with_capacity(reqs.len());
+            engine.execute(&reqs, &mut vals);
+            debug_assert_eq!(vals.len(), reqs.len());
+            let mut next = Vec::new();
+            for ((i, _), val) in pending.into_iter().zip(vals) {
+                let frame = &mut self.frames[i];
+                match interp.resume_payload(frame, val, mem, &mut self.records, log) {
+                    StepResult::Done(o) => outputs[i] = Some(o),
+                    StepResult::NeedPayload {
+                        seed,
+                        mem_ops,
+                        compute_iters,
+                    } => next.push((
+                        i,
+                        PayloadReq {
+                            seed,
+                            mem_ops,
+                            compute_iters,
+                        },
+                    )),
+                }
+            }
+            pending = next;
+        }
+        self.stats.segments += outputs.len() as u64;
+
+        // divergence-serialized warp execution cost
+        let mut lanes = std::mem::take(&mut self.scratch_lanes);
+        lanes.clear();
+        lanes.extend(outputs.iter().map(|o| {
+            let o = o.as_ref().unwrap();
+            LanePath {
+                hash: o.path,
+                cycles: o.cycles,
+            }
+        }));
+        let exec_cycles = divergence::warp_cycles(&lanes);
+        let groups = divergence::path_groups(&lanes);
+        self.scratch_lanes = lanes;
+        cost += exec_cycles;
+
+        // -- 3. apply effects ----------------------------------------------
+        // spawned children grouped by EPAQ queue index
+        let mut spawned = std::mem::take(&mut self.scratch_spawned);
+        for q in spawned.iter_mut() {
+            q.clear();
+        }
+        // continuations to re-enqueue: (task, queue)
+        let mut continuations = std::mem::take(&mut self.scratch_conts);
+        continuations.clear();
+        for (i, out) in outputs.iter().enumerate() {
+            let out = out.as_ref().unwrap();
+            let task = batch[i];
+            if entry_states[i] > 0 && !self.cfg.assume_no_taskwait {
+                join::release_joined_children(&mut self.records, task);
+            }
+            for s in self.frames[i].spawns() {
+                let child = self.records.alloc(s.func, task).with_context(|| {
+                    format!(
+                        "task-record pool exhausted ({} records); raise \
+                         GTAP_MAX_TASKS_PER_{{WARP,BLOCK}}",
+                        self.records.capacity()
+                    )
+                })?;
+                let child_data = self.records.data_mut(child);
+                child_data[..s.argc as usize].copy_from_slice(&s.args[..s.argc as usize]);
+                if !self.cfg.assume_no_taskwait {
+                    self.records.push_child(task, child).with_context(|| {
+                        format!(
+                            "GTAP_MAX_CHILD_TASKS={} exceeded by {:?}",
+                            self.records.child_capacity(),
+                            self.module.func(self.records.meta(task).func).name
+                        )
+                    })?;
+                }
+                self.live_tasks += 1;
+                self.stats.spawns += 1;
+                let q = (s.queue as usize).min(nq - 1);
+                spawned[q].push(child);
+            }
+            match out.end {
+                SegmentEnd::Join { next_state, queue } => {
+                    let (resume_now, c) =
+                        join::prepare_join(&mut self.records, task, next_state, queue, dev);
+                    cost += c;
+                    if resume_now {
+                        continuations.push((task, queue));
+                    }
+                }
+                SegmentEnd::Finish => {
+                    if task == self.root {
+                        let fc = self.module.func(self.records.meta(task).func);
+                        if let Some(off) = fc.layout.result_offset() {
+                            self.stats.root_result =
+                                Some(Value(self.records.data(task)[off as usize]));
+                        }
+                    }
+                    let (eff, c) = join::finish_task(
+                        &mut self.records,
+                        task,
+                        self.cfg.assume_no_taskwait,
+                        dev,
+                    );
+                    cost += c;
+                    self.stats.tasks_finished += 1;
+                    self.live_tasks -= 1;
+                    if let FinishEffect::ResumeParent { parent, queue } = eff {
+                        continuations.push((parent, queue));
+                    }
+                }
+            }
+        }
+
+        // -- 4. distribute new work -----------------------------------------
+        // keep up to a batch of same-queue-class children for immediate
+        // execution (§4.3.2); push the rest, batched per queue index
+        if !self.cfg.immediate_buffer {
+            // ablation: every child goes through the deque
+        } else if let Some(best_q) = (0..nq).max_by_key(|&q| spawned[q].len()) {
+            if !spawned[best_q].is_empty() {
+                let keep = spawned[best_q].len().min(self.batch_max);
+                let kept: Vec<TaskId> = spawned[best_q].drain(..keep).collect();
+                self.workers[w].immediate.extend(kept);
+                if nq > 1 {
+                    self.workers[w].rr_queue = best_q;
+                }
+            }
+        }
+        for (q, ids) in spawned.iter().enumerate() {
+            if ids.is_empty() {
+                continue;
+            }
+            let op = self
+                .queues
+                .push(w, q, now + cost, ids, dev)
+                .with_context(|| {
+                    format!(
+                        "task queue overflow (worker {w}, queue {q}): raise \
+                         GTAP_MAX_TASKS_PER_{{WARP,BLOCK}}"
+                    )
+                })?;
+            cost += op.cycles;
+            self.stats.pushes += 1;
+        }
+        for &(task, queue) in continuations.iter() {
+            let q = (queue as usize).min(nq - 1);
+            let op = self
+                .queues
+                .push(w, q, now + cost, &[task], dev)
+                .context("task queue overflow re-enqueuing a continuation")?;
+            cost += op.cycles;
+            self.stats.pushes += 1;
+        }
+
+        let batch_len = batch.len();
+        // restore scratch buffers for the next iteration
+        self.scratch_batch = batch;
+        self.scratch_outputs = outputs;
+        self.scratch_states = entry_states;
+        self.scratch_spawned = spawned;
+        self.scratch_conts = continuations;
+
+        // -- 5. SM issue accounting + profiling ------------------------------
+        let sm = self.workers[w].sm;
+        let issue_demand = match self.cfg.granularity {
+            Granularity::Thread => exec_cycles,
+            Granularity::Block => exec_cycles * self.cfg.warps_per_block() as u64,
+        };
+        let start = now.max(self.sm_ready[sm]);
+        let stall = start - now;
+        self.sm_ready[sm] = start + issue_demand / dev.issue_warps as u64;
+        let dur = cost + stall;
+
+        profiler.record(TimelineEvent {
+            worker: w as u32,
+            start: now,
+            busy: exec_cycles,
+            overhead: dur - exec_cycles,
+            active_lanes: batch_len as u8,
+            path_groups: groups as u8,
+        });
+        Ok(dur)
+    }
+
+    pub fn live_tasks(&self) -> u64 {
+        self.live_tasks
+    }
+}

@@ -1,0 +1,325 @@
+//! The host-facing API — `gtap_initialize()` / kernel launch /
+//! `gtap_finalize()` of Program 4, as a safe Rust session object.
+//!
+//! ```no_run
+//! use gtap::coordinator::{GtapConfig, Session};
+//! use gtap::ir::types::Value;
+//! use gtap::sim::DeviceSpec;
+//!
+//! let src = r#"
+//!     #pragma gtap function
+//!     int fib(int n) {
+//!         if (n < 2) return n;
+//!         int a; int b;
+//!         #pragma gtap task
+//!         a = fib(n - 1);
+//!         #pragma gtap task
+//!         b = fib(n - 2);
+//!         #pragma gtap taskwait
+//!         return a + b;
+//!     }
+//! "#;
+//! let mut sess = Session::compile(src, GtapConfig::default(), DeviceSpec::h100()).unwrap();
+//! let stats = sess.run("fib", &[Value::from_i64(20)]).unwrap();
+//! assert_eq!(stats.root_result.unwrap().as_i64(), 6765);
+//! ```
+
+use super::config::GtapConfig;
+use super::scheduler::{PayloadEngine, RunStats, Scheduler};
+use crate::compiler;
+use crate::ir::bytecode::Module;
+use crate::ir::types::Value;
+use crate::sim::config::DeviceSpec;
+use crate::sim::memory::Memory;
+use crate::sim::profile::Profiler;
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled GTaP program bound to a device and configuration, with its
+/// simulated global memory. Memory persists across runs (so the host can
+/// set up arrays, run, and read results back); each `run` gets fresh
+/// task-management state, like a kernel launch.
+pub struct Session {
+    pub module: Module,
+    pub config: GtapConfig,
+    pub device: DeviceSpec,
+    pub memory: Memory,
+}
+
+impl Session {
+    /// Compile GTaP-C source and initialize the runtime (pool sizing
+    /// happens per-run; global scalars are allocated here).
+    pub fn compile(source: &str, config: GtapConfig, device: DeviceSpec) -> Result<Session> {
+        config.validate().map_err(|e| anyhow!(e))?;
+        let module = compiler::compile(source, config.max_task_data_size)
+            .map_err(|e| anyhow!("{e}"))?;
+        let memory = Memory::new(module.globals_words());
+        Ok(Session {
+            module,
+            config,
+            device,
+            memory,
+        })
+    }
+
+    /// Build a session from an already-compiled module.
+    pub fn from_module(module: Module, config: GtapConfig, device: DeviceSpec) -> Result<Session> {
+        config.validate().map_err(|e| anyhow!(e))?;
+        let memory = Memory::new(module.globals_words());
+        Ok(Session {
+            module,
+            config,
+            device,
+            memory,
+        })
+    }
+
+    /// Host-side array allocation (word-addressed; see `sim::memory`).
+    pub fn alloc(&mut self, words: u64) -> u64 {
+        self.memory.alloc(words)
+    }
+
+    /// Write a global scalar by name.
+    pub fn set_global(&mut self, name: &str, v: Value) -> Result<()> {
+        let addr = self
+            .module
+            .global_addr(name)
+            .with_context(|| format!("no global named {name:?}"))?;
+        self.memory.store(addr, v.0);
+        Ok(())
+    }
+
+    /// Read a global scalar by name.
+    pub fn get_global(&self, name: &str) -> Result<Value> {
+        let addr = self
+            .module
+            .global_addr(name)
+            .with_context(|| format!("no global named {name:?}"))?;
+        Ok(Value(self.memory.load(addr)))
+    }
+
+    /// Run `entry(args…)` to quiescence with default instrumentation.
+    pub fn run(&mut self, entry: &str, args: &[Value]) -> Result<RunStats> {
+        let mut profiler = Profiler::disabled();
+        self.run_with(entry, args, None, &mut profiler)
+    }
+
+    /// Run with an optional XLA payload engine and a profiler.
+    pub fn run_with(
+        &mut self,
+        entry: &str,
+        args: &[Value],
+        engine: Option<&mut dyn PayloadEngine>,
+        profiler: &mut Profiler,
+    ) -> Result<RunStats> {
+        let mut sched = Scheduler::new(&self.module, &self.config, &self.device)?;
+        sched.spawn_root(entry, args)?;
+        sched.run(&mut self.memory, engine, profiler)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{Granularity, SchedulerKind};
+
+    const FIB: &str = r#"
+        #pragma gtap function
+        int fib(int n) {
+            if (n < 2) return n;
+            int a; int b;
+            #pragma gtap task
+            a = fib(n - 1);
+            #pragma gtap task
+            b = fib(n - 2);
+            #pragma gtap taskwait
+            return a + b;
+        }
+    "#;
+
+    fn small_cfg() -> GtapConfig {
+        GtapConfig {
+            grid_size: 4,
+            block_size: 32,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fib_end_to_end_gpu() {
+        let mut s = Session::compile(FIB, small_cfg(), DeviceSpec::h100()).unwrap();
+        let stats = s.run("fib", &[Value::from_i64(12)]).unwrap();
+        assert_eq!(stats.root_result.unwrap().as_i64(), 144);
+        // fib(12) spawns 2*(fib-tree internal nodes) children
+        assert!(stats.tasks_finished > 100, "{stats:?}");
+        assert_eq!(stats.tasks_finished, stats.spawns + 1);
+        assert!(stats.cycles > DeviceSpec::h100().startup);
+    }
+
+    #[test]
+    fn fib_end_to_end_cpu_device() {
+        let cfg = GtapConfig {
+            grid_size: 72,
+            block_size: 32,
+            ..Default::default()
+        };
+        let mut s = Session::compile(FIB, cfg, DeviceSpec::grace72()).unwrap();
+        let stats = s.run("fib", &[Value::from_i64(11)]).unwrap();
+        assert_eq!(stats.root_result.unwrap().as_i64(), 89);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut s = Session::compile(FIB, small_cfg(), DeviceSpec::h100()).unwrap();
+            s.run("fib", &[Value::from_i64(10)]).unwrap().cycles
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn all_schedulers_agree_on_result() {
+        for kind in [
+            SchedulerKind::WorkStealing,
+            SchedulerKind::GlobalQueue,
+            SchedulerKind::SequentialChaseLev,
+        ] {
+            let cfg = GtapConfig {
+                scheduler: kind,
+                ..small_cfg()
+            };
+            let mut s = Session::compile(FIB, cfg, DeviceSpec::h100()).unwrap();
+            let stats = s.run("fib", &[Value::from_i64(11)]).unwrap();
+            assert_eq!(stats.root_result.unwrap().as_i64(), 89, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn epaq_queues_preserve_semantics() {
+        let src = r#"
+            #pragma gtap function
+            int fib(int n) {
+                if (n < 2) return n;
+                int a; int b;
+                #pragma gtap task queue((n - 1) < 2 ? 1 : 0)
+                a = fib(n - 1);
+                #pragma gtap task queue((n - 2) < 2 ? 1 : 0)
+                b = fib(n - 2);
+                #pragma gtap taskwait queue(2)
+                return a + b;
+            }
+        "#;
+        let cfg = GtapConfig {
+            num_queues: 3,
+            ..small_cfg()
+        };
+        let mut s = Session::compile(src, cfg, DeviceSpec::h100()).unwrap();
+        let stats = s.run("fib", &[Value::from_i64(13)]).unwrap();
+        assert_eq!(stats.root_result.unwrap().as_i64(), 233);
+    }
+
+    #[test]
+    fn globals_and_memory_roundtrip() {
+        let src = r#"
+            global int g_sum;
+            #pragma gtap function
+            void acc(ptr p, int n) {
+                int i = 0;
+                int s = 0;
+                while (i < n) { s = s + p[i]; i = i + 1; }
+                g_sum = s;
+            }
+        "#;
+        let mut s = Session::compile(src, small_cfg(), DeviceSpec::h100()).unwrap();
+        let p = s.alloc(4);
+        s.memory.write_i64s(p, &[1, 2, 3, 4]);
+        s.run("acc", &[Value(p), Value::from_i64(4)]).unwrap();
+        assert_eq!(s.get_global("g_sum").unwrap().as_i64(), 10);
+    }
+
+    #[test]
+    fn print_output_captured() {
+        let src = "#pragma gtap function\nvoid f(int n) { print_int(n * 2); }";
+        let mut s = Session::compile(src, small_cfg(), DeviceSpec::h100()).unwrap();
+        let stats = s.run("f", &[Value::from_i64(21)]).unwrap();
+        assert_eq!(stats.output, vec!["42"]);
+    }
+
+    #[test]
+    fn block_level_parfor_runs() {
+        let src = r#"
+            global int g_total;
+            #pragma gtap function
+            void scan(ptr p, int n) {
+                parallel_for (i in 0..n) {
+                    atomic_add(p + n, p[i]);
+                }
+            }
+        "#;
+        let cfg = GtapConfig {
+            granularity: Granularity::Block,
+            grid_size: 4,
+            block_size: 64,
+            ..Default::default()
+        };
+        let mut s = Session::compile(src, cfg, DeviceSpec::h100()).unwrap();
+        let p = s.alloc(5);
+        s.memory.write_i64s(p, &[1, 2, 3, 4, 0]);
+        s.run("scan", &[Value(p), Value::from_i64(4)]).unwrap();
+        assert_eq!(s.memory.read_i64s(p + 4, 1), vec![10]);
+    }
+
+    #[test]
+    fn parfor_on_thread_level_rejected() {
+        let src = "#pragma gtap function\nvoid f(int n) { parallel_for (i in 0..n) { print_int(i); } }";
+        let mut s = Session::compile(src, small_cfg(), DeviceSpec::h100()).unwrap();
+        let err = s.run("f", &[Value::from_i64(4)]).unwrap_err();
+        assert!(err.to_string().contains("block-level"), "{err}");
+    }
+
+    #[test]
+    fn assume_no_taskwait_rejected_when_taskwait_present() {
+        let cfg = GtapConfig {
+            assume_no_taskwait: true,
+            ..small_cfg()
+        };
+        let mut s = Session::compile(FIB, cfg, DeviceSpec::h100()).unwrap();
+        let err = s.run("fib", &[Value::from_i64(5)]).unwrap_err();
+        assert!(err.to_string().contains("ASSUME_NO_TASKWAIT"), "{err}");
+    }
+
+    #[test]
+    fn assume_no_taskwait_mode_runs_spawn_only_programs() {
+        let src = r#"
+            global int g_count;
+            #pragma gtap function
+            void walk(int depth) {
+                if (depth > 0) {
+                    #pragma gtap task
+                    walk(depth - 1);
+                    #pragma gtap task
+                    walk(depth - 1);
+                }
+                g_count = g_count + 0; // touch the global
+            }
+        "#;
+        let cfg = GtapConfig {
+            assume_no_taskwait: true,
+            ..small_cfg()
+        };
+        let mut s = Session::compile(src, cfg, DeviceSpec::h100()).unwrap();
+        let stats = s.run("walk", &[Value::from_i64(6)]).unwrap();
+        assert_eq!(stats.tasks_finished, 127, "2^7 - 1 tasks");
+    }
+
+    #[test]
+    fn unknown_entry_rejected() {
+        let mut s = Session::compile(FIB, small_cfg(), DeviceSpec::h100()).unwrap();
+        assert!(s.run("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let mut s = Session::compile(FIB, small_cfg(), DeviceSpec::h100()).unwrap();
+        assert!(s.run("fib", &[]).is_err());
+    }
+}

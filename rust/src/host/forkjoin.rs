@@ -1,0 +1,149 @@
+//! A real-thread fork-join executor: the OpenMP-task spawning pattern with
+//! scoped threads and a parallelism-depth cap (spawn real threads for the
+//! top `lg(threads)` levels of the recursion, run sequentially below).
+//!
+//! On this container (1 core) it validates that the parallel decompositions
+//! are data-race free under real threading; on a many-core host it is a
+//! usable `omp task`-style baseline.
+
+/// Run two independent closures, possibly in parallel. `depth_budget`
+/// counts remaining fork levels; at 0 both run inline.
+pub fn join2<A: Send, B: Send>(
+    depth_budget: u32,
+    a: impl FnOnce(u32) -> A + Send,
+    b: impl FnOnce(u32) -> B + Send,
+) -> (A, B) {
+    if depth_budget == 0 {
+        (a(0), b(0))
+    } else {
+        let next = depth_budget - 1;
+        std::thread::scope(|s| {
+            let hb = s.spawn(move || b(next));
+            let ra = a(next);
+            (ra, hb.join().expect("forked task panicked"))
+        })
+    }
+}
+
+/// Fork budget giving ~`threads` concurrent leaves.
+pub fn budget_for_threads(threads: usize) -> u32 {
+    (usize::BITS - threads.max(1).leading_zeros()).max(1)
+}
+
+/// Parallel fib via fork-join (validation workload).
+pub fn fib(n: i64, budget: u32) -> i64 {
+    if n < 2 {
+        return n;
+    }
+    if budget == 0 {
+        return super::seq::fib(n);
+    }
+    let (a, b) = join2(budget, |d| fib(n - 1, d), |d| fib(n - 2, d));
+    a + b
+}
+
+/// Parallel mergesort via fork-join.
+pub fn mergesort(xs: &mut [i64], cutoff: usize, budget: u32) {
+    let n = xs.len();
+    if n <= cutoff || budget == 0 {
+        super::seq::mergesort(xs, cutoff);
+        return;
+    }
+    let mid = n / 2;
+    {
+        let (a, b) = xs.split_at_mut(mid);
+        join2(
+            budget,
+            move |d| mergesort(a, cutoff, d),
+            move |d| mergesort(b, cutoff, d),
+        );
+    }
+    let mut merged = Vec::with_capacity(n);
+    {
+        let (a, b) = xs.split_at(mid);
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() && j < b.len() {
+            if a[i] <= b[j] {
+                merged.push(a[i]);
+                i += 1;
+            } else {
+                merged.push(b[j]);
+                j += 1;
+            }
+        }
+        merged.extend_from_slice(&a[i..]);
+        merged.extend_from_slice(&b[j..]);
+    }
+    xs.copy_from_slice(&merged);
+}
+
+/// Parallel N-Queens via fork-join over first-row placements.
+pub fn nqueens(n: i64, budget: u32) -> i64 {
+    fn expand(n: i64, row: i64, left: i64, down: i64, right: i64, budget: u32) -> i64 {
+        if row >= 2 || budget == 0 {
+            return crate::sim::intrinsics::nqueens_count(n, row, left, down, right).0;
+        }
+        let full = (1i64 << n) - 1;
+        let mut free = full & !(left | down | right);
+        let mut total = 0;
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            while free != 0 {
+                let bit = free & free.wrapping_neg();
+                free ^= bit;
+                handles.push(s.spawn(move || {
+                    expand(
+                        n,
+                        row + 1,
+                        (left | bit) << 1,
+                        down | bit,
+                        (right | bit) >> 1,
+                        budget - 1,
+                    )
+                }));
+            }
+            for h in handles {
+                total += h.join().expect("nqueens task panicked");
+            }
+        });
+        total
+    }
+    expand(n, 0, 0, 0, 0, budget)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join2_returns_both() {
+        let (a, b) = join2(2, |_| 1 + 1, |_| "x".to_string());
+        assert_eq!(a, 2);
+        assert_eq!(b, "x");
+    }
+
+    #[test]
+    fn budget_scaling() {
+        assert_eq!(budget_for_threads(1), 1);
+        assert!(budget_for_threads(72) >= 6);
+    }
+
+    #[test]
+    fn parallel_fib_matches_seq() {
+        assert_eq!(fib(18, 3), super::super::seq::fib(18));
+    }
+
+    #[test]
+    fn parallel_mergesort_matches() {
+        let mut v: Vec<i64> = (0..2000).map(|i| (i * 104729) % 9973).collect();
+        let mut want = v.clone();
+        want.sort_unstable();
+        mergesort(&mut v, 64, 3);
+        assert_eq!(v, want);
+    }
+
+    #[test]
+    fn parallel_nqueens_matches() {
+        assert_eq!(nqueens(8, 2), 92);
+    }
+}

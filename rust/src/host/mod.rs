@@ -1,0 +1,16 @@
+//! Host-native baselines.
+//!
+//! The paper compares GTaP against OpenMP tasks on a 72-core Grace CPU.
+//! This environment has a single core, so *timed* CPU comparisons use the
+//! simulated `grace72` device (same task DAG + cost model; see DESIGN.md);
+//! the executors here provide **functional** validation and a real
+//! fork-join decomposition path:
+//!
+//! * [`seq`] — sequential reference implementations of every benchmark.
+//! * [`forkjoin`] — a real-thread fork-join executor (scoped threads with
+//!   a parallelism-depth cap, the classic OpenMP-task spawning pattern),
+//!   used to check that the parallel decompositions are race-free and to
+//!   measure host wallclock where that is meaningful.
+
+pub mod forkjoin;
+pub mod seq;

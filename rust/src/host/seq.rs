@@ -1,0 +1,92 @@
+//! Sequential host reference implementations (the "CPU sequential"
+//! baseline of Fig. 5, and ground truth for every benchmark).
+
+use crate::sim::intrinsics::{nqueens_count, payload_native};
+
+/// Naive recursive Fibonacci — the exact computation the task version does.
+pub fn fib(n: i64) -> i64 {
+    if n < 2 {
+        n
+    } else {
+        fib(n - 1) + fib(n - 2)
+    }
+}
+
+/// N-Queens solution count.
+pub fn nqueens(n: i64) -> i64 {
+    nqueens_count(n, 0, 0, 0, 0).0
+}
+
+/// Recursive mergesort with a cutoff (matches the task decomposition).
+pub fn mergesort(xs: &mut [i64], cutoff: usize) {
+    let n = xs.len();
+    if n <= cutoff {
+        xs.sort_unstable();
+        return;
+    }
+    let mid = n / 2;
+    let (a, b) = xs.split_at_mut(mid);
+    mergesort(a, cutoff);
+    mergesort(b, cutoff);
+    let mut merged = Vec::with_capacity(n);
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        if a[i] <= b[j] {
+            merged.push(a[i]);
+            i += 1;
+        } else {
+            merged.push(b[j]);
+            j += 1;
+        }
+    }
+    merged.extend_from_slice(&a[i..]);
+    merged.extend_from_slice(&b[j..]);
+    xs.copy_from_slice(&merged);
+}
+
+/// Full-binary-tree payload walk (unchecked-sum variant used for host
+/// validation of the §6.3 workload shape).
+pub fn full_tree_payload_sum(depth: i64, seed: i64, mem_ops: i64, compute_iters: i64) -> f64 {
+    let mut sum = payload_native(seed, mem_ops, compute_iters);
+    if depth > 0 {
+        let m1 = (crate::util::prng::mix64(seed as u64 ^ 1u64.rotate_left(31)) >> 1) as i64;
+        let m2 = (crate::util::prng::mix64(seed as u64 ^ 2u64.rotate_left(31)) >> 1) as i64;
+        sum += full_tree_payload_sum(depth - 1, m1, mem_ops, compute_iters);
+        sum += full_tree_payload_sum(depth - 1, m2, mem_ops, compute_iters);
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fib_matches_iterative() {
+        for n in 0..20 {
+            assert_eq!(fib(n), crate::sim::intrinsics::fib_value(n));
+        }
+    }
+
+    #[test]
+    fn nqueens_known() {
+        assert_eq!(nqueens(8), 92);
+    }
+
+    #[test]
+    fn mergesort_sorts() {
+        let mut v: Vec<i64> = (0..500).map(|i| (i * 7919) % 271).collect();
+        let mut want = v.clone();
+        want.sort_unstable();
+        mergesort(&mut v, 16);
+        assert_eq!(v, want);
+    }
+
+    #[test]
+    fn tree_sum_deterministic() {
+        assert_eq!(
+            full_tree_payload_sum(5, 1, 4, 8),
+            full_tree_payload_sum(5, 1, 4, 8)
+        );
+    }
+}

@@ -1,0 +1,315 @@
+//! Abstract syntax tree for GTaP-C, the C-like task dialect accepted by
+//! `gtapc`.
+//!
+//! The surface syntax mirrors the paper's CUDA C++ examples (Programs 3–5):
+//! `#pragma gtap function` marks task functions, `#pragma gtap task
+//! [queue(expr)]` immediately precedes a (possibly assigning) call and
+//! becomes [`Stmt::Spawn`], `#pragma gtap taskwait [queue(expr)]` becomes
+//! [`Stmt::TaskWait`]. `parallel_for` is the block-cooperative loop used by
+//! block-level task functions (the DSL rendering of the
+//! `for (e = row_start + threadIdx.x; …; e += blockDim.x)` idiom in
+//! Program 5).
+
+use super::types::Type;
+
+/// Source location (1-based line/column) for diagnostics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct Span {
+    pub line: u32,
+    pub col: u32,
+}
+
+impl std::fmt::Display for Span {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}", self.line, self.col)
+    }
+}
+
+/// A whole translation unit.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub globals: Vec<GlobalDecl>,
+    pub functions: Vec<Function>,
+}
+
+/// `global int d_result;` — a scalar cell in simulated global memory,
+/// readable/writable from host and device (the DSL analogue of a
+/// `__device__` variable).
+#[derive(Clone, Debug)]
+pub struct GlobalDecl {
+    pub name: String,
+    pub ty: Type,
+    pub span: Span,
+}
+
+/// Function definition. `is_task` is set by `#pragma gtap function`;
+/// non-task ("device") functions are inlined by sema and may not spawn.
+#[derive(Clone, Debug)]
+pub struct Function {
+    pub name: String,
+    pub is_task: bool,
+    pub ret: Type,
+    pub params: Vec<Param>,
+    pub body: Block,
+    pub span: Span,
+}
+
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub ty: Type,
+    pub span: Span,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Block {
+    pub stmts: Vec<Stmt>,
+}
+
+#[derive(Clone, Debug)]
+pub enum Stmt {
+    /// `int x;` / `int x = e;`
+    Decl {
+        name: String,
+        ty: Type,
+        init: Option<Expr>,
+        span: Span,
+    },
+    /// `lv = e;` (also compound targets `p[i] = e`, `g = e`)
+    Assign {
+        target: LValue,
+        value: Expr,
+        span: Span,
+    },
+    If {
+        cond: Expr,
+        then_blk: Block,
+        else_blk: Option<Block>,
+        span: Span,
+    },
+    While {
+        cond: Expr,
+        body: Block,
+        span: Span,
+    },
+    /// Desugared by the parser into init/while forms where possible; kept
+    /// for fidelity of `--emit-c` output.
+    For {
+        init: Option<Box<Stmt>>,
+        cond: Option<Expr>,
+        step: Option<Box<Stmt>>,
+        body: Block,
+        span: Span,
+    },
+    Return {
+        value: Option<Expr>,
+        span: Span,
+    },
+    /// Expression statement (intrinsic / device-function call for effects).
+    ExprStmt { expr: Expr, span: Span },
+    /// `#pragma gtap task [queue(q)]` + `dest = f(args);` or `f(args);`
+    Spawn {
+        queue: Option<Expr>,
+        /// Variable receiving the child's result at the next taskwait.
+        dest: Option<String>,
+        call: CallExpr,
+        span: Span,
+    },
+    /// `#pragma gtap taskwait [queue(q)]`
+    TaskWait { queue: Option<Expr>, span: Span },
+    /// `parallel_for (i in lo..hi) { … }` — block-cooperative loop
+    /// (block-level workers only).
+    ParallelFor {
+        var: String,
+        lo: Expr,
+        hi: Expr,
+        body: Block,
+        span: Span,
+    },
+    /// Bare nested block `{ … }`.
+    Nested(Block),
+}
+
+impl Stmt {
+    pub fn span(&self) -> Span {
+        match self {
+            Stmt::Decl { span, .. }
+            | Stmt::Assign { span, .. }
+            | Stmt::If { span, .. }
+            | Stmt::While { span, .. }
+            | Stmt::For { span, .. }
+            | Stmt::Return { span, .. }
+            | Stmt::ExprStmt { span, .. }
+            | Stmt::Spawn { span, .. }
+            | Stmt::TaskWait { span, .. }
+            | Stmt::ParallelFor { span, .. } => *span,
+            Stmt::Nested(b) => b.stmts.first().map(Stmt::span).unwrap_or_default(),
+        }
+    }
+}
+
+/// Assignment targets.
+#[derive(Clone, Debug)]
+pub enum LValue {
+    /// Local variable or parameter.
+    Var(String),
+    /// Global scalar (`global …` declaration).
+    Global(String),
+    /// `base[index]` store into simulated global memory.
+    Index { base: Expr, index: Expr },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    /// Bitwise not (`~`).
+    BitNot,
+    /// Logical not (`!`).
+    Not,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    /// Short-circuit `&&` / `||` (lowered to branches by codegen).
+    LAnd,
+    LOr,
+}
+
+#[derive(Clone, Debug)]
+pub enum Expr {
+    IntLit(i64),
+    FloatLit(f64),
+    Var(String, Span),
+    /// Global scalar read (resolved from `Var` during sema).
+    Global(String, Span),
+    Unary {
+        op: UnOp,
+        expr: Box<Expr>,
+        span: Span,
+    },
+    Binary {
+        op: BinOp,
+        lhs: Box<Expr>,
+        rhs: Box<Expr>,
+        span: Span,
+    },
+    /// `c ? t : f`
+    Ternary {
+        cond: Box<Expr>,
+        then_e: Box<Expr>,
+        else_e: Box<Expr>,
+        span: Span,
+    },
+    /// Intrinsic or device-function call (task functions may only be called
+    /// under `#pragma gtap task` — enforced by sema).
+    Call(CallExpr),
+    /// `base[index]` load from simulated global memory.
+    Index {
+        base: Box<Expr>,
+        index: Box<Expr>,
+        span: Span,
+    },
+    /// `(int) e` / `(float) e`
+    Cast {
+        ty: Type,
+        expr: Box<Expr>,
+        span: Span,
+    },
+}
+
+#[derive(Clone, Debug)]
+pub struct CallExpr {
+    pub callee: String,
+    pub args: Vec<Expr>,
+    pub span: Span,
+}
+
+impl Expr {
+    pub fn span(&self) -> Span {
+        match self {
+            Expr::IntLit(_) | Expr::FloatLit(_) => Span::default(),
+            Expr::Var(_, s) | Expr::Global(_, s) => *s,
+            Expr::Unary { span, .. }
+            | Expr::Binary { span, .. }
+            | Expr::Ternary { span, .. }
+            | Expr::Index { span, .. }
+            | Expr::Cast { span, .. } => *span,
+            Expr::Call(c) => c.span,
+        }
+    }
+}
+
+/// Walk every statement in a block in source order, depth-first.
+pub fn visit_stmts<'a>(block: &'a Block, f: &mut impl FnMut(&'a Stmt)) {
+    for s in &block.stmts {
+        f(s);
+        match s {
+            Stmt::If {
+                then_blk, else_blk, ..
+            } => {
+                visit_stmts(then_blk, f);
+                if let Some(e) = else_blk {
+                    visit_stmts(e, f);
+                }
+            }
+            Stmt::While { body, .. }
+            | Stmt::ParallelFor { body, .. }
+            | Stmt::For { body, .. } => visit_stmts(body, f),
+            Stmt::Nested(b) => visit_stmts(b, f),
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_span() -> Span {
+        Span { line: 1, col: 1 }
+    }
+
+    #[test]
+    fn visit_counts_nested_stmts() {
+        let inner = Stmt::Return {
+            value: None,
+            span: dummy_span(),
+        };
+        let blk = Block {
+            stmts: vec![Stmt::If {
+                cond: Expr::IntLit(1),
+                then_blk: Block {
+                    stmts: vec![inner],
+                },
+                else_blk: None,
+                span: dummy_span(),
+            }],
+        };
+        let mut n = 0;
+        visit_stmts(&blk, &mut |_| n += 1);
+        assert_eq!(n, 2); // the `if` and the `return`
+    }
+
+    #[test]
+    fn spans_propagate() {
+        let e = Expr::Var("x".into(), Span { line: 3, col: 7 });
+        assert_eq!(e.span().line, 3);
+        assert_eq!(e.span().col, 7);
+    }
+}

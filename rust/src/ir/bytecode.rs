@@ -1,0 +1,237 @@
+//! Register bytecode produced by `gtapc` and interpreted per lane by the
+//! simulator.
+//!
+//! Each task function compiles to a [`FuncCode`] with a **state-entry
+//! table**: entry 0 is the function start and entry *k* (k ≥ 1) is the
+//! resumption point of the *k*-th `taskwait`. This table is the bytecode
+//! realization of the paper's switch-based state machine (Program 6): the
+//! runtime dispatches `switch (state)` by jumping to `state_entries[state]`.
+//! Because resumption is "jump to a pc", taskwaits nested inside loops work
+//! the same way Clang's Duff's-device-style switch rewrite does — provided
+//! every value live across the taskwait was spilled to the task-data record,
+//! which is exactly what the compiler's liveness pass guarantees.
+
+use super::intrinsics::Intrinsic;
+use super::layout::TaskDataLayout;
+use super::types::Type;
+
+/// Virtual register index (per-lane frame slot).
+pub type Reg = u16;
+/// Program counter within a function's instruction array.
+pub type Pc = u32;
+/// Function index within a [`Module`].
+pub type FuncId = u16;
+
+/// Integer/float binary ALU operations (post-sema: operand types resolved).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinKind {
+    IAdd,
+    ISub,
+    IMul,
+    IDiv,
+    IRem,
+    IAnd,
+    IOr,
+    IXor,
+    IShl,
+    IShr,
+    ILt,
+    ILe,
+    IGt,
+    IGe,
+    IEq,
+    INe,
+    FAdd,
+    FSub,
+    FMul,
+    FDiv,
+    FLt,
+    FLe,
+    FGt,
+    FGe,
+    FEq,
+    FNe,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnKind {
+    INeg,
+    IBitNot,
+    /// Logical not: `x == 0`.
+    LNot,
+    FNeg,
+    /// int → float conversion.
+    IToF,
+    /// float → int conversion (truncating).
+    FToI,
+}
+
+/// Cache behaviour of a simulated global-memory access. `Cg` models the PTX
+/// `ld.global.cg` / `st.global.cg` operators the paper uses to bypass the
+/// non-coherent per-SM L1 (§4.5, footnote 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheOp {
+    /// Default: may hit in the (non-coherent) per-SM L1.
+    Ca,
+    /// Bypass L1; L2 is the coherence point.
+    Cg,
+}
+
+/// One bytecode instruction.
+///
+/// Variable-length operand lists (spawn args, intrinsic args) live in the
+/// function's `arg_pool`, referenced by `(arg_base, argc)`, keeping the enum
+/// small for the interpreter's hot dispatch loop.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Insn {
+    /// `dst = imm` (raw 64-bit payload; i64 or f64 bits).
+    Const { dst: Reg, val: u64 },
+    Mov { dst: Reg, src: Reg },
+    Bin { op: BinKind, dst: Reg, a: Reg, b: Reg },
+    Un { op: UnKind, dst: Reg, a: Reg },
+    Jmp { target: Pc },
+    /// Conditional branch: `cond != 0` → `t`, else `f`. Divergence point.
+    Br { cond: Reg, t: Pc, f: Pc },
+    /// Load a word from simulated global memory.
+    LdG { dst: Reg, addr: Reg, cache: CacheOp },
+    /// Store a word to simulated global memory.
+    StG { addr: Reg, src: Reg, cache: CacheOp },
+    /// Load a field of this task's task-data record (word offset).
+    LdTd { dst: Reg, off: u16 },
+    /// Store a field of this task's task-data record.
+    StTd { off: u16, src: Reg },
+    /// Spawn a child task: allocate record, copy `argc` argument registers
+    /// from `arg_pool[arg_base..]`, enqueue to EPAQ queue index in `queue`.
+    Spawn {
+        func: FuncId,
+        arg_base: u32,
+        argc: u8,
+        queue: Reg,
+    },
+    /// `__gtap_prepare_for_join(next_state)`: suspend at a join point; the
+    /// continuation re-enters at `state_entries[next_state]`, enqueued to
+    /// the EPAQ queue index in `queue` (§5.1.2 "taskwait queue(expr)").
+    PrepareJoin { next_state: u16, queue: Reg },
+    /// `__gtap_finish_task()`: terminate this task. `result` was already
+    /// stored to the task-data result field when present.
+    FinishTask,
+    /// Load the result field of the `slot`-th child spawned since the last
+    /// join epoch (`__gtap_load_result(slot)` in Program 6).
+    ChildResult { dst: Reg, slot: u16 },
+    /// Builtin call; args in `arg_pool[arg_base..arg_base+argc]`.
+    Intr {
+        id: Intrinsic,
+        dst: Reg,
+        arg_base: u32,
+        argc: u8,
+        has_dst: bool,
+    },
+    /// Enter a block-cooperative `parallel_for` region executing `trips`
+    /// iterations total (register holds the trip count); the interpreter
+    /// divides cycle charges within the region by the block width and adds
+    /// a barrier cost at [`Insn::ParExit`].
+    ParEnter { trips: Reg },
+    ParExit,
+    /// Diagnostic trap (unreachable state — mirrors `default: __trap()`).
+    Trap,
+}
+
+/// A compiled task function.
+#[derive(Clone, Debug)]
+pub struct FuncCode {
+    pub name: String,
+    pub insns: Vec<Insn>,
+    /// Operand pool for `Spawn`/`Intr` argument registers.
+    pub arg_pool: Vec<Reg>,
+    /// `state_entries[k]` = pc where state `k` begins (0 = function entry).
+    pub state_entries: Vec<Pc>,
+    /// Number of virtual registers in a lane frame.
+    pub nregs: u16,
+    /// Task-data record layout (args + spills + result).
+    pub layout: TaskDataLayout,
+    /// Static bound on children spawned between joins (checked against
+    /// `GTAP_MAX_CHILD_TASKS`); `u16::MAX` when a spawn sits in a loop.
+    pub max_children_hint: u16,
+    /// Whether any `taskwait` appears (drives `GTAP_ASSUME_NO_TASKWAIT`
+    /// compatibility checks).
+    pub has_taskwait: bool,
+    /// Whether this function uses `parallel_for` (block-level only).
+    pub uses_parfor: bool,
+    pub ret: Type,
+}
+
+/// A compiled program: all task functions plus global-scalar symbol table.
+#[derive(Clone, Debug, Default)]
+pub struct Module {
+    pub funcs: Vec<FuncCode>,
+    /// Global scalars; `globals[i]` lives at simulated word address `i`.
+    pub globals: Vec<(String, Type)>,
+}
+
+impl Module {
+    pub fn func_id(&self, name: &str) -> Option<FuncId> {
+        self.funcs
+            .iter()
+            .position(|f| f.name == name)
+            .map(|i| i as FuncId)
+    }
+
+    pub fn func(&self, id: FuncId) -> &FuncCode {
+        &self.funcs[id as usize]
+    }
+
+    /// Word address of a global scalar.
+    pub fn global_addr(&self, name: &str) -> Option<u64> {
+        self.globals
+            .iter()
+            .position(|(n, _)| n == name)
+            .map(|i| i as u64)
+    }
+
+    /// Number of words of simulated memory reserved for global scalars.
+    pub fn globals_words(&self) -> u64 {
+        self.globals.len() as u64
+    }
+}
+
+impl FuncCode {
+    /// Number of states in the generated state machine (1 + #taskwaits).
+    pub fn num_states(&self) -> usize {
+        self.state_entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_lookup() {
+        let m = Module {
+            funcs: vec![FuncCode {
+                name: "fib".into(),
+                insns: vec![Insn::FinishTask],
+                arg_pool: vec![],
+                state_entries: vec![0],
+                nregs: 1,
+                layout: TaskDataLayout::default(),
+                max_children_hint: 0,
+                has_taskwait: false,
+                uses_parfor: false,
+                ret: Type::Int,
+            }],
+            globals: vec![("d_result".into(), Type::Int)],
+        };
+        assert_eq!(m.func_id("fib"), Some(0));
+        assert_eq!(m.func_id("nope"), None);
+        assert_eq!(m.global_addr("d_result"), Some(0));
+        assert_eq!(m.globals_words(), 1);
+        assert_eq!(m.func(0).num_states(), 1);
+    }
+
+    #[test]
+    fn insn_is_small() {
+        // Interpreter hot-path: keep the instruction word compact.
+        assert!(std::mem::size_of::<Insn>() <= 16, "{}", std::mem::size_of::<Insn>());
+    }
+}

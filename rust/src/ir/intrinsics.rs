@@ -1,0 +1,128 @@
+//! Builtin ("intrinsic") functions callable from GTaP-C.
+//!
+//! The paper's benchmarks contain two kinds of code: irregular *task
+//! orchestration* (recursion, spawns, joins — interpreted as bytecode so the
+//! simulator sees its control flow and divergence) and straight-line *leaf
+//! work* beyond the cutoff (serial sort/merge, bitmask N-Queens backtracking,
+//! the synthetic tree's `do_memory_and_compute`). Leaf work is exposed as
+//! intrinsics: the simulator executes it natively against simulated memory
+//! and charges an analytic cycle cost derived from the operation counts the
+//! real code would execute (see `sim::intrinsics` for both). The
+//! [`Intrinsic::Payload`] intrinsic is special: its values are computed by
+//! the AOT-compiled JAX/Pallas kernel through PJRT when an
+//! [`crate::runtime::PayloadEngine`] is attached.
+
+use super::types::Type;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Intrinsic {
+    /// `payload(seed, mem_ops, compute_iters) -> float` —
+    /// `do_memory_and_compute` from §6.3: `mem_ops` pseudo-random 64-bit
+    /// global loads plus `compute_iters` FP64 FMAs.
+    Payload,
+    /// `fib_serial(n) -> int` — sequential Fibonacci used below cutoffs.
+    FibSerial,
+    /// `nqueens_serial(n, row, left, down, right) -> int` — count solutions
+    /// of the partially-placed board by bitmask backtracking (§6.2).
+    NQueensSerial,
+    /// `sort_serial(p, lo, hi)` — in-place serial sort of `p[lo..hi)`.
+    SortSerial,
+    /// `merge_serial(p, lo1, hi1, lo2, hi2, dst)` — serial two-way merge of
+    /// `p[lo1..hi1)` and `p[lo2..hi2)` into `dst[0..)`.
+    MergeSerial,
+    /// `binsearch(p, lo, hi, key) -> int` — lower-bound index, used by
+    /// cilksort's parallel merge split.
+    BinSearch,
+    /// `memcpy_words(dst, src, n)`.
+    MemCpyWords,
+    /// `atomic_add(addr, v) -> int` (old value; L2 coherence point).
+    AtomicAdd,
+    /// `atomic_min(addr, v) -> int` (old value).
+    AtomicMin,
+    /// `atomic_max(addr, v) -> int` (old value).
+    AtomicMax,
+    /// `atomic_cas(addr, expect, new) -> int` (old value).
+    AtomicCas,
+    /// `mix(a, b) -> int` — cheap stateless 64-bit hash of two ints
+    /// (deterministic per-node randomness for pruned-tree workloads).
+    Mix,
+    /// `lane_id() -> int` — diagnostic.
+    LaneId,
+    /// `worker_id() -> int` — diagnostic.
+    WorkerId,
+    /// `print_int(x)` / `print_float(x)` — host-visible debug output.
+    PrintInt,
+    PrintFloat,
+}
+
+/// Signature of an intrinsic.
+#[derive(Clone, Debug)]
+pub struct IntrinsicSig {
+    pub id: Intrinsic,
+    pub name: &'static str,
+    pub params: &'static [Type],
+    pub ret: Type,
+}
+
+use Type::*;
+
+/// Table of all intrinsics (name → signature), consulted by sema.
+pub const INTRINSICS: &[IntrinsicSig] = &[
+    IntrinsicSig { id: Intrinsic::Payload, name: "payload", params: &[Int, Int, Int], ret: Float },
+    IntrinsicSig { id: Intrinsic::FibSerial, name: "fib_serial", params: &[Int], ret: Int },
+    IntrinsicSig { id: Intrinsic::NQueensSerial, name: "nqueens_serial", params: &[Int, Int, Int, Int, Int], ret: Int },
+    IntrinsicSig { id: Intrinsic::SortSerial, name: "sort_serial", params: &[Ptr, Int, Int], ret: Void },
+    IntrinsicSig { id: Intrinsic::MergeSerial, name: "merge_serial", params: &[Ptr, Int, Int, Int, Int, Ptr], ret: Void },
+    IntrinsicSig { id: Intrinsic::BinSearch, name: "binsearch", params: &[Ptr, Int, Int, Int], ret: Int },
+    IntrinsicSig { id: Intrinsic::MemCpyWords, name: "memcpy_words", params: &[Ptr, Ptr, Int], ret: Void },
+    IntrinsicSig { id: Intrinsic::AtomicAdd, name: "atomic_add", params: &[Ptr, Int], ret: Int },
+    IntrinsicSig { id: Intrinsic::AtomicMin, name: "atomic_min", params: &[Ptr, Int], ret: Int },
+    IntrinsicSig { id: Intrinsic::AtomicMax, name: "atomic_max", params: &[Ptr, Int], ret: Int },
+    IntrinsicSig { id: Intrinsic::AtomicCas, name: "atomic_cas", params: &[Ptr, Int, Int], ret: Int },
+    IntrinsicSig { id: Intrinsic::Mix, name: "mix", params: &[Int, Int], ret: Int },
+    IntrinsicSig { id: Intrinsic::LaneId, name: "lane_id", params: &[], ret: Int },
+    IntrinsicSig { id: Intrinsic::WorkerId, name: "worker_id", params: &[], ret: Int },
+    IntrinsicSig { id: Intrinsic::PrintInt, name: "print_int", params: &[Int], ret: Void },
+    IntrinsicSig { id: Intrinsic::PrintFloat, name: "print_float", params: &[Float], ret: Void },
+];
+
+/// Look up an intrinsic by surface name.
+pub fn lookup(name: &str) -> Option<&'static IntrinsicSig> {
+    INTRINSICS.iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_known() {
+        let s = lookup("payload").unwrap();
+        assert_eq!(s.id, Intrinsic::Payload);
+        assert_eq!(s.params.len(), 3);
+        assert_eq!(s.ret, Type::Float);
+    }
+
+    #[test]
+    fn lookup_unknown_none() {
+        assert!(lookup("frobnicate").is_none());
+    }
+
+    #[test]
+    fn names_unique() {
+        for (i, a) in INTRINSICS.iter().enumerate() {
+            for b in &INTRINSICS[i + 1..] {
+                assert_ne!(a.name, b.name);
+                assert_ne!(a.id, b.id);
+            }
+        }
+    }
+
+    #[test]
+    fn atomics_take_pointer_first() {
+        for n in ["atomic_add", "atomic_min", "atomic_max", "atomic_cas"] {
+            assert_eq!(lookup(n).unwrap().params[0], Type::Ptr);
+            assert_eq!(lookup(n).unwrap().ret, Type::Int);
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Task-data record layout (§5.2.3).
+//!
+//! For every task function the compiler generates a record holding
+//! (i) the original arguments (GTaP copies arguments at spawn time —
+//! firstprivate semantics, §5.1.2), (ii) locals spilled because they cross a
+//! `taskwait`, and (iii) the result field for non-void task functions, so
+//! the state-machine function itself always returns void (Program 6).
+//!
+//! The record is measured in 64-bit words; `GTAP_MAX_TASK_DATA_SIZE`
+//! (Table 1) bounds its byte size and compilation fails when exceeded,
+//! mirroring the paper's restriction.
+
+use super::types::Type;
+
+/// Why a field exists in the record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FieldKind {
+    /// Original argument (`__cap_<param>` in Program 6).
+    Arg,
+    /// Spilled local crossing a taskwait (`__cap_<var>`).
+    Spill,
+    /// Result field (`__cap_result`).
+    Result,
+}
+
+#[derive(Clone, Debug)]
+pub struct Field {
+    pub name: String,
+    pub ty: Type,
+    pub kind: FieldKind,
+    /// Word offset within the record payload.
+    pub offset: u16,
+}
+
+/// Layout of one task function's task-data record.
+#[derive(Clone, Debug, Default)]
+pub struct TaskDataLayout {
+    pub fields: Vec<Field>,
+}
+
+impl TaskDataLayout {
+    /// Append a field, returning its word offset.
+    pub fn push(&mut self, name: &str, ty: Type, kind: FieldKind) -> u16 {
+        debug_assert!(
+            self.lookup(name).is_none(),
+            "duplicate task-data field {name}"
+        );
+        let offset = self.fields.len() as u16;
+        self.fields.push(Field {
+            name: name.to_string(),
+            ty,
+            kind,
+            offset,
+        });
+        offset
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<&Field> {
+        self.fields.iter().find(|f| f.name == name)
+    }
+
+    pub fn offset_of(&self, name: &str) -> Option<u16> {
+        self.lookup(name).map(|f| f.offset)
+    }
+
+    /// Record payload size in 64-bit words.
+    pub fn words(&self) -> usize {
+        self.fields.len()
+    }
+
+    /// Record payload size in bytes (for the GTAP_MAX_TASK_DATA_SIZE check).
+    pub fn bytes(&self) -> usize {
+        self.words() * 8
+    }
+
+    /// Offset of the result field, if any.
+    pub fn result_offset(&self) -> Option<u16> {
+        self.fields
+            .iter()
+            .find(|f| f.kind == FieldKind::Result)
+            .map(|f| f.offset)
+    }
+
+    /// Number of argument fields (== arity of the task function).
+    pub fn num_args(&self) -> usize {
+        self.fields.iter().filter(|f| f.kind == FieldKind::Arg).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_like_program6() {
+        // struct fib_task_data { int __cap_n; int __cap_a; int __cap_b;
+        //                        int __cap_result; }
+        let mut l = TaskDataLayout::default();
+        assert_eq!(l.push("n", Type::Int, FieldKind::Arg), 0);
+        assert_eq!(l.push("a", Type::Int, FieldKind::Spill), 1);
+        assert_eq!(l.push("b", Type::Int, FieldKind::Spill), 2);
+        assert_eq!(l.push("__result", Type::Int, FieldKind::Result), 3);
+        assert_eq!(l.words(), 4);
+        assert_eq!(l.bytes(), 32);
+        assert_eq!(l.result_offset(), Some(3));
+        assert_eq!(l.num_args(), 1);
+        assert_eq!(l.offset_of("b"), Some(2));
+        assert_eq!(l.offset_of("zz"), None);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_field_asserts() {
+        let mut l = TaskDataLayout::default();
+        l.push("x", Type::Int, FieldKind::Arg);
+        l.push("x", Type::Int, FieldKind::Spill);
+    }
+}

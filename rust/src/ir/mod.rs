@@ -1,0 +1,27 @@
+//! Intermediate representation shared between the `gtapc` compiler and the
+//! simulator's interpreter.
+//!
+//! * [`types`] — the GTaP-C type system (`int`/`float`/`ptr`/`void`) and the
+//!   64-bit value slot representation.
+//! * [`ast`] — the surface-syntax tree produced by the parser, including the
+//!   pragma-derived nodes (`Spawn`, `TaskWait`, `ParallelFor`).
+//! * [`bytecode`] — the register bytecode a task function compiles to, with
+//!   the per-`taskwait` state-entry table that realizes the paper's
+//!   switch-based state machine (§4.2, §5.2.2).
+//! * [`layout`] — the compiler-generated task-data record layout: original
+//!   arguments, spilled locals, and the result field (§5.2.3, Program 6).
+//! * [`intrinsics`] — builtin functions callable from GTaP-C (serial leaf
+//!   kernels, atomics, the `do_memory_and_compute` payload that routes to
+//!   the AOT-compiled Pallas kernel).
+
+pub mod ast;
+pub mod bytecode;
+pub mod intrinsics;
+pub mod layout;
+pub mod types;
+
+pub use ast::*;
+pub use bytecode::*;
+pub use intrinsics::{Intrinsic, IntrinsicSig};
+pub use layout::TaskDataLayout;
+pub use types::{Type, Value};

@@ -1,0 +1,117 @@
+//! GTaP-C types and runtime value representation.
+//!
+//! All runtime values are 64-bit slots ([`Value`]): `int` is `i64`, `float`
+//! is `f64` (bit-cast), `ptr` is a word address into simulated global
+//! memory. This mirrors the paper's restriction that values crossing
+//! `taskwait` must be trivially copyable (§5.1.4) — everything here is.
+
+use std::fmt;
+
+/// Surface types of GTaP-C.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Type {
+    Int,
+    Float,
+    Ptr,
+    Void,
+}
+
+impl Type {
+    pub fn is_scalar(self) -> bool {
+        self != Type::Void
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Type::Int => "int",
+            Type::Float => "float",
+            Type::Ptr => "ptr",
+            Type::Void => "void",
+        }
+    }
+}
+
+impl fmt::Display for Type {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A 64-bit value slot. The static type is tracked by the compiler; the
+/// runtime representation is untyped bits, exactly like a GPU register.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct Value(pub u64);
+
+impl Value {
+    #[inline]
+    pub fn from_i64(v: i64) -> Value {
+        Value(v as u64)
+    }
+
+    #[inline]
+    pub fn from_f64(v: f64) -> Value {
+        Value(v.to_bits())
+    }
+
+    #[inline]
+    pub fn from_bool(v: bool) -> Value {
+        Value(v as u64)
+    }
+
+    #[inline]
+    pub fn as_i64(self) -> i64 {
+        self.0 as i64
+    }
+
+    #[inline]
+    pub fn as_f64(self) -> f64 {
+        f64::from_bits(self.0)
+    }
+
+    #[inline]
+    pub fn as_bool(self) -> bool {
+        self.0 != 0
+    }
+
+    /// Word address for `ptr` values.
+    #[inline]
+    pub fn as_addr(self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int_roundtrip() {
+        for v in [0i64, 1, -1, i64::MAX, i64::MIN, 42] {
+            assert_eq!(Value::from_i64(v).as_i64(), v);
+        }
+    }
+
+    #[test]
+    fn float_roundtrip() {
+        for v in [0.0f64, -0.0, 1.5, -3.25, f64::INFINITY, 1e-300] {
+            assert_eq!(Value::from_f64(v).as_f64(), v);
+        }
+        assert!(Value::from_f64(f64::NAN).as_f64().is_nan());
+    }
+
+    #[test]
+    fn bool_semantics() {
+        assert!(Value::from_bool(true).as_bool());
+        assert!(!Value::from_bool(false).as_bool());
+        assert!(Value::from_i64(-7).as_bool());
+        assert!(!Value::from_i64(0).as_bool());
+    }
+
+    #[test]
+    fn type_names() {
+        assert_eq!(Type::Int.to_string(), "int");
+        assert_eq!(Type::Void.to_string(), "void");
+        assert!(Type::Ptr.is_scalar());
+        assert!(!Type::Void.is_scalar());
+    }
+}

@@ -1,0 +1,56 @@
+//! # GTaP-Sim
+//!
+//! A reproduction of *"GTaP: A GPU-Resident Fork-Join Task-Parallel Runtime
+//! with a Pragma-Based Interface"* (Maeda & Taura, CS.DC 2026).
+//!
+//! The original system is a CUDA C++ runtime plus a Clang extension that runs
+//! fork-join task parallelism **GPU-resident** under a persistent kernel:
+//! joins become continuations, task functions become switch-based state
+//! machines, workers are either whole thread blocks or individual threads,
+//! load balancing is work stealing with warp-cooperative batched deque
+//! operations, and *Execution-Path-Aware Queueing* (EPAQ) routes tasks into
+//! per-path queues to curb warp divergence.
+//!
+//! This crate rebuilds the whole stack on a **cycle-approximate SIMT
+//! simulator** (no GPU in this environment — see `DESIGN.md` for the
+//! substitution argument):
+//!
+//! * [`compiler`] — `gtapc`: the pragma frontend. Parses the GTaP-C dialect
+//!   (`#pragma gtap function/task/taskwait/entry`, `queue(expr)`), performs
+//!   CFG construction + backward liveness, and carries out the paper's
+//!   state-machine conversion and task-data spilling (§5.2), emitting
+//!   register bytecode.
+//! * [`ir`] — AST, bytecode, and task-data record layout shared between the
+//!   compiler and the interpreter.
+//! * [`sim`] — the substrate: device models (H100-like GPU, 72-core
+//!   Grace-like CPU), divergence-serialization cost model, memory hierarchy
+//!   (non-coherent L1, L2 coherence point, HBM), discrete-event engine, and
+//!   the per-lane bytecode interpreter.
+//! * [`coordinator`] — the GTaP device runtime proper (§4): task records,
+//!   fixed-ring work-stealing deques with warp-cooperative batched
+//!   pop/steal/push (Algorithm 1), the global-queue and sequential
+//!   Chase–Lev ablation baselines, EPAQ, join/continuation management, and
+//!   the persistent-kernel worker loops for both granularities.
+//! * [`host`] — a real-thread work-stealing fork-join executor and
+//!   sequential baselines (the stand-in for the paper's OpenMP-task CPU
+//!   comparator), used for functional validation.
+//! * [`runtime`] — the PJRT runtime: loads the AOT-compiled JAX/Pallas
+//!   payload kernel (`artifacts/*.hlo.txt`) and executes it from the warp
+//!   hot path.
+//! * [`workloads`] — the paper's benchmark suite in GTaP-C source form plus
+//!   native reference implementations (fib, N-Queens, mergesort, cilksort,
+//!   synthetic trees, BFS).
+//! * [`bench`] — the sweep/statistics/reporting harness behind every
+//!   `cargo bench` target (one per paper figure/table).
+//! * [`util`] — PRNG, stats, CLI parsing and a small property-testing
+//!   framework (the registry in this environment has no proptest/criterion).
+
+pub mod bench;
+pub mod compiler;
+pub mod coordinator;
+pub mod host;
+pub mod ir;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;

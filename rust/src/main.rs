@@ -1,0 +1,196 @@
+//! `gtap` — command-line driver for GTaP-Sim.
+//!
+//! ```text
+//! gtap compile <file.gtap> [--emit-c]      gtapc: compile + show the
+//!                                          state-machine transformation
+//! gtap run <bench> [options]               run one benchmark once
+//! gtap devices                             print the device models (Table 2)
+//! gtap config                              print runtime defaults (Table 1)
+//! ```
+
+use anyhow::{bail, Result};
+use gtap::bench::runners::{self, Exec};
+use gtap::compiler;
+use gtap::coordinator::config::{GtapConfig, DEFAULT_MAX_TASK_DATA_SIZE};
+use gtap::coordinator::SchedulerKind;
+use gtap::sim::DeviceSpec;
+use gtap::util::cli::Args;
+use gtap::util::stats::fmt_time;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("compile") => cmd_compile(&args),
+        Some("run") => cmd_run(&args),
+        Some("devices") => cmd_devices(),
+        Some("config") => cmd_config(),
+        _ => {
+            eprintln!(
+                "usage: gtap <compile|run|devices|config> …\n\
+                 \n  gtap compile <file.gtap>           show the state-machine transformation\
+                 \n  gtap run <fib|nqueens|mergesort|cilksort|tree|ptree|bfs> \\\
+                 \n      [--n N] [--cutoff C] [--device gpu|cpu|seq] [--grid G] [--block B] \\\
+                 \n      [--sched ws|gq|seqcl] [--queues Q] [--epaq] [--depth D] \\\
+                 \n      [--mem-ops M] [--compute-iters I]\
+                 \n  gtap devices                       device cost models (Table 2)\
+                 \n  gtap config                        runtime defaults (Table 1)"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let Some(path) = args.positional.get(1) else {
+        bail!("usage: gtap compile <file.gtap>");
+    };
+    let src = std::fs::read_to_string(path)?;
+    let module = compiler::compile(&src, DEFAULT_MAX_TASK_DATA_SIZE)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    print!("{}", compiler::pretty::render_module(&module));
+    Ok(())
+}
+
+fn build_exec(args: &Args) -> Result<Exec> {
+    let grid = args.get_or("grid", 256usize);
+    let block = args.get_or("block", 32usize);
+    let mut exec = match args.str_or("device", "gpu").as_str() {
+        "gpu" => {
+            if args.str_or("granularity", "thread") == "block" {
+                Exec::gpu_block(grid, block)
+            } else {
+                Exec::gpu_thread(grid, block)
+            }
+        }
+        "cpu" => Exec::cpu72(),
+        "seq" => Exec::cpu_seq(),
+        other => bail!("unknown device {other:?} (gpu|cpu|seq)"),
+    };
+    exec = exec.scheduler(match args.str_or("sched", "ws").as_str() {
+        "ws" => SchedulerKind::WorkStealing,
+        "gq" => SchedulerKind::GlobalQueue,
+        "seqcl" => SchedulerKind::SequentialChaseLev,
+        other => bail!("unknown scheduler {other:?} (ws|gq|seqcl)"),
+    });
+    exec = exec.queues(args.get_or("queues", 1usize));
+    exec = exec.seed(args.get_or("seed", 0x6A7A9u64));
+    Ok(exec)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let Some(bench) = args.positional.get(1).cloned() else {
+        bail!("usage: gtap run <bench> …");
+    };
+    let exec = build_exec(args)?;
+    let epaq = args.flag("epaq");
+    let t_host = std::time::Instant::now();
+    let out = match bench.as_str() {
+        "fib" => {
+            let n = args.get_or("n", 20i64);
+            let cutoff = args.get_or("cutoff", 0i64);
+            runners::run_fib(&exec.clone().queues(if epaq { 3 } else { exec.cfg.num_queues }), n, cutoff, epaq)?
+        }
+        "nqueens" => {
+            let n = args.get_or("n", 10i64);
+            let depth = args.get_or("cutoff", 4i64);
+            runners::run_nqueens(
+                &exec.clone().no_taskwait().queues(if epaq { 2 } else { 1 }),
+                n,
+                depth,
+                epaq,
+            )?
+        }
+        "mergesort" => {
+            let n = args.get_or("n", 1usize << 14);
+            let cutoff = args.get_or("cutoff", 128i64);
+            runners::run_mergesort(&exec, n, cutoff, 42)?
+        }
+        "cilksort" => {
+            let n = args.get_or("n", 1usize << 14);
+            let cs = args.get_or("cutoff-sort", 64i64);
+            let cm = args.get_or("cutoff-merge", 256i64);
+            runners::run_cilksort(&exec.clone().queues(if epaq { 3 } else { 1 }), n, cs, cm, epaq, 42)?
+        }
+        "tree" => {
+            let depth = args.get_or("depth", 10i64);
+            let mem = args.get_or("mem-ops", 64i64);
+            let comp = args.get_or("compute-iters", 256i64);
+            if args.flag("xla") {
+                let mut engine = gtap::runtime::XlaPayloadEngine::from_artifacts()?;
+                let out = runners::run_full_tree(&exec, depth, mem, comp, Some(&mut engine))?;
+                eprintln!(
+                    "payload engine: {} PJRT executions, {} lane-payloads",
+                    engine.executions, engine.lane_payloads
+                );
+                out
+            } else {
+                runners::run_full_tree(&exec, depth, mem, comp, None)?
+            }
+        }
+        "ptree" => {
+            let depth = args.get_or("depth", 12i64);
+            let mem = args.get_or("mem-ops", 64i64);
+            let comp = args.get_or("compute-iters", 256i64);
+            runners::run_pruned_tree(&exec, depth, mem, comp, 5)?
+        }
+        "bfs" => {
+            let n = args.get_or("n", 2000usize);
+            let deg = args.get_or("degree", 4usize);
+            runners::run_bfs(&exec.clone().no_taskwait(), n, deg, 42)?
+        }
+        other => bail!("unknown benchmark {other:?}"),
+    };
+    println!(
+        "{bench}: simulated {} ({} cycles) on {}",
+        fmt_time(out.seconds),
+        out.stats.cycles,
+        exec.device.name
+    );
+    println!(
+        "  tasks {}  segments {}  spawns {}  steals {}/{}  iters {} (idle {})  peak-records {}",
+        out.stats.tasks_finished,
+        out.stats.segments,
+        out.stats.spawns,
+        out.stats.steals_ok,
+        out.stats.steal_attempts,
+        out.stats.iterations,
+        out.stats.idle_iterations,
+        out.stats.peak_live_records,
+    );
+    if let Some(r) = out.stats.root_result {
+        println!("  result: {}", r.as_i64());
+    }
+    eprintln!("  (host wallclock {:?})", t_host.elapsed());
+    Ok(())
+}
+
+fn cmd_devices() -> Result<()> {
+    for dev in [DeviceSpec::h100(), DeviceSpec::grace72()] {
+        println!(
+            "{}: {} SMs x {} issue, {:.1} GHz, warp {}, L1 {}cy L2 {}cy mem {}cy, atomic {}cy",
+            dev.name,
+            dev.sms,
+            dev.issue_warps,
+            dev.clock_ghz,
+            dev.warp_width,
+            dev.l1_lat,
+            dev.l2_lat,
+            dev.mem_lat,
+            dev.atomic,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_config() -> Result<()> {
+    let c = GtapConfig::default();
+    println!("GTAP_GRID_SIZE            = {}", c.grid_size);
+    println!("GTAP_BLOCK_SIZE           = {}", c.block_size);
+    println!("GTAP_MAX_TASKS_PER_WARP   = {}", c.max_tasks_per_warp);
+    println!("GTAP_MAX_TASKS_PER_BLOCK  = {}", c.max_tasks_per_block);
+    println!("GTAP_MAX_CHILD_TASKS      = {}", c.max_child_tasks);
+    println!("GTAP_NUM_QUEUES           = {}", c.num_queues);
+    println!("GTAP_MAX_TASK_DATA_SIZE   = {}", c.max_task_data_size);
+    println!("GTAP_ASSUME_NO_TASKWAIT   = {}", c.assume_no_taskwait);
+    Ok(())
+}

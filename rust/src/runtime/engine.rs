@@ -1,0 +1,211 @@
+//! Payload engines: the AOT-kernel-backed implementation of
+//! [`PayloadEngine`] plus the native fallback.
+//!
+//! `XlaPayloadEngine` packs a warp's suspended payload requests into the
+//! artifact's fixed `(32,)` lane shape (grouping by the uniform
+//! `(mem_ops, compute_iters)` scalars, padding unused lanes with seed 0)
+//! and runs ONE PJRT execution per group — the warp-batched
+//! `do_memory_and_compute` of §6.3.
+
+use crate::coordinator::{PayloadEngine, PayloadReq};
+use crate::sim::intrinsics::{payload_native, payload_table};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Lanes per artifact execution (must match `python/compile/kernels`).
+pub const LANES: usize = 32;
+
+/// Native Rust fallback (bit-twin of the kernel; used in large sweeps where
+/// millions of PJRT round-trips would measure the host, not the model).
+#[derive(Default)]
+pub struct NativePayloadEngine {
+    pub calls: u64,
+}
+
+impl PayloadEngine for NativePayloadEngine {
+    fn execute(&mut self, reqs: &[PayloadReq], out: &mut Vec<f64>) {
+        self.calls += 1;
+        for r in reqs {
+            out.push(payload_native(r.seed, r.mem_ops, r.compute_iters));
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// The AOT JAX/Pallas kernel behind PJRT.
+pub struct XlaPayloadEngine {
+    _client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    table: xla::Literal,
+    /// PJRT executions performed (one per uniform group per warp batch).
+    pub executions: u64,
+    /// Total lane-payloads computed.
+    pub lane_payloads: u64,
+}
+
+impl XlaPayloadEngine {
+    /// Load `artifacts/payload.hlo.txt` (searched upward from cwd).
+    pub fn from_artifacts() -> Result<XlaPayloadEngine> {
+        let path = crate::runtime::find_artifact("payload.hlo.txt").context(
+            "artifacts/payload.hlo.txt not found — run `make artifacts` first",
+        )?;
+        Self::load(&path)
+    }
+
+    pub fn load(path: &Path) -> Result<XlaPayloadEngine> {
+        let (client, exe) = crate::runtime::compile_artifact(path)?;
+        let table = xla::Literal::vec1(&payload_table()[..]);
+        Ok(XlaPayloadEngine {
+            _client: client,
+            exe,
+            table,
+            executions: 0,
+            lane_payloads: 0,
+        })
+    }
+
+    /// One PJRT execution over up to `LANES` requests with uniform
+    /// `(mem_ops, compute_iters)`.
+    fn run_group(&mut self, reqs: &[PayloadReq]) -> Result<Vec<f64>> {
+        debug_assert!(reqs.len() <= LANES && !reqs.is_empty());
+        let mut seeds = [0i64; LANES];
+        for (i, r) in reqs.iter().enumerate() {
+            seeds[i] = r.seed;
+        }
+        let seeds_lit = xla::Literal::vec1(&seeds[..]);
+        let mem_lit = xla::Literal::vec1(&[reqs[0].mem_ops][..]);
+        let iters_lit = xla::Literal::vec1(&[reqs[0].compute_iters][..]);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[seeds_lit, mem_lit, iters_lit, self.table.clone()])
+            .context("PJRT execute")?[0][0]
+            .to_literal_sync()
+            .context("fetching PJRT result")?;
+        // return_tuple=True and two outputs: (values f64[32], checksums s64[32])
+        let (values, _checksums) = result.to_tuple2().context("decomposing result tuple")?;
+        let vals: Vec<f64> = values.to_vec().context("reading values")?;
+        self.executions += 1;
+        self.lane_payloads += reqs.len() as u64;
+        Ok(vals[..reqs.len()].to_vec())
+    }
+}
+
+impl PayloadEngine for XlaPayloadEngine {
+    fn execute(&mut self, reqs: &[PayloadReq], out: &mut Vec<f64>) {
+        // group by the uniform scalars, preserving request order on output
+        let mut order: Vec<usize> = (0..reqs.len()).collect();
+        order.sort_by_key(|&i| (reqs[i].mem_ops, reqs[i].compute_iters));
+        let mut results = vec![0.0f64; reqs.len()];
+        let mut start = 0;
+        while start < order.len() {
+            let key = (
+                reqs[order[start]].mem_ops,
+                reqs[order[start]].compute_iters,
+            );
+            let mut end = start;
+            while end < order.len()
+                && (reqs[order[end]].mem_ops, reqs[order[end]].compute_iters) == key
+                && end - start < LANES
+            {
+                end += 1;
+            }
+            let group: Vec<PayloadReq> = order[start..end].iter().map(|&i| reqs[i]).collect();
+            let vals = self
+                .run_group(&group)
+                .expect("payload artifact execution failed");
+            for (k, &i) in order[start..end].iter().enumerate() {
+                results[i] = vals[k];
+            }
+            start = end;
+        }
+        out.extend_from_slice(&results);
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(seed: i64, m: i64, c: i64) -> PayloadReq {
+        PayloadReq {
+            seed,
+            mem_ops: m,
+            compute_iters: c,
+        }
+    }
+
+    #[test]
+    fn native_engine_matches_payload_native() {
+        let mut e = NativePayloadEngine::default();
+        let reqs = [req(1, 4, 8), req(2, 4, 8)];
+        let mut out = vec![];
+        e.execute(&reqs, &mut out);
+        assert_eq!(out, vec![payload_native(1, 4, 8), payload_native(2, 4, 8)]);
+        assert_eq!(e.calls, 1);
+    }
+
+    /// ULP-level agreement between the AOT Pallas kernel (via PJRT) and the
+    /// native twin — the cross-language correctness check of the whole
+    /// three-layer stack. Skipped when artifacts are absent.
+    #[test]
+    fn xla_engine_matches_native_twin() {
+        let Ok(mut e) = XlaPayloadEngine::from_artifacts() else {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        };
+        let reqs: Vec<PayloadReq> = (0..32).map(|i| req(i * 7919 + 3, 16, 100)).collect();
+        let mut out = vec![];
+        e.execute(&reqs, &mut out);
+        assert_eq!(out.len(), 32);
+        for (r, got) in reqs.iter().zip(&out) {
+            let want = payload_native(r.seed, r.mem_ops, r.compute_iters);
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 1e-12, "seed {}: {} vs {}", r.seed, got, want);
+        }
+        assert_eq!(e.executions, 1, "one PJRT execution for a uniform warp");
+    }
+
+    #[test]
+    fn xla_engine_groups_mixed_sizes() {
+        let Ok(mut e) = XlaPayloadEngine::from_artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // two distinct (mem_ops, iters) groups interleaved
+        let reqs = [
+            req(1, 4, 8),
+            req(2, 8, 16),
+            req(3, 4, 8),
+            req(4, 8, 16),
+        ];
+        let mut out = vec![];
+        e.execute(&reqs, &mut out);
+        assert_eq!(e.executions, 2);
+        for (r, got) in reqs.iter().zip(&out) {
+            let want = payload_native(r.seed, r.mem_ops, r.compute_iters);
+            assert!(((got - want) / want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn xla_engine_zero_iters_exact() {
+        let Ok(mut e) = XlaPayloadEngine::from_artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // mem-walk only: integer gather path must be bit-exact
+        let reqs: Vec<PayloadReq> = (0..8).map(|i| req(100 + i, 32, 0)).collect();
+        let mut out = vec![];
+        e.execute(&reqs, &mut out);
+        for (r, got) in reqs.iter().zip(&out) {
+            assert_eq!(*got, payload_native(r.seed, 32, 0), "seed {}", r.seed);
+        }
+    }
+}

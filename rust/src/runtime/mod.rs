@@ -1,0 +1,45 @@
+//! The PJRT runtime: loads the AOT-compiled JAX/Pallas payload kernel and
+//! executes it from the simulator's warp hot path.
+//!
+//! Architecture (see DESIGN.md): Python/JAX runs **once**, at build time
+//! (`make artifacts`), lowering the L2 model + L1 Pallas kernel to HLO
+//! *text*; this module loads `artifacts/payload.hlo.txt`, compiles it on
+//! the PJRT CPU client, and serves warp-batched payload requests — Python
+//! is never on the request path.
+
+pub mod engine;
+
+pub use engine::{NativePayloadEngine, XlaPayloadEngine};
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Default artifact location relative to the repo root.
+pub const PAYLOAD_ARTIFACT: &str = "artifacts/payload.hlo.txt";
+
+/// Locate the artifacts directory from the current or ancestor directories
+/// (tests and benches run from various working directories).
+pub fn find_artifact(name: &str) -> Option<std::path::PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let candidate = dir.join("artifacts").join(name);
+        if candidate.exists() {
+            return Some(candidate);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// Load an HLO-text artifact and compile it on the PJRT CPU client.
+pub fn compile_artifact(path: &Path) -> Result<(xla::PjRtClient, xla::PjRtLoadedExecutable)> {
+    let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )
+    .with_context(|| format!("parsing HLO text at {path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).context("PJRT compile")?;
+    Ok((client, exe))
+}

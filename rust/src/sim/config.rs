@@ -1,0 +1,243 @@
+//! Device cost models.
+//!
+//! All simulator charges are expressed in device cycles through a
+//! [`DeviceSpec`]. Two calibrated specs reproduce the paper's testbed
+//! (Table 2: one GH200 node — 72-core Grace CPU at 3.0 GHz, H100 GPU with
+//! 4.02 TB/s HBM):
+//!
+//! * [`DeviceSpec::h100`] — 132 SMs, 4 warp schedulers each, 1.8 GHz;
+//!   latencies from public H100 microbenchmarking literature (L1 ≈ 32 cy,
+//!   L2 ≈ 240 cy, HBM ≈ 600 cy, global atomics ≈ 250 cy at the L2).
+//! * [`DeviceSpec::grace72`] — 72 Neoverse-V2 cores, 3.0 GHz, out-of-order
+//!   cores modeled as `ipc`-wide with deep MLP (prefetchers), DRAM ≈ 280 cy.
+//!
+//! The numbers are *calibration inputs*, not claims: the evaluation
+//! (EXPERIMENTS.md) compares performance *shapes*, which are robust to
+//! ±2× changes in any single constant (sensitivity checked in tests).
+
+/// Cycle costs of one device.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Core clock in GHz (converts cycles to seconds).
+    pub clock_ghz: f64,
+    /// Number of SMs (GPU) or cores (CPU).
+    pub sms: usize,
+    /// Warp instructions each SM can issue per cycle (4 schedulers on
+    /// H100). CPUs: 1 (each core is its own "SM" running one worker).
+    pub issue_warps: usize,
+    /// Scalar instructions per cycle for a single instruction stream
+    /// (models CPU superscalar/OoO width; 1 for a GPU lane).
+    pub ipc: f64,
+    /// Lanes a thread-level worker drives in lockstep (32 on the GPU —
+    /// the warp; 1 on the CPU — scalar cores, no divergence).
+    pub warp_width: usize,
+
+    // --- per-instruction costs (cycles, before ipc scaling) ---
+    pub alu: u64,
+    pub imul: u64,
+    pub idiv: u64,
+    pub fma: u64,
+    pub fdiv: u64,
+    pub branch: u64,
+
+    // --- memory (latencies in cycles) ---
+    pub l1_lat: u64,
+    pub l2_lat: u64,
+    pub mem_lat: u64,
+    /// Probability that a default (`.ca`) cached load hits L1 — used as a
+    /// deterministic blend: `cost = p·l1 + (1−p)·l2`.
+    pub l1_hit_rate: f64,
+    /// Memory-level parallelism of one *serial* instruction stream:
+    /// back-to-back dependent-ish loads overlap by this factor (GPU thread:
+    /// ~2 in-flight; CPU core: ~8 via OoO + prefetch). This is what makes a
+    /// single-thread merge latency-bound on the GPU (§6.2 mergesort).
+    pub serial_mlp: f64,
+    /// MLP for the payload's pseudo-random table walk (independent
+    /// addresses, so deeper overlap than pointer-chasing).
+    pub payload_mlp: f64,
+
+    // --- synchronization ---
+    /// Atomic RMW at the L2 coherence point (uncontended).
+    pub atomic: u64,
+    /// Additional serialization window per *conflicting* atomic on the same
+    /// word: concurrent CASes queue behind each other. This constant drives
+    /// the global-queue flat-line and the Fig. 4 crossover.
+    pub atomic_serialize: u64,
+    /// `__threadfence()` / full fence.
+    pub fence: u64,
+    /// `__syncthreads()` block barrier.
+    pub barrier: u64,
+    /// Warp-level shuffle/broadcast (`WarpShfl` in Algorithm 1).
+    pub shfl: u64,
+
+    // --- task-runtime overheads (fixed per-event costs) ---
+    /// Per persistent-kernel loop iteration bookkeeping.
+    pub loop_overhead: u64,
+    /// Per spawn: record allocation + argument copy base cost.
+    pub spawn_overhead: u64,
+    /// One-time kernel-launch + runtime-init cost in cycles (charged once
+    /// per run; the paper's "fixed runtime overheads" visible at small n).
+    pub startup: u64,
+}
+
+impl DeviceSpec {
+    /// H100 (SXM) as in Table 2 / Figure 2.
+    pub fn h100() -> DeviceSpec {
+        DeviceSpec {
+            name: "h100",
+            clock_ghz: 1.8,
+            sms: 132,
+            issue_warps: 4,
+            ipc: 1.0,
+            warp_width: 32,
+            alu: 1,
+            imul: 2,
+            idiv: 24,
+            fma: 1,
+            fdiv: 24,
+            branch: 2,
+            l1_lat: 32,
+            l2_lat: 240,
+            mem_lat: 600,
+            l1_hit_rate: 0.7,
+            serial_mlp: 2.0,
+            payload_mlp: 4.0,
+            atomic: 250,
+            atomic_serialize: 24,
+            fence: 40,
+            barrier: 30,
+            shfl: 1,
+            loop_overhead: 12,
+            spawn_overhead: 40,
+            // kernel launch + on-device queue/pool init. The paper times
+            // kernel execution only; this is the in-kernel part of its
+            // "fixed runtime overheads" visible at small n (§6.2).
+            startup: 50_000, // ~28 us
+        }
+    }
+
+    /// 72-core Grace CPU (Neoverse V2) as in Table 2.
+    pub fn grace72() -> DeviceSpec {
+        DeviceSpec {
+            name: "grace72",
+            clock_ghz: 3.0,
+            sms: 72,
+            issue_warps: 1,
+            ipc: 3.0,
+            warp_width: 1,
+            alu: 1,
+            imul: 3,
+            idiv: 12,
+            fma: 1,
+            fdiv: 12,
+            branch: 1,
+            l1_lat: 4,
+            l2_lat: 30,
+            mem_lat: 280,
+            l1_hit_rate: 0.9,
+            // OoO window + hardware prefetchers keep many sequential-stream
+            // accesses in flight: streaming code runs near L2/L1 speed.
+            serial_mlp: 32.0,
+            payload_mlp: 12.0,
+            atomic: 40,
+            atomic_serialize: 30,
+            fence: 20,
+            barrier: 60,
+            shfl: 1, // unused on CPU
+            loop_overhead: 8,
+            // OpenMP task creation is ~100s of ns on real runtimes
+            spawn_overhead: 120,
+            startup: 15_000, // ~5 us: omp runtime dispatch (after warmup)
+        }
+    }
+
+    /// Convert cycles to seconds.
+    pub fn seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.clock_ghz * 1e9)
+    }
+
+    /// Blended cost of a default cached (`.ca`) load.
+    pub fn cached_load(&self) -> u64 {
+        (self.l1_hit_rate * self.l1_lat as f64
+            + (1.0 - self.l1_hit_rate) * self.l2_lat as f64) as u64
+    }
+
+    /// Cost of an L1-bypassing (`.cg`) load — L2 is the coherence point.
+    pub fn cg_load(&self) -> u64 {
+        self.l2_lat
+    }
+
+    /// Effective cost of one access in a serial streaming loop
+    /// (merge/copy): latency divided by the stream's MLP.
+    pub fn serial_access(&self) -> u64 {
+        ((self.mem_lat as f64) / self.serial_mlp).max(1.0) as u64
+    }
+
+    /// Effective cost of one payload table access (random, independent).
+    pub fn payload_access(&self) -> u64 {
+        ((self.mem_lat as f64) / self.payload_mlp).max(1.0) as u64
+    }
+
+    /// Scale a pure-compute cycle count by the scalar stream's IPC.
+    pub fn scale_compute(&self, cycles: u64) -> u64 {
+        ((cycles as f64) / self.ipc).ceil() as u64
+    }
+
+    /// Workers this device runs: (SMs × issue capacity) bounds *throughput*,
+    /// but any number of workers may be resident; see the scheduler.
+    pub fn peak_warp_throughput(&self) -> usize {
+        self.sms * self.issue_warps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h100_sane() {
+        let d = DeviceSpec::h100();
+        assert_eq!(d.sms, 132);
+        assert!(d.mem_lat > d.l2_lat && d.l2_lat > d.l1_lat);
+        assert!(d.cached_load() >= d.l1_lat && d.cached_load() <= d.l2_lat);
+        assert_eq!(d.cg_load(), d.l2_lat);
+    }
+
+    #[test]
+    fn grace_sane() {
+        let d = DeviceSpec::grace72();
+        assert_eq!(d.sms, 72);
+        assert_eq!(d.issue_warps, 1);
+        assert!(d.ipc > 1.0);
+    }
+
+    #[test]
+    fn seconds_conversion() {
+        let d = DeviceSpec::h100();
+        let s = d.seconds(1_800_000_000);
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serial_access_exposes_gpu_latency() {
+        // The §6.2 mergesort effect: per-element serial access cost is much
+        // higher on the GPU than the CPU.
+        let g = DeviceSpec::h100();
+        let c = DeviceSpec::grace72();
+        assert!(
+            g.serial_access() > 5 * c.serial_access(),
+            "gpu {} vs cpu {}",
+            g.serial_access(),
+            c.serial_access()
+        );
+    }
+
+    #[test]
+    fn compute_scaling() {
+        let c = DeviceSpec::grace72();
+        assert_eq!(c.scale_compute(300), 100);
+        let g = DeviceSpec::h100();
+        assert_eq!(g.scale_compute(300), 300);
+    }
+}

@@ -1,0 +1,742 @@
+//! Per-lane bytecode interpreter.
+//!
+//! Executes one *segment* of a task's state machine (from a state entry up
+//! to `PrepareJoin` or `FinishTask`) for one lane, accumulating the cycle
+//! cost and the dynamic-path hash the divergence model consumes
+//! (`sim::divergence`). The interpreter is *resumable*: when the task calls
+//! the `payload` intrinsic and an XLA engine is attached, execution suspends
+//! with [`StepResult::NeedPayload`] so the owning warp can batch all lanes'
+//! payload calls into one PJRT execution (the warp-wide
+//! `do_memory_and_compute` of §6.3), then resumes with the kernel's result.
+//!
+//! Side effects visible to the runtime (spawns, the join/finish decision)
+//! are *collected*, not applied — the coordinator owns records, queues and
+//! their cost accounting.
+
+use super::config::DeviceSpec;
+use super::divergence;
+use super::intrinsics::{self, IntrCtx};
+use super::memory::Memory;
+use crate::coordinator::records::{RecordPool, TaskId};
+use crate::ir::bytecode::*;
+use crate::ir::intrinsics::Intrinsic;
+use crate::ir::types::Value;
+
+/// Max arguments of a task function (spawn requests are fixed-size to keep
+/// the hot path allocation-free; enforced at compile time).
+pub const MAX_TASK_ARGS: usize = 8;
+/// Runaway-loop guard per segment.
+const MAX_SEGMENT_INSNS: u64 = 2_000_000_000;
+
+/// A collected spawn request.
+#[derive(Clone, Copy, Debug)]
+pub struct SpawnReq {
+    pub func: FuncId,
+    pub argc: u8,
+    pub args: [u64; MAX_TASK_ARGS],
+    pub queue: u8,
+}
+
+/// How a segment ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SegmentEnd {
+    /// `__gtap_prepare_for_join(next_state)` — suspend until children done;
+    /// re-enqueue the continuation to EPAQ queue `queue`.
+    Join { next_state: u16, queue: u8 },
+    /// `__gtap_finish_task()`.
+    Finish,
+}
+
+/// Result of a completed segment. Spawn requests stay in the lane frame
+/// (read them via [`LaneFrame::spawns`]) so the hot path never allocates.
+#[derive(Clone, Copy, Debug)]
+pub struct SegmentOutput {
+    pub end: SegmentEnd,
+    /// Divergence-model cost of this lane's segment.
+    pub cycles: u64,
+    /// Dynamic-path hash (see `sim::divergence`).
+    pub path: u64,
+}
+
+/// Outcome of driving a lane.
+#[derive(Clone, Debug)]
+pub enum StepResult {
+    Done(SegmentOutput),
+    /// Suspended at a `payload(seed, mem_ops, compute_iters)` call; resume
+    /// with [`Interp::resume_payload`].
+    NeedPayload {
+        seed: i64,
+        mem_ops: i64,
+        compute_iters: i64,
+    },
+}
+
+/// Execution state of one lane (reused across segments via [`LaneFrame::reset`]).
+#[derive(Clone, Debug)]
+pub struct LaneFrame {
+    pub task: TaskId,
+    pub func: FuncId,
+    pub lane: u32,
+    pc: Pc,
+    regs: Vec<u64>,
+    compute_cycles: u64,
+    mem_cycles: u64,
+    path: u64,
+    spawns: Vec<SpawnReq>,
+    /// Destination register of a pending payload suspension.
+    pending_payload_dst: Option<Reg>,
+    /// Task-data offsets already touched this segment: after the first
+    /// access a field lives in a register (what -O3 does with the record
+    /// pointer), so later reads cost ALU, not L2 latency.
+    td_touched: u64,
+    /// `parallel_for` nesting depth and region accumulators.
+    par_depth: u32,
+    par_compute: u64,
+    par_mem: u64,
+    par_trips: u64,
+}
+
+impl LaneFrame {
+    /// Spawn requests collected by the last completed segment (valid until
+    /// the next [`LaneFrame::reset`]).
+    pub fn spawns(&self) -> &[SpawnReq] {
+        &self.spawns
+    }
+
+    pub fn new() -> LaneFrame {
+        LaneFrame {
+            task: 0,
+            func: 0,
+            lane: 0,
+            pc: 0,
+            regs: Vec::new(),
+            compute_cycles: 0,
+            mem_cycles: 0,
+            path: 0,
+            spawns: Vec::new(),
+            pending_payload_dst: None,
+            td_touched: 0,
+            par_depth: 0,
+            par_compute: 0,
+            par_mem: 0,
+            par_trips: 0,
+        }
+    }
+
+    /// Prepare the frame to run `task` (function `func`) from `state`.
+    pub fn reset(&mut self, module: &Module, task: TaskId, func: FuncId, state: u16, lane: u32) {
+        let fc = module.func(func);
+        self.task = task;
+        self.func = func;
+        self.lane = lane;
+        self.pc = fc.state_entries[state as usize];
+        self.regs.clear();
+        self.regs.resize(fc.nregs as usize, 0);
+        self.compute_cycles = 0;
+        self.mem_cycles = 0;
+        // seed the path hash with (func, state): different task functions /
+        // states are different instruction streams — always divergent.
+        self.path = divergence::fold(divergence::fold(0x5EED, func as u64), state as u64);
+        self.spawns.clear();
+        self.pending_payload_dst = None;
+        self.td_touched = 0;
+        self.par_depth = 0;
+        self.par_compute = 0;
+        self.par_mem = 0;
+        self.par_trips = 0;
+    }
+}
+
+impl Default for LaneFrame {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The interpreter configuration for one run.
+pub struct Interp<'a> {
+    pub module: &'a Module,
+    pub dev: &'a DeviceSpec,
+    /// Threads cooperating on one task (1 = thread-level worker;
+    /// block size = block-level worker).
+    pub block_width: u32,
+    /// When true, `payload` suspends for XLA batching instead of running
+    /// natively.
+    pub xla_payload: bool,
+}
+
+impl<'a> Interp<'a> {
+    /// Provide the payload result after a [`StepResult::NeedPayload`]
+    /// suspension and continue the segment.
+    pub fn resume_payload(
+        &self,
+        frame: &mut LaneFrame,
+        value: f64,
+        mem: &mut Memory,
+        records: &mut RecordPool,
+        log: &mut Vec<String>,
+    ) -> StepResult {
+        let dst = frame
+            .pending_payload_dst
+            .take()
+            .expect("resume_payload without suspension");
+        frame.regs[dst as usize] = Value::from_f64(value).0;
+        self.run(frame, mem, records, log)
+    }
+
+    /// Charge compute cycles (ALU/branch), respecting parallel_for scaling.
+    #[inline]
+    fn charge_c(&self, frame: &mut LaneFrame, c: u64) {
+        if frame.par_depth > 0 {
+            frame.par_compute += c;
+        } else {
+            frame.compute_cycles += c;
+        }
+    }
+
+    /// Charge memory cycles (latencies, already device-priced).
+    #[inline]
+    fn charge_m(&self, frame: &mut LaneFrame, c: u64) {
+        if frame.par_depth > 0 {
+            frame.par_mem += c;
+        } else {
+            frame.mem_cycles += c;
+        }
+    }
+
+    /// Drive the lane until the segment ends or suspends.
+    pub fn run(
+        &self,
+        frame: &mut LaneFrame,
+        mem: &mut Memory,
+        records: &mut RecordPool,
+        log: &mut Vec<String>,
+    ) -> StepResult {
+        let fc = self.module.func(frame.func);
+        let dev = self.dev;
+        let mut executed: u64 = 0;
+        loop {
+            executed += 1;
+            if executed > MAX_SEGMENT_INSNS {
+                panic!(
+                    "segment of task {} (func {:?}, pc {}) exceeded {} instructions — \
+                     infinite loop in GTaP-C code?",
+                    frame.task, fc.name, frame.pc, MAX_SEGMENT_INSNS
+                );
+            }
+            let insn = fc.insns[frame.pc as usize];
+            frame.pc += 1;
+            match insn {
+                Insn::Const { dst, val } => {
+                    frame.regs[dst as usize] = val;
+                    self.charge_c(frame, dev.alu);
+                }
+                Insn::Mov { dst, src } => {
+                    frame.regs[dst as usize] = frame.regs[src as usize];
+                    self.charge_c(frame, dev.alu);
+                }
+                Insn::Bin { op, dst, a, b } => {
+                    let x = Value(frame.regs[a as usize]);
+                    let y = Value(frame.regs[b as usize]);
+                    let (v, cost) = eval_bin(op, x, y, dev);
+                    frame.regs[dst as usize] = v.0;
+                    self.charge_c(frame, cost);
+                }
+                Insn::Un { op, dst, a } => {
+                    let x = Value(frame.regs[a as usize]);
+                    let v = match op {
+                        UnKind::INeg => Value::from_i64(x.as_i64().wrapping_neg()),
+                        UnKind::IBitNot => Value(!x.0),
+                        UnKind::LNot => Value::from_bool(x.0 == 0),
+                        UnKind::FNeg => Value::from_f64(-x.as_f64()),
+                        UnKind::IToF => Value::from_f64(x.as_i64() as f64),
+                        UnKind::FToI => Value::from_i64(x.as_f64() as i64),
+                    };
+                    frame.regs[dst as usize] = v.0;
+                    self.charge_c(frame, dev.alu);
+                }
+                Insn::Jmp { target } => {
+                    frame.pc = target;
+                    self.charge_c(frame, dev.branch);
+                }
+                Insn::Br { cond, t, f } => {
+                    let taken = frame.regs[cond as usize] != 0;
+                    frame.pc = if taken { t } else { f };
+                    self.charge_c(frame, dev.branch);
+                    // fold the decision into the dynamic path
+                    frame.path =
+                        divergence::fold(frame.path, (frame.pc as u64) << 1 | taken as u64);
+                }
+                Insn::LdG { dst, addr, cache } => {
+                    let a = frame.regs[addr as usize];
+                    frame.regs[dst as usize] = mem.load(a);
+                    let cost = match cache {
+                        CacheOp::Ca => dev.cached_load(),
+                        CacheOp::Cg => dev.cg_load(),
+                    };
+                    self.charge_m(frame, cost);
+                }
+                Insn::StG { addr, src, cache } => {
+                    let a = frame.regs[addr as usize];
+                    mem.store(a, frame.regs[src as usize]);
+                    let cost = match cache {
+                        CacheOp::Ca => dev.l1_lat / 2,
+                        CacheOp::Cg => dev.l2_lat / 4,
+                    };
+                    self.charge_m(frame, cost.max(1));
+                }
+                Insn::LdTd { dst, off } => {
+                    frame.regs[dst as usize] = records.data(frame.task)[off as usize];
+                    // task records are L2-resident; the first touch of a
+                    // field pays the latency, later accesses within the
+                    // segment are register-resident (as compiled by -O3)
+                    let bit = 1u64 << (off as u64 & 63);
+                    if frame.td_touched & bit == 0 {
+                        frame.td_touched |= bit;
+                        self.charge_m(frame, dev.cg_load());
+                    } else {
+                        self.charge_c(frame, dev.alu);
+                    }
+                }
+                Insn::StTd { off, src } => {
+                    records.data_mut(frame.task)[off as usize] = frame.regs[src as usize];
+                    frame.td_touched |= 1u64 << (off as u64 & 63);
+                    self.charge_m(frame, (dev.l2_lat / 4).max(1));
+                }
+                Insn::Spawn {
+                    func,
+                    arg_base,
+                    argc,
+                    queue,
+                } => {
+                    let mut args = [0u64; MAX_TASK_ARGS];
+                    for i in 0..argc as usize {
+                        let r = fc.arg_pool[arg_base as usize + i];
+                        args[i] = frame.regs[r as usize];
+                    }
+                    let q = frame.regs[queue as usize] as u8;
+                    frame.spawns.push(SpawnReq {
+                        func,
+                        argc,
+                        args,
+                        queue: q,
+                    });
+                    self.charge_c(frame, dev.spawn_overhead);
+                }
+                Insn::PrepareJoin { next_state, queue } => {
+                    let q = frame.regs[queue as usize] as u8;
+                    self.charge_m(frame, dev.cg_load() + dev.fence);
+                    return StepResult::Done(self.seal(
+                        frame,
+                        SegmentEnd::Join {
+                            next_state,
+                            queue: q,
+                        },
+                    ));
+                }
+                Insn::FinishTask => {
+                    self.charge_m(frame, dev.fence);
+                    return StepResult::Done(self.seal(frame, SegmentEnd::Finish));
+                }
+                Insn::ChildResult { dst, slot } => {
+                    let child = records.child(frame.task, slot);
+                    let cfunc = records.meta(child).func;
+                    let off = self
+                        .module
+                        .func(cfunc)
+                        .layout
+                        .result_offset()
+                        .expect("capturing spawn of non-void task");
+                    frame.regs[dst as usize] = records.data(child)[off as usize];
+                    self.charge_m(frame, dev.cg_load());
+                }
+                Insn::Intr {
+                    id,
+                    dst,
+                    arg_base,
+                    argc,
+                    has_dst,
+                } => {
+                    let mut args = [Value(0); 8];
+                    for i in 0..argc as usize {
+                        let r = fc.arg_pool[arg_base as usize + i];
+                        args[i] = Value(frame.regs[r as usize]);
+                    }
+                    if id == Intrinsic::Payload && self.xla_payload {
+                        // charge the analytic cost and the path token now;
+                        // the *value* comes from the AOT kernel via PJRT.
+                        let (seed, m, c) =
+                            (args[0].as_i64(), args[1].as_i64(), args[2].as_i64());
+                        self.charge_m(frame, intrinsics::payload_cycles(dev, m, c));
+                        frame.path = divergence::fold(
+                            frame.path,
+                            crate::util::prng::mix64((m as u64) ^ (c as u64).rotate_left(17) ^ 0xFA),
+                        );
+                        frame.pending_payload_dst = Some(dst);
+                        return StepResult::NeedPayload {
+                            seed,
+                            mem_ops: m,
+                            compute_iters: c,
+                        };
+                    }
+                    let mut ctx = IntrCtx {
+                        mem,
+                        dev,
+                        lane_id: frame.lane,
+                        worker_id: 0,
+                        log,
+                    };
+                    let out = intrinsics::execute(id, &args[..argc as usize], &mut ctx);
+                    if has_dst {
+                        frame.regs[dst as usize] = out.value.0;
+                    }
+                    self.charge_m(frame, out.cycles);
+                    if out.path_token != 0 {
+                        frame.path = divergence::fold(frame.path, out.path_token);
+                    }
+                }
+                Insn::ParEnter { trips } => {
+                    if frame.par_depth == 0 {
+                        frame.par_compute = 0;
+                        frame.par_mem = 0;
+                        frame.par_trips = frame.regs[trips as usize];
+                    }
+                    frame.par_depth += 1;
+                }
+                Insn::ParExit => {
+                    frame.par_depth -= 1;
+                    if frame.par_depth == 0 {
+                        // block threads split the trips; cost divides by the
+                        // cooperating width, plus the closing __syncthreads().
+                        let w = self.block_width.max(1) as u64;
+                        frame.compute_cycles += frame.par_compute.div_ceil(w);
+                        frame.mem_cycles += frame.par_mem.div_ceil(w);
+                        frame.compute_cycles += dev.barrier;
+                        frame.par_compute = 0;
+                        frame.par_mem = 0;
+                    }
+                }
+                Insn::Trap => {
+                    panic!(
+                        "__trap() reached in task {} (func {:?}, pc {})",
+                        frame.task,
+                        fc.name,
+                        frame.pc - 1
+                    );
+                }
+            }
+        }
+    }
+
+    fn seal(&self, frame: &mut LaneFrame, end: SegmentEnd) -> SegmentOutput {
+        SegmentOutput {
+            end,
+            cycles: self.dev.scale_compute(frame.compute_cycles) + frame.mem_cycles,
+            path: frame.path,
+        }
+    }
+}
+
+fn eval_bin(op: BinKind, x: Value, y: Value, dev: &DeviceSpec) -> (Value, u64) {
+    use BinKind::*;
+    let v = match op {
+        IAdd => Value::from_i64(x.as_i64().wrapping_add(y.as_i64())),
+        ISub => Value::from_i64(x.as_i64().wrapping_sub(y.as_i64())),
+        IMul => Value::from_i64(x.as_i64().wrapping_mul(y.as_i64())),
+        IDiv => Value::from_i64(if y.as_i64() == 0 {
+            0
+        } else {
+            x.as_i64().wrapping_div(y.as_i64())
+        }),
+        IRem => Value::from_i64(if y.as_i64() == 0 {
+            0
+        } else {
+            x.as_i64().wrapping_rem(y.as_i64())
+        }),
+        IAnd => Value(x.0 & y.0),
+        IOr => Value(x.0 | y.0),
+        IXor => Value(x.0 ^ y.0),
+        IShl => Value::from_i64(x.as_i64().wrapping_shl(y.as_i64() as u32)),
+        IShr => Value::from_i64(x.as_i64().wrapping_shr(y.as_i64() as u32)),
+        ILt => Value::from_bool(x.as_i64() < y.as_i64()),
+        ILe => Value::from_bool(x.as_i64() <= y.as_i64()),
+        IGt => Value::from_bool(x.as_i64() > y.as_i64()),
+        IGe => Value::from_bool(x.as_i64() >= y.as_i64()),
+        IEq => Value::from_bool(x.as_i64() == y.as_i64()),
+        INe => Value::from_bool(x.as_i64() != y.as_i64()),
+        FAdd => Value::from_f64(x.as_f64() + y.as_f64()),
+        FSub => Value::from_f64(x.as_f64() - y.as_f64()),
+        FMul => Value::from_f64(x.as_f64() * y.as_f64()),
+        FDiv => Value::from_f64(x.as_f64() / y.as_f64()),
+        FLt => Value::from_bool(x.as_f64() < y.as_f64()),
+        FLe => Value::from_bool(x.as_f64() <= y.as_f64()),
+        FGt => Value::from_bool(x.as_f64() > y.as_f64()),
+        FGe => Value::from_bool(x.as_f64() >= y.as_f64()),
+        FEq => Value::from_bool(x.as_f64() == y.as_f64()),
+        FNe => Value::from_bool(x.as_f64() != y.as_f64()),
+    };
+    let cost = match op {
+        IMul => dev.imul,
+        IDiv | IRem => dev.idiv,
+        FDiv => dev.fdiv,
+        FAdd | FSub | FMul => dev.fma,
+        _ => dev.alu,
+    };
+    (v, cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile_default;
+    use crate::coordinator::records::{RecordPool, NO_TASK};
+    use crate::sim::config::DeviceSpec;
+
+    /// Compile, spawn a root task with `args`, and run a single segment.
+    #[allow(clippy::type_complexity)]
+    fn run_one(
+        src: &str,
+        func: &str,
+        args: &[i64],
+    ) -> (SegmentOutput, Vec<SpawnReq>, RecordPool, Memory, Module, Vec<String>) {
+        let module = compile_default(src).unwrap();
+        let fid = module.func_id(func).unwrap();
+        let words = module
+            .funcs
+            .iter()
+            .map(|f| f.layout.words())
+            .max()
+            .unwrap()
+            .max(1);
+        let mut records = RecordPool::new(64, words, 8);
+        let mut mem = Memory::new(module.globals_words());
+        let task = records.alloc(fid, NO_TASK).unwrap();
+        for (i, &a) in args.iter().enumerate() {
+            records.data_mut(task)[i] = a as u64;
+        }
+        let dev = DeviceSpec::h100();
+        let interp = Interp {
+            module: &module,
+            dev: &dev,
+            block_width: 1,
+            xla_payload: false,
+        };
+        let mut frame = LaneFrame::new();
+        frame.reset(&module, task, fid, 0, 0);
+        let mut log = vec![];
+        let out = match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+            StepResult::Done(o) => o,
+            other => panic!("unexpected {other:?}"),
+        };
+        let spawns = frame.spawns().to_vec();
+        (out, spawns, records, mem, module, log)
+    }
+
+    const FIB: &str = r#"
+        #pragma gtap function
+        int fib(int n) {
+            if (n < 2) return n;
+            int a; int b;
+            #pragma gtap task queue(1)
+            a = fib(n - 1);
+            #pragma gtap task queue(1)
+            b = fib(n - 2);
+            #pragma gtap taskwait queue(2)
+            return a + b;
+        }
+    "#;
+
+    #[test]
+    fn fib_base_case_finishes_with_result() {
+        let (out, spawns, records, _, module, _) = run_one(FIB, "fib", &[1]);
+        assert_eq!(out.end, SegmentEnd::Finish);
+        assert!(spawns.is_empty());
+        let off = module.func(0).layout.result_offset().unwrap();
+        assert_eq!(records.data(0)[off as usize], 1);
+        assert!(out.cycles > 0);
+    }
+
+    #[test]
+    fn fib_recursive_case_spawns_and_joins() {
+        let (out, spawns, _, _, _, _) = run_one(FIB, "fib", &[5]);
+        match out.end {
+            SegmentEnd::Join { next_state, queue } => {
+                assert_eq!(next_state, 1);
+                assert_eq!(queue, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(spawns.len(), 2);
+        assert_eq!(spawns[0].args[0] as i64, 4);
+        assert_eq!(spawns[1].args[0] as i64, 3);
+        assert_eq!(spawns[0].queue, 1);
+    }
+
+    #[test]
+    fn divergent_inputs_produce_distinct_paths() {
+        let (a, _, _, _, _, _) = run_one(FIB, "fib", &[1]); // base case
+        let (b, _, _, _, _, _) = run_one(FIB, "fib", &[5]); // recursive case
+        let (c, _, _, _, _, _) = run_one(FIB, "fib", &[1]); // base again
+        assert_ne!(a.path, b.path);
+        assert_eq!(a.path, c.path, "same dynamic path hashes equal");
+    }
+
+    #[test]
+    fn loops_execute() {
+        let src = "#pragma gtap function\nint sum(int n) {\n\
+                   int s = 0;\nfor (int i = 1; i <= n; i += 1) { s = s + i; }\n\
+                   return s; }";
+        let (out, _, records, _, module, _) = run_one(src, "sum", &[10]);
+        assert_eq!(out.end, SegmentEnd::Finish);
+        let off = module.func(0).layout.result_offset().unwrap();
+        assert_eq!(records.data(0)[off as usize] as i64, 55);
+    }
+
+    #[test]
+    fn global_memory_roundtrip() {
+        let src = "global int g;\n#pragma gtap function\nvoid f(int n) { g = n * 3; }";
+        let (_, _, _, mem, module, _) = run_one(src, "f", &[7]);
+        assert_eq!(mem.load(module.global_addr("g").unwrap()) as i64, 21);
+    }
+
+    #[test]
+    fn intrinsic_results_flow() {
+        let src = "#pragma gtap function\nint f(int n) { return fib_serial(n); }";
+        let (out, _, records, _, module, _) = run_one(src, "f", &[10]);
+        assert_eq!(out.end, SegmentEnd::Finish);
+        let off = module.func(0).layout.result_offset().unwrap();
+        assert_eq!(records.data(0)[off as usize] as i64, 55);
+    }
+
+    #[test]
+    fn print_flows_to_log() {
+        let src = "#pragma gtap function\nvoid f(int n) { print_int(n + 1); }";
+        let (_, _, _, _, _, log) = run_one(src, "f", &[41]);
+        assert_eq!(log, vec!["42"]);
+    }
+
+    #[test]
+    fn payload_native_runs_inline() {
+        let src = "#pragma gtap function\nfloat f(int s) { return payload(s, 4, 8); }";
+        let (out, _, records, _, module, _) = run_one(src, "f", &[42]);
+        assert_eq!(out.end, SegmentEnd::Finish);
+        let off = module.func(0).layout.result_offset().unwrap();
+        let got = f64::from_bits(records.data(0)[off as usize]);
+        let want = crate::sim::intrinsics::payload_native(42, 4, 8);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn payload_xla_suspends() {
+        let src = "#pragma gtap function\nfloat f(int s) { return payload(s, 4, 8); }";
+        let module = compile_default(src).unwrap();
+        let mut records = RecordPool::new(4, 4, 0);
+        let mut mem = Memory::new(0);
+        let task = records.alloc(0, NO_TASK).unwrap();
+        records.data_mut(task)[0] = 42;
+        let dev = DeviceSpec::h100();
+        let interp = Interp {
+            module: &module,
+            dev: &dev,
+            block_width: 1,
+            xla_payload: true,
+        };
+        let mut frame = LaneFrame::new();
+        frame.reset(&module, task, 0, 0, 0);
+        let mut log = vec![];
+        match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+            StepResult::NeedPayload {
+                seed,
+                mem_ops,
+                compute_iters,
+            } => {
+                assert_eq!((seed, mem_ops, compute_iters), (42, 4, 8));
+            }
+            other => panic!("{other:?}"),
+        }
+        // resume with an arbitrary value and check it lands in the result
+        let out = interp.resume_payload(&mut frame, 6.5, &mut mem, &mut records, &mut log);
+        match out {
+            StepResult::Done(o) => assert_eq!(o.end, SegmentEnd::Finish),
+            other => panic!("{other:?}"),
+        }
+        let off = module.func(0).layout.result_offset().unwrap();
+        assert_eq!(f64::from_bits(records.data(0)[off as usize]), 6.5);
+    }
+
+    #[test]
+    fn parfor_scales_with_block_width() {
+        let src = "#pragma gtap function\nvoid f(int n) {\n\
+                   parallel_for (i in 0..n) { int x = i * 2; print_int(x); } }";
+        let module = compile_default(src).unwrap();
+        let dev = DeviceSpec::h100();
+        let run_width = |w: u32| {
+            let mut records = RecordPool::new(4, 1, 0);
+            let mut mem = Memory::new(0);
+            let task = records.alloc(0, NO_TASK).unwrap();
+            records.data_mut(task)[0] = 256;
+            let interp = Interp {
+                module: &module,
+                dev: &dev,
+                block_width: w,
+                xla_payload: false,
+            };
+            let mut frame = LaneFrame::new();
+            frame.reset(&module, task, 0, 0, 0);
+            let mut log = vec![];
+            match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+                StepResult::Done(o) => o.cycles,
+                other => panic!("{other:?}"),
+            }
+        };
+        let serial = run_width(1);
+        let block = run_width(256);
+        assert!(
+            block * 8 < serial,
+            "256-wide block must be much faster: {serial} vs {block}"
+        );
+    }
+
+    #[test]
+    fn state1_reentry_loads_child_results() {
+        // run fib(2)'s first segment, fake-finish the children, re-enter
+        let module = compile_default(FIB).unwrap();
+        let words = module.funcs[0].layout.words();
+        let mut records = RecordPool::new(16, words, 4);
+        let mut mem = Memory::new(module.globals_words());
+        let dev = DeviceSpec::h100();
+        let interp = Interp {
+            module: &module,
+            dev: &dev,
+            block_width: 1,
+            xla_payload: false,
+        };
+        let parent = records.alloc(0, NO_TASK).unwrap();
+        records.data_mut(parent)[0] = 2; // n = 2
+        let mut frame = LaneFrame::new();
+        frame.reset(&module, parent, 0, 0, 0);
+        let mut log = vec![];
+        match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+            StepResult::Done(o) => o,
+            other => panic!("{other:?}"),
+        };
+        let spawns = frame.spawns().to_vec();
+        assert_eq!(spawns.len(), 2);
+        // materialize the children as already-finished tasks
+        let off = module.funcs[0].layout.result_offset().unwrap() as usize;
+        for (i, s) in spawns.iter().enumerate() {
+            let child = records.alloc(s.func, parent).unwrap();
+            records.push_child(parent, child).unwrap();
+            records.data_mut(child)[off] = [1u64, 0u64][i]; // fib(1)=1, fib(0)=0
+            records.meta_mut(child).pending_children = 0;
+        }
+        records.meta_mut(parent).pending_children = 0;
+        // re-enter at state 1
+        frame.reset(&module, parent, 0, 1, 0);
+        match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+            StepResult::Done(o) => assert_eq!(o.end, SegmentEnd::Finish),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(records.data(parent)[off] as i64, 1, "fib(2) = 1");
+    }
+}

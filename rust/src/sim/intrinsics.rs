@@ -1,0 +1,562 @@
+//! Native semantics and cycle costs of the GTaP-C intrinsics.
+//!
+//! Intrinsics are the *serial leaf work* of the paper's benchmarks (cutoff
+//! bodies, `do_memory_and_compute`): they execute functionally against
+//! simulated memory and charge an analytic cycle cost derived from the
+//! operation counts the real code performs, priced by the device's
+//! [`DeviceSpec`]. See `ir::intrinsics` for signatures.
+//!
+//! The [`payload_native`] function here is the bit-exact Rust twin of the
+//! JAX/Pallas kernel in `python/compile/kernels/payload.py` (checked
+//! against the PJRT-executed artifact by an integration test); the
+//! simulator uses the XLA path when a `PayloadEngine` is attached and this
+//! native path otherwise.
+
+use super::config::DeviceSpec;
+use super::memory::Memory;
+use crate::ir::intrinsics::Intrinsic;
+use crate::ir::types::Value;
+use crate::util::prng::mix64;
+use std::sync::OnceLock;
+
+/// Size of the payload gather table (must match payload.py).
+pub const PAYLOAD_TABLE_SIZE: usize = 1024;
+/// LCG constants of the payload's pseudo-random walk (Knuth MMIX).
+pub const PAYLOAD_LCG_MUL: u64 = 6364136223846793005;
+pub const PAYLOAD_LCG_ADD: u64 = 1442695040888963407;
+/// FMA constants of the payload's compute loop.
+pub const PAYLOAD_FMA_MUL: f64 = 1.000000119;
+pub const PAYLOAD_FMA_ADD: f64 = 0.0000007;
+
+/// The shared gather table: `table[i] = (mix64(i) >> 11) · 2⁻⁵³` — uniform
+/// in [0,1), procedurally generated so Rust and JAX agree bit-exactly.
+pub fn payload_table() -> &'static [f64; PAYLOAD_TABLE_SIZE] {
+    static TABLE: OnceLock<[f64; PAYLOAD_TABLE_SIZE]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0.0; PAYLOAD_TABLE_SIZE];
+        for (i, slot) in t.iter_mut().enumerate() {
+            *slot = (mix64(i as u64) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        }
+        t
+    })
+}
+
+/// `do_memory_and_compute` (§6.3): `mem_ops` pseudo-random table gathers
+/// followed by `compute_iters` dependent FP64 FMAs.
+pub fn payload_native(seed: i64, mem_ops: i64, compute_iters: i64) -> f64 {
+    let table = payload_table();
+    let mut idx = seed as u64;
+    let mut acc = 0.0f64;
+    for _ in 0..mem_ops.max(0) {
+        idx = idx
+            .wrapping_mul(PAYLOAD_LCG_MUL)
+            .wrapping_add(PAYLOAD_LCG_ADD);
+        acc += table[((idx >> 33) as usize) % PAYLOAD_TABLE_SIZE];
+    }
+    let mut x = acc + (seed.rem_euclid(97)) as f64 * 1e-3;
+    for _ in 0..compute_iters.max(0) {
+        x = x * PAYLOAD_FMA_MUL + PAYLOAD_FMA_ADD;
+    }
+    x
+}
+
+/// Cycle cost of one payload call on `dev`.
+pub fn payload_cycles(dev: &DeviceSpec, mem_ops: i64, compute_iters: i64) -> u64 {
+    let m = mem_ops.max(0) as u64;
+    let c = compute_iters.max(0) as u64;
+    let mem = m * (dev.payload_access() + 3 * dev.alu); // LCG + index math
+    let compute = dev.scale_compute(c * (dev.fma + dev.branch / 2 + 1));
+    mem + compute + dev.loop_overhead
+}
+
+/// Iterative Fibonacci value (what the serial cutoff code computes).
+pub fn fib_value(n: i64) -> i64 {
+    if n < 2 {
+        return n.max(0);
+    }
+    let (mut a, mut b) = (0i64, 1i64);
+    for _ in 1..n {
+        let c = a.wrapping_add(b);
+        a = b;
+        b = c;
+    }
+    b
+}
+
+/// Call count of the naive recursive fib: `2·fib(n+1) − 1` — the operation
+/// count the serial cutoff body actually executes.
+pub fn fib_calls(n: i64) -> u64 {
+    (2i128 * fib_value(n + 1) as i128 - 1).max(1) as u64
+}
+
+/// Bitmask N-Queens: count completions from a partial placement
+/// (n, row, left, down, right), also returning visited node count.
+pub fn nqueens_count(n: i64, row: i64, left: i64, down: i64, right: i64) -> (i64, u64) {
+    let full = (1i64 << n) - 1;
+    fn rec(full: i64, row: i64, n: i64, left: i64, down: i64, right: i64, nodes: &mut u64) -> i64 {
+        *nodes += 1;
+        if row == n {
+            return 1;
+        }
+        let mut free = full & !(left | down | right);
+        let mut count = 0;
+        while free != 0 {
+            let bit = free & free.wrapping_neg();
+            free ^= bit;
+            count += rec(
+                full,
+                row + 1,
+                n,
+                (left | bit) << 1,
+                down | bit,
+                (right | bit) >> 1,
+                nodes,
+            );
+        }
+        count
+    }
+    let mut nodes = 0;
+    let c = rec(full, row, n, left, down, right, &mut nodes);
+    (c, nodes)
+}
+
+/// Outcome of one intrinsic: result value, cycle cost, and a divergence
+/// token (folded into the lane's path hash — variable-cost intrinsics must
+/// diverge lanes whose costs differ, e.g. different payload sizes).
+pub struct IntrOutcome {
+    pub value: Value,
+    pub cycles: u64,
+    pub path_token: u64,
+}
+
+/// Execution context handed to intrinsics.
+pub struct IntrCtx<'a> {
+    pub mem: &'a mut Memory,
+    pub dev: &'a DeviceSpec,
+    pub lane_id: u32,
+    pub worker_id: u32,
+    /// Captured `print_int`/`print_float` output (host-visible).
+    pub log: &'a mut Vec<String>,
+}
+
+/// Execute an intrinsic natively. `Payload` is routed through here only
+/// when no XLA engine is attached (the interpreter suspends otherwise).
+pub fn execute(id: Intrinsic, args: &[Value], ctx: &mut IntrCtx) -> IntrOutcome {
+    let dev = ctx.dev;
+    match id {
+        Intrinsic::Payload => {
+            let (seed, m, c) = (args[0].as_i64(), args[1].as_i64(), args[2].as_i64());
+            IntrOutcome {
+                value: Value::from_f64(payload_native(seed, m, c)),
+                cycles: payload_cycles(dev, m, c),
+                path_token: mix64((m as u64) ^ (c as u64).rotate_left(17) ^ 0xFA),
+            }
+        }
+        Intrinsic::FibSerial => {
+            let n = args[0].as_i64();
+            let calls = fib_calls(n);
+            IntrOutcome {
+                value: Value::from_i64(fib_value(n)),
+                cycles: dev.scale_compute(calls * (4 * dev.alu + 2 * dev.branch)),
+                path_token: mix64(n as u64 ^ 0xF1B),
+            }
+        }
+        Intrinsic::NQueensSerial => {
+            let (n, row, l, d, r) = (
+                args[0].as_i64(),
+                args[1].as_i64(),
+                args[2].as_i64(),
+                args[3].as_i64(),
+                args[4].as_i64(),
+            );
+            let (count, nodes) = nqueens_count(n, row, l, d, r);
+            IntrOutcome {
+                value: Value::from_i64(count),
+                cycles: dev.scale_compute(nodes * (8 * dev.alu + 2 * dev.branch)),
+                // all serial-leaf lanes share a path class; their cost
+                // varies, but the *code path* (the backtracking loop) is
+                // uniform enough that real warps coalesce it. Fold only a
+                // depth-ish token so cutoff vs non-cutoff still separates.
+                path_token: 0x9_EEE,
+            }
+        }
+        Intrinsic::SortSerial => {
+            let (p, lo, hi) = (args[0].as_addr(), args[1].as_i64(), args[2].as_i64());
+            let n = (hi - lo).max(0) as u64;
+            let mut xs: Vec<i64> = (0..n)
+                .map(|i| ctx.mem.load(p + lo as u64 + i) as i64)
+                .collect();
+            xs.sort_unstable();
+            for (i, x) in xs.iter().enumerate() {
+                ctx.mem.store(p + lo as u64 + i as u64, *x as u64);
+            }
+            let logn = 64 - n.max(1).leading_zeros() as u64;
+            let cmp_cost = 2 * dev.l1_lat / 4 + 2 * dev.alu + dev.branch;
+            let cycles = n * dev.cached_load() // first touch
+                + dev.scale_compute(n * logn * cmp_cost)
+                + n * dev.l1_lat / 4; // write-back of L1-resident lines
+            IntrOutcome {
+                value: Value::from_i64(0),
+                cycles,
+                path_token: 0x50F7,
+            }
+        }
+        Intrinsic::MergeSerial => {
+            let (p, lo1, hi1, lo2, hi2, dst) = (
+                args[0].as_addr(),
+                args[1].as_i64(),
+                args[2].as_i64(),
+                args[3].as_i64(),
+                args[4].as_i64(),
+                args[5].as_addr(),
+            );
+            let n = ((hi1 - lo1).max(0) + (hi2 - lo2).max(0)) as u64;
+            let (mut i, mut j, mut k) = (lo1, lo2, 0u64);
+            while i < hi1 && j < hi2 {
+                let a = ctx.mem.load(p + i as u64) as i64;
+                let b = ctx.mem.load(p + j as u64) as i64;
+                if a <= b {
+                    ctx.mem.store(dst + k, a as u64);
+                    i += 1;
+                } else {
+                    ctx.mem.store(dst + k, b as u64);
+                    j += 1;
+                }
+                k += 1;
+            }
+            while i < hi1 {
+                ctx.mem.store(dst + k, ctx.mem.load(p + i as u64));
+                i += 1;
+                k += 1;
+            }
+            while j < hi2 {
+                ctx.mem.store(dst + k, ctx.mem.load(p + j as u64));
+                j += 1;
+                k += 1;
+            }
+            // Cost: per element two streamed loads + one streamed store +
+            // compare/advance ALU. On the GPU a single thread cannot hide
+            // this latency — the §6.2 mergesort bottleneck.
+            let per_elem = 3 * dev.serial_access() + dev.scale_compute(5 * dev.alu + dev.branch);
+            IntrOutcome {
+                value: Value::from_i64(0),
+                cycles: n * per_elem + dev.loop_overhead,
+                path_token: 0x3E6E,
+            }
+        }
+        Intrinsic::Mix => {
+            let v = mix64(args[0].as_i64() as u64 ^ (args[1].as_i64() as u64).rotate_left(31));
+            IntrOutcome {
+                value: Value::from_i64((v >> 1) as i64), // non-negative
+                cycles: 6 * dev.alu,
+                path_token: 0,
+            }
+        }
+        Intrinsic::BinSearch => {
+            let (p, lo, hi, key) = (
+                args[0].as_addr(),
+                args[1].as_i64(),
+                args[2].as_i64(),
+                args[3].as_i64(),
+            );
+            let (mut a, mut b) = (lo, hi);
+            while a < b {
+                let m = (a + b) / 2;
+                if (ctx.mem.load(p + m as u64) as i64) < key {
+                    a = m + 1;
+                } else {
+                    b = m;
+                }
+            }
+            let probes = 64 - ((hi - lo).max(1) as u64).leading_zeros() as u64;
+            IntrOutcome {
+                value: Value::from_i64(a),
+                // dependent chain: full memory latency per probe
+                cycles: probes * (dev.mem_lat + dev.scale_compute(3 * dev.alu)),
+                path_token: 0xB5,
+            }
+        }
+        Intrinsic::MemCpyWords => {
+            let (dst, src, n) = (args[0].as_addr(), args[1].as_addr(), args[2].as_i64());
+            for i in 0..n.max(0) as u64 {
+                let v = ctx.mem.load(src + i);
+                ctx.mem.store(dst + i, v);
+            }
+            IntrOutcome {
+                value: Value::from_i64(0),
+                cycles: n.max(0) as u64 * 2 * dev.serial_access(),
+                path_token: 0xC0,
+            }
+        }
+        Intrinsic::AtomicAdd => {
+            let old = ctx.mem.atomic_add(args[0].as_addr(), args[1].as_i64());
+            IntrOutcome {
+                value: Value::from_i64(old),
+                cycles: dev.atomic,
+                path_token: 0xA1,
+            }
+        }
+        Intrinsic::AtomicMin => {
+            let old = ctx.mem.atomic_min(args[0].as_addr(), args[1].as_i64());
+            IntrOutcome {
+                value: Value::from_i64(old),
+                cycles: dev.atomic,
+                path_token: 0xA2,
+            }
+        }
+        Intrinsic::AtomicMax => {
+            let old = ctx.mem.atomic_max(args[0].as_addr(), args[1].as_i64());
+            IntrOutcome {
+                value: Value::from_i64(old),
+                cycles: dev.atomic,
+                path_token: 0xA3,
+            }
+        }
+        Intrinsic::AtomicCas => {
+            let old = ctx.mem.atomic_cas(
+                args[0].as_addr(),
+                args[1].as_i64(),
+                args[2].as_i64(),
+            );
+            IntrOutcome {
+                value: Value::from_i64(old),
+                cycles: dev.atomic,
+                path_token: 0xA4,
+            }
+        }
+        Intrinsic::LaneId => IntrOutcome {
+            value: Value::from_i64(ctx.lane_id as i64),
+            cycles: dev.alu,
+            path_token: 0,
+        },
+        Intrinsic::WorkerId => IntrOutcome {
+            value: Value::from_i64(ctx.worker_id as i64),
+            cycles: dev.alu,
+            path_token: 0,
+        },
+        Intrinsic::PrintInt => {
+            ctx.log.push(format!("{}", args[0].as_i64()));
+            IntrOutcome {
+                value: Value::from_i64(0),
+                cycles: dev.alu,
+                path_token: 0,
+            }
+        }
+        Intrinsic::PrintFloat => {
+            ctx.log.push(format!("{}", args[0].as_f64()));
+            IntrOutcome {
+                value: Value::from_i64(0),
+                cycles: dev.alu,
+                path_token: 0,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(mem: &'a mut Memory, dev: &'a DeviceSpec, log: &'a mut Vec<String>) -> IntrCtx<'a> {
+        IntrCtx {
+            mem,
+            dev,
+            lane_id: 3,
+            worker_id: 7,
+            log,
+        }
+    }
+
+    #[test]
+    fn fib_values() {
+        assert_eq!(fib_value(0), 0);
+        assert_eq!(fib_value(1), 1);
+        assert_eq!(fib_value(10), 55);
+        assert_eq!(fib_value(40), 102_334_155);
+    }
+
+    #[test]
+    fn fib_call_counts() {
+        // calls(n) = 2*fib(n+1)-1: fib(5)=5 -> calls(4)=9
+        assert_eq!(fib_calls(0), 1);
+        assert_eq!(fib_calls(1), 1);
+        assert_eq!(fib_calls(4), 9);
+        assert_eq!(fib_calls(10), 177);
+    }
+
+    #[test]
+    fn nqueens_known_counts() {
+        assert_eq!(nqueens_count(4, 0, 0, 0, 0).0, 2);
+        assert_eq!(nqueens_count(6, 0, 0, 0, 0).0, 4);
+        assert_eq!(nqueens_count(8, 0, 0, 0, 0).0, 92);
+    }
+
+    #[test]
+    fn nqueens_partial_placement() {
+        // sum over first-row placements equals the total
+        let n = 6i64;
+        let mut total = 0;
+        for col in 0..n {
+            let bit = 1i64 << col;
+            total += nqueens_count(n, 1, bit << 1, bit, bit >> 1).0;
+        }
+        assert_eq!(total, 4);
+    }
+
+    #[test]
+    fn payload_deterministic_and_size_sensitive() {
+        let a = payload_native(42, 16, 100);
+        let b = payload_native(42, 16, 100);
+        assert_eq!(a, b);
+        assert_ne!(payload_native(42, 16, 100), payload_native(43, 16, 100));
+        assert_ne!(payload_native(42, 16, 100), payload_native(42, 17, 100));
+        assert_ne!(payload_native(42, 16, 100), payload_native(42, 16, 101));
+    }
+
+    #[test]
+    fn payload_zero_ops() {
+        let x = payload_native(5, 0, 0);
+        assert_eq!(x, (5 % 97) as f64 * 1e-3);
+    }
+
+    #[test]
+    fn payload_cost_scales() {
+        let d = DeviceSpec::h100();
+        let c1 = payload_cycles(&d, 10, 100);
+        let c2 = payload_cycles(&d, 20, 100);
+        let c3 = payload_cycles(&d, 10, 200);
+        assert!(c2 > c1);
+        assert!(c3 > c1);
+    }
+
+    #[test]
+    fn sort_serial_sorts_sim_memory() {
+        let dev = DeviceSpec::h100();
+        let mut mem = Memory::new(0);
+        let mut log = vec![];
+        let p = mem.alloc(6);
+        mem.write_i64s(p, &[5, 3, -1, 9, 0, 3]);
+        let args = [
+            Value(p),
+            Value::from_i64(0),
+            Value::from_i64(6),
+        ];
+        let out = execute(Intrinsic::SortSerial, &args, &mut ctx(&mut mem, &dev, &mut log));
+        assert!(out.cycles > 0);
+        assert_eq!(mem.read_i64s(p, 6), vec![-1, 0, 3, 3, 5, 9]);
+    }
+
+    #[test]
+    fn merge_serial_merges() {
+        let dev = DeviceSpec::h100();
+        let mut mem = Memory::new(0);
+        let mut log = vec![];
+        let p = mem.alloc(6);
+        let tmp = mem.alloc(6);
+        mem.write_i64s(p, &[1, 4, 9, 2, 3, 10]);
+        let args = [
+            Value(p),
+            Value::from_i64(0),
+            Value::from_i64(3),
+            Value::from_i64(3),
+            Value::from_i64(6),
+            Value(tmp),
+        ];
+        execute(Intrinsic::MergeSerial, &args, &mut ctx(&mut mem, &dev, &mut log));
+        assert_eq!(mem.read_i64s(tmp, 6), vec![1, 2, 3, 4, 9, 10]);
+    }
+
+    #[test]
+    fn merge_cheaper_on_cpu_than_gpu() {
+        let gpu = DeviceSpec::h100();
+        let cpu = DeviceSpec::grace72();
+        let mut log = vec![];
+        let cost = |dev: &DeviceSpec, log: &mut Vec<String>| {
+            let mut mem = Memory::new(0);
+            let p = mem.alloc(128);
+            let tmp = mem.alloc(128);
+            mem.write_i64s(p, &(0..128).collect::<Vec<i64>>());
+            let args = [
+                Value(p),
+                Value::from_i64(0),
+                Value::from_i64(64),
+                Value::from_i64(64),
+                Value::from_i64(128),
+                Value(tmp),
+            ];
+            execute(Intrinsic::MergeSerial, &args, &mut ctx(&mut mem, dev, log)).cycles
+        };
+        let g = cost(&gpu, &mut log);
+        let c = cost(&cpu, &mut log);
+        assert!(g > 10 * c, "gpu merge {g} vs cpu merge {c}");
+    }
+
+    #[test]
+    fn binsearch_lower_bound() {
+        let dev = DeviceSpec::h100();
+        let mut mem = Memory::new(0);
+        let mut log = vec![];
+        let p = mem.alloc(5);
+        mem.write_i64s(p, &[1, 3, 3, 7, 9]);
+        let find = |mem: &mut Memory, log: &mut Vec<String>, key: i64| {
+            let args = [
+                Value(p),
+                Value::from_i64(0),
+                Value::from_i64(5),
+                Value::from_i64(key),
+            ];
+            execute(Intrinsic::BinSearch, &args, &mut ctx(mem, &dev, log))
+                .value
+                .as_i64()
+        };
+        assert_eq!(find(&mut mem, &mut log, 0), 0);
+        assert_eq!(find(&mut mem, &mut log, 3), 1);
+        assert_eq!(find(&mut mem, &mut log, 8), 4);
+        assert_eq!(find(&mut mem, &mut log, 100), 5);
+    }
+
+    #[test]
+    fn atomics_return_old_and_charge() {
+        let dev = DeviceSpec::h100();
+        let mut mem = Memory::new(1);
+        let mut log = vec![];
+        let args = [Value(0), Value::from_i64(5)];
+        let out = execute(Intrinsic::AtomicAdd, &args, &mut ctx(&mut mem, &dev, &mut log));
+        assert_eq!(out.value.as_i64(), 0);
+        assert_eq!(out.cycles, dev.atomic);
+        assert_eq!(mem.load(0), 5);
+    }
+
+    #[test]
+    fn print_captures() {
+        let dev = DeviceSpec::h100();
+        let mut mem = Memory::new(0);
+        let mut log = vec![];
+        execute(
+            Intrinsic::PrintInt,
+            &[Value::from_i64(-7)],
+            &mut ctx(&mut mem, &dev, &mut log),
+        );
+        assert_eq!(log, vec!["-7"]);
+    }
+
+    #[test]
+    fn lane_and_worker_ids() {
+        let dev = DeviceSpec::h100();
+        let mut mem = Memory::new(0);
+        let mut log = vec![];
+        let l = execute(Intrinsic::LaneId, &[], &mut ctx(&mut mem, &dev, &mut log));
+        assert_eq!(l.value.as_i64(), 3);
+        let w = execute(Intrinsic::WorkerId, &[], &mut ctx(&mut mem, &dev, &mut log));
+        assert_eq!(w.value.as_i64(), 7);
+    }
+
+    #[test]
+    fn payload_table_stable() {
+        let t = payload_table();
+        assert_eq!(t.len(), 1024);
+        assert!(t.iter().all(|&x| (0.0..1.0).contains(&x)));
+        // spot value pinned so python can cross-check the constant
+        assert_eq!(t[0], (mix64(0) >> 11) as f64 * (1.0 / (1u64 << 53) as f64));
+    }
+}

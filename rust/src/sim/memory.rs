@@ -1,0 +1,155 @@
+//! Simulated global memory.
+//!
+//! A flat array of 64-bit words addressed by word index. Workload data
+//! (arrays to sort, CSR graphs, global scalars) lives here; the host side
+//! allocates regions and reads results back, mirroring
+//! `cudaMemcpy`/`cudaMemcpyFromSymbol` in Program 4.
+//!
+//! Cost accounting happens at the interpreter/intrinsic layer via
+//! [`super::config::DeviceSpec`]; this module provides the *functional*
+//! store plus a bump allocator. Addresses `0..globals_words` are reserved
+//! for the module's global scalars (see `ir::bytecode::Module`).
+
+/// Simulated device global memory.
+pub struct Memory {
+    words: Vec<u64>,
+    /// Bump pointer for host-side allocations.
+    brk: u64,
+}
+
+impl Memory {
+    /// Create a memory with the module's global scalars at the bottom.
+    pub fn new(globals_words: u64) -> Memory {
+        Memory {
+            words: vec![0; globals_words as usize],
+            brk: globals_words,
+        }
+    }
+
+    /// Host-side allocation of `n` words; returns the base word address.
+    /// (The paper bulk-allocates on the host before launch; so do we.)
+    pub fn alloc(&mut self, n: u64) -> u64 {
+        let base = self.brk;
+        self.brk += n;
+        self.words.resize(self.brk as usize, 0);
+        base
+    }
+
+    #[inline]
+    pub fn load(&self, addr: u64) -> u64 {
+        self.words[addr as usize]
+    }
+
+    #[inline]
+    pub fn store(&mut self, addr: u64, val: u64) {
+        self.words[addr as usize] = val;
+    }
+
+    /// Host convenience: write a slice of i64s at `base`.
+    pub fn write_i64s(&mut self, base: u64, xs: &[i64]) {
+        for (i, &x) in xs.iter().enumerate() {
+            self.store(base + i as u64, x as u64);
+        }
+    }
+
+    /// Host convenience: read `n` i64s from `base`.
+    pub fn read_i64s(&self, base: u64, n: u64) -> Vec<i64> {
+        (0..n).map(|i| self.load(base + i) as i64).collect()
+    }
+
+    pub fn write_f64s(&mut self, base: u64, xs: &[f64]) {
+        for (i, &x) in xs.iter().enumerate() {
+            self.store(base + i as u64, x.to_bits());
+        }
+    }
+
+    pub fn read_f64(&self, addr: u64) -> f64 {
+        f64::from_bits(self.load(addr))
+    }
+
+    pub fn size_words(&self) -> u64 {
+        self.brk
+    }
+
+    // --- atomics (functional; cycle cost charged by the caller) ---
+
+    pub fn atomic_add(&mut self, addr: u64, v: i64) -> i64 {
+        let old = self.load(addr) as i64;
+        self.store(addr, (old.wrapping_add(v)) as u64);
+        old
+    }
+
+    pub fn atomic_min(&mut self, addr: u64, v: i64) -> i64 {
+        let old = self.load(addr) as i64;
+        if v < old {
+            self.store(addr, v as u64);
+        }
+        old
+    }
+
+    pub fn atomic_max(&mut self, addr: u64, v: i64) -> i64 {
+        let old = self.load(addr) as i64;
+        if v > old {
+            self.store(addr, v as u64);
+        }
+        old
+    }
+
+    pub fn atomic_cas(&mut self, addr: u64, expect: i64, new: i64) -> i64 {
+        let old = self.load(addr) as i64;
+        if old == expect {
+            self.store(addr, new as u64);
+        }
+        old
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_and_roundtrip() {
+        let mut m = Memory::new(2);
+        let a = m.alloc(4);
+        assert_eq!(a, 2, "allocations start above globals");
+        m.write_i64s(a, &[10, -20, 30, 40]);
+        assert_eq!(m.read_i64s(a, 4), vec![10, -20, 30, 40]);
+        let b = m.alloc(1);
+        assert_eq!(b, 6);
+    }
+
+    #[test]
+    fn floats_roundtrip() {
+        let mut m = Memory::new(0);
+        let a = m.alloc(2);
+        m.write_f64s(a, &[1.5, -2.25]);
+        assert_eq!(m.read_f64(a), 1.5);
+        assert_eq!(m.read_f64(a + 1), -2.25);
+    }
+
+    #[test]
+    fn atomic_semantics() {
+        let mut m = Memory::new(1);
+        assert_eq!(m.atomic_add(0, 5), 0);
+        assert_eq!(m.atomic_add(0, 3), 5);
+        assert_eq!(m.load(0), 8);
+        assert_eq!(m.atomic_min(0, 4), 8);
+        assert_eq!(m.load(0), 4);
+        assert_eq!(m.atomic_min(0, 100), 4);
+        assert_eq!(m.load(0), 4);
+        assert_eq!(m.atomic_max(0, 9), 4);
+        assert_eq!(m.load(0), 9);
+        assert_eq!(m.atomic_cas(0, 9, 1), 9);
+        assert_eq!(m.load(0), 1);
+        assert_eq!(m.atomic_cas(0, 9, 2), 1);
+        assert_eq!(m.load(0), 1, "failed CAS must not store");
+    }
+
+    #[test]
+    fn globals_region_reserved() {
+        let m = Memory::new(3);
+        assert_eq!(m.size_words(), 3);
+        assert_eq!(m.load(0), 0);
+    }
+}

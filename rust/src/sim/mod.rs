@@ -1,0 +1,37 @@
+//! The substrate: a cycle-approximate SIMT device simulator.
+//!
+//! This replaces the paper's GH200 testbed (see DESIGN.md for the
+//! substitution argument). The model captures exactly the phenomena the
+//! paper's evaluation measures:
+//!
+//! * **SIMT divergence** — lanes of a warp executing distinct dynamic
+//!   control paths serialize ([`divergence`]); EPAQ's benefit falls out of
+//!   the model rather than being assumed.
+//! * **Memory hierarchy** — per-SM L1 (non-coherent, bypassable with `.cg`),
+//!   L2 coherence point, HBM; exposed latency for serial code (the
+//!   mergesort final-merge effect) and blended costs for cached access
+//!   ([`config`], [`memory`]).
+//! * **Queue-metadata contention** — CAS serialization windows on shared
+//!   words, which produce the global-queue flat-line (Fig. 3) and the
+//!   batched-vs-Chase–Lev crossover at very large P (Fig. 4). Modeled in
+//!   the coordinator's queue code using [`config::DeviceSpec`] costs.
+//! * **SM issue bandwidth** — each SM sustains `issue_warps` warp
+//!   instructions per cycle; resident warps beyond that only hide latency
+//!   (the event engine in `coordinator::scheduler` enforces this).
+//!
+//! Two device configurations reproduce the paper's comparison: an H100-like
+//! GPU and a 72-core Grace-like CPU running the *same* task DAG and cost
+//! model with scalar workers — see [`config::DeviceSpec::h100`] and
+//! [`config::DeviceSpec::grace72`].
+
+pub mod config;
+pub mod divergence;
+pub mod interp;
+pub mod intrinsics;
+pub mod memory;
+pub mod profile;
+
+pub use config::DeviceSpec;
+pub use interp::{Interp, LaneFrame, SegmentEnd, SegmentOutput, SpawnReq};
+pub use memory::Memory;
+pub use profile::{Profiler, TimelineEvent};

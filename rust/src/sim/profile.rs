@@ -1,0 +1,166 @@
+//! Execution profiling: per-warp timelines and task-time distributions.
+//!
+//! Reproduces the instrumentation behind Figure 6 (per-warp timeline with
+//! task-function vs idle time and lane-occupancy intensity), Figure 9
+//! (per-warp utilization under thinning trees) and Figure 11 (distribution
+//! of per-warp task-function execution time per persistent-kernel loop,
+//! with and without EPAQ). Disabled by default; the benches that need it
+//! call [`Profiler::enabled`].
+
+use crate::util::stats::percentile;
+
+/// One persistent-kernel iteration of one worker.
+#[derive(Clone, Copy, Debug)]
+pub struct TimelineEvent {
+    pub worker: u32,
+    /// Cycle when the iteration started.
+    pub start: u64,
+    /// Cycles spent executing task functions (incl. spawn/join/finish costs,
+    /// as in Fig. 6's caption).
+    pub busy: u64,
+    /// Cycles spent on queue operations / stealing / idling.
+    pub overhead: u64,
+    /// Lanes that executed a task this iteration (blue intensity in Fig. 6).
+    pub active_lanes: u8,
+    /// Distinct control paths among those lanes (divergence diagnostic).
+    pub path_groups: u8,
+}
+
+/// Collects timeline events and summary histograms.
+#[derive(Default)]
+pub struct Profiler {
+    pub enabled: bool,
+    pub events: Vec<TimelineEvent>,
+}
+
+impl Profiler {
+    pub fn enabled() -> Profiler {
+        Profiler {
+            enabled: true,
+            events: Vec::new(),
+        }
+    }
+
+    pub fn disabled() -> Profiler {
+        Profiler::default()
+    }
+
+    #[inline]
+    pub fn record(&mut self, ev: TimelineEvent) {
+        if self.enabled {
+            self.events.push(ev);
+        }
+    }
+
+    /// Busy-time fraction per worker: `(worker, busy_cycles, total_cycles)`.
+    pub fn utilization(&self) -> Vec<(u32, u64, u64)> {
+        let mut per: std::collections::BTreeMap<u32, (u64, u64)> = Default::default();
+        for e in &self.events {
+            let ent = per.entry(e.worker).or_insert((0, 0));
+            ent.0 += e.busy;
+            ent.1 += e.busy + e.overhead;
+        }
+        per.into_iter().map(|(w, (b, t))| (w, b, t)).collect()
+    }
+
+    /// Mean active lanes over busy iterations (Fig. 9's intra-warp
+    /// utilization).
+    pub fn mean_active_lanes(&self) -> f64 {
+        let busy: Vec<&TimelineEvent> =
+            self.events.iter().filter(|e| e.active_lanes > 0).collect();
+        if busy.is_empty() {
+            return 0.0;
+        }
+        busy.iter().map(|e| e.active_lanes as f64).sum::<f64>() / busy.len() as f64
+    }
+
+    /// Distribution of per-iteration busy time (Fig. 11 bottom-right):
+    /// returns the given percentiles over busy iterations.
+    pub fn busy_time_percentiles(&self, qs: &[f64]) -> Vec<f64> {
+        let mut xs: Vec<f64> = self
+            .events
+            .iter()
+            .filter(|e| e.busy > 0)
+            .map(|e| e.busy as f64)
+            .collect();
+        if xs.is_empty() {
+            return qs.iter().map(|_| 0.0).collect();
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        qs.iter().map(|&q| percentile(&xs, q)).collect()
+    }
+
+    /// CSV dump for plotting (one row per event).
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("worker,start,busy,overhead,active_lanes,path_groups\n");
+        for e in &self.events {
+            out.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                e.worker, e.start, e.busy, e.overhead, e.active_lanes, e.path_groups
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(worker: u32, start: u64, busy: u64, overhead: u64, lanes: u8) -> TimelineEvent {
+        TimelineEvent {
+            worker,
+            start,
+            busy,
+            overhead,
+            active_lanes: lanes,
+            path_groups: 1,
+        }
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let mut p = Profiler::disabled();
+        p.record(ev(0, 0, 10, 5, 32));
+        assert!(p.events.is_empty());
+    }
+
+    #[test]
+    fn utilization_aggregates_per_worker() {
+        let mut p = Profiler::enabled();
+        p.record(ev(0, 0, 10, 10, 32));
+        p.record(ev(0, 20, 30, 0, 32));
+        p.record(ev(1, 0, 5, 15, 16));
+        let u = p.utilization();
+        assert_eq!(u, vec![(0, 40, 50), (1, 5, 20)]);
+    }
+
+    #[test]
+    fn mean_active_lanes_ignores_idle() {
+        let mut p = Profiler::enabled();
+        p.record(ev(0, 0, 10, 0, 32));
+        p.record(ev(0, 10, 0, 10, 0)); // idle iteration
+        p.record(ev(0, 20, 10, 0, 16));
+        assert!((p.mean_active_lanes() - 24.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_of_busy_time() {
+        let mut p = Profiler::enabled();
+        for b in [10u64, 20, 30, 40] {
+            p.record(ev(0, 0, b, 0, 32));
+        }
+        let qs = p.busy_time_percentiles(&[0.0, 0.5, 1.0]);
+        assert_eq!(qs, vec![10.0, 25.0, 40.0]);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut p = Profiler::enabled();
+        p.record(ev(3, 7, 11, 13, 17));
+        let csv = p.to_csv();
+        assert!(csv.starts_with("worker,start,"));
+        assert!(csv.contains("3,7,11,13,17,1"));
+    }
+}

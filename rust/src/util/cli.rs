@@ -1,0 +1,123 @@
+//! Minimal `--flag value` command-line parser used by the `gtap` binary, the
+//! examples and the bench harness (the offline registry has no `clap`).
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments: positionals plus `--key value` /
+/// `--switch` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// Raw option lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean switch (`--fast`) or option (`--fast true`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+            || matches!(self.get(key), Some("1") | Some("true") | Some("yes"))
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("invalid value for --{key}: {v:?}")),
+            None => default,
+        }
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse_from(words.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["run", "--n", "12", "--device", "gpu", "fib"]);
+        assert_eq!(a.positional, vec!["run", "fib"]);
+        assert_eq!(a.get_or("n", 0u32), 12);
+        assert_eq!(a.str_or("device", "cpu"), "gpu");
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--n=7"]);
+        assert_eq!(a.get_or("n", 0u32), 7);
+    }
+
+    #[test]
+    fn switches() {
+        let a = parse(&["--fast", "--verbose"]);
+        assert!(a.flag("fast"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn switch_followed_by_option() {
+        let a = parse(&["--fast", "--n", "3"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_or("n", 0u32), 3);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("n", 42u32), 42);
+        assert_eq!(a.str_or("mode", "sim"), "sim");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid value")]
+    fn bad_typed_value_panics() {
+        let a = parse(&["--n", "abc"]);
+        let _: u32 = a.get_or("n", 0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Shared utilities: deterministic PRNG, robust statistics, a tiny CLI
+//! parser, and a small property-based-testing framework.
+//!
+//! The offline registry available in this environment ships neither `rand`,
+//! `clap`, `criterion` nor `proptest`, so the pieces of each that this crate
+//! needs are implemented here (and unit-tested like everything else).
+
+pub mod cli;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+
+pub use cli::Args;
+pub use prng::Prng;
+pub use stats::Summary;

@@ -1,0 +1,176 @@
+//! A small property-based-testing framework (the registry in this
+//! environment has no `proptest`/`quickcheck`).
+//!
+//! Usage: build a [`Runner`], call [`Runner::run`] with a closure that draws
+//! random inputs from the provided [`Gen`] and asserts a property. On
+//! failure the framework re-raises with the failing case number and seed so
+//! the case can be replayed deterministically (`GTAP_PROP_SEED=<seed>`).
+
+use super::prng::Prng;
+
+/// Source of random test data for one property-test case.
+pub struct Gen {
+    rng: Prng,
+}
+
+impl Gen {
+    /// i64 in `[lo, hi]` inclusive.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// usize in `[lo, hi]` inclusive.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    /// f64 in `[0, 1)`.
+    pub fn unit(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    /// bool with probability `p` of `true`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Uniform choice from a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below_usize(xs.len())]
+    }
+
+    /// Vector of `len` values drawn by `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Raw access for anything else.
+    pub fn rng(&mut self) -> &mut Prng {
+        &mut self.rng
+    }
+}
+
+/// Property-test runner.
+pub struct Runner {
+    cases: usize,
+    seed: u64,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Runner::new()
+    }
+}
+
+impl Runner {
+    /// Default: 256 cases, seed from `GTAP_PROP_SEED` or a fixed constant
+    /// (deterministic CI; override the env var to explore).
+    pub fn new() -> Runner {
+        let seed = std::env::var("GTAP_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Runner { cases: 256, seed }
+    }
+
+    pub fn cases(mut self, n: usize) -> Runner {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Runner {
+        self.seed = s;
+        self
+    }
+
+    /// Run the property across `self.cases` random cases. Panics (with
+    /// replay info) on the first failing case.
+    pub fn run(&self, name: &str, mut property: impl FnMut(&mut Gen)) {
+        for case in 0..self.cases {
+            let case_seed = self
+                .seed
+                .wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            let mut g = Gen {
+                rng: Prng::seeded(case_seed),
+            };
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                property(&mut g)
+            }));
+            if let Err(payload) = result {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!(
+                    "property {name:?} failed at case {case}/{} \
+                     (replay with GTAP_PROP_SEED={case_seed}): {msg}",
+                    self.cases
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Runner::new().cases(64).run("add-commutes", |g| {
+            let a = g.int(-1000, 1000);
+            let b = g.int(-1000, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            Runner::new().cases(64).run("always-fails", |g| {
+                let x = g.int(0, 10);
+                assert!(x > 100, "x={x} too small");
+            });
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("GTAP_PROP_SEED="), "msg={msg}");
+        assert!(msg.contains("always-fails"), "msg={msg}");
+    }
+
+    #[test]
+    fn gen_int_bounds() {
+        Runner::new().cases(128).run("int-bounds", |g| {
+            let lo = g.int(-50, 50);
+            let hi = lo + g.int(0, 100);
+            let x = g.int(lo, hi);
+            assert!(x >= lo && x <= hi);
+        });
+    }
+
+    #[test]
+    fn gen_vec_len() {
+        Runner::new().cases(32).run("vec-len", |g| {
+            let n = g.usize(0, 20);
+            let v = g.vec(n, |g| g.int(0, 9));
+            assert_eq!(v.len(), n);
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut first: Vec<i64> = vec![];
+        Runner::new().seed(99).cases(10).run("collect1", |g| {
+            first.push(g.int(0, 1_000_000));
+        });
+        let mut second: Vec<i64> = vec![];
+        Runner::new().seed(99).cases(10).run("collect2", |g| {
+            second.push(g.int(0, 1_000_000));
+        });
+        assert_eq!(first, second);
+    }
+}

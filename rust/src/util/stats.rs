@@ -1,0 +1,148 @@
+//! Robust summary statistics for benchmark reporting.
+//!
+//! The paper reports "the median over 20 runs with IQR error bars" (§6); this
+//! module provides exactly that summary, plus helpers used by the bench
+//! harness tables.
+
+/// Summary of a sample of measurements.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub median: f64,
+    /// 25th percentile (lower IQR bound).
+    pub q1: f64,
+    /// 75th percentile (upper IQR bound).
+    pub q3: f64,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+}
+
+/// Linear-interpolation percentile (same convention as numpy's default).
+/// `q` in [0, 1]. `sorted` must be non-empty and ascending.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+impl Summary {
+    /// Compute the summary of a non-empty sample.
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "empty sample");
+        let mut s: Vec<f64> = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        Summary {
+            n: s.len(),
+            median: percentile(&s, 0.5),
+            q1: percentile(&s, 0.25),
+            q3: percentile(&s, 0.75),
+            min: s[0],
+            max: *s.last().unwrap(),
+            mean: s.iter().sum::<f64>() / s.len() as f64,
+        }
+    }
+
+    /// Inter-quartile range.
+    pub fn iqr(&self) -> f64 {
+        self.q3 - self.q1
+    }
+}
+
+/// Format a duration given in seconds with an adaptive unit.
+pub fn fmt_time(seconds: f64) -> String {
+    let abs = seconds.abs();
+    if abs >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if abs >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else if abs >= 1e-6 {
+        format!("{:.3} us", seconds * 1e6)
+    } else {
+        format!("{:.1} ns", seconds * 1e9)
+    }
+}
+
+/// Format a large count with thousands separators (e.g. `1_234_567`).
+pub fn fmt_count(n: u64) -> String {
+    let digits = n.to_string();
+    let mut out = String::new();
+    for (i, c) in digits.chars().enumerate() {
+        if i > 0 && (digits.len() - i) % 3 == 0 {
+            out.push('_');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd() {
+        let s = Summary::of(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn median_even_interpolates() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.median, 2.5);
+    }
+
+    #[test]
+    fn quartiles_numpy_convention() {
+        // numpy.percentile([1,2,3,4], [25, 75]) == [1.75, 3.25]
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.q1 - 1.75).abs() < 1e-12);
+        assert!((s.q3 - 3.25).abs() < 1e-12);
+        assert!((s.iqr() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::of(&[5.0]);
+        assert_eq!(s.median, 5.0);
+        assert_eq!(s.q1, 5.0);
+        assert_eq!(s.q3, 5.0);
+        assert_eq!(s.iqr(), 0.0);
+    }
+
+    #[test]
+    fn mean_is_mean() {
+        let s = Summary::of(&[1.0, 2.0, 6.0]);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty sample")]
+    fn empty_panics() {
+        Summary::of(&[]);
+    }
+
+    #[test]
+    fn time_formatting_units() {
+        assert_eq!(fmt_time(2.5), "2.500 s");
+        assert_eq!(fmt_time(0.0025), "2.500 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500 us");
+        assert_eq!(fmt_time(2.5e-9), "2.5 ns");
+    }
+
+    #[test]
+    fn count_formatting() {
+        assert_eq!(fmt_count(0), "0");
+        assert_eq!(fmt_count(999), "999");
+        assert_eq!(fmt_count(1000), "1_000");
+        assert_eq!(fmt_count(1234567), "1_234_567");
+    }
+}

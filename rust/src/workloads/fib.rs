@@ -1,0 +1,103 @@
+//! Fibonacci: extremely fine-grained recursion — a task at every recursive
+//! call (§6.2), optionally with a serial cutoff and the three-queue EPAQ
+//! classification of §6.4 (non-cutoff / cutoff-serial / post-taskwait
+//! continuation).
+
+/// GTaP-C source. `cutoff < 2` disables the cutoff (a task per call, as in
+/// Fig. 5); `epaq` adds the paper's three-queue classification.
+pub fn source(cutoff: i64, epaq: bool) -> String {
+    let base = if cutoff < 2 {
+        "if (n < 2) return n;".to_string()
+    } else {
+        format!("if (n < {cutoff}) return fib_serial(n);")
+    };
+    let c = cutoff.max(2);
+    let (q1, q2, qw) = if epaq {
+        (
+            format!(" queue((n - 1) < {c} ? 1 : 0)"),
+            format!(" queue((n - 2) < {c} ? 1 : 0)"),
+            " queue(2)".to_string(),
+        )
+    } else {
+        (String::new(), String::new(), String::new())
+    };
+    format!(
+        r#"
+#pragma gtap function
+int fib(int n) {{
+    {base}
+    int a; int b;
+    #pragma gtap task{q1}
+    a = fib(n - 1);
+    #pragma gtap task{q2}
+    b = fib(n - 2);
+    #pragma gtap taskwait{qw}
+    return a + b;
+}}
+"#
+    )
+}
+
+/// Reference value.
+pub fn reference(n: i64) -> i64 {
+    crate::sim::intrinsics::fib_value(n)
+}
+
+/// Number of tasks the no-cutoff version spawns (nodes of the call tree).
+pub fn task_count(n: i64) -> u64 {
+    crate::sim::intrinsics::fib_calls(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{GtapConfig, Session};
+    use crate::ir::types::Value;
+    use crate::sim::DeviceSpec;
+
+    fn cfg() -> GtapConfig {
+        GtapConfig {
+            grid_size: 8,
+            block_size: 32,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn no_cutoff_matches_reference() {
+        let mut s = Session::compile(&source(0, false), cfg(), DeviceSpec::h100()).unwrap();
+        let stats = s.run("fib", &[Value::from_i64(14)]).unwrap();
+        assert_eq!(stats.root_result.unwrap().as_i64(), reference(14));
+        assert_eq!(stats.tasks_finished, task_count(14));
+    }
+
+    #[test]
+    fn cutoff_matches_reference() {
+        let mut s = Session::compile(&source(8, false), cfg(), DeviceSpec::h100()).unwrap();
+        let stats = s.run("fib", &[Value::from_i64(18)]).unwrap();
+        assert_eq!(stats.root_result.unwrap().as_i64(), reference(18));
+        assert!(stats.tasks_finished < task_count(18), "cutoff prunes tasks");
+    }
+
+    #[test]
+    fn epaq_variant_matches_reference() {
+        let c = GtapConfig {
+            num_queues: 3,
+            ..cfg()
+        };
+        let mut s = Session::compile(&source(8, true), c, DeviceSpec::h100()).unwrap();
+        let stats = s.run("fib", &[Value::from_i64(17)]).unwrap();
+        assert_eq!(stats.root_result.unwrap().as_i64(), reference(17));
+    }
+
+    #[test]
+    fn cutoff_version_faster_than_no_cutoff() {
+        let run = |src: &str| {
+            let mut s = Session::compile(src, cfg(), DeviceSpec::h100()).unwrap();
+            s.run("fib", &[Value::from_i64(16)]).unwrap().cycles
+        };
+        let no_cut = run(&source(0, false));
+        let cut = run(&source(10, false));
+        assert!(cut < no_cut, "cutoff {cut} vs no-cutoff {no_cut}");
+    }
+}

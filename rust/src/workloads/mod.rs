@@ -1,0 +1,17 @@
+//! The paper's benchmark suite (§6.2–6.4), each as a GTaP-C source
+//! generator plus a native reference implementation used for validation.
+//!
+//! | Benchmark | Paper role | Module |
+//! |---|---|---|
+//! | Fibonacci | extreme fine-grained recursion (§6.2), EPAQ case (§6.4) | [`fib`] |
+//! | N-Queens | irregular task generation via pruning (§6.2) | [`nqueens`] |
+//! | Mergesort | memory-bound, low-parallelism tail (§6.2) | [`sort`] |
+//! | Cilksort | parallelized merge variant (§6.2) | [`sort`] |
+//! | Synthetic trees | worker-granularity study (§6.3) | [`tree`] |
+//! | BFS | block-level worker example (Program 5) | [`bfs`] |
+
+pub mod bfs;
+pub mod fib;
+pub mod nqueens;
+pub mod sort;
+pub mod tree;

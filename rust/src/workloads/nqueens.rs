@@ -1,0 +1,100 @@
+//! N-Queens: highly irregular task generation due to pruning (§6.2) —
+//! bitmask backtracking with tasks down to a fixed cutoff depth (7 in
+//! Table 3), serial `nqueens_serial` leaves below it, solutions accumulated
+//! with `atomic_add`. Spawn-only (no taskwait), so the paper compiles it
+//! with `-DGTAP_ASSUME_NO_TASKWAIT`.
+
+/// GTaP-C source. `depth` is the task cutoff depth; `epaq` uses two queues
+/// (non-cutoff vs cutoff rows, §6.4).
+pub fn source(depth: i64, epaq: bool) -> String {
+    let q = if epaq {
+        format!(" queue(row + 1 == {depth} ? 1 : 0)")
+    } else {
+        String::new()
+    };
+    format!(
+        r#"
+#pragma gtap function
+void nqueens(int n, int row, int left, int down, int right, ptr acc) {{
+    if (row == n) {{
+        atomic_add(acc, 1);
+        return;
+    }}
+    if (row == {depth}) {{
+        int c = nqueens_serial(n, row, left, down, right);
+        atomic_add(acc, c);
+        return;
+    }}
+    int full = (1 << n) - 1;
+    int free = full & ~(left | down | right);
+    while (free != 0) {{
+        int bit = free & (0 - free);
+        free = free ^ bit;
+        #pragma gtap task{q}
+        nqueens(n, row + 1, (left | bit) << 1, down | bit, (right | bit) >> 1, acc);
+    }}
+}}
+"#
+    )
+}
+
+/// Reference solution count.
+pub fn reference(n: i64) -> i64 {
+    crate::sim::intrinsics::nqueens_count(n, 0, 0, 0, 0).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{GtapConfig, Session};
+    use crate::ir::types::Value;
+    use crate::sim::DeviceSpec;
+
+    fn run(n: i64, depth: i64, epaq: bool) -> i64 {
+        let cfg = GtapConfig {
+            grid_size: 8,
+            block_size: 32,
+            assume_no_taskwait: true,
+            num_queues: if epaq { 2 } else { 1 },
+            ..Default::default()
+        };
+        let mut s = Session::compile(&source(depth, epaq), cfg, DeviceSpec::h100()).unwrap();
+        let acc = s.alloc(1);
+        s.run(
+            "nqueens",
+            &[
+                Value::from_i64(n),
+                Value::from_i64(0),
+                Value::from_i64(0),
+                Value::from_i64(0),
+                Value::from_i64(0),
+                Value(acc),
+            ],
+        )
+        .unwrap();
+        s.memory.read_i64s(acc, 1)[0]
+    }
+
+    #[test]
+    fn counts_match_reference() {
+        assert_eq!(run(6, 3, false), 4);
+        assert_eq!(run(8, 3, false), 92);
+    }
+
+    #[test]
+    fn cutoff_below_board_size() {
+        // cutoff deeper than n: tasks all the way down
+        assert_eq!(run(6, 6, false), 4);
+    }
+
+    #[test]
+    fn epaq_preserves_count() {
+        assert_eq!(run(8, 4, true), 92);
+    }
+
+    #[test]
+    fn ten_queens() {
+        assert_eq!(run(10, 3, false), reference(10));
+        assert_eq!(reference(10), 724);
+    }
+}

@@ -1,0 +1,249 @@
+//! Mergesort and Cilksort (§6.2).
+//!
+//! *Mergesort* (Programs 1/3): recursive splits with a serial-sort cutoff
+//! and a **serial** merge after the join — its final merge is executed by a
+//! single thread-level worker, which on the GPU is memory-latency bound:
+//! the paper's headline negative result (up to 103× slower than OpenMP).
+//!
+//! *Cilksort* parallelizes the merge (recursive split + binary search), and
+//! the paper tunes separate sort/merge cutoffs (Table 3: GTaP
+//! CUTOFF_SORT=64, CUTOFF_MERGE=256). EPAQ uses three queues: non-cutoff,
+//! serial-sort and serial-merge segments (§6.4).
+
+/// Mergesort GTaP-C source with serial-sort `cutoff`.
+pub fn mergesort_source(cutoff: i64) -> String {
+    format!(
+        r#"
+#pragma gtap function
+void msort(ptr data, int left, int right, ptr tmp) {{
+    if (right - left <= {cutoff}) {{
+        sort_serial(data, left, right);
+        return;
+    }}
+    int mid = (left + right) / 2;
+    #pragma gtap task
+    msort(data, left, mid, tmp);
+    #pragma gtap task
+    msort(data, mid, right, tmp);
+    #pragma gtap taskwait
+    merge_serial(data, left, mid, mid, right, tmp + left);
+    memcpy_words(data + left, tmp + left, right - left);
+}}
+"#
+    )
+}
+
+/// Cilksort GTaP-C source with sort/merge cutoffs; `epaq` enables the
+/// three-queue classification.
+pub fn cilksort_source(cutoff_sort: i64, cutoff_merge: i64, epaq: bool) -> String {
+    let (qs, qm, qmr, qw) = if epaq {
+        (
+            format!(" queue(mid - lo <= {cutoff_sort} ? 1 : 0)"),
+            format!(" queue(hi - lo <= {cutoff_merge} ? 2 : 0)"),
+            format!(" queue((m1 - lo1) + (m2 - lo2) <= {cutoff_merge} ? 2 : 0)"),
+            " queue(0)".to_string(),
+        )
+    } else {
+        Default::default()
+    };
+    format!(
+        r#"
+#pragma gtap function
+void csort(ptr data, int lo, int hi, ptr tmp) {{
+    if (hi - lo <= {cutoff_sort}) {{
+        sort_serial(data, lo, hi);
+        return;
+    }}
+    int mid = (lo + hi) / 2;
+    #pragma gtap task{qs}
+    csort(data, lo, mid, tmp);
+    #pragma gtap task{qs2}
+    csort(data, mid, hi, tmp);
+    #pragma gtap taskwait{qw}
+    #pragma gtap task{qm}
+    cmerge(data, lo, mid, mid, hi, tmp, lo);
+    #pragma gtap taskwait{qw}
+    #pragma gtap task
+    pcopy(data + lo, tmp + lo, hi - lo);
+    #pragma gtap taskwait{qw}
+}}
+
+#pragma gtap function
+void pcopy(ptr dst, ptr src, int n) {{
+    if (n <= {cutoff_merge}) {{
+        memcpy_words(dst, src, n);
+        return;
+    }}
+    int half = n / 2;
+    #pragma gtap task
+    pcopy(dst, src, half);
+    #pragma gtap task
+    pcopy(dst + half, src + half, n - half);
+    #pragma gtap taskwait{qw}
+}}
+
+#pragma gtap function
+void cmerge(ptr data, int lo1, int hi1, int lo2, int hi2, ptr tmp, int dst) {{
+    if ((hi1 - lo1) + (hi2 - lo2) <= {cutoff_merge}) {{
+        merge_serial(data, lo1, hi1, lo2, hi2, tmp + dst);
+        return;
+    }}
+    if (hi1 - lo1 >= hi2 - lo2) {{
+        int m1 = (lo1 + hi1) / 2;
+        int m2 = binsearch(data, lo2, hi2, data[m1]);
+        int d2 = dst + (m1 - lo1) + (m2 - lo2);
+        #pragma gtap task{qmr}
+        cmerge(data, lo1, m1, lo2, m2, tmp, dst);
+        #pragma gtap task{qmr}
+        cmerge(data, m1, hi1, m2, hi2, tmp, d2);
+        #pragma gtap taskwait{qw}
+        return;
+    }}
+    int m2 = (lo2 + hi2) / 2;
+    int m1 = binsearch(data, lo1, hi1, data[m2]);
+    int d2 = dst + (m1 - lo1) + (m2 - lo2);
+    #pragma gtap task{qmr}
+    cmerge(data, lo1, m1, lo2, m2, tmp, dst);
+    #pragma gtap task{qmr}
+    cmerge(data, m1, hi1, m2, hi2, tmp, d2);
+    #pragma gtap taskwait{qw}
+    return;
+}}
+"#,
+        qs2 = qs.replace("mid - lo", "hi - mid"),
+    )
+}
+
+/// Deterministic pseudo-random input array ("random 4-byte integers").
+pub fn input(n: usize, seed: u64) -> Vec<i64> {
+    let mut rng = crate::util::prng::Prng::seeded(seed);
+    (0..n).map(|_| (rng.next_u64() >> 33) as i64).collect()
+}
+
+/// Sorted reference.
+pub fn reference(xs: &[i64]) -> Vec<i64> {
+    let mut v = xs.to_vec();
+    v.sort_unstable();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{GtapConfig, Session};
+    use crate::ir::types::Value;
+    use crate::sim::DeviceSpec;
+
+    fn cfg(nq: usize) -> GtapConfig {
+        GtapConfig {
+            grid_size: 8,
+            block_size: 32,
+            num_queues: nq,
+            ..Default::default()
+        }
+    }
+
+    fn run_sort(src: &str, entry: &str, n: usize, nq: usize) -> (Vec<i64>, Vec<i64>) {
+        let mut s = Session::compile(src, cfg(nq), DeviceSpec::h100()).unwrap();
+        let data = s.alloc(n as u64);
+        let tmp = s.alloc(n as u64);
+        let xs = input(n, 42);
+        s.memory.write_i64s(data, &xs);
+        s.run(
+            entry,
+            &[
+                Value(data),
+                Value::from_i64(0),
+                Value::from_i64(n as i64),
+                Value(tmp),
+            ],
+        )
+        .unwrap();
+        (s.memory.read_i64s(data, n as u64), reference(&xs))
+    }
+
+    #[test]
+    fn mergesort_sorts() {
+        let (got, want) = run_sort(&mergesort_source(16), "msort", 1000, 1);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn mergesort_tiny_input_below_cutoff() {
+        let (got, want) = run_sort(&mergesort_source(64), "msort", 10, 1);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn cilksort_sorts() {
+        let (got, want) = run_sort(&cilksort_source(32, 64, false), "csort", 1500, 1);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn cilksort_epaq_sorts() {
+        let (got, want) = run_sort(&cilksort_source(32, 64, true), "csort", 1200, 3);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn cilksort_with_duplicates() {
+        let mut s = Session::compile(&cilksort_source(8, 16, false), cfg(1), DeviceSpec::h100())
+            .unwrap();
+        let n = 300usize;
+        let data = s.alloc(n as u64);
+        let tmp = s.alloc(n as u64);
+        let xs: Vec<i64> = (0..n).map(|i| (i as i64 * 7919) % 13).collect();
+        s.memory.write_i64s(data, &xs);
+        s.run(
+            "csort",
+            &[
+                Value(data),
+                Value::from_i64(0),
+                Value::from_i64(n as i64),
+                Value(tmp),
+            ],
+        )
+        .unwrap();
+        assert_eq!(s.memory.read_i64s(data, n as u64), reference(&xs));
+    }
+
+    #[test]
+    fn mergesort_gpu_much_slower_than_cpu_at_scale() {
+        // the §6.2 mergesort shape: GPU worse as n grows (serial merge tail)
+        let n = 1 << 14;
+        let run_dev = |dev: DeviceSpec, grid: usize| {
+            let mut s = Session::compile(
+                &mergesort_source(128),
+                GtapConfig {
+                    grid_size: grid,
+                    block_size: 32,
+                    ..Default::default()
+                },
+                dev,
+            )
+            .unwrap();
+            let data = s.alloc(n as u64);
+            let tmp = s.alloc(n as u64);
+            s.memory.write_i64s(data, &input(n, 7));
+            let stats = s
+                .run(
+                    "msort",
+                    &[
+                        Value(data),
+                        Value::from_i64(0),
+                        Value::from_i64(n as i64),
+                        Value(tmp),
+                    ],
+                )
+                .unwrap();
+            stats.seconds
+        };
+        let gpu = run_dev(DeviceSpec::h100(), 64);
+        let cpu = run_dev(DeviceSpec::grace72(), 72);
+        assert!(
+            gpu > 3.0 * cpu,
+            "gpu {gpu} should be much slower than cpu {cpu} on mergesort"
+        );
+    }
+}

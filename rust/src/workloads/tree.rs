@@ -1,0 +1,304 @@
+//! Synthetic tree benchmarks (§6.3): each node is one task that spawns its
+//! children, taskwaits, then runs `do_memory_and_compute` (`mem_ops`
+//! pseudo-random 64-bit loads + `compute_iters` FP64 FMAs — the `payload`
+//! intrinsic, i.e. the AOT Pallas kernel).
+//!
+//! * **Full binary tree** of depth `D` (§6.3.1): 2^(D+1)−1 tasks.
+//! * **Depth-dependent pruned B-ary tree** (§6.3.2): B = 3, each child of a
+//!   depth-d node generated with probability p(d) = 1 − d/D, so the tree
+//!   thins with depth — the low-intra-warp-utilization regime of Fig. 9.
+//!
+//! Results are validated by a checksum: every node's payload value is
+//! scaled, truncated and atomically accumulated; the native references here
+//! replicate that arithmetic exactly.
+//!
+//! Thread-level tasks call `payload` once; block-level tasks split the same
+//! work over `chunks` lanes with `parallel_for`, mirroring the paper's
+//! "block-cooperative, data-parallel" execution of one task.
+
+use crate::sim::intrinsics::payload_native;
+
+/// Scale factor of the checksum quantization.
+pub const CHECKSUM_SCALE: f64 = 1048576.0;
+
+fn mix_intrinsic(a: i64, b: i64) -> i64 {
+    // must match sim::intrinsics Intrinsic::Mix
+    (crate::util::prng::mix64(a as u64 ^ (b as u64).rotate_left(31)) >> 1) as i64
+}
+
+fn checksum_term(x: f64) -> i64 {
+    (x * CHECKSUM_SCALE) as i64
+}
+
+/// Thread-level full binary tree source. Internal nodes spawn two children,
+/// taskwait, then run the payload; leaves only run the payload.
+pub fn full_tree_source(mem_ops: i64, compute_iters: i64) -> String {
+    format!(
+        r#"
+#pragma gtap function
+void tree(int depth, int seed, ptr acc) {{
+    if (depth > 0) {{
+        #pragma gtap task
+        tree(depth - 1, mix(seed, 1), acc);
+        #pragma gtap task
+        tree(depth - 1, mix(seed, 2), acc);
+        #pragma gtap taskwait
+    }}
+    float x = payload(seed, {mem_ops}, {compute_iters});
+    atomic_add(acc, (int) (x * {CHECKSUM_SCALE:.1}));
+}}
+"#
+    )
+}
+
+/// Block-level full binary tree: the payload is split over `chunks`
+/// cooperating iterations.
+pub fn full_tree_block_source(mem_ops: i64, compute_iters: i64, chunks: i64) -> String {
+    let mem_per = mem_ops / chunks;
+    let comp_per = compute_iters / chunks;
+    format!(
+        r#"
+#pragma gtap function
+void tree(int depth, int seed, ptr acc) {{
+    if (depth > 0) {{
+        #pragma gtap task
+        tree(depth - 1, mix(seed, 1), acc);
+        #pragma gtap task
+        tree(depth - 1, mix(seed, 2), acc);
+        #pragma gtap taskwait
+    }}
+    parallel_for (i in 0..{chunks}) {{
+        float x = payload(mix(seed, i + 100), {mem_per}, {comp_per});
+        atomic_add(acc, (int) (x * {CHECKSUM_SCALE:.1}));
+    }}
+}}
+"#
+    )
+}
+
+/// Thread-level pruned 3-ary tree: a node at depth `d` (< `max_depth`)
+/// generates each of 3 children with probability 1 − d/D.
+pub fn pruned_tree_source(max_depth: i64, mem_ops: i64, compute_iters: i64) -> String {
+    format!(
+        r#"
+#pragma gtap function
+void ptree(int d, int seed, ptr acc) {{
+    if (d < {max_depth}) {{
+        if (mix(seed, 1) % {max_depth} >= d) {{
+            #pragma gtap task
+            ptree(d + 1, mix(seed, 11), acc);
+        }}
+        if (mix(seed, 2) % {max_depth} >= d) {{
+            #pragma gtap task
+            ptree(d + 1, mix(seed, 12), acc);
+        }}
+        if (mix(seed, 3) % {max_depth} >= d) {{
+            #pragma gtap task
+            ptree(d + 1, mix(seed, 13), acc);
+        }}
+        #pragma gtap taskwait
+    }}
+    float x = payload(seed, {mem_ops}, {compute_iters});
+    atomic_add(acc, (int) (x * {CHECKSUM_SCALE:.1}));
+}}
+"#
+    )
+}
+
+/// Block-level pruned 3-ary tree.
+pub fn pruned_tree_block_source(
+    max_depth: i64,
+    mem_ops: i64,
+    compute_iters: i64,
+    chunks: i64,
+) -> String {
+    let mem_per = mem_ops / chunks;
+    let comp_per = compute_iters / chunks;
+    format!(
+        r#"
+#pragma gtap function
+void ptree(int d, int seed, ptr acc) {{
+    if (d < {max_depth}) {{
+        if (mix(seed, 1) % {max_depth} >= d) {{
+            #pragma gtap task
+            ptree(d + 1, mix(seed, 11), acc);
+        }}
+        if (mix(seed, 2) % {max_depth} >= d) {{
+            #pragma gtap task
+            ptree(d + 1, mix(seed, 12), acc);
+        }}
+        if (mix(seed, 3) % {max_depth} >= d) {{
+            #pragma gtap task
+            ptree(d + 1, mix(seed, 13), acc);
+        }}
+        #pragma gtap taskwait
+    }}
+    parallel_for (i in 0..{chunks}) {{
+        float x = payload(mix(seed, i + 100), {mem_per}, {comp_per});
+        atomic_add(acc, (int) (x * {CHECKSUM_SCALE:.1}));
+    }}
+}}
+"#
+    )
+}
+
+/// Native checksum reference of the thread-level full binary tree.
+pub fn full_tree_reference(depth: i64, seed: i64, mem_ops: i64, compute_iters: i64) -> (i64, u64) {
+    let mut sum = 0i64;
+    let mut tasks = 0u64;
+    fn rec(depth: i64, seed: i64, m: i64, c: i64, sum: &mut i64, tasks: &mut u64) {
+        *tasks += 1;
+        if depth > 0 {
+            rec(depth - 1, mix_intrinsic(seed, 1), m, c, sum, tasks);
+            rec(depth - 1, mix_intrinsic(seed, 2), m, c, sum, tasks);
+        }
+        *sum = sum.wrapping_add(checksum_term(payload_native(seed, m, c)));
+    }
+    rec(depth, seed, mem_ops, compute_iters, &mut sum, &mut tasks);
+    (sum, tasks)
+}
+
+/// Native checksum reference of the block-level full binary tree.
+pub fn full_tree_block_reference(
+    depth: i64,
+    seed: i64,
+    mem_ops: i64,
+    compute_iters: i64,
+    chunks: i64,
+) -> i64 {
+    let (mem_per, comp_per) = (mem_ops / chunks, compute_iters / chunks);
+    let mut sum = 0i64;
+    fn rec(depth: i64, seed: i64, m: i64, c: i64, chunks: i64, sum: &mut i64) {
+        if depth > 0 {
+            rec(depth - 1, mix_intrinsic(seed, 1), m, c, chunks, sum);
+            rec(depth - 1, mix_intrinsic(seed, 2), m, c, chunks, sum);
+        }
+        for i in 0..chunks {
+            *sum = sum.wrapping_add(checksum_term(payload_native(
+                mix_intrinsic(seed, i + 100),
+                m,
+                c,
+            )));
+        }
+    }
+    rec(depth, seed, mem_per, comp_per, chunks, &mut sum);
+    sum
+}
+
+/// Native checksum reference of the thread-level pruned tree; also returns
+/// the task count (Fig. 8/9 diagnostics).
+pub fn pruned_tree_reference(
+    max_depth: i64,
+    seed: i64,
+    mem_ops: i64,
+    compute_iters: i64,
+) -> (i64, u64) {
+    let mut sum = 0i64;
+    let mut tasks = 0u64;
+    fn rec(d: i64, dmax: i64, seed: i64, m: i64, c: i64, sum: &mut i64, tasks: &mut u64) {
+        *tasks += 1;
+        if d < dmax {
+            for (k, child_salt) in [(1, 11), (2, 12), (3, 13)] {
+                if mix_intrinsic(seed, k) % dmax >= d {
+                    rec(d + 1, dmax, mix_intrinsic(seed, child_salt), m, c, sum, tasks);
+                }
+            }
+        }
+        *sum = sum.wrapping_add(checksum_term(payload_native(seed, m, c)));
+    }
+    rec(0, max_depth, seed, mem_ops, compute_iters, &mut sum, &mut tasks);
+    (sum, tasks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Granularity, GtapConfig, Session};
+    use crate::ir::types::Value;
+    use crate::sim::DeviceSpec;
+
+    fn thread_cfg() -> GtapConfig {
+        GtapConfig {
+            grid_size: 8,
+            block_size: 32,
+            ..Default::default()
+        }
+    }
+
+    fn block_cfg(block: usize) -> GtapConfig {
+        GtapConfig {
+            grid_size: 8,
+            block_size: block,
+            granularity: Granularity::Block,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn full_tree_checksum_matches() {
+        let (want, want_tasks) = full_tree_reference(6, 7, 4, 8);
+        let mut s =
+            Session::compile(&full_tree_source(4, 8), thread_cfg(), DeviceSpec::h100()).unwrap();
+        let acc = s.alloc(1);
+        let stats = s
+            .run("tree", &[Value::from_i64(6), Value::from_i64(7), Value(acc)])
+            .unwrap();
+        assert_eq!(s.memory.read_i64s(acc, 1)[0], want);
+        assert_eq!(stats.tasks_finished, want_tasks);
+        assert_eq!(want_tasks, (1 << 7) - 1);
+    }
+
+    #[test]
+    fn full_tree_block_checksum_matches() {
+        let chunks = 64;
+        let want = full_tree_block_reference(4, 3, 128, 256, chunks);
+        let mut s = Session::compile(
+            &full_tree_block_source(128, 256, chunks),
+            block_cfg(64),
+            DeviceSpec::h100(),
+        )
+        .unwrap();
+        let acc = s.alloc(1);
+        s.run("tree", &[Value::from_i64(4), Value::from_i64(3), Value(acc)])
+            .unwrap();
+        assert_eq!(s.memory.read_i64s(acc, 1)[0], want);
+    }
+
+    #[test]
+    fn pruned_tree_checksum_matches() {
+        let (want, want_tasks) = pruned_tree_reference(8, 5, 2, 4);
+        let mut s =
+            Session::compile(&pruned_tree_source(8, 2, 4), thread_cfg(), DeviceSpec::h100())
+                .unwrap();
+        let acc = s.alloc(1);
+        let stats = s
+            .run("ptree", &[Value::from_i64(0), Value::from_i64(5), Value(acc)])
+            .unwrap();
+        assert_eq!(s.memory.read_i64s(acc, 1)[0], want);
+        assert_eq!(stats.tasks_finished, want_tasks);
+        assert!(want_tasks > 3, "root must expand: {want_tasks}");
+    }
+
+    #[test]
+    fn pruned_tree_thins_with_depth() {
+        // expected branching drops below 1 beyond d = 2D/3, so the tree is
+        // finite and much smaller than 3^D
+        let (_, tasks) = pruned_tree_reference(9, 1, 0, 0);
+        assert!(tasks < 3u64.pow(9) / 4, "{tasks}");
+    }
+
+    #[test]
+    fn cpu_device_runs_tree() {
+        let (want, _) = full_tree_reference(5, 1, 2, 4);
+        let cfg = GtapConfig {
+            grid_size: 72,
+            block_size: 32,
+            ..Default::default()
+        };
+        let mut s = Session::compile(&full_tree_source(2, 4), cfg, DeviceSpec::grace72()).unwrap();
+        let acc = s.alloc(1);
+        s.run("tree", &[Value::from_i64(5), Value::from_i64(1), Value(acc)])
+            .unwrap();
+        assert_eq!(s.memory.read_i64s(acc, 1)[0], want);
+    }
+}

@@ -1,0 +1,214 @@
+//! Differential fuzzing of the gtapc pipeline: random integer expression
+//! trees are compiled to bytecode and executed on the simulator; results
+//! must match a direct AST evaluation done in the test. This exercises
+//! codegen's register allocation, temp recycling, short-circuit lowering,
+//! ternaries and division guards end to end.
+
+use gtap::bench::runners::Exec;
+use gtap::coordinator::Session;
+use gtap::ir::types::Value;
+use gtap::util::prop::{Gen, Runner};
+
+/// A random expression over variables a, b, c with C semantics.
+#[derive(Debug, Clone)]
+enum E {
+    Var(usize),
+    Lit(i64),
+    Add(Box<E>, Box<E>),
+    Sub(Box<E>, Box<E>),
+    Mul(Box<E>, Box<E>),
+    Div(Box<E>, Box<E>),
+    Rem(Box<E>, Box<E>),
+    And(Box<E>, Box<E>),
+    Or(Box<E>, Box<E>),
+    Xor(Box<E>, Box<E>),
+    Shl(Box<E>, Box<E>),
+    Shr(Box<E>, Box<E>),
+    Lt(Box<E>, Box<E>),
+    Eq(Box<E>, Box<E>),
+    LAnd(Box<E>, Box<E>),
+    LOr(Box<E>, Box<E>),
+    Not(Box<E>),
+    Neg(Box<E>),
+    BitNot(Box<E>),
+    Tern(Box<E>, Box<E>, Box<E>),
+}
+
+fn gen_expr(g: &mut Gen, depth: usize) -> E {
+    if depth == 0 || g.chance(0.3) {
+        return if g.chance(0.5) {
+            E::Var(g.usize(0, 2))
+        } else {
+            E::Lit(g.int(-64, 64))
+        };
+    }
+    let d = depth - 1;
+    match g.int(0, 18) {
+        0 => E::Add(Box::new(gen_expr(g, d)), Box::new(gen_expr(g, d))),
+        1 => E::Sub(Box::new(gen_expr(g, d)), Box::new(gen_expr(g, d))),
+        2 => E::Mul(Box::new(gen_expr(g, d)), Box::new(gen_expr(g, d))),
+        3 => E::Div(Box::new(gen_expr(g, d)), Box::new(gen_expr(g, d))),
+        4 => E::Rem(Box::new(gen_expr(g, d)), Box::new(gen_expr(g, d))),
+        5 => E::And(Box::new(gen_expr(g, d)), Box::new(gen_expr(g, d))),
+        6 => E::Or(Box::new(gen_expr(g, d)), Box::new(gen_expr(g, d))),
+        7 => E::Xor(Box::new(gen_expr(g, d)), Box::new(gen_expr(g, d))),
+        8 => E::Shl(Box::new(gen_expr(g, d)), Box::new(E::Lit(g.int(0, 8)))),
+        9 => E::Shr(Box::new(gen_expr(g, d)), Box::new(E::Lit(g.int(0, 8)))),
+        10 => E::Lt(Box::new(gen_expr(g, d)), Box::new(gen_expr(g, d))),
+        11 => E::Eq(Box::new(gen_expr(g, d)), Box::new(gen_expr(g, d))),
+        12 => E::LAnd(Box::new(gen_expr(g, d)), Box::new(gen_expr(g, d))),
+        13 => E::LOr(Box::new(gen_expr(g, d)), Box::new(gen_expr(g, d))),
+        14 => E::Not(Box::new(gen_expr(g, d))),
+        15 => E::Neg(Box::new(gen_expr(g, d))),
+        16 => E::BitNot(Box::new(gen_expr(g, d))),
+        _ => E::Tern(
+            Box::new(gen_expr(g, d)),
+            Box::new(gen_expr(g, d)),
+            Box::new(gen_expr(g, d)),
+        ),
+    }
+}
+
+fn render(e: &E) -> String {
+    match e {
+        E::Var(i) => ["a", "b", "c"][*i].to_string(),
+        E::Lit(v) => {
+            if *v < 0 {
+                format!("({v})")
+            } else {
+                format!("{v}")
+            }
+        }
+        E::Add(l, r) => format!("({} + {})", render(l), render(r)),
+        E::Sub(l, r) => format!("({} - {})", render(l), render(r)),
+        E::Mul(l, r) => format!("({} * {})", render(l), render(r)),
+        E::Div(l, r) => format!("({} / {})", render(l), render(r)),
+        E::Rem(l, r) => format!("({} % {})", render(l), render(r)),
+        E::And(l, r) => format!("({} & {})", render(l), render(r)),
+        E::Or(l, r) => format!("({} | {})", render(l), render(r)),
+        E::Xor(l, r) => format!("({} ^ {})", render(l), render(r)),
+        E::Shl(l, r) => format!("({} << {})", render(l), render(r)),
+        E::Shr(l, r) => format!("({} >> {})", render(l), render(r)),
+        E::Lt(l, r) => format!("({} < {})", render(l), render(r)),
+        E::Eq(l, r) => format!("({} == {})", render(l), render(r)),
+        E::LAnd(l, r) => format!("({} && {})", render(l), render(r)),
+        E::LOr(l, r) => format!("({} || {})", render(l), render(r)),
+        E::Not(x) => format!("(!{})", render(x)),
+        E::Neg(x) => format!("(-{})", render(x)),
+        E::BitNot(x) => format!("(~{})", render(x)),
+        E::Tern(c, t, f) => format!("({} ? {} : {})", render(c), render(t), render(f)),
+    }
+}
+
+/// C/DSL semantics (wrapping; div/rem by zero -> 0 as in the interpreter).
+fn eval(e: &E, v: &[i64; 3]) -> i64 {
+    let b = |x: bool| x as i64;
+    match e {
+        E::Var(i) => v[*i],
+        E::Lit(x) => *x,
+        E::Add(l, r) => eval(l, v).wrapping_add(eval(r, v)),
+        E::Sub(l, r) => eval(l, v).wrapping_sub(eval(r, v)),
+        E::Mul(l, r) => eval(l, v).wrapping_mul(eval(r, v)),
+        E::Div(l, r) => {
+            let d = eval(r, v);
+            if d == 0 {
+                0
+            } else {
+                eval(l, v).wrapping_div(d)
+            }
+        }
+        E::Rem(l, r) => {
+            let d = eval(r, v);
+            if d == 0 {
+                0
+            } else {
+                eval(l, v).wrapping_rem(d)
+            }
+        }
+        E::And(l, r) => eval(l, v) & eval(r, v),
+        E::Or(l, r) => eval(l, v) | eval(r, v),
+        E::Xor(l, r) => eval(l, v) ^ eval(r, v),
+        E::Shl(l, r) => eval(l, v).wrapping_shl(eval(r, v) as u32),
+        E::Shr(l, r) => eval(l, v).wrapping_shr(eval(r, v) as u32),
+        E::Lt(l, r) => b(eval(l, v) < eval(r, v)),
+        E::Eq(l, r) => b(eval(l, v) == eval(r, v)),
+        E::LAnd(l, r) => b(eval(l, v) != 0 && eval(r, v) != 0),
+        E::LOr(l, r) => b(eval(l, v) != 0 || eval(r, v) != 0),
+        E::Not(x) => b(eval(x, v) == 0),
+        E::Neg(x) => eval(x, v).wrapping_neg(),
+        E::BitNot(x) => !eval(x, v),
+        E::Tern(c, t, f) => {
+            if eval(c, v) != 0 {
+                eval(t, v)
+            } else {
+                eval(f, v)
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzz_expressions_match_reference() {
+    Runner::new().cases(150).run("expr-fuzz", |g| {
+        let e = gen_expr(g, 5);
+        let src = format!(
+            "#pragma gtap function\nint f(int a, int b, int c) {{ return {}; }}",
+            render(&e)
+        );
+        let exec = Exec::gpu_thread(1, 32);
+        let mut session =
+            Session::compile(&src, exec.cfg.clone(), exec.device.clone()).unwrap_or_else(|err| {
+                panic!("compile failed for {src}\n{err}")
+            });
+        let args = [g.int(-100, 100), g.int(-100, 100), g.int(-100, 100)];
+        let stats = session
+            .run(
+                "f",
+                &[
+                    Value::from_i64(args[0]),
+                    Value::from_i64(args[1]),
+                    Value::from_i64(args[2]),
+                ],
+            )
+            .unwrap();
+        let got = stats.root_result.unwrap().as_i64();
+        let want = eval(&e, &args);
+        assert_eq!(got, want, "args {args:?}, src:\n{src}");
+    });
+}
+
+#[test]
+fn fuzz_expressions_in_loops() {
+    // the same expressions inside a summing loop exercise register reuse
+    // across iterations and branch back-edges
+    Runner::new().cases(40).run("loop-expr-fuzz", |g| {
+        let e = gen_expr(g, 3);
+        let src = format!(
+            "#pragma gtap function\nint f(int a, int b, int c) {{\n\
+             int s = 0;\nint i = 0;\nwhile (i < 4) {{ s = s + ({}); a = a + 1; i = i + 1; }}\n\
+             return s; }}",
+            render(&e)
+        );
+        let exec = Exec::gpu_thread(1, 32);
+        let mut session = Session::compile(&src, exec.cfg.clone(), exec.device.clone())
+            .unwrap_or_else(|err| panic!("compile failed for {src}\n{err}"));
+        let args = [g.int(-50, 50), g.int(-50, 50), g.int(-50, 50)];
+        let stats = session
+            .run(
+                "f",
+                &[
+                    Value::from_i64(args[0]),
+                    Value::from_i64(args[1]),
+                    Value::from_i64(args[2]),
+                ],
+            )
+            .unwrap();
+        let mut want = 0i64;
+        let mut v = args;
+        for _ in 0..4 {
+            want = want.wrapping_add(eval(&e, &v));
+            v[0] += 1;
+        }
+        assert_eq!(stats.root_result.unwrap().as_i64(), want, "src:\n{src}");
+    });
+}

@@ -1,0 +1,87 @@
+//! Golden tests pinning the gtapc transformation against the paper's
+//! examples: Program 1 (mergesort state machine), Program 4/6 (fib
+//! task-data layout + switch), Program 5 (block-level BFS).
+
+use gtap::compiler::{compile_default, pretty};
+use gtap::workloads::{bfs, fib, sort};
+
+#[test]
+fn mergesort_becomes_two_state_machine() {
+    // Program 1: case 0 = split/spawn/wait, case 1 = merge
+    let m = compile_default(&sort::mergesort_source(128)).unwrap();
+    let f = m.func(m.func_id("msort").unwrap());
+    assert_eq!(f.num_states(), 2);
+    let text = pretty::render_func(f);
+    assert!(text.contains("case 0:"), "{text}");
+    assert!(text.contains("case 1:"), "{text}");
+    assert!(text.contains("__gtap_prepare_for_join(next_state=1"), "{text}");
+    // mid crosses the taskwait: it must be spilled (cf. Program 1's t->mid)
+    assert!(f.layout.offset_of("mid").is_some(), "{text}");
+    // the merge intrinsic runs in the post-join state
+    let entry1 = f.state_entries[1] as usize;
+    let post_join = &f.insns[entry1..];
+    assert!(post_join
+        .iter()
+        .any(|i| matches!(i, gtap::ir::Insn::Intr { id: gtap::ir::Intrinsic::MergeSerial, .. })));
+}
+
+#[test]
+fn fib_task_data_matches_program6() {
+    let m = compile_default(&fib::source(0, true)).unwrap();
+    let f = m.func(m.func_id("fib").unwrap());
+    let text = pretty::render_func(f);
+    // struct fib_task_data { int __cap_n; __cap_a; __cap_b; __cap_result }
+    assert!(text.contains("struct fib_task_data"), "{text}");
+    for field in ["__cap_n", "__cap_a", "__cap_b", "__cap___result"] {
+        assert!(text.contains(field), "missing {field} in:\n{text}");
+    }
+    assert!(text.contains("__gtap_load_result(0)"), "{text}");
+    assert!(text.contains("__gtap_load_result(1)"), "{text}");
+    assert_eq!(f.layout.words(), 4);
+}
+
+#[test]
+fn bfs_compiles_block_level_with_parfor() {
+    let m = compile_default(&bfs::source()).unwrap();
+    let f = m.func(m.func_id("bfs").unwrap());
+    assert!(f.uses_parfor);
+    assert!(!f.has_taskwait, "Program 5 is spawn-only");
+    assert_eq!(f.num_states(), 1);
+}
+
+#[test]
+fn cilksort_task_functions_state_counts() {
+    let m = compile_default(&sort::cilksort_source(64, 256, true)).unwrap();
+    let cs = m.func(m.func_id("csort").unwrap());
+    assert_eq!(cs.num_states(), 4, "three taskwaits: sorts, merge, copy-back");
+    let cm = m.func(m.func_id("cmerge").unwrap());
+    assert_eq!(cm.num_states(), 3, "one taskwait per split branch");
+    let pc = m.func(m.func_id("pcopy").unwrap());
+    assert_eq!(pc.num_states(), 2, "parallel copy joins its two halves");
+}
+
+#[test]
+fn nested_taskwaits_unique_states() {
+    let src = r#"
+        #pragma gtap function
+        void leaf(int x) { print_int(x); }
+        #pragma gtap function
+        void phases(int n) {
+            int i = 0;
+            while (i < n) {
+                #pragma gtap task
+                leaf(i);
+                #pragma gtap taskwait
+                i = i + 1;
+            }
+            #pragma gtap task
+            leaf(n);
+            #pragma gtap taskwait
+        }
+    "#;
+    let m = compile_default(src).unwrap();
+    let f = m.func(m.func_id("phases").unwrap());
+    assert_eq!(f.num_states(), 3, "each taskwait gets a unique state");
+    // re-entry into the loop must work: i is spilled
+    assert!(f.layout.offset_of("i").is_some());
+}

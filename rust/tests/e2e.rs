@@ -1,0 +1,179 @@
+//! Cross-module integration tests: scheduler-policy equivalence,
+//! determinism, feasibility errors, performance-shape assertions, and the
+//! XLA payload path.
+
+use gtap::bench::runners::{self, Exec};
+use gtap::coordinator::SchedulerKind;
+use gtap::util::prop::Runner;
+use gtap::workloads::tree;
+
+#[test]
+fn all_policies_agree_on_every_workload() {
+    for kind in [
+        SchedulerKind::WorkStealing,
+        SchedulerKind::GlobalQueue,
+        SchedulerKind::SequentialChaseLev,
+    ] {
+        let e = Exec::gpu_thread(8, 32).scheduler(kind);
+        runners::run_fib(&e, 14, 0, false).unwrap();
+        runners::run_nqueens(&e.clone().no_taskwait(), 8, 4, false).unwrap();
+        runners::run_mergesort(&e, 800, 32, 7).unwrap();
+        runners::run_cilksort(&e, 800, 32, 64, false, 7).unwrap();
+        runners::run_full_tree(&e, 6, 4, 8, None).unwrap();
+    }
+}
+
+#[test]
+fn simulated_time_deterministic_per_seed_and_varies_across_seeds() {
+    let run = |seed| {
+        runners::run_fib(&Exec::gpu_thread(16, 32).seed(seed), 16, 0, false)
+            .unwrap()
+            .stats
+            .cycles
+    };
+    assert_eq!(run(1), run(1));
+    assert_ne!(run(1), run(2), "victim selection must differ across seeds");
+}
+
+#[test]
+fn queue_overflow_is_reported_not_hung() {
+    let e = Exec::gpu_thread(1, 32).queue_capacity(8);
+    let err = match runners::run_fib(&e, 18, 0, false) {
+        Err(e) => e,
+        Ok(_) => panic!("expected overflow error"),
+    };
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("GTAP_MAX_TASKS") || msg.contains("overflow") || msg.contains("pool"),
+        "{msg}"
+    );
+}
+
+#[test]
+fn work_stealing_beats_global_queue_at_scale() {
+    // Fig. 3's headline shape at a mid-size point
+    let ws = runners::run_fib(&Exec::gpu_thread(128, 32), 20, 0, false)
+        .unwrap()
+        .seconds;
+    let gq = runners::run_fib(
+        &Exec::gpu_thread(128, 32).scheduler(SchedulerKind::GlobalQueue),
+        20,
+        0,
+        false,
+    )
+    .unwrap()
+    .seconds;
+    assert!(gq > ws, "global queue {gq} must be slower than WS {ws}");
+}
+
+#[test]
+fn more_workers_help_until_saturation() {
+    let t = |grid| {
+        runners::run_fib(&Exec::gpu_thread(grid, 32), 20, 0, false)
+            .unwrap()
+            .seconds
+    };
+    let (t1, t16) = (t(1), t(16));
+    assert!(t16 < t1 / 3.0, "16x workers must speed up: {t1} vs {t16}");
+}
+
+#[test]
+fn gpu_beats_cpu_on_compute_heavy_tree() {
+    // needs enough tasks to cover GPU startup + fill warps (§6.3: GTaP
+    // wins as problem size grows)
+    let gpu = runners::run_full_tree(&Exec::gpu_thread(128, 64), 14, 16, 2048, None)
+        .unwrap()
+        .seconds;
+    let cpu = runners::run_full_tree(&Exec::cpu72(), 14, 16, 2048, None)
+        .unwrap()
+        .seconds;
+    assert!(gpu < cpu, "gpu {gpu} vs cpu {cpu}");
+}
+
+#[test]
+fn cpu_beats_gpu_on_mergesort_at_scale() {
+    // the §6.2 negative result
+    let gpu = runners::run_mergesort(&Exec::gpu_thread(128, 32), 1 << 14, 128, 3)
+        .unwrap()
+        .seconds;
+    let cpu = runners::run_mergesort(&Exec::cpu72(), 1 << 14, 4096, 3)
+        .unwrap()
+        .seconds;
+    assert!(cpu < gpu, "cpu {cpu} must beat gpu {gpu} on mergesort");
+}
+
+#[test]
+fn block_level_wins_thin_trees_with_heavy_tasks() {
+    // Fig. 8's reversal: pruned tree + large per-task work
+    let thread = runners::run_pruned_tree(&Exec::gpu_thread(128, 64), 14, 64, 4096, 5)
+        .unwrap()
+        .seconds;
+    let block = runners::run_pruned_tree(&Exec::gpu_block(128, 64), 14, 64, 4096, 5)
+        .unwrap()
+        .seconds;
+    assert!(
+        block < thread,
+        "block {block} should beat thread {thread} on the thin tree"
+    );
+}
+
+#[test]
+fn prop_random_tree_checksums_match_reference() {
+    Runner::new().cases(12).run("random-trees", |g| {
+        let depth = g.int(2, 7);
+        let mem = g.int(0, 16);
+        let comp = g.int(0, 32);
+        let seed = g.int(1, 1 << 20);
+        let e = Exec::gpu_thread(g.usize(1, 8), 32).seed(g.rng().next_u64());
+        let out = runners::run_pruned_tree(&e, depth, mem, comp, seed).unwrap();
+        // run_pruned_tree validates internally; also sanity-check counts
+        let (_, want_tasks) = tree::pruned_tree_reference(depth, seed, mem, comp);
+        assert_eq!(out.stats.tasks_finished, want_tasks);
+    });
+}
+
+#[test]
+fn prop_random_sorts() {
+    Runner::new().cases(10).run("random-sorts", |g| {
+        let n = g.usize(2, 2000);
+        let cutoff = *g.choose(&[4i64, 16, 64, 256]);
+        let e = Exec::gpu_thread(g.usize(1, 8), 32).seed(g.rng().next_u64());
+        if g.chance(0.5) {
+            runners::run_mergesort(&e, n, cutoff, g.rng().next_u64()).unwrap();
+        } else {
+            runners::run_cilksort(&e, n, cutoff, cutoff * 2, g.chance(0.5), g.rng().next_u64())
+                .unwrap();
+        }
+    });
+}
+
+#[test]
+fn xla_payload_engine_end_to_end() {
+    let Ok(mut engine) = gtap::runtime::XlaPayloadEngine::from_artifacts() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let out = runners::run_full_tree(&Exec::gpu_thread(8, 32), 6, 8, 16, Some(&mut engine))
+        .unwrap();
+    assert_eq!(out.stats.tasks_finished, 127);
+    assert!(engine.executions > 0);
+    assert_eq!(engine.lane_payloads, 127);
+    // simulated time must be engine-independent
+    let native = runners::run_full_tree(&Exec::gpu_thread(8, 32), 6, 8, 16, None).unwrap();
+    assert_eq!(out.stats.cycles, native.stats.cycles);
+}
+
+#[test]
+fn epaq_helps_at_paper_scale() {
+    if std::env::var("GTAP_SLOW_TESTS").ok().as_deref() != Some("1") {
+        eprintln!("skipping (set GTAP_SLOW_TESTS=1): ~20s");
+        return;
+    }
+    let one = runners::run_fib(&Exec::gpu_thread(4000, 32).queues(1), 38, 10, false)
+        .unwrap()
+        .seconds;
+    let epaq = runners::run_fib(&Exec::gpu_thread(4000, 32).queues(3), 38, 10, true)
+        .unwrap()
+        .seconds;
+    assert!(epaq < one, "EPAQ {epaq} must beat 1-queue {one} at scale");
+}

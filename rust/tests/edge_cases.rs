@@ -1,0 +1,213 @@
+//! Edge cases and invariants across the stack: degenerate problem sizes,
+//! stats consistency, and divergence-model properties.
+
+use gtap::bench::runners::{self, Exec};
+use gtap::coordinator::{GtapConfig, Session};
+use gtap::ir::types::Value;
+use gtap::sim::divergence::{warp_cycles, LanePath};
+use gtap::sim::DeviceSpec;
+use gtap::util::prop::Runner;
+
+#[test]
+fn degenerate_problem_sizes() {
+    let e = Exec::gpu_thread(2, 32);
+    // fib base cases: single task, no spawns
+    for n in [0, 1] {
+        let out = runners::run_fib(&e, n, 0, false).unwrap();
+        assert_eq!(out.stats.tasks_finished, 1);
+        assert_eq!(out.stats.spawns, 0);
+    }
+    // 1-element and 2-element sorts
+    runners::run_mergesort(&e, 1, 16, 1).unwrap();
+    runners::run_mergesort(&e, 2, 16, 1).unwrap();
+    runners::run_cilksort(&e, 2, 4, 8, false, 1).unwrap();
+    // depth-0 tree: root only
+    let out = runners::run_full_tree(&e, 0, 1, 1, None).unwrap();
+    assert_eq!(out.stats.tasks_finished, 1);
+    // 2-vertex graph
+    runners::run_bfs(&Exec::gpu_block(2, 32).no_taskwait(), 2, 1, 1).unwrap();
+    // nqueens trivial boards
+    runners::run_nqueens(&e.clone().no_taskwait(), 1, 1, false).unwrap();
+    runners::run_nqueens(&e.clone().no_taskwait(), 4, 2, false).unwrap();
+}
+
+#[test]
+fn stats_are_consistent() {
+    let out = runners::run_fib(&Exec::gpu_thread(4, 32), 15, 0, false).unwrap();
+    let s = &out.stats;
+    assert_eq!(s.tasks_finished, s.spawns + 1, "every task spawned once + root");
+    assert!(s.segments >= s.tasks_finished, "every task runs ≥1 segment");
+    assert!(s.iterations >= s.idle_iterations);
+    assert!(s.steals_ok <= s.steal_attempts);
+    assert!(s.cycles > 0 && s.seconds > 0.0);
+    assert!(s.peak_live_records >= 1);
+}
+
+#[test]
+fn profiler_accounting_consistent() {
+    let out = runners::run_fib(&Exec::gpu_thread(4, 32).profiled(), 14, 0, false).unwrap();
+    assert!(!out.profiler.events.is_empty());
+    for e in &out.profiler.events {
+        assert!(e.active_lanes as usize <= 32);
+        assert!(e.path_groups <= e.active_lanes);
+        if e.active_lanes == 0 {
+            assert_eq!(e.busy, 0, "idle iterations must not report busy time");
+        }
+    }
+    // busy totals are bounded by the run's makespan per worker
+    for (_, busy, total) in out.profiler.utilization() {
+        assert!(busy <= total);
+        assert!(total <= out.stats.cycles);
+    }
+}
+
+#[test]
+fn prop_epaq_separation_never_increases_warp_time() {
+    // the divergence model's defining property: separating two path
+    // classes into two warps never costs more total warp time than two
+    // mixed warps (this is what EPAQ exploits)
+    Runner::new().cases(300).run("epaq-separation", |g| {
+        let n = g.usize(1, 16);
+        let short: Vec<LanePath> = (0..n)
+            .map(|_| LanePath {
+                hash: 1,
+                cycles: g.int(1, 100) as u64,
+            })
+            .collect();
+        let long: Vec<LanePath> = (0..n)
+            .map(|_| LanePath {
+                hash: 2,
+                cycles: g.int(100, 10_000) as u64,
+            })
+            .collect();
+        // mixed: interleave half/half into two warps
+        let mut warp_a = vec![];
+        let mut warp_b = vec![];
+        for i in 0..n {
+            if i % 2 == 0 {
+                warp_a.push(short[i]);
+                warp_b.push(long[i]);
+            } else {
+                warp_a.push(long[i]);
+                warp_b.push(short[i]);
+            }
+        }
+        let mixed = warp_cycles(&warp_a) + warp_cycles(&warp_b);
+        let separated = warp_cycles(&short) + warp_cycles(&long);
+        assert!(
+            separated <= mixed,
+            "separated {separated} > mixed {mixed} (n={n})"
+        );
+    });
+}
+
+#[test]
+fn prop_warp_cycles_bounds() {
+    // sum-of-max-per-group is between max(lane) and sum(lanes)
+    Runner::new().cases(300).run("warp-cycle-bounds", |g| {
+        let n = g.usize(1, 32);
+        let lanes: Vec<LanePath> = (0..n)
+            .map(|_| LanePath {
+                hash: g.int(0, 4) as u64,
+                cycles: g.int(0, 1000) as u64,
+            })
+            .collect();
+        let w = warp_cycles(&lanes);
+        let max = lanes.iter().map(|l| l.cycles).max().unwrap();
+        let sum: u64 = lanes.iter().map(|l| l.cycles).sum();
+        assert!(w >= max, "{w} < max {max}");
+        assert!(w <= sum, "{w} > sum {sum}");
+    });
+}
+
+#[test]
+fn session_reuse_across_runs() {
+    // memory persists, task state resets: two runs in one session
+    let src = "global int g;\n#pragma gtap function\nvoid bump(int k) { g = g + k; }";
+    let mut s = Session::compile(
+        src,
+        GtapConfig {
+            grid_size: 2,
+            block_size: 32,
+            ..Default::default()
+        },
+        DeviceSpec::h100(),
+    )
+    .unwrap();
+    s.run("bump", &[Value::from_i64(5)]).unwrap();
+    s.run("bump", &[Value::from_i64(7)]).unwrap();
+    assert_eq!(s.get_global("g").unwrap().as_i64(), 12);
+}
+
+#[test]
+fn deep_recursion_mergesort_no_stack_issues() {
+    // 2^15 elements with cutoff 4: ~8k tasks, depth ~13; the interpreter
+    // must not recurse on the host stack
+    runners::run_mergesort(&Exec::gpu_thread(16, 32), 1 << 15, 4, 9).unwrap();
+}
+
+#[test]
+fn epaq_queue_index_clamped() {
+    // queue(expr) values beyond GTAP_NUM_QUEUES-1 are clamped, not UB
+    let src = r#"
+        #pragma gtap function
+        int f(int n) {
+            if (n < 1) return 0;
+            int a;
+            #pragma gtap task queue(99)
+            a = f(n - 1);
+            #pragma gtap taskwait queue(1234567)
+            return a + 1;
+        }
+    "#;
+    let mut s = Session::compile(
+        src,
+        GtapConfig {
+            grid_size: 2,
+            block_size: 32,
+            num_queues: 2,
+            ..Default::default()
+        },
+        DeviceSpec::h100(),
+    )
+    .unwrap();
+    let stats = s.run("f", &[Value::from_i64(10)]).unwrap();
+    assert_eq!(stats.root_result.unwrap().as_i64(), 10);
+}
+
+#[test]
+fn ablation_knobs_preserve_semantics() {
+    // all scheduler variants must still compute correct results
+    let base = Exec::gpu_thread(4, 32);
+    let tweaks: Vec<Box<dyn Fn(Exec) -> Exec>> = vec![
+        Box::new(|mut e: Exec| {
+            e.cfg.immediate_buffer = false;
+            e
+        }),
+        Box::new(|mut e: Exec| {
+            e.cfg.steal_max = Some(1);
+            e
+        }),
+        Box::new(|mut e: Exec| {
+            e.cfg.locality_aware_steal = true;
+            e
+        }),
+    ];
+    for t in tweaks {
+        let e = t(base.clone());
+        runners::run_fib(&e, 14, 0, false).unwrap();
+        runners::run_full_tree(&e, 6, 4, 8, None).unwrap();
+        runners::run_mergesort(&e, 500, 32, 3).unwrap();
+    }
+}
+
+#[test]
+fn steal_one_slower_than_batched() {
+    let batched = runners::run_fib(&Exec::gpu_thread(64, 32), 20, 0, false)
+        .unwrap()
+        .seconds;
+    let mut e = Exec::gpu_thread(64, 32);
+    e.cfg.steal_max = Some(1);
+    let one = runners::run_fib(&e, 20, 0, false).unwrap().seconds;
+    assert!(one > batched, "steal-one {one} must be slower than batched {batched}");
+}
