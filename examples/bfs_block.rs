@@ -11,7 +11,7 @@ use gtap::util::cli::Args;
 use gtap::util::stats::fmt_time;
 use gtap::workloads::bfs::CsrGraph;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gtap::Result<()> {
     let args = Args::parse();
     let n: usize = args.get_or("n", 2000);
     let deg: usize = args.get_or("degree", 4);

@@ -10,7 +10,7 @@ use gtap::bench::runners::{self, Exec};
 use gtap::util::cli::Args;
 use gtap::util::stats::fmt_time;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gtap::Result<()> {
     let args = Args::parse();
     let n: i64 = args.get_or("n", 36);
     let cutoff: i64 = args.get_or("cutoff", 10);

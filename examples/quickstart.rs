@@ -25,12 +25,12 @@ int fib(int n) {
 }
 "#;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gtap::Result<()> {
     let args = Args::parse();
     let n: i64 = args.get_or("n", 20);
 
     println!("== GTaP-C source (Program 4) =={FIB}");
-    let module = compiler::compile_default(FIB).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let module = compiler::compile_default(FIB).map_err(|e| gtap::anyhow!("{e}"))?;
     println!("== gtapc state-machine transformation (cf. Program 6) ==\n");
     println!("{}", pretty::render_module(&module));
 

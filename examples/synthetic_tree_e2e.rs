@@ -26,7 +26,7 @@ use gtap::runtime::XlaPayloadEngine;
 use gtap::util::cli::Args;
 use gtap::util::stats::fmt_time;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gtap::Result<()> {
     let args = Args::parse();
     let depth: i64 = args.get_or("depth", 10);
     let mem_ops: i64 = args.get_or("mem-ops", 64);
@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
         compute_iters,
         None,
     )?;
-    anyhow::ensure!(
+    gtap::ensure!(
         gpu_xla.stats.cycles == gpu_native.stats.cycles,
         "XLA and native payload paths must charge identical simulated time"
     );

@@ -22,7 +22,7 @@ fn main() {
     let tree_d = if full_scale() { 16 } else { 12 };
     let grid = 250;
 
-    let variants: Vec<(&str, Box<dyn Fn(Exec) -> Exec>)> = vec![
+    let variants: Vec<(&str, Box<dyn Fn(Exec) -> Exec + Sync>)> = vec![
         ("baseline", Box::new(|e: Exec| e)),
         (
             "no-immediate-buffer",
@@ -47,7 +47,7 @@ fn main() {
         ),
     ];
 
-    let benches: Vec<(&str, Box<dyn Fn(&Exec) -> f64>)> = vec![
+    let benches: Vec<(&str, Box<dyn Fn(&Exec) -> f64 + Sync>)> = vec![
         (
             "fib",
             Box::new(move |e: &Exec| runners::run_fib(e, fib_n, 0, false).unwrap().seconds),

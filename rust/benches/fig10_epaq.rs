@@ -9,28 +9,23 @@
 use gtap::bench::emit::{markdown_table, write_csv, Series};
 use gtap::bench::runners::{self, Exec};
 use gtap::bench::settings::grid;
-use gtap::bench::sweep::{full_scale, measure};
+use gtap::bench::sweep::{full_scale, measure_curve};
 
 fn compare(
     name: &str,
     queues: usize,
     xs: &[i64],
-    run: &dyn Fn(&Exec, i64, bool, u64) -> f64,
+    run: &(dyn Fn(&Exec, i64, bool, u64) -> f64 + Sync),
 ) {
     let g = grid(2000);
     let mk = |label: &str, epaq: bool, nq: usize| Series {
         label: label.to_string(),
-        points: xs
-            .iter()
-            .map(|&x| {
-                (
-                    x as f64,
-                    measure(|seed| {
-                        run(&Exec::gpu_thread(g, 32).queues(nq).seed(seed), x, epaq, seed)
-                    }),
-                )
-            })
-            .collect(),
+        points: measure_curve(xs, |&x, seed| {
+            run(&Exec::gpu_thread(g, 32).queues(nq).seed(seed), x, epaq, seed)
+        })
+        .into_iter()
+        .map(|(x, s)| (x as f64, s))
+        .collect(),
     };
     let series = vec![mk("1-queue", false, 1), mk("epaq", true, queues)];
     println!("\n## fig10_{name} (seconds; x = cutoff)\n");
@@ -61,24 +56,19 @@ fn main() {
         let g = 4000;
         let mk = |label: &str, epaq: bool, nq: usize| Series {
             label: label.to_string(),
-            points: fib_cutoffs
-                .iter()
-                .map(|&x| {
-                    (
-                        x as f64,
-                        measure(|seed| {
-                            runners::run_fib(
-                                &Exec::gpu_thread(g, 32).queues(nq).seed(seed),
-                                fib_n,
-                                x,
-                                epaq,
-                            )
-                            .unwrap()
-                            .seconds
-                        }),
-                    )
-                })
-                .collect(),
+            points: measure_curve(&fib_cutoffs, |&x, seed| {
+                runners::run_fib(
+                    &Exec::gpu_thread(g, 32).queues(nq).seed(seed),
+                    fib_n,
+                    x,
+                    epaq,
+                )
+                .unwrap()
+                .seconds
+            })
+            .into_iter()
+            .map(|(x, s)| (x as f64, s))
+            .collect(),
         };
         let series = vec![mk("1-queue", false, 1), mk("epaq", true, 3)];
         println!("\n## fig10_fibonacci (seconds; x = cutoff; n={fib_n}, grid={g})\n");

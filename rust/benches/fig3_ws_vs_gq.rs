@@ -9,7 +9,7 @@
 
 use gtap::bench::emit::{markdown_table, write_csv, Series};
 use gtap::bench::runners::{self, Exec};
-use gtap::bench::sweep::{full_scale, measure};
+use gtap::bench::sweep::{full_scale, measure_curve};
 use gtap::coordinator::SchedulerKind;
 
 fn grids() -> Vec<usize> {
@@ -24,16 +24,17 @@ fn sweep(
     label: &str,
     kind: SchedulerKind,
     block: usize,
-    run: &dyn Fn(Exec) -> f64,
-    mk: &dyn Fn(usize, usize) -> Exec,
+    run: &(dyn Fn(Exec) -> f64 + Sync),
+    mk: &(dyn Fn(usize, usize) -> Exec + Sync),
 ) -> Series {
-    let points = grids()
-        .into_iter()
-        .map(|g| {
-            let s = measure(|seed| run(mk(g, block).scheduler(kind).seed(seed)));
-            (g as f64, s)
-        })
-        .collect();
+    // every (grid point, repetition) pair runs as an independent work item
+    // across threads; output is byte-identical to the serial nested loops
+    let points = measure_curve(&grids(), |&g, seed| {
+        run(mk(g, block).scheduler(kind).seed(seed))
+    })
+    .into_iter()
+    .map(|(g, s)| (g as f64, s))
+    .collect();
     Series {
         label: format!("{label}/b{block}"),
         points,
@@ -76,7 +77,7 @@ fn main() {
         (
             "fib",
             Box::new(move |e: Exec| runners::run_fib(&e, fib_n, 0, false).unwrap().seconds)
-                as Box<dyn Fn(Exec) -> f64>,
+                as Box<dyn Fn(Exec) -> f64 + Sync>,
         ),
         (
             "nqueens",

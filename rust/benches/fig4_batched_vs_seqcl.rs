@@ -10,7 +10,7 @@
 
 use gtap::bench::emit::{markdown_table, write_csv, Series};
 use gtap::bench::runners::{self, Exec};
-use gtap::bench::sweep::{full_scale, measure};
+use gtap::bench::sweep::{full_scale, measure_curve};
 use gtap::coordinator::SchedulerKind;
 
 fn main() {
@@ -23,7 +23,7 @@ fn main() {
     let nq_n = if full_scale() { 12 } else { 10 };
     let sort_n = if full_scale() { 1 << 18 } else { 1 << 14 };
 
-    let benches: Vec<(&str, Box<dyn Fn(Exec) -> f64>)> = vec![
+    let benches: Vec<(&str, Box<dyn Fn(Exec) -> f64 + Sync>)> = vec![
         (
             "fib",
             Box::new(move |e: Exec| runners::run_fib(&e, fib_n, 0, false).unwrap().seconds),
@@ -52,15 +52,12 @@ fn main() {
             ("batched", SchedulerKind::WorkStealing),
             ("seq-chaselev", SchedulerKind::SequentialChaseLev),
         ] {
-            let points = grids
-                .iter()
-                .map(|&g| {
-                    let s = measure(|seed| {
-                        run(Exec::gpu_thread(g, 32).scheduler(kind).seed(seed))
-                    });
-                    (g as f64, s)
-                })
-                .collect();
+            let points = measure_curve(&grids, |&g, seed| {
+                run(Exec::gpu_thread(g, 32).scheduler(kind).seed(seed))
+            })
+            .into_iter()
+            .map(|(g, s)| (g as f64, s))
+            .collect();
             series.push(Series {
                 label: label.to_string(),
                 points,

@@ -12,20 +12,20 @@
 use gtap::bench::emit::{markdown_table, write_csv, Series};
 use gtap::bench::runners::{self, Exec};
 use gtap::bench::settings::grid;
-use gtap::bench::sweep::{full_scale, measure};
+use gtap::bench::sweep::{full_scale, measure_curve};
 
 fn three_way(
     name: &str,
     xs: &[i64],
-    gtap: &dyn Fn(i64, u64) -> f64,
-    cpu: &dyn Fn(i64, u64) -> f64,
-    seq: &dyn Fn(i64, u64) -> f64,
+    gtap: &(dyn Fn(i64, u64) -> f64 + Sync),
+    cpu: &(dyn Fn(i64, u64) -> f64 + Sync),
+    seq: &(dyn Fn(i64, u64) -> f64 + Sync),
 ) {
-    let mk = |label: &str, f: &dyn Fn(i64, u64) -> f64| Series {
+    let mk = |label: &str, f: &(dyn Fn(i64, u64) -> f64 + Sync)| Series {
         label: label.to_string(),
-        points: xs
-            .iter()
-            .map(|&x| (x as f64, measure(|seed| f(x, seed))))
+        points: measure_curve(xs, |&x, seed| f(x, seed))
+            .into_iter()
+            .map(|(x, s)| (x as f64, s))
             .collect(),
     };
     let series = vec![mk("GTaP(gpu)", gtap), mk("OpenMP(cpu72)", cpu), mk("CPU-seq", seq)];

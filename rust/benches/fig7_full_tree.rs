@@ -10,9 +10,9 @@
 use gtap::bench::emit::{markdown_table, write_csv, Series};
 use gtap::bench::runners::{self, Exec};
 use gtap::bench::settings::grid;
-use gtap::bench::sweep::{full_scale, measure};
+use gtap::bench::sweep::{full_scale, measure_curve};
 
-fn sweep(name: &str, xs: &[i64], f: &dyn Fn(&Exec, i64, u64) -> f64) {
+fn sweep(name: &str, xs: &[i64], f: &(dyn Fn(&Exec, i64, u64) -> f64 + Sync)) {
     let g = grid(1000);
     let targets: Vec<(&str, Exec)> = vec![
         ("thread", Exec::gpu_thread(g, 64)),
@@ -23,9 +23,9 @@ fn sweep(name: &str, xs: &[i64], f: &dyn Fn(&Exec, i64, u64) -> f64) {
         .iter()
         .map(|(label, exec)| Series {
             label: label.to_string(),
-            points: xs
-                .iter()
-                .map(|&x| (x as f64, measure(|seed| f(&exec.clone().seed(seed), x, seed))))
+            points: measure_curve(xs, |&x, seed| f(&exec.clone().seed(seed), x, seed))
+                .into_iter()
+                .map(|(x, s)| (x as f64, s))
                 .collect(),
         })
         .collect();

@@ -1,0 +1,297 @@
+//! Hot-path microbenchmark: decoded flattened dispatch (`sim::interp`)
+//! vs the pre-refactor module-walking baseline (`sim::interp_ref`), on the
+//! two segment mixes the paper's workloads are made of:
+//!
+//! * **fib segments** — the fib(30) state machine's segment population:
+//!   recursive first segments (branch + two spawns + join), post-join
+//!   continuations and base-case leaves, in tree proportions;
+//! * **tree segments** — the synthetic full-binary-tree task function
+//!   (spawns + `payload` intrinsic + atomic accumulate).
+//!
+//! Both interpreters execute identical segment streams; the bench asserts
+//! their simulated cycle totals agree before timing anything, so a speedup
+//! can never come from computing less.
+//!
+//! Results (median wall-clock over `GTAP_BENCH_RUNS` reps, plus an
+//! end-to-end scheduler run) are printed and recorded in
+//! `BENCH_hotpath.json` at the repo root — the repo's running perf
+//! baseline. Regenerate with `cargo bench --bench hotpath`.
+
+use gtap::bench::sweep;
+use gtap::compiler::compile_default;
+use gtap::coordinator::records::{RecordPool, TaskId, NO_TASK};
+use gtap::coordinator::{GtapConfig, Session};
+use gtap::ir::bytecode::Module;
+use gtap::ir::decoded::DecodedModule;
+use gtap::ir::types::Value;
+use gtap::sim::interp_ref::{RefInterp, RefLaneFrame};
+use gtap::sim::{DeviceSpec, Interp, LaneFrame, Memory, StepResult};
+use gtap::util::stats::Summary;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Segments per timed repetition (≥ 10k warm segments by a wide margin).
+const SEGMENTS: usize = 200_000;
+
+const FIB_SRC: &str = r#"
+    #pragma gtap function
+    int fib(int n) {
+        if (n < 2) return n;
+        int a; int b;
+        #pragma gtap task
+        a = fib(n - 1);
+        #pragma gtap task
+        b = fib(n - 2);
+        #pragma gtap taskwait
+        return a + b;
+    }
+"#;
+
+/// The fib segment stream: `(state, n)` pairs approximating the segment
+/// population of a fib(30) run — every task runs a first segment (state 0,
+/// recursion or leaf) and every recursive task a continuation (state 1).
+fn fib_stream() -> Vec<(u16, i64)> {
+    let pattern: &[(u16, i64)] = &[
+        (0, 30),
+        (0, 17),
+        (0, 1),
+        (1, 9),
+        (0, 0),
+        (0, 25),
+        (1, 30),
+        (0, 2),
+        (1, 4),
+        (0, 12),
+    ];
+    (0..SEGMENTS).map(|i| pattern[i % pattern.len()]).collect()
+}
+
+/// The tree segment stream: `(state, depth)` over the synthetic tree task.
+fn tree_stream() -> Vec<(u16, i64)> {
+    let pattern: &[(u16, i64)] = &[(0, 8), (0, 0), (1, 5), (0, 3), (0, 0), (1, 1)];
+    (0..SEGMENTS).map(|i| pattern[i % pattern.len()]).collect()
+}
+
+struct SegmentFixture {
+    module: Module,
+    decoded: DecodedModule,
+    dev: DeviceSpec,
+    records: RecordPool,
+    mem: Memory,
+    task: TaskId,
+    /// Extra task-data words set per reset: (offset, value) template.
+    extra_args: Vec<(usize, u64)>,
+}
+
+impl SegmentFixture {
+    fn new(src: &str, func: &str, extra_alloc_words: u64) -> SegmentFixture {
+        let module = compile_default(src).expect("bench source compiles");
+        let decoded = DecodedModule::decode(&module);
+        let fid = module.func_id(func).expect("entry exists");
+        assert_eq!(fid, 0, "fixture assumes the entry is function 0");
+        let words = module
+            .funcs
+            .iter()
+            .map(|f| f.layout.words())
+            .max()
+            .unwrap()
+            .max(1);
+        let mut records = RecordPool::new(64, words, 8);
+        let mut mem = Memory::new(module.globals_words());
+        let mut extra_args = Vec::new();
+        if extra_alloc_words > 0 {
+            let addr = mem.alloc(extra_alloc_words);
+            // tree(depth, seed, acc): acc pointer is arg slot 2
+            extra_args.push((2usize, addr));
+        }
+        let task = records.alloc(fid, NO_TASK).unwrap();
+        SegmentFixture {
+            module,
+            decoded,
+            dev: DeviceSpec::h100(),
+            records,
+            mem,
+            task,
+            extra_args,
+        }
+    }
+
+    /// Fib needs the child slots populated for state-1 `ChildResult` reads.
+    fn attach_children(&mut self) {
+        let off = self.module.funcs[0]
+            .layout
+            .result_offset()
+            .expect("fib returns int") as usize;
+        for v in [1u64, 0] {
+            let child = self.records.alloc(0, self.task).unwrap();
+            self.records.push_child(self.task, child).unwrap();
+            self.records.data_mut(child)[off] = v;
+            self.records.meta_mut(child).done = true;
+        }
+        // keep children attached across segments: the bench only re-reads
+        self.records.meta_mut(self.task).pending_children = 0;
+    }
+
+    fn prime(&mut self, arg0: u64, seed: u64) {
+        let data = self.records.data_mut(self.task);
+        data[0] = arg0;
+        if data.len() > 1 {
+            data[1] = seed;
+        }
+        for &(slot, v) in &self.extra_args {
+            self.records.data_mut(self.task)[slot] = v;
+        }
+    }
+
+    /// Run the stream through the decoded interpreter; returns (seconds,
+    /// simulated-cycle checksum).
+    fn time_decoded(&mut self, stream: &[(u16, i64)]) -> (f64, u64) {
+        let interp = Interp::new(&self.decoded, &self.dev, 1, false);
+        let mut frame = LaneFrame::sized(&self.decoded);
+        let mut log = Vec::new();
+        let mut checksum = 0u64;
+        let t = Instant::now();
+        for (i, &(state, n)) in stream.iter().enumerate() {
+            self.prime(n as u64, i as u64);
+            frame.reset(&self.decoded, self.task, 0, state, 0);
+            match interp.run(&mut frame, &mut self.mem, &mut self.records, &mut log) {
+                StepResult::Done(o) => checksum = checksum.wrapping_add(o.cycles),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        (t.elapsed().as_secs_f64(), checksum)
+    }
+
+    /// Same stream through the module-walking reference interpreter.
+    fn time_ref(&mut self, stream: &[(u16, i64)]) -> (f64, u64) {
+        let interp = RefInterp {
+            module: &self.module,
+            dev: &self.dev,
+            block_width: 1,
+            xla_payload: false,
+        };
+        let mut frame = RefLaneFrame::new();
+        let mut log = Vec::new();
+        let mut checksum = 0u64;
+        let t = Instant::now();
+        for (i, &(state, n)) in stream.iter().enumerate() {
+            self.prime(n as u64, i as u64);
+            frame.reset(&self.module, self.task, 0, state, 0);
+            match interp.run(&mut frame, &mut self.mem, &mut self.records, &mut log) {
+                StepResult::Done(o) => checksum = checksum.wrapping_add(o.cycles),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        (t.elapsed().as_secs_f64(), checksum)
+    }
+}
+
+struct Comparison {
+    name: &'static str,
+    ref_median_s: f64,
+    decoded_median_s: f64,
+    speedup: f64,
+}
+
+fn compare(
+    name: &'static str,
+    fixture: &mut SegmentFixture,
+    stream: &[(u16, i64)],
+    reps: usize,
+) -> Comparison {
+    // correctness gate: identical simulated cycles before any timing
+    let (_, c_ref) = fixture.time_ref(stream);
+    let (_, c_dec) = fixture.time_decoded(stream);
+    assert_eq!(
+        c_ref, c_dec,
+        "{name}: decoded and reference interpreters disagree on simulated cycles"
+    );
+    // interleave reps so thermal/frequency drift hits both sides equally
+    let mut ref_s = Vec::with_capacity(reps);
+    let mut dec_s = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        ref_s.push(fixture.time_ref(stream).0);
+        dec_s.push(fixture.time_decoded(stream).0);
+    }
+    let r = Summary::of(&ref_s).median;
+    let d = Summary::of(&dec_s).median;
+    Comparison {
+        name,
+        ref_median_s: r,
+        decoded_median_s: d,
+        speedup: r / d,
+    }
+}
+
+/// End-to-end scheduler run (decoded path only): fib(24) on 256 warps.
+fn end_to_end_fib(reps: usize) -> f64 {
+    let samples: Vec<f64> = (0..reps)
+        .map(|i| {
+            let cfg = GtapConfig {
+                grid_size: 256,
+                block_size: 32,
+                seed: 0xBE5E_ED00 + i as u64,
+                ..Default::default()
+            };
+            let mut s = Session::compile(FIB_SRC, cfg, DeviceSpec::h100()).unwrap();
+            let t = Instant::now();
+            let stats = s.run("fib", &[Value::from_i64(24)]).unwrap();
+            assert_eq!(stats.root_result.unwrap().as_i64(), 46368);
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    Summary::of(&samples).median
+}
+
+fn repo_root() -> PathBuf {
+    // crate manifest dir is <repo>/rust; the workspace root is its parent
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .to_path_buf()
+}
+
+fn main() {
+    let reps = sweep::runs();
+    println!("hotpath microbench: {SEGMENTS} segments/rep, {reps} reps\n");
+
+    let mut fib = SegmentFixture::new(FIB_SRC, "fib", 0);
+    fib.attach_children();
+    let fib_cmp = compare("fib_segments", &mut fib, &fib_stream(), reps);
+
+    // tree is void: its continuation reads no child results, so no child
+    // records need attaching
+    let tree_src = gtap::workloads::tree::full_tree_source(16, 64);
+    let mut tree = SegmentFixture::new(&tree_src, "tree", 1);
+    let tree_cmp = compare("tree_segments", &mut tree, &tree_stream(), reps);
+
+    let e2e = end_to_end_fib(reps);
+
+    for c in [&fib_cmp, &tree_cmp] {
+        println!(
+            "{:14} ref {:.4e} s  decoded {:.4e} s  speedup {:.2}x",
+            c.name, c.ref_median_s, c.decoded_median_s, c.speedup
+        );
+    }
+    println!("fib(24) end-to-end (decoded scheduler): {e2e:.4e} s median");
+
+    let json = format!(
+        "{{\n  \"bench\": \"hotpath\",\n  \"measured\": true,\n  \
+         \"command\": \"cargo bench --bench hotpath\",\n  \
+         \"segments_per_rep\": {SEGMENTS},\n  \"runs\": {reps},\n  \
+         \"results\": {{\n    \
+         \"fib_segments\": {{\"ref_median_s\": {:.6e}, \"decoded_median_s\": {:.6e}, \"speedup\": {:.3}}},\n    \
+         \"tree_segments\": {{\"ref_median_s\": {:.6e}, \"decoded_median_s\": {:.6e}, \"speedup\": {:.3}}},\n    \
+         \"fib24_end_to_end\": {{\"decoded_median_s\": {:.6e}}}\n  }}\n}}\n",
+        fib_cmp.ref_median_s,
+        fib_cmp.decoded_median_s,
+        fib_cmp.speedup,
+        tree_cmp.ref_median_s,
+        tree_cmp.decoded_median_s,
+        tree_cmp.speedup,
+        e2e,
+    );
+    let path = repo_root().join("BENCH_hotpath.json");
+    std::fs::write(&path, json).expect("write BENCH_hotpath.json");
+    println!("\nwrote {}", path.display());
+}

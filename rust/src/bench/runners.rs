@@ -9,7 +9,8 @@ use crate::ir::types::Value;
 use crate::sim::profile::Profiler;
 use crate::sim::DeviceSpec;
 use crate::workloads::{bfs, fib, nqueens, sort, tree};
-use anyhow::{ensure, Result};
+use crate::ensure;
+use crate::util::error::Result;
 
 /// Execution target: device + runtime configuration.
 #[derive(Clone)]

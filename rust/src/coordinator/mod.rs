@@ -13,6 +13,8 @@
 //!   §6.1.2 ablation baseline.
 //! * [`globalq`] — the single shared queue of the §6.1.1 ablation.
 //! * [`policy`] — the scheduler-policy abstraction selecting among them.
+//! * [`clock`] — the indexed worker-clock heap the discrete-event loop
+//!   advances in place (one sift per iteration, no allocation).
 //! * [`join`] — join counters, continuation re-enqueue, child-result
 //!   plumbing (§4.2).
 //! * [`scheduler`] — the persistent-kernel loops for thread-level and
@@ -24,6 +26,7 @@
 //!   Program 4).
 
 pub mod chaselev;
+pub mod clock;
 pub mod config;
 pub mod globalq;
 pub mod join;

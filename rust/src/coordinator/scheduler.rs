@@ -5,7 +5,9 @@
 //! block-level, a core on the CPU device) is an actor with its own clock.
 //! The engine always advances the globally-earliest worker, which preserves
 //! causality across queues (a steal at time *t* can only see pushes that
-//! happened before *t*).
+//! happened before *t*). Worker clocks live in a [`WorkerClock`] — an
+//! indexed heap whose reschedule-the-minimum operation is a single
+//! in-place sift, replacing the old pop-then-push `BinaryHeap` churn.
 //!
 //! One persistent-kernel iteration of a thread-level worker (§4.3.2):
 //!
@@ -14,33 +16,45 @@
 //!    queues, then *StealBatch* from random victims; if still empty, back
 //!    off exponentially (idle).
 //! 2. Execute the claimed tasks, one per lane. Lanes run the per-lane
-//!    interpreter; the warp's cost is the divergence-serialized combination
-//!    (`sim::divergence`). Payload calls may suspend for batched XLA
-//!    execution.
+//!    interpreter over the load-time [`DecodedModule`]; the warp's cost is
+//!    the divergence-serialized combination (`sim::divergence`). Payload
+//!    calls may suspend for batched XLA execution.
 //! 3. Apply effects: allocate and enqueue children (keeping up to a warp's
 //!    worth for immediate execution, pushing the rest — batched pushes),
 //!    process joins and finishes, re-enqueue satisfied continuations.
+//!
+//! **Zero-allocation steady state:** every buffer the iteration needs —
+//! the claim batch, per-lane frames and outputs, divergence scratch,
+//! per-queue spawn lists, continuation list, and each worker's immediate
+//! buffer and payload request/result vectors — is owned by the scheduler
+//! or its [`WorkerState`] and reused across iterations. After warm-up the
+//! loop performs no heap allocation (`rust/tests/zero_alloc.rs` checks the
+//! interpreter core under a counting allocator). Lane frames are shared
+//! across workers rather than per-worker: the event engine runs exactly
+//! one worker at a time, so per-worker frames would multiply memory by the
+//! worker count for no aliasing benefit.
 //!
 //! SM issue bandwidth: each SM sustains `issue_warps` warp-instructions per
 //! cycle; a worker's iteration start is delayed behind its SM's issue
 //! backlog, so resident warps beyond the issue width only help hide
 //! latency — exactly the occupancy behaviour of §2.3.1.
 
+use super::clock::WorkerClock;
 use super::config::{Granularity, GtapConfig};
 use super::join::{self, FinishEffect};
 use super::policy::QueueSet;
 use super::records::{RecordPool, TaskId, NO_TASK};
 use crate::ir::bytecode::Module;
+use crate::ir::decoded::DecodedModule;
 use crate::ir::types::Value;
 use crate::sim::config::DeviceSpec;
 use crate::sim::divergence::{self, LanePath};
 use crate::sim::interp::{Interp, LaneFrame, SegmentEnd, SegmentOutput, StepResult};
 use crate::sim::memory::Memory;
 use crate::sim::profile::{Profiler, TimelineEvent};
+use crate::util::error::{Context, Result};
 use crate::util::prng::Prng;
-use anyhow::{anyhow, bail, Context, Result};
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use crate::{anyhow, bail};
 
 /// Random victims probed per idle iteration before backing off.
 const STEAL_TRIES: usize = 4;
@@ -94,12 +108,22 @@ pub struct RunStats {
     pub output: Vec<String>,
 }
 
+/// Per-worker persistent state, including every scratch vector the
+/// worker's iterations reuse (no allocation on the steady-state path).
 struct WorkerState {
     rr_queue: usize,
     backoff: u64,
     immediate: Vec<TaskId>,
     rng: Prng,
     sm: usize,
+    /// Payload-suspension scratch: `(lane, request)` awaiting the engine.
+    payload_pending: Vec<(usize, PayloadReq)>,
+    /// Next round's suspensions (swapped with `payload_pending`).
+    payload_next: Vec<(usize, PayloadReq)>,
+    /// Dense request buffer handed to the engine.
+    payload_reqs: Vec<PayloadReq>,
+    /// Engine results, in request order.
+    payload_vals: Vec<f64>,
 }
 
 /// The scheduler for one run.
@@ -109,6 +133,8 @@ pub struct Scheduler<'a> {
     pub dev: &'a DeviceSpec,
     pub queues: QueueSet,
     pub records: RecordPool,
+    /// Load-time-flattened bytecode the interpreter dispatches over.
+    decoded: DecodedModule,
     workers: Vec<WorkerState>,
     /// Workers resident on each SM (victim candidates for hierarchical
     /// stealing).
@@ -189,6 +215,10 @@ impl<'a> Scheduler<'a> {
                     immediate: Vec::with_capacity(batch_max),
                     rng: Prng::stream(cfg.seed, w as u64),
                     sm: block % dev.sms,
+                    payload_pending: Vec::new(),
+                    payload_next: Vec::new(),
+                    payload_reqs: Vec::new(),
+                    payload_vals: Vec::new(),
                 }
             })
             .collect();
@@ -201,18 +231,21 @@ impl<'a> Scheduler<'a> {
         for (i, ws) in workers.iter().enumerate() {
             sm_peers[ws.sm].push(i);
         }
+        let decoded = DecodedModule::decode(module);
+        let frames = (0..batch_max).map(|_| LaneFrame::sized(&decoded)).collect();
         Ok(Scheduler {
             module,
             cfg,
             dev,
             queues: QueueSet::for_config(cfg),
             records: RecordPool::new(pool_cap, data_words, child_cap),
+            decoded,
             workers,
             sm_peers,
             sm_ready: vec![0; dev.sms],
             live_tasks: 0,
             stats: RunStats::default(),
-            frames: (0..batch_max).map(|_| LaneFrame::new()).collect(),
+            frames,
             batch_max,
             root: NO_TASK,
             scratch_batch: Vec::with_capacity(batch_max),
@@ -222,6 +255,11 @@ impl<'a> Scheduler<'a> {
             scratch_spawned: (0..cfg.num_queues).map(|_| Vec::new()).collect(),
             scratch_conts: Vec::new(),
         })
+    }
+
+    /// The decoded form this scheduler executes (shared with tests/benches).
+    pub fn decoded(&self) -> &DecodedModule {
+        &self.decoded
     }
 
     /// Spawn the root task (the `#pragma gtap entry` of Program 4).
@@ -259,15 +297,12 @@ impl<'a> Scheduler<'a> {
         profiler: &mut Profiler,
     ) -> Result<RunStats> {
         let mut engine: Option<&mut dyn PayloadEngine> = engine;
-        let mut heap: BinaryHeap<Reverse<(u64, u32)>> = BinaryHeap::new();
         let t0 = self.dev.startup;
-        for w in 0..self.workers.len() {
-            heap.push(Reverse((t0, w as u32)));
-        }
+        let mut clock = WorkerClock::new(self.workers.len(), t0);
         let mut makespan = t0;
         let mut log: Vec<String> = Vec::new();
         while self.live_tasks > 0 {
-            let Reverse((now, w)) = heap.pop().context("scheduler starved with live tasks")?;
+            let (now, w) = clock.peek_min();
             // fresh reborrow of the engine for this iteration
             let eng: Option<&mut dyn PayloadEngine> = match engine {
                 Some(ref mut e) => Some(&mut **e),
@@ -280,7 +315,7 @@ impl<'a> Scheduler<'a> {
             if self.live_tasks == 0 {
                 break;
             }
-            heap.push(Reverse((now + dur, w)));
+            clock.advance_min(now + dur);
         }
         let mut stats = std::mem::take(&mut self.stats);
         stats.cycles = makespan;
@@ -397,24 +432,23 @@ impl<'a> Scheduler<'a> {
             Granularity::Thread => 1,
             Granularity::Block => self.cfg.block_size as u32,
         };
-        let interp = Interp {
-            module: self.module,
-            dev,
-            block_width,
-            xla_payload: engine.is_some(),
-        };
+        let interp = Interp::new(&self.decoded, dev, block_width, engine.is_some());
         let mut outputs = std::mem::take(&mut self.scratch_outputs);
         outputs.clear();
         outputs.resize(batch.len(), None);
         let mut entry_states = std::mem::take(&mut self.scratch_states);
         entry_states.clear();
-        let mut pending: Vec<(usize, PayloadReq)> = Vec::new();
+        let mut pending = std::mem::take(&mut self.workers[w].payload_pending);
+        let mut pending_next = std::mem::take(&mut self.workers[w].payload_next);
+        let mut reqs = std::mem::take(&mut self.workers[w].payload_reqs);
+        let mut vals = std::mem::take(&mut self.workers[w].payload_vals);
+        pending.clear();
         for (i, &task) in batch.iter().enumerate() {
             let meta = self.records.meta(task);
             let (func, state) = (meta.func, meta.state);
             entry_states.push(state);
             let frame = &mut self.frames[i];
-            frame.reset(self.module, task, func, state, i as u32);
+            frame.reset(&self.decoded, task, func, state, i as u32);
             match interp.run(frame, mem, &mut self.records, log) {
                 StepResult::Done(o) => outputs[i] = Some(o),
                 StepResult::NeedPayload {
@@ -436,12 +470,13 @@ impl<'a> Scheduler<'a> {
             let engine = engine
                 .as_deref_mut()
                 .expect("suspension implies an engine");
-            let reqs: Vec<PayloadReq> = pending.iter().map(|(_, r)| *r).collect();
-            let mut vals = Vec::with_capacity(reqs.len());
+            reqs.clear();
+            reqs.extend(pending.iter().map(|&(_, r)| r));
+            vals.clear();
             engine.execute(&reqs, &mut vals);
             debug_assert_eq!(vals.len(), reqs.len());
-            let mut next = Vec::new();
-            for ((i, _), val) in pending.into_iter().zip(vals) {
+            pending_next.clear();
+            for (&(i, _), &val) in pending.iter().zip(vals.iter()) {
                 let frame = &mut self.frames[i];
                 match interp.resume_payload(frame, val, mem, &mut self.records, log) {
                     StepResult::Done(o) => outputs[i] = Some(o),
@@ -449,7 +484,7 @@ impl<'a> Scheduler<'a> {
                         seed,
                         mem_ops,
                         compute_iters,
-                    } => next.push((
+                    } => pending_next.push((
                         i,
                         PayloadReq {
                             seed,
@@ -459,8 +494,12 @@ impl<'a> Scheduler<'a> {
                     )),
                 }
             }
-            pending = next;
+            std::mem::swap(&mut pending, &mut pending_next);
         }
+        self.workers[w].payload_pending = pending;
+        self.workers[w].payload_next = pending_next;
+        self.workers[w].payload_reqs = reqs;
+        self.workers[w].payload_vals = vals;
         self.stats.segments += outputs.len() as u64;
 
         // divergence-serialized warp execution cost
@@ -558,8 +597,7 @@ impl<'a> Scheduler<'a> {
         } else if let Some(best_q) = (0..nq).max_by_key(|&q| spawned[q].len()) {
             if !spawned[best_q].is_empty() {
                 let keep = spawned[best_q].len().min(self.batch_max);
-                let kept: Vec<TaskId> = spawned[best_q].drain(..keep).collect();
-                self.workers[w].immediate.extend(kept);
+                self.workers[w].immediate.extend(spawned[best_q].drain(..keep));
                 if nq > 1 {
                     self.workers[w].rr_queue = best_q;
                 }

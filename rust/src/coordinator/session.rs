@@ -32,7 +32,8 @@ use crate::ir::types::Value;
 use crate::sim::config::DeviceSpec;
 use crate::sim::memory::Memory;
 use crate::sim::profile::Profiler;
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 
 /// A compiled GTaP program bound to a device and configuration, with its
 /// simulated global memory. Memory persists across runs (so the host can

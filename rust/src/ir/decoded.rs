@@ -1,0 +1,377 @@
+//! Pre-decoded, flattened bytecode for the interpreter hot path.
+//!
+//! [`super::bytecode::Module`] is the compiler's output format: one
+//! instruction vector, operand pool and state table *per function*, with
+//! function-local program counters. Dispatching from it forces the
+//! interpreter to re-resolve a function's vectors on every segment and to
+//! chase per-function indirections for spawn/intrinsic operand lists and
+//! child-result offsets.
+//!
+//! [`DecodedModule`] is built **once at load time** and is what the
+//! interpreter actually executes:
+//!
+//! * all functions' instructions live in one contiguous [`DInsn`] array,
+//!   with every control-flow target (jumps, branches, state entries)
+//!   rewritten to a *global* instruction index — dispatch is a single
+//!   indexed load, and resuming state `k` is one table lookup away;
+//! * all operand lists (spawn arguments, intrinsic arguments) live in one
+//!   contiguous register-index pool referenced by global base + count;
+//! * per-function metadata the runtime needs while *executing other
+//!   functions* (the result-field offset read by `ChildResult`, register
+//!   counts for frame pre-sizing) is pre-resolved into plain arrays, so the
+//!   hot loop never walks a [`TaskDataLayout`](super::layout::TaskDataLayout);
+//! * module-wide maxima (`max_nregs`, `spawn_capacity`) let lane frames and
+//!   spawn buffers be allocated once, up front — steady-state segment
+//!   execution performs no heap allocation.
+//!
+//! The decoded form is purely derived data: `decode` is total for any
+//! well-formed module and asserts (in debug builds) that every rewritten
+//! index stays inside its function's range.
+
+use super::bytecode::{CacheOp, FuncId, Insn, Module, Reg};
+use super::intrinsics::Intrinsic;
+use super::types::Type;
+
+/// Binary/unary op kinds are reused from the compiler bytecode — they are
+/// already post-sema and carry no indirection.
+pub use super::bytecode::{BinKind, UnKind};
+
+/// Global instruction index into [`DecodedModule::insns`].
+pub type GlobalPc = u32;
+
+/// One decoded instruction. Mirrors [`Insn`] with all control-flow targets
+/// global and all operand-list bases resolved into the module-wide pool.
+/// Kept `Copy` and ≤ 16 bytes — the dispatch loop reads one per cycle.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DInsn {
+    /// `dst = imm` (raw 64-bit payload; i64 or f64 bits).
+    Const { dst: Reg, val: u64 },
+    Mov { dst: Reg, src: Reg },
+    Bin { op: BinKind, dst: Reg, a: Reg, b: Reg },
+    Un { op: UnKind, dst: Reg, a: Reg },
+    Jmp { target: GlobalPc },
+    /// `cond != 0` → `t`, else `f`; both targets global.
+    Br { cond: Reg, t: GlobalPc, f: GlobalPc },
+    LdG { dst: Reg, addr: Reg, cache: CacheOp },
+    StG { addr: Reg, src: Reg, cache: CacheOp },
+    LdTd { dst: Reg, off: u16 },
+    StTd { off: u16, src: Reg },
+    /// Spawn a child task; argument registers at
+    /// `DecodedModule::args[arg_base .. arg_base + argc]`.
+    Spawn {
+        func: FuncId,
+        arg_base: u32,
+        argc: u8,
+        queue: Reg,
+    },
+    PrepareJoin { next_state: u16, queue: Reg },
+    FinishTask,
+    ChildResult { dst: Reg, slot: u16 },
+    /// Intrinsic call; arguments in the module-wide pool like `Spawn`.
+    Intr {
+        id: Intrinsic,
+        dst: Reg,
+        arg_base: u32,
+        argc: u8,
+        has_dst: bool,
+    },
+    ParEnter { trips: Reg },
+    ParExit,
+    Trap,
+}
+
+/// Pre-resolved per-function metadata.
+#[derive(Clone, Debug)]
+pub struct DecodedFunc {
+    /// Function name (diagnostics only — never read in the dispatch loop).
+    pub name: String,
+    /// First instruction (global index); also the state-0 entry.
+    pub insn_base: GlobalPc,
+    /// One past the last instruction (global index).
+    pub insn_end: GlobalPc,
+    /// Index of state 0 in [`DecodedModule::state_pcs`].
+    pub state_base: u32,
+    /// Number of states (1 + #taskwaits).
+    pub num_states: u16,
+    /// Virtual registers in this function's lane frame.
+    pub nregs: u16,
+    /// Pre-resolved result-field word offset (`None` for void functions) —
+    /// what `ChildResult` reads without walking the layout.
+    pub result_off: Option<u16>,
+    pub ret: Type,
+}
+
+/// A module flattened for execution. See the module docs.
+#[derive(Clone, Debug, Default)]
+pub struct DecodedModule {
+    /// All functions' instructions, contiguous, in function order.
+    pub insns: Vec<DInsn>,
+    /// All functions' spawn/intrinsic operand lists, contiguous.
+    pub args: Vec<Reg>,
+    /// All functions' state-entry tables as global pcs, contiguous.
+    pub state_pcs: Vec<GlobalPc>,
+    pub funcs: Vec<DecodedFunc>,
+    /// Module-wide register-file bound: frames sized to this fit any task.
+    pub max_nregs: u16,
+    /// Spawn-buffer pre-size: the largest static children-per-join bound,
+    /// with a floor for spawn-in-loop functions (whose bound is dynamic;
+    /// their buffers grow once and then stay warm).
+    pub spawn_capacity: usize,
+}
+
+impl DecodedModule {
+    /// Flatten `module`. Pure derivation — called once at load time.
+    pub fn decode(module: &Module) -> DecodedModule {
+        let mut dm = DecodedModule::default();
+        for fc in &module.funcs {
+            let insn_base = dm.insns.len() as GlobalPc;
+            let arg_base = dm.args.len() as u32;
+            let state_base = dm.state_pcs.len() as u32;
+            dm.args.extend_from_slice(&fc.arg_pool);
+            for &pc in &fc.state_entries {
+                debug_assert!((pc as usize) < fc.insns.len());
+                dm.state_pcs.push(insn_base + pc);
+            }
+            for &insn in &fc.insns {
+                let reloc = |local: u32| {
+                    debug_assert!((local as usize) < fc.insns.len());
+                    insn_base + local
+                };
+                dm.insns.push(match insn {
+                    Insn::Const { dst, val } => DInsn::Const { dst, val },
+                    Insn::Mov { dst, src } => DInsn::Mov { dst, src },
+                    Insn::Bin { op, dst, a, b } => DInsn::Bin { op, dst, a, b },
+                    Insn::Un { op, dst, a } => DInsn::Un { op, dst, a },
+                    Insn::Jmp { target } => DInsn::Jmp {
+                        target: reloc(target),
+                    },
+                    Insn::Br { cond, t, f } => DInsn::Br {
+                        cond,
+                        t: reloc(t),
+                        f: reloc(f),
+                    },
+                    Insn::LdG { dst, addr, cache } => DInsn::LdG { dst, addr, cache },
+                    Insn::StG { addr, src, cache } => DInsn::StG { addr, src, cache },
+                    Insn::LdTd { dst, off } => DInsn::LdTd { dst, off },
+                    Insn::StTd { off, src } => DInsn::StTd { off, src },
+                    Insn::Spawn {
+                        func,
+                        arg_base: b,
+                        argc,
+                        queue,
+                    } => DInsn::Spawn {
+                        func,
+                        arg_base: arg_base + b,
+                        argc,
+                        queue,
+                    },
+                    Insn::PrepareJoin { next_state, queue } => {
+                        DInsn::PrepareJoin { next_state, queue }
+                    }
+                    Insn::FinishTask => DInsn::FinishTask,
+                    Insn::ChildResult { dst, slot } => DInsn::ChildResult { dst, slot },
+                    Insn::Intr {
+                        id,
+                        dst,
+                        arg_base: b,
+                        argc,
+                        has_dst,
+                    } => DInsn::Intr {
+                        id,
+                        dst,
+                        arg_base: arg_base + b,
+                        argc,
+                        has_dst,
+                    },
+                    Insn::ParEnter { trips } => DInsn::ParEnter { trips },
+                    Insn::ParExit => DInsn::ParExit,
+                    Insn::Trap => DInsn::Trap,
+                });
+            }
+            dm.funcs.push(DecodedFunc {
+                name: fc.name.clone(),
+                insn_base,
+                insn_end: dm.insns.len() as GlobalPc,
+                state_base,
+                num_states: fc.state_entries.len() as u16,
+                nregs: fc.nregs,
+                result_off: fc.layout.result_offset(),
+                ret: fc.ret,
+            });
+            dm.max_nregs = dm.max_nregs.max(fc.nregs);
+            let spawn_bound = if fc.max_children_hint == u16::MAX {
+                // spawn inside a loop: dynamic bound; start with a warm floor
+                64
+            } else {
+                fc.max_children_hint as usize
+            };
+            dm.spawn_capacity = dm.spawn_capacity.max(spawn_bound);
+        }
+        dm.spawn_capacity = dm.spawn_capacity.max(4);
+        dm
+    }
+
+    #[inline]
+    pub fn func(&self, id: FuncId) -> &DecodedFunc {
+        &self.funcs[id as usize]
+    }
+
+    /// Global pc where `func` resumes at `state`.
+    #[inline]
+    pub fn state_pc(&self, func: FuncId, state: u16) -> GlobalPc {
+        let df = &self.funcs[func as usize];
+        debug_assert!(state < df.num_states);
+        self.state_pcs[df.state_base as usize + state as usize]
+    }
+
+    /// Function-local pc (diagnostics: mirrors the compiler's numbering).
+    #[inline]
+    pub fn local_pc(&self, func: FuncId, global: GlobalPc) -> u32 {
+        global - self.funcs[func as usize].insn_base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile_default;
+
+    const FIB: &str = r#"
+        #pragma gtap function
+        int fib(int n) {
+            if (n < 2) return n;
+            int a; int b;
+            #pragma gtap task queue(1)
+            a = fib(n - 1);
+            #pragma gtap task queue(1)
+            b = fib(n - 2);
+            #pragma gtap taskwait queue(2)
+            return a + b;
+        }
+
+        #pragma gtap function
+        int twice(int n) {
+            int a;
+            #pragma gtap task
+            a = fib(n);
+            #pragma gtap taskwait
+            return a + a;
+        }
+    "#;
+
+    #[test]
+    fn dinsn_is_small() {
+        assert!(
+            std::mem::size_of::<DInsn>() <= 16,
+            "{}",
+            std::mem::size_of::<DInsn>()
+        );
+    }
+
+    #[test]
+    fn functions_are_contiguous_and_ordered() {
+        let m = compile_default(FIB).unwrap();
+        let dm = DecodedModule::decode(&m);
+        assert_eq!(dm.funcs.len(), 2);
+        assert_eq!(dm.funcs[0].insn_base, 0);
+        assert_eq!(
+            dm.funcs[0].insn_end, dm.funcs[1].insn_base,
+            "no gaps between functions"
+        );
+        assert_eq!(dm.funcs[1].insn_end as usize, dm.insns.len());
+        assert_eq!(
+            dm.insns.len(),
+            m.funcs.iter().map(|f| f.insns.len()).sum::<usize>()
+        );
+        assert_eq!(
+            dm.args.len(),
+            m.funcs.iter().map(|f| f.arg_pool.len()).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn control_flow_targets_stay_in_function() {
+        let m = compile_default(FIB).unwrap();
+        let dm = DecodedModule::decode(&m);
+        for (fi, df) in dm.funcs.iter().enumerate() {
+            for pc in df.insn_base..df.insn_end {
+                match dm.insns[pc as usize] {
+                    DInsn::Jmp { target } => {
+                        assert!(target >= df.insn_base && target < df.insn_end, "f{fi}")
+                    }
+                    DInsn::Br { t, f, .. } => {
+                        assert!(t >= df.insn_base && t < df.insn_end);
+                        assert!(f >= df.insn_base && f < df.insn_end);
+                    }
+                    _ => {}
+                }
+            }
+            for s in 0..df.num_states {
+                let pc = dm.state_pc(fi as FuncId, s);
+                assert!(pc >= df.insn_base && pc < df.insn_end);
+            }
+        }
+    }
+
+    #[test]
+    fn state_entries_match_module() {
+        let m = compile_default(FIB).unwrap();
+        let dm = DecodedModule::decode(&m);
+        for (fi, fc) in m.funcs.iter().enumerate() {
+            assert_eq!(dm.funcs[fi].num_states as usize, fc.state_entries.len());
+            for (s, &local) in fc.state_entries.iter().enumerate() {
+                assert_eq!(
+                    dm.state_pc(fi as FuncId, s as u16),
+                    dm.funcs[fi].insn_base + local
+                );
+                assert_eq!(
+                    dm.local_pc(fi as FuncId, dm.state_pc(fi as FuncId, s as u16)),
+                    local
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn operand_pools_flattened_verbatim() {
+        let m = compile_default(FIB).unwrap();
+        let dm = DecodedModule::decode(&m);
+        // every decoded Spawn/Intr must reference the same registers the
+        // module-local pool did
+        for (fi, fc) in m.funcs.iter().enumerate() {
+            let df = &dm.funcs[fi];
+            for (i, &insn) in fc.insns.iter().enumerate() {
+                let d = dm.insns[df.insn_base as usize + i];
+                if let (
+                    crate::ir::bytecode::Insn::Spawn {
+                        arg_base, argc, ..
+                    },
+                    DInsn::Spawn {
+                        arg_base: gb,
+                        argc: gc,
+                        ..
+                    },
+                ) = (insn, d)
+                {
+                    assert_eq!(argc, gc);
+                    assert_eq!(
+                        &fc.arg_pool[arg_base as usize..arg_base as usize + argc as usize],
+                        &dm.args[gb as usize..gb as usize + gc as usize]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn metadata_pre_resolved() {
+        let m = compile_default(FIB).unwrap();
+        let dm = DecodedModule::decode(&m);
+        assert_eq!(dm.max_nregs, m.funcs.iter().map(|f| f.nregs).max().unwrap());
+        assert!(dm.spawn_capacity >= 2, "fib spawns two children per join");
+        for (fi, fc) in m.funcs.iter().enumerate() {
+            assert_eq!(dm.funcs[fi].result_off, fc.layout.result_offset());
+            assert_eq!(dm.funcs[fi].name, fc.name);
+        }
+    }
+}

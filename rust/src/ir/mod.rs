@@ -8,6 +8,10 @@
 //! * [`bytecode`] — the register bytecode a task function compiles to, with
 //!   the per-`taskwait` state-entry table that realizes the paper's
 //!   switch-based state machine (§4.2, §5.2.2).
+//! * [`decoded`] — the load-time-flattened form of the bytecode the
+//!   interpreter dispatches over: one contiguous instruction array with
+//!   global control-flow targets, pooled operand lists, and pre-resolved
+//!   cross-function metadata.
 //! * [`layout`] — the compiler-generated task-data record layout: original
 //!   arguments, spilled locals, and the result field (§5.2.3, Program 6).
 //! * [`intrinsics`] — builtin functions callable from GTaP-C (serial leaf
@@ -16,12 +20,14 @@
 
 pub mod ast;
 pub mod bytecode;
+pub mod decoded;
 pub mod intrinsics;
 pub mod layout;
 pub mod types;
 
 pub use ast::*;
 pub use bytecode::*;
+pub use decoded::{DInsn, DecodedFunc, DecodedModule};
 pub use intrinsics::{Intrinsic, IntrinsicSig};
 pub use layout::TaskDataLayout;
 pub use types::{Type, Value};

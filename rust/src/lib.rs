@@ -54,3 +54,5 @@ pub mod runtime;
 pub mod sim;
 pub mod util;
 pub mod workloads;
+
+pub use util::error::{Context, Error, Result};

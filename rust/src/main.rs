@@ -8,7 +8,8 @@
 //! gtap config                              print runtime defaults (Table 1)
 //! ```
 
-use anyhow::{bail, Result};
+use gtap::bail;
+use gtap::util::error::Result;
 use gtap::bench::runners::{self, Exec};
 use gtap::compiler;
 use gtap::coordinator::config::{GtapConfig, DEFAULT_MAX_TASK_DATA_SIZE};
@@ -46,7 +47,7 @@ fn cmd_compile(args: &Args) -> Result<()> {
     };
     let src = std::fs::read_to_string(path)?;
     let module = compiler::compile(&src, DEFAULT_MAX_TASK_DATA_SIZE)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        .map_err(|e| gtap::anyhow!("{e}"))?;
     print!("{}", compiler::pretty::render_module(&module));
     Ok(())
 }

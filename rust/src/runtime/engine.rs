@@ -5,12 +5,15 @@
 //! artifact's fixed `(32,)` lane shape (grouping by the uniform
 //! `(mem_ops, compute_iters)` scalars, padding unused lanes with seed 0)
 //! and runs ONE PJRT execution per group — the warp-batched
-//! `do_memory_and_compute` of §6.3.
+//! `do_memory_and_compute` of §6.3. It needs the `xla` crate and is gated
+//! behind the `xla` cargo feature; without it a stub with the same surface
+//! reports the missing feature at construction time.
 
 use crate::coordinator::{PayloadEngine, PayloadReq};
-use crate::sim::intrinsics::{payload_native, payload_table};
-use anyhow::{Context, Result};
-use std::path::Path;
+use crate::sim::intrinsics::payload_native;
+#[cfg(feature = "xla")]
+use crate::sim::intrinsics::payload_table;
+use crate::util::error::Result;
 
 /// Lanes per artifact execution (must match `python/compile/kernels`).
 pub const LANES: usize = 32;
@@ -36,6 +39,7 @@ impl PayloadEngine for NativePayloadEngine {
 }
 
 /// The AOT JAX/Pallas kernel behind PJRT.
+#[cfg(feature = "xla")]
 pub struct XlaPayloadEngine {
     _client: xla::PjRtClient,
     exe: xla::PjRtLoadedExecutable,
@@ -46,16 +50,59 @@ pub struct XlaPayloadEngine {
     pub lane_payloads: u64,
 }
 
+/// Stub standing in for the PJRT engine when the crate is built without
+/// the `xla` feature (the offline registry has no `xla` crate). Every
+/// constructor fails with an explanatory error; the fields mirror the real
+/// engine so diagnostics code compiles unchanged.
+#[cfg(not(feature = "xla"))]
+pub struct XlaPayloadEngine {
+    pub executions: u64,
+    pub lane_payloads: u64,
+    /// Prevents construction outside this module — the constructors always
+    /// fail, which is what `execute`'s unreachable! relies on.
+    _private: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaPayloadEngine {
+    /// Always fails: the PJRT engine requires the `xla` feature.
+    pub fn from_artifacts() -> Result<XlaPayloadEngine> {
+        crate::bail!(
+            "built without the `xla` cargo feature — the PJRT payload \
+             engine is unavailable (use the native payload path, or build \
+             with `--features xla` where the xla crate is vendored)"
+        )
+    }
+
+    /// Always fails: the PJRT engine requires the `xla` feature.
+    pub fn load(_path: &std::path::Path) -> Result<XlaPayloadEngine> {
+        Self::from_artifacts()
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+impl PayloadEngine for XlaPayloadEngine {
+    fn execute(&mut self, _reqs: &[PayloadReq], _out: &mut Vec<f64>) {
+        unreachable!("stub XlaPayloadEngine cannot be constructed")
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt-stub"
+    }
+}
+
+#[cfg(feature = "xla")]
 impl XlaPayloadEngine {
     /// Load `artifacts/payload.hlo.txt` (searched upward from cwd).
     pub fn from_artifacts() -> Result<XlaPayloadEngine> {
+        use crate::util::error::Context;
         let path = crate::runtime::find_artifact("payload.hlo.txt").context(
             "artifacts/payload.hlo.txt not found — run `make artifacts` first",
         )?;
         Self::load(&path)
     }
 
-    pub fn load(path: &Path) -> Result<XlaPayloadEngine> {
+    pub fn load(path: &std::path::Path) -> Result<XlaPayloadEngine> {
         let (client, exe) = crate::runtime::compile_artifact(path)?;
         let table = xla::Literal::vec1(&payload_table()[..]);
         Ok(XlaPayloadEngine {
@@ -70,6 +117,7 @@ impl XlaPayloadEngine {
     /// One PJRT execution over up to `LANES` requests with uniform
     /// `(mem_ops, compute_iters)`.
     fn run_group(&mut self, reqs: &[PayloadReq]) -> Result<Vec<f64>> {
+        use crate::util::error::Context;
         debug_assert!(reqs.len() <= LANES && !reqs.is_empty());
         let mut seeds = [0i64; LANES];
         for (i, r) in reqs.iter().enumerate() {
@@ -93,6 +141,7 @@ impl XlaPayloadEngine {
     }
 }
 
+#[cfg(feature = "xla")]
 impl PayloadEngine for XlaPayloadEngine {
     fn execute(&mut self, reqs: &[PayloadReq], out: &mut Vec<f64>) {
         // group by the uniform scalars, preserving request order on output
@@ -151,9 +200,17 @@ mod tests {
         assert_eq!(e.calls, 1);
     }
 
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_engine_reports_missing_feature() {
+        let err = XlaPayloadEngine::from_artifacts().unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+
     /// ULP-level agreement between the AOT Pallas kernel (via PJRT) and the
     /// native twin — the cross-language correctness check of the whole
     /// three-layer stack. Skipped when artifacts are absent.
+    #[cfg(feature = "xla")]
     #[test]
     fn xla_engine_matches_native_twin() {
         let Ok(mut e) = XlaPayloadEngine::from_artifacts() else {
@@ -172,6 +229,7 @@ mod tests {
         assert_eq!(e.executions, 1, "one PJRT execution for a uniform warp");
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn xla_engine_groups_mixed_sizes() {
         let Ok(mut e) = XlaPayloadEngine::from_artifacts() else {
@@ -194,6 +252,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn xla_engine_zero_iters_exact() {
         let Ok(mut e) = XlaPayloadEngine::from_artifacts() else {

@@ -6,13 +6,20 @@
 //! *text*; this module loads `artifacts/payload.hlo.txt`, compiles it on
 //! the PJRT CPU client, and serves warp-batched payload requests — Python
 //! is never on the request path.
+//!
+//! The PJRT path requires the `xla` crate, which the offline registry in
+//! this environment does not ship. It is therefore gated behind the `xla`
+//! cargo feature: without it, [`XlaPayloadEngine`] is a stub whose
+//! constructor returns an error, and the always-available
+//! [`NativePayloadEngine`] (the bit-twin of the kernel) serves every
+//! payload request.
 
 pub mod engine;
 
 pub use engine::{NativePayloadEngine, XlaPayloadEngine};
 
-use anyhow::{Context, Result};
-use std::path::Path;
+#[cfg(feature = "xla")]
+use crate::util::error::Result;
 
 /// Default artifact location relative to the repo root.
 pub const PAYLOAD_ARTIFACT: &str = "artifacts/payload.hlo.txt";
@@ -33,7 +40,11 @@ pub fn find_artifact(name: &str) -> Option<std::path::PathBuf> {
 }
 
 /// Load an HLO-text artifact and compile it on the PJRT CPU client.
-pub fn compile_artifact(path: &Path) -> Result<(xla::PjRtClient, xla::PjRtLoadedExecutable)> {
+#[cfg(feature = "xla")]
+pub fn compile_artifact(
+    path: &std::path::Path,
+) -> Result<(xla::PjRtClient, xla::PjRtLoadedExecutable)> {
+    use crate::util::error::Context;
     let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
     let proto = xla::HloModuleProto::from_text_file(
         path.to_str().context("non-utf8 artifact path")?,

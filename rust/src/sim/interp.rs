@@ -1,11 +1,24 @@
-//! Per-lane bytecode interpreter.
+//! Per-lane bytecode interpreter — the simulator's hottest loop.
 //!
 //! Executes one *segment* of a task's state machine (from a state entry up
 //! to `PrepareJoin` or `FinishTask`) for one lane, accumulating the cycle
 //! cost and the dynamic-path hash the divergence model consumes
-//! (`sim::divergence`). The interpreter is *resumable*: when the task calls
-//! the `payload` intrinsic and an XLA engine is attached, execution suspends
-//! with [`StepResult::NeedPayload`] so the owning warp can batch all lanes'
+//! (`sim::divergence`).
+//!
+//! Dispatch runs over a [`DecodedModule`] (see `ir::decoded`): one
+//! contiguous pre-resolved instruction array shared by all functions, with
+//! global jump targets and pooled operand lists. Combined with lane frames
+//! pre-sized from the decoded metadata ([`LaneFrame::sized`]) and
+//! device costs folded into a small constant table at interpreter
+//! construction, steady-state segment execution performs **zero heap
+//! allocations** — `rust/tests/zero_alloc.rs` enforces this under a
+//! counting allocator. The pre-refactor module-walking interpreter is kept
+//! as [`super::interp_ref::RefInterp`] for differential testing and as the
+//! `benches/hotpath.rs` baseline.
+//!
+//! The interpreter is *resumable*: when the task calls the `payload`
+//! intrinsic and an XLA engine is attached, execution suspends with
+//! [`StepResult::NeedPayload`] so the owning warp can batch all lanes'
 //! payload calls into one PJRT execution (the warp-wide
 //! `do_memory_and_compute` of §6.3), then resumes with the kernel's result.
 //!
@@ -18,7 +31,8 @@ use super::divergence;
 use super::intrinsics::{self, IntrCtx};
 use super::memory::Memory;
 use crate::coordinator::records::{RecordPool, TaskId};
-use crate::ir::bytecode::*;
+use crate::ir::bytecode::{BinKind, CacheOp, FuncId, Reg, UnKind};
+use crate::ir::decoded::{DInsn, DecodedModule};
 use crate::ir::intrinsics::Intrinsic;
 use crate::ir::types::Value;
 
@@ -71,13 +85,15 @@ pub enum StepResult {
     },
 }
 
-/// Execution state of one lane (reused across segments via [`LaneFrame::reset`]).
+/// Execution state of one lane (reused across segments via
+/// [`LaneFrame::reset`]; allocate once with [`LaneFrame::sized`]).
 #[derive(Clone, Debug)]
 pub struct LaneFrame {
     pub task: TaskId,
     pub func: FuncId,
     pub lane: u32,
-    pc: Pc,
+    /// Global pc into the decoded instruction array.
+    pc: u32,
     regs: Vec<u64>,
     compute_cycles: u64,
     mem_cycles: u64,
@@ -93,6 +109,9 @@ pub struct LaneFrame {
     par_depth: u32,
     par_compute: u64,
     par_mem: u64,
+    /// Trip count captured at region entry (kept for future per-trip cost
+    /// models; not read by the current divide-by-width model).
+    #[allow(dead_code)]
     par_trips: u64,
 }
 
@@ -103,6 +122,8 @@ impl LaneFrame {
         &self.spawns
     }
 
+    /// An empty frame; buffers grow on first use. Prefer
+    /// [`LaneFrame::sized`] on hot paths.
     pub fn new() -> LaneFrame {
         LaneFrame {
             task: 0,
@@ -123,15 +144,35 @@ impl LaneFrame {
         }
     }
 
+    /// A frame pre-sized from the decoded module's metadata: the register
+    /// file fits every function and the spawn buffer fits the largest
+    /// static children-per-join bound, so [`LaneFrame::reset`] and segment
+    /// execution never touch the allocator.
+    pub fn sized(dm: &DecodedModule) -> LaneFrame {
+        let mut f = LaneFrame::new();
+        f.regs = vec![0; dm.max_nregs as usize];
+        f.spawns = Vec::with_capacity(dm.spawn_capacity);
+        f
+    }
+
     /// Prepare the frame to run `task` (function `func`) from `state`.
-    pub fn reset(&mut self, module: &Module, task: TaskId, func: FuncId, state: u16, lane: u32) {
-        let fc = module.func(func);
+    pub fn reset(
+        &mut self,
+        dm: &DecodedModule,
+        task: TaskId,
+        func: FuncId,
+        state: u16,
+        lane: u32,
+    ) {
+        let nregs = dm.func(func).nregs as usize;
         self.task = task;
         self.func = func;
         self.lane = lane;
-        self.pc = fc.state_entries[state as usize];
-        self.regs.clear();
-        self.regs.resize(fc.nregs as usize, 0);
+        self.pc = dm.state_pc(func, state);
+        if self.regs.len() < nregs {
+            self.regs.resize(nregs, 0);
+        }
+        self.regs[..nregs].fill(0);
         self.compute_cycles = 0;
         self.mem_cycles = 0;
         // seed the path hash with (func, state): different task functions /
@@ -153,9 +194,41 @@ impl Default for LaneFrame {
     }
 }
 
-/// The interpreter configuration for one run.
+/// Device costs pre-folded into constants (some involve float blends that
+/// must not run per instruction).
+#[derive(Clone, Copy, Debug)]
+struct Costs {
+    alu: u64,
+    branch: u64,
+    cached_load: u64,
+    cg_load: u64,
+    stg_ca: u64,
+    stg_cg: u64,
+    sttd: u64,
+    spawn: u64,
+    fence: u64,
+}
+
+impl Costs {
+    fn of(dev: &DeviceSpec) -> Costs {
+        Costs {
+            alu: dev.alu,
+            branch: dev.branch,
+            cached_load: dev.cached_load(),
+            cg_load: dev.cg_load(),
+            stg_ca: (dev.l1_lat / 2).max(1),
+            stg_cg: (dev.l2_lat / 4).max(1),
+            sttd: (dev.l2_lat / 4).max(1),
+            spawn: dev.spawn_overhead,
+            fence: dev.fence,
+        }
+    }
+}
+
+/// The interpreter configuration for one run. Construct with
+/// [`Interp::new`] — it pre-computes the per-instruction cost table.
 pub struct Interp<'a> {
-    pub module: &'a Module,
+    pub decoded: &'a DecodedModule,
     pub dev: &'a DeviceSpec,
     /// Threads cooperating on one task (1 = thread-level worker;
     /// block size = block-level worker).
@@ -163,9 +236,25 @@ pub struct Interp<'a> {
     /// When true, `payload` suspends for XLA batching instead of running
     /// natively.
     pub xla_payload: bool,
+    costs: Costs,
 }
 
 impl<'a> Interp<'a> {
+    pub fn new(
+        decoded: &'a DecodedModule,
+        dev: &'a DeviceSpec,
+        block_width: u32,
+        xla_payload: bool,
+    ) -> Interp<'a> {
+        Interp {
+            decoded,
+            dev,
+            block_width,
+            xla_payload,
+            costs: Costs::of(dev),
+        }
+    }
+
     /// Provide the payload result after a [`StepResult::NeedPayload`]
     /// suspension and continue the segment.
     pub fn resume_payload(
@@ -185,7 +274,7 @@ impl<'a> Interp<'a> {
     }
 
     /// Charge compute cycles (ALU/branch), respecting parallel_for scaling.
-    #[inline]
+    #[inline(always)]
     fn charge_c(&self, frame: &mut LaneFrame, c: u64) {
         if frame.par_depth > 0 {
             frame.par_compute += c;
@@ -195,7 +284,7 @@ impl<'a> Interp<'a> {
     }
 
     /// Charge memory cycles (latencies, already device-priced).
-    #[inline]
+    #[inline(always)]
     fn charge_m(&self, frame: &mut LaneFrame, c: u64) {
         if frame.par_depth > 0 {
             frame.par_mem += c;
@@ -212,80 +301,79 @@ impl<'a> Interp<'a> {
         records: &mut RecordPool,
         log: &mut Vec<String>,
     ) -> StepResult {
-        let fc = self.module.func(frame.func);
+        let insns = &self.decoded.insns[..];
+        let arg_pool = &self.decoded.args[..];
         let dev = self.dev;
+        let costs = self.costs;
         let mut executed: u64 = 0;
         loop {
             executed += 1;
             if executed > MAX_SEGMENT_INSNS {
+                let df = self.decoded.func(frame.func);
                 panic!(
                     "segment of task {} (func {:?}, pc {}) exceeded {} instructions — \
                      infinite loop in GTaP-C code?",
-                    frame.task, fc.name, frame.pc, MAX_SEGMENT_INSNS
+                    frame.task,
+                    df.name,
+                    self.decoded.local_pc(frame.func, frame.pc),
+                    MAX_SEGMENT_INSNS
                 );
             }
-            let insn = fc.insns[frame.pc as usize];
+            let insn = insns[frame.pc as usize];
             frame.pc += 1;
             match insn {
-                Insn::Const { dst, val } => {
+                DInsn::Const { dst, val } => {
                     frame.regs[dst as usize] = val;
-                    self.charge_c(frame, dev.alu);
+                    self.charge_c(frame, costs.alu);
                 }
-                Insn::Mov { dst, src } => {
+                DInsn::Mov { dst, src } => {
                     frame.regs[dst as usize] = frame.regs[src as usize];
-                    self.charge_c(frame, dev.alu);
+                    self.charge_c(frame, costs.alu);
                 }
-                Insn::Bin { op, dst, a, b } => {
+                DInsn::Bin { op, dst, a, b } => {
                     let x = Value(frame.regs[a as usize]);
                     let y = Value(frame.regs[b as usize]);
                     let (v, cost) = eval_bin(op, x, y, dev);
                     frame.regs[dst as usize] = v.0;
                     self.charge_c(frame, cost);
                 }
-                Insn::Un { op, dst, a } => {
+                DInsn::Un { op, dst, a } => {
                     let x = Value(frame.regs[a as usize]);
-                    let v = match op {
-                        UnKind::INeg => Value::from_i64(x.as_i64().wrapping_neg()),
-                        UnKind::IBitNot => Value(!x.0),
-                        UnKind::LNot => Value::from_bool(x.0 == 0),
-                        UnKind::FNeg => Value::from_f64(-x.as_f64()),
-                        UnKind::IToF => Value::from_f64(x.as_i64() as f64),
-                        UnKind::FToI => Value::from_i64(x.as_f64() as i64),
-                    };
+                    let v = eval_un(op, x);
                     frame.regs[dst as usize] = v.0;
-                    self.charge_c(frame, dev.alu);
+                    self.charge_c(frame, costs.alu);
                 }
-                Insn::Jmp { target } => {
+                DInsn::Jmp { target } => {
                     frame.pc = target;
-                    self.charge_c(frame, dev.branch);
+                    self.charge_c(frame, costs.branch);
                 }
-                Insn::Br { cond, t, f } => {
+                DInsn::Br { cond, t, f } => {
                     let taken = frame.regs[cond as usize] != 0;
                     frame.pc = if taken { t } else { f };
-                    self.charge_c(frame, dev.branch);
+                    self.charge_c(frame, costs.branch);
                     // fold the decision into the dynamic path
                     frame.path =
                         divergence::fold(frame.path, (frame.pc as u64) << 1 | taken as u64);
                 }
-                Insn::LdG { dst, addr, cache } => {
+                DInsn::LdG { dst, addr, cache } => {
                     let a = frame.regs[addr as usize];
                     frame.regs[dst as usize] = mem.load(a);
                     let cost = match cache {
-                        CacheOp::Ca => dev.cached_load(),
-                        CacheOp::Cg => dev.cg_load(),
+                        CacheOp::Ca => costs.cached_load,
+                        CacheOp::Cg => costs.cg_load,
                     };
                     self.charge_m(frame, cost);
                 }
-                Insn::StG { addr, src, cache } => {
+                DInsn::StG { addr, src, cache } => {
                     let a = frame.regs[addr as usize];
                     mem.store(a, frame.regs[src as usize]);
                     let cost = match cache {
-                        CacheOp::Ca => dev.l1_lat / 2,
-                        CacheOp::Cg => dev.l2_lat / 4,
+                        CacheOp::Ca => costs.stg_ca,
+                        CacheOp::Cg => costs.stg_cg,
                     };
-                    self.charge_m(frame, cost.max(1));
+                    self.charge_m(frame, cost);
                 }
-                Insn::LdTd { dst, off } => {
+                DInsn::LdTd { dst, off } => {
                     frame.regs[dst as usize] = records.data(frame.task)[off as usize];
                     // task records are L2-resident; the first touch of a
                     // field pays the latency, later accesses within the
@@ -293,17 +381,17 @@ impl<'a> Interp<'a> {
                     let bit = 1u64 << (off as u64 & 63);
                     if frame.td_touched & bit == 0 {
                         frame.td_touched |= bit;
-                        self.charge_m(frame, dev.cg_load());
+                        self.charge_m(frame, costs.cg_load);
                     } else {
-                        self.charge_c(frame, dev.alu);
+                        self.charge_c(frame, costs.alu);
                     }
                 }
-                Insn::StTd { off, src } => {
+                DInsn::StTd { off, src } => {
                     records.data_mut(frame.task)[off as usize] = frame.regs[src as usize];
                     frame.td_touched |= 1u64 << (off as u64 & 63);
-                    self.charge_m(frame, (dev.l2_lat / 4).max(1));
+                    self.charge_m(frame, costs.sttd);
                 }
-                Insn::Spawn {
+                DInsn::Spawn {
                     func,
                     arg_base,
                     argc,
@@ -311,7 +399,7 @@ impl<'a> Interp<'a> {
                 } => {
                     let mut args = [0u64; MAX_TASK_ARGS];
                     for i in 0..argc as usize {
-                        let r = fc.arg_pool[arg_base as usize + i];
+                        let r = arg_pool[arg_base as usize + i];
                         args[i] = frame.regs[r as usize];
                     }
                     let q = frame.regs[queue as usize] as u8;
@@ -321,11 +409,11 @@ impl<'a> Interp<'a> {
                         args,
                         queue: q,
                     });
-                    self.charge_c(frame, dev.spawn_overhead);
+                    self.charge_c(frame, costs.spawn);
                 }
-                Insn::PrepareJoin { next_state, queue } => {
+                DInsn::PrepareJoin { next_state, queue } => {
                     let q = frame.regs[queue as usize] as u8;
-                    self.charge_m(frame, dev.cg_load() + dev.fence);
+                    self.charge_m(frame, costs.cg_load + costs.fence);
                     return StepResult::Done(self.seal(
                         frame,
                         SegmentEnd::Join {
@@ -334,23 +422,22 @@ impl<'a> Interp<'a> {
                         },
                     ));
                 }
-                Insn::FinishTask => {
-                    self.charge_m(frame, dev.fence);
+                DInsn::FinishTask => {
+                    self.charge_m(frame, costs.fence);
                     return StepResult::Done(self.seal(frame, SegmentEnd::Finish));
                 }
-                Insn::ChildResult { dst, slot } => {
+                DInsn::ChildResult { dst, slot } => {
                     let child = records.child(frame.task, slot);
                     let cfunc = records.meta(child).func;
                     let off = self
-                        .module
+                        .decoded
                         .func(cfunc)
-                        .layout
-                        .result_offset()
+                        .result_off
                         .expect("capturing spawn of non-void task");
                     frame.regs[dst as usize] = records.data(child)[off as usize];
-                    self.charge_m(frame, dev.cg_load());
+                    self.charge_m(frame, costs.cg_load);
                 }
-                Insn::Intr {
+                DInsn::Intr {
                     id,
                     dst,
                     arg_base,
@@ -359,7 +446,7 @@ impl<'a> Interp<'a> {
                 } => {
                     let mut args = [Value(0); 8];
                     for i in 0..argc as usize {
-                        let r = fc.arg_pool[arg_base as usize + i];
+                        let r = arg_pool[arg_base as usize + i];
                         args[i] = Value(frame.regs[r as usize]);
                     }
                     if id == Intrinsic::Payload && self.xla_payload {
@@ -395,7 +482,7 @@ impl<'a> Interp<'a> {
                         frame.path = divergence::fold(frame.path, out.path_token);
                     }
                 }
-                Insn::ParEnter { trips } => {
+                DInsn::ParEnter { trips } => {
                     if frame.par_depth == 0 {
                         frame.par_compute = 0;
                         frame.par_mem = 0;
@@ -403,7 +490,7 @@ impl<'a> Interp<'a> {
                     }
                     frame.par_depth += 1;
                 }
-                Insn::ParExit => {
+                DInsn::ParExit => {
                     frame.par_depth -= 1;
                     if frame.par_depth == 0 {
                         // block threads split the trips; cost divides by the
@@ -416,12 +503,13 @@ impl<'a> Interp<'a> {
                         frame.par_mem = 0;
                     }
                 }
-                Insn::Trap => {
+                DInsn::Trap => {
+                    let df = self.decoded.func(frame.func);
                     panic!(
                         "__trap() reached in task {} (func {:?}, pc {})",
                         frame.task,
-                        fc.name,
-                        frame.pc - 1
+                        df.name,
+                        self.decoded.local_pc(frame.func, frame.pc - 1)
                     );
                 }
             }
@@ -437,7 +525,23 @@ impl<'a> Interp<'a> {
     }
 }
 
-fn eval_bin(op: BinKind, x: Value, y: Value, dev: &DeviceSpec) -> (Value, u64) {
+/// Evaluate a unary ALU op (shared with the reference interpreter).
+#[inline(always)]
+pub(crate) fn eval_un(op: UnKind, x: Value) -> Value {
+    match op {
+        UnKind::INeg => Value::from_i64(x.as_i64().wrapping_neg()),
+        UnKind::IBitNot => Value(!x.0),
+        UnKind::LNot => Value::from_bool(x.0 == 0),
+        UnKind::FNeg => Value::from_f64(-x.as_f64()),
+        UnKind::IToF => Value::from_f64(x.as_i64() as f64),
+        UnKind::FToI => Value::from_i64(x.as_f64() as i64),
+    }
+}
+
+/// Evaluate a binary ALU op and its cycle cost (shared with the reference
+/// interpreter).
+#[inline(always)]
+pub(crate) fn eval_bin(op: BinKind, x: Value, y: Value, dev: &DeviceSpec) -> (Value, u64) {
     use BinKind::*;
     let v = match op {
         IAdd => Value::from_i64(x.as_i64().wrapping_add(y.as_i64())),
@@ -490,6 +594,7 @@ mod tests {
     use super::*;
     use crate::compiler::compile_default;
     use crate::coordinator::records::{RecordPool, NO_TASK};
+    use crate::ir::bytecode::Module;
     use crate::sim::config::DeviceSpec;
 
     /// Compile, spawn a root task with `args`, and run a single segment.
@@ -500,6 +605,7 @@ mod tests {
         args: &[i64],
     ) -> (SegmentOutput, Vec<SpawnReq>, RecordPool, Memory, Module, Vec<String>) {
         let module = compile_default(src).unwrap();
+        let decoded = DecodedModule::decode(&module);
         let fid = module.func_id(func).unwrap();
         let words = module
             .funcs
@@ -515,14 +621,9 @@ mod tests {
             records.data_mut(task)[i] = a as u64;
         }
         let dev = DeviceSpec::h100();
-        let interp = Interp {
-            module: &module,
-            dev: &dev,
-            block_width: 1,
-            xla_payload: false,
-        };
-        let mut frame = LaneFrame::new();
-        frame.reset(&module, task, fid, 0, 0);
+        let interp = Interp::new(&decoded, &dev, 1, false);
+        let mut frame = LaneFrame::sized(&decoded);
+        frame.reset(&decoded, task, fid, 0, 0);
         let mut log = vec![];
         let out = match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
             StepResult::Done(o) => o,
@@ -630,19 +731,15 @@ mod tests {
     fn payload_xla_suspends() {
         let src = "#pragma gtap function\nfloat f(int s) { return payload(s, 4, 8); }";
         let module = compile_default(src).unwrap();
+        let decoded = DecodedModule::decode(&module);
         let mut records = RecordPool::new(4, 4, 0);
         let mut mem = Memory::new(0);
         let task = records.alloc(0, NO_TASK).unwrap();
         records.data_mut(task)[0] = 42;
         let dev = DeviceSpec::h100();
-        let interp = Interp {
-            module: &module,
-            dev: &dev,
-            block_width: 1,
-            xla_payload: true,
-        };
-        let mut frame = LaneFrame::new();
-        frame.reset(&module, task, 0, 0, 0);
+        let interp = Interp::new(&decoded, &dev, 1, true);
+        let mut frame = LaneFrame::sized(&decoded);
+        frame.reset(&decoded, task, 0, 0, 0);
         let mut log = vec![];
         match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
             StepResult::NeedPayload {
@@ -669,20 +766,16 @@ mod tests {
         let src = "#pragma gtap function\nvoid f(int n) {\n\
                    parallel_for (i in 0..n) { int x = i * 2; print_int(x); } }";
         let module = compile_default(src).unwrap();
+        let decoded = DecodedModule::decode(&module);
         let dev = DeviceSpec::h100();
         let run_width = |w: u32| {
             let mut records = RecordPool::new(4, 1, 0);
             let mut mem = Memory::new(0);
             let task = records.alloc(0, NO_TASK).unwrap();
             records.data_mut(task)[0] = 256;
-            let interp = Interp {
-                module: &module,
-                dev: &dev,
-                block_width: w,
-                xla_payload: false,
-            };
-            let mut frame = LaneFrame::new();
-            frame.reset(&module, task, 0, 0, 0);
+            let interp = Interp::new(&decoded, &dev, w, false);
+            let mut frame = LaneFrame::sized(&decoded);
+            frame.reset(&decoded, task, 0, 0, 0);
             let mut log = vec![];
             match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
                 StepResult::Done(o) => o.cycles,
@@ -701,20 +794,16 @@ mod tests {
     fn state1_reentry_loads_child_results() {
         // run fib(2)'s first segment, fake-finish the children, re-enter
         let module = compile_default(FIB).unwrap();
+        let decoded = DecodedModule::decode(&module);
         let words = module.funcs[0].layout.words();
         let mut records = RecordPool::new(16, words, 4);
         let mut mem = Memory::new(module.globals_words());
         let dev = DeviceSpec::h100();
-        let interp = Interp {
-            module: &module,
-            dev: &dev,
-            block_width: 1,
-            xla_payload: false,
-        };
+        let interp = Interp::new(&decoded, &dev, 1, false);
         let parent = records.alloc(0, NO_TASK).unwrap();
         records.data_mut(parent)[0] = 2; // n = 2
-        let mut frame = LaneFrame::new();
-        frame.reset(&module, parent, 0, 0, 0);
+        let mut frame = LaneFrame::sized(&decoded);
+        frame.reset(&decoded, parent, 0, 0, 0);
         let mut log = vec![];
         match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
             StepResult::Done(o) => o,
@@ -732,11 +821,26 @@ mod tests {
         }
         records.meta_mut(parent).pending_children = 0;
         // re-enter at state 1
-        frame.reset(&module, parent, 0, 1, 0);
+        frame.reset(&decoded, parent, 0, 1, 0);
         match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
             StepResult::Done(o) => assert_eq!(o.end, SegmentEnd::Finish),
             other => panic!("{other:?}"),
         }
         assert_eq!(records.data(parent)[off] as i64, 1, "fib(2) = 1");
+    }
+
+    #[test]
+    fn sized_frame_reset_never_allocates_capacity() {
+        let module = compile_default(FIB).unwrap();
+        let decoded = DecodedModule::decode(&module);
+        let mut frame = LaneFrame::sized(&decoded);
+        let regs_cap = frame.regs.capacity();
+        let spawn_cap = frame.spawns.capacity();
+        for state in [0u16, 1] {
+            frame.reset(&decoded, 0, 0, state, 0);
+            assert_eq!(frame.regs.capacity(), regs_cap);
+            assert_eq!(frame.spawns.capacity(), spawn_cap);
+        }
+        assert!(spawn_cap >= 2);
     }
 }

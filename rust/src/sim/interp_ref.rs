@@ -1,0 +1,372 @@
+//! The pre-decode *reference* interpreter: walks the compiler's
+//! [`Module`] directly, resolving each function's instruction vector,
+//! operand pool and layout on the fly — exactly the shape the simulator
+//! shipped with before the flattened-dispatch overhaul.
+//!
+//! It is kept (not deleted) for two jobs:
+//!
+//! * **Differential testing** — `rust/tests/interp_differential.rs` runs
+//!   the same segments through both interpreters and asserts identical
+//!   ends, cycle charges, spawn lists and path-equality structure, which
+//!   pins the decoded fast path to an independently-simple implementation.
+//! * **The hot-path baseline** — `benches/hotpath.rs` measures decoded vs
+//!   reference dispatch and records the speedup in `BENCH_hotpath.json`,
+//!   so the optimization claim stays measurable instead of becoming a
+//!   one-off number in an old PR description.
+//!
+//! Semantics must match `sim::interp` exactly, except that path hashes
+//! fold *function-local* pcs (the decoded interpreter folds global ones):
+//! hashes are only ever compared for equality, and the equality classes
+//! coincide, which is what the differential test checks.
+
+use super::config::DeviceSpec;
+use super::divergence;
+use super::interp::{eval_bin, eval_un, SegmentEnd, SegmentOutput, SpawnReq, StepResult};
+use super::intrinsics::{self, IntrCtx};
+use super::memory::Memory;
+use crate::coordinator::records::{RecordPool, TaskId};
+use crate::ir::bytecode::{CacheOp, FuncId, Insn, Module, Pc, Reg};
+use crate::ir::intrinsics::Intrinsic;
+use crate::ir::types::Value;
+use crate::sim::interp::MAX_TASK_ARGS;
+
+/// Runaway-loop guard per segment (kept equal to the fast path's).
+const MAX_SEGMENT_INSNS: u64 = 2_000_000_000;
+
+/// Execution state of one lane for the reference interpreter.
+#[derive(Clone, Debug)]
+pub struct RefLaneFrame {
+    pub task: TaskId,
+    pub func: FuncId,
+    pub lane: u32,
+    pc: Pc,
+    regs: Vec<u64>,
+    compute_cycles: u64,
+    mem_cycles: u64,
+    path: u64,
+    spawns: Vec<SpawnReq>,
+    pending_payload_dst: Option<Reg>,
+    td_touched: u64,
+    par_depth: u32,
+    par_compute: u64,
+    par_mem: u64,
+    #[allow(dead_code)]
+    par_trips: u64,
+}
+
+impl RefLaneFrame {
+    pub fn new() -> RefLaneFrame {
+        RefLaneFrame {
+            task: 0,
+            func: 0,
+            lane: 0,
+            pc: 0,
+            regs: Vec::new(),
+            compute_cycles: 0,
+            mem_cycles: 0,
+            path: 0,
+            spawns: Vec::new(),
+            pending_payload_dst: None,
+            td_touched: 0,
+            par_depth: 0,
+            par_compute: 0,
+            par_mem: 0,
+            par_trips: 0,
+        }
+    }
+
+    pub fn spawns(&self) -> &[SpawnReq] {
+        &self.spawns
+    }
+
+    /// Prepare the frame to run `task` (function `func`) from `state`.
+    /// Re-resolves the function and re-sizes the register file every time —
+    /// the per-segment overhead the decoded path eliminates.
+    pub fn reset(&mut self, module: &Module, task: TaskId, func: FuncId, state: u16, lane: u32) {
+        let fc = module.func(func);
+        self.task = task;
+        self.func = func;
+        self.lane = lane;
+        self.pc = fc.state_entries[state as usize];
+        self.regs.clear();
+        self.regs.resize(fc.nregs as usize, 0);
+        self.compute_cycles = 0;
+        self.mem_cycles = 0;
+        self.path = divergence::fold(divergence::fold(0x5EED, func as u64), state as u64);
+        self.spawns.clear();
+        self.pending_payload_dst = None;
+        self.td_touched = 0;
+        self.par_depth = 0;
+        self.par_compute = 0;
+        self.par_mem = 0;
+        self.par_trips = 0;
+    }
+}
+
+impl Default for RefLaneFrame {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The reference interpreter configuration for one run.
+pub struct RefInterp<'a> {
+    pub module: &'a Module,
+    pub dev: &'a DeviceSpec,
+    pub block_width: u32,
+    pub xla_payload: bool,
+}
+
+impl<'a> RefInterp<'a> {
+    /// Provide the payload result after a suspension and continue.
+    pub fn resume_payload(
+        &self,
+        frame: &mut RefLaneFrame,
+        value: f64,
+        mem: &mut Memory,
+        records: &mut RecordPool,
+        log: &mut Vec<String>,
+    ) -> StepResult {
+        let dst = frame
+            .pending_payload_dst
+            .take()
+            .expect("resume_payload without suspension");
+        frame.regs[dst as usize] = Value::from_f64(value).0;
+        self.run(frame, mem, records, log)
+    }
+
+    #[inline]
+    fn charge_c(&self, frame: &mut RefLaneFrame, c: u64) {
+        if frame.par_depth > 0 {
+            frame.par_compute += c;
+        } else {
+            frame.compute_cycles += c;
+        }
+    }
+
+    #[inline]
+    fn charge_m(&self, frame: &mut RefLaneFrame, c: u64) {
+        if frame.par_depth > 0 {
+            frame.par_mem += c;
+        } else {
+            frame.mem_cycles += c;
+        }
+    }
+
+    /// Drive the lane until the segment ends or suspends.
+    pub fn run(
+        &self,
+        frame: &mut RefLaneFrame,
+        mem: &mut Memory,
+        records: &mut RecordPool,
+        log: &mut Vec<String>,
+    ) -> StepResult {
+        let fc = self.module.func(frame.func);
+        let dev = self.dev;
+        let mut executed: u64 = 0;
+        loop {
+            executed += 1;
+            if executed > MAX_SEGMENT_INSNS {
+                panic!(
+                    "segment of task {} (func {:?}, pc {}) exceeded {} instructions — \
+                     infinite loop in GTaP-C code?",
+                    frame.task, fc.name, frame.pc, MAX_SEGMENT_INSNS
+                );
+            }
+            let insn = fc.insns[frame.pc as usize];
+            frame.pc += 1;
+            match insn {
+                Insn::Const { dst, val } => {
+                    frame.regs[dst as usize] = val;
+                    self.charge_c(frame, dev.alu);
+                }
+                Insn::Mov { dst, src } => {
+                    frame.regs[dst as usize] = frame.regs[src as usize];
+                    self.charge_c(frame, dev.alu);
+                }
+                Insn::Bin { op, dst, a, b } => {
+                    let x = Value(frame.regs[a as usize]);
+                    let y = Value(frame.regs[b as usize]);
+                    let (v, cost) = eval_bin(op, x, y, dev);
+                    frame.regs[dst as usize] = v.0;
+                    self.charge_c(frame, cost);
+                }
+                Insn::Un { op, dst, a } => {
+                    let x = Value(frame.regs[a as usize]);
+                    let v = eval_un(op, x);
+                    frame.regs[dst as usize] = v.0;
+                    self.charge_c(frame, dev.alu);
+                }
+                Insn::Jmp { target } => {
+                    frame.pc = target;
+                    self.charge_c(frame, dev.branch);
+                }
+                Insn::Br { cond, t, f } => {
+                    let taken = frame.regs[cond as usize] != 0;
+                    frame.pc = if taken { t } else { f };
+                    self.charge_c(frame, dev.branch);
+                    frame.path =
+                        divergence::fold(frame.path, (frame.pc as u64) << 1 | taken as u64);
+                }
+                Insn::LdG { dst, addr, cache } => {
+                    let a = frame.regs[addr as usize];
+                    frame.regs[dst as usize] = mem.load(a);
+                    let cost = match cache {
+                        CacheOp::Ca => dev.cached_load(),
+                        CacheOp::Cg => dev.cg_load(),
+                    };
+                    self.charge_m(frame, cost);
+                }
+                Insn::StG { addr, src, cache } => {
+                    let a = frame.regs[addr as usize];
+                    mem.store(a, frame.regs[src as usize]);
+                    let cost = match cache {
+                        CacheOp::Ca => dev.l1_lat / 2,
+                        CacheOp::Cg => dev.l2_lat / 4,
+                    };
+                    self.charge_m(frame, cost.max(1));
+                }
+                Insn::LdTd { dst, off } => {
+                    frame.regs[dst as usize] = records.data(frame.task)[off as usize];
+                    let bit = 1u64 << (off as u64 & 63);
+                    if frame.td_touched & bit == 0 {
+                        frame.td_touched |= bit;
+                        self.charge_m(frame, dev.cg_load());
+                    } else {
+                        self.charge_c(frame, dev.alu);
+                    }
+                }
+                Insn::StTd { off, src } => {
+                    records.data_mut(frame.task)[off as usize] = frame.regs[src as usize];
+                    frame.td_touched |= 1u64 << (off as u64 & 63);
+                    self.charge_m(frame, (dev.l2_lat / 4).max(1));
+                }
+                Insn::Spawn {
+                    func,
+                    arg_base,
+                    argc,
+                    queue,
+                } => {
+                    let mut args = [0u64; MAX_TASK_ARGS];
+                    for i in 0..argc as usize {
+                        let r = fc.arg_pool[arg_base as usize + i];
+                        args[i] = frame.regs[r as usize];
+                    }
+                    let q = frame.regs[queue as usize] as u8;
+                    frame.spawns.push(SpawnReq {
+                        func,
+                        argc,
+                        args,
+                        queue: q,
+                    });
+                    self.charge_c(frame, dev.spawn_overhead);
+                }
+                Insn::PrepareJoin { next_state, queue } => {
+                    let q = frame.regs[queue as usize] as u8;
+                    self.charge_m(frame, dev.cg_load() + dev.fence);
+                    return StepResult::Done(self.seal(
+                        frame,
+                        SegmentEnd::Join {
+                            next_state,
+                            queue: q,
+                        },
+                    ));
+                }
+                Insn::FinishTask => {
+                    self.charge_m(frame, dev.fence);
+                    return StepResult::Done(self.seal(frame, SegmentEnd::Finish));
+                }
+                Insn::ChildResult { dst, slot } => {
+                    let child = records.child(frame.task, slot);
+                    let cfunc = records.meta(child).func;
+                    let off = self
+                        .module
+                        .func(cfunc)
+                        .layout
+                        .result_offset()
+                        .expect("capturing spawn of non-void task");
+                    frame.regs[dst as usize] = records.data(child)[off as usize];
+                    self.charge_m(frame, dev.cg_load());
+                }
+                Insn::Intr {
+                    id,
+                    dst,
+                    arg_base,
+                    argc,
+                    has_dst,
+                } => {
+                    let mut args = [Value(0); 8];
+                    for i in 0..argc as usize {
+                        let r = fc.arg_pool[arg_base as usize + i];
+                        args[i] = Value(frame.regs[r as usize]);
+                    }
+                    if id == Intrinsic::Payload && self.xla_payload {
+                        let (seed, m, c) =
+                            (args[0].as_i64(), args[1].as_i64(), args[2].as_i64());
+                        self.charge_m(frame, intrinsics::payload_cycles(dev, m, c));
+                        frame.path = divergence::fold(
+                            frame.path,
+                            crate::util::prng::mix64((m as u64) ^ (c as u64).rotate_left(17) ^ 0xFA),
+                        );
+                        frame.pending_payload_dst = Some(dst);
+                        return StepResult::NeedPayload {
+                            seed,
+                            mem_ops: m,
+                            compute_iters: c,
+                        };
+                    }
+                    let mut ctx = IntrCtx {
+                        mem,
+                        dev,
+                        lane_id: frame.lane,
+                        worker_id: 0,
+                        log,
+                    };
+                    let out = intrinsics::execute(id, &args[..argc as usize], &mut ctx);
+                    if has_dst {
+                        frame.regs[dst as usize] = out.value.0;
+                    }
+                    self.charge_m(frame, out.cycles);
+                    if out.path_token != 0 {
+                        frame.path = divergence::fold(frame.path, out.path_token);
+                    }
+                }
+                Insn::ParEnter { trips } => {
+                    if frame.par_depth == 0 {
+                        frame.par_compute = 0;
+                        frame.par_mem = 0;
+                        frame.par_trips = frame.regs[trips as usize];
+                    }
+                    frame.par_depth += 1;
+                }
+                Insn::ParExit => {
+                    frame.par_depth -= 1;
+                    if frame.par_depth == 0 {
+                        let w = self.block_width.max(1) as u64;
+                        frame.compute_cycles += frame.par_compute.div_ceil(w);
+                        frame.mem_cycles += frame.par_mem.div_ceil(w);
+                        frame.compute_cycles += dev.barrier;
+                        frame.par_compute = 0;
+                        frame.par_mem = 0;
+                    }
+                }
+                Insn::Trap => {
+                    panic!(
+                        "__trap() reached in task {} (func {:?}, pc {})",
+                        frame.task,
+                        fc.name,
+                        frame.pc - 1
+                    );
+                }
+            }
+        }
+    }
+
+    fn seal(&self, frame: &mut RefLaneFrame, end: SegmentEnd) -> SegmentOutput {
+        SegmentOutput {
+            end,
+            cycles: self.dev.scale_compute(frame.compute_cycles) + frame.mem_cycles,
+            path: frame.path,
+        }
+    }
+}

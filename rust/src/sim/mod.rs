@@ -27,11 +27,13 @@
 pub mod config;
 pub mod divergence;
 pub mod interp;
+pub mod interp_ref;
 pub mod intrinsics;
 pub mod memory;
 pub mod profile;
 
 pub use config::DeviceSpec;
-pub use interp::{Interp, LaneFrame, SegmentEnd, SegmentOutput, SpawnReq};
+pub use interp::{Interp, LaneFrame, SegmentEnd, SegmentOutput, SpawnReq, StepResult};
+pub use interp_ref::{RefInterp, RefLaneFrame};
 pub use memory::Memory;
 pub use profile::{Profiler, TimelineEvent};

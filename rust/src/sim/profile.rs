@@ -52,15 +52,27 @@ impl Profiler {
         }
     }
 
-    /// Busy-time fraction per worker: `(worker, busy_cycles, total_cycles)`.
+    /// Busy-time fraction per worker: `(worker, busy_cycles, total_cycles)`,
+    /// ascending by worker id, omitting workers with no recorded events.
+    /// Aggregation is a pre-sized vector indexed by worker id — the event
+    /// list dominates (one entry per iteration), so the summary pass must
+    /// not pay a tree-map node allocation per worker.
     pub fn utilization(&self) -> Vec<(u32, u64, u64)> {
-        let mut per: std::collections::BTreeMap<u32, (u64, u64)> = Default::default();
+        let n = match self.events.iter().map(|e| e.worker).max() {
+            Some(max_w) => max_w as usize + 1,
+            None => return Vec::new(),
+        };
+        let mut per: Vec<(u64, u64)> = vec![(0, 0); n];
         for e in &self.events {
-            let ent = per.entry(e.worker).or_insert((0, 0));
+            let ent = &mut per[e.worker as usize];
             ent.0 += e.busy;
             ent.1 += e.busy + e.overhead;
         }
-        per.into_iter().map(|(w, (b, t))| (w, b, t)).collect()
+        per.into_iter()
+            .enumerate()
+            .filter(|&(_, (_, t))| t > 0)
+            .map(|(w, (b, t))| (w as u32, b, t))
+            .collect()
     }
 
     /// Mean active lanes over busy iterations (Fig. 9's intra-warp
@@ -134,6 +146,15 @@ mod tests {
         p.record(ev(1, 0, 5, 15, 16));
         let u = p.utilization();
         assert_eq!(u, vec![(0, 40, 50), (1, 5, 20)]);
+    }
+
+    #[test]
+    fn utilization_skips_workers_without_events() {
+        let mut p = Profiler::enabled();
+        p.record(ev(0, 0, 10, 5, 32));
+        p.record(ev(3, 0, 1, 2, 8)); // workers 1 and 2 never reported
+        assert_eq!(p.utilization(), vec![(0, 10, 15), (3, 1, 3)]);
+        assert!(Profiler::enabled().utilization().is_empty());
     }
 
     #[test]

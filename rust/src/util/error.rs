@@ -1,0 +1,162 @@
+//! Minimal error handling in the spirit of `anyhow` (the offline registry
+//! in this environment ships no error-handling crates, so — like `prop.rs`
+//! for proptest — the few pieces this crate needs are implemented here).
+//!
+//! [`Error`] is an opaque, human-readable error with a context chain;
+//! [`Result`] defaults its error type to it. The [`Context`] trait adds
+//! `.context(..)` / `.with_context(..)` to `Result` and `Option`, and the
+//! [`anyhow!`](crate::anyhow), [`bail!`](crate::bail) and
+//! [`ensure!`](crate::ensure) macros build/return errors from format
+//! strings. Any `std::error::Error` converts via `?`, so call sites read
+//! exactly as they would with the real crate.
+
+use std::fmt;
+
+/// An opaque error: a message plus outer context layers (outermost first,
+/// like `anyhow`'s `{:#}` chain rendered eagerly).
+pub struct Error {
+    msg: String,
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap this error in an outer context layer.
+    pub fn context(self, c: impl fmt::Display) -> Error {
+        Error {
+            msg: format!("{c}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like `anyhow::Error`, this type deliberately does NOT implement
+// `std::error::Error` — that is what lets every std error convert via `?`
+// without colliding with the blanket identity `From`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Extension trait adding context to fallible values.
+pub trait Context<T> {
+    /// Attach a fixed context message to the error case.
+    fn context(self, c: impl fmt::Display) -> Result<T>;
+    /// Attach a lazily-built context message to the error case.
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, c: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, c: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`](crate::util::error::Error) from a format string
+/// or any printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt $($arg)*))
+    };
+    ($e:expr) => {
+        $crate::util::error::Error::msg($e)
+    };
+}
+
+/// Return early with an [`Error`](crate::util::error::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/path")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn std_errors_convert_via_question_mark() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_layers_render_outermost_first() {
+        let r: std::result::Result<(), &str> = Err("inner");
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(x: i64) -> Result<i64> {
+            ensure!(x >= 0, "negative input {x}");
+            if x == 0 {
+                bail!("zero is {}", "forbidden");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative input -1");
+        assert_eq!(f(0).unwrap_err().to_string(), "zero is forbidden");
+        let e = crate::anyhow!(Error::msg("passthrough"));
+        assert_eq!(e.to_string(), "passthrough");
+    }
+}

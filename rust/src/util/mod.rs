@@ -1,15 +1,18 @@
 //! Shared utilities: deterministic PRNG, robust statistics, a tiny CLI
-//! parser, and a small property-based-testing framework.
+//! parser, error handling, and a small property-based-testing framework.
 //!
 //! The offline registry available in this environment ships neither `rand`,
-//! `clap`, `criterion` nor `proptest`, so the pieces of each that this crate
-//! needs are implemented here (and unit-tested like everything else).
+//! `clap`, `criterion`, `proptest` nor `anyhow`, so the pieces of each that
+//! this crate needs are implemented here (and unit-tested like everything
+//! else).
 
 pub mod cli;
+pub mod error;
 pub mod prng;
 pub mod prop;
 pub mod stats;
 
 pub use cli::Args;
+pub use error::{Context, Error, Result};
 pub use prng::Prng;
 pub use stats::Summary;

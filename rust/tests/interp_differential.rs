@@ -1,0 +1,217 @@
+//! Differential testing: the decoded fast-path interpreter
+//! (`sim::interp`) against the module-walking reference
+//! (`sim::interp_ref`) on identical segment streams.
+//!
+//! For every program/input/state: same segment end, same simulated cycle
+//! charge, same spawn list, and the same *path-equality structure* (the
+//! two fold different pc encodings into the hash — function-local vs
+//! global — so raw hash values legitimately differ; what the divergence
+//! model consumes is only hash equality between lanes).
+
+use gtap::compiler::compile_default;
+use gtap::coordinator::records::{RecordPool, NO_TASK};
+use gtap::ir::decoded::DecodedModule;
+use gtap::sim::interp_ref::{RefInterp, RefLaneFrame};
+use gtap::sim::{DeviceSpec, Interp, LaneFrame, Memory, SegmentOutput, SpawnReq, StepResult};
+
+const FIB: &str = r#"
+    #pragma gtap function
+    int fib(int n) {
+        if (n < 2) return n;
+        int a; int b;
+        #pragma gtap task queue(1)
+        a = fib(n - 1);
+        #pragma gtap task queue(1)
+        b = fib(n - 2);
+        #pragma gtap taskwait queue(2)
+        return a + b;
+    }
+"#;
+
+const LOOPY: &str = "#pragma gtap function\nint sum(int n) {\n\
+                     int s = 0;\nfor (int i = 1; i <= n; i += 1) { s = s + i * i; }\n\
+                     return s; }";
+
+const INTRINSIC: &str = "#pragma gtap function\nint f(int n) { return fib_serial(n); }";
+
+const PAYLOAD: &str = "#pragma gtap function\nfloat f(int s) { return payload(s, 8, 16); }";
+
+/// Run one segment through both interpreters on identical fresh state;
+/// returns (decoded, reference) outputs plus both spawn lists.
+#[allow(clippy::type_complexity)]
+fn run_both(
+    src: &str,
+    args: &[i64],
+    state: u16,
+) -> ((SegmentOutput, Vec<SpawnReq>), (SegmentOutput, Vec<SpawnReq>)) {
+    let module = compile_default(src).unwrap();
+    let decoded = DecodedModule::decode(&module);
+    let dev = DeviceSpec::h100();
+    let words = module
+        .funcs
+        .iter()
+        .map(|f| f.layout.words())
+        .max()
+        .unwrap()
+        .max(1);
+
+    let mut results = Vec::new();
+    for which in 0..2 {
+        let mut records = RecordPool::new(32, words, 8);
+        let mut mem = Memory::new(module.globals_words());
+        let task = records.alloc(0, NO_TASK).unwrap();
+        for (i, &a) in args.iter().enumerate() {
+            records.data_mut(task)[i] = a as u64;
+        }
+        if state > 0 {
+            // populate child results for continuation re-entries
+            if let Some(off) = module.funcs[0].layout.result_offset() {
+                for v in [1u64, 0] {
+                    let child = records.alloc(0, task).unwrap();
+                    records.push_child(task, child).unwrap();
+                    records.data_mut(child)[off as usize] = v;
+                    records.meta_mut(child).done = true;
+                }
+                records.meta_mut(task).pending_children = 0;
+            }
+        }
+        let mut log = Vec::new();
+        let out = if which == 0 {
+            let interp = Interp::new(&decoded, &dev, 1, false);
+            let mut frame = LaneFrame::sized(&decoded);
+            frame.reset(&decoded, task, 0, state, 0);
+            match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+                StepResult::Done(o) => (o, frame.spawns().to_vec()),
+                other => panic!("unexpected {other:?}"),
+            }
+        } else {
+            let interp = RefInterp {
+                module: &module,
+                dev: &dev,
+                block_width: 1,
+                xla_payload: false,
+            };
+            let mut frame = RefLaneFrame::new();
+            frame.reset(&module, task, 0, state, 0);
+            match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+                StepResult::Done(o) => (o, frame.spawns().to_vec()),
+                other => panic!("unexpected {other:?}"),
+            }
+        };
+        results.push(out);
+    }
+    let reference = results.pop().unwrap();
+    let fast = results.pop().unwrap();
+    (fast, reference)
+}
+
+fn assert_equivalent(src: &str, args: &[i64], state: u16) {
+    let ((fo, fs), (ro, rs)) = run_both(src, args, state);
+    assert_eq!(fo.end, ro.end, "segment end (args {args:?}, state {state})");
+    assert_eq!(
+        fo.cycles, ro.cycles,
+        "cycle charge (args {args:?}, state {state})"
+    );
+    assert_eq!(fs.len(), rs.len(), "spawn count");
+    for (a, b) in fs.iter().zip(rs.iter()) {
+        assert_eq!(a.func, b.func);
+        assert_eq!(a.argc, b.argc);
+        assert_eq!(a.queue, b.queue);
+        assert_eq!(a.args[..a.argc as usize], b.args[..b.argc as usize]);
+    }
+}
+
+#[test]
+fn fib_segments_equivalent() {
+    for n in [0i64, 1, 2, 5, 13, 30] {
+        assert_equivalent(FIB, &[n], 0);
+    }
+    assert_equivalent(FIB, &[5], 1); // post-join continuation
+}
+
+#[test]
+fn loop_and_intrinsic_segments_equivalent() {
+    for n in [0i64, 1, 7, 100] {
+        assert_equivalent(LOOPY, &[n], 0);
+        assert_equivalent(INTRINSIC, &[n.max(1)], 0);
+    }
+}
+
+#[test]
+fn native_payload_segments_equivalent() {
+    for s in [1i64, 42, 9999] {
+        assert_equivalent(PAYLOAD, &[s], 0);
+    }
+}
+
+#[test]
+fn tree_workload_segments_equivalent() {
+    let src = gtap::workloads::tree::full_tree_source(16, 64);
+    let module = compile_default(&src).unwrap();
+    let decoded = DecodedModule::decode(&module);
+    let dev = DeviceSpec::h100();
+    let words = module.funcs[0].layout.words().max(1);
+    for (state, depth) in [(0u16, 4i64), (0, 0), (1, 3)] {
+        let run = |decoded_path: bool| {
+            let mut records = RecordPool::new(8, words, 4);
+            let mut mem = Memory::new(module.globals_words());
+            let acc = mem.alloc(1);
+            let task = records.alloc(0, NO_TASK).unwrap();
+            records.data_mut(task)[0] = depth as u64;
+            records.data_mut(task)[1] = 7;
+            records.data_mut(task)[2] = acc;
+            let mut log = Vec::new();
+            if decoded_path {
+                let interp = Interp::new(&decoded, &dev, 1, false);
+                let mut frame = LaneFrame::sized(&decoded);
+                frame.reset(&decoded, task, 0, state, 0);
+                match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+                    StepResult::Done(o) => (o.cycles, frame.spawns().len(), mem.load(acc)),
+                    other => panic!("{other:?}"),
+                }
+            } else {
+                let interp = RefInterp {
+                    module: &module,
+                    dev: &dev,
+                    block_width: 1,
+                    xla_payload: false,
+                };
+                let mut frame = RefLaneFrame::new();
+                frame.reset(&module, task, 0, state, 0);
+                match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+                    StepResult::Done(o) => (o.cycles, frame.spawns().len(), mem.load(acc)),
+                    other => panic!("{other:?}"),
+                }
+            }
+        };
+        assert_eq!(run(true), run(false), "state {state}, depth {depth}");
+    }
+}
+
+#[test]
+fn path_equality_structure_matches() {
+    // hashes differ across interpreters (local vs global pc folding), but
+    // lane grouping — the only thing the divergence model reads — must
+    // coincide: inputs i, j land in the same group under the decoded
+    // interpreter iff they do under the reference.
+    let inputs: &[i64] = &[0, 1, 2, 3, 5, 8, 13, 1, 5, 0];
+    let fast: Vec<u64> = inputs
+        .iter()
+        .map(|&n| run_both(FIB, &[n], 0).0 .0.path)
+        .collect();
+    let reference: Vec<u64> = inputs
+        .iter()
+        .map(|&n| run_both(FIB, &[n], 0).1 .0.path)
+        .collect();
+    for i in 0..inputs.len() {
+        for j in 0..inputs.len() {
+            assert_eq!(
+                fast[i] == fast[j],
+                reference[i] == reference[j],
+                "grouping of inputs {} and {} diverged",
+                inputs[i],
+                inputs[j]
+            );
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! Acceptance property for the parallel bench harness: a fig3-style sweep
+//! (grid-size points x seeded repetitions over a real workload runner)
+//! produces **byte-identical** series whether it runs on 1 thread or many.
+//!
+//! Kept as a single test: it owns the GTAP_BENCH_* environment for the
+//! duration of this binary.
+
+use gtap::bench::runners::{self, Exec};
+use gtap::bench::sweep::measure_curve;
+use gtap::coordinator::SchedulerKind;
+use gtap::util::stats::Summary;
+
+fn fig3_style_sweep() -> Vec<(usize, Summary)> {
+    let grids: Vec<usize> = vec![1, 2, 4, 8];
+    measure_curve(&grids, |&g, seed| {
+        runners::run_fib(
+            &Exec::gpu_thread(g, 32)
+                .scheduler(SchedulerKind::WorkStealing)
+                .seed(seed),
+            11,
+            0,
+            false,
+        )
+        .unwrap()
+        .seconds
+    })
+}
+
+#[test]
+fn parallel_sweep_is_bit_identical_to_serial() {
+    std::env::set_var("GTAP_BENCH_RUNS", "3");
+
+    std::env::set_var("GTAP_BENCH_THREADS", "1");
+    let serial = fig3_style_sweep();
+
+    std::env::set_var("GTAP_BENCH_THREADS", "5");
+    let parallel = fig3_style_sweep();
+
+    std::env::remove_var("GTAP_BENCH_THREADS");
+    std::env::remove_var("GTAP_BENCH_RUNS");
+
+    assert_eq!(serial.len(), parallel.len());
+    for ((xa, sa), (xb, sb)) in serial.iter().zip(parallel.iter()) {
+        assert_eq!(xa, xb);
+        assert_eq!(sa.n, sb.n);
+        for (a, b) in [
+            (sa.median, sb.median),
+            (sa.q1, sb.q1),
+            (sa.q3, sb.q3),
+            (sa.min, sb.min),
+            (sa.max, sb.max),
+            (sa.mean, sb.mean),
+        ] {
+            assert_eq!(a.to_bits(), b.to_bits(), "series diverged at grid {xa}");
+        }
+    }
+}

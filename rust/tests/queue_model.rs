@@ -1,0 +1,159 @@
+//! Model-based property tests for the batched task-queue operations:
+//! [`TaskQueue`] (warp-cooperative PopBatch/StealBatch/PushBatch,
+//! Algorithm 1) and [`ChaseLevDeque`] (the element-at-a-time §6.1.2
+//! baseline) are checked op-for-op against a reference `VecDeque` model.
+//!
+//! Exact sequence equality against the model at every step gives the
+//! strong versions of the §4.3 correctness properties at once:
+//! exactly-once delivery (pushed ids are unique and every claimed sequence
+//! matches the model's), LIFO owner pops, FIFO steals, and overflow
+//! refusal without mutation. A separate property pins the monotone
+//! [`ContendedWord`] cost accounting: conflicting RMWs on one word
+//! complete in strictly increasing simulated time, each paying at least
+//! the uncontended atomic cost.
+
+use gtap::coordinator::chaselev::ChaseLevDeque;
+use gtap::coordinator::queue::{ContendedWord, TaskQueue};
+use gtap::coordinator::records::TaskId;
+use gtap::sim::DeviceSpec;
+use gtap::util::prop::{Gen, Runner};
+use std::collections::VecDeque;
+
+/// Uniform access to both deque implementations under test.
+enum AnyQueue {
+    Batched(TaskQueue),
+    ChaseLev(ChaseLevDeque),
+}
+
+impl AnyQueue {
+    fn len(&self) -> usize {
+        match self {
+            AnyQueue::Batched(q) => q.len(),
+            AnyQueue::ChaseLev(q) => q.len(),
+        }
+    }
+
+    fn push_batch(&mut self, now: u64, ids: &[TaskId], d: &DeviceSpec) -> bool {
+        match self {
+            AnyQueue::Batched(q) => q.push_batch(now, ids, d).is_some(),
+            AnyQueue::ChaseLev(q) => q.push_batch(now, ids, d).is_some(),
+        }
+    }
+
+    fn pop_batch(&mut self, now: u64, max: usize, out: &mut Vec<TaskId>, d: &DeviceSpec) -> usize {
+        match self {
+            AnyQueue::Batched(q) => q.pop_batch(now, max, out, d).taken,
+            AnyQueue::ChaseLev(q) => q.pop_batch(now, max, out, d).taken,
+        }
+    }
+
+    fn steal_batch(
+        &mut self,
+        now: u64,
+        max: usize,
+        out: &mut Vec<TaskId>,
+        d: &DeviceSpec,
+    ) -> usize {
+        match self {
+            AnyQueue::Batched(q) => q.steal_batch(now, max, out, d).taken,
+            AnyQueue::ChaseLev(q) => q.steal_batch(now, max, out, d).taken,
+        }
+    }
+}
+
+fn check_against_model(g: &mut Gen, mut q: AnyQueue, cap: usize) {
+    let d = DeviceSpec::h100();
+    let mut model: VecDeque<TaskId> = VecDeque::new();
+    let mut next: TaskId = 0;
+    let mut now = 0u64;
+    for _ in 0..g.usize(1, 80) {
+        now += g.int(0, 500) as u64;
+        match g.int(0, 2) {
+            0 => {
+                let k = g.usize(1, 8);
+                let ids: Vec<TaskId> = (0..k as u32).map(|i| next + i).collect();
+                let pushed = q.push_batch(now, &ids, &d);
+                if model.len() + k <= cap {
+                    assert!(pushed, "push within capacity must succeed");
+                    model.extend(ids.iter().copied());
+                    next += k as u32;
+                } else {
+                    assert!(!pushed, "push beyond capacity must refuse");
+                    assert_eq!(q.len(), model.len(), "failed push must not mutate");
+                }
+            }
+            1 => {
+                let max = g.usize(1, 40);
+                let mut out = vec![];
+                let taken = q.pop_batch(now, max, &mut out, &d);
+                let claim = model.len().min(max);
+                let want: Vec<TaskId> =
+                    (0..claim).map(|_| model.pop_back().unwrap()).collect();
+                assert_eq!(taken, claim);
+                assert_eq!(out, want, "owner pop must be LIFO, exactly-once");
+            }
+            _ => {
+                let max = g.usize(1, 40);
+                let mut out = vec![];
+                let taken = q.steal_batch(now, max, &mut out, &d);
+                let claim = model.len().min(max);
+                let want: Vec<TaskId> =
+                    (0..claim).map(|_| model.pop_front().unwrap()).collect();
+                assert_eq!(taken, claim);
+                assert_eq!(out, want, "steal must be FIFO, exactly-once");
+            }
+        }
+        assert_eq!(q.len(), model.len());
+    }
+    // final drain matches the model's remaining contents newest-first
+    let mut out = vec![];
+    q.pop_batch(now, usize::MAX, &mut out, &d);
+    let want: Vec<TaskId> = model.iter().rev().copied().collect();
+    assert_eq!(out, want, "drain must return exactly the outstanding ids");
+}
+
+#[test]
+fn taskqueue_batched_ops_match_vecdeque_model() {
+    Runner::new().cases(300).run("taskqueue-vs-model", |g| {
+        let cap = g.usize(2, 48);
+        check_against_model(g, AnyQueue::Batched(TaskQueue::new(cap)), cap);
+    });
+}
+
+#[test]
+fn chaselev_batched_ops_match_vecdeque_model() {
+    Runner::new().cases(300).run("chaselev-vs-model", |g| {
+        let cap = g.usize(2, 48);
+        check_against_model(g, AnyQueue::ChaseLev(ChaseLevDeque::new(cap)), cap);
+    });
+}
+
+#[test]
+fn contended_word_cost_accounting_is_monotone() {
+    Runner::new().cases(200).run("contended-word-monotone", |g| {
+        let d = DeviceSpec::h100();
+        let mut w = ContendedWord::default();
+        let mut now = 0u64;
+        let mut last_completion = 0u64;
+        for _ in 0..g.usize(1, 60) {
+            // arrival times never run backwards; frequently collide exactly
+            now += if g.chance(0.4) { 0 } else { g.int(1, 2000) as u64 };
+            let cycles = if g.chance(0.5) {
+                w.access(now, &d)
+            } else {
+                w.access_window(now, &d, g.int(1, 600) as u64)
+            };
+            assert!(
+                cycles >= d.atomic,
+                "every access pays at least the uncontended RMW"
+            );
+            let completion = now + cycles;
+            assert!(
+                completion > last_completion,
+                "conflicting RMWs must serialize in strictly increasing time \
+                 ({completion} vs {last_completion})"
+            );
+            last_completion = completion;
+        }
+    });
+}

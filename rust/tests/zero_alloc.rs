@@ -1,0 +1,136 @@
+//! Enforces the hot-path contract: **steady-state segment execution
+//! performs zero heap allocations**.
+//!
+//! A counting global allocator wraps the system allocator; after warming
+//! the pre-sized [`LaneFrame`] and record pool, the test drives well over
+//! 10k segments (recursive, leaf, and post-join continuation shapes)
+//! through the decoded dispatch loop and asserts the allocation counter
+//! never moves. This file holds exactly one test so no sibling test
+//! thread can allocate concurrently and pollute the counter.
+
+use gtap::compiler::compile_default;
+use gtap::coordinator::records::{RecordPool, NO_TASK};
+use gtap::ir::decoded::DecodedModule;
+use gtap::sim::{DeviceSpec, Interp, LaneFrame, Memory, StepResult};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const FIB: &str = r#"
+    #pragma gtap function
+    int fib(int n) {
+        if (n < 2) return n;
+        int a; int b;
+        #pragma gtap task
+        a = fib(n - 1);
+        #pragma gtap task
+        b = fib(n - 2);
+        #pragma gtap taskwait
+        return a + b;
+    }
+"#;
+
+#[test]
+fn steady_state_segment_execution_is_allocation_free() {
+    // ---- setup: allocations are unrestricted here ----------------------
+    let module = compile_default(FIB).unwrap();
+    let decoded = DecodedModule::decode(&module);
+    let words = module.funcs[0].layout.words().max(1);
+    let mut records = RecordPool::new(16, words, 4);
+    let mut mem = Memory::new(module.globals_words());
+    let dev = DeviceSpec::h100();
+    let interp = Interp::new(&decoded, &dev, 1, false);
+    let mut frame = LaneFrame::sized(&decoded);
+    let mut log: Vec<String> = Vec::new();
+
+    let task = records.alloc(0, NO_TASK).unwrap();
+    // materialize two finished children so state-1 continuations can read
+    // their results, as after a real join
+    let off = module.funcs[0].layout.result_offset().unwrap() as usize;
+    for v in [1u64, 0] {
+        let child = records.alloc(0, task).unwrap();
+        records.push_child(task, child).unwrap();
+        records.data_mut(child)[off] = v;
+        records.meta_mut(child).done = true;
+    }
+    records.meta_mut(task).pending_children = 0;
+
+    // segment mix: recursive first segments, leaves, continuations
+    let stream: &[(u16, i64)] = &[(0, 30), (0, 1), (1, 7), (0, 0), (1, 21), (0, 12)];
+    let mut run_segment = |frame: &mut LaneFrame,
+                           records: &mut RecordPool,
+                           mem: &mut Memory,
+                           log: &mut Vec<String>,
+                           state: u16,
+                           n: i64|
+     -> u64 {
+        records.data_mut(task)[0] = n as u64;
+        frame.reset(&decoded, task, 0, state, 0);
+        match interp.run(frame, mem, records, log) {
+            StepResult::Done(o) => o.cycles,
+            other => panic!("unexpected {other:?}"),
+        }
+    };
+
+    // ---- warm-up: first touches may grow buffers -----------------------
+    let mut checksum = 0u64;
+    for &(state, n) in stream {
+        checksum = checksum.wrapping_add(run_segment(
+            &mut frame,
+            &mut records,
+            &mut mem,
+            &mut log,
+            state,
+            n,
+        ));
+    }
+
+    // ---- measured region: >= 12k segments, zero allocations ------------
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    for i in 0..12_000usize {
+        let (state, n) = stream[i % stream.len()];
+        checksum = checksum.wrapping_add(run_segment(
+            &mut frame,
+            &mut records,
+            &mut mem,
+            &mut log,
+            state,
+            n,
+        ));
+    }
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    assert!(checksum > 0, "segments actually executed");
+    assert!(log.is_empty(), "fib prints nothing");
+    assert_eq!(
+        after - before,
+        0,
+        "the decoded dispatch loop must not allocate in steady state"
+    );
+}
