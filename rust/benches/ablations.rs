@@ -2,19 +2,30 @@
 //! out): quantify each mechanism's contribution on Fibonacci and the
 //! synthetic tree.
 //!
+//! Part 1 — single-knob variants against the baseline:
+//!
 //! 1. **Immediate-execution buffer** (§4.3.2 "keeps up to 32 newly
 //!    generated tasks for immediate execution"): disabling routes every
 //!    child through the deque — extra push/pop traffic per task.
 //! 2. **Steal batch size** (Algorithm 1's `max_count_to_pop` on the steal
-//!    side): steal-one (classic Chase–Lev discipline) vs stealing a full
-//!    warp batch.
+//!    side): steal-one (classic Chase–Lev discipline) and steal-half vs
+//!    stealing a full warp batch (`PolicyConfig::steal_amount`).
 //! 3. **Hierarchical locality-aware stealing** (paper §7 future work):
 //!    probe same-SM victims first; intra-SM steals are cheaper (one L2
-//!    slice). Implemented as `GtapConfig::locality_aware_steal`.
+//!    slice). Now `VictimSelect::LocalityFirst`.
+//! 4. **Occupancy-guided stealing**: two-choice victim sampling by queue
+//!    occupancy (`VictimSelect::OccupancyGuided`).
+//! 5. **Queue-select / placement / backoff** variants of the policy layer.
+//!
+//! Part 2 — the policy matrix: every (QueueSelect × VictimSelect ×
+//! StealAmount) combination, so interactions (not just main effects) are
+//! measurable. Placement and backoff stay at their defaults in the matrix
+//! to keep it readable; their main effects are covered in part 1.
 
 use gtap::bench::emit::{markdown_table, write_csv, Series};
 use gtap::bench::runners::{self, Exec};
 use gtap::bench::sweep::{full_scale, measure};
+use gtap::coordinator::{Backoff, Placement, PolicyConfig, QueueSelect, StealAmount, VictimSelect};
 use gtap::util::stats::Summary;
 
 fn main() {
@@ -33,15 +44,38 @@ fn main() {
         ),
         (
             "steal-one",
+            Box::new(|e: Exec| e.steal_amount(StealAmount::Fixed { max: Some(1) })),
+        ),
+        (
+            "steal-half",
+            Box::new(|e: Exec| e.steal_amount(StealAmount::Half)),
+        ),
+        (
+            "locality-aware-steal",
+            Box::new(|e: Exec| e.victim(VictimSelect::LocalityFirst)),
+        ),
+        (
+            "occupancy-steal",
+            Box::new(|e: Exec| e.victim(VictimSelect::OccupancyGuided)),
+        ),
+        (
+            "longest-first-queue",
             Box::new(|mut e: Exec| {
-                e.cfg.steal_max = Some(1);
+                e.cfg.policy.queue_select = QueueSelect::LongestFirst;
                 e
             }),
         ),
         (
-            "locality-aware-steal",
+            "own-queue-placement",
             Box::new(|mut e: Exec| {
-                e.cfg.locality_aware_steal = true;
+                e.cfg.policy.placement = Placement::OwnQueue;
+                e
+            }),
+        ),
+        (
+            "fixed-poll-backoff",
+            Box::new(|mut e: Exec| {
+                e.cfg.policy.backoff = Backoff::FixedPoll;
                 e
             }),
         ),
@@ -82,8 +116,57 @@ fn main() {
             points,
         });
     }
-    println!("\n(variant index: 0=baseline, 1=no-immediate-buffer, 2=steal-one, 3=locality-aware)\n");
+    println!(
+        "\n(variant index: 0=baseline, 1=no-immediate-buffer, 2=steal-one, \
+         3=steal-half, 4=locality-aware, 5=occupancy, 6=longest-first, \
+         7=own-queue, 8=fixed-poll)\n"
+    );
     println!("{}", markdown_table("variant", &series));
     let p = write_csv("ablations", &series).unwrap();
+    println!("wrote {}", p.display());
+
+    // ---- part 2: the policy matrix -------------------------------------
+    // EPAQ (3 queues) so queue selection has something to select between.
+    println!("\n## policy_matrix (fib, EPAQ 3 queues)\n");
+    let combos = PolicyConfig::steal_matrix();
+    let mut matrix: Vec<(f64, Summary)> = vec![];
+    let mut default_median = 0.0;
+    for (i, p) in combos.iter().enumerate() {
+        let s = measure(|seed| {
+            runners::run_fib(
+                &Exec::gpu_thread(grid, 32).queues(3).seed(seed).policy(*p),
+                fib_n,
+                10,
+                true,
+            )
+            .unwrap()
+            .seconds
+        });
+        if *p == PolicyConfig::default() {
+            default_median = s.median;
+        }
+        println!("  {:28} {:.4e} s", p.label(), s.median);
+        matrix.push((i as f64, s));
+    }
+    if default_median > 0.0 {
+        let best = matrix
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .1.median.total_cmp(&b.1 .1.median))
+            .unwrap();
+        println!(
+            "\n  best combo: {} ({:+.1}% vs default)",
+            combos[best.0].label(),
+            100.0 * (best.1 .1.median - default_median) / default_median
+        );
+    }
+    let p = write_csv(
+        "ablations_policy_matrix",
+        &[Series {
+            label: "fib-epaq3".to_string(),
+            points: matrix,
+        }],
+    )
+    .unwrap();
     println!("wrote {}", p.display());
 }

@@ -3,7 +3,8 @@
 //! return the measurement. Shared by every bench target and example.
 
 use crate::coordinator::{
-    Granularity, GtapConfig, PayloadEngine, RunStats, SchedulerKind, Session,
+    Granularity, GtapConfig, PayloadEngine, PolicyConfig, RunStats, SchedulerKind, Session,
+    StealAmount, VictimSelect,
 };
 use crate::ir::types::Value;
 use crate::sim::profile::Profiler;
@@ -106,6 +107,24 @@ impl Exec {
     pub fn queue_capacity(mut self, cap: usize) -> Exec {
         self.cfg.max_tasks_per_warp = cap;
         self.cfg.max_tasks_per_block = cap;
+        self
+    }
+
+    /// Replace the whole scheduling-policy combination.
+    pub fn policy(mut self, p: PolicyConfig) -> Exec {
+        self.cfg.policy = p;
+        self
+    }
+
+    /// Victim-selection policy (ex-`locality_aware_steal`).
+    pub fn victim(mut self, v: VictimSelect) -> Exec {
+        self.cfg.policy.victim_select = v;
+        self
+    }
+
+    /// Steal-amount policy (ex-`steal_max`).
+    pub fn steal_amount(mut self, s: StealAmount) -> Exec {
+        self.cfg.policy.steal_amount = s;
         self
     }
 }

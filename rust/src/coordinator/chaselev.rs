@@ -46,6 +46,10 @@ impl ChaseLevDeque {
         self.len() == 0
     }
 
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
     /// Owner push of one element: store + bottom bump (no CAS), fence.
     pub fn push1(&mut self, _now: u64, id: TaskId, dev: &DeviceSpec) -> Option<QueueOp> {
         if self.len() == self.capacity {

@@ -6,6 +6,14 @@
 //! semantics. `GTAP_ASSUME_NO_TASKWAIT` keeps its meaning: join metadata is
 //! omitted from task records, which is only safe (and is checked!) for
 //! programs that never execute `taskwait`.
+//!
+//! Scheduling *decisions* (queue selection, victim selection, steal
+//! granularity, child placement, idle backoff) live in the composable
+//! [`PolicyConfig`] carried by `GtapConfig::policy`; the queue
+//! *organization* (work stealing / global / sequential Chase–Lev) remains
+//! the [`SchedulerKind`] ablation selector.
+
+use super::policy::PolicyConfig;
 
 /// Worker granularity (§4.1): a task runs on one thread (a warp executes up
 /// to 32 tasks in SIMT lockstep) or cooperatively on one thread block.
@@ -64,13 +72,13 @@ pub struct GtapConfig {
     /// execution instead of enqueuing them (§4.3.2). Ablation knob:
     /// disabling routes every child through the deque.
     pub immediate_buffer: bool,
-    /// Max tasks claimed per steal (None = a full warp batch, the paper's
-    /// design; Some(1) = steal-one, the classic Chase–Lev discipline).
-    pub steal_max: Option<usize>,
-    /// Hierarchical locality-aware stealing (paper §7 future work):
-    /// probe same-SM victims first; intra-SM steals avoid cross-SM L2
-    /// traffic and are charged at 60% of the remote cost.
-    pub locality_aware_steal: bool,
+    /// The composable scheduling-policy layer: queue selection, victim
+    /// selection, steal amount, child placement, idle backoff. The default
+    /// combination reproduces the paper's design (and the pre-refactor
+    /// scheduler) exactly; the former `steal_max` and
+    /// `locality_aware_steal` knobs are `policy.steal_amount` and
+    /// `policy.victim_select` now.
+    pub policy: PolicyConfig,
 }
 
 impl Default for GtapConfig {
@@ -88,13 +96,21 @@ impl Default for GtapConfig {
             scheduler: SchedulerKind::WorkStealing,
             seed: 0x6A7A9,
             immediate_buffer: true,
-            steal_max: None,
-            locality_aware_steal: false,
+            policy: PolicyConfig::default(),
         }
     }
 }
 
 impl GtapConfig {
+    /// Capacity floor (in tasks) for the single shared queue of the
+    /// global-queue baseline. FIFO order expands the task tree
+    /// breadth-first, so the shared queue must hold entire frontiers —
+    /// which can dwarf `workers × queue_capacity()` when few workers run a
+    /// wide tree. 2^20 holds the widest frontier of any benchmark in the
+    /// suite at paper scale; exceeding it is reported as the Table-1
+    /// feasibility error, like any other pool exhaustion.
+    pub const GLOBAL_QUEUE_CAPACITY_FLOOR: usize = 1 << 20;
+
     /// Total CUDA threads launched.
     pub fn total_threads(&self) -> usize {
         self.grid_size * self.block_size

@@ -41,6 +41,10 @@ impl GlobalQueue {
         self.len() == 0
     }
 
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
     /// Push a batch: reserve slots by CAS on `tail`, store, fence-publish.
     pub fn push_batch(&mut self, now: u64, ids: &[TaskId], dev: &DeviceSpec) -> Option<QueueOp> {
         if self.len() + ids.len() > self.capacity {

@@ -12,14 +12,20 @@
 //! * [`chaselev`] — the element-at-a-time Chase–Lev deque used as the
 //!   §6.1.2 ablation baseline.
 //! * [`globalq`] — the single shared queue of the §6.1.1 ablation.
-//! * [`policy`] — the scheduler-policy abstraction selecting among them.
+//! * [`policy`] — the composable scheduling-policy layer: the `QueueSet`
+//!   organization abstraction plus the five enum-dispatched decision
+//!   policies (queue select, victim select, steal amount, placement,
+//!   backoff) bundled in `PolicyConfig`.
 //! * [`clock`] — the indexed worker-clock heap the discrete-event loop
 //!   advances in place (one sift per iteration, no allocation).
 //! * [`join`] — join counters, continuation re-enqueue, child-result
 //!   plumbing (§4.2).
 //! * [`scheduler`] — the persistent-kernel loops for thread-level and
-//!   block-level workers, EPAQ queue selection (§4.4), and termination
-//!   detection.
+//!   block-level workers: a thin driver over the policy layer, plus
+//!   termination detection.
+//! * `scheduler_ref` — the pinned pre-refactor monolithic scheduler
+//!   (doc-hidden; not supported API), kept as the golden reference for
+//!   the policy-equivalence contract (`rust/tests/policy_golden.rs`).
 //! * [`session`] — the host-facing API: compile a GTaP-C program, size the
 //!   pools, spawn the root task, run to quiescence, read results
 //!   (the `gtap_initialize()` / kernel launch / `gtap_finalize()` flow of
@@ -34,8 +40,13 @@ pub mod policy;
 pub mod queue;
 pub mod records;
 pub mod scheduler;
+#[doc(hidden)]
+pub mod scheduler_ref;
 pub mod session;
 
 pub use config::{Granularity, GtapConfig, SchedulerKind};
+pub use policy::{
+    Backoff, Placement, PolicyConfig, QueueSelect, QueueSet, StealAmount, VictimSelect,
+};
 pub use scheduler::{PayloadEngine, PayloadReq, RunStats, Scheduler};
 pub use session::Session;

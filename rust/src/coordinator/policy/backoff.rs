@@ -1,0 +1,93 @@
+//! **Backoff** — how an idle worker paces its polling. Real persistent
+//! kernels poll continuously; the simulator throttles idle wake-ups to keep
+//! the event count finite, and this policy decides the throttle shape.
+
+use crate::sim::config::DeviceSpec;
+
+/// Idle backoff growth cap in cycles. With exponential backoff the cap is
+/// the larger of this constant and elapsed/32, so a worker's wake-up
+/// latency is bounded by ~3% of the run's elapsed time (a documented,
+/// bounded distortion).
+pub const MAX_BACKOFF: u64 = 4096;
+
+/// Idle-wait schedule between consecutive empty acquire phases.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backoff {
+    /// Double the wait each consecutive miss, clamped to
+    /// `[4 × loop_overhead, max(MAX_BACKOFF, elapsed / 32)]` — the
+    /// pre-refactor behavior.
+    #[default]
+    ExponentialCapped,
+    /// Poll at the fixed floor interval (`4 × loop_overhead`). Closest to
+    /// what the hardware actually does; ablation knob — simulated event
+    /// counts (and host wallclock) grow accordingly on idle-heavy runs.
+    FixedPoll,
+}
+
+impl Backoff {
+    pub const ALL: [Backoff; 2] = [Backoff::ExponentialCapped, Backoff::FixedPoll];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backoff::ExponentialCapped => "exp",
+            Backoff::FixedPoll => "fixed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Backoff, String> {
+        match s {
+            "exp" | "exponential" => Ok(Backoff::ExponentialCapped),
+            "fixed" | "fixed-poll" => Ok(Backoff::FixedPoll),
+            other => Err(format!("unknown backoff policy {other:?} (exp|fixed)")),
+        }
+    }
+
+    /// Next idle wait after a miss at simulated time `now`, given the
+    /// previous wait (0 right after useful work).
+    #[inline]
+    pub fn next(&self, prev: u64, now: u64, dev: &DeviceSpec) -> u64 {
+        let floor = dev.loop_overhead * 4;
+        match self {
+            Backoff::ExponentialCapped => {
+                let cap = MAX_BACKOFF.max(now.saturating_sub(dev.startup) / 32);
+                (prev * 2).clamp(floor, cap)
+            }
+            Backoff::FixedPoll => floor,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponential_doubles_from_floor_and_caps() {
+        let d = DeviceSpec::h100();
+        let floor = d.loop_overhead * 4;
+        let mut w = 0;
+        w = Backoff::ExponentialCapped.next(w, d.startup, &d);
+        assert_eq!(w, floor);
+        let mut prev = w;
+        for _ in 0..20 {
+            w = Backoff::ExponentialCapped.next(w, d.startup, &d);
+            assert!(w >= prev);
+            prev = w;
+        }
+        assert_eq!(w, MAX_BACKOFF, "elapsed = 0 caps at MAX_BACKOFF");
+        // deep into a long run the cap scales with elapsed time
+        let late = Backoff::ExponentialCapped.next(u64::MAX / 4, d.startup + 32_000_000, &d);
+        assert_eq!(late, 1_000_000);
+    }
+
+    #[test]
+    fn fixed_poll_never_grows() {
+        let d = DeviceSpec::h100();
+        let floor = d.loop_overhead * 4;
+        let mut w = 0;
+        for _ in 0..10 {
+            w = Backoff::FixedPoll.next(w, 1 << 40, &d);
+            assert_eq!(w, floor);
+        }
+    }
+}

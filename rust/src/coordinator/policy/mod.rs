@@ -1,0 +1,171 @@
+//! The composable scheduling-policy layer.
+//!
+//! GTaP's headline results (§4.4, §6.1, Fig. 3/4/10) are *scheduling-policy*
+//! ablations: work stealing vs. a global queue, EPAQ queue partitioning,
+//! batched vs. sequential deque operations. This module decomposes every
+//! such decision the persistent-kernel scheduler makes into five small,
+//! **enum-dispatched** components — no `dyn` on the hot path, no allocation,
+//! each variant a handful of lines — so new policies are one enum variant
+//! plus a config spelling, not a scheduler rewrite:
+//!
+//! | Component       | Decision                                | Variants |
+//! |-----------------|-----------------------------------------|----------|
+//! | [`QueueSelect`] | which own EPAQ queue to pop next        | round-robin · sticky · longest-first |
+//! | [`VictimSelect`]| whose queue to steal from               | uniform-random · same-SM-locality-first · occupancy-guided |
+//! | [`StealAmount`] | how much one successful steal claims    | fixed batch (incl. steal-one) · steal-half |
+//! | [`Placement`]   | where spawned children are enqueued     | EPAQ index · own cursor queue · EPAQ + round-robin spill |
+//! | [`Backoff`]     | how idle workers pace their polling     | exponential-capped · fixed-poll |
+//!
+//! [`PolicyConfig`] bundles one choice per axis and lives on
+//! `GtapConfig::policy`; every component parses from the CLI/env surface
+//! (`--queue-select` / `GTAP_QUEUE_SELECT`, …) without serde. The *queue
+//! organization* itself ([`QueueSet`]: batched work-stealing deques, the
+//! single global queue, sequential Chase–Lev) remains the §6.1 ablation
+//! selected by `GtapConfig::scheduler`.
+//!
+//! **Equivalence contract:** the default `PolicyConfig` reproduces the
+//! pre-refactor monolithic scheduler bit-for-bit — same deterministic
+//! `(time, worker)` event order, same `RunStats`, same PRNG draw sequence.
+//! `rust/tests/policy_golden.rs` pins this against the verbatim pre-refactor
+//! iteration loop kept in `coordinator::scheduler_ref`, and
+//! `rust/tests/zero_alloc.rs` keeps the steady-state zero-allocation
+//! contract honest.
+
+mod backoff;
+mod placement;
+mod queue_select;
+mod queueset;
+mod steal_amount;
+mod victim_select;
+
+pub use backoff::{Backoff, MAX_BACKOFF};
+pub use placement::Placement;
+pub use queue_select::QueueSelect;
+pub use queueset::QueueSet;
+pub use steal_amount::StealAmount;
+pub use victim_select::{VictimSelect, STEAL_TRIES};
+
+/// One scheduling decision per axis. `Copy`, compared and constructed in
+/// plain code; the scheduler copies it out of the config once per iteration
+/// and dispatches by `match` — the compiler sees through the enums and the
+/// default combination compiles to the same straight-line code as the old
+/// monolith.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PolicyConfig {
+    pub queue_select: QueueSelect,
+    pub victim_select: VictimSelect,
+    pub steal_amount: StealAmount,
+    pub placement: Placement,
+    pub backoff: Backoff,
+}
+
+impl PolicyConfig {
+    /// Parse the policy environment surface: `GTAP_QUEUE_SELECT`,
+    /// `GTAP_VICTIM_SELECT`, `GTAP_STEAL_AMOUNT`, `GTAP_PLACEMENT`,
+    /// `GTAP_BACKOFF`. Unset variables keep the (paper-default) variant;
+    /// a set-but-invalid value is a hard error, not a silent default.
+    pub fn from_env() -> Result<PolicyConfig, String> {
+        let mut p = PolicyConfig::default();
+        if let Ok(v) = std::env::var("GTAP_QUEUE_SELECT") {
+            p.queue_select = QueueSelect::parse(&v)?;
+        }
+        if let Ok(v) = std::env::var("GTAP_VICTIM_SELECT") {
+            p.victim_select = VictimSelect::parse(&v)?;
+        }
+        if let Ok(v) = std::env::var("GTAP_STEAL_AMOUNT") {
+            p.steal_amount = StealAmount::parse(&v)?;
+        }
+        if let Ok(v) = std::env::var("GTAP_PLACEMENT") {
+            p.placement = Placement::parse(&v)?;
+        }
+        if let Ok(v) = std::env::var("GTAP_BACKOFF") {
+            p.backoff = Backoff::parse(&v)?;
+        }
+        Ok(p)
+    }
+
+    /// Compact `qs/vs/sa/pl/bo` label for bench tables and sweep output.
+    /// Every component spelling parses back through the CLI/env surface.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}/{}/{}",
+            self.queue_select.name(),
+            self.victim_select.name(),
+            self.steal_amount.spelling(),
+            self.placement.name(),
+            self.backoff.name()
+        )
+    }
+
+    /// Every (QueueSelect × VictimSelect × StealAmount) combination with
+    /// placement and backoff at their defaults — the canonical sweep matrix
+    /// shared by `benches/ablations.rs` and `rust/tests/policy_matrix.rs`.
+    pub fn steal_matrix() -> Vec<PolicyConfig> {
+        let mut combos = vec![];
+        for qs in QueueSelect::ALL {
+            for vs in VictimSelect::ALL {
+                for sa in StealAmount::ALL {
+                    combos.push(PolicyConfig {
+                        queue_select: qs,
+                        victim_select: vs,
+                        steal_amount: sa,
+                        ..Default::default()
+                    });
+                }
+            }
+        }
+        combos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_is_the_paper_design() {
+        let p = PolicyConfig::default();
+        assert_eq!(p.queue_select, QueueSelect::RoundRobin);
+        assert_eq!(p.victim_select, VictimSelect::UniformRandom);
+        assert_eq!(p.steal_amount, StealAmount::Fixed { max: None });
+        assert_eq!(p.placement, Placement::EpaqIndex);
+        assert_eq!(p.backoff, Backoff::ExponentialCapped);
+    }
+
+    #[test]
+    fn every_variant_round_trips_through_its_name() {
+        for qs in QueueSelect::ALL {
+            assert_eq!(QueueSelect::parse(qs.name()).unwrap(), qs);
+        }
+        for vs in VictimSelect::ALL {
+            assert_eq!(VictimSelect::parse(vs.name()).unwrap(), vs);
+        }
+        for pl in Placement::ALL {
+            assert_eq!(Placement::parse(pl.name()).unwrap(), pl);
+        }
+        for bo in Backoff::ALL {
+            assert_eq!(Backoff::parse(bo.name()).unwrap(), bo);
+        }
+        for sa in StealAmount::ALL {
+            assert_eq!(StealAmount::parse(&sa.spelling()).unwrap(), sa);
+        }
+        // general fixed caps keep their N through the spelling
+        let fixed4 = StealAmount::Fixed { max: Some(4) };
+        assert_eq!(fixed4.spelling(), "fixed:4");
+        assert_eq!(StealAmount::parse(&fixed4.spelling()).unwrap(), fixed4);
+    }
+
+    #[test]
+    fn invalid_spellings_are_rejected() {
+        assert!(QueueSelect::parse("zigzag").is_err());
+        assert!(VictimSelect::parse("psychic").is_err());
+        assert!(StealAmount::parse("all").is_err());
+        assert!(Placement::parse("elsewhere").is_err());
+        assert!(Backoff::parse("never").is_err());
+    }
+
+    #[test]
+    fn label_is_compact_and_complete() {
+        assert_eq!(PolicyConfig::default().label(), "rr/uniform/batch/epaq/exp");
+    }
+}

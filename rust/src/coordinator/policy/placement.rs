@@ -1,0 +1,94 @@
+//! **Placement** — which of the spawner's queues a new child task is
+//! enqueued on. EPAQ (§4.4) classifies tasks by expected execution path at
+//! the spawn site; placement decides whether that classification, the
+//! worker's current affinity, or overflow pressure wins.
+
+/// Child-enqueue target selection.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Placement {
+    /// The spawn site's EPAQ queue index, clamped to the configured queue
+    /// count (the paper's design and the pre-refactor behavior). A full
+    /// queue is a hard feasibility error (Table 1).
+    #[default]
+    EpaqIndex,
+    /// Ignore the EPAQ classification: every child goes to the worker's
+    /// current cursor queue. Maximizes owner-pop locality, forfeits the
+    /// divergence benefit of path-partitioned queues.
+    OwnQueue,
+    /// EPAQ index, but an overflowing batch is split across the queue
+    /// classes by free space (target class first, then round-robin)
+    /// instead of failing — trades classification purity for feasibility
+    /// under tight `GTAP_MAX_TASKS_PER_*` budgets. Covers spawned children
+    /// and continuation re-enqueues alike.
+    RoundRobinSpill,
+}
+
+impl Placement {
+    pub const ALL: [Placement; 3] = [
+        Placement::EpaqIndex,
+        Placement::OwnQueue,
+        Placement::RoundRobinSpill,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::EpaqIndex => "epaq",
+            Placement::OwnQueue => "own",
+            Placement::RoundRobinSpill => "rr-spill",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Placement, String> {
+        match s {
+            "epaq" => Ok(Placement::EpaqIndex),
+            "own" | "own-queue" => Ok(Placement::OwnQueue),
+            "rr-spill" | "spill" => Ok(Placement::RoundRobinSpill),
+            other => Err(format!(
+                "unknown placement policy {other:?} (epaq|own|rr-spill)"
+            )),
+        }
+    }
+
+    /// Queue index for a child spawned with EPAQ class `spawn_queue` by a
+    /// worker whose cursor sits at `cursor`.
+    #[inline]
+    pub fn place(&self, spawn_queue: usize, cursor: usize, num_queues: usize) -> usize {
+        match self {
+            Placement::EpaqIndex | Placement::RoundRobinSpill => spawn_queue.min(num_queues - 1),
+            Placement::OwnQueue => cursor,
+        }
+    }
+
+    /// Whether a full target queue spills to the next index (cyclically)
+    /// instead of failing the run.
+    #[inline]
+    pub fn spills(&self) -> bool {
+        matches!(self, Placement::RoundRobinSpill)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epaq_index_clamps() {
+        assert_eq!(Placement::EpaqIndex.place(0, 1, 3), 0);
+        assert_eq!(Placement::EpaqIndex.place(2, 1, 3), 2);
+        assert_eq!(Placement::EpaqIndex.place(99, 1, 3), 2);
+        assert_eq!(Placement::RoundRobinSpill.place(99, 1, 3), 2);
+    }
+
+    #[test]
+    fn own_queue_follows_cursor() {
+        assert_eq!(Placement::OwnQueue.place(2, 1, 3), 1);
+        assert_eq!(Placement::OwnQueue.place(0, 0, 1), 0);
+    }
+
+    #[test]
+    fn only_spill_spills() {
+        assert!(!Placement::EpaqIndex.spills());
+        assert!(!Placement::OwnQueue.spills());
+        assert!(Placement::RoundRobinSpill.spills());
+    }
+}

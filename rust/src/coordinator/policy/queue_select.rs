@@ -1,0 +1,165 @@
+//! **QueueSelect** — which of the worker's own EPAQ queues to pop next
+//! (§4.4). With `GTAP_NUM_QUEUES = 1` every variant degenerates to "the
+//! queue"; the axis only matters when EPAQ partitions tasks by class.
+
+use super::queueset::QueueSet;
+use std::cmp::Reverse;
+
+/// Own-queue probe order for one acquire phase. The worker keeps a cursor
+/// (`rr_queue`); probes walk cyclically from a policy-chosen start, and a
+/// successful pop may move the cursor.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QueueSelect {
+    /// Start at the cursor, walk cyclically; a hit moves the cursor to the
+    /// hit queue. The paper's design (§4.4) and the pre-refactor behavior.
+    #[default]
+    RoundRobin,
+    /// Same probe order, but the cursor never moves behind the worker's
+    /// back: neither a hit in a neighbour class nor a failed steal attempt
+    /// rotates it, so the worker stays loyal to its last *chosen* class
+    /// (spawn placement keeps feeding it).
+    Sticky,
+    /// Probe the longest own queue first (ties to the lowest index), then
+    /// cyclically. Drains backlog hot-spots before they attract thieves;
+    /// the owner reads its own counts from shared memory, so the scan is
+    /// free in the cost model.
+    LongestFirst,
+}
+
+impl QueueSelect {
+    pub const ALL: [QueueSelect; 3] = [
+        QueueSelect::RoundRobin,
+        QueueSelect::Sticky,
+        QueueSelect::LongestFirst,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueueSelect::RoundRobin => "rr",
+            QueueSelect::Sticky => "sticky",
+            QueueSelect::LongestFirst => "longest",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<QueueSelect, String> {
+        match s {
+            "rr" | "round-robin" => Ok(QueueSelect::RoundRobin),
+            "sticky" => Ok(QueueSelect::Sticky),
+            "longest" | "longest-first" => Ok(QueueSelect::LongestFirst),
+            other => Err(format!(
+                "unknown queue-select policy {other:?} (rr|sticky|longest)"
+            )),
+        }
+    }
+
+    /// First queue index to probe; probe `k` is `(start + k) % num_queues`.
+    #[inline]
+    pub fn start(
+        &self,
+        worker: usize,
+        cursor: usize,
+        num_queues: usize,
+        queues: &QueueSet,
+    ) -> usize {
+        match self {
+            QueueSelect::RoundRobin | QueueSelect::Sticky => cursor,
+            QueueSelect::LongestFirst => (0..num_queues)
+                .max_by_key(|&q| (queues.len_of(worker, q), Reverse(q)))
+                .unwrap_or(0),
+        }
+    }
+
+    /// Record a successful pop from `hit` in the cursor.
+    #[inline]
+    pub fn commit(&self, cursor: &mut usize, hit: usize) {
+        match self {
+            QueueSelect::RoundRobin | QueueSelect::LongestFirst => *cursor = hit,
+            QueueSelect::Sticky => {}
+        }
+    }
+
+    /// A steal attempt against queue class `cursor` found nothing. The
+    /// rotating policies move the cursor so the next attempt probes
+    /// another class; `Sticky` keeps its committed class — the cursor is
+    /// policy state, and only the policy mutates it.
+    #[inline]
+    pub fn on_steal_miss(&self, cursor: &mut usize, num_queues: usize) {
+        match self {
+            QueueSelect::RoundRobin | QueueSelect::LongestFirst => {
+                if num_queues > 1 {
+                    *cursor = (*cursor + 1) % num_queues;
+                }
+            }
+            QueueSelect::Sticky => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{GtapConfig, SchedulerKind};
+    use crate::sim::config::DeviceSpec;
+
+    fn qs3() -> QueueSet {
+        QueueSet::for_config(&GtapConfig {
+            grid_size: 1,
+            block_size: 32,
+            num_queues: 3,
+            scheduler: SchedulerKind::WorkStealing,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn round_robin_and_sticky_start_at_cursor() {
+        let q = qs3();
+        for cursor in 0..3 {
+            assert_eq!(QueueSelect::RoundRobin.start(0, cursor, 3, &q), cursor);
+            assert_eq!(QueueSelect::Sticky.start(0, cursor, 3, &q), cursor);
+        }
+    }
+
+    #[test]
+    fn longest_first_prefers_fullest_then_lowest_index() {
+        let d = DeviceSpec::h100();
+        let mut q = qs3();
+        q.push(0, 2, 0, &[1, 2, 3], &d).unwrap();
+        q.push(0, 1, 0, &[4], &d).unwrap();
+        assert_eq!(QueueSelect::LongestFirst.start(0, 0, 3, &q), 2);
+        // tie between 1 and 2 after draining queue 2 to one element
+        let mut out = vec![];
+        q.pop(0, 2, 0, 2, &mut out, &d);
+        assert_eq!(QueueSelect::LongestFirst.start(0, 0, 3, &q), 1);
+        // all empty: falls back to queue 0
+        q.pop(0, 2, 0, 32, &mut out, &d);
+        q.pop(0, 1, 0, 32, &mut out, &d);
+        assert_eq!(QueueSelect::LongestFirst.start(0, 0, 3, &q), 0);
+    }
+
+    #[test]
+    fn cursor_commit_semantics() {
+        let mut cursor = 0;
+        QueueSelect::RoundRobin.commit(&mut cursor, 2);
+        assert_eq!(cursor, 2);
+        QueueSelect::Sticky.commit(&mut cursor, 1);
+        assert_eq!(cursor, 2, "sticky keeps its cursor");
+        QueueSelect::LongestFirst.commit(&mut cursor, 1);
+        assert_eq!(cursor, 1);
+    }
+
+    #[test]
+    fn steal_miss_rotation_semantics() {
+        let mut cursor = 2;
+        QueueSelect::RoundRobin.on_steal_miss(&mut cursor, 3);
+        assert_eq!(cursor, 0, "round-robin wraps to the next class");
+        QueueSelect::Sticky.on_steal_miss(&mut cursor, 3);
+        assert_eq!(cursor, 0, "sticky never rotates on a miss");
+        QueueSelect::LongestFirst.on_steal_miss(&mut cursor, 3);
+        assert_eq!(cursor, 1);
+        // single queue: nothing to rotate to
+        let mut one = 0;
+        QueueSelect::RoundRobin.on_steal_miss(&mut one, 1);
+        assert_eq!(one, 0);
+    }
+}

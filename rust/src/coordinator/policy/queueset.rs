@@ -1,22 +1,40 @@
-//! Scheduler-policy dispatch: the three queue organizations of §6.1.
+//! [`QueueSet`] — the queue *organization* axis: the three §6.1 layouts.
 //!
-//! [`QueueSet`] presents a uniform push/pop/steal interface over
-//! (i) per-worker batched work-stealing deques with EPAQ multi-queue
-//! support (the paper's design), (ii) the single global queue, and
-//! (iii) per-worker sequential Chase–Lev deques — so the persistent-kernel
-//! scheduler is policy-agnostic and the Fig. 3/4 ablations toggle one enum.
+//! Presents a uniform push/pop/steal interface over (i) per-worker batched
+//! work-stealing deques with EPAQ multi-queue support (the paper's design),
+//! (ii) the single global queue, and (iii) per-worker sequential Chase–Lev
+//! deques — so the persistent-kernel scheduler is organization-agnostic and
+//! the Fig. 3/4 ablations toggle one enum. The *decision* policies (which
+//! queue, which victim, how much, where, how long) live in the sibling
+//! modules of `coordinator::policy`.
 
-use super::chaselev::ChaseLevDeque;
-use super::config::{GtapConfig, SchedulerKind};
-use super::globalq::GlobalQueue;
-use super::queue::{QueueOp, TaskQueue};
-use super::records::TaskId;
+use crate::coordinator::chaselev::ChaseLevDeque;
+use crate::coordinator::config::{GtapConfig, SchedulerKind};
+use crate::coordinator::globalq::GlobalQueue;
+use crate::coordinator::queue::{QueueOp, TaskQueue};
+use crate::coordinator::records::TaskId;
 use crate::sim::config::DeviceSpec;
+
+/// Flat index of `(worker, qidx)` into a per-worker × per-queue-class slab —
+/// the one place the `worker * num_queues + qidx` layout is spelled out.
+#[inline]
+fn slot(worker: usize, qidx: usize, num_queues: usize, n_slots: usize) -> usize {
+    debug_assert!(
+        qidx < num_queues,
+        "queue index {qidx} out of range ({num_queues} queues)"
+    );
+    let slot = worker * num_queues + qidx;
+    debug_assert!(
+        slot < n_slots,
+        "worker {worker} out of range ({n_slots} slots / {num_queues} queues)"
+    );
+    slot
+}
 
 /// All task queues of a run.
 pub enum QueueSet {
-    /// `queues[worker * num_queues + qidx]` (EPAQ: one deque per queue
-    /// index per worker; §4.4).
+    /// One deque per queue index per worker (EPAQ; §4.4), laid out
+    /// `worker * num_queues + qidx` (one shared private `slot` helper).
     WorkStealing {
         queues: Vec<TaskQueue>,
         num_queues: usize,
@@ -42,8 +60,10 @@ impl QueueSet {
             SchedulerKind::GlobalQueue => {
                 // FIFO order expands the task tree breadth-first, so the
                 // shared queue must hold whole frontiers: give it the
-                // aggregate distributed capacity with a generous floor.
-                QueueSet::Global(GlobalQueue::new((workers * cap).max(1 << 20)))
+                // aggregate distributed capacity with a documented floor.
+                QueueSet::Global(GlobalQueue::new(
+                    (workers * cap).max(GtapConfig::GLOBAL_QUEUE_CAPACITY_FLOOR),
+                ))
             }
             SchedulerKind::SequentialChaseLev => QueueSet::SeqChaseLev {
                 queues: (0..workers * cfg.num_queues)
@@ -54,7 +74,9 @@ impl QueueSet {
         }
     }
 
-    /// Whether stealing is meaningful for this policy.
+    /// Whether stealing is meaningful for this organization. The scheduler
+    /// must not enter the steal path (nor count `steal_attempts`) when this
+    /// is false — a global queue has no owner to steal from.
     pub fn supports_steal(&self) -> bool {
         !matches!(self, QueueSet::Global(_))
     }
@@ -71,11 +93,13 @@ impl QueueSet {
     ) -> QueueOp {
         match self {
             QueueSet::WorkStealing { queues, num_queues } => {
-                queues[worker * *num_queues + qidx].pop_batch(now, max, out, dev)
+                let i = slot(worker, qidx, *num_queues, queues.len());
+                queues[i].pop_batch(now, max, out, dev)
             }
             QueueSet::Global(q) => q.pop_batch(now, max, out, dev),
             QueueSet::SeqChaseLev { queues, num_queues } => {
-                queues[worker * *num_queues + qidx].pop_batch(now, max, out, dev)
+                let i = slot(worker, qidx, *num_queues, queues.len());
+                queues[i].pop_batch(now, max, out, dev)
             }
         }
     }
@@ -92,14 +116,16 @@ impl QueueSet {
     ) -> QueueOp {
         match self {
             QueueSet::WorkStealing { queues, num_queues } => {
-                queues[victim * *num_queues + qidx].steal_batch(now, max, out, dev)
+                let i = slot(victim, qidx, *num_queues, queues.len());
+                queues[i].steal_batch(now, max, out, dev)
             }
             QueueSet::Global(_) => QueueOp {
                 taken: 0,
                 cycles: 0,
             },
             QueueSet::SeqChaseLev { queues, num_queues } => {
-                queues[victim * *num_queues + qidx].steal_batch(now, max, out, dev)
+                let i = slot(victim, qidx, *num_queues, queues.len());
+                queues[i].steal_batch(now, max, out, dev)
             }
         }
     }
@@ -115,24 +141,43 @@ impl QueueSet {
     ) -> Option<QueueOp> {
         match self {
             QueueSet::WorkStealing { queues, num_queues } => {
-                queues[worker * *num_queues + qidx].push_batch(now, ids, dev)
+                let i = slot(worker, qidx, *num_queues, queues.len());
+                queues[i].push_batch(now, ids, dev)
             }
             QueueSet::Global(q) => q.push_batch(now, ids, dev),
             QueueSet::SeqChaseLev { queues, num_queues } => {
-                queues[worker * *num_queues + qidx].push_batch(now, ids, dev)
+                let i = slot(worker, qidx, *num_queues, queues.len());
+                queues[i].push_batch(now, ids, dev)
             }
         }
     }
 
-    /// Queued tasks in `worker`'s queue `qidx` (victim preselection).
+    /// Queued tasks in `worker`'s queue `qidx` (victim preselection and the
+    /// occupancy-guided / longest-first / steal-half policies).
     pub fn len_of(&self, worker: usize, qidx: usize) -> usize {
         match self {
             QueueSet::WorkStealing { queues, num_queues } => {
-                queues[worker * num_queues + qidx].len()
+                queues[slot(worker, qidx, *num_queues, queues.len())].len()
             }
             QueueSet::Global(q) => q.len(),
             QueueSet::SeqChaseLev { queues, num_queues } => {
-                queues[worker * num_queues + qidx].len()
+                queues[slot(worker, qidx, *num_queues, queues.len())].len()
+            }
+        }
+    }
+
+    /// Free slots in `worker`'s queue `qidx` (overflow-spill planning:
+    /// how much of a batch this queue can still accept).
+    pub fn free_of(&self, worker: usize, qidx: usize) -> usize {
+        match self {
+            QueueSet::WorkStealing { queues, num_queues } => {
+                let q = &queues[slot(worker, qidx, *num_queues, queues.len())];
+                q.capacity() - q.len()
+            }
+            QueueSet::Global(q) => q.capacity() - q.len(),
+            QueueSet::SeqChaseLev { queues, num_queues } => {
+                let q = &queues[slot(worker, qidx, *num_queues, queues.len())];
+                q.capacity() - q.len()
             }
         }
     }
@@ -209,5 +254,40 @@ mod tests {
         qs.push(0, 0, 0, &[1], &d).unwrap();
         qs.push(1, 1, 0, &[2, 3], &d).unwrap();
         assert_eq!(qs.total_len(), 3);
+    }
+
+    #[test]
+    fn free_of_tracks_remaining_capacity() {
+        let d = DeviceSpec::h100();
+        let mut c = cfg(SchedulerKind::WorkStealing, 2);
+        c.max_tasks_per_warp = 8;
+        let mut qs = QueueSet::for_config(&c);
+        assert_eq!(qs.free_of(0, 0), 8);
+        qs.push(0, 0, 0, &[1, 2, 3], &d).unwrap();
+        assert_eq!(qs.free_of(0, 0), 5);
+        assert_eq!(qs.free_of(0, 1), 8, "sibling class unaffected");
+        let mut out = vec![];
+        qs.pop(0, 0, 0, 2, &mut out, &d);
+        assert_eq!(qs.free_of(0, 0), 7);
+    }
+
+    #[test]
+    fn global_queue_capacity_floor_applies() {
+        // tiny per-worker capacity still yields the breadth-first floor
+        let mut c = cfg(SchedulerKind::GlobalQueue, 1);
+        c.max_tasks_per_warp = 4;
+        let d = DeviceSpec::h100();
+        let mut qs = QueueSet::for_config(&c);
+        // far beyond workers * cap = 8, far below the floor
+        let ids: Vec<_> = (0..10_000).collect();
+        assert!(qs.push(0, 0, 0, &ids, &d).is_some());
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_queue_index_asserts() {
+        let qs = QueueSet::for_config(&cfg(SchedulerKind::WorkStealing, 2));
+        let _ = qs.len_of(0, 5);
     }
 }

@@ -1,0 +1,133 @@
+//! **StealAmount** — how many tasks one successful steal claims.
+//!
+//! Acquisition granularity is a first-class tunable (cf. worksharing-task
+//! runtimes): steal-one is the classic Chase–Lev discipline, a fixed warp
+//! batch is the paper's design (Algorithm 1's `max_count_to_pop`), and
+//! steal-half splits the victim's backlog with the thief.
+
+/// Claim size per successful steal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StealAmount {
+    /// Claim up to `max` tasks, or a full warp batch when `None` (the
+    /// paper's design and the pre-refactor `GtapConfig::steal_max`).
+    /// `Fixed { max: Some(1) }` is steal-one.
+    Fixed { max: Option<usize> },
+    /// Claim half of the victim's visible queue (rounded up), capped at
+    /// the batch width — the Cilk-style steal-half discipline. The
+    /// victim's count is already loaded on the steal path, so the policy
+    /// adds no cost of its own.
+    Half,
+}
+
+impl Default for StealAmount {
+    fn default() -> Self {
+        StealAmount::Fixed { max: None }
+    }
+}
+
+impl StealAmount {
+    pub const ALL: [StealAmount; 3] = [
+        StealAmount::Fixed { max: None },
+        StealAmount::Fixed { max: Some(1) },
+        StealAmount::Half,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StealAmount::Fixed { max: None } => "batch",
+            StealAmount::Fixed { max: Some(1) } => "one",
+            StealAmount::Fixed { max: Some(_) } => "fixed",
+            StealAmount::Half => "half",
+        }
+    }
+
+    /// Round-trippable spelling: unlike [`StealAmount::name`], a general
+    /// fixed cap keeps its `N` (`fixed:4`), so every label [`StealAmount::parse`]
+    /// accepts can be reconstructed from sweep output.
+    pub fn spelling(&self) -> String {
+        match self {
+            StealAmount::Fixed { max: Some(n) } if *n != 1 => format!("fixed:{n}"),
+            other => other.name().to_string(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<StealAmount, String> {
+        match s {
+            "batch" => Ok(StealAmount::Fixed { max: None }),
+            "one" => Ok(StealAmount::Fixed { max: Some(1) }),
+            "half" => Ok(StealAmount::Half),
+            other => {
+                if let Some(n) = other.strip_prefix("fixed:") {
+                    let n: usize = n
+                        .parse()
+                        .map_err(|_| format!("bad steal amount {other:?}"))?;
+                    if n == 0 {
+                        return Err("steal amount must be at least 1".into());
+                    }
+                    Ok(StealAmount::Fixed { max: Some(n) })
+                } else {
+                    Err(format!(
+                        "unknown steal-amount policy {other:?} (batch|one|half|fixed:N)"
+                    ))
+                }
+            }
+        }
+    }
+
+    /// Tasks to request from a victim whose probed queue currently holds
+    /// `victim_len` tasks; `batch_max` is the warp batch width. Always at
+    /// least 1 (a steal that asks for nothing would livelock the thief).
+    #[inline]
+    pub fn amount(&self, victim_len: usize, batch_max: usize) -> usize {
+        self.amount_lazy(batch_max, || victim_len)
+    }
+
+    /// [`StealAmount::amount`] with a lazy victim-length probe: `Fixed`
+    /// never inspects the victim, so the hot steal path only pays the
+    /// occupancy read when the policy actually uses it (`Half`).
+    #[inline]
+    pub fn amount_lazy(&self, batch_max: usize, victim_len: impl FnOnce() -> usize) -> usize {
+        match *self {
+            StealAmount::Fixed { max } => max.unwrap_or(batch_max).max(1),
+            StealAmount::Half => victim_len().div_ceil(2).clamp(1, batch_max.max(1)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_matches_pre_refactor_steal_max_semantics() {
+        // old: cfg.steal_max.unwrap_or(batch_max).max(1), independent of victim
+        for victim_len in [0, 1, 7, 1000] {
+            assert_eq!(StealAmount::Fixed { max: None }.amount(victim_len, 32), 32);
+            assert_eq!(StealAmount::Fixed { max: Some(1) }.amount(victim_len, 32), 1);
+            assert_eq!(StealAmount::Fixed { max: Some(8) }.amount(victim_len, 32), 8);
+        }
+        // block-level workers have batch_max = 1
+        assert_eq!(StealAmount::Fixed { max: None }.amount(10, 1), 1);
+    }
+
+    #[test]
+    fn half_takes_ceil_half_capped_at_batch() {
+        assert_eq!(StealAmount::Half.amount(0, 32), 1);
+        assert_eq!(StealAmount::Half.amount(1, 32), 1);
+        assert_eq!(StealAmount::Half.amount(2, 32), 1);
+        assert_eq!(StealAmount::Half.amount(3, 32), 2);
+        assert_eq!(StealAmount::Half.amount(9, 32), 5);
+        assert_eq!(StealAmount::Half.amount(63, 32), 32);
+        assert_eq!(StealAmount::Half.amount(1000, 32), 32);
+    }
+
+    #[test]
+    fn fixed_n_parses() {
+        assert_eq!(
+            StealAmount::parse("fixed:4").unwrap(),
+            StealAmount::Fixed { max: Some(4) }
+        );
+        assert!(StealAmount::parse("fixed:0").is_err());
+        assert!(StealAmount::parse("fixed:x").is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! **VictimSelect** — whose queue an idle worker tries to steal from, and
+//! what each attempt costs. All randomness flows through the worker's own
+//! [`Prng`] stream, so every variant stays deterministic per seed.
+
+use super::queueset::QueueSet;
+use crate::sim::config::DeviceSpec;
+use crate::util::prng::Prng;
+
+/// Random victims probed per idle iteration before backing off.
+pub const STEAL_TRIES: usize = 4;
+
+/// Victim choice per steal attempt.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum VictimSelect {
+    /// Uniform over all other workers — one PRNG draw per attempt. The
+    /// paper's design and the pre-refactor behavior.
+    #[default]
+    UniformRandom,
+    /// Hierarchical locality-aware stealing (paper §7 future work,
+    /// formerly `GtapConfig::locality_aware_steal`): the first half of the
+    /// attempts probe same-SM peers; intra-SM steals stay within one L2
+    /// slice and are charged at 60% of the remote cost.
+    LocalityFirst,
+    /// Occupancy-guided: draw two uniform candidates and steal from the
+    /// one whose current queue class holds more tasks (power of two
+    /// choices). Pays one extra remote count load (`.cg`) per attempt for
+    /// the second probe.
+    OccupancyGuided,
+}
+
+impl VictimSelect {
+    pub const ALL: [VictimSelect; 3] = [
+        VictimSelect::UniformRandom,
+        VictimSelect::LocalityFirst,
+        VictimSelect::OccupancyGuided,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            VictimSelect::UniformRandom => "uniform",
+            VictimSelect::LocalityFirst => "locality",
+            VictimSelect::OccupancyGuided => "occupancy",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<VictimSelect, String> {
+        match s {
+            "uniform" | "random" => Ok(VictimSelect::UniformRandom),
+            "locality" | "locality-first" => Ok(VictimSelect::LocalityFirst),
+            "occupancy" | "occupancy-guided" => Ok(VictimSelect::OccupancyGuided),
+            other => Err(format!(
+                "unknown victim-select policy {other:?} (uniform|locality|occupancy)"
+            )),
+        }
+    }
+
+    /// Pick a victim `!= worker` for steal attempt `attempt`. `sm_peers`
+    /// lists the workers resident on each SM; `qidx` is the queue class
+    /// the thief will probe. Requires at least two workers.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn pick(
+        &self,
+        worker: usize,
+        attempt: usize,
+        n_workers: usize,
+        sm: usize,
+        sm_peers: &[Vec<usize>],
+        qidx: usize,
+        queues: &QueueSet,
+        rng: &mut Prng,
+    ) -> usize {
+        debug_assert!(n_workers > 1);
+        match self {
+            VictimSelect::UniformRandom => uniform_excluding(worker, n_workers, rng),
+            VictimSelect::LocalityFirst => {
+                let peers = &sm_peers[sm];
+                if attempt < STEAL_TRIES / 2 && peers.len() > 1 {
+                    loop {
+                        let v = peers[rng.below_usize(peers.len())];
+                        if v != worker {
+                            break v;
+                        }
+                    }
+                } else {
+                    uniform_excluding(worker, n_workers, rng)
+                }
+            }
+            VictimSelect::OccupancyGuided => {
+                let a = uniform_excluding(worker, n_workers, rng);
+                let b = uniform_excluding(worker, n_workers, rng);
+                if queues.len_of(b, qidx) > queues.len_of(a, qidx) {
+                    b
+                } else {
+                    a
+                }
+            }
+        }
+    }
+
+    /// Extra cycles the attempt pays beyond the steal operation itself.
+    #[inline]
+    pub fn probe_overhead(&self, dev: &DeviceSpec) -> u64 {
+        match self {
+            VictimSelect::OccupancyGuided => dev.cg_load(),
+            _ => 0,
+        }
+    }
+
+    /// Cycles charged for a completed steal op: locality-first discounts
+    /// intra-SM steals (one L2 slice; no cross-SM traffic).
+    #[inline]
+    pub fn steal_cycles(&self, op_cycles: u64, same_sm: bool) -> u64 {
+        if matches!(self, VictimSelect::LocalityFirst) && same_sm {
+            op_cycles * 6 / 10
+        } else {
+            op_cycles
+        }
+    }
+}
+
+#[inline]
+fn uniform_excluding(worker: usize, n_workers: usize, rng: &mut Prng) -> usize {
+    let mut v = rng.below_usize(n_workers - 1);
+    if v >= worker {
+        v += 1;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{GtapConfig, SchedulerKind};
+
+    fn ws_queues(workers_grid: usize) -> QueueSet {
+        QueueSet::for_config(&GtapConfig {
+            grid_size: workers_grid,
+            block_size: 32,
+            num_queues: 1,
+            scheduler: SchedulerKind::WorkStealing,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn uniform_never_picks_self_and_covers_all_victims() {
+        let q = ws_queues(8);
+        let peers = vec![(0..8).collect::<Vec<_>>()];
+        let mut rng = Prng::seeded(3);
+        let mut seen = [false; 8];
+        for attempt in 0..200 {
+            let v = VictimSelect::UniformRandom.pick(3, attempt, 8, 0, &peers, 0, &q, &mut rng);
+            assert_ne!(v, 3);
+            seen[v] = true;
+        }
+        assert_eq!(seen.iter().filter(|&&s| s).count(), 7);
+    }
+
+    #[test]
+    fn locality_first_probes_same_sm_early() {
+        let q = ws_queues(8);
+        // SM 0 hosts workers {0, 1}, SM 1 hosts the rest
+        let peers = vec![vec![0, 1], (2..8).collect::<Vec<_>>()];
+        let mut rng = Prng::seeded(5);
+        for _ in 0..100 {
+            let v = VictimSelect::LocalityFirst.pick(0, 0, 8, 0, &peers, 0, &q, &mut rng);
+            assert_eq!(v, 1, "early attempts stay on the same SM");
+        }
+        // late attempts fall back to uniform: eventually leave the SM
+        let far = (0..100)
+            .map(|_| {
+                VictimSelect::LocalityFirst.pick(0, STEAL_TRIES / 2, 8, 0, &peers, 0, &q, &mut rng)
+            })
+            .filter(|&v| v > 1)
+            .count();
+        assert!(far > 0);
+    }
+
+    #[test]
+    fn occupancy_guided_prefers_fuller_victims() {
+        let d = DeviceSpec::h100();
+        let mut q = ws_queues(4);
+        // worker 2's queue holds everything
+        q.push(2, 0, 0, &(0..100).collect::<Vec<_>>(), &d).unwrap();
+        let peers = vec![(0..4).collect::<Vec<_>>()];
+        let mut rng = Prng::seeded(11);
+        let hits = (0..300)
+            .map(|a| VictimSelect::OccupancyGuided.pick(0, a, 4, 0, &peers, 0, &q, &mut rng))
+            .filter(|&v| v == 2)
+            .count();
+        // two draws out of {1,2,3}: P(victim=2) = 1 - (2/3)^2 ≈ 0.56
+        assert!(hits > 120, "occupancy guidance should find the backlog ({hits}/300)");
+    }
+
+    #[test]
+    fn cost_model_hooks() {
+        let d = DeviceSpec::h100();
+        assert_eq!(VictimSelect::UniformRandom.probe_overhead(&d), 0);
+        assert_eq!(VictimSelect::OccupancyGuided.probe_overhead(&d), d.cg_load());
+        assert_eq!(VictimSelect::UniformRandom.steal_cycles(100, true), 100);
+        assert_eq!(VictimSelect::LocalityFirst.steal_cycles(100, true), 60);
+        assert_eq!(VictimSelect::LocalityFirst.steal_cycles(100, false), 100);
+    }
+}

@@ -1,59 +1,30 @@
-//! The persistent-kernel scheduler: GTaP's execution engine on the
-//! discrete-event simulator.
+//! **Pinned pre-refactor scheduler** — the monolithic persistent-kernel
+//! iteration loop exactly as it stood before the composable policy layer
+//! was extracted, kept as the golden reference for the equivalence
+//! contract (the same role `sim::interp_ref` plays for the decoded
+//! interpreter).
 //!
-//! Every worker (a warp for thread-level granularity, a thread block for
-//! block-level, a core on the CPU device) is an actor with its own clock.
-//! The engine always advances the globally-earliest worker, which preserves
-//! causality across queues (a steal at time *t* can only see pushes that
-//! happened before *t*). Worker clocks live in a [`WorkerClock`] — an
-//! indexed heap whose reschedule-the-minimum operation is a single
-//! in-place sift, replacing the old pop-then-push `BinaryHeap` churn.
+//! `rust/tests/policy_golden.rs` runs [`RefScheduler`] and the refactored
+//! `Scheduler` side by side on fib/tree/nqueens fixtures and asserts
+//! bit-identical `RunStats` for every policy combination the old monolith
+//! could express: the default, locality-aware stealing
+//! (ex-`locality_aware_steal`), fixed steal caps (ex-`steal_max`), and the
+//! immediate-buffer ablation. Do **not** evolve scheduling behavior here —
+//! this file changes only when the equivalence baseline itself is
+//! deliberately re-pinned.
 //!
-//! One persistent-kernel iteration of a thread-level worker (§4.3.2):
-//!
-//! 1. Acquire work. Every decision here is delegated to the composable
-//!    policy layer (`coordinator::policy`): **QueueSelect** orders the
-//!    probes over the worker's own EPAQ queues, **VictimSelect** picks
-//!    steal victims (and prices locality), **StealAmount** sizes each
-//!    steal, and **Backoff** paces idle polling. The queue *organization*
-//!    itself (batched deques / global queue / sequential Chase–Lev) is the
-//!    [`QueueSet`] chosen by `GtapConfig::scheduler`.
-//! 2. Execute the claimed tasks, one per lane. Lanes run the per-lane
-//!    interpreter over the load-time [`DecodedModule`]; the warp's cost is
-//!    the divergence-serialized combination (`sim::divergence`). Payload
-//!    calls may suspend for batched XLA execution.
-//! 3. Apply effects: allocate children and route them to queues via
-//!    **Placement**, process joins and finishes, re-enqueue satisfied
-//!    continuations (keeping up to a warp's worth for immediate execution).
-//!
-//! The iteration loop itself is a thin driver: it owns the buffers, the
-//! cost accounting and the stats; the policies own the decisions. The
-//! default `PolicyConfig` reproduces the pre-refactor monolith bit-for-bit
-//! (`rust/tests/policy_golden.rs` pins this against
-//! `coordinator::scheduler_ref::RefScheduler`).
-//!
-//! **Zero-allocation steady state:** every buffer the iteration needs —
-//! the claim batch, per-lane frames and outputs, divergence scratch,
-//! per-queue spawn lists, continuation list, and each worker's immediate
-//! buffer and payload request/result vectors — is owned by the scheduler
-//! or its `WorkerState` and reused across iterations. Policy dispatch is
-//! a `match` on `Copy` enums and adds nothing. After warm-up the loop
-//! performs no heap allocation (`rust/tests/zero_alloc.rs` checks the
-//! interpreter core under a counting allocator). Lane frames are shared
-//! across workers rather than per-worker: the event engine runs exactly
-//! one worker at a time, so per-worker frames would multiply memory by the
-//! worker count for no aliasing benefit.
-//!
-//! SM issue bandwidth: each SM sustains `issue_warps` warp-instructions per
-//! cycle; a worker's iteration start is delayed behind its SM's issue
-//! backlog, so resident warps beyond the issue width only help hide
-//! latency — exactly the occupancy behaviour of §2.3.1.
+//! The only departures from the historical text are mechanical: the struct
+//! is renamed `RefScheduler`, and the two knobs that moved into
+//! `PolicyConfig` are read back out of their new home at iteration start
+//! (`locality_aware_steal` ⇐ `policy.victim_select == LocalityFirst`,
+//! `steal_max` ⇐ `policy.steal_amount`).
 
 use super::clock::WorkerClock;
 use super::config::{Granularity, GtapConfig};
 use super::join::{self, FinishEffect};
-use super::policy::{PolicyConfig, QueueSet, STEAL_TRIES};
+use super::policy::{QueueSet, StealAmount, VictimSelect};
 use super::records::{RecordPool, TaskId, NO_TASK};
+use super::scheduler::{PayloadEngine, PayloadReq, RunStats};
 use crate::ir::bytecode::Module;
 use crate::ir::decoded::DecodedModule;
 use crate::ir::types::Value;
@@ -66,82 +37,35 @@ use crate::util::error::{Context, Result};
 use crate::util::prng::Prng;
 use crate::{anyhow, bail};
 
-/// One lane's payload request awaiting the AOT kernel.
-#[derive(Clone, Copy, Debug)]
-pub struct PayloadReq {
-    pub seed: i64,
-    pub mem_ops: i64,
-    pub compute_iters: i64,
-}
+/// Random victims probed per idle iteration before backing off.
+const STEAL_TRIES: usize = 4;
+/// Idle backoff floor cap in cycles (see the historical doc in
+/// `policy::backoff`).
+const MAX_BACKOFF: u64 = 4096;
 
-/// Executes batched `do_memory_and_compute` payloads. Implemented by
-/// `runtime::XlaPayloadEngine` (PJRT, the AOT Pallas kernel) and by the
-/// native fallback used in large sweeps.
-pub trait PayloadEngine {
-    /// Compute results for `reqs`, appending to `out` in order.
-    fn execute(&mut self, reqs: &[PayloadReq], out: &mut Vec<f64>);
-    fn name(&self) -> &'static str;
-}
-
-/// Run statistics.
-#[derive(Clone, Debug, Default, PartialEq)]
-pub struct RunStats {
-    /// Makespan in device cycles (including startup).
-    pub cycles: u64,
-    /// Makespan in seconds.
-    pub seconds: f64,
-    /// Tasks that ran to completion.
-    pub tasks_finished: u64,
-    /// State-machine segments executed.
-    pub segments: u64,
-    pub spawns: u64,
-    pub steals_ok: u64,
-    pub steal_attempts: u64,
-    pub pops: u64,
-    pub pushes: u64,
-    /// Worker iterations (incl. idle ones).
-    pub iterations: u64,
-    /// Result value of the root task (non-void entry functions).
-    pub root_result: Option<Value>,
-    pub idle_iterations: u64,
-    pub peak_live_records: usize,
-    /// Captured print_int/print_float output.
-    pub output: Vec<String>,
-}
-
-/// Per-worker persistent state, including every scratch vector the
-/// worker's iterations reuse (no allocation on the steady-state path).
+/// Per-worker persistent state (pre-refactor layout).
 struct WorkerState {
     rr_queue: usize,
     backoff: u64,
     immediate: Vec<TaskId>,
     rng: Prng,
     sm: usize,
-    /// Payload-suspension scratch: `(lane, request)` awaiting the engine.
     payload_pending: Vec<(usize, PayloadReq)>,
-    /// Next round's suspensions (swapped with `payload_pending`).
     payload_next: Vec<(usize, PayloadReq)>,
-    /// Dense request buffer handed to the engine.
     payload_reqs: Vec<PayloadReq>,
-    /// Engine results, in request order.
     payload_vals: Vec<f64>,
 }
 
-/// The scheduler for one run.
-pub struct Scheduler<'a> {
+/// The pre-refactor scheduler for one run. See the module doc: golden
+/// reference only — use `Scheduler` everywhere else.
+pub struct RefScheduler<'a> {
     pub module: &'a Module,
     pub cfg: &'a GtapConfig,
     pub dev: &'a DeviceSpec,
     pub queues: QueueSet,
     pub records: RecordPool,
-    /// The scheduling-policy combination this run dispatches over
-    /// (copied out of `cfg` once at construction).
-    policy: PolicyConfig,
-    /// Load-time-flattened bytecode the interpreter dispatches over.
     decoded: DecodedModule,
     workers: Vec<WorkerState>,
-    /// Workers resident on each SM (victim candidates for hierarchical
-    /// stealing).
     sm_peers: Vec<Vec<usize>>,
     sm_ready: Vec<u64>,
     live_tasks: u64,
@@ -149,7 +73,6 @@ pub struct Scheduler<'a> {
     frames: Vec<LaneFrame>,
     batch_max: usize,
     root: TaskId,
-    // --- reusable hot-path scratch (no allocation per iteration) ---
     scratch_batch: Vec<TaskId>,
     scratch_outputs: Vec<Option<SegmentOutput>>,
     scratch_states: Vec<u16>,
@@ -158,12 +81,12 @@ pub struct Scheduler<'a> {
     scratch_conts: Vec<(TaskId, u8)>,
 }
 
-impl<'a> Scheduler<'a> {
+impl<'a> RefScheduler<'a> {
     pub fn new(
         module: &'a Module,
         cfg: &'a GtapConfig,
         dev: &'a DeviceSpec,
-    ) -> Result<Scheduler<'a>> {
+    ) -> Result<RefScheduler<'a>> {
         cfg.validate().map_err(|e| anyhow!(e))?;
         let data_words = module
             .funcs
@@ -230,10 +153,6 @@ impl<'a> Scheduler<'a> {
                 }
             })
             .collect();
-        // The record pool: sized from per-worker capacity with a generous
-        // floor (the global-queue baseline expands breadth-first and holds
-        // whole tree frontiers live) and a cap to keep host memory sane.
-        // Exhaustion is reported as the Table-1 feasibility error.
         let pool_cap = (n_workers * cfg.queue_capacity()).clamp(1 << 20, 1 << 22);
         let mut sm_peers = vec![Vec::new(); dev.sms];
         for (i, ws) in workers.iter().enumerate() {
@@ -241,13 +160,12 @@ impl<'a> Scheduler<'a> {
         }
         let decoded = DecodedModule::decode(module);
         let frames = (0..batch_max).map(|_| LaneFrame::sized(&decoded)).collect();
-        Ok(Scheduler {
+        Ok(RefScheduler {
             module,
             cfg,
             dev,
             queues: QueueSet::for_config(cfg),
             records: RecordPool::new(pool_cap, data_words, child_cap),
-            policy: cfg.policy,
             decoded,
             workers,
             sm_peers,
@@ -266,12 +184,7 @@ impl<'a> Scheduler<'a> {
         })
     }
 
-    /// The decoded form this scheduler executes (shared with tests/benches).
-    pub fn decoded(&self) -> &DecodedModule {
-        &self.decoded
-    }
-
-    /// Spawn the root task (the `#pragma gtap entry` of Program 4).
+    /// Spawn the root task.
     pub fn spawn_root(&mut self, func_name: &str, args: &[Value]) -> Result<()> {
         let fid = self
             .module
@@ -312,7 +225,6 @@ impl<'a> Scheduler<'a> {
         let mut log: Vec<String> = Vec::new();
         while self.live_tasks > 0 {
             let (now, w) = clock.peek_min();
-            // fresh reborrow of the engine for this iteration
             let eng: Option<&mut dyn PayloadEngine> = match engine {
                 Some(ref mut e) => Some(&mut **e),
                 None => None,
@@ -334,135 +246,7 @@ impl<'a> Scheduler<'a> {
         Ok(stats)
     }
 
-    /// Acquire phase: fill `batch` from the immediate buffer, own queues
-    /// (**QueueSelect** probe order), or steals (**VictimSelect** ×
-    /// **StealAmount**). Returns the cycles charged. Stats invariant: the
-    /// steal path is entered — and `steal_attempts` counted — only when
-    /// the queue organization supports stealing and a victim exists.
-    fn acquire(&mut self, w: usize, now: u64, batch: &mut Vec<TaskId>) -> u64 {
-        let dev = self.dev;
-        let nq = self.cfg.num_queues;
-        let policy = self.policy;
-        let mut cost = 0;
-
-        if !self.workers[w].immediate.is_empty() {
-            batch.append(&mut self.workers[w].immediate);
-            return cost;
-        }
-
-        // probe own EPAQ queues in policy order from a policy-chosen start
-        let start = policy
-            .queue_select
-            .start(w, self.workers[w].rr_queue, nq, &self.queues);
-        for k in 0..nq {
-            let q = (start + k) % nq;
-            let op = self.queues.pop(w, q, now + cost, self.batch_max, batch, dev);
-            cost += op.cycles;
-            self.stats.pops += 1;
-            if op.taken > 0 {
-                policy.queue_select.commit(&mut self.workers[w].rr_queue, q);
-                return cost;
-            }
-        }
-
-        // steal from other workers' queues
-        if !self.queues.supports_steal() || self.workers.len() < 2 {
-            return cost;
-        }
-        let n_workers = self.workers.len();
-        for attempt in 0..STEAL_TRIES {
-            let q = self.workers[w].rr_queue;
-            let sm = self.workers[w].sm;
-            let victim = policy.victim_select.pick(
-                w,
-                attempt,
-                n_workers,
-                sm,
-                &self.sm_peers,
-                q,
-                &self.queues,
-                &mut self.workers[w].rng,
-            );
-            self.stats.steal_attempts += 1;
-            let amount = policy
-                .steal_amount
-                .amount_lazy(self.batch_max, || self.queues.len_of(victim, q));
-            let op = self.queues.steal(victim, q, now + cost, amount, batch, dev);
-            let same_sm = self.workers[victim].sm == sm;
-            cost += policy.victim_select.steal_cycles(op.cycles, same_sm)
-                + policy.victim_select.probe_overhead(dev);
-            if op.taken > 0 {
-                self.stats.steals_ok += 1;
-                return cost;
-            }
-            // let the policy rotate the EPAQ cursor so the next try can
-            // probe another queue class (Sticky declines)
-            policy
-                .queue_select
-                .on_steal_miss(&mut self.workers[w].rr_queue, nq);
-        }
-        cost
-    }
-
-    /// Push `ids` onto `w`'s queue `q` at time `now`, honoring
-    /// **Placement** overflow semantics: strict placements fail the run
-    /// (the Table-1 feasibility error), `RoundRobinSpill` splits the batch
-    /// across the queue classes by free space — target class first, then
-    /// cyclically — charging one batched push per queue touched. The one
-    /// overflow path for spawned children and continuations alike.
-    /// Returns the cycles charged.
-    fn push_with_spill(
-        &mut self,
-        w: usize,
-        q: usize,
-        now: u64,
-        ids: &[TaskId],
-        what: &str,
-    ) -> Result<u64> {
-        let dev = self.dev;
-        let nq = self.cfg.num_queues;
-        if let Some(op) = self.queues.push(w, q, now, ids, dev) {
-            self.stats.pushes += 1;
-            return Ok(op.cycles);
-        }
-        if !self.policy.placement.spills() || nq < 2 {
-            bail!(
-                "task queue overflow pushing {what} (worker {w}, queue {q}): \
-                 raise GTAP_MAX_TASKS_PER_{{WARP,BLOCK}}"
-            );
-        }
-        let mut cost = 0;
-        let mut rest: &[TaskId] = ids;
-        for k in 0..nq {
-            if rest.is_empty() {
-                break;
-            }
-            let alt = (q + k) % nq;
-            let fit = self.queues.free_of(w, alt).min(rest.len());
-            if fit == 0 {
-                continue;
-            }
-            let (head, tail) = rest.split_at(fit);
-            let op = self
-                .queues
-                .push(w, alt, now + cost, head, dev)
-                .expect("push within free space cannot overflow");
-            cost += op.cycles;
-            self.stats.pushes += 1;
-            rest = tail;
-        }
-        if !rest.is_empty() {
-            bail!(
-                "task queue overflow pushing {what} (worker {w}, queue {q}): \
-                 {} tasks do not fit in any queue class; raise \
-                 GTAP_MAX_TASKS_PER_{{WARP,BLOCK}}",
-                rest.len()
-            );
-        }
-        Ok(cost)
-    }
-
-    /// One persistent-kernel iteration. Returns its duration in cycles.
+    /// One persistent-kernel iteration, pre-refactor text.
     fn worker_iteration(
         &mut self,
         w: usize,
@@ -472,22 +256,92 @@ impl<'a> Scheduler<'a> {
         profiler: &mut Profiler,
         log: &mut Vec<String>,
     ) -> Result<u64> {
+        // the two knobs the refactor moved into PolicyConfig, read back out
+        let locality_aware_steal =
+            self.cfg.policy.victim_select == VictimSelect::LocalityFirst;
+        let cfg_steal_max = match self.cfg.policy.steal_amount {
+            StealAmount::Fixed { max } => max,
+            StealAmount::Half => None, // inexpressible pre-refactor; golden tests don't use it
+        };
+
         self.stats.iterations += 1;
         let dev = self.dev;
         let nq = self.cfg.num_queues;
-        let policy = self.policy;
         let mut cost = dev.loop_overhead;
         let mut batch = std::mem::take(&mut self.scratch_batch);
         batch.clear();
 
         // -- 1. acquire work ------------------------------------------------
-        cost += self.acquire(w, now + cost, &mut batch);
+        if !self.workers[w].immediate.is_empty() {
+            batch.append(&mut self.workers[w].immediate);
+        } else {
+            // EPAQ round-robin over own queues, starting after the last used
+            for k in 0..nq {
+                let q = (self.workers[w].rr_queue + k) % nq;
+                let op = self.queues.pop(w, q, now + cost, self.batch_max, &mut batch, dev);
+                cost += op.cycles;
+                self.stats.pops += 1;
+                if op.taken > 0 {
+                    self.workers[w].rr_queue = q;
+                    break;
+                }
+            }
+            // work stealing: random victims, optionally probing same-SM
+            // neighbours first (hierarchical stealing, paper §7)
+            if batch.is_empty() && self.queues.supports_steal() && self.workers.len() > 1 {
+                let n_workers = self.workers.len();
+                let steal_max = cfg_steal_max.unwrap_or(self.batch_max).max(1);
+                for attempt in 0..STEAL_TRIES {
+                    let local_first = locality_aware_steal && attempt < STEAL_TRIES / 2;
+                    let victim = if local_first && self.sm_peers[self.workers[w].sm].len() > 1
+                    {
+                        let peers = &self.sm_peers[self.workers[w].sm];
+                        let ws = &mut self.workers[w];
+                        loop {
+                            let v = peers[ws.rng.below_usize(peers.len())];
+                            if v != w {
+                                break v;
+                            }
+                        }
+                    } else {
+                        let ws = &mut self.workers[w];
+                        let mut v = ws.rng.below_usize(n_workers - 1);
+                        if v >= w {
+                            v += 1;
+                        }
+                        v
+                    };
+                    let q = self.workers[w].rr_queue;
+                    self.stats.steal_attempts += 1;
+                    let op =
+                        self.queues
+                            .steal(victim, q, now + cost, steal_max, &mut batch, dev);
+                    // intra-SM steals stay within one L2 slice: cheaper
+                    let same_sm = self.workers[victim].sm == self.workers[w].sm;
+                    cost += if locality_aware_steal && same_sm {
+                        op.cycles * 6 / 10
+                    } else {
+                        op.cycles
+                    };
+                    if op.taken > 0 {
+                        self.stats.steals_ok += 1;
+                        break;
+                    }
+                    // rotate the EPAQ cursor so the next try probes another
+                    // queue class too
+                    if nq > 1 {
+                        self.workers[w].rr_queue = (q + 1) % nq;
+                    }
+                }
+            }
+        }
 
         if batch.is_empty() {
             self.scratch_batch = batch;
             self.stats.idle_iterations += 1;
+            let elapsed_cap = MAX_BACKOFF.max((now.saturating_sub(dev.startup)) / 32);
             let ws = &mut self.workers[w];
-            ws.backoff = policy.backoff.next(ws.backoff, now, dev);
+            ws.backoff = (ws.backoff * 2).clamp(dev.loop_overhead * 4, elapsed_cap);
             let dur = cost + ws.backoff;
             profiler.record(TimelineEvent {
                 worker: w as u32,
@@ -592,15 +446,12 @@ impl<'a> Scheduler<'a> {
         cost += exec_cycles;
 
         // -- 3. apply effects ----------------------------------------------
-        // spawned children grouped by target queue index (**Placement**)
         let mut spawned = std::mem::take(&mut self.scratch_spawned);
         for q in spawned.iter_mut() {
             q.clear();
         }
-        // continuations to re-enqueue: (task, queue)
         let mut continuations = std::mem::take(&mut self.scratch_conts);
         continuations.clear();
-        let cursor = self.workers[w].rr_queue;
         for (i, out) in outputs.iter().enumerate() {
             let out = out.as_ref().unwrap();
             let task = batch[i];
@@ -628,7 +479,7 @@ impl<'a> Scheduler<'a> {
                 }
                 self.live_tasks += 1;
                 self.stats.spawns += 1;
-                let q = policy.placement.place(s.queue as usize, cursor, nq);
+                let q = (s.queue as usize).min(nq - 1);
                 spawned[q].push(child);
             }
             match out.end {
@@ -665,32 +516,44 @@ impl<'a> Scheduler<'a> {
         }
 
         // -- 4. distribute new work -----------------------------------------
-        // keep up to a batch of same-queue-class children for immediate
-        // execution (§4.3.2); push the rest, batched per queue index
         if !self.cfg.immediate_buffer {
             // ablation: every child goes through the deque
         } else if let Some(best_q) = (0..nq).max_by_key(|&q| spawned[q].len()) {
             if !spawned[best_q].is_empty() {
                 let keep = spawned[best_q].len().min(self.batch_max);
                 self.workers[w].immediate.extend(spawned[best_q].drain(..keep));
-                // the cursor follows the kept class only if the policy
-                // says so (Sticky declines)
-                policy.queue_select.commit(&mut self.workers[w].rr_queue, best_q);
+                if nq > 1 {
+                    self.workers[w].rr_queue = best_q;
+                }
             }
         }
         for (q, ids) in spawned.iter().enumerate() {
             if ids.is_empty() {
                 continue;
             }
-            cost += self.push_with_spill(w, q, now + cost, ids, "spawned children")?;
+            let op = self
+                .queues
+                .push(w, q, now + cost, ids, dev)
+                .with_context(|| {
+                    format!(
+                        "task queue overflow (worker {w}, queue {q}): raise \
+                         GTAP_MAX_TASKS_PER_{{WARP,BLOCK}}"
+                    )
+                })?;
+            cost += op.cycles;
+            self.stats.pushes += 1;
         }
         for &(task, queue) in continuations.iter() {
             let q = (queue as usize).min(nq - 1);
-            cost += self.push_with_spill(w, q, now + cost, &[task], "a continuation")?;
+            let op = self
+                .queues
+                .push(w, q, now + cost, &[task], dev)
+                .context("task queue overflow re-enqueuing a continuation")?;
+            cost += op.cycles;
+            self.stats.pushes += 1;
         }
 
         let batch_len = batch.len();
-        // restore scratch buffers for the next iteration
         self.scratch_batch = batch;
         self.scratch_outputs = outputs;
         self.scratch_states = entry_states;

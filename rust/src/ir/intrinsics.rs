@@ -9,8 +9,8 @@
 //! and charges an analytic cycle cost derived from the operation counts the
 //! real code would execute (see `sim::intrinsics` for both). The
 //! [`Intrinsic::Payload`] intrinsic is special: its values are computed by
-//! the AOT-compiled JAX/Pallas kernel through PJRT when an
-//! [`crate::runtime::PayloadEngine`] is attached.
+//! the AOT-compiled JAX/Pallas kernel through PJRT when a
+//! [`crate::coordinator::PayloadEngine`] is attached.
 
 use super::types::Type;
 

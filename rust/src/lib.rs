@@ -29,8 +29,10 @@
 //! * [`coordinator`] — the GTaP device runtime proper (§4): task records,
 //!   fixed-ring work-stealing deques with warp-cooperative batched
 //!   pop/steal/push (Algorithm 1), the global-queue and sequential
-//!   Chase–Lev ablation baselines, EPAQ, join/continuation management, and
-//!   the persistent-kernel worker loops for both granularities.
+//!   Chase–Lev ablation baselines, EPAQ, join/continuation management, the
+//!   composable scheduling-policy layer (queue/victim selection, steal
+//!   amount, placement, backoff), and the persistent-kernel worker loops
+//!   for both granularities.
 //! * [`host`] — a real-thread work-stealing fork-join executor and
 //!   sequential baselines (the stand-in for the paper's OpenMP-task CPU
 //!   comparator), used for functional validation.

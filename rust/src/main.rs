@@ -13,7 +13,9 @@ use gtap::util::error::Result;
 use gtap::bench::runners::{self, Exec};
 use gtap::compiler;
 use gtap::coordinator::config::{GtapConfig, DEFAULT_MAX_TASK_DATA_SIZE};
-use gtap::coordinator::SchedulerKind;
+use gtap::coordinator::{
+    Backoff, Placement, PolicyConfig, QueueSelect, SchedulerKind, StealAmount, VictimSelect,
+};
 use gtap::sim::DeviceSpec;
 use gtap::util::cli::Args;
 use gtap::util::stats::fmt_time;
@@ -32,7 +34,10 @@ fn main() -> Result<()> {
                  \n  gtap run <fib|nqueens|mergesort|cilksort|tree|ptree|bfs> \\\
                  \n      [--n N] [--cutoff C] [--device gpu|cpu|seq] [--grid G] [--block B] \\\
                  \n      [--sched ws|gq|seqcl] [--queues Q] [--epaq] [--depth D] \\\
-                 \n      [--mem-ops M] [--compute-iters I]\
+                 \n      [--mem-ops M] [--compute-iters I] \\\
+                 \n      [--queue-select rr|sticky|longest] [--victim uniform|locality|occupancy] \\\
+                 \n      [--steal batch|one|half|fixed:N] [--placement epaq|own|rr-spill] \\\
+                 \n      [--backoff exp|fixed]\
                  \n  gtap devices                       device cost models (Table 2)\
                  \n  gtap config                        runtime defaults (Table 1)"
             );
@@ -75,7 +80,30 @@ fn build_exec(args: &Args) -> Result<Exec> {
     });
     exec = exec.queues(args.get_or("queues", 1usize));
     exec = exec.seed(args.get_or("seed", 0x6A7A9u64));
+    exec.cfg.policy = build_policy(args)?;
     Ok(exec)
+}
+
+/// Scheduling-policy surface: env (`GTAP_QUEUE_SELECT`, …) as the base,
+/// CLI flags override.
+fn build_policy(args: &Args) -> Result<PolicyConfig> {
+    let mut pol = PolicyConfig::from_env().map_err(|e| gtap::anyhow!(e))?;
+    if let Some(v) = args.get("queue-select") {
+        pol.queue_select = QueueSelect::parse(v).map_err(|e| gtap::anyhow!(e))?;
+    }
+    if let Some(v) = args.get("victim") {
+        pol.victim_select = VictimSelect::parse(v).map_err(|e| gtap::anyhow!(e))?;
+    }
+    if let Some(v) = args.get("steal") {
+        pol.steal_amount = StealAmount::parse(v).map_err(|e| gtap::anyhow!(e))?;
+    }
+    if let Some(v) = args.get("placement") {
+        pol.placement = Placement::parse(v).map_err(|e| gtap::anyhow!(e))?;
+    }
+    if let Some(v) = args.get("backoff") {
+        pol.backoff = Backoff::parse(v).map_err(|e| gtap::anyhow!(e))?;
+    }
+    Ok(pol)
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -193,5 +221,10 @@ fn cmd_config() -> Result<()> {
     println!("GTAP_NUM_QUEUES           = {}", c.num_queues);
     println!("GTAP_MAX_TASK_DATA_SIZE   = {}", c.max_task_data_size);
     println!("GTAP_ASSUME_NO_TASKWAIT   = {}", c.assume_no_taskwait);
+    println!("GTAP_QUEUE_SELECT         = {}", c.policy.queue_select.name());
+    println!("GTAP_VICTIM_SELECT        = {}", c.policy.victim_select.name());
+    println!("GTAP_STEAL_AMOUNT         = {}", c.policy.steal_amount.spelling());
+    println!("GTAP_PLACEMENT            = {}", c.policy.placement.name());
+    println!("GTAP_BACKOFF              = {}", c.policy.backoff.name());
     Ok(())
 }

@@ -2,7 +2,9 @@
 //! stats consistency, and divergence-model properties.
 
 use gtap::bench::runners::{self, Exec};
-use gtap::coordinator::{GtapConfig, Session};
+use gtap::coordinator::{
+    Backoff, GtapConfig, Placement, QueueSelect, Session, StealAmount, VictimSelect,
+};
 use gtap::ir::types::Value;
 use gtap::sim::divergence::{warp_cycles, LanePath};
 use gtap::sim::DeviceSpec;
@@ -184,12 +186,28 @@ fn ablation_knobs_preserve_semantics() {
             e.cfg.immediate_buffer = false;
             e
         }),
+        Box::new(|e: Exec| e.steal_amount(StealAmount::Fixed { max: Some(1) })),
+        Box::new(|e: Exec| e.steal_amount(StealAmount::Half)),
+        Box::new(|e: Exec| e.victim(VictimSelect::LocalityFirst)),
+        Box::new(|e: Exec| e.victim(VictimSelect::OccupancyGuided)),
         Box::new(|mut e: Exec| {
-            e.cfg.steal_max = Some(1);
+            e.cfg.policy.queue_select = QueueSelect::Sticky;
             e
         }),
         Box::new(|mut e: Exec| {
-            e.cfg.locality_aware_steal = true;
+            e.cfg.policy.queue_select = QueueSelect::LongestFirst;
+            e
+        }),
+        Box::new(|mut e: Exec| {
+            e.cfg.policy.placement = Placement::OwnQueue;
+            e
+        }),
+        Box::new(|mut e: Exec| {
+            e.cfg.policy.placement = Placement::RoundRobinSpill;
+            e
+        }),
+        Box::new(|mut e: Exec| {
+            e.cfg.policy.backoff = Backoff::FixedPoll;
             e
         }),
     ];
@@ -206,8 +224,7 @@ fn steal_one_slower_than_batched() {
     let batched = runners::run_fib(&Exec::gpu_thread(64, 32), 20, 0, false)
         .unwrap()
         .seconds;
-    let mut e = Exec::gpu_thread(64, 32);
-    e.cfg.steal_max = Some(1);
+    let e = Exec::gpu_thread(64, 32).steal_amount(StealAmount::Fixed { max: Some(1) });
     let one = runners::run_fib(&e, 20, 0, false).unwrap().seconds;
     assert!(one > batched, "steal-one {one} must be slower than batched {batched}");
 }

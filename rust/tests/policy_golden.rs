@@ -1,0 +1,181 @@
+//! Golden equivalence: the policy-layer refactor must not change behavior.
+//!
+//! `coordinator::scheduler_ref::RefScheduler` is the pre-refactor
+//! monolithic scheduler, kept verbatim. For every policy combination the
+//! old monolith could express — the default, locality-aware stealing
+//! (ex-`locality_aware_steal`), fixed steal caps (ex-`steal_max`), the
+//! immediate-buffer ablation, all three queue organizations, EPAQ
+//! multi-queue, and block-level granularity — the refactored `Scheduler`
+//! must produce **bit-identical** `RunStats` on fib / tree / nqueens
+//! fixtures: same cycles, same steal/pop/push/iteration counts, same
+//! result. The runs are deterministic, so equality here pins the whole
+//! `(time, worker)` event order and the PRNG draw sequence, not just the
+//! aggregate.
+
+use gtap::compiler;
+use gtap::coordinator::scheduler_ref::RefScheduler;
+use gtap::coordinator::{
+    Granularity, GtapConfig, PolicyConfig, RunStats, Scheduler, SchedulerKind, StealAmount,
+    VictimSelect,
+};
+use gtap::ir::types::Value;
+use gtap::sim::profile::Profiler;
+use gtap::sim::{DeviceSpec, Memory};
+use gtap::workloads::{fib, nqueens, tree};
+
+/// Run one fixture through both schedulers; each gets its own fresh
+/// memory, prepared identically by `make_args`.
+fn stats_pair(
+    cfg: &GtapConfig,
+    src: &str,
+    entry: &str,
+    make_args: impl Fn(&mut Memory) -> Vec<Value>,
+) -> (RunStats, RunStats) {
+    let dev = DeviceSpec::h100();
+    let module = compiler::compile(src, cfg.max_task_data_size).unwrap();
+    let refactored = {
+        let mut mem = Memory::new(module.globals_words());
+        let args = make_args(&mut mem);
+        let mut prof = Profiler::disabled();
+        let mut s = Scheduler::new(&module, cfg, &dev).unwrap();
+        s.spawn_root(entry, &args).unwrap();
+        s.run(&mut mem, None, &mut prof).unwrap()
+    };
+    let reference = {
+        let mut mem = Memory::new(module.globals_words());
+        let args = make_args(&mut mem);
+        let mut prof = Profiler::disabled();
+        let mut s = RefScheduler::new(&module, cfg, &dev).unwrap();
+        s.spawn_root(entry, &args).unwrap();
+        s.run(&mut mem, None, &mut prof).unwrap()
+    };
+    (refactored, reference)
+}
+
+fn assert_equivalent(cfg: &GtapConfig, label: &str) {
+    // fib: recursive spawns + taskwait joins
+    let (a, b) = stats_pair(cfg, &fib::source(0, false), "fib", |_| {
+        vec![Value::from_i64(13)]
+    });
+    assert_eq!(a, b, "fib diverged under {label}");
+    assert_eq!(a.root_result.unwrap().as_i64(), 233);
+
+    // synthetic full tree: payload arithmetic + accumulator memory
+    let (a, b) = stats_pair(cfg, &tree::full_tree_source(4, 8), "tree", |mem| {
+        let acc = mem.alloc(1);
+        vec![Value::from_i64(7), Value::from_i64(7), Value(acc)]
+    });
+    assert_eq!(a, b, "tree diverged under {label}");
+
+    // nqueens: spawn-only, no taskwait
+    let mut nq_cfg = cfg.clone();
+    nq_cfg.assume_no_taskwait = true;
+    let (a, b) = stats_pair(&nq_cfg, &nqueens::source(3, false), "nqueens", |mem| {
+        let acc = mem.alloc(1);
+        vec![
+            Value::from_i64(7),
+            Value::from_i64(0),
+            Value::from_i64(0),
+            Value::from_i64(0),
+            Value::from_i64(0),
+            Value(acc),
+        ]
+    });
+    assert_eq!(a, b, "nqueens diverged under {label}");
+}
+
+fn base_cfg() -> GtapConfig {
+    GtapConfig {
+        grid_size: 8,
+        block_size: 32,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn default_policy_reproduces_pre_refactor_scheduler() {
+    assert_equivalent(&base_cfg(), "default policy");
+}
+
+#[test]
+fn locality_first_matches_old_locality_aware_steal_flag() {
+    let mut cfg = base_cfg();
+    cfg.policy.victim_select = VictimSelect::LocalityFirst;
+    assert_equivalent(&cfg, "locality-first victims");
+}
+
+#[test]
+fn fixed_steal_caps_match_old_steal_max() {
+    for max in [Some(1), Some(4), None] {
+        let mut cfg = base_cfg();
+        cfg.policy.steal_amount = StealAmount::Fixed { max };
+        assert_equivalent(&cfg, &format!("steal cap {max:?}"));
+    }
+}
+
+#[test]
+fn immediate_buffer_ablation_still_matches() {
+    let mut cfg = base_cfg();
+    cfg.immediate_buffer = false;
+    assert_equivalent(&cfg, "no immediate buffer");
+}
+
+#[test]
+fn all_queue_organizations_match() {
+    for kind in [
+        SchedulerKind::WorkStealing,
+        SchedulerKind::GlobalQueue,
+        SchedulerKind::SequentialChaseLev,
+    ] {
+        let mut cfg = base_cfg();
+        cfg.scheduler = kind;
+        assert_equivalent(&cfg, &format!("{kind:?}"));
+    }
+}
+
+#[test]
+fn epaq_multi_queue_matches() {
+    let cfg = GtapConfig {
+        num_queues: 3,
+        ..base_cfg()
+    };
+    let (a, b) = stats_pair(&cfg, &fib::source(2, true), "fib", |_| {
+        vec![Value::from_i64(13)]
+    });
+    assert_eq!(a, b, "EPAQ fib diverged");
+    assert_eq!(a.root_result.unwrap().as_i64(), 233);
+}
+
+#[test]
+fn block_level_granularity_matches() {
+    let cfg = GtapConfig {
+        grid_size: 4,
+        block_size: 64,
+        granularity: Granularity::Block,
+        ..Default::default()
+    };
+    let (a, b) = stats_pair(
+        &cfg,
+        &tree::full_tree_block_source(4, 8, 64),
+        "tree",
+        |mem| {
+            let acc = mem.alloc(1);
+            vec![Value::from_i64(4), Value::from_i64(7), Value(acc)]
+        },
+    );
+    assert_eq!(a, b, "block-level tree diverged");
+}
+
+#[test]
+fn combined_old_knobs_match() {
+    // the strongest combination the monolith could express, all at once
+    let mut cfg = base_cfg();
+    cfg.policy = PolicyConfig {
+        victim_select: VictimSelect::LocalityFirst,
+        steal_amount: StealAmount::Fixed { max: Some(2) },
+        ..Default::default()
+    };
+    cfg.immediate_buffer = false;
+    cfg.num_queues = 2;
+    assert_equivalent(&cfg, "locality + steal-cap + no-immediate + 2 queues");
+}

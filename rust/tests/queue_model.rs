@@ -15,6 +15,7 @@
 use gtap::coordinator::chaselev::ChaseLevDeque;
 use gtap::coordinator::queue::{ContendedWord, TaskQueue};
 use gtap::coordinator::records::TaskId;
+use gtap::coordinator::StealAmount;
 use gtap::sim::DeviceSpec;
 use gtap::util::prop::{Gen, Runner};
 use std::collections::VecDeque;
@@ -125,6 +126,74 @@ fn chaselev_batched_ops_match_vecdeque_model() {
     Runner::new().cases(300).run("chaselev-vs-model", |g| {
         let cap = g.usize(2, 48);
         check_against_model(g, AnyQueue::ChaseLev(ChaseLevDeque::new(cap)), cap);
+    });
+}
+
+#[test]
+fn steal_half_matches_vecdeque_model() {
+    // Property: driving a steal-half thief against a queue interleaved
+    // with random owner pushes/pops matches the VecDeque model exactly —
+    // each steal claims ceil(len/2) (capped at the batch width) of the
+    // *oldest* ids — and repeated steal-half drains any backlog in
+    // O(log n) steals.
+    Runner::new().cases(300).run("steal-half-vs-model", |g| {
+        let d = DeviceSpec::h100();
+        let cap = g.usize(2, 64);
+        let batch_max = g.usize(1, 32);
+        let mut q = TaskQueue::new(cap);
+        let mut model: VecDeque<TaskId> = VecDeque::new();
+        let mut next: TaskId = 0;
+        for _ in 0..g.usize(1, 60) {
+            match g.int(0, 2) {
+                0 => {
+                    let k = g.usize(1, 8);
+                    let ids: Vec<TaskId> = (0..k as u32).map(|i| next + i).collect();
+                    if q.push_batch(0, &ids, &d).is_some() {
+                        assert!(model.len() + k <= cap);
+                        model.extend(ids.iter().copied());
+                        next += k as u32;
+                    }
+                }
+                1 => {
+                    let mut out = vec![];
+                    q.pop_batch(0, g.usize(1, 8), &mut out, &d);
+                    for got in out {
+                        assert_eq!(got, model.pop_back().unwrap(), "owner LIFO");
+                    }
+                }
+                _ => {
+                    let amount = StealAmount::Half.amount(q.len(), batch_max);
+                    assert_eq!(amount, (q.len().div_ceil(2)).clamp(1, batch_max));
+                    let mut out = vec![];
+                    let taken = q.steal_batch(0, amount, &mut out, &d).taken;
+                    let want = model.len().min(amount);
+                    assert_eq!(taken, want, "steal-half claims exactly min(amount, len)");
+                    for got in out {
+                        assert_eq!(got, model.pop_front().unwrap(), "oldest-first");
+                    }
+                }
+            }
+            assert_eq!(q.len(), model.len());
+        }
+        // drain phase: from any backlog, repeated steal-half (uncapped
+        // batch) empties the queue in at most log2(len) + 2 steals
+        let start_len = q.len();
+        let mut steals = 0;
+        while !q.is_empty() {
+            let amount = StealAmount::Half.amount(q.len(), usize::MAX);
+            let mut out = vec![];
+            q.steal_batch(0, amount, &mut out, &d);
+            for got in out {
+                assert_eq!(got, model.pop_front().unwrap());
+            }
+            steals += 1;
+        }
+        assert!(model.is_empty());
+        let bound = (usize::BITS - start_len.leading_zeros()) as usize + 2;
+        assert!(
+            steals <= bound,
+            "steal-half took {steals} steals for {start_len} tasks (bound {bound})"
+        );
     });
 }
 
