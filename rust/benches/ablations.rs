@@ -16,16 +16,27 @@
 //! 4. **Occupancy-guided stealing**: two-choice victim sampling by queue
 //!    occupancy (`VictimSelect::OccupancyGuided`).
 //! 5. **Queue-select / placement / backoff** variants of the policy layer.
+//! 6. **Adaptive steal sizing** (`StealAmount::Adaptive`): batch vs half
+//!    switched online from the observed steal-failure rate.
+//! 7. **Per-SM hierarchical tier** (`SmTier::Share`): an SM-shared pool
+//!    between own deques and remote victims.
+//! 8. **Depth-priority scheduling** (`QueueSelect::Priority` +
+//!    `Placement::PriorityDepth` over 4 bands): Atos-style phase/depth
+//!    ordering instead of EPAQ path classes (note: this variant also turns
+//!    on 4 queues, so it measures the pair against the 1-queue baseline).
 //!
 //! Part 2 — the policy matrix: every (QueueSelect × VictimSelect ×
 //! StealAmount) combination, so interactions (not just main effects) are
-//! measurable. Placement and backoff stay at their defaults in the matrix
-//! to keep it readable; their main effects are covered in part 1.
+//! measurable. Placement, backoff and the SM tier stay at their defaults
+//! in the matrix to keep it readable; their main effects are covered in
+//! part 1.
 
 use gtap::bench::emit::{markdown_table, write_csv, Series};
 use gtap::bench::runners::{self, Exec};
 use gtap::bench::sweep::{full_scale, measure};
-use gtap::coordinator::{Backoff, Placement, PolicyConfig, QueueSelect, StealAmount, VictimSelect};
+use gtap::coordinator::{
+    Backoff, Placement, PolicyConfig, QueueSelect, SmTier, StealAmount, VictimSelect,
+};
 use gtap::util::stats::Summary;
 
 fn main() {
@@ -60,23 +71,30 @@ fn main() {
         ),
         (
             "longest-first-queue",
-            Box::new(|mut e: Exec| {
-                e.cfg.policy.queue_select = QueueSelect::LongestFirst;
-                e
-            }),
+            Box::new(|e: Exec| e.queue_select(QueueSelect::LongestFirst)),
         ),
         (
             "own-queue-placement",
-            Box::new(|mut e: Exec| {
-                e.cfg.policy.placement = Placement::OwnQueue;
-                e
-            }),
+            Box::new(|e: Exec| e.placement(Placement::OwnQueue)),
         ),
         (
             "fixed-poll-backoff",
-            Box::new(|mut e: Exec| {
-                e.cfg.policy.backoff = Backoff::FixedPoll;
-                e
+            Box::new(|e: Exec| e.backoff(Backoff::FixedPoll)),
+        ),
+        (
+            "adaptive-steal",
+            Box::new(|e: Exec| e.steal_amount(StealAmount::Adaptive)),
+        ),
+        (
+            "sm-tier-share",
+            Box::new(|e: Exec| e.sm_tier(SmTier::Share)),
+        ),
+        (
+            "priority-depth-4q",
+            Box::new(|e: Exec| {
+                e.queues(4)
+                    .queue_select(QueueSelect::Priority)
+                    .placement(Placement::PriorityDepth)
             }),
         ),
     ];
@@ -119,14 +137,16 @@ fn main() {
     println!(
         "\n(variant index: 0=baseline, 1=no-immediate-buffer, 2=steal-one, \
          3=steal-half, 4=locality-aware, 5=occupancy, 6=longest-first, \
-         7=own-queue, 8=fixed-poll)\n"
+         7=own-queue, 8=fixed-poll, 9=adaptive-steal, 10=sm-tier-share, \
+         11=priority-depth-4q)\n"
     );
     println!("{}", markdown_table("variant", &series));
     let p = write_csv("ablations", &series).unwrap();
     println!("wrote {}", p.display());
 
     // ---- part 2: the policy matrix -------------------------------------
-    // EPAQ (3 queues) so queue selection has something to select between.
+    // EPAQ (3 queues) so queue selection has something to select between;
+    // 4 queue-selects × 3 victims × 4 steal amounts = 48 combinations.
     println!("\n## policy_matrix (fib, EPAQ 3 queues)\n");
     let combos = PolicyConfig::steal_matrix();
     let mut matrix: Vec<(f64, Summary)> = vec![];

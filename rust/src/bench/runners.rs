@@ -3,8 +3,8 @@
 //! return the measurement. Shared by every bench target and example.
 
 use crate::coordinator::{
-    Granularity, GtapConfig, PayloadEngine, PolicyConfig, RunStats, SchedulerKind, Session,
-    StealAmount, VictimSelect,
+    Backoff, Granularity, GtapConfig, PayloadEngine, Placement, PolicyConfig, QueueSelect,
+    RunStats, SchedulerKind, Session, SmTier, StealAmount, VictimSelect,
 };
 use crate::ir::types::Value;
 use crate::sim::profile::Profiler;
@@ -125,6 +125,30 @@ impl Exec {
     /// Steal-amount policy (ex-`steal_max`).
     pub fn steal_amount(mut self, s: StealAmount) -> Exec {
         self.cfg.policy.steal_amount = s;
+        self
+    }
+
+    /// Own-queue selection policy.
+    pub fn queue_select(mut self, q: QueueSelect) -> Exec {
+        self.cfg.policy.queue_select = q;
+        self
+    }
+
+    /// Child/continuation placement policy.
+    pub fn placement(mut self, p: Placement) -> Exec {
+        self.cfg.policy.placement = p;
+        self
+    }
+
+    /// Idle-backoff policy.
+    pub fn backoff(mut self, b: Backoff) -> Exec {
+        self.cfg.policy.backoff = b;
+        self
+    }
+
+    /// Per-SM hierarchical queue-tier policy.
+    pub fn sm_tier(mut self, t: SmTier) -> Exec {
+        self.cfg.policy.sm_tier = t;
         self
     }
 }

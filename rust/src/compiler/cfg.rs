@@ -157,7 +157,12 @@ impl Cfg {
                 self.connect(&preds, n);
                 vec![n]
             }
-            Stmt::Spawn { queue, call, .. } => {
+            Stmt::Spawn {
+                queue,
+                priority,
+                call,
+                ..
+            } => {
                 // dest is NOT defined here: the child's result materializes
                 // at the taskwait re-entry (ChildResult), see liveness.
                 let n = self.add(NodeKind::Stmt);
@@ -166,6 +171,9 @@ impl Cfg {
                 }
                 if let Some(q) = queue {
                     self.uses_of_expr(q, n);
+                }
+                if let Some(p) = priority {
+                    self.uses_of_expr(p, n);
                 }
                 self.connect(&preds, n);
                 vec![n]

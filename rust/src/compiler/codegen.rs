@@ -375,7 +375,11 @@ impl<'a> Codegen<'a> {
                 self.emit(Insn::FinishTask);
             }
             Stmt::Spawn {
-                queue, dest, call, ..
+                queue,
+                priority,
+                dest,
+                call,
+                ..
             } => {
                 // evaluate args into a contiguous arg-pool run
                 let mut arg_regs = Vec::with_capacity(call.args.len());
@@ -386,6 +390,12 @@ impl<'a> Codegen<'a> {
                     Some(q) => self.gen_expr(q)?,
                     None => self.const_to(0),
                 };
+                // absent priority emits no code at all: the sentinel tells
+                // the runtime to inherit the parent's priority
+                let priority_reg = match priority {
+                    Some(p) => self.gen_expr(p)?,
+                    None => NO_PRIORITY_REG,
+                };
                 let arg_base = self.arg_pool.len() as u32;
                 self.arg_pool.extend_from_slice(&arg_regs);
                 let func = self.func_ids[&call.callee];
@@ -394,6 +404,7 @@ impl<'a> Codegen<'a> {
                     arg_base,
                     argc: arg_regs.len() as u8,
                     queue: queue_reg,
+                    priority: priority_reg,
                 });
                 if let Some(d) = dest {
                     self.pending_captures
@@ -921,6 +932,39 @@ mod tests {
             .filter(|i| matches!(i, Insn::PrepareJoin { next_state: 1, .. }))
             .count();
         assert_eq!(joins, 1);
+    }
+
+    #[test]
+    fn spawns_carry_priority_exprs_or_the_inherit_sentinel() {
+        // unannotated spawns carry the sentinel (inherit)
+        let m = compile_default(FIB).unwrap();
+        for i in &m.func(0).insns {
+            if let Insn::Spawn { priority, .. } = i {
+                assert_eq!(*priority, NO_PRIORITY_REG);
+            }
+        }
+        // an annotated spawn evaluates its expression into a real register
+        let src = r#"
+            #pragma gtap function
+            void walk(int d) {
+                if (d > 0) {
+                    #pragma gtap task priority(d - 1)
+                    walk(d - 1);
+                }
+            }
+        "#;
+        let m = compile_default(src).unwrap();
+        let prios: Vec<Reg> = m
+            .func(0)
+            .insns
+            .iter()
+            .filter_map(|i| match i {
+                Insn::Spawn { priority, .. } => Some(*priority),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(prios.len(), 1);
+        assert_ne!(prios[0], NO_PRIORITY_REG);
     }
 
     #[test]

@@ -160,12 +160,21 @@ fn collect_positions(
                 }
             }
             Stmt::ExprStmt { expr, .. } => refs_of_expr(expr, p, refs),
-            Stmt::Spawn { queue, dest, call, .. } => {
+            Stmt::Spawn {
+                queue,
+                priority,
+                dest,
+                call,
+                ..
+            } => {
                 for a in &call.args {
                     refs_of_expr(a, p, refs);
                 }
                 if let Some(q) = queue {
                     refs_of_expr(q, p, refs);
+                }
+                if let Some(pr) = priority {
+                    refs_of_expr(pr, p, refs);
                 }
                 if let Some(d) = dest {
                     // the capture write happens at the matching taskwait,

@@ -215,7 +215,7 @@ impl<'a> Parser<'a> {
             Tok::PragmaTask => self.spawn_stmt(span),
             Tok::PragmaTaskwait => {
                 self.bump();
-                let queue = self.opt_queue_clause()?;
+                let (queue, _) = self.pragma_clauses(false)?;
                 self.expect(&Tok::PragmaEnd, "end of pragma line")?;
                 Ok(Stmt::TaskWait { queue, span })
             }
@@ -387,23 +387,52 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn opt_queue_clause(&mut self) -> CompileResult<Option<Expr>> {
-        if let Tok::Ident(name) = self.peek() {
-            if name == "queue" {
-                self.bump();
-                self.expect(&Tok::LParen, "'(' after queue")?;
-                let e = self.expr()?;
-                self.expect(&Tok::RParen, "')'")?;
-                return Ok(Some(e));
+    /// Optional pragma clauses after `task`/`taskwait`: `queue(e)` and —
+    /// on `task` only — `priority(e)`. Accepted in any order, at most once
+    /// each; a duplicate is a hard error.
+    fn pragma_clauses(
+        &mut self,
+        allow_priority: bool,
+    ) -> CompileResult<(Option<Expr>, Option<Expr>)> {
+        let mut queue: Option<Expr> = None;
+        let mut priority: Option<Expr> = None;
+        loop {
+            let name = match self.peek() {
+                Tok::Ident(n) => n.clone(),
+                _ => break,
+            };
+            let slot = match name.as_str() {
+                "queue" => &mut queue,
+                "priority" if allow_priority => &mut priority,
+                "priority" => {
+                    return CompileError::err(
+                        self.span(),
+                        "priority(expr) applies to #pragma gtap task only \
+                         (a continuation re-enters at its own task's band)",
+                    )
+                }
+                _ => break,
+            };
+            if slot.is_some() {
+                return CompileError::err(
+                    self.span(),
+                    format!("duplicate {name}(...) clause in pragma"),
+                );
             }
+            self.bump();
+            self.expect(&Tok::LParen, "'(' after clause name")?;
+            let e = self.expr()?;
+            self.expect(&Tok::RParen, "')'")?;
+            *slot = Some(e);
         }
-        Ok(None)
+        Ok((queue, priority))
     }
 
-    /// `#pragma gtap task [queue(e)]` followed by `x = f(a);` or `f(a);`.
+    /// `#pragma gtap task [queue(e)] [priority(e)]` followed by
+    /// `x = f(a);` or `f(a);`.
     fn spawn_stmt(&mut self, span: Span) -> CompileResult<Stmt> {
         self.bump(); // PragmaTask
-        let queue = self.opt_queue_clause()?;
+        let (queue, priority) = self.pragma_clauses(true)?;
         self.expect(&Tok::PragmaEnd, "end of pragma line")?;
 
         // Restricted form: [ident =] call ;
@@ -446,6 +475,7 @@ impl<'a> Parser<'a> {
         };
         Ok(Stmt::Spawn {
             queue,
+            priority,
             dest,
             call,
             span,
@@ -712,6 +742,42 @@ mod tests {
         assert!(
             matches!(&prog.functions[0].body.stmts[0], Stmt::Spawn { dest: None, queue: None, .. })
         );
+    }
+
+    #[test]
+    fn spawn_priority_clause_parses_in_any_order() {
+        let prog = parse_src(
+            "#pragma gtap function\nvoid f(int n) {\n\
+             #pragma gtap task priority(n) queue(1)\nf(n - 1);\n\
+             #pragma gtap task queue(0) priority(2)\nf(n - 2);\n}",
+        )
+        .unwrap();
+        for s in &prog.functions[0].body.stmts {
+            assert!(
+                matches!(s, Stmt::Spawn { queue: Some(_), priority: Some(_), .. }),
+                "{s:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn duplicate_pragma_clause_rejected() {
+        let err = parse_src(
+            "#pragma gtap function\nvoid f(int n) {\n\
+             #pragma gtap task priority(1) priority(2)\nf(n);\n}",
+        )
+        .unwrap_err();
+        assert!(err.message.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn priority_on_taskwait_rejected() {
+        let err = parse_src(
+            "#pragma gtap function\nvoid f(int n) {\n\
+             #pragma gtap taskwait priority(1)\n}",
+        )
+        .unwrap_err();
+        assert!(err.message.contains("gtap task only"), "{err}");
     }
 
     #[test]

@@ -99,10 +99,18 @@ pub fn render_insn(f: &FuncCode, i: &Insn) -> String {
             arg_base,
             argc,
             queue,
-        } => format!(
-            "spawn func#{func}({}) queue=r{queue}",
-            args_of(f, arg_base, argc)
-        ),
+            priority,
+        } => {
+            let pr = if priority == NO_PRIORITY_REG {
+                String::new()
+            } else {
+                format!(" priority=r{priority}")
+            };
+            format!(
+                "spawn func#{func}({}) queue=r{queue}{pr}",
+                args_of(f, arg_base, argc)
+            )
+        }
         Insn::PrepareJoin { next_state, queue } => {
             format!("__gtap_prepare_for_join(next_state={next_state}, queue=r{queue}); return")
         }

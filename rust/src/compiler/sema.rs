@@ -528,6 +528,7 @@ impl<'a> FnCtx<'a> {
             }
             Stmt::Spawn {
                 queue,
+                priority,
                 dest,
                 call,
                 span,
@@ -607,8 +608,20 @@ impl<'a> FnCtx<'a> {
                     }
                     None => None,
                 };
+                let priority = match priority {
+                    Some(p) => {
+                        let ps = p.span();
+                        let (p, pt) = self.check_expr(p)?;
+                        if pt != Type::Int {
+                            return CompileError::err(ps, "priority(expr) must be int");
+                        }
+                        Some(p)
+                    }
+                    None => None,
+                };
                 Ok(Stmt::Spawn {
                     queue,
+                    priority,
                     dest,
                     call: CallExpr {
                         callee: call.callee,
@@ -1182,6 +1195,16 @@ mod tests {
         )
         .unwrap_err();
         assert!(e.message.contains("queue"), "{e}");
+    }
+
+    #[test]
+    fn priority_must_be_int() {
+        let e = check(
+            "#pragma gtap function\nvoid t() { return; }\n\
+             #pragma gtap function\nvoid f() {\n#pragma gtap task priority(0.5)\nt();\n}",
+        )
+        .unwrap_err();
+        assert!(e.message.contains("priority"), "{e}");
     }
 
     #[test]

@@ -13,9 +13,9 @@
 //!   §6.1.2 ablation baseline.
 //! * [`globalq`] — the single shared queue of the §6.1.1 ablation.
 //! * [`policy`] — the composable scheduling-policy layer: the `QueueSet`
-//!   organization abstraction plus the five enum-dispatched decision
+//!   organization abstraction plus the six enum-dispatched decision
 //!   policies (queue select, victim select, steal amount, placement,
-//!   backoff) bundled in `PolicyConfig`.
+//!   backoff, per-SM tier) bundled in `PolicyConfig`.
 //! * [`clock`] — the indexed worker-clock heap the discrete-event loop
 //!   advances in place (one sift per iteration, no allocation).
 //! * [`join`] — join counters, continuation re-enqueue, child-result
@@ -46,7 +46,7 @@ pub mod session;
 
 pub use config::{Granularity, GtapConfig, SchedulerKind};
 pub use policy::{
-    Backoff, Placement, PolicyConfig, QueueSelect, QueueSet, StealAmount, VictimSelect,
+    Backoff, Placement, PolicyConfig, QueueSelect, QueueSet, SmTier, StealAmount, VictimSelect,
 };
 pub use scheduler::{PayloadEngine, PayloadReq, RunStats, Scheduler};
 pub use session::Session;

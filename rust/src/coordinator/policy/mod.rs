@@ -3,18 +3,19 @@
 //! GTaP's headline results (§4.4, §6.1, Fig. 3/4/10) are *scheduling-policy*
 //! ablations: work stealing vs. a global queue, EPAQ queue partitioning,
 //! batched vs. sequential deque operations. This module decomposes every
-//! such decision the persistent-kernel scheduler makes into five small,
+//! such decision the persistent-kernel scheduler makes into six small,
 //! **enum-dispatched** components — no `dyn` on the hot path, no allocation,
 //! each variant a handful of lines — so new policies are one enum variant
 //! plus a config spelling, not a scheduler rewrite:
 //!
 //! | Component       | Decision                                | Variants |
 //! |-----------------|-----------------------------------------|----------|
-//! | [`QueueSelect`] | which own EPAQ queue to pop next        | round-robin · sticky · longest-first |
+//! | [`QueueSelect`] | which own EPAQ queue to pop next        | round-robin · sticky · longest-first · priority-band |
 //! | [`VictimSelect`]| whose queue to steal from               | uniform-random · same-SM-locality-first · occupancy-guided |
-//! | [`StealAmount`] | how much one successful steal claims    | fixed batch (incl. steal-one) · steal-half |
-//! | [`Placement`]   | where spawned children are enqueued     | EPAQ index · own cursor queue · EPAQ + round-robin spill |
+//! | [`StealAmount`] | how much one successful steal claims    | fixed batch (incl. steal-one) · steal-half · adaptive (failure-rate driven) |
+//! | [`Placement`]   | where spawned children are enqueued     | EPAQ index · own cursor queue · EPAQ + round-robin spill · depth band · user-priority band |
 //! | [`Backoff`]     | how idle workers pace their polling     | exponential-capped · fixed-poll |
+//! | [`SmTier`]      | the per-SM pool between own deques and remote victims | off · overflow-spill · spill + proactive share |
 //!
 //! [`PolicyConfig`] bundles one choice per axis and lives on
 //! `GtapConfig::policy`; every component parses from the CLI/env surface
@@ -35,6 +36,7 @@ mod backoff;
 mod placement;
 mod queue_select;
 mod queueset;
+mod sm_tier;
 mod steal_amount;
 mod victim_select;
 
@@ -42,7 +44,10 @@ pub use backoff::{Backoff, MAX_BACKOFF};
 pub use placement::Placement;
 pub use queue_select::QueueSelect;
 pub use queueset::QueueSet;
-pub use steal_amount::StealAmount;
+pub use sm_tier::{intra_sm_cycles, SmPool, SmTier};
+pub use steal_amount::{
+    adaptive_amount, StealAmount, ADAPTIVE_FAILURE_THRESHOLD_PCT, ADAPTIVE_WARMUP_ATTEMPTS,
+};
 pub use victim_select::{VictimSelect, STEAL_TRIES};
 
 /// One scheduling decision per axis. `Copy`, compared and constructed in
@@ -57,13 +62,15 @@ pub struct PolicyConfig {
     pub steal_amount: StealAmount,
     pub placement: Placement,
     pub backoff: Backoff,
+    pub sm_tier: SmTier,
 }
 
 impl PolicyConfig {
     /// Parse the policy environment surface: `GTAP_QUEUE_SELECT`,
     /// `GTAP_VICTIM_SELECT`, `GTAP_STEAL_AMOUNT`, `GTAP_PLACEMENT`,
-    /// `GTAP_BACKOFF`. Unset variables keep the (paper-default) variant;
-    /// a set-but-invalid value is a hard error, not a silent default.
+    /// `GTAP_BACKOFF`, `GTAP_SM_TIER`. Unset variables keep the
+    /// (paper-default) variant; a set-but-invalid value is a hard error,
+    /// not a silent default.
     pub fn from_env() -> Result<PolicyConfig, String> {
         let mut p = PolicyConfig::default();
         if let Ok(v) = std::env::var("GTAP_QUEUE_SELECT") {
@@ -81,25 +88,31 @@ impl PolicyConfig {
         if let Ok(v) = std::env::var("GTAP_BACKOFF") {
             p.backoff = Backoff::parse(&v)?;
         }
+        if let Ok(v) = std::env::var("GTAP_SM_TIER") {
+            p.sm_tier = SmTier::parse(&v)?;
+        }
         Ok(p)
     }
 
-    /// Compact `qs/vs/sa/pl/bo` label for bench tables and sweep output.
-    /// Every component spelling parses back through the CLI/env surface.
+    /// Compact `qs/vs/sa/pl/bo/tier` label for bench tables and sweep
+    /// output. Every component spelling parses back through the CLI/env
+    /// surface.
     pub fn label(&self) -> String {
         format!(
-            "{}/{}/{}/{}/{}",
+            "{}/{}/{}/{}/{}/{}",
             self.queue_select.name(),
             self.victim_select.name(),
             self.steal_amount.spelling(),
             self.placement.name(),
-            self.backoff.name()
+            self.backoff.name(),
+            self.sm_tier.name()
         )
     }
 
     /// Every (QueueSelect × VictimSelect × StealAmount) combination with
-    /// placement and backoff at their defaults — the canonical sweep matrix
-    /// shared by `benches/ablations.rs` and `rust/tests/policy_matrix.rs`.
+    /// placement, backoff and SM tier at their defaults — the canonical
+    /// sweep matrix shared by `benches/ablations.rs` and the conformance
+    /// harness (`rust/tests/policy_conformance.rs`).
     pub fn steal_matrix() -> Vec<PolicyConfig> {
         let mut combos = vec![];
         for qs in QueueSelect::ALL {
@@ -116,6 +129,54 @@ impl PolicyConfig {
         }
         combos
     }
+
+    /// The conformance matrix: every combination the policy conformance
+    /// harness sweeps for correctness, determinism and thread-count-stable
+    /// stats. The full steal matrix, the placement × backoff cross, the
+    /// priority acquisition/placement pairs across steal amounts, and the
+    /// SM-tier modes across victim policies and steal amounts — deduplicated
+    /// (the default combination appears in several crosses).
+    pub fn conformance_matrix() -> Vec<PolicyConfig> {
+        let mut combos = Self::steal_matrix();
+        for pl in Placement::ALL {
+            for bo in Backoff::ALL {
+                combos.push(PolicyConfig {
+                    placement: pl,
+                    backoff: bo,
+                    ..Default::default()
+                });
+            }
+        }
+        for pl in [Placement::PriorityDepth, Placement::PriorityUser] {
+            for sa in StealAmount::ALL {
+                combos.push(PolicyConfig {
+                    queue_select: QueueSelect::Priority,
+                    placement: pl,
+                    steal_amount: sa,
+                    ..Default::default()
+                });
+            }
+        }
+        for tier in [SmTier::Spill, SmTier::Share] {
+            for vs in VictimSelect::ALL {
+                for sa in StealAmount::ALL {
+                    combos.push(PolicyConfig {
+                        sm_tier: tier,
+                        victim_select: vs,
+                        steal_amount: sa,
+                        ..Default::default()
+                    });
+                }
+            }
+        }
+        let mut uniq: Vec<PolicyConfig> = Vec::with_capacity(combos.len());
+        for c in combos {
+            if !uniq.contains(&c) {
+                uniq.push(c);
+            }
+        }
+        uniq
+    }
 }
 
 #[cfg(test)]
@@ -130,6 +191,7 @@ mod tests {
         assert_eq!(p.steal_amount, StealAmount::Fixed { max: None });
         assert_eq!(p.placement, Placement::EpaqIndex);
         assert_eq!(p.backoff, Backoff::ExponentialCapped);
+        assert_eq!(p.sm_tier, SmTier::Off);
     }
 
     #[test]
@@ -149,6 +211,9 @@ mod tests {
         for sa in StealAmount::ALL {
             assert_eq!(StealAmount::parse(&sa.spelling()).unwrap(), sa);
         }
+        for st in SmTier::ALL {
+            assert_eq!(SmTier::parse(st.name()).unwrap(), st);
+        }
         // general fixed caps keep their N through the spelling
         let fixed4 = StealAmount::Fixed { max: Some(4) };
         assert_eq!(fixed4.spelling(), "fixed:4");
@@ -162,10 +227,51 @@ mod tests {
         assert!(StealAmount::parse("all").is_err());
         assert!(Placement::parse("elsewhere").is_err());
         assert!(Backoff::parse("never").is_err());
+        assert!(SmTier::parse("sideways").is_err());
     }
 
     #[test]
     fn label_is_compact_and_complete() {
-        assert_eq!(PolicyConfig::default().label(), "rr/uniform/batch/epaq/exp");
+        assert_eq!(
+            PolicyConfig::default().label(),
+            "rr/uniform/batch/epaq/exp/off"
+        );
+        let p = PolicyConfig {
+            queue_select: QueueSelect::Priority,
+            steal_amount: StealAmount::Adaptive,
+            placement: Placement::PriorityDepth,
+            sm_tier: SmTier::Share,
+            ..Default::default()
+        };
+        assert_eq!(p.label(), "priority/uniform/adaptive/priority:depth/exp/share");
+    }
+
+    #[test]
+    fn conformance_matrix_is_deduplicated_and_covers_every_axis() {
+        let combos = PolicyConfig::conformance_matrix();
+        // 48 steal combos + 10 placement×backoff + 8 priority pairs +
+        // 24 SM-tier combos − duplicates (the default reappears once)
+        assert_eq!(combos.len(), 89, "{}", combos.len());
+        for (i, c) in combos.iter().enumerate() {
+            assert!(!combos[i + 1..].contains(c), "duplicate {}", c.label());
+        }
+        for qs in QueueSelect::ALL {
+            assert!(combos.iter().any(|c| c.queue_select == qs), "{}", qs.name());
+        }
+        for vs in VictimSelect::ALL {
+            assert!(combos.iter().any(|c| c.victim_select == vs));
+        }
+        for sa in StealAmount::ALL {
+            assert!(combos.iter().any(|c| c.steal_amount == sa));
+        }
+        for pl in Placement::ALL {
+            assert!(combos.iter().any(|c| c.placement == pl), "{}", pl.name());
+        }
+        for bo in Backoff::ALL {
+            assert!(combos.iter().any(|c| c.backoff == bo));
+        }
+        for st in SmTier::ALL {
+            assert!(combos.iter().any(|c| c.sm_tier == st), "{}", st.name());
+        }
     }
 }

@@ -1,7 +1,13 @@
 //! **Placement** — which of the spawner's queues a new child task is
 //! enqueued on. EPAQ (§4.4) classifies tasks by expected execution path at
 //! the spawn site; placement decides whether that classification, the
-//! worker's current affinity, or overflow pressure wins.
+//! worker's current affinity, overflow pressure, or a priority band wins.
+//!
+//! The `priority:<depth|user>` pair (with `QueueSelect::Priority` on the
+//! acquire side) is the Atos-style phase/depth-aware discipline: queue
+//! index = priority band (lower = more urgent), so a worker's acquisition
+//! order follows fork depth or the user's `priority(expr)` annotation
+//! instead of the EPAQ path classes.
 
 /// Child-enqueue target selection.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -21,13 +27,25 @@ pub enum Placement {
     /// under tight `GTAP_MAX_TASKS_PER_*` budgets. Covers spawned children
     /// and continuation re-enqueues alike.
     RoundRobinSpill,
+    /// Band by fork depth: child queue = `min(depth, nq - 1)`, so shallow
+    /// (earlier-phase) tasks occupy lower bands and, with
+    /// `QueueSelect::Priority`, are acquired first. Continuations re-enter
+    /// at the suspended task's own depth band.
+    PriorityDepth,
+    /// Band by user priority: child queue = `min(priority, nq - 1)` where
+    /// priority is the task record's `priority(expr)` value (0 = most
+    /// urgent; inherited from the parent when unannotated). Continuations
+    /// re-enter at the suspended task's own priority band.
+    PriorityUser,
 }
 
 impl Placement {
-    pub const ALL: [Placement; 3] = [
+    pub const ALL: [Placement; 5] = [
         Placement::EpaqIndex,
         Placement::OwnQueue,
         Placement::RoundRobinSpill,
+        Placement::PriorityDepth,
+        Placement::PriorityUser,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -35,6 +53,8 @@ impl Placement {
             Placement::EpaqIndex => "epaq",
             Placement::OwnQueue => "own",
             Placement::RoundRobinSpill => "rr-spill",
+            Placement::PriorityDepth => "priority:depth",
+            Placement::PriorityUser => "priority:user",
         }
     }
 
@@ -43,19 +63,54 @@ impl Placement {
             "epaq" => Ok(Placement::EpaqIndex),
             "own" | "own-queue" => Ok(Placement::OwnQueue),
             "rr-spill" | "spill" => Ok(Placement::RoundRobinSpill),
+            "priority:depth" | "priority-depth" => Ok(Placement::PriorityDepth),
+            "priority:user" | "priority-user" => Ok(Placement::PriorityUser),
             other => Err(format!(
-                "unknown placement policy {other:?} (epaq|own|rr-spill)"
+                "unknown placement policy {other:?} \
+                 (epaq|own|rr-spill|priority:depth|priority:user)"
             )),
         }
     }
 
     /// Queue index for a child spawned with EPAQ class `spawn_queue` by a
-    /// worker whose cursor sits at `cursor`.
+    /// worker whose cursor sits at `cursor`; `depth`/`priority` are the
+    /// *child's* record metadata (already inherited/overridden).
     #[inline]
-    pub fn place(&self, spawn_queue: usize, cursor: usize, num_queues: usize) -> usize {
+    pub fn place(
+        &self,
+        spawn_queue: usize,
+        cursor: usize,
+        num_queues: usize,
+        depth: u16,
+        priority: u8,
+    ) -> usize {
         match self {
             Placement::EpaqIndex | Placement::RoundRobinSpill => spawn_queue.min(num_queues - 1),
             Placement::OwnQueue => cursor,
+            Placement::PriorityDepth => (depth as usize).min(num_queues - 1),
+            Placement::PriorityUser => (priority as usize).min(num_queues - 1),
+        }
+    }
+
+    /// Queue index for a satisfied continuation: `join_queue` is the
+    /// `taskwait queue(expr)` value, `depth`/`priority` the *suspended
+    /// task's* metadata. Non-priority placements keep the pre-refactor
+    /// behavior (the join queue, clamped); the priority placements re-band
+    /// the continuation with its task.
+    #[inline]
+    pub fn place_continuation(
+        &self,
+        join_queue: usize,
+        num_queues: usize,
+        depth: u16,
+        priority: u8,
+    ) -> usize {
+        match self {
+            Placement::EpaqIndex | Placement::OwnQueue | Placement::RoundRobinSpill => {
+                join_queue.min(num_queues - 1)
+            }
+            Placement::PriorityDepth => (depth as usize).min(num_queues - 1),
+            Placement::PriorityUser => (priority as usize).min(num_queues - 1),
         }
     }
 
@@ -73,16 +128,42 @@ mod tests {
 
     #[test]
     fn epaq_index_clamps() {
-        assert_eq!(Placement::EpaqIndex.place(0, 1, 3), 0);
-        assert_eq!(Placement::EpaqIndex.place(2, 1, 3), 2);
-        assert_eq!(Placement::EpaqIndex.place(99, 1, 3), 2);
-        assert_eq!(Placement::RoundRobinSpill.place(99, 1, 3), 2);
+        assert_eq!(Placement::EpaqIndex.place(0, 1, 3, 0, 0), 0);
+        assert_eq!(Placement::EpaqIndex.place(2, 1, 3, 0, 0), 2);
+        assert_eq!(Placement::EpaqIndex.place(99, 1, 3, 0, 0), 2);
+        assert_eq!(Placement::RoundRobinSpill.place(99, 1, 3, 0, 0), 2);
     }
 
     #[test]
     fn own_queue_follows_cursor() {
-        assert_eq!(Placement::OwnQueue.place(2, 1, 3), 1);
-        assert_eq!(Placement::OwnQueue.place(0, 0, 1), 0);
+        assert_eq!(Placement::OwnQueue.place(2, 1, 3, 0, 0), 1);
+        assert_eq!(Placement::OwnQueue.place(0, 0, 1, 0, 0), 0);
+    }
+
+    #[test]
+    fn priority_bands_clamp_to_the_top_band() {
+        // depth banding ignores the EPAQ class and the cursor
+        assert_eq!(Placement::PriorityDepth.place(2, 1, 4, 0, 9), 0);
+        assert_eq!(Placement::PriorityDepth.place(0, 0, 4, 3, 0), 3);
+        assert_eq!(Placement::PriorityDepth.place(0, 0, 4, 100, 0), 3);
+        // user banding reads the record's priority
+        assert_eq!(Placement::PriorityUser.place(2, 1, 4, 9, 0), 0);
+        assert_eq!(Placement::PriorityUser.place(0, 0, 4, 0, 2), 2);
+        assert_eq!(Placement::PriorityUser.place(0, 0, 4, 0, 255), 3);
+        // one queue: everything degenerates to queue 0
+        assert_eq!(Placement::PriorityDepth.place(5, 0, 1, 7, 7), 0);
+        assert_eq!(Placement::PriorityUser.place(5, 0, 1, 7, 7), 0);
+    }
+
+    #[test]
+    fn continuations_reband_only_under_priority_placements() {
+        // pre-refactor behavior: the taskwait queue, clamped
+        assert_eq!(Placement::EpaqIndex.place_continuation(2, 3, 9, 9), 2);
+        assert_eq!(Placement::OwnQueue.place_continuation(5, 3, 9, 9), 2);
+        assert_eq!(Placement::RoundRobinSpill.place_continuation(1, 3, 9, 9), 1);
+        // priority placements re-enter at the task's own band
+        assert_eq!(Placement::PriorityDepth.place_continuation(0, 4, 2, 9), 2);
+        assert_eq!(Placement::PriorityUser.place_continuation(0, 4, 9, 1), 1);
     }
 
     #[test]
@@ -90,5 +171,7 @@ mod tests {
         assert!(!Placement::EpaqIndex.spills());
         assert!(!Placement::OwnQueue.spills());
         assert!(Placement::RoundRobinSpill.spills());
+        assert!(!Placement::PriorityDepth.spills());
+        assert!(!Placement::PriorityUser.spills());
     }
 }

@@ -24,13 +24,20 @@ pub enum QueueSelect {
     /// the owner reads its own counts from shared memory, so the scan is
     /// free in the cost model.
     LongestFirst,
+    /// Probe the lowest-indexed non-empty queue first (then cyclically
+    /// upward): with the `priority:<depth|user>` placements banding tasks
+    /// by priority value (lower = more urgent), acquisition drains bands
+    /// in priority order — Atos-style phase/depth-aware scheduling. The
+    /// scan reads the owner's own counts, free like `LongestFirst`'s.
+    Priority,
 }
 
 impl QueueSelect {
-    pub const ALL: [QueueSelect; 3] = [
+    pub const ALL: [QueueSelect; 4] = [
         QueueSelect::RoundRobin,
         QueueSelect::Sticky,
         QueueSelect::LongestFirst,
+        QueueSelect::Priority,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -38,6 +45,7 @@ impl QueueSelect {
             QueueSelect::RoundRobin => "rr",
             QueueSelect::Sticky => "sticky",
             QueueSelect::LongestFirst => "longest",
+            QueueSelect::Priority => "priority",
         }
     }
 
@@ -46,8 +54,9 @@ impl QueueSelect {
             "rr" | "round-robin" => Ok(QueueSelect::RoundRobin),
             "sticky" => Ok(QueueSelect::Sticky),
             "longest" | "longest-first" => Ok(QueueSelect::LongestFirst),
+            "priority" | "priority-first" => Ok(QueueSelect::Priority),
             other => Err(format!(
-                "unknown queue-select policy {other:?} (rr|sticky|longest)"
+                "unknown queue-select policy {other:?} (rr|sticky|longest|priority)"
             )),
         }
     }
@@ -66,6 +75,9 @@ impl QueueSelect {
             QueueSelect::LongestFirst => (0..num_queues)
                 .max_by_key(|&q| (queues.len_of(worker, q), Reverse(q)))
                 .unwrap_or(0),
+            QueueSelect::Priority => (0..num_queues)
+                .find(|&q| queues.len_of(worker, q) > 0)
+                .unwrap_or(0),
         }
     }
 
@@ -73,7 +85,9 @@ impl QueueSelect {
     #[inline]
     pub fn commit(&self, cursor: &mut usize, hit: usize) {
         match self {
-            QueueSelect::RoundRobin | QueueSelect::LongestFirst => *cursor = hit,
+            QueueSelect::RoundRobin | QueueSelect::LongestFirst | QueueSelect::Priority => {
+                *cursor = hit
+            }
             QueueSelect::Sticky => {}
         }
     }
@@ -85,7 +99,7 @@ impl QueueSelect {
     #[inline]
     pub fn on_steal_miss(&self, cursor: &mut usize, num_queues: usize) {
         match self {
-            QueueSelect::RoundRobin | QueueSelect::LongestFirst => {
+            QueueSelect::RoundRobin | QueueSelect::LongestFirst | QueueSelect::Priority => {
                 if num_queues > 1 {
                     *cursor = (*cursor + 1) % num_queues;
                 }
@@ -135,6 +149,25 @@ mod tests {
         q.pop(0, 2, 0, 32, &mut out, &d);
         q.pop(0, 1, 0, 32, &mut out, &d);
         assert_eq!(QueueSelect::LongestFirst.start(0, 0, 3, &q), 0);
+    }
+
+    #[test]
+    fn priority_starts_at_the_lowest_nonempty_band() {
+        let d = DeviceSpec::h100();
+        let mut q = qs3();
+        q.push(0, 2, 0, &[1, 2], &d).unwrap();
+        assert_eq!(QueueSelect::Priority.start(0, 1, 3, &q), 2);
+        q.push(0, 1, 0, &[3], &d).unwrap();
+        assert_eq!(
+            QueueSelect::Priority.start(0, 0, 3, &q),
+            1,
+            "band 1 outranks band 2 regardless of occupancy"
+        );
+        // all empty: falls back to band 0, ignoring the cursor
+        let mut out = vec![];
+        q.pop(0, 1, 0, 32, &mut out, &d);
+        q.pop(0, 2, 0, 32, &mut out, &d);
+        assert_eq!(QueueSelect::Priority.start(0, 2, 3, &q), 0);
     }
 
     #[test]

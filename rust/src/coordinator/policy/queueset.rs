@@ -81,6 +81,16 @@ impl QueueSet {
         !matches!(self, QueueSet::Global(_))
     }
 
+    /// Whether the per-SM hierarchical tier (`policy::SmTier`) applies:
+    /// the tier sits *between* own deques and remote victims, so it is
+    /// meaningful exactly when stealing is. A global queue is already one
+    /// shared pool — layering an SM pool on top would only add hops — so
+    /// `SmPool::for_config` gates on this and the tier degenerates to
+    /// `Off` there (the `sm_spills`/`sm_pool_hits` stats stay zero).
+    pub fn supports_sm_tier(&self) -> bool {
+        self.supports_steal()
+    }
+
     /// Pop from `worker`'s own queue `qidx`.
     pub fn pop(
         &mut self,
@@ -231,6 +241,7 @@ mod tests {
         let op = qs.pop(1, 0, 0, 32, &mut out, &d);
         assert_eq!(op.taken, 1, "any worker pops the shared queue");
         assert!(!qs.supports_steal());
+        assert!(!qs.supports_sm_tier(), "no SM tier over a global queue");
     }
 
     #[test]
@@ -244,6 +255,7 @@ mod tests {
             assert_eq!(op.taken, 2);
             assert_eq!(qs.len_of(0, 0), 1);
             assert!(qs.supports_steal());
+            assert!(qs.supports_sm_tier());
         }
     }
 

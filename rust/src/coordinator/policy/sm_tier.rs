@@ -1,0 +1,241 @@
+//! **SmTier** — the per-SM hierarchical queue tier (ROADMAP: "per-SM
+//! hierarchical queues"; paper §7 names hierarchical schemes as future
+//! work).
+//!
+//! Between a worker's own deques and remote victims sits an SM-shared
+//! FIFO pool ([`SmPool`], one per SM): an idle worker drains its SM's pool
+//! *before* crossing the L2 slice to steal from a remote victim, and pool
+//! traffic is charged at the same 60% intra-SM discount as
+//! `VictimSelect::LocalityFirst` same-SM steals ([`intra_sm_cycles`]).
+//!
+//! Two active modes decide how work *enters* the pool:
+//!
+//! * [`SmTier::Spill`] — overflow only: a push that would exceed the own
+//!   deque's capacity spills the excess to the SM pool instead of failing
+//!   the run (before any `Placement::RoundRobinSpill` cross-class split).
+//!   While nothing ever overflows this mode is an **exact no-op** — the
+//!   empty-pool check is a free owner-side count read (same cost-model
+//!   justification as the `QueueSelect::LongestFirst` scan), so runs are
+//!   bit-identical to `SmTier::Off` (pinned in `rust/tests/edge_cases.rs`
+//!   and `rust/tests/policy_golden.rs`).
+//! * [`SmTier::Share`] — spill plus proactive sharing: every multi-task
+//!   push hands its tail half to the SM pool whenever the SM hosts more
+//!   than one worker, so same-SM peers acquire siblings without a single
+//!   remote steal. This is the locality mechanism proper.
+//!
+//! The tier applies only to queue organizations that steal
+//! (`QueueSet::supports_sm_tier`): a global queue has no locality to
+//! exploit, so the pool construction is gated off there and the tier
+//! degenerates to `Off`.
+
+use crate::coordinator::config::GtapConfig;
+use crate::coordinator::globalq::GlobalQueue;
+use crate::coordinator::queue::QueueOp;
+use crate::coordinator::records::TaskId;
+use crate::sim::config::DeviceSpec;
+
+/// Per-SM hierarchical queue-tier mode.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SmTier {
+    /// No SM tier — own deques and remote victims only (the paper's
+    /// design and the pre-refactor behavior).
+    #[default]
+    Off,
+    /// SM pool absorbs deque overflow; idle workers drain it before
+    /// stealing remotely. Exact no-op while nothing overflows.
+    Spill,
+    /// Spill, plus every multi-task push proactively hands its tail half
+    /// to the SM pool when same-SM peers exist.
+    Share,
+}
+
+impl SmTier {
+    pub const ALL: [SmTier; 3] = [SmTier::Off, SmTier::Spill, SmTier::Share];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SmTier::Off => "off",
+            SmTier::Spill => "spill",
+            SmTier::Share => "share",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SmTier, String> {
+        match s {
+            "off" => Ok(SmTier::Off),
+            "spill" => Ok(SmTier::Spill),
+            "share" => Ok(SmTier::Share),
+            other => Err(format!("unknown sm-tier policy {other:?} (off|spill|share)")),
+        }
+    }
+
+    /// Whether the tier participates in scheduling at all.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        !matches!(self, SmTier::Off)
+    }
+
+    /// Whether multi-task pushes proactively share with the SM pool.
+    #[inline]
+    pub fn shares(&self) -> bool {
+        matches!(self, SmTier::Share)
+    }
+}
+
+/// Cycles charged for an SM-pool operation: the pool lives in the SM's L2
+/// slice, so traffic pays the same 60% discount as a
+/// `VictimSelect::LocalityFirst` same-SM steal.
+#[inline]
+pub fn intra_sm_cycles(op_cycles: u64) -> u64 {
+    op_cycles * 6 / 10
+}
+
+/// The per-SM pools of one run. An empty `pools` vector means the tier is
+/// disabled (policy `Off`, or a queue organization without stealing) and
+/// every accessor short-circuits.
+pub struct SmPool {
+    pools: Vec<GlobalQueue>,
+}
+
+impl SmPool {
+    /// A pool set with `sms` pools of `capacity` tasks each.
+    pub fn new(sms: usize, capacity: usize) -> SmPool {
+        SmPool {
+            pools: (0..sms).map(|_| GlobalQueue::new(capacity.max(2))).collect(),
+        }
+    }
+
+    /// The disabled pool set (no storage, `enabled()` is false).
+    pub fn disabled() -> SmPool {
+        SmPool { pools: Vec::new() }
+    }
+
+    /// Build the pool set a configuration calls for: one pool per SM with
+    /// the per-worker deque capacity, or disabled when the tier is off or
+    /// the queue organization does not steal.
+    pub fn for_config(cfg: &GtapConfig, dev: &DeviceSpec, org_supports_tier: bool) -> SmPool {
+        if !cfg.policy.sm_tier.enabled() || !org_supports_tier {
+            return SmPool::disabled();
+        }
+        SmPool::new(dev.sms, cfg.queue_capacity())
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        !self.pools.is_empty()
+    }
+
+    /// Queued tasks in `sm`'s pool. Free in the cost model: the owner side
+    /// reads the count from its own L2 slice (the LongestFirst-scan
+    /// justification) — this is what keeps `Spill` an exact no-op while
+    /// nothing has spilled.
+    #[inline]
+    pub fn len(&self, sm: usize) -> usize {
+        self.pools[sm].len()
+    }
+
+    /// Free slots in `sm`'s pool (spill planning).
+    #[inline]
+    pub fn free(&self, sm: usize) -> usize {
+        let p = &self.pools[sm];
+        p.capacity() - p.len()
+    }
+
+    /// Push `ids` into `sm`'s pool. `None` = the whole batch does not fit
+    /// (the caller splits by `free`).
+    pub fn push(
+        &mut self,
+        sm: usize,
+        now: u64,
+        ids: &[TaskId],
+        dev: &DeviceSpec,
+    ) -> Option<QueueOp> {
+        self.pools[sm].push_batch(now, ids, dev)
+    }
+
+    /// Pop up to `max` tasks FIFO from `sm`'s pool.
+    pub fn pop(
+        &mut self,
+        sm: usize,
+        now: u64,
+        max: usize,
+        out: &mut Vec<TaskId>,
+        dev: &DeviceSpec,
+    ) -> QueueOp {
+        self.pools[sm].pop_batch(now, max, out, dev)
+    }
+
+    /// Total pooled tasks across SMs. At quiescence this is zero (every
+    /// pooled task is drained before the run can terminate — the
+    /// conformance harness pins `sm_pool_hits == sm_spills`); the model
+    /// tests in `rust/tests/queue_model.rs` check it against the
+    /// per-SM reference deques.
+    pub fn total_len(&self) -> usize {
+        self.pools.iter().map(|p| p.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::SchedulerKind;
+
+    #[test]
+    fn names_round_trip_and_bad_spelling_rejected() {
+        for t in SmTier::ALL {
+            assert_eq!(SmTier::parse(t.name()).unwrap(), t);
+        }
+        assert!(SmTier::parse("maybe").is_err());
+    }
+
+    #[test]
+    fn mode_predicates() {
+        assert!(!SmTier::Off.enabled());
+        assert!(SmTier::Spill.enabled() && !SmTier::Spill.shares());
+        assert!(SmTier::Share.enabled() && SmTier::Share.shares());
+    }
+
+    #[test]
+    fn pool_is_fifo_per_sm_and_refuses_overflow() {
+        let d = DeviceSpec::h100();
+        let mut p = SmPool::new(2, 4);
+        assert!(p.enabled());
+        p.push(0, 0, &[1, 2, 3], &d).unwrap();
+        p.push(1, 0, &[9], &d).unwrap();
+        assert_eq!(p.len(0), 3);
+        assert_eq!(p.free(0), 1);
+        assert_eq!(p.len(1), 1);
+        assert!(p.push(0, 0, &[4, 5], &d).is_none(), "overflow refused");
+        assert_eq!(p.len(0), 3, "failed push must not mutate");
+        let mut out = vec![];
+        let op = p.pop(0, 0, 2, &mut out, &d);
+        assert_eq!(op.taken, 2);
+        assert_eq!(out, vec![1, 2], "oldest-first across the SM pool");
+        assert_eq!(p.total_len(), 2);
+    }
+
+    #[test]
+    fn for_config_gates_on_policy_and_organization() {
+        let d = DeviceSpec::h100();
+        let mut cfg = GtapConfig {
+            grid_size: 2,
+            block_size: 32,
+            ..Default::default()
+        };
+        assert!(!SmPool::for_config(&cfg, &d, true).enabled(), "tier off");
+        cfg.policy.sm_tier = SmTier::Share;
+        assert!(SmPool::for_config(&cfg, &d, true).enabled());
+        assert!(
+            !SmPool::for_config(&cfg, &d, false).enabled(),
+            "no tier without stealing (global queue)"
+        );
+        cfg.scheduler = SchedulerKind::GlobalQueue; // spelled out for readers
+        assert!(!SmPool::for_config(&cfg, &d, false).enabled());
+    }
+
+    #[test]
+    fn intra_sm_discount_matches_locality_first() {
+        assert_eq!(intra_sm_cycles(100), 60);
+        assert_eq!(intra_sm_cycles(0), 0);
+    }
+}

@@ -2,8 +2,44 @@
 //!
 //! Acquisition granularity is a first-class tunable (cf. worksharing-task
 //! runtimes): steal-one is the classic Chase–Lev discipline, a fixed warp
-//! batch is the paper's design (Algorithm 1's `max_count_to_pop`), and
-//! steal-half splits the victim's backlog with the thief.
+//! batch is the paper's design (Algorithm 1's `max_count_to_pop`),
+//! steal-half splits the victim's backlog with the thief, and the adaptive
+//! controller switches between the two online from the observed
+//! steal-failure rate the scheduler already tracks in `RunStats`.
+
+/// Steal attempts before the adaptive controller trusts its failure rate;
+/// below this it behaves like a victim-capped batch steal.
+pub const ADAPTIVE_WARMUP_ATTEMPTS: u64 = 16;
+
+/// Failure-rate threshold in percent: at or above it the adaptive
+/// controller treats the run as work-starved and steals half instead of a
+/// full batch (leaving the rest with the victim spreads scarce work).
+pub const ADAPTIVE_FAILURE_THRESHOLD_PCT: u64 = 50;
+
+/// The adaptive steal-amount controller, as a pure function of the
+/// run-wide steal counters (`RunStats::steal_attempts` / `steals_ok`) and
+/// the victim's visible backlog. Properties (pinned by
+/// `rust/tests/queue_model.rs`): the result is in
+/// `1 ..= min(batch_max, victim_len).max(1)` — it never requests more than
+/// the victim holds — and it responds monotonically to the failure rate
+/// (more failures never steal more).
+#[inline]
+pub fn adaptive_amount(
+    attempts: u64,
+    steals_ok: u64,
+    victim_len: usize,
+    batch_max: usize,
+) -> usize {
+    let fails = attempts.saturating_sub(steals_ok);
+    let starved = attempts >= ADAPTIVE_WARMUP_ATTEMPTS
+        && fails * 100 >= attempts * ADAPTIVE_FAILURE_THRESHOLD_PCT;
+    let want = if starved {
+        victim_len.div_ceil(2)
+    } else {
+        victim_len
+    };
+    want.clamp(1, batch_max.max(1))
+}
 
 /// Claim size per successful steal.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -17,6 +53,12 @@ pub enum StealAmount {
     /// victim's count is already loaded on the steal path, so the policy
     /// adds no cost of its own.
     Half,
+    /// Switch between batch and half online: while the observed
+    /// steal-failure rate stays under [`ADAPTIVE_FAILURE_THRESHOLD_PCT`]
+    /// work is plentiful and a steal claims a full (victim-capped) batch;
+    /// once failures dominate, the run is starved and steals take half so
+    /// the backlog stays spread across victims. See [`adaptive_amount`].
+    Adaptive,
 }
 
 impl Default for StealAmount {
@@ -26,10 +68,11 @@ impl Default for StealAmount {
 }
 
 impl StealAmount {
-    pub const ALL: [StealAmount; 3] = [
+    pub const ALL: [StealAmount; 4] = [
         StealAmount::Fixed { max: None },
         StealAmount::Fixed { max: Some(1) },
         StealAmount::Half,
+        StealAmount::Adaptive,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -38,6 +81,7 @@ impl StealAmount {
             StealAmount::Fixed { max: Some(1) } => "one",
             StealAmount::Fixed { max: Some(_) } => "fixed",
             StealAmount::Half => "half",
+            StealAmount::Adaptive => "adaptive",
         }
     }
 
@@ -56,6 +100,7 @@ impl StealAmount {
             "batch" => Ok(StealAmount::Fixed { max: None }),
             "one" => Ok(StealAmount::Fixed { max: Some(1) }),
             "half" => Ok(StealAmount::Half),
+            "adaptive" => Ok(StealAmount::Adaptive),
             other => {
                 if let Some(n) = other.strip_prefix("fixed:") {
                     let n: usize = n
@@ -67,7 +112,8 @@ impl StealAmount {
                     Ok(StealAmount::Fixed { max: Some(n) })
                 } else {
                     Err(format!(
-                        "unknown steal-amount policy {other:?} (batch|one|half|fixed:N)"
+                        "unknown steal-amount policy {other:?} \
+                         (batch|one|half|adaptive|fixed:N)"
                     ))
                 }
             }
@@ -77,6 +123,7 @@ impl StealAmount {
     /// Tasks to request from a victim whose probed queue currently holds
     /// `victim_len` tasks; `batch_max` is the warp batch width. Always at
     /// least 1 (a steal that asks for nothing would livelock the thief).
+    /// Zero-history view — see [`StealAmount::amount_with_stats`].
     #[inline]
     pub fn amount(&self, victim_len: usize, batch_max: usize) -> usize {
         self.amount_lazy(batch_max, || victim_len)
@@ -84,12 +131,31 @@ impl StealAmount {
 
     /// [`StealAmount::amount`] with a lazy victim-length probe: `Fixed`
     /// never inspects the victim, so the hot steal path only pays the
-    /// occupancy read when the policy actually uses it (`Half`).
+    /// occupancy read when the policy actually uses it (`Half`,
+    /// `Adaptive`). Zero-history view: `Adaptive` behaves as its warm-up
+    /// regime (victim-capped batch).
     #[inline]
     pub fn amount_lazy(&self, batch_max: usize, victim_len: impl FnOnce() -> usize) -> usize {
+        self.amount_with_stats(batch_max, 0, 0, victim_len)
+    }
+
+    /// The full policy: claim size given the run-wide steal counters the
+    /// scheduler tracks in `RunStats`. `Fixed` and `Half` ignore the
+    /// history; `Adaptive` dispatches through [`adaptive_amount`].
+    #[inline]
+    pub fn amount_with_stats(
+        &self,
+        batch_max: usize,
+        steal_attempts: u64,
+        steals_ok: u64,
+        victim_len: impl FnOnce() -> usize,
+    ) -> usize {
         match *self {
             StealAmount::Fixed { max } => max.unwrap_or(batch_max).max(1),
             StealAmount::Half => victim_len().div_ceil(2).clamp(1, batch_max.max(1)),
+            StealAmount::Adaptive => {
+                adaptive_amount(steal_attempts, steals_ok, victim_len(), batch_max)
+            }
         }
     }
 }
@@ -119,6 +185,25 @@ mod tests {
         assert_eq!(StealAmount::Half.amount(9, 32), 5);
         assert_eq!(StealAmount::Half.amount(63, 32), 32);
         assert_eq!(StealAmount::Half.amount(1000, 32), 32);
+    }
+
+    #[test]
+    fn adaptive_switches_regimes_at_the_failure_threshold() {
+        // no history yet: victim-capped batch
+        assert_eq!(adaptive_amount(0, 0, 40, 32), 32);
+        assert_eq!(adaptive_amount(0, 0, 10, 32), 10);
+        // below warm-up the rate is not trusted even when every try failed
+        assert_eq!(adaptive_amount(ADAPTIVE_WARMUP_ATTEMPTS - 1, 0, 40, 32), 32);
+        // starved (100% failures): steal-half
+        assert_eq!(adaptive_amount(ADAPTIVE_WARMUP_ATTEMPTS, 0, 40, 32), 20);
+        // 40% failure rate: plentiful, full victim-capped batch
+        assert_eq!(adaptive_amount(100, 60, 40, 32), 32);
+        // 60% failure rate: starved, ceil(40 / 2)
+        assert_eq!(adaptive_amount(100, 40, 40, 32), 20);
+        // never zero, never past the batch width, never past the victim
+        assert_eq!(adaptive_amount(100, 0, 0, 32), 1);
+        assert_eq!(adaptive_amount(100, 100, 1000, 32), 32);
+        assert_eq!(adaptive_amount(0, 0, 3, 1), 1);
     }
 
     #[test]

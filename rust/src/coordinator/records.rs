@@ -38,6 +38,13 @@ pub struct TaskMeta {
     /// Finished, record retained so the parent can read the result field.
     pub done: bool,
     pub alive: bool,
+    /// Fork depth: 0 for the root, parent depth + 1 (saturating) for
+    /// children — set at allocation, read by `Placement::PriorityDepth`.
+    pub depth: u16,
+    /// User priority (0 = most urgent): `priority(expr)` clamped to
+    /// `0..=255` at the spawn site, inherited from the parent when the
+    /// clause is absent — read by `Placement::PriorityUser`.
+    pub priority: u8,
 }
 
 impl Default for TaskMeta {
@@ -52,6 +59,8 @@ impl Default for TaskMeta {
             join_queue: 0,
             done: false,
             alive: false,
+            depth: 0,
+            priority: 0,
         }
     }
 }
@@ -109,12 +118,23 @@ impl RecordPool {
     /// exhausted (the caller surfaces the Table-1 feasibility error).
     pub fn alloc(&mut self, func: FuncId, parent: TaskId) -> Option<TaskId> {
         let id = self.free.pop()?;
+        // lineage metadata for the priority placement policies: depth
+        // advances by one per fork level, user priority is inherited (the
+        // spawn site may overwrite it with an explicit priority(expr))
+        let (depth, priority) = if parent == NO_TASK {
+            (0, 0)
+        } else {
+            let pm = &self.meta[parent as usize];
+            (pm.depth.saturating_add(1), pm.priority)
+        };
         let m = &mut self.meta[id as usize];
         debug_assert!(!m.alive, "double allocation of task {id}");
         *m = TaskMeta {
             func,
             parent,
             alive: true,
+            depth,
+            priority,
             ..TaskMeta::default()
         };
         let base = id as usize * self.data_stride;
@@ -245,6 +265,28 @@ mod tests {
         // GTAP_MAX_CHILD_TASKS exceeded
         let c2 = p.alloc(0, parent).unwrap();
         assert_eq!(p.push_child(parent, c2), None);
+    }
+
+    #[test]
+    fn depth_and_priority_flow_down_the_fork_tree() {
+        let mut p = RecordPool::new(8, 1, 2);
+        let root = p.alloc(0, NO_TASK).unwrap();
+        assert_eq!(p.meta(root).depth, 0);
+        assert_eq!(p.meta(root).priority, 0);
+        p.meta_mut(root).priority = 3;
+        let child = p.alloc(0, root).unwrap();
+        assert_eq!(p.meta(child).depth, 1, "depth advances per fork level");
+        assert_eq!(p.meta(child).priority, 3, "priority inherited by default");
+        p.meta_mut(child).priority = 1; // explicit priority(expr) override
+        let grandchild = p.alloc(0, child).unwrap();
+        assert_eq!(p.meta(grandchild).depth, 2);
+        assert_eq!(p.meta(grandchild).priority, 1);
+        // reuse resets lineage
+        p.free(grandchild);
+        let fresh_root = p.alloc(0, NO_TASK).unwrap();
+        assert_eq!(fresh_root, grandchild);
+        assert_eq!(p.meta(fresh_root).depth, 0);
+        assert_eq!(p.meta(fresh_root).priority, 0);
     }
 
     #[test]

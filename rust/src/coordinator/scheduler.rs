@@ -52,7 +52,7 @@
 use super::clock::WorkerClock;
 use super::config::{Granularity, GtapConfig};
 use super::join::{self, FinishEffect};
-use super::policy::{PolicyConfig, QueueSet, STEAL_TRIES};
+use super::policy::{intra_sm_cycles, PolicyConfig, QueueSet, SmPool, STEAL_TRIES};
 use super::records::{RecordPool, TaskId, NO_TASK};
 use crate::ir::bytecode::Module;
 use crate::ir::decoded::DecodedModule;
@@ -105,6 +105,12 @@ pub struct RunStats {
     pub root_result: Option<Value>,
     pub idle_iterations: u64,
     pub peak_live_records: usize,
+    /// Tasks routed *into* per-SM tier pools (overflow spill + proactive
+    /// share); zero unless `PolicyConfig::sm_tier` is active.
+    pub sm_spills: u64,
+    /// Tasks acquired *from* per-SM tier pools. Every pooled task is
+    /// eventually drained, so at quiescence this equals `sm_spills`.
+    pub sm_pool_hits: u64,
     /// Captured print_int/print_float output.
     pub output: Vec<String>,
 }
@@ -134,6 +140,10 @@ pub struct Scheduler<'a> {
     pub dev: &'a DeviceSpec,
     pub queues: QueueSet,
     pub records: RecordPool,
+    /// The per-SM hierarchical tier pools (`policy.sm_tier`); disabled —
+    /// empty, zero-cost — unless the policy enables the tier and the queue
+    /// organization steals.
+    sm_pool: SmPool,
     /// The scheduling-policy combination this run dispatches over
     /// (copied out of `cfg` once at construction).
     policy: PolicyConfig,
@@ -241,11 +251,14 @@ impl<'a> Scheduler<'a> {
         }
         let decoded = DecodedModule::decode(module);
         let frames = (0..batch_max).map(|_| LaneFrame::sized(&decoded)).collect();
+        let queues = QueueSet::for_config(cfg);
+        let sm_pool = SmPool::for_config(cfg, dev, queues.supports_sm_tier());
         Ok(Scheduler {
             module,
             cfg,
             dev,
-            queues: QueueSet::for_config(cfg),
+            queues,
+            sm_pool,
             records: RecordPool::new(pool_cap, data_words, child_cap),
             policy: cfg.policy,
             decoded,
@@ -335,10 +348,11 @@ impl<'a> Scheduler<'a> {
     }
 
     /// Acquire phase: fill `batch` from the immediate buffer, own queues
-    /// (**QueueSelect** probe order), or steals (**VictimSelect** ×
-    /// **StealAmount**). Returns the cycles charged. Stats invariant: the
-    /// steal path is entered — and `steal_attempts` counted — only when
-    /// the queue organization supports stealing and a victim exists.
+    /// (**QueueSelect** probe order), the SM-shared tier pool (**SmTier**),
+    /// or steals (**VictimSelect** × **StealAmount**). Returns the cycles
+    /// charged. Stats invariant: the steal path is entered — and
+    /// `steal_attempts` counted — only when the queue organization supports
+    /// stealing and a victim exists.
     fn acquire(&mut self, w: usize, now: u64, batch: &mut Vec<TaskId>) -> u64 {
         let dev = self.dev;
         let nq = self.cfg.num_queues;
@@ -365,6 +379,22 @@ impl<'a> Scheduler<'a> {
             }
         }
 
+        // per-SM hierarchical tier: drain the SM-shared pool before any
+        // remote steal crosses the L2 slice. The empty-pool check is a free
+        // owner-side count read (LongestFirst-scan justification), so an
+        // enabled-but-never-fed tier stays an exact no-op.
+        if self.sm_pool.enabled() {
+            let sm = self.workers[w].sm;
+            if self.sm_pool.len(sm) > 0 {
+                let op = self.sm_pool.pop(sm, now + cost, self.batch_max, batch, dev);
+                cost += intra_sm_cycles(op.cycles);
+                if op.taken > 0 {
+                    self.stats.sm_pool_hits += op.taken as u64;
+                    return cost;
+                }
+            }
+        }
+
         // steal from other workers' queues
         if !self.queues.supports_steal() || self.workers.len() < 2 {
             return cost;
@@ -384,9 +414,14 @@ impl<'a> Scheduler<'a> {
                 &mut self.workers[w].rng,
             );
             self.stats.steal_attempts += 1;
-            let amount = policy
-                .steal_amount
-                .amount_lazy(self.batch_max, || self.queues.len_of(victim, q));
+            // Adaptive sizes the claim from the run-wide failure rate the
+            // stats already track; Fixed/Half ignore the two counters.
+            let amount = policy.steal_amount.amount_with_stats(
+                self.batch_max,
+                self.stats.steal_attempts,
+                self.stats.steals_ok,
+                || self.queues.len_of(victim, q),
+            );
             let op = self.queues.steal(victim, q, now + cost, amount, batch, dev);
             let same_sm = self.workers[victim].sm == sm;
             cost += policy.victim_select.steal_cycles(op.cycles, same_sm)
@@ -404,12 +439,19 @@ impl<'a> Scheduler<'a> {
         cost
     }
 
-    /// Push `ids` onto `w`'s queue `q` at time `now`, honoring
-    /// **Placement** overflow semantics: strict placements fail the run
-    /// (the Table-1 feasibility error), `RoundRobinSpill` splits the batch
-    /// across the queue classes by free space — target class first, then
-    /// cyclically — charging one batched push per queue touched. The one
-    /// overflow path for spawned children and continuations alike.
+    /// Push `ids` onto `w`'s queue `q` at time `now`, honoring **SmTier**
+    /// and **Placement** overflow semantics. Order of resort:
+    ///
+    /// 1. `SmTier::Share` first hands the tail half of a multi-task batch
+    ///    to the SM pool (when same-SM peers exist and the pool has room);
+    /// 2. the own queue takes the batch whole;
+    /// 3. on overflow, an enabled SM tier absorbs what fits into the pool;
+    /// 4. `RoundRobinSpill` splits any remainder across the queue classes
+    ///    by free space — target class first, then cyclically — charging
+    ///    one batched push per queue touched;
+    /// 5. anything left is the Table-1 feasibility error.
+    ///
+    /// The one overflow path for spawned children and continuations alike.
     /// Returns the cycles charged.
     fn push_with_spill(
         &mut self,
@@ -421,9 +463,56 @@ impl<'a> Scheduler<'a> {
     ) -> Result<u64> {
         let dev = self.dev;
         let nq = self.cfg.num_queues;
-        if let Some(op) = self.queues.push(w, q, now, ids, dev) {
+        let mut cost = 0;
+        let mut ids: &[TaskId] = ids;
+
+        // Share tier: proactively give the tail half to the SM pool so
+        // same-SM peers pick up siblings without a remote steal.
+        if self.policy.sm_tier.shares() && self.sm_pool.enabled() && ids.len() >= 2 {
+            let sm = self.workers[w].sm;
+            if self.sm_peers[sm].len() > 1 {
+                let give = (ids.len() / 2).min(self.sm_pool.free(sm));
+                if give > 0 {
+                    let (keep, shared) = ids.split_at(ids.len() - give);
+                    let op = self
+                        .sm_pool
+                        .push(sm, now + cost, shared, dev)
+                        .expect("share within free space cannot overflow");
+                    cost += intra_sm_cycles(op.cycles);
+                    self.stats.sm_spills += give as u64;
+                    ids = keep;
+                }
+            }
+        }
+
+        if let Some(op) = self.queues.push(w, q, now + cost, ids, dev) {
             self.stats.pushes += 1;
-            return Ok(op.cycles);
+            return Ok(cost + op.cycles);
+        }
+        // Overflow: an enabled SM tier absorbs what fits before any
+        // cross-class spill (and before failing the run). `sm_pool` is
+        // only constructed enabled when the policy tier is on and the
+        // organization steals, so its own gate suffices.
+        if self.sm_pool.enabled() {
+            let sm = self.workers[w].sm;
+            let fit = self.sm_pool.free(sm).min(ids.len());
+            if fit > 0 {
+                let (to_pool, rest) = ids.split_at(fit);
+                let op = self
+                    .sm_pool
+                    .push(sm, now + cost, to_pool, dev)
+                    .expect("spill within free space cannot overflow");
+                cost += intra_sm_cycles(op.cycles);
+                self.stats.sm_spills += fit as u64;
+                ids = rest;
+                if ids.is_empty() {
+                    return Ok(cost);
+                }
+                if let Some(op) = self.queues.push(w, q, now + cost, ids, dev) {
+                    self.stats.pushes += 1;
+                    return Ok(cost + op.cycles);
+                }
+            }
         }
         if !self.policy.placement.spills() || nq < 2 {
             bail!(
@@ -431,7 +520,6 @@ impl<'a> Scheduler<'a> {
                  raise GTAP_MAX_TASKS_PER_{{WARP,BLOCK}}"
             );
         }
-        let mut cost = 0;
         let mut rest: &[TaskId] = ids;
         for k in 0..nq {
             if rest.is_empty() {
@@ -617,6 +705,11 @@ impl<'a> Scheduler<'a> {
                 })?;
                 let child_data = self.records.data_mut(child);
                 child_data[..s.argc as usize].copy_from_slice(&s.args[..s.argc as usize]);
+                // alloc inherited the parent's user priority; an explicit
+                // priority(expr) at the spawn site overrides it
+                if let Some(p) = s.priority {
+                    self.records.meta_mut(child).priority = p;
+                }
                 if !self.cfg.assume_no_taskwait {
                     self.records.push_child(task, child).with_context(|| {
                         format!(
@@ -628,7 +721,10 @@ impl<'a> Scheduler<'a> {
                 }
                 self.live_tasks += 1;
                 self.stats.spawns += 1;
-                let q = policy.placement.place(s.queue as usize, cursor, nq);
+                let cm = self.records.meta(child);
+                let q = policy
+                    .placement
+                    .place(s.queue as usize, cursor, nq, cm.depth, cm.priority);
                 spawned[q].push(child);
             }
             match out.end {
@@ -685,7 +781,10 @@ impl<'a> Scheduler<'a> {
             cost += self.push_with_spill(w, q, now + cost, ids, "spawned children")?;
         }
         for &(task, queue) in continuations.iter() {
-            let q = (queue as usize).min(nq - 1);
+            let m = self.records.meta(task);
+            let q = policy
+                .placement
+                .place_continuation(queue as usize, nq, m.depth, m.priority);
             cost += self.push_with_spill(w, q, now + cost, &[task], "a continuation")?;
         }
 

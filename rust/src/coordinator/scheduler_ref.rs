@@ -261,7 +261,9 @@ impl<'a> RefScheduler<'a> {
             self.cfg.policy.victim_select == VictimSelect::LocalityFirst;
         let cfg_steal_max = match self.cfg.policy.steal_amount {
             StealAmount::Fixed { max } => max,
-            StealAmount::Half => None, // inexpressible pre-refactor; golden tests don't use it
+            // inexpressible pre-refactor; golden tests only use these where
+            // they provably degenerate to the default (e.g. no steals)
+            StealAmount::Half | StealAmount::Adaptive => None,
         };
 
         self.stats.iterations += 1;

@@ -107,9 +107,14 @@ pub enum Stmt {
     },
     /// Expression statement (intrinsic / device-function call for effects).
     ExprStmt { expr: Expr, span: Span },
-    /// `#pragma gtap task [queue(q)]` + `dest = f(args);` or `f(args);`
+    /// `#pragma gtap task [queue(q)] [priority(p)]` + `dest = f(args);` or
+    /// `f(args);`
     Spawn {
         queue: Option<Expr>,
+        /// `priority(expr)` — the child's user priority (0 = most urgent),
+        /// read by the `priority:user` placement policy; absent = inherit
+        /// the parent's.
+        priority: Option<Expr>,
         /// Variable receiving the child's result at the next taskwait.
         dest: Option<String>,
         call: CallExpr,

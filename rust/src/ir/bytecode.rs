@@ -17,6 +17,10 @@ use super::types::Type;
 
 /// Virtual register index (per-lane frame slot).
 pub type Reg = u16;
+/// Register sentinel for "no `priority(expr)` clause" on a spawn: the
+/// child inherits its parent's user priority. Never a real register — the
+/// interpreter checks for it before indexing the frame.
+pub const NO_PRIORITY_REG: Reg = Reg::MAX;
 /// Program counter within a function's instruction array.
 pub type Pc = u32;
 /// Function index within a [`Module`].
@@ -102,11 +106,14 @@ pub enum Insn {
     StTd { off: u16, src: Reg },
     /// Spawn a child task: allocate record, copy `argc` argument registers
     /// from `arg_pool[arg_base..]`, enqueue to EPAQ queue index in `queue`.
+    /// `priority` holds the `priority(expr)` register ([`NO_PRIORITY_REG`]
+    /// when the clause is absent: the child inherits its parent's).
     Spawn {
         func: FuncId,
         arg_base: u32,
         argc: u8,
         queue: Reg,
+        priority: Reg,
     },
     /// `__gtap_prepare_for_join(next_state)`: suspend at a join point; the
     /// continuation re-enters at `state_entries[next_state]`, enqueued to

@@ -57,12 +57,14 @@ pub enum DInsn {
     LdTd { dst: Reg, off: u16 },
     StTd { off: u16, src: Reg },
     /// Spawn a child task; argument registers at
-    /// `DecodedModule::args[arg_base .. arg_base + argc]`.
+    /// `DecodedModule::args[arg_base .. arg_base + argc]`. `priority` is
+    /// the `priority(expr)` register, or `NO_PRIORITY_REG` (inherit).
     Spawn {
         func: FuncId,
         arg_base: u32,
         argc: u8,
         queue: Reg,
+        priority: Reg,
     },
     PrepareJoin { next_state: u16, queue: Reg },
     FinishTask,
@@ -159,11 +161,13 @@ impl DecodedModule {
                         arg_base: b,
                         argc,
                         queue,
+                        priority,
                     } => DInsn::Spawn {
                         func,
                         arg_base: arg_base + b,
                         argc,
                         queue,
+                        priority,
                     },
                     Insn::PrepareJoin { next_state, queue } => {
                         DInsn::PrepareJoin { next_state, queue }

@@ -14,7 +14,8 @@ use gtap::bench::runners::{self, Exec};
 use gtap::compiler;
 use gtap::coordinator::config::{GtapConfig, DEFAULT_MAX_TASK_DATA_SIZE};
 use gtap::coordinator::{
-    Backoff, Placement, PolicyConfig, QueueSelect, SchedulerKind, StealAmount, VictimSelect,
+    Backoff, Placement, PolicyConfig, QueueSelect, SchedulerKind, SmTier, StealAmount,
+    VictimSelect,
 };
 use gtap::sim::DeviceSpec;
 use gtap::util::cli::Args;
@@ -35,9 +36,11 @@ fn main() -> Result<()> {
                  \n      [--n N] [--cutoff C] [--device gpu|cpu|seq] [--grid G] [--block B] \\\
                  \n      [--sched ws|gq|seqcl] [--queues Q] [--epaq] [--depth D] \\\
                  \n      [--mem-ops M] [--compute-iters I] \\\
-                 \n      [--queue-select rr|sticky|longest] [--victim uniform|locality|occupancy] \\\
-                 \n      [--steal batch|one|half|fixed:N] [--placement epaq|own|rr-spill] \\\
-                 \n      [--backoff exp|fixed]\
+                 \n      [--queue-select rr|sticky|longest|priority] \\\
+                 \n      [--victim uniform|locality|occupancy] \\\
+                 \n      [--steal batch|one|half|adaptive|fixed:N] \\\
+                 \n      [--placement epaq|own|rr-spill|priority:depth|priority:user] \\\
+                 \n      [--backoff exp|fixed] [--sm-tier off|spill|share]\
                  \n  gtap devices                       device cost models (Table 2)\
                  \n  gtap config                        runtime defaults (Table 1)"
             );
@@ -80,7 +83,7 @@ fn build_exec(args: &Args) -> Result<Exec> {
     });
     exec = exec.queues(args.get_or("queues", 1usize));
     exec = exec.seed(args.get_or("seed", 0x6A7A9u64));
-    exec.cfg.policy = build_policy(args)?;
+    exec = exec.policy(build_policy(args)?);
     Ok(exec)
 }
 
@@ -102,6 +105,9 @@ fn build_policy(args: &Args) -> Result<PolicyConfig> {
     }
     if let Some(v) = args.get("backoff") {
         pol.backoff = Backoff::parse(v).map_err(|e| gtap::anyhow!(e))?;
+    }
+    if let Some(v) = args.get("sm-tier") {
+        pol.sm_tier = SmTier::parse(v).map_err(|e| gtap::anyhow!(e))?;
     }
     Ok(pol)
 }
@@ -186,6 +192,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         out.stats.idle_iterations,
         out.stats.peak_live_records,
     );
+    if exec.cfg.policy.sm_tier.enabled() {
+        println!(
+            "  sm-tier: {} tasks pooled, {} acquired from pools",
+            out.stats.sm_spills, out.stats.sm_pool_hits,
+        );
+    }
     if let Some(r) = out.stats.root_result {
         println!("  result: {}", r.as_i64());
     }
@@ -226,5 +238,6 @@ fn cmd_config() -> Result<()> {
     println!("GTAP_STEAL_AMOUNT         = {}", c.policy.steal_amount.spelling());
     println!("GTAP_PLACEMENT            = {}", c.policy.placement.name());
     println!("GTAP_BACKOFF              = {}", c.policy.backoff.name());
+    println!("GTAP_SM_TIER              = {}", c.policy.sm_tier.name());
     Ok(())
 }

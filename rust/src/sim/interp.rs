@@ -31,7 +31,7 @@ use super::divergence;
 use super::intrinsics::{self, IntrCtx};
 use super::memory::Memory;
 use crate::coordinator::records::{RecordPool, TaskId};
-use crate::ir::bytecode::{BinKind, CacheOp, FuncId, Reg, UnKind};
+use crate::ir::bytecode::{BinKind, CacheOp, FuncId, Reg, UnKind, NO_PRIORITY_REG};
 use crate::ir::decoded::{DInsn, DecodedModule};
 use crate::ir::intrinsics::Intrinsic;
 use crate::ir::types::Value;
@@ -49,6 +49,9 @@ pub struct SpawnReq {
     pub argc: u8,
     pub args: [u64; MAX_TASK_ARGS],
     pub queue: u8,
+    /// `priority(expr)` value clamped to `0..=255`; `None` = no clause, so
+    /// the child inherits its parent's user priority.
+    pub priority: Option<u8>,
 }
 
 /// How a segment ended.
@@ -396,6 +399,7 @@ impl<'a> Interp<'a> {
                     arg_base,
                     argc,
                     queue,
+                    priority,
                 } => {
                     let mut args = [0u64; MAX_TASK_ARGS];
                     for i in 0..argc as usize {
@@ -403,11 +407,17 @@ impl<'a> Interp<'a> {
                         args[i] = frame.regs[r as usize];
                     }
                     let q = frame.regs[queue as usize] as u8;
+                    let pr = if priority == NO_PRIORITY_REG {
+                        None
+                    } else {
+                        Some((frame.regs[priority as usize] as i64).clamp(0, 255) as u8)
+                    };
                     frame.spawns.push(SpawnReq {
                         func,
                         argc,
                         args,
                         queue: q,
+                        priority: pr,
                     });
                     self.charge_c(frame, costs.spawn);
                 }

@@ -25,7 +25,7 @@ use super::interp::{eval_bin, eval_un, SegmentEnd, SegmentOutput, SpawnReq, Step
 use super::intrinsics::{self, IntrCtx};
 use super::memory::Memory;
 use crate::coordinator::records::{RecordPool, TaskId};
-use crate::ir::bytecode::{CacheOp, FuncId, Insn, Module, Pc, Reg};
+use crate::ir::bytecode::{CacheOp, FuncId, Insn, Module, Pc, Reg, NO_PRIORITY_REG};
 use crate::ir::intrinsics::Intrinsic;
 use crate::ir::types::Value;
 use crate::sim::interp::MAX_TASK_ARGS;
@@ -246,6 +246,7 @@ impl<'a> RefInterp<'a> {
                     arg_base,
                     argc,
                     queue,
+                    priority,
                 } => {
                     let mut args = [0u64; MAX_TASK_ARGS];
                     for i in 0..argc as usize {
@@ -253,11 +254,17 @@ impl<'a> RefInterp<'a> {
                         args[i] = frame.regs[r as usize];
                     }
                     let q = frame.regs[queue as usize] as u8;
+                    let pr = if priority == NO_PRIORITY_REG {
+                        None
+                    } else {
+                        Some((frame.regs[priority as usize] as i64).clamp(0, 255) as u8)
+                    };
                     frame.spawns.push(SpawnReq {
                         func,
                         argc,
                         args,
                         queue: q,
+                        priority: pr,
                     });
                     self.charge_c(frame, dev.spawn_overhead);
                 }

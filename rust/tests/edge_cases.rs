@@ -3,7 +3,8 @@
 
 use gtap::bench::runners::{self, Exec};
 use gtap::coordinator::{
-    Backoff, GtapConfig, Placement, QueueSelect, Session, StealAmount, VictimSelect,
+    Backoff, GtapConfig, Placement, QueueSelect, SchedulerKind, Session, SmTier, StealAmount,
+    VictimSelect,
 };
 use gtap::ir::types::Value;
 use gtap::sim::divergence::{warp_cycles, LanePath};
@@ -210,6 +211,17 @@ fn ablation_knobs_preserve_semantics() {
             e.cfg.policy.backoff = Backoff::FixedPoll;
             e
         }),
+        Box::new(|e: Exec| e.steal_amount(StealAmount::Adaptive)),
+        Box::new(|e: Exec| e.sm_tier(SmTier::Spill)),
+        Box::new(|e: Exec| e.sm_tier(SmTier::Share)),
+        Box::new(|e: Exec| {
+            e.queue_select(QueueSelect::Priority)
+                .placement(Placement::PriorityDepth)
+        }),
+        Box::new(|e: Exec| {
+            e.queue_select(QueueSelect::Priority)
+                .placement(Placement::PriorityUser)
+        }),
     ];
     for t in tweaks {
         let e = t(base.clone());
@@ -217,6 +229,97 @@ fn ablation_knobs_preserve_semantics() {
         runners::run_full_tree(&e, 6, 4, 8, None).unwrap();
         runners::run_mergesort(&e, 500, 32, 3).unwrap();
     }
+}
+
+#[test]
+fn priority_placement_single_worker_is_fifo_by_depth() {
+    // With one worker, depth banding + priority acquisition and no
+    // immediate-execution buffer, the scheduler degrades to breadth-first
+    // FIFO-by-depth: every depth-d task executes before any depth-(d+1)
+    // task. Observable through the captured print order.
+    let src = r#"
+        #pragma gtap function
+        void walk(int d, int depth) {
+            print_int(depth);
+            if (d > 0) {
+                #pragma gtap task
+                walk(d - 1, depth + 1);
+                #pragma gtap task
+                walk(d - 1, depth + 1);
+            }
+        }
+    "#;
+    let mut cfg = GtapConfig {
+        grid_size: 1,
+        block_size: 32,
+        num_queues: 8,
+        assume_no_taskwait: true,
+        immediate_buffer: false,
+        ..Default::default()
+    };
+    cfg.policy.queue_select = QueueSelect::Priority;
+    cfg.policy.placement = Placement::PriorityDepth;
+    let mut s = Session::compile(src, cfg, DeviceSpec::h100()).unwrap();
+    let stats = s
+        .run("walk", &[Value::from_i64(4), Value::from_i64(0)])
+        .unwrap();
+    let depths: Vec<i64> = stats.output.iter().map(|l| l.parse().unwrap()).collect();
+    assert_eq!(depths.len(), 31, "2^5 - 1 tasks, one print each");
+    assert!(
+        depths.windows(2).all(|w| w[0] <= w[1]),
+        "execution order must be non-decreasing in depth: {depths:?}"
+    );
+    assert_eq!(*depths.last().unwrap(), 4);
+}
+
+#[test]
+fn steal_policies_report_zero_steal_stats_without_victims() {
+    // the steal path must not be entered (nor steal_attempts counted) when
+    // the queue organization does not support stealing — whatever the
+    // steal policies, including the adaptive controller, say
+    for vs in VictimSelect::ALL {
+        for sa in StealAmount::ALL {
+            // sm_tier Share is requested but must be gated off by the
+            // organization (QueueSet::supports_sm_tier → SmPool disabled),
+            // so the zero sm_spills below tests the gate, not a default
+            let e = Exec::gpu_thread(8, 32)
+                .scheduler(SchedulerKind::GlobalQueue)
+                .victim(vs)
+                .steal_amount(sa)
+                .sm_tier(SmTier::Share);
+            let s = runners::run_fib(&e, 12, 0, false).unwrap().stats;
+            assert_eq!(s.steal_attempts, 0, "{}/{}", vs.name(), sa.name());
+            assert_eq!(s.steals_ok, 0, "{}/{}", vs.name(), sa.name());
+            assert_eq!(s.sm_spills, 0, "no SM tier over a global queue");
+            assert_eq!(s.sm_pool_hits, 0, "no SM tier over a global queue");
+        }
+    }
+    // single worker: there is no victim, so no attempt may be counted
+    for sa in StealAmount::ALL {
+        let s = runners::run_fib(&Exec::gpu_thread(1, 32).steal_amount(sa), 12, 0, false)
+            .unwrap()
+            .stats;
+        assert_eq!(s.steal_attempts, 0, "{}", sa.name());
+        assert_eq!(s.steals_ok, 0, "{}", sa.name());
+    }
+}
+
+#[test]
+fn sm_tier_single_sm_without_overflow_is_a_noop() {
+    // On a one-SM device (every worker shares the slice) the Spill tier
+    // has nothing to do while no deque overflows: bit-identical RunStats
+    // to the tier being off.
+    let mut dev = DeviceSpec::h100();
+    dev.sms = 1;
+    let mut base = Exec::gpu_thread(4, 32);
+    base.device = dev;
+    let off = runners::run_fib(&base, 13, 0, false).unwrap().stats;
+    let spill = runners::run_fib(&base.clone().sm_tier(SmTier::Spill), 13, 0, false)
+        .unwrap()
+        .stats;
+    assert_eq!(off, spill, "spill tier must be a no-op absent overflow");
+    assert_eq!(spill.sm_spills, 0);
+    assert_eq!(spill.sm_pool_hits, 0);
 }
 
 #[test]

@@ -117,6 +117,7 @@ fn assert_equivalent(src: &str, args: &[i64], state: u16) {
         assert_eq!(a.func, b.func);
         assert_eq!(a.argc, b.argc);
         assert_eq!(a.queue, b.queue);
+        assert_eq!(a.priority, b.priority);
         assert_eq!(a.args[..a.argc as usize], b.args[..b.argc as usize]);
     }
 }

@@ -1,0 +1,171 @@
+//! The policy conformance harness: one table-driven sweep over
+//! `PolicyConfig::conformance_matrix()` (every scheduling-policy
+//! combination across all six axes, ~90 combos) asserting, for each:
+//!
+//! (a) **correctness** — the validated workload runners (fib against its
+//!     closed form; nqueens and the synthetic tree for the new-axis
+//!     combos) accept every run;
+//! (b) **determinism** — two runs with the same seed produce identical
+//!     `RunStats`, and a different seed still validates;
+//! (c) **thread-count stability** — sweeping the whole matrix through the
+//!     parallel bench harness under `GTAP_BENCH_THREADS=1` vs `4` yields
+//!     byte-identical `RunStats` per combo.
+//!
+//! This file replaces the ad-hoc loops of the former
+//! `tests/policy_matrix.rs`; the organization-specific zero-steal
+//! regressions moved to `tests/edge_cases.rs`.
+
+use gtap::bench::runners::{self, Exec};
+use gtap::bench::sweep::parallel_map;
+use gtap::coordinator::{
+    Placement, PolicyConfig, QueueSelect, RunStats, SmTier, StealAmount,
+};
+use std::sync::Mutex;
+
+/// EPAQ (3 queues) so queue selection and placement bands have real
+/// choices to make; 2 blocks × 4 warps = 8 workers across two SMs, so
+/// steals happen, locality-first has genuine same-SM peers, and the
+/// Share tier actually pools tasks (every worker on its own SM would make
+/// the 24 SM-tier combos vacuous).
+fn run_fib_with(p: PolicyConfig, seed: u64) -> RunStats {
+    let e = Exec::gpu_thread(2, 128).queues(3).seed(seed).policy(p);
+    runners::run_fib(&e, 13, 2, true).unwrap().stats
+}
+
+/// Whether a combo exercises any of the PR-3 policy axes (priority
+/// acquisition/placement, adaptive steal sizing, the per-SM tier).
+fn uses_new_axis(p: &PolicyConfig) -> bool {
+    p.queue_select == QueueSelect::Priority
+        || matches!(p.placement, Placement::PriorityDepth | Placement::PriorityUser)
+        || p.steal_amount == StealAmount::Adaptive
+        || p.sm_tier != SmTier::Off
+}
+
+#[test]
+fn every_combo_is_correct_and_deterministic() {
+    for p in PolicyConfig::conformance_matrix() {
+        let a = run_fib_with(p, 1);
+        let b = run_fib_with(p, 1);
+        assert_eq!(a, b, "non-deterministic under {}", p.label());
+        // run_fib validated the result; sanity-check the flow stats too
+        assert_eq!(a.tasks_finished, a.spawns + 1, "{}", p.label());
+        assert!(a.steals_ok <= a.steal_attempts, "{}", p.label());
+        // quiescence drains the SM pools completely
+        assert_eq!(a.sm_pool_hits, a.sm_spills, "{}", p.label());
+        if p.sm_tier == SmTier::Off {
+            assert_eq!(a.sm_spills, 0, "{}", p.label());
+        }
+        // a different seed still computes the same (validated) result
+        run_fib_with(p, 2);
+    }
+}
+
+#[test]
+fn new_axis_combos_validate_on_every_workload_family() {
+    // fib is covered for the full matrix above; the combos that exercise
+    // the new axes also run the spawn-only (nqueens) and payload-tree
+    // families end to end, each validated against its native reference.
+    for p in PolicyConfig::conformance_matrix() {
+        if !uses_new_axis(&p) {
+            continue;
+        }
+        // 1 block × 4 warps: all four workers are same-SM peers, so the
+        // SM-tier combos route real traffic through the pool here too
+        let e = Exec::gpu_thread(1, 128).queues(2).no_taskwait().policy(p);
+        runners::run_nqueens(&e, 6, 3, true).unwrap();
+        let e = Exec::gpu_thread(1, 128).queues(3).policy(p);
+        runners::run_full_tree(&e, 5, 2, 4, None).unwrap();
+    }
+}
+
+#[test]
+fn distinct_policies_actually_schedule_differently() {
+    // the axes must be observable, not cosmetic: steal-one claims less per
+    // steal than batched, so it needs at least as many successful steals,
+    // and strictly more pops+steals overall on a steal-heavy run
+    let batched = run_fib_with(PolicyConfig::default(), 5);
+    let one = run_fib_with(
+        PolicyConfig {
+            steal_amount: StealAmount::Fixed { max: Some(1) },
+            ..Default::default()
+        },
+        5,
+    );
+    assert_eq!(batched.tasks_finished, one.tasks_finished);
+    assert_ne!(
+        (batched.cycles, batched.steals_ok, batched.pops),
+        (one.cycles, one.steals_ok, one.pops),
+        "steal-one must be observably different from batched stealing"
+    );
+}
+
+#[test]
+fn share_tier_actually_pools_tasks() {
+    // SmTier::Share must generate pool traffic on a multi-worker-per-SM
+    // run (8 blocks on an H100 land on 8 distinct SMs, so use 2 blocks ×
+    // 4 warps: 4 same-SM peers per block)
+    let p = PolicyConfig {
+        sm_tier: SmTier::Share,
+        ..Default::default()
+    };
+    let e = Exec::gpu_thread(2, 128).queues(3).policy(p);
+    let s = runners::run_fib(&e, 13, 2, true).unwrap().stats;
+    assert!(s.sm_spills > 0, "share tier never pooled a task: {s:?}");
+    assert_eq!(s.sm_pool_hits, s.sm_spills);
+}
+
+#[test]
+fn rr_spill_survives_tight_queue_capacity() {
+    // rr-spill's contract: tight per-class budgets must not abort the run;
+    // overflowing batches split across the classes by free space. The run
+    // is validated (run_fib checks the closed form), so any misrouted or
+    // dropped child shows up as a wrong result.
+    let mut e = Exec::gpu_thread(2, 32).queues(3).queue_capacity(64);
+    e.cfg.policy.placement = Placement::RoundRobinSpill;
+    runners::run_fib(&e, 14, 2, true).unwrap();
+}
+
+#[test]
+fn sm_tier_spill_absorbs_overflow_before_the_cross_class_split() {
+    // under the same tight budget as the rr-spill test, an enabled Spill
+    // tier must be the first overflow resort: the pool sees traffic, the
+    // run still validates (rr-spill stays on as the backstop so the test
+    // can't abort on a deeper burst than the pool holds)
+    let mut e = Exec::gpu_thread(2, 32).queues(3).queue_capacity(64);
+    e.cfg.policy.placement = Placement::RoundRobinSpill;
+    e.cfg.policy.sm_tier = SmTier::Spill;
+    let s = runners::run_fib(&e, 14, 2, true).unwrap().stats;
+    assert!(s.sm_spills > 0, "tight capacity must overflow into the pool");
+    assert_eq!(s.sm_pool_hits, s.sm_spills);
+}
+
+/// Serializes access to the GTAP_BENCH_* environment within this binary.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn with_env<R>(pairs: &[(&str, &str)], f: impl FnOnce() -> R) -> R {
+    let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for (k, v) in pairs {
+        std::env::set_var(k, v);
+    }
+    let r = f();
+    for (k, _) in pairs {
+        std::env::remove_var(k);
+    }
+    r
+}
+
+#[test]
+fn run_stats_identical_across_bench_thread_counts() {
+    // the full conformance matrix as one sweep: serial vs 4 harness
+    // threads must produce byte-identical RunStats per combo (the
+    // bench-layer determinism contract extends to every policy axis)
+    let combos = PolicyConfig::conformance_matrix();
+    let sweep = || parallel_map(PolicyConfig::conformance_matrix(), |p| run_fib_with(p, 7));
+    let serial = with_env(&[("GTAP_BENCH_THREADS", "1")], sweep);
+    let parallel = with_env(&[("GTAP_BENCH_THREADS", "4")], sweep);
+    assert_eq!(serial.len(), combos.len());
+    assert_eq!(parallel.len(), combos.len());
+    for ((a, b), p) in serial.iter().zip(parallel.iter()).zip(combos.iter()) {
+        assert_eq!(a, b, "thread count changed RunStats under {}", p.label());
+    }
+}

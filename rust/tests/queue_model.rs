@@ -13,6 +13,9 @@
 //! the uncontended atomic cost.
 
 use gtap::coordinator::chaselev::ChaseLevDeque;
+use gtap::coordinator::policy::{
+    adaptive_amount, SmPool, ADAPTIVE_WARMUP_ATTEMPTS,
+};
 use gtap::coordinator::queue::{ContendedWord, TaskQueue};
 use gtap::coordinator::records::TaskId;
 use gtap::coordinator::StealAmount;
@@ -194,6 +197,86 @@ fn steal_half_matches_vecdeque_model() {
             steals <= bound,
             "steal-half took {steals} steals for {start_len} tasks (bound {bound})"
         );
+    });
+}
+
+#[test]
+fn sm_tier_pool_matches_vecdeque_model() {
+    // Property: the per-SM tier pool is an independent FIFO per SM —
+    // spilled batches come back out oldest-first, a batch that does not
+    // fit is refused without mutation, and SMs never alias.
+    Runner::new().cases(300).run("sm-pool-vs-model", |g| {
+        let d = DeviceSpec::h100();
+        let sms = g.usize(1, 4);
+        let cap = g.usize(2, 32);
+        let mut pool = SmPool::new(sms, cap);
+        let mut models: Vec<VecDeque<TaskId>> = vec![VecDeque::new(); sms];
+        let mut next: TaskId = 0;
+        for _ in 0..g.usize(1, 80) {
+            let sm = g.usize(0, sms - 1);
+            if g.chance(0.5) {
+                // spill a batch
+                let k = g.usize(1, 6);
+                let ids: Vec<TaskId> = (0..k as u32).map(|i| next + i).collect();
+                let pushed = pool.push(sm, 0, &ids, &d).is_some();
+                if models[sm].len() + k <= cap {
+                    assert!(pushed, "spill within capacity must succeed");
+                    models[sm].extend(ids.iter().copied());
+                    next += k as u32;
+                } else {
+                    assert!(!pushed, "overfull spill must be refused");
+                }
+            } else {
+                // a same-SM worker drains the pool
+                let max = g.usize(1, 8);
+                let mut out = vec![];
+                let taken = pool.pop(sm, 0, max, &mut out, &d).taken;
+                let claim = models[sm].len().min(max);
+                let want: Vec<TaskId> =
+                    (0..claim).map(|_| models[sm].pop_front().unwrap()).collect();
+                assert_eq!(taken, claim);
+                assert_eq!(out, want, "pool drain must be FIFO, exactly-once");
+            }
+            for s in 0..sms {
+                assert_eq!(pool.len(s), models[s].len(), "sm {s} diverged");
+                assert_eq!(pool.free(s), cap.max(2) - models[s].len());
+            }
+        }
+        assert_eq!(
+            pool.total_len(),
+            models.iter().map(|m| m.len()).sum::<usize>()
+        );
+    });
+}
+
+#[test]
+fn adaptive_steal_controller_is_monotone_and_victim_bounded() {
+    // Properties of the adaptive steal-amount controller: the claim stays
+    // in [1, batch_max] and never exceeds the victim's visible backlog
+    // (modulo the ≥1 livelock floor), and — for a fixed victim — a higher
+    // observed failure rate never steals *more*.
+    Runner::new().cases(500).run("adaptive-steal", |g| {
+        let batch = g.usize(1, 32);
+        let len = g.usize(0, 100);
+        let attempts = g.int(0, 1000) as u64;
+        let ok_lo = g.int(0, attempts as i64) as u64;
+        let ok_hi = g.int(ok_lo as i64, attempts as i64) as u64;
+        let more_failures = adaptive_amount(attempts, ok_lo, len, batch);
+        let fewer_failures = adaptive_amount(attempts, ok_hi, len, batch);
+        for a in [more_failures, fewer_failures] {
+            assert!(a >= 1, "a steal that asks for nothing would livelock");
+            assert!(a <= batch, "never exceeds the batch width");
+            assert!(a <= len.max(1), "never exceeds the victim's length");
+        }
+        assert!(
+            more_failures <= fewer_failures,
+            "response must be monotone in the failure rate: \
+             {more_failures} > {fewer_failures} \
+             (attempts {attempts}, ok {ok_lo}/{ok_hi}, len {len}, batch {batch})"
+        );
+        // past warm-up with total failure, the controller halves
+        let starved = adaptive_amount(ADAPTIVE_WARMUP_ATTEMPTS, 0, len, batch);
+        assert_eq!(starved, len.div_ceil(2).clamp(1, batch));
     });
 }
 

@@ -9,7 +9,9 @@
 //! thread can allocate concurrently and pollute the counter.
 
 use gtap::compiler::compile_default;
-use gtap::coordinator::records::{RecordPool, NO_TASK};
+use gtap::coordinator::config::{GtapConfig, SchedulerKind};
+use gtap::coordinator::policy::{adaptive_amount, Placement, QueueSelect, QueueSet, SmPool};
+use gtap::coordinator::records::{RecordPool, TaskId, NO_TASK};
 use gtap::ir::decoded::DecodedModule;
 use gtap::sim::{DeviceSpec, Interp, LaneFrame, Memory, StepResult};
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -132,5 +134,49 @@ fn steady_state_segment_execution_is_allocation_free() {
         after - before,
         0,
         "the decoded dispatch loop must not allocate in steady state"
+    );
+
+    // ---- the scheduling-policy hot paths are allocation-free too --------
+    // (same single test so no sibling thread pollutes the counter): the
+    // priority band scan, priority/continuation placement, the adaptive
+    // steal controller, and SM-tier pool traffic on pre-allocated rings.
+    let cfg = GtapConfig {
+        grid_size: 1,
+        block_size: 32,
+        num_queues: 4,
+        scheduler: SchedulerKind::WorkStealing,
+        ..Default::default()
+    };
+    let mut queues = QueueSet::for_config(&cfg);
+    let mut pool = SmPool::new(2, 64);
+    let mut out: Vec<TaskId> = Vec::with_capacity(64);
+    let ids: [TaskId; 8] = [1, 2, 3, 4, 5, 6, 7, 8];
+    let mut cursor = 0usize;
+    let mut policy_checksum = 0usize;
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    for i in 0..4_000u64 {
+        let pushed = queues.push(0, (i % 4) as usize, i, &ids[..1 + (i % 4) as usize], &dev);
+        assert!(pushed.is_some(), "push stays within pre-sized capacity");
+        let start = QueueSelect::Priority.start(0, cursor, 4, &queues);
+        QueueSelect::Priority.commit(&mut cursor, start);
+        out.clear();
+        queues.pop(0, start, i, 32, &mut out, &dev);
+        policy_checksum += out.len();
+        policy_checksum += Placement::PriorityDepth.place(0, cursor, 4, (i % 9) as u16, 0);
+        policy_checksum +=
+            Placement::PriorityUser.place_continuation(2, 4, 0, (i % 7) as u8);
+        policy_checksum += adaptive_amount(i, i / 3, out.len(), 32);
+        let pooled = pool.push((i % 2) as usize, i, &ids, &dev);
+        assert!(pooled.is_some(), "pool push stays within capacity");
+        out.clear();
+        pool.pop((i % 2) as usize, i, 32, &mut out, &dev);
+        policy_checksum += out.len();
+    }
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    assert!(policy_checksum > 0, "policy paths actually executed");
+    assert_eq!(
+        after - before,
+        0,
+        "policy dispatch and SM-tier pool traffic must not allocate"
     );
 }
