@@ -16,7 +16,7 @@ const FIB: &str = r#"
 int fib(int n) {
     if (n < 2) return n;
     int a; int b;
-    #pragma gtap task queue((n - 1) < 2 ? 1 : 0)
+    #pragma gtap task queue((n - 1) < 2 ? 1 : 0) priority(n)
     a = fib(n - 1);
     #pragma gtap task queue((n - 2) < 2 ? 1 : 0)
     b = fib(n - 2);
@@ -32,7 +32,11 @@ fn main() -> gtap::Result<()> {
     println!("== GTaP-C source (Program 4) =={FIB}");
     let module = compiler::compile_default(FIB).map_err(|e| gtap::anyhow!("{e}"))?;
     println!("== gtapc state-machine transformation (cf. Program 6) ==\n");
-    println!("{}", pretty::render_module(&module));
+    let rendered = pretty::render_module(&module);
+    // the disassembly is total: the priority(expr) clause shows up on the
+    // annotated spawn (pinned by rust/tests/compiler_golden.rs)
+    assert!(rendered.contains("priority=r"));
+    println!("{rendered}");
 
     let cfg = GtapConfig {
         grid_size: 128,

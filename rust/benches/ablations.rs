@@ -33,16 +33,41 @@
 
 use gtap::bench::emit::{markdown_table, write_csv, Series};
 use gtap::bench::runners::{self, Exec};
-use gtap::bench::sweep::{full_scale, measure};
+use gtap::bench::sweep::{self, full_scale, measure};
 use gtap::coordinator::{
     Backoff, Placement, PolicyConfig, QueueSelect, SmTier, StealAmount, VictimSelect,
 };
 use gtap::util::stats::Summary;
+use std::path::PathBuf;
+
+fn repo_root() -> PathBuf {
+    // crate manifest dir is <repo>/rust; the workspace root is its parent
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .to_path_buf()
+}
 
 fn main() {
-    let fib_n = if full_scale() { 30 } else { 26 };
-    let tree_d = if full_scale() { 16 } else { 12 };
-    let grid = 250;
+    // GTAP_BENCH_SMOKE=1 (the CI smoke-bench job) shrinks problem sizes so
+    // the policy-matrix table is recorded on every run; full_scale() keeps
+    // the paper-scale sweep for toolchain machines.
+    let smoke = std::env::var("GTAP_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let fib_n = if full_scale() {
+        30
+    } else if smoke {
+        20
+    } else {
+        26
+    };
+    let tree_d = if full_scale() {
+        16
+    } else if smoke {
+        9
+    } else {
+        12
+    };
+    let grid = if smoke { 64 } else { 250 };
 
     let variants: Vec<(&str, Box<dyn Fn(Exec) -> Exec + Sync>)> = vec![
         ("baseline", Box::new(|e: Exec| e)),
@@ -184,9 +209,82 @@ fn main() {
         "ablations_policy_matrix",
         &[Series {
             label: "fib-epaq3".to_string(),
-            points: matrix,
+            points: matrix.clone(),
         }],
     )
     .unwrap();
     println!("wrote {}", p.display());
+
+    // ---- machine-readable record: BENCH_ablations.json -----------------
+    // The ROADMAP "policy-matrix perf table" is recorded by CI from this
+    // file instead of by hand; `variants` holds the single-knob medians,
+    // `policy_matrix` the full QueueSelect × VictimSelect × StealAmount
+    // sweep with the best non-default combo called out.
+    let variant_names: Vec<&str> = variants.iter().map(|(n, _)| *n).collect();
+    let mut var_json = String::new();
+    for s in &series {
+        if !var_json.is_empty() {
+            var_json.push_str(",\n");
+        }
+        let baseline = s.points[0].1.median;
+        let entries: Vec<String> = variant_names
+            .iter()
+            .zip(s.points.iter())
+            .map(|(name, (_, sum))| {
+                format!(
+                    "      {{\"variant\": \"{}\", \"median_s\": {:.6e}, \
+                     \"vs_baseline_pct\": {:.2}}}",
+                    name,
+                    sum.median,
+                    100.0 * (sum.median - baseline) / baseline
+                )
+            })
+            .collect();
+        var_json.push_str(&format!(
+            "    \"{}\": [\n{}\n    ]",
+            s.label,
+            entries.join(",\n")
+        ));
+    }
+    let combo_json: Vec<String> = combos
+        .iter()
+        .zip(matrix.iter())
+        .map(|(p, (_, sum))| {
+            format!(
+                "      {{\"combo\": \"{}\", \"median_s\": {:.6e}, \"default\": {}}}",
+                p.label(),
+                sum.median,
+                *p == PolicyConfig::default()
+            )
+        })
+        .collect();
+    let best = matrix
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1 .1.median.total_cmp(&b.1 .1.median))
+        .expect("matrix is non-empty");
+    let json = format!(
+        "{{\n  \"bench\": \"ablations\",\n  \"measured\": true,\n  \
+         \"command\": \"cargo bench --bench ablations\",\n  \
+         \"runs\": {},\n  \"smoke\": {},\n  \
+         \"sizes\": {{\"fib_n\": {}, \"tree_depth\": {}, \"grid\": {}}},\n  \
+         \"variants\": {{\n{}\n  }},\n  \
+         \"policy_matrix\": {{\n    \"workload\": \"fib-epaq3\",\n    \
+         \"default_median_s\": {:.6e},\n    \
+         \"best\": {{\"combo\": \"{}\", \"median_s\": {:.6e}}},\n    \
+         \"combos\": [\n{}\n    ]\n  }}\n}}\n",
+        sweep::runs(),
+        smoke,
+        fib_n,
+        tree_d,
+        grid,
+        var_json,
+        default_median,
+        combos[best.0].label(),
+        best.1 .1.median,
+        combo_json.join(",\n"),
+    );
+    let path = repo_root().join("BENCH_ablations.json");
+    std::fs::write(&path, json).expect("write BENCH_ablations.json");
+    println!("wrote {}", path.display());
 }

@@ -1,21 +1,31 @@
-//! Hot-path microbenchmark: decoded flattened dispatch (`sim::interp`)
-//! vs the pre-refactor module-walking baseline (`sim::interp_ref`), on the
-//! two segment mixes the paper's workloads are made of:
+//! Hot-path microbenchmark: three interpreter tiers on identical segment
+//! streams —
 //!
-//! * **fib segments** — the fib(30) state machine's segment population:
-//!   recursive first segments (branch + two spawns + join), post-join
-//!   continuations and base-case leaves, in tree proportions;
-//! * **tree segments** — the synthetic full-binary-tree task function
-//!   (spawns + `payload` intrinsic + atomic accumulate).
+//! * **ref** — the pre-refactor module-walking baseline
+//!   (`sim::interp_ref`), re-resolving per-function vectors per segment;
+//! * **decoded** — flattened per-instruction dispatch (`sim::interp` over
+//!   `ir::decoded`, the PR-1 engine);
+//! * **fused** — superblock block-at-a-time dispatch (`Interp::fused` over
+//!   `ir::superblock`, the production engine): folded per-block cycle
+//!   charges, task-data masks, macro-op streams.
 //!
-//! Both interpreters execute identical segment streams; the bench asserts
-//! their simulated cycle totals agree before timing anything, so a speedup
-//! can never come from computing less.
+//! The measured corpus is the segment populations of the paper's
+//! workloads: **fib** (recursive first segments, continuations, leaves in
+//! tree proportions), the synthetic **tree** task (spawns + `payload`
+//! intrinsic + atomic accumulate), and **nqueens** (irregular spawn-in-loop
+//! segments + the serial-leaf intrinsic). All tiers execute identical
+//! streams; the bench asserts their simulated cycle totals agree before
+//! timing anything, so a speedup can never come from computing less.
 //!
 //! Results (median wall-clock over `GTAP_BENCH_RUNS` reps, plus an
 //! end-to-end scheduler run) are printed and recorded in
 //! `BENCH_hotpath.json` at the repo root — the repo's running perf
 //! baseline. Regenerate with `cargo bench --bench hotpath`.
+//!
+//! **Regression guard:** with `GTAP_BENCH_ENFORCE=1` (set by the CI
+//! smoke-bench job) the bench *fails* unless, on the fib and tree streams,
+//! `fused` is ≥ 1.3× faster than `decoded` and `decoded` stays ≥ 2.0×
+//! faster than `ref`.
 
 use gtap::bench::sweep;
 use gtap::compiler::compile_default;
@@ -23,15 +33,21 @@ use gtap::coordinator::records::{RecordPool, TaskId, NO_TASK};
 use gtap::coordinator::{GtapConfig, Session};
 use gtap::ir::bytecode::Module;
 use gtap::ir::decoded::DecodedModule;
+use gtap::ir::superblock::FusedModule;
 use gtap::ir::types::Value;
 use gtap::sim::interp_ref::{RefInterp, RefLaneFrame};
 use gtap::sim::{DeviceSpec, Interp, LaneFrame, Memory, StepResult};
+use gtap::util::prng::mix64;
 use gtap::util::stats::Summary;
 use std::path::PathBuf;
 use std::time::Instant;
 
 /// Segments per timed repetition (≥ 10k warm segments by a wide margin).
 const SEGMENTS: usize = 200_000;
+
+/// Acceptance bars enforced under `GTAP_BENCH_ENFORCE=1` (fib + tree).
+const MIN_DECODED_OVER_REF: f64 = 2.0;
+const MIN_FUSED_OVER_DECODED: f64 = 1.3;
 
 const FIB_SRC: &str = r#"
     #pragma gtap function
@@ -72,21 +88,42 @@ fn tree_stream() -> Vec<(u16, i64)> {
     (0..SEGMENTS).map(|i| pattern[i % pattern.len()]).collect()
 }
 
+/// The nqueens segment stream: `(state, row)` on a 12-board with cutoff 7.
+/// Rows mix interior spawn loops, cutoff rows (serial-leaf intrinsic) and
+/// full-board leaves; nqueens is spawn-only, so every segment is state 0.
+fn nqueens_stream() -> Vec<(u16, i64)> {
+    let pattern: &[(u16, i64)] = &[(0, 0), (0, 12), (0, 7), (0, 11), (0, 3), (0, 12), (0, 5)];
+    // a quarter of the fib/tree length: cutoff rows run the serial solver
+    (0..SEGMENTS / 4).map(|i| pattern[i % pattern.len()]).collect()
+}
+
+/// Which workload a fixture primes task data for.
+#[derive(Clone, Copy, PartialEq)]
+enum Kind {
+    Fib,
+    Tree,
+    Nqueens,
+}
+
 struct SegmentFixture {
     module: Module,
     decoded: DecodedModule,
+    fused: FusedModule,
     dev: DeviceSpec,
     records: RecordPool,
     mem: Memory,
     task: TaskId,
-    /// Extra task-data words set per reset: (offset, value) template.
-    extra_args: Vec<(usize, u64)>,
+    kind: Kind,
+    /// Accumulator pointer for workloads that take one (word address).
+    acc: u64,
 }
 
 impl SegmentFixture {
-    fn new(src: &str, func: &str, extra_alloc_words: u64) -> SegmentFixture {
+    fn new(src: &str, func: &str, kind: Kind) -> SegmentFixture {
         let module = compile_default(src).expect("bench source compiles");
         let decoded = DecodedModule::decode(&module);
+        let dev = DeviceSpec::h100();
+        let fused = FusedModule::fuse(&decoded, &dev);
         let fid = module.func_id(func).expect("entry exists");
         assert_eq!(fid, 0, "fixture assumes the entry is function 0");
         let words = module
@@ -98,21 +135,18 @@ impl SegmentFixture {
             .max(1);
         let mut records = RecordPool::new(64, words, 8);
         let mut mem = Memory::new(module.globals_words());
-        let mut extra_args = Vec::new();
-        if extra_alloc_words > 0 {
-            let addr = mem.alloc(extra_alloc_words);
-            // tree(depth, seed, acc): acc pointer is arg slot 2
-            extra_args.push((2usize, addr));
-        }
+        let acc = if kind == Kind::Fib { 0 } else { mem.alloc(1) };
         let task = records.alloc(fid, NO_TASK).unwrap();
         SegmentFixture {
             module,
             decoded,
-            dev: DeviceSpec::h100(),
+            fused,
+            dev,
             records,
             mem,
             task,
-            extra_args,
+            kind,
+            acc,
         }
     }
 
@@ -132,27 +166,28 @@ impl SegmentFixture {
         self.records.meta_mut(self.task).pending_children = 0;
     }
 
-    fn prime(&mut self, arg0: u64, seed: u64) {
-        let data = self.records.data_mut(self.task);
-        data[0] = arg0;
-        if data.len() > 1 {
-            data[1] = seed;
-        }
-        for &(slot, v) in &self.extra_args {
-            self.records.data_mut(self.task)[slot] = v;
+    /// Run the stream through one interpreter tier; returns (seconds,
+    /// simulated-cycle checksum).
+    fn time_tier(&mut self, tier: Tier, stream: &[(u16, i64)]) -> (f64, u64) {
+        match tier {
+            Tier::Ref => self.time_ref(stream),
+            Tier::Decoded => self.time_interp(stream, false),
+            Tier::Fused => self.time_interp(stream, true),
         }
     }
 
-    /// Run the stream through the decoded interpreter; returns (seconds,
-    /// simulated-cycle checksum).
-    fn time_decoded(&mut self, stream: &[(u16, i64)]) -> (f64, u64) {
-        let interp = Interp::new(&self.decoded, &self.dev, 1, false);
+    fn time_interp(&mut self, stream: &[(u16, i64)], fused: bool) -> (f64, u64) {
+        let interp = if fused {
+            Interp::fused(&self.decoded, &self.fused, &self.dev, 1, false)
+        } else {
+            Interp::new(&self.decoded, &self.dev, 1, false)
+        };
         let mut frame = LaneFrame::sized(&self.decoded);
         let mut log = Vec::new();
         let mut checksum = 0u64;
         let t = Instant::now();
         for (i, &(state, n)) in stream.iter().enumerate() {
-            self.prime(n as u64, i as u64);
+            prime(&mut self.records, self.task, self.kind, self.acc, n, i as u64);
             frame.reset(&self.decoded, self.task, 0, state, 0);
             match interp.run(&mut frame, &mut self.mem, &mut self.records, &mut log) {
                 StepResult::Done(o) => checksum = checksum.wrapping_add(o.cycles),
@@ -175,7 +210,7 @@ impl SegmentFixture {
         let mut checksum = 0u64;
         let t = Instant::now();
         for (i, &(state, n)) in stream.iter().enumerate() {
-            self.prime(n as u64, i as u64);
+            prime(&mut self.records, self.task, self.kind, self.acc, n, i as u64);
             frame.reset(&self.module, self.task, 0, state, 0);
             match interp.run(&mut frame, &mut self.mem, &mut self.records, &mut log) {
                 StepResult::Done(o) => checksum = checksum.wrapping_add(o.cycles),
@@ -186,11 +221,49 @@ impl SegmentFixture {
     }
 }
 
+/// Prime the fixture task's record for the next segment. A free function
+/// over the fixture's *fields* so the borrow of `records` stays disjoint
+/// from the module/device borrows the interpreter holds.
+fn prime(records: &mut RecordPool, task: TaskId, kind: Kind, acc: u64, v: i64, i: u64) {
+    let data = records.data_mut(task);
+    match kind {
+        Kind::Fib => {
+            data[0] = v as u64;
+            data[1] = i;
+        }
+        Kind::Tree => {
+            // tree(depth, seed, acc)
+            data[0] = v as u64;
+            data[1] = i;
+            data[2] = acc;
+        }
+        Kind::Nqueens => {
+            // nqueens(n, row, left, down, right, acc) on a 12-board
+            let m = mix64(i);
+            data[0] = 12;
+            data[1] = v as u64;
+            data[2] = m & 0xFFF;
+            data[3] = (m >> 12) & 0xFFF;
+            data[4] = (m >> 24) & 0xFFF;
+            data[5] = acc;
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Tier {
+    Ref,
+    Decoded,
+    Fused,
+}
+
 struct Comparison {
     name: &'static str,
     ref_median_s: f64,
     decoded_median_s: f64,
-    speedup: f64,
+    fused_median_s: f64,
+    decoded_over_ref: f64,
+    fused_over_decoded: f64,
 }
 
 fn compare(
@@ -200,30 +273,41 @@ fn compare(
     reps: usize,
 ) -> Comparison {
     // correctness gate: identical simulated cycles before any timing
-    let (_, c_ref) = fixture.time_ref(stream);
-    let (_, c_dec) = fixture.time_decoded(stream);
+    let (_, c_ref) = fixture.time_tier(Tier::Ref, stream);
+    let (_, c_dec) = fixture.time_tier(Tier::Decoded, stream);
+    let (_, c_fus) = fixture.time_tier(Tier::Fused, stream);
     assert_eq!(
         c_ref, c_dec,
         "{name}: decoded and reference interpreters disagree on simulated cycles"
     );
-    // interleave reps so thermal/frequency drift hits both sides equally
+    assert_eq!(
+        c_dec, c_fus,
+        "{name}: fused and decoded interpreters disagree on simulated cycles"
+    );
+    // interleave reps so thermal/frequency drift hits all tiers equally
     let mut ref_s = Vec::with_capacity(reps);
     let mut dec_s = Vec::with_capacity(reps);
+    let mut fus_s = Vec::with_capacity(reps);
     for _ in 0..reps {
-        ref_s.push(fixture.time_ref(stream).0);
-        dec_s.push(fixture.time_decoded(stream).0);
+        ref_s.push(fixture.time_tier(Tier::Ref, stream).0);
+        dec_s.push(fixture.time_tier(Tier::Decoded, stream).0);
+        fus_s.push(fixture.time_tier(Tier::Fused, stream).0);
     }
     let r = Summary::of(&ref_s).median;
     let d = Summary::of(&dec_s).median;
+    let f = Summary::of(&fus_s).median;
     Comparison {
         name,
         ref_median_s: r,
         decoded_median_s: d,
-        speedup: r / d,
+        fused_median_s: f,
+        decoded_over_ref: r / d,
+        fused_over_decoded: d / f,
     }
 }
 
-/// End-to-end scheduler run (decoded path only): fib(24) on 256 warps.
+/// End-to-end scheduler run (the production fused engine): fib(24) on 256
+/// warps.
 fn end_to_end_fib(reps: usize) -> f64 {
     let samples: Vec<f64> = (0..reps)
         .map(|i| {
@@ -251,47 +335,87 @@ fn repo_root() -> PathBuf {
         .to_path_buf()
 }
 
+fn json_entry(c: &Comparison) -> String {
+    format!(
+        "{{\"ref_median_s\": {:.6e}, \"decoded_median_s\": {:.6e}, \
+         \"fused_median_s\": {:.6e}, \"decoded_over_ref\": {:.3}, \
+         \"fused_over_decoded\": {:.3}}}",
+        c.ref_median_s, c.decoded_median_s, c.fused_median_s, c.decoded_over_ref,
+        c.fused_over_decoded,
+    )
+}
+
 fn main() {
     let reps = sweep::runs();
-    println!("hotpath microbench: {SEGMENTS} segments/rep, {reps} reps\n");
+    let enforce = std::env::var("GTAP_BENCH_ENFORCE").map(|v| v == "1").unwrap_or(false);
+    println!("hotpath microbench: {SEGMENTS} segments/rep, {reps} reps, 3 tiers\n");
 
-    let mut fib = SegmentFixture::new(FIB_SRC, "fib", 0);
+    let mut fib = SegmentFixture::new(FIB_SRC, "fib", Kind::Fib);
     fib.attach_children();
     let fib_cmp = compare("fib_segments", &mut fib, &fib_stream(), reps);
 
     // tree is void: its continuation reads no child results, so no child
     // records need attaching
     let tree_src = gtap::workloads::tree::full_tree_source(16, 64);
-    let mut tree = SegmentFixture::new(&tree_src, "tree", 1);
+    let mut tree = SegmentFixture::new(&tree_src, "tree", Kind::Tree);
     let tree_cmp = compare("tree_segments", &mut tree, &tree_stream(), reps);
+
+    let nq_src = gtap::workloads::nqueens::source(7, true);
+    let mut nq = SegmentFixture::new(&nq_src, "nqueens", Kind::Nqueens);
+    let nq_cmp = compare("nqueens_segments", &mut nq, &nqueens_stream(), reps);
 
     let e2e = end_to_end_fib(reps);
 
-    for c in [&fib_cmp, &tree_cmp] {
+    for c in [&fib_cmp, &tree_cmp, &nq_cmp] {
         println!(
-            "{:14} ref {:.4e} s  decoded {:.4e} s  speedup {:.2}x",
-            c.name, c.ref_median_s, c.decoded_median_s, c.speedup
+            "{:16} ref {:.4e} s  decoded {:.4e} s  fused {:.4e} s  \
+             (decoded/ref {:.2}x, fused/decoded {:.2}x)",
+            c.name,
+            c.ref_median_s,
+            c.decoded_median_s,
+            c.fused_median_s,
+            c.decoded_over_ref,
+            c.fused_over_decoded,
         );
     }
-    println!("fib(24) end-to-end (decoded scheduler): {e2e:.4e} s median");
+    println!("fib(24) end-to-end (fused scheduler): {e2e:.4e} s median");
 
     let json = format!(
         "{{\n  \"bench\": \"hotpath\",\n  \"measured\": true,\n  \
          \"command\": \"cargo bench --bench hotpath\",\n  \
          \"segments_per_rep\": {SEGMENTS},\n  \"runs\": {reps},\n  \
+         \"thresholds\": {{\"decoded_over_ref_min\": {MIN_DECODED_OVER_REF}, \
+         \"fused_over_decoded_min\": {MIN_FUSED_OVER_DECODED}, \
+         \"enforced\": {enforce}}},\n  \
          \"results\": {{\n    \
-         \"fib_segments\": {{\"ref_median_s\": {:.6e}, \"decoded_median_s\": {:.6e}, \"speedup\": {:.3}}},\n    \
-         \"tree_segments\": {{\"ref_median_s\": {:.6e}, \"decoded_median_s\": {:.6e}, \"speedup\": {:.3}}},\n    \
-         \"fib24_end_to_end\": {{\"decoded_median_s\": {:.6e}}}\n  }}\n}}\n",
-        fib_cmp.ref_median_s,
-        fib_cmp.decoded_median_s,
-        fib_cmp.speedup,
-        tree_cmp.ref_median_s,
-        tree_cmp.decoded_median_s,
-        tree_cmp.speedup,
+         \"fib_segments\": {},\n    \
+         \"tree_segments\": {},\n    \
+         \"nqueens_segments\": {},\n    \
+         \"fib24_end_to_end\": {{\"scheduler_median_s\": {:.6e}}}\n  }}\n}}\n",
+        json_entry(&fib_cmp),
+        json_entry(&tree_cmp),
+        json_entry(&nq_cmp),
         e2e,
     );
     let path = repo_root().join("BENCH_hotpath.json");
     std::fs::write(&path, json).expect("write BENCH_hotpath.json");
     println!("\nwrote {}", path.display());
+
+    if enforce {
+        for c in [&fib_cmp, &tree_cmp] {
+            assert!(
+                c.decoded_over_ref >= MIN_DECODED_OVER_REF,
+                "{}: decoded over ref regressed to {:.2}x (min {MIN_DECODED_OVER_REF}x)",
+                c.name,
+                c.decoded_over_ref
+            );
+            assert!(
+                c.fused_over_decoded >= MIN_FUSED_OVER_DECODED,
+                "{}: fused over decoded is {:.2}x (min {MIN_FUSED_OVER_DECODED}x)",
+                c.name,
+                c.fused_over_decoded
+            );
+        }
+        println!("regression guard: all thresholds met");
+    }
 }

@@ -19,9 +19,14 @@
 //!    itself (batched deques / global queue / sequential Chase–Lev) is the
 //!    [`QueueSet`] chosen by `GtapConfig::scheduler`.
 //! 2. Execute the claimed tasks, one per lane. Lanes run the per-lane
-//!    interpreter over the load-time [`DecodedModule`]; the warp's cost is
-//!    the divergence-serialized combination (`sim::divergence`). Payload
-//!    calls may suspend for batched XLA execution.
+//!    interpreter in superblock-fused mode (`Interp::fused` over the
+//!    load-time [`DecodedModule`] + [`FusedModule`] pair): one table
+//!    lookup per straight-line block charges folded cycle sums, then only
+//!    the macro-op-fused effectful tail executes — cost-transparent, so
+//!    observable results match per-instruction dispatch bit for bit. The
+//!    warp's cost is the divergence-serialized combination
+//!    (`sim::divergence`). Payload calls may suspend for batched XLA
+//!    execution.
 //! 3. Apply effects: allocate children and route them to queues via
 //!    **Placement**, process joins and finishes, re-enqueue satisfied
 //!    continuations (keeping up to a warp's worth for immediate execution).
@@ -56,6 +61,7 @@ use super::policy::{intra_sm_cycles, PolicyConfig, QueueSet, SmPool, STEAL_TRIES
 use super::records::{RecordPool, TaskId, NO_TASK};
 use crate::ir::bytecode::Module;
 use crate::ir::decoded::DecodedModule;
+use crate::ir::superblock::FusedModule;
 use crate::ir::types::Value;
 use crate::sim::config::DeviceSpec;
 use crate::sim::divergence::{self, LanePath};
@@ -149,6 +155,11 @@ pub struct Scheduler<'a> {
     policy: PolicyConfig,
     /// Load-time-flattened bytecode the interpreter dispatches over.
     decoded: DecodedModule,
+    /// Superblock-fused form of `decoded` (folded block costs, macro-op
+    /// streams) — the engine lanes actually execute (`Interp::fused`).
+    /// Fusion is cost-transparent, so `RunStats` are bit-identical to
+    /// per-instruction decoded dispatch (and to the pinned monolith).
+    fused: FusedModule,
     workers: Vec<WorkerState>,
     /// Workers resident on each SM (victim candidates for hierarchical
     /// stealing).
@@ -250,6 +261,7 @@ impl<'a> Scheduler<'a> {
             sm_peers[ws.sm].push(i);
         }
         let decoded = DecodedModule::decode(module);
+        let fused = FusedModule::fuse(&decoded, dev);
         let frames = (0..batch_max).map(|_| LaneFrame::sized(&decoded)).collect();
         let queues = QueueSet::for_config(cfg);
         let sm_pool = SmPool::for_config(cfg, dev, queues.supports_sm_tier());
@@ -262,6 +274,7 @@ impl<'a> Scheduler<'a> {
             records: RecordPool::new(pool_cap, data_words, child_cap),
             policy: cfg.policy,
             decoded,
+            fused,
             workers,
             sm_peers,
             sm_ready: vec![0; dev.sms],
@@ -282,6 +295,11 @@ impl<'a> Scheduler<'a> {
     /// The decoded form this scheduler executes (shared with tests/benches).
     pub fn decoded(&self) -> &DecodedModule {
         &self.decoded
+    }
+
+    /// The superblock-fused form the lanes dispatch over.
+    pub fn fused(&self) -> &FusedModule {
+        &self.fused
     }
 
     /// Spawn the root task (the `#pragma gtap entry` of Program 4).
@@ -594,7 +612,7 @@ impl<'a> Scheduler<'a> {
             Granularity::Thread => 1,
             Granularity::Block => self.cfg.block_size as u32,
         };
-        let interp = Interp::new(&self.decoded, dev, block_width, engine.is_some());
+        let interp = Interp::fused(&self.decoded, &self.fused, dev, block_width, engine.is_some());
         let mut outputs = std::mem::take(&mut self.scratch_outputs);
         outputs.clear();
         outputs.resize(batch.len(), None);

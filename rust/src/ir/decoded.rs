@@ -31,6 +31,7 @@
 use super::bytecode::{CacheOp, FuncId, Insn, Module, Reg};
 use super::intrinsics::Intrinsic;
 use super::types::Type;
+use crate::sim::divergence;
 
 /// Binary/unary op kinds are reused from the compiler bytecode — they are
 /// already post-sema and carry no indirection.
@@ -42,6 +43,15 @@ pub type GlobalPc = u32;
 /// One decoded instruction. Mirrors [`Insn`] with all control-flow targets
 /// global and all operand-list bases resolved into the module-wide pool.
 /// Kept `Copy` and ≤ 16 bytes — the dispatch loop reads one per cycle.
+///
+/// The `CmpBr` / `ConstBinR` / `ConstBinL` / `LdTdBin` variants are
+/// **macro-ops**: they never appear in [`DecodedModule::insns`] (so
+/// `decode` stays a 1:1 relocation) and are emitted only into the
+/// superblock-fused instruction stream by
+/// [`super::superblock::FusedModule::fuse`], which peephole-fuses the
+/// dominant adjacent pairs of the workloads' straight-line code. Every
+/// macro-op still writes the intermediate register of the pair it
+/// replaces, so register state stays bit-identical to unfused execution.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum DInsn {
     /// `dst = imm` (raw 64-bit payload; i64 or f64 bits).
@@ -80,6 +90,48 @@ pub enum DInsn {
     ParEnter { trips: Reg },
     ParExit,
     Trap,
+    /// Macro-op: `Bin { op, dst, a, b }` + `Br { cond: dst, t, f }` fused.
+    /// Computes the comparison (any [`BinKind`] — the branch tests
+    /// `!= 0`), still writes `dst`, then branches; the path fold uses the
+    /// same global-target event as the unfused pair.
+    CmpBr {
+        op: BinKind,
+        dst: Reg,
+        a: Reg,
+        b: Reg,
+        t: GlobalPc,
+        f: GlobalPc,
+    },
+    /// Macro-op: `Const { dst: tmp, val }` + `Bin { op, dst, a, b: tmp }`
+    /// fused — the immediate is the *right* operand. Still writes `tmp`.
+    ConstBinR {
+        op: BinKind,
+        dst: Reg,
+        a: Reg,
+        tmp: Reg,
+        val: u64,
+    },
+    /// Macro-op: `Const { dst: tmp, val }` + `Bin { op, dst, a: tmp, b }`
+    /// fused — the immediate is the *left* operand. Still writes `tmp`.
+    ConstBinL {
+        op: BinKind,
+        dst: Reg,
+        b: Reg,
+        tmp: Reg,
+        val: u64,
+    },
+    /// Macro-op: `LdTd { dst: tmp, off }` + `Bin { op, dst, a, b }` fused
+    /// (the loaded field feeds `a`, `b`, or both via `tmp`). Still writes
+    /// `tmp`; the load's first-touch cost is resolved by the superblock's
+    /// task-data masks, not here.
+    LdTdBin {
+        op: BinKind,
+        dst: Reg,
+        a: Reg,
+        b: Reg,
+        tmp: Reg,
+        off: u16,
+    },
 }
 
 /// Pre-resolved per-function metadata.
@@ -112,6 +164,10 @@ pub struct DecodedModule {
     pub args: Vec<Reg>,
     /// All functions' state-entry tables as global pcs, contiguous.
     pub state_pcs: Vec<GlobalPc>,
+    /// Per state entry, the precomputed path-hash seed
+    /// (`divergence::seed(func, state)`) — parallel to `state_pcs`, so a
+    /// segment's hash starts from one table read instead of two folds.
+    pub state_seeds: Vec<u64>,
     pub funcs: Vec<DecodedFunc>,
     /// Module-wide register-file bound: frames sized to this fit any task.
     pub max_nregs: u16,
@@ -125,14 +181,15 @@ impl DecodedModule {
     /// Flatten `module`. Pure derivation — called once at load time.
     pub fn decode(module: &Module) -> DecodedModule {
         let mut dm = DecodedModule::default();
-        for fc in &module.funcs {
+        for (fi, fc) in module.funcs.iter().enumerate() {
             let insn_base = dm.insns.len() as GlobalPc;
             let arg_base = dm.args.len() as u32;
             let state_base = dm.state_pcs.len() as u32;
             dm.args.extend_from_slice(&fc.arg_pool);
-            for &pc in &fc.state_entries {
+            for (state, &pc) in fc.state_entries.iter().enumerate() {
                 debug_assert!((pc as usize) < fc.insns.len());
                 dm.state_pcs.push(insn_base + pc);
+                dm.state_seeds.push(divergence::seed(fi as u64, state as u64));
             }
             for &insn in &fc.insns {
                 let reloc = |local: u32| {
@@ -226,6 +283,14 @@ impl DecodedModule {
         let df = &self.funcs[func as usize];
         debug_assert!(state < df.num_states);
         self.state_pcs[df.state_base as usize + state as usize]
+    }
+
+    /// Precomputed path-hash seed where `func` resumes at `state`.
+    #[inline]
+    pub fn state_seed(&self, func: FuncId, state: u16) -> u64 {
+        let df = &self.funcs[func as usize];
+        debug_assert!(state < df.num_states);
+        self.state_seeds[df.state_base as usize + state as usize]
     }
 
     /// Function-local pc (diagnostics: mirrors the compiler's numbering).
@@ -331,6 +396,21 @@ mod tests {
                 assert_eq!(
                     dm.local_pc(fi as FuncId, dm.state_pc(fi as FuncId, s as u16)),
                     local
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn state_seeds_match_divergence_folds() {
+        let m = compile_default(FIB).unwrap();
+        let dm = DecodedModule::decode(&m);
+        assert_eq!(dm.state_seeds.len(), dm.state_pcs.len());
+        for (fi, fc) in m.funcs.iter().enumerate() {
+            for s in 0..fc.state_entries.len() {
+                assert_eq!(
+                    dm.state_seed(fi as FuncId, s as u16),
+                    crate::sim::divergence::seed(fi as u64, s as u64)
                 );
             }
         }

@@ -12,6 +12,10 @@
 //!   interpreter dispatches over: one contiguous instruction array with
 //!   global control-flow targets, pooled operand lists, and pre-resolved
 //!   cross-function metadata.
+//! * [`superblock`] — the decoded stream partitioned into maximal
+//!   straight-line superblocks with folded static cycle sums, task-data
+//!   touch masks, and a macro-op-fused instruction stream; what the
+//!   block-at-a-time engine (`Interp::fused`) dispatches over.
 //! * [`layout`] — the compiler-generated task-data record layout: original
 //!   arguments, spilled locals, and the result field (§5.2.3, Program 6).
 //! * [`intrinsics`] — builtin functions callable from GTaP-C (serial leaf
@@ -23,11 +27,13 @@ pub mod bytecode;
 pub mod decoded;
 pub mod intrinsics;
 pub mod layout;
+pub mod superblock;
 pub mod types;
 
 pub use ast::*;
 pub use bytecode::*;
 pub use decoded::{DInsn, DecodedFunc, DecodedModule};
+pub use superblock::{FusedModule, Superblock};
 pub use intrinsics::{Intrinsic, IntrinsicSig};
 pub use layout::TaskDataLayout;
 pub use types::{Type, Value};

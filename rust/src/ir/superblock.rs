@@ -1,0 +1,523 @@
+//! Superblock fusion: block-level dispatch units over the decoded stream.
+//!
+//! The decoded interpreter (`sim::interp` over [`DecodedModule`]) still
+//! pays per-*instruction* overhead on straight-line code: one dispatch,
+//! one cycle charge (behind a `parallel_for`-depth branch), and one
+//! task-data first-touch bit test per instruction — even though branches,
+//! memory ops and intrinsics are a small fraction of the dynamic stream.
+//! [`FusedModule::fuse`] amortizes all of it into per-**superblock**
+//! aggregates, built once at load time:
+//!
+//! * the instruction array is partitioned into *maximal straight-line
+//!   superblocks* — a block ends at a branch (`Jmp`/`Br`), at any jump
+//!   target or state entry, and at every effectful boundary (`Spawn`,
+//!   `PrepareJoin`, `FinishTask`, intrinsics — including the `payload`
+//!   suspension point — `ParEnter`/`ParExit`, `Trap`), so a block that is
+//!   entered always runs to its end and `parallel_for` depth is constant
+//!   across it;
+//! * each block precomputes its **folded static cycle sums** (compute and
+//!   memory, using the same [`Costs`](crate::sim::interp) table the
+//!   dispatch loops charge), its **task-data touch masks** (so the
+//!   first-access discount of `LdTd` is resolved once per block entry
+//!   against the frame's `td_touched` set, not per instruction), and its
+//!   decoded length (for the runaway-segment guard);
+//! * the register-to-register dataflow that must still execute is
+//!   re-emitted into a per-block **fused stream** with peephole
+//!   **macro-ops** for the dominant adjacent pairs the workloads emit
+//!   (`cmp`+`br` → [`DInsn::CmpBr`], `const`+`bin` →
+//!   [`DInsn::ConstBinR`]/[`DInsn::ConstBinL`], `load td`+`bin` →
+//!   [`DInsn::LdTdBin`]) — every macro-op still writes the pair's
+//!   intermediate register, so register state is bit-identical.
+//!
+//! **Cost transparency invariant.** Fusion changes *how* cycles, path
+//! hashes and task-data discounts are computed, never their values: for
+//! any segment, the fused engine (`Interp::fused` + the block loop in
+//! `sim::interp`) produces bit-identical `SegmentOutput` (cycles, path
+//! hash, end) and spawn lists to per-instruction decoded dispatch, and
+//! hence bit-identical `RunStats`. `rust/tests/interp_differential.rs`
+//! and `rust/tests/compiler_fuzz.rs` enforce this across the workloads
+//! and the fuzz corpus; `benches/hotpath.rs` measures the speedup.
+//!
+//! The fold bakes in one device's constants, so a `FusedModule` is built
+//! per `(module, DeviceSpec)` pair — the scheduler does this once per run,
+//! next to `DecodedModule::decode`.
+
+use super::bytecode::{CacheOp, FuncId};
+use super::decoded::{DInsn, DecodedModule, GlobalPc};
+use crate::sim::config::DeviceSpec;
+use crate::sim::interp::{bin_cost, Costs};
+
+/// One maximal straight-line dispatch unit. Entered only at `start`;
+/// always executes through its last instruction (terminators are last by
+/// construction), so the folded sums are exact.
+#[derive(Clone, Copy, Debug)]
+pub struct Superblock {
+    /// First decoded instruction (global pc) — always a leader.
+    pub start: GlobalPc,
+    /// Decoded instruction count (`start + len` = fall-through pc).
+    pub len: u32,
+    /// Fused-stream range: `FusedModule::insns[fused_base..][..fused_len]`.
+    pub fused_base: u32,
+    pub fused_len: u32,
+    /// Folded static compute cycles (ALU/branch/spawn charges).
+    pub compute: u64,
+    /// Folded static memory cycles (loads/stores/join/finish charges);
+    /// excludes the dynamic parts: `LdTd` first-touch resolution and
+    /// intrinsic costs.
+    pub mem: u64,
+    /// Task-data bits whose *first* access inside the block is a load —
+    /// each pays the L2 latency iff its bit is still cold at block entry.
+    pub td_cold_bits: u64,
+    /// All task-data bits the block touches (loads and stores); OR-ed into
+    /// the frame's `td_touched` at block entry.
+    pub td_all_bits: u64,
+    /// Total `LdTd` executions in the block (warm ones charge ALU).
+    pub td_loads: u32,
+}
+
+/// A decoded module partitioned into superblocks with a macro-op-fused
+/// instruction stream. Purely derived data; see the module docs.
+#[derive(Clone, Debug, Default)]
+pub struct FusedModule {
+    /// Blocks in program order (function order, then pc order).
+    pub blocks: Vec<Superblock>,
+    /// Block index containing each decoded pc (`block_of[pc]`); entry pcs
+    /// always map to a block whose `start` is that pc.
+    pub block_of: Vec<u32>,
+    /// The fused streams of all blocks, contiguous in block order.
+    pub insns: Vec<DInsn>,
+    /// Name of the device whose costs were folded in (guards against
+    /// executing with a mismatched `DeviceSpec`).
+    pub dev_name: &'static str,
+}
+
+/// Does `insn` force the *following* instruction to start a new block?
+fn ends_block(insn: &DInsn) -> bool {
+    matches!(
+        insn,
+        DInsn::Jmp { .. }
+            | DInsn::Br { .. }
+            | DInsn::Spawn { .. }
+            | DInsn::PrepareJoin { .. }
+            | DInsn::FinishTask
+            | DInsn::Intr { .. }
+            | DInsn::ParEnter { .. }
+            | DInsn::ParExit
+            | DInsn::Trap
+    )
+}
+
+impl FusedModule {
+    /// Partition `dm` into superblocks and fold `dev`'s costs. Pure
+    /// derivation — called once at load time, next to
+    /// [`DecodedModule::decode`].
+    pub fn fuse(dm: &DecodedModule, dev: &DeviceSpec) -> FusedModule {
+        let n = dm.insns.len();
+        let costs = Costs::of(dev);
+        // -- 1. leaders: every pc control flow can enter ------------------
+        let mut leader = vec![false; n + 1];
+        for df in &dm.funcs {
+            if df.insn_base < df.insn_end {
+                leader[df.insn_base as usize] = true;
+            }
+        }
+        for &pc in &dm.state_pcs {
+            leader[pc as usize] = true;
+        }
+        for (i, insn) in dm.insns.iter().enumerate() {
+            match *insn {
+                DInsn::Jmp { target } => leader[target as usize] = true,
+                DInsn::Br { t, f, .. } => {
+                    leader[t as usize] = true;
+                    leader[f as usize] = true;
+                }
+                _ => {}
+            }
+            if ends_block(insn) {
+                leader[i + 1] = true;
+            }
+        }
+        // -- 2. blocks: fold costs + td masks, emit the fused stream ------
+        let mut fm = FusedModule {
+            blocks: Vec::new(),
+            block_of: vec![0; n],
+            insns: Vec::new(),
+            dev_name: dev.name,
+        };
+        for df in &dm.funcs {
+            let (base, end) = (df.insn_base as usize, df.insn_end as usize);
+            let mut start = base;
+            while start < end {
+                debug_assert!(leader[start], "block start must be a leader");
+                let mut stop = start + 1;
+                while stop < end && !leader[stop] {
+                    stop += 1;
+                }
+                fm.push_block(dm, start, stop, &costs, dev);
+                start = stop;
+            }
+        }
+        fm
+    }
+
+    /// Append the block `[start, stop)` of `dm`: fold its costs, compute
+    /// its task-data masks, and emit its macro-op-fused stream.
+    fn push_block(
+        &mut self,
+        dm: &DecodedModule,
+        start: usize,
+        stop: usize,
+        costs: &Costs,
+        dev: &DeviceSpec,
+    ) {
+        let bi = self.blocks.len() as u32;
+        let mut b = Superblock {
+            start: start as GlobalPc,
+            len: (stop - start) as u32,
+            fused_base: self.insns.len() as u32,
+            fused_len: 0,
+            compute: 0,
+            mem: 0,
+            td_cold_bits: 0,
+            td_all_bits: 0,
+            td_loads: 0,
+        };
+        for pc in start..stop {
+            self.block_of[pc] = bi;
+            match dm.insns[pc] {
+                DInsn::Const { .. } | DInsn::Mov { .. } | DInsn::Un { .. } => {
+                    b.compute += costs.alu;
+                }
+                DInsn::Bin { op, .. } => b.compute += bin_cost(op, dev),
+                DInsn::Jmp { .. } | DInsn::Br { .. } => b.compute += costs.branch,
+                DInsn::LdG { cache, .. } => {
+                    b.mem += match cache {
+                        CacheOp::Ca => costs.cached_load,
+                        CacheOp::Cg => costs.cg_load,
+                    };
+                }
+                DInsn::StG { cache, .. } => {
+                    b.mem += match cache {
+                        CacheOp::Ca => costs.stg_ca,
+                        CacheOp::Cg => costs.stg_cg,
+                    };
+                }
+                DInsn::LdTd { off, .. } => {
+                    let bit = 1u64 << (off as u64 & 63);
+                    if b.td_all_bits & bit == 0 {
+                        // first access of this bit in the block is a load:
+                        // cold iff still untouched at block entry
+                        b.td_cold_bits |= bit;
+                    }
+                    b.td_all_bits |= bit;
+                    b.td_loads += 1;
+                }
+                DInsn::StTd { off, .. } => {
+                    b.td_all_bits |= 1u64 << (off as u64 & 63);
+                    b.mem += costs.sttd;
+                }
+                DInsn::Spawn { .. } => b.compute += costs.spawn,
+                DInsn::PrepareJoin { .. } => b.mem += costs.cg_load + costs.fence,
+                DInsn::FinishTask => b.mem += costs.fence,
+                DInsn::ChildResult { .. } => b.mem += costs.cg_load,
+                // dynamic costs stay with their handler in the block loop
+                DInsn::Intr { .. } | DInsn::ParEnter { .. } | DInsn::ParExit | DInsn::Trap => {}
+                DInsn::CmpBr { .. }
+                | DInsn::ConstBinR { .. }
+                | DInsn::ConstBinL { .. }
+                | DInsn::LdTdBin { .. } => {
+                    unreachable!("macro-op in a decoded stream")
+                }
+            }
+        }
+        // Peephole macro-op fusion over the block's decoded range. One-insn
+        // lookahead keeps a `cmp`+`br` pair intact: when the *next* pair is
+        // a Bin feeding the block's terminating Br, the current insn is
+        // emitted unfused so the branch fusion wins (either choice fuses
+        // one pair; CmpBr also removes a dispatched control insn).
+        let mut pc = start;
+        while pc < stop {
+            let cur = dm.insns[pc];
+            if pc + 1 < stop {
+                let next_pair_is_cmp_br = pc + 2 < stop
+                    && matches!(
+                        (dm.insns[pc + 1], dm.insns[pc + 2]),
+                        (DInsn::Bin { dst, .. }, DInsn::Br { cond, .. }) if cond == dst
+                    );
+                if !next_pair_is_cmp_br {
+                    if let Some(fused) = fuse_pair(cur, dm.insns[pc + 1]) {
+                        self.insns.push(fused);
+                        pc += 2;
+                        continue;
+                    }
+                }
+            }
+            self.insns.push(cur);
+            pc += 1;
+        }
+        b.fused_len = self.insns.len() as u32 - b.fused_base;
+        self.blocks.push(b);
+    }
+
+    /// The block entered at decoded pc `pc` (must be a leader).
+    #[inline]
+    pub fn block_at(&self, pc: GlobalPc) -> &Superblock {
+        let b = &self.blocks[self.block_of[pc as usize] as usize];
+        debug_assert_eq!(b.start, pc, "blocks are entered only at their start");
+        b
+    }
+
+    /// The fused instruction stream of `b`.
+    #[inline]
+    pub fn stream(&self, b: &Superblock) -> &[DInsn] {
+        &self.insns[b.fused_base as usize..(b.fused_base + b.fused_len) as usize]
+    }
+
+    /// Blocks of one function, for diagnostics and tests.
+    pub fn blocks_of(&self, dm: &DecodedModule, func: FuncId) -> Vec<&Superblock> {
+        let df = dm.func(func);
+        self.blocks
+            .iter()
+            .filter(|b| b.start >= df.insn_base && b.start < df.insn_end)
+            .collect()
+    }
+}
+
+/// Try to fuse the adjacent decoded pair `(a, b)` into one macro-op.
+/// Patterns cover the dominant pairs of the paper's workloads; every
+/// macro-op still writes the intermediate register, so fusion is invisible
+/// to register state. Returns `None` when the pair must stay unfused.
+fn fuse_pair(first: DInsn, second: DInsn) -> Option<DInsn> {
+    match (first, second) {
+        // cmp + br — the loop/recursion guard pair
+        (DInsn::Bin { op, dst, a, b }, DInsn::Br { cond, t, f }) if cond == dst => {
+            Some(DInsn::CmpBr { op, dst, a, b, t, f })
+        }
+        // const + bin with the immediate as the right operand (n - 1, n < 2)
+        (DInsn::Const { dst: tmp, val }, DInsn::Bin { op, dst, a, b })
+            if b == tmp && a != tmp =>
+        {
+            Some(DInsn::ConstBinR { op, dst, a, tmp, val })
+        }
+        // const + bin with the immediate as the left operand (1 << d)
+        (DInsn::Const { dst: tmp, val }, DInsn::Bin { op, dst, a, b })
+            if a == tmp && b != tmp =>
+        {
+            Some(DInsn::ConstBinL { op, dst, b, tmp, val })
+        }
+        // task-data load feeding a bin op (a + b over record fields)
+        (DInsn::LdTd { dst: tmp, off }, DInsn::Bin { op, dst, a, b })
+            if a == tmp || b == tmp =>
+        {
+            Some(DInsn::LdTdBin {
+                op,
+                dst,
+                a,
+                b,
+                tmp,
+                off,
+            })
+        }
+        _ => None,
+    }
+}
+
+/// Decoded instruction count a fused stream stands for (tests/diagnostics).
+pub fn fused_stream_decoded_len(stream: &[DInsn]) -> usize {
+    stream
+        .iter()
+        .map(|i| match i {
+            DInsn::CmpBr { .. }
+            | DInsn::ConstBinR { .. }
+            | DInsn::ConstBinL { .. }
+            | DInsn::LdTdBin { .. } => 2,
+            _ => 1,
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile_default;
+
+    const FIB: &str = r#"
+        #pragma gtap function
+        int fib(int n) {
+            if (n < 2) return n;
+            int a; int b;
+            #pragma gtap task queue(1)
+            a = fib(n - 1);
+            #pragma gtap task queue(1)
+            b = fib(n - 2);
+            #pragma gtap taskwait queue(2)
+            return a + b;
+        }
+    "#;
+
+    fn fuse_src(src: &str) -> (DecodedModule, FusedModule) {
+        let m = compile_default(src).unwrap();
+        let dm = DecodedModule::decode(&m);
+        let fm = FusedModule::fuse(&dm, &DeviceSpec::h100());
+        (dm, fm)
+    }
+
+    #[test]
+    fn blocks_partition_every_function_exactly() {
+        let (dm, fm) = fuse_src(FIB);
+        for (fi, df) in dm.funcs.iter().enumerate() {
+            let blocks = fm.blocks_of(&dm, fi as FuncId);
+            assert!(!blocks.is_empty());
+            let mut pc = df.insn_base;
+            for b in &blocks {
+                assert_eq!(b.start, pc, "blocks are contiguous, in order");
+                assert!(b.len > 0);
+                pc += b.len;
+            }
+            assert_eq!(pc, df.insn_end, "blocks cover the whole function");
+        }
+        // every decoded pc maps into the block that contains it
+        for (pc, &bi) in fm.block_of.iter().enumerate() {
+            let b = &fm.blocks[bi as usize];
+            let (s, e) = (b.start as usize, (b.start + b.len) as usize);
+            assert!(pc >= s && pc < e, "block_of[{pc}] = {bi} out of range");
+        }
+    }
+
+    #[test]
+    fn every_entry_point_starts_a_block() {
+        let (dm, fm) = fuse_src(FIB);
+        let mut entries: Vec<GlobalPc> = dm.state_pcs.clone();
+        for insn in &dm.insns {
+            match *insn {
+                DInsn::Jmp { target } => entries.push(target),
+                DInsn::Br { t, f, .. } => {
+                    entries.push(t);
+                    entries.push(f);
+                }
+                _ => {}
+            }
+        }
+        for pc in entries {
+            assert_eq!(fm.block_at(pc).start, pc, "entry {pc} must lead a block");
+        }
+    }
+
+    #[test]
+    fn terminators_are_always_last() {
+        let (dm, fm) = fuse_src(FIB);
+        for b in &fm.blocks {
+            for pc in b.start..b.start + b.len - 1 {
+                assert!(
+                    !ends_block(&dm.insns[pc as usize]),
+                    "terminator in the middle of block at {}",
+                    b.start
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_streams_preserve_decoded_length() {
+        let (dm, fm) = fuse_src(FIB);
+        let mut total = 0usize;
+        for b in &fm.blocks {
+            let stream = fm.stream(b);
+            assert_eq!(
+                fused_stream_decoded_len(stream),
+                b.len as usize,
+                "stream of block at {} must account for every decoded insn",
+                b.start
+            );
+            total += b.len as usize;
+        }
+        assert_eq!(total, dm.insns.len());
+        assert!(
+            fm.insns.len() < dm.insns.len(),
+            "fib must fuse at least one pair"
+        );
+    }
+
+    #[test]
+    fn fib_emits_const_bin_macro_ops() {
+        // `n < 2`, `n - 1`, `n - 2` all lower to const+bin pairs
+        let (_, fm) = fuse_src(FIB);
+        let n = fm
+            .insns
+            .iter()
+            .filter(|i| matches!(i, DInsn::ConstBinR { .. } | DInsn::ConstBinL { .. }))
+            .count();
+        assert!(n >= 2, "expected const+bin fusions, got {n}");
+    }
+
+    #[test]
+    fn var_var_compare_emits_cmp_br() {
+        let src = "#pragma gtap function\nint m(int a, int b) {\n\
+                   if (a < b) return a;\nreturn b; }";
+        let (_, fm) = fuse_src(src);
+        assert!(
+            fm.insns.iter().any(|i| matches!(i, DInsn::CmpBr { .. })),
+            "a < b must fuse the cmp into the branch"
+        );
+    }
+
+    #[test]
+    fn td_load_feeding_bin_emits_ld_td_bin() {
+        let src = "#pragma gtap function\nint add(int a, int b) { return a + b; }";
+        let (_, fm) = fuse_src(src);
+        assert!(
+            fm.insns.iter().any(|i| matches!(i, DInsn::LdTdBin { .. })),
+            "a + b reads two record fields; the second load feeds the add"
+        );
+    }
+
+    #[test]
+    fn td_masks_track_first_access_kind() {
+        // block loads n twice (n + n): one cold candidate, two loads
+        let src = "#pragma gtap function\nint dbl(int n) { return n + n; }";
+        let (dm, fm) = fuse_src(src);
+        let b = fm.block_at(dm.funcs[0].insn_base);
+        assert!(b.td_loads >= 2);
+        assert_eq!(
+            b.td_cold_bits.count_ones(),
+            b.td_all_bits.count_ones() - 1,
+            "result store adds one store-first bit on top of the arg load"
+        );
+        assert_eq!(b.td_cold_bits & b.td_all_bits, b.td_cold_bits);
+    }
+
+    #[test]
+    fn folded_costs_match_a_hand_count() {
+        // straight-line void body: const + two td ops + finish
+        let src = "#pragma gtap function\nvoid set(int n) { n = 3; }";
+        let (dm, fm) = fuse_src(src);
+        let dev = DeviceSpec::h100();
+        let costs = Costs::of(&dev);
+        let blocks = fm.blocks_of(&dm, 0);
+        let compute: u64 = blocks.iter().map(|b| b.compute).sum();
+        let mem: u64 = blocks.iter().map(|b| b.mem).sum();
+        // recompute independently from the decoded stream
+        let (mut want_c, mut want_m) = (0u64, 0u64);
+        for insn in &dm.insns[dm.funcs[0].insn_base as usize..dm.funcs[0].insn_end as usize] {
+            match *insn {
+                DInsn::Const { .. } | DInsn::Mov { .. } | DInsn::Un { .. } => {
+                    want_c += costs.alu
+                }
+                DInsn::Bin { op, .. } => want_c += bin_cost(op, &dev),
+                DInsn::Jmp { .. } | DInsn::Br { .. } => want_c += costs.branch,
+                DInsn::StTd { .. } => want_m += costs.sttd,
+                DInsn::FinishTask => want_m += costs.fence,
+                DInsn::LdTd { .. } => {}
+                other => panic!("unexpected {other:?} in straight-line body"),
+            }
+        }
+        assert_eq!(compute, want_c);
+        assert_eq!(mem, want_m);
+    }
+
+    #[test]
+    fn device_name_recorded() {
+        let (_, fm) = fuse_src(FIB);
+        assert_eq!(fm.dev_name, "h100");
+    }
+}

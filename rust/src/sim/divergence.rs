@@ -72,6 +72,29 @@ pub fn fold(hash: u64, event: u64) -> u64 {
     (hash ^ event).wrapping_mul(0x100000001B3)
 }
 
+/// Initial fold value every segment hash starts from (before the
+/// function/state seed is folded in).
+pub const SEED_INIT: u64 = 0x5EED;
+
+/// Path-hash seed of a `(func, state)` segment entry: different task
+/// functions / resume states are different instruction streams, hence
+/// always divergent. Pure in its inputs, so `ir::decoded` precomputes one
+/// constant per state entry at load time and the interpreters start from
+/// the table instead of folding twice per segment.
+#[inline]
+pub fn seed(func: u64, state: u64) -> u64 {
+    fold(fold(SEED_INIT, func), state)
+}
+
+/// The event a conditional branch folds into the path: the *target* pc
+/// shifted left with the taken bit in the low position. Shared by the
+/// interpreters and the superblock builder so fused `CmpBr` macro-ops fold
+/// bit-identical hashes to the unfused `Bin`+`Br` pair.
+#[inline]
+pub fn br_event(target_pc: u64, taken: bool) -> u64 {
+    (target_pc << 1) | taken as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +134,22 @@ mod tests {
     fn empty_warp_is_free() {
         assert_eq!(warp_cycles(&[]), 0);
         assert_eq!(path_groups(&[]), 0);
+    }
+
+    #[test]
+    fn seed_is_the_double_fold() {
+        for (f, s) in [(0u64, 0u64), (1, 0), (0, 1), (7, 3)] {
+            assert_eq!(seed(f, s), fold(fold(SEED_INIT, f), s));
+        }
+        assert_ne!(seed(0, 1), seed(1, 0), "func and state are not symmetric");
+    }
+
+    #[test]
+    fn br_event_distinguishes_direction_and_target() {
+        assert_ne!(br_event(10, true), br_event(10, false));
+        assert_ne!(br_event(10, true), br_event(11, true));
+        assert_eq!(br_event(10, true), (10 << 1) | 1);
+        assert_eq!(br_event(10, false), 10 << 1);
     }
 
     #[test]

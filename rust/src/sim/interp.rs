@@ -7,14 +7,25 @@
 //!
 //! Dispatch runs over a [`DecodedModule`] (see `ir::decoded`): one
 //! contiguous pre-resolved instruction array shared by all functions, with
-//! global jump targets and pooled operand lists. Combined with lane frames
-//! pre-sized from the decoded metadata ([`LaneFrame::sized`]) and
-//! device costs folded into a small constant table at interpreter
-//! construction, steady-state segment execution performs **zero heap
-//! allocations** — `rust/tests/zero_alloc.rs` enforces this under a
-//! counting allocator. The pre-refactor module-walking interpreter is kept
-//! as [`super::interp_ref::RefInterp`] for differential testing and as the
-//! `benches/hotpath.rs` baseline.
+//! global jump targets and pooled operand lists. The production engine
+//! ([`Interp::fused`], what the scheduler constructs) goes one layer
+//! further and dispatches a **superblock** at a time over an
+//! [`ir::superblock::FusedModule`](crate::ir::superblock): one table
+//! lookup charges a block's folded static cycle sums and resolves the
+//! task-data first-touch discount against precomputed masks, then only the
+//! effectful tail — the macro-op-fused dataflow plus the terminator —
+//! executes. Fusion is *cost-transparent*: per-instruction and per-block
+//! dispatch produce bit-identical `SegmentOutput`s (cycles, path hashes)
+//! and spawn lists, so `RunStats` cannot tell them apart.
+//!
+//! Combined with lane frames pre-sized from the decoded metadata
+//! ([`LaneFrame::sized`]) and device costs folded into a small constant
+//! table at interpreter construction, steady-state segment execution
+//! performs **zero heap allocations** — `rust/tests/zero_alloc.rs`
+//! enforces this under a counting allocator for both engines. The
+//! pre-refactor module-walking interpreter is kept as
+//! [`super::interp_ref::RefInterp`] for differential testing and as the
+//! `benches/hotpath.rs` baseline (ref vs decoded vs fused).
 //!
 //! The interpreter is *resumable*: when the task calls the `payload`
 //! intrinsic and an XLA engine is attached, execution suspends with
@@ -34,6 +45,7 @@ use crate::coordinator::records::{RecordPool, TaskId};
 use crate::ir::bytecode::{BinKind, CacheOp, FuncId, Reg, UnKind, NO_PRIORITY_REG};
 use crate::ir::decoded::{DInsn, DecodedModule};
 use crate::ir::intrinsics::Intrinsic;
+use crate::ir::superblock::FusedModule;
 use crate::ir::types::Value;
 
 /// Max arguments of a task function (spawn requests are fixed-size to keep
@@ -108,14 +120,15 @@ pub struct LaneFrame {
     /// access a field lives in a register (what -O3 does with the record
     /// pointer), so later reads cost ALU, not L2 latency.
     td_touched: u64,
-    /// `parallel_for` nesting depth and region accumulators.
+    /// `parallel_for` nesting depth and region accumulators. The region
+    /// cost model is divide-by-width over the *executed* iteration charges
+    /// (plus one barrier); no captured trip count exists — the `ParEnter`
+    /// trip register only feeds the lowered loop bound, which is what lets
+    /// superblocks inside the region fold costs with no per-trip term
+    /// (pinned by `parfor_cost_is_linear_in_trips`).
     par_depth: u32,
     par_compute: u64,
     par_mem: u64,
-    /// Trip count captured at region entry (kept for future per-trip cost
-    /// models; not read by the current divide-by-width model).
-    #[allow(dead_code)]
-    par_trips: u64,
 }
 
 impl LaneFrame {
@@ -143,7 +156,6 @@ impl LaneFrame {
             par_depth: 0,
             par_compute: 0,
             par_mem: 0,
-            par_trips: 0,
         }
     }
 
@@ -180,14 +192,14 @@ impl LaneFrame {
         self.mem_cycles = 0;
         // seed the path hash with (func, state): different task functions /
         // states are different instruction streams — always divergent.
-        self.path = divergence::fold(divergence::fold(0x5EED, func as u64), state as u64);
+        // (Precomputed at decode time; same value as `divergence::seed`.)
+        self.path = dm.state_seed(func, state);
         self.spawns.clear();
         self.pending_payload_dst = None;
         self.td_touched = 0;
         self.par_depth = 0;
         self.par_compute = 0;
         self.par_mem = 0;
-        self.par_trips = 0;
     }
 }
 
@@ -198,22 +210,24 @@ impl Default for LaneFrame {
 }
 
 /// Device costs pre-folded into constants (some involve float blends that
-/// must not run per instruction).
+/// must not run per instruction). Shared with the superblock builder
+/// (`ir::superblock`) so block-folded sums use exactly the per-instruction
+/// constants the dispatch loops charge.
 #[derive(Clone, Copy, Debug)]
-struct Costs {
-    alu: u64,
-    branch: u64,
-    cached_load: u64,
-    cg_load: u64,
-    stg_ca: u64,
-    stg_cg: u64,
-    sttd: u64,
-    spawn: u64,
-    fence: u64,
+pub(crate) struct Costs {
+    pub(crate) alu: u64,
+    pub(crate) branch: u64,
+    pub(crate) cached_load: u64,
+    pub(crate) cg_load: u64,
+    pub(crate) stg_ca: u64,
+    pub(crate) stg_cg: u64,
+    pub(crate) sttd: u64,
+    pub(crate) spawn: u64,
+    pub(crate) fence: u64,
 }
 
 impl Costs {
-    fn of(dev: &DeviceSpec) -> Costs {
+    pub(crate) fn of(dev: &DeviceSpec) -> Costs {
         Costs {
             alu: dev.alu,
             branch: dev.branch,
@@ -239,10 +253,17 @@ pub struct Interp<'a> {
     /// When true, `payload` suspends for XLA batching instead of running
     /// natively.
     pub xla_payload: bool,
+    /// Superblock-fused form: when present, [`Interp::run`] dispatches one
+    /// *block* at a time (folded cycle charges, macro-op stream) instead of
+    /// one instruction at a time. Cost-transparent: bit-identical
+    /// `SegmentOutput` either way.
+    fused: Option<&'a FusedModule>,
     costs: Costs,
 }
 
 impl<'a> Interp<'a> {
+    /// Per-instruction decoded dispatch (the PR-1 engine; kept as the
+    /// mid-tier contender for benches and differential tests).
     pub fn new(
         decoded: &'a DecodedModule,
         dev: &'a DeviceSpec,
@@ -254,6 +275,33 @@ impl<'a> Interp<'a> {
             dev,
             block_width,
             xla_payload,
+            fused: None,
+            costs: Costs::of(dev),
+        }
+    }
+
+    /// Superblock-fused block-at-a-time dispatch — the production engine
+    /// (what the scheduler runs). `fm` must have been fused for the same
+    /// module and device.
+    pub fn fused(
+        decoded: &'a DecodedModule,
+        fm: &'a FusedModule,
+        dev: &'a DeviceSpec,
+        block_width: u32,
+        xla_payload: bool,
+    ) -> Interp<'a> {
+        debug_assert_eq!(
+            fm.dev_name, dev.name,
+            "FusedModule folded {} costs but executing on {}",
+            fm.dev_name, dev.name
+        );
+        debug_assert_eq!(fm.block_of.len(), decoded.insns.len());
+        Interp {
+            decoded,
+            dev,
+            block_width,
+            xla_payload,
+            fused: Some(fm),
             costs: Costs::of(dev),
         }
     }
@@ -304,6 +352,9 @@ impl<'a> Interp<'a> {
         records: &mut RecordPool,
         log: &mut Vec<String>,
     ) -> StepResult {
+        if let Some(fm) = self.fused {
+            return self.run_fused(fm, frame, mem, records, log);
+        }
         let insns = &self.decoded.insns[..];
         let arg_pool = &self.decoded.args[..];
         let dev = self.dev;
@@ -355,8 +406,10 @@ impl<'a> Interp<'a> {
                     frame.pc = if taken { t } else { f };
                     self.charge_c(frame, costs.branch);
                     // fold the decision into the dynamic path
-                    frame.path =
-                        divergence::fold(frame.path, (frame.pc as u64) << 1 | taken as u64);
+                    frame.path = divergence::fold(
+                        frame.path,
+                        divergence::br_event(frame.pc as u64, taken),
+                    );
                 }
                 DInsn::LdG { dst, addr, cache } => {
                     let a = frame.regs[addr as usize];
@@ -492,11 +545,10 @@ impl<'a> Interp<'a> {
                         frame.path = divergence::fold(frame.path, out.path_token);
                     }
                 }
-                DInsn::ParEnter { trips } => {
+                DInsn::ParEnter { .. } => {
                     if frame.par_depth == 0 {
                         frame.par_compute = 0;
                         frame.par_mem = 0;
-                        frame.par_trips = frame.regs[trips as usize];
                     }
                     frame.par_depth += 1;
                 }
@@ -522,7 +574,270 @@ impl<'a> Interp<'a> {
                         self.decoded.local_pc(frame.func, frame.pc - 1)
                     );
                 }
+                DInsn::CmpBr { .. }
+                | DInsn::ConstBinR { .. }
+                | DInsn::ConstBinL { .. }
+                | DInsn::LdTdBin { .. } => {
+                    unreachable!("macro-op in the decoded (unfused) stream")
+                }
             }
+        }
+    }
+
+    /// Superblock dispatch: one table lookup charges a block's folded
+    /// cycle sums and resolves the task-data first-touch discount against
+    /// the block's precomputed masks, then only the effectful tail — the
+    /// macro-op-fused register/memory dataflow plus the terminator —
+    /// executes. Cost-transparent: bit-identical cycles, path hashes and
+    /// spawn lists to the per-instruction loop in [`Interp::run`]
+    /// (enforced by `rust/tests/interp_differential.rs` and the fuzz
+    /// corpus).
+    fn run_fused(
+        &self,
+        fm: &FusedModule,
+        frame: &mut LaneFrame,
+        mem: &mut Memory,
+        records: &mut RecordPool,
+        log: &mut Vec<String>,
+    ) -> StepResult {
+        let arg_pool = &self.decoded.args[..];
+        let blocks = &fm.blocks[..];
+        let block_of = &fm.block_of[..];
+        let fused = &fm.insns[..];
+        let dev = self.dev;
+        let costs = self.costs;
+        let mut executed: u64 = 0;
+        loop {
+            let b = blocks[block_of[frame.pc as usize] as usize];
+            debug_assert_eq!(b.start, frame.pc, "segments enter blocks at their start");
+            executed += b.len as u64;
+            if executed > MAX_SEGMENT_INSNS {
+                let df = self.decoded.func(frame.func);
+                panic!(
+                    "segment of task {} (func {:?}, pc {}) exceeded {} instructions — \
+                     infinite loop in GTaP-C code?",
+                    frame.task,
+                    df.name,
+                    self.decoded.local_pc(frame.func, frame.pc),
+                    MAX_SEGMENT_INSNS
+                );
+            }
+            // one charge for the whole block's static costs
+            if b.compute != 0 {
+                self.charge_c(frame, b.compute);
+            }
+            if b.mem != 0 {
+                self.charge_m(frame, b.mem);
+            }
+            // task-data first-touch discount, resolved per block entry: a
+            // load whose bit is still cold pays the L2 latency, every other
+            // load in the block is register-resident (ALU)
+            if b.td_loads != 0 {
+                let cold = (b.td_cold_bits & !frame.td_touched).count_ones() as u64;
+                let warm = b.td_loads as u64 - cold;
+                if cold != 0 {
+                    self.charge_m(frame, cold * costs.cg_load);
+                }
+                if warm != 0 {
+                    self.charge_c(frame, warm * costs.alu);
+                }
+            }
+            frame.td_touched |= b.td_all_bits;
+            // effectful tail: dataflow + terminator, no per-insn accounting
+            let fall = b.start + b.len;
+            let mut next = fall;
+            for &insn in &fused[b.fused_base as usize..(b.fused_base + b.fused_len) as usize] {
+                match insn {
+                    DInsn::Const { dst, val } => frame.regs[dst as usize] = val,
+                    DInsn::Mov { dst, src } => {
+                        frame.regs[dst as usize] = frame.regs[src as usize]
+                    }
+                    DInsn::Bin { op, dst, a, b } => {
+                        let x = Value(frame.regs[a as usize]);
+                        let y = Value(frame.regs[b as usize]);
+                        frame.regs[dst as usize] = eval_bin(op, x, y, dev).0 .0;
+                    }
+                    DInsn::Un { op, dst, a } => {
+                        frame.regs[dst as usize] = eval_un(op, Value(frame.regs[a as usize])).0;
+                    }
+                    DInsn::ConstBinR { op, dst, a, tmp, val } => {
+                        frame.regs[tmp as usize] = val;
+                        let x = Value(frame.regs[a as usize]);
+                        frame.regs[dst as usize] = eval_bin(op, x, Value(val), dev).0 .0;
+                    }
+                    DInsn::ConstBinL { op, dst, b, tmp, val } => {
+                        frame.regs[tmp as usize] = val;
+                        let y = Value(frame.regs[b as usize]);
+                        frame.regs[dst as usize] = eval_bin(op, Value(val), y, dev).0 .0;
+                    }
+                    DInsn::LdTdBin { op, dst, a, b, tmp, off } => {
+                        frame.regs[tmp as usize] = records.data(frame.task)[off as usize];
+                        let x = Value(frame.regs[a as usize]);
+                        let y = Value(frame.regs[b as usize]);
+                        frame.regs[dst as usize] = eval_bin(op, x, y, dev).0 .0;
+                    }
+                    DInsn::LdG { dst, addr, .. } => {
+                        let a = frame.regs[addr as usize];
+                        frame.regs[dst as usize] = mem.load(a);
+                    }
+                    DInsn::StG { addr, src, .. } => {
+                        let a = frame.regs[addr as usize];
+                        mem.store(a, frame.regs[src as usize]);
+                    }
+                    DInsn::LdTd { dst, off } => {
+                        frame.regs[dst as usize] = records.data(frame.task)[off as usize];
+                    }
+                    DInsn::StTd { off, src } => {
+                        records.data_mut(frame.task)[off as usize] = frame.regs[src as usize];
+                    }
+                    DInsn::ChildResult { dst, slot } => {
+                        let child = records.child(frame.task, slot);
+                        let cfunc = records.meta(child).func;
+                        let off = self
+                            .decoded
+                            .func(cfunc)
+                            .result_off
+                            .expect("capturing spawn of non-void task");
+                        frame.regs[dst as usize] = records.data(child)[off as usize];
+                    }
+                    DInsn::Jmp { target } => next = target,
+                    DInsn::Br { cond, t, f } => {
+                        let taken = frame.regs[cond as usize] != 0;
+                        next = if taken { t } else { f };
+                        frame.path = divergence::fold(
+                            frame.path,
+                            divergence::br_event(next as u64, taken),
+                        );
+                    }
+                    DInsn::CmpBr { op, dst, a, b, t, f } => {
+                        let x = Value(frame.regs[a as usize]);
+                        let y = Value(frame.regs[b as usize]);
+                        let v = eval_bin(op, x, y, dev).0;
+                        frame.regs[dst as usize] = v.0;
+                        let taken = v.0 != 0;
+                        next = if taken { t } else { f };
+                        frame.path = divergence::fold(
+                            frame.path,
+                            divergence::br_event(next as u64, taken),
+                        );
+                    }
+                    DInsn::Spawn {
+                        func,
+                        arg_base,
+                        argc,
+                        queue,
+                        priority,
+                    } => {
+                        let mut args = [0u64; MAX_TASK_ARGS];
+                        for i in 0..argc as usize {
+                            let r = arg_pool[arg_base as usize + i];
+                            args[i] = frame.regs[r as usize];
+                        }
+                        let q = frame.regs[queue as usize] as u8;
+                        let pr = if priority == NO_PRIORITY_REG {
+                            None
+                        } else {
+                            Some((frame.regs[priority as usize] as i64).clamp(0, 255) as u8)
+                        };
+                        frame.spawns.push(SpawnReq {
+                            func,
+                            argc,
+                            args,
+                            queue: q,
+                            priority: pr,
+                        });
+                    }
+                    DInsn::PrepareJoin { next_state, queue } => {
+                        let q = frame.regs[queue as usize] as u8;
+                        return StepResult::Done(self.seal(
+                            frame,
+                            SegmentEnd::Join {
+                                next_state,
+                                queue: q,
+                            },
+                        ));
+                    }
+                    DInsn::FinishTask => {
+                        return StepResult::Done(self.seal(frame, SegmentEnd::Finish));
+                    }
+                    DInsn::Intr {
+                        id,
+                        dst,
+                        arg_base,
+                        argc,
+                        has_dst,
+                    } => {
+                        let mut args = [Value(0); 8];
+                        for i in 0..argc as usize {
+                            let r = arg_pool[arg_base as usize + i];
+                            args[i] = Value(frame.regs[r as usize]);
+                        }
+                        if id == Intrinsic::Payload && self.xla_payload {
+                            let (seed, m, c) =
+                                (args[0].as_i64(), args[1].as_i64(), args[2].as_i64());
+                            self.charge_m(frame, intrinsics::payload_cycles(dev, m, c));
+                            frame.path = divergence::fold(
+                                frame.path,
+                                crate::util::prng::mix64(
+                                    (m as u64) ^ (c as u64).rotate_left(17) ^ 0xFA,
+                                ),
+                            );
+                            frame.pending_payload_dst = Some(dst);
+                            // resume at the fall-through pc — a block start,
+                            // since intrinsics terminate their block
+                            frame.pc = fall;
+                            return StepResult::NeedPayload {
+                                seed,
+                                mem_ops: m,
+                                compute_iters: c,
+                            };
+                        }
+                        let mut ctx = IntrCtx {
+                            mem,
+                            dev,
+                            lane_id: frame.lane,
+                            worker_id: 0,
+                            log,
+                        };
+                        let out = intrinsics::execute(id, &args[..argc as usize], &mut ctx);
+                        if has_dst {
+                            frame.regs[dst as usize] = out.value.0;
+                        }
+                        self.charge_m(frame, out.cycles);
+                        if out.path_token != 0 {
+                            frame.path = divergence::fold(frame.path, out.path_token);
+                        }
+                    }
+                    DInsn::ParEnter { .. } => {
+                        if frame.par_depth == 0 {
+                            frame.par_compute = 0;
+                            frame.par_mem = 0;
+                        }
+                        frame.par_depth += 1;
+                    }
+                    DInsn::ParExit => {
+                        frame.par_depth -= 1;
+                        if frame.par_depth == 0 {
+                            let w = self.block_width.max(1) as u64;
+                            frame.compute_cycles += frame.par_compute.div_ceil(w);
+                            frame.mem_cycles += frame.par_mem.div_ceil(w);
+                            frame.compute_cycles += dev.barrier;
+                            frame.par_compute = 0;
+                            frame.par_mem = 0;
+                        }
+                    }
+                    DInsn::Trap => {
+                        let df = self.decoded.func(frame.func);
+                        panic!(
+                            "__trap() reached in task {} (func {:?}, pc {})",
+                            frame.task,
+                            df.name,
+                            self.decoded.local_pc(frame.func, fall - 1)
+                        );
+                    }
+                }
+            }
+            frame.pc = next;
         }
     }
 
@@ -589,14 +904,22 @@ pub(crate) fn eval_bin(op: BinKind, x: Value, y: Value, dev: &DeviceSpec) -> (Va
         FEq => Value::from_bool(x.as_f64() == y.as_f64()),
         FNe => Value::from_bool(x.as_f64() != y.as_f64()),
     };
-    let cost = match op {
+    (v, bin_cost(op, dev))
+}
+
+/// Static cycle cost of a binary ALU op — shared by [`eval_bin`] and the
+/// superblock builder's fold (`ir::superblock`), which needs the cost
+/// without the values.
+#[inline(always)]
+pub(crate) fn bin_cost(op: BinKind, dev: &DeviceSpec) -> u64 {
+    use BinKind::*;
+    match op {
         IMul => dev.imul,
         IDiv | IRem => dev.idiv,
         FDiv => dev.fdiv,
         FAdd | FSub | FMul => dev.fma,
         _ => dev.alu,
-    };
-    (v, cost)
+    }
 }
 
 #[cfg(test)]
@@ -837,6 +1160,66 @@ mod tests {
             other => panic!("{other:?}"),
         }
         assert_eq!(records.data(parent)[off] as i64, 1, "fib(2) = 1");
+    }
+
+    #[test]
+    fn parfor_cost_is_linear_in_trips() {
+        // Pins the PR-4 decision to drop `LaneFrame::par_trips`: the region
+        // model divides *executed-iteration* charges by the block width and
+        // adds one barrier, so region cost is exactly affine in the trip
+        // count and the captured trip count is dead. A per-trip cost term
+        // (what `par_trips` was reserved for) would make these increments
+        // unequal — reintroduce the field if this ever needs to fail.
+        let src = "global int g;\n#pragma gtap function\nvoid f(int n) {\n\
+                   parallel_for (i in 0..n) { g = g + i; } }";
+        let cycles = |n: i64| run_one(src, "f", &[n]).0.cycles;
+        let (c32, c64, c96) = (cycles(32), cycles(64), cycles(96));
+        assert!(c64 > c32, "more trips must cost more");
+        assert_eq!(c96 - c64, c64 - c32, "no hidden per-trip or captured-trip term");
+    }
+
+    #[test]
+    fn fused_dispatch_is_bit_identical_to_decoded() {
+        // The module-level contract (differential + fuzz suites cover the
+        // full corpus); this is the in-module smoke pin.
+        let module = compile_default(FIB).unwrap();
+        let decoded = DecodedModule::decode(&module);
+        let fm = crate::ir::superblock::FusedModule::fuse(&decoded, &DeviceSpec::h100());
+        let dev = DeviceSpec::h100();
+        for n in [0i64, 1, 2, 7, 19] {
+            let words = module.funcs[0].layout.words().max(1);
+            let mut outs = Vec::new();
+            for use_fused in [false, true] {
+                let mut records = RecordPool::new(16, words, 4);
+                let mut mem = Memory::new(module.globals_words());
+                let task = records.alloc(0, NO_TASK).unwrap();
+                records.data_mut(task)[0] = n as u64;
+                let interp = if use_fused {
+                    Interp::fused(&decoded, &fm, &dev, 1, false)
+                } else {
+                    Interp::new(&decoded, &dev, 1, false)
+                };
+                let mut frame = LaneFrame::sized(&decoded);
+                frame.reset(&decoded, task, 0, 0, 0);
+                let mut log = vec![];
+                match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+                    StepResult::Done(o) => {
+                        outs.push((o.end, o.cycles, o.path, frame.spawns().to_vec()))
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            let (d, f) = (&outs[0], &outs[1]);
+            assert_eq!(d.0, f.0, "end (n={n})");
+            assert_eq!(d.1, f.1, "cycles (n={n})");
+            assert_eq!(d.2, f.2, "path hash must be bit-identical (n={n})");
+            assert_eq!(d.3.len(), f.3.len(), "spawn count (n={n})");
+            for (x, y) in d.3.iter().zip(f.3.iter()) {
+                assert_eq!(x.args, y.args);
+                assert_eq!((x.func, x.argc, x.queue, x.priority),
+                           (y.func, y.argc, y.queue, y.priority));
+            }
+        }
     }
 
     #[test]

@@ -50,8 +50,6 @@ pub struct RefLaneFrame {
     par_depth: u32,
     par_compute: u64,
     par_mem: u64,
-    #[allow(dead_code)]
-    par_trips: u64,
 }
 
 impl RefLaneFrame {
@@ -71,7 +69,6 @@ impl RefLaneFrame {
             par_depth: 0,
             par_compute: 0,
             par_mem: 0,
-            par_trips: 0,
         }
     }
 
@@ -92,14 +89,13 @@ impl RefLaneFrame {
         self.regs.resize(fc.nregs as usize, 0);
         self.compute_cycles = 0;
         self.mem_cycles = 0;
-        self.path = divergence::fold(divergence::fold(0x5EED, func as u64), state as u64);
+        self.path = divergence::seed(func as u64, state as u64);
         self.spawns.clear();
         self.pending_payload_dst = None;
         self.td_touched = 0;
         self.par_depth = 0;
         self.par_compute = 0;
         self.par_mem = 0;
-        self.par_trips = 0;
     }
 }
 
@@ -205,8 +201,10 @@ impl<'a> RefInterp<'a> {
                     let taken = frame.regs[cond as usize] != 0;
                     frame.pc = if taken { t } else { f };
                     self.charge_c(frame, dev.branch);
-                    frame.path =
-                        divergence::fold(frame.path, (frame.pc as u64) << 1 | taken as u64);
+                    frame.path = divergence::fold(
+                        frame.path,
+                        divergence::br_event(frame.pc as u64, taken),
+                    );
                 }
                 Insn::LdG { dst, addr, cache } => {
                     let a = frame.regs[addr as usize];
@@ -338,11 +336,10 @@ impl<'a> RefInterp<'a> {
                         frame.path = divergence::fold(frame.path, out.path_token);
                     }
                 }
-                Insn::ParEnter { trips } => {
+                Insn::ParEnter { .. } => {
                     if frame.par_depth == 0 {
                         frame.par_compute = 0;
                         frame.par_mem = 0;
-                        frame.par_trips = frame.regs[trips as usize];
                     }
                     frame.par_depth += 1;
                 }

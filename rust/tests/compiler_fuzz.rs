@@ -3,10 +3,22 @@
 //! must match a direct AST evaluation done in the test. This exercises
 //! codegen's register allocation, temp recycling, short-circuit lowering,
 //! ternaries and division guards end to end.
+//!
+//! The same random programs also run one segment through all three
+//! interpreter tiers (reference / decoded / superblock-fused), asserting
+//! identical `SegmentOutput`s — the fuzz half of the superblock
+//! cost-transparency invariant (`rust/tests/interp_differential.rs` holds
+//! the workload half).
 
 use gtap::bench::runners::Exec;
+use gtap::compiler::compile_default;
+use gtap::coordinator::records::{RecordPool, NO_TASK};
 use gtap::coordinator::Session;
+use gtap::ir::decoded::DecodedModule;
+use gtap::ir::superblock::FusedModule;
 use gtap::ir::types::Value;
+use gtap::sim::interp_ref::{RefInterp, RefLaneFrame};
+use gtap::sim::{DeviceSpec, Interp, LaneFrame, Memory, StepResult};
 use gtap::util::prop::{Gen, Runner};
 
 /// A random expression over variables a, b, c with C semantics.
@@ -174,6 +186,96 @@ fn fuzz_expressions_match_reference() {
         let got = stats.root_result.unwrap().as_i64();
         let want = eval(&e, &args);
         assert_eq!(got, want, "args {args:?}, src:\n{src}");
+    });
+}
+
+/// One segment of `src`'s function 0 through a tier on fresh state;
+/// returns (end-kind marker, cycles, path, result word, spawn count).
+fn run_segment_tier(
+    src: &str,
+    args: &[i64],
+    tier: u8,
+) -> (bool, u64, u64, u64, usize) {
+    let module = compile_default(src).unwrap();
+    let decoded = DecodedModule::decode(&module);
+    let dev = DeviceSpec::h100();
+    let fm = FusedModule::fuse(&decoded, &dev);
+    let words = module.funcs[0].layout.words().max(1);
+    let mut records = RecordPool::new(8, words, 2);
+    let mut mem = Memory::new(module.globals_words());
+    let task = records.alloc(0, NO_TASK).unwrap();
+    for (i, &a) in args.iter().enumerate() {
+        records.data_mut(task)[i] = a as u64;
+    }
+    let mut log = Vec::new();
+    let (out, spawns) = if tier == 0 {
+        let interp = RefInterp {
+            module: &module,
+            dev: &dev,
+            block_width: 1,
+            xla_payload: false,
+        };
+        let mut frame = RefLaneFrame::new();
+        frame.reset(&module, task, 0, 0, 0);
+        match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+            StepResult::Done(o) => (o, frame.spawns().len()),
+            other => panic!("unexpected {other:?}"),
+        }
+    } else {
+        let interp = if tier == 2 {
+            Interp::fused(&decoded, &fm, &dev, 1, false)
+        } else {
+            Interp::new(&decoded, &dev, 1, false)
+        };
+        let mut frame = LaneFrame::sized(&decoded);
+        frame.reset(&decoded, task, 0, 0, 0);
+        match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+            StepResult::Done(o) => (o, frame.spawns().len()),
+            other => panic!("unexpected {other:?}"),
+        }
+    };
+    let finished = matches!(out.end, gtap::sim::SegmentEnd::Finish);
+    let result = module.funcs[0]
+        .layout
+        .result_offset()
+        .map(|off| records.data(task)[off as usize])
+        .unwrap_or(0);
+    (finished, out.cycles, out.path, result, spawns)
+}
+
+#[test]
+fn fuzz_segments_agree_across_ref_decoded_fused() {
+    // Random expression programs (ternaries give real branch structure, so
+    // superblock partitions and CmpBr/ConstBin macro-ops get exercised on
+    // arbitrary shapes, not just the workloads).
+    Runner::new().cases(80).run("interp-tier-fuzz", |g| {
+        let e = gen_expr(g, 5);
+        let src = format!(
+            "#pragma gtap function\nint f(int a, int b, int c) {{ return {}; }}",
+            render(&e)
+        );
+        let args = [g.int(-100, 100), g.int(-100, 100), g.int(-100, 100)];
+        let reference = run_segment_tier(&src, &args, 0);
+        let decoded = run_segment_tier(&src, &args, 1);
+        let fused = run_segment_tier(&src, &args, 2);
+        // end/cycles/result/spawns: identical across all three tiers
+        assert_eq!(
+            (reference.0, reference.1, reference.3, reference.4),
+            (decoded.0, decoded.1, decoded.3, decoded.4),
+            "decoded vs ref, args {args:?}, src:\n{src}"
+        );
+        assert_eq!(
+            (decoded.0, decoded.1, decoded.3, decoded.4),
+            (fused.0, fused.1, fused.3, fused.4),
+            "fused vs decoded, args {args:?}, src:\n{src}"
+        );
+        // path hashes: bit-identical between decoded and fused
+        assert_eq!(
+            decoded.2, fused.2,
+            "fused path hash diverged, args {args:?}, src:\n{src}"
+        );
+        // and the result still matches the direct AST evaluation
+        assert_eq!(fused.3 as i64, eval(&e, &args), "src:\n{src}");
     });
 }
 

@@ -61,6 +61,50 @@ fn cilksort_task_functions_state_counts() {
 }
 
 #[test]
+fn priority_clause_renders_and_compile_render_is_deterministic() {
+    // PR 3 added `#pragma gtap task priority(expr)`; the Program-6 view
+    // must disassemble it (spawns with the clause show `priority=r<reg>`,
+    // spawns without it stay clean — the inherit sentinel is not a
+    // register). The examples' compile→render round trip relies on this
+    // being total and deterministic: compiling the same source twice must
+    // produce byte-identical renders.
+    let src = r#"
+        #pragma gtap function
+        int fib(int n) {
+            if (n < 2) return n;
+            int a; int b;
+            #pragma gtap task queue(1) priority(n - 1)
+            a = fib(n - 1);
+            #pragma gtap task queue(1)
+            b = fib(n - 2);
+            #pragma gtap taskwait queue(2)
+            return a + b;
+        }
+    "#;
+    let m1 = compile_default(src).unwrap();
+    let text = pretty::render_module(&m1);
+    assert!(
+        text.contains("priority=r"),
+        "annotated spawn must render its priority register:\n{text}"
+    );
+    let spawn_lines: Vec<&str> = text.lines().filter(|l| l.contains("spawn func#")).collect();
+    assert_eq!(spawn_lines.len(), 2, "{text}");
+    assert!(
+        spawn_lines[0].contains("priority=r"),
+        "first spawn carries the clause: {}",
+        spawn_lines[0]
+    );
+    assert!(
+        !spawn_lines[1].contains("priority"),
+        "unannotated spawn must not print the inherit sentinel: {}",
+        spawn_lines[1]
+    );
+    // compile → render is deterministic (idempotent pipeline)
+    let m2 = compile_default(src).unwrap();
+    assert_eq!(text, pretty::render_module(&m2));
+}
+
+#[test]
 fn nested_taskwaits_unique_states() {
     let src = r#"
         #pragma gtap function

@@ -1,16 +1,24 @@
-//! Differential testing: the decoded fast-path interpreter
-//! (`sim::interp`) against the module-walking reference
-//! (`sim::interp_ref`) on identical segment streams.
+//! Differential testing across the three interpreter tiers on identical
+//! segment streams:
+//!
+//! * `sim::interp_ref` — the module-walking **reference**;
+//! * `sim::interp` over `ir::decoded` — flattened per-instruction
+//!   **decoded** dispatch;
+//! * `Interp::fused` over `ir::superblock` — block-at-a-time **fused**
+//!   dispatch with folded costs and macro-ops (the production engine).
 //!
 //! For every program/input/state: same segment end, same simulated cycle
-//! charge, same spawn list, and the same *path-equality structure* (the
-//! two fold different pc encodings into the hash — function-local vs
-//! global — so raw hash values legitimately differ; what the divergence
-//! model consumes is only hash equality between lanes).
+//! charge, same spawn list across all three. Path hashes are
+//! **bit-identical between decoded and fused** (both fold global pcs; the
+//! superblock invariant). The reference folds *function-local* pcs, so its
+//! raw hash values legitimately differ; against it only the
+//! *path-equality structure* — the sole thing the divergence model
+//! consumes — must coincide.
 
 use gtap::compiler::compile_default;
 use gtap::coordinator::records::{RecordPool, NO_TASK};
 use gtap::ir::decoded::DecodedModule;
+use gtap::ir::superblock::FusedModule;
 use gtap::sim::interp_ref::{RefInterp, RefLaneFrame};
 use gtap::sim::{DeviceSpec, Interp, LaneFrame, Memory, SegmentOutput, SpawnReq, StepResult};
 
@@ -36,17 +44,21 @@ const INTRINSIC: &str = "#pragma gtap function\nint f(int n) { return fib_serial
 
 const PAYLOAD: &str = "#pragma gtap function\nfloat f(int s) { return payload(s, 8, 16); }";
 
-/// Run one segment through both interpreters on identical fresh state;
-/// returns (decoded, reference) outputs plus both spawn lists.
-#[allow(clippy::type_complexity)]
-fn run_both(
-    src: &str,
-    args: &[i64],
-    state: u16,
-) -> ((SegmentOutput, Vec<SpawnReq>), (SegmentOutput, Vec<SpawnReq>)) {
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Tier {
+    Ref,
+    Decoded,
+    Fused,
+}
+
+const TIERS: [Tier; 3] = [Tier::Ref, Tier::Decoded, Tier::Fused];
+
+/// Run one segment through one tier on identical fresh state.
+fn run_tier(src: &str, args: &[i64], state: u16, tier: Tier) -> (SegmentOutput, Vec<SpawnReq>) {
     let module = compile_default(src).unwrap();
     let decoded = DecodedModule::decode(&module);
     let dev = DeviceSpec::h100();
+    let fm = FusedModule::fuse(&decoded, &dev);
     let words = module
         .funcs
         .iter()
@@ -54,37 +66,29 @@ fn run_both(
         .max()
         .unwrap()
         .max(1);
-
-    let mut results = Vec::new();
-    for which in 0..2 {
-        let mut records = RecordPool::new(32, words, 8);
-        let mut mem = Memory::new(module.globals_words());
-        let task = records.alloc(0, NO_TASK).unwrap();
-        for (i, &a) in args.iter().enumerate() {
-            records.data_mut(task)[i] = a as u64;
-        }
-        if state > 0 {
-            // populate child results for continuation re-entries
-            if let Some(off) = module.funcs[0].layout.result_offset() {
-                for v in [1u64, 0] {
-                    let child = records.alloc(0, task).unwrap();
-                    records.push_child(task, child).unwrap();
-                    records.data_mut(child)[off as usize] = v;
-                    records.meta_mut(child).done = true;
-                }
-                records.meta_mut(task).pending_children = 0;
+    let mut records = RecordPool::new(32, words, 8);
+    let mut mem = Memory::new(module.globals_words());
+    // scratch words so small pointer-valued args (nqueens' acc) are backed
+    let _scratch = mem.alloc(8);
+    let task = records.alloc(0, NO_TASK).unwrap();
+    for (i, &a) in args.iter().enumerate() {
+        records.data_mut(task)[i] = a as u64;
+    }
+    if state > 0 {
+        // populate child results for continuation re-entries
+        if let Some(off) = module.funcs[0].layout.result_offset() {
+            for v in [1u64, 0] {
+                let child = records.alloc(0, task).unwrap();
+                records.push_child(task, child).unwrap();
+                records.data_mut(child)[off as usize] = v;
+                records.meta_mut(child).done = true;
             }
+            records.meta_mut(task).pending_children = 0;
         }
-        let mut log = Vec::new();
-        let out = if which == 0 {
-            let interp = Interp::new(&decoded, &dev, 1, false);
-            let mut frame = LaneFrame::sized(&decoded);
-            frame.reset(&decoded, task, 0, state, 0);
-            match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
-                StepResult::Done(o) => (o, frame.spawns().to_vec()),
-                other => panic!("unexpected {other:?}"),
-            }
-        } else {
+    }
+    let mut log = Vec::new();
+    match tier {
+        Tier::Ref => {
             let interp = RefInterp {
                 module: &module,
                 dev: &dev,
@@ -97,29 +101,50 @@ fn run_both(
                 StepResult::Done(o) => (o, frame.spawns().to_vec()),
                 other => panic!("unexpected {other:?}"),
             }
-        };
-        results.push(out);
+        }
+        Tier::Decoded | Tier::Fused => {
+            let interp = if tier == Tier::Fused {
+                Interp::fused(&decoded, &fm, &dev, 1, false)
+            } else {
+                Interp::new(&decoded, &dev, 1, false)
+            };
+            let mut frame = LaneFrame::sized(&decoded);
+            frame.reset(&decoded, task, 0, state, 0);
+            match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+                StepResult::Done(o) => (o, frame.spawns().to_vec()),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
     }
-    let reference = results.pop().unwrap();
-    let fast = results.pop().unwrap();
-    (fast, reference)
 }
 
+/// All three tiers must agree on end, cycles and spawns; decoded and fused
+/// must agree on the path hash bit for bit.
 fn assert_equivalent(src: &str, args: &[i64], state: u16) {
-    let ((fo, fs), (ro, rs)) = run_both(src, args, state);
-    assert_eq!(fo.end, ro.end, "segment end (args {args:?}, state {state})");
-    assert_eq!(
-        fo.cycles, ro.cycles,
-        "cycle charge (args {args:?}, state {state})"
-    );
-    assert_eq!(fs.len(), rs.len(), "spawn count");
-    for (a, b) in fs.iter().zip(rs.iter()) {
-        assert_eq!(a.func, b.func);
-        assert_eq!(a.argc, b.argc);
-        assert_eq!(a.queue, b.queue);
-        assert_eq!(a.priority, b.priority);
-        assert_eq!(a.args[..a.argc as usize], b.args[..b.argc as usize]);
+    let outs: Vec<_> = TIERS.iter().map(|&t| run_tier(src, args, state, t)).collect();
+    let (r, d, f) = (&outs[0], &outs[1], &outs[2]);
+    for (name, o) in [("decoded", d), ("fused", f)] {
+        assert_eq!(
+            o.0.end, r.0.end,
+            "{name} segment end (args {args:?}, state {state})"
+        );
+        assert_eq!(
+            o.0.cycles, r.0.cycles,
+            "{name} cycle charge (args {args:?}, state {state})"
+        );
+        assert_eq!(o.1.len(), r.1.len(), "{name} spawn count");
+        for (a, b) in o.1.iter().zip(r.1.iter()) {
+            assert_eq!(a.func, b.func);
+            assert_eq!(a.argc, b.argc);
+            assert_eq!(a.queue, b.queue);
+            assert_eq!(a.priority, b.priority);
+            assert_eq!(a.args[..a.argc as usize], b.args[..b.argc as usize]);
+        }
     }
+    assert_eq!(
+        d.0.path, f.0.path,
+        "fused path hash must be bit-identical to decoded (args {args:?}, state {state})"
+    );
 }
 
 #[test]
@@ -146,14 +171,39 @@ fn native_payload_segments_equivalent() {
 }
 
 #[test]
+fn nqueens_segments_equivalent() {
+    // spawn-in-loop segments with irregular spawn counts + the serial-leaf
+    // intrinsic at the cutoff row
+    let src = gtap::workloads::nqueens::source(3, true);
+    let cases = [
+        (0i64, [0u64; 3]),
+        (2, [0b0110, 0b0001, 0b1000]),
+        (3, [1, 2, 4]),
+        (6, [0; 3]),
+    ];
+    for (row, masks) in cases {
+        let args: Vec<i64> = vec![
+            6,
+            row,
+            masks[0] as i64,
+            masks[1] as i64,
+            masks[2] as i64,
+            0, // acc pointer: word 0 of the (global-free) memory
+        ];
+        assert_equivalent(&src, &args, 0);
+    }
+}
+
+#[test]
 fn tree_workload_segments_equivalent() {
     let src = gtap::workloads::tree::full_tree_source(16, 64);
     let module = compile_default(&src).unwrap();
     let decoded = DecodedModule::decode(&module);
     let dev = DeviceSpec::h100();
+    let fm = FusedModule::fuse(&decoded, &dev);
     let words = module.funcs[0].layout.words().max(1);
     for (state, depth) in [(0u16, 4i64), (0, 0), (1, 3)] {
-        let run = |decoded_path: bool| {
+        let run = |tier: Tier| {
             let mut records = RecordPool::new(8, words, 4);
             let mut mem = Memory::new(module.globals_words());
             let acc = mem.alloc(1);
@@ -162,52 +212,64 @@ fn tree_workload_segments_equivalent() {
             records.data_mut(task)[1] = 7;
             records.data_mut(task)[2] = acc;
             let mut log = Vec::new();
-            if decoded_path {
-                let interp = Interp::new(&decoded, &dev, 1, false);
-                let mut frame = LaneFrame::sized(&decoded);
-                frame.reset(&decoded, task, 0, state, 0);
-                match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
-                    StepResult::Done(o) => (o.cycles, frame.spawns().len(), mem.load(acc)),
-                    other => panic!("{other:?}"),
+            match tier {
+                Tier::Ref => {
+                    let interp = RefInterp {
+                        module: &module,
+                        dev: &dev,
+                        block_width: 1,
+                        xla_payload: false,
+                    };
+                    let mut frame = RefLaneFrame::new();
+                    frame.reset(&module, task, 0, state, 0);
+                    match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+                        StepResult::Done(o) => (o.cycles, frame.spawns().len(), mem.load(acc)),
+                        other => panic!("{other:?}"),
+                    }
                 }
-            } else {
-                let interp = RefInterp {
-                    module: &module,
-                    dev: &dev,
-                    block_width: 1,
-                    xla_payload: false,
-                };
-                let mut frame = RefLaneFrame::new();
-                frame.reset(&module, task, 0, state, 0);
-                match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
-                    StepResult::Done(o) => (o.cycles, frame.spawns().len(), mem.load(acc)),
-                    other => panic!("{other:?}"),
+                Tier::Decoded | Tier::Fused => {
+                    let interp = if tier == Tier::Fused {
+                        Interp::fused(&decoded, &fm, &dev, 1, false)
+                    } else {
+                        Interp::new(&decoded, &dev, 1, false)
+                    };
+                    let mut frame = LaneFrame::sized(&decoded);
+                    frame.reset(&decoded, task, 0, state, 0);
+                    match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+                        StepResult::Done(o) => (o.cycles, frame.spawns().len(), mem.load(acc)),
+                        other => panic!("{other:?}"),
+                    }
                 }
             }
         };
-        assert_eq!(run(true), run(false), "state {state}, depth {depth}");
+        let reference = run(Tier::Ref);
+        assert_eq!(run(Tier::Decoded), reference, "decoded, state {state}, depth {depth}");
+        assert_eq!(run(Tier::Fused), reference, "fused, state {state}, depth {depth}");
     }
 }
 
 #[test]
 fn path_equality_structure_matches() {
-    // hashes differ across interpreters (local vs global pc folding), but
-    // lane grouping — the only thing the divergence model reads — must
-    // coincide: inputs i, j land in the same group under the decoded
-    // interpreter iff they do under the reference.
+    // Raw hashes differ between the reference (local pcs) and the
+    // decoded/fused pair (global pcs), but lane grouping — the only thing
+    // the divergence model reads — must coincide across all tiers: inputs
+    // i, j land in the same group under one tier iff they do under every
+    // other.
     let inputs: &[i64] = &[0, 1, 2, 3, 5, 8, 13, 1, 5, 0];
-    let fast: Vec<u64> = inputs
-        .iter()
-        .map(|&n| run_both(FIB, &[n], 0).0 .0.path)
-        .collect();
-    let reference: Vec<u64> = inputs
-        .iter()
-        .map(|&n| run_both(FIB, &[n], 0).1 .0.path)
-        .collect();
+    let paths = |tier: Tier| -> Vec<u64> {
+        inputs
+            .iter()
+            .map(|&n| run_tier(FIB, &[n], 0, tier).0.path)
+            .collect()
+    };
+    let reference = paths(Tier::Ref);
+    let decoded = paths(Tier::Decoded);
+    let fused = paths(Tier::Fused);
+    assert_eq!(decoded, fused, "decoded and fused hashes are bit-identical");
     for i in 0..inputs.len() {
         for j in 0..inputs.len() {
             assert_eq!(
-                fast[i] == fast[j],
+                decoded[i] == decoded[j],
                 reference[i] == reference[j],
                 "grouping of inputs {} and {} diverged",
                 inputs[i],

@@ -13,6 +13,7 @@ use gtap::coordinator::config::{GtapConfig, SchedulerKind};
 use gtap::coordinator::policy::{adaptive_amount, Placement, QueueSelect, QueueSet, SmPool};
 use gtap::coordinator::records::{RecordPool, TaskId, NO_TASK};
 use gtap::ir::decoded::DecodedModule;
+use gtap::ir::superblock::FusedModule;
 use gtap::sim::{DeviceSpec, Interp, LaneFrame, Memory, StepResult};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -68,7 +69,9 @@ fn steady_state_segment_execution_is_allocation_free() {
     let mut records = RecordPool::new(16, words, 4);
     let mut mem = Memory::new(module.globals_words());
     let dev = DeviceSpec::h100();
+    let fm = FusedModule::fuse(&decoded, &dev);
     let interp = Interp::new(&decoded, &dev, 1, false);
+    let interp_fused = Interp::fused(&decoded, &fm, &dev, 1, false);
     let mut frame = LaneFrame::sized(&decoded);
     let mut log: Vec<String> = Vec::new();
 
@@ -134,6 +137,57 @@ fn steady_state_segment_execution_is_allocation_free() {
         after - before,
         0,
         "the decoded dispatch loop must not allocate in steady state"
+    );
+
+    // ---- the superblock-fused engine obeys the same contract ------------
+    // (the production path: folded block charges + macro-op streams; the
+    // FusedModule itself was built in the setup phase above)
+    let mut run_segment_fused = |frame: &mut LaneFrame,
+                                 records: &mut RecordPool,
+                                 mem: &mut Memory,
+                                 log: &mut Vec<String>,
+                                 state: u16,
+                                 n: i64|
+     -> u64 {
+        records.data_mut(task)[0] = n as u64;
+        frame.reset(&decoded, task, 0, state, 0);
+        match interp_fused.run(frame, mem, records, log) {
+            StepResult::Done(o) => o.cycles,
+            other => panic!("unexpected {other:?}"),
+        }
+    };
+    let mut fused_checksum = 0u64;
+    for &(state, n) in stream {
+        fused_checksum = fused_checksum.wrapping_add(run_segment_fused(
+            &mut frame,
+            &mut records,
+            &mut mem,
+            &mut log,
+            state,
+            n,
+        ));
+    }
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    for i in 0..12_000usize {
+        let (state, n) = stream[i % stream.len()];
+        fused_checksum = fused_checksum.wrapping_add(run_segment_fused(
+            &mut frame,
+            &mut records,
+            &mut mem,
+            &mut log,
+            state,
+            n,
+        ));
+    }
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    assert_eq!(
+        fused_checksum, checksum,
+        "fused dispatch must charge the exact cycles decoded dispatch does"
+    );
+    assert_eq!(
+        after - before,
+        0,
+        "the fused block dispatch loop must not allocate in steady state"
     );
 
     // ---- the scheduling-policy hot paths are allocation-free too --------
