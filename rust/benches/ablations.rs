@@ -122,6 +122,13 @@ fn main() {
                     .placement(Placement::PriorityDepth)
             }),
         ),
+        // the promoted combination behind `--policy recommended`
+        // (PolicyConfig::recommended, sourced from this file's recorded
+        // policy_matrix.best): its delta vs baseline stays measured here
+        (
+            "recommended-policy",
+            Box::new(|e: Exec| e.policy(PolicyConfig::recommended())),
+        ),
     ];
 
     let benches: Vec<(&str, Box<dyn Fn(&Exec) -> f64 + Sync>)> = vec![
@@ -163,7 +170,7 @@ fn main() {
         "\n(variant index: 0=baseline, 1=no-immediate-buffer, 2=steal-one, \
          3=steal-half, 4=locality-aware, 5=occupancy, 6=longest-first, \
          7=own-queue, 8=fixed-poll, 9=adaptive-steal, 10=sm-tier-share, \
-         11=priority-depth-4q)\n"
+         11=priority-depth-4q, 12=recommended-policy)\n"
     );
     println!("{}", markdown_table("variant", &series));
     let p = write_csv("ablations", &series).unwrap();

@@ -204,6 +204,7 @@ impl SegmentFixture {
             dev: &self.dev,
             block_width: 1,
             xla_payload: false,
+            record_accesses: false,
         };
         let mut frame = RefLaneFrame::new();
         let mut log = Vec::new();

@@ -1,0 +1,241 @@
+//! Memory-system model bench: flat vs modeled cost pipelines on real
+//! workloads, plus the synthetic coalescing microbench.
+//!
+//! Part 1 — **flat vs modeled end to end**: fib (thread-level,
+//! record-heavy), the synthetic tree (payload arithmetic) and BFS
+//! (block-level, CSR-walking — the workload the model exists for) run
+//! under both `--memsys` modes; the table reports simulated medians and
+//! the modeled runs' transaction/hit-rate counters.
+//!
+//! Part 2 — **coalesced vs scattered synthetic streams**: identical
+//! per-lane access counts through `sim::memsys::MemSys` directly, packed
+//! into shared 128B lines vs spread one line per lane. The bench *fails*
+//! if the scattered stream is not strictly more expensive — the same
+//! invariant `rust/tests/memsys_model.rs` property-tests, re-checked here
+//! on the recorded numbers.
+//!
+//! Results land in `BENCH_memsys.json` at the repo root (the CI
+//! smoke-bench job records it with `GTAP_BENCH_SMOKE=1` and uploads the
+//! artifact). Regenerate with `cargo bench --bench memsys`.
+
+use gtap::bench::runners::{self, Exec};
+use gtap::bench::sweep::{self, full_scale, measure};
+use gtap::sim::divergence::LanePath;
+use gtap::sim::memsys::{coalesce, AccessKind, MemAccess, MemSys, MemSysMode, MemSysStats};
+use gtap::sim::DeviceSpec;
+use std::path::PathBuf;
+
+fn repo_root() -> PathBuf {
+    // crate manifest dir is <repo>/rust; the workspace root is its parent
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .to_path_buf()
+}
+
+/// One workload's flat/modeled medians plus the modeled counters.
+struct Row {
+    name: &'static str,
+    flat_median_s: f64,
+    modeled_median_s: f64,
+    stats: MemSysStats,
+}
+
+fn pct(hits: u64, misses: u64) -> f64 {
+    let t = hits + misses;
+    if t == 0 {
+        0.0
+    } else {
+        100.0 * hits as f64 / t as f64
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("GTAP_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let fib_n = if full_scale() {
+        26
+    } else if smoke {
+        17
+    } else {
+        22
+    };
+    let tree_d = if full_scale() {
+        14
+    } else if smoke {
+        8
+    } else {
+        11
+    };
+    let bfs_n = if full_scale() {
+        40_000
+    } else if smoke {
+        1_500
+    } else {
+        8_000
+    };
+    let grid = if smoke { 32 } else { 128 };
+    println!("memsys bench: fib({fib_n}) / tree({tree_d}) / bfs({bfs_n}), grid {grid}\n");
+
+    type Runner = Box<dyn Fn(MemSysMode, u64) -> (f64, MemSysStats) + Sync>;
+    let workloads: Vec<(&'static str, Runner)> = vec![
+        (
+            "fib",
+            Box::new(move |m, seed| {
+                let out = runners::run_fib(
+                    &Exec::gpu_thread(grid, 32).seed(seed).memsys(m),
+                    fib_n,
+                    0,
+                    false,
+                )
+                .unwrap();
+                (out.seconds, out.stats.memsys)
+            }),
+        ),
+        (
+            "tree",
+            Box::new(move |m, seed| {
+                let out = runners::run_full_tree(
+                    &Exec::gpu_thread(grid, 32).seed(seed).memsys(m),
+                    tree_d,
+                    16,
+                    64,
+                    None,
+                )
+                .unwrap();
+                (out.seconds, out.stats.memsys)
+            }),
+        ),
+        (
+            "bfs",
+            Box::new(move |m, seed| {
+                let out = runners::run_bfs(
+                    &Exec::gpu_block(grid, 64).no_taskwait().seed(seed).memsys(m),
+                    bfs_n,
+                    4,
+                    seed,
+                )
+                .unwrap();
+                (out.seconds, out.stats.memsys)
+            }),
+        ),
+    ];
+
+    let mut rows: Vec<Row> = vec![];
+    for (name, run) in &workloads {
+        let flat = measure(|seed| run(MemSysMode::Flat, seed).0);
+        // capture the base-seed run's counters from inside the measured
+        // sweep instead of re-simulating the workload afterwards
+        let stats_cell: std::sync::Mutex<Option<MemSysStats>> = std::sync::Mutex::new(None);
+        let modeled = measure(|seed| {
+            let (seconds, stats) = run(MemSysMode::Modeled, seed);
+            if seed == sweep::SEED_BASE {
+                *stats_cell.lock().unwrap() = Some(stats);
+            }
+            seconds
+        });
+        let stats = stats_cell
+            .into_inner()
+            .unwrap()
+            .expect("the base seed is always part of the sweep");
+        println!(
+            "  {name:6} flat {:.4e} s  modeled {:.4e} s  ({:+.1}%)  \
+             [{} tx, L1 {:.1}%, L2 {:.1}%, {} bank conflicts]",
+            flat.median,
+            modeled.median,
+            100.0 * (modeled.median - flat.median) / flat.median,
+            stats.transactions,
+            pct(stats.l1_hits, stats.l1_misses),
+            pct(stats.l2_hits, stats.l2_misses),
+            stats.smem_bank_conflicts,
+        );
+        rows.push(Row {
+            name,
+            flat_median_s: flat.median,
+            modeled_median_s: modeled.median,
+            stats,
+        });
+    }
+
+    // ---- part 2: synthetic coalesced vs scattered streams ---------------
+    let dev = DeviceSpec::h100();
+    let positions = 64u64;
+    let lanes: Vec<LanePath> = (0..32).map(|_| LanePath { hash: 1, cycles: 0 }).collect();
+    let synthetic = |scattered: bool| -> (u64, u64) {
+        let streams: Vec<Vec<MemAccess>> = (0..32u64)
+            .map(|lane| {
+                (0..positions)
+                    .map(|p| {
+                        let addr = if scattered {
+                            (p * 33 + lane) * coalesce::LINE_WORDS
+                        } else {
+                            p * coalesce::LINE_WORDS + lane % coalesce::LINE_WORDS
+                        };
+                        MemAccess {
+                            addr,
+                            kind: AccessKind::GlobalLoad,
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut m = MemSys::modeled(&dev);
+        let mut stats = MemSysStats::default();
+        let cycles = m.charge_warp(0, &lanes, |i| &streams[i][..], &dev, &mut stats);
+        (cycles, stats.transactions)
+    };
+    let (coalesced_cycles, coalesced_tx) = synthetic(false);
+    let (scattered_cycles, scattered_tx) = synthetic(true);
+    println!(
+        "\n  synthetic 32-lane x {positions}-deep stream: \
+         coalesced {coalesced_cycles} cy ({coalesced_tx} tx), \
+         scattered {scattered_cycles} cy ({scattered_tx} tx), \
+         {:.1}x",
+        scattered_cycles as f64 / coalesced_cycles as f64
+    );
+    assert!(
+        scattered_cycles > coalesced_cycles,
+        "coalescing invariant violated: scattered {scattered_cycles} <= \
+         coalesced {coalesced_cycles}"
+    );
+
+    // ---- machine-readable record: BENCH_memsys.json ---------------------
+    let row_json: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    \"{}\": {{\"flat_median_s\": {:.6e}, \"modeled_median_s\": {:.6e}, \
+                 \"modeled_over_flat\": {:.3}, \"transactions\": {}, \"sectors\": {}, \
+                 \"l1_hit_pct\": {:.2}, \"l2_hit_pct\": {:.2}, \"smem_bank_conflicts\": {}}}",
+                r.name,
+                r.flat_median_s,
+                r.modeled_median_s,
+                r.modeled_median_s / r.flat_median_s,
+                r.stats.transactions,
+                r.stats.sectors,
+                pct(r.stats.l1_hits, r.stats.l1_misses),
+                pct(r.stats.l2_hits, r.stats.l2_misses),
+                r.stats.smem_bank_conflicts,
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"memsys\",\n  \"measured\": true,\n  \
+         \"command\": \"cargo bench --bench memsys\",\n  \
+         \"runs\": {},\n  \"smoke\": {},\n  \
+         \"sizes\": {{\"fib_n\": {fib_n}, \"tree_depth\": {tree_d}, \"bfs_n\": {bfs_n}, \
+         \"grid\": {grid}}},\n  \
+         \"workloads\": {{\n{}\n  }},\n  \
+         \"synthetic\": {{\"lanes\": 32, \"positions\": {positions}, \
+         \"coalesced_cycles\": {coalesced_cycles}, \"scattered_cycles\": {scattered_cycles}, \
+         \"coalesced_transactions\": {coalesced_tx}, \
+         \"scattered_transactions\": {scattered_tx}, \
+         \"scattered_over_coalesced\": {:.3}}}\n}}\n",
+        sweep::runs(),
+        smoke,
+        row_json.join(",\n"),
+        scattered_cycles as f64 / coalesced_cycles as f64,
+    );
+    let path = repo_root().join("BENCH_memsys.json");
+    std::fs::write(&path, json).expect("write BENCH_memsys.json");
+    println!("\nwrote {}", path.display());
+}

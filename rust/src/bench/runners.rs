@@ -8,7 +8,7 @@ use crate::coordinator::{
 };
 use crate::ir::types::Value;
 use crate::sim::profile::Profiler;
-use crate::sim::DeviceSpec;
+use crate::sim::{DeviceSpec, MemSysMode};
 use crate::workloads::{bfs, fib, nqueens, sort, tree};
 use crate::ensure;
 use crate::util::error::Result;
@@ -149,6 +149,12 @@ impl Exec {
     /// Per-SM hierarchical queue-tier policy.
     pub fn sm_tier(mut self, t: SmTier) -> Exec {
         self.cfg.policy.sm_tier = t;
+        self
+    }
+
+    /// Memory-system cost model (`--memsys flat|modeled`).
+    pub fn memsys(mut self, m: MemSysMode) -> Exec {
+        self.cfg.memsys = m;
         self
     }
 }

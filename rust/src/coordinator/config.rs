@@ -14,6 +14,7 @@
 //! the [`SchedulerKind`] ablation selector.
 
 use super::policy::PolicyConfig;
+use crate::sim::memsys::MemSysMode;
 
 /// Worker granularity (§4.1): a task runs on one thread (a warp executes up
 /// to 32 tasks in SIMT lockstep) or cooperatively on one thread block.
@@ -79,6 +80,12 @@ pub struct GtapConfig {
     /// `locality_aware_steal` knobs are `policy.steal_amount` and
     /// `policy.victim_select` now.
     pub policy: PolicyConfig,
+    /// GTAP_MEMSYS / `--memsys`: which memory-system cost model the run
+    /// charges. `Flat` (default) keeps the scalar per-access latencies and
+    /// is golden-pinned byte-identical to the pre-memsys simulator;
+    /// `Modeled` records per-lane access streams and prices them through
+    /// the coalescing + L1/L2 + bank-conflict pipeline of `sim::memsys`.
+    pub memsys: MemSysMode,
 }
 
 impl Default for GtapConfig {
@@ -97,6 +104,7 @@ impl Default for GtapConfig {
             seed: 0x6A7A9,
             immediate_buffer: true,
             policy: PolicyConfig::default(),
+            memsys: MemSysMode::default(),
         }
     }
 }

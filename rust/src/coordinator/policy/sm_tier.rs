@@ -27,12 +27,23 @@
 //! (`QueueSet::supports_sm_tier`): a global queue has no locality to
 //! exploit, so the pool construction is gated off there and the tier
 //! degenerates to `Off`.
+//!
+//! **Pricing.** Under the default flat memory model pool traffic pays the
+//! 60% intra-SM discount over the global-queue op cost
+//! ([`intra_sm_cycles`], golden-pinned). Under `MemSysMode::Modeled` the
+//! pool is priced as what it physically is — a **shared-memory-resident
+//! ring**: each batched op touches its consecutive ring slots and pays
+//! `DeviceSpec::smem_lat` plus bank-conflict replay rounds
+//! (`sim::memsys::bank`, 32 word-interleaved banks), with the conflict
+//! count surfaced in `RunStats::memsys.smem_bank_conflicts`. This closes
+//! the ROADMAP "SM-tier cost model refinement" item.
 
 use crate::coordinator::config::GtapConfig;
 use crate::coordinator::globalq::GlobalQueue;
 use crate::coordinator::queue::QueueOp;
 use crate::coordinator::records::TaskId;
 use crate::sim::config::DeviceSpec;
+use crate::sim::memsys::{bank, MemSysMode};
 
 /// Per-SM hierarchical queue-tier mode.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -92,32 +103,99 @@ pub fn intra_sm_cycles(op_cycles: u64) -> u64 {
 
 /// The per-SM pools of one run. An empty `pools` vector means the tier is
 /// disabled (policy `Off`, or a queue organization without stealing) and
-/// every accessor short-circuits.
+/// every accessor short-circuits. Op cycles returned by
+/// [`SmPool::push`]/[`SmPool::pop`] are final — the flat intra-SM
+/// discount or the modeled shared-memory bank pricing is applied inside.
 pub struct SmPool {
     pools: Vec<GlobalQueue>,
+    /// Slots per pool (after the ≥2 floor); the bank model's ring size.
+    capacity: usize,
+    /// `MemSysMode::Modeled`: price ops as shared-memory ring traffic.
+    modeled: bool,
+    /// Monotone per-SM push/pop word counts — the ring positions batched
+    /// ops start at (tail for pushes, head for pops).
+    pushed: Vec<u64>,
+    popped: Vec<u64>,
+    /// Accumulated bank conflicts across all pool ops of the run.
+    conflicts: u64,
 }
 
 impl SmPool {
-    /// A pool set with `sms` pools of `capacity` tasks each.
+    /// A pool set with `sms` pools of `capacity` tasks each, priced with
+    /// the flat intra-SM discount.
     pub fn new(sms: usize, capacity: usize) -> SmPool {
+        SmPool::with_mode(sms, capacity, MemSysMode::Flat)
+    }
+
+    /// A pool set priced per `mode` (see the module docs).
+    pub fn with_mode(sms: usize, capacity: usize, mode: MemSysMode) -> SmPool {
+        let capacity = capacity.max(2);
         SmPool {
-            pools: (0..sms).map(|_| GlobalQueue::new(capacity.max(2))).collect(),
+            pools: (0..sms).map(|_| GlobalQueue::new(capacity)).collect(),
+            capacity,
+            modeled: mode.enabled(),
+            pushed: vec![0; sms],
+            popped: vec![0; sms],
+            conflicts: 0,
         }
     }
 
     /// The disabled pool set (no storage, `enabled()` is false).
     pub fn disabled() -> SmPool {
-        SmPool { pools: Vec::new() }
+        SmPool {
+            pools: Vec::new(),
+            capacity: 0,
+            modeled: false,
+            pushed: Vec::new(),
+            popped: Vec::new(),
+            conflicts: 0,
+        }
     }
 
     /// Build the pool set a configuration calls for: one pool per SM with
     /// the per-worker deque capacity, or disabled when the tier is off or
-    /// the queue organization does not steal.
+    /// the queue organization does not steal. The configuration's memsys
+    /// mode selects the pricing.
     pub fn for_config(cfg: &GtapConfig, dev: &DeviceSpec, org_supports_tier: bool) -> SmPool {
         if !cfg.policy.sm_tier.enabled() || !org_supports_tier {
             return SmPool::disabled();
         }
-        SmPool::new(dev.sms, cfg.queue_capacity())
+        SmPool::with_mode(dev.sms, cfg.queue_capacity(), cfg.memsys)
+    }
+
+    /// Bank conflicts accumulated by all pool ops so far (modeled pricing
+    /// only; always zero under the flat discount).
+    pub fn bank_conflicts(&self) -> u64 {
+        self.conflicts
+    }
+
+    /// Final cost of an op that moved `n` ids at ring position
+    /// `pushed`/`popped` of `sm`'s pool.
+    fn price(
+        &mut self,
+        sm: usize,
+        op: QueueOp,
+        n: usize,
+        is_push: bool,
+        dev: &DeviceSpec,
+    ) -> QueueOp {
+        let cycles = if self.modeled {
+            let pos = if is_push {
+                &mut self.pushed[sm]
+            } else {
+                &mut self.popped[sm]
+            };
+            let (cycles, conflicts) = bank::smem_op_cycles(dev, *pos, n, self.capacity);
+            *pos += n as u64;
+            self.conflicts += conflicts;
+            cycles
+        } else {
+            intra_sm_cycles(op.cycles)
+        };
+        QueueOp {
+            taken: op.taken,
+            cycles,
+        }
     }
 
     #[inline]
@@ -142,7 +220,9 @@ impl SmPool {
     }
 
     /// Push `ids` into `sm`'s pool. `None` = the whole batch does not fit
-    /// (the caller splits by `free`).
+    /// (the caller splits by `free`; a refused push moves no ring
+    /// positions and charges nothing). The returned cycles are final
+    /// (discounted or bank-priced per the pool's mode).
     pub fn push(
         &mut self,
         sm: usize,
@@ -150,10 +230,12 @@ impl SmPool {
         ids: &[TaskId],
         dev: &DeviceSpec,
     ) -> Option<QueueOp> {
-        self.pools[sm].push_batch(now, ids, dev)
+        let op = self.pools[sm].push_batch(now, ids, dev)?;
+        Some(self.price(sm, op, ids.len(), true, dev))
     }
 
-    /// Pop up to `max` tasks FIFO from `sm`'s pool.
+    /// Pop up to `max` tasks FIFO from `sm`'s pool. The returned cycles
+    /// are final (discounted or bank-priced per the pool's mode).
     pub fn pop(
         &mut self,
         sm: usize,
@@ -162,7 +244,9 @@ impl SmPool {
         out: &mut Vec<TaskId>,
         dev: &DeviceSpec,
     ) -> QueueOp {
-        self.pools[sm].pop_batch(now, max, out, dev)
+        let op = self.pools[sm].pop_batch(now, max, out, dev);
+        let n = op.taken;
+        self.price(sm, op, n, false, dev)
     }
 
     /// Total pooled tasks across SMs. At quiescence this is zero (every
@@ -237,5 +321,54 @@ mod tests {
     fn intra_sm_discount_matches_locality_first() {
         assert_eq!(intra_sm_cycles(100), 60);
         assert_eq!(intra_sm_cycles(0), 0);
+    }
+
+    #[test]
+    fn flat_pool_cycles_are_the_discounted_global_queue_op() {
+        let d = DeviceSpec::h100();
+        let mut flat = SmPool::new(1, 64);
+        let mut raw = GlobalQueue::new(64);
+        let got = flat.push(0, 0, &[1, 2, 3], &d).unwrap();
+        let want = raw.push_batch(0, &[1, 2, 3], &d).unwrap();
+        assert_eq!(got.cycles, intra_sm_cycles(want.cycles));
+        assert_eq!(flat.bank_conflicts(), 0, "flat pricing never counts conflicts");
+    }
+
+    #[test]
+    fn modeled_pool_prices_by_shared_memory_banks() {
+        let d = DeviceSpec::h100();
+        // conflict-free batch: base shared-memory latency only
+        let mut p = SmPool::with_mode(1, 4096, MemSysMode::Modeled);
+        let op = p.push(0, 0, &[1, 2, 3, 4], &d).unwrap();
+        assert_eq!(op.cycles, d.smem_lat);
+        assert_eq!(p.bank_conflicts(), 0);
+        let mut out = vec![];
+        let op = p.pop(0, 0, 4, &mut out, &d);
+        assert_eq!((op.taken, op.cycles), (4, d.smem_lat));
+        // a wrapping batch on a non-bank-multiple ring pays replay rounds
+        let mut p = SmPool::with_mode(1, 50, MemSysMode::Modeled);
+        let ids: Vec<TaskId> = (0..48).collect();
+        p.push(0, 0, &ids, &d).unwrap(); // positions 0..48
+        let mut out = vec![];
+        p.pop(0, 0, 48, &mut out, &d); // frees the ring
+        let before = p.bank_conflicts();
+        let op = p.push(0, 0, &ids[..20], &d).unwrap(); // wraps at slot 50
+        assert!(
+            p.bank_conflicts() > before,
+            "wrapping batch must conflict: {op:?}"
+        );
+        assert!(op.cycles > d.smem_lat);
+    }
+
+    #[test]
+    fn refused_push_moves_no_ring_position() {
+        let d = DeviceSpec::h100();
+        let mut p = SmPool::with_mode(1, 4, MemSysMode::Modeled);
+        p.push(0, 0, &[1, 2, 3], &d).unwrap();
+        assert!(p.push(0, 0, &[4, 5], &d).is_none());
+        let mut out = vec![];
+        let op = p.pop(0, 0, 3, &mut out, &d);
+        assert_eq!(out, vec![1, 2, 3]);
+        assert_eq!(op.cycles, d.smem_lat, "positions stayed consistent");
     }
 }

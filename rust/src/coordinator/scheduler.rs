@@ -57,7 +57,7 @@
 use super::clock::WorkerClock;
 use super::config::{Granularity, GtapConfig};
 use super::join::{self, FinishEffect};
-use super::policy::{intra_sm_cycles, PolicyConfig, QueueSet, SmPool, STEAL_TRIES};
+use super::policy::{PolicyConfig, QueueSet, SmPool, STEAL_TRIES};
 use super::records::{RecordPool, TaskId, NO_TASK};
 use crate::ir::bytecode::Module;
 use crate::ir::decoded::DecodedModule;
@@ -67,6 +67,7 @@ use crate::sim::config::DeviceSpec;
 use crate::sim::divergence::{self, LanePath};
 use crate::sim::interp::{Interp, LaneFrame, SegmentEnd, SegmentOutput, StepResult};
 use crate::sim::memory::Memory;
+use crate::sim::memsys::{MemSys, MemSysStats};
 use crate::sim::profile::{Profiler, TimelineEvent};
 use crate::util::error::{Context, Result};
 use crate::util::prng::Prng;
@@ -117,6 +118,11 @@ pub struct RunStats {
     /// Tasks acquired *from* per-SM tier pools. Every pooled task is
     /// eventually drained, so at quiescence this equals `sm_spills`.
     pub sm_pool_hits: u64,
+    /// Modeled memory-system counters (`--memsys modeled`): coalesced
+    /// transactions/sectors, L1/L2 hits and misses, shared-memory bank
+    /// conflicts. All zero under the flat model, which keeps flat-mode
+    /// `RunStats` byte-identical to the pre-memsys pins.
+    pub memsys: MemSysStats,
     /// Captured print_int/print_float output.
     pub output: Vec<String>,
 }
@@ -160,6 +166,10 @@ pub struct Scheduler<'a> {
     /// Fusion is cost-transparent, so `RunStats` are bit-identical to
     /// per-instruction decoded dispatch (and to the pinned monolith).
     fused: FusedModule,
+    /// The modeled memory system (`cfg.memsys`): per-SM L1s + shared L2
+    /// charged at the warp-combine step from recorded access streams.
+    /// Disabled (zero state, zero cost) under the flat default.
+    memsys: MemSys,
     workers: Vec<WorkerState>,
     /// Workers resident on each SM (victim candidates for hierarchical
     /// stealing).
@@ -275,6 +285,7 @@ impl<'a> Scheduler<'a> {
             policy: cfg.policy,
             decoded,
             fused,
+            memsys: MemSys::for_mode(cfg.memsys, dev),
             workers,
             sm_peers,
             sm_ready: vec![0; dev.sms],
@@ -361,6 +372,7 @@ impl<'a> Scheduler<'a> {
         stats.cycles = makespan;
         stats.seconds = self.dev.seconds(makespan);
         stats.peak_live_records = self.records.peak_live();
+        stats.memsys.smem_bank_conflicts = self.sm_pool.bank_conflicts();
         stats.output = log;
         Ok(stats)
     }
@@ -404,8 +416,11 @@ impl<'a> Scheduler<'a> {
         if self.sm_pool.enabled() {
             let sm = self.workers[w].sm;
             if self.sm_pool.len(sm) > 0 {
+                // pool op cycles are final: the intra-SM discount (flat)
+                // or the shared-memory bank pricing (modeled) is applied
+                // inside SmPool
                 let op = self.sm_pool.pop(sm, now + cost, self.batch_max, batch, dev);
-                cost += intra_sm_cycles(op.cycles);
+                cost += op.cycles;
                 if op.taken > 0 {
                     self.stats.sm_pool_hits += op.taken as u64;
                     return cost;
@@ -496,7 +511,7 @@ impl<'a> Scheduler<'a> {
                         .sm_pool
                         .push(sm, now + cost, shared, dev)
                         .expect("share within free space cannot overflow");
-                    cost += intra_sm_cycles(op.cycles);
+                    cost += op.cycles;
                     self.stats.sm_spills += give as u64;
                     ids = keep;
                 }
@@ -520,7 +535,7 @@ impl<'a> Scheduler<'a> {
                     .sm_pool
                     .push(sm, now + cost, to_pool, dev)
                     .expect("spill within free space cannot overflow");
-                cost += intra_sm_cycles(op.cycles);
+                cost += op.cycles;
                 self.stats.sm_spills += fit as u64;
                 ids = rest;
                 if ids.is_empty() {
@@ -612,7 +627,8 @@ impl<'a> Scheduler<'a> {
             Granularity::Thread => 1,
             Granularity::Block => self.cfg.block_size as u32,
         };
-        let interp = Interp::fused(&self.decoded, &self.fused, dev, block_width, engine.is_some());
+        let interp = Interp::fused(&self.decoded, &self.fused, dev, block_width, engine.is_some())
+            .recording(self.memsys.enabled());
         let mut outputs = std::mem::take(&mut self.scratch_outputs);
         outputs.clear();
         outputs.resize(batch.len(), None);
@@ -694,8 +710,23 @@ impl<'a> Scheduler<'a> {
         }));
         let exec_cycles = divergence::warp_cycles(&lanes);
         let groups = divergence::path_groups(&lanes);
+        // modeled memory system: price the warp's recorded access streams
+        // (coalescing within each path group, per-SM L1 + shared L2) —
+        // the one place modeled memory cost enters the run. Zero, with no
+        // state touched, under the flat default.
+        let mem_cycles = {
+            let frames = &self.frames;
+            self.memsys.charge_warp(
+                self.workers[w].sm,
+                &lanes,
+                |i| frames[i].accesses(),
+                dev,
+                &mut self.stats.memsys,
+            )
+        };
+        let busy_cycles = exec_cycles + mem_cycles;
         self.scratch_lanes = lanes;
-        cost += exec_cycles;
+        cost += busy_cycles;
 
         // -- 3. apply effects ----------------------------------------------
         // spawned children grouped by target queue index (**Placement**)
@@ -828,8 +859,8 @@ impl<'a> Scheduler<'a> {
         profiler.record(TimelineEvent {
             worker: w as u32,
             start: now,
-            busy: exec_cycles,
-            overhead: dur - exec_cycles,
+            busy: busy_cycles,
+            overhead: dur - busy_cycles,
             active_lanes: batch_len as u8,
             path_groups: groups as u8,
         });

@@ -65,6 +65,12 @@ pub struct Superblock {
     /// excludes the dynamic parts: `LdTd` first-touch resolution and
     /// intrinsic costs.
     pub mem: u64,
+    /// The control-path subset of `mem`: `PrepareJoin`/`FinishTask`/
+    /// `ChildResult` charges only. Under the modeled memory system
+    /// (`sim::memsys`) data accesses (`LdG`/`StG`/`StTd`) are priced at
+    /// the warp-combine step from recorded streams, so the block charges
+    /// `mem_ctrl` instead of `mem`.
+    pub mem_ctrl: u64,
     /// Task-data bits whose *first* access inside the block is a load —
     /// each pays the L2 latency iff its bit is still cold at block entry.
     pub td_cold_bits: u64,
@@ -178,6 +184,7 @@ impl FusedModule {
             fused_len: 0,
             compute: 0,
             mem: 0,
+            mem_ctrl: 0,
             td_cold_bits: 0,
             td_all_bits: 0,
             td_loads: 0,
@@ -217,9 +224,18 @@ impl FusedModule {
                     b.mem += costs.sttd;
                 }
                 DInsn::Spawn { .. } => b.compute += costs.spawn,
-                DInsn::PrepareJoin { .. } => b.mem += costs.cg_load + costs.fence,
-                DInsn::FinishTask => b.mem += costs.fence,
-                DInsn::ChildResult { .. } => b.mem += costs.cg_load,
+                DInsn::PrepareJoin { .. } => {
+                    b.mem += costs.cg_load + costs.fence;
+                    b.mem_ctrl += costs.cg_load + costs.fence;
+                }
+                DInsn::FinishTask => {
+                    b.mem += costs.fence;
+                    b.mem_ctrl += costs.fence;
+                }
+                DInsn::ChildResult { .. } => {
+                    b.mem += costs.cg_load;
+                    b.mem_ctrl += costs.cg_load;
+                }
                 // dynamic costs stay with their handler in the block loop
                 DInsn::Intr { .. } | DInsn::ParEnter { .. } | DInsn::ParExit | DInsn::Trap => {}
                 DInsn::CmpBr { .. }
@@ -519,5 +535,30 @@ mod tests {
     fn device_name_recorded() {
         let (_, fm) = fuse_src(FIB);
         assert_eq!(fm.dev_name, "h100");
+    }
+
+    #[test]
+    fn mem_ctrl_is_the_control_subset_of_mem() {
+        // mem_ctrl (what the modeled memsys keeps charging at the block)
+        // must be exactly the join/finish/child-result folds — a subset of
+        // the flat mem sum, recomputed independently from the decoded
+        // stream
+        let (dm, fm) = fuse_src(FIB);
+        for b in &fm.blocks {
+            assert!(b.mem_ctrl <= b.mem, "block at {}", b.start);
+        }
+        let dev = DeviceSpec::h100();
+        let costs = Costs::of(&dev);
+        let mut want = 0u64;
+        for insn in &dm.insns {
+            match insn {
+                DInsn::PrepareJoin { .. } => want += costs.cg_load + costs.fence,
+                DInsn::FinishTask => want += costs.fence,
+                DInsn::ChildResult { .. } => want += costs.cg_load,
+                _ => {}
+            }
+        }
+        assert!(want > 0, "fib joins and finishes");
+        assert_eq!(fm.blocks.iter().map(|b| b.mem_ctrl).sum::<u64>(), want);
     }
 }

@@ -17,7 +17,8 @@ use gtap::coordinator::{
     Backoff, Placement, PolicyConfig, QueueSelect, SchedulerKind, SmTier, StealAmount,
     VictimSelect,
 };
-use gtap::sim::DeviceSpec;
+use gtap::sim::profile::Profiler;
+use gtap::sim::{DeviceSpec, MemSysMode};
 use gtap::util::cli::Args;
 use gtap::util::stats::fmt_time;
 
@@ -40,7 +41,8 @@ fn main() -> Result<()> {
                  \n      [--victim uniform|locality|occupancy] \\\
                  \n      [--steal batch|one|half|adaptive|fixed:N] \\\
                  \n      [--placement epaq|own|rr-spill|priority:depth|priority:user] \\\
-                 \n      [--backoff exp|fixed] [--sm-tier off|spill|share]\
+                 \n      [--backoff exp|fixed] [--sm-tier off|spill|share] \\\
+                 \n      [--policy default|recommended] [--memsys flat|modeled]\
                  \n  gtap devices                       device cost models (Table 2)\
                  \n  gtap config                        runtime defaults (Table 1)"
             );
@@ -84,13 +86,28 @@ fn build_exec(args: &Args) -> Result<Exec> {
     exec = exec.queues(args.get_or("queues", 1usize));
     exec = exec.seed(args.get_or("seed", 0x6A7A9u64));
     exec = exec.policy(build_policy(args)?);
+    // memory-system model: GTAP_MEMSYS as the base, --memsys overrides
+    let mut memsys = MemSysMode::from_env().map_err(|e| gtap::anyhow!(e))?;
+    if let Some(v) = args.get("memsys") {
+        memsys = MemSysMode::parse(v).map_err(|e| gtap::anyhow!(e))?;
+    }
+    exec = exec.memsys(memsys);
     Ok(exec)
 }
 
 /// Scheduling-policy surface: env (`GTAP_QUEUE_SELECT`, …) as the base,
-/// CLI flags override.
+/// `--policy default|recommended` picks a named bundle, and per-axis CLI
+/// flags override on top.
 fn build_policy(args: &Args) -> Result<PolicyConfig> {
     let mut pol = PolicyConfig::from_env().map_err(|e| gtap::anyhow!(e))?;
+    if let Some(v) = args.get("policy") {
+        pol = match v {
+            "default" => PolicyConfig::default(),
+            // the promoted best combo of BENCH_ablations.json's sweep
+            "recommended" => PolicyConfig::recommended(),
+            other => bail!("unknown policy bundle {other:?} (default|recommended)"),
+        };
+    }
     if let Some(v) = args.get("queue-select") {
         pol.queue_select = QueueSelect::parse(v).map_err(|e| gtap::anyhow!(e))?;
     }
@@ -198,6 +215,9 @@ fn cmd_run(args: &Args) -> Result<()> {
             out.stats.sm_spills, out.stats.sm_pool_hits,
         );
     }
+    if let Some(report) = Profiler::memsys_report(&out.stats.memsys) {
+        println!("  {report}");
+    }
     if let Some(r) = out.stats.root_result {
         println!("  result: {}", r.as_i64());
     }
@@ -239,5 +259,6 @@ fn cmd_config() -> Result<()> {
     println!("GTAP_PLACEMENT            = {}", c.policy.placement.name());
     println!("GTAP_BACKOFF              = {}", c.policy.backoff.name());
     println!("GTAP_SM_TIER              = {}", c.policy.sm_tier.name());
+    println!("GTAP_MEMSYS               = {}", c.memsys.name());
     Ok(())
 }

@@ -70,6 +70,11 @@ pub struct DeviceSpec {
     pub barrier: u64,
     /// Warp-level shuffle/broadcast (`WarpShfl` in Algorithm 1).
     pub shfl: u64,
+    /// Conflict-free shared-memory access latency (the modeled memory
+    /// system prices SM-tier pool operations from it; see `sim::memsys`).
+    pub smem_lat: u64,
+    /// Extra cycles per shared-memory bank-conflict replay round.
+    pub smem_conflict: u64,
 
     // --- task-runtime overheads (fixed per-event costs) ---
     /// Per persistent-kernel loop iteration bookkeeping.
@@ -108,6 +113,8 @@ impl DeviceSpec {
             fence: 40,
             barrier: 30,
             shfl: 1,
+            smem_lat: 29,
+            smem_conflict: 4,
             loop_overhead: 12,
             spawn_overhead: 40,
             // kernel launch + on-device queue/pool init. The paper times
@@ -145,6 +152,10 @@ impl DeviceSpec {
             fence: 20,
             barrier: 60,
             shfl: 1, // unused on CPU
+            // no shared memory on the CPU; L1-latency stand-ins keep the
+            // modeled SM-tier pricing meaningful if ever enabled there
+            smem_lat: 4,
+            smem_conflict: 1,
             loop_overhead: 8,
             // OpenMP task creation is ~100s of ns on real runtimes
             spawn_overhead: 120,

@@ -41,6 +41,7 @@ use super::config::DeviceSpec;
 use super::divergence;
 use super::intrinsics::{self, IntrCtx};
 use super::memory::Memory;
+use super::memsys::{td_addr, AccessKind, MemAccess};
 use crate::coordinator::records::{RecordPool, TaskId};
 use crate::ir::bytecode::{BinKind, CacheOp, FuncId, Reg, UnKind, NO_PRIORITY_REG};
 use crate::ir::decoded::{DInsn, DecodedModule};
@@ -120,6 +121,11 @@ pub struct LaneFrame {
     /// access a field lives in a register (what -O3 does with the record
     /// pointer), so later reads cost ALU, not L2 latency.
     td_touched: u64,
+    /// Per-lane access records for the modeled memory system
+    /// (`sim::memsys`), in program order. Empty — and never touched —
+    /// unless the interpreter was built with [`Interp::recording`]; the
+    /// warp-combine step consumes them via [`LaneFrame::accesses`].
+    accesses: Vec<MemAccess>,
     /// `parallel_for` nesting depth and region accumulators. The region
     /// cost model is divide-by-width over the *executed* iteration charges
     /// (plus one barrier); no captured trip count exists — the `ParEnter`
@@ -138,6 +144,12 @@ impl LaneFrame {
         &self.spawns
     }
 
+    /// Access records collected by the last completed segment (modeled
+    /// memory system only; empty under the flat model).
+    pub fn accesses(&self) -> &[MemAccess] {
+        &self.accesses
+    }
+
     /// An empty frame; buffers grow on first use. Prefer
     /// [`LaneFrame::sized`] on hot paths.
     pub fn new() -> LaneFrame {
@@ -153,6 +165,7 @@ impl LaneFrame {
             spawns: Vec::new(),
             pending_payload_dst: None,
             td_touched: 0,
+            accesses: Vec::new(),
             par_depth: 0,
             par_compute: 0,
             par_mem: 0,
@@ -197,6 +210,7 @@ impl LaneFrame {
         self.spawns.clear();
         self.pending_payload_dst = None;
         self.td_touched = 0;
+        self.accesses.clear();
         self.par_depth = 0;
         self.par_compute = 0;
         self.par_mem = 0;
@@ -258,6 +272,13 @@ pub struct Interp<'a> {
     /// one instruction at a time. Cost-transparent: bit-identical
     /// `SegmentOutput` either way.
     fused: Option<&'a FusedModule>,
+    /// Modeled memory system (`--memsys modeled`): record per-lane access
+    /// streams instead of charging flat per-access latencies — the cost is
+    /// applied once, at the scheduler's warp-combine step. Off by default
+    /// (the flat model); enable with [`Interp::recording`]. The gating is
+    /// identical across all three interpreter tiers, so `SegmentOutput`s
+    /// and access streams stay bit-identical tier to tier in either mode.
+    record: bool,
     costs: Costs,
 }
 
@@ -276,6 +297,7 @@ impl<'a> Interp<'a> {
             block_width,
             xla_payload,
             fused: None,
+            record: false,
             costs: Costs::of(dev),
         }
     }
@@ -302,8 +324,22 @@ impl<'a> Interp<'a> {
             block_width,
             xla_payload,
             fused: Some(fm),
+            record: false,
             costs: Costs::of(dev),
         }
+    }
+
+    /// Switch the memory-system mode: `on` records per-lane access streams
+    /// (global loads/stores, task-data slots) and suppresses the flat
+    /// per-access latency charges the modeled hierarchy replaces. Accesses
+    /// inside `parallel_for` regions are exempt in both directions: they
+    /// keep the flat cooperative model (charges divide by the block width
+    /// at `ParExit`), which is already the block-cooperative streaming
+    /// story — the transaction model prices per-lane task streams. See
+    /// `sim::memsys` for the cost pipeline.
+    pub fn recording(mut self, on: bool) -> Interp<'a> {
+        self.record = on;
+        self
     }
 
     /// Provide the payload result after a [`StepResult::NeedPayload`]
@@ -414,38 +450,78 @@ impl<'a> Interp<'a> {
                 DInsn::LdG { dst, addr, cache } => {
                     let a = frame.regs[addr as usize];
                     frame.regs[dst as usize] = mem.load(a);
-                    let cost = match cache {
-                        CacheOp::Ca => costs.cached_load,
-                        CacheOp::Cg => costs.cg_load,
-                    };
-                    self.charge_m(frame, cost);
+                    if self.record && frame.par_depth == 0 {
+                        // modeled memsys: the transaction cost is charged
+                        // once, at the warp-combine step, from this record.
+                        // parallel_for regions are exempt (here and in the
+                        // three sibling arms): their accesses stay on the
+                        // flat cooperative model, whose ParExit
+                        // divide-by-width already is the block-cooperative
+                        // streaming model — the transaction model applies
+                        // to per-lane task streams.
+                        frame.accesses.push(MemAccess {
+                            addr: a,
+                            kind: AccessKind::GlobalLoad,
+                        });
+                    } else {
+                        let cost = match cache {
+                            CacheOp::Ca => costs.cached_load,
+                            CacheOp::Cg => costs.cg_load,
+                        };
+                        self.charge_m(frame, cost);
+                    }
                 }
                 DInsn::StG { addr, src, cache } => {
                     let a = frame.regs[addr as usize];
                     mem.store(a, frame.regs[src as usize]);
-                    let cost = match cache {
-                        CacheOp::Ca => costs.stg_ca,
-                        CacheOp::Cg => costs.stg_cg,
-                    };
-                    self.charge_m(frame, cost);
+                    if self.record && frame.par_depth == 0 {
+                        frame.accesses.push(MemAccess {
+                            addr: a,
+                            kind: AccessKind::GlobalStore,
+                        });
+                    } else {
+                        let cost = match cache {
+                            CacheOp::Ca => costs.stg_ca,
+                            CacheOp::Cg => costs.stg_cg,
+                        };
+                        self.charge_m(frame, cost);
+                    }
                 }
                 DInsn::LdTd { dst, off } => {
                     frame.regs[dst as usize] = records.data(frame.task)[off as usize];
-                    // task records are L2-resident; the first touch of a
-                    // field pays the latency, later accesses within the
-                    // segment are register-resident (as compiled by -O3)
-                    let bit = 1u64 << (off as u64 & 63);
-                    if frame.td_touched & bit == 0 {
-                        frame.td_touched |= bit;
-                        self.charge_m(frame, costs.cg_load);
-                    } else {
+                    if self.record && frame.par_depth == 0 {
+                        // register-resident issue cost; the L2 traffic is
+                        // modeled from the record stream
+                        frame.accesses.push(MemAccess {
+                            addr: td_addr(frame.task, off),
+                            kind: AccessKind::TdLoad,
+                        });
                         self.charge_c(frame, costs.alu);
+                    } else {
+                        // task records are L2-resident; the first touch of
+                        // a field pays the latency, later accesses within
+                        // the segment are register-resident (as compiled
+                        // by -O3)
+                        let bit = 1u64 << (off as u64 & 63);
+                        if frame.td_touched & bit == 0 {
+                            frame.td_touched |= bit;
+                            self.charge_m(frame, costs.cg_load);
+                        } else {
+                            self.charge_c(frame, costs.alu);
+                        }
                     }
                 }
                 DInsn::StTd { off, src } => {
                     records.data_mut(frame.task)[off as usize] = frame.regs[src as usize];
-                    frame.td_touched |= 1u64 << (off as u64 & 63);
-                    self.charge_m(frame, costs.sttd);
+                    if self.record && frame.par_depth == 0 {
+                        frame.accesses.push(MemAccess {
+                            addr: td_addr(frame.task, off),
+                            kind: AccessKind::TdStore,
+                        });
+                    } else {
+                        frame.td_touched |= 1u64 << (off as u64 & 63);
+                        self.charge_m(frame, costs.sttd);
+                    }
                 }
                 DInsn::Spawn {
                     func,
@@ -622,27 +698,47 @@ impl<'a> Interp<'a> {
                     MAX_SEGMENT_INSNS
                 );
             }
-            // one charge for the whole block's static costs
-            if b.compute != 0 {
-                self.charge_c(frame, b.compute);
-            }
-            if b.mem != 0 {
-                self.charge_m(frame, b.mem);
-            }
-            // task-data first-touch discount, resolved per block entry: a
-            // load whose bit is still cold pays the L2 latency, every other
-            // load in the block is register-resident (ALU)
-            if b.td_loads != 0 {
-                let cold = (b.td_cold_bits & !frame.td_touched).count_ones() as u64;
-                let warm = b.td_loads as u64 - cold;
-                if cold != 0 {
-                    self.charge_m(frame, cold * costs.cg_load);
+            if self.record && frame.par_depth == 0 {
+                // modeled memsys: data-access latencies come from the
+                // warp-combine transaction model; the block charges only
+                // its compute sum, register-resident task-data issue
+                // costs, and the control-path memory events
+                // (join/finish/child-result) kept flat in both modes.
+                // parallel_for regions (par_depth > 0 — constant across a
+                // block, since ParEnter/ParExit terminate blocks) take
+                // the flat branch: their cooperative divide-by-width
+                // model is kept in both memsys modes.
+                let c = b.compute + b.td_loads as u64 * costs.alu;
+                if c != 0 {
+                    self.charge_c(frame, c);
                 }
-                if warm != 0 {
-                    self.charge_c(frame, warm * costs.alu);
+                if b.mem_ctrl != 0 {
+                    self.charge_m(frame, b.mem_ctrl);
                 }
+            } else {
+                // one charge for the whole block's static costs
+                if b.compute != 0 {
+                    self.charge_c(frame, b.compute);
+                }
+                if b.mem != 0 {
+                    self.charge_m(frame, b.mem);
+                }
+                // task-data first-touch discount, resolved per block
+                // entry: a load whose bit is still cold pays the L2
+                // latency, every other load in the block is
+                // register-resident (ALU)
+                if b.td_loads != 0 {
+                    let cold = (b.td_cold_bits & !frame.td_touched).count_ones() as u64;
+                    let warm = b.td_loads as u64 - cold;
+                    if cold != 0 {
+                        self.charge_m(frame, cold * costs.cg_load);
+                    }
+                    if warm != 0 {
+                        self.charge_c(frame, warm * costs.alu);
+                    }
+                }
+                frame.td_touched |= b.td_all_bits;
             }
-            frame.td_touched |= b.td_all_bits;
             // effectful tail: dataflow + terminator, no per-insn accounting
             let fall = b.start + b.len;
             let mut next = fall;
@@ -672,6 +768,12 @@ impl<'a> Interp<'a> {
                     }
                     DInsn::LdTdBin { op, dst, a, b, tmp, off } => {
                         frame.regs[tmp as usize] = records.data(frame.task)[off as usize];
+                        if self.record && frame.par_depth == 0 {
+                            frame.accesses.push(MemAccess {
+                                addr: td_addr(frame.task, off),
+                                kind: AccessKind::TdLoad,
+                            });
+                        }
                         let x = Value(frame.regs[a as usize]);
                         let y = Value(frame.regs[b as usize]);
                         frame.regs[dst as usize] = eval_bin(op, x, y, dev).0 .0;
@@ -679,16 +781,40 @@ impl<'a> Interp<'a> {
                     DInsn::LdG { dst, addr, .. } => {
                         let a = frame.regs[addr as usize];
                         frame.regs[dst as usize] = mem.load(a);
+                        if self.record && frame.par_depth == 0 {
+                            frame.accesses.push(MemAccess {
+                                addr: a,
+                                kind: AccessKind::GlobalLoad,
+                            });
+                        }
                     }
                     DInsn::StG { addr, src, .. } => {
                         let a = frame.regs[addr as usize];
                         mem.store(a, frame.regs[src as usize]);
+                        if self.record && frame.par_depth == 0 {
+                            frame.accesses.push(MemAccess {
+                                addr: a,
+                                kind: AccessKind::GlobalStore,
+                            });
+                        }
                     }
                     DInsn::LdTd { dst, off } => {
                         frame.regs[dst as usize] = records.data(frame.task)[off as usize];
+                        if self.record && frame.par_depth == 0 {
+                            frame.accesses.push(MemAccess {
+                                addr: td_addr(frame.task, off),
+                                kind: AccessKind::TdLoad,
+                            });
+                        }
                     }
                     DInsn::StTd { off, src } => {
                         records.data_mut(frame.task)[off as usize] = frame.regs[src as usize];
+                        if self.record && frame.par_depth == 0 {
+                            frame.accesses.push(MemAccess {
+                                addr: td_addr(frame.task, off),
+                                kind: AccessKind::TdStore,
+                            });
+                        }
                     }
                     DInsn::ChildResult { dst, slot } => {
                         let child = records.child(frame.task, slot);

@@ -24,6 +24,7 @@ use super::divergence;
 use super::interp::{eval_bin, eval_un, SegmentEnd, SegmentOutput, SpawnReq, StepResult};
 use super::intrinsics::{self, IntrCtx};
 use super::memory::Memory;
+use super::memsys::{td_addr, AccessKind, MemAccess};
 use crate::coordinator::records::{RecordPool, TaskId};
 use crate::ir::bytecode::{CacheOp, FuncId, Insn, Module, Pc, Reg, NO_PRIORITY_REG};
 use crate::ir::intrinsics::Intrinsic;
@@ -47,6 +48,7 @@ pub struct RefLaneFrame {
     spawns: Vec<SpawnReq>,
     pending_payload_dst: Option<Reg>,
     td_touched: u64,
+    accesses: Vec<MemAccess>,
     par_depth: u32,
     par_compute: u64,
     par_mem: u64,
@@ -66,6 +68,7 @@ impl RefLaneFrame {
             spawns: Vec::new(),
             pending_payload_dst: None,
             td_touched: 0,
+            accesses: Vec::new(),
             par_depth: 0,
             par_compute: 0,
             par_mem: 0,
@@ -74,6 +77,12 @@ impl RefLaneFrame {
 
     pub fn spawns(&self) -> &[SpawnReq] {
         &self.spawns
+    }
+
+    /// Access records of the last completed segment (modeled memory
+    /// system only; see `sim::memsys`).
+    pub fn accesses(&self) -> &[MemAccess] {
+        &self.accesses
     }
 
     /// Prepare the frame to run `task` (function `func`) from `state`.
@@ -93,6 +102,7 @@ impl RefLaneFrame {
         self.spawns.clear();
         self.pending_payload_dst = None;
         self.td_touched = 0;
+        self.accesses.clear();
         self.par_depth = 0;
         self.par_compute = 0;
         self.par_mem = 0;
@@ -111,6 +121,10 @@ pub struct RefInterp<'a> {
     pub dev: &'a DeviceSpec,
     pub block_width: u32,
     pub xla_payload: bool,
+    /// Modeled memory system: record per-lane access streams instead of
+    /// charging flat per-access latencies (must gate identically to
+    /// `Interp::recording` for the differential pins to hold).
+    pub record_accesses: bool,
 }
 
 impl<'a> RefInterp<'a> {
@@ -209,35 +223,64 @@ impl<'a> RefInterp<'a> {
                 Insn::LdG { dst, addr, cache } => {
                     let a = frame.regs[addr as usize];
                     frame.regs[dst as usize] = mem.load(a);
-                    let cost = match cache {
-                        CacheOp::Ca => dev.cached_load(),
-                        CacheOp::Cg => dev.cg_load(),
-                    };
-                    self.charge_m(frame, cost);
+                    if self.record_accesses && frame.par_depth == 0 {
+                        frame.accesses.push(MemAccess {
+                            addr: a,
+                            kind: AccessKind::GlobalLoad,
+                        });
+                    } else {
+                        let cost = match cache {
+                            CacheOp::Ca => dev.cached_load(),
+                            CacheOp::Cg => dev.cg_load(),
+                        };
+                        self.charge_m(frame, cost);
+                    }
                 }
                 Insn::StG { addr, src, cache } => {
                     let a = frame.regs[addr as usize];
                     mem.store(a, frame.regs[src as usize]);
-                    let cost = match cache {
-                        CacheOp::Ca => dev.l1_lat / 2,
-                        CacheOp::Cg => dev.l2_lat / 4,
-                    };
-                    self.charge_m(frame, cost.max(1));
+                    if self.record_accesses && frame.par_depth == 0 {
+                        frame.accesses.push(MemAccess {
+                            addr: a,
+                            kind: AccessKind::GlobalStore,
+                        });
+                    } else {
+                        let cost = match cache {
+                            CacheOp::Ca => dev.l1_lat / 2,
+                            CacheOp::Cg => dev.l2_lat / 4,
+                        };
+                        self.charge_m(frame, cost.max(1));
+                    }
                 }
                 Insn::LdTd { dst, off } => {
                     frame.regs[dst as usize] = records.data(frame.task)[off as usize];
-                    let bit = 1u64 << (off as u64 & 63);
-                    if frame.td_touched & bit == 0 {
-                        frame.td_touched |= bit;
-                        self.charge_m(frame, dev.cg_load());
-                    } else {
+                    if self.record_accesses && frame.par_depth == 0 {
+                        frame.accesses.push(MemAccess {
+                            addr: td_addr(frame.task, off),
+                            kind: AccessKind::TdLoad,
+                        });
                         self.charge_c(frame, dev.alu);
+                    } else {
+                        let bit = 1u64 << (off as u64 & 63);
+                        if frame.td_touched & bit == 0 {
+                            frame.td_touched |= bit;
+                            self.charge_m(frame, dev.cg_load());
+                        } else {
+                            self.charge_c(frame, dev.alu);
+                        }
                     }
                 }
                 Insn::StTd { off, src } => {
                     records.data_mut(frame.task)[off as usize] = frame.regs[src as usize];
-                    frame.td_touched |= 1u64 << (off as u64 & 63);
-                    self.charge_m(frame, (dev.l2_lat / 4).max(1));
+                    if self.record_accesses && frame.par_depth == 0 {
+                        frame.accesses.push(MemAccess {
+                            addr: td_addr(frame.task, off),
+                            kind: AccessKind::TdStore,
+                        });
+                    } else {
+                        frame.td_touched |= 1u64 << (off as u64 & 63);
+                        self.charge_m(frame, (dev.l2_lat / 4).max(1));
+                    }
                 }
                 Insn::Spawn {
                     func,

@@ -28,20 +28,45 @@ impl Memory {
 
     /// Host-side allocation of `n` words; returns the base word address.
     /// (The paper bulk-allocates on the host before launch; so do we.)
+    ///
+    /// The break is overflow-checked (a corrupt size panics with a clear
+    /// message instead of wrapping into a bogus tiny resize), and backing
+    /// capacity grows geometrically so a sequence of small allocations
+    /// costs amortized O(1) per word instead of one exact `resize` —
+    /// i.e. a potential copy — per call. The handed-out window is
+    /// explicitly zeroed (same cost the exact resize paid), so fresh
+    /// regions start zeroed even when they reuse growth slack; beyond-brk
+    /// accesses inside the slack are caught by the debug asserts in
+    /// [`Memory::load`]/[`Memory::store`] (release builds keep only the
+    /// capacity bound — the price of amortized growth).
     pub fn alloc(&mut self, n: u64) -> u64 {
         let base = self.brk;
-        self.brk += n;
-        self.words.resize(self.brk as usize, 0);
+        self.brk = self
+            .brk
+            .checked_add(n)
+            .expect("Memory::alloc: allocation overflows the address space");
+        let need = usize::try_from(self.brk)
+            .expect("Memory::alloc: allocation exceeds host addressable memory");
+        if need > self.words.len() {
+            let grown = need.max(self.words.len().saturating_mul(2));
+            self.words.resize(grown, 0);
+        }
+        self.words[base as usize..need].fill(0);
         base
     }
 
     #[inline]
     pub fn load(&self, addr: u64) -> u64 {
+        // capacity may exceed brk (geometric growth); the debug assert
+        // keeps out-of-allocation accesses loud without a release-path
+        // check beyond the slice bound
+        debug_assert!(addr < self.brk, "load beyond brk ({addr} >= {})", self.brk);
         self.words[addr as usize]
     }
 
     #[inline]
     pub fn store(&mut self, addr: u64, val: u64) {
+        debug_assert!(addr < self.brk, "store beyond brk ({addr} >= {})", self.brk);
         self.words[addr as usize] = val;
     }
 
@@ -151,5 +176,47 @@ mod tests {
         let m = Memory::new(3);
         assert_eq!(m.size_words(), 3);
         assert_eq!(m.load(0), 0);
+    }
+
+    #[test]
+    fn many_small_allocs_grow_geometrically() {
+        // the break tracks exact usage while the backing store doubles:
+        // resize actually reallocates only O(log n) times
+        let mut m = Memory::new(1);
+        let mut resizes = 0;
+        let mut last_cap = m.words.len();
+        for i in 0..10_000u64 {
+            let a = m.alloc(1);
+            assert_eq!(a, 1 + i, "bump allocation stays exact");
+            if m.words.len() != last_cap {
+                resizes += 1;
+                last_cap = m.words.len();
+            }
+        }
+        assert_eq!(m.size_words(), 10_001);
+        assert!(resizes <= 16, "expected O(log n) grow steps, got {resizes}");
+        m.store(10_000, 7);
+        assert_eq!(m.load(10_000), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows the address space")]
+    fn alloc_overflow_is_a_clear_panic() {
+        let mut m = Memory::new(4);
+        m.alloc(u64::MAX); // brk = 4, 4 + MAX wraps — must panic, not wrap
+    }
+
+    #[test]
+    fn alloc_scrubs_growth_slack() {
+        // fresh regions must start zeroed even when they reuse capacity
+        // slack a (release-mode) stray write could have dirtied
+        let mut m = Memory::new(0);
+        m.alloc(2);
+        m.words.resize(16, 0); // widen the slack directly
+        m.words[2] = 0xDEAD;
+        m.words[3] = 0xBEEF;
+        let b = m.alloc(2);
+        assert_eq!(b, 2);
+        assert_eq!(m.read_i64s(b, 2), vec![0, 0], "slack must be scrubbed");
     }
 }

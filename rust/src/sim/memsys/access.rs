@@ -1,0 +1,111 @@
+//! Per-lane memory-access records — the *functional* half of the modeled
+//! memory system.
+//!
+//! Under `MemSysMode::Modeled` every interpreter tier (reference, decoded,
+//! superblock-fused) appends one [`MemAccess`] per executed global
+//! load/store and per task-data slot access to its lane frame, in program
+//! order. The records are pure data: they carry no cost. Cost is applied
+//! exactly once, at the scheduler's warp-combine step
+//! (`MemSys::charge_warp`), which is what lets all three tiers stay
+//! bit-identical — the access stream of a segment is the same no matter
+//! how it was dispatched (`rust/tests/interp_differential.rs` pins stream
+//! equality alongside the cycle/spawn equality).
+//!
+//! Task-data accesses are mapped into a synthetic address region above any
+//! simulated global memory ([`TD_REGION_BASE`]) so the coalescer and the
+//! cache model can treat them uniformly: record `task`, word offset `off`
+//! lives at `TD_REGION_BASE + task * TD_RECORD_STRIDE + off`.
+
+use crate::coordinator::records::TaskId;
+
+/// What kind of memory operation an access record stands for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessKind {
+    /// Global-memory load (`LdG`, any cache op).
+    GlobalLoad,
+    /// Global-memory store (`StG`, any cache op).
+    GlobalStore,
+    /// Task-data slot load (`LdTd`, incl. the fused `LdTdBin` macro-op).
+    TdLoad,
+    /// Task-data slot store (`StTd`).
+    TdStore,
+}
+
+impl AccessKind {
+    /// All kinds, in the bucketing order the coalescer iterates.
+    pub const ALL: [AccessKind; 4] = [
+        AccessKind::GlobalLoad,
+        AccessKind::GlobalStore,
+        AccessKind::TdLoad,
+        AccessKind::TdStore,
+    ];
+
+    /// Task-data accesses hit the L2 coherence point directly (task
+    /// records are L2-resident, like `.cg` traffic); global accesses go
+    /// through the per-SM L1 first.
+    #[inline]
+    pub fn bypasses_l1(self) -> bool {
+        matches!(self, AccessKind::TdLoad | AccessKind::TdStore)
+    }
+
+    /// Stores drain through write buffers: they charge a fraction of the
+    /// level latency instead of exposing it.
+    #[inline]
+    pub fn is_store(self) -> bool {
+        matches!(self, AccessKind::GlobalStore | AccessKind::TdStore)
+    }
+}
+
+/// One recorded access: a word address (global, or synthetic task-data)
+/// plus its kind. `Copy` and 16 bytes — the record stream is hot-path
+/// data in modeled runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemAccess {
+    /// Word address (8-byte words, like `sim::memory`).
+    pub addr: u64,
+    pub kind: AccessKind,
+}
+
+/// Base of the synthetic task-data address region (word address). Far
+/// above any simulated global memory, so task-record lines never alias
+/// workload data in the cache models.
+pub const TD_REGION_BASE: u64 = 1 << 40;
+
+/// Words reserved per task record in the synthetic region. Generous:
+/// `GTAP_MAX_TASK_DATA_SIZE` defaults to 256 bytes = 32 words, and the
+/// interpreters' first-touch masks already collapse offsets mod 64.
+pub const TD_RECORD_STRIDE: u64 = 64;
+
+/// Synthetic word address of task `task`'s data word `off`.
+#[inline]
+pub fn td_addr(task: TaskId, off: u16) -> u64 {
+    TD_REGION_BASE + (task as u64) * TD_RECORD_STRIDE + (off as u64 & 63)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mem_access_is_small() {
+        assert!(std::mem::size_of::<MemAccess>() <= 16);
+    }
+
+    #[test]
+    fn td_addresses_never_alias_between_tasks() {
+        let a = td_addr(0, 63);
+        let b = td_addr(1, 0);
+        assert!(b > a, "records must occupy disjoint strides");
+        assert!(td_addr(0, 0) >= TD_REGION_BASE);
+    }
+
+    #[test]
+    fn kind_predicates() {
+        assert!(AccessKind::TdLoad.bypasses_l1());
+        assert!(AccessKind::TdStore.bypasses_l1());
+        assert!(!AccessKind::GlobalLoad.bypasses_l1());
+        assert!(AccessKind::GlobalStore.is_store());
+        assert!(AccessKind::TdStore.is_store());
+        assert!(!AccessKind::TdLoad.is_store());
+    }
+}

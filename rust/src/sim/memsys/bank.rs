@@ -1,0 +1,107 @@
+//! Shared-memory bank-conflict model (32 banks, word-interleaved).
+//!
+//! GPU shared memory is divided into [`SMEM_BANKS`] banks; simultaneous
+//! accesses to distinct words of the *same* bank serialize into replay
+//! rounds. The per-SM tier pools (`coordinator::policy::sm_tier`) are
+//! shared-memory-resident ring buffers, so a batched push/pop of `n`
+//! task ids touches `n` consecutive ring slots — conflict-free while the
+//! slots map to distinct banks (the whole point of the batched layout),
+//! but paying replay rounds when the batch exceeds one bank sweep or the
+//! ring wraps at a capacity that is not a multiple of the bank count.
+//!
+//! Under `MemSysMode::Modeled` this replaces the flat "60% of a
+//! global-queue op" discount (`intra_sm_cycles`) the ROADMAP flagged for
+//! refinement; the flat model stays the golden-pinned default.
+
+use crate::sim::config::DeviceSpec;
+
+/// Shared-memory banks per SM (fixed across every CUDA generation the
+/// paper considers).
+pub const SMEM_BANKS: usize = 32;
+
+/// Cost and conflict count of one shared-memory ring operation touching
+/// `n_words` consecutive slots starting at monotone position `start_pos`
+/// of a ring with `capacity` slots.
+///
+/// Returns `(cycles, conflicts)`:
+/// * `cycles` = `smem_lat` + (replay rounds − 1) × `smem_conflict`, where
+///   replay rounds = the maximum number of touched slots that map to one
+///   bank (`slot % SMEM_BANKS`, slot = position mod capacity);
+/// * `conflicts` = Σ over banks of (touched − 1) — the excess accesses
+///   that had to replay, surfaced in `RunStats` for the Fig. 3-style
+///   ablations.
+///
+/// Deterministic and allocation-free.
+pub fn smem_op_cycles(
+    dev: &DeviceSpec,
+    start_pos: u64,
+    n_words: usize,
+    capacity: usize,
+) -> (u64, u64) {
+    debug_assert!(capacity > 0);
+    let mut counts = [0u32; SMEM_BANKS];
+    for i in 0..n_words as u64 {
+        let slot = (start_pos + i) % capacity as u64;
+        counts[(slot % SMEM_BANKS as u64) as usize] += 1;
+    }
+    let rounds = counts.iter().copied().max().unwrap_or(0).max(1) as u64;
+    let conflicts: u64 = counts.iter().map(|&c| (c as u64).saturating_sub(1)).sum();
+    (dev.smem_lat + (rounds - 1) * dev.smem_conflict, conflicts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> DeviceSpec {
+        DeviceSpec::h100()
+    }
+
+    #[test]
+    fn consecutive_batch_up_to_32_is_conflict_free() {
+        let d = dev();
+        for n in 1..=SMEM_BANKS {
+            let (cycles, conflicts) = smem_op_cycles(&d, 0, n, 4096);
+            assert_eq!(conflicts, 0, "n={n}");
+            assert_eq!(cycles, d.smem_lat, "n={n}");
+        }
+    }
+
+    #[test]
+    fn oversized_batch_pays_replay_rounds() {
+        let d = dev();
+        let (cycles, conflicts) = smem_op_cycles(&d, 0, 2 * SMEM_BANKS, 4096);
+        assert_eq!(conflicts, SMEM_BANKS as u64, "every bank hit twice");
+        assert_eq!(cycles, d.smem_lat + d.smem_conflict);
+    }
+
+    #[test]
+    fn wrap_on_non_multiple_capacity_conflicts() {
+        // ring of 50 slots: a 20-word batch starting at 48 wraps to slots
+        // {48, 49, 0..=17}; slots 48/49 (banks 16/17) collide with slots
+        // 16/17, so banks 16 and 17 are each touched twice — one replay
+        // round, two excess accesses.
+        let d = dev();
+        let (cycles, conflicts) = smem_op_cycles(&d, 48, 20, 50);
+        assert_eq!(conflicts, 2);
+        assert_eq!(cycles, d.smem_lat + d.smem_conflict);
+    }
+
+    #[test]
+    fn empty_probe_costs_base_latency() {
+        let d = dev();
+        let (cycles, conflicts) = smem_op_cycles(&d, 7, 0, 64);
+        assert_eq!((cycles, conflicts), (d.smem_lat, 0));
+    }
+
+    #[test]
+    fn conflicts_monotone_in_batch_size() {
+        let d = dev();
+        let mut last = 0;
+        for n in 1..200 {
+            let (_, c) = smem_op_cycles(&d, 0, n, 4096);
+            assert!(c >= last, "n={n}");
+            last = c;
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Coalescing: group per-lane word addresses into memory transactions.
+//!
+//! The hardware rule (§2.3 of the paper's cost discussion, standard since
+//! Volta): a warp's simultaneous accesses are served in 128-byte
+//! **transactions** (the L1/L2 line granule), with DRAM traffic counted in
+//! 32-byte **sectors**. Lanes touching the same line share one
+//! transaction; a fully scattered warp pays one transaction per lane.
+//!
+//! Addresses here are 8-byte *word* addresses (the unit of
+//! `sim::memory`), so a line is [`LINE_WORDS`] = 16 words and a sector
+//! [`SECTOR_WORDS`] = 4 words.
+
+/// Words per 128-byte transaction/cache line.
+pub const LINE_WORDS: u64 = 16;
+/// Words per 32-byte DRAM sector.
+pub const SECTOR_WORDS: u64 = 4;
+
+/// The 128B line a word address falls into.
+#[inline]
+pub fn line_of(addr: u64) -> u64 {
+    addr / LINE_WORDS
+}
+
+/// The 32B sector a word address falls into.
+#[inline]
+pub fn sector_of(addr: u64) -> u64 {
+    addr / SECTOR_WORDS
+}
+
+/// Append `x` to `set` iff not already present (linear scan — the sets
+/// here are at most one warp wide, where a scan beats hashing). Returns
+/// whether it was inserted.
+#[inline]
+pub fn push_unique(set: &mut Vec<u64>, x: u64) -> bool {
+    if set.contains(&x) {
+        return false;
+    }
+    set.push(x);
+    true
+}
+
+/// Distinct 32B sectors touched by `addrs` (traffic accounting; uses and
+/// clears `scratch`).
+pub fn count_sectors(scratch: &mut Vec<u64>, addrs: impl Iterator<Item = u64>) -> u64 {
+    scratch.clear();
+    for a in addrs {
+        push_unique(scratch, sector_of(a));
+    }
+    scratch.len() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_line_coalesces() {
+        // 16 consecutive words = one 128B line, four 32B sectors
+        let addrs: Vec<u64> = (0..16).collect();
+        let mut lines = Vec::new();
+        for &a in &addrs {
+            push_unique(&mut lines, line_of(a));
+        }
+        assert_eq!(lines, vec![0]);
+        let mut scratch = Vec::new();
+        assert_eq!(count_sectors(&mut scratch, addrs.iter().copied()), 4);
+    }
+
+    #[test]
+    fn scattered_words_one_line_each() {
+        // stride-16 words land in 32 distinct lines
+        let addrs: Vec<u64> = (0..32).map(|i| i * LINE_WORDS).collect();
+        let mut lines = Vec::new();
+        for &a in &addrs {
+            push_unique(&mut lines, line_of(a));
+        }
+        assert_eq!(lines.len(), 32);
+    }
+
+    #[test]
+    fn push_unique_dedups() {
+        let mut v = Vec::new();
+        assert!(push_unique(&mut v, 7));
+        assert!(!push_unique(&mut v, 7));
+        assert!(push_unique(&mut v, 8));
+        assert_eq!(v, vec![7, 8]);
+    }
+}

@@ -1,0 +1,425 @@
+//! The warp-accurate memory-system model: coalescing, L1/L2 caches, and
+//! shared-memory bank-conflict accounting.
+//!
+//! The flat cost model charges every global access a blended scalar
+//! latency at the instruction that issues it (`DeviceSpec::cached_load`
+//! etc.) — adequate for regular code, blind to the effects that dominate
+//! irregular task runtimes: whether a warp's lanes *coalesce* into few
+//! memory transactions, and whether those transactions *hit* in the
+//! hierarchy. This module replaces that scalar with a modeled pipeline,
+//! selected by [`MemSysMode`] (`--memsys flat|modeled`, `GTAP_MEMSYS`;
+//! flat stays the golden-pinned default):
+//!
+//! 1. **Record** ([`access`]): under `Modeled`, every interpreter tier
+//!    appends a [`MemAccess`] per executed global load/store and task-data
+//!    slot access to its lane frame — functional data, no cost. All three
+//!    tiers emit bit-identical streams (the superblock cost-transparency
+//!    invariant extends to access streams).
+//! 2. **Coalesce** ([`coalesce`]): at the scheduler's warp-combine step,
+//!    lanes are grouped by dynamic path (the divergence groups — lanes on
+//!    one path execute in lockstep, so their k-th accesses are
+//!    simultaneous) and each group's per-position addresses merge into
+//!    128-byte transactions (32-byte sectors counted for traffic).
+//! 3. **Cache** ([`cache`]): each transaction probes a deterministic
+//!    set-associative per-SM L1 (task-data traffic bypasses it — records
+//!    are L2-resident) and a shared L2; the hit level picks the charged
+//!    latency (`l1_lat` / `l2_lat` / `mem_lat`), stores drain at a
+//!    quarter of it, and the group's sum overlaps by the device's
+//!    memory-level parallelism.
+//! 4. **Bank-conflict accounting** ([`bank`]): the per-SM tier pools
+//!    (`policy::sm_tier`) are shared-memory rings; under `Modeled` their
+//!    ops are priced by 32-bank replay rounds instead of the flat 60%
+//!    intra-SM discount — the ROADMAP's "SM-tier cost model refinement".
+//!
+//! Cost is applied **once**, at combine time, per warp — never inside the
+//! interpreters — so `--memsys modeled` keeps all three tiers producing
+//! identical `SegmentOutput`s and deterministic, thread-count-stable
+//! `RunStats` (`rust/tests/memsys_model.rs`). `RunStats::memsys` carries
+//! the transaction/hit/miss/bank-conflict counters
+//! ([`MemSysStats`]); `sim::profile::memsys_report` renders them.
+
+pub mod access;
+pub mod bank;
+pub mod cache;
+pub mod coalesce;
+
+pub use access::{td_addr, AccessKind, MemAccess};
+
+use super::config::DeviceSpec;
+use super::divergence::LanePath;
+use cache::SetAssoc;
+
+/// Which memory-system cost model a run charges.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MemSysMode {
+    /// The flat per-access scalar latencies (the pre-memsys model; the
+    /// golden-pinned default — `rust/tests/policy_golden.rs` and the
+    /// differential pins are byte-identical under it).
+    #[default]
+    Flat,
+    /// The modeled hierarchy: record → coalesce → L1/L2 → charge at the
+    /// warp-combine step, plus shared-memory bank-conflict pricing for
+    /// the SM-tier pools.
+    Modeled,
+}
+
+impl MemSysMode {
+    pub const ALL: [MemSysMode; 2] = [MemSysMode::Flat, MemSysMode::Modeled];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MemSysMode::Flat => "flat",
+            MemSysMode::Modeled => "modeled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<MemSysMode, String> {
+        match s {
+            "flat" => Ok(MemSysMode::Flat),
+            "modeled" => Ok(MemSysMode::Modeled),
+            other => Err(format!("unknown memsys mode {other:?} (flat|modeled)")),
+        }
+    }
+
+    /// Parse `GTAP_MEMSYS` from the environment; unset keeps the default,
+    /// a set-but-invalid value is a hard error.
+    pub fn from_env() -> Result<MemSysMode, String> {
+        match std::env::var("GTAP_MEMSYS") {
+            Ok(v) => MemSysMode::parse(&v),
+            Err(_) => Ok(MemSysMode::default()),
+        }
+    }
+
+    /// Whether the modeled pipeline (recording, combine-time charging,
+    /// bank-conflict pool pricing) is active.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        matches!(self, MemSysMode::Modeled)
+    }
+}
+
+/// Memory-system counters carried in `RunStats::memsys`. All zero under
+/// `MemSysMode::Flat`, which is what keeps flat-mode `RunStats`
+/// byte-identical to the pre-memsys pins.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MemSysStats {
+    /// 128-byte memory transactions issued after coalescing.
+    pub transactions: u64,
+    /// 32-byte sectors touched (DRAM-traffic granule).
+    pub sectors: u64,
+    pub l1_hits: u64,
+    pub l1_misses: u64,
+    pub l2_hits: u64,
+    pub l2_misses: u64,
+    /// Shared-memory bank conflicts across SM-tier pool operations.
+    pub smem_bank_conflicts: u64,
+}
+
+/// L1 geometry: 256 sets × 4 ways × 128 B = 128 KiB per SM (model knob,
+/// not a hardware claim — see the module docs' determinism note).
+const L1_SETS: usize = 256;
+const L1_WAYS: usize = 4;
+/// L2 geometry: 4096 sets × 8 ways × 128 B = 4 MiB shared.
+const L2_SETS: usize = 4096;
+const L2_WAYS: usize = 8;
+
+/// One run's memory-system state: per-SM L1 tag stores, the shared L2,
+/// and reusable coalescing scratch. Construct per `Scheduler` (state must
+/// not leak across runs); [`MemSys::flat`] is the zero-cost disabled
+/// form.
+pub struct MemSys {
+    l1: Vec<SetAssoc>,
+    l2: Option<SetAssoc>,
+    // -- reusable warp-combine scratch (no allocation per iteration) --
+    members: Vec<usize>,
+    lines: Vec<u64>,
+    addrs: Vec<u64>,
+    sectors: Vec<u64>,
+}
+
+impl MemSys {
+    /// The disabled model (`MemSysMode::Flat`): no state, `charge_warp`
+    /// returns 0 without touching anything.
+    pub fn flat() -> MemSys {
+        MemSys {
+            l1: Vec::new(),
+            l2: None,
+            members: Vec::new(),
+            lines: Vec::new(),
+            addrs: Vec::new(),
+            sectors: Vec::new(),
+        }
+    }
+
+    /// The modeled hierarchy for `dev`: one L1 per SM plus the shared L2.
+    pub fn modeled(dev: &DeviceSpec) -> MemSys {
+        MemSys {
+            l1: (0..dev.sms).map(|_| SetAssoc::new(L1_SETS, L1_WAYS)).collect(),
+            l2: Some(SetAssoc::new(L2_SETS, L2_WAYS)),
+            members: Vec::new(),
+            lines: Vec::new(),
+            addrs: Vec::new(),
+            sectors: Vec::new(),
+        }
+    }
+
+    /// Build the model `mode` calls for.
+    pub fn for_mode(mode: MemSysMode, dev: &DeviceSpec) -> MemSys {
+        match mode {
+            MemSysMode::Flat => MemSys::flat(),
+            MemSysMode::Modeled => MemSys::modeled(dev),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.l2.is_some()
+    }
+
+    /// Charge one warp's recorded access streams, executed on SM `sm`.
+    ///
+    /// `lanes[i]`'s access stream is `stream(i)`. Lanes are grouped by
+    /// path hash exactly like `divergence::warp_cycles`; within a group
+    /// the k-th accesses of all lanes are simultaneous and coalesce,
+    /// while distinct groups serialize (their transactions are separate).
+    /// Returns the modeled memory cycles for the whole warp iteration and
+    /// bumps `stats`. Zero — with no state touched — when the model is
+    /// disabled.
+    pub fn charge_warp<'s>(
+        &mut self,
+        sm: usize,
+        lanes: &[LanePath],
+        stream: impl Fn(usize) -> &'s [MemAccess],
+        dev: &DeviceSpec,
+        stats: &mut MemSysStats,
+    ) -> u64 {
+        if !self.enabled() {
+            return 0;
+        }
+        let mut total = 0u64;
+        for (leader, l) in lanes.iter().enumerate() {
+            if lanes[..leader].iter().any(|b| b.hash == l.hash) {
+                continue;
+            }
+            total += self.charge_group(sm, lanes, leader, &stream, dev, stats);
+        }
+        total
+    }
+
+    /// Charge the path group led by lane `leader`.
+    fn charge_group<'s>(
+        &mut self,
+        sm: usize,
+        lanes: &[LanePath],
+        leader: usize,
+        stream: &impl Fn(usize) -> &'s [MemAccess],
+        dev: &DeviceSpec,
+        stats: &mut MemSysStats,
+    ) -> u64 {
+        let hash = lanes[leader].hash;
+        self.members.clear();
+        let mut max_len = 0;
+        for (j, l) in lanes.iter().enumerate() {
+            if l.hash == hash {
+                self.members.push(j);
+                max_len = max_len.max(stream(j).len());
+            }
+        }
+        let l2 = self.l2.as_mut().expect("charge_group only runs enabled");
+        let mut sum = 0u64;
+        for pos in 0..max_len {
+            for kind in AccessKind::ALL {
+                self.lines.clear();
+                self.addrs.clear();
+                for &j in &self.members {
+                    let s = stream(j);
+                    if pos < s.len() && s[pos].kind == kind {
+                        coalesce::push_unique(&mut self.lines, coalesce::line_of(s[pos].addr));
+                        self.addrs.push(s[pos].addr);
+                    }
+                }
+                if self.lines.is_empty() {
+                    continue;
+                }
+                stats.sectors +=
+                    coalesce::count_sectors(&mut self.sectors, self.addrs.iter().copied());
+                for &line in &self.lines {
+                    stats.transactions += 1;
+                    let lat = if kind.bypasses_l1() {
+                        // task records live at the L2 coherence point
+                        if l2.access(line) {
+                            stats.l2_hits += 1;
+                            dev.l2_lat
+                        } else {
+                            stats.l2_misses += 1;
+                            dev.mem_lat
+                        }
+                    } else if self.l1[sm].access(line) {
+                        stats.l1_hits += 1;
+                        dev.l1_lat
+                    } else {
+                        stats.l1_misses += 1;
+                        if l2.access(line) {
+                            stats.l2_hits += 1;
+                            dev.l2_lat
+                        } else {
+                            stats.l2_misses += 1;
+                            dev.mem_lat
+                        }
+                    };
+                    sum += if kind.is_store() { (lat / 4).max(1) } else { lat };
+                }
+            }
+        }
+        // independent transactions overlap by the stream's MLP
+        ((sum as f64) / dev.serial_mlp).ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lane(hash: u64) -> LanePath {
+        LanePath { hash, cycles: 0 }
+    }
+
+    fn loads(addrs: &[u64]) -> Vec<MemAccess> {
+        addrs
+            .iter()
+            .map(|&addr| MemAccess {
+                addr,
+                kind: AccessKind::GlobalLoad,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn flat_model_is_inert() {
+        let dev = DeviceSpec::h100();
+        let mut m = MemSys::flat();
+        let mut stats = MemSysStats::default();
+        let streams = vec![loads(&[0, 16, 32])];
+        let c = m.charge_warp(0, &[lane(1)], |i| &streams[i][..], &dev, &mut stats);
+        assert_eq!(c, 0);
+        assert_eq!(stats, MemSysStats::default());
+    }
+
+    #[test]
+    fn coalesced_warp_issues_one_transaction_per_position() {
+        let dev = DeviceSpec::h100();
+        let mut m = MemSys::modeled(&dev);
+        let mut stats = MemSysStats::default();
+        // 32 lanes, same path, consecutive words: 32 words span exactly
+        // two 16-word lines (four sectors each)
+        let streams: Vec<Vec<MemAccess>> = (0..32u64).map(|i| loads(&[i])).collect();
+        let lanes: Vec<LanePath> = (0..32).map(|_| lane(7)).collect();
+        let c = m.charge_warp(0, &lanes, |i| &streams[i][..], &dev, &mut stats);
+        assert_eq!(stats.transactions, 2, "32 consecutive words = 2 lines");
+        assert_eq!(stats.sectors, 8);
+        assert_eq!(stats.l1_misses, 2, "cold caches miss");
+        assert!(c > 0);
+    }
+
+    #[test]
+    fn scattered_warp_issues_one_transaction_per_lane() {
+        let dev = DeviceSpec::h100();
+        let mut m = MemSys::modeled(&dev);
+        let mut stats = MemSysStats::default();
+        let streams: Vec<Vec<MemAccess>> =
+            (0..32u64).map(|i| loads(&[i * coalesce::LINE_WORDS])).collect();
+        let lanes: Vec<LanePath> = (0..32).map(|_| lane(7)).collect();
+        m.charge_warp(0, &lanes, |i| &streams[i][..], &dev, &mut stats);
+        assert_eq!(stats.transactions, 32);
+    }
+
+    #[test]
+    fn scattered_costs_strictly_more_than_coalesced() {
+        let dev = DeviceSpec::h100();
+        let lanes: Vec<LanePath> = (0..32).map(|_| lane(7)).collect();
+        let coalesced: Vec<Vec<MemAccess>> = (0..32u64).map(|i| loads(&[i])).collect();
+        let scattered: Vec<Vec<MemAccess>> =
+            (0..32u64).map(|i| loads(&[i * coalesce::LINE_WORDS])).collect();
+        let cost = |streams: &Vec<Vec<MemAccess>>| {
+            let mut m = MemSys::modeled(&dev);
+            let mut stats = MemSysStats::default();
+            m.charge_warp(0, &lanes, |i| &streams[i][..], &dev, &mut stats)
+        };
+        assert!(
+            cost(&scattered) > cost(&coalesced),
+            "scattered {} vs coalesced {}",
+            cost(&scattered),
+            cost(&coalesced)
+        );
+    }
+
+    #[test]
+    fn reuse_hits_the_caches() {
+        let dev = DeviceSpec::h100();
+        let mut m = MemSys::modeled(&dev);
+        let mut stats = MemSysStats::default();
+        let streams = vec![loads(&[0]), loads(&[1])];
+        let lanes = vec![lane(1), lane(1)];
+        let first = m.charge_warp(0, &lanes, |i| &streams[i][..], &dev, &mut stats);
+        let second = m.charge_warp(0, &lanes, |i| &streams[i][..], &dev, &mut stats);
+        assert_eq!(stats.l1_misses, 1, "one cold miss for the shared line");
+        assert_eq!(stats.l1_hits, 1, "the repeat coalesced access hits L1");
+        assert!(second < first, "L1 hit must be cheaper than the miss");
+    }
+
+    #[test]
+    fn td_traffic_bypasses_l1() {
+        let dev = DeviceSpec::h100();
+        let mut m = MemSys::modeled(&dev);
+        let mut stats = MemSysStats::default();
+        let streams = vec![vec![MemAccess {
+            addr: td_addr(3, 0),
+            kind: AccessKind::TdLoad,
+        }]];
+        m.charge_warp(0, &[lane(1)], |i| &streams[i][..], &dev, &mut stats);
+        m.charge_warp(0, &[lane(1)], |i| &streams[i][..], &dev, &mut stats);
+        assert_eq!(stats.l1_hits + stats.l1_misses, 0, "no L1 traffic");
+        assert_eq!(stats.l2_misses, 1);
+        assert_eq!(stats.l2_hits, 1);
+    }
+
+    #[test]
+    fn divergent_groups_do_not_coalesce() {
+        let dev = DeviceSpec::h100();
+        let mut stats_same = MemSysStats::default();
+        let mut stats_diff = MemSysStats::default();
+        let streams = vec![loads(&[0]), loads(&[1])];
+        let mut m = MemSys::modeled(&dev);
+        m.charge_warp(0, &[lane(1), lane(1)], |i| &streams[i][..], &dev, &mut stats_same);
+        let mut m = MemSys::modeled(&dev);
+        m.charge_warp(0, &[lane(1), lane(2)], |i| &streams[i][..], &dev, &mut stats_diff);
+        assert_eq!(stats_same.transactions, 1, "lockstep lanes share the line");
+        assert_eq!(stats_diff.transactions, 2, "serialized paths do not");
+    }
+
+    #[test]
+    fn stores_cost_less_than_loads() {
+        let dev = DeviceSpec::h100();
+        let addrs: Vec<u64> = (0..32u64).map(|i| i * coalesce::LINE_WORDS).collect();
+        let lanes: Vec<LanePath> = (0..32).map(|_| lane(7)).collect();
+        let cost = |kind: AccessKind| {
+            let streams: Vec<Vec<MemAccess>> =
+                addrs.iter().map(|&addr| vec![MemAccess { addr, kind }]).collect();
+            let mut m = MemSys::modeled(&dev);
+            let mut stats = MemSysStats::default();
+            m.charge_warp(0, &lanes, |i| &streams[i][..], &dev, &mut stats)
+        };
+        assert!(cost(AccessKind::GlobalStore) < cost(AccessKind::GlobalLoad));
+    }
+
+    #[test]
+    fn mode_surface_round_trips() {
+        for m in MemSysMode::ALL {
+            assert_eq!(MemSysMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(MemSysMode::parse("psychic").is_err());
+        assert_eq!(MemSysMode::default(), MemSysMode::Flat);
+        assert!(!MemSysMode::Flat.enabled());
+        assert!(MemSysMode::Modeled.enabled());
+    }
+}

@@ -10,7 +10,11 @@
 //! * **Memory hierarchy** — per-SM L1 (non-coherent, bypassable with `.cg`),
 //!   L2 coherence point, HBM; exposed latency for serial code (the
 //!   mergesort final-merge effect) and blended costs for cached access
-//!   ([`config`], [`memory`]).
+//!   ([`config`], [`memory`]). Under `--memsys modeled` the blended
+//!   scalars are replaced by the warp-accurate model in [`memsys`]:
+//!   per-lane access recording, path-group coalescing into 128B
+//!   transactions, deterministic set-associative L1/L2 caches, and
+//!   shared-memory bank-conflict pricing for the SM-tier pools.
 //! * **Queue-metadata contention** — CAS serialization windows on shared
 //!   words, which produce the global-queue flat-line (Fig. 3) and the
 //!   batched-vs-Chase–Lev crossover at very large P (Fig. 4). Modeled in
@@ -30,9 +34,11 @@ pub mod interp;
 pub mod interp_ref;
 pub mod intrinsics;
 pub mod memory;
+pub mod memsys;
 pub mod profile;
 
 pub use config::DeviceSpec;
+pub use memsys::{MemSys, MemSysMode, MemSysStats};
 pub use interp::{Interp, LaneFrame, SegmentEnd, SegmentOutput, SpawnReq, StepResult};
 pub use interp_ref::{RefInterp, RefLaneFrame};
 pub use memory::Memory;

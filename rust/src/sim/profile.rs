@@ -7,6 +7,7 @@
 //! with and without EPAQ). Disabled by default; the benches that need it
 //! call [`Profiler::enabled`].
 
+use crate::sim::memsys::MemSysStats;
 use crate::util::stats::percentile;
 
 /// One persistent-kernel iteration of one worker.
@@ -16,7 +17,8 @@ pub struct TimelineEvent {
     /// Cycle when the iteration started.
     pub start: u64,
     /// Cycles spent executing task functions (incl. spawn/join/finish costs,
-    /// as in Fig. 6's caption).
+    /// as in Fig. 6's caption; under `--memsys modeled` also the warp's
+    /// combine-time memory-transaction cycles).
     pub busy: u64,
     /// Cycles spent on queue operations / stealing / idling.
     pub overhead: u64,
@@ -102,6 +104,37 @@ impl Profiler {
         qs.iter().map(|&q| percentile(&xs, q)).collect()
     }
 
+    /// Memory-system summary line for a run's `RunStats::memsys` counters
+    /// (`--memsys modeled`): transactions/sectors, hierarchy hit rates and
+    /// shared-memory bank conflicts. `None` when the counters are all zero
+    /// — i.e. under the flat model — so flat-mode reports stay unchanged.
+    pub fn memsys_report(m: &MemSysStats) -> Option<String> {
+        if *m == MemSysStats::default() {
+            return None;
+        }
+        let rate = |hits: u64, misses: u64| -> f64 {
+            let total = hits + misses;
+            if total == 0 {
+                0.0
+            } else {
+                100.0 * hits as f64 / total as f64
+            }
+        };
+        Some(format!(
+            "memsys: {} transactions ({} sectors), L1 {:.1}% hit ({}/{}), \
+             L2 {:.1}% hit ({}/{}), {} smem bank conflicts",
+            m.transactions,
+            m.sectors,
+            rate(m.l1_hits, m.l1_misses),
+            m.l1_hits,
+            m.l1_hits + m.l1_misses,
+            rate(m.l2_hits, m.l2_misses),
+            m.l2_hits,
+            m.l2_hits + m.l2_misses,
+            m.smem_bank_conflicts,
+        ))
+    }
+
     /// CSV dump for plotting (one row per event).
     pub fn to_csv(&self) -> String {
         let mut out =
@@ -183,5 +216,26 @@ mod tests {
         let csv = p.to_csv();
         assert!(csv.starts_with("worker,start,"));
         assert!(csv.contains("3,7,11,13,17,1"));
+    }
+
+    #[test]
+    fn memsys_report_renders_only_when_counters_move() {
+        assert!(
+            Profiler::memsys_report(&MemSysStats::default()).is_none(),
+            "flat runs report nothing"
+        );
+        let m = MemSysStats {
+            transactions: 10,
+            sectors: 12,
+            l1_hits: 6,
+            l1_misses: 2,
+            l2_hits: 1,
+            l2_misses: 1,
+            smem_bank_conflicts: 3,
+        };
+        let r = Profiler::memsys_report(&m).unwrap();
+        assert!(r.contains("10 transactions"), "{r}");
+        assert!(r.contains("75.0% hit"), "{r}");
+        assert!(r.contains("3 smem bank conflicts"), "{r}");
     }
 }

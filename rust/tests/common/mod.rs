@@ -1,0 +1,160 @@
+//! Shared three-tier segment harness for workloads whose segments need
+//! prepared global memory (CSR graphs, arrays). One copy, used by both
+//! `tests/interp_differential.rs` and `tests/compiler_fuzz.rs`, so the
+//! differential and fuzz suites always test identical harness semantics
+//! (compile → decode → fuse, record-pool sizing, tier dispatch, the
+//! memory checksum fold).
+#![allow(dead_code)] // each test binary uses a subset of the surface
+
+use gtap::compiler::compile_default;
+use gtap::coordinator::records::{RecordPool, NO_TASK};
+use gtap::ir::decoded::DecodedModule;
+use gtap::ir::superblock::FusedModule;
+use gtap::sim::interp_ref::{RefInterp, RefLaneFrame};
+use gtap::sim::memsys::MemAccess;
+use gtap::sim::{DeviceSpec, Interp, LaneFrame, Memory, StepResult};
+use gtap::workloads::bfs::CsrGraph;
+
+/// The three interpreter tiers under differential test.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Tier {
+    Ref,
+    Decoded,
+    Fused,
+}
+
+pub const TIERS: [Tier; 3] = [Tier::Ref, Tier::Decoded, Tier::Fused];
+
+/// One tier's observable result on a memory-backed workload segment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TierRun {
+    pub cycles: u64,
+    /// Raw dynamic-path hash — comparable bit-for-bit only between the
+    /// decoded and fused tiers (the reference folds function-local pcs).
+    pub path: u64,
+    pub spawns: usize,
+    /// Modeled-memsys access stream (empty under the flat model).
+    pub accesses: Vec<MemAccess>,
+    /// Multiply-fold checksum over the whole memory image after the
+    /// segment, so functional effects are compared too.
+    pub mem_checksum: u64,
+}
+
+impl TierRun {
+    /// Everything except the raw path hash — what all three tiers must
+    /// agree on bit for bit.
+    pub fn functional(&self) -> (u64, usize, &[MemAccess], u64) {
+        (self.cycles, self.spawns, &self.accesses, self.mem_checksum)
+    }
+}
+
+/// Run one segment of `src`'s function 0 through one tier: `setup`
+/// prepares the global memory image and returns the task args; `modeled`
+/// selects the recording interpreters (`--memsys modeled` gating).
+pub fn run_mem_workload_tier(
+    src: &str,
+    state: u16,
+    tier: Tier,
+    modeled: bool,
+    block_width: u32,
+    setup: &dyn Fn(&mut Memory) -> Vec<i64>,
+) -> TierRun {
+    let module = compile_default(src).unwrap();
+    let decoded = DecodedModule::decode(&module);
+    let dev = DeviceSpec::h100();
+    let fm = FusedModule::fuse(&decoded, &dev);
+    let words = module
+        .funcs
+        .iter()
+        .map(|f| f.layout.words())
+        .max()
+        .unwrap()
+        .max(1);
+    let mut records = RecordPool::new(64, words, 8);
+    let mut mem = Memory::new(module.globals_words());
+    let args = setup(&mut mem);
+    let task = records.alloc(0, NO_TASK).unwrap();
+    for (i, &a) in args.iter().enumerate() {
+        records.data_mut(task)[i] = a as u64;
+    }
+    let mut log = Vec::new();
+    let (out, spawns, accesses) = match tier {
+        Tier::Ref => {
+            let interp = RefInterp {
+                module: &module,
+                dev: &dev,
+                block_width,
+                xla_payload: false,
+                record_accesses: modeled,
+            };
+            let mut frame = RefLaneFrame::new();
+            frame.reset(&module, task, 0, state, 0);
+            match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+                StepResult::Done(o) => (o, frame.spawns().len(), frame.accesses().to_vec()),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        Tier::Decoded | Tier::Fused => {
+            let base = if tier == Tier::Fused {
+                Interp::fused(&decoded, &fm, &dev, block_width, false)
+            } else {
+                Interp::new(&decoded, &dev, block_width, false)
+            };
+            let interp = base.recording(modeled);
+            let mut frame = LaneFrame::sized(&decoded);
+            frame.reset(&decoded, task, 0, state, 0);
+            match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+                StepResult::Done(o) => (o, frame.spawns().len(), frame.accesses().to_vec()),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    };
+    let mem_checksum = (0..mem.size_words())
+        .fold(0u64, |s, a| s.wrapping_mul(31).wrapping_add(mem.load(a)));
+    TierRun {
+        cycles: out.cycles,
+        path: out.path,
+        spawns,
+        accesses,
+        mem_checksum,
+    }
+}
+
+/// Memory setup for one BFS segment: CSR arrays + the depth vector with
+/// the expanded vertex `v` at depth 0 and everything else unreached.
+pub fn bfs_setup(graph: &CsrGraph, v: i64) -> impl Fn(&mut Memory) -> Vec<i64> + '_ {
+    move |mem: &mut Memory| {
+        let ro = mem.alloc(graph.row_offsets.len() as u64);
+        let ci = mem.alloc(graph.col_indices.len().max(1) as u64);
+        let dp = mem.alloc(graph.n as u64);
+        mem.write_i64s(ro, &graph.row_offsets);
+        mem.write_i64s(ci, &graph.col_indices);
+        mem.write_i64s(dp, &vec![i64::MAX; graph.n]);
+        mem.store(dp + v as u64, 0);
+        vec![v, ro as i64, ci as i64, dp as i64]
+    }
+}
+
+/// Memory setup for one mergesort segment over `xs`: data + tmp arrays;
+/// a state-1 (post-join) re-entry gets both halves of `[left, right)`
+/// pre-sorted, as the children would have left them.
+pub fn msort_setup(
+    xs: &[i64],
+    state: u16,
+    left: i64,
+    right: i64,
+) -> impl Fn(&mut Memory) -> Vec<i64> + '_ {
+    move |mem: &mut Memory| {
+        let n = xs.len() as u64;
+        let data = mem.alloc(n);
+        let tmp = mem.alloc(n);
+        let mut v = xs.to_vec();
+        if state == 1 {
+            let mid = ((left + right) / 2) as usize;
+            v[left as usize..mid].sort_unstable();
+            v[mid..right as usize].sort_unstable();
+        }
+        mem.write_i64s(data, &v);
+        vec![data as i64, left, right, tmp as i64]
+    }
+}

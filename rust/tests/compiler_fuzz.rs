@@ -10,6 +10,9 @@
 //! cost-transparency invariant (`rust/tests/interp_differential.rs` holds
 //! the workload half).
 
+mod common;
+
+use common::{bfs_setup, msort_setup, run_mem_workload_tier, Tier};
 use gtap::bench::runners::Exec;
 use gtap::compiler::compile_default;
 use gtap::coordinator::records::{RecordPool, NO_TASK};
@@ -214,6 +217,7 @@ fn run_segment_tier(
             dev: &dev,
             block_width: 1,
             xla_payload: false,
+            record_accesses: false,
         };
         let mut frame = RefLaneFrame::new();
         frame.reset(&module, task, 0, 0, 0);
@@ -276,6 +280,68 @@ fn fuzz_segments_agree_across_ref_decoded_fused() {
         );
         // and the result still matches the direct AST evaluation
         assert_eq!(fused.3 as i64, eval(&e, &args), "src:\n{src}");
+    });
+}
+
+#[test]
+fn fuzz_bfs_segments_agree_across_tiers() {
+    // random CSR graphs and start vertices: the pointer-chasing +
+    // parallel_for + atomic_min segment family through all three tiers
+    // (shared harness: tests/common/mod.rs)
+    let src = gtap::workloads::bfs::source();
+    Runner::new().cases(30).run("bfs-tier-fuzz", |g| {
+        let n = g.usize(2, 24);
+        let seed = g.int(0, 1 << 20) as u64;
+        let graph = gtap::workloads::bfs::CsrGraph::random(n, g.usize(1, 4), seed);
+        let v = g.usize(0, n - 1) as i64;
+        let setup = bfs_setup(&graph, v);
+        let reference = run_mem_workload_tier(&src, 0, Tier::Ref, false, 64, &setup);
+        let decoded = run_mem_workload_tier(&src, 0, Tier::Decoded, false, 64, &setup);
+        let fused = run_mem_workload_tier(&src, 0, Tier::Fused, false, 64, &setup);
+        // cycles/spawns/streams/memory: identical across all three; paths
+        // bit-identical between decoded and fused only (the reference
+        // folds function-local pcs)
+        assert_eq!(
+            reference.functional(),
+            decoded.functional(),
+            "decoded vs ref bfs (n {n}, v {v})"
+        );
+        assert_eq!(decoded, fused, "fused vs decoded bfs (n {n}, v {v})");
+    });
+}
+
+#[test]
+fn fuzz_sort_segments_agree_across_tiers() {
+    // random arrays, bounds and cutoffs through mergesort's leaf, split
+    // and merge-continuation segments (shared harness: tests/common)
+    Runner::new().cases(30).run("sort-tier-fuzz", |g| {
+        let cutoff = g.int(2, 16);
+        let src = gtap::workloads::sort::mergesort_source(cutoff);
+        let n = g.usize(2, 48);
+        let xs = gtap::workloads::sort::input(n, g.int(0, 1 << 20) as u64);
+        let left = g.usize(0, n - 1) as i64;
+        let right = g.usize(left as usize + 1, n) as i64;
+        let state = if g.chance(0.3) && right - left > cutoff {
+            1u16
+        } else {
+            0
+        };
+        let setup = msort_setup(&xs, state, left, right);
+        let reference = run_mem_workload_tier(&src, state, Tier::Ref, false, 1, &setup);
+        let decoded = run_mem_workload_tier(&src, state, Tier::Decoded, false, 1, &setup);
+        let fused = run_mem_workload_tier(&src, state, Tier::Fused, false, 1, &setup);
+        assert_eq!(
+            reference.functional(),
+            decoded.functional(),
+            "decoded vs ref msort (n {n}, {left}..{right}, state {state})"
+        );
+        assert_eq!(
+            decoded, fused,
+            "fused vs decoded msort (n {n}, {left}..{right}, state {state})"
+        );
+        if state == 0 && right - left > cutoff {
+            assert_eq!(decoded.spawns, 2, "split segments spawn both halves");
+        }
     });
 }
 

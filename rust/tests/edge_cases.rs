@@ -8,7 +8,7 @@ use gtap::coordinator::{
 };
 use gtap::ir::types::Value;
 use gtap::sim::divergence::{warp_cycles, LanePath};
-use gtap::sim::DeviceSpec;
+use gtap::sim::{DeviceSpec, Memory};
 use gtap::util::prop::Runner;
 
 #[test]
@@ -320,6 +320,37 @@ fn sm_tier_single_sm_without_overflow_is_a_noop() {
     assert_eq!(off, spill, "spill tier must be a no-op absent overflow");
     assert_eq!(spill.sm_spills, 0);
     assert_eq!(spill.sm_pool_hits, 0);
+}
+
+#[test]
+fn memory_alloc_geometric_growth_stays_functional() {
+    // regression for the Memory::alloc hardening: interleaved small and
+    // large allocations must keep exact base addresses and full data
+    // integrity while the backing store grows geometrically
+    let mut m = Memory::new(2);
+    let mut expected_base = 2u64;
+    let mut regions: Vec<(u64, Vec<i64>)> = vec![];
+    for i in 0..200u64 {
+        let n = 1 + (i % 37);
+        let base = m.alloc(n);
+        assert_eq!(base, expected_base, "bump allocation must stay exact");
+        expected_base += n;
+        let xs: Vec<i64> = (0..n as i64).map(|k| (i as i64) * 1000 + k).collect();
+        m.write_i64s(base, &xs);
+        regions.push((base, xs));
+    }
+    assert_eq!(m.size_words(), expected_base);
+    for (base, xs) in &regions {
+        assert_eq!(&m.read_i64s(*base, xs.len() as u64), xs, "region at {base}");
+    }
+}
+
+#[test]
+#[should_panic(expected = "overflows the address space")]
+fn memory_alloc_brk_overflow_panics_instead_of_wrapping() {
+    let mut m = Memory::new(0);
+    m.alloc(8);
+    m.alloc(u64::MAX); // would wrap brk without the checked add
 }
 
 #[test]

@@ -14,12 +14,23 @@
 //! raw hash values legitimately differ; against it only the
 //! *path-equality structure* — the sole thing the divergence model
 //! consumes — must coincide.
+//!
+//! Both memory-system modes are covered: under the flat default the
+//! access streams are empty and the charges are the pre-memsys pins;
+//! under `--memsys modeled` (recording interpreters) the **access
+//! streams** are functional data and must be bit-identical across all
+//! three tiers — that is what lets the warp-combine cost model charge
+//! once, independent of dispatch tier (`sim::memsys`).
 
+mod common;
+
+use common::{bfs_setup, msort_setup, run_mem_workload_tier, Tier, TIERS};
 use gtap::compiler::compile_default;
 use gtap::coordinator::records::{RecordPool, NO_TASK};
 use gtap::ir::decoded::DecodedModule;
 use gtap::ir::superblock::FusedModule;
 use gtap::sim::interp_ref::{RefInterp, RefLaneFrame};
+use gtap::sim::memsys::MemAccess;
 use gtap::sim::{DeviceSpec, Interp, LaneFrame, Memory, SegmentOutput, SpawnReq, StepResult};
 
 const FIB: &str = r#"
@@ -44,17 +55,15 @@ const INTRINSIC: &str = "#pragma gtap function\nint f(int n) { return fib_serial
 
 const PAYLOAD: &str = "#pragma gtap function\nfloat f(int s) { return payload(s, 8, 16); }";
 
-#[derive(Clone, Copy, Debug, PartialEq)]
-enum Tier {
-    Ref,
-    Decoded,
-    Fused,
-}
-
-const TIERS: [Tier; 3] = [Tier::Ref, Tier::Decoded, Tier::Fused];
-
-/// Run one segment through one tier on identical fresh state.
-fn run_tier(src: &str, args: &[i64], state: u16, tier: Tier) -> (SegmentOutput, Vec<SpawnReq>) {
+/// Run one segment through one tier on identical fresh state. `modeled`
+/// selects the recording interpreters (`--memsys modeled` gating).
+fn run_tier_mode(
+    src: &str,
+    args: &[i64],
+    state: u16,
+    tier: Tier,
+    modeled: bool,
+) -> (SegmentOutput, Vec<SpawnReq>, Vec<MemAccess>) {
     let module = compile_default(src).unwrap();
     let decoded = DecodedModule::decode(&module);
     let dev = DeviceSpec::h100();
@@ -94,43 +103,56 @@ fn run_tier(src: &str, args: &[i64], state: u16, tier: Tier) -> (SegmentOutput, 
                 dev: &dev,
                 block_width: 1,
                 xla_payload: false,
+                record_accesses: modeled,
             };
             let mut frame = RefLaneFrame::new();
             frame.reset(&module, task, 0, state, 0);
             match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
-                StepResult::Done(o) => (o, frame.spawns().to_vec()),
+                StepResult::Done(o) => (o, frame.spawns().to_vec(), frame.accesses().to_vec()),
                 other => panic!("unexpected {other:?}"),
             }
         }
         Tier::Decoded | Tier::Fused => {
-            let interp = if tier == Tier::Fused {
+            let base = if tier == Tier::Fused {
                 Interp::fused(&decoded, &fm, &dev, 1, false)
             } else {
                 Interp::new(&decoded, &dev, 1, false)
             };
+            let interp = base.recording(modeled);
             let mut frame = LaneFrame::sized(&decoded);
             frame.reset(&decoded, task, 0, state, 0);
             match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
-                StepResult::Done(o) => (o, frame.spawns().to_vec()),
+                StepResult::Done(o) => (o, frame.spawns().to_vec(), frame.accesses().to_vec()),
                 other => panic!("unexpected {other:?}"),
             }
         }
     }
 }
 
+fn run_tier(src: &str, args: &[i64], state: u16, tier: Tier) -> (SegmentOutput, Vec<SpawnReq>) {
+    let (o, s, _) = run_tier_mode(src, args, state, tier, false);
+    (o, s)
+}
+
 /// All three tiers must agree on end, cycles and spawns; decoded and fused
-/// must agree on the path hash bit for bit.
-fn assert_equivalent(src: &str, args: &[i64], state: u16) {
-    let outs: Vec<_> = TIERS.iter().map(|&t| run_tier(src, args, state, t)).collect();
+/// must agree on the path hash bit for bit. Under the modeled memory
+/// system the access streams must additionally be bit-identical across
+/// all three tiers (they are the cost model's input); under the flat
+/// default they must be empty.
+fn assert_equivalent_mode(src: &str, args: &[i64], state: u16, modeled: bool) {
+    let outs: Vec<_> = TIERS
+        .iter()
+        .map(|&t| run_tier_mode(src, args, state, t, modeled))
+        .collect();
     let (r, d, f) = (&outs[0], &outs[1], &outs[2]);
     for (name, o) in [("decoded", d), ("fused", f)] {
         assert_eq!(
             o.0.end, r.0.end,
-            "{name} segment end (args {args:?}, state {state})"
+            "{name} segment end (args {args:?}, state {state}, modeled {modeled})"
         );
         assert_eq!(
             o.0.cycles, r.0.cycles,
-            "{name} cycle charge (args {args:?}, state {state})"
+            "{name} cycle charge (args {args:?}, state {state}, modeled {modeled})"
         );
         assert_eq!(o.1.len(), r.1.len(), "{name} spawn count");
         for (a, b) in o.1.iter().zip(r.1.iter()) {
@@ -140,11 +162,22 @@ fn assert_equivalent(src: &str, args: &[i64], state: u16) {
             assert_eq!(a.priority, b.priority);
             assert_eq!(a.args[..a.argc as usize], b.args[..b.argc as usize]);
         }
+        assert_eq!(
+            o.2, r.2,
+            "{name} access stream (args {args:?}, state {state}, modeled {modeled})"
+        );
+    }
+    if !modeled {
+        assert!(r.2.is_empty(), "flat mode must record nothing");
     }
     assert_eq!(
         d.0.path, f.0.path,
         "fused path hash must be bit-identical to decoded (args {args:?}, state {state})"
     );
+}
+
+fn assert_equivalent(src: &str, args: &[i64], state: u16) {
+    assert_equivalent_mode(src, args, state, false);
 }
 
 #[test]
@@ -219,6 +252,7 @@ fn tree_workload_segments_equivalent() {
                         dev: &dev,
                         block_width: 1,
                         xla_payload: false,
+                        record_accesses: false,
                     };
                     let mut frame = RefLaneFrame::new();
                     frame.reset(&module, task, 0, state, 0);
@@ -246,6 +280,94 @@ fn tree_workload_segments_equivalent() {
         assert_eq!(run(Tier::Decoded), reference, "decoded, state {state}, depth {depth}");
         assert_eq!(run(Tier::Fused), reference, "fused, state {state}, depth {depth}");
     }
+}
+
+#[test]
+fn bfs_segments_equivalent() {
+    // BFS (Program 5): parallel_for over a CSR row, atomic_min relaxation,
+    // spawn-per-improved-neighbour — the pointer-heavy irregular segment
+    // family the three-tier suite was missing. Both memsys modes.
+    let src = gtap::workloads::bfs::source();
+    let g = gtap::workloads::bfs::CsrGraph::random(12, 2, 3);
+    for modeled in [false, true] {
+        for v in [0i64, 5, 11] {
+            let setup = bfs_setup(&g, v);
+            let r = run_mem_workload_tier(&src, 0, Tier::Ref, modeled, 64, &setup);
+            let d = run_mem_workload_tier(&src, 0, Tier::Decoded, modeled, 64, &setup);
+            let f = run_mem_workload_tier(&src, 0, Tier::Fused, modeled, 64, &setup);
+            // the reference folds local pcs, so only the functional tuple
+            // (cycles/spawns/streams/memory) is comparable against it
+            assert_eq!(d.functional(), r.functional(), "decoded bfs (v {v}, modeled {modeled})");
+            assert_eq!(f.functional(), r.functional(), "fused bfs (v {v}, modeled {modeled})");
+            assert_eq!(d.path, f.path, "decoded/fused path hashes (v {v})");
+            if modeled {
+                assert!(
+                    !r.accesses.is_empty(),
+                    "bfs reads CSR rows — stream must record them"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mergesort_segments_equivalent() {
+    // Mergesort (§6.2): serial-sort leaf, spawning split, and the
+    // merge_serial + memcpy continuation — the array-walking segment
+    // family. Both memsys modes.
+    let src = gtap::workloads::sort::mergesort_source(8);
+    let n = 24usize;
+    let xs = gtap::workloads::sort::input(n, 5);
+    for modeled in [false, true] {
+        // (state, left, right): leaf / split / post-join merge
+        for &(state, left, right) in &[(0u16, 0i64, 8i64), (0, 0, 24), (1, 0, 24)] {
+            let setup = msort_setup(&xs, state, left, right);
+            let r = run_mem_workload_tier(&src, state, Tier::Ref, modeled, 1, &setup);
+            let d = run_mem_workload_tier(&src, state, Tier::Decoded, modeled, 1, &setup);
+            let f = run_mem_workload_tier(&src, state, Tier::Fused, modeled, 1, &setup);
+            assert_eq!(
+                d.functional(),
+                r.functional(),
+                "decoded msort (state {state}, modeled {modeled})"
+            );
+            assert_eq!(
+                f.functional(),
+                r.functional(),
+                "fused msort (state {state}, modeled {modeled})"
+            );
+            assert_eq!(d.path, f.path, "decoded/fused path hashes (state {state})");
+            if state == 0 && right - left > 8 {
+                assert_eq!(r.spawns, 2, "the split segment spawns both halves");
+            }
+        }
+    }
+}
+
+#[test]
+fn modeled_memsys_segments_equivalent() {
+    // the acceptance pin: under --memsys modeled all three tiers still
+    // produce identical SegmentOutputs — and identical access streams
+    for n in [0i64, 1, 5, 13] {
+        assert_equivalent_mode(FIB, &[n], 0, true);
+    }
+    assert_equivalent_mode(FIB, &[5], 1, true);
+    for n in [0i64, 7, 100] {
+        assert_equivalent_mode(LOOPY, &[n], 0, true);
+        assert_equivalent_mode(INTRINSIC, &[n.max(1)], 0, true);
+    }
+    let src = gtap::workloads::nqueens::source(3, true);
+    assert_equivalent_mode(&src, &[6, 2, 0b0110, 0b0001, 0b1000, 0], 0, true);
+}
+
+#[test]
+fn modeled_streams_record_global_and_td_traffic() {
+    use gtap::sim::memsys::AccessKind;
+    let src = "global int g;\n#pragma gtap function\nint f(int n) { g = g + n; return g; }";
+    let (_, _, acc) = run_tier_mode(src, &[3], 0, Tier::Fused, true);
+    assert!(acc.iter().any(|a| a.kind == AccessKind::GlobalLoad), "{acc:?}");
+    assert!(acc.iter().any(|a| a.kind == AccessKind::GlobalStore), "{acc:?}");
+    assert!(acc.iter().any(|a| a.kind == AccessKind::TdLoad), "arg read: {acc:?}");
+    assert!(acc.iter().any(|a| a.kind == AccessKind::TdStore), "result store: {acc:?}");
 }
 
 #[test]

@@ -1,0 +1,199 @@
+//! End-to-end and property pins for the modeled memory system
+//! (`sim::memsys`, `--memsys flat|modeled`):
+//!
+//! * **flat is the golden default** — a default run IS a flat run, its
+//!   memsys counters are all zero, and `RunStats` match the explicit
+//!   `--memsys flat` spelling byte for byte;
+//! * **modeled stays correct and deterministic** — every workload family
+//!   still validates against its native reference, two same-seed runs are
+//!   bit-identical, and a whole sweep is byte-identical across
+//!   `GTAP_BENCH_THREADS=1` vs `4`;
+//! * **coalescing is the lever** — a scattered synthetic stream costs
+//!   strictly more modeled cycles than the same stream coalesced
+//!   (property-tested over random bases/widths, `queue_model.rs` style);
+//! * **the SM-tier pools are re-costed** — modeled runs price pool
+//!   traffic by shared-memory banks instead of the 60% discount.
+
+use gtap::bench::runners::{self, Exec};
+use gtap::bench::sweep::parallel_map;
+use gtap::coordinator::{RunStats, SmTier};
+use gtap::sim::divergence::LanePath;
+use gtap::sim::memsys::{coalesce, AccessKind, MemAccess, MemSys, MemSysMode, MemSysStats};
+use gtap::sim::DeviceSpec;
+use gtap::util::prop::Runner;
+use std::sync::Mutex;
+
+fn fib_stats(e: &Exec) -> RunStats {
+    runners::run_fib(e, 13, 0, false).unwrap().stats
+}
+
+#[test]
+fn flat_default_is_byte_identical_with_zero_counters() {
+    let default = fib_stats(&Exec::gpu_thread(4, 32));
+    let explicit = fib_stats(&Exec::gpu_thread(4, 32).memsys(MemSysMode::Flat));
+    assert_eq!(default, explicit, "flat must be the default spelling");
+    assert_eq!(default.memsys, MemSysStats::default(), "flat counts nothing");
+}
+
+#[test]
+fn modeled_runs_validate_and_count_traffic() {
+    // thread-level fib + mergesort, block-level tree + bfs: every family
+    // validates against its native reference under the modeled memsys
+    let e = Exec::gpu_thread(4, 32).memsys(MemSysMode::Modeled);
+    let s = fib_stats(&e);
+    assert!(s.memsys.transactions > 0, "fib touches task records: {s:?}");
+    assert!(
+        s.memsys.l2_hits + s.memsys.l2_misses > 0,
+        "transactions must probe the hierarchy"
+    );
+    runners::run_mergesort(&e, 600, 32, 1).unwrap();
+    runners::run_full_tree(&Exec::gpu_block(4, 64).memsys(MemSysMode::Modeled), 5, 8, 8, None)
+        .unwrap();
+    let bfs = runners::run_bfs(
+        &Exec::gpu_block(4, 64).no_taskwait().memsys(MemSysMode::Modeled),
+        120,
+        3,
+        5,
+    )
+    .unwrap()
+    .stats;
+    assert!(
+        bfs.memsys.transactions > 0,
+        "bfs walks CSR arrays: {:?}",
+        bfs.memsys
+    );
+    assert!(
+        bfs.memsys.sectors >= bfs.memsys.transactions,
+        "every 128B transaction touches at least one 32B sector"
+    );
+}
+
+#[test]
+fn modeled_is_deterministic_and_observably_different_from_flat() {
+    let modeled = || fib_stats(&Exec::gpu_thread(4, 32).memsys(MemSysMode::Modeled));
+    let a = modeled();
+    let b = modeled();
+    assert_eq!(a, b, "modeled runs must be deterministic");
+    let flat = fib_stats(&Exec::gpu_thread(4, 32));
+    assert_eq!(a.root_result, flat.root_result, "semantics are mode-independent");
+    assert_eq!(a.tasks_finished, flat.tasks_finished);
+    assert_ne!(a.cycles, flat.cycles, "the model must actually change costs");
+}
+
+#[test]
+fn prop_scattered_streams_cost_strictly_more_than_coalesced() {
+    // The defining property of the coalescer: for any base address and
+    // warp width, spreading the same per-lane access count across
+    // distinct 128B lines costs strictly more than packing it into
+    // consecutive words — cold caches, same kind, same path group.
+    Runner::new().cases(200).run("memsys-coalescing", |g| {
+        let dev = DeviceSpec::h100();
+        let lanes_n = g.usize(2, 32);
+        // line-aligned base so "coalesced" means exactly one line/position
+        let base = g.int(0, 1 << 20) as u64 * coalesce::LINE_WORDS;
+        let positions = g.usize(1, 4);
+        let lanes: Vec<LanePath> =
+            (0..lanes_n).map(|_| LanePath { hash: 7, cycles: 0 }).collect();
+        let stream = |lane: u64, scattered: bool| -> Vec<MemAccess> {
+            (0..positions as u64)
+                .map(|p| {
+                    let addr = if scattered {
+                        // one line per lane per position
+                        base + (p * 33 + lane) * coalesce::LINE_WORDS
+                    } else {
+                        // all lanes inside one line per position
+                        base + p * coalesce::LINE_WORDS + lane % coalesce::LINE_WORDS
+                    };
+                    MemAccess {
+                        addr,
+                        kind: AccessKind::GlobalLoad,
+                    }
+                })
+                .collect()
+        };
+        let cost = |scattered: bool| {
+            let streams: Vec<Vec<MemAccess>> =
+                (0..lanes_n as u64).map(|l| stream(l, scattered)).collect();
+            let mut m = MemSys::modeled(&dev);
+            let mut stats = MemSysStats::default();
+            let c = m.charge_warp(0, &lanes, |i| &streams[i][..], &dev, &mut stats);
+            (c, stats.transactions)
+        };
+        let (scattered, scattered_tx) = cost(true);
+        let (coalesced, coalesced_tx) = cost(false);
+        assert!(
+            scattered > coalesced,
+            "scattered {scattered} must exceed coalesced {coalesced} \
+             (lanes {lanes_n}, positions {positions}, base {base})"
+        );
+        assert!(scattered_tx > coalesced_tx);
+        assert_eq!(coalesced_tx, positions as u64, "one line per position");
+    });
+}
+
+#[test]
+fn modeled_sm_tier_prices_pools_by_banks_not_discount() {
+    // same seed, same share-tier policy: flat vs modeled runs must differ
+    // in cost (the pool pricing changed) while both validate and both
+    // drain their pools completely
+    let exec = |m: MemSysMode| {
+        let mut e = Exec::gpu_thread(2, 128).queues(3).memsys(m);
+        e.cfg.policy.sm_tier = SmTier::Share;
+        e
+    };
+    let flat = runners::run_fib(&exec(MemSysMode::Flat), 13, 2, true).unwrap().stats;
+    let modeled = runners::run_fib(&exec(MemSysMode::Modeled), 13, 2, true).unwrap().stats;
+    assert!(flat.sm_spills > 0, "share tier must pool tasks: {flat:?}");
+    assert!(modeled.sm_spills > 0);
+    assert_eq!(flat.sm_pool_hits, flat.sm_spills);
+    assert_eq!(modeled.sm_pool_hits, modeled.sm_spills);
+    assert_ne!(flat.cycles, modeled.cycles, "pool pricing must differ");
+    assert_eq!(flat.memsys.smem_bank_conflicts, 0, "flat never counts banks");
+}
+
+/// Serializes access to the GTAP_BENCH_* environment within this binary.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn with_env<R>(pairs: &[(&str, &str)], f: impl FnOnce() -> R) -> R {
+    let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for (k, v) in pairs {
+        std::env::set_var(k, v);
+    }
+    let r = f();
+    for (k, _) in pairs {
+        std::env::remove_var(k);
+    }
+    r
+}
+
+#[test]
+fn modeled_run_stats_identical_across_bench_thread_counts() {
+    // the acceptance pin: a modeled sweep through the parallel bench
+    // harness yields byte-identical RunStats under 1 vs 4 threads
+    let grids: Vec<usize> = vec![1, 2, 4, 8];
+    let sweep = || {
+        parallel_map(grids.clone(), |g| {
+            fib_stats(&Exec::gpu_thread(g, 32).memsys(MemSysMode::Modeled))
+        })
+    };
+    let serial = with_env(&[("GTAP_BENCH_THREADS", "1")], sweep);
+    let parallel = with_env(&[("GTAP_BENCH_THREADS", "4")], sweep);
+    assert_eq!(serial.len(), parallel.len());
+    for ((a, b), g) in serial.iter().zip(parallel.iter()).zip(grids.iter()) {
+        assert_eq!(a, b, "thread count changed modeled RunStats at grid {g}");
+    }
+}
+
+#[test]
+fn modeled_mode_holds_across_queue_organizations() {
+    use gtap::coordinator::SchedulerKind;
+    for kind in [
+        SchedulerKind::WorkStealing,
+        SchedulerKind::GlobalQueue,
+        SchedulerKind::SequentialChaseLev,
+    ] {
+        let e = Exec::gpu_thread(4, 32).scheduler(kind).memsys(MemSysMode::Modeled);
+        let s = fib_stats(&e);
+        assert!(s.memsys.transactions > 0, "{kind:?}");
+    }
+}

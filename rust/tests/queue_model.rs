@@ -250,6 +250,51 @@ fn sm_tier_pool_matches_vecdeque_model() {
 }
 
 #[test]
+fn sm_pool_modeled_pricing_matches_the_bank_model() {
+    // Property: under MemSysMode::Modeled every pool op's cycles equal the
+    // shared-memory bank model evaluated at the pool's monotone ring
+    // positions, and the pool's conflict counter is exactly the running
+    // sum of per-op conflicts. (Flat pricing is covered by the golden
+    // pins; this pins the modeled replacement op for op.)
+    use gtap::sim::memsys::{bank, MemSysMode};
+    Runner::new().cases(200).run("sm-pool-bank-pricing", |g| {
+        let d = DeviceSpec::h100();
+        let cap = g.usize(2, 70);
+        let mut pool = SmPool::with_mode(1, cap, MemSysMode::Modeled);
+        let mut pushed = 0u64;
+        let mut popped = 0u64;
+        let mut conflicts = 0u64;
+        let mut len = 0usize;
+        for _ in 0..g.usize(1, 60) {
+            if g.chance(0.5) {
+                let k = g.usize(1, 8);
+                let ids: Vec<TaskId> = (0..k as u32).collect();
+                if let Some(op) = pool.push(0, 0, &ids, &d) {
+                    let (cycles, c) = bank::smem_op_cycles(&d, pushed, k, cap.max(2));
+                    assert_eq!(op.cycles, cycles, "push at position {pushed}");
+                    pushed += k as u64;
+                    conflicts += c;
+                    len += k;
+                } else {
+                    assert!(len + k > cap.max(2), "refusal only on overflow");
+                }
+            } else {
+                let max = g.usize(1, 8);
+                let mut out = vec![];
+                let op = pool.pop(0, 0, max, &mut out, &d);
+                let (cycles, c) = bank::smem_op_cycles(&d, popped, op.taken, cap.max(2));
+                assert_eq!(op.cycles, cycles, "pop at position {popped}");
+                popped += op.taken as u64;
+                conflicts += c;
+                len -= op.taken;
+            }
+            assert_eq!(pool.len(0), len);
+        }
+        assert_eq!(pool.bank_conflicts(), conflicts);
+    });
+}
+
+#[test]
 fn adaptive_steal_controller_is_monotone_and_victim_bounded() {
     // Properties of the adaptive steal-amount controller: the claim stays
     // in [1, batch_max] and never exceeds the victim's visible backlog
