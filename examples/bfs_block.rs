@@ -13,8 +13,8 @@ use gtap::workloads::bfs::CsrGraph;
 
 fn main() -> gtap::Result<()> {
     let args = Args::parse();
-    let n: usize = args.get_or("n", 2000);
-    let deg: usize = args.get_or("degree", 4);
+    let n: usize = args.get_or("n", 2000)?;
+    let deg: usize = args.get_or("degree", 4)?;
 
     println!("{}", gtap::workloads::bfs::source());
     let g = CsrGraph::random(n, deg, 42);

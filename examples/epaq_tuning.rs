@@ -12,9 +12,9 @@ use gtap::util::stats::fmt_time;
 
 fn main() -> gtap::Result<()> {
     let args = Args::parse();
-    let n: i64 = args.get_or("n", 36);
-    let cutoff: i64 = args.get_or("cutoff", 10);
-    let grid: usize = args.get_or("grid", 4000);
+    let n: i64 = args.get_or("n", 36)?;
+    let cutoff: i64 = args.get_or("cutoff", 10)?;
+    let grid: usize = args.get_or("grid", 4000)?;
 
     println!("fib(n={n}) cutoff {cutoff}, {grid}x32 thread-level workers\n");
     for (label, epaq, queues) in [("1-queue", false, 1usize), ("EPAQ(3)", true, 3)] {

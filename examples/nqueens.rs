@@ -13,8 +13,8 @@ use gtap::util::stats::fmt_time;
 
 fn main() -> gtap::Result<()> {
     let args = Args::parse();
-    let n: i64 = args.get_or("n", 12);
-    let cutoff: i64 = args.get_or("cutoff", 7.min(n - 2).max(1));
+    let n: i64 = args.get_or("n", 12)?;
+    let cutoff: i64 = args.get_or("cutoff", 7.min(n - 2).max(1))?;
 
     println!("N-Queens n={n}, task cutoff depth {cutoff}");
     let gpu = runners::run_nqueens(

@@ -27,7 +27,7 @@ int fib(int n) {
 
 fn main() -> gtap::Result<()> {
     let args = Args::parse();
-    let n: i64 = args.get_or("n", 20);
+    let n: i64 = args.get_or("n", 20)?;
 
     println!("== GTaP-C source (Program 4) =={FIB}");
     let module = compiler::compile_default(FIB).map_err(|e| gtap::anyhow!("{e}"))?;

@@ -28,10 +28,10 @@ use gtap::util::stats::fmt_time;
 
 fn main() -> gtap::Result<()> {
     let args = Args::parse();
-    let depth: i64 = args.get_or("depth", 10);
-    let mem_ops: i64 = args.get_or("mem-ops", 64);
-    let compute_iters: i64 = args.get_or("compute-iters", 256);
-    let grid: usize = args.get_or("grid", 125);
+    let depth: i64 = args.get_or("depth", 10)?;
+    let mem_ops: i64 = args.get_or("mem-ops", 64)?;
+    let compute_iters: i64 = args.get_or("compute-iters", 256)?;
+    let grid: usize = args.get_or("grid", 125)?;
 
     println!(
         "Full binary tree D={depth} ({} tasks), payload: {mem_ops} loads + \

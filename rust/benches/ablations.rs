@@ -270,6 +270,24 @@ fn main() {
         .enumerate()
         .min_by(|a, b| a.1 .1.median.total_cmp(&b.1 .1.median))
         .expect("matrix is non-empty");
+    // Reconcile the promoted bundle against this run's measured best: the
+    // `recommended` block makes the check CI-visible so the
+    // `PolicyConfig::recommended` pick is either confirmed or flagged by
+    // every recorded sweep instead of drifting silently (ROADMAP:
+    // "policy-matrix perf table" follow-through).
+    let recommended = PolicyConfig::recommended();
+    let rec_median = combos
+        .iter()
+        .position(|p| *p == recommended)
+        .map(|i| matrix[i].1.median);
+    let rec_matches = combos[best.0] == recommended;
+    if !rec_matches {
+        println!(
+            "  NOTE: recommended bundle {} is not this run's best ({})",
+            recommended.label(),
+            combos[best.0].label()
+        );
+    }
     let json = format!(
         "{{\n  \"bench\": \"ablations\",\n  \"measured\": true,\n  \
          \"command\": \"cargo bench --bench ablations\",\n  \
@@ -279,6 +297,8 @@ fn main() {
          \"policy_matrix\": {{\n    \"workload\": \"fib-epaq3\",\n    \
          \"default_median_s\": {:.6e},\n    \
          \"best\": {{\"combo\": \"{}\", \"median_s\": {:.6e}}},\n    \
+         \"recommended\": {{\"combo\": \"{}\", \"median_s\": {}, \
+         \"matches_best\": {}}},\n    \
          \"combos\": [\n{}\n    ]\n  }}\n}}\n",
         sweep::runs(),
         smoke,
@@ -289,6 +309,11 @@ fn main() {
         default_median,
         combos[best.0].label(),
         best.1 .1.median,
+        recommended.label(),
+        rec_median
+            .map(|m| format!("{m:.6e}"))
+            .unwrap_or_else(|| "null".to_string()),
+        rec_matches,
         combo_json.join(",\n"),
     );
     let path = repo_root().join("BENCH_ablations.json");

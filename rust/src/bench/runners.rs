@@ -3,8 +3,8 @@
 //! return the measurement. Shared by every bench target and example.
 
 use crate::coordinator::{
-    Backoff, Granularity, GtapConfig, PayloadEngine, Placement, PolicyConfig, QueueSelect,
-    RunStats, SchedulerKind, Session, SmTier, StealAmount, VictimSelect,
+    Backoff, FaultPlan, Granularity, GtapConfig, PayloadEngine, Placement, PolicyConfig,
+    QueueSelect, RunStats, SchedulerKind, Session, SmTier, StealAmount, VictimSelect,
 };
 use crate::ir::types::Value;
 use crate::sim::profile::Profiler;
@@ -155,6 +155,14 @@ impl Exec {
     /// Memory-system cost model (`--memsys flat|modeled`).
     pub fn memsys(mut self, m: MemSysMode) -> Exec {
         self.cfg.memsys = m;
+        self
+    }
+
+    /// Fault-injection plan (`--faults`; default off). The runners still
+    /// validate results against the native reference, so a chaos run that
+    /// recovers incorrectly fails its own measurement.
+    pub fn faults(mut self, plan: FaultPlan) -> Exec {
+        self.cfg.faults = plan;
         self
     }
 }

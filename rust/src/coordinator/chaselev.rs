@@ -80,6 +80,25 @@ impl ChaseLevDeque {
         (Some(id), cycles)
     }
 
+    /// Drop the newest (bottom) entry — fault injection only. Raw removal:
+    /// no cycles charged, no contention state touched.
+    pub fn drop_newest(&mut self) -> Option<TaskId> {
+        if self.is_empty() {
+            return None;
+        }
+        self.bottom -= 1;
+        Some(self.ring[self.bottom % self.capacity])
+    }
+
+    /// Drain every entry steal-end-first into `out` — fault recovery only.
+    /// Raw, uncosted, like [`ChaseLevDeque::drop_newest`].
+    pub fn drain_into(&mut self, out: &mut Vec<TaskId>) {
+        while self.top != self.bottom {
+            out.push(self.ring[self.top % self.capacity]);
+            self.top += 1;
+        }
+    }
+
     /// Thief steal of one element: read top/bottom, CAS top.
     pub fn steal1(&mut self, now: u64, dev: &DeviceSpec) -> (Option<TaskId>, u64) {
         let mut cycles = 2 * dev.cg_load();
@@ -202,6 +221,19 @@ mod tests {
         let (_, c_not_last) = q.pop1(0, &d);
         let (_, c_last) = q.pop1(0, &d);
         assert!(c_last > c_not_last, "last-element pop pays the CAS");
+    }
+
+    #[test]
+    fn drop_newest_and_drain() {
+        let d = dev();
+        let mut q = ChaseLevDeque::new(8);
+        q.push_batch(0, &[1, 2, 3], &d).unwrap();
+        assert_eq!(q.drop_newest(), Some(3), "newest is the owner end");
+        let mut out = vec![];
+        q.drain_into(&mut out);
+        assert_eq!(out, vec![1, 2]);
+        assert!(q.is_empty());
+        assert_eq!(q.drop_newest(), None);
     }
 
     #[test]

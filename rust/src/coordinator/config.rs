@@ -13,6 +13,7 @@
 //! *organization* (work stealing / global / sequential Chase–Lev) remains
 //! the [`SchedulerKind`] ablation selector.
 
+use super::fault::FaultPlan;
 use super::policy::PolicyConfig;
 use crate::sim::memsys::MemSysMode;
 
@@ -86,6 +87,11 @@ pub struct GtapConfig {
     /// `Modeled` records per-lane access streams and prices them through
     /// the coalescing + L1/L2 + bank-conflict pipeline of `sim::memsys`.
     pub memsys: MemSysMode,
+    /// GTAP_FAULTS / `--faults`: deterministic fault-injection schedule
+    /// (worker stalls/kills, steal failures, dropped queue entries, run
+    /// deadline). The default empty plan keeps the scheduler on the
+    /// fault-free hot path — byte-identical to every golden pin.
+    pub faults: FaultPlan,
 }
 
 impl Default for GtapConfig {
@@ -105,6 +111,7 @@ impl Default for GtapConfig {
             immediate_buffer: true,
             policy: PolicyConfig::default(),
             memsys: MemSysMode::default(),
+            faults: FaultPlan::default(),
         }
     }
 }

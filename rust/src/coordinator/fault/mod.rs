@@ -1,0 +1,442 @@
+//! Deterministic fault injection for the persistent-kernel scheduler.
+//!
+//! A [`FaultPlan`] is a seeded, fully deterministic schedule of adverse
+//! events delivered at simulated-time points: transient worker stalls,
+//! permanent worker kills, forced steal failures (contention storms) and
+//! dropped queue entries — plus an optional per-run deadline. The plan
+//! lives on `GtapConfig` (`--faults <spec>` / `GTAP_FAULTS`, default
+//! `off`), and with the default empty plan the scheduler takes no fault
+//! branch at all: every golden pin stays byte-identical (the same cost-
+//! transparency contract as the policy and memsys layers).
+//!
+//! The injection contract mirrors what the hardened scheduler guarantees
+//! (see `coordinator/scheduler.rs` and ARCHITECTURE.md "Fault model &
+//! recovery"): faults only *remove or delay* work — they never execute a
+//! task twice past a state boundary — so workload results under any plan
+//! are bit-identical to the fault-free run, and the watchdog plus the
+//! recovery scan guarantee termination.
+//!
+//! Spec grammar (events separated by `;` or `,`):
+//!
+//! ```text
+//! off                      no faults (the default)
+//! stall@T:wN:C             worker N stalls for C cycles at time T
+//! kill@T:wN                worker N dies permanently at time T
+//! stealfail@T:wN:C         worker N's next C steal attempts fail at T
+//! drop@T:wN[:qQ]           drop the newest entry of worker N's queue Q at T
+//! deadline@C               abort (drain) the run at simulated cycle C
+//! rand:SEED[:N]            N (default 8) seeded pseudo-random events
+//! ```
+//!
+//! `rand:` expands at parse time through [`Prng::stream`], so the plan a
+//! spec denotes is a pure function of the string — `spelling()` renders
+//! the expanded events and round-trips through [`FaultPlan::parse`].
+
+pub mod recovery;
+pub mod watchdog;
+
+use crate::util::prng::Prng;
+
+/// Seed-space tag for `rand:` expansion (disjoint from scheduler streams).
+const RAND_STREAM_TAG: u64 = 0xFA17;
+/// Default event count for `rand:SEED`.
+const RAND_DEFAULT_EVENTS: u32 = 8;
+/// Injection times for `rand:` events are drawn from `[0, RAND_TIME_SPAN)`.
+const RAND_TIME_SPAN: u64 = 1 << 16;
+/// Worker indices in specs are taken modulo the run's worker count; parsing
+/// only bounds them enough to keep spellings short.
+const RAND_WORKER_SPAN: u64 = 64;
+
+/// What a scheduled fault does when it is delivered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Transient: the worker makes no progress for `cycles` cycles.
+    Stall { cycles: u64 },
+    /// Permanent: the worker never runs again; its owned work is reclaimed.
+    Kill,
+    /// The worker's next `count` steal attempts fail (contention storm).
+    StealFail { count: u32 },
+    /// Drop the newest entry of the worker's `queue`-th class queue.
+    Drop { queue: usize },
+}
+
+/// One scheduled fault: a kind delivered to a worker at a simulated time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Simulated cycle at (or after) which the event fires.
+    pub at: u64,
+    /// Target worker index (wrapped modulo the worker count at run time).
+    pub worker: usize,
+    pub kind: FaultKind,
+}
+
+/// A full, deterministic fault schedule plus an optional run deadline.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+    /// Abort (drain) the run once the event clock reaches this cycle.
+    pub deadline: Option<u64>,
+}
+
+impl FaultPlan {
+    /// Whether the plan asks the scheduler to do anything at all. The
+    /// fault-free fast path is gated on this being `false`.
+    pub fn is_active(&self) -> bool {
+        !self.events.is_empty() || self.deadline.is_some()
+    }
+
+    /// Parse a `--faults` / `GTAP_FAULTS` spec. Returns a human-readable
+    /// error (same shape as the other config-surface parsers).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let spec = spec.trim();
+        let mut plan = FaultPlan::default();
+        if spec.is_empty() || spec == "off" {
+            return Ok(plan);
+        }
+        for part in spec.split([';', ',']).map(str::trim).filter(|p| !p.is_empty()) {
+            if let Some(rest) = part.strip_prefix("rand:") {
+                let mut it = rest.split(':');
+                let seed = parse_num(it.next().unwrap_or(""), part, "seed")?;
+                let n = match it.next() {
+                    Some(v) => parse_num(v, part, "count")? as u32,
+                    None => RAND_DEFAULT_EVENTS,
+                };
+                if it.next().is_some() {
+                    return Err(format!("fault spec {part:?}: too many fields"));
+                }
+                plan.events.extend(seeded_events(seed, n));
+                continue;
+            }
+            let (head, rest) = part
+                .split_once('@')
+                .ok_or_else(|| format!("fault spec {part:?}: expected <kind>@<time>…"))?;
+            let mut fields = rest.split(':');
+            let at = parse_num(fields.next().unwrap_or(""), part, "time")?;
+            if head == "deadline" {
+                if fields.next().is_some() {
+                    return Err(format!("fault spec {part:?}: deadline takes no target"));
+                }
+                plan.deadline = Some(at);
+                continue;
+            }
+            let worker = match fields.next() {
+                Some(w) if w.starts_with('w') => parse_num(&w[1..], part, "worker")? as usize,
+                _ => return Err(format!("fault spec {part:?}: expected :w<worker>")),
+            };
+            let kind = match head {
+                "kill" => FaultKind::Kill,
+                "stall" => FaultKind::Stall {
+                    cycles: parse_field(&mut fields, part, "cycles")?,
+                },
+                "stealfail" => FaultKind::StealFail {
+                    count: parse_field(&mut fields, part, "count")? as u32,
+                },
+                "drop" => FaultKind::Drop {
+                    queue: match fields.next() {
+                        Some(q) if q.starts_with('q') => {
+                            parse_num(&q[1..], part, "queue")? as usize
+                        }
+                        Some(other) => {
+                            return Err(format!("fault spec {part:?}: expected :q<queue>, got {other:?}"))
+                        }
+                        None => 0,
+                    },
+                },
+                other => {
+                    return Err(format!(
+                        "unknown fault kind {other:?} (stall|kill|stealfail|drop|deadline|rand)"
+                    ))
+                }
+            };
+            if fields.next().is_some() {
+                return Err(format!("fault spec {part:?}: too many fields"));
+            }
+            plan.events.push(FaultEvent { at, worker, kind });
+        }
+        Ok(plan)
+    }
+
+    /// Render the plan back to a spec string; `FaultPlan::parse(&spelling())`
+    /// reproduces the plan exactly (`rand:` specs render expanded).
+    pub fn spelling(&self) -> String {
+        if !self.is_active() {
+            return "off".to_string();
+        }
+        let mut parts: Vec<String> = self
+            .events
+            .iter()
+            .map(|e| {
+                let (at, w) = (e.at, e.worker);
+                match e.kind {
+                    FaultKind::Stall { cycles } => format!("stall@{at}:w{w}:{cycles}"),
+                    FaultKind::Kill => format!("kill@{at}:w{w}"),
+                    FaultKind::StealFail { count } => format!("stealfail@{at}:w{w}:{count}"),
+                    FaultKind::Drop { queue } => format!("drop@{at}:w{w}:q{queue}"),
+                }
+            })
+            .collect();
+        if let Some(dl) = self.deadline {
+            parts.push(format!("deadline@{dl}"));
+        }
+        parts.join(";")
+    }
+
+    /// Read `GTAP_FAULTS` from the environment (unset means `off`).
+    pub fn from_env() -> Result<FaultPlan, String> {
+        match std::env::var("GTAP_FAULTS") {
+            Ok(v) => FaultPlan::parse(&v),
+            Err(_) => Ok(FaultPlan::default()),
+        }
+    }
+
+    /// A pure-random plan: `n` events drawn from the `rand:` stream of
+    /// `seed` (what `rand:SEED:N` expands to).
+    pub fn seeded(seed: u64, n: u32) -> FaultPlan {
+        FaultPlan {
+            events: seeded_events(seed, n),
+            deadline: None,
+        }
+    }
+}
+
+fn parse_num(s: &str, part: &str, what: &str) -> Result<u64, String> {
+    s.parse::<u64>()
+        .map_err(|_| format!("fault spec {part:?}: invalid {what} {s:?}"))
+}
+
+fn parse_field<'a>(
+    fields: &mut impl Iterator<Item = &'a str>,
+    part: &str,
+    what: &str,
+) -> Result<u64, String> {
+    match fields.next() {
+        Some(v) => parse_num(v, part, what),
+        None => Err(format!("fault spec {part:?}: missing {what}")),
+    }
+}
+
+/// Deterministic expansion of `rand:seed:n`. Kills are rationed (at most
+/// one per four events) so random plans keep enough live workers to make
+/// progress; the remaining mass splits over stalls, steal failures and
+/// drops.
+fn seeded_events(seed: u64, n: u32) -> Vec<FaultEvent> {
+    let mut rng = Prng::stream(RAND_STREAM_TAG, seed);
+    let mut events = Vec::with_capacity(n as usize);
+    let mut kills = 0u32;
+    for i in 0..n {
+        let at = rng.below(RAND_TIME_SPAN);
+        let worker = rng.below(RAND_WORKER_SPAN) as usize;
+        let kind = match rng.below(8) {
+            0 | 1 => FaultKind::Stall {
+                cycles: 1 + rng.below(1 << 12),
+            },
+            2 | 3 => FaultKind::StealFail {
+                count: 1 + rng.below(16) as u32,
+            },
+            4 | 5 => FaultKind::Drop {
+                queue: rng.below(4) as usize,
+            },
+            _ if kills * 4 < i + 1 => {
+                kills += 1;
+                FaultKind::Kill
+            }
+            _ => FaultKind::Stall {
+                cycles: 1 + rng.below(1 << 12),
+            },
+        };
+        events.push(FaultEvent { at, worker, kind });
+    }
+    events
+}
+
+/// Per-run delivery state built from a plan: events bucketed per worker
+/// (sorted by time), plus the live/dead and steal-suppression bookkeeping
+/// the scheduler consults.
+#[derive(Debug)]
+pub struct FaultState {
+    /// Per-worker pending events, ascending by `at` (stable for ties —
+    /// spec order breaks them, keeping delivery deterministic).
+    pending: Vec<Vec<FaultEvent>>,
+    cursor: Vec<usize>,
+    /// Workers killed so far; a dead worker's clock is parked at
+    /// `u64::MAX` and it is never selected again.
+    pub dead: Vec<bool>,
+    /// Outstanding forced-steal-failure counts per worker.
+    pub steal_suppress: Vec<u32>,
+    /// Workers not (yet) killed.
+    pub live_workers: usize,
+}
+
+impl FaultState {
+    /// Bucket a plan's events for `n_workers` workers. Spec worker indices
+    /// wrap modulo the worker count so one spec applies to any topology.
+    pub fn new(plan: &FaultPlan, n_workers: usize) -> FaultState {
+        let mut pending = vec![Vec::new(); n_workers];
+        for e in &plan.events {
+            pending[e.worker % n_workers].push(FaultEvent {
+                worker: e.worker % n_workers,
+                ..*e
+            });
+        }
+        for p in &mut pending {
+            p.sort_by_key(|e| e.at);
+        }
+        FaultState {
+            pending,
+            cursor: vec![0; n_workers],
+            dead: vec![false; n_workers],
+            steal_suppress: vec![0; n_workers],
+            live_workers: n_workers,
+        }
+    }
+
+    /// Pop the next event for worker `w` that is due at or before `now`.
+    pub fn next_due(&mut self, w: usize, now: u64) -> Option<FaultEvent> {
+        let c = self.cursor[w];
+        match self.pending[w].get(c) {
+            Some(e) if e.at <= now => {
+                self.cursor[w] = c + 1;
+                Some(*e)
+            }
+            _ => None,
+        }
+    }
+
+    /// Consume one unit of steal suppression for worker `w`; `true` means
+    /// the current steal attempt must be reported as failed.
+    pub fn suppress_steal(&mut self, w: usize) -> bool {
+        if self.steal_suppress[w] > 0 {
+            self.steal_suppress[w] -= 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_off() {
+        let p = FaultPlan::default();
+        assert!(!p.is_active());
+        assert_eq!(p.spelling(), "off");
+        assert_eq!(FaultPlan::parse("off").unwrap(), p);
+        assert_eq!(FaultPlan::parse("").unwrap(), p);
+    }
+
+    #[test]
+    fn parses_every_kind() {
+        let p = FaultPlan::parse(
+            "stall@100:w2:512; kill@200:w1, stealfail@300:w0:4; drop@400:w3:q1; drop@500:w0; deadline@9000",
+        )
+        .unwrap();
+        assert_eq!(p.deadline, Some(9000));
+        assert_eq!(
+            p.events,
+            vec![
+                FaultEvent { at: 100, worker: 2, kind: FaultKind::Stall { cycles: 512 } },
+                FaultEvent { at: 200, worker: 1, kind: FaultKind::Kill },
+                FaultEvent { at: 300, worker: 0, kind: FaultKind::StealFail { count: 4 } },
+                FaultEvent { at: 400, worker: 3, kind: FaultKind::Drop { queue: 1 } },
+                FaultEvent { at: 500, worker: 0, kind: FaultKind::Drop { queue: 0 } },
+            ]
+        );
+    }
+
+    #[test]
+    fn spelling_round_trips() {
+        for spec in [
+            "stall@100:w2:512;kill@200:w1;stealfail@300:w0:4;drop@400:w3:q1;deadline@9000",
+            "rand:42",
+            "rand:7:16",
+            "rand:7:3;deadline@50000",
+        ] {
+            let p = FaultPlan::parse(spec).unwrap();
+            let round = FaultPlan::parse(&p.spelling()).unwrap();
+            assert_eq!(p, round, "spec {spec:?} spelling {:?}", p.spelling());
+        }
+    }
+
+    #[test]
+    fn rand_is_deterministic_and_rations_kills() {
+        let a = FaultPlan::seeded(42, 32);
+        let b = FaultPlan::parse("rand:42:32").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.events.len(), 32);
+        let kills = a
+            .events
+            .iter()
+            .filter(|e| e.kind == FaultKind::Kill)
+            .count();
+        assert!(kills <= 8, "kills={kills}");
+        assert_ne!(FaultPlan::seeded(1, 8), FaultPlan::seeded(2, 8));
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for bad in [
+            "explode@10:w0",
+            "stall@abc:w0:5",
+            "stall@10:w0",
+            "kill@10",
+            "kill@10:x3",
+            "drop@10:w0:z9",
+            "stall@10:w0:5:6",
+            "deadline@10:w0",
+            "rand:notanumber",
+        ] {
+            let e = FaultPlan::parse(bad).expect_err(bad);
+            assert!(!e.is_empty());
+        }
+    }
+
+    #[test]
+    fn state_delivers_in_time_order_per_worker() {
+        let p = FaultPlan::parse("stall@50:w0:9;kill@10:w0;stealfail@30:w1:2").unwrap();
+        let mut st = FaultState::new(&p, 2);
+        assert_eq!(st.next_due(0, 5), None);
+        assert_eq!(
+            st.next_due(0, 20).map(|e| e.kind),
+            Some(FaultKind::Kill)
+        );
+        assert_eq!(st.next_due(0, 20), None, "stall not due yet");
+        assert_eq!(
+            st.next_due(0, 60).map(|e| e.kind),
+            Some(FaultKind::Stall { cycles: 9 })
+        );
+        assert_eq!(st.next_due(0, u64::MAX), None, "exhausted");
+        assert_eq!(
+            st.next_due(1, 30).map(|e| e.kind),
+            Some(FaultKind::StealFail { count: 2 })
+        );
+    }
+
+    #[test]
+    fn state_wraps_worker_indices() {
+        let p = FaultPlan::parse("kill@10:w5").unwrap();
+        let mut st = FaultState::new(&p, 4);
+        let e = st.next_due(1, 10).unwrap();
+        assert_eq!(e.worker, 1, "w5 wraps to w1 on 4 workers");
+    }
+
+    #[test]
+    fn suppression_counts_down() {
+        let p = FaultPlan::default();
+        let mut st = FaultState::new(&p, 1);
+        st.steal_suppress[0] = 2;
+        assert!(st.suppress_steal(0));
+        assert!(st.suppress_steal(0));
+        assert!(!st.suppress_steal(0));
+    }
+
+    #[test]
+    fn deadline_only_plan_is_active() {
+        let p = FaultPlan::parse("deadline@100000").unwrap();
+        assert!(p.is_active());
+        assert!(p.events.is_empty());
+        assert_eq!(p.spelling(), "deadline@100000");
+    }
+}

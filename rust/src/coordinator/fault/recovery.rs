@@ -1,0 +1,66 @@
+//! Recovery scan: find the tasks a lost worker took down with it.
+//!
+//! When the watchdog observes quiescence with live tasks remaining, every
+//! runnable continuation has been lost (killed with a worker's owned work
+//! or dropped from a queue). Because effects apply atomically within a
+//! worker iteration, the lost set is exactly the live records that are
+//! neither finished nor suspended waiting on children:
+//!
+//! * `waiting` tasks are healthy — their `pending_children > 0` invariant
+//!   holds and a child's finish will re-enqueue them;
+//! * `done` records are retained only so the parent can read the result
+//!   field — they need no re-execution;
+//! * everything else alive is a task whose queue entry vanished. Its
+//!   record still holds the resumption `state` set at the last state-entry
+//!   boundary (PrepareJoin), so re-enqueueing the task ID re-executes it
+//!   from exactly there — never re-running a completed segment, which is
+//!   what keeps results bit-identical and joins firing exactly once.
+
+use crate::coordinator::records::{RecordPool, TaskId};
+
+/// Tasks that must be re-dispatched to make progress again: live, not
+/// done, not suspended on a join. Sorted ascending by ID (scan order) so
+/// recovery is deterministic.
+pub fn lost_tasks(records: &RecordPool) -> Vec<TaskId> {
+    let mut lost = Vec::new();
+    records.for_each_alive(|id, m| {
+        if !m.done && !m.waiting {
+            lost.push(id);
+        }
+    });
+    lost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::records::NO_TASK;
+
+    #[test]
+    fn waiting_and_done_records_are_not_lost() {
+        let mut p = RecordPool::new(8, 1, 4);
+        let parent = p.alloc(0, NO_TASK).unwrap();
+        let child = p.alloc(0, parent).unwrap();
+        let orphan = p.alloc(0, NO_TASK).unwrap();
+        p.push_child(parent, child).unwrap();
+        // parent suspended at a join; child finished, record retained
+        p.meta_mut(parent).waiting = true;
+        p.meta_mut(child).done = true;
+        assert_eq!(lost_tasks(&p), vec![orphan]);
+    }
+
+    #[test]
+    fn healthy_quiescent_pool_reports_nothing() {
+        let p = RecordPool::new(4, 1, 0);
+        assert!(lost_tasks(&p).is_empty());
+    }
+
+    #[test]
+    fn scan_order_is_deterministic() {
+        let mut p = RecordPool::new(8, 1, 0);
+        let ids: Vec<_> = (0..4).map(|_| p.alloc(0, NO_TASK).unwrap()).collect();
+        let mut sorted = ids.clone();
+        sorted.sort();
+        assert_eq!(lost_tasks(&p), sorted);
+    }
+}

@@ -1,0 +1,71 @@
+//! Quiescence watchdog for the persistent-kernel event loop.
+//!
+//! Between discrete events nothing is in flight: a worker iteration
+//! acquires, executes and applies its effects atomically before the clock
+//! moves. So at any event boundary, `queued_total() == 0` with live tasks
+//! remaining is a *genuine* lost-continuation deadlock — no queue, pool or
+//! immediate buffer holds the continuation that would finish the run — and
+//! never a transient state. That exactness is what lets the watchdog stay
+//! armed on every run (faults on or off) with zero false positives and
+//! zero simulated-cycle cost: it is a host-side check, off the priced hot
+//! path (see ARCHITECTURE.md "Fault model & recovery").
+//!
+//! The check itself is throttled by simulated time so the fault-free loop
+//! pays at most one extra comparison per event.
+
+/// Simulated cycles between watchdog inspections. The predicate is exact,
+/// so pacing only bounds host-side work; any value terminates.
+pub const WATCHDOG_INTERVAL: u64 = 1 << 14;
+
+/// Simulated-time-paced quiescence checker.
+#[derive(Clone, Copy, Debug)]
+pub struct Watchdog {
+    next: u64,
+}
+
+impl Watchdog {
+    /// Arm the watchdog at run start; first inspection is one interval in.
+    pub fn armed(t0: u64) -> Watchdog {
+        Watchdog {
+            next: t0.saturating_add(WATCHDOG_INTERVAL),
+        }
+    }
+
+    /// Whether an inspection is due at `now`; if so, re-arms for the next
+    /// interval. The caller then evaluates the quiescence predicate.
+    pub fn due(&mut self, now: u64) -> bool {
+        if now < self.next {
+            return false;
+        }
+        self.next = now.saturating_add(WATCHDOG_INTERVAL);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_check_is_one_interval_in() {
+        let mut w = Watchdog::armed(0);
+        assert!(!w.due(0));
+        assert!(!w.due(WATCHDOG_INTERVAL - 1));
+        assert!(w.due(WATCHDOG_INTERVAL));
+    }
+
+    #[test]
+    fn rearms_after_firing() {
+        let mut w = Watchdog::armed(100);
+        assert!(w.due(100 + WATCHDOG_INTERVAL));
+        assert!(!w.due(100 + WATCHDOG_INTERVAL + 1));
+        assert!(w.due(100 + 3 * WATCHDOG_INTERVAL));
+    }
+
+    #[test]
+    fn survives_clock_saturation() {
+        let mut w = Watchdog::armed(u64::MAX - 1);
+        assert!(w.due(u64::MAX));
+        assert!(w.due(u64::MAX), "saturated arm time stays due");
+    }
+}

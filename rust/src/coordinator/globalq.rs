@@ -62,6 +62,25 @@ impl GlobalQueue {
         })
     }
 
+    /// Drop the newest (tail) entry — fault injection only. Raw removal:
+    /// no cycles charged, no contention state touched.
+    pub fn drop_newest(&mut self) -> Option<TaskId> {
+        if self.is_empty() {
+            return None;
+        }
+        self.tail -= 1;
+        Some(self.ring[self.tail % self.capacity])
+    }
+
+    /// Drain every entry head-first into `out` — fault recovery only.
+    /// Raw, uncosted, like [`GlobalQueue::drop_newest`].
+    pub fn drain_into(&mut self, out: &mut Vec<TaskId>) {
+        while self.head != self.tail {
+            out.push(self.ring[self.head % self.capacity]);
+            self.head += 1;
+        }
+    }
+
     /// Pop a batch from the head (FIFO): CAS-claim on `head`.
     pub fn pop_batch(
         &mut self,
@@ -122,6 +141,19 @@ mod tests {
             costs.last().unwrap() > &(costs[0] + 8 * d.atomic_serialize),
             "{costs:?}"
         );
+    }
+
+    #[test]
+    fn drop_newest_and_drain() {
+        let d = dev();
+        let mut q = GlobalQueue::new(8);
+        q.push_batch(0, &[1, 2, 3], &d).unwrap();
+        assert_eq!(q.drop_newest(), Some(3), "newest is the latest push");
+        let mut out = vec![];
+        q.drain_into(&mut out);
+        assert_eq!(out, vec![1, 2]);
+        assert!(q.is_empty());
+        assert_eq!(q.drop_newest(), None);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 
 use super::records::{RecordPool, TaskId, NO_TASK};
 use crate::sim::config::DeviceSpec;
+use crate::util::error::{Error, ErrorKind, Result};
 
 /// Effect of finishing a task, to be applied by the scheduler.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -50,12 +51,17 @@ pub fn prepare_join(
 ///
 /// `assume_no_taskwait` (Table 1) skips join bookkeeping entirely. Returns
 /// the effect plus the cycles charged to the finishing worker.
+///
+/// Join-counter arithmetic is checked: a decrement of an already-zero
+/// pending counter (a double finish — the bug class fault recovery must
+/// never introduce) surfaces as an [`ErrorKind::JoinCounter`] error
+/// instead of wrapping and corrupting termination detection.
 pub fn finish_task(
     records: &mut RecordPool,
     task: TaskId,
     assume_no_taskwait: bool,
     dev: &DeviceSpec,
-) -> (FinishEffect, u64) {
+) -> Result<(FinishEffect, u64)> {
     let parent = records.meta(task).parent;
     // Orphan or release any children this task never joined (children of a
     // parent that finishes without a final taskwait keep running — OpenMP
@@ -83,7 +89,7 @@ pub fn finish_task(
     if assume_no_taskwait || parent == NO_TASK {
         records.free(task);
         cycles += dev.atomic; // live-task counter decrement
-        return (FinishEffect::None, cycles);
+        return Ok((FinishEffect::None, cycles));
     }
 
     // Keep the record: the parent reads the result field at re-entry.
@@ -91,15 +97,27 @@ pub fn finish_task(
     // Atomic decrement of the parent's pending counter (L2).
     cycles += dev.atomic;
     let pm = records.meta_mut(parent);
-    debug_assert!(pm.alive, "finish with dead parent");
-    debug_assert!(pm.pending_children > 0);
-    pm.pending_children -= 1;
+    if !pm.alive {
+        return Err(Error::typed(
+            ErrorKind::JoinCounter,
+            format!("task {task} finished into dead parent {parent}"),
+        ));
+    }
+    pm.pending_children = pm.pending_children.checked_sub(1).ok_or_else(|| {
+        Error::typed(
+            ErrorKind::JoinCounter,
+            format!(
+                "join-counter underflow: task {task} decremented parent {parent} \
+                 with zero pending children (double finish)"
+            ),
+        )
+    })?;
     if pm.pending_children == 0 && pm.waiting {
         pm.waiting = false;
         let queue = pm.join_queue;
-        (FinishEffect::ResumeParent { parent, queue }, cycles)
+        Ok((FinishEffect::ResumeParent { parent, queue }, cycles))
     } else {
-        (FinishEffect::None, cycles)
+        Ok((FinishEffect::None, cycles))
     }
 }
 
@@ -139,9 +157,9 @@ mod tests {
         assert!(r.meta(parent).waiting);
         assert_eq!(r.meta(parent).state, 1);
 
-        let (e1, _) = finish_task(&mut r, c1, false, &d);
+        let (e1, _) = finish_task(&mut r, c1, false, &d).unwrap();
         assert_eq!(e1, FinishEffect::None);
-        let (e2, _) = finish_task(&mut r, c2, false, &d);
+        let (e2, _) = finish_task(&mut r, c2, false, &d).unwrap();
         assert_eq!(
             e2,
             FinishEffect::ResumeParent { parent, queue: 2 },
@@ -172,7 +190,7 @@ mod tests {
         let parent = r.alloc(0, NO_TASK).unwrap();
         let c = r.alloc(0, parent).unwrap();
         r.push_child(parent, c).unwrap();
-        let (e, _) = finish_task(&mut r, c, false, &d);
+        let (e, _) = finish_task(&mut r, c, false, &d).unwrap();
         assert_eq!(e, FinishEffect::None, "parent not waiting yet");
         let (now, _) = prepare_join(&mut r, parent, 1, 0, &d);
         assert!(now, "join already satisfied at suspension");
@@ -182,7 +200,7 @@ mod tests {
     fn root_finish_frees_record() {
         let (mut r, d) = setup();
         let t = r.alloc(0, NO_TASK).unwrap();
-        let (e, _) = finish_task(&mut r, t, false, &d);
+        let (e, _) = finish_task(&mut r, t, false, &d).unwrap();
         assert_eq!(e, FinishEffect::None);
         assert_eq!(r.live(), 0);
     }
@@ -193,7 +211,7 @@ mod tests {
         let parent = r.alloc(0, NO_TASK).unwrap();
         let c = r.alloc(0, parent).unwrap();
         // note: no push_child in this mode
-        let (e, _) = finish_task(&mut r, c, true, &d);
+        let (e, _) = finish_task(&mut r, c, true, &d).unwrap();
         assert_eq!(e, FinishEffect::None);
         assert_eq!(r.live(), 1, "child freed, parent alive");
         assert!(r.meta(parent).alive);
@@ -206,13 +224,13 @@ mod tests {
         let parent = r.alloc(0, NO_TASK).unwrap();
         let c = r.alloc(0, parent).unwrap();
         r.push_child(parent, c).unwrap();
-        let (e, _) = finish_task(&mut r, parent, false, &d);
+        let (e, _) = finish_task(&mut r, parent, false, &d).unwrap();
         assert_eq!(e, FinishEffect::None);
         assert!(!r.meta(parent).alive);
         assert!(r.meta(c).alive, "running child survives");
         assert_eq!(r.meta(c).parent, NO_TASK, "child orphaned");
         // orphan finishing now frees directly
-        let (e, _) = finish_task(&mut r, c, false, &d);
+        let (e, _) = finish_task(&mut r, c, false, &d).unwrap();
         assert_eq!(e, FinishEffect::None);
         assert_eq!(r.live(), 0);
     }
@@ -223,9 +241,30 @@ mod tests {
         let parent = r.alloc(0, NO_TASK).unwrap();
         let c = r.alloc(0, parent).unwrap();
         r.push_child(parent, c).unwrap();
-        finish_task(&mut r, c, false, &d); // child done, retained
+        finish_task(&mut r, c, false, &d).unwrap(); // child done, retained
         assert!(r.meta(c).alive);
-        finish_task(&mut r, parent, false, &d); // parent finishes without join
+        finish_task(&mut r, parent, false, &d).unwrap(); // parent finishes without join
         assert_eq!(r.live(), 0, "both records released");
+    }
+
+    #[test]
+    fn double_decrement_is_caught_not_wrapped() {
+        // Regression for the checked join arithmetic: finishing the same
+        // child twice must surface a typed JoinCounter error, not wrap the
+        // u16 counter to 65535 and hang termination detection.
+        let (mut r, d) = setup();
+        let parent = r.alloc(0, NO_TASK).unwrap();
+        let c = r.alloc(0, parent).unwrap();
+        r.push_child(parent, c).unwrap();
+        finish_task(&mut r, c, false, &d).unwrap();
+        assert_eq!(r.meta(parent).pending_children, 0);
+        let err = finish_task(&mut r, c, false, &d).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::JoinCounter);
+        assert!(err.to_string().contains("underflow"), "{err}");
+        assert_eq!(
+            r.meta(parent).pending_children,
+            0,
+            "counter untouched by the failed decrement"
+        );
     }
 }

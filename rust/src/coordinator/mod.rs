@@ -18,6 +18,10 @@
 //!   backoff, per-SM tier) bundled in `PolicyConfig`.
 //! * [`clock`] — the indexed worker-clock heap the discrete-event loop
 //!   advances in place (one sift per iteration, no allocation).
+//! * [`fault`] — deterministic fault injection (`FaultPlan`, `--faults` /
+//!   `GTAP_FAULTS`): seeded worker stalls/kills, steal failures, dropped
+//!   queue entries and run deadlines, plus the quiescence watchdog and
+//!   the recovery scan the hardened scheduler uses to survive them.
 //! * [`join`] — join counters, continuation re-enqueue, child-result
 //!   plumbing (§4.2).
 //! * [`scheduler`] — the persistent-kernel loops for thread-level and
@@ -34,6 +38,7 @@
 pub mod chaselev;
 pub mod clock;
 pub mod config;
+pub mod fault;
 pub mod globalq;
 pub mod join;
 pub mod policy;
@@ -45,6 +50,7 @@ pub mod scheduler_ref;
 pub mod session;
 
 pub use config::{Granularity, GtapConfig, SchedulerKind};
+pub use fault::{FaultEvent, FaultKind, FaultPlan};
 pub use policy::{
     Backoff, Placement, PolicyConfig, QueueSelect, QueueSet, SmTier, StealAmount, VictimSelect,
 };

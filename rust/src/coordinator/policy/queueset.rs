@@ -200,6 +200,61 @@ impl QueueSet {
             QueueSet::SeqChaseLev { queues, .. } => queues.iter().map(|q| q.len()).sum(),
         }
     }
+
+    /// Drop the newest entry of `worker`'s queue `qidx` — fault injection
+    /// only. Raw and uncosted; the global organization ignores `worker`
+    /// and drops from the one shared queue. `None` when already empty.
+    pub fn drop_newest(&mut self, worker: usize, qidx: usize) -> Option<TaskId> {
+        match self {
+            QueueSet::WorkStealing { queues, num_queues } => {
+                let i = slot(worker, qidx, *num_queues, queues.len());
+                queues[i].drop_newest()
+            }
+            QueueSet::Global(q) => q.drop_newest(),
+            QueueSet::SeqChaseLev { queues, num_queues } => {
+                let i = slot(worker, qidx, *num_queues, queues.len());
+                queues[i].drop_newest()
+            }
+        }
+    }
+
+    /// Drain every entry of `worker`'s queue `qidx` into `out` — fault
+    /// recovery (worker-kill reclamation) only. Raw and uncosted. The
+    /// global organization is a deliberate no-op: the shared queue has no
+    /// owner, so a dead worker strands nothing there and survivors keep
+    /// popping it.
+    pub fn drain_worker(&mut self, worker: usize, qidx: usize, out: &mut Vec<TaskId>) {
+        match self {
+            QueueSet::WorkStealing { queues, num_queues } => {
+                let i = slot(worker, qidx, *num_queues, queues.len());
+                queues[i].drain_into(out);
+            }
+            QueueSet::Global(_) => {}
+            QueueSet::SeqChaseLev { queues, num_queues } => {
+                let i = slot(worker, qidx, *num_queues, queues.len());
+                queues[i].drain_into(out);
+            }
+        }
+    }
+
+    /// Drain every queue of every worker into `out` — the
+    /// `Scheduler::drain` abort path. Raw and uncosted; includes the
+    /// global organization's shared queue.
+    pub fn drain_all(&mut self, out: &mut Vec<TaskId>) {
+        match self {
+            QueueSet::WorkStealing { queues, .. } => {
+                for q in queues {
+                    q.drain_into(out);
+                }
+            }
+            QueueSet::Global(q) => q.drain_into(out),
+            QueueSet::SeqChaseLev { queues, .. } => {
+                for q in queues {
+                    q.drain_into(out);
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -301,5 +356,50 @@ mod tests {
     fn out_of_range_queue_index_asserts() {
         let qs = QueueSet::for_config(&cfg(SchedulerKind::WorkStealing, 2));
         let _ = qs.len_of(0, 5);
+    }
+
+    #[test]
+    fn drop_newest_targets_one_worker_queue() {
+        let d = DeviceSpec::h100();
+        let mut qs = QueueSet::for_config(&cfg(SchedulerKind::WorkStealing, 2));
+        qs.push(0, 1, 0, &[10, 11], &d).unwrap();
+        qs.push(1, 1, 0, &[20], &d).unwrap();
+        assert_eq!(qs.drop_newest(0, 1), Some(11));
+        assert_eq!(qs.len_of(0, 1), 1, "only the targeted queue shrinks");
+        assert_eq!(qs.len_of(1, 1), 1);
+        assert_eq!(qs.drop_newest(0, 0), None, "empty class is a no-op");
+    }
+
+    #[test]
+    fn drain_worker_is_a_noop_for_global() {
+        let d = DeviceSpec::h100();
+        let mut qs = QueueSet::for_config(&cfg(SchedulerKind::GlobalQueue, 1));
+        qs.push(0, 0, 0, &[1, 2], &d).unwrap();
+        let mut out = vec![];
+        qs.drain_worker(0, 0, &mut out);
+        assert!(out.is_empty(), "shared queue has no owner to reclaim from");
+        assert_eq!(qs.total_len(), 2, "survivors still pop the shared queue");
+        qs.drain_all(&mut out);
+        assert_eq!(out, vec![1, 2], "drain_all empties even the shared queue");
+        assert_eq!(qs.total_len(), 0);
+    }
+
+    #[test]
+    fn drain_worker_and_drain_all_empty_owned_deques() {
+        let d = DeviceSpec::h100();
+        for kind in [SchedulerKind::WorkStealing, SchedulerKind::SequentialChaseLev] {
+            let mut qs = QueueSet::for_config(&cfg(kind, 2));
+            qs.push(0, 0, 0, &[1, 2], &d).unwrap();
+            qs.push(0, 1, 0, &[3], &d).unwrap();
+            qs.push(1, 0, 0, &[4], &d).unwrap();
+            let mut out = vec![];
+            qs.drain_worker(0, 0, &mut out);
+            assert_eq!(out, vec![1, 2]);
+            assert_eq!(qs.len_of(0, 1), 1, "other class untouched");
+            qs.drain_all(&mut out);
+            assert_eq!(qs.total_len(), 0);
+            out.sort_unstable();
+            assert_eq!(out, vec![1, 2, 3, 4], "every task reclaimed exactly once");
+        }
     }
 }

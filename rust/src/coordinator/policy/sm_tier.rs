@@ -257,6 +257,24 @@ impl SmPool {
     pub fn total_len(&self) -> usize {
         self.pools.iter().map(|p| p.len()).sum()
     }
+
+    /// Drain `sm`'s pool head-first into `out` — fault recovery only
+    /// (reclaiming a pool whose SM lost its last live worker). Raw and
+    /// uncosted; ring positions are not advanced (recovery is host-side
+    /// intervention, not simulated traffic).
+    pub fn drain_sm(&mut self, sm: usize, out: &mut Vec<TaskId>) {
+        if self.enabled() {
+            self.pools[sm].drain_into(out);
+        }
+    }
+
+    /// Drain every pool into `out` — the `Scheduler::drain` abort path.
+    /// Raw and uncosted, like [`SmPool::drain_sm`].
+    pub fn drain_all(&mut self, out: &mut Vec<TaskId>) {
+        for p in &mut self.pools {
+            p.drain_into(out);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -358,6 +376,26 @@ mod tests {
             "wrapping batch must conflict: {op:?}"
         );
         assert!(op.cycles > d.smem_lat);
+    }
+
+    #[test]
+    fn drain_sm_and_drain_all_reclaim_pooled_tasks() {
+        let d = DeviceSpec::h100();
+        let mut p = SmPool::new(2, 4);
+        p.push(0, 0, &[1, 2], &d).unwrap();
+        p.push(1, 0, &[3], &d).unwrap();
+        let mut out = vec![];
+        p.drain_sm(0, &mut out);
+        assert_eq!(out, vec![1, 2], "head-first, only the target SM");
+        assert_eq!(p.total_len(), 1);
+        p.drain_all(&mut out);
+        assert_eq!(out, vec![1, 2, 3]);
+        assert_eq!(p.total_len(), 0);
+        // the disabled pool set tolerates both calls
+        let mut off = SmPool::disabled();
+        off.drain_sm(0, &mut out);
+        off.drain_all(&mut out);
+        assert_eq!(out.len(), 3);
     }
 
     #[test]

@@ -143,6 +143,27 @@ impl TaskQueue {
         }
     }
 
+    /// Drop the newest (tail) entry — fault injection only. Raw removal:
+    /// no cycles charged, no contention state touched, so an inactive
+    /// fault plane costs nothing.
+    pub fn drop_newest(&mut self) -> Option<TaskId> {
+        if self.is_empty() {
+            return None;
+        }
+        self.tail -= 1;
+        Some(self.ring[self.tail % self.capacity])
+    }
+
+    /// Drain every entry head-first into `out` — fault recovery only
+    /// (reclaiming a killed worker's deque). Raw, uncosted, like
+    /// [`TaskQueue::drop_newest`].
+    pub fn drain_into(&mut self, out: &mut Vec<TaskId>) {
+        while self.head != self.tail {
+            out.push(self.ring[self.head % self.capacity]);
+            self.head += 1;
+        }
+    }
+
     /// Thief StealBatch: lock, CAS-claim from the head, gather, unlock.
     pub fn steal_batch(
         &mut self,
@@ -233,6 +254,30 @@ mod tests {
             q.pop_batch(0, 2, &mut out, &d);
             assert_eq!(out, vec![round + 100, round]);
         }
+    }
+
+    #[test]
+    fn drop_newest_removes_the_would_be_next_pop() {
+        let d = dev();
+        let mut q = TaskQueue::new(8);
+        q.push_batch(0, &[1, 2, 3], &d).unwrap();
+        assert_eq!(q.drop_newest(), Some(3));
+        assert_eq!(q.len(), 2);
+        let mut out = vec![];
+        q.pop_batch(0, 8, &mut out, &d);
+        assert_eq!(out, vec![2, 1]);
+        assert_eq!(q.drop_newest(), None, "empty queue drops nothing");
+    }
+
+    #[test]
+    fn drain_into_empties_head_first() {
+        let d = dev();
+        let mut q = TaskQueue::new(8);
+        q.push_batch(0, &[4, 5, 6], &d).unwrap();
+        let mut out = vec![];
+        q.drain_into(&mut out);
+        assert_eq!(out, vec![4, 5, 6]);
+        assert!(q.is_empty());
     }
 
     #[test]

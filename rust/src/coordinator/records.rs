@@ -181,9 +181,21 @@ impl RecordPool {
         }
         self.children[parent as usize * self.child_stride + slot as usize] = child;
         let m = &mut self.meta[parent as usize];
-        m.num_children += 1;
-        m.pending_children += 1;
+        // checked: a corrupted counter must surface as the capacity error,
+        // not wrap and silently break join accounting
+        m.num_children = m.num_children.checked_add(1)?;
+        m.pending_children = m.pending_children.checked_add(1)?;
         Some(slot)
+    }
+
+    /// Visit every live record (recovery scans after a worker loss — cold
+    /// path only, never on the fault-free hot path).
+    pub fn for_each_alive<F: FnMut(TaskId, &TaskMeta)>(&self, mut f: F) {
+        for (id, m) in self.meta.iter().enumerate() {
+            if m.alive {
+                f(id as TaskId, m);
+            }
+        }
     }
 
     /// Child task ID at `slot` of `parent` (valid until the next join epoch).
@@ -287,6 +299,17 @@ mod tests {
         assert_eq!(fresh_root, grandchild);
         assert_eq!(p.meta(fresh_root).depth, 0);
         assert_eq!(p.meta(fresh_root).priority, 0);
+    }
+
+    #[test]
+    fn for_each_alive_visits_live_records_only() {
+        let mut p = RecordPool::new(4, 1, 0);
+        let a = p.alloc(7, NO_TASK).unwrap();
+        let b = p.alloc(8, NO_TASK).unwrap();
+        p.free(a);
+        let mut seen = Vec::new();
+        p.for_each_alive(|id, m| seen.push((id, m.func)));
+        assert_eq!(seen, vec![(b, 8)]);
     }
 
     #[test]

@@ -56,6 +56,9 @@
 
 use super::clock::WorkerClock;
 use super::config::{Granularity, GtapConfig};
+use super::fault::recovery;
+use super::fault::watchdog::Watchdog;
+use super::fault::{FaultKind, FaultState};
 use super::join::{self, FinishEffect};
 use super::policy::{PolicyConfig, QueueSet, SmPool, STEAL_TRIES};
 use super::records::{RecordPool, TaskId, NO_TASK};
@@ -118,6 +121,24 @@ pub struct RunStats {
     /// Tasks acquired *from* per-SM tier pools. Every pooled task is
     /// eventually drained, so at quiescence this equals `sm_spills`.
     pub sm_pool_hits: u64,
+    /// Fault events actually delivered (`--faults`): stalls, kills, forced
+    /// steal failures, and drops that removed a queue entry. Zero with
+    /// faults off — the golden-pin invariant, like `memsys`.
+    pub faults_injected: u64,
+    /// Workers permanently killed by the fault plane.
+    pub workers_lost: u64,
+    /// Tasks re-dispatched by recovery: work reclaimed from a killed
+    /// worker's owned queues/buffers plus lost tasks the watchdog
+    /// re-enqueued. Each re-execution resumes from the last state-entry
+    /// boundary, so results stay bit-identical to the fault-free run.
+    pub tasks_reexecuted: u64,
+    /// Times the quiescence watchdog fired (lost-continuation deadlock
+    /// detected). The watchdog is always armed; without an active fault
+    /// plane a trip aborts the run instead of recovering.
+    pub watchdog_trips: u64,
+    /// The run was aborted through `Scheduler::drain` (deadline overrun
+    /// or host cancellation): remaining work discarded, records released.
+    pub drained: bool,
     /// Modeled memory-system counters (`--memsys modeled`): coalesced
     /// transactions/sectors, L1/L2 hits and misses, shared-memory bank
     /// conflicts. All zero under the flat model, which keeps flat-mode
@@ -171,6 +192,10 @@ pub struct Scheduler<'a> {
     /// Disabled (zero state, zero cost) under the flat default.
     memsys: MemSys,
     workers: Vec<WorkerState>,
+    /// Fault-injection delivery state (`cfg.faults`). `None` with the
+    /// default empty plan: the run loop takes no fault branch at all, so
+    /// fault-free runs stay byte-identical to every golden pin.
+    faults: Option<FaultState>,
     /// Workers resident on each SM (victim candidates for hierarchical
     /// stealing).
     sm_peers: Vec<Vec<usize>>,
@@ -286,6 +311,11 @@ impl<'a> Scheduler<'a> {
             decoded,
             fused,
             memsys: MemSys::for_mode(cfg.memsys, dev),
+            faults: if cfg.faults.is_active() {
+                Some(FaultState::new(&cfg.faults, n_workers))
+            } else {
+                None
+            },
             workers,
             sm_peers,
             sm_ready: vec![0; dev.sms],
@@ -352,8 +382,37 @@ impl<'a> Scheduler<'a> {
         let mut clock = WorkerClock::new(self.workers.len(), t0);
         let mut makespan = t0;
         let mut log: Vec<String> = Vec::new();
+        // Hardening: the watchdog is always armed (its quiescence predicate
+        // is exact at event boundaries, so it never false-positives and
+        // charges no simulated cycles); the fault branches below are taken
+        // only when a plan is active, keeping fault-free runs byte-identical.
+        let mut watchdog = Watchdog::armed(t0);
+        let deadline = self.cfg.faults.deadline;
         while self.live_tasks > 0 {
             let (now, w) = clock.peek_min();
+            if self.faults.is_some() {
+                if let Some(dl) = deadline {
+                    if now >= dl {
+                        self.drain();
+                        break;
+                    }
+                }
+                match self.deliver_faults(w as usize, now)? {
+                    FaultAction::Proceed => {}
+                    FaultAction::Stall(cycles) => {
+                        makespan = makespan.max(now + cycles);
+                        clock.advance_min(now + cycles);
+                        continue;
+                    }
+                    FaultAction::Park => {
+                        clock.advance_min(u64::MAX);
+                        continue;
+                    }
+                }
+            }
+            if watchdog.due(now) && self.queued_total() == 0 {
+                self.watchdog_trip(now)?;
+            }
             // fresh reborrow of the engine for this iteration
             let eng: Option<&mut dyn PayloadEngine> = match engine {
                 Some(ref mut e) => Some(&mut **e),
@@ -447,6 +506,18 @@ impl<'a> Scheduler<'a> {
                 &mut self.workers[w].rng,
             );
             self.stats.steal_attempts += 1;
+            // Forced steal failure (fault plane): the probe pays the normal
+            // remote-probe price but is reported empty-handed, modeling a
+            // contention storm on the victim's queue words.
+            if let Some(fs) = self.faults.as_mut() {
+                if fs.suppress_steal(w) {
+                    cost += dev.atomic + policy.victim_select.probe_overhead(dev);
+                    policy
+                        .queue_select
+                        .on_steal_miss(&mut self.workers[w].rr_queue, nq);
+                    continue;
+                }
+            }
             // Adaptive sizes the claim from the run-wide failure rate the
             // stats already track; Fixed/Half ignore the two counters.
             let amount = policy.steal_amount.amount_with_stats(
@@ -798,7 +869,7 @@ impl<'a> Scheduler<'a> {
                         task,
                         self.cfg.assume_no_taskwait,
                         dev,
-                    );
+                    )?;
                     cost += c;
                     self.stats.tasks_finished += 1;
                     self.live_tasks -= 1;
@@ -867,7 +938,197 @@ impl<'a> Scheduler<'a> {
         Ok(dur)
     }
 
+    // --- fault plane (cold paths; never taken with faults off) ----------
+
+    /// Total runnable entries across every staging area: queues, SM tier
+    /// pools and immediate buffers. Between events nothing is in flight
+    /// (a worker iteration applies its effects before the clock moves), so
+    /// zero here with live tasks remaining is a genuine lost-continuation
+    /// deadlock — the watchdog predicate is exact, with no false positives.
+    fn queued_total(&self) -> usize {
+        self.queues.total_len()
+            + self.sm_pool.total_len()
+            + self
+                .workers
+                .iter()
+                .map(|ws| ws.immediate.len())
+                .sum::<usize>()
+    }
+
+    /// Deliver every fault due for worker `w` at `now`. Stalls and kills
+    /// preempt the iteration; steal failures and drops only mutate state
+    /// and let the iteration proceed.
+    fn deliver_faults(&mut self, w: usize, now: u64) -> Result<FaultAction> {
+        loop {
+            let Some(ev) = self.faults.as_mut().and_then(|f| f.next_due(w, now)) else {
+                return Ok(FaultAction::Proceed);
+            };
+            match ev.kind {
+                FaultKind::Stall { cycles } => {
+                    self.stats.faults_injected += 1;
+                    return Ok(FaultAction::Stall(cycles.max(1)));
+                }
+                FaultKind::Kill => {
+                    // Never kill the last live worker — a device with no
+                    // workers cannot make progress. Skipped, uncounted.
+                    let fs = self.faults.as_mut().unwrap();
+                    if fs.live_workers <= 1 {
+                        continue;
+                    }
+                    fs.dead[w] = true;
+                    fs.live_workers -= 1;
+                    self.stats.faults_injected += 1;
+                    self.stats.workers_lost += 1;
+                    self.reclaim_worker(w, now)?;
+                    return Ok(FaultAction::Park);
+                }
+                FaultKind::StealFail { count } => {
+                    let fs = self.faults.as_mut().unwrap();
+                    fs.steal_suppress[w] = fs.steal_suppress[w].saturating_add(count);
+                    self.stats.faults_injected += 1;
+                }
+                FaultKind::Drop { queue } => {
+                    // Counted only when an entry actually vanished; a drop
+                    // aimed at an empty queue is consumed as a no-op so it
+                    // can never redeliver. The dropped task's record stays
+                    // alive — the watchdog's recovery scan finds it.
+                    let q = queue % self.cfg.num_queues;
+                    if self.queues.drop_newest(w, q).is_some() {
+                        self.stats.faults_injected += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Reclaim a killed worker's owned work — immediate buffer, each of
+    /// its queue classes, and (when no surviving peer shares its SM) its
+    /// SM tier pool — and hand it to the next surviving worker. Recovery
+    /// is host/driver intervention: it charges no simulated cycles.
+    fn reclaim_worker(&mut self, w: usize, now: u64) -> Result<()> {
+        let target = {
+            let dead = &self.faults.as_ref().unwrap().dead;
+            let n = self.workers.len();
+            (1..n)
+                .map(|k| (w + k) % n)
+                .find(|&t| !dead[t])
+                .expect("a live worker survives every kill")
+        };
+        let mut lost: Vec<TaskId> = std::mem::take(&mut self.workers[w].immediate);
+        if !lost.is_empty() {
+            self.stats.tasks_reexecuted += lost.len() as u64;
+            self.push_with_spill(target, 0, now, &lost, "reclaimed work")?;
+        }
+        for q in 0..self.cfg.num_queues {
+            lost.clear();
+            self.queues.drain_worker(w, q, &mut lost);
+            if !lost.is_empty() {
+                self.stats.tasks_reexecuted += lost.len() as u64;
+                self.push_with_spill(target, q, now, &lost, "reclaimed work")?;
+            }
+        }
+        // A dead worker's SM pool is reachable only by same-SM peers; when
+        // none survive its tasks would strand (and defeat the watchdog's
+        // recovery scan), so the host drains that pool too. Draining counts
+        // as pool hits, preserving the spills == hits quiescence invariant.
+        if self.sm_pool.enabled() {
+            let sm = self.workers[w].sm;
+            let orphaned = {
+                let dead = &self.faults.as_ref().unwrap().dead;
+                !self.sm_peers[sm].iter().any(|&p| !dead[p])
+            };
+            if orphaned {
+                lost.clear();
+                self.sm_pool.drain_sm(sm, &mut lost);
+                if !lost.is_empty() {
+                    self.stats.sm_pool_hits += lost.len() as u64;
+                    self.stats.tasks_reexecuted += lost.len() as u64;
+                    self.push_with_spill(target, 0, now, &lost, "reclaimed work")?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The watchdog found quiescence with live tasks remaining. With an
+    /// active fault plane the lost tasks are re-enqueued (re-execution
+    /// resumes from the last state-entry boundary, so results stay
+    /// bit-identical); otherwise — or when nothing is recoverable — the
+    /// run aborts with a diagnosis instead of spinning forever.
+    fn watchdog_trip(&mut self, now: u64) -> Result<()> {
+        self.stats.watchdog_trips += 1;
+        let lost = recovery::lost_tasks(&self.records);
+        if self.faults.is_none() || lost.is_empty() {
+            bail!(
+                "watchdog: scheduler quiescent at cycle {now} with {} live task(s) \
+                 and no queued work (lost-continuation deadlock)",
+                self.live_tasks
+            );
+        }
+        self.requeue_lost(&lost, now)
+    }
+
+    /// Re-enqueue recovered tasks onto surviving workers (round-robin),
+    /// routed by the run's **Placement** policy from each record's
+    /// retained lineage: never-started tasks re-enter as fresh placements,
+    /// suspended ones as continuations on their recorded join queue.
+    fn requeue_lost(&mut self, lost: &[TaskId], now: u64) -> Result<()> {
+        let nq = self.cfg.num_queues;
+        let policy = self.policy;
+        let n = self.workers.len();
+        let survivors: Vec<usize> = match self.faults.as_ref() {
+            Some(fs) => (0..n).filter(|&i| !fs.dead[i]).collect(),
+            None => (0..n).collect(),
+        };
+        for (i, &task) in lost.iter().enumerate() {
+            let m = self.records.meta(task);
+            let (state, join_queue, depth, priority) =
+                (m.state, m.join_queue, m.depth, m.priority);
+            let q = if state == 0 {
+                policy.placement.place(0, 0, nq, depth, priority)
+            } else {
+                policy
+                    .placement
+                    .place_continuation(join_queue as usize, nq, depth, priority)
+            };
+            let target = survivors[i % survivors.len()];
+            self.push_with_spill(target, q, now, &[task], "recovered work")?;
+        }
+        self.stats.tasks_reexecuted += lost.len() as u64;
+        Ok(())
+    }
+
+    /// First-class abort: discard all queued work, release every live
+    /// record and end the run. Shared by deadline overrun
+    /// (`--faults deadline@C`) and host-side cancellation. A drained run
+    /// reports `drained = true` and no root result.
+    pub fn drain(&mut self) {
+        for ws in &mut self.workers {
+            ws.immediate.clear();
+        }
+        let mut sink: Vec<TaskId> = Vec::new();
+        self.queues.drain_all(&mut sink);
+        self.sm_pool.drain_all(&mut sink);
+        sink.clear();
+        self.records.for_each_alive(|id, _| sink.push(id));
+        for id in sink {
+            self.records.free(id);
+        }
+        self.live_tasks = 0;
+        self.stats.drained = true;
+    }
+
     pub fn live_tasks(&self) -> u64 {
         self.live_tasks
     }
+}
+
+/// What the run loop does after delivering faults for the selected worker.
+enum FaultAction {
+    /// No blocking fault: run the iteration normally.
+    Proceed,
+    /// Transient stall: advance the worker's clock without running it.
+    Stall(u64),
+    /// The worker is dead: park its clock permanently.
+    Park,
 }

@@ -506,7 +506,7 @@ impl<'a> RefScheduler<'a> {
                         task,
                         self.cfg.assume_no_taskwait,
                         dev,
-                    );
+                    )?;
                     cost += c;
                     self.stats.tasks_finished += 1;
                     self.live_tasks -= 1;

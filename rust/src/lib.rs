@@ -57,4 +57,4 @@ pub mod sim;
 pub mod util;
 pub mod workloads;
 
-pub use util::error::{Context, Error, Result};
+pub use util::error::{Context, Error, ErrorKind, Result};

@@ -14,8 +14,8 @@ use gtap::bench::runners::{self, Exec};
 use gtap::compiler;
 use gtap::coordinator::config::{GtapConfig, DEFAULT_MAX_TASK_DATA_SIZE};
 use gtap::coordinator::{
-    Backoff, Placement, PolicyConfig, QueueSelect, SchedulerKind, SmTier, StealAmount,
-    VictimSelect,
+    Backoff, FaultPlan, Placement, PolicyConfig, QueueSelect, SchedulerKind, SmTier,
+    StealAmount, VictimSelect,
 };
 use gtap::sim::profile::Profiler;
 use gtap::sim::{DeviceSpec, MemSysMode};
@@ -42,7 +42,9 @@ fn main() -> Result<()> {
                  \n      [--steal batch|one|half|adaptive|fixed:N] \\\
                  \n      [--placement epaq|own|rr-spill|priority:depth|priority:user] \\\
                  \n      [--backoff exp|fixed] [--sm-tier off|spill|share] \\\
-                 \n      [--policy default|recommended] [--memsys flat|modeled]\
+                 \n      [--policy default|recommended] [--memsys flat|modeled] \\\
+                 \n      [--faults off|<spec>]  (spec: stall@T:wN:C kill@T:wN stealfail@T:wN:C\
+                 \n                              drop@T:wN[:qQ] deadline@C rand:SEED[:N], ;-joined)\
                  \n  gtap devices                       device cost models (Table 2)\
                  \n  gtap config                        runtime defaults (Table 1)"
             );
@@ -63,8 +65,8 @@ fn cmd_compile(args: &Args) -> Result<()> {
 }
 
 fn build_exec(args: &Args) -> Result<Exec> {
-    let grid = args.get_or("grid", 256usize);
-    let block = args.get_or("block", 32usize);
+    let grid = args.get_or("grid", 256usize)?;
+    let block = args.get_or("block", 32usize)?;
     let mut exec = match args.str_or("device", "gpu").as_str() {
         "gpu" => {
             if args.str_or("granularity", "thread") == "block" {
@@ -83,8 +85,8 @@ fn build_exec(args: &Args) -> Result<Exec> {
         "seqcl" => SchedulerKind::SequentialChaseLev,
         other => bail!("unknown scheduler {other:?} (ws|gq|seqcl)"),
     });
-    exec = exec.queues(args.get_or("queues", 1usize));
-    exec = exec.seed(args.get_or("seed", 0x6A7A9u64));
+    exec = exec.queues(args.get_or("queues", 1usize)?);
+    exec = exec.seed(args.get_or("seed", 0x6A7A9u64)?);
     exec = exec.policy(build_policy(args)?);
     // memory-system model: GTAP_MEMSYS as the base, --memsys overrides
     let mut memsys = MemSysMode::from_env().map_err(|e| gtap::anyhow!(e))?;
@@ -92,6 +94,14 @@ fn build_exec(args: &Args) -> Result<Exec> {
         memsys = MemSysMode::parse(v).map_err(|e| gtap::anyhow!(e))?;
     }
     exec = exec.memsys(memsys);
+    // fault injection: GTAP_FAULTS as the base, --faults overrides
+    let mut faults = FaultPlan::from_env()
+        .map_err(|e| gtap::Error::typed(gtap::ErrorKind::Parse, e))?;
+    if let Some(v) = args.get("faults") {
+        faults = FaultPlan::parse(v)
+            .map_err(|e| gtap::Error::typed(gtap::ErrorKind::Parse, e))?;
+    }
+    exec = exec.faults(faults);
     Ok(exec)
 }
 
@@ -138,13 +148,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     let t_host = std::time::Instant::now();
     let out = match bench.as_str() {
         "fib" => {
-            let n = args.get_or("n", 20i64);
-            let cutoff = args.get_or("cutoff", 0i64);
+            let n = args.get_or("n", 20i64)?;
+            let cutoff = args.get_or("cutoff", 0i64)?;
             runners::run_fib(&exec.clone().queues(if epaq { 3 } else { exec.cfg.num_queues }), n, cutoff, epaq)?
         }
         "nqueens" => {
-            let n = args.get_or("n", 10i64);
-            let depth = args.get_or("cutoff", 4i64);
+            let n = args.get_or("n", 10i64)?;
+            let depth = args.get_or("cutoff", 4i64)?;
             runners::run_nqueens(
                 &exec.clone().no_taskwait().queues(if epaq { 2 } else { 1 }),
                 n,
@@ -153,20 +163,20 @@ fn cmd_run(args: &Args) -> Result<()> {
             )?
         }
         "mergesort" => {
-            let n = args.get_or("n", 1usize << 14);
-            let cutoff = args.get_or("cutoff", 128i64);
+            let n = args.get_or("n", 1usize << 14)?;
+            let cutoff = args.get_or("cutoff", 128i64)?;
             runners::run_mergesort(&exec, n, cutoff, 42)?
         }
         "cilksort" => {
-            let n = args.get_or("n", 1usize << 14);
-            let cs = args.get_or("cutoff-sort", 64i64);
-            let cm = args.get_or("cutoff-merge", 256i64);
+            let n = args.get_or("n", 1usize << 14)?;
+            let cs = args.get_or("cutoff-sort", 64i64)?;
+            let cm = args.get_or("cutoff-merge", 256i64)?;
             runners::run_cilksort(&exec.clone().queues(if epaq { 3 } else { 1 }), n, cs, cm, epaq, 42)?
         }
         "tree" => {
-            let depth = args.get_or("depth", 10i64);
-            let mem = args.get_or("mem-ops", 64i64);
-            let comp = args.get_or("compute-iters", 256i64);
+            let depth = args.get_or("depth", 10i64)?;
+            let mem = args.get_or("mem-ops", 64i64)?;
+            let comp = args.get_or("compute-iters", 256i64)?;
             if args.flag("xla") {
                 let mut engine = gtap::runtime::XlaPayloadEngine::from_artifacts()?;
                 let out = runners::run_full_tree(&exec, depth, mem, comp, Some(&mut engine))?;
@@ -180,14 +190,14 @@ fn cmd_run(args: &Args) -> Result<()> {
             }
         }
         "ptree" => {
-            let depth = args.get_or("depth", 12i64);
-            let mem = args.get_or("mem-ops", 64i64);
-            let comp = args.get_or("compute-iters", 256i64);
+            let depth = args.get_or("depth", 12i64)?;
+            let mem = args.get_or("mem-ops", 64i64)?;
+            let comp = args.get_or("compute-iters", 256i64)?;
             runners::run_pruned_tree(&exec, depth, mem, comp, 5)?
         }
         "bfs" => {
-            let n = args.get_or("n", 2000usize);
-            let deg = args.get_or("degree", 4usize);
+            let n = args.get_or("n", 2000usize)?;
+            let deg = args.get_or("degree", 4usize)?;
             runners::run_bfs(&exec.clone().no_taskwait(), n, deg, 42)?
         }
         other => bail!("unknown benchmark {other:?}"),
@@ -216,6 +226,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
     }
     if let Some(report) = Profiler::memsys_report(&out.stats.memsys) {
+        println!("  {report}");
+    }
+    if let Some(report) = Profiler::fault_report(
+        out.stats.faults_injected,
+        out.stats.workers_lost,
+        out.stats.tasks_reexecuted,
+        out.stats.watchdog_trips,
+        out.stats.drained,
+    ) {
         println!("  {report}");
     }
     if let Some(r) = out.stats.root_result {
@@ -260,5 +279,6 @@ fn cmd_config() -> Result<()> {
     println!("GTAP_BACKOFF              = {}", c.policy.backoff.name());
     println!("GTAP_SM_TIER              = {}", c.policy.sm_tier.name());
     println!("GTAP_MEMSYS               = {}", c.memsys.name());
+    println!("GTAP_FAULTS               = {}", c.faults.spelling());
     Ok(())
 }

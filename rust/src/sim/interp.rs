@@ -36,6 +36,18 @@
 //! Side effects visible to the runtime (spawns, the join/finish decision)
 //! are *collected*, not applied — the coordinator owns records, queues and
 //! their cost accounting.
+//!
+//! **Re-execution contract (fault recovery).** A segment dispatch is
+//! idempotent from its state-entry boundary: `LaneFrame::reset` rebuilds
+//! the frame purely from the record's persisted `(func, state)` pair, and
+//! a task's recorded `state` advances only when the coordinator *applies*
+//! the segment's effects. The fault plane
+//! (`coordinator::fault`) relies on exactly this: work reclaimed from a
+//! killed worker or re-enqueued by the watchdog was acquired but never
+//! effect-applied, so re-dispatching it replays the segment from the same
+//! boundary and every segment's effects land exactly once — results under
+//! any fault plan stay bit-identical to the fault-free run, in all three
+//! interpreter tiers (ref / decoded / fused) alike.
 
 use super::config::DeviceSpec;
 use super::divergence;

@@ -18,6 +18,13 @@
 //! fold *function-local* pcs (the decoded interpreter folds global ones):
 //! hashes are only ever compared for equality, and the equality classes
 //! coincide, which is what the differential test checks.
+//!
+//! The re-execution contract of `sim::interp` holds here identically: a
+//! segment dispatch is a pure function of the record's `(func, state)`
+//! entry boundary, so fault-plane recovery (`coordinator::fault`) replays
+//! segments bit-identically through this tier too — the chaos suite
+//! (`rust/tests/chaos.rs`) exercises recovery against results pinned by
+//! the differential tests across all tiers.
 
 use super::config::DeviceSpec;
 use super::divergence;

@@ -135,6 +135,33 @@ impl Profiler {
         ))
     }
 
+    /// Fault-plane summary line for a run's `RunStats` fault counters
+    /// (`--faults <spec>`). Takes the scalars rather than the stats struct
+    /// — the sim layer does not depend on the coordinator. `None` when all
+    /// counters are zero and the run was not drained, so fault-free
+    /// reports stay unchanged.
+    pub fn fault_report(
+        faults_injected: u64,
+        workers_lost: u64,
+        tasks_reexecuted: u64,
+        watchdog_trips: u64,
+        drained: bool,
+    ) -> Option<String> {
+        if faults_injected == 0
+            && workers_lost == 0
+            && tasks_reexecuted == 0
+            && watchdog_trips == 0
+            && !drained
+        {
+            return None;
+        }
+        Some(format!(
+            "faults: {faults_injected} injected, {workers_lost} workers lost, \
+             {tasks_reexecuted} tasks re-executed, {watchdog_trips} watchdog trips{}",
+            if drained { ", run drained" } else { "" },
+        ))
+    }
+
     /// CSV dump for plotting (one row per event).
     pub fn to_csv(&self) -> String {
         let mut out =
@@ -237,5 +264,19 @@ mod tests {
         assert!(r.contains("10 transactions"), "{r}");
         assert!(r.contains("75.0% hit"), "{r}");
         assert!(r.contains("3 smem bank conflicts"), "{r}");
+    }
+
+    #[test]
+    fn fault_report_renders_only_when_counters_move() {
+        assert!(
+            Profiler::fault_report(0, 0, 0, 0, false).is_none(),
+            "fault-free runs report nothing"
+        );
+        let r = Profiler::fault_report(3, 1, 2, 1, false).unwrap();
+        assert!(r.contains("3 injected"), "{r}");
+        assert!(r.contains("1 workers lost"), "{r}");
+        assert!(!r.contains("drained"), "{r}");
+        let r = Profiler::fault_report(0, 0, 0, 0, true).unwrap();
+        assert!(r.contains("run drained"), "{r}");
     }
 }

@@ -1,6 +1,10 @@
 //! Minimal `--flag value` command-line parser used by the `gtap` binary, the
 //! examples and the bench harness (the offline registry has no `clap`).
+//! Typed lookups are panic-free: a malformed value returns a
+//! [`ErrorKind::Parse`]-tagged error so binaries exit nonzero with a
+//! message instead of unwinding.
 
+use crate::util::error::{Error, ErrorKind, Result};
 use std::collections::BTreeMap;
 
 /// Parsed command-line arguments: positionals plus `--key value` /
@@ -54,13 +58,14 @@ impl Args {
             || matches!(self.get(key), Some("1") | Some("true") | Some("yes"))
     }
 
-    /// Typed option with default.
-    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+    /// Typed option with default. A present-but-malformed value is a
+    /// user-input error, reported as `ErrorKind::Parse` — never a panic.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
         match self.get(key) {
-            Some(v) => v
-                .parse()
-                .unwrap_or_else(|_| panic!("invalid value for --{key}: {v:?}")),
-            None => default,
+            Some(v) => v.parse().map_err(|_| {
+                Error::typed(ErrorKind::Parse, format!("invalid value for --{key}: {v:?}"))
+            }),
+            None => Ok(default),
         }
     }
 
@@ -82,14 +87,14 @@ mod tests {
     fn positional_and_options() {
         let a = parse(&["run", "--n", "12", "--device", "gpu", "fib"]);
         assert_eq!(a.positional, vec!["run", "fib"]);
-        assert_eq!(a.get_or("n", 0u32), 12);
+        assert_eq!(a.get_or("n", 0u32).unwrap(), 12);
         assert_eq!(a.str_or("device", "cpu"), "gpu");
     }
 
     #[test]
     fn equals_form() {
         let a = parse(&["--n=7"]);
-        assert_eq!(a.get_or("n", 0u32), 7);
+        assert_eq!(a.get_or("n", 0u32).unwrap(), 7);
     }
 
     #[test]
@@ -104,20 +109,21 @@ mod tests {
     fn switch_followed_by_option() {
         let a = parse(&["--fast", "--n", "3"]);
         assert!(a.flag("fast"));
-        assert_eq!(a.get_or("n", 0u32), 3);
+        assert_eq!(a.get_or("n", 0u32).unwrap(), 3);
     }
 
     #[test]
     fn defaults_apply() {
         let a = parse(&[]);
-        assert_eq!(a.get_or("n", 42u32), 42);
+        assert_eq!(a.get_or("n", 42u32).unwrap(), 42);
         assert_eq!(a.str_or("mode", "sim"), "sim");
     }
 
     #[test]
-    #[should_panic(expected = "invalid value")]
-    fn bad_typed_value_panics() {
+    fn bad_typed_value_is_a_parse_error() {
         let a = parse(&["--n", "abc"]);
-        let _: u32 = a.get_or("n", 0);
+        let e = a.get_or("n", 0u32).unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::Parse);
+        assert_eq!(e.to_string(), "invalid value for --n: \"abc\"");
     }
 }

@@ -12,10 +12,25 @@
 
 use std::fmt;
 
+/// Coarse error category, for callers that must react differently to
+/// specific failure classes (the scheduler's join-counter repair, the
+/// CLI's parse-error exit path) without parsing message strings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Anything without a more specific classification.
+    Generic,
+    /// Join-counter underflow/overflow (double finish, corrupted record).
+    JoinCounter,
+    /// User-reachable parse failure (CLI flag, environment variable).
+    Parse,
+}
+
 /// An opaque error: a message plus outer context layers (outermost first,
-/// like `anyhow`'s `{:#}` chain rendered eagerly).
+/// like `anyhow`'s `{:#}` chain rendered eagerly), tagged with a coarse
+/// [`ErrorKind`].
 pub struct Error {
     msg: String,
+    kind: ErrorKind,
 }
 
 /// `Result` with [`Error`] as the default error type.
@@ -24,13 +39,30 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 impl Error {
     /// Build an error from a printable message.
     pub fn msg(m: impl fmt::Display) -> Error {
-        Error { msg: m.to_string() }
+        Error {
+            msg: m.to_string(),
+            kind: ErrorKind::Generic,
+        }
     }
 
-    /// Wrap this error in an outer context layer.
+    /// Build an error with an explicit [`ErrorKind`].
+    pub fn typed(kind: ErrorKind, m: impl fmt::Display) -> Error {
+        Error {
+            msg: m.to_string(),
+            kind,
+        }
+    }
+
+    /// The error's coarse category.
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
+    }
+
+    /// Wrap this error in an outer context layer (the kind is preserved).
     pub fn context(self, c: impl fmt::Display) -> Error {
         Error {
             msg: format!("{c}: {}", self.msg),
+            kind: self.kind,
         }
     }
 }
@@ -158,5 +190,19 @@ mod tests {
         assert_eq!(f(0).unwrap_err().to_string(), "zero is forbidden");
         let e = crate::anyhow!(Error::msg("passthrough"));
         assert_eq!(e.to_string(), "passthrough");
+    }
+
+    #[test]
+    fn kinds_tag_and_survive_context() {
+        assert_eq!(Error::msg("x").kind(), ErrorKind::Generic);
+        let e = Error::typed(ErrorKind::JoinCounter, "underflow");
+        assert_eq!(e.kind(), ErrorKind::JoinCounter);
+        let wrapped = e.context("while finishing task 3");
+        assert_eq!(wrapped.kind(), ErrorKind::JoinCounter, "context keeps the kind");
+        assert_eq!(wrapped.to_string(), "while finishing task 3: underflow");
+        assert_eq!(
+            Error::typed(ErrorKind::Parse, "bad flag").kind(),
+            ErrorKind::Parse
+        );
     }
 }

@@ -13,6 +13,6 @@ pub mod prop;
 pub mod stats;
 
 pub use cli::Args;
-pub use error::{Context, Error, Result};
+pub use error::{Context, Error, ErrorKind, Result};
 pub use prng::Prng;
 pub use stats::Summary;

@@ -1,0 +1,248 @@
+//! Chaos differential suite for the fault plane (`--faults`).
+//!
+//! The contract under test (ARCHITECTURE.md "Fault model & recovery"):
+//! under **any** deterministic fault plan the run terminates and its
+//! workload *results* are bit-identical to the fault-free run — faults
+//! may only remove or delay work, never execute a segment's effects
+//! twice. Every runner used here validates its result against the native
+//! reference internally (`ensure!`), so a chaos run that recovered
+//! incorrectly fails its own measurement; on top of that the suite pins
+//! result- and task-count equality against fault-free baselines, and the
+//! faults-off case byte-identical against the pre-refactor monolith's
+//! pinned stats (cost transparency).
+
+use gtap::bench::runners::{self, Exec};
+use gtap::compiler;
+use gtap::coordinator::scheduler_ref::RefScheduler;
+use gtap::coordinator::{
+    FaultKind, FaultPlan, GtapConfig, Scheduler, SchedulerKind, Session, SmTier,
+};
+use gtap::ir::types::Value;
+use gtap::sim::profile::Profiler;
+use gtap::sim::{DeviceSpec, Memory};
+use gtap::workloads::fib;
+
+fn no_faults(s: &gtap::coordinator::RunStats) {
+    assert_eq!(s.faults_injected, 0);
+    assert_eq!(s.workers_lost, 0);
+    assert_eq!(s.tasks_reexecuted, 0);
+    assert_eq!(s.watchdog_trips, 0);
+    assert!(!s.drained);
+}
+
+#[test]
+fn faults_off_is_byte_identical() {
+    // An explicit "off" plan and the default plan take the identical code
+    // path: full RunStats equality, including cycles.
+    let base = runners::run_fib(&Exec::gpu_thread(4, 32), 13, 0, false).unwrap();
+    let off = Exec::gpu_thread(4, 32).faults(FaultPlan::parse("off").unwrap());
+    let explicit = runners::run_fib(&off, 13, 0, false).unwrap();
+    assert_eq!(base.stats, explicit.stats);
+    no_faults(&base.stats);
+}
+
+#[test]
+fn faults_off_matches_reference_monolith() {
+    // The hardened scheduler (watchdog armed, fault branches compiled in)
+    // must stay byte-identical to the pre-refactor monolith, which knows
+    // nothing about faults.
+    let cfg = GtapConfig {
+        grid_size: 2,
+        block_size: 64,
+        ..Default::default()
+    };
+    let dev = DeviceSpec::h100();
+    let module = compiler::compile(&fib::source(0, false), cfg.max_task_data_size).unwrap();
+    let run_new = {
+        let mut mem = Memory::new(module.globals_words());
+        let mut prof = Profiler::disabled();
+        let mut s = Scheduler::new(&module, &cfg, &dev).unwrap();
+        s.spawn_root("fib", &[Value::from_i64(13)]).unwrap();
+        s.run(&mut mem, None, &mut prof).unwrap()
+    };
+    let run_ref = {
+        let mut mem = Memory::new(module.globals_words());
+        let mut prof = Profiler::disabled();
+        let mut s = RefScheduler::new(&module, &cfg, &dev).unwrap();
+        s.spawn_root("fib", &[Value::from_i64(13)]).unwrap();
+        s.run(&mut mem, None, &mut prof).unwrap()
+    };
+    assert_eq!(run_new, run_ref);
+}
+
+#[test]
+fn deterministic_kill_recovers_bit_identically() {
+    let base = runners::run_fib(&Exec::gpu_thread(4, 32), 13, 0, false).unwrap();
+    let e = Exec::gpu_thread(4, 32).faults(FaultPlan::parse("kill@0:w1").unwrap());
+    let out = runners::run_fib(&e, 13, 0, false).unwrap();
+    // run_fib validated fib(13) == 233 internally; pin the counters too
+    assert_eq!(out.stats.workers_lost, 1);
+    assert!(out.stats.faults_injected >= 1);
+    assert_eq!(
+        out.stats.tasks_finished, base.stats.tasks_finished,
+        "every task must finish exactly once despite the kill"
+    );
+    assert_eq!(out.stats.root_result, base.stats.root_result);
+    assert!(!out.stats.drained);
+}
+
+#[test]
+fn kill_never_takes_the_last_worker() {
+    // Both workers are targeted at t=0; the second kill must be skipped
+    // (and stay uncounted) or the run could never finish.
+    let e = Exec::gpu_thread(2, 32).faults(FaultPlan::parse("kill@0:w0;kill@0:w1").unwrap());
+    let out = runners::run_fib(&e, 12, 0, false).unwrap();
+    assert_eq!(out.stats.workers_lost, 1, "exactly one kill lands");
+    assert_eq!(out.stats.faults_injected, 1);
+}
+
+#[test]
+fn transient_stall_preserves_results() {
+    let base = runners::run_fib(&Exec::gpu_thread(4, 32), 13, 0, false).unwrap();
+    let e = Exec::gpu_thread(4, 32).faults(FaultPlan::parse("stall@0:w0:5000").unwrap());
+    let out = runners::run_fib(&e, 13, 0, false).unwrap();
+    assert_eq!(out.stats.faults_injected, 1);
+    assert_eq!(out.stats.workers_lost, 0);
+    assert_eq!(out.stats.tasks_finished, base.stats.tasks_finished);
+    assert_eq!(out.stats.root_result, base.stats.root_result);
+}
+
+#[test]
+fn steal_failure_storm_preserves_results() {
+    let base = runners::run_fib(&Exec::gpu_thread(4, 32), 13, 0, false).unwrap();
+    let e = Exec::gpu_thread(4, 32).faults(FaultPlan::parse("stealfail@0:w1:64").unwrap());
+    let out = runners::run_fib(&e, 13, 0, false).unwrap();
+    assert_eq!(out.stats.faults_injected, 1);
+    assert_eq!(out.stats.tasks_finished, base.stats.tasks_finished);
+    assert_eq!(out.stats.root_result, base.stats.root_result);
+}
+
+#[test]
+fn dropped_entries_are_recovered_by_the_watchdog() {
+    // Drops only land when the target queue is non-empty at delivery, so
+    // schedule several and branch on what actually vanished: every
+    // delivered drop loses a task the watchdog must find and re-enqueue.
+    let base = runners::run_fib(&Exec::gpu_thread(4, 32), 14, 0, false).unwrap();
+    let plan = FaultPlan::parse("drop@500:w0;drop@1500:w1;drop@2500:w2;drop@3500:w3").unwrap();
+    let e = Exec::gpu_thread(4, 32).faults(plan);
+    let out = runners::run_fib(&e, 14, 0, false).unwrap();
+    if out.stats.faults_injected > 0 {
+        assert!(out.stats.watchdog_trips >= 1, "{:?}", out.stats);
+        assert!(
+            out.stats.tasks_reexecuted >= out.stats.faults_injected,
+            "{:?}",
+            out.stats
+        );
+    }
+    assert_eq!(out.stats.tasks_finished, base.stats.tasks_finished);
+    assert_eq!(out.stats.root_result, base.stats.root_result);
+}
+
+#[test]
+fn kill_with_sm_tier_reclaims_pooled_work() {
+    // Share-mode SM pools hold sibling tasks; killing workers must not
+    // strand them (the pool drain counts as hits, so the spills == hits
+    // quiescence invariant survives chaos too).
+    let base = runners::run_fib(&Exec::gpu_thread(4, 32).sm_tier(SmTier::Share), 13, 0, false)
+        .unwrap();
+    let e = Exec::gpu_thread(4, 32)
+        .sm_tier(SmTier::Share)
+        .faults(FaultPlan::parse("kill@1000:w2;kill@4000:w0").unwrap());
+    let out = runners::run_fib(&e, 13, 0, false).unwrap();
+    assert_eq!(out.stats.tasks_finished, base.stats.tasks_finished);
+    assert_eq!(out.stats.root_result, base.stats.root_result);
+    assert_eq!(out.stats.sm_spills, out.stats.sm_pool_hits, "{:?}", out.stats);
+}
+
+#[test]
+fn deadline_overrun_drains_the_run() {
+    // deadline@0 fires before any work happens: the run must terminate
+    // immediately through Scheduler::drain with no result and no leaked
+    // records, not error out.
+    let cfg = GtapConfig {
+        grid_size: 2,
+        block_size: 64,
+        faults: FaultPlan::parse("deadline@0").unwrap(),
+        ..Default::default()
+    };
+    let mut s = Session::compile(&fib::source(0, false), cfg, DeviceSpec::h100()).unwrap();
+    let stats = s.run("fib", &[Value::from_i64(20)]).unwrap();
+    assert!(stats.drained);
+    assert!(stats.root_result.is_none());
+    assert_eq!(stats.tasks_finished, 0);
+}
+
+#[test]
+fn seeded_chaos_schedules_terminate_with_exact_results() {
+    // The differential sweep: seeded random fault schedules × workloads ×
+    // scheduler organizations/policies. Each runner validates its result
+    // against the native reference, and task counts are pinned against
+    // the fault-free baseline of the same configuration — bit-for-bit
+    // result equality under chaos.
+    let execs: Vec<(&str, Exec)> = vec![
+        ("default", Exec::gpu_thread(4, 32)),
+        (
+            "recommended+share",
+            Exec::gpu_thread(4, 32)
+                .policy(gtap::coordinator::PolicyConfig::recommended())
+                .sm_tier(SmTier::Share),
+        ),
+        ("chaselev", Exec::gpu_thread(4, 32).scheduler(SchedulerKind::SequentialChaseLev)),
+        ("global", Exec::gpu_thread(4, 32).scheduler(SchedulerKind::GlobalQueue)),
+    ];
+    for (label, e) in &execs {
+        type Work = (&'static str, Box<dyn Fn(&Exec) -> gtap::Result<runners::Outcome>>);
+        let workloads: Vec<Work> = vec![
+            ("fib", Box::new(|e: &Exec| runners::run_fib(e, 12, 0, false))),
+            ("tree", Box::new(|e: &Exec| runners::run_full_tree(e, 5, 4, 4, None))),
+            ("msort", Box::new(|e: &Exec| runners::run_mergesort(e, 64, 8, 1))),
+            (
+                "nqueens",
+                Box::new(|e: &Exec| runners::run_nqueens(&e.clone().no_taskwait(), 6, 2, false)),
+            ),
+        ];
+        for (wname, work) in &workloads {
+            let base = work(e).unwrap_or_else(|err| panic!("{label}/{wname} baseline: {err}"));
+            for seed in [1u64, 3, 5, 7] {
+                let chaotic = e.clone().faults(FaultPlan::seeded(seed, 6));
+                let out = work(&chaotic).unwrap_or_else(|err| {
+                    panic!("{label}/{wname} seed {seed} failed: {err}")
+                });
+                assert_eq!(
+                    out.stats.tasks_finished, base.stats.tasks_finished,
+                    "{label}/{wname} seed {seed}: every task finishes exactly once"
+                );
+                assert_eq!(
+                    out.stats.root_result, base.stats.root_result,
+                    "{label}/{wname} seed {seed}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn seeded_bfs_block_level_survives_chaos() {
+    // Block-level granularity takes the superblock-fused dispatch path
+    // with block-wide workers; recovery must hold there too.
+    let e = Exec::gpu_block(4, 32).no_taskwait();
+    let base = runners::run_bfs(&e, 64, 3, 2).unwrap();
+    for seed in [2u64, 9] {
+        let out = runners::run_bfs(&e.clone().faults(FaultPlan::seeded(seed, 6)), 64, 3, 2)
+            .unwrap_or_else(|err| panic!("bfs seed {seed}: {err}"));
+        assert_eq!(out.stats.tasks_finished, base.stats.tasks_finished, "seed {seed}");
+    }
+}
+
+#[test]
+fn seeded_plans_reproduce_exactly() {
+    // Same seed → same plan → same run, counter for counter.
+    let plan = FaultPlan::seeded(11, 8);
+    assert!(plan.events.iter().any(|e| e.kind != FaultKind::Kill));
+    let run = || {
+        runners::run_fib(&Exec::gpu_thread(4, 32).faults(plan.clone()), 12, 0, false)
+            .unwrap()
+            .stats
+    };
+    assert_eq!(run(), run());
+}

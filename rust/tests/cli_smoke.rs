@@ -1,0 +1,118 @@
+//! CLI smoke tests: the `gtap` binary as a subprocess.
+//!
+//! Pins the panic-free config/CLI surface: bad flags and bad fault specs
+//! exit nonzero with a diagnostic on stderr (never a panic backtrace),
+//! usage errors exit 2, and the documented good paths exit 0 with their
+//! expected report lines — including the `--faults` / `GTAP_FAULTS`
+//! surface.
+
+use std::process::{Command, Output};
+
+fn gtap(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_gtap"))
+        .args(args)
+        .env_remove("GTAP_FAULTS")
+        .output()
+        .expect("spawn gtap")
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn no_args_prints_usage_and_exits_2() {
+    let out = gtap(&[]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr(&out).contains("usage: gtap"), "{}", stderr(&out));
+    assert!(stderr(&out).contains("--faults"), "usage documents the fault surface");
+}
+
+#[test]
+fn unknown_subcommand_exits_2() {
+    let out = gtap(&["frobnicate"]);
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn bad_numeric_flag_is_a_diagnostic_not_a_panic() {
+    let out = gtap(&["run", "fib", "--n", "abc"]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("invalid value for --n"), "{err}");
+    assert!(!err.contains("panicked"), "must fail via Result, not panic: {err}");
+}
+
+#[test]
+fn unknown_benchmark_is_a_diagnostic() {
+    let out = gtap(&["run", "nosuchbench", "--n", "5"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("unknown benchmark"), "{}", stderr(&out));
+}
+
+#[test]
+fn bad_fault_spec_is_a_diagnostic() {
+    let out = gtap(&["run", "fib", "--n", "10", "--faults", "explode@10:w0"]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("unknown fault kind"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
+fn bad_fault_env_is_a_diagnostic() {
+    let out = Command::new(env!("CARGO_BIN_EXE_gtap"))
+        .args(["run", "fib", "--n", "10"])
+        .env("GTAP_FAULTS", "stall@oops:w0:5")
+        .output()
+        .expect("spawn gtap");
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("invalid time"), "{}", stderr(&out));
+}
+
+#[test]
+fn fault_run_reports_and_validates() {
+    // a CLI chaos run: the binary validates the result internally, prints
+    // the fault report line, and exits 0
+    let out = gtap(&[
+        "run", "fib", "--n", "12", "--grid", "4", "--block", "32", "--faults", "kill@0:w1",
+    ]);
+    assert!(out.status.success(), "stderr: {}", stderr(&out));
+    let txt = stdout(&out);
+    assert!(txt.contains("faults:"), "{txt}");
+    assert!(txt.contains("1 workers lost"), "{txt}");
+    assert!(txt.contains("result: 144"), "{txt}");
+}
+
+#[test]
+fn fault_env_feeds_the_run() {
+    let out = Command::new(env!("CARGO_BIN_EXE_gtap"))
+        .args(["run", "fib", "--n", "12", "--grid", "4", "--block", "32"])
+        .env("GTAP_FAULTS", "stall@0:w0:4000")
+        .output()
+        .expect("spawn gtap");
+    assert!(out.status.success(), "stderr: {}", stderr(&out));
+    assert!(stdout(&out).contains("faults: 1 injected"), "{}", stdout(&out));
+}
+
+#[test]
+fn cli_flag_overrides_fault_env() {
+    let out = Command::new(env!("CARGO_BIN_EXE_gtap"))
+        .args(["run", "fib", "--n", "12", "--faults", "off"])
+        .env("GTAP_FAULTS", "kill@0:w1")
+        .output()
+        .expect("spawn gtap");
+    assert!(out.status.success(), "stderr: {}", stderr(&out));
+    assert!(!stdout(&out).contains("faults:"), "{}", stdout(&out));
+}
+
+#[test]
+fn config_prints_the_fault_default() {
+    let out = gtap(&["config"]);
+    assert!(out.status.success());
+    assert!(stdout(&out).contains("GTAP_FAULTS               = off"), "{}", stdout(&out));
+}

@@ -362,3 +362,33 @@ fn steal_one_slower_than_batched() {
     let one = runners::run_fib(&e, 20, 0, false).unwrap().seconds;
     assert!(one > batched, "steal-one {one} must be slower than batched {batched}");
 }
+
+#[test]
+fn watchdog_never_trips_on_live_fault_free_runs() {
+    // The watchdog is always armed, even with faults off; its quiescence
+    // predicate must never fire on a healthy run. Each scenario below is
+    // idle-heavy or long enough to cross many WATCHDOG_INTERVAL
+    // boundaries, under both backoff pacers.
+    for backoff in Backoff::ALL {
+        let with_backoff = |mut e: Exec| -> Exec {
+            e.cfg.policy.backoff = backoff;
+            e
+        };
+        // idle-heavy: 16 workers fighting over a tiny task tree
+        let out = runners::run_fib(&with_backoff(Exec::gpu_thread(16, 32)), 8, 0, false).unwrap();
+        assert_eq!(out.stats.watchdog_trips, 0, "{backoff:?} idle-heavy");
+        assert_eq!(out.stats.faults_injected, 0);
+        // single worker: no steals, pure serial drain
+        let out = runners::run_fib(&with_backoff(Exec::gpu_thread(1, 32)), 13, 0, false).unwrap();
+        assert_eq!(out.stats.watchdog_trips, 0, "{backoff:?} single worker");
+        // deep serial chain: one worker, long dependent mergesort spine
+        let out =
+            runners::run_mergesort(&with_backoff(Exec::gpu_thread(1, 32)), 400, 16, 5).unwrap();
+        assert_eq!(out.stats.watchdog_trips, 0, "{backoff:?} serial chain");
+        assert!(
+            out.stats.cycles > gtap::coordinator::fault::watchdog::WATCHDOG_INTERVAL,
+            "scenario too short to exercise the watchdog: {}",
+            out.stats.cycles
+        );
+    }
+}
