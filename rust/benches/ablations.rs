@@ -30,13 +30,19 @@
 //! measurable. Placement, backoff and the SM tier stay at their defaults
 //! in the matrix to keep it readable; their main effects are covered in
 //! part 1.
+//!
+//! Part 3 — EPAQ locality under `--memsys modeled`: per-queue-class L1
+//! hit rates (`RunStats::memsys_by_class`) with EPAQ path-class placement
+//! vs the path-blind default on the same queue count, making the paper's
+//! locality claim for path-class queues directly measurable.
 
 use gtap::bench::emit::{markdown_table, write_csv, Series};
 use gtap::bench::runners::{self, Exec};
 use gtap::bench::sweep::{self, full_scale, measure};
 use gtap::coordinator::{
-    Backoff, Placement, PolicyConfig, QueueSelect, SmTier, StealAmount, VictimSelect,
+    Backoff, Placement, PolicyConfig, QueueSelect, RunStats, SmTier, StealAmount, VictimSelect,
 };
+use gtap::sim::MemSysMode;
 use gtap::util::stats::Summary;
 use std::path::PathBuf;
 
@@ -222,6 +228,58 @@ fn main() {
     .unwrap();
     println!("wrote {}", p.display());
 
+    // ---- part 3: EPAQ locality under the modeled memory system ---------
+    // EPAQ's locality claim, made measurable: with path-class queues a
+    // warp's acquired batch shares one dynamic path, so its coalesced
+    // transactions should hit L1 more often than batches drawn from
+    // path-blind queues. Both runs use 3 queues and `--memsys modeled`;
+    // only placement differs (EPAQ path classes vs the default).
+    // `RunStats::memsys_by_class` attributes each warp's traffic to the
+    // queue class its batch was acquired from; the modeled pipeline is
+    // deterministic per seed, so one run per side suffices.
+    println!("\n## epaq_locality (fib, --memsys modeled, 3 queues)\n");
+    let modeled_fib = |epaq: bool| -> RunStats {
+        runners::run_fib(
+            &Exec::gpu_thread(grid, 32)
+                .queues(3)
+                .memsys(MemSysMode::Modeled)
+                .seed(11),
+            fib_n,
+            10,
+            epaq,
+        )
+        .unwrap()
+        .stats
+    };
+    let epaq_stats = modeled_fib(true);
+    let base_stats = modeled_fib(false);
+    let rate = |s: &RunStats, q: usize| s.memsys_by_class.get(q).and_then(|c| c.l1_hit_rate());
+    let pct = |r: Option<f64>| {
+        r.map(|v| format!("{:.1}%", v * 100.0))
+            .unwrap_or_else(|| "-".to_string())
+    };
+    let classes = epaq_stats
+        .memsys_by_class
+        .len()
+        .max(base_stats.memsys_by_class.len());
+    for q in 0..classes {
+        let (e, b) = (rate(&epaq_stats, q), rate(&base_stats, q));
+        let delta = e
+            .zip(b)
+            .map(|(e, b)| format!("{:+.1} pts", 100.0 * (e - b)))
+            .unwrap_or_else(|| "n/a".to_string());
+        println!(
+            "  class {q}: epaq L1 {}  default L1 {}  ({delta})",
+            pct(e),
+            pct(b)
+        );
+    }
+    println!(
+        "  overall: epaq L1 {}  default L1 {}",
+        pct(epaq_stats.memsys.l1_hit_rate()),
+        pct(base_stats.memsys.l1_hit_rate())
+    );
+
     // ---- machine-readable record: BENCH_ablations.json -----------------
     // The ROADMAP "policy-matrix perf table" is recorded by CI from this
     // file instead of by hand; `variants` holds the single-knob medians,
@@ -288,6 +346,27 @@ fn main() {
             combos[best.0].label()
         );
     }
+    let rate_json = |r: Option<f64>| {
+        r.map(|v| format!("{v:.4}"))
+            .unwrap_or_else(|| "null".to_string())
+    };
+    let class_rates = |s: &RunStats| {
+        (0..classes)
+            .map(|q| rate_json(rate(s, q)))
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+    let epaq_json = format!(
+        "  \"epaq_locality\": {{\n    \
+         \"workload\": \"fib\", \"memsys\": \"modeled\", \"queues\": 3,\n    \
+         \"epaq_l1_by_class\": [{}],\n    \
+         \"default_l1_by_class\": [{}],\n    \
+         \"epaq_overall_l1\": {}, \"default_overall_l1\": {}\n  }}",
+        class_rates(&epaq_stats),
+        class_rates(&base_stats),
+        rate_json(epaq_stats.memsys.l1_hit_rate()),
+        rate_json(base_stats.memsys.l1_hit_rate()),
+    );
     let json = format!(
         "{{\n  \"bench\": \"ablations\",\n  \"measured\": true,\n  \
          \"command\": \"cargo bench --bench ablations\",\n  \
@@ -299,7 +378,7 @@ fn main() {
          \"best\": {{\"combo\": \"{}\", \"median_s\": {:.6e}}},\n    \
          \"recommended\": {{\"combo\": \"{}\", \"median_s\": {}, \
          \"matches_best\": {}}},\n    \
-         \"combos\": [\n{}\n    ]\n  }}\n}}\n",
+         \"combos\": [\n{}\n    ]\n  }},\n{}\n}}\n",
         sweep::runs(),
         smoke,
         fib_n,
@@ -315,6 +394,7 @@ fn main() {
             .unwrap_or_else(|| "null".to_string()),
         rec_matches,
         combo_json.join(",\n"),
+        epaq_json,
     );
     let path = repo_root().join("BENCH_ablations.json");
     std::fs::write(&path, json).expect("write BENCH_ablations.json");

@@ -1,4 +1,4 @@
-//! Hot-path microbenchmark: three interpreter tiers on identical segment
+//! Hot-path microbenchmark: four interpreter tiers on identical segment
 //! streams —
 //!
 //! * **ref** — the pre-refactor module-walking baseline
@@ -6,8 +6,12 @@
 //! * **decoded** — flattened per-instruction dispatch (`sim::interp` over
 //!   `ir::decoded`, the PR-1 engine);
 //! * **fused** — superblock block-at-a-time dispatch (`Interp::fused` over
-//!   `ir::superblock`, the production engine): folded per-block cycle
-//!   charges, task-data masks, macro-op streams.
+//!   `ir::superblock`): folded per-block cycle charges, task-data masks,
+//!   macro-op streams;
+//! * **traced** — trace-fused dispatch (`Interp::traced` over
+//!   `ir::traced`, the production engine): multi-block traces across
+//!   biased branches, block-local register demotion into a fixed scratch
+//!   array, and an inline cache keyed on the last-executed trace.
 //!
 //! The measured corpus is the segment populations of the paper's
 //! workloads: **fib** (recursive first segments, continuations, leaves in
@@ -24,8 +28,8 @@
 //!
 //! **Regression guard:** with `GTAP_BENCH_ENFORCE=1` (set by the CI
 //! smoke-bench job) the bench *fails* unless, on the fib and tree streams,
-//! `fused` is ≥ 1.3× faster than `decoded` and `decoded` stays ≥ 2.0×
-//! faster than `ref`.
+//! `traced` is ≥ 1.6× faster than `decoded`, `fused` is ≥ 1.3× faster
+//! than `decoded`, and `decoded` stays ≥ 2.0× faster than `ref`.
 
 use gtap::bench::sweep;
 use gtap::compiler::compile_default;
@@ -34,6 +38,7 @@ use gtap::coordinator::{GtapConfig, Session};
 use gtap::ir::bytecode::Module;
 use gtap::ir::decoded::DecodedModule;
 use gtap::ir::superblock::FusedModule;
+use gtap::ir::traced::TracedModule;
 use gtap::ir::types::Value;
 use gtap::sim::interp_ref::{RefInterp, RefLaneFrame};
 use gtap::sim::{DeviceSpec, Interp, LaneFrame, Memory, StepResult};
@@ -48,6 +53,7 @@ const SEGMENTS: usize = 200_000;
 /// Acceptance bars enforced under `GTAP_BENCH_ENFORCE=1` (fib + tree).
 const MIN_DECODED_OVER_REF: f64 = 2.0;
 const MIN_FUSED_OVER_DECODED: f64 = 1.3;
+const MIN_TRACED_OVER_DECODED: f64 = 1.6;
 
 const FIB_SRC: &str = r#"
     #pragma gtap function
@@ -109,6 +115,7 @@ struct SegmentFixture {
     module: Module,
     decoded: DecodedModule,
     fused: FusedModule,
+    traced: TracedModule,
     dev: DeviceSpec,
     records: RecordPool,
     mem: Memory,
@@ -124,6 +131,8 @@ impl SegmentFixture {
         let decoded = DecodedModule::decode(&module);
         let dev = DeviceSpec::h100();
         let fused = FusedModule::fuse(&decoded, &dev);
+        // static trace formation, exactly as the production scheduler builds it
+        let traced = TracedModule::build(&decoded, &fused, &dev, None);
         let fid = module.func_id(func).expect("entry exists");
         assert_eq!(fid, 0, "fixture assumes the entry is function 0");
         let words = module
@@ -141,6 +150,7 @@ impl SegmentFixture {
             module,
             decoded,
             fused,
+            traced,
             dev,
             records,
             mem,
@@ -171,16 +181,15 @@ impl SegmentFixture {
     fn time_tier(&mut self, tier: Tier, stream: &[(u16, i64)]) -> (f64, u64) {
         match tier {
             Tier::Ref => self.time_ref(stream),
-            Tier::Decoded => self.time_interp(stream, false),
-            Tier::Fused => self.time_interp(stream, true),
+            Tier::Decoded | Tier::Fused | Tier::Traced => self.time_interp(stream, tier),
         }
     }
 
-    fn time_interp(&mut self, stream: &[(u16, i64)], fused: bool) -> (f64, u64) {
-        let interp = if fused {
-            Interp::fused(&self.decoded, &self.fused, &self.dev, 1, false)
-        } else {
-            Interp::new(&self.decoded, &self.dev, 1, false)
+    fn time_interp(&mut self, stream: &[(u16, i64)], tier: Tier) -> (f64, u64) {
+        let interp = match tier {
+            Tier::Fused => Interp::fused(&self.decoded, &self.fused, &self.dev, 1, false),
+            Tier::Traced => Interp::traced(&self.decoded, &self.traced, &self.dev, 1, false),
+            _ => Interp::new(&self.decoded, &self.dev, 1, false),
         };
         let mut frame = LaneFrame::sized(&self.decoded);
         let mut log = Vec::new();
@@ -251,11 +260,12 @@ fn prime(records: &mut RecordPool, task: TaskId, kind: Kind, acc: u64, v: i64, i
     }
 }
 
-#[derive(Clone, Copy)]
+#[derive(Clone, Copy, PartialEq)]
 enum Tier {
     Ref,
     Decoded,
     Fused,
+    Traced,
 }
 
 struct Comparison {
@@ -263,8 +273,10 @@ struct Comparison {
     ref_median_s: f64,
     decoded_median_s: f64,
     fused_median_s: f64,
+    traced_median_s: f64,
     decoded_over_ref: f64,
     fused_over_decoded: f64,
+    traced_over_decoded: f64,
 }
 
 fn compare(
@@ -277,6 +289,7 @@ fn compare(
     let (_, c_ref) = fixture.time_tier(Tier::Ref, stream);
     let (_, c_dec) = fixture.time_tier(Tier::Decoded, stream);
     let (_, c_fus) = fixture.time_tier(Tier::Fused, stream);
+    let (_, c_trc) = fixture.time_tier(Tier::Traced, stream);
     assert_eq!(
         c_ref, c_dec,
         "{name}: decoded and reference interpreters disagree on simulated cycles"
@@ -285,30 +298,39 @@ fn compare(
         c_dec, c_fus,
         "{name}: fused and decoded interpreters disagree on simulated cycles"
     );
+    assert_eq!(
+        c_dec, c_trc,
+        "{name}: traced and decoded interpreters disagree on simulated cycles"
+    );
     // interleave reps so thermal/frequency drift hits all tiers equally
     let mut ref_s = Vec::with_capacity(reps);
     let mut dec_s = Vec::with_capacity(reps);
     let mut fus_s = Vec::with_capacity(reps);
+    let mut trc_s = Vec::with_capacity(reps);
     for _ in 0..reps {
         ref_s.push(fixture.time_tier(Tier::Ref, stream).0);
         dec_s.push(fixture.time_tier(Tier::Decoded, stream).0);
         fus_s.push(fixture.time_tier(Tier::Fused, stream).0);
+        trc_s.push(fixture.time_tier(Tier::Traced, stream).0);
     }
     let r = Summary::of(&ref_s).median;
     let d = Summary::of(&dec_s).median;
     let f = Summary::of(&fus_s).median;
+    let t = Summary::of(&trc_s).median;
     Comparison {
         name,
         ref_median_s: r,
         decoded_median_s: d,
         fused_median_s: f,
+        traced_median_s: t,
         decoded_over_ref: r / d,
         fused_over_decoded: d / f,
+        traced_over_decoded: d / t,
     }
 }
 
-/// End-to-end scheduler run (the production fused engine): fib(24) on 256
-/// warps.
+/// End-to-end scheduler run (the production trace-fused engine): fib(24)
+/// on 256 warps.
 fn end_to_end_fib(reps: usize) -> f64 {
     let samples: Vec<f64> = (0..reps)
         .map(|i| {
@@ -339,17 +361,23 @@ fn repo_root() -> PathBuf {
 fn json_entry(c: &Comparison) -> String {
     format!(
         "{{\"ref_median_s\": {:.6e}, \"decoded_median_s\": {:.6e}, \
-         \"fused_median_s\": {:.6e}, \"decoded_over_ref\": {:.3}, \
-         \"fused_over_decoded\": {:.3}}}",
-        c.ref_median_s, c.decoded_median_s, c.fused_median_s, c.decoded_over_ref,
+         \"fused_median_s\": {:.6e}, \"traced_median_s\": {:.6e}, \
+         \"decoded_over_ref\": {:.3}, \"fused_over_decoded\": {:.3}, \
+         \"traced_over_decoded\": {:.3}}}",
+        c.ref_median_s,
+        c.decoded_median_s,
+        c.fused_median_s,
+        c.traced_median_s,
+        c.decoded_over_ref,
         c.fused_over_decoded,
+        c.traced_over_decoded,
     )
 }
 
 fn main() {
     let reps = sweep::runs();
     let enforce = std::env::var("GTAP_BENCH_ENFORCE").map(|v| v == "1").unwrap_or(false);
-    println!("hotpath microbench: {SEGMENTS} segments/rep, {reps} reps, 3 tiers\n");
+    println!("hotpath microbench: {SEGMENTS} segments/rep, {reps} reps, 4 tiers\n");
 
     let mut fib = SegmentFixture::new(FIB_SRC, "fib", Kind::Fib);
     fib.attach_children();
@@ -369,17 +397,19 @@ fn main() {
 
     for c in [&fib_cmp, &tree_cmp, &nq_cmp] {
         println!(
-            "{:16} ref {:.4e} s  decoded {:.4e} s  fused {:.4e} s  \
-             (decoded/ref {:.2}x, fused/decoded {:.2}x)",
+            "{:16} ref {:.4e} s  decoded {:.4e} s  fused {:.4e} s  traced {:.4e} s  \
+             (decoded/ref {:.2}x, fused/decoded {:.2}x, traced/decoded {:.2}x)",
             c.name,
             c.ref_median_s,
             c.decoded_median_s,
             c.fused_median_s,
+            c.traced_median_s,
             c.decoded_over_ref,
             c.fused_over_decoded,
+            c.traced_over_decoded,
         );
     }
-    println!("fib(24) end-to-end (fused scheduler): {e2e:.4e} s median");
+    println!("fib(24) end-to-end (traced scheduler): {e2e:.4e} s median");
 
     let json = format!(
         "{{\n  \"bench\": \"hotpath\",\n  \"measured\": true,\n  \
@@ -387,6 +417,7 @@ fn main() {
          \"segments_per_rep\": {SEGMENTS},\n  \"runs\": {reps},\n  \
          \"thresholds\": {{\"decoded_over_ref_min\": {MIN_DECODED_OVER_REF}, \
          \"fused_over_decoded_min\": {MIN_FUSED_OVER_DECODED}, \
+         \"traced_over_decoded_min\": {MIN_TRACED_OVER_DECODED}, \
          \"enforced\": {enforce}}},\n  \
          \"results\": {{\n    \
          \"fib_segments\": {},\n    \
@@ -415,6 +446,12 @@ fn main() {
                 "{}: fused over decoded is {:.2}x (min {MIN_FUSED_OVER_DECODED}x)",
                 c.name,
                 c.fused_over_decoded
+            );
+            assert!(
+                c.traced_over_decoded >= MIN_TRACED_OVER_DECODED,
+                "{}: traced over decoded is {:.2}x (min {MIN_TRACED_OVER_DECODED}x)",
+                c.name,
+                c.traced_over_decoded
             );
         }
         println!("regression guard: all thresholds met");

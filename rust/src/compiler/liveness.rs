@@ -17,6 +17,40 @@ use super::cfg::{Cfg, NodeKind};
 use crate::ir::ast::*;
 use std::collections::HashSet;
 
+/// Live-in registers of a *straight-line* region: the registers read
+/// before any write, in linear order.
+///
+/// The backward fixed-point above collapses to a single forward pass on a
+/// single-entry, single-pass region — which is exactly what a trace
+/// (extended basic block) is. The trace-fusion register demotion in
+/// `ir::traced` reuses this as its "dead outside the trace" criterion: a
+/// register that is *not* live-in has every read preceded by an in-trace
+/// write, so demoting it to a trace-local scratch slot can never observe a
+/// stale value. Each element of `ops` is one instruction's
+/// `(reads, writes)` pair; instructions with internal write-then-read
+/// ordering (the fused macro-ops, which write their intermediate register
+/// before reading operands) are split by the caller into micro-steps.
+///
+/// Returns live-in registers in first-read order (deterministic — the
+/// demotion pass derives slot numbering from ordering, never from hash
+/// iteration).
+pub fn linear_live_in(ops: &[(Vec<u16>, Vec<u16>)]) -> Vec<u16> {
+    let mut written: HashSet<u16> = HashSet::new();
+    let mut live_set: HashSet<u16> = HashSet::new();
+    let mut live: Vec<u16> = Vec::new();
+    for (reads, writes) in ops {
+        for &r in reads {
+            if !written.contains(&r) && live_set.insert(r) {
+                live.push(r);
+            }
+        }
+        for &w in writes {
+            written.insert(w);
+        }
+    }
+    live
+}
+
 /// Result of spill analysis for one task function.
 #[derive(Clone, Debug, Default)]
 pub struct SpillAnalysis {
@@ -404,6 +438,39 @@ mod tests {
             "f",
         );
         assert_eq!(sa.num_taskwaits, 2);
+    }
+
+    #[test]
+    fn linear_live_in_reads_before_writes() {
+        // r0 read before any write -> live-in; r1 written first -> dead-in
+        let ops = vec![
+            (vec![0u16], vec![1u16]), // r1 = f(r0)
+            (vec![1], vec![2]),       // r2 = g(r1)
+            (vec![0, 2], vec![0]),    // r0 = h(r0, r2)
+        ];
+        assert_eq!(linear_live_in(&ops), vec![0]);
+    }
+
+    #[test]
+    fn linear_live_in_same_op_write_does_not_cover_read() {
+        // a read and a write of the same register in one op: the read
+        // happens first (standard operand order), so it is live-in
+        let ops = vec![(vec![3u16], vec![3u16])];
+        assert_eq!(linear_live_in(&ops), vec![3]);
+    }
+
+    #[test]
+    fn linear_live_in_micro_step_write_covers_later_read() {
+        // macro-op split into micro-steps: write tmp, then read it — the
+        // read is covered, so nothing is live-in
+        let ops = vec![(vec![], vec![5u16]), (vec![5u16], vec![6u16])];
+        assert!(linear_live_in(&ops).is_empty());
+    }
+
+    #[test]
+    fn linear_live_in_order_is_first_read_order() {
+        let ops = vec![(vec![9u16, 2, 9], vec![]), (vec![4u16], vec![])];
+        assert_eq!(linear_live_in(&ops), vec![9, 2, 4]);
     }
 
     #[test]

@@ -19,14 +19,17 @@
 //!    itself (batched deques / global queue / sequential Chase–Lev) is the
 //!    [`QueueSet`] chosen by `GtapConfig::scheduler`.
 //! 2. Execute the claimed tasks, one per lane. Lanes run the per-lane
-//!    interpreter in superblock-fused mode (`Interp::fused` over the
-//!    load-time [`DecodedModule`] + [`FusedModule`] pair): one table
-//!    lookup per straight-line block charges folded cycle sums, then only
-//!    the macro-op-fused effectful tail executes — cost-transparent, so
-//!    observable results match per-instruction dispatch bit for bit. The
-//!    warp's cost is the divergence-serialized combination
-//!    (`sim::divergence`). Payload calls may suspend for batched XLA
-//!    execution.
+//!    interpreter in trace-fused mode (`Interp::traced` over the
+//!    load-time [`DecodedModule`] + [`TracedModule`] pair): an
+//!    inline-cached lookup picks the trace headed at the entry pc, then
+//!    whole superblock *traces* — straight-line block sequences extended
+//!    across predictably-biased branches, with trace-dead registers
+//!    demoted to a dense scratch array — execute with one dispatch per
+//!    block and a side exit on any prediction miss. Tracing is
+//!    cost-transparent, so observable results match per-instruction
+//!    dispatch bit for bit. The warp's cost is the divergence-serialized
+//!    combination (`sim::divergence`). Payload calls may suspend for
+//!    batched XLA execution.
 //! 3. Apply effects: allocate children and route them to queues via
 //!    **Placement**, process joins and finishes, re-enqueue satisfied
 //!    continuations (keeping up to a warp's worth for immediate execution).
@@ -65,6 +68,7 @@ use super::records::{RecordPool, TaskId, NO_TASK};
 use crate::ir::bytecode::Module;
 use crate::ir::decoded::DecodedModule;
 use crate::ir::superblock::FusedModule;
+use crate::ir::traced::TracedModule;
 use crate::ir::types::Value;
 use crate::sim::config::DeviceSpec;
 use crate::sim::divergence::{self, LanePath};
@@ -144,6 +148,14 @@ pub struct RunStats {
     /// conflicts. All zero under the flat model, which keeps flat-mode
     /// `RunStats` byte-identical to the pre-memsys pins.
     pub memsys: MemSysStats,
+    /// Modeled memory-system counters split by the EPAQ queue class the
+    /// executing warp's batch was acquired from (index = queue-class
+    /// index; see `Scheduler::acquire` for the attribution rule). Lets
+    /// the ablations compare per-class L1 locality under EPAQ vs
+    /// class-blind placements. Empty — not zero-filled — under the flat
+    /// model, which keeps flat-mode `RunStats` byte-identical to the
+    /// pre-memsys pins.
+    pub memsys_by_class: Vec<MemSysStats>,
     /// Captured print_int/print_float output.
     pub output: Vec<String>,
 }
@@ -183,10 +195,15 @@ pub struct Scheduler<'a> {
     /// Load-time-flattened bytecode the interpreter dispatches over.
     decoded: DecodedModule,
     /// Superblock-fused form of `decoded` (folded block costs, macro-op
-    /// streams) — the engine lanes actually execute (`Interp::fused`).
-    /// Fusion is cost-transparent, so `RunStats` are bit-identical to
-    /// per-instruction decoded dispatch (and to the pinned monolith).
+    /// streams); the substrate traces are built from, and the upper-mid
+    /// dispatch tier in the bench/differential matrix.
     fused: FusedModule,
+    /// Trace-fused form of `fused` (superblocks extended across biased
+    /// branches, trace-local scratch regalloc) — what the engine lanes
+    /// actually execute (`Interp::traced`). Trace formation is
+    /// cost-transparent, so `RunStats` are bit-identical to
+    /// per-instruction decoded dispatch (and to the pinned monolith).
+    traced: TracedModule,
     /// The modeled memory system (`cfg.memsys`): per-SM L1s + shared L2
     /// charged at the warp-combine step from recorded access streams.
     /// Disabled (zero state, zero cost) under the flat default.
@@ -297,6 +314,10 @@ impl<'a> Scheduler<'a> {
         }
         let decoded = DecodedModule::decode(module);
         let fused = FusedModule::fuse(&decoded, dev);
+        // Static trace formation at load time: back-edge and avoid-exit
+        // heuristics only. (Profile-fed builds are available to tools via
+        // `TracedModule::build` with recorded branch counters.)
+        let traced = TracedModule::build(&decoded, &fused, dev, None);
         let frames = (0..batch_max).map(|_| LaneFrame::sized(&decoded)).collect();
         let queues = QueueSet::for_config(cfg);
         let sm_pool = SmPool::for_config(cfg, dev, queues.supports_sm_tier());
@@ -310,6 +331,7 @@ impl<'a> Scheduler<'a> {
             policy: cfg.policy,
             decoded,
             fused,
+            traced,
             memsys: MemSys::for_mode(cfg.memsys, dev),
             faults: if cfg.faults.is_active() {
                 Some(FaultState::new(&cfg.faults, n_workers))
@@ -338,9 +360,14 @@ impl<'a> Scheduler<'a> {
         &self.decoded
     }
 
-    /// The superblock-fused form the lanes dispatch over.
+    /// The superblock-fused substrate traces are built from.
     pub fn fused(&self) -> &FusedModule {
         &self.fused
+    }
+
+    /// The trace-fused form the lanes dispatch over.
+    pub fn traced(&self) -> &TracedModule {
+        &self.traced
     }
 
     /// Spawn the root task (the `#pragma gtap entry` of Program 4).
@@ -439,10 +466,14 @@ impl<'a> Scheduler<'a> {
     /// Acquire phase: fill `batch` from the immediate buffer, own queues
     /// (**QueueSelect** probe order), the SM-shared tier pool (**SmTier**),
     /// or steals (**VictimSelect** × **StealAmount**). Returns the cycles
-    /// charged. Stats invariant: the steal path is entered — and
-    /// `steal_attempts` counted — only when the queue organization supports
-    /// stealing and a victim exists.
-    fn acquire(&mut self, w: usize, now: u64, batch: &mut Vec<TaskId>) -> u64 {
+    /// charged plus the EPAQ queue-class index the batch is attributed to
+    /// (for per-class memory-locality stats): the popped/stolen class, or
+    /// the worker's cursor class for immediate-buffer and SM-pool batches
+    /// (the cursor tracks the class those tasks were kept from). Stats
+    /// invariant: the steal path is entered — and `steal_attempts`
+    /// counted — only when the queue organization supports stealing and a
+    /// victim exists.
+    fn acquire(&mut self, w: usize, now: u64, batch: &mut Vec<TaskId>) -> (u64, usize) {
         let dev = self.dev;
         let nq = self.cfg.num_queues;
         let policy = self.policy;
@@ -450,7 +481,7 @@ impl<'a> Scheduler<'a> {
 
         if !self.workers[w].immediate.is_empty() {
             batch.append(&mut self.workers[w].immediate);
-            return cost;
+            return (cost, self.workers[w].rr_queue % nq);
         }
 
         // probe own EPAQ queues in policy order from a policy-chosen start
@@ -464,7 +495,7 @@ impl<'a> Scheduler<'a> {
             self.stats.pops += 1;
             if op.taken > 0 {
                 policy.queue_select.commit(&mut self.workers[w].rr_queue, q);
-                return cost;
+                return (cost, q);
             }
         }
 
@@ -482,14 +513,14 @@ impl<'a> Scheduler<'a> {
                 cost += op.cycles;
                 if op.taken > 0 {
                     self.stats.sm_pool_hits += op.taken as u64;
-                    return cost;
+                    return (cost, self.workers[w].rr_queue % nq);
                 }
             }
         }
 
         // steal from other workers' queues
         if !self.queues.supports_steal() || self.workers.len() < 2 {
-            return cost;
+            return (cost, 0);
         }
         let n_workers = self.workers.len();
         for attempt in 0..STEAL_TRIES {
@@ -532,7 +563,7 @@ impl<'a> Scheduler<'a> {
                 + policy.victim_select.probe_overhead(dev);
             if op.taken > 0 {
                 self.stats.steals_ok += 1;
-                return cost;
+                return (cost, q);
             }
             // let the policy rotate the EPAQ cursor so the next try can
             // probe another queue class (Sticky declines)
@@ -540,7 +571,7 @@ impl<'a> Scheduler<'a> {
                 .queue_select
                 .on_steal_miss(&mut self.workers[w].rr_queue, nq);
         }
-        cost
+        (cost, 0)
     }
 
     /// Push `ids` onto `w`'s queue `q` at time `now`, honoring **SmTier**
@@ -673,7 +704,8 @@ impl<'a> Scheduler<'a> {
         batch.clear();
 
         // -- 1. acquire work ------------------------------------------------
-        cost += self.acquire(w, now + cost, &mut batch);
+        let (acq_cost, acq_class) = self.acquire(w, now + cost, &mut batch);
+        cost += acq_cost;
 
         if batch.is_empty() {
             self.scratch_batch = batch;
@@ -698,7 +730,7 @@ impl<'a> Scheduler<'a> {
             Granularity::Thread => 1,
             Granularity::Block => self.cfg.block_size as u32,
         };
-        let interp = Interp::fused(&self.decoded, &self.fused, dev, block_width, engine.is_some())
+        let interp = Interp::traced(&self.decoded, &self.traced, dev, block_width, engine.is_some())
             .recording(self.memsys.enabled());
         let mut outputs = std::mem::take(&mut self.scratch_outputs);
         outputs.clear();
@@ -787,13 +819,25 @@ impl<'a> Scheduler<'a> {
         // state touched, under the flat default.
         let mem_cycles = {
             let frames = &self.frames;
-            self.memsys.charge_warp(
+            let mut warp_stats = MemSysStats::default();
+            let c = self.memsys.charge_warp(
                 self.workers[w].sm,
                 &lanes,
                 |i| frames[i].accesses(),
                 dev,
-                &mut self.stats.memsys,
-            )
+                &mut warp_stats,
+            );
+            self.stats.memsys.add(&warp_stats);
+            // per-queue-class locality attribution (EPAQ ablation surface);
+            // the vec stays empty — keeping `RunStats` byte-identical to
+            // the flat-mode pins — unless the modeled memsys is active
+            if self.memsys.enabled() {
+                if self.stats.memsys_by_class.is_empty() {
+                    self.stats.memsys_by_class = vec![MemSysStats::default(); nq];
+                }
+                self.stats.memsys_by_class[acq_class].add(&warp_stats);
+            }
+            c
         };
         let busy_cycles = exec_cycles + mem_cycles;
         self.scratch_lanes = lanes;

@@ -16,6 +16,10 @@
 //!   straight-line superblocks with folded static cycle sums, task-data
 //!   touch masks, and a macro-op-fused instruction stream; what the
 //!   block-at-a-time engine (`Interp::fused`) dispatches over.
+//! * [`traced`] — superblocks extended into *traces* across predictable
+//!   (biased) branches, with trace-dead registers demoted into dense
+//!   scratch slots; what the trace-at-a-time engine (`Interp::traced`)
+//!   dispatches over, with side exits on any prediction miss.
 //! * [`layout`] — the compiler-generated task-data record layout: original
 //!   arguments, spilled locals, and the result field (§5.2.3, Program 6).
 //! * [`intrinsics`] — builtin functions callable from GTaP-C (serial leaf
@@ -28,12 +32,14 @@ pub mod decoded;
 pub mod intrinsics;
 pub mod layout;
 pub mod superblock;
+pub mod traced;
 pub mod types;
 
 pub use ast::*;
 pub use bytecode::*;
 pub use decoded::{DInsn, DecodedFunc, DecodedModule};
 pub use superblock::{FusedModule, Superblock};
+pub use traced::{Trace, TraceStep, TracedModule};
 pub use intrinsics::{Intrinsic, IntrinsicSig};
 pub use layout::TaskDataLayout;
 pub use types::{Type, Value};

@@ -98,7 +98,8 @@ pub struct FusedModule {
 }
 
 /// Does `insn` force the *following* instruction to start a new block?
-fn ends_block(insn: &DInsn) -> bool {
+/// (`pub(crate)` so `ir::traced` can assert trace-step invariants.)
+pub(crate) fn ends_block(insn: &DInsn) -> bool {
     matches!(
         insn,
         DInsn::Jmp { .. }

@@ -1,0 +1,764 @@
+//! Trace fusion: extended superblocks across biased branches, with
+//! block-local register allocation — the fourth dispatch tier.
+//!
+//! Superblock fusion (`ir::superblock`) stops at every branch, so
+//! branch-heavy irregular workloads (fib, tree, bfs) still pay a full
+//! dispatch round-trip — `block_of` lookup, block-entry charging, stream
+//! setup — at each `Br`, plus `LaneFrame` register indirection on every
+//! operand. [`TracedModule::build`] layers **traces** (extended basic
+//! blocks) on top of the fused partition:
+//!
+//! * **Trace formation** — starting at every superblock leader, fusion is
+//!   extended across the block's successor edge as long as the successor
+//!   is *predictable*: an unconditional `Jmp`/fall-through, or a `Br`
+//!   whose hot side is chosen by (in priority order) a recorded
+//!   [`BranchProfile`](crate::sim::profile::BranchProfile) bias, the
+//!   loop-back-edge heuristic (a backward target is a loop latch), or the
+//!   avoid-exit heuristic (when exactly one side leads straight to
+//!   `FinishTask`/`Trap`, predict the other — the cmp-against-cutoff
+//!   shape of recursive base cases). Growth stops at join/finish/trap
+//!   terminators, function boundaries, block revisits (one iteration per
+//!   trace — the back-edge re-enters the same trace via the interpreter's
+//!   inline cache), and a [`MAX_TRACE_BLOCKS`] cap.
+//! * **Side exits as pure prediction misses** — a trace stores *no*
+//!   control-flow decisions. The interpreter (`Interp::run_traced`)
+//!   executes one step's stream, computes the real successor pc (folding
+//!   the exact `divergence::br_event` for branches, exactly like per-insn
+//!   dispatch), and stays in the trace only if the next step *is* that
+//!   successor; otherwise it spills and leaves. Prediction quality moves
+//!   the side-exit rate — never cycles, path hashes, or register state.
+//! * **Block-local register allocation** — virtual registers that are
+//!   dead on entry to the trace (`compiler::liveness::linear_live_in`:
+//!   every read is preceded by an in-trace write) and not pinned by a
+//!   frame-bypassing consumer (spawn/intrinsic operand pools, intrinsic
+//!   payload destinations) are *demoted* to dense trace-local slots in a
+//!   fixed scratch array, tagged with [`SCRATCH_TAG`] in the re-emitted
+//!   streams. The interpreter loads every slot from the frame at trace
+//!   entry and spills all of them back at every exit (side exit, tail,
+//!   payload suspension), so frame state is bit-identical at each point
+//!   the frame is observable, regardless of where the trace is left.
+//!
+//! **Cost transparency invariant (four tiers).** Like superblock fusion,
+//! trace fusion changes *how* cycles, path hashes, and task-data
+//! discounts are computed, never their values: for any segment,
+//! ref / decoded / fused / traced dispatch produce bit-identical
+//! `SegmentOutput`, spawn lists, and `RunStats`.
+//! `rust/tests/interp_differential.rs` and `rust/tests/compiler_fuzz.rs`
+//! enforce this — including under an *inverted* (adversarial) branch
+//! profile that forces side-exit-heavy traces; `benches/hotpath.rs`
+//! measures the speedup.
+//!
+//! Like the fused fold, the trace fold bakes in one device's constants:
+//! a `TracedModule` is built per `(module, DeviceSpec)` pair, once per
+//! run, next to `FusedModule::fuse`.
+
+use std::collections::{HashMap, HashSet};
+
+use super::bytecode::{Reg, NO_PRIORITY_REG};
+use super::decoded::{DInsn, DecodedFunc, DecodedModule, GlobalPc};
+use super::superblock::{ends_block, FusedModule, Superblock};
+use crate::compiler::liveness::linear_live_in;
+use crate::sim::config::DeviceSpec;
+use crate::sim::profile::BranchProfile;
+
+/// High bit marking a register operand as a trace-local scratch slot:
+/// `reg & !SCRATCH_TAG` is the slot index. Demotion is skipped entirely
+/// for (pathological) modules whose register file reaches this bit.
+pub const SCRATCH_TAG: Reg = 0x8000;
+
+/// Scratch slots per trace (a fixed stack array in the interpreter, so
+/// trace entry stays allocation-free). Demotion is capped, not required —
+/// overflow registers simply stay in the frame.
+pub const MAX_TRACE_SCRATCH: usize = 32;
+
+/// Superblocks per trace. Workload families are dominated by a handful of
+/// short blocks; a small cap bounds build time and mispredict cost.
+pub const MAX_TRACE_BLOCKS: usize = 8;
+
+/// One superblock's worth of a trace: the block (copied, so the hot loop
+/// never touches `FusedModule` storage) plus its re-emitted,
+/// scratch-renamed stream in [`TracedModule::insns`].
+#[derive(Clone, Copy, Debug)]
+pub struct TraceStep {
+    /// The underlying superblock — folded costs, td masks, decoded range.
+    pub block: Superblock,
+    /// Renamed stream: `TracedModule::insns[stream_base..][..stream_len]`.
+    pub stream_base: u32,
+    pub stream_len: u32,
+}
+
+/// One trace: a predicted path of superblocks entered at `head`.
+#[derive(Clone, Copy, Debug)]
+pub struct Trace {
+    /// Entry pc — always a superblock leader. A trace is entered only here.
+    pub head: GlobalPc,
+    /// Steps: `TracedModule::steps[step_base..][..step_len]`.
+    pub step_base: u32,
+    pub step_len: u32,
+    /// Demoted registers: `TracedModule::spills[spill_base..][..spill_len]`,
+    /// indexed by scratch slot — slot `s` shadows frame register
+    /// `spills[spill_base + s]`.
+    pub spill_base: u32,
+    pub spill_len: u32,
+}
+
+/// A fused module extended into traces. Purely derived data; see the
+/// module docs.
+#[derive(Clone, Debug, Default)]
+pub struct TracedModule {
+    /// One trace per superblock leader, in block order.
+    pub traces: Vec<Trace>,
+    /// Trace index headed at each decoded pc (`u32::MAX` off-leader) —
+    /// every pc the dispatch loop can land on (branch targets, state
+    /// entries, fall-throughs of block terminators) is a leader and heads
+    /// a trace.
+    pub trace_of: Vec<u32>,
+    /// All traces' steps, contiguous in trace order.
+    pub steps: Vec<TraceStep>,
+    /// All steps' scratch-renamed streams, contiguous.
+    pub insns: Vec<DInsn>,
+    /// All traces' demoted-register lists (slot → original register).
+    pub spills: Vec<Reg>,
+    /// Device whose costs the underlying blocks folded in.
+    pub dev_name: &'static str,
+}
+
+impl TracedModule {
+    /// Grow one trace from every superblock leader of `fm`, demote
+    /// trace-dead registers, and re-emit the streams. `profile`, when
+    /// present, overrides the static branch heuristics with measured
+    /// biases — it affects trace shape (performance) only, never results.
+    pub fn build(
+        dm: &DecodedModule,
+        fm: &FusedModule,
+        dev: &DeviceSpec,
+        profile: Option<&BranchProfile>,
+    ) -> TracedModule {
+        debug_assert_eq!(fm.dev_name, dev.name, "fused fold is device-specific");
+        let mut tm = TracedModule {
+            traces: Vec::new(),
+            trace_of: vec![u32::MAX; dm.insns.len()],
+            steps: Vec::new(),
+            insns: Vec::new(),
+            spills: Vec::new(),
+            dev_name: dev.name,
+        };
+        // Registers colliding with the tag bit would alias scratch slots;
+        // such modules (>32767 registers) just skip demotion.
+        let demote_ok = dm.max_nregs < SCRATCH_TAG;
+        for df in &dm.funcs {
+            if df.insn_base >= df.insn_end {
+                continue;
+            }
+            let mut bi = fm.block_of[df.insn_base as usize] as usize;
+            while bi < fm.blocks.len() && fm.blocks[bi].start < df.insn_end {
+                tm.push_trace(dm, fm, df, bi, profile, demote_ok);
+                bi += 1;
+            }
+        }
+        tm
+    }
+
+    /// Build the trace headed at block `head_bi` of function `df`.
+    fn push_trace(
+        &mut self,
+        dm: &DecodedModule,
+        fm: &FusedModule,
+        df: &DecodedFunc,
+        head_bi: usize,
+        profile: Option<&BranchProfile>,
+        demote_ok: bool,
+    ) {
+        // -- 1. grow the block sequence along predicted successors --------
+        let mut seq: Vec<usize> = vec![head_bi];
+        while seq.len() < MAX_TRACE_BLOCKS {
+            let b = &fm.blocks[*seq.last().unwrap()];
+            let last_pc = b.start + b.len - 1;
+            let next = match dm.insns[last_pc as usize] {
+                // terminators a trace never crosses: segment/task ends
+                DInsn::PrepareJoin { .. } | DInsn::FinishTask | DInsn::Trap => break,
+                DInsn::Jmp { target } => target,
+                DInsn::Br { t, f, .. } => predict(dm, fm, profile, last_pc, t, f),
+                // Spawn / Intr / ParEnter / ParExit end blocks but fall
+                // through (intrinsic payload suspensions side-exit at run
+                // time like any other mispredict)
+                _ => b.start + b.len,
+            };
+            if next >= df.insn_end {
+                break;
+            }
+            let nbi = fm.block_of[next as usize] as usize;
+            debug_assert_eq!(fm.blocks[nbi].start, next, "successor must lead a block");
+            if seq.contains(&nbi) {
+                // one iteration per trace; the back-edge re-enters the
+                // same trace through the interpreter's inline cache
+                break;
+            }
+            seq.push(nbi);
+        }
+        // -- 2. demote trace-dead, unpinned registers ---------------------
+        let mut ops: Vec<(Vec<Reg>, Vec<Reg>)> = Vec::new();
+        let mut pinned: HashSet<Reg> = HashSet::new();
+        let mut order: Vec<Reg> = Vec::new();
+        let mut seen: HashSet<Reg> = HashSet::new();
+        for &bi in &seq {
+            for insn in fm.stream(&fm.blocks[bi]) {
+                let at = ops.len();
+                micro_ops(insn, &mut ops);
+                pin_regs(insn, dm, &mut pinned);
+                for (reads, writes) in &ops[at..] {
+                    for &r in reads.iter().chain(writes.iter()) {
+                        if seen.insert(r) {
+                            order.push(r);
+                        }
+                    }
+                }
+            }
+        }
+        let live_in: HashSet<Reg> = linear_live_in(&ops).into_iter().collect();
+        let mut slot_of: HashMap<Reg, Reg> = HashMap::new();
+        let spill_base = self.spills.len() as u32;
+        if demote_ok {
+            for &r in &order {
+                if slot_of.len() >= MAX_TRACE_SCRATCH {
+                    break;
+                }
+                if live_in.contains(&r) || pinned.contains(&r) {
+                    continue;
+                }
+                let slot = (self.spills.len() - spill_base as usize) as Reg;
+                slot_of.insert(r, SCRATCH_TAG | slot);
+                self.spills.push(r);
+            }
+        }
+        let spill_len = self.spills.len() as u32 - spill_base;
+        // -- 3. re-emit the streams with demoted operands renamed ---------
+        let step_base = self.steps.len() as u32;
+        for &bi in &seq {
+            let b = fm.blocks[bi];
+            // every step ends at a real block boundary: a terminator, the
+            // function end, or a pc that leads the next block
+            debug_assert!(
+                ends_block(&dm.insns[(b.start + b.len - 1) as usize])
+                    || b.start + b.len == df.insn_end
+                    || fm.blocks[fm.block_of[(b.start + b.len) as usize] as usize].start
+                        == b.start + b.len,
+                "step blocks end at block boundaries"
+            );
+            let stream_base = self.insns.len() as u32;
+            for insn in fm.stream(&b) {
+                self.insns.push(rename(*insn, &slot_of));
+            }
+            self.steps.push(TraceStep {
+                block: b,
+                stream_base,
+                stream_len: self.insns.len() as u32 - stream_base,
+            });
+        }
+        let ti = self.traces.len() as u32;
+        let head = fm.blocks[head_bi].start;
+        self.trace_of[head as usize] = ti;
+        self.traces.push(Trace {
+            head,
+            step_base,
+            step_len: self.steps.len() as u32 - step_base,
+            spill_base,
+            spill_len,
+        });
+    }
+
+    /// The trace headed at decoded pc `pc` (must be a block leader).
+    #[inline]
+    pub fn trace_at(&self, pc: GlobalPc) -> &Trace {
+        let ti = self.trace_of[pc as usize];
+        debug_assert_ne!(ti, u32::MAX, "pc {pc} must lead a trace");
+        &self.traces[ti as usize]
+    }
+
+    /// The steps of `t`.
+    #[inline]
+    pub fn steps_of(&self, t: &Trace) -> &[TraceStep] {
+        &self.steps[t.step_base as usize..(t.step_base + t.step_len) as usize]
+    }
+
+    /// The renamed stream of `s`.
+    #[inline]
+    pub fn stream(&self, s: &TraceStep) -> &[DInsn] {
+        &self.insns[s.stream_base as usize..(s.stream_base + s.stream_len) as usize]
+    }
+
+    /// The demoted registers of `t`, indexed by scratch slot.
+    #[inline]
+    pub fn spills_of(&self, t: &Trace) -> &[Reg] {
+        &self.spills[t.spill_base as usize..(t.spill_base + t.spill_len) as usize]
+    }
+}
+
+/// Predict the hot side of the `Br` at `br_pc`. Priority: recorded
+/// profile bias, then loop back-edge (a backward target is a loop latch),
+/// then avoid-exit (if exactly one side's block terminates the task,
+/// predict the other — the recursive base-case/cutoff shape), then
+/// not-taken (fall-through). Affects trace shape only — never results.
+fn predict(
+    dm: &DecodedModule,
+    fm: &FusedModule,
+    profile: Option<&BranchProfile>,
+    br_pc: GlobalPc,
+    t: GlobalPc,
+    f: GlobalPc,
+) -> GlobalPc {
+    if let Some(taken) = profile.and_then(|p| p.bias(br_pc)) {
+        return if taken { t } else { f };
+    }
+    if t <= br_pc {
+        return t;
+    }
+    if f <= br_pc {
+        return f;
+    }
+    let exits = |target: GlobalPc| {
+        let b = &fm.blocks[fm.block_of[target as usize] as usize];
+        matches!(
+            dm.insns[(b.start + b.len - 1) as usize],
+            DInsn::FinishTask | DInsn::Trap
+        )
+    };
+    match (exits(t), exits(f)) {
+        (true, false) => f,
+        (false, true) => t,
+        _ => f,
+    }
+}
+
+/// Append `insn`'s register accesses as `(reads, writes)` micro-steps in
+/// execution order, for [`linear_live_in`]. Macro-ops split into their
+/// pair's micro-steps because they write the intermediate register
+/// *before* reading operands (so `tmp` self-feeding is not a live-in).
+/// Registers consumed through the frame-bypassing operand pools
+/// (spawn/intrinsic args) are deliberately absent — they are pinned by
+/// [`pin_regs`] instead.
+fn micro_ops(insn: &DInsn, ops: &mut Vec<(Vec<Reg>, Vec<Reg>)>) {
+    match *insn {
+        DInsn::Const { dst, .. } => ops.push((vec![], vec![dst])),
+        DInsn::Mov { dst, src } => ops.push((vec![src], vec![dst])),
+        DInsn::Bin { dst, a, b, .. } => ops.push((vec![a, b], vec![dst])),
+        DInsn::Un { dst, a, .. } => ops.push((vec![a], vec![dst])),
+        DInsn::Jmp { .. } => {}
+        DInsn::Br { cond, .. } => ops.push((vec![cond], vec![])),
+        DInsn::LdG { dst, addr, .. } => ops.push((vec![addr], vec![dst])),
+        DInsn::StG { addr, src, .. } => ops.push((vec![addr, src], vec![])),
+        DInsn::LdTd { dst, .. } => ops.push((vec![], vec![dst])),
+        DInsn::StTd { src, .. } => ops.push((vec![src], vec![])),
+        DInsn::Spawn {
+            queue, priority, ..
+        } => {
+            let mut reads = vec![queue];
+            if priority != NO_PRIORITY_REG {
+                reads.push(priority);
+            }
+            ops.push((reads, vec![]));
+        }
+        DInsn::PrepareJoin { queue, .. } => ops.push((vec![queue], vec![])),
+        DInsn::FinishTask => {}
+        DInsn::ChildResult { dst, .. } => ops.push((vec![], vec![dst])),
+        // args read from the pool (pinned); dst written through the frame
+        // on payload resume (pinned) — no renameable accesses
+        DInsn::Intr { .. } => {}
+        // `trips` is folded by the compiler; the runtime never reads it
+        DInsn::ParEnter { .. } => {}
+        DInsn::ParExit | DInsn::Trap => {}
+        DInsn::CmpBr { dst, a, b, .. } => ops.push((vec![a, b], vec![dst])),
+        DInsn::ConstBinR { dst, a, tmp, .. } => {
+            ops.push((vec![], vec![tmp]));
+            ops.push((vec![a, tmp], vec![dst]));
+        }
+        DInsn::ConstBinL { dst, b, tmp, .. } => {
+            ops.push((vec![], vec![tmp]));
+            ops.push((vec![b, tmp], vec![dst]));
+        }
+        DInsn::LdTdBin {
+            dst, a, b, tmp, ..
+        } => {
+            ops.push((vec![], vec![tmp]));
+            ops.push((vec![a, b], vec![dst]));
+        }
+    }
+}
+
+/// Pin registers that bypass the renamed stream: spawn/intrinsic operand
+/// pools are read straight from `frame.regs` by the runtime (the pool
+/// lives in `DecodedModule::args`, untouched by renaming), and an
+/// intrinsic destination is written straight to the frame by the payload
+/// resume path. Pinned registers are never demoted.
+fn pin_regs(insn: &DInsn, dm: &DecodedModule, pinned: &mut HashSet<Reg>) {
+    match *insn {
+        DInsn::Spawn { arg_base, argc, .. } => {
+            for &r in &dm.args[arg_base as usize..arg_base as usize + argc as usize] {
+                pinned.insert(r);
+            }
+        }
+        DInsn::Intr {
+            dst,
+            arg_base,
+            argc,
+            ..
+        } => {
+            for &r in &dm.args[arg_base as usize..arg_base as usize + argc as usize] {
+                pinned.insert(r);
+            }
+            pinned.insert(dst);
+        }
+        _ => {}
+    }
+}
+
+/// Re-emit `insn` with demoted register operands renamed to their tagged
+/// scratch slot. Operand-pool references (`arg_base`) are left alone —
+/// pool registers are pinned. `ParEnter::trips` is renamed for
+/// consistency but never demoted in practice (the runtime ignores it).
+fn rename(insn: DInsn, slot_of: &HashMap<Reg, Reg>) -> DInsn {
+    let m = |r: Reg| slot_of.get(&r).copied().unwrap_or(r);
+    match insn {
+        DInsn::Const { dst, val } => DInsn::Const { dst: m(dst), val },
+        DInsn::Mov { dst, src } => DInsn::Mov {
+            dst: m(dst),
+            src: m(src),
+        },
+        DInsn::Bin { op, dst, a, b } => DInsn::Bin {
+            op,
+            dst: m(dst),
+            a: m(a),
+            b: m(b),
+        },
+        DInsn::Un { op, dst, a } => DInsn::Un {
+            op,
+            dst: m(dst),
+            a: m(a),
+        },
+        DInsn::Jmp { target } => DInsn::Jmp { target },
+        DInsn::Br { cond, t, f } => DInsn::Br {
+            cond: m(cond),
+            t,
+            f,
+        },
+        DInsn::LdG { dst, addr, cache } => DInsn::LdG {
+            dst: m(dst),
+            addr: m(addr),
+            cache,
+        },
+        DInsn::StG { addr, src, cache } => DInsn::StG {
+            addr: m(addr),
+            src: m(src),
+            cache,
+        },
+        DInsn::LdTd { dst, off } => DInsn::LdTd { dst: m(dst), off },
+        DInsn::StTd { off, src } => DInsn::StTd { off, src: m(src) },
+        DInsn::Spawn {
+            func,
+            arg_base,
+            argc,
+            queue,
+            priority,
+        } => DInsn::Spawn {
+            func,
+            arg_base,
+            argc,
+            queue: m(queue),
+            priority: if priority == NO_PRIORITY_REG {
+                priority
+            } else {
+                m(priority)
+            },
+        },
+        DInsn::PrepareJoin { next_state, queue } => DInsn::PrepareJoin {
+            next_state,
+            queue: m(queue),
+        },
+        DInsn::FinishTask => DInsn::FinishTask,
+        DInsn::ChildResult { dst, slot } => DInsn::ChildResult { dst: m(dst), slot },
+        // dst pinned (payload resume writes the frame directly): identity
+        DInsn::Intr {
+            id,
+            dst,
+            arg_base,
+            argc,
+            has_dst,
+        } => {
+            debug_assert!(!slot_of.contains_key(&dst), "intrinsic dst is pinned");
+            DInsn::Intr {
+                id,
+                dst,
+                arg_base,
+                argc,
+                has_dst,
+            }
+        }
+        DInsn::ParEnter { trips } => DInsn::ParEnter { trips: m(trips) },
+        DInsn::ParExit => DInsn::ParExit,
+        DInsn::Trap => DInsn::Trap,
+        DInsn::CmpBr { op, dst, a, b, t, f } => DInsn::CmpBr {
+            op,
+            dst: m(dst),
+            a: m(a),
+            b: m(b),
+            t,
+            f,
+        },
+        DInsn::ConstBinR {
+            op,
+            dst,
+            a,
+            tmp,
+            val,
+        } => DInsn::ConstBinR {
+            op,
+            dst: m(dst),
+            a: m(a),
+            tmp: m(tmp),
+            val,
+        },
+        DInsn::ConstBinL {
+            op,
+            dst,
+            b,
+            tmp,
+            val,
+        } => DInsn::ConstBinL {
+            op,
+            dst: m(dst),
+            b: m(b),
+            tmp: m(tmp),
+            val,
+        },
+        DInsn::LdTdBin {
+            op,
+            dst,
+            a,
+            b,
+            tmp,
+            off,
+        } => DInsn::LdTdBin {
+            op,
+            dst: m(dst),
+            a: m(a),
+            b: m(b),
+            tmp: m(tmp),
+            off,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile_default;
+    use crate::ir::superblock::fused_stream_decoded_len;
+
+    const FIB: &str = r#"
+        #pragma gtap function
+        int fib(int n) {
+            if (n < 2) return n;
+            int a; int b;
+            #pragma gtap task queue(1)
+            a = fib(n - 1);
+            #pragma gtap task queue(1)
+            b = fib(n - 2);
+            #pragma gtap taskwait queue(2)
+            return a + b;
+        }
+    "#;
+
+    const LOOP: &str = r#"
+        #pragma gtap function
+        int sum(int n) {
+            int s;
+            s = 0;
+            while (n > 0) {
+                s = s + n;
+                n = n - 1;
+            }
+            return s;
+        }
+    "#;
+
+    fn build_src(
+        src: &str,
+        profile: Option<&BranchProfile>,
+    ) -> (DecodedModule, FusedModule, TracedModule) {
+        let m = compile_default(src).unwrap();
+        let dm = DecodedModule::decode(&m);
+        let dev = DeviceSpec::h100();
+        let fm = FusedModule::fuse(&dm, &dev);
+        let tm = TracedModule::build(&dm, &fm, &dev, profile);
+        (dm, fm, tm)
+    }
+
+    #[test]
+    fn every_leader_heads_a_trace() {
+        for src in [FIB, LOOP] {
+            let (_, fm, tm) = build_src(src, None);
+            assert_eq!(tm.traces.len(), fm.blocks.len());
+            for b in &fm.blocks {
+                let t = tm.trace_at(b.start);
+                assert_eq!(t.head, b.start);
+                assert_eq!(tm.steps_of(t)[0].block.start, b.start);
+            }
+        }
+    }
+
+    #[test]
+    fn traces_stay_in_function_and_bounded() {
+        let (dm, _, tm) = build_src(FIB, None);
+        for t in &tm.traces {
+            let steps = tm.steps_of(t);
+            assert!(!steps.is_empty() && steps.len() <= MAX_TRACE_BLOCKS);
+            let df = dm
+                .funcs
+                .iter()
+                .find(|d| t.head >= d.insn_base && t.head < d.insn_end)
+                .unwrap();
+            let mut starts = HashSet::new();
+            for s in steps {
+                assert!(s.block.start >= df.insn_base);
+                assert!(s.block.start + s.block.len <= df.insn_end);
+                assert!(starts.insert(s.block.start), "no block revisits");
+            }
+        }
+    }
+
+    #[test]
+    fn step_streams_account_every_decoded_insn() {
+        let (_, fm, tm) = build_src(FIB, None);
+        for t in &tm.traces {
+            for s in tm.steps_of(t) {
+                assert_eq!(
+                    fused_stream_decoded_len(tm.stream(s)),
+                    s.block.len as usize
+                );
+                // the renamed stream is shape-identical to the fused one
+                assert_eq!(s.stream_len, fm.blocks[fm.block_of[s.block.start as usize] as usize].fused_len);
+            }
+        }
+    }
+
+    #[test]
+    fn fib_entry_trace_extends_past_the_cutoff_branch() {
+        // `n < 2` guards a base case ending in FinishTask; the avoid-exit
+        // heuristic must keep the trace on the recursive side
+        let (dm, _, tm) = build_src(FIB, None);
+        let t = tm.trace_at(dm.funcs[0].insn_base);
+        assert!(
+            t.step_len > 1,
+            "entry trace must cross the biased base-case branch"
+        );
+    }
+
+    #[test]
+    fn loop_back_edge_forms_a_multi_block_trace() {
+        let (dm, fm, tm) = build_src(LOOP, None);
+        // the loop-header block's trace follows the backward/body side
+        let multi = tm.traces.iter().filter(|t| t.step_len > 1).count();
+        assert!(multi > 0, "loop must yield at least one extended trace");
+        // and some branch in the module has a backward target that the
+        // static heuristic prefers
+        let mut found_back_edge = false;
+        for (pc, insn) in dm.insns.iter().enumerate() {
+            if let DInsn::Br { t, f, .. } = *insn {
+                let pc = pc as GlobalPc;
+                if t <= pc || f <= pc {
+                    found_back_edge = true;
+                    let pred = predict(&dm, &fm, None, pc, t, f);
+                    assert!(pred <= pc, "backward target must be predicted");
+                }
+            }
+        }
+        assert!(found_back_edge, "while loop must lower to a back-edge");
+    }
+
+    #[test]
+    fn demotion_respects_liveness_and_pins() {
+        for src in [FIB, LOOP] {
+            let (dm, fm, tm) = build_src(src, None);
+            for t in &tm.traces {
+                let spills = tm.spills_of(t);
+                // recompute live-in + pins over the original fused streams
+                let mut ops = Vec::new();
+                let mut pinned = HashSet::new();
+                for s in tm.steps_of(t) {
+                    let b = &fm.blocks[fm.block_of[s.block.start as usize] as usize];
+                    for insn in fm.stream(b) {
+                        micro_ops(insn, &mut ops);
+                        pin_regs(insn, &dm, &mut pinned);
+                    }
+                }
+                let live_in: HashSet<Reg> = linear_live_in(&ops).into_iter().collect();
+                let mut uniq = HashSet::new();
+                for &r in spills {
+                    assert!(r < dm.max_nregs, "spill list holds real registers");
+                    assert!(!live_in.contains(&r), "no live-in register is demoted");
+                    assert!(!pinned.contains(&r), "no pinned register is demoted");
+                    assert!(uniq.insert(r), "one slot per register");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tagged_operands_map_to_valid_slots() {
+        let (_, _, tm) = build_src(FIB, None);
+        let mut any_tagged = false;
+        for t in &tm.traces {
+            for s in tm.steps_of(t) {
+                let mut ops = Vec::new();
+                for insn in tm.stream(s) {
+                    micro_ops(insn, &mut ops);
+                }
+                for (reads, writes) in &ops {
+                    for &r in reads.iter().chain(writes.iter()) {
+                        if r & SCRATCH_TAG != 0 {
+                            any_tagged = true;
+                            assert!(((r & !SCRATCH_TAG) as u32) < t.spill_len);
+                        }
+                    }
+                }
+            }
+        }
+        assert!(any_tagged, "fib must demote at least one temp register");
+    }
+
+    #[test]
+    fn profile_bias_overrides_static_prediction() {
+        // find fib's cutoff branch and force both directions via profile
+        let (dm, fm, _) = build_src(FIB, None);
+        let (br_pc, t_pc, f_pc) = dm
+            .insns
+            .iter()
+            .enumerate()
+            .find_map(|(pc, i)| match *i {
+                DInsn::Br { t, f, .. } => Some((pc as GlobalPc, t, f)),
+                _ => None,
+            })
+            .expect("fib has a branch");
+        let mut p = BranchProfile::new(dm.insns.len());
+        for _ in 0..16 {
+            p.record(br_pc, true);
+        }
+        assert_eq!(p.bias(br_pc), Some(true));
+        assert_eq!(p.inverted().bias(br_pc), Some(false));
+        let head = fm.blocks[fm.block_of[br_pc as usize] as usize].start;
+        let (_, _, tm_t) = build_src(FIB, Some(&p));
+        let (_, _, tm_f) = build_src(FIB, Some(&p.inverted()));
+        let second = |tm: &TracedModule| {
+            let t = tm.trace_at(head);
+            tm.steps_of(t).get(1).map(|s| s.block.start)
+        };
+        assert_eq!(second(&tm_t), Some(t_pc));
+        assert_eq!(second(&tm_f), Some(f_pc));
+    }
+
+    #[test]
+    fn device_name_recorded() {
+        let (_, _, tm) = build_src(FIB, None);
+        assert_eq!(tm.dev_name, "h100");
+    }
+}

@@ -17,6 +17,11 @@
 //! documented pessimism that keeps the model O(lanes).) EPAQ's speedup
 //! (Fig. 10/11) emerges from this model: queue selection at spawn/re-entry
 //! groups same-path tasks into the same warp fetch, collapsing the sum.
+//!
+//! All four dispatch tiers fold the *same* per-branch event into the
+//! hash — the trace-fused tier's side exits apply the exact fold the
+//! decoded loop would (pre-computed at trace build time), so lanes group
+//! identically no matter which engine executed them.
 
 /// One lane's contribution: the dynamic-path hash and its cycle cost.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -7,25 +7,36 @@
 //!
 //! Dispatch runs over a [`DecodedModule`] (see `ir::decoded`): one
 //! contiguous pre-resolved instruction array shared by all functions, with
-//! global jump targets and pooled operand lists. The production engine
-//! ([`Interp::fused`], what the scheduler constructs) goes one layer
-//! further and dispatches a **superblock** at a time over an
+//! global jump targets and pooled operand lists. [`Interp::fused`] goes
+//! one layer further and dispatches a **superblock** at a time over an
 //! [`ir::superblock::FusedModule`](crate::ir::superblock): one table
 //! lookup charges a block's folded static cycle sums and resolves the
 //! task-data first-touch discount against precomputed masks, then only the
 //! effectful tail — the macro-op-fused dataflow plus the terminator —
-//! executes. Fusion is *cost-transparent*: per-instruction and per-block
-//! dispatch produce bit-identical `SegmentOutput`s (cycles, path hashes)
-//! and spawn lists, so `RunStats` cannot tell them apart.
+//! executes. The production engine ([`Interp::traced`], what the scheduler
+//! constructs) dispatches a **trace** at a time over an
+//! [`ir::traced::TracedModule`](crate::ir::traced): superblocks extended
+//! across predicted-biased branches, with trace-dead registers demoted
+//! into a fixed scratch array (loaded at trace entry, spilled at every
+//! exit) and an **inline cache** — each lane remembers its last-executed
+//! trace and re-enters it without the `trace_of` lookup, since each
+//! workload family is dominated by a handful of hot blocks. A side exit
+//! (prediction miss) folds the exact same `divergence::br_event` as
+//! per-instruction dispatch and leaves the trace with the frame fully
+//! spilled. Fusion at both layers is *cost-transparent*: per-instruction,
+//! per-block, and per-trace dispatch produce bit-identical
+//! `SegmentOutput`s (cycles, path hashes) and spawn lists, so `RunStats`
+//! cannot tell the tiers apart.
 //!
 //! Combined with lane frames pre-sized from the decoded metadata
 //! ([`LaneFrame::sized`]) and device costs folded into a small constant
 //! table at interpreter construction, steady-state segment execution
 //! performs **zero heap allocations** — `rust/tests/zero_alloc.rs`
-//! enforces this under a counting allocator for both engines. The
-//! pre-refactor module-walking interpreter is kept as
-//! [`super::interp_ref::RefInterp`] for differential testing and as the
-//! `benches/hotpath.rs` baseline (ref vs decoded vs fused).
+//! enforces this under a counting allocator for all engines (the trace
+//! scratch array lives on the stack). The pre-refactor module-walking
+//! interpreter is kept as [`super::interp_ref::RefInterp`] for
+//! differential testing and as the `benches/hotpath.rs` baseline
+//! (ref vs decoded vs fused vs traced).
 //!
 //! The interpreter is *resumable*: when the task calls the `payload`
 //! intrinsic and an XLA engine is attached, execution suspends with
@@ -46,19 +57,21 @@
 //! killed worker or re-enqueued by the watchdog was acquired but never
 //! effect-applied, so re-dispatching it replays the segment from the same
 //! boundary and every segment's effects land exactly once — results under
-//! any fault plan stay bit-identical to the fault-free run, in all three
-//! interpreter tiers (ref / decoded / fused) alike.
+//! any fault plan stay bit-identical to the fault-free run, in all four
+//! interpreter tiers (ref / decoded / fused / traced) alike.
 
 use super::config::DeviceSpec;
 use super::divergence;
 use super::intrinsics::{self, IntrCtx};
 use super::memory::Memory;
 use super::memsys::{td_addr, AccessKind, MemAccess};
+use super::profile::{BranchProfile, BranchSink, NoProfile};
 use crate::coordinator::records::{RecordPool, TaskId};
 use crate::ir::bytecode::{BinKind, CacheOp, FuncId, Reg, UnKind, NO_PRIORITY_REG};
 use crate::ir::decoded::{DInsn, DecodedModule};
 use crate::ir::intrinsics::Intrinsic;
 use crate::ir::superblock::FusedModule;
+use crate::ir::traced::{TracedModule, MAX_TRACE_SCRATCH, SCRATCH_TAG};
 use crate::ir::types::Value;
 
 /// Max arguments of a task function (spawn requests are fixed-size to keep
@@ -147,6 +160,13 @@ pub struct LaneFrame {
     par_depth: u32,
     par_compute: u64,
     par_mem: u64,
+    /// Inline-cache slot for traced dispatch: index of the last trace this
+    /// lane executed. Checked (bounds + head pc) before the `trace_of`
+    /// lookup, and deliberately *not* cleared by [`LaneFrame::reset`] —
+    /// hot workloads re-enter the same handful of traces segment after
+    /// segment, which is exactly what the cache exploits; a stale index is
+    /// harmless because the head check rejects it.
+    last_trace: u32,
 }
 
 impl LaneFrame {
@@ -181,6 +201,7 @@ impl LaneFrame {
             par_depth: 0,
             par_compute: 0,
             par_mem: 0,
+            last_trace: 0,
         }
     }
 
@@ -284,11 +305,16 @@ pub struct Interp<'a> {
     /// one instruction at a time. Cost-transparent: bit-identical
     /// `SegmentOutput` either way.
     fused: Option<&'a FusedModule>,
+    /// Trace-fused form: when present, [`Interp::run`] dispatches one
+    /// *trace* at a time (extended superblocks, scratch-demoted registers,
+    /// per-lane inline cache) with side exits on prediction misses. Takes
+    /// precedence over `fused`. Cost-transparent like the other tiers.
+    traced: Option<&'a TracedModule>,
     /// Modeled memory system (`--memsys modeled`): record per-lane access
     /// streams instead of charging flat per-access latencies — the cost is
     /// applied once, at the scheduler's warp-combine step. Off by default
     /// (the flat model); enable with [`Interp::recording`]. The gating is
-    /// identical across all three interpreter tiers, so `SegmentOutput`s
+    /// identical across all four interpreter tiers, so `SegmentOutput`s
     /// and access streams stay bit-identical tier to tier in either mode.
     record: bool,
     costs: Costs,
@@ -309,14 +335,15 @@ impl<'a> Interp<'a> {
             block_width,
             xla_payload,
             fused: None,
+            traced: None,
             record: false,
             costs: Costs::of(dev),
         }
     }
 
-    /// Superblock-fused block-at-a-time dispatch — the production engine
-    /// (what the scheduler runs). `fm` must have been fused for the same
-    /// module and device.
+    /// Superblock-fused block-at-a-time dispatch (the PR-4 engine; kept as
+    /// the upper-mid-tier contender for benches and differential tests).
+    /// `fm` must have been fused for the same module and device.
     pub fn fused(
         decoded: &'a DecodedModule,
         fm: &'a FusedModule,
@@ -336,6 +363,35 @@ impl<'a> Interp<'a> {
             block_width,
             xla_payload,
             fused: Some(fm),
+            traced: None,
+            record: false,
+            costs: Costs::of(dev),
+        }
+    }
+
+    /// Trace-fused trace-at-a-time dispatch — the production engine (what
+    /// the scheduler runs). `tm` must have been built for the same module
+    /// and device.
+    pub fn traced(
+        decoded: &'a DecodedModule,
+        tm: &'a TracedModule,
+        dev: &'a DeviceSpec,
+        block_width: u32,
+        xla_payload: bool,
+    ) -> Interp<'a> {
+        debug_assert_eq!(
+            tm.dev_name, dev.name,
+            "TracedModule folded {} costs but executing on {}",
+            tm.dev_name, dev.name
+        );
+        debug_assert_eq!(tm.trace_of.len(), decoded.insns.len());
+        Interp {
+            decoded,
+            dev,
+            block_width,
+            xla_payload,
+            fused: None,
+            traced: Some(tm),
             record: false,
             costs: Costs::of(dev),
         }
@@ -347,7 +403,8 @@ impl<'a> Interp<'a> {
     /// inside `parallel_for` regions are exempt in both directions: they
     /// keep the flat cooperative model (charges divide by the block width
     /// at `ParExit`), which is already the block-cooperative streaming
-    /// story — the transaction model prices per-lane task streams. See
+    /// story — the transaction model prices per-lane task streams. The
+    /// gating is identical across all four interpreter tiers. See
     /// `sim::memsys` for the cost pipeline.
     pub fn recording(mut self, on: bool) -> Interp<'a> {
         self.record = on;
@@ -400,9 +457,43 @@ impl<'a> Interp<'a> {
         records: &mut RecordPool,
         log: &mut Vec<String>,
     ) -> StepResult {
+        if let Some(tm) = self.traced {
+            return self.run_traced(tm, frame, mem, records, log);
+        }
         if let Some(fm) = self.fused {
             return self.run_fused(fm, frame, mem, records, log);
         }
+        self.run_decoded(frame, mem, records, log, &mut NoProfile)
+    }
+
+    /// Per-instruction dispatch with branch-direction counters — the
+    /// profile feed for trace formation
+    /// ([`TracedModule::build`](crate::ir::traced::TracedModule::build)).
+    /// Always runs the decoded loop regardless of which tier this
+    /// interpreter was constructed for; the sink only observes branch
+    /// events, so the `SegmentOutput` is the usual bit-identical one.
+    pub fn run_profiled(
+        &self,
+        frame: &mut LaneFrame,
+        mem: &mut Memory,
+        records: &mut RecordPool,
+        log: &mut Vec<String>,
+        profile: &mut BranchProfile,
+    ) -> StepResult {
+        self.run_decoded(frame, mem, records, log, profile)
+    }
+
+    /// The per-instruction decoded loop, generic over a [`BranchSink`] so
+    /// the production path ([`NoProfile`]) monomorphizes the profiling
+    /// hook away.
+    fn run_decoded<S: BranchSink>(
+        &self,
+        frame: &mut LaneFrame,
+        mem: &mut Memory,
+        records: &mut RecordPool,
+        log: &mut Vec<String>,
+        sink: &mut S,
+    ) -> StepResult {
         let insns = &self.decoded.insns[..];
         let arg_pool = &self.decoded.args[..];
         let dev = self.dev;
@@ -451,6 +542,9 @@ impl<'a> Interp<'a> {
                 }
                 DInsn::Br { cond, t, f } => {
                     let taken = frame.regs[cond as usize] != 0;
+                    // the branch's own global pc (pc already advanced) —
+                    // the key trace formation predicts by
+                    sink.branch(frame.pc - 1, taken);
                     frame.pc = if taken { t } else { f };
                     self.charge_c(frame, costs.branch);
                     // fold the decision into the dynamic path
@@ -617,12 +711,19 @@ impl<'a> Interp<'a> {
                             compute_iters: c,
                         };
                     }
+                    let record_intr = self.record && frame.par_depth == 0;
+                    let lane_id = frame.lane;
                     let mut ctx = IntrCtx {
                         mem,
                         dev,
-                        lane_id: frame.lane,
+                        lane_id,
                         worker_id: 0,
                         log,
+                        accesses: if record_intr {
+                            Some(&mut frame.accesses)
+                        } else {
+                            None
+                        },
                     };
                     let out = intrinsics::execute(id, &args[..argc as usize], &mut ctx);
                     if has_dst {
@@ -930,12 +1031,19 @@ impl<'a> Interp<'a> {
                                 compute_iters: c,
                             };
                         }
+                        let record_intr = self.record && frame.par_depth == 0;
+                        let lane_id = frame.lane;
                         let mut ctx = IntrCtx {
                             mem,
                             dev,
-                            lane_id: frame.lane,
+                            lane_id,
                             worker_id: 0,
                             log,
+                            accesses: if record_intr {
+                                Some(&mut frame.accesses)
+                            } else {
+                                None
+                            },
                         };
                         let out = intrinsics::execute(id, &args[..argc as usize], &mut ctx);
                         if has_dst {
@@ -976,6 +1084,388 @@ impl<'a> Interp<'a> {
                 }
             }
             frame.pc = next;
+        }
+    }
+
+    /// Trace dispatch: the inline-cached "block of last resort" fast path.
+    /// Each lane remembers its last-executed trace; when the segment's pc
+    /// matches that trace's head the `trace_of` lookup is skipped
+    /// entirely. A trace executes step by step — each step charges its
+    /// superblock's folded sums exactly like [`Interp::run_fused`] charges
+    /// a block — over streams whose trace-dead registers were demoted to a
+    /// stack-resident scratch array at build time
+    /// ([`TracedModule::build`](crate::ir::traced::TracedModule::build)).
+    /// Scratch slots are loaded from the frame at trace entry and spilled
+    /// back at *every* exit (side exit, tail, payload suspension, segment
+    /// end), so the frame is bit-identical to per-instruction dispatch at
+    /// each observable point. Control flow stores nothing speculative: the
+    /// real successor pc is computed from executed state (folding the
+    /// exact `divergence::br_event`), and the trace continues only when
+    /// its next step *is* that successor — a mispredict is just an exit.
+    /// Cost-transparent like the other tiers (enforced by
+    /// `rust/tests/interp_differential.rs` and the fuzz corpus, including
+    /// under inverted profiles that force side-exit-heavy traces).
+    fn run_traced(
+        &self,
+        tm: &TracedModule,
+        frame: &mut LaneFrame,
+        mem: &mut Memory,
+        records: &mut RecordPool,
+        log: &mut Vec<String>,
+    ) -> StepResult {
+        let arg_pool = &self.decoded.args[..];
+        let traces = &tm.traces[..];
+        let trace_of = &tm.trace_of[..];
+        let steps = &tm.steps[..];
+        let stream_pool = &tm.insns[..];
+        let spill_pool = &tm.spills[..];
+        let dev = self.dev;
+        let costs = self.costs;
+        let mut executed: u64 = 0;
+        let mut scratch = [0u64; MAX_TRACE_SCRATCH];
+        'dispatch: loop {
+            let pc = frame.pc;
+            // inline cache: check the lane's last trace before the table
+            let cached = frame.last_trace as usize;
+            let ti = if cached < traces.len() && traces[cached].head == pc {
+                frame.last_trace
+            } else {
+                trace_of[pc as usize]
+            };
+            debug_assert_ne!(ti, u32::MAX, "segment pc {pc} must lead a trace");
+            frame.last_trace = ti;
+            let t = traces[ti as usize];
+            let spills =
+                &spill_pool[t.spill_base as usize..(t.spill_base + t.spill_len) as usize];
+            // load every scratch slot from the frame: makes spill-all exits
+            // correct even when a side exit leaves before a slot's defining
+            // write (the slot then just writes the unchanged value back)
+            for (s, &r) in spills.iter().enumerate() {
+                scratch[s] = frame.regs[r as usize];
+            }
+            macro_rules! getr {
+                ($r:expr) => {{
+                    let r = $r;
+                    if r & SCRATCH_TAG != 0 {
+                        scratch[(r & !SCRATCH_TAG) as usize]
+                    } else {
+                        frame.regs[r as usize]
+                    }
+                }};
+            }
+            macro_rules! setr {
+                ($r:expr, $v:expr) => {{
+                    let r = $r;
+                    let v = $v;
+                    if r & SCRATCH_TAG != 0 {
+                        scratch[(r & !SCRATCH_TAG) as usize] = v;
+                    } else {
+                        frame.regs[r as usize] = v;
+                    }
+                }};
+            }
+            macro_rules! spill {
+                () => {
+                    for (s, &r) in spills.iter().enumerate() {
+                        frame.regs[r as usize] = scratch[s];
+                    }
+                };
+            }
+            let step_end = (t.step_base + t.step_len) as usize;
+            let mut si = t.step_base as usize;
+            loop {
+                let st = steps[si];
+                let b = st.block;
+                executed += b.len as u64;
+                if executed > MAX_SEGMENT_INSNS {
+                    let df = self.decoded.func(frame.func);
+                    panic!(
+                        "segment of task {} (func {:?}, pc {}) exceeded {} instructions — \
+                         infinite loop in GTaP-C code?",
+                        frame.task,
+                        df.name,
+                        self.decoded.local_pc(frame.func, b.start),
+                        MAX_SEGMENT_INSNS
+                    );
+                }
+                // per-step charging: verbatim the per-block charging of
+                // run_fused, so traced cycles are bit-identical by
+                // construction
+                if self.record && frame.par_depth == 0 {
+                    let c = b.compute + b.td_loads as u64 * costs.alu;
+                    if c != 0 {
+                        self.charge_c(frame, c);
+                    }
+                    if b.mem_ctrl != 0 {
+                        self.charge_m(frame, b.mem_ctrl);
+                    }
+                } else {
+                    if b.compute != 0 {
+                        self.charge_c(frame, b.compute);
+                    }
+                    if b.mem != 0 {
+                        self.charge_m(frame, b.mem);
+                    }
+                    if b.td_loads != 0 {
+                        let cold = (b.td_cold_bits & !frame.td_touched).count_ones() as u64;
+                        let warm = b.td_loads as u64 - cold;
+                        if cold != 0 {
+                            self.charge_m(frame, cold * costs.cg_load);
+                        }
+                        if warm != 0 {
+                            self.charge_c(frame, warm * costs.alu);
+                        }
+                    }
+                    frame.td_touched |= b.td_all_bits;
+                }
+                let fall = b.start + b.len;
+                let mut next = fall;
+                for &insn in
+                    &stream_pool[st.stream_base as usize..(st.stream_base + st.stream_len) as usize]
+                {
+                    match insn {
+                        DInsn::Const { dst, val } => setr!(dst, val),
+                        DInsn::Mov { dst, src } => setr!(dst, getr!(src)),
+                        DInsn::Bin { op, dst, a, b } => {
+                            let x = Value(getr!(a));
+                            let y = Value(getr!(b));
+                            setr!(dst, eval_bin(op, x, y, dev).0 .0);
+                        }
+                        DInsn::Un { op, dst, a } => {
+                            setr!(dst, eval_un(op, Value(getr!(a))).0);
+                        }
+                        DInsn::ConstBinR { op, dst, a, tmp, val } => {
+                            setr!(tmp, val);
+                            let x = Value(getr!(a));
+                            setr!(dst, eval_bin(op, x, Value(val), dev).0 .0);
+                        }
+                        DInsn::ConstBinL { op, dst, b, tmp, val } => {
+                            setr!(tmp, val);
+                            let y = Value(getr!(b));
+                            setr!(dst, eval_bin(op, Value(val), y, dev).0 .0);
+                        }
+                        DInsn::LdTdBin { op, dst, a, b, tmp, off } => {
+                            setr!(tmp, records.data(frame.task)[off as usize]);
+                            if self.record && frame.par_depth == 0 {
+                                frame.accesses.push(MemAccess {
+                                    addr: td_addr(frame.task, off),
+                                    kind: AccessKind::TdLoad,
+                                });
+                            }
+                            let x = Value(getr!(a));
+                            let y = Value(getr!(b));
+                            setr!(dst, eval_bin(op, x, y, dev).0 .0);
+                        }
+                        DInsn::LdG { dst, addr, .. } => {
+                            let a = getr!(addr);
+                            setr!(dst, mem.load(a));
+                            if self.record && frame.par_depth == 0 {
+                                frame.accesses.push(MemAccess {
+                                    addr: a,
+                                    kind: AccessKind::GlobalLoad,
+                                });
+                            }
+                        }
+                        DInsn::StG { addr, src, .. } => {
+                            let a = getr!(addr);
+                            mem.store(a, getr!(src));
+                            if self.record && frame.par_depth == 0 {
+                                frame.accesses.push(MemAccess {
+                                    addr: a,
+                                    kind: AccessKind::GlobalStore,
+                                });
+                            }
+                        }
+                        DInsn::LdTd { dst, off } => {
+                            setr!(dst, records.data(frame.task)[off as usize]);
+                            if self.record && frame.par_depth == 0 {
+                                frame.accesses.push(MemAccess {
+                                    addr: td_addr(frame.task, off),
+                                    kind: AccessKind::TdLoad,
+                                });
+                            }
+                        }
+                        DInsn::StTd { off, src } => {
+                            records.data_mut(frame.task)[off as usize] = getr!(src);
+                            if self.record && frame.par_depth == 0 {
+                                frame.accesses.push(MemAccess {
+                                    addr: td_addr(frame.task, off),
+                                    kind: AccessKind::TdStore,
+                                });
+                            }
+                        }
+                        DInsn::ChildResult { dst, slot } => {
+                            let child = records.child(frame.task, slot);
+                            let cfunc = records.meta(child).func;
+                            let off = self
+                                .decoded
+                                .func(cfunc)
+                                .result_off
+                                .expect("capturing spawn of non-void task");
+                            setr!(dst, records.data(child)[off as usize]);
+                        }
+                        DInsn::Jmp { target } => next = target,
+                        DInsn::Br { cond, t, f } => {
+                            let taken = getr!(cond) != 0;
+                            next = if taken { t } else { f };
+                            frame.path = divergence::fold(
+                                frame.path,
+                                divergence::br_event(next as u64, taken),
+                            );
+                        }
+                        DInsn::CmpBr { op, dst, a, b, t, f } => {
+                            let x = Value(getr!(a));
+                            let y = Value(getr!(b));
+                            let v = eval_bin(op, x, y, dev).0;
+                            setr!(dst, v.0);
+                            let taken = v.0 != 0;
+                            next = if taken { t } else { f };
+                            frame.path = divergence::fold(
+                                frame.path,
+                                divergence::br_event(next as u64, taken),
+                            );
+                        }
+                        DInsn::Spawn {
+                            func,
+                            arg_base,
+                            argc,
+                            queue,
+                            priority,
+                        } => {
+                            // operand-pool registers are pinned (never
+                            // demoted), so the frame reads are exact
+                            let mut args = [0u64; MAX_TASK_ARGS];
+                            for i in 0..argc as usize {
+                                let r = arg_pool[arg_base as usize + i];
+                                args[i] = frame.regs[r as usize];
+                            }
+                            let q = getr!(queue) as u8;
+                            let pr = if priority == NO_PRIORITY_REG {
+                                None
+                            } else {
+                                Some((getr!(priority) as i64).clamp(0, 255) as u8)
+                            };
+                            frame.spawns.push(SpawnReq {
+                                func,
+                                argc,
+                                args,
+                                queue: q,
+                                priority: pr,
+                            });
+                        }
+                        DInsn::PrepareJoin { next_state, queue } => {
+                            let q = getr!(queue) as u8;
+                            spill!();
+                            return StepResult::Done(self.seal(
+                                frame,
+                                SegmentEnd::Join {
+                                    next_state,
+                                    queue: q,
+                                },
+                            ));
+                        }
+                        DInsn::FinishTask => {
+                            spill!();
+                            return StepResult::Done(self.seal(frame, SegmentEnd::Finish));
+                        }
+                        DInsn::Intr {
+                            id,
+                            dst,
+                            arg_base,
+                            argc,
+                            has_dst,
+                        } => {
+                            let mut args = [Value(0); 8];
+                            for i in 0..argc as usize {
+                                let r = arg_pool[arg_base as usize + i];
+                                args[i] = Value(frame.regs[r as usize]);
+                            }
+                            if id == Intrinsic::Payload && self.xla_payload {
+                                let (seed, m, c) =
+                                    (args[0].as_i64(), args[1].as_i64(), args[2].as_i64());
+                                self.charge_m(frame, intrinsics::payload_cycles(dev, m, c));
+                                frame.path = divergence::fold(
+                                    frame.path,
+                                    crate::util::prng::mix64(
+                                        (m as u64) ^ (c as u64).rotate_left(17) ^ 0xFA,
+                                    ),
+                                );
+                                // dst is pinned; the resume path writes the
+                                // frame directly and re-enters at `fall`,
+                                // which heads its own trace
+                                frame.pending_payload_dst = Some(dst);
+                                spill!();
+                                frame.pc = fall;
+                                return StepResult::NeedPayload {
+                                    seed,
+                                    mem_ops: m,
+                                    compute_iters: c,
+                                };
+                            }
+                            let record_intr = self.record && frame.par_depth == 0;
+                            let lane_id = frame.lane;
+                            let mut ctx = IntrCtx {
+                                mem,
+                                dev,
+                                lane_id,
+                                worker_id: 0,
+                                log,
+                                accesses: if record_intr {
+                                    Some(&mut frame.accesses)
+                                } else {
+                                    None
+                                },
+                            };
+                            let out = intrinsics::execute(id, &args[..argc as usize], &mut ctx);
+                            if has_dst {
+                                frame.regs[dst as usize] = out.value.0;
+                            }
+                            self.charge_m(frame, out.cycles);
+                            if out.path_token != 0 {
+                                frame.path = divergence::fold(frame.path, out.path_token);
+                            }
+                        }
+                        DInsn::ParEnter { .. } => {
+                            if frame.par_depth == 0 {
+                                frame.par_compute = 0;
+                                frame.par_mem = 0;
+                            }
+                            frame.par_depth += 1;
+                        }
+                        DInsn::ParExit => {
+                            frame.par_depth -= 1;
+                            if frame.par_depth == 0 {
+                                let w = self.block_width.max(1) as u64;
+                                frame.compute_cycles += frame.par_compute.div_ceil(w);
+                                frame.mem_cycles += frame.par_mem.div_ceil(w);
+                                frame.compute_cycles += dev.barrier;
+                                frame.par_compute = 0;
+                                frame.par_mem = 0;
+                            }
+                        }
+                        DInsn::Trap => {
+                            let df = self.decoded.func(frame.func);
+                            panic!(
+                                "__trap() reached in task {} (func {:?}, pc {})",
+                                frame.task,
+                                df.name,
+                                self.decoded.local_pc(frame.func, fall - 1)
+                            );
+                        }
+                    }
+                }
+                // stay in the trace only when the next step is the real
+                // successor; anything else — side exit or tail — spills
+                // and re-enters dispatch (where the inline cache usually
+                // catches loop back-edges immediately)
+                si += 1;
+                if si < step_end && steps[si].block.start == next {
+                    continue;
+                }
+                spill!();
+                frame.pc = next;
+                continue 'dispatch;
+            }
         }
     }
 
@@ -1358,6 +1848,142 @@ mod tests {
                            (y.func, y.argc, y.queue, y.priority));
             }
         }
+    }
+
+    #[test]
+    fn traced_dispatch_is_bit_identical_to_decoded() {
+        // The module-level contract (differential + fuzz suites cover the
+        // full corpus); this is the in-module smoke pin for the trace tier.
+        let module = compile_default(FIB).unwrap();
+        let decoded = DecodedModule::decode(&module);
+        let dev = DeviceSpec::h100();
+        let fm = crate::ir::superblock::FusedModule::fuse(&decoded, &dev);
+        let tm = crate::ir::traced::TracedModule::build(&decoded, &fm, &dev, None);
+        for n in [0i64, 1, 2, 7, 19] {
+            let words = module.funcs[0].layout.words().max(1);
+            let mut outs = Vec::new();
+            for use_traced in [false, true] {
+                let mut records = RecordPool::new(16, words, 4);
+                let mut mem = Memory::new(module.globals_words());
+                let task = records.alloc(0, NO_TASK).unwrap();
+                records.data_mut(task)[0] = n as u64;
+                let interp = if use_traced {
+                    Interp::traced(&decoded, &tm, &dev, 1, false)
+                } else {
+                    Interp::new(&decoded, &dev, 1, false)
+                };
+                let mut frame = LaneFrame::sized(&decoded);
+                frame.reset(&decoded, task, 0, 0, 0);
+                let mut log = vec![];
+                match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+                    StepResult::Done(o) => {
+                        outs.push((o.end, o.cycles, o.path, frame.spawns().to_vec()))
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            let (d, t) = (&outs[0], &outs[1]);
+            assert_eq!(d.0, t.0, "end (n={n})");
+            assert_eq!(d.1, t.1, "cycles (n={n})");
+            assert_eq!(d.2, t.2, "path hash must be bit-identical (n={n})");
+            assert_eq!(d.3.len(), t.3.len(), "spawn count (n={n})");
+            for (x, y) in d.3.iter().zip(t.3.iter()) {
+                assert_eq!(x.args, y.args);
+                assert_eq!(
+                    (x.func, x.argc, x.queue, x.priority),
+                    (y.func, y.argc, y.queue, y.priority)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn traced_side_exits_stay_bit_identical_under_inverted_profile() {
+        // Build traces from a profile recorded on real executions, then
+        // from its inversion — every profiled prediction maximally wrong,
+        // so execution side-exits constantly. Results must not move.
+        let module = compile_default(FIB).unwrap();
+        let decoded = DecodedModule::decode(&module);
+        let dev = DeviceSpec::h100();
+        let fm = crate::ir::superblock::FusedModule::fuse(&decoded, &dev);
+        let words = module.funcs[0].layout.words().max(1);
+        // profile a few segments via the profiled decoded loop
+        let mut profile = crate::sim::profile::BranchProfile::new(decoded.insns.len());
+        for n in [0i64, 1, 5, 9] {
+            let mut records = RecordPool::new(16, words, 4);
+            let mut mem = Memory::new(module.globals_words());
+            let task = records.alloc(0, NO_TASK).unwrap();
+            records.data_mut(task)[0] = n as u64;
+            let interp = Interp::new(&decoded, &dev, 1, false);
+            let mut frame = LaneFrame::sized(&decoded);
+            frame.reset(&decoded, task, 0, 0, 0);
+            let mut log = vec![];
+            match interp.run_profiled(&mut frame, &mut mem, &mut records, &mut log, &mut profile)
+            {
+                StepResult::Done(_) => {}
+                other => panic!("{other:?}"),
+            }
+        }
+        let anti = profile.inverted();
+        let tm_hot = crate::ir::traced::TracedModule::build(&decoded, &fm, &dev, Some(&profile));
+        let tm_anti = crate::ir::traced::TracedModule::build(&decoded, &fm, &dev, Some(&anti));
+        for n in [0i64, 2, 7, 15] {
+            let mut outs = Vec::new();
+            for tm in [None, Some(&tm_hot), Some(&tm_anti)] {
+                let mut records = RecordPool::new(16, words, 4);
+                let mut mem = Memory::new(module.globals_words());
+                let task = records.alloc(0, NO_TASK).unwrap();
+                records.data_mut(task)[0] = n as u64;
+                let interp = match tm {
+                    Some(tm) => Interp::traced(&decoded, tm, &dev, 1, false),
+                    None => Interp::new(&decoded, &dev, 1, false),
+                };
+                let mut frame = LaneFrame::sized(&decoded);
+                frame.reset(&decoded, task, 0, 0, 0);
+                let mut log = vec![];
+                match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+                    StepResult::Done(o) => {
+                        outs.push((o.end, o.cycles, o.path, frame.spawns().to_vec().len()))
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            assert_eq!(outs[0], outs[1], "hot-profile traces (n={n})");
+            assert_eq!(outs[0], outs[2], "anti-profile traces (n={n})");
+        }
+    }
+
+    #[test]
+    fn trace_inline_cache_survives_frame_reset() {
+        // The per-lane trace cache is deliberately not cleared by reset —
+        // re-running the same segment must reuse (and revalidate) it.
+        let module = compile_default(FIB).unwrap();
+        let decoded = DecodedModule::decode(&module);
+        let dev = DeviceSpec::h100();
+        let fm = crate::ir::superblock::FusedModule::fuse(&decoded, &dev);
+        let tm = crate::ir::traced::TracedModule::build(&decoded, &fm, &dev, None);
+        let words = module.funcs[0].layout.words().max(1);
+        let interp = Interp::traced(&decoded, &tm, &dev, 1, false);
+        let mut frame = LaneFrame::sized(&decoded);
+        let mut cycles = Vec::new();
+        for _ in 0..3 {
+            let mut records = RecordPool::new(16, words, 4);
+            let mut mem = Memory::new(module.globals_words());
+            let task = records.alloc(0, NO_TASK).unwrap();
+            records.data_mut(task)[0] = 9;
+            frame.reset(&decoded, task, 0, 0, 0);
+            let mut log = vec![];
+            match interp.run(&mut frame, &mut mem, &mut records, &mut log) {
+                StepResult::Done(o) => cycles.push(o.cycles),
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(cycles[0], cycles[1]);
+        assert_eq!(cycles[1], cycles[2]);
+        assert!(
+            (frame.last_trace as usize) < tm.traces.len(),
+            "cache holds a real trace index"
+        );
     }
 
     #[test]

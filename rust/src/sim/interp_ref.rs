@@ -370,12 +370,19 @@ impl<'a> RefInterp<'a> {
                             compute_iters: c,
                         };
                     }
+                    let record_intr = self.record_accesses && frame.par_depth == 0;
+                    let lane_id = frame.lane;
                     let mut ctx = IntrCtx {
                         mem,
                         dev,
-                        lane_id: frame.lane,
+                        lane_id,
                         worker_id: 0,
                         log,
+                        accesses: if record_intr {
+                            Some(&mut frame.accesses)
+                        } else {
+                            None
+                        },
                     };
                     let out = intrinsics::execute(id, &args[..argc as usize], &mut ctx);
                     if has_dst {

@@ -2,14 +2,18 @@
 //! memory system.
 //!
 //! Under `MemSysMode::Modeled` every interpreter tier (reference, decoded,
-//! superblock-fused) appends one [`MemAccess`] per executed global
-//! load/store and per task-data slot access to its lane frame, in program
-//! order. The records are pure data: they carry no cost. Cost is applied
-//! exactly once, at the scheduler's warp-combine step
-//! (`MemSys::charge_warp`), which is what lets all three tiers stay
-//! bit-identical — the access stream of a segment is the same no matter
-//! how it was dispatched (`rust/tests/interp_differential.rs` pins stream
-//! equality alongside the cycle/spawn equality).
+//! superblock-fused, trace-fused) appends one [`MemAccess`] per executed
+//! global load/store and per task-data slot access to its lane frame, in
+//! program order. Data-streaming intrinsics (serial sort/merge, memcpy,
+//! binary search) append their payload traffic too — see
+//! `sim::intrinsics::IntrCtx::accesses` — so intrinsic-heavy workloads are
+//! priced by the same transaction model instead of analytic scalars. The
+//! records are pure data: they carry no cost. Cost is applied exactly
+//! once, at the scheduler's warp-combine step (`MemSys::charge_warp`),
+//! which is what lets all four tiers stay bit-identical — the access
+//! stream of a segment is the same no matter how it was dispatched
+//! (`rust/tests/interp_differential.rs` pins stream equality alongside the
+//! cycle/spawn equality).
 //!
 //! Task-data accesses are mapped into a synthetic address region above any
 //! simulated global memory ([`TD_REGION_BASE`]) so the coalescer and the

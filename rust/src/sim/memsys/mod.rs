@@ -12,9 +12,11 @@
 //!
 //! 1. **Record** ([`access`]): under `Modeled`, every interpreter tier
 //!    appends a [`MemAccess`] per executed global load/store and task-data
-//!    slot access to its lane frame — functional data, no cost. All three
-//!    tiers emit bit-identical streams (the superblock cost-transparency
-//!    invariant extends to access streams).
+//!    slot access to its lane frame — functional data, no cost. All four
+//!    tiers (reference / decoded / superblock-fused / trace-fused) emit
+//!    bit-identical streams (the cost-transparency invariant extends to
+//!    access streams), and data-streaming intrinsics append their payload
+//!    traffic too.
 //! 2. **Coalesce** ([`coalesce`]): at the scheduler's warp-combine step,
 //!    lanes are grouped by dynamic path (the divergence groups — lanes on
 //!    one path execute in lockstep, so their k-th accesses are
@@ -32,11 +34,13 @@
 //!    intra-SM discount — the ROADMAP's "SM-tier cost model refinement".
 //!
 //! Cost is applied **once**, at combine time, per warp — never inside the
-//! interpreters — so `--memsys modeled` keeps all three tiers producing
+//! interpreters — so `--memsys modeled` keeps all four tiers producing
 //! identical `SegmentOutput`s and deterministic, thread-count-stable
 //! `RunStats` (`rust/tests/memsys_model.rs`). `RunStats::memsys` carries
-//! the transaction/hit/miss/bank-conflict counters
-//! ([`MemSysStats`]); `sim::profile::memsys_report` renders them.
+//! the transaction/hit/miss/bank-conflict counters ([`MemSysStats`]),
+//! `RunStats::memsys_by_class` splits them by the EPAQ queue class the
+//! warp's batch was acquired from, and `sim::profile::memsys_report`
+//! renders them.
 
 pub mod access;
 pub mod bank;
@@ -113,6 +117,26 @@ pub struct MemSysStats {
     pub l2_misses: u64,
     /// Shared-memory bank conflicts across SM-tier pool operations.
     pub smem_bank_conflicts: u64,
+}
+
+impl MemSysStats {
+    /// Accumulate another counter set (used by the scheduler to fold one
+    /// warp's charge into the run total and its per-queue-class bucket).
+    pub fn add(&mut self, o: &MemSysStats) {
+        self.transactions += o.transactions;
+        self.sectors += o.sectors;
+        self.l1_hits += o.l1_hits;
+        self.l1_misses += o.l1_misses;
+        self.l2_hits += o.l2_hits;
+        self.l2_misses += o.l2_misses;
+        self.smem_bank_conflicts += o.smem_bank_conflicts;
+    }
+
+    /// L1 hit rate over global (L1-visible) traffic, if any was observed.
+    pub fn l1_hit_rate(&self) -> Option<f64> {
+        let total = self.l1_hits + self.l1_misses;
+        (total > 0).then(|| self.l1_hits as f64 / total as f64)
+    }
 }
 
 /// L1 geometry: 256 sets × 4 ways × 128 B = 128 KiB per SM (model knob,

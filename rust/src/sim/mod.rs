@@ -42,4 +42,4 @@ pub use memsys::{MemSys, MemSysMode, MemSysStats};
 pub use interp::{Interp, LaneFrame, SegmentEnd, SegmentOutput, SpawnReq, StepResult};
 pub use interp_ref::{RefInterp, RefLaneFrame};
 pub use memory::Memory;
-pub use profile::{Profiler, TimelineEvent};
+pub use profile::{BranchProfile, BranchSink, NoProfile, Profiler, TimelineEvent};

@@ -10,6 +10,111 @@
 use crate::sim::memsys::MemSysStats;
 use crate::util::stats::percentile;
 
+/// Receiver of per-branch events from the decoded dispatch loop
+/// (`Interp::run_profiled`). The loop is generic over the sink so the
+/// production path monomorphizes to [`NoProfile`] — a no-op the optimizer
+/// deletes — and profiling costs nothing unless requested.
+pub trait BranchSink {
+    /// One executed conditional branch: its global pc and the direction.
+    fn branch(&mut self, pc: u32, taken: bool);
+}
+
+/// The no-op sink the production dispatch loop monomorphizes over.
+pub struct NoProfile;
+
+impl BranchSink for NoProfile {
+    #[inline(always)]
+    fn branch(&mut self, _pc: u32, _taken: bool) {}
+}
+
+/// Per-branch direction counters, indexed by *global* decoded pc — the
+/// optional profile feed for trace formation (`ir::traced`): a branch
+/// whose recorded history is highly biased gets its hot side fused into
+/// the trace, with the cold side becoming a side exit.
+///
+/// Collect one with [`crate::sim::interp::Interp::run_profiled`] over a
+/// representative segment sample, then hand it to
+/// `TracedModule::build(.., Some(&profile))`. Prediction quality only
+/// moves side-exit rates (performance); results are bit-identical either
+/// way — the cost-transparency invariant does not depend on the profile.
+#[derive(Clone, Debug, Default)]
+pub struct BranchProfile {
+    taken: Vec<u32>,
+    not_taken: Vec<u32>,
+}
+
+impl BranchProfile {
+    /// Counters for a decoded module with `n_insns` instructions.
+    pub fn new(n_insns: usize) -> BranchProfile {
+        BranchProfile {
+            taken: vec![0; n_insns],
+            not_taken: vec![0; n_insns],
+        }
+    }
+
+    /// Record one executed branch at global pc `pc`.
+    #[inline]
+    pub fn record(&mut self, pc: u32, taken: bool) {
+        let i = pc as usize;
+        if i < self.taken.len() {
+            if taken {
+                self.taken[i] = self.taken[i].saturating_add(1);
+            } else {
+                self.not_taken[i] = self.not_taken[i].saturating_add(1);
+            }
+        }
+    }
+
+    /// Executions recorded for the branch at `pc`.
+    pub fn total(&self, pc: u32) -> u64 {
+        let i = pc as usize;
+        if i < self.taken.len() {
+            self.taken[i] as u64 + self.not_taken[i] as u64
+        } else {
+            0
+        }
+    }
+
+    /// The branch's dominant direction, if *highly* biased: at least 4
+    /// recorded executions with ≥ 7/8 agreeing. `None` means the static
+    /// heuristics decide instead.
+    pub fn bias(&self, pc: u32) -> Option<bool> {
+        let i = pc as usize;
+        if i >= self.taken.len() {
+            return None;
+        }
+        let (t, n) = (self.taken[i] as u64, self.not_taken[i] as u64);
+        let total = t + n;
+        if total < 4 {
+            return None;
+        }
+        if t * 8 >= total * 7 {
+            Some(true)
+        } else if n * 8 >= total * 7 {
+            Some(false)
+        } else {
+            None
+        }
+    }
+
+    /// The adversarial mirror: every recorded direction flipped, so every
+    /// profiled prediction is maximally wrong. Used by the fuzz suite to
+    /// force side-exit-heavy traces and pin the side-exit fold path.
+    pub fn inverted(&self) -> BranchProfile {
+        BranchProfile {
+            taken: self.not_taken.clone(),
+            not_taken: self.taken.clone(),
+        }
+    }
+}
+
+impl BranchSink for BranchProfile {
+    #[inline]
+    fn branch(&mut self, pc: u32, taken: bool) {
+        self.record(pc, taken);
+    }
+}
+
 /// One persistent-kernel iteration of one worker.
 #[derive(Clone, Copy, Debug)]
 pub struct TimelineEvent {

@@ -1,29 +1,31 @@
-//! Shared three-tier segment harness for workloads whose segments need
+//! Shared four-tier segment harness for workloads whose segments need
 //! prepared global memory (CSR graphs, arrays). One copy, used by both
 //! `tests/interp_differential.rs` and `tests/compiler_fuzz.rs`, so the
 //! differential and fuzz suites always test identical harness semantics
-//! (compile → decode → fuse, record-pool sizing, tier dispatch, the
-//! memory checksum fold).
+//! (compile → decode → fuse → trace, record-pool sizing, tier dispatch,
+//! the memory checksum fold).
 #![allow(dead_code)] // each test binary uses a subset of the surface
 
 use gtap::compiler::compile_default;
 use gtap::coordinator::records::{RecordPool, NO_TASK};
 use gtap::ir::decoded::DecodedModule;
 use gtap::ir::superblock::FusedModule;
+use gtap::ir::traced::TracedModule;
 use gtap::sim::interp_ref::{RefInterp, RefLaneFrame};
 use gtap::sim::memsys::MemAccess;
-use gtap::sim::{DeviceSpec, Interp, LaneFrame, Memory, StepResult};
+use gtap::sim::{BranchProfile, DeviceSpec, Interp, LaneFrame, Memory, StepResult};
 use gtap::workloads::bfs::CsrGraph;
 
-/// The three interpreter tiers under differential test.
+/// The four interpreter tiers under differential test.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Tier {
     Ref,
     Decoded,
     Fused,
+    Traced,
 }
 
-pub const TIERS: [Tier; 3] = [Tier::Ref, Tier::Decoded, Tier::Fused];
+pub const TIERS: [Tier; 4] = [Tier::Ref, Tier::Decoded, Tier::Fused, Tier::Traced];
 
 /// One tier's observable result on a memory-backed workload segment.
 #[derive(Clone, Debug, PartialEq)]
@@ -41,7 +43,7 @@ pub struct TierRun {
 }
 
 impl TierRun {
-    /// Everything except the raw path hash — what all three tiers must
+    /// Everything except the raw path hash — what all four tiers must
     /// agree on bit for bit.
     pub fn functional(&self) -> (u64, usize, &[MemAccess], u64) {
         (self.cycles, self.spawns, &self.accesses, self.mem_checksum)
@@ -51,12 +53,29 @@ impl TierRun {
 /// Run one segment of `src`'s function 0 through one tier: `setup`
 /// prepares the global memory image and returns the task args; `modeled`
 /// selects the recording interpreters (`--memsys modeled` gating).
+/// Traced-tier builds use static prediction; see
+/// [`run_mem_workload_tier_profiled`] to force a branch profile (e.g. an
+/// inverted one, to make every trace side-exit).
 pub fn run_mem_workload_tier(
     src: &str,
     state: u16,
     tier: Tier,
     modeled: bool,
     block_width: u32,
+    setup: &dyn Fn(&mut Memory) -> Vec<i64>,
+) -> TierRun {
+    run_mem_workload_tier_profiled(src, state, tier, modeled, block_width, None, setup)
+}
+
+/// [`run_mem_workload_tier`] with an explicit branch profile feeding the
+/// traced tier's trace formation (ignored by the other tiers).
+pub fn run_mem_workload_tier_profiled(
+    src: &str,
+    state: u16,
+    tier: Tier,
+    modeled: bool,
+    block_width: u32,
+    profile: Option<&BranchProfile>,
     setup: &dyn Fn(&mut Memory) -> Vec<i64>,
 ) -> TierRun {
     let module = compile_default(src).unwrap();
@@ -94,11 +113,15 @@ pub fn run_mem_workload_tier(
                 other => panic!("unexpected {other:?}"),
             }
         }
-        Tier::Decoded | Tier::Fused => {
-            let base = if tier == Tier::Fused {
-                Interp::fused(&decoded, &fm, &dev, block_width, false)
-            } else {
-                Interp::new(&decoded, &dev, block_width, false)
+        Tier::Decoded | Tier::Fused | Tier::Traced => {
+            let tm;
+            let base = match tier {
+                Tier::Fused => Interp::fused(&decoded, &fm, &dev, block_width, false),
+                Tier::Traced => {
+                    tm = TracedModule::build(&decoded, &fm, &dev, profile);
+                    Interp::traced(&decoded, &tm, &dev, block_width, false)
+                }
+                _ => Interp::new(&decoded, &dev, block_width, false),
             };
             let interp = base.recording(modeled);
             let mut frame = LaneFrame::sized(&decoded);
@@ -118,6 +141,46 @@ pub fn run_mem_workload_tier(
         accesses,
         mem_checksum,
     }
+}
+
+/// Record the decoded tier's branch stream for one segment and return it
+/// **inverted**: feeding the result to the traced-tier build makes every
+/// biased branch predict against the segment's real hot path, so traces
+/// side-exit almost every dispatch — the adversarial case for the traced
+/// tier's cost-transparency (spill-at-exit) machinery.
+pub fn inverted_profile_for(
+    src: &str,
+    state: u16,
+    block_width: u32,
+    setup: &dyn Fn(&mut Memory) -> Vec<i64>,
+) -> BranchProfile {
+    let module = compile_default(src).unwrap();
+    let decoded = DecodedModule::decode(&module);
+    let dev = DeviceSpec::h100();
+    let words = module
+        .funcs
+        .iter()
+        .map(|f| f.layout.words())
+        .max()
+        .unwrap()
+        .max(1);
+    let mut records = RecordPool::new(64, words, 8);
+    let mut mem = Memory::new(module.globals_words());
+    let args = setup(&mut mem);
+    let task = records.alloc(0, NO_TASK).unwrap();
+    for (i, &a) in args.iter().enumerate() {
+        records.data_mut(task)[i] = a as u64;
+    }
+    let mut log = Vec::new();
+    let mut profile = BranchProfile::new(decoded.insns.len());
+    let interp = Interp::new(&decoded, &dev, block_width, false);
+    let mut frame = LaneFrame::sized(&decoded);
+    frame.reset(&decoded, task, 0, state, 0);
+    match interp.run_profiled(&mut frame, &mut mem, &mut records, &mut log, &mut profile) {
+        StepResult::Done(_) => {}
+        other => panic!("unexpected {other:?}"),
+    }
+    profile.inverted()
 }
 
 /// Memory setup for one BFS segment: CSR arrays + the depth vector with

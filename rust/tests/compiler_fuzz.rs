@@ -4,24 +4,31 @@
 //! codegen's register allocation, temp recycling, short-circuit lowering,
 //! ternaries and division guards end to end.
 //!
-//! The same random programs also run one segment through all three
-//! interpreter tiers (reference / decoded / superblock-fused), asserting
-//! identical `SegmentOutput`s — the fuzz half of the superblock
-//! cost-transparency invariant (`rust/tests/interp_differential.rs` holds
-//! the workload half).
+//! The same random programs also run one segment through all four
+//! interpreter tiers (reference / decoded / superblock-fused /
+//! trace-fused), asserting identical `SegmentOutput`s — the fuzz half of
+//! the superblock/trace cost-transparency invariant
+//! (`rust/tests/interp_differential.rs` holds the workload half). The
+//! traced tier runs twice per case: once with static prediction and once
+//! with an **inverted branch profile** (anti-biased branch streams), so
+//! side-exit-heavy traces are fuzzed on arbitrary shapes too.
 
 mod common;
 
-use common::{bfs_setup, msort_setup, run_mem_workload_tier, Tier};
+use common::{
+    bfs_setup, inverted_profile_for, msort_setup, run_mem_workload_tier,
+    run_mem_workload_tier_profiled, Tier,
+};
 use gtap::bench::runners::Exec;
 use gtap::compiler::compile_default;
 use gtap::coordinator::records::{RecordPool, NO_TASK};
 use gtap::coordinator::Session;
 use gtap::ir::decoded::DecodedModule;
 use gtap::ir::superblock::FusedModule;
+use gtap::ir::traced::TracedModule;
 use gtap::ir::types::Value;
 use gtap::sim::interp_ref::{RefInterp, RefLaneFrame};
-use gtap::sim::{DeviceSpec, Interp, LaneFrame, Memory, StepResult};
+use gtap::sim::{BranchProfile, DeviceSpec, Interp, LaneFrame, Memory, StepResult};
 use gtap::util::prop::{Gen, Runner};
 
 /// A random expression over variables a, b, c with C semantics.
@@ -194,6 +201,9 @@ fn fuzz_expressions_match_reference() {
 
 /// One segment of `src`'s function 0 through a tier on fresh state;
 /// returns (end-kind marker, cycles, path, result word, spawn count).
+/// Tiers: 0 = reference, 1 = decoded, 2 = fused, 3 = traced (static
+/// prediction), 4 = traced built from an inverted branch profile (every
+/// biased branch mispredicted — side-exit-heavy traces).
 fn run_segment_tier(
     src: &str,
     args: &[i64],
@@ -226,10 +236,36 @@ fn run_segment_tier(
             other => panic!("unexpected {other:?}"),
         }
     } else {
-        let interp = if tier == 2 {
-            Interp::fused(&decoded, &fm, &dev, 1, false)
-        } else {
-            Interp::new(&decoded, &dev, 1, false)
+        let tm;
+        let interp = match tier {
+            2 => Interp::fused(&decoded, &fm, &dev, 1, false),
+            3 | 4 => {
+                let profile = (tier == 4).then(|| {
+                    // record the real branch stream on throwaway state,
+                    // then invert it: every trace predicts against the
+                    // hot path and must recover through side exits
+                    let mut records2 = RecordPool::new(8, words, 2);
+                    let mut mem2 = Memory::new(module.globals_words());
+                    let task2 = records2.alloc(0, NO_TASK).unwrap();
+                    for (i, &a) in args.iter().enumerate() {
+                        records2.data_mut(task2)[i] = a as u64;
+                    }
+                    let mut p = BranchProfile::new(decoded.insns.len());
+                    let mut f2 = LaneFrame::sized(&decoded);
+                    f2.reset(&decoded, task2, 0, 0, 0);
+                    let mut log2 = Vec::new();
+                    let dec = Interp::new(&decoded, &dev, 1, false);
+                    match dec.run_profiled(&mut f2, &mut mem2, &mut records2, &mut log2, &mut p)
+                    {
+                        StepResult::Done(_) => {}
+                        other => panic!("unexpected {other:?}"),
+                    }
+                    p.inverted()
+                });
+                tm = TracedModule::build(&decoded, &fm, &dev, profile.as_ref());
+                Interp::traced(&decoded, &tm, &dev, 1, false)
+            }
+            _ => Interp::new(&decoded, &dev, 1, false),
         };
         let mut frame = LaneFrame::sized(&decoded);
         frame.reset(&decoded, task, 0, 0, 0);
@@ -248,10 +284,11 @@ fn run_segment_tier(
 }
 
 #[test]
-fn fuzz_segments_agree_across_ref_decoded_fused() {
+fn fuzz_segments_agree_across_ref_decoded_fused_traced() {
     // Random expression programs (ternaries give real branch structure, so
-    // superblock partitions and CmpBr/ConstBin macro-ops get exercised on
-    // arbitrary shapes, not just the workloads).
+    // superblock partitions, CmpBr/ConstBin macro-ops, trace formation and
+    // scratch demotion get exercised on arbitrary shapes, not just the
+    // workloads).
     Runner::new().cases(80).run("interp-tier-fuzz", |g| {
         let e = gen_expr(g, 5);
         let src = format!(
@@ -262,22 +299,31 @@ fn fuzz_segments_agree_across_ref_decoded_fused() {
         let reference = run_segment_tier(&src, &args, 0);
         let decoded = run_segment_tier(&src, &args, 1);
         let fused = run_segment_tier(&src, &args, 2);
-        // end/cycles/result/spawns: identical across all three tiers
+        let traced = run_segment_tier(&src, &args, 3);
+        let traced_anti = run_segment_tier(&src, &args, 4);
+        // end/cycles/result/spawns: identical across all tiers, including
+        // the side-exit-heavy anti-profiled traced build
         assert_eq!(
             (reference.0, reference.1, reference.3, reference.4),
             (decoded.0, decoded.1, decoded.3, decoded.4),
             "decoded vs ref, args {args:?}, src:\n{src}"
         );
-        assert_eq!(
-            (decoded.0, decoded.1, decoded.3, decoded.4),
-            (fused.0, fused.1, fused.3, fused.4),
-            "fused vs decoded, args {args:?}, src:\n{src}"
-        );
-        // path hashes: bit-identical between decoded and fused
-        assert_eq!(
-            decoded.2, fused.2,
-            "fused path hash diverged, args {args:?}, src:\n{src}"
-        );
+        for (name, o) in [
+            ("fused", &fused),
+            ("traced", &traced),
+            ("traced-anti", &traced_anti),
+        ] {
+            assert_eq!(
+                (decoded.0, decoded.1, decoded.3, decoded.4),
+                (o.0, o.1, o.3, o.4),
+                "{name} vs decoded, args {args:?}, src:\n{src}"
+            );
+            // path hashes: bit-identical to decoded (global-pc folds)
+            assert_eq!(
+                decoded.2, o.2,
+                "{name} path hash diverged, args {args:?}, src:\n{src}"
+            );
+        }
         // and the result still matches the direct AST evaluation
         assert_eq!(fused.3 as i64, eval(&e, &args), "src:\n{src}");
     });
@@ -286,7 +332,7 @@ fn fuzz_segments_agree_across_ref_decoded_fused() {
 #[test]
 fn fuzz_bfs_segments_agree_across_tiers() {
     // random CSR graphs and start vertices: the pointer-chasing +
-    // parallel_for + atomic_min segment family through all three tiers
+    // parallel_for + atomic_min segment family through all four tiers
     // (shared harness: tests/common/mod.rs)
     let src = gtap::workloads::bfs::source();
     Runner::new().cases(30).run("bfs-tier-fuzz", |g| {
@@ -298,15 +344,17 @@ fn fuzz_bfs_segments_agree_across_tiers() {
         let reference = run_mem_workload_tier(&src, 0, Tier::Ref, false, 64, &setup);
         let decoded = run_mem_workload_tier(&src, 0, Tier::Decoded, false, 64, &setup);
         let fused = run_mem_workload_tier(&src, 0, Tier::Fused, false, 64, &setup);
-        // cycles/spawns/streams/memory: identical across all three; paths
-        // bit-identical between decoded and fused only (the reference
-        // folds function-local pcs)
+        let traced = run_mem_workload_tier(&src, 0, Tier::Traced, false, 64, &setup);
+        // cycles/spawns/streams/memory: identical across all four; paths
+        // bit-identical to decoded for the fused and traced tiers (the
+        // reference folds function-local pcs)
         assert_eq!(
             reference.functional(),
             decoded.functional(),
             "decoded vs ref bfs (n {n}, v {v})"
         );
         assert_eq!(decoded, fused, "fused vs decoded bfs (n {n}, v {v})");
+        assert_eq!(decoded, traced, "traced vs decoded bfs (n {n}, v {v})");
     });
 }
 
@@ -330,6 +378,13 @@ fn fuzz_sort_segments_agree_across_tiers() {
         let reference = run_mem_workload_tier(&src, state, Tier::Ref, false, 1, &setup);
         let decoded = run_mem_workload_tier(&src, state, Tier::Decoded, false, 1, &setup);
         let fused = run_mem_workload_tier(&src, state, Tier::Fused, false, 1, &setup);
+        let traced = run_mem_workload_tier(&src, state, Tier::Traced, false, 1, &setup);
+        // anti-profiled traced build: every biased branch predicts against
+        // the segment's real stream, so traces side-exit almost every
+        // dispatch — the spill-at-exit path must stay cost-transparent
+        let anti = inverted_profile_for(&src, state, 1, &setup);
+        let traced_anti =
+            run_mem_workload_tier_profiled(&src, state, Tier::Traced, false, 1, Some(&anti), &setup);
         assert_eq!(
             reference.functional(),
             decoded.functional(),
@@ -338,6 +393,14 @@ fn fuzz_sort_segments_agree_across_tiers() {
         assert_eq!(
             decoded, fused,
             "fused vs decoded msort (n {n}, {left}..{right}, state {state})"
+        );
+        assert_eq!(
+            decoded, traced,
+            "traced vs decoded msort (n {n}, {left}..{right}, state {state})"
+        );
+        assert_eq!(
+            decoded, traced_anti,
+            "anti-profiled traced vs decoded msort (n {n}, {left}..{right}, state {state})"
         );
         if state == 0 && right - left > cutoff {
             assert_eq!(decoded.spawns, 2, "split segments spawn both halves");

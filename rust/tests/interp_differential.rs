@@ -1,34 +1,46 @@
-//! Differential testing across the three interpreter tiers on identical
+//! Differential testing across the four interpreter tiers on identical
 //! segment streams:
 //!
 //! * `sim::interp_ref` — the module-walking **reference**;
 //! * `sim::interp` over `ir::decoded` — flattened per-instruction
 //!   **decoded** dispatch;
 //! * `Interp::fused` over `ir::superblock` — block-at-a-time **fused**
-//!   dispatch with folded costs and macro-ops (the production engine).
+//!   dispatch with folded costs and macro-ops;
+//! * `Interp::traced` over `ir::traced` — trace-at-a-time **traced**
+//!   dispatch across biased branches with scratch-demoted registers and
+//!   side exits (the production engine).
 //!
 //! For every program/input/state: same segment end, same simulated cycle
-//! charge, same spawn list across all three. Path hashes are
-//! **bit-identical between decoded and fused** (both fold global pcs; the
-//! superblock invariant). The reference folds *function-local* pcs, so its
-//! raw hash values legitimately differ; against it only the
-//! *path-equality structure* — the sole thing the divergence model
-//! consumes — must coincide.
+//! charge, same spawn list across all four. Path hashes are
+//! **bit-identical between decoded, fused and traced** (all fold global
+//! pcs; the superblock/trace invariant). The reference folds
+//! *function-local* pcs, so its raw hash values legitimately differ;
+//! against it only the *path-equality structure* — the sole thing the
+//! divergence model consumes — must coincide.
 //!
 //! Both memory-system modes are covered: under the flat default the
 //! access streams are empty and the charges are the pre-memsys pins;
 //! under `--memsys modeled` (recording interpreters) the **access
 //! streams** are functional data and must be bit-identical across all
-//! three tiers — that is what lets the warp-combine cost model charge
+//! four tiers — that is what lets the warp-combine cost model charge
 //! once, independent of dispatch tier (`sim::memsys`).
+//!
+//! The traced tier is additionally exercised with an **inverted branch
+//! profile** (every biased branch predicted against the real hot path),
+//! which forces side-exit-heavy traces — the cost-transparency invariant
+//! must survive mispredicted dispatch too.
 
 mod common;
 
-use common::{bfs_setup, msort_setup, run_mem_workload_tier, Tier, TIERS};
+use common::{
+    bfs_setup, inverted_profile_for, msort_setup, run_mem_workload_tier,
+    run_mem_workload_tier_profiled, Tier, TIERS,
+};
 use gtap::compiler::compile_default;
 use gtap::coordinator::records::{RecordPool, NO_TASK};
 use gtap::ir::decoded::DecodedModule;
 use gtap::ir::superblock::FusedModule;
+use gtap::ir::traced::TracedModule;
 use gtap::sim::interp_ref::{RefInterp, RefLaneFrame};
 use gtap::sim::memsys::MemAccess;
 use gtap::sim::{DeviceSpec, Interp, LaneFrame, Memory, SegmentOutput, SpawnReq, StepResult};
@@ -112,11 +124,15 @@ fn run_tier_mode(
                 other => panic!("unexpected {other:?}"),
             }
         }
-        Tier::Decoded | Tier::Fused => {
-            let base = if tier == Tier::Fused {
-                Interp::fused(&decoded, &fm, &dev, 1, false)
-            } else {
-                Interp::new(&decoded, &dev, 1, false)
+        Tier::Decoded | Tier::Fused | Tier::Traced => {
+            let tm;
+            let base = match tier {
+                Tier::Fused => Interp::fused(&decoded, &fm, &dev, 1, false),
+                Tier::Traced => {
+                    tm = TracedModule::build(&decoded, &fm, &dev, None);
+                    Interp::traced(&decoded, &tm, &dev, 1, false)
+                }
+                _ => Interp::new(&decoded, &dev, 1, false),
             };
             let interp = base.recording(modeled);
             let mut frame = LaneFrame::sized(&decoded);
@@ -134,18 +150,18 @@ fn run_tier(src: &str, args: &[i64], state: u16, tier: Tier) -> (SegmentOutput, 
     (o, s)
 }
 
-/// All three tiers must agree on end, cycles and spawns; decoded and fused
-/// must agree on the path hash bit for bit. Under the modeled memory
-/// system the access streams must additionally be bit-identical across
-/// all three tiers (they are the cost model's input); under the flat
-/// default they must be empty.
+/// All four tiers must agree on end, cycles and spawns; decoded, fused
+/// and traced must agree on the path hash bit for bit. Under the modeled
+/// memory system the access streams must additionally be bit-identical
+/// across all four tiers (they are the cost model's input); under the
+/// flat default they must be empty.
 fn assert_equivalent_mode(src: &str, args: &[i64], state: u16, modeled: bool) {
     let outs: Vec<_> = TIERS
         .iter()
         .map(|&t| run_tier_mode(src, args, state, t, modeled))
         .collect();
-    let (r, d, f) = (&outs[0], &outs[1], &outs[2]);
-    for (name, o) in [("decoded", d), ("fused", f)] {
+    let (r, d, f, t) = (&outs[0], &outs[1], &outs[2], &outs[3]);
+    for (name, o) in [("decoded", d), ("fused", f), ("traced", t)] {
         assert_eq!(
             o.0.end, r.0.end,
             "{name} segment end (args {args:?}, state {state}, modeled {modeled})"
@@ -173,6 +189,10 @@ fn assert_equivalent_mode(src: &str, args: &[i64], state: u16, modeled: bool) {
     assert_eq!(
         d.0.path, f.0.path,
         "fused path hash must be bit-identical to decoded (args {args:?}, state {state})"
+    );
+    assert_eq!(
+        d.0.path, t.0.path,
+        "traced path hash must be bit-identical to decoded (args {args:?}, state {state})"
     );
 }
 
@@ -261,11 +281,15 @@ fn tree_workload_segments_equivalent() {
                         other => panic!("{other:?}"),
                     }
                 }
-                Tier::Decoded | Tier::Fused => {
-                    let interp = if tier == Tier::Fused {
-                        Interp::fused(&decoded, &fm, &dev, 1, false)
-                    } else {
-                        Interp::new(&decoded, &dev, 1, false)
+                Tier::Decoded | Tier::Fused | Tier::Traced => {
+                    let tm;
+                    let interp = match tier {
+                        Tier::Fused => Interp::fused(&decoded, &fm, &dev, 1, false),
+                        Tier::Traced => {
+                            tm = TracedModule::build(&decoded, &fm, &dev, None);
+                            Interp::traced(&decoded, &tm, &dev, 1, false)
+                        }
+                        _ => Interp::new(&decoded, &dev, 1, false),
                     };
                     let mut frame = LaneFrame::sized(&decoded);
                     frame.reset(&decoded, task, 0, state, 0);
@@ -279,6 +303,7 @@ fn tree_workload_segments_equivalent() {
         let reference = run(Tier::Ref);
         assert_eq!(run(Tier::Decoded), reference, "decoded, state {state}, depth {depth}");
         assert_eq!(run(Tier::Fused), reference, "fused, state {state}, depth {depth}");
+        assert_eq!(run(Tier::Traced), reference, "traced, state {state}, depth {depth}");
     }
 }
 
@@ -286,7 +311,7 @@ fn tree_workload_segments_equivalent() {
 fn bfs_segments_equivalent() {
     // BFS (Program 5): parallel_for over a CSR row, atomic_min relaxation,
     // spawn-per-improved-neighbour — the pointer-heavy irregular segment
-    // family the three-tier suite was missing. Both memsys modes.
+    // family the original tier suite was missing. Both memsys modes.
     let src = gtap::workloads::bfs::source();
     let g = gtap::workloads::bfs::CsrGraph::random(12, 2, 3);
     for modeled in [false, true] {
@@ -295,11 +320,14 @@ fn bfs_segments_equivalent() {
             let r = run_mem_workload_tier(&src, 0, Tier::Ref, modeled, 64, &setup);
             let d = run_mem_workload_tier(&src, 0, Tier::Decoded, modeled, 64, &setup);
             let f = run_mem_workload_tier(&src, 0, Tier::Fused, modeled, 64, &setup);
+            let t = run_mem_workload_tier(&src, 0, Tier::Traced, modeled, 64, &setup);
             // the reference folds local pcs, so only the functional tuple
             // (cycles/spawns/streams/memory) is comparable against it
             assert_eq!(d.functional(), r.functional(), "decoded bfs (v {v}, modeled {modeled})");
             assert_eq!(f.functional(), r.functional(), "fused bfs (v {v}, modeled {modeled})");
+            assert_eq!(t.functional(), r.functional(), "traced bfs (v {v}, modeled {modeled})");
             assert_eq!(d.path, f.path, "decoded/fused path hashes (v {v})");
+            assert_eq!(d.path, t.path, "decoded/traced path hashes (v {v})");
             if modeled {
                 assert!(
                     !r.accesses.is_empty(),
@@ -325,6 +353,7 @@ fn mergesort_segments_equivalent() {
             let r = run_mem_workload_tier(&src, state, Tier::Ref, modeled, 1, &setup);
             let d = run_mem_workload_tier(&src, state, Tier::Decoded, modeled, 1, &setup);
             let f = run_mem_workload_tier(&src, state, Tier::Fused, modeled, 1, &setup);
+            let t = run_mem_workload_tier(&src, state, Tier::Traced, modeled, 1, &setup);
             assert_eq!(
                 d.functional(),
                 r.functional(),
@@ -335,17 +364,69 @@ fn mergesort_segments_equivalent() {
                 r.functional(),
                 "fused msort (state {state}, modeled {modeled})"
             );
+            assert_eq!(
+                t.functional(),
+                r.functional(),
+                "traced msort (state {state}, modeled {modeled})"
+            );
             assert_eq!(d.path, f.path, "decoded/fused path hashes (state {state})");
+            assert_eq!(d.path, t.path, "decoded/traced path hashes (state {state})");
             if state == 0 && right - left > 8 {
                 assert_eq!(r.spawns, 2, "the split segment spawns both halves");
+            }
+            if modeled && state == 1 {
+                // the post-join merge is intrinsic-dominated: its
+                // merge_serial/memcpy payload traffic must be in the
+                // stream (priced by the transaction model, not exempt)
+                assert!(
+                    r.accesses.len() >= 2 * (right - left) as usize,
+                    "intrinsic traffic recorded: {} records",
+                    r.accesses.len()
+                );
             }
         }
     }
 }
 
 #[test]
+fn traced_side_exit_heavy_segments_equivalent() {
+    // Build the traced tier with an *inverted* branch profile — every
+    // biased branch predicted against the segment's real hot path — so
+    // traces side-exit on nearly every dispatch. The cost-transparency
+    // invariant (cycles, spawns, streams, memory image, path hash) must
+    // hold regardless of prediction quality. Both memsys modes.
+    let src = gtap::workloads::sort::mergesort_source(8);
+    let xs = gtap::workloads::sort::input(24, 5);
+    for modeled in [false, true] {
+        for &(state, left, right) in &[(0u16, 0i64, 24i64), (1, 0, 24)] {
+            let setup = msort_setup(&xs, state, left, right);
+            let anti = inverted_profile_for(&src, state, 1, &setup);
+            let d = run_mem_workload_tier(&src, state, Tier::Decoded, modeled, 1, &setup);
+            let t = run_mem_workload_tier_profiled(
+                &src,
+                state,
+                Tier::Traced,
+                modeled,
+                1,
+                Some(&anti),
+                &setup,
+            );
+            assert_eq!(
+                t.functional(),
+                d.functional(),
+                "anti-profiled traced msort (state {state}, modeled {modeled})"
+            );
+            assert_eq!(
+                t.path, d.path,
+                "anti-profiled traced path hash (state {state}, modeled {modeled})"
+            );
+        }
+    }
+}
+
+#[test]
 fn modeled_memsys_segments_equivalent() {
-    // the acceptance pin: under --memsys modeled all three tiers still
+    // the acceptance pin: under --memsys modeled all four tiers still
     // produce identical SegmentOutputs — and identical access streams
     for n in [0i64, 1, 5, 13] {
         assert_equivalent_mode(FIB, &[n], 0, true);
@@ -387,7 +468,9 @@ fn path_equality_structure_matches() {
     let reference = paths(Tier::Ref);
     let decoded = paths(Tier::Decoded);
     let fused = paths(Tier::Fused);
+    let traced = paths(Tier::Traced);
     assert_eq!(decoded, fused, "decoded and fused hashes are bit-identical");
+    assert_eq!(decoded, traced, "decoded and traced hashes are bit-identical");
     for i in 0..inputs.len() {
         for j in 0..inputs.len() {
             assert_eq!(

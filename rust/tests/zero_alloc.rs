@@ -4,9 +4,10 @@
 //! A counting global allocator wraps the system allocator; after warming
 //! the pre-sized [`LaneFrame`] and record pool, the test drives well over
 //! 10k segments (recursive, leaf, and post-join continuation shapes)
-//! through the decoded dispatch loop and asserts the allocation counter
-//! never moves. This file holds exactly one test so no sibling test
-//! thread can allocate concurrently and pollute the counter.
+//! through the decoded, superblock-fused, and trace-fused dispatch loops
+//! and asserts the allocation counter never moves. This file holds
+//! exactly one test so no sibling test thread can allocate concurrently
+//! and pollute the counter.
 
 use gtap::compiler::compile_default;
 use gtap::coordinator::config::{GtapConfig, SchedulerKind};
@@ -14,6 +15,7 @@ use gtap::coordinator::policy::{adaptive_amount, Placement, QueueSelect, QueueSe
 use gtap::coordinator::records::{RecordPool, TaskId, NO_TASK};
 use gtap::ir::decoded::DecodedModule;
 use gtap::ir::superblock::FusedModule;
+use gtap::ir::traced::TracedModule;
 use gtap::sim::{DeviceSpec, Interp, LaneFrame, Memory, StepResult};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -70,8 +72,10 @@ fn steady_state_segment_execution_is_allocation_free() {
     let mut mem = Memory::new(module.globals_words());
     let dev = DeviceSpec::h100();
     let fm = FusedModule::fuse(&decoded, &dev);
+    let tm = TracedModule::build(&decoded, &fm, &dev, None);
     let interp = Interp::new(&decoded, &dev, 1, false);
     let interp_fused = Interp::fused(&decoded, &fm, &dev, 1, false);
+    let interp_traced = Interp::traced(&decoded, &tm, &dev, 1, false);
     let mut frame = LaneFrame::sized(&decoded);
     let mut log: Vec<String> = Vec::new();
 
@@ -188,6 +192,58 @@ fn steady_state_segment_execution_is_allocation_free() {
         after - before,
         0,
         "the fused block dispatch loop must not allocate in steady state"
+    );
+
+    // ---- the trace-fused engine obeys the same contract too --------------
+    // (the current production path: inline-cached trace lookup, fixed
+    // stack scratch array for demoted registers, spill-at-exit; the
+    // TracedModule itself was built in the setup phase above)
+    let mut run_segment_traced = |frame: &mut LaneFrame,
+                                  records: &mut RecordPool,
+                                  mem: &mut Memory,
+                                  log: &mut Vec<String>,
+                                  state: u16,
+                                  n: i64|
+     -> u64 {
+        records.data_mut(task)[0] = n as u64;
+        frame.reset(&decoded, task, 0, state, 0);
+        match interp_traced.run(frame, mem, records, log) {
+            StepResult::Done(o) => o.cycles,
+            other => panic!("unexpected {other:?}"),
+        }
+    };
+    let mut traced_checksum = 0u64;
+    for &(state, n) in stream {
+        traced_checksum = traced_checksum.wrapping_add(run_segment_traced(
+            &mut frame,
+            &mut records,
+            &mut mem,
+            &mut log,
+            state,
+            n,
+        ));
+    }
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    for i in 0..12_000usize {
+        let (state, n) = stream[i % stream.len()];
+        traced_checksum = traced_checksum.wrapping_add(run_segment_traced(
+            &mut frame,
+            &mut records,
+            &mut mem,
+            &mut log,
+            state,
+            n,
+        ));
+    }
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    assert_eq!(
+        traced_checksum, checksum,
+        "traced dispatch must charge the exact cycles decoded dispatch does"
+    );
+    assert_eq!(
+        after - before,
+        0,
+        "the traced dispatch loop must not allocate in steady state"
     );
 
     // ---- the scheduling-policy hot paths are allocation-free too --------
