@@ -1,0 +1,227 @@
+//! Service-engine bench: what the lower-once fix buys and what
+//! multi-tenancy costs.
+//!
+//! * **Lowering amortization** — host-side cost of opening a session cold
+//!   (compile + decode → superblock-fuse → trace-fuse) vs warm (content
+//!   cache hit). The cold cost is what the pre-fix `Session::run_with`
+//!   paid on *every* submission; the ratio is the per-run tax the service
+//!   engine retires.
+//! * **Single-tenant transparency** — a one-job service round must cost
+//!   exactly the cycles of a one-shot `Session::run` (asserted, not just
+//!   recorded).
+//! * **Co-tenant interference** — a tenant's in-round completion stamp
+//!   solo vs co-scheduled with a second tenant on the same fleet.
+//! * **Replay digest** — an FNV-1a digest over the full outcome record of
+//!   a fixed mixed schedule, run twice in-process (asserted equal) and
+//!   written to the JSON; the CI service job re-runs the bench under
+//!   `GTAP_BENCH_THREADS=1` and `=4` and diffs the digests, pinning that
+//!   sweep threading never leaks into engine results.
+//!
+//! Results land in `BENCH_service.json` at the repo root (the CI
+//! smoke-bench job records it with `GTAP_BENCH_SMOKE=1` and uploads the
+//! artifact). Regenerate with `cargo bench --bench service`.
+
+use gtap::bench::sweep::{self, full_scale, measure};
+use gtap::coordinator::{GtapConfig, Session};
+use gtap::ir::types::Value;
+use gtap::runtime::service::{AdmissionPolicy, JobOutcome, JobStatus, ServiceEngine, SubmitOpts};
+use gtap::sim::DeviceSpec;
+use gtap::workloads::fib;
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn repo_root() -> PathBuf {
+    // crate manifest dir is <repo>/rust; the workspace root is its parent
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .to_path_buf()
+}
+
+fn cfg(seed: u64) -> GtapConfig {
+    GtapConfig {
+        grid_size: 4,
+        block_size: 32,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// FNV-1a over the `Debug` rendering of the outcome record — every field
+/// of every `JobOutcome` (status, stamps, results, per-tenant and fleet
+/// stats) feeds the digest, so any nondeterminism anywhere shows up.
+fn digest(outs: &[JobOutcome]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in format!("{outs:?}").bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+fn main() {
+    let smoke = std::env::var("GTAP_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let fib_n = if full_scale() {
+        20
+    } else if smoke {
+        11
+    } else {
+        14
+    };
+    let jobs = if full_scale() { 8 } else { 4 };
+    println!("service bench: fib({fib_n}), {jobs} jobs/tenant, grid 4 x block 32\n");
+    let fib_src = fib::source(0, false);
+
+    // ---- part 1: cold vs warm session opening ---------------------------
+    // Cold = full compile + lower (the old per-run cost); warm = content
+    // cache hit. Host nanos, medians over the seed sweep.
+    let cold = measure(|seed| {
+        let mut eng =
+            ServiceEngine::new(cfg(seed), DeviceSpec::h100(), AdmissionPolicy::FairShare)
+                .unwrap();
+        let t = Instant::now();
+        eng.open_session("cold", &fib_src).unwrap();
+        t.elapsed().as_nanos() as f64
+    });
+    let warm = measure(|seed| {
+        let mut eng =
+            ServiceEngine::new(cfg(seed), DeviceSpec::h100(), AdmissionPolicy::FairShare)
+                .unwrap();
+        eng.open_session("first", &fib_src).unwrap();
+        let t = Instant::now();
+        eng.open_session("second", &fib_src).unwrap();
+        t.elapsed().as_nanos() as f64
+    });
+    let speedup = cold.median / warm.median;
+    println!(
+        "  open_session cold {:.0} ns  warm {:.0} ns  ({speedup:.0}x — the per-run \
+         relowering tax retired by lower-once)",
+        cold.median, warm.median
+    );
+    assert!(
+        warm.median < cold.median,
+        "a cache hit must be cheaper than compile + lower \
+         (warm {} ns >= cold {} ns)",
+        warm.median,
+        cold.median
+    );
+
+    // ---- part 2: single-tenant transparency -----------------------------
+    let mut sess = Session::compile(&fib_src, cfg(sweep::SEED_BASE), DeviceSpec::h100())
+        .unwrap();
+    let session_run = sess.run("fib", &[Value::from_i64(fib_n)]).unwrap();
+    let mut eng = ServiceEngine::new(
+        cfg(sweep::SEED_BASE),
+        DeviceSpec::h100(),
+        AdmissionPolicy::FairShare,
+    )
+    .unwrap();
+    let t = eng.open_session("solo", &fib_src).unwrap();
+    eng.submit(t, "fib", &[Value::from_i64(fib_n)], SubmitOpts::default())
+        .unwrap();
+    eng.run_to_idle().unwrap();
+    let solo_out = eng.take_outcomes().remove(0);
+    assert_eq!(
+        solo_out.fleet, session_run,
+        "single-tenant round != Session::run"
+    );
+    let round_cycles = solo_out.fleet.cycles;
+    let solo_completed_at = solo_out.stats.completed_at.expect("completed");
+    println!(
+        "  single-tenant round: {round_cycles} cycles, byte-identical to Session::run"
+    );
+
+    // ---- part 3: co-tenant interference ---------------------------------
+    // The same fib job, alone vs sharing the fleet with a second tenant
+    // running the same program: how much later does tenant 0 finish?
+    let shared_completed = measure(|seed| {
+        let mut eng =
+            ServiceEngine::new(cfg(seed), DeviceSpec::h100(), AdmissionPolicy::FairShare)
+                .unwrap();
+        let a = eng.open_session("a", &fib_src).unwrap();
+        let b = eng.open_session("b", &fib_src).unwrap();
+        eng.submit(a, "fib", &[Value::from_i64(fib_n)], SubmitOpts::default())
+            .unwrap();
+        eng.submit(b, "fib", &[Value::from_i64(fib_n)], SubmitOpts::default())
+            .unwrap();
+        eng.run_to_idle().unwrap();
+        let outs = eng.take_outcomes();
+        let o = outs.iter().find(|o| o.tenant == a).unwrap();
+        assert_eq!(o.status, JobStatus::Completed);
+        o.stats.completed_at.expect("completed") as f64
+    });
+    let interference = shared_completed.median / solo_completed_at as f64;
+    println!(
+        "  co-tenant interference: solo completes at {solo_completed_at} cy, \
+         shared median {:.0} cy ({interference:.2}x)",
+        shared_completed.median
+    );
+
+    // ---- part 4: replay digest ------------------------------------------
+    let schedule = || -> Vec<JobOutcome> {
+        let mut eng = ServiceEngine::new(
+            cfg(sweep::SEED_BASE),
+            DeviceSpec::h100(),
+            AdmissionPolicy::FairShare,
+        )
+        .unwrap();
+        let a = eng.open_session("a", &fib_src).unwrap();
+        let b = eng.open_session("b", &fib_src).unwrap();
+        for j in 0..jobs {
+            eng.submit(
+                a,
+                "fib",
+                &[Value::from_i64(fib_n - (j % 3) as i64)],
+                SubmitOpts::default(),
+            )
+            .unwrap();
+            eng.submit(
+                b,
+                "fib",
+                &[Value::from_i64(fib_n - 1)],
+                SubmitOpts {
+                    priority: (j % 2) as u8,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        }
+        eng.run_to_idle().unwrap();
+        eng.take_outcomes()
+    };
+    let outs = schedule();
+    let d1 = digest(&outs);
+    let d2 = digest(&schedule());
+    assert_eq!(d1, d2, "replaying the schedule changed the outcome digest");
+    assert!(outs
+        .iter()
+        .all(|o| o.status == JobStatus::Completed && o.result.is_some()));
+    println!(
+        "  replay digest over {} outcomes: {d1:#018x} (stable across reruns)",
+        outs.len()
+    );
+
+    // ---- machine-readable record: BENCH_service.json --------------------
+    let json = format!(
+        "{{\n  \"bench\": \"service\",\n  \"measured\": true,\n  \
+         \"command\": \"cargo bench --bench service\",\n  \
+         \"runs\": {},\n  \"smoke\": {},\n  \
+         \"sizes\": {{\"fib_n\": {fib_n}, \"jobs_per_tenant\": {jobs}, \
+         \"grid\": 4, \"block\": 32}},\n  \
+         \"lowering\": {{\"cold_open_ns_median\": {:.1}, \
+         \"warm_open_ns_median\": {:.1}, \"lower_once_speedup\": {speedup:.1}}},\n  \
+         \"single_tenant\": {{\"round_cycles\": {round_cycles}, \
+         \"matches_session_run\": true}},\n  \
+         \"interference\": {{\"solo_completed_at\": {solo_completed_at}, \
+         \"shared_completed_at_median\": {:.1}, \"ratio\": {interference:.3}}},\n  \
+         \"replay_digest\": \"{d1:#018x}\"\n}}\n",
+        sweep::runs(),
+        smoke,
+        cold.median,
+        warm.median,
+        shared_completed.median,
+    );
+    let path = repo_root().join("BENCH_service.json");
+    std::fs::write(&path, json).expect("write BENCH_service.json");
+    println!("\nwrote {}", path.display());
+}

@@ -54,5 +54,5 @@ pub use fault::{FaultEvent, FaultKind, FaultPlan};
 pub use policy::{
     Backoff, Placement, PolicyConfig, QueueSelect, QueueSet, SmTier, StealAmount, VictimSelect,
 };
-pub use scheduler::{PayloadEngine, PayloadReq, RunStats, Scheduler};
+pub use scheduler::{PayloadEngine, PayloadReq, RunStats, Scheduler, TenantStats};
 pub use session::Session;

@@ -45,6 +45,12 @@ pub struct TaskMeta {
     /// `0..=255` at the spawn site, inherited from the parent when the
     /// clause is absent — read by `Placement::PriorityUser`.
     pub priority: u8,
+    /// Tenant (session) namespace this task belongs to: the slot index of
+    /// its module in a multi-tenant `Scheduler`. Set on the root by
+    /// `spawn_root_for`, inherited by every descendant — the per-session
+    /// task-ID namespace of the service layer. Always 0 in single-tenant
+    /// runs, so the field is invisible to every pre-existing pin.
+    pub tenant: u16,
 }
 
 impl Default for TaskMeta {
@@ -61,6 +67,7 @@ impl Default for TaskMeta {
             alive: false,
             depth: 0,
             priority: 0,
+            tenant: 0,
         }
     }
 }
@@ -118,14 +125,15 @@ impl RecordPool {
     /// exhausted (the caller surfaces the Table-1 feasibility error).
     pub fn alloc(&mut self, func: FuncId, parent: TaskId) -> Option<TaskId> {
         let id = self.free.pop()?;
-        // lineage metadata for the priority placement policies: depth
-        // advances by one per fork level, user priority is inherited (the
-        // spawn site may overwrite it with an explicit priority(expr))
-        let (depth, priority) = if parent == NO_TASK {
-            (0, 0)
+        // lineage metadata: depth advances by one per fork level, user
+        // priority is inherited (the spawn site may overwrite it with an
+        // explicit priority(expr)), and the tenant namespace flows down
+        // unchanged (roots get theirs from `spawn_root_for`)
+        let (depth, priority, tenant) = if parent == NO_TASK {
+            (0, 0, 0)
         } else {
             let pm = &self.meta[parent as usize];
-            (pm.depth.saturating_add(1), pm.priority)
+            (pm.depth.saturating_add(1), pm.priority, pm.tenant)
         };
         let m = &mut self.meta[id as usize];
         debug_assert!(!m.alive, "double allocation of task {id}");
@@ -135,6 +143,7 @@ impl RecordPool {
             alive: true,
             depth,
             priority,
+            tenant,
             ..TaskMeta::default()
         };
         let base = id as usize * self.data_stride;
@@ -299,6 +308,21 @@ mod tests {
         assert_eq!(fresh_root, grandchild);
         assert_eq!(p.meta(fresh_root).depth, 0);
         assert_eq!(p.meta(fresh_root).priority, 0);
+    }
+
+    #[test]
+    fn tenant_namespace_flows_down_and_resets_on_reuse() {
+        let mut p = RecordPool::new(4, 1, 2);
+        let root = p.alloc(0, NO_TASK).unwrap();
+        p.meta_mut(root).tenant = 3; // what spawn_root_for does
+        let child = p.alloc(0, root).unwrap();
+        let grandchild = p.alloc(0, child).unwrap();
+        assert_eq!(p.meta(child).tenant, 3);
+        assert_eq!(p.meta(grandchild).tenant, 3);
+        p.free(grandchild);
+        let fresh_root = p.alloc(0, NO_TASK).unwrap();
+        assert_eq!(fresh_root, grandchild);
+        assert_eq!(p.meta(fresh_root).tenant, 0, "reuse resets the namespace");
     }
 
     #[test]

@@ -67,6 +67,7 @@ use super::policy::{PolicyConfig, QueueSet, SmPool, STEAL_TRIES};
 use super::records::{RecordPool, TaskId, NO_TASK};
 use crate::ir::bytecode::Module;
 use crate::ir::decoded::DecodedModule;
+use crate::ir::lowered::LoweredModule;
 use crate::ir::superblock::FusedModule;
 use crate::ir::traced::TracedModule;
 use crate::ir::types::Value;
@@ -160,6 +161,37 @@ pub struct RunStats {
     pub output: Vec<String>,
 }
 
+/// Per-tenant slice of a (possibly multi-tenant) run: what the service
+/// layer accounts to each session. Exact-attribution counters
+/// (`tasks_finished`, `segments`, `spawns`) sum across tenants to the
+/// fleet-wide `RunStats` values; a single-tenant run's slice mirrors its
+/// `RunStats` exactly.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TenantStats {
+    /// Tasks of this tenant that ran to completion.
+    pub tasks_finished: u64,
+    /// Children spawned by this tenant's tasks.
+    pub spawns: u64,
+    /// State-machine segments executed by this tenant's tasks (per-lane
+    /// attribution — exact, unlike the warp-majority memsys split).
+    pub segments: u64,
+    /// Result of this tenant's root task (non-void entries).
+    pub root_result: Option<Value>,
+    /// Absolute device cycle at which the tenant's last live task finished
+    /// (or it was evicted). `None` if it never quiesced — or never ran.
+    pub completed_at: Option<u64>,
+    /// The tenant was evicted mid-run (per-tenant deadline overrun or host
+    /// cancellation) or caught in a whole-run drain: remaining work
+    /// discarded, records released, no further effects applied.
+    pub evicted: bool,
+    /// Modeled memory-system counters attributed to this tenant. A warp's
+    /// recorded traffic is attributed whole to the tenant owning the
+    /// majority of its lanes (ties to the lower slot) — exact under block
+    /// granularity (one task per iteration), majority-approximate when
+    /// thread-level warps mix tenants.
+    pub memsys: MemSysStats,
+}
+
 /// Per-worker persistent state, including every scratch vector the
 /// worker's iterations reuse (no allocation on the steady-state path).
 struct WorkerState {
@@ -192,18 +224,17 @@ pub struct Scheduler<'a> {
     /// The scheduling-policy combination this run dispatches over
     /// (copied out of `cfg` once at construction).
     policy: PolicyConfig,
-    /// Load-time-flattened bytecode the interpreter dispatches over.
-    decoded: DecodedModule,
-    /// Superblock-fused form of `decoded` (folded block costs, macro-op
-    /// streams); the substrate traces are built from, and the upper-mid
-    /// dispatch tier in the bench/differential matrix.
-    fused: FusedModule,
-    /// Trace-fused form of `fused` (superblocks extended across biased
-    /// branches, trace-local scratch regalloc) — what the engine lanes
-    /// actually execute (`Interp::traced`). Trace formation is
-    /// cost-transparent, so `RunStats` are bit-identical to
-    /// per-instruction decoded dispatch (and to the pinned monolith).
-    traced: TracedModule,
+    /// The lower-once artifact bundles this run executes, one per tenant
+    /// slot (repeats allowed — co-tenants may share a module; slot 0 is
+    /// the only slot in single-tenant runs). Lowering happened before this
+    /// scheduler existed (`LoweredModule::lower`, built by the session or
+    /// the service module cache); the run only *borrows* — `Scheduler::new`
+    /// per submission no longer implies decode → fuse → trace per
+    /// submission. Each bundle's `traced` form is what the engine lanes
+    /// execute (`Interp::traced`); trace formation is cost-transparent, so
+    /// `RunStats` stay bit-identical to per-instruction decoded dispatch
+    /// (and to the pinned monolith).
+    mods: Vec<&'a LoweredModule>,
     /// The modeled memory system (`cfg.memsys`): per-SM L1s + shared L2
     /// charged at the warp-combine step from recorded access streams.
     /// Disabled (zero state, zero cost) under the flat default.
@@ -222,6 +253,23 @@ pub struct Scheduler<'a> {
     frames: Vec<LaneFrame>,
     batch_max: usize,
     root: TaskId,
+    // --- multi-tenant state (all trivially sized/zeroed in single-tenant
+    // runs; every run-loop branch over it is gated so pre-service pins
+    // stay byte-identical) ---
+    /// Per-tenant accounting (len = `mods.len()`).
+    tstats: Vec<TenantStats>,
+    /// Live tasks per tenant slot (partitions `live_tasks`).
+    live_by_tenant: Vec<u64>,
+    /// Per-tenant eviction deadlines, absolute device cycles.
+    tenant_deadline: Vec<Option<u64>>,
+    /// Fast gate: at least one per-tenant deadline is armed.
+    any_tenant_deadline: bool,
+    /// Root task of each tenant slot (`NO_TASK` before spawn and after the
+    /// root finishes or the tenant is evicted).
+    roots: Vec<TaskId>,
+    /// Roots spawned so far (round-robin worker placement for later roots;
+    /// the first always lands on worker 0, matching the one-shot launch).
+    roots_spawned: usize,
     // --- reusable hot-path scratch (no allocation per iteration) ---
     scratch_batch: Vec<TaskId>,
     scratch_outputs: Vec<Option<SegmentOutput>>,
@@ -229,53 +277,91 @@ pub struct Scheduler<'a> {
     scratch_lanes: Vec<LanePath>,
     scratch_spawned: Vec<Vec<TaskId>>,
     scratch_conts: Vec<(TaskId, u8)>,
+    /// Lane → tenant slot of the executing batch.
+    scratch_tenants: Vec<u16>,
 }
 
 impl<'a> Scheduler<'a> {
+    /// A single-tenant scheduler borrowing one pre-lowered bundle. The
+    /// historical entry point; `Session` and the test/bench harnesses call
+    /// it once per run with the *same* bundle — no relowering.
     pub fn new(
-        module: &'a Module,
+        lowered: &'a LoweredModule,
+        cfg: &'a GtapConfig,
+        dev: &'a DeviceSpec,
+    ) -> Result<Scheduler<'a>> {
+        Self::multi(std::slice::from_ref(&lowered), cfg, dev)
+    }
+
+    /// A scheduler co-running several tenants' modules over one worker
+    /// fleet: slot `i` of `mods` is tenant `i`'s lowered bundle (repeats
+    /// allowed). Pool sizing (task-data stride, child capacity, lane-frame
+    /// registers) covers the maximum demand across slots; feasibility
+    /// validation applies to every slot. With one slot this is exactly the
+    /// historical single-tenant constructor.
+    pub fn multi(
+        mods: &[&'a LoweredModule],
         cfg: &'a GtapConfig,
         dev: &'a DeviceSpec,
     ) -> Result<Scheduler<'a>> {
         cfg.validate().map_err(|e| anyhow!(e))?;
-        let data_words = module
-            .funcs
-            .iter()
-            .map(|f| f.layout.words())
-            .max()
-            .unwrap_or(1)
-            .max(1);
-        let child_cap = if cfg.assume_no_taskwait {
-            0
-        } else {
-            let hint = module
-                .funcs
-                .iter()
-                .map(|f| f.max_children_hint as usize)
-                .max()
-                .unwrap_or(0);
-            if hint == u16::MAX as usize {
-                cfg.max_child_tasks
-            } else {
-                hint.min(cfg.max_child_tasks).max(1)
-            }
-        };
-        if cfg.assume_no_taskwait {
-            if let Some(f) = module.funcs.iter().find(|f| f.has_taskwait) {
-                bail!(
-                    "GTAP_ASSUME_NO_TASKWAIT set, but task function {:?} contains \
-                     taskwait (Table 1: only safe for programs that never taskwait)",
-                    f.name
-                );
-            }
+        if mods.is_empty() {
+            bail!("scheduler needs at least one tenant module");
         }
-        if cfg.granularity == Granularity::Thread {
-            if let Some(f) = module.funcs.iter().find(|f| f.uses_parfor) {
+        if mods.len() > u16::MAX as usize {
+            bail!("at most {} tenant slots per run", u16::MAX);
+        }
+        let mods: Vec<&'a LoweredModule> = mods.to_vec();
+        let mut data_words = 1usize;
+        let mut child_cap = 0usize;
+        for lm in &mods {
+            if lm.dev_name() != dev.name {
                 bail!(
-                    "task function {:?} uses parallel_for, which requires \
-                     block-level workers (§5.1.3)",
-                    f.name
+                    "module lowered for device {:?} cannot run on {:?}",
+                    lm.dev_name(),
+                    dev.name
                 );
+            }
+            let module = &lm.module;
+            data_words = data_words.max(
+                module
+                    .funcs
+                    .iter()
+                    .map(|f| f.layout.words())
+                    .max()
+                    .unwrap_or(1),
+            );
+            if !cfg.assume_no_taskwait {
+                let hint = module
+                    .funcs
+                    .iter()
+                    .map(|f| f.max_children_hint as usize)
+                    .max()
+                    .unwrap_or(0);
+                let resolved = if hint == u16::MAX as usize {
+                    cfg.max_child_tasks
+                } else {
+                    hint.min(cfg.max_child_tasks).max(1)
+                };
+                child_cap = child_cap.max(resolved);
+            }
+            if cfg.assume_no_taskwait {
+                if let Some(f) = module.funcs.iter().find(|f| f.has_taskwait) {
+                    bail!(
+                        "GTAP_ASSUME_NO_TASKWAIT set, but task function {:?} contains \
+                         taskwait (Table 1: only safe for programs that never taskwait)",
+                        f.name
+                    );
+                }
+            }
+            if cfg.granularity == Granularity::Thread {
+                if let Some(f) = module.funcs.iter().find(|f| f.uses_parfor) {
+                    bail!(
+                        "task function {:?} uses parallel_for, which requires \
+                         block-level workers (§5.1.3)",
+                        f.name
+                    );
+                }
             }
         }
         let n_workers = cfg.num_workers();
@@ -312,15 +398,16 @@ impl<'a> Scheduler<'a> {
         for (i, ws) in workers.iter().enumerate() {
             sm_peers[ws.sm].push(i);
         }
-        let decoded = DecodedModule::decode(module);
-        let fused = FusedModule::fuse(&decoded, dev);
-        // Static trace formation at load time: back-edge and avoid-exit
-        // heuristics only. (Profile-fed builds are available to tools via
-        // `TracedModule::build` with recorded branch counters.)
-        let traced = TracedModule::build(&decoded, &fused, dev, None);
-        let frames = (0..batch_max).map(|_| LaneFrame::sized(&decoded)).collect();
+        // Lane frames are sized for the *largest* register file and spawn
+        // buffer across the tenant slots, so one shared frame pool serves
+        // every tenant's module without reallocating.
+        let frames = (0..batch_max)
+            .map(|_| LaneFrame::sized_for_all(mods.iter().map(|lm| &lm.decoded)))
+            .collect();
         let queues = QueueSet::for_config(cfg);
         let sm_pool = SmPool::for_config(cfg, dev, queues.supports_sm_tier());
+        let ntenants = mods.len();
+        let module: &'a Module = &mods[0].module;
         Ok(Scheduler {
             module,
             cfg,
@@ -329,9 +416,7 @@ impl<'a> Scheduler<'a> {
             sm_pool,
             records: RecordPool::new(pool_cap, data_words, child_cap),
             policy: cfg.policy,
-            decoded,
-            fused,
-            traced,
+            mods,
             memsys: MemSys::for_mode(cfg.memsys, dev),
             faults: if cfg.faults.is_active() {
                 Some(FaultState::new(&cfg.faults, n_workers))
@@ -346,37 +431,77 @@ impl<'a> Scheduler<'a> {
             frames,
             batch_max,
             root: NO_TASK,
+            tstats: vec![TenantStats::default(); ntenants],
+            live_by_tenant: vec![0; ntenants],
+            tenant_deadline: vec![None; ntenants],
+            any_tenant_deadline: false,
+            roots: vec![NO_TASK; ntenants],
+            roots_spawned: 0,
             scratch_batch: Vec::with_capacity(batch_max),
             scratch_outputs: Vec::with_capacity(batch_max),
             scratch_states: Vec::with_capacity(batch_max),
             scratch_lanes: Vec::with_capacity(batch_max),
             scratch_spawned: (0..cfg.num_queues).map(|_| Vec::new()).collect(),
             scratch_conts: Vec::new(),
+            scratch_tenants: Vec::with_capacity(batch_max),
         })
     }
 
-    /// The decoded form this scheduler executes (shared with tests/benches).
+    /// The decoded form tenant slot 0 executes (shared with tests/benches).
     pub fn decoded(&self) -> &DecodedModule {
-        &self.decoded
+        &self.mods[0].decoded
     }
 
-    /// The superblock-fused substrate traces are built from.
+    /// The superblock-fused substrate slot 0's traces are built from.
     pub fn fused(&self) -> &FusedModule {
-        &self.fused
+        &self.mods[0].fused
     }
 
-    /// The trace-fused form the lanes dispatch over.
+    /// The trace-fused form slot 0's lanes dispatch over.
     pub fn traced(&self) -> &TracedModule {
-        &self.traced
+        &self.mods[0].traced
+    }
+
+    /// Number of tenant slots this scheduler co-runs.
+    pub fn tenant_count(&self) -> usize {
+        self.mods.len()
     }
 
     /// Spawn the root task (the `#pragma gtap entry` of Program 4).
     pub fn spawn_root(&mut self, func_name: &str, args: &[Value]) -> Result<()> {
-        let fid = self
+        self.spawn_root_for(0, func_name, args, 0)
+    }
+
+    /// Spawn tenant slot `tenant`'s root task with a user priority
+    /// (0 = most urgent; read by the `QueueSelect::Priority` /
+    /// `Placement::PriorityUser` bands and inherited by the whole task
+    /// tree — how priority-weighted admission reaches the queues). One
+    /// root per tenant slot per run. The first root lands on worker 0
+    /// (byte-identical to the one-shot launch); later roots round-robin
+    /// across the fleet so co-tenants start spread out.
+    pub fn spawn_root_for(
+        &mut self,
+        tenant: u16,
+        func_name: &str,
+        args: &[Value],
+        priority: u8,
+    ) -> Result<()> {
+        let t = tenant as usize;
+        if t >= self.mods.len() {
+            bail!(
+                "tenant slot {tenant} out of range ({} slots)",
+                self.mods.len()
+            );
+        }
+        if self.roots[t] != NO_TASK {
+            bail!("tenant slot {tenant} already has a root task this run");
+        }
+        let lm = self.mods[t];
+        let fid = lm
             .module
             .func_id(func_name)
             .with_context(|| format!("no task function named {func_name:?}"))?;
-        let fc = self.module.func(fid);
+        let fc = lm.module.func(fid);
         if args.len() != fc.layout.num_args() {
             bail!(
                 "{func_name:?} takes {} arguments, got {}",
@@ -388,22 +513,71 @@ impl<'a> Scheduler<'a> {
             .records
             .alloc(fid, NO_TASK)
             .context("record pool exhausted at root spawn")?;
+        {
+            let m = self.records.meta_mut(id);
+            m.tenant = tenant;
+            m.priority = priority;
+        }
         for (i, a) in args.iter().enumerate() {
             self.records.data_mut(id)[i] = a.0;
         }
         self.live_tasks += 1;
-        self.root = id;
-        self.workers[0].immediate.push(id);
+        self.live_by_tenant[t] += 1;
+        if self.root == NO_TASK {
+            self.root = id;
+        }
+        self.roots[t] = id;
+        let w = self.roots_spawned % self.workers.len();
+        self.roots_spawned += 1;
+        self.workers[w].immediate.push(id);
         Ok(())
     }
 
-    /// Run the persistent kernel to quiescence.
+    /// Arm an eviction deadline for tenant slot `tenant`, in absolute
+    /// device cycles (the simulated clock starts at `dev.startup`, so any
+    /// deadline below startup evicts at the first event). Checked at
+    /// event-loop boundaries — nothing is in flight between events — and
+    /// fired through the scoped-drain path ([`Scheduler::evict_tenant`]).
+    pub fn set_tenant_deadline(&mut self, tenant: u16, cycle: u64) {
+        self.tenant_deadline[tenant as usize] = Some(cycle);
+        self.any_tenant_deadline = true;
+    }
+
+    /// Per-tenant accounting, taken once after the run.
+    pub fn take_tenant_stats(&mut self) -> Vec<TenantStats> {
+        std::mem::take(&mut self.tstats)
+    }
+
+    /// Run the persistent kernel to quiescence (single-tenant form).
     pub fn run(
         &mut self,
         mem: &mut Memory,
         engine: Option<&mut dyn PayloadEngine>,
         profiler: &mut Profiler,
     ) -> Result<RunStats> {
+        let mut mems = [mem];
+        self.run_multi(&mut mems, engine, profiler)
+    }
+
+    /// Run the persistent kernel to quiescence with one simulated global
+    /// memory per tenant slot (`mems[i]` backs `mods[i]` — the service
+    /// layer's per-session memory isolation). With one slot this is
+    /// exactly the historical `run`: every added branch is gated on
+    /// multi-tenant state (armed deadlines, extra slots), so single-tenant
+    /// `RunStats` stay byte-identical to the pre-service pins.
+    pub fn run_multi(
+        &mut self,
+        mems: &mut [&mut Memory],
+        engine: Option<&mut dyn PayloadEngine>,
+        profiler: &mut Profiler,
+    ) -> Result<RunStats> {
+        if mems.len() != self.mods.len() {
+            bail!(
+                "run_multi: {} memories for {} tenant slots",
+                mems.len(),
+                self.mods.len()
+            );
+        }
         let mut engine: Option<&mut dyn PayloadEngine> = engine;
         let t0 = self.dev.startup;
         let mut clock = WorkerClock::new(self.workers.len(), t0);
@@ -417,6 +591,12 @@ impl<'a> Scheduler<'a> {
         let deadline = self.cfg.faults.deadline;
         while self.live_tasks > 0 {
             let (now, w) = clock.peek_min();
+            if self.any_tenant_deadline {
+                self.enforce_tenant_deadlines(now);
+                if self.live_tasks == 0 {
+                    break;
+                }
+            }
             if self.faults.is_some() {
                 if let Some(dl) = deadline {
                     if now >= dl {
@@ -446,9 +626,10 @@ impl<'a> Scheduler<'a> {
                 None => None,
             };
             let dur = self
-                .worker_iteration(w as usize, now, mem, eng, profiler, &mut log)?
+                .worker_iteration(w as usize, now, mems, eng, profiler, &mut log)?
                 .max(1);
             makespan = makespan.max(now + dur);
+            self.stamp_tenant_completions(now + dur);
             if self.live_tasks == 0 {
                 break;
             }
@@ -690,7 +871,7 @@ impl<'a> Scheduler<'a> {
         &mut self,
         w: usize,
         now: u64,
-        mem: &mut Memory,
+        mems: &mut [&mut Memory],
         mut engine: Option<&mut dyn PayloadEngine>,
         profiler: &mut Profiler,
         log: &mut Vec<String>,
@@ -730,13 +911,15 @@ impl<'a> Scheduler<'a> {
             Granularity::Thread => 1,
             Granularity::Block => self.cfg.block_size as u32,
         };
-        let interp = Interp::traced(&self.decoded, &self.traced, dev, block_width, engine.is_some())
-            .recording(self.memsys.enabled());
+        let have_engine = engine.is_some();
+        let recording = self.memsys.enabled();
         let mut outputs = std::mem::take(&mut self.scratch_outputs);
         outputs.clear();
         outputs.resize(batch.len(), None);
         let mut entry_states = std::mem::take(&mut self.scratch_states);
         entry_states.clear();
+        let mut tenants = std::mem::take(&mut self.scratch_tenants);
+        tenants.clear();
         let mut pending = std::mem::take(&mut self.workers[w].payload_pending);
         let mut pending_next = std::mem::take(&mut self.workers[w].payload_next);
         let mut reqs = std::mem::take(&mut self.workers[w].payload_reqs);
@@ -744,11 +927,19 @@ impl<'a> Scheduler<'a> {
         pending.clear();
         for (i, &task) in batch.iter().enumerate() {
             let meta = self.records.meta(task);
-            let (func, state) = (meta.func, meta.state);
+            let (func, state, tn) = (meta.func, meta.state, meta.tenant);
             entry_states.push(state);
+            tenants.push(tn);
+            // Per-lane engine view: lanes may belong to different tenants'
+            // modules. `Interp` construction is scalar math — heap-free and
+            // host-only — so per-lane construction changes no simulated
+            // cycles and keeps single-tenant runs byte-identical.
+            let lm = self.mods[tn as usize];
+            let interp = Interp::traced(&lm.decoded, &lm.traced, dev, block_width, have_engine)
+                .recording(recording);
             let frame = &mut self.frames[i];
-            frame.reset(&self.decoded, task, func, state, i as u32);
-            match interp.run(frame, mem, &mut self.records, log) {
+            frame.reset(&lm.decoded, task, func, state, i as u32);
+            match interp.run(frame, &mut *mems[tn as usize], &mut self.records, log) {
                 StepResult::Done(o) => outputs[i] = Some(o),
                 StepResult::NeedPayload {
                     seed,
@@ -776,8 +967,17 @@ impl<'a> Scheduler<'a> {
             debug_assert_eq!(vals.len(), reqs.len());
             pending_next.clear();
             for (&(i, _), &val) in pending.iter().zip(vals.iter()) {
+                let lm = self.mods[tenants[i] as usize];
+                let interp = Interp::traced(&lm.decoded, &lm.traced, dev, block_width, have_engine)
+                    .recording(recording);
                 let frame = &mut self.frames[i];
-                match interp.resume_payload(frame, val, mem, &mut self.records, log) {
+                match interp.resume_payload(
+                    frame,
+                    val,
+                    &mut *mems[tenants[i] as usize],
+                    &mut self.records,
+                    log,
+                ) {
                     StepResult::Done(o) => outputs[i] = Some(o),
                     StepResult::NeedPayload {
                         seed,
@@ -800,6 +1000,9 @@ impl<'a> Scheduler<'a> {
         self.workers[w].payload_reqs = reqs;
         self.workers[w].payload_vals = vals;
         self.stats.segments += outputs.len() as u64;
+        for &tn in tenants.iter() {
+            self.tstats[tn as usize].segments += 1;
+        }
 
         // divergence-serialized warp execution cost
         let mut lanes = std::mem::take(&mut self.scratch_lanes);
@@ -836,6 +1039,20 @@ impl<'a> Scheduler<'a> {
                     self.stats.memsys_by_class = vec![MemSysStats::default(); nq];
                 }
                 self.stats.memsys_by_class[acq_class].add(&warp_stats);
+                // per-tenant attribution: the warp's traffic goes whole to
+                // the tenant owning the majority of its lanes (ties to the
+                // lower slot) — exact under block granularity, where a
+                // batch is a single task
+                let mut best = tenants[0];
+                let mut best_n = 0usize;
+                for &t in tenants.iter() {
+                    let n = tenants.iter().filter(|&&x| x == t).count();
+                    if n > best_n || (n == best_n && t < best) {
+                        best = t;
+                        best_n = n;
+                    }
+                }
+                self.tstats[best as usize].memsys.add(&warp_stats);
             }
             c
         };
@@ -856,6 +1073,8 @@ impl<'a> Scheduler<'a> {
         for (i, out) in outputs.iter().enumerate() {
             let out = out.as_ref().unwrap();
             let task = batch[i];
+            let ti = tenants[i] as usize;
+            let lm = self.mods[ti];
             if entry_states[i] > 0 && !self.cfg.assume_no_taskwait {
                 join::release_joined_children(&mut self.records, task);
             }
@@ -879,12 +1098,14 @@ impl<'a> Scheduler<'a> {
                         format!(
                             "GTAP_MAX_CHILD_TASKS={} exceeded by {:?}",
                             self.records.child_capacity(),
-                            self.module.func(self.records.meta(task).func).name
+                            lm.module.func(self.records.meta(task).func).name
                         )
                     })?;
                 }
                 self.live_tasks += 1;
+                self.live_by_tenant[ti] += 1;
                 self.stats.spawns += 1;
+                self.tstats[ti].spawns += 1;
                 let cm = self.records.meta(child);
                 let q = policy
                     .placement
@@ -902,11 +1123,21 @@ impl<'a> Scheduler<'a> {
                 }
                 SegmentEnd::Finish => {
                     if task == self.root {
-                        let fc = self.module.func(self.records.meta(task).func);
+                        let fc = lm.module.func(self.records.meta(task).func);
                         if let Some(off) = fc.layout.result_offset() {
                             self.stats.root_result =
                                 Some(Value(self.records.data(task)[off as usize]));
                         }
+                    }
+                    if self.roots[ti] == task {
+                        let fc = lm.module.func(self.records.meta(task).func);
+                        if let Some(off) = fc.layout.result_offset() {
+                            self.tstats[ti].root_result =
+                                Some(Value(self.records.data(task)[off as usize]));
+                        }
+                        // one-shot: task IDs are reused after free, so a
+                        // later allocation must not look like this root
+                        self.roots[ti] = NO_TASK;
                     }
                     let (eff, c) = join::finish_task(
                         &mut self.records,
@@ -916,7 +1147,9 @@ impl<'a> Scheduler<'a> {
                     )?;
                     cost += c;
                     self.stats.tasks_finished += 1;
+                    self.tstats[ti].tasks_finished += 1;
                     self.live_tasks -= 1;
+                    self.live_by_tenant[ti] -= 1;
                     if let FinishEffect::ResumeParent { parent, queue } = eff {
                         continuations.push((parent, queue));
                     }
@@ -957,6 +1190,7 @@ impl<'a> Scheduler<'a> {
         self.scratch_batch = batch;
         self.scratch_outputs = outputs;
         self.scratch_states = entry_states;
+        self.scratch_tenants = tenants;
         self.scratch_spawned = spawned;
         self.scratch_conts = continuations;
 
@@ -1142,10 +1376,135 @@ impl<'a> Scheduler<'a> {
         Ok(())
     }
 
+    /// Record, once per tenant, the cycle its last live task finished
+    /// (pure host bookkeeping — no simulated cycles, no `RunStats`).
+    fn stamp_tenant_completions(&mut self, at: u64) {
+        for t in 0..self.tstats.len() {
+            if self.live_by_tenant[t] == 0
+                && self.tstats[t].completed_at.is_none()
+                && self.tstats[t].tasks_finished > 0
+            {
+                self.tstats[t].completed_at = Some(at);
+            }
+        }
+    }
+
+    /// Fire any armed per-tenant deadlines due at `now`, in slot order.
+    /// Cold path: entered only when `set_tenant_deadline` armed one.
+    fn enforce_tenant_deadlines(&mut self, now: u64) {
+        for t in 0..self.tenant_deadline.len() {
+            if let Some(dl) = self.tenant_deadline[t] {
+                if now >= dl {
+                    self.tenant_deadline[t] = None;
+                    if self.live_by_tenant[t] > 0 {
+                        self.evict_tenant(t, now);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Scoped drain: evict one tenant mid-run, leaving co-tenants intact.
+    /// Called at event-loop boundaries (nothing is in flight between
+    /// events — a worker iteration applies its effects before the clock
+    /// moves), for per-tenant deadline overrun and host-side session
+    /// cancellation. Removes the tenant's tasks from every staging area —
+    /// immediate buffers, each queue class, the SM tier pools — releases
+    /// its live records, and marks its `TenantStats` evicted. Host/driver
+    /// intervention: it charges no simulated cycles and increments no
+    /// fleet `RunStats` counters, so co-tenant accounting is untouched.
+    pub fn evict_tenant(&mut self, t: usize, now: u64) {
+        let tenant = t as u16;
+        let dev = self.dev;
+        {
+            let records = &self.records;
+            for ws in &mut self.workers {
+                ws.immediate.retain(|&id| records.meta(id).tenant != tenant);
+            }
+        }
+        let mut buf: Vec<TaskId> = Vec::new();
+        let mut keep: Vec<TaskId> = Vec::new();
+        if self.queues.supports_steal() {
+            // per-owner deques: filter each (worker, class) in place,
+            // preserving survivor order; re-pushes are raw (uncosted,
+            // uncounted) because this is host intervention
+            for w in 0..self.workers.len() {
+                for q in 0..self.cfg.num_queues {
+                    buf.clear();
+                    self.queues.drain_worker(w, q, &mut buf);
+                    keep.clear();
+                    keep.extend(
+                        buf.iter()
+                            .copied()
+                            .filter(|&id| self.records.meta(id).tenant != tenant),
+                    );
+                    if !keep.is_empty() {
+                        self.queues
+                            .push(w, q, now, &keep, dev)
+                            .expect("re-push of a drained subset cannot overflow");
+                    }
+                }
+            }
+        } else {
+            // the global organization has one shared queue with no owner
+            // (`drain_worker` is a deliberate no-op there): filter it whole
+            buf.clear();
+            self.queues.drain_all(&mut buf);
+            keep.clear();
+            keep.extend(
+                buf.iter()
+                    .copied()
+                    .filter(|&id| self.records.meta(id).tenant != tenant),
+            );
+            if !keep.is_empty() {
+                self.queues
+                    .push(0, 0, now, &keep, dev)
+                    .expect("re-push of a drained subset cannot overflow");
+            }
+        }
+        if self.sm_pool.enabled() {
+            for sm in 0..dev.sms {
+                buf.clear();
+                self.sm_pool.drain_sm(sm, &mut buf);
+                keep.clear();
+                keep.extend(
+                    buf.iter()
+                        .copied()
+                        .filter(|&id| self.records.meta(id).tenant != tenant),
+                );
+                if !keep.is_empty() {
+                    self.sm_pool
+                        .push(sm, now, &keep, dev)
+                        .expect("re-push of a drained subset cannot overflow");
+                }
+            }
+        }
+        buf.clear();
+        self.records.for_each_alive(|id, m| {
+            if m.tenant == tenant {
+                buf.push(id);
+            }
+        });
+        for id in buf {
+            self.records.free(id);
+        }
+        self.live_tasks -= self.live_by_tenant[t];
+        self.live_by_tenant[t] = 0;
+        // the evicted root's ID is reusable now; it must not keep
+        // matching the fleet-level `self.root` check
+        if self.roots[t] != NO_TASK && self.roots[t] == self.root {
+            self.root = NO_TASK;
+        }
+        self.roots[t] = NO_TASK;
+        self.tstats[t].evicted = true;
+        self.tstats[t].completed_at = Some(now);
+    }
+
     /// First-class abort: discard all queued work, release every live
     /// record and end the run. Shared by deadline overrun
     /// (`--faults deadline@C`) and host-side cancellation. A drained run
-    /// reports `drained = true` and no root result.
+    /// reports `drained = true` and no root result; every tenant with
+    /// work still live is marked evicted.
     pub fn drain(&mut self) {
         for ws in &mut self.workers {
             ws.immediate.clear();
@@ -1157,6 +1516,13 @@ impl<'a> Scheduler<'a> {
         self.records.for_each_alive(|id, _| sink.push(id));
         for id in sink {
             self.records.free(id);
+        }
+        for t in 0..self.tstats.len() {
+            if self.live_by_tenant[t] > 0 {
+                self.live_by_tenant[t] = 0;
+                self.roots[t] = NO_TASK;
+                self.tstats[t].evicted = true;
+            }
         }
         self.live_tasks = 0;
         self.stats.drained = true;

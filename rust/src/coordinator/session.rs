@@ -24,54 +24,87 @@
 //! assert_eq!(stats.root_result.unwrap().as_i64(), 6765);
 //! ```
 
+use std::sync::Arc;
+
 use super::config::GtapConfig;
 use super::scheduler::{PayloadEngine, RunStats, Scheduler};
 use crate::compiler;
 use crate::ir::bytecode::Module;
+use crate::ir::lowered::LoweredModule;
 use crate::ir::types::Value;
 use crate::sim::config::DeviceSpec;
 use crate::sim::memory::Memory;
 use crate::sim::profile::Profiler;
-use crate::anyhow;
 use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
 
 /// A compiled GTaP program bound to a device and configuration, with its
 /// simulated global memory. Memory persists across runs (so the host can
 /// set up arrays, run, and read results back); each `run` gets fresh
 /// task-management state, like a kernel launch.
+///
+/// Lowering (decode → superblock-fuse → trace-fuse) happens **once**, at
+/// session construction — not per run. Every `run` borrows the cached
+/// [`LoweredModule`]; `rust/tests/lowering_once.rs` pins this with the
+/// `TracedModule::build` counter. The bundle is shared (`Arc`), so the
+/// service layer can hand one lowered module to many sessions/tenants.
 pub struct Session {
-    pub module: Module,
+    lowered: Arc<LoweredModule>,
     pub config: GtapConfig,
     pub device: DeviceSpec,
     pub memory: Memory,
 }
 
 impl Session {
-    /// Compile GTaP-C source and initialize the runtime (pool sizing
-    /// happens per-run; global scalars are allocated here).
+    /// Compile GTaP-C source and initialize the runtime: lowering happens
+    /// here, once; global scalars are allocated here; pool sizing happens
+    /// per-run.
     pub fn compile(source: &str, config: GtapConfig, device: DeviceSpec) -> Result<Session> {
         config.validate().map_err(|e| anyhow!(e))?;
         let module = compiler::compile(source, config.max_task_data_size)
             .map_err(|e| anyhow!("{e}"))?;
-        let memory = Memory::new(module.globals_words());
+        Self::from_module(module, config, device)
+    }
+
+    /// Build a session from an already-compiled module (lowers it once).
+    pub fn from_module(module: Module, config: GtapConfig, device: DeviceSpec) -> Result<Session> {
+        config.validate().map_err(|e| anyhow!(e))?;
+        let lowered = Arc::new(LoweredModule::lower(module, &device));
+        Self::from_lowered(lowered, config, device)
+    }
+
+    /// Build a session around an existing lowered bundle (no lowering at
+    /// all — the service layer's module cache shares bundles this way).
+    pub fn from_lowered(
+        lowered: Arc<LoweredModule>,
+        config: GtapConfig,
+        device: DeviceSpec,
+    ) -> Result<Session> {
+        config.validate().map_err(|e| anyhow!(e))?;
+        if lowered.dev_name() != device.name {
+            bail!(
+                "module lowered for device {:?} cannot run on {:?}",
+                lowered.dev_name(),
+                device.name
+            );
+        }
+        let memory = Memory::new(lowered.module.globals_words());
         Ok(Session {
-            module,
+            lowered,
             config,
             device,
             memory,
         })
     }
 
-    /// Build a session from an already-compiled module.
-    pub fn from_module(module: Module, config: GtapConfig, device: DeviceSpec) -> Result<Session> {
-        config.validate().map_err(|e| anyhow!(e))?;
-        let memory = Memory::new(module.globals_words());
-        Ok(Session {
-            module,
-            config,
-            device,
-            memory,
-        })
+    /// The compiled module this session runs.
+    pub fn module(&self) -> &Module {
+        &self.lowered.module
+    }
+
+    /// The shared lower-once artifact bundle.
+    pub fn lowered(&self) -> Arc<LoweredModule> {
+        self.lowered.clone()
     }
 
     /// Host-side array allocation (word-addressed; see `sim::memory`).
@@ -82,6 +115,7 @@ impl Session {
     /// Write a global scalar by name.
     pub fn set_global(&mut self, name: &str, v: Value) -> Result<()> {
         let addr = self
+            .lowered
             .module
             .global_addr(name)
             .with_context(|| format!("no global named {name:?}"))?;
@@ -92,6 +126,7 @@ impl Session {
     /// Read a global scalar by name.
     pub fn get_global(&self, name: &str) -> Result<Value> {
         let addr = self
+            .lowered
             .module
             .global_addr(name)
             .with_context(|| format!("no global named {name:?}"))?;
@@ -112,7 +147,9 @@ impl Session {
         engine: Option<&mut dyn PayloadEngine>,
         profiler: &mut Profiler,
     ) -> Result<RunStats> {
-        let mut sched = Scheduler::new(&self.module, &self.config, &self.device)?;
+        // Borrows the session's cached lowering — `Scheduler::new` does no
+        // decode/fuse/trace work, so repeated runs cost pool setup only.
+        let mut sched = Scheduler::new(&self.lowered, &self.config, &self.device)?;
         sched.spawn_root(entry, args)?;
         sched.run(&mut self.memory, engine, profiler)
     }

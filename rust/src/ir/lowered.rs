@@ -1,0 +1,58 @@
+//! The lower-once artifact bundle: a compiled [`Module`] together with
+//! every derived dispatch form the engine executes.
+//!
+//! Lowering (decode → superblock-fuse → trace-fuse) is a *per-module*
+//! transformation: it depends only on the bytecode and the [`DeviceSpec`]
+//! whose cycle costs the fused blocks fold in — never on run state. The
+//! scheduler used to rebuild all three forms on every run
+//! (`Scheduler::new` per submission), a per-request recompile. A
+//! [`LoweredModule`] is built exactly once — by `Session` at compile
+//! time, or by the service layer's content-addressed module cache — and
+//! every subsequent `Scheduler` *borrows* it.
+//!
+//! The bundle is immutable after construction and safe to share across
+//! runs and tenants (`Arc<LoweredModule>` in the session/service layers):
+//! all four forms are purely derived data.
+
+use super::bytecode::Module;
+use super::decoded::DecodedModule;
+use super::superblock::FusedModule;
+use super::traced::TracedModule;
+use crate::sim::config::DeviceSpec;
+
+/// A module plus its decoded, superblock-fused and trace-fused forms,
+/// lowered for one specific device.
+#[derive(Clone, Debug)]
+pub struct LoweredModule {
+    /// The compiled bytecode (entry lookup, layouts, globals).
+    pub module: Module,
+    /// Load-time-flattened bytecode the interpreter dispatches over.
+    pub decoded: DecodedModule,
+    /// Superblock-fused form (folded block costs, macro-op streams).
+    pub fused: FusedModule,
+    /// Trace-fused form — what `Interp::traced` lanes execute.
+    pub traced: TracedModule,
+}
+
+impl LoweredModule {
+    /// Run the full lowering pipeline once. Static trace formation only
+    /// (back-edge and avoid-exit heuristics); profile-fed builds remain
+    /// available to tools via `TracedModule::build` directly.
+    pub fn lower(module: Module, dev: &DeviceSpec) -> LoweredModule {
+        let decoded = DecodedModule::decode(&module);
+        let fused = FusedModule::fuse(&decoded, dev);
+        let traced = TracedModule::build(&decoded, &fused, dev, None);
+        LoweredModule {
+            module,
+            decoded,
+            fused,
+            traced,
+        }
+    }
+
+    /// Name of the device the cost folds were lowered for. Schedulers
+    /// reject a bundle lowered for a different device.
+    pub fn dev_name(&self) -> &'static str {
+        self.traced.dev_name
+    }
+}

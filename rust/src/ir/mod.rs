@@ -20,6 +20,9 @@
 //!   (biased) branches, with trace-dead registers demoted into dense
 //!   scratch slots; what the trace-at-a-time engine (`Interp::traced`)
 //!   dispatches over, with side exits on any prediction miss.
+//! * [`lowered`] — the lower-once artifact bundle (module + decoded +
+//!   fused + traced for one device); built once per module by the
+//!   session/service layers and borrowed by every scheduler run.
 //! * [`layout`] — the compiler-generated task-data record layout: original
 //!   arguments, spilled locals, and the result field (§5.2.3, Program 6).
 //! * [`intrinsics`] — builtin functions callable from GTaP-C (serial leaf
@@ -31,6 +34,7 @@ pub mod bytecode;
 pub mod decoded;
 pub mod intrinsics;
 pub mod layout;
+pub mod lowered;
 pub mod superblock;
 pub mod traced;
 pub mod types;
@@ -38,6 +42,7 @@ pub mod types;
 pub use ast::*;
 pub use bytecode::*;
 pub use decoded::{DInsn, DecodedFunc, DecodedModule};
+pub use lowered::LoweredModule;
 pub use superblock::{FusedModule, Superblock};
 pub use traced::{Trace, TraceStep, TracedModule};
 pub use intrinsics::{Intrinsic, IntrinsicSig};

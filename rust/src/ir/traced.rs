@@ -49,10 +49,13 @@
 //! measures the speedup.
 //!
 //! Like the fused fold, the trace fold bakes in one device's constants:
-//! a `TracedModule` is built per `(module, DeviceSpec)` pair, once per
-//! run, next to `FusedModule::fuse`.
+//! a `TracedModule` is built per `(module, DeviceSpec)` pair — once per
+//! *module* (see `ir::lowered`), never per run. [`build_count`] exposes a
+//! process-wide invocation counter so the lower-once contract is
+//! regression-testable (`rust/tests/lowering_once.rs`).
 
 use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::bytecode::{Reg, NO_PRIORITY_REG};
 use super::decoded::{DInsn, DecodedFunc, DecodedModule, GlobalPc};
@@ -123,6 +126,18 @@ pub struct TracedModule {
     pub dev_name: &'static str,
 }
 
+/// Process-wide count of `TracedModule::build` invocations — the final,
+/// most expensive lowering stage, so it proxies for "a full relowering
+/// happened". Monotonic; tests measure deltas around the code under test.
+static BUILD_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// How many times `TracedModule::build` has run in this process. The
+/// lower-once regression test asserts repeated `Session::run` /
+/// service submissions leave this unchanged.
+pub fn build_count() -> u64 {
+    BUILD_COUNT.load(Ordering::Relaxed)
+}
+
 impl TracedModule {
     /// Grow one trace from every superblock leader of `fm`, demote
     /// trace-dead registers, and re-emit the streams. `profile`, when
@@ -135,6 +150,7 @@ impl TracedModule {
         profile: Option<&BranchProfile>,
     ) -> TracedModule {
         debug_assert_eq!(fm.dev_name, dev.name, "fused fold is device-specific");
+        BUILD_COUNT.fetch_add(1, Ordering::Relaxed);
         let mut tm = TracedModule {
             traces: Vec::new(),
             trace_of: vec![u32::MAX; dm.insns.len()],

@@ -36,9 +36,10 @@
 //! * [`host`] — a real-thread work-stealing fork-join executor and
 //!   sequential baselines (the stand-in for the paper's OpenMP-task CPU
 //!   comparator), used for functional validation.
-//! * [`runtime`] — the PJRT runtime: loads the AOT-compiled JAX/Pallas
-//!   payload kernel (`artifacts/*.hlo.txt`) and executes it from the warp
-//!   hot path.
+//! * [`runtime`] — host-side runtime services: the PJRT payload engine
+//!   (loads the AOT-compiled JAX/Pallas kernel from `artifacts/*.hlo.txt`)
+//!   and the multi-tenant service layer (content-addressed module cache +
+//!   engine co-scheduling many sessions over one worker fleet).
 //! * [`workloads`] — the paper's benchmark suite in GTaP-C source form plus
 //!   native reference implementations (fib, N-Queens, mergesort, cilksort,
 //!   synthetic trees, BFS).

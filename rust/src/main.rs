@@ -4,6 +4,7 @@
 //! gtap compile <file.gtap> [--emit-c]      gtapc: compile + show the
 //!                                          state-machine transformation
 //! gtap run <bench> [options]               run one benchmark once
+//! gtap service [options]                   multi-tenant service-engine smoke
 //! gtap devices                             print the device models (Table 2)
 //! gtap config                              print runtime defaults (Table 1)
 //! ```
@@ -14,8 +15,8 @@ use gtap::bench::runners::{self, Exec};
 use gtap::compiler;
 use gtap::coordinator::config::{GtapConfig, DEFAULT_MAX_TASK_DATA_SIZE};
 use gtap::coordinator::{
-    Backoff, FaultPlan, Placement, PolicyConfig, QueueSelect, SchedulerKind, SmTier,
-    StealAmount, VictimSelect,
+    Backoff, FaultPlan, Granularity, Placement, PolicyConfig, QueueSelect, SchedulerKind,
+    SmTier, StealAmount, VictimSelect,
 };
 use gtap::sim::profile::Profiler;
 use gtap::sim::{DeviceSpec, MemSysMode};
@@ -27,11 +28,12 @@ fn main() -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("compile") => cmd_compile(&args),
         Some("run") => cmd_run(&args),
+        Some("service") => cmd_service(&args),
         Some("devices") => cmd_devices(),
         Some("config") => cmd_config(),
         _ => {
             eprintln!(
-                "usage: gtap <compile|run|devices|config> …\n\
+                "usage: gtap <compile|run|service|devices|config> …\n\
                  \n  gtap compile <file.gtap>           show the state-machine transformation\
                  \n  gtap run <fib|nqueens|mergesort|cilksort|tree|ptree|bfs> \\\
                  \n      [--n N] [--cutoff C] [--device gpu|cpu|seq] [--grid G] [--block B] \\\
@@ -45,6 +47,11 @@ fn main() -> Result<()> {
                  \n      [--policy default|recommended] [--memsys flat|modeled] \\\
                  \n      [--faults off|<spec>]  (spec: stall@T:wN:C kill@T:wN stealfail@T:wN:C\
                  \n                              drop@T:wN[:qQ] deadline@C rand:SEED[:N], ;-joined)\
+                 \n  gtap service [--grid G] [--block B] [--jobs N] \\\
+                 \n      [--admission fifo|fair|priority] [--fib-n N] [--tree-depth D] \\\
+                 \n      [--bfs-n N] [--deadline C] [--cancel] [--seed S] \\\
+                 \n      [--memsys flat|modeled] [--faults off|<spec>]\
+                 \n                                     multi-tenant service-engine smoke\
                  \n  gtap devices                       device cost models (Table 2)\
                  \n  gtap config                        runtime defaults (Table 1)"
             );
@@ -240,6 +247,201 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(r) = out.stats.root_result {
         println!("  result: {}", r.as_i64());
     }
+    eprintln!("  (host wallclock {:?})", t_host.elapsed());
+    Ok(())
+}
+
+/// `gtap service` — multi-tenant service-engine smoke: three tenants
+/// (fib, block-level full tree, BFS) share one simulated fleet under the
+/// chosen admission policy. Every tenant's results are validated against
+/// native references where the run shape allows it, and the whole
+/// submission schedule is replayed on a second engine to pin
+/// byte-identical determinism; any mismatch exits nonzero.
+fn cmd_service(args: &Args) -> Result<()> {
+    use gtap::ir::types::Value;
+    use gtap::runtime::service::{
+        AdmissionPolicy, CancelToken, JobOutcome, JobStatus, ServiceEngine, SubmitOpts,
+    };
+    use gtap::workloads::{bfs, fib, tree};
+
+    let grid = args.get_or("grid", 4usize)?;
+    let block = args.get_or("block", 64usize)?;
+    let jobs = args.get_or("jobs", 2usize)?;
+    let admission = AdmissionPolicy::parse(&args.str_or("admission", "fair"))?;
+    let fib_n = args.get_or("fib-n", 12i64)?;
+    let tree_depth = args.get_or("tree-depth", 4i64)?;
+    let bfs_n = args.get_or("bfs-n", 200usize)?;
+    let seed = args.get_or("seed", 42u64)?;
+    // --deadline arms an eviction deadline on every tree job; --cancel
+    // cancels the last bfs job before serving starts
+    let deadline = match args.get("deadline") {
+        Some(_) => Some(args.get_or("deadline", 0u64)?),
+        None => None,
+    };
+    let cancel_last = args.flag("cancel");
+    if jobs == 0 {
+        bail!("--jobs must be at least 1");
+    }
+
+    let mut cfg = GtapConfig {
+        grid_size: grid,
+        block_size: block,
+        granularity: Granularity::Block,
+        seed,
+        ..Default::default()
+    };
+    let mut memsys = MemSysMode::from_env().map_err(|e| gtap::anyhow!(e))?;
+    if let Some(v) = args.get("memsys") {
+        memsys = MemSysMode::parse(v).map_err(|e| gtap::anyhow!(e))?;
+    }
+    cfg.memsys = memsys;
+    let mut faults = FaultPlan::from_env()
+        .map_err(|e| gtap::Error::typed(gtap::ErrorKind::Parse, e))?;
+    if let Some(v) = args.get("faults") {
+        faults = FaultPlan::parse(v)
+            .map_err(|e| gtap::Error::typed(gtap::ErrorKind::Parse, e))?;
+    }
+    let faults_on = faults.spelling() != "off";
+    cfg.faults = faults;
+
+    let mem_ops = 4i64;
+    let compute_iters = 4i64;
+    let fib_src = fib::source(0, false);
+    let tree_src = tree::full_tree_block_source(mem_ops, compute_iters, block as i64);
+    let bfs_src = bfs::source();
+    let graph = bfs::CsrGraph::random(bfs_n, 3, seed);
+    const T_FIB: u16 = 0;
+    const T_TREE: u16 = 1;
+    const T_BFS: u16 = 2;
+
+    let run_schedule = || -> Result<(Vec<JobOutcome>, Vec<i64>, i64, String)> {
+        let mut eng = ServiceEngine::new(cfg.clone(), DeviceSpec::h100(), admission)?;
+        let tf = eng.open_session("fib", &fib_src)?;
+        let tt = eng.open_session("tree", &tree_src)?;
+        let tb = eng.open_session("bfs", &bfs_src)?;
+        debug_assert_eq!((tf, tt, tb), (T_FIB, T_TREE, T_BFS));
+        let acc = eng.memory_mut(tt).alloc(1);
+        let m = eng.memory_mut(tb);
+        let ro = m.alloc(graph.row_offsets.len() as u64);
+        let ci = m.alloc(graph.col_indices.len().max(1) as u64);
+        let dp = m.alloc(graph.n as u64);
+        m.write_i64s(ro, &graph.row_offsets);
+        m.write_i64s(ci, &graph.col_indices);
+        m.write_i64s(dp, &vec![i64::MAX; graph.n]);
+        m.store(dp, 0); // depth[src = 0] = 0
+        let token = CancelToken::new();
+        for round in 0..jobs {
+            eng.submit(tf, "fib", &[Value::from_i64(fib_n)], SubmitOpts::default())?;
+            eng.submit(
+                tt,
+                "tree",
+                &[Value::from_i64(tree_depth), Value::from_i64(7), Value(acc)],
+                SubmitOpts {
+                    priority: 1,
+                    deadline,
+                    ..Default::default()
+                },
+            )?;
+            let last = round + 1 == jobs;
+            eng.submit(
+                tb,
+                "bfs",
+                &[Value::from_i64(0), Value(ro), Value(ci), Value(dp)],
+                SubmitOpts {
+                    priority: 2,
+                    cancel: (cancel_last && last).then(|| token.clone()),
+                    ..Default::default()
+                },
+            )?;
+        }
+        if cancel_last {
+            token.cancel();
+        }
+        eng.run_to_idle()?;
+        let outs = eng.take_outcomes();
+        let depths = eng.memory(tb).read_i64s(dp, graph.n as u64);
+        let acc_val = eng.memory(tt).read_i64s(acc, 1)[0];
+        Ok((outs, depths, acc_val, eng.report()))
+    };
+
+    let t_host = std::time::Instant::now();
+    let (outs, depths, acc_val, report) = run_schedule()?;
+    let (outs2, depths2, acc2, _) = run_schedule()?;
+    if outs != outs2 || depths != depths2 || acc_val != acc2 {
+        bail!("replay mismatch: the same submission schedule produced different outcomes");
+    }
+    print!("{report}");
+
+    // fib: every completed job returns the closed form (idempotent under
+    // fault re-execution, so faults don't gate this check)
+    let fib_ref = fib::reference(fib_n);
+    let fib_done = outs
+        .iter()
+        .filter(|o| o.tenant == T_FIB && o.status == JobStatus::Completed)
+        .count();
+    for o in &outs {
+        if o.tenant == T_FIB && o.status == JobStatus::Completed {
+            let got = o.result.expect("completed fib returns a value").as_i64();
+            if got != fib_ref {
+                bail!("fib job {} returned {got}, reference {fib_ref}", o.job);
+            }
+        }
+    }
+    println!("  fib: {fib_done}/{jobs} completed, each == reference {fib_ref}");
+
+    // tree: the accumulator holds (completed jobs) x checksum — checked
+    // only when no fault plan is active (re-execution legitimately
+    // re-applies atomic_add) and no evicted job did partial work
+    let tree_outs: Vec<_> = outs.iter().filter(|o| o.tenant == T_TREE).collect();
+    let tree_done = tree_outs
+        .iter()
+        .filter(|o| o.status == JobStatus::Completed)
+        .count();
+    let partial = tree_outs
+        .iter()
+        .any(|o| o.status != JobStatus::Completed && o.stats.segments > 0);
+    if !faults_on && !partial {
+        let want = tree_done as i64
+            * tree::full_tree_block_reference(
+                tree_depth,
+                7,
+                mem_ops,
+                compute_iters,
+                block as i64,
+            );
+        if acc_val != want {
+            bail!("tree accumulator {acc_val}, reference {want} ({tree_done} completed)");
+        }
+        println!("  tree: {tree_done}/{jobs} completed, accumulator == {want}");
+    } else {
+        println!(
+            "  tree: {tree_done}/{jobs} completed, accumulator {acc_val} \
+             (reference check skipped: faults or partial eviction)"
+        );
+    }
+
+    // bfs: depths converge to the sequential reference as long as at
+    // least one expansion completed and none was evicted mid-flight
+    // (atomic_min relaxation is idempotent, so repeat jobs and fault
+    // re-execution are harmless)
+    let bfs_outs: Vec<_> = outs.iter().filter(|o| o.tenant == T_BFS).collect();
+    let bfs_done = bfs_outs
+        .iter()
+        .filter(|o| o.status == JobStatus::Completed)
+        .count();
+    let bfs_evicted = bfs_outs.iter().any(|o| o.status == JobStatus::Evicted);
+    if bfs_done >= 1 && !bfs_evicted {
+        if depths != graph.bfs_reference(0) {
+            bail!("bfs depths diverge from the sequential reference");
+        }
+        println!("  bfs: {bfs_done}/{jobs} completed, depths == reference ({bfs_n} vertices)");
+    } else {
+        println!("  bfs: {bfs_done}/{jobs} completed (reference check skipped: eviction)");
+    }
+    println!(
+        "  replay: second engine run is byte-identical ({} outcome(s))",
+        outs.len()
+    );
     eprintln!("  (host wallclock {:?})", t_host.elapsed());
     Ok(())
 }

@@ -1,5 +1,11 @@
-//! The PJRT runtime: loads the AOT-compiled JAX/Pallas payload kernel and
-//! executes it from the simulator's warp hot path.
+//! Host-side runtime services: the PJRT payload engine and the
+//! multi-tenant service layer.
+//!
+//! * [`engine`] — loads the AOT-compiled JAX/Pallas payload kernel and
+//!   executes it from the simulator's warp hot path (details below).
+//! * [`service`] — GTaP as a long-lived service: a content-addressed
+//!   module cache (lower once, never per submission) and a multi-tenant
+//!   engine co-scheduling many sessions' jobs over one worker fleet.
 //!
 //! Architecture (see DESIGN.md): Python/JAX runs **once**, at build time
 //! (`make artifacts`), lowering the L2 model + L1 Pallas kernel to HLO
@@ -15,6 +21,7 @@
 //! payload request.
 
 pub mod engine;
+pub mod service;
 
 pub use engine::{NativePayloadEngine, XlaPayloadEngine};
 

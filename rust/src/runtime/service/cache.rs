@@ -1,0 +1,132 @@
+//! Content-addressed cache of lower-once artifact bundles.
+//!
+//! The relowering bug this layer exists to kill: `Session::run_with` used
+//! to rebuild the full decode → superblock-fuse → trace-fuse pipeline per
+//! *submission*. The service engine lowers each distinct (source,
+//! task-data stride, device) combination exactly once and shares the
+//! resulting [`LoweredModule`] by `Arc` across every session opened with
+//! it — the warm path costs one hash lookup, counter-pinned by
+//! `rust/tests/lowering_once.rs` and the hit/miss stats asserted in
+//! `rust/tests/service.rs`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::anyhow;
+use crate::compiler;
+use crate::coordinator::GtapConfig;
+use crate::ir::lowered::LoweredModule;
+use crate::sim::DeviceSpec;
+use crate::util::error::Result;
+
+/// FNV-1a over the content that determines the lowering result: the
+/// source text, the task-data stride the compiler enforces, and the
+/// device the fuse/trace passes cost against.
+fn fnv1a(parts: &[&[u8]]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for part in parts {
+        for &b in *part {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        // length-prefix-free separator so part boundaries can't collide
+        h ^= 0xff;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Content-addressed store of shared lowered bundles.
+#[derive(Debug, Default)]
+pub struct ModuleCache {
+    entries: HashMap<u64, Arc<LoweredModule>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl ModuleCache {
+    pub fn new() -> ModuleCache {
+        ModuleCache::default()
+    }
+
+    /// The cache key for a (source, config, device) combination.
+    pub fn key(source: &str, cfg: &GtapConfig, dev: &DeviceSpec) -> u64 {
+        fnv1a(&[
+            source.as_bytes(),
+            &cfg.max_task_data_size.to_le_bytes(),
+            dev.name.as_bytes(),
+        ])
+    }
+
+    /// Return the shared bundle for `source`, compiling and lowering it
+    /// only on the first request (a cache *miss*); every later request
+    /// for the same content is a *hit* that does no lowering at all.
+    pub fn get_or_lower(
+        &mut self,
+        source: &str,
+        cfg: &GtapConfig,
+        dev: &DeviceSpec,
+    ) -> Result<Arc<LoweredModule>> {
+        let key = Self::key(source, cfg, dev);
+        if let Some(lm) = self.entries.get(&key) {
+            self.hits += 1;
+            return Ok(lm.clone());
+        }
+        self.misses += 1;
+        let module =
+            compiler::compile(source, cfg.max_task_data_size).map_err(|e| anyhow!("{e}"))?;
+        let lm = Arc::new(LoweredModule::lower(module, dev));
+        self.entries.insert(key, lm.clone());
+        Ok(lm)
+    }
+
+    /// Requests served from the cache (no lowering).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Requests that compiled + lowered (once per distinct content).
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Distinct lowered bundles held.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = "#pragma gtap function\nvoid f(int n) { print_int(n); }";
+
+    #[test]
+    fn same_content_hits_different_content_misses() {
+        let cfg = GtapConfig::default();
+        let dev = DeviceSpec::h100();
+        let mut c = ModuleCache::new();
+        let a = c.get_or_lower(SRC, &cfg, &dev).unwrap();
+        let b = c.get_or_lower(SRC, &cfg, &dev).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same content shares one bundle");
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+        let other = "#pragma gtap function\nvoid g(int n) { print_int(n + 1); }";
+        c.get_or_lower(other, &cfg, &dev).unwrap();
+        assert_eq!((c.hits(), c.misses()), (1, 2));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn device_is_part_of_the_key() {
+        let cfg = GtapConfig::default();
+        let mut c = ModuleCache::new();
+        c.get_or_lower(SRC, &cfg, &DeviceSpec::h100()).unwrap();
+        c.get_or_lower(SRC, &cfg, &DeviceSpec::grace72()).unwrap();
+        assert_eq!(c.misses(), 2, "per-device lowering is cached separately");
+    }
+}

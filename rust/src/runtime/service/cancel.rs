@@ -1,0 +1,47 @@
+//! Host-side cancellation handle for submitted jobs.
+//!
+//! A [`CancelToken`] is a cheap clonable flag the host keeps after
+//! `ServiceEngine::submit`. Cancelling a *pending* job removes it before
+//! it is ever admitted; cancelling after its round started takes effect
+//! at the next round boundary via the engine's eviction sweep (the
+//! simulated device, like a real one, cannot be preempted mid-kernel —
+//! eviction happens at event-loop boundaries through
+//! `Scheduler::evict_tenant`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Shared cancellation flag: set once, observed by the engine's sweeps.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation. Idempotent.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clones_share_the_flag() {
+        let t = CancelToken::new();
+        let u = t.clone();
+        assert!(!u.is_cancelled());
+        t.cancel();
+        assert!(u.is_cancelled());
+        t.cancel(); // idempotent
+        assert!(t.is_cancelled());
+    }
+}

@@ -1,0 +1,437 @@
+//! The multi-tenant service engine: GTaP as a long-lived runtime.
+//!
+//! One engine owns one simulated device + config (the worker fleet), a
+//! content-addressed [`ModuleCache`](super::cache::ModuleCache), and any
+//! number of open sessions (tenants). Hosts submit root-task jobs onto a
+//! queue; the engine serves them in *rounds* — each round admits at most
+//! one job per tenant (admission policy), co-schedules the admitted jobs
+//! over the shared fleet with one `Scheduler::multi` invocation, and
+//! accounts each tenant its exact slice of the round.
+//!
+//! Contracts, pinned by `rust/tests/service.rs`:
+//!
+//! * **Lower once.** Opening a session never relowers content the cache
+//!   has seen; a round borrows the tenants' bundles and does no lowering
+//!   at all (`rust/tests/lowering_once.rs` counts `TracedModule::build`).
+//! * **Single-tenant transparency.** One tenant, one job per round →
+//!   every round's fleet `RunStats` is byte-identical to a one-shot
+//!   `Session::run` of the same program on the same config.
+//! * **Determinism.** The same submission schedule replayed against a
+//!   fresh engine produces equal [`JobOutcome`]s, byte for byte —
+//!   admission is pure, rounds are simulated, and the virtual clock sums
+//!   round makespans.
+//! * **Isolation.** A tenant evicted mid-round (deadline, cancellation)
+//!   leaves co-tenants' results and task counts untouched; memories are
+//!   per-tenant throughout.
+
+use crate::bail;
+use crate::coordinator::{GtapConfig, RunStats, Scheduler, TenantStats};
+use crate::ir::bytecode::Module;
+use crate::ir::types::Value;
+use crate::sim::profile::Profiler;
+use crate::sim::{DeviceSpec, Memory};
+use crate::util::error::{Context, Result};
+use crate::util::stats::fmt_count;
+
+use super::admission::{AdmissionPolicy, JobView};
+use super::cache::ModuleCache;
+use super::cancel::CancelToken;
+use super::tenant::{Tenant, TenantAccounting, TenantId};
+
+/// Handle for a submitted job, unique per engine.
+pub type JobId = u64;
+
+/// Per-job submission options.
+#[derive(Clone, Debug, Default)]
+pub struct SubmitOpts {
+    /// User priority (0 = most urgent); orders `PriorityWeighted`
+    /// admission and rides into the scheduler's priority queue bands.
+    pub priority: u8,
+    /// Eviction deadline in device cycles from the start of the job's
+    /// round (the simulated clock starts at `dev.startup`, so any value
+    /// below startup evicts before the first task executes).
+    pub deadline: Option<u64>,
+    /// Host-side cancellation handle (see [`CancelToken`]).
+    pub cancel: Option<CancelToken>,
+}
+
+/// How a job left the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Ran to quiescence; `result` holds the root's return value.
+    Completed,
+    /// Admitted but evicted mid-round (deadline overrun, or cancelled
+    /// after its round started): partial effects on the tenant's memory
+    /// stand, no result.
+    Evicted,
+    /// Cancelled while still pending; never touched the device.
+    Cancelled,
+}
+
+/// The terminal record of one job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobOutcome {
+    pub job: JobId,
+    pub tenant: TenantId,
+    pub status: JobStatus,
+    /// Virtual service cycle at which the job's round began (cancelled
+    /// jobs: the sweep time).
+    pub started_at: u64,
+    /// Virtual service cycle of completion/eviction: round start plus the
+    /// in-round completion stamp (round makespan if it never quiesced).
+    pub finished_at: u64,
+    /// Root return value (non-void entries, completed jobs only).
+    pub result: Option<Value>,
+    /// This tenant's exact slice of its round.
+    pub stats: TenantStats,
+    /// The whole round's fleet stats (shared by every job in the round;
+    /// the single-tenant transparency pin compares this to
+    /// `Session::run`).
+    pub fleet: RunStats,
+}
+
+/// A queued root-task submission.
+struct Job {
+    id: JobId,
+    tenant: TenantId,
+    entry: String,
+    args: Vec<Value>,
+    priority: u8,
+    deadline: Option<u64>,
+    cancel: Option<CancelToken>,
+    seq: u64,
+}
+
+/// The long-lived multi-tenant engine.
+pub struct ServiceEngine {
+    cfg: GtapConfig,
+    dev: DeviceSpec,
+    admission: AdmissionPolicy,
+    cache: ModuleCache,
+    tenants: Vec<Tenant>,
+    pending: Vec<Job>,
+    outcomes: Vec<JobOutcome>,
+    next_job: u64,
+    rounds: u64,
+    /// Virtual service clock: the sum of round makespans (device cycles).
+    clock: u64,
+}
+
+impl ServiceEngine {
+    pub fn new(cfg: GtapConfig, dev: DeviceSpec, admission: AdmissionPolicy) -> Result<Self> {
+        cfg.validate().map_err(|e| crate::anyhow!(e))?;
+        Ok(ServiceEngine {
+            cfg,
+            dev,
+            admission,
+            cache: ModuleCache::new(),
+            tenants: Vec::new(),
+            pending: Vec::new(),
+            outcomes: Vec::new(),
+            next_job: 0,
+            rounds: 0,
+            clock: 0,
+        })
+    }
+
+    /// Open a session: compile + lower `source` (served from the cache if
+    /// any session already opened the same content) and give the tenant
+    /// fresh persistent global memory.
+    pub fn open_session(&mut self, name: &str, source: &str) -> Result<TenantId> {
+        if self.tenants.len() >= u16::MAX as usize {
+            bail!("too many open sessions");
+        }
+        let lowered = self.cache.get_or_lower(source, &self.cfg, &self.dev)?;
+        let id = self.tenants.len() as TenantId;
+        let memory = Memory::new(lowered.module.globals_words());
+        self.tenants.push(Tenant {
+            id,
+            name: name.to_string(),
+            lowered,
+            memory,
+            acct: TenantAccounting::default(),
+        });
+        Ok(id)
+    }
+
+    /// Queue a root-task job for `tenant`. Entry name and arity are
+    /// validated eagerly so a bad submission fails at the API edge, not
+    /// rounds later on the device.
+    pub fn submit(
+        &mut self,
+        tenant: TenantId,
+        entry: &str,
+        args: &[Value],
+        opts: SubmitOpts,
+    ) -> Result<JobId> {
+        let t = self
+            .tenants
+            .get_mut(tenant as usize)
+            .with_context(|| format!("no open session {tenant}"))?;
+        let module = &t.lowered.module;
+        let fid = module
+            .func_id(entry)
+            .with_context(|| format!("no task function named {entry:?}"))?;
+        let fc = module.func(fid);
+        if args.len() != fc.layout.num_args() {
+            bail!(
+                "{entry:?} takes {} arguments, got {}",
+                fc.layout.num_args(),
+                args.len()
+            );
+        }
+        let id = self.next_job;
+        self.next_job += 1;
+        t.acct.jobs_submitted += 1;
+        self.pending.push(Job {
+            id,
+            tenant,
+            entry: entry.to_string(),
+            args: args.to_vec(),
+            priority: opts.priority,
+            deadline: opts.deadline,
+            cancel: opts.cancel,
+            seq: id,
+        });
+        Ok(id)
+    }
+
+    /// Remove pending jobs whose cancel token fired, recording Cancelled
+    /// outcomes. Runs at every round boundary.
+    fn sweep_cancellations(&mut self) {
+        let clock = self.clock;
+        let mut kept: Vec<Job> = Vec::with_capacity(self.pending.len());
+        for job in self.pending.drain(..) {
+            let cancelled = job
+                .cancel
+                .as_ref()
+                .map(|c| c.is_cancelled())
+                .unwrap_or(false);
+            if cancelled {
+                self.tenants[job.tenant as usize].acct.jobs_cancelled += 1;
+                self.outcomes.push(JobOutcome {
+                    job: job.id,
+                    tenant: job.tenant,
+                    status: JobStatus::Cancelled,
+                    started_at: clock,
+                    finished_at: clock,
+                    result: None,
+                    stats: TenantStats::default(),
+                    fleet: RunStats::default(),
+                });
+            } else {
+                kept.push(job);
+            }
+        }
+        self.pending = kept;
+    }
+
+    /// Serve one round: sweep cancellations, admit ≤ 1 job per tenant,
+    /// co-schedule the admitted jobs over the fleet, account each tenant
+    /// its slice. Returns whether a round actually ran.
+    pub fn run_round(&mut self) -> Result<bool> {
+        self.sweep_cancellations();
+        if self.pending.is_empty() {
+            return Ok(false);
+        }
+        let views: Vec<JobView> = self
+            .pending
+            .iter()
+            .map(|j| JobView {
+                tenant: j.tenant,
+                priority: j.priority,
+                seq: j.seq,
+            })
+            .collect();
+        let served: Vec<u64> = self.tenants.iter().map(|t| t.acct.rounds_admitted).collect();
+        let picked_idx = self.admission.select(&views, &served);
+        debug_assert!(!picked_idx.is_empty(), "non-empty pending must admit");
+        // Extract the admitted jobs in slot order, keeping the rest
+        // pending in submission order.
+        let mut taken: Vec<Option<Job>> = self.pending.drain(..).map(Some).collect();
+        let jobs: Vec<Job> = picked_idx
+            .iter()
+            .map(|&i| taken[i].take().expect("admission picks are distinct"))
+            .collect();
+        self.pending = taken.into_iter().flatten().collect();
+
+        // One scheduler over the shared fleet; slot i runs jobs[i]'s
+        // tenant. The bundles are borrowed from the tenants' shared Arcs —
+        // no lowering happens here (counter-pinned).
+        let arcs: Vec<_> = jobs
+            .iter()
+            .map(|j| self.tenants[j.tenant as usize].lowered.clone())
+            .collect();
+        let refs: Vec<&_> = arcs.iter().map(|a| &**a).collect();
+        let mut sched = Scheduler::multi(&refs, &self.cfg, &self.dev)?;
+        for (slot, job) in jobs.iter().enumerate() {
+            sched.spawn_root_for(slot as u16, &job.entry, &job.args, job.priority)?;
+            if let Some(dl) = job.deadline {
+                sched.set_tenant_deadline(slot as u16, dl);
+            }
+            // cancelled after admission → evict at the very first event
+            if job.cancel.as_ref().map(|c| c.is_cancelled()).unwrap_or(false) {
+                sched.set_tenant_deadline(slot as u16, 0);
+            }
+            self.tenants[job.tenant as usize].acct.rounds_admitted += 1;
+        }
+        // Slot-ordered per-tenant memories (admission guarantees distinct
+        // tenants per round, so each &mut is taken at most once).
+        let mut by_tenant: Vec<Option<&mut Memory>> = self
+            .tenants
+            .iter_mut()
+            .map(|t| Some(&mut t.memory))
+            .collect();
+        let mut mems: Vec<&mut Memory> = jobs
+            .iter()
+            .map(|j| {
+                by_tenant[j.tenant as usize]
+                    .take()
+                    .expect("one slot per tenant per round")
+            })
+            .collect();
+        let mut prof = Profiler::disabled();
+        let fleet = sched.run_multi(&mut mems, None, &mut prof)?;
+        let tstats = sched.take_tenant_stats();
+        drop(mems);
+        drop(sched);
+
+        let started = self.clock;
+        for (slot, job) in jobs.iter().enumerate() {
+            let ts = tstats[slot].clone();
+            let acct = &mut self.tenants[job.tenant as usize].acct;
+            acct.absorb(&ts);
+            let status = if ts.evicted {
+                acct.jobs_evicted += 1;
+                JobStatus::Evicted
+            } else {
+                acct.jobs_completed += 1;
+                JobStatus::Completed
+            };
+            self.outcomes.push(JobOutcome {
+                job: job.id,
+                tenant: job.tenant,
+                status,
+                started_at: started,
+                finished_at: started + ts.completed_at.unwrap_or(fleet.cycles),
+                result: ts.root_result,
+                stats: ts,
+                fleet: fleet.clone(),
+            });
+        }
+        self.clock += fleet.cycles;
+        self.rounds += 1;
+        Ok(true)
+    }
+
+    /// Serve rounds until no jobs are pending.
+    pub fn run_to_idle(&mut self) -> Result<()> {
+        while self.run_round()? {}
+        // a final sweep so jobs cancelled after the last round still
+        // resolve
+        self.sweep_cancellations();
+        Ok(())
+    }
+
+    /// Drain accumulated job outcomes (submission-resolution order).
+    pub fn take_outcomes(&mut self) -> Vec<JobOutcome> {
+        std::mem::take(&mut self.outcomes)
+    }
+
+    /// (hits, misses) of the module cache.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cache.hits(), self.cache.misses())
+    }
+
+    /// Rounds served so far.
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// The virtual service clock: device cycles summed over rounds.
+    pub fn virtual_cycles(&self) -> u64 {
+        self.clock
+    }
+
+    pub fn pending_jobs(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// A tenant's cumulative accounting.
+    pub fn accounting(&self, tenant: TenantId) -> &TenantAccounting {
+        &self.tenants[tenant as usize].acct
+    }
+
+    /// A tenant's compiled module (entry lookup, layouts).
+    pub fn module(&self, tenant: TenantId) -> &Module {
+        &self.tenants[tenant as usize].lowered.module
+    }
+
+    /// Mutable access to a tenant's persistent memory (host-side array
+    /// setup and result readback, as on `Session::memory`).
+    pub fn memory_mut(&mut self, tenant: TenantId) -> &mut Memory {
+        &mut self.tenants[tenant as usize].memory
+    }
+
+    pub fn memory(&self, tenant: TenantId) -> &Memory {
+        &self.tenants[tenant as usize].memory
+    }
+
+    /// Write a global scalar in a tenant's memory by name.
+    pub fn set_global(&mut self, tenant: TenantId, name: &str, v: Value) -> Result<()> {
+        let t = &mut self.tenants[tenant as usize];
+        let addr = t
+            .lowered
+            .module
+            .global_addr(name)
+            .with_context(|| format!("no global named {name:?}"))?;
+        t.memory.store(addr, v.0);
+        Ok(())
+    }
+
+    /// Read a global scalar from a tenant's memory by name.
+    pub fn get_global(&self, tenant: TenantId, name: &str) -> Result<Value> {
+        let t = &self.tenants[tenant as usize];
+        let addr = t
+            .lowered
+            .module
+            .global_addr(name)
+            .with_context(|| format!("no global named {name:?}"))?;
+        Ok(Value(t.memory.load(addr)))
+    }
+
+    /// Human-readable engine summary (the CLI's `gtap service` report).
+    pub fn report(&self) -> String {
+        let (hits, misses) = self.cache_stats();
+        let mut out = String::new();
+        out.push_str(&format!(
+            "service: {} tenant(s), {} round(s), {} virtual cycles, \
+             admission {}, cache {hits} hit(s) / {misses} miss(es)\n",
+            self.tenants.len(),
+            self.rounds,
+            fmt_count(self.clock),
+            self.admission.name(),
+        ));
+        for t in &self.tenants {
+            let a = &t.acct;
+            out.push_str(&format!(
+                "  [{}] {:<10} jobs {}/{}/{}/{} (done/evicted/cancelled/submitted)  \
+                 tasks {}  spawns {}  segments {}\n",
+                t.id,
+                t.name,
+                a.jobs_completed,
+                a.jobs_evicted,
+                a.jobs_cancelled,
+                a.jobs_submitted,
+                fmt_count(a.tasks_finished),
+                fmt_count(a.spawns),
+                fmt_count(a.segments),
+            ));
+        }
+        out
+    }
+}

@@ -1,0 +1,41 @@
+//! GTaP as a service: a long-lived engine multiplexing many sessions
+//! over one simulated device.
+//!
+//! The one-shot flow (`coordinator::Session`) compiles, lowers and runs a
+//! single program. This layer is what a *resident* runtime looks like on
+//! top of the same scheduler:
+//!
+//! * [`cache`] — content-addressed [`ModuleCache`]: each distinct
+//!   (source, task-data stride, device) is compiled and lowered **once**;
+//!   sessions share the resulting `Arc<LoweredModule>`. This is the
+//!   service-side face of the lower-once fix (see `ir::lowered`).
+//! * [`tenant`] — per-session state: the shared bundle, isolated
+//!   persistent global memory, cumulative accounting.
+//! * [`admission`] — pure, deterministic round admission: FIFO
+//!   (serializing baseline), fair-share, or priority-weighted, at most
+//!   one job per tenant per round.
+//! * [`cancel`] — host-side [`CancelToken`]s; pending jobs cancel
+//!   immediately, running ones evict at the next round boundary.
+//! * [`engine`] — the [`ServiceEngine`]: submission queue, rounds
+//!   (each one `Scheduler::multi` invocation over the shared fleet),
+//!   per-tenant deadlines fired through the scheduler's scoped-drain
+//!   eviction, per-tenant `TenantStats` accounting, and a virtual
+//!   service clock summing round makespans.
+//!
+//! `rust/tests/service.rs` pins the contracts: warm submissions do no
+//! lowering, a single-tenant engine is byte-identical to one-shot
+//! `Session::run`, identical submission schedules replay to identical
+//! outcomes, and evicting one tenant leaves co-tenants' results pinned
+//! to their solo baselines.
+
+pub mod admission;
+pub mod cache;
+pub mod cancel;
+pub mod engine;
+pub mod tenant;
+
+pub use admission::{AdmissionPolicy, JobView};
+pub use cache::ModuleCache;
+pub use cancel::CancelToken;
+pub use engine::{JobId, JobOutcome, JobStatus, ServiceEngine, SubmitOpts};
+pub use tenant::{Tenant, TenantAccounting, TenantId};

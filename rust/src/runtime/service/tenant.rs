@@ -1,0 +1,70 @@
+//! Per-session (tenant) state held by the service engine.
+//!
+//! A tenant is one long-lived session: a shared lowered bundle (from the
+//! [`ModuleCache`](super::cache::ModuleCache)), its own simulated global
+//! memory — persistent across jobs, exactly like `Session::memory`
+//! persists across runs — and cumulative accounting absorbed from the
+//! per-round [`TenantStats`] slices the scheduler attributes to it.
+
+use std::sync::Arc;
+
+use crate::coordinator::TenantStats;
+use crate::ir::lowered::LoweredModule;
+use crate::sim::memsys::MemSysStats;
+use crate::sim::Memory;
+
+/// Tenant handle: the scheduler-slot type, so a tenant id can be used as
+/// a `spawn_root_for` slot directly.
+pub type TenantId = u16;
+
+/// Cumulative per-tenant accounting across every round the engine ran.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TenantAccounting {
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    /// Jobs evicted mid-run (deadline overrun or cancellation after
+    /// admission).
+    pub jobs_evicted: u64,
+    /// Jobs cancelled while still pending (never admitted).
+    pub jobs_cancelled: u64,
+    /// Rounds in which this tenant had a job admitted (the fair-share
+    /// "served" count the admission policy orders by).
+    pub rounds_admitted: u64,
+    /// Exact per-tenant counters summed over rounds (they partition the
+    /// fleet-wide `RunStats` of each round).
+    pub tasks_finished: u64,
+    pub spawns: u64,
+    pub segments: u64,
+    /// Sum over rounds of the device cycle at which this tenant's last
+    /// task finished (per-round, startup included) — the per-tenant
+    /// completion latency the interference bench compares solo vs
+    /// co-scheduled.
+    pub completion_cycles: u64,
+    /// Modeled memory-system traffic attributed to this tenant
+    /// (warp-majority attribution; all-zero under the flat model).
+    pub memsys: MemSysStats,
+}
+
+impl TenantAccounting {
+    /// Fold one round's attributed slice into the running totals.
+    pub fn absorb(&mut self, ts: &TenantStats) {
+        self.tasks_finished += ts.tasks_finished;
+        self.spawns += ts.spawns;
+        self.segments += ts.segments;
+        self.completion_cycles += ts.completed_at.unwrap_or(0);
+        self.memsys.add(&ts.memsys);
+    }
+}
+
+/// One open session multiplexed by the engine.
+pub struct Tenant {
+    pub id: TenantId,
+    pub name: String,
+    /// The shared lower-once bundle (possibly shared with co-tenants that
+    /// opened the same source — the cache dedupes by content).
+    pub lowered: Arc<LoweredModule>,
+    /// This tenant's simulated global memory: isolated from co-tenants,
+    /// persistent across its jobs.
+    pub memory: Memory,
+    pub acct: TenantAccounting,
+}

@@ -210,9 +210,26 @@ impl LaneFrame {
     /// static children-per-join bound, so [`LaneFrame::reset`] and segment
     /// execution never touch the allocator.
     pub fn sized(dm: &DecodedModule) -> LaneFrame {
+        LaneFrame::sized_for_all(std::iter::once(dm))
+    }
+
+    /// A frame pre-sized for a *set* of decoded modules (multi-tenant
+    /// scheduling): the register file and spawn buffer fit the largest
+    /// demands across all of them, so one shared frame pool serves every
+    /// tenant without reallocating when lanes switch modules.
+    pub fn sized_for_all<'m, I>(mods: I) -> LaneFrame
+    where
+        I: IntoIterator<Item = &'m DecodedModule>,
+    {
+        let mut nregs = 0usize;
+        let mut spawn_cap = 0usize;
+        for dm in mods {
+            nregs = nregs.max(dm.max_nregs as usize);
+            spawn_cap = spawn_cap.max(dm.spawn_capacity);
+        }
         let mut f = LaneFrame::new();
-        f.regs = vec![0; dm.max_nregs as usize];
-        f.spawns = Vec::with_capacity(dm.spawn_capacity);
+        f.regs = vec![0; nregs];
+        f.spawns = Vec::with_capacity(spawn_cap);
         f
     }
 

@@ -37,7 +37,9 @@ impl Summary {
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "empty sample");
         let mut s: Vec<f64> = samples.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        // Total order so NaN samples sort (to the end) instead of panicking:
+        // a wall-clock glitch in one bench run must not abort the whole sweep.
+        s.sort_by(|a, b| a.total_cmp(b));
         Summary {
             n: s.len(),
             median: percentile(&s, 0.5),
@@ -128,6 +130,17 @@ mod tests {
     #[should_panic(expected = "empty sample")]
     fn empty_panics() {
         Summary::of(&[]);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic() {
+        // total_cmp sorts NaN after every finite value: min stays finite,
+        // max becomes NaN, and the call must not panic.
+        let s = Summary::of(&[1.0, f64::NAN, 2.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
+        assert_eq!(s.median, 2.0);
     }
 
     #[test]

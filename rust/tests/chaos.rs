@@ -18,6 +18,8 @@ use gtap::coordinator::{
     FaultKind, FaultPlan, GtapConfig, Scheduler, SchedulerKind, Session, SmTier,
 };
 use gtap::ir::types::Value;
+use gtap::ir::LoweredModule;
+use gtap::runtime::service::{AdmissionPolicy, JobStatus, ServiceEngine, SubmitOpts};
 use gtap::sim::profile::Profiler;
 use gtap::sim::{DeviceSpec, Memory};
 use gtap::workloads::fib;
@@ -53,17 +55,19 @@ fn faults_off_matches_reference_monolith() {
     };
     let dev = DeviceSpec::h100();
     let module = compiler::compile(&fib::source(0, false), cfg.max_task_data_size).unwrap();
+    let lowered = LoweredModule::lower(module, &dev);
+    let module = &lowered.module;
     let run_new = {
         let mut mem = Memory::new(module.globals_words());
         let mut prof = Profiler::disabled();
-        let mut s = Scheduler::new(&module, &cfg, &dev).unwrap();
+        let mut s = Scheduler::new(&lowered, &cfg, &dev).unwrap();
         s.spawn_root("fib", &[Value::from_i64(13)]).unwrap();
         s.run(&mut mem, None, &mut prof).unwrap()
     };
     let run_ref = {
         let mut mem = Memory::new(module.globals_words());
         let mut prof = Profiler::disabled();
-        let mut s = RefScheduler::new(&module, &cfg, &dev).unwrap();
+        let mut s = RefScheduler::new(module, &cfg, &dev).unwrap();
         s.spawn_root("fib", &[Value::from_i64(13)]).unwrap();
         s.run(&mut mem, None, &mut prof).unwrap()
     };
@@ -232,6 +236,95 @@ fn seeded_bfs_block_level_survives_chaos() {
             .unwrap_or_else(|err| panic!("bfs seed {seed}: {err}"));
         assert_eq!(out.stats.tasks_finished, base.stats.tasks_finished, "seed {seed}");
     }
+}
+
+#[test]
+fn multi_tenant_chaos_preserves_each_tenants_results() {
+    // Seeded fault plans (kills, stalls, steal failures, drops) against a
+    // co-scheduled multi-tenant round: recovery must keep *every*
+    // tenant's slice exact — per-tenant result and task count pinned to
+    // fault-free solo baselines.
+    let cfg = GtapConfig {
+        grid_size: 4,
+        block_size: 32,
+        ..Default::default()
+    };
+    let src = fib::source(0, false);
+    let solo = |n: i64| {
+        let mut s = Session::compile(&src, cfg.clone(), DeviceSpec::h100()).unwrap();
+        s.run("fib", &[Value::from_i64(n)]).unwrap()
+    };
+    let (base_a, base_b) = (solo(12), solo(10));
+    for seed in [1u64, 5, 9] {
+        let mut chaotic = cfg.clone();
+        chaotic.faults = FaultPlan::seeded(seed, 6);
+        let mut eng =
+            ServiceEngine::new(chaotic, DeviceSpec::h100(), AdmissionPolicy::FairShare)
+                .unwrap();
+        let a = eng.open_session("a", &src).unwrap();
+        let b = eng.open_session("b", &src).unwrap();
+        eng.submit(a, "fib", &[Value::from_i64(12)], SubmitOpts::default())
+            .unwrap();
+        eng.submit(b, "fib", &[Value::from_i64(10)], SubmitOpts::default())
+            .unwrap();
+        eng.run_to_idle().unwrap();
+        assert_eq!(eng.rounds(), 1, "seed {seed}: one co-scheduled round");
+        let outs = eng.take_outcomes();
+        for (tenant, base) in [(a, &base_a), (b, &base_b)] {
+            let o = outs.iter().find(|o| o.tenant == tenant).unwrap();
+            assert_eq!(o.status, JobStatus::Completed, "seed {seed}");
+            assert_eq!(o.result, base.root_result, "seed {seed}");
+            assert_eq!(
+                o.stats.tasks_finished, base.tasks_finished,
+                "seed {seed}: every task of tenant {tenant} finishes exactly once"
+            );
+        }
+    }
+}
+
+#[test]
+fn deadline_eviction_under_chaos_spares_co_tenants() {
+    // A worker kill lands mid-round while one tenant overruns its
+    // deadline: only the deadlined tenant is evicted, and the survivor's
+    // slice stays pinned to its fault-free solo baseline.
+    let cfg = GtapConfig {
+        grid_size: 4,
+        block_size: 32,
+        ..Default::default()
+    };
+    let src = fib::source(0, false);
+    let solo = {
+        let mut s = Session::compile(&src, cfg.clone(), DeviceSpec::h100()).unwrap();
+        s.run("fib", &[Value::from_i64(12)]).unwrap()
+    };
+    let mut chaotic = cfg;
+    chaotic.faults = FaultPlan::parse("kill@2000:w1").unwrap();
+    let mut eng =
+        ServiceEngine::new(chaotic, DeviceSpec::h100(), AdmissionPolicy::FairShare).unwrap();
+    let keep = eng.open_session("keep", &src).unwrap();
+    let evict = eng.open_session("evict", &src).unwrap();
+    eng.submit(keep, "fib", &[Value::from_i64(12)], SubmitOpts::default())
+        .unwrap();
+    eng.submit(
+        evict,
+        "fib",
+        &[Value::from_i64(20)],
+        SubmitOpts {
+            deadline: Some(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    eng.run_to_idle().unwrap();
+    let outs = eng.take_outcomes();
+    let k = outs.iter().find(|o| o.tenant == keep).unwrap();
+    let e = outs.iter().find(|o| o.tenant == evict).unwrap();
+    assert_eq!(e.status, JobStatus::Evicted);
+    assert_eq!(e.stats.tasks_finished, 0, "evicted before any task ran");
+    assert_eq!(k.status, JobStatus::Completed);
+    assert_eq!(k.result, solo.root_result);
+    assert_eq!(k.stats.tasks_finished, solo.tasks_finished);
+    assert!(!k.fleet.drained, "scoped eviction is not a whole-run drain");
 }
 
 #[test]

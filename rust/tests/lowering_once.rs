@@ -1,0 +1,110 @@
+//! Regression pin for the per-run relowering bug.
+//!
+//! `Session::run_with` used to rebuild the scheduler's lowering pipeline
+//! (decode → superblock-fuse → trace-fuse) on *every* submission. The fix
+//! lowers once at session/service construction ([`gtap::ir::LoweredModule`])
+//! and lets every run borrow the cached bundle. This suite counts
+//! `TracedModule::build` invocations — the final, most expensive lowering
+//! stage — around the APIs to pin the contract, and pins that a reused
+//! session's second run is byte-identical to a fresh session's first.
+//!
+//! NOTE: the counter is process-wide, so every delta assertion lives in
+//! this single `#[test]` — this file must stay a one-test binary (tests
+//! within a binary run in parallel and would race the counter).
+
+use gtap::coordinator::{GtapConfig, Scheduler, Session};
+use gtap::ir::traced::build_count;
+use gtap::ir::types::Value;
+use gtap::ir::LoweredModule;
+use gtap::runtime::service::{AdmissionPolicy, ServiceEngine, SubmitOpts};
+use gtap::sim::profile::Profiler;
+use gtap::sim::{DeviceSpec, Memory};
+
+const FIB: &str = r#"
+    #pragma gtap function
+    int fib(int n) {
+        if (n < 2) return n;
+        int a; int b;
+        #pragma gtap task
+        a = fib(n - 1);
+        #pragma gtap task
+        b = fib(n - 2);
+        #pragma gtap taskwait
+        return a + b;
+    }
+"#;
+
+fn cfg() -> GtapConfig {
+    GtapConfig {
+        grid_size: 4,
+        block_size: 32,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn lowering_happens_once_per_module_never_per_run() {
+    let dev = DeviceSpec::h100();
+
+    // --- Session: one lowering at construction, zero per run ---------
+    let c0 = build_count();
+    let mut sess = Session::compile(FIB, cfg(), dev.clone()).unwrap();
+    let c1 = build_count();
+    assert_eq!(c1 - c0, 1, "session construction lowers exactly once");
+    let run1 = sess.run("fib", &[Value::from_i64(12)]).unwrap();
+    let run2 = sess.run("fib", &[Value::from_i64(12)]).unwrap();
+    assert_eq!(
+        build_count(),
+        c1,
+        "repeated Session::run must not relower (the fixed bug)"
+    );
+    // Reuse is also semantically clean: run 2 of a warm session is
+    // byte-identical to run 1 of a session rebuilt from scratch.
+    let mut fresh = Session::compile(FIB, cfg(), dev.clone()).unwrap();
+    let fresh1 = fresh.run("fib", &[Value::from_i64(12)]).unwrap();
+    assert_eq!(run2, fresh1, "warm run 2 == cold run 1, byte for byte");
+    assert_eq!(run1, run2, "same session, same submission, same stats");
+
+    // --- raw Scheduler: borrows a bundle, never builds one -----------
+    let config = cfg();
+    let c2 = build_count();
+    let lowered = sess.lowered();
+    for _ in 0..3 {
+        let mut mem = Memory::new(lowered.module.globals_words());
+        let mut prof = Profiler::disabled();
+        let mut s = Scheduler::new(&lowered, &config, &dev).unwrap();
+        s.spawn_root("fib", &[Value::from_i64(10)]).unwrap();
+        s.run(&mut mem, None, &mut prof).unwrap();
+    }
+    assert_eq!(build_count(), c2, "Scheduler::new does no lowering at all");
+
+    // --- explicit lower: exactly one build per call ------------------
+    let c3 = build_count();
+    let _bundle = LoweredModule::lower(sess.module().clone(), &dev);
+    assert_eq!(build_count() - c3, 1);
+
+    // --- service engine: one lowering per distinct content, zero on
+    // warm sessions and zero per round ---------------------------------
+    let c4 = build_count();
+    let mut eng = ServiceEngine::new(cfg(), dev, AdmissionPolicy::FairShare).unwrap();
+    let a = eng.open_session("a", FIB).unwrap();
+    let b = eng.open_session("b", FIB).unwrap();
+    assert_eq!(
+        build_count() - c4,
+        1,
+        "two sessions over the same content share one lowering"
+    );
+    for _ in 0..2 {
+        eng.submit(a, "fib", &[Value::from_i64(11)], SubmitOpts::default())
+            .unwrap();
+        eng.submit(b, "fib", &[Value::from_i64(10)], SubmitOpts::default())
+            .unwrap();
+    }
+    eng.run_to_idle().unwrap();
+    assert_eq!(
+        build_count() - c4,
+        1,
+        "warm submissions and rounds do no relowering"
+    );
+    assert_eq!(eng.cache_stats(), (1, 1), "one miss (a), one hit (b)");
+}

@@ -19,6 +19,7 @@ use gtap::coordinator::{
     SchedulerKind, Session, SmTier, StealAmount, VictimSelect,
 };
 use gtap::ir::types::Value;
+use gtap::ir::LoweredModule;
 use gtap::sim::profile::Profiler;
 use gtap::sim::{DeviceSpec, Memory};
 use gtap::workloads::{fib, nqueens, tree};
@@ -33,11 +34,13 @@ fn stats_pair(
 ) -> (RunStats, RunStats) {
     let dev = DeviceSpec::h100();
     let module = compiler::compile(src, cfg.max_task_data_size).unwrap();
+    let lowered = LoweredModule::lower(module, &dev);
+    let module = &lowered.module;
     let refactored = {
         let mut mem = Memory::new(module.globals_words());
         let args = make_args(&mut mem);
         let mut prof = Profiler::disabled();
-        let mut s = Scheduler::new(&module, cfg, &dev).unwrap();
+        let mut s = Scheduler::new(&lowered, cfg, &dev).unwrap();
         s.spawn_root(entry, &args).unwrap();
         s.run(&mut mem, None, &mut prof).unwrap()
     };
@@ -45,7 +48,7 @@ fn stats_pair(
         let mut mem = Memory::new(module.globals_words());
         let args = make_args(&mut mem);
         let mut prof = Profiler::disabled();
-        let mut s = RefScheduler::new(&module, cfg, &dev).unwrap();
+        let mut s = RefScheduler::new(module, cfg, &dev).unwrap();
         s.spawn_root(entry, &args).unwrap();
         s.run(&mut mem, None, &mut prof).unwrap()
     };
@@ -277,9 +280,10 @@ fn epaq_fib_stats(mutate: impl FnOnce(&mut GtapConfig)) -> RunStats {
     mutate(&mut cfg);
     let dev = DeviceSpec::h100();
     let module = compiler::compile(&fib::source(2, true), cfg.max_task_data_size).unwrap();
-    let mut mem = Memory::new(module.globals_words());
+    let lowered = LoweredModule::lower(module, &dev);
+    let mut mem = Memory::new(lowered.module.globals_words());
     let mut prof = Profiler::disabled();
-    let mut s = Scheduler::new(&module, &cfg, &dev).unwrap();
+    let mut s = Scheduler::new(&lowered, &cfg, &dev).unwrap();
     s.spawn_root("fib", &[Value::from_i64(14)]).unwrap();
     let stats = s.run(&mut mem, None, &mut prof).unwrap();
     assert_eq!(stats.root_result.unwrap().as_i64(), 377);

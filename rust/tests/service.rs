@@ -1,0 +1,357 @@
+//! Contract suite for the multi-tenant service engine
+//! (`runtime::service`): single-tenant transparency against one-shot
+//! `Session::run`, shared lowering across sessions, admission-policy
+//! behaviour, replay determinism, cancellation, deadline eviction with
+//! co-tenant isolation, and per-tenant accounting reconciliation.
+
+use gtap::coordinator::{Granularity, GtapConfig, Session};
+use gtap::ir::types::Value;
+use gtap::runtime::service::{
+    AdmissionPolicy, CancelToken, JobOutcome, JobStatus, ServiceEngine, SubmitOpts,
+};
+use gtap::sim::DeviceSpec;
+use gtap::workloads::{fib, tree};
+
+const FIB: &str = r#"
+    #pragma gtap function
+    int fib(int n) {
+        if (n < 2) return n;
+        int a; int b;
+        #pragma gtap task
+        a = fib(n - 1);
+        #pragma gtap task
+        b = fib(n - 2);
+        #pragma gtap taskwait
+        return a + b;
+    }
+"#;
+
+const ACCUM: &str = r#"
+    global int g_sum;
+    #pragma gtap function
+    void add(int n) { g_sum = g_sum + n; }
+"#;
+
+fn cfg() -> GtapConfig {
+    GtapConfig {
+        grid_size: 4,
+        block_size: 32,
+        ..Default::default()
+    }
+}
+
+fn engine(adm: AdmissionPolicy) -> ServiceEngine {
+    ServiceEngine::new(cfg(), DeviceSpec::h100(), adm).unwrap()
+}
+
+#[test]
+fn single_tenant_service_is_byte_identical_to_session_run() {
+    let mut sess = Session::compile(FIB, cfg(), DeviceSpec::h100()).unwrap();
+    let base = sess.run("fib", &[Value::from_i64(12)]).unwrap();
+
+    let mut eng = engine(AdmissionPolicy::Fifo);
+    let t = eng.open_session("solo", FIB).unwrap();
+    eng.submit(t, "fib", &[Value::from_i64(12)], SubmitOpts::default())
+        .unwrap();
+    eng.submit(t, "fib", &[Value::from_i64(12)], SubmitOpts::default())
+        .unwrap();
+    eng.run_to_idle().unwrap();
+    let outs = eng.take_outcomes();
+    assert_eq!(outs.len(), 2);
+    for o in &outs {
+        assert_eq!(o.status, JobStatus::Completed);
+        // the whole round's fleet stats — cycles included — match the
+        // one-shot session run, byte for byte
+        assert_eq!(o.fleet, base, "service round != Session::run");
+        assert_eq!(o.result, base.root_result);
+        assert_eq!(o.stats.tasks_finished, base.tasks_finished);
+        assert_eq!(o.stats.spawns, base.spawns);
+        assert_eq!(o.stats.segments, base.segments);
+        assert!(!o.stats.evicted);
+    }
+    assert_eq!(eng.rounds(), 2, "FIFO serves one job per round");
+    assert_eq!(eng.virtual_cycles(), 2 * base.cycles);
+}
+
+#[test]
+fn sessions_with_equal_content_share_one_lowering() {
+    let mut eng = engine(AdmissionPolicy::FairShare);
+    let a = eng.open_session("a", FIB).unwrap();
+    let b = eng.open_session("b", FIB).unwrap();
+    assert_eq!(eng.cache_stats(), (1, 1));
+    eng.submit(a, "fib", &[Value::from_i64(11)], SubmitOpts::default())
+        .unwrap();
+    eng.submit(b, "fib", &[Value::from_i64(10)], SubmitOpts::default())
+        .unwrap();
+    eng.run_to_idle().unwrap();
+    assert_eq!(eng.cache_stats(), (1, 1), "rounds never touch the cache");
+    let outs = eng.take_outcomes();
+    assert_eq!(outs[0].result.unwrap().as_i64(), fib::reference(11));
+    assert_eq!(outs[1].result.unwrap().as_i64(), fib::reference(10));
+}
+
+#[test]
+fn fair_share_coschedules_while_fifo_serializes() {
+    let schedule = |adm: AdmissionPolicy| -> (u64, Vec<JobOutcome>) {
+        let mut eng = engine(adm);
+        let a = eng.open_session("a", FIB).unwrap();
+        let b = eng.open_session("b", FIB).unwrap();
+        for _ in 0..2 {
+            eng.submit(a, "fib", &[Value::from_i64(11)], SubmitOpts::default())
+                .unwrap();
+            eng.submit(b, "fib", &[Value::from_i64(9)], SubmitOpts::default())
+                .unwrap();
+        }
+        eng.run_to_idle().unwrap();
+        (eng.rounds(), eng.take_outcomes())
+    };
+    let (fifo_rounds, fifo_outs) = schedule(AdmissionPolicy::Fifo);
+    let (fair_rounds, fair_outs) = schedule(AdmissionPolicy::FairShare);
+    assert_eq!(fifo_rounds, 4, "FIFO: one job per round");
+    assert_eq!(fair_rounds, 2, "fair share: both tenants per round");
+    for o in fifo_outs.iter().chain(fair_outs.iter()) {
+        assert_eq!(o.status, JobStatus::Completed);
+    }
+    // co-scheduling changes packing, not results
+    let val = |outs: &[JobOutcome], t| {
+        outs.iter()
+            .filter(|o| o.tenant == t)
+            .map(|o| o.result.unwrap().as_i64())
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(val(&fifo_outs, 0), val(&fair_outs, 0));
+    assert_eq!(val(&fifo_outs, 1), val(&fair_outs, 1));
+}
+
+#[test]
+fn priority_weighted_admission_orders_slots_by_urgency() {
+    let mut eng = engine(AdmissionPolicy::PriorityWeighted);
+    let a = eng.open_session("bulk", FIB).unwrap();
+    let b = eng.open_session("urgent", FIB).unwrap();
+    let opts = |p: u8| SubmitOpts {
+        priority: p,
+        ..Default::default()
+    };
+    let ja = eng.submit(a, "fib", &[Value::from_i64(10)], opts(3)).unwrap();
+    let jb = eng.submit(b, "fib", &[Value::from_i64(10)], opts(0)).unwrap();
+    assert!(eng.run_round().unwrap());
+    let outs = eng.take_outcomes();
+    // one round, both jobs; the urgent job owns slot 0 despite being
+    // submitted later
+    assert_eq!(outs.len(), 2);
+    assert_eq!(outs[0].job, jb);
+    assert_eq!(outs[1].job, ja);
+    assert_eq!(eng.pending_jobs(), 0);
+}
+
+#[test]
+fn identical_submission_schedules_replay_byte_identically() {
+    let run = || -> Vec<JobOutcome> {
+        let mut eng = engine(AdmissionPolicy::FairShare);
+        let a = eng.open_session("a", FIB).unwrap();
+        let b = eng.open_session("b", ACCUM).unwrap();
+        eng.submit(a, "fib", &[Value::from_i64(12)], SubmitOpts::default())
+            .unwrap();
+        eng.submit(b, "add", &[Value::from_i64(5)], SubmitOpts::default())
+            .unwrap();
+        eng.submit(a, "fib", &[Value::from_i64(10)], SubmitOpts::default())
+            .unwrap();
+        eng.run_to_idle().unwrap();
+        eng.take_outcomes()
+    };
+    assert_eq!(run(), run(), "same schedule, same outcomes, byte for byte");
+}
+
+#[test]
+fn pending_cancellation_never_touches_the_device() {
+    let mut eng = engine(AdmissionPolicy::Fifo);
+    let t = eng.open_session("t", FIB).unwrap();
+    let token = CancelToken::new();
+    eng.submit(t, "fib", &[Value::from_i64(10)], SubmitOpts::default())
+        .unwrap();
+    let cancelled = eng
+        .submit(
+            t,
+            "fib",
+            &[Value::from_i64(20)],
+            SubmitOpts {
+                cancel: Some(token.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    token.cancel();
+    eng.run_to_idle().unwrap();
+    let outs = eng.take_outcomes();
+    assert_eq!(outs.len(), 2);
+    let c = outs.iter().find(|o| o.job == cancelled).unwrap();
+    assert_eq!(c.status, JobStatus::Cancelled);
+    assert_eq!(c.stats.tasks_finished, 0);
+    assert_eq!(c.result, None);
+    assert_eq!(eng.rounds(), 1, "the cancelled job never got a round");
+    assert_eq!(eng.accounting(t).jobs_cancelled, 1);
+    assert_eq!(eng.accounting(t).jobs_completed, 1);
+}
+
+#[test]
+fn deadline_evicts_only_the_deadlined_tenant() {
+    // Solo baseline for the surviving tenant.
+    let mut sess = Session::compile(FIB, cfg(), DeviceSpec::h100()).unwrap();
+    let solo = sess.run("fib", &[Value::from_i64(12)]).unwrap();
+
+    let mut eng = engine(AdmissionPolicy::FairShare);
+    let keep = eng.open_session("keep", FIB).unwrap();
+    let evict = eng.open_session("evict", FIB).unwrap();
+    eng.submit(keep, "fib", &[Value::from_i64(12)], SubmitOpts::default())
+        .unwrap();
+    // deadline below dev.startup → evicted at the first event, before
+    // any task executes
+    eng.submit(
+        evict,
+        "fib",
+        &[Value::from_i64(20)],
+        SubmitOpts {
+            deadline: Some(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    eng.run_to_idle().unwrap();
+    let outs = eng.take_outcomes();
+    assert_eq!(outs.len(), 2);
+    let k = outs.iter().find(|o| o.tenant == keep).unwrap();
+    let e = outs.iter().find(|o| o.tenant == evict).unwrap();
+    assert_eq!(e.status, JobStatus::Evicted);
+    assert!(e.stats.evicted);
+    assert_eq!(e.stats.tasks_finished, 0);
+    assert_eq!(e.result, None);
+    // the co-tenant is untouched: results and task counts pin to solo
+    assert_eq!(k.status, JobStatus::Completed);
+    assert_eq!(k.result, solo.root_result);
+    assert_eq!(k.stats.tasks_finished, solo.tasks_finished);
+    assert_eq!(k.stats.spawns, solo.spawns);
+    assert_eq!(eng.accounting(evict).jobs_evicted, 1);
+    assert_eq!(eng.accounting(keep).jobs_completed, 1);
+}
+
+#[test]
+fn sole_cancelled_job_resolves_without_a_round() {
+    let mut eng = engine(AdmissionPolicy::Fifo);
+    let t = eng.open_session("t", FIB).unwrap();
+    let token = CancelToken::new();
+    let job = eng
+        .submit(
+            t,
+            "fib",
+            &[Value::from_i64(15)],
+            SubmitOpts {
+                cancel: Some(token.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    // cancellation resolves at the next round boundary's sweep; with
+    // nothing else pending, no round runs at all
+    token.cancel();
+    eng.run_to_idle().unwrap();
+    let outs = eng.take_outcomes();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].job, job);
+    assert_eq!(outs[0].status, JobStatus::Cancelled);
+    assert_eq!(outs[0].stats.tasks_finished, 0);
+    assert_eq!(eng.rounds(), 0, "cancelled work never touches the device");
+}
+
+#[test]
+fn per_tenant_stats_reconcile_with_the_fleet() {
+    let mut eng = engine(AdmissionPolicy::FairShare);
+    let a = eng.open_session("a", FIB).unwrap();
+    let b = eng.open_session("b", FIB).unwrap();
+    eng.submit(a, "fib", &[Value::from_i64(12)], SubmitOpts::default())
+        .unwrap();
+    eng.submit(b, "fib", &[Value::from_i64(10)], SubmitOpts::default())
+        .unwrap();
+    assert!(eng.run_round().unwrap());
+    let outs = eng.take_outcomes();
+    assert_eq!(outs.len(), 2, "one co-scheduled round");
+    assert_eq!(outs[0].fleet, outs[1].fleet, "same round, same fleet view");
+    let fleet = &outs[0].fleet;
+    let sum = |f: fn(&gtap::coordinator::TenantStats) -> u64| -> u64 {
+        outs.iter().map(|o| f(&o.stats)).sum()
+    };
+    assert_eq!(sum(|s| s.tasks_finished), fleet.tasks_finished);
+    assert_eq!(sum(|s| s.spawns), fleet.spawns);
+    assert_eq!(sum(|s| s.segments), fleet.segments);
+    // each tenant's slice is its solo task tree
+    for (t, n) in [(a, 12i64), (b, 10i64)] {
+        let o = outs.iter().find(|o| o.tenant == t).unwrap();
+        assert_eq!(o.result.unwrap().as_i64(), fib::reference(n));
+        assert!(o.stats.completed_at.is_some());
+        assert!(o.stats.completed_at.unwrap() <= fleet.cycles);
+    }
+}
+
+#[test]
+fn tenant_memory_persists_across_jobs_and_is_isolated() {
+    let mut eng = engine(AdmissionPolicy::Fifo);
+    let a = eng.open_session("a", ACCUM).unwrap();
+    let b = eng.open_session("b", ACCUM).unwrap();
+    eng.submit(a, "add", &[Value::from_i64(5)], SubmitOpts::default())
+        .unwrap();
+    eng.submit(a, "add", &[Value::from_i64(7)], SubmitOpts::default())
+        .unwrap();
+    eng.submit(b, "add", &[Value::from_i64(100)], SubmitOpts::default())
+        .unwrap();
+    eng.run_to_idle().unwrap();
+    // a's global accumulated across two jobs; b's memory is its own
+    assert_eq!(eng.get_global(a, "g_sum").unwrap().as_i64(), 12);
+    assert_eq!(eng.get_global(b, "g_sum").unwrap().as_i64(), 100);
+}
+
+#[test]
+fn block_granularity_mixed_workload_round() {
+    let mem_ops = 4i64;
+    let compute_iters = 4i64;
+    let block = 64usize;
+    let cfg = GtapConfig {
+        grid_size: 4,
+        block_size: block,
+        granularity: Granularity::Block,
+        ..Default::default()
+    };
+    let tree_src = tree::full_tree_block_source(mem_ops, compute_iters, block as i64);
+    let mut eng =
+        ServiceEngine::new(cfg, DeviceSpec::h100(), AdmissionPolicy::FairShare).unwrap();
+    let tf = eng.open_session("fib", FIB).unwrap();
+    let tt = eng.open_session("tree", &tree_src).unwrap();
+    let acc = eng.memory_mut(tt).alloc(1);
+    eng.submit(tf, "fib", &[Value::from_i64(10)], SubmitOpts::default())
+        .unwrap();
+    eng.submit(
+        tt,
+        "tree",
+        &[Value::from_i64(4), Value::from_i64(7), Value(acc)],
+        SubmitOpts::default(),
+    )
+    .unwrap();
+    eng.run_to_idle().unwrap();
+    assert_eq!(eng.rounds(), 1, "one co-scheduled block-level round");
+    let outs = eng.take_outcomes();
+    let f = outs.iter().find(|o| o.tenant == tf).unwrap();
+    assert_eq!(f.result.unwrap().as_i64(), fib::reference(10));
+    let want =
+        tree::full_tree_block_reference(4, 7, mem_ops, compute_iters, block as i64);
+    assert_eq!(eng.memory(tt).read_i64s(acc, 1), vec![want]);
+}
+
+#[test]
+fn submission_validation_fails_at_the_api_edge() {
+    let mut eng = engine(AdmissionPolicy::Fifo);
+    let t = eng.open_session("t", FIB).unwrap();
+    assert!(eng.submit(t, "nope", &[], SubmitOpts::default()).is_err());
+    assert!(eng.submit(t, "fib", &[], SubmitOpts::default()).is_err());
+    assert!(eng
+        .submit(99, "fib", &[Value::from_i64(1)], SubmitOpts::default())
+        .is_err());
+    assert_eq!(eng.pending_jobs(), 0);
+}

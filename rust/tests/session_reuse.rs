@@ -1,0 +1,133 @@
+//! Session-reuse semantics, pinned across every scheduler organization
+//! and both memory-system models.
+//!
+//! The contract (`coordinator::Session` docs): simulated global memory
+//! persists across runs — the host sets up arrays, runs, reads results
+//! back, runs again — while task-management state (records, queues,
+//! stats) is rebuilt per run like a fresh kernel launch. With the
+//! lower-once fix the session also reuses its cached lowering, so these
+//! tests double as drift detection: a warm session's Nth run must stay
+//! byte-identical to a cold session's first.
+
+use gtap::coordinator::{GtapConfig, RunStats, SchedulerKind, Session};
+use gtap::ir::types::Value;
+use gtap::sim::{DeviceSpec, MemSysMode};
+
+const FIB: &str = r#"
+    #pragma gtap function
+    int fib(int n) {
+        if (n < 2) return n;
+        int a; int b;
+        #pragma gtap task
+        a = fib(n - 1);
+        #pragma gtap task
+        b = fib(n - 2);
+        #pragma gtap taskwait
+        return a + b;
+    }
+"#;
+
+const ACCUM: &str = r#"
+    global int g_sum;
+    #pragma gtap function
+    void acc(ptr p, int n) {
+        int i = 0;
+        int s = 0;
+        while (i < n) { s = s + p[i]; i = i + 1; }
+        g_sum = g_sum + s;
+    }
+"#;
+
+const KINDS: [SchedulerKind; 3] = [
+    SchedulerKind::WorkStealing,
+    SchedulerKind::GlobalQueue,
+    SchedulerKind::SequentialChaseLev,
+];
+
+const MEMSYS: [MemSysMode; 2] = [MemSysMode::Flat, MemSysMode::Modeled];
+
+fn cfg(kind: SchedulerKind, memsys: MemSysMode) -> GtapConfig {
+    GtapConfig {
+        grid_size: 4,
+        block_size: 32,
+        scheduler: kind,
+        memsys,
+        ..Default::default()
+    }
+}
+
+fn no_carryover(a: &RunStats, b: &RunStats) {
+    // task state resets per run: counters restart from zero instead of
+    // accumulating, and the run is bit-reproducible
+    assert_eq!(a, b);
+    assert_eq!(a.tasks_finished, a.spawns + 1);
+}
+
+#[test]
+fn repeated_runs_are_byte_identical_for_every_kind_and_memsys() {
+    for kind in KINDS {
+        for memsys in MEMSYS {
+            let label = format!("{kind:?}/{memsys:?}");
+            let mut s =
+                Session::compile(FIB, cfg(kind, memsys), DeviceSpec::h100()).unwrap();
+            let r1 = s.run("fib", &[Value::from_i64(11)]).unwrap();
+            let r2 = s.run("fib", &[Value::from_i64(11)]).unwrap();
+            let r3 = s.run("fib", &[Value::from_i64(11)]).unwrap();
+            assert_eq!(r1.root_result.unwrap().as_i64(), 89, "{label}");
+            no_carryover(&r1, &r2);
+            no_carryover(&r2, &r3);
+            // warm runs also match a cold session exactly
+            let mut fresh =
+                Session::compile(FIB, cfg(kind, memsys), DeviceSpec::h100()).unwrap();
+            let f1 = fresh.run("fib", &[Value::from_i64(11)]).unwrap();
+            assert_eq!(r3, f1, "{label}: warm run 3 == cold run 1");
+        }
+    }
+}
+
+#[test]
+fn globals_and_arrays_persist_while_task_state_resets() {
+    for kind in KINDS {
+        for memsys in MEMSYS {
+            let label = format!("{kind:?}/{memsys:?}");
+            let mut s =
+                Session::compile(ACCUM, cfg(kind, memsys), DeviceSpec::h100()).unwrap();
+            let p = s.alloc(4);
+            s.memory.write_i64s(p, &[1, 2, 3, 4]);
+            let args = [Value(p), Value::from_i64(4)];
+            let r1 = s.run("acc", &args).unwrap();
+            // the global accumulates across runs (memory persists) ...
+            assert_eq!(s.get_global("g_sum").unwrap().as_i64(), 10, "{label}");
+            let r2 = s.run("acc", &args).unwrap();
+            assert_eq!(s.get_global("g_sum").unwrap().as_i64(), 20, "{label}");
+            // ... while per-run task accounting does not
+            assert_eq!(r1.tasks_finished, r2.tasks_finished, "{label}");
+            assert_eq!(r1.cycles, r2.cycles, "{label}");
+            // the host array is still intact and re-writable
+            assert_eq!(s.memory.read_i64s(p, 4), vec![1, 2, 3, 4], "{label}");
+            s.memory.write_i64s(p, &[10, 0, 0, 0]);
+            s.run("acc", &args).unwrap();
+            assert_eq!(s.get_global("g_sum").unwrap().as_i64(), 30, "{label}");
+        }
+    }
+}
+
+#[test]
+fn modeled_memsys_differs_only_in_memsys_counters_across_reuse() {
+    // Sanity for the matrix itself: flat vs modeled agree on results and
+    // task counts on a reused session (cycles legitimately differ).
+    for kind in KINDS {
+        let mut flat =
+            Session::compile(FIB, cfg(kind, MemSysMode::Flat), DeviceSpec::h100()).unwrap();
+        let mut modeled =
+            Session::compile(FIB, cfg(kind, MemSysMode::Modeled), DeviceSpec::h100())
+                .unwrap();
+        for _ in 0..2 {
+            let f = flat.run("fib", &[Value::from_i64(10)]).unwrap();
+            let m = modeled.run("fib", &[Value::from_i64(10)]).unwrap();
+            assert_eq!(f.root_result, m.root_result, "{kind:?}");
+            assert_eq!(f.tasks_finished, m.tasks_finished, "{kind:?}");
+            assert_eq!(f.memsys, Default::default(), "{kind:?}: flat records nothing");
+        }
+    }
+}
