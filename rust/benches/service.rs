@@ -16,15 +16,24 @@
 //!   written to the JSON; the CI service job re-runs the bench under
 //!   `GTAP_BENCH_THREADS=1` and `=4` and diffs the digests, pinning that
 //!   sweep threading never leaks into engine results.
+//! * **Degraded-mode throughput** — the same schedule served under a
+//!   fault plan sized off the measured solo makespan (a mid-round worker
+//!   stall plus a run drain at 2/3 of the work span), with retry armed:
+//!   what fraction of fault-free throughput the resilience layer retains,
+//!   checkpointed retries vs from-the-root retries. Checkpointed runs are
+//!   asserted to re-execute zero tasks and both degraded runs must end
+//!   with every job Completed, results identical to the clean run.
 //!
 //! Results land in `BENCH_service.json` at the repo root (the CI
 //! smoke-bench job records it with `GTAP_BENCH_SMOKE=1` and uploads the
 //! artifact). Regenerate with `cargo bench --bench service`.
 
 use gtap::bench::sweep::{self, full_scale, measure};
-use gtap::coordinator::{GtapConfig, Session};
+use gtap::coordinator::{FaultPlan, GtapConfig, Session};
 use gtap::ir::types::Value;
-use gtap::runtime::service::{AdmissionPolicy, JobOutcome, JobStatus, ServiceEngine, SubmitOpts};
+use gtap::runtime::service::{
+    AdmissionPolicy, JobOutcome, JobStatus, ResilienceConfig, ServiceEngine, SubmitOpts,
+};
 use gtap::sim::DeviceSpec;
 use gtap::workloads::fib;
 use std::path::PathBuf;
@@ -201,6 +210,88 @@ fn main() {
         outs.len()
     );
 
+    // ---- part 5: degraded-mode throughput -------------------------------
+    // The part-4 schedule served with retry armed, three ways: fault-free
+    // (the clean reference), and under a fault plan derived from the
+    // measured solo makespan — a worker stall a third of the way into the
+    // work span plus a run drain at two thirds — with checkpointed and
+    // from-the-root retries. The engine escalates the drain deadline per
+    // drained round, so both degraded runs terminate with every job
+    // Completed and results identical to the clean run; the metric is how
+    // much virtual service time degradation costs.
+    let startup = DeviceSpec::h100().startup;
+    let work = round_cycles - startup;
+    let fault_spec = format!(
+        "stall@{}:w1:2000;deadline@{}",
+        startup + work / 3,
+        startup + (work * 2) / 3
+    );
+    let run_resilient = |faults: Option<&str>, checkpoint: bool| {
+        let mut c = cfg(sweep::SEED_BASE);
+        if let Some(f) = faults {
+            c.faults = FaultPlan::parse(f).unwrap();
+        }
+        let mut eng =
+            ServiceEngine::new(c, DeviceSpec::h100(), AdmissionPolicy::FairShare).unwrap();
+        eng.set_resilience(ResilienceConfig {
+            retry: true,
+            max_retries: 16,
+            retry_budget: 256,
+            backoff_base: 1 << 8,
+            checkpoint,
+            ..Default::default()
+        });
+        let a = eng.open_session("a", &fib_src).unwrap();
+        let b = eng.open_session("b", &fib_src).unwrap();
+        for j in 0..jobs {
+            eng.submit(
+                a,
+                "fib",
+                &[Value::from_i64(fib_n - (j % 3) as i64)],
+                SubmitOpts::default(),
+            )
+            .unwrap();
+            eng.submit(
+                b,
+                "fib",
+                &[Value::from_i64(fib_n - 1)],
+                SubmitOpts {
+                    priority: (j % 2) as u8,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        }
+        eng.run_to_idle().unwrap();
+        let mut outs = eng.take_outcomes();
+        outs.sort_by_key(|o| o.job);
+        assert!(outs.iter().all(|o| o.status == JobStatus::Completed));
+        let results: Vec<_> = outs.iter().map(|o| (o.job, o.tenant, o.result)).collect();
+        let retries = eng.accounting(a).jobs_retried + eng.accounting(b).jobs_retried;
+        let reexec =
+            eng.accounting(a).tasks_reexecuted + eng.accounting(b).tasks_reexecuted;
+        (eng.virtual_cycles(), eng.rounds(), retries, reexec, results)
+    };
+    let (clean_cycles, clean_rounds, _, _, clean_results) = run_resilient(None, true);
+    let (ck_cycles, ck_rounds, ck_retries, ck_reexec, ck_results) =
+        run_resilient(Some(&fault_spec), true);
+    let (nc_cycles, nc_rounds, nc_retries, nc_reexec, nc_results) =
+        run_resilient(Some(&fault_spec), false);
+    assert_eq!(ck_results, clean_results, "degraded results diverged (checkpoint)");
+    assert_eq!(nc_results, clean_results, "degraded results diverged (from-root)");
+    assert_eq!(ck_reexec, 0, "checkpointed retries must re-execute nothing");
+    let retained_ck = clean_cycles as f64 / ck_cycles as f64;
+    let retained_nc = clean_cycles as f64 / nc_cycles as f64;
+    println!(
+        "  degraded mode under {fault_spec}:\n    clean      {clean_cycles} cy, \
+         {clean_rounds} round(s)\n    checkpoint {ck_cycles} cy, {ck_rounds} round(s), \
+         {ck_retries} retrie(s), 0 reexecuted ({:.0}% throughput retained)\n    \
+         from-root  {nc_cycles} cy, {nc_rounds} round(s), {nc_retries} retrie(s), \
+         {nc_reexec} reexecuted ({:.0}% throughput retained)",
+        retained_ck * 100.0,
+        retained_nc * 100.0,
+    );
+
     // ---- machine-readable record: BENCH_service.json --------------------
     let json = format!(
         "{{\n  \"bench\": \"service\",\n  \"measured\": true,\n  \
@@ -214,6 +305,15 @@ fn main() {
          \"matches_session_run\": true}},\n  \
          \"interference\": {{\"solo_completed_at\": {solo_completed_at}, \
          \"shared_completed_at_median\": {:.1}, \"ratio\": {interference:.3}}},\n  \
+         \"resilience\": {{\"fault_spec\": \"{fault_spec}\", \
+         \"clean_cycles\": {clean_cycles}, \"clean_rounds\": {clean_rounds}, \
+         \"degraded_cycles_checkpoint\": {ck_cycles}, \
+         \"degraded_cycles_from_root\": {nc_cycles}, \
+         \"throughput_retained_checkpoint\": {retained_ck:.3}, \
+         \"throughput_retained_from_root\": {retained_nc:.3}, \
+         \"retries_checkpoint\": {ck_retries}, \"retries_from_root\": {nc_retries}, \
+         \"tasks_reexecuted_checkpoint\": 0, \
+         \"tasks_reexecuted_from_root\": {nc_reexec}}},\n  \
          \"replay_digest\": \"{d1:#018x}\"\n}}\n",
         sweep::runs(),
         smoke,

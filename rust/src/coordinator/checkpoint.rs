@@ -1,0 +1,196 @@
+//! Cross-round checkpointing: snapshot and restore one tenant's live task
+//! lineage at an event-loop boundary (the TREES-style epoch).
+//!
+//! The scheduler's event loop has the property that *nothing is in flight
+//! between events* — a worker iteration applies every effect (spawns,
+//! joins, finishes) before the clock moves. A tenant's state at a boundary
+//! is therefore exactly its record lineage: task metadata, payload words,
+//! and the child links join accounting reads. Capturing that lineage when
+//! a tenant is evicted (deadline, drain, watchdog) and replaying it into a
+//! fresh scheduler resumes the job from the last boundary instead of from
+//! the root.
+//!
+//! **Exactly-once contract.** A restored task never re-executes work: every
+//! captured task is either `done` (retained only so its parent can read the
+//! result), suspended at a join (`waiting`), or *queued* — its next segment
+//! had not started when the round ended. Restore re-enqueues precisely the
+//! queued frontier, so the segments that ran before the checkpoint run
+//! zero more times. This is strictly stronger than the PR-6 state-entry
+//! idempotence contract (re-execution from the last state-entry boundary
+//! is bit-identical): checkpoint resume needs only that dispatching a
+//! segment *for the first time* from its recorded `(func, state, data)`
+//! entry is deterministic — which is the same invariant, applied across
+//! scheduler instances instead of within one.
+
+use super::records::{RecordPool, TaskId, NO_TASK};
+use crate::ir::bytecode::FuncId;
+
+/// Sentinel for "no snapshot index" (a root that already finished, or a
+/// child slot whose record was already released).
+pub const SNAP_NONE: u32 = u32::MAX;
+
+/// One task record, lifted out of the pool. `parent` and `children` are
+/// *snapshot indices* (positions in [`TenantCheckpoint::tasks`]), not task
+/// IDs — the restore pool hands out fresh IDs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskSnapshot {
+    pub func: FuncId,
+    pub state: u16,
+    pub parent: u32,
+    pub num_children: u16,
+    pub pending_children: u16,
+    pub waiting: bool,
+    pub join_queue: u8,
+    pub done: bool,
+    pub depth: u16,
+    pub priority: u8,
+    /// The full task-data payload (arguments, spilled live values, result
+    /// slot) — what the §4.1 record holds.
+    pub data: Vec<u64>,
+    /// Child links for slots `0..num_children` (`SNAP_NONE` for a slot
+    /// whose record was already released at capture time).
+    pub children: Vec<u32>,
+}
+
+/// A tenant's complete live lineage at one round boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantCheckpoint {
+    /// Snapshots in ascending captured-task-ID order (deterministic: the
+    /// capture scan and the restore allocation both walk this order).
+    pub tasks: Vec<TaskSnapshot>,
+    /// Snapshot index of the tenant's root task, or [`SNAP_NONE`] when the
+    /// root already finished (its result was stamped into `TenantStats`
+    /// before its record was released; the service layer carries it).
+    pub root: u32,
+}
+
+impl TenantCheckpoint {
+    /// Tasks that will re-enter the run queues on restore: not finished
+    /// and not suspended at a join — exactly the runnable frontier.
+    pub fn frontier_len(&self) -> usize {
+        self.tasks
+            .iter()
+            .filter(|s| !s.done && !s.waiting)
+            .count()
+    }
+
+    /// Tasks still live (not `done`) in the snapshot.
+    pub fn live_len(&self) -> usize {
+        self.tasks.iter().filter(|s| !s.done).count()
+    }
+}
+
+/// Capture tenant `tenant`'s live lineage from `records`. Returns `None`
+/// when the tenant has no live records (nothing to resume). `root` is the
+/// tenant's current root task (`NO_TASK` once the root finished).
+pub fn capture(records: &RecordPool, tenant: u16, root: TaskId) -> Option<TenantCheckpoint> {
+    // `for_each_alive` walks ascending IDs, so the snapshot order — and
+    // everything downstream of it — is deterministic.
+    let mut ids: Vec<TaskId> = Vec::new();
+    records.for_each_alive(|id, m| {
+        if m.tenant == tenant {
+            ids.push(id);
+        }
+    });
+    if ids.is_empty() {
+        return None;
+    }
+    let index_of = |id: TaskId| -> u32 {
+        match ids.binary_search(&id) {
+            Ok(i) => i as u32,
+            Err(_) => SNAP_NONE,
+        }
+    };
+    let tasks = ids
+        .iter()
+        .map(|&id| {
+            let m = records.meta(id);
+            let children = (0..m.num_children)
+                .map(|slot| {
+                    let c = records.child(id, slot);
+                    if c == NO_TASK {
+                        SNAP_NONE
+                    } else {
+                        index_of(c)
+                    }
+                })
+                .collect();
+            TaskSnapshot {
+                func: m.func,
+                state: m.state,
+                parent: if m.parent == NO_TASK {
+                    SNAP_NONE
+                } else {
+                    index_of(m.parent)
+                },
+                num_children: m.num_children,
+                pending_children: m.pending_children,
+                waiting: m.waiting,
+                join_queue: m.join_queue,
+                done: m.done,
+                depth: m.depth,
+                priority: m.priority,
+                data: records.data(id).to_vec(),
+                children,
+            }
+        })
+        .collect();
+    Some(TenantCheckpoint {
+        tasks,
+        root: if root == NO_TASK {
+            SNAP_NONE
+        } else {
+            index_of(root)
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_lifts_lineage_with_snapshot_indices() {
+        let mut p = RecordPool::new(8, 2, 2);
+        let root = p.alloc(0, NO_TASK).unwrap();
+        p.meta_mut(root).tenant = 1;
+        p.data_mut(root)[0] = 42;
+        let c0 = p.alloc(1, root).unwrap();
+        let c1 = p.alloc(1, root).unwrap();
+        p.push_child(root, c0).unwrap();
+        p.push_child(root, c1).unwrap();
+        p.meta_mut(root).waiting = true;
+        p.meta_mut(c1).done = true;
+        // an unrelated tenant-0 record must not leak into the snapshot
+        p.alloc(9, NO_TASK).unwrap();
+
+        let ck = capture(&p, 1, root).expect("live lineage");
+        assert_eq!(ck.tasks.len(), 3);
+        assert_eq!(ck.root, 0, "root is the lowest captured id");
+        let r = &ck.tasks[0];
+        assert_eq!(r.data[0], 42);
+        assert_eq!(r.num_children, 2);
+        assert_eq!(r.children, vec![1, 2]);
+        assert!(r.waiting);
+        assert_eq!(ck.tasks[1].parent, 0);
+        assert!(ck.tasks[2].done);
+        assert_eq!(ck.live_len(), 2);
+        assert_eq!(ck.frontier_len(), 1, "only the undone, unwaiting child");
+    }
+
+    #[test]
+    fn capture_of_empty_tenant_is_none() {
+        let mut p = RecordPool::new(4, 1, 0);
+        p.alloc(0, NO_TASK).unwrap(); // tenant 0
+        assert!(capture(&p, 3, NO_TASK).is_none());
+    }
+
+    #[test]
+    fn finished_root_maps_to_snap_none() {
+        let mut p = RecordPool::new(4, 1, 0);
+        let a = p.alloc(0, NO_TASK).unwrap();
+        p.meta_mut(a).tenant = 2;
+        let ck = capture(&p, 2, NO_TASK).unwrap();
+        assert_eq!(ck.root, SNAP_NONE);
+    }
+}

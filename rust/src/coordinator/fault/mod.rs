@@ -361,6 +361,60 @@ mod tests {
     }
 
     #[test]
+    fn spelling_round_trips_whole_grammar() {
+        use crate::util::prop::Runner;
+        Runner::new().cases(256).run("fault-spelling-round-trip", |g| {
+            // Compose a random spec from every grammar production —
+            // stall/kill/stealfail/drop (with and without the :q field),
+            // deadline (possibly repeated: later overrides earlier),
+            // rand:SEED and rand:SEED:N — joined by either separator.
+            let n = g.usize(0, 6);
+            let mut parts: Vec<String> = Vec::new();
+            for _ in 0..n {
+                let at = g.int(0, 1 << 20);
+                let w = g.usize(0, 63);
+                let part = match g.usize(0, 5) {
+                    0 => format!("stall@{at}:w{w}:{}", g.int(1, 1 << 12)),
+                    1 => format!("kill@{at}:w{w}"),
+                    2 => format!("stealfail@{at}:w{w}:{}", g.int(1, 64)),
+                    3 => {
+                        if g.chance(0.5) {
+                            format!("drop@{at}:w{w}:q{}", g.usize(0, 7))
+                        } else {
+                            format!("drop@{at}:w{w}")
+                        }
+                    }
+                    4 => format!("deadline@{}", g.int(0, 1 << 24)),
+                    _ => {
+                        if g.chance(0.5) {
+                            format!("rand:{}:{}", g.int(0, 1 << 16), g.usize(0, 12))
+                        } else {
+                            format!("rand:{}", g.int(0, 1 << 16))
+                        }
+                    }
+                };
+                parts.push(part);
+            }
+            let sep = if g.chance(0.5) { ";" } else { "," };
+            let spec = parts.join(sep);
+            let plan =
+                FaultPlan::parse(&spec).unwrap_or_else(|e| panic!("parse {spec:?}: {e}"));
+            let spelled = plan.spelling();
+            let round = FaultPlan::parse(&spelled)
+                .unwrap_or_else(|e| panic!("re-parse {spelled:?} (from {spec:?}): {e}"));
+            assert_eq!(plan, round, "spec {spec:?} spelled {spelled:?}");
+            // spelling is a fixed point of parse∘spelling
+            assert_eq!(round.spelling(), spelled, "spec {spec:?}");
+            // inactive plans (empty, or rand:SEED:0 only) spell "off" and
+            // re-parse to the default plan
+            if !plan.is_active() {
+                assert_eq!(spelled, "off");
+                assert_eq!(round, FaultPlan::default());
+            }
+        });
+    }
+
+    #[test]
     fn rand_is_deterministic_and_rations_kills() {
         let a = FaultPlan::seeded(42, 32);
         let b = FaultPlan::parse("rand:42:32").unwrap();

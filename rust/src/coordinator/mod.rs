@@ -16,6 +16,10 @@
 //!   organization abstraction plus the six enum-dispatched decision
 //!   policies (queue select, victim select, steal amount, placement,
 //!   backoff, per-SM tier) bundled in `PolicyConfig`.
+//! * [`checkpoint`] — cross-round lineage snapshots: capture an evicted
+//!   tenant's live records at an event-loop boundary and replay them into
+//!   a fresh scheduler (`Scheduler::restore_tenant`) so a retried job
+//!   resumes from its last round instead of the root.
 //! * [`clock`] — the indexed worker-clock heap the discrete-event loop
 //!   advances in place (one sift per iteration, no allocation).
 //! * [`fault`] — deterministic fault injection (`FaultPlan`, `--faults` /
@@ -36,6 +40,7 @@
 //!   Program 4).
 
 pub mod chaselev;
+pub mod checkpoint;
 pub mod clock;
 pub mod config;
 pub mod fault;
@@ -49,10 +54,11 @@ pub mod scheduler;
 pub mod scheduler_ref;
 pub mod session;
 
+pub use checkpoint::{TaskSnapshot, TenantCheckpoint};
 pub use config::{Granularity, GtapConfig, SchedulerKind};
 pub use fault::{FaultEvent, FaultKind, FaultPlan};
 pub use policy::{
     Backoff, Placement, PolicyConfig, QueueSelect, QueueSet, SmTier, StealAmount, VictimSelect,
 };
-pub use scheduler::{PayloadEngine, PayloadReq, RunStats, Scheduler, TenantStats};
+pub use scheduler::{EvictCause, PayloadEngine, PayloadReq, RunStats, Scheduler, TenantStats};
 pub use session::Session;

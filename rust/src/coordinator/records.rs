@@ -213,6 +213,14 @@ impl RecordPool {
         self.children[parent as usize * self.child_stride + slot as usize]
     }
 
+    /// Overwrite the child link at `slot` of `parent` — checkpoint restore
+    /// rebuilding a captured lineage with freshly allocated IDs (cold path;
+    /// spawning always goes through `push_child`).
+    pub fn set_child(&mut self, parent: TaskId, slot: u16, child: TaskId) {
+        debug_assert!((slot as usize) < self.child_stride);
+        self.children[parent as usize * self.child_stride + slot as usize] = child;
+    }
+
     /// Reset the child list at a join epoch boundary (after the post-join
     /// segment consumed the results).
     pub fn reset_children(&mut self, parent: TaskId) {

@@ -57,6 +57,7 @@
 //! backlog, so resident warps beyond the issue width only help hide
 //! latency — exactly the occupancy behaviour of §2.3.1.
 
+use super::checkpoint::{self, TenantCheckpoint, SNAP_NONE};
 use super::clock::WorkerClock;
 use super::config::{Granularity, GtapConfig};
 use super::fault::recovery;
@@ -161,6 +162,26 @@ pub struct RunStats {
     pub output: Vec<String>,
 }
 
+/// Why a tenant was evicted mid-run — the typed loss attribution the
+/// service layer's retry and quarantine logic dispatches on. `None` in
+/// `TenantStats::evict_cause` for tenants that ran to completion, so every
+/// pre-resilience pin (which only ever sees completed or deadline-evicted
+/// tenants compared against equally-evicted baselines) is unchanged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictCause {
+    /// A per-tenant deadline armed via `set_tenant_deadline` fired (or the
+    /// host cancelled the session — same scoped-drain path).
+    Deadline,
+    /// The whole run was aborted through [`Scheduler::drain`] (fault-plane
+    /// `deadline@C` overrun) while this tenant still had live work.
+    Drain,
+    /// The quiescence watchdog found the fleet deadlocked with this
+    /// tenant's tasks live and nothing recoverable — unrecovered worker
+    /// loss surfaced as an eviction instead of a run-fatal error
+    /// (requires [`Scheduler::evict_on_watchdog_trip`]).
+    Watchdog,
+}
+
 /// Per-tenant slice of a (possibly multi-tenant) run: what the service
 /// layer accounts to each session. Exact-attribution counters
 /// (`tasks_finished`, `segments`, `spawns`) sum across tenants to the
@@ -184,6 +205,9 @@ pub struct TenantStats {
     /// cancellation) or caught in a whole-run drain: remaining work
     /// discarded, records released, no further effects applied.
     pub evicted: bool,
+    /// Typed attribution of the eviction ([`EvictCause`]); `None` when the
+    /// tenant was not evicted.
+    pub evict_cause: Option<EvictCause>,
     /// Modeled memory-system counters attributed to this tenant. A warp's
     /// recorded traffic is attributed whole to the tenant owning the
     /// majority of its lanes (ties to the lower slot) — exact under block
@@ -270,6 +294,19 @@ pub struct Scheduler<'a> {
     /// Roots spawned so far (round-robin worker placement for later roots;
     /// the first always lands on worker 0, matching the one-shot launch).
     roots_spawned: usize,
+    /// Capture each evicted tenant's live lineage into `checkpoints`
+    /// before releasing its records (the service layer's cross-round
+    /// resume). Off by default: capture allocates, so it is opt-in and
+    /// never touches the fault-free or resilience-off paths.
+    checkpoints_enabled: bool,
+    /// Lineage snapshots captured at eviction (slot-indexed, `None` for
+    /// tenants that were never evicted or had nothing live).
+    checkpoints: Vec<Option<TenantCheckpoint>>,
+    /// Surface an unrecoverable watchdog trip as per-tenant Watchdog
+    /// evictions instead of a run-fatal error. Off by default — the
+    /// one-shot/batch contract (a deadlocked run is a hard error) is
+    /// unchanged unless the service layer opts in for retryable rounds.
+    evict_on_trip: bool,
     // --- reusable hot-path scratch (no allocation per iteration) ---
     scratch_batch: Vec<TaskId>,
     scratch_outputs: Vec<Option<SegmentOutput>>,
@@ -437,6 +474,9 @@ impl<'a> Scheduler<'a> {
             any_tenant_deadline: false,
             roots: vec![NO_TASK; ntenants],
             roots_spawned: 0,
+            checkpoints_enabled: false,
+            checkpoints: vec![None; ntenants],
+            evict_on_trip: false,
             scratch_batch: Vec::with_capacity(batch_max),
             scratch_outputs: Vec::with_capacity(batch_max),
             scratch_states: Vec::with_capacity(batch_max),
@@ -1332,11 +1372,22 @@ impl<'a> Scheduler<'a> {
     /// active fault plane the lost tasks are re-enqueued (re-execution
     /// resumes from the last state-entry boundary, so results stay
     /// bit-identical); otherwise — or when nothing is recoverable — the
-    /// run aborts with a diagnosis instead of spinning forever.
+    /// run aborts with a diagnosis instead of spinning forever, unless
+    /// [`Scheduler::evict_on_watchdog_trip`] opted into surfacing the
+    /// deadlock as typed per-tenant Watchdog evictions (the service
+    /// layer's retryable form of the same loss).
     fn watchdog_trip(&mut self, now: u64) -> Result<()> {
         self.stats.watchdog_trips += 1;
         let lost = recovery::lost_tasks(&self.records);
         if self.faults.is_none() || lost.is_empty() {
+            if self.evict_on_trip {
+                for t in 0..self.tstats.len() {
+                    if self.live_by_tenant[t] > 0 {
+                        self.evict_tenant_as(t, now, EvictCause::Watchdog);
+                    }
+                }
+                return Ok(());
+            }
             bail!(
                 "watchdog: scheduler quiescent at cycle {now} with {} live task(s) \
                  and no queued work (lost-continuation deadlock)",
@@ -1404,6 +1455,149 @@ impl<'a> Scheduler<'a> {
         }
     }
 
+    /// Opt in to lineage capture at eviction: every subsequent eviction
+    /// (deadline, drain, watchdog) snapshots the tenant's live records
+    /// into a [`TenantCheckpoint`] before releasing them.
+    pub fn enable_checkpoints(&mut self) {
+        self.checkpoints_enabled = true;
+    }
+
+    /// Opt in to surfacing unrecoverable watchdog trips as per-tenant
+    /// [`EvictCause::Watchdog`] evictions instead of a run-fatal error.
+    pub fn evict_on_watchdog_trip(&mut self) {
+        self.evict_on_trip = true;
+    }
+
+    /// Take the lineage snapshots captured at evictions this run
+    /// (slot-indexed; `None` for tenants never evicted, evicted with
+    /// nothing live, or with capture disabled).
+    pub fn take_checkpoints(&mut self) -> Vec<Option<TenantCheckpoint>> {
+        std::mem::take(&mut self.checkpoints)
+    }
+
+    /// Replay a captured lineage into tenant slot `tenant` of a fresh
+    /// scheduler — the cross-round resume. Allocates a record per
+    /// snapshot (snapshot order, so IDs are deterministic), rebuilds
+    /// parent/child links and payload words, and re-enqueues exactly the
+    /// runnable frontier (`!done && !waiting`) through the run's
+    /// **Placement** policy, round-robin across workers. Replaces
+    /// `spawn_root_for` for the slot; host intervention, so the pushes
+    /// charge no simulated cycles and no `RunStats` counters.
+    pub fn restore_tenant(&mut self, tenant: u16, ckpt: &TenantCheckpoint) -> Result<()> {
+        let t = tenant as usize;
+        if t >= self.mods.len() {
+            bail!(
+                "tenant slot {tenant} out of range ({} slots)",
+                self.mods.len()
+            );
+        }
+        if self.roots[t] != NO_TASK || self.live_by_tenant[t] > 0 {
+            bail!("tenant slot {tenant} already has live work this run");
+        }
+        let mut ids: Vec<TaskId> = Vec::with_capacity(ckpt.tasks.len());
+        for s in &ckpt.tasks {
+            let id = self
+                .records
+                .alloc(s.func, NO_TASK)
+                .context("record pool exhausted restoring a checkpoint")?;
+            ids.push(id);
+        }
+        for (i, s) in ckpt.tasks.iter().enumerate() {
+            let id = ids[i];
+            {
+                let m = self.records.meta_mut(id);
+                m.state = s.state;
+                m.parent = if s.parent == SNAP_NONE {
+                    NO_TASK
+                } else {
+                    ids[s.parent as usize]
+                };
+                m.num_children = s.num_children;
+                m.pending_children = s.pending_children;
+                m.waiting = s.waiting;
+                m.join_queue = s.join_queue;
+                m.done = s.done;
+                m.depth = s.depth;
+                m.priority = s.priority;
+                m.tenant = tenant;
+            }
+            let data = self.records.data_mut(id);
+            if s.data.len() > data.len() {
+                bail!(
+                    "checkpoint task-data stride {} exceeds this run's {} \
+                     (checkpoint from a different module set?)",
+                    s.data.len(),
+                    data.len()
+                );
+            }
+            data[..s.data.len()].copy_from_slice(&s.data);
+            for (slot, &c) in s.children.iter().enumerate() {
+                if c != SNAP_NONE {
+                    self.records.set_child(id, slot as u16, ids[c as usize]);
+                }
+            }
+        }
+        let live = ckpt.tasks.iter().filter(|s| !s.done).count() as u64;
+        self.live_tasks += live;
+        self.live_by_tenant[t] += live;
+        if ckpt.root != SNAP_NONE {
+            let rid = ids[ckpt.root as usize];
+            self.roots[t] = rid;
+            if self.root == NO_TASK {
+                self.root = rid;
+            }
+        }
+        // keep later tenants' round-robin root spread identical to a
+        // spawn_root_for in this slot
+        self.roots_spawned += 1;
+        // re-enqueue the runnable frontier: raw pushes (uncosted,
+        // uncounted — host intervention), routed like recovered work
+        let nq = self.cfg.num_queues;
+        let policy = self.policy;
+        let n = self.workers.len();
+        let dev = self.dev;
+        let steals = self.queues.supports_steal();
+        let mut placed = 0usize;
+        for (i, s) in ckpt.tasks.iter().enumerate() {
+            if s.done || s.waiting {
+                continue;
+            }
+            let q = if s.state == 0 {
+                policy.placement.place(0, 0, nq, s.depth, s.priority)
+            } else {
+                policy
+                    .placement
+                    .place_continuation(s.join_queue as usize, nq, s.depth, s.priority)
+            };
+            let (tw, tq) = if steals { (placed % n, q) } else { (0, 0) };
+            placed += 1;
+            let id = ids[i];
+            let mut pushed = self.queues.push(tw, tq, 0, &[id], dev).is_some();
+            if !pushed {
+                'spill: for dw in 0..n {
+                    for dq in 0..nq {
+                        if self
+                            .queues
+                            .push((tw + dw) % n, (tq + dq) % nq, 0, &[id], dev)
+                            .is_some()
+                        {
+                            pushed = true;
+                            break 'spill;
+                        }
+                    }
+                }
+            }
+            if !pushed {
+                bail!(
+                    "task queue overflow restoring a checkpoint frontier \
+                     ({} tasks); raise GTAP_MAX_TASKS_PER_{{WARP,BLOCK}}",
+                    ckpt.frontier_len()
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// Scoped drain: evict one tenant mid-run, leaving co-tenants intact.
     /// Called at event-loop boundaries (nothing is in flight between
     /// events — a worker iteration applies its effects before the clock
@@ -1414,7 +1608,16 @@ impl<'a> Scheduler<'a> {
     /// intervention: it charges no simulated cycles and increments no
     /// fleet `RunStats` counters, so co-tenant accounting is untouched.
     pub fn evict_tenant(&mut self, t: usize, now: u64) {
+        self.evict_tenant_as(t, now, EvictCause::Deadline);
+    }
+
+    /// [`Scheduler::evict_tenant`] with an explicit typed cause (and, when
+    /// checkpointing is enabled, a lineage capture before the records go).
+    fn evict_tenant_as(&mut self, t: usize, now: u64, cause: EvictCause) {
         let tenant = t as u16;
+        if self.checkpoints_enabled {
+            self.checkpoints[t] = checkpoint::capture(&self.records, tenant, self.roots[t]);
+        }
         let dev = self.dev;
         {
             let records = &self.records;
@@ -1497,6 +1700,7 @@ impl<'a> Scheduler<'a> {
         }
         self.roots[t] = NO_TASK;
         self.tstats[t].evicted = true;
+        self.tstats[t].evict_cause = Some(cause);
         self.tstats[t].completed_at = Some(now);
     }
 
@@ -1506,6 +1710,17 @@ impl<'a> Scheduler<'a> {
     /// reports `drained = true` and no root result; every tenant with
     /// work still live is marked evicted.
     pub fn drain(&mut self) {
+        if self.checkpoints_enabled {
+            // lineage capture precedes the record release, per tenant with
+            // live work — the whole-run drain is just every tenant's
+            // eviction happening at once
+            for t in 0..self.tstats.len() {
+                if self.live_by_tenant[t] > 0 {
+                    self.checkpoints[t] =
+                        checkpoint::capture(&self.records, t as u16, self.roots[t]);
+                }
+            }
+        }
         for ws in &mut self.workers {
             ws.immediate.clear();
         }
@@ -1522,6 +1737,7 @@ impl<'a> Scheduler<'a> {
                 self.live_by_tenant[t] = 0;
                 self.roots[t] = NO_TASK;
                 self.tstats[t].evicted = true;
+                self.tstats[t].evict_cause = Some(EvictCause::Drain);
             }
         }
         self.live_tasks = 0;

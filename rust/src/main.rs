@@ -50,7 +50,10 @@ fn main() -> Result<()> {
                  \n  gtap service [--grid G] [--block B] [--jobs N] \\\
                  \n      [--admission fifo|fair|priority] [--fib-n N] [--tree-depth D] \\\
                  \n      [--bfs-n N] [--deadline C] [--cancel] [--seed S] \\\
-                 \n      [--memsys flat|modeled] [--faults off|<spec>]\
+                 \n      [--memsys flat|modeled] [--faults off|<spec>] \\\
+                 \n      [--retry on|off] [--max-retries N] [--retry-budget N] \\\
+                 \n      [--backoff-base C] [--quarantine-after N] \\\
+                 \n      [--shed-watermark N] [--checkpoint on|off]\
                  \n                                     multi-tenant service-engine smoke\
                  \n  gtap devices                       device cost models (Table 2)\
                  \n  gtap config                        runtime defaults (Table 1)"
@@ -260,9 +263,25 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn cmd_service(args: &Args) -> Result<()> {
     use gtap::ir::types::Value;
     use gtap::runtime::service::{
-        AdmissionPolicy, CancelToken, JobOutcome, JobStatus, ServiceEngine, SubmitOpts,
+        AdmissionPolicy, CancelToken, JobOutcome, JobStatus, ResilienceConfig, ServiceEngine,
+        SubmitOpts, SubmitResult,
     };
     use gtap::workloads::{bfs, fib, tree};
+
+    /// Submit, treating backpressure as a (engine-counted) dropped
+    /// submission rather than an error — the smoke's schedule is fixed,
+    /// so what overload control refuses is itself deterministic.
+    fn submit_lossy(
+        eng: &mut ServiceEngine,
+        tenant: u16,
+        entry: &str,
+        args: &[Value],
+        opts: SubmitOpts,
+    ) -> Result<()> {
+        match eng.try_submit(tenant, entry, args, opts)? {
+            SubmitResult::Admitted(_) | SubmitResult::Backpressure { .. } => Ok(()),
+        }
+    }
 
     let grid = args.get_or("grid", 4usize)?;
     let block = args.get_or("block", 64usize)?;
@@ -281,6 +300,33 @@ fn cmd_service(args: &Args) -> Result<()> {
     let cancel_last = args.flag("cancel");
     if jobs == 0 {
         bail!("--jobs must be at least 1");
+    }
+    // resilience policy: --retry arms retry/backoff/quarantine (and, by
+    // default, checkpointed resume); --shed-watermark arms overload
+    // admission control independently
+    let mut resil = ResilienceConfig {
+        retry: match args.str_or("retry", "off").as_str() {
+            "on" => true,
+            "off" => false,
+            other => bail!("unknown --retry value {other:?} (on|off)"),
+        },
+        checkpoint: match args.str_or("checkpoint", "on").as_str() {
+            "on" => true,
+            "off" => false,
+            other => bail!("unknown --checkpoint value {other:?} (on|off)"),
+        },
+        ..Default::default()
+    };
+    resil.max_retries = args.get_or("max-retries", resil.max_retries)?;
+    resil.retry_budget = args.get_or("retry-budget", resil.retry_budget)?;
+    resil.backoff_base = args.get_or("backoff-base", resil.backoff_base)?;
+    resil.quarantine_after = args.get_or("quarantine-after", resil.quarantine_after)?;
+    if args.get("shed-watermark").is_some() {
+        let wm = args.get_or("shed-watermark", 0usize)?;
+        if wm == 0 {
+            bail!("--shed-watermark must be at least 1");
+        }
+        resil.shed_watermark = Some(wm);
     }
 
     let mut cfg = GtapConfig {
@@ -314,8 +360,9 @@ fn cmd_service(args: &Args) -> Result<()> {
     const T_TREE: u16 = 1;
     const T_BFS: u16 = 2;
 
-    let run_schedule = || -> Result<(Vec<JobOutcome>, Vec<i64>, i64, String)> {
+    let run_schedule = || -> Result<(Vec<JobOutcome>, Vec<i64>, i64, u64, String)> {
         let mut eng = ServiceEngine::new(cfg.clone(), DeviceSpec::h100(), admission)?;
+        eng.set_resilience(resil);
         let tf = eng.open_session("fib", &fib_src)?;
         let tt = eng.open_session("tree", &tree_src)?;
         let tb = eng.open_session("bfs", &bfs_src)?;
@@ -331,8 +378,9 @@ fn cmd_service(args: &Args) -> Result<()> {
         m.store(dp, 0); // depth[src = 0] = 0
         let token = CancelToken::new();
         for round in 0..jobs {
-            eng.submit(tf, "fib", &[Value::from_i64(fib_n)], SubmitOpts::default())?;
-            eng.submit(
+            submit_lossy(&mut eng, tf, "fib", &[Value::from_i64(fib_n)], SubmitOpts::default())?;
+            submit_lossy(
+                &mut eng,
                 tt,
                 "tree",
                 &[Value::from_i64(tree_depth), Value::from_i64(7), Value(acc)],
@@ -343,7 +391,8 @@ fn cmd_service(args: &Args) -> Result<()> {
                 },
             )?;
             let last = round + 1 == jobs;
-            eng.submit(
+            submit_lossy(
+                &mut eng,
                 tb,
                 "bfs",
                 &[Value::from_i64(0), Value(ro), Value(ci), Value(dp)],
@@ -361,13 +410,14 @@ fn cmd_service(args: &Args) -> Result<()> {
         let outs = eng.take_outcomes();
         let depths = eng.memory(tb).read_i64s(dp, graph.n as u64);
         let acc_val = eng.memory(tt).read_i64s(acc, 1)[0];
-        Ok((outs, depths, acc_val, eng.report()))
+        let tree_reexec = eng.accounting(T_TREE).tasks_reexecuted;
+        Ok((outs, depths, acc_val, tree_reexec, eng.report()))
     };
 
     let t_host = std::time::Instant::now();
-    let (outs, depths, acc_val, report) = run_schedule()?;
-    let (outs2, depths2, acc2, _) = run_schedule()?;
-    if outs != outs2 || depths != depths2 || acc_val != acc2 {
+    let (outs, depths, acc_val, tree_reexec, report) = run_schedule()?;
+    let (outs2, depths2, acc2, reexec2, _) = run_schedule()?;
+    if outs != outs2 || depths != depths2 || acc_val != acc2 || tree_reexec != reexec2 {
         bail!("replay mismatch: the same submission schedule produced different outcomes");
     }
     print!("{report}");
@@ -400,7 +450,9 @@ fn cmd_service(args: &Args) -> Result<()> {
     let partial = tree_outs
         .iter()
         .any(|o| o.status != JobStatus::Completed && o.stats.segments > 0);
-    if !faults_on && !partial {
+    // non-checkpointed retries re-apply atomic_add from the root — the
+    // accumulator is only exactly-once when nothing was re-executed
+    if !faults_on && !partial && tree_reexec == 0 {
         let want = tree_done as i64
             * tree::full_tree_block_reference(
                 tree_depth,
@@ -416,7 +468,7 @@ fn cmd_service(args: &Args) -> Result<()> {
     } else {
         println!(
             "  tree: {tree_done}/{jobs} completed, accumulator {acc_val} \
-             (reference check skipped: faults or partial eviction)"
+             (reference check skipped: faults, partial eviction, or re-execution)"
         );
     }
 
@@ -429,7 +481,9 @@ fn cmd_service(args: &Args) -> Result<()> {
         .iter()
         .filter(|o| o.status == JobStatus::Completed)
         .count();
-    let bfs_evicted = bfs_outs.iter().any(|o| o.status == JobStatus::Evicted);
+    let bfs_evicted = bfs_outs
+        .iter()
+        .any(|o| matches!(o.status, JobStatus::Evicted | JobStatus::Failed(_)));
     if bfs_done >= 1 && !bfs_evicted {
         if depths != graph.bfs_reference(0) {
             bail!("bfs depths diverge from the sequential reference");

@@ -92,6 +92,20 @@ impl AdmissionPolicy {
     }
 }
 
+/// Overload shedding: the pending job to drop when the queue is at the
+/// watermark — the *least urgent* one, i.e. maximal `(priority, seq)`
+/// (largest priority value = least urgent; newest within a tie, so older
+/// submissions are preserved). Returns `None` for an empty queue. Pure and
+/// deterministic; the engine sheds the pick only when it is strictly less
+/// urgent than the incoming submission, otherwise the newcomer gets
+/// backpressure.
+pub fn shed_pick(jobs: &[JobView]) -> Option<usize> {
+    jobs.iter()
+        .enumerate()
+        .max_by_key(|(_, j)| (j.priority, j.seq))
+        .map(|(i, _)| i)
+}
+
 /// One job index per tenant, minimizing `rank` (ties impossible: `seq` is
 /// unique).
 fn per_tenant_oldest(
@@ -154,5 +168,15 @@ mod tests {
     #[test]
     fn empty_is_empty() {
         assert!(AdmissionPolicy::FairShare.select(&[], &[0]).is_empty());
+    }
+
+    #[test]
+    fn shed_pick_drops_least_urgent_newest() {
+        assert_eq!(shed_pick(&[]), None);
+        // highest priority value loses; among equals the newest loses
+        let jobs = [j(0, 1, 1), j(1, 3, 2), j(0, 3, 5), j(1, 2, 4)];
+        assert_eq!(shed_pick(&jobs), Some(2));
+        let uniform = [j(0, 2, 7), j(1, 2, 3)];
+        assert_eq!(shed_pick(&uniform), Some(0));
     }
 }

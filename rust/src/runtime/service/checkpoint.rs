@@ -1,0 +1,66 @@
+//! Per-job cross-round progress: the service-side half of checkpointing.
+//!
+//! The coordinator's [`checkpoint`](crate::coordinator::checkpoint) module
+//! captures a tenant's live task lineage at an event-loop boundary
+//! (eviction or drain). This module is the bookkeeping the
+//! [`ServiceEngine`](super::engine::ServiceEngine) attaches to each pending
+//! job so that lineage — plus the retry/backoff state — survives *between*
+//! rounds, where no scheduler exists.
+//!
+//! The resume contract (strictly stronger than PR 6's state-entry
+//! idempotence): the discrete-event loop applies every effect of a worker
+//! iteration before the clock advances, so a capture taken at an event
+//! boundary holds no in-flight segment. Every frontier task in the
+//! snapshot (`!done && !waiting`) had *not yet started* the segment it
+//! will run on resume. Restoring therefore re-executes nothing — the
+//! engine pins `tasks_reexecuted == 0` for checkpointed retries, while a
+//! from-the-root retry re-runs everything the failed attempt finished.
+
+use crate::coordinator::TenantCheckpoint;
+use crate::ir::types::Value;
+
+/// Cross-round progress for one pending job, carried across retries.
+///
+/// `Default` is a fresh, never-attempted job; the engine mutates this in
+/// place on each failed attempt.
+#[derive(Clone, Debug, Default)]
+pub struct JobProgress {
+    /// Completed (admitted) attempts so far; 0 until the first round that
+    /// runs the job.
+    pub attempt: u32,
+    /// Earliest virtual service cycle at which the job may be re-admitted
+    /// (exponential backoff gate). 0 = immediately eligible.
+    pub not_before: u64,
+    /// Lineage snapshot from the last failed attempt, when checkpointing
+    /// is on and the eviction captured one. `None` retries from the root.
+    pub checkpoint: Option<TenantCheckpoint>,
+    /// Tasks the failed attempts had finished — the denominator for the
+    /// re-execution accounting (`tasks_reexecuted`).
+    pub tasks_finished: u64,
+    /// Root result observed on a failed attempt (the root can finish and
+    /// publish before a co-resident failure drains the round); carried so
+    /// the final outcome still reports it.
+    pub carried_root_result: Option<Value>,
+}
+
+impl JobProgress {
+    /// True once at least one admitted attempt has failed (i.e. the job is
+    /// a retry, not a first submission).
+    pub fn is_retry(&self) -> bool {
+        self.attempt > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_fresh() {
+        let p = JobProgress::default();
+        assert_eq!(p.attempt, 0);
+        assert_eq!(p.not_before, 0);
+        assert!(p.checkpoint.is_none());
+        assert!(!p.is_retry());
+    }
+}

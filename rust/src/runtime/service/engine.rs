@@ -25,17 +25,19 @@
 //!   per-tenant throughout.
 
 use crate::bail;
-use crate::coordinator::{GtapConfig, RunStats, Scheduler, TenantStats};
+use crate::coordinator::{EvictCause, GtapConfig, RunStats, Scheduler, TenantStats};
 use crate::ir::bytecode::Module;
 use crate::ir::types::Value;
 use crate::sim::profile::Profiler;
 use crate::sim::{DeviceSpec, Memory};
-use crate::util::error::{Context, Result};
+use crate::util::error::{Context, Error, ErrorKind, Result};
 use crate::util::stats::fmt_count;
 
-use super::admission::{AdmissionPolicy, JobView};
+use super::admission::{self, AdmissionPolicy, JobView};
 use super::cache::ModuleCache;
 use super::cancel::CancelToken;
+use super::checkpoint::JobProgress;
+use super::resilience::{JobError, ResilienceConfig, SubmitResult, TenantResilience};
 use super::tenant::{Tenant, TenantAccounting, TenantId};
 
 /// Handle for a submitted job, unique per engine.
@@ -66,6 +68,10 @@ pub enum JobStatus {
     Evicted,
     /// Cancelled while still pending; never touched the device.
     Cancelled,
+    /// Terminal typed failure under the resilience policy: retries
+    /// exhausted, the tenant quarantined, or shed by overload control.
+    /// The payload is mirrored in [`JobOutcome::error`].
+    Failed(JobError),
 }
 
 /// The terminal record of one job.
@@ -88,6 +94,14 @@ pub struct JobOutcome {
     /// the single-tenant transparency pin compares this to
     /// `Session::run`).
     pub fleet: RunStats,
+    /// Typed failure taxonomy: `Some` for every `Evicted`/`Failed`
+    /// resolution — including plain evictions with resilience off, where
+    /// the typed cause is purely additive over the PR-8 outcome shape.
+    pub error: Option<JobError>,
+    /// Admitted attempts this job consumed (1 when never retried; 0 when
+    /// resolved without ever reaching the device — cancelled, shed, or
+    /// quarantined while pending).
+    pub attempts: u32,
 }
 
 /// A queued root-task submission.
@@ -100,6 +114,8 @@ struct Job {
     deadline: Option<u64>,
     cancel: Option<CancelToken>,
     seq: u64,
+    /// Cross-round retry/backoff/checkpoint state (default = fresh job).
+    progress: JobProgress,
 }
 
 /// The long-lived multi-tenant engine.
@@ -113,8 +129,22 @@ pub struct ServiceEngine {
     outcomes: Vec<JobOutcome>,
     next_job: u64,
     rounds: u64,
-    /// Virtual service clock: the sum of round makespans (device cycles).
+    /// Virtual service clock: the sum of round makespans (device cycles),
+    /// plus idle advances to the next backoff gate when every pending job
+    /// is backing off.
     clock: u64,
+    /// Resilience policy; the default is everything off, which keeps the
+    /// engine byte-identical to its pre-resilience behavior.
+    resil: ResilienceConfig,
+    /// Fault-plane deadline doublings applied to retry rounds. The
+    /// per-round `FaultState` is rebuilt from the config, so without
+    /// escalation every retry of a drained round would drain at the
+    /// identical cycle and never finish.
+    fault_deadline_shift: u32,
+    /// Submissions refused with [`SubmitResult::Backpressure`].
+    backpressure_events: u64,
+    /// Fast path: skip the quarantine sweep until a breaker ever opens.
+    any_quarantined: bool,
 }
 
 impl ServiceEngine {
@@ -131,7 +161,33 @@ impl ServiceEngine {
             next_job: 0,
             rounds: 0,
             clock: 0,
+            resil: ResilienceConfig::default(),
+            fault_deadline_shift: 0,
+            backpressure_events: 0,
+            any_quarantined: false,
         })
+    }
+
+    /// Arm the resilience policy (retry/backoff, quarantine, overload
+    /// shedding, checkpointed retries). Call before serving rounds; the
+    /// default config keeps every path below inert.
+    pub fn set_resilience(&mut self, resil: ResilienceConfig) {
+        self.resil = resil;
+    }
+
+    /// The armed resilience policy.
+    pub fn resilience(&self) -> &ResilienceConfig {
+        &self.resil
+    }
+
+    /// A tenant's retry-budget / circuit-breaker state.
+    pub fn tenant_resilience(&self, tenant: TenantId) -> &TenantResilience {
+        &self.tenants[tenant as usize].resil
+    }
+
+    /// Submissions refused with [`SubmitResult::Backpressure`] so far.
+    pub fn backpressure_events(&self) -> u64 {
+        self.backpressure_events
     }
 
     /// Open a session: compile + lower `source` (served from the cache if
@@ -150,13 +206,17 @@ impl ServiceEngine {
             lowered,
             memory,
             acct: TenantAccounting::default(),
+            resil: TenantResilience::default(),
         });
         Ok(id)
     }
 
     /// Queue a root-task job for `tenant`. Entry name and arity are
     /// validated eagerly so a bad submission fails at the API edge, not
-    /// rounds later on the device.
+    /// rounds later on the device. Under overload admission control a
+    /// refused submission is an [`ErrorKind::Overload`] error; callers
+    /// that want to distinguish backpressure from hard errors use
+    /// [`try_submit`](Self::try_submit).
     pub fn submit(
         &mut self,
         tenant: TenantId,
@@ -164,10 +224,45 @@ impl ServiceEngine {
         args: &[Value],
         opts: SubmitOpts,
     ) -> Result<JobId> {
+        match self.try_submit(tenant, entry, args, opts)? {
+            SubmitResult::Admitted(id) => Ok(id),
+            SubmitResult::Backpressure { pending, watermark } => Err(Error::typed(
+                ErrorKind::Overload,
+                format!(
+                    "submission refused: {pending} job(s) pending at watermark {watermark} \
+                     and the new job is not urgent enough to shed one"
+                ),
+            )),
+        }
+    }
+
+    /// Queue a root-task job, subject to overload admission control.
+    ///
+    /// With a `shed_watermark` armed and the pending queue at (or past)
+    /// the watermark, the engine either sheds the least-urgent pending
+    /// job — only when it is *strictly* less urgent than the newcomer,
+    /// resolving it as [`JobStatus::Failed`]`(`[`JobError::Shed`]`)` —
+    /// or refuses the newcomer with [`SubmitResult::Backpressure`]
+    /// (equal urgency keeps FIFO order: the queue is never churned by a
+    /// peer). Quarantined tenants are refused outright with an
+    /// [`ErrorKind::Quarantined`] error.
+    pub fn try_submit(
+        &mut self,
+        tenant: TenantId,
+        entry: &str,
+        args: &[Value],
+        opts: SubmitOpts,
+    ) -> Result<SubmitResult> {
         let t = self
             .tenants
-            .get_mut(tenant as usize)
+            .get(tenant as usize)
             .with_context(|| format!("no open session {tenant}"))?;
+        if t.resil.quarantined {
+            return Err(Error::typed(
+                ErrorKind::Quarantined,
+                format!("session {tenant} ({}) is quarantined", t.name),
+            ));
+        }
         let module = &t.lowered.module;
         let fid = module
             .func_id(entry)
@@ -180,9 +275,51 @@ impl ServiceEngine {
                 args.len()
             );
         }
+        if let Some(watermark) = self.resil.shed_watermark {
+            if self.pending.len() >= watermark {
+                let views: Vec<JobView> = self
+                    .pending
+                    .iter()
+                    .map(|j| JobView {
+                        tenant: j.tenant,
+                        priority: j.priority,
+                        seq: j.seq,
+                    })
+                    .collect();
+                let victim = admission::shed_pick(&views)
+                    .filter(|&i| (views[i].priority, views[i].seq) > (opts.priority, self.next_job));
+                match victim {
+                    Some(i) => {
+                        let shed = self.pending.remove(i);
+                        let acct = &mut self.tenants[shed.tenant as usize].acct;
+                        acct.jobs_failed += 1;
+                        acct.jobs_shed += 1;
+                        self.outcomes.push(JobOutcome {
+                            job: shed.id,
+                            tenant: shed.tenant,
+                            status: JobStatus::Failed(JobError::Shed),
+                            started_at: self.clock,
+                            finished_at: self.clock,
+                            result: None,
+                            stats: TenantStats::default(),
+                            fleet: RunStats::default(),
+                            error: Some(JobError::Shed),
+                            attempts: shed.progress.attempt,
+                        });
+                    }
+                    None => {
+                        self.backpressure_events += 1;
+                        return Ok(SubmitResult::Backpressure {
+                            pending: self.pending.len(),
+                            watermark,
+                        });
+                    }
+                }
+            }
+        }
         let id = self.next_job;
         self.next_job += 1;
-        t.acct.jobs_submitted += 1;
+        self.tenants[tenant as usize].acct.jobs_submitted += 1;
         self.pending.push(Job {
             id,
             tenant,
@@ -192,8 +329,9 @@ impl ServiceEngine {
             deadline: opts.deadline,
             cancel: opts.cancel,
             seq: id,
+            progress: JobProgress::default(),
         });
-        Ok(id)
+        Ok(SubmitResult::Admitted(id))
     }
 
     /// Remove pending jobs whose cancel token fired, recording Cancelled
@@ -218,6 +356,8 @@ impl ServiceEngine {
                     result: None,
                     stats: TenantStats::default(),
                     fleet: RunStats::default(),
+                    error: None,
+                    attempts: job.progress.attempt,
                 });
             } else {
                 kept.push(job);
@@ -226,16 +366,70 @@ impl ServiceEngine {
         self.pending = kept;
     }
 
-    /// Serve one round: sweep cancellations, admit ≤ 1 job per tenant,
-    /// co-schedule the admitted jobs over the fleet, account each tenant
-    /// its slice. Returns whether a round actually ran.
+    /// Resolve pending jobs of quarantined tenants as typed failures.
+    /// Runs at every round boundary; a no-op until a breaker opens.
+    fn sweep_quarantined(&mut self) {
+        if !self.any_quarantined {
+            return;
+        }
+        let clock = self.clock;
+        let mut kept: Vec<Job> = Vec::with_capacity(self.pending.len());
+        for job in self.pending.drain(..) {
+            if self.tenants[job.tenant as usize].resil.quarantined {
+                self.tenants[job.tenant as usize].acct.jobs_failed += 1;
+                self.outcomes.push(JobOutcome {
+                    job: job.id,
+                    tenant: job.tenant,
+                    status: JobStatus::Failed(JobError::Quarantined),
+                    started_at: clock,
+                    finished_at: clock,
+                    result: None,
+                    stats: TenantStats::default(),
+                    fleet: RunStats::default(),
+                    error: Some(JobError::Quarantined),
+                    attempts: job.progress.attempt,
+                });
+            } else {
+                kept.push(job);
+            }
+        }
+        self.pending = kept;
+    }
+
+    /// Serve one round: sweep cancellations and quarantined pendings,
+    /// gate retries on their backoff, admit ≤ 1 eligible job per tenant,
+    /// co-schedule the admitted jobs over the fleet (restoring checkpoint
+    /// lineages for checkpointed retries), account each tenant its slice,
+    /// and resolve every slot — completed, retried with backoff,
+    /// quarantined, or failed typed. Returns whether a round actually ran.
     pub fn run_round(&mut self) -> Result<bool> {
         self.sweep_cancellations();
+        self.sweep_quarantined();
         if self.pending.is_empty() {
             return Ok(false);
         }
-        let views: Vec<JobView> = self
+        let retry_on = self.resil.retry;
+        if retry_on && self.pending.iter().all(|j| j.progress.not_before > self.clock) {
+            // Every pending job is backing off: idle-advance the virtual
+            // clock to the earliest re-admission gate. Deterministic — no
+            // device work is skipped, there is none to do.
+            let next = self
+                .pending
+                .iter()
+                .map(|j| j.progress.not_before)
+                .min()
+                .expect("non-empty");
+            self.clock = next;
+        }
+        // Backoff gate: only eligible jobs face admission this round.
+        // With retry off every job has `not_before == 0` and this is the
+        // identity (pre-resilience byte-identity).
+        let clock = self.clock;
+        let (eligible, waiting): (Vec<Job>, Vec<Job>) = self
             .pending
+            .drain(..)
+            .partition(|j| j.progress.not_before <= clock);
+        let views: Vec<JobView> = eligible
             .iter()
             .map(|j| JobView {
                 tenant: j.tenant,
@@ -247,13 +441,29 @@ impl ServiceEngine {
         let picked_idx = self.admission.select(&views, &served);
         debug_assert!(!picked_idx.is_empty(), "non-empty pending must admit");
         // Extract the admitted jobs in slot order, keeping the rest
-        // pending in submission order.
-        let mut taken: Vec<Option<Job>> = self.pending.drain(..).map(Some).collect();
+        // pending in submission order (backoff waiters after, preserving
+        // their relative order; `seq` keeps admission age-faithful).
+        let mut taken: Vec<Option<Job>> = eligible.into_iter().map(Some).collect();
         let jobs: Vec<Job> = picked_idx
             .iter()
             .map(|&i| taken[i].take().expect("admission picks are distinct"))
             .collect();
-        self.pending = taken.into_iter().flatten().collect();
+        self.pending = taken.into_iter().flatten().chain(waiting).collect();
+
+        // Per-round config: retry rounds after a fault-plane drain double
+        // the plan's deadline per drained round. The per-round
+        // `FaultState` is rebuilt from this config, so without escalation
+        // every retry would redeliver the identical drain at the identical
+        // cycle and no slice would ever finish. Per-*tenant* deadlines are
+        // deliberately NOT escalated: a fixed slice plus checkpointing is
+        // the progress mechanism.
+        let mut round_cfg = self.cfg.clone();
+        if retry_on && self.fault_deadline_shift > 0 {
+            if let Some(dl) = round_cfg.faults.deadline {
+                let shift = self.fault_deadline_shift.min(24);
+                round_cfg.faults.deadline = Some(dl.max(1).saturating_mul(1u64 << shift));
+            }
+        }
 
         // One scheduler over the shared fleet; slot i runs jobs[i]'s
         // tenant. The bundles are borrowed from the tenants' shared Arcs —
@@ -263,9 +473,21 @@ impl ServiceEngine {
             .map(|j| self.tenants[j.tenant as usize].lowered.clone())
             .collect();
         let refs: Vec<&_> = arcs.iter().map(|a| &**a).collect();
-        let mut sched = Scheduler::multi(&refs, &self.cfg, &self.dev)?;
+        let mut sched = Scheduler::multi(&refs, &round_cfg, &self.dev)?;
+        if retry_on {
+            // An unrecoverable watchdog trip becomes per-tenant typed
+            // evictions (retryable) instead of a fatal run error.
+            sched.evict_on_watchdog_trip();
+            if self.resil.checkpoint {
+                sched.enable_checkpoints();
+            }
+        }
         for (slot, job) in jobs.iter().enumerate() {
-            sched.spawn_root_for(slot as u16, &job.entry, &job.args, job.priority)?;
+            if let Some(ck) = job.progress.checkpoint.as_ref() {
+                sched.restore_tenant(slot as u16, ck)?;
+            } else {
+                sched.spawn_root_for(slot as u16, &job.entry, &job.args, job.priority)?;
+            }
             if let Some(dl) = job.deadline {
                 sched.set_tenant_deadline(slot as u16, dl);
             }
@@ -291,35 +513,164 @@ impl ServiceEngine {
             })
             .collect();
         let mut prof = Profiler::disabled();
-        let fleet = sched.run_multi(&mut mems, None, &mut prof)?;
-        let tstats = sched.take_tenant_stats();
+        let run = sched.run_multi(&mut mems, None, &mut prof);
         drop(mems);
+        let (fleet, tstats, mut ckpts) = match run {
+            Ok(fleet) => {
+                let tstats = sched.take_tenant_stats();
+                let ckpts = if retry_on && self.resil.checkpoint {
+                    sched.take_checkpoints()
+                } else {
+                    vec![None; jobs.len()]
+                };
+                (fleet, tstats, ckpts)
+            }
+            Err(e) => {
+                if !retry_on {
+                    return Err(e);
+                }
+                // The scheduler invocation itself failed (pool/queue
+                // exhaustion): attribute a typed RoundFailed eviction to
+                // every slot — no progress, no checkpoints, retryable.
+                let mut ts = vec![TenantStats::default(); jobs.len()];
+                for t in &mut ts {
+                    t.evicted = true;
+                }
+                (RunStats::default(), ts, vec![None; jobs.len()])
+            }
+        };
         drop(sched);
+        if retry_on
+            && tstats
+                .iter()
+                .any(|t| t.evict_cause == Some(EvictCause::Drain))
+        {
+            self.fault_deadline_shift += 1;
+        }
 
         let started = self.clock;
-        for (slot, job) in jobs.iter().enumerate() {
+        let clock_after = started.saturating_add(fleet.cycles);
+        for (slot, mut job) in jobs.into_iter().enumerate() {
             let ts = tstats[slot].clone();
-            let acct = &mut self.tenants[job.tenant as usize].acct;
-            acct.absorb(&ts);
-            let status = if ts.evicted {
-                acct.jobs_evicted += 1;
-                JobStatus::Evicted
+            let tenant = job.tenant as usize;
+            self.tenants[tenant].acct.absorb(&ts);
+            job.progress.attempt += 1;
+            let in_round_end = started + ts.completed_at.unwrap_or(fleet.cycles);
+            if !ts.evicted {
+                self.tenants[tenant].acct.jobs_completed += 1;
+                self.tenants[tenant].resil.consecutive_failures = 0;
+                // The root can have finished (and published) on an earlier
+                // attempt whose round was later drained — the carried
+                // result still stands.
+                let result = ts.root_result.or(job.progress.carried_root_result);
+                self.outcomes.push(JobOutcome {
+                    job: job.id,
+                    tenant: job.tenant,
+                    status: JobStatus::Completed,
+                    started_at: started,
+                    finished_at: in_round_end,
+                    result,
+                    stats: ts,
+                    fleet: fleet.clone(),
+                    error: None,
+                    attempts: job.progress.attempt,
+                });
+                continue;
+            }
+            let err = JobError::from_evict(ts.evict_cause);
+            let cancelled = job.cancel.as_ref().map(|c| c.is_cancelled()).unwrap_or(false);
+            if !retry_on || cancelled {
+                // Pre-resilience semantics (and cancellation is always
+                // terminal): an Evicted outcome, now with the typed cause
+                // attached — purely additive over the PR-8 shape.
+                self.tenants[tenant].acct.jobs_evicted += 1;
+                self.outcomes.push(JobOutcome {
+                    job: job.id,
+                    tenant: job.tenant,
+                    status: JobStatus::Evicted,
+                    started_at: started,
+                    finished_at: in_round_end,
+                    result: None,
+                    stats: ts,
+                    fleet: fleet.clone(),
+                    error: Some(err),
+                    attempts: job.progress.attempt,
+                });
+                continue;
+            }
+            // Circuit breaker: a zero-progress eviction in a round whose
+            // fault plan was inert is the job's own doing — chaos cannot
+            // be blamed. Consecutive deterministic failures open the
+            // breaker; any success or transient failure resets it.
+            let deterministic = !round_cfg.faults.is_active() && ts.tasks_finished == 0;
+            if deterministic {
+                self.tenants[tenant].resil.consecutive_failures += 1;
             } else {
-                acct.jobs_completed += 1;
-                JobStatus::Completed
+                self.tenants[tenant].resil.consecutive_failures = 0;
+            }
+            if deterministic
+                && self.tenants[tenant].resil.consecutive_failures >= self.resil.quarantine_after
+            {
+                let tr = &mut self.tenants[tenant].resil;
+                tr.quarantined = true;
+                tr.quarantined_at = Some(clock_after);
+                self.any_quarantined = true;
+                self.tenants[tenant].acct.jobs_failed += 1;
+                self.outcomes.push(JobOutcome {
+                    job: job.id,
+                    tenant: job.tenant,
+                    status: JobStatus::Failed(err),
+                    started_at: started,
+                    finished_at: in_round_end,
+                    result: None,
+                    stats: ts,
+                    fleet: fleet.clone(),
+                    error: Some(err),
+                    attempts: job.progress.attempt,
+                });
+                continue;
+            }
+            let budget_ok = job.progress.attempt <= self.resil.max_retries
+                && self.tenants[tenant].resil.retries_used < self.resil.retry_budget;
+            if !budget_ok {
+                self.tenants[tenant].acct.jobs_failed += 1;
+                self.outcomes.push(JobOutcome {
+                    job: job.id,
+                    tenant: job.tenant,
+                    status: JobStatus::Failed(err),
+                    started_at: started,
+                    finished_at: in_round_end,
+                    result: None,
+                    stats: ts,
+                    fleet: fleet.clone(),
+                    error: Some(err),
+                    attempts: job.progress.attempt,
+                });
+                continue;
+            }
+            // Re-admit after exponential backoff, resuming from the
+            // captured checkpoint when there is one (restored frontiers
+            // re-execute nothing); otherwise the attempt's finished work
+            // is redone from the root and accounted as re-execution.
+            self.tenants[tenant].resil.retries_used += 1;
+            self.tenants[tenant].acct.jobs_retried += 1;
+            job.progress.not_before =
+                clock_after.saturating_add(self.resil.backoff(job.progress.attempt));
+            if ts.root_result.is_some() {
+                job.progress.carried_root_result = ts.root_result;
+            }
+            job.progress.tasks_finished += ts.tasks_finished;
+            job.progress.checkpoint = if self.resil.checkpoint {
+                ckpts[slot].take()
+            } else {
+                None
             };
-            self.outcomes.push(JobOutcome {
-                job: job.id,
-                tenant: job.tenant,
-                status,
-                started_at: started,
-                finished_at: started + ts.completed_at.unwrap_or(fleet.cycles),
-                result: ts.root_result,
-                stats: ts,
-                fleet: fleet.clone(),
-            });
+            if job.progress.checkpoint.is_none() {
+                self.tenants[tenant].acct.tasks_reexecuted += ts.tasks_finished;
+            }
+            self.pending.push(job);
         }
-        self.clock += fleet.cycles;
+        self.clock = clock_after;
         self.rounds += 1;
         Ok(true)
     }
@@ -327,9 +678,10 @@ impl ServiceEngine {
     /// Serve rounds until no jobs are pending.
     pub fn run_to_idle(&mut self) -> Result<()> {
         while self.run_round()? {}
-        // a final sweep so jobs cancelled after the last round still
-        // resolve
+        // a final sweep so jobs cancelled (or tenants quarantined) after
+        // the last round still resolve
         self.sweep_cancellations();
+        self.sweep_quarantined();
         Ok(())
     }
 
@@ -416,6 +768,7 @@ impl ServiceEngine {
             fmt_count(self.clock),
             self.admission.name(),
         ));
+        let resilient = self.resil.retry || self.resil.shed_watermark.is_some();
         for t in &self.tenants {
             let a = &t.acct;
             out.push_str(&format!(
@@ -430,6 +783,26 @@ impl ServiceEngine {
                 fmt_count(a.tasks_finished),
                 fmt_count(a.spawns),
                 fmt_count(a.segments),
+            ));
+            if resilient {
+                out.push_str(&format!(
+                    "       resilience: retried {}  failed {}  shed {}  reexecuted {}{}\n",
+                    a.jobs_retried,
+                    a.jobs_failed,
+                    a.jobs_shed,
+                    fmt_count(a.tasks_reexecuted),
+                    if t.resil.quarantined {
+                        "  QUARANTINED"
+                    } else {
+                        ""
+                    },
+                ));
+            }
+        }
+        if resilient {
+            out.push_str(&format!(
+                "  backpressure events: {}\n",
+                self.backpressure_events
             ));
         }
         out

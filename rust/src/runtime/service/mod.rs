@@ -21,21 +21,36 @@
 //!   per-tenant deadlines fired through the scheduler's scoped-drain
 //!   eviction, per-tenant `TenantStats` accounting, and a virtual
 //!   service clock summing round makespans.
+//! * [`resilience`] — service-level survival policy on top of the fault
+//!   plane: typed [`JobError`]s, retry with exponential backoff, tenant
+//!   quarantine (circuit breaker), and overload admission control
+//!   ([`SubmitResult::Backpressure`] / shedding).
+//! * [`checkpoint`] — per-job cross-round progress ([`JobProgress`]):
+//!   carries the coordinator's `TenantCheckpoint` lineage snapshots and
+//!   the backoff gate between rounds, so retries resume instead of
+//!   restarting.
 //!
 //! `rust/tests/service.rs` pins the contracts: warm submissions do no
 //! lowering, a single-tenant engine is byte-identical to one-shot
 //! `Session::run`, identical submission schedules replay to identical
 //! outcomes, and evicting one tenant leaves co-tenants' results pinned
-//! to their solo baselines.
+//! to their solo baselines. `rust/tests/resilience.rs` pins the
+//! resilience layer: retried mixes terminate byte-identical to
+//! fault-free baselines, quarantine never perturbs co-tenants, and
+//! checkpointed retries re-execute nothing.
 
 pub mod admission;
 pub mod cache;
 pub mod cancel;
+pub mod checkpoint;
 pub mod engine;
+pub mod resilience;
 pub mod tenant;
 
 pub use admission::{AdmissionPolicy, JobView};
 pub use cache::ModuleCache;
 pub use cancel::CancelToken;
+pub use checkpoint::JobProgress;
 pub use engine::{JobId, JobOutcome, JobStatus, ServiceEngine, SubmitOpts};
+pub use resilience::{JobError, ResilienceConfig, SubmitResult, TenantResilience};
 pub use tenant::{Tenant, TenantAccounting, TenantId};

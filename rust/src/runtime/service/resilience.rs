@@ -1,0 +1,218 @@
+//! Service-level resilience policy: retry with backoff, tenant
+//! quarantine, and overload admission control.
+//!
+//! The scheduler's fault plane (PR 6) makes *rounds* survivable: seeded
+//! stalls, kills, steal storms and drops recover in-run, and deadline
+//! overruns drain deterministically. This module is the layer above — what
+//! the [`ServiceEngine`](super::engine::ServiceEngine) does when a round
+//! still ends with a tenant's job lost:
+//!
+//! * **Typed job errors.** Every failed outcome carries a [`JobError`]
+//!   derived from the scheduler's typed
+//!   [`EvictCause`](crate::coordinator::EvictCause) — no more silent
+//!   `Evicted` outcomes whose cause is implicit in run state.
+//! * **Retry with exponential backoff.** With `retry` on, a retryable
+//!   failure re-queues the job gated on the *virtual* service clock at
+//!   `backoff_base << (attempt-1)` cycles — deterministic, replayable,
+//!   budgeted per job (`max_retries`) and per tenant (`retry_budget`).
+//! * **Quarantine / circuit breaker.** Failures are classified by the
+//!   fault-plan seed: a failure in a round whose fault plan was active is
+//!   *transient* (chaos did it); a zero-progress failure in a fault-free
+//!   round is *deterministic* (the job itself is poisoned). After
+//!   `quarantine_after` consecutive deterministic failures the tenant is
+//!   quarantined: pending jobs resolve as [`JobError::Quarantined`], new
+//!   submissions are rejected
+//!   ([`ErrorKind::Quarantined`](crate::util::error::ErrorKind)), and
+//!   co-tenants' rounds stay byte-identical to solo baselines (the
+//!   quarantined tenant simply stops being admitted).
+//! * **Overload shedding.** An armed `shed_watermark` bounds the pending
+//!   queue: at the watermark a new submission either sheds the
+//!   least-urgent pending job (strictly less urgent than the newcomer —
+//!   [`JobError::Shed`]) or is refused with
+//!   [`SubmitResult::Backpressure`].
+//!
+//! Checkpointing (`checkpoint`, on by default when retrying) rides the
+//! coordinator's [`TenantCheckpoint`](crate::coordinator::TenantCheckpoint)
+//! capture: see `runtime/service/checkpoint.rs` for the per-job progress
+//! record.
+
+use crate::coordinator::EvictCause;
+
+use super::engine::JobId;
+
+/// Resilience policy knobs, all deterministic. The default is everything
+/// off — a `ResilienceConfig::default()` engine is byte-identical to the
+/// pre-resilience engine on every schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResilienceConfig {
+    /// Master switch for retry/quarantine/checkpoint handling of failed
+    /// rounds. Off: failed jobs resolve exactly as before (now with a
+    /// typed `error`, which is additive).
+    pub retry: bool,
+    /// Maximum re-admissions per job (total attempts = `max_retries + 1`).
+    pub max_retries: u32,
+    /// Backoff before attempt `k+1` is `backoff_base << min(k-1, 20)`
+    /// virtual cycles (saturating), gating re-admission on the service
+    /// clock.
+    pub backoff_base: u64,
+    /// Total retries a tenant may consume across all its jobs.
+    pub retry_budget: u32,
+    /// Consecutive *deterministic* (fault-free, zero-progress) failures
+    /// before the tenant is quarantined.
+    pub quarantine_after: u32,
+    /// Pending-queue depth watermark for overload shedding; `None`
+    /// disables admission control entirely.
+    pub shed_watermark: Option<usize>,
+    /// Capture a [`TenantCheckpoint`](crate::coordinator::TenantCheckpoint)
+    /// when a retryable job is evicted and resume the retry from it
+    /// instead of the root (only meaningful with `retry` on).
+    pub checkpoint: bool,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig {
+            retry: false,
+            max_retries: 8,
+            backoff_base: 1 << 12,
+            retry_budget: 64,
+            quarantine_after: 3,
+            shed_watermark: None,
+            checkpoint: true,
+        }
+    }
+}
+
+impl ResilienceConfig {
+    /// Backoff for the retry after `attempts` completed attempts (≥ 1).
+    pub fn backoff(&self, attempts: u32) -> u64 {
+        let shift = attempts.saturating_sub(1).min(20);
+        self.backoff_base.saturating_mul(1u64 << shift)
+    }
+}
+
+/// Typed taxonomy of job failures — the service-level face of the
+/// scheduler's fault plane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobError {
+    /// The job's per-tenant deadline fired (scoped eviction); co-tenants
+    /// kept running.
+    DeadlineEvicted,
+    /// The whole round drained (fault-plane `deadline@C` overrun) with
+    /// this job's work still live.
+    RunDrained,
+    /// The watchdog found the round deadlocked with this job's tasks live
+    /// and nothing recoverable (unrecovered worker loss).
+    WatchdogTrip,
+    /// The round's scheduler invocation itself failed (pool exhaustion,
+    /// queue overflow) — attributed to every job in the round.
+    RoundFailed,
+    /// The owning tenant was quarantined while this job was pending or
+    /// after its final attempt.
+    Quarantined,
+    /// Shed by overload admission control to make room for a more urgent
+    /// submission.
+    Shed,
+}
+
+impl JobError {
+    /// Stable lowercase name (CLI report, logs).
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobError::DeadlineEvicted => "deadline-evicted",
+            JobError::RunDrained => "run-drained",
+            JobError::WatchdogTrip => "watchdog-trip",
+            JobError::RoundFailed => "round-failed",
+            JobError::Quarantined => "quarantined",
+            JobError::Shed => "shed",
+        }
+    }
+
+    /// Map the scheduler's typed eviction cause to the job-level error.
+    pub fn from_evict(cause: Option<EvictCause>) -> JobError {
+        match cause {
+            Some(EvictCause::Deadline) => JobError::DeadlineEvicted,
+            Some(EvictCause::Drain) => JobError::RunDrained,
+            Some(EvictCause::Watchdog) => JobError::WatchdogTrip,
+            None => JobError::RoundFailed,
+        }
+    }
+}
+
+/// What `try_submit` returns under overload admission control.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitResult {
+    /// The job was queued.
+    Admitted(JobId),
+    /// The pending queue is at the watermark and the submission was not
+    /// urgent enough to shed a pending job. Nothing was queued; retry
+    /// after rounds drain the queue.
+    Backpressure {
+        /// Pending-queue depth at rejection time.
+        pending: usize,
+        /// The armed watermark.
+        watermark: usize,
+    },
+}
+
+/// Per-tenant resilience state, accumulated across rounds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantResilience {
+    /// Retries consumed against `retry_budget`.
+    pub retries_used: u32,
+    /// Consecutive deterministic (fault-free, zero-progress) failures —
+    /// the circuit-breaker counter, reset by any success.
+    pub consecutive_failures: u32,
+    /// The breaker is open: no further admissions for this tenant.
+    pub quarantined: bool,
+    /// Virtual service cycle at which the breaker opened.
+    pub quarantined_at: Option<u64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_inert() {
+        let rc = ResilienceConfig::default();
+        assert!(!rc.retry);
+        assert!(rc.shed_watermark.is_none());
+        assert!(rc.checkpoint, "checkpointing defaults on once retry is on");
+    }
+
+    #[test]
+    fn backoff_doubles_and_saturates() {
+        let rc = ResilienceConfig {
+            backoff_base: 8,
+            ..Default::default()
+        };
+        assert_eq!(rc.backoff(1), 8);
+        assert_eq!(rc.backoff(2), 16);
+        assert_eq!(rc.backoff(5), 128);
+        assert_eq!(rc.backoff(10_000), 8 << 20, "shift capped");
+        let big = ResilienceConfig {
+            backoff_base: u64::MAX / 2,
+            ..Default::default()
+        };
+        assert_eq!(big.backoff(10), u64::MAX, "saturating, no overflow");
+    }
+
+    #[test]
+    fn evict_causes_map_to_typed_errors() {
+        assert_eq!(
+            JobError::from_evict(Some(EvictCause::Deadline)),
+            JobError::DeadlineEvicted
+        );
+        assert_eq!(
+            JobError::from_evict(Some(EvictCause::Drain)),
+            JobError::RunDrained
+        );
+        assert_eq!(
+            JobError::from_evict(Some(EvictCause::Watchdog)),
+            JobError::WatchdogTrip
+        );
+        assert_eq!(JobError::from_evict(None), JobError::RoundFailed);
+        assert_eq!(JobError::Shed.name(), "shed");
+    }
+}

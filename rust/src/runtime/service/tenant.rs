@@ -13,6 +13,8 @@ use crate::ir::lowered::LoweredModule;
 use crate::sim::memsys::MemSysStats;
 use crate::sim::Memory;
 
+use super::resilience::TenantResilience;
+
 /// Tenant handle: the scheduler-slot type, so a tenant id can be used as
 /// a `spawn_root_for` slot directly.
 pub type TenantId = u16;
@@ -27,6 +29,20 @@ pub struct TenantAccounting {
     pub jobs_evicted: u64,
     /// Jobs cancelled while still pending (never admitted).
     pub jobs_cancelled: u64,
+    /// Jobs that ended with a terminal typed failure (retries exhausted,
+    /// quarantine, or shed) — disjoint from `jobs_evicted`, which stays
+    /// the retry-off / cancellation eviction count.
+    pub jobs_failed: u64,
+    /// Jobs dropped by overload shedding to admit a more urgent one
+    /// (also counted in `jobs_failed`).
+    pub jobs_shed: u64,
+    /// Re-admissions consumed by this tenant's jobs (a job retried twice
+    /// counts twice).
+    pub jobs_retried: u64,
+    /// Finished tasks whose work was thrown away by a from-the-root retry
+    /// (a checkpointed retry resumes the lineage and re-executes none —
+    /// the checkpoint-vs-no-checkpoint pin in `tests/resilience.rs`).
+    pub tasks_reexecuted: u64,
     /// Rounds in which this tenant had a job admitted (the fair-share
     /// "served" count the admission policy orders by).
     pub rounds_admitted: u64,
@@ -67,4 +83,7 @@ pub struct Tenant {
     /// persistent across its jobs.
     pub memory: Memory,
     pub acct: TenantAccounting,
+    /// Retry-budget / circuit-breaker state (all zeros until the engine's
+    /// resilience policy is armed).
+    pub resil: TenantResilience,
 }

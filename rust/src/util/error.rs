@@ -23,6 +23,13 @@ pub enum ErrorKind {
     JoinCounter,
     /// User-reachable parse failure (CLI flag, environment variable).
     Parse,
+    /// Submission rejected by overload admission control (queue-depth
+    /// watermark hit and the new job was not urgent enough to shed a
+    /// pending one) — retry after draining, it is not a program error.
+    Overload,
+    /// Submission rejected because the tenant is quarantined (its jobs
+    /// failed deterministically `quarantine_after` times in a row).
+    Quarantined,
 }
 
 /// An opaque error: a message plus outer context layers (outermost first,

@@ -1,0 +1,506 @@
+//! Contract suite for the service resilience layer
+//! (`runtime::service::resilience` + engine wiring): typed job errors,
+//! retry-until-success under seeded fault plans (byte-identical results to
+//! fault-free baselines), tenant quarantine with co-tenant isolation,
+//! deterministic overload backpressure/shedding, and checkpointed retries
+//! that re-execute nothing.
+
+use gtap::bench::sweep;
+use gtap::coordinator::{EvictCause, FaultPlan, GtapConfig, Session};
+use gtap::ir::types::Value;
+use gtap::runtime::service::{
+    AdmissionPolicy, CancelToken, JobError, JobOutcome, JobStatus, ResilienceConfig,
+    ServiceEngine, SubmitOpts, SubmitResult,
+};
+use gtap::sim::DeviceSpec;
+use gtap::util::error::ErrorKind;
+use gtap::workloads::fib;
+
+const FIB: &str = r#"
+    #pragma gtap function
+    int fib(int n) {
+        if (n < 2) return n;
+        int a; int b;
+        #pragma gtap task
+        a = fib(n - 1);
+        #pragma gtap task
+        b = fib(n - 2);
+        #pragma gtap taskwait
+        return a + b;
+    }
+"#;
+
+const ACCUM: &str = r#"
+    global int g_sum;
+    #pragma gtap function
+    void add(int n) { g_sum = g_sum + n; }
+"#;
+
+fn cfg() -> GtapConfig {
+    GtapConfig {
+        grid_size: 4,
+        block_size: 32,
+        ..Default::default()
+    }
+}
+
+fn cfg_with_faults(spec: &str) -> GtapConfig {
+    let mut c = cfg();
+    c.faults = FaultPlan::parse(spec).unwrap();
+    c
+}
+
+fn engine(c: GtapConfig, adm: AdmissionPolicy) -> ServiceEngine {
+    ServiceEngine::new(c, DeviceSpec::h100(), adm).unwrap()
+}
+
+/// Retry policy used by the fault-sweep tests: generous budgets, small
+/// backoff (the backoff value only moves the virtual clock).
+fn retry_config() -> ResilienceConfig {
+    ResilienceConfig {
+        retry: true,
+        max_retries: 16,
+        retry_budget: 64,
+        backoff_base: 1 << 8,
+        ..Default::default()
+    }
+}
+
+/// The three-tenant mix every fault plan is replayed against: two pure
+/// fib tenants plus a global-accumulating tenant (side effects must stay
+/// exactly-once under checkpointed retries). Returns the terminal
+/// `(job, tenant, status, result)` tuples plus the accumulator value.
+fn run_mix(c: GtapConfig, resil: ResilienceConfig) -> (Vec<(u64, u16, JobStatus, Option<Value>)>, i64) {
+    let mut eng = engine(c, AdmissionPolicy::FairShare);
+    eng.set_resilience(resil);
+    let a = eng.open_session("fib-a", FIB).unwrap();
+    let b = eng.open_session("fib-b", FIB).unwrap();
+    let s = eng.open_session("accum", ACCUM).unwrap();
+    for n in [11i64, 10, 11] {
+        eng.submit(a, "fib", &[Value::from_i64(n)], SubmitOpts::default())
+            .unwrap();
+        eng.submit(b, "fib", &[Value::from_i64(n - 2)], SubmitOpts::default())
+            .unwrap();
+        eng.submit(s, "add", &[Value::from_i64(n)], SubmitOpts::default())
+            .unwrap();
+    }
+    eng.run_to_idle().unwrap();
+    let outs = eng.take_outcomes();
+    let mut tuples: Vec<_> = outs
+        .iter()
+        .map(|o| (o.job, o.tenant, o.status, o.result))
+        .collect();
+    tuples.sort_by_key(|t| t.0);
+    let g = eng.get_global(s, "g_sum").unwrap().as_i64();
+    (tuples, g)
+}
+
+#[test]
+fn retry_under_every_fault_plan_matches_the_fault_free_baseline() {
+    let baseline = run_mix(cfg(), retry_config());
+    for (_, _, status, _) in &baseline.0 {
+        assert_eq!(*status, JobStatus::Completed);
+    }
+    assert_eq!(baseline.1, 11 + 10 + 11, "accumulator exactly-once");
+
+    // Named single-fault specs composed with a fault-plane deadline that
+    // drains live work (startup is 50k cycles, so deadline@60000 leaves a
+    // thin slice per round — the engine escalates it on every drained
+    // round until the mix finishes), plus 8 seeded rand: compositions.
+    let mut specs: Vec<String> = [
+        "deadline@60000",
+        "stall@55000:w1:4000;deadline@60000",
+        "kill@55000:w2;deadline@60000",
+        "stealfail@55000:w0:8;deadline@60000",
+        "drop@55000:w3:q0;deadline@60000",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    specs.extend((1..=8).map(|s| format!("rand:{s};deadline@60000")));
+
+    for spec in &specs {
+        let faulty = run_mix(cfg_with_faults(spec), retry_config());
+        assert_eq!(
+            faulty.0, baseline.0,
+            "outcomes diverge from the fault-free baseline under {spec:?}"
+        );
+        assert_eq!(
+            faulty.1, baseline.1,
+            "accumulator not exactly-once under {spec:?}"
+        );
+    }
+}
+
+#[test]
+fn pure_rand_plans_recover_in_run_without_retries() {
+    // Seeded rand: plans contain no deadline — the scheduler self-heals
+    // (watchdog + recovery), so jobs complete on the first attempt and
+    // the retry layer stays idle even when armed.
+    let baseline = run_mix(cfg(), retry_config());
+    for seed in [3u64, 17, 99] {
+        let faulty = run_mix(cfg_with_faults(&format!("rand:{seed}")), retry_config());
+        assert_eq!(faulty.0, baseline.0, "rand:{seed} diverged");
+        assert_eq!(faulty.1, baseline.1);
+    }
+}
+
+#[test]
+fn quarantine_opens_after_consecutive_deterministic_failures() {
+    // Solo baseline for the surviving tenant.
+    let mut sess = Session::compile(FIB, cfg(), DeviceSpec::h100()).unwrap();
+    let solo = sess.run("fib", &[Value::from_i64(12)]).unwrap();
+
+    let resil = ResilienceConfig {
+        retry: true,
+        quarantine_after: 2,
+        max_retries: 16,
+        backoff_base: 1 << 8,
+        ..Default::default()
+    };
+    let mut eng = engine(cfg(), AdmissionPolicy::FairShare);
+    eng.set_resilience(resil);
+    let keep = eng.open_session("keep", FIB).unwrap();
+    let poison = eng.open_session("poison", FIB).unwrap();
+    for _ in 0..3 {
+        eng.submit(keep, "fib", &[Value::from_i64(12)], SubmitOpts::default())
+            .unwrap();
+        // deadline below dev.startup: evicts before the first task runs,
+        // with the fault plan inert — a deterministic zero-progress
+        // failure, the circuit breaker's trigger
+        eng.submit(
+            poison,
+            "fib",
+            &[Value::from_i64(20)],
+            SubmitOpts {
+                deadline: Some(1),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    }
+    eng.run_to_idle().unwrap();
+    let outs = eng.take_outcomes();
+    assert_eq!(outs.len(), 6);
+
+    // Round 1 admits poison job #1: deterministic failure #1, retried
+    // with backoff. Round 2 admits poison job #2 (job #1 is still backing
+    // off): deterministic failure #2 opens the breaker. The remaining
+    // pending poison jobs — including the backed-off retry — are swept as
+    // Quarantined without ever reaching the device again.
+    let tr = eng.tenant_resilience(poison);
+    assert!(tr.quarantined);
+    assert!(tr.quarantined_at.is_some());
+    assert_eq!(tr.consecutive_failures, 2);
+    let pf: Vec<_> = outs.iter().filter(|o| o.tenant == poison).collect();
+    assert_eq!(pf.len(), 3);
+    let tripped: Vec<_> = pf
+        .iter()
+        .filter(|o| o.status == JobStatus::Failed(JobError::DeadlineEvicted))
+        .collect();
+    assert_eq!(tripped.len(), 1, "exactly one job trips the breaker");
+    assert_eq!(tripped[0].attempts, 1);
+    let mut swept_attempts: Vec<u32> = pf
+        .iter()
+        .filter(|o| o.status == JobStatus::Failed(JobError::Quarantined))
+        .map(|o| o.attempts)
+        .collect();
+    swept_attempts.sort_unstable();
+    // one never admitted, one the backed-off retry of the first failure
+    assert_eq!(swept_attempts, vec![0, 1]);
+    assert_eq!(eng.accounting(poison).jobs_retried, 1);
+    assert_eq!(eng.accounting(poison).jobs_failed, 3);
+
+    // new submissions for the quarantined tenant are refused, typed
+    let err = eng
+        .submit(poison, "fib", &[Value::from_i64(5)], SubmitOpts::default())
+        .unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::Quarantined);
+
+    // the co-tenant never noticed: every job pinned to the solo baseline
+    let kf: Vec<_> = outs.iter().filter(|o| o.tenant == keep).collect();
+    assert_eq!(kf.len(), 3);
+    for o in &kf {
+        assert_eq!(o.status, JobStatus::Completed);
+        assert_eq!(o.result, solo.root_result);
+        assert_eq!(o.stats.tasks_finished, solo.tasks_finished);
+        assert_eq!(o.stats.spawns, solo.spawns);
+        assert_eq!(o.stats.segments, solo.segments);
+    }
+    assert_eq!(eng.accounting(keep).jobs_completed, 3);
+}
+
+/// FNV-1a over the debug rendering — the same digest scheme the service
+/// bench uses for its replay pin.
+fn digest(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// One backpressure/shedding schedule, parameterized by seed (the seed
+/// varies submission priorities), digesting the full outcome stream plus
+/// the engine's backpressure counter.
+fn shed_schedule_digest(seed: u64) -> u64 {
+    let mut eng = engine(cfg(), AdmissionPolicy::PriorityWeighted);
+    eng.set_resilience(ResilienceConfig {
+        shed_watermark: Some(2),
+        ..Default::default()
+    });
+    let t = eng.open_session("t", FIB).unwrap();
+    let mut shed = 0u64;
+    let mut backpressured = 0u64;
+    for i in 0..6u64 {
+        // deterministic per-seed priority pattern
+        let pri = ((seed.wrapping_mul(0x9E37_79B9).wrapping_add(i * 7)) % 4) as u8;
+        let before = eng.pending_jobs();
+        match eng
+            .try_submit(
+                t,
+                "fib",
+                &[Value::from_i64(8)],
+                SubmitOpts {
+                    priority: pri,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        {
+            SubmitResult::Admitted(_) => {
+                if eng.pending_jobs() == before {
+                    shed += 1; // admitted by displacing a pending job
+                }
+            }
+            SubmitResult::Backpressure { pending, watermark } => {
+                assert_eq!(watermark, 2);
+                assert!(pending >= watermark);
+                backpressured += 1;
+            }
+        }
+        if i == 3 {
+            // drain mid-schedule so later submissions see a short queue
+            assert!(eng.run_round().unwrap());
+        }
+    }
+    eng.run_to_idle().unwrap();
+    let outs = eng.take_outcomes();
+    assert_eq!(eng.backpressure_events(), backpressured);
+    let shed_outs = outs
+        .iter()
+        .filter(|o| o.status == JobStatus::Failed(JobError::Shed))
+        .count() as u64;
+    assert_eq!(shed_outs, shed);
+    digest(&format!("{outs:?}|{backpressured}"))
+}
+
+#[test]
+fn backpressure_and_shedding_are_deterministic_across_thread_counts() {
+    // The CI job runs this test under GTAP_BENCH_THREADS=1 and =4; inside
+    // one process, parallel_map's output must equal the serial map.
+    let seeds: Vec<u64> = (0..6).collect();
+    let serial: Vec<u64> = seeds.iter().map(|&s| shed_schedule_digest(s)).collect();
+    let parallel = sweep::parallel_map(seeds, shed_schedule_digest);
+    assert_eq!(serial, parallel);
+    // the seeds vary priorities, so the schedules must actually differ —
+    // otherwise the determinism check above is vacuous
+    assert!(serial.windows(2).any(|w| w[0] != w[1]));
+}
+
+#[test]
+fn checkpointed_retries_reexecute_strictly_less_than_root_retries() {
+    // Size the per-job deadline slice from the measured solo makespan:
+    // big enough to make real progress every attempt, too small to finish
+    // in one. The slice is NOT escalated across retries — resuming from
+    // the checkpoint is the progress mechanism.
+    let mut sess = Session::compile(FIB, cfg(), DeviceSpec::h100()).unwrap();
+    let solo = sess.run("fib", &[Value::from_i64(13)]).unwrap();
+    let startup = DeviceSpec::h100().startup;
+    assert!(solo.cycles > startup);
+    let slice = startup + (solo.cycles - startup) * 2 / 3;
+
+    let run = |checkpoint: bool| -> (JobOutcome, u64) {
+        let mut eng = engine(cfg(), AdmissionPolicy::Fifo);
+        eng.set_resilience(ResilienceConfig {
+            retry: true,
+            max_retries: 10,
+            retry_budget: 16,
+            backoff_base: 1 << 8,
+            checkpoint,
+            ..Default::default()
+        });
+        let t = eng.open_session("t", FIB).unwrap();
+        eng.submit(
+            t,
+            "fib",
+            &[Value::from_i64(13)],
+            SubmitOpts {
+                deadline: Some(slice),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        eng.run_to_idle().unwrap();
+        let outs = eng.take_outcomes();
+        assert_eq!(outs.len(), 1);
+        (outs[0].clone(), eng.accounting(t).tasks_reexecuted)
+    };
+
+    let (with_ck, reexec_ck) = run(true);
+    assert_eq!(with_ck.status, JobStatus::Completed);
+    assert!(with_ck.attempts > 1, "the slice must force at least one retry");
+    assert_eq!(with_ck.result.unwrap().as_i64(), fib::reference(13));
+    assert_eq!(
+        reexec_ck, 0,
+        "restored frontiers never re-run a finished segment"
+    );
+
+    // Without checkpointing the identical slice restarts from the root
+    // every attempt: no attempt can get further than the first, so the
+    // job exhausts its retries and every attempt's work is re-executed.
+    let (without_ck, reexec_root) = run(false);
+    assert_eq!(
+        without_ck.status,
+        JobStatus::Failed(JobError::DeadlineEvicted)
+    );
+    assert_eq!(without_ck.attempts, 11, "max_retries + 1 attempts");
+    assert!(
+        reexec_root > 0,
+        "root retries throw away each attempt's finished tasks"
+    );
+    assert!(reexec_ck < reexec_root, "checkpointing strictly reduces re-execution");
+}
+
+#[test]
+fn resilience_off_is_byte_identical_to_the_plain_engine() {
+    // A schedule touching completion, deadline eviction, and cancellation.
+    let run = |arm: Option<ResilienceConfig>| -> Vec<JobOutcome> {
+        let mut eng = engine(cfg(), AdmissionPolicy::FairShare);
+        if let Some(r) = arm {
+            eng.set_resilience(r);
+        }
+        let a = eng.open_session("a", FIB).unwrap();
+        let b = eng.open_session("b", FIB).unwrap();
+        let token = CancelToken::new();
+        eng.submit(a, "fib", &[Value::from_i64(11)], SubmitOpts::default())
+            .unwrap();
+        eng.submit(
+            b,
+            "fib",
+            &[Value::from_i64(20)],
+            SubmitOpts {
+                deadline: Some(1),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        eng.submit(
+            a,
+            "fib",
+            &[Value::from_i64(9)],
+            SubmitOpts {
+                cancel: Some(token.clone()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        token.cancel();
+        eng.run_to_idle().unwrap();
+        eng.take_outcomes()
+    };
+    let plain = run(None);
+    // every knob moved EXCEPT the master switches — must all be inert
+    let armed_off = run(Some(ResilienceConfig {
+        retry: false,
+        shed_watermark: None,
+        max_retries: 3,
+        retry_budget: 1,
+        backoff_base: 7,
+        quarantine_after: 1,
+        checkpoint: false,
+    }));
+    assert_eq!(plain, armed_off, "retry off must stay byte-identical");
+}
+
+#[test]
+fn evictions_carry_typed_errors_with_retry_off() {
+    // Per-tenant deadline → DeadlineEvicted, typed on both the outcome
+    // and the scheduler's TenantStats (PR-6 surfaced these only as a
+    // boolean `evicted`).
+    let mut eng = engine(cfg(), AdmissionPolicy::Fifo);
+    let t = eng.open_session("t", FIB).unwrap();
+    eng.submit(
+        t,
+        "fib",
+        &[Value::from_i64(20)],
+        SubmitOpts {
+            deadline: Some(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    eng.run_to_idle().unwrap();
+    let outs = eng.take_outcomes();
+    assert_eq!(outs[0].status, JobStatus::Evicted);
+    assert_eq!(outs[0].error, Some(JobError::DeadlineEvicted));
+    assert_eq!(outs[0].stats.evict_cause, Some(EvictCause::Deadline));
+    assert_eq!(outs[0].attempts, 1);
+
+    // Fault-plane deadline (whole-run drain) → RunDrained. The slice is
+    // 2k cycles past startup: far too thin for fib(16) to finish.
+    let mut eng = engine(cfg_with_faults("deadline@52000"), AdmissionPolicy::Fifo);
+    let t = eng.open_session("t", FIB).unwrap();
+    eng.submit(t, "fib", &[Value::from_i64(16)], SubmitOpts::default())
+        .unwrap();
+    eng.run_to_idle().unwrap();
+    let outs = eng.take_outcomes();
+    assert_eq!(outs[0].status, JobStatus::Evicted);
+    assert_eq!(outs[0].error, Some(JobError::RunDrained));
+    assert_eq!(outs[0].stats.evict_cause, Some(EvictCause::Drain));
+
+    // completed jobs carry no error
+    let mut eng = engine(cfg(), AdmissionPolicy::Fifo);
+    let t = eng.open_session("t", FIB).unwrap();
+    eng.submit(t, "fib", &[Value::from_i64(8)], SubmitOpts::default())
+        .unwrap();
+    eng.run_to_idle().unwrap();
+    let outs = eng.take_outcomes();
+    assert_eq!(outs[0].status, JobStatus::Completed);
+    assert_eq!(outs[0].error, None);
+}
+
+#[test]
+fn retry_budget_exhaustion_fails_typed() {
+    // A poison job (zero-progress deadline) against a tiny retry budget
+    // and a breaker that never opens: the job fails typed once the
+    // per-job budget is spent.
+    let mut eng = engine(cfg(), AdmissionPolicy::Fifo);
+    eng.set_resilience(ResilienceConfig {
+        retry: true,
+        max_retries: 2,
+        quarantine_after: 100,
+        backoff_base: 1 << 8,
+        ..Default::default()
+    });
+    let t = eng.open_session("t", FIB).unwrap();
+    eng.submit(
+        t,
+        "fib",
+        &[Value::from_i64(20)],
+        SubmitOpts {
+            deadline: Some(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    eng.run_to_idle().unwrap();
+    let outs = eng.take_outcomes();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].status, JobStatus::Failed(JobError::DeadlineEvicted));
+    assert_eq!(outs[0].attempts, 3, "initial + max_retries");
+    assert_eq!(eng.accounting(t).jobs_retried, 2);
+    assert_eq!(eng.accounting(t).jobs_failed, 1);
+    assert!(!eng.tenant_resilience(t).quarantined);
+}
