@@ -2,12 +2,18 @@
 //! the state-machine transformation (Program 6), and run it GPU-resident.
 //!
 //! ```sh
-//! cargo run --release --example quickstart -- [--n 20]
+//! cargo run --release --example quickstart -- [--n 20] [--trace out.json]
 //! ```
+//!
+//! `--trace out.json` re-runs with the structured tracer armed (same as
+//! `gtap run --trace`) and writes a Chrome trace-event file you can open
+//! in Perfetto / `chrome://tracing`. Tracing charges zero simulated
+//! cycles, so the traced stats are byte-identical to the untraced run.
 
 use gtap::compiler::{self, pretty};
 use gtap::coordinator::{GtapConfig, Session};
 use gtap::ir::types::Value;
+use gtap::obs::trace::Tracer;
 use gtap::sim::DeviceSpec;
 use gtap::util::cli::Args;
 
@@ -44,7 +50,7 @@ fn main() -> gtap::Result<()> {
         num_queues: 3, // the queue() clauses above use EPAQ indices 0..2
         ..Default::default()
     };
-    let mut session = Session::compile(FIB, cfg, DeviceSpec::h100())?;
+    let mut session = Session::compile(FIB, cfg.clone(), DeviceSpec::h100())?;
     let stats = session.run("fib", &[Value::from_i64(n)])?;
     println!("== run ==");
     println!(
@@ -59,6 +65,16 @@ fn main() -> gtap::Result<()> {
         stats.root_result.unwrap().as_i64(),
         gtap::workloads::fib::reference(n)
     );
+    if let Some(path) = args.get("trace") {
+        // Observability contract: arming the tracer must not perturb the
+        // run — the re-run's stats are byte-identical to `stats` above.
+        let mut tracer = Tracer::new();
+        let mut session = Session::compile(FIB, cfg, DeviceSpec::h100())?;
+        let traced = session.run_with("fib", &[Value::from_i64(n)], None, &mut tracer)?;
+        assert_eq!(stats, traced);
+        std::fs::write(path, tracer.to_chrome_trace())?;
+        println!("trace: {} event(s) -> {path}", tracer.len());
+    }
     println!("OK");
     Ok(())
 }

@@ -7,6 +7,7 @@ use crate::coordinator::{
     QueueSelect, RunStats, SchedulerKind, Session, SmTier, StealAmount, VictimSelect,
 };
 use crate::ir::types::Value;
+use crate::obs::trace::{Fanout, Tracer};
 use crate::sim::profile::Profiler;
 use crate::sim::{DeviceSpec, MemSysMode};
 use crate::workloads::{bfs, fib, nqueens, sort, tree};
@@ -19,6 +20,7 @@ pub struct Exec {
     pub device: DeviceSpec,
     pub cfg: GtapConfig,
     pub profile: bool,
+    pub trace: bool,
 }
 
 impl Exec {
@@ -33,6 +35,7 @@ impl Exec {
                 ..Default::default()
             },
             profile: false,
+            trace: false,
         }
     }
 
@@ -47,6 +50,7 @@ impl Exec {
                 ..Default::default()
             },
             profile: false,
+            trace: false,
         }
     }
 
@@ -62,6 +66,7 @@ impl Exec {
                 ..Default::default()
             },
             profile: false,
+            trace: false,
         }
     }
 
@@ -76,6 +81,7 @@ impl Exec {
                 ..Default::default()
             },
             profile: false,
+            trace: false,
         }
     }
 
@@ -101,6 +107,15 @@ impl Exec {
 
     pub fn profiled(mut self) -> Exec {
         self.profile = true;
+        self
+    }
+
+    /// Arm structured event tracing: the run is executed with a
+    /// [`Tracer`] fanned out next to the profiler, and the finished
+    /// [`Outcome`] carries the event stream for Chrome-trace export.
+    /// Tracing charges zero simulated cycles (see `tests/obs.rs`).
+    pub fn traced(mut self) -> Exec {
+        self.trace = true;
         self
     }
 
@@ -172,6 +187,38 @@ pub struct Outcome {
     pub stats: RunStats,
     pub seconds: f64,
     pub profiler: Profiler,
+    /// Present when the run was executed with `Exec::traced()`.
+    pub trace: Option<Tracer>,
+}
+
+/// Execute a compiled session under `exec`'s instrumentation choices.
+/// All runners funnel through here so profiling and tracing are armed
+/// in exactly one place; the tracer rides alongside the profiler via
+/// [`Fanout`] so neither observes the other.
+fn exec_run(
+    exec: &Exec,
+    session: &mut Session,
+    entry: &str,
+    args: &[Value],
+    engine: Option<&mut dyn PayloadEngine>,
+) -> Result<Outcome> {
+    let mut profiler = if exec.profile {
+        Profiler::enabled()
+    } else {
+        Profiler::disabled()
+    };
+    let mut tracer = exec.trace.then(Tracer::new);
+    let stats = match tracer.as_mut() {
+        Some(tr) => session.run_with(entry, args, engine, &mut Fanout(&mut profiler, tr))?,
+        None => session.run_with(entry, args, engine, &mut profiler)?,
+    };
+    let seconds = stats.seconds;
+    Ok(Outcome {
+        stats,
+        seconds,
+        profiler,
+        trace: tracer,
+    })
 }
 
 fn run_session(
@@ -182,21 +229,8 @@ fn run_session(
     engine: Option<&mut dyn PayloadEngine>,
 ) -> Result<(Session, Outcome)> {
     let mut session = Session::compile(source, exec.cfg.clone(), exec.device.clone())?;
-    let mut profiler = if exec.profile {
-        Profiler::enabled()
-    } else {
-        Profiler::disabled()
-    };
-    let stats = session.run_with(entry, args, engine, &mut profiler)?;
-    let seconds = stats.seconds;
-    Ok((
-        session,
-        Outcome {
-            stats,
-            seconds,
-            profiler,
-        },
-    ))
+    let out = exec_run(exec, &mut session, entry, args, engine)?;
+    Ok((session, out))
 }
 
 /// Fibonacci (§6.2 / §6.4). Validates against the closed form.
@@ -213,12 +247,9 @@ pub fn run_nqueens(exec: &Exec, n: i64, depth: i64, epaq: bool) -> Result<Outcom
     let src = nqueens::source(depth, epaq);
     let mut session = Session::compile(&src, exec.cfg.clone(), exec.device.clone())?;
     let acc = session.alloc(1);
-    let mut profiler = if exec.profile {
-        Profiler::enabled()
-    } else {
-        Profiler::disabled()
-    };
-    let stats = session.run_with(
+    let out = exec_run(
+        exec,
+        &mut session,
         "nqueens",
         &[
             Value::from_i64(n),
@@ -229,7 +260,6 @@ pub fn run_nqueens(exec: &Exec, n: i64, depth: i64, epaq: bool) -> Result<Outcom
             Value(acc),
         ],
         None,
-        &mut profiler,
     )?;
     let got = session.memory.read_i64s(acc, 1)[0];
     ensure!(
@@ -237,12 +267,7 @@ pub fn run_nqueens(exec: &Exec, n: i64, depth: i64, epaq: bool) -> Result<Outcom
         "nqueens({n}) = {got}, want {}",
         nqueens::reference(n)
     );
-    let seconds = stats.seconds;
-    Ok(Outcome {
-        stats,
-        seconds,
-        profiler,
-    })
+    Ok(out)
 }
 
 fn run_sort_impl(exec: &Exec, src: &str, entry: &str, n: usize, seed: u64) -> Result<Outcome> {
@@ -251,12 +276,9 @@ fn run_sort_impl(exec: &Exec, src: &str, entry: &str, n: usize, seed: u64) -> Re
     let tmp = session.alloc(n as u64);
     let xs = sort::input(n, seed);
     session.memory.write_i64s(data, &xs);
-    let mut profiler = if exec.profile {
-        Profiler::enabled()
-    } else {
-        Profiler::disabled()
-    };
-    let stats = session.run_with(
+    let out = exec_run(
+        exec,
+        &mut session,
         entry,
         &[
             Value(data),
@@ -265,16 +287,10 @@ fn run_sort_impl(exec: &Exec, src: &str, entry: &str, n: usize, seed: u64) -> Re
             Value(tmp),
         ],
         None,
-        &mut profiler,
     )?;
     let got = session.memory.read_i64s(data, n as u64);
     ensure!(got == sort::reference(&xs), "{entry} output not sorted");
-    let seconds = stats.seconds;
-    Ok(Outcome {
-        stats,
-        seconds,
-        profiler,
-    })
+    Ok(out)
 }
 
 /// Mergesort (§6.2): serial merge tail.
@@ -318,17 +334,13 @@ pub fn run_full_tree(
     };
     let mut session = Session::compile(&src, exec.cfg.clone(), exec.device.clone())?;
     let acc = session.alloc(1);
-    let mut profiler = if exec.profile {
-        Profiler::enabled()
-    } else {
-        Profiler::disabled()
-    };
     let xla = engine.is_some();
-    let stats = session.run_with(
+    let out = exec_run(
+        exec,
+        &mut session,
         "tree",
         &[Value::from_i64(depth), Value::from_i64(seed), Value(acc)],
         engine,
-        &mut profiler,
     )?;
     let got = session.memory.read_i64s(acc, 1)[0];
     let want = if block {
@@ -339,7 +351,7 @@ pub fn run_full_tree(
     if xla {
         // XLA:CPU may contract mul+add to a true FMA: the quantized terms can
         // each differ by 1 ulp-step, so allow ±1 per task.
-        let tol = stats.tasks_finished as i64 * if block { chunks } else { 1 };
+        let tol = out.stats.tasks_finished as i64 * if block { chunks } else { 1 };
         ensure!(
             (got - want).abs() <= tol,
             "tree checksum {got} vs {want} (tol {tol})"
@@ -347,12 +359,7 @@ pub fn run_full_tree(
     } else {
         ensure!(got == want, "tree checksum {got}, want {want}");
     }
-    let seconds = stats.seconds;
-    Ok(Outcome {
-        stats,
-        seconds,
-        profiler,
-    })
+    Ok(out)
 }
 
 /// Depth-dependent pruned 3-ary tree (§6.3.2).
@@ -372,28 +379,19 @@ pub fn run_pruned_tree(
     };
     let mut session = Session::compile(&src, exec.cfg.clone(), exec.device.clone())?;
     let acc = session.alloc(1);
-    let mut profiler = if exec.profile {
-        Profiler::enabled()
-    } else {
-        Profiler::disabled()
-    };
-    let stats = session.run_with(
+    let out = exec_run(
+        exec,
+        &mut session,
         "ptree",
         &[Value::from_i64(0), Value::from_i64(seed), Value(acc)],
         None,
-        &mut profiler,
     )?;
     if !block {
         let got = session.memory.read_i64s(acc, 1)[0];
         let want = tree::pruned_tree_reference(max_depth, seed, mem_ops, compute_iters).0;
         ensure!(got == want, "ptree checksum {got}, want {want}");
     }
-    let seconds = stats.seconds;
-    Ok(Outcome {
-        stats,
-        seconds,
-        profiler,
-    })
+    Ok(out)
 }
 
 /// BFS (Program 5), block-level.
@@ -407,25 +405,16 @@ pub fn run_bfs(exec: &Exec, n: usize, avg_degree: usize, seed: u64) -> Result<Ou
     session.memory.write_i64s(ci, &g.col_indices);
     session.memory.write_i64s(dp, &vec![i64::MAX; n]);
     session.memory.store(dp, 0);
-    let mut profiler = if exec.profile {
-        Profiler::enabled()
-    } else {
-        Profiler::disabled()
-    };
-    let stats = session.run_with(
+    let out = exec_run(
+        exec,
+        &mut session,
         "bfs",
         &[Value::from_i64(0), Value(ro), Value(ci), Value(dp)],
         None,
-        &mut profiler,
     )?;
     let got = session.memory.read_i64s(dp, n as u64);
     ensure!(got == g.bfs_reference(0), "bfs depths mismatch");
-    let seconds = stats.seconds;
-    Ok(Outcome {
-        stats,
-        seconds,
-        profiler,
-    })
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -472,5 +461,15 @@ mod tests {
     fn profiled_run_collects_timeline() {
         let out = run_fib(&Exec::gpu_thread(4, 32).profiled(), 11, 0, false).unwrap();
         assert!(!out.profiler.events.is_empty());
+    }
+
+    #[test]
+    fn traced_run_collects_events_without_perturbing_stats() {
+        let base = run_fib(&Exec::gpu_thread(4, 32), 11, 0, false).unwrap();
+        let out = run_fib(&Exec::gpu_thread(4, 32).traced(), 11, 0, false).unwrap();
+        let tr = out.trace.as_ref().expect("traced run carries a tracer");
+        assert!(!tr.is_empty());
+        assert_eq!(base.stats, out.stats);
+        assert!(base.trace.is_none());
     }
 }

@@ -76,8 +76,9 @@ use crate::sim::config::DeviceSpec;
 use crate::sim::divergence::{self, LanePath};
 use crate::sim::interp::{Interp, LaneFrame, SegmentEnd, SegmentOutput, StepResult};
 use crate::sim::memory::Memory;
+use crate::obs::trace::{AcquireTier, IterEvent, NoTrace, SampleRecord, TraceSink, HOST_WORKER};
+use crate::obs::SAMPLE_EVERY;
 use crate::sim::memsys::{MemSys, MemSysStats};
-use crate::sim::profile::{Profiler, TimelineEvent};
 use crate::util::error::{Context, Result};
 use crate::util::prng::Prng;
 use crate::{anyhow, bail};
@@ -162,6 +163,65 @@ pub struct RunStats {
     pub output: Vec<String>,
 }
 
+impl RunStats {
+    /// Counter-coherence invariants, checked (debug builds) once at the
+    /// end of every run. Returns human-readable violations; empty means
+    /// coherent.
+    ///
+    /// Always-true invariants: `steals_ok <= steal_attempts`,
+    /// `idle_iterations <= iterations`, and `tasks_finished <= segments`
+    /// (every finish is the last segment of its task). With
+    /// `roots_spawned = Some(n)` — i.e. at *clean* quiescence: not
+    /// drained, no tenant evicted, no checkpoint restored into the run —
+    /// two conservation laws are added: `sm_pool_hits == sm_spills`
+    /// (every pooled task is drained back out; kill-fault reclamation
+    /// deliberately counts its drains as hits to preserve this) and
+    /// `tasks_finished == spawns + n` (task lineage conservation: every
+    /// allocated task finishes exactly once).
+    ///
+    /// Note on `pops`: it counts batched probe *operations*, not tasks
+    /// (one op can return up to a warp's worth, and immediate-buffer
+    /// acquisitions bypass the queues entirely), so no `pops`-based
+    /// lower bound on `tasks_finished` holds — conservation is stated in
+    /// task units instead.
+    pub fn coherence_violations(&self, roots_spawned: Option<u64>) -> Vec<String> {
+        let mut v = Vec::new();
+        if self.steals_ok > self.steal_attempts {
+            v.push(format!(
+                "steals_ok {} > steal_attempts {}",
+                self.steals_ok, self.steal_attempts
+            ));
+        }
+        if self.idle_iterations > self.iterations {
+            v.push(format!(
+                "idle_iterations {} > iterations {}",
+                self.idle_iterations, self.iterations
+            ));
+        }
+        if self.tasks_finished > self.segments {
+            v.push(format!(
+                "tasks_finished {} > segments {}",
+                self.tasks_finished, self.segments
+            ));
+        }
+        if let Some(roots) = roots_spawned {
+            if self.sm_pool_hits != self.sm_spills {
+                v.push(format!(
+                    "sm_pool_hits {} != sm_spills {} at quiescence",
+                    self.sm_pool_hits, self.sm_spills
+                ));
+            }
+            if self.tasks_finished != self.spawns + roots {
+                v.push(format!(
+                    "tasks_finished {} != spawns {} + roots {} at quiescence",
+                    self.tasks_finished, self.spawns, roots
+                ));
+            }
+        }
+        v
+    }
+}
+
 /// Why a tenant was evicted mid-run — the typed loss attribution the
 /// service layer's retry and quarantine logic dispatches on. `None` in
 /// `TenantStats::evict_cause` for tenants that ran to completion, so every
@@ -180,6 +240,17 @@ pub enum EvictCause {
     /// loss surfaced as an eviction instead of a run-fatal error
     /// (requires [`Scheduler::evict_on_watchdog_trip`]).
     Watchdog,
+}
+
+impl EvictCause {
+    /// Stable lowercase name for trace/metrics emission.
+    pub fn name(self) -> &'static str {
+        match self {
+            EvictCause::Deadline => "deadline",
+            EvictCause::Drain => "drain",
+            EvictCause::Watchdog => "watchdog",
+        }
+    }
 }
 
 /// Per-tenant slice of a (possibly multi-tenant) run: what the service
@@ -302,6 +373,10 @@ pub struct Scheduler<'a> {
     /// Lineage snapshots captured at eviction (slot-indexed, `None` for
     /// tenants that were never evicted or had nothing live).
     checkpoints: Vec<Option<TenantCheckpoint>>,
+    /// A checkpoint was restored into this run: its restored tasks were
+    /// never spawned here, so the clean-quiescence lineage-conservation
+    /// debug check must stand down.
+    restored_any: bool,
     /// Surface an unrecoverable watchdog trip as per-tenant Watchdog
     /// evictions instead of a run-fatal error. Off by default — the
     /// one-shot/batch contract (a deadlocked run is a hard error) is
@@ -476,6 +551,7 @@ impl<'a> Scheduler<'a> {
             roots_spawned: 0,
             checkpoints_enabled: false,
             checkpoints: vec![None; ntenants],
+            restored_any: false,
             evict_on_trip: false,
             scratch_batch: Vec::with_capacity(batch_max),
             scratch_outputs: Vec::with_capacity(batch_max),
@@ -589,14 +665,21 @@ impl<'a> Scheduler<'a> {
     }
 
     /// Run the persistent kernel to quiescence (single-tenant form).
-    pub fn run(
+    ///
+    /// Generic over the observability sink: pass `&mut NoTrace` (or a
+    /// disabled `Profiler`, which implements [`TraceSink`] with every
+    /// armed hook compiled out) for the historical zero-cost path, or an
+    /// armed `obs::Tracer`/`obs::MetricsRegistry` to record the event
+    /// stream. Sinks only observe: `RunStats` are byte-identical either
+    /// way (`tests/obs.rs`).
+    pub fn run<S: TraceSink>(
         &mut self,
         mem: &mut Memory,
         engine: Option<&mut dyn PayloadEngine>,
-        profiler: &mut Profiler,
+        sink: &mut S,
     ) -> Result<RunStats> {
         let mut mems = [mem];
-        self.run_multi(&mut mems, engine, profiler)
+        self.run_multi(&mut mems, engine, sink)
     }
 
     /// Run the persistent kernel to quiescence with one simulated global
@@ -605,11 +688,11 @@ impl<'a> Scheduler<'a> {
     /// exactly the historical `run`: every added branch is gated on
     /// multi-tenant state (armed deadlines, extra slots), so single-tenant
     /// `RunStats` stay byte-identical to the pre-service pins.
-    pub fn run_multi(
+    pub fn run_multi<S: TraceSink>(
         &mut self,
         mems: &mut [&mut Memory],
         engine: Option<&mut dyn PayloadEngine>,
-        profiler: &mut Profiler,
+        sink: &mut S,
     ) -> Result<RunStats> {
         if mems.len() != self.mods.len() {
             bail!(
@@ -623,6 +706,14 @@ impl<'a> Scheduler<'a> {
         let mut clock = WorkerClock::new(self.workers.len(), t0);
         let mut makespan = t0;
         let mut log: Vec<String> = Vec::new();
+        // Root tasks were enqueued by the host before the loop started;
+        // report their spawns on the host track at the startup edge.
+        for (t, &r) in self.roots.iter().enumerate() {
+            if r != NO_TASK {
+                sink.task_spawn(t0, HOST_WORKER, r, t as u16, self.records.meta(r).func);
+            }
+        }
+        let mut sample_tick: u64 = 0;
         // Hardening: the watchdog is always armed (its quiescence predicate
         // is exact at event boundaries, so it never false-positives and
         // charges no simulated cycles); the fault branches below are taken
@@ -631,8 +722,32 @@ impl<'a> Scheduler<'a> {
         let deadline = self.cfg.faults.deadline;
         while self.live_tasks > 0 {
             let (now, w) = clock.peek_min();
+            // Interval sampling: gated on the sink's const, so unarmed
+            // runs (NoTrace, Profiler) never pay the queue walks. Pure
+            // host-side observation — no simulated cycles, no state.
+            if S::SAMPLING {
+                if sample_tick % SAMPLE_EVERY == 0 {
+                    let s = SampleRecord {
+                        queue_depth: self.queues.total_len() as u64,
+                        sm_pooled: self.sm_pool.total_len() as u64,
+                        immediate: self
+                            .workers
+                            .iter()
+                            .map(|ws| ws.immediate.len() as u64)
+                            .sum(),
+                        live_tasks: self.live_tasks,
+                        steal_attempts: self.stats.steal_attempts,
+                        steals_ok: self.stats.steals_ok,
+                        pops: self.stats.pops,
+                        pushes: self.stats.pushes,
+                        tasks_finished: self.stats.tasks_finished,
+                    };
+                    sink.sample(now, &s);
+                }
+                sample_tick += 1;
+            }
             if self.any_tenant_deadline {
-                self.enforce_tenant_deadlines(now);
+                self.enforce_tenant_deadlines(now, sink);
                 if self.live_tasks == 0 {
                     break;
                 }
@@ -640,11 +755,11 @@ impl<'a> Scheduler<'a> {
             if self.faults.is_some() {
                 if let Some(dl) = deadline {
                     if now >= dl {
-                        self.drain();
+                        self.drain_with(now, sink);
                         break;
                     }
                 }
-                match self.deliver_faults(w as usize, now)? {
+                match self.deliver_faults(w as usize, now, sink)? {
                     FaultAction::Proceed => {}
                     FaultAction::Stall(cycles) => {
                         makespan = makespan.max(now + cycles);
@@ -658,7 +773,7 @@ impl<'a> Scheduler<'a> {
                 }
             }
             if watchdog.due(now) && self.queued_total() == 0 {
-                self.watchdog_trip(now)?;
+                self.watchdog_trip(now, sink)?;
             }
             // fresh reborrow of the engine for this iteration
             let eng: Option<&mut dyn PayloadEngine> = match engine {
@@ -666,7 +781,7 @@ impl<'a> Scheduler<'a> {
                 None => None,
             };
             let dur = self
-                .worker_iteration(w as usize, now, mems, eng, profiler, &mut log)?
+                .worker_iteration(w as usize, now, mems, eng, sink, &mut log)?
                 .max(1);
             makespan = makespan.max(now + dur);
             self.stamp_tenant_completions(now + dur);
@@ -681,6 +796,22 @@ impl<'a> Scheduler<'a> {
         stats.peak_live_records = self.records.peak_live();
         stats.memsys.smem_bank_conflicts = self.sm_pool.bank_conflicts();
         stats.output = log;
+        // Counter coherence at quiescence (debug builds only — a pure
+        // host-side read). Conservation laws apply only to clean runs:
+        // drains, evictions and checkpoint restores legitimately break
+        // lineage/pool accounting.
+        if cfg!(debug_assertions) {
+            let clean = !stats.drained
+                && !self.restored_any
+                && self.tstats.iter().all(|t| !t.evicted);
+            let roots = if clean {
+                Some(self.roots_spawned as u64)
+            } else {
+                None
+            };
+            let v = stats.coherence_violations(roots);
+            debug_assert!(v.is_empty(), "counter coherence violated: {v:?}");
+        }
         Ok(stats)
     }
 
@@ -690,11 +821,18 @@ impl<'a> Scheduler<'a> {
     /// charged plus the EPAQ queue-class index the batch is attributed to
     /// (for per-class memory-locality stats): the popped/stolen class, or
     /// the worker's cursor class for immediate-buffer and SM-pool batches
-    /// (the cursor tracks the class those tasks were kept from). Stats
-    /// invariant: the steal path is entered — and `steal_attempts`
-    /// counted — only when the queue organization supports stealing and a
-    /// victim exists.
-    fn acquire(&mut self, w: usize, now: u64, batch: &mut Vec<TaskId>) -> (u64, usize) {
+    /// (the cursor tracks the class those tasks were kept from), and the
+    /// [`AcquireTier`] the batch came from (for the observability layer;
+    /// `Idle` when empty-handed). Stats invariant: the steal path is
+    /// entered — and `steal_attempts` counted — only when the queue
+    /// organization supports stealing and a victim exists.
+    fn acquire<S: TraceSink>(
+        &mut self,
+        w: usize,
+        now: u64,
+        batch: &mut Vec<TaskId>,
+        sink: &mut S,
+    ) -> (u64, usize, AcquireTier) {
         let dev = self.dev;
         let nq = self.cfg.num_queues;
         let policy = self.policy;
@@ -702,7 +840,15 @@ impl<'a> Scheduler<'a> {
 
         if !self.workers[w].immediate.is_empty() {
             batch.append(&mut self.workers[w].immediate);
-            return (cost, self.workers[w].rr_queue % nq);
+            let class = self.workers[w].rr_queue % nq;
+            sink.task_acquire(
+                now + cost,
+                w as u32,
+                batch.len() as u32,
+                AcquireTier::Immediate,
+                class as u16,
+            );
+            return (cost, class, AcquireTier::Immediate);
         }
 
         // probe own EPAQ queues in policy order from a policy-chosen start
@@ -716,7 +862,8 @@ impl<'a> Scheduler<'a> {
             self.stats.pops += 1;
             if op.taken > 0 {
                 policy.queue_select.commit(&mut self.workers[w].rr_queue, q);
-                return (cost, q);
+                sink.task_acquire(now + cost, w as u32, op.taken as u32, AcquireTier::Own, q as u16);
+                return (cost, q, AcquireTier::Own);
             }
         }
 
@@ -734,14 +881,23 @@ impl<'a> Scheduler<'a> {
                 cost += op.cycles;
                 if op.taken > 0 {
                     self.stats.sm_pool_hits += op.taken as u64;
-                    return (cost, self.workers[w].rr_queue % nq);
+                    let class = self.workers[w].rr_queue % nq;
+                    sink.sm_pool_hit(now + cost, w as u32, op.taken as u32);
+                    sink.task_acquire(
+                        now + cost,
+                        w as u32,
+                        op.taken as u32,
+                        AcquireTier::SmPool,
+                        class as u16,
+                    );
+                    return (cost, class, AcquireTier::SmPool);
                 }
             }
         }
 
         // steal from other workers' queues
         if !self.queues.supports_steal() || self.workers.len() < 2 {
-            return (cost, 0);
+            return (cost, 0, AcquireTier::Idle);
         }
         let n_workers = self.workers.len();
         for attempt in 0..STEAL_TRIES {
@@ -758,6 +914,7 @@ impl<'a> Scheduler<'a> {
                 &mut self.workers[w].rng,
             );
             self.stats.steal_attempts += 1;
+            sink.steal_attempt(now + cost, w as u32, victim as u32);
             // Forced steal failure (fault plane): the probe pays the normal
             // remote-probe price but is reported empty-handed, modeling a
             // contention storm on the victim's queue words.
@@ -784,7 +941,9 @@ impl<'a> Scheduler<'a> {
                 + policy.victim_select.probe_overhead(dev);
             if op.taken > 0 {
                 self.stats.steals_ok += 1;
-                return (cost, q);
+                sink.steal_ok(now + cost, w as u32, victim as u32, op.taken as u32);
+                sink.task_acquire(now + cost, w as u32, op.taken as u32, AcquireTier::Steal, q as u16);
+                return (cost, q, AcquireTier::Steal);
             }
             // let the policy rotate the EPAQ cursor so the next try can
             // probe another queue class (Sticky declines)
@@ -792,7 +951,7 @@ impl<'a> Scheduler<'a> {
                 .queue_select
                 .on_steal_miss(&mut self.workers[w].rr_queue, nq);
         }
-        (cost, 0)
+        (cost, 0, AcquireTier::Idle)
     }
 
     /// Push `ids` onto `w`'s queue `q` at time `now`, honoring **SmTier**
@@ -809,13 +968,14 @@ impl<'a> Scheduler<'a> {
     ///
     /// The one overflow path for spawned children and continuations alike.
     /// Returns the cycles charged.
-    fn push_with_spill(
+    fn push_with_spill<S: TraceSink>(
         &mut self,
         w: usize,
         q: usize,
         now: u64,
         ids: &[TaskId],
         what: &str,
+        sink: &mut S,
     ) -> Result<u64> {
         let dev = self.dev;
         let nq = self.cfg.num_queues;
@@ -836,6 +996,7 @@ impl<'a> Scheduler<'a> {
                         .expect("share within free space cannot overflow");
                     cost += op.cycles;
                     self.stats.sm_spills += give as u64;
+                    sink.sm_spill(now + cost, w as u32, give as u32);
                     ids = keep;
                 }
             }
@@ -860,6 +1021,7 @@ impl<'a> Scheduler<'a> {
                     .expect("spill within free space cannot overflow");
                 cost += op.cycles;
                 self.stats.sm_spills += fit as u64;
+                sink.sm_spill(now + cost, w as u32, fit as u32);
                 ids = rest;
                 if ids.is_empty() {
                     return Ok(cost);
@@ -907,13 +1069,13 @@ impl<'a> Scheduler<'a> {
     }
 
     /// One persistent-kernel iteration. Returns its duration in cycles.
-    fn worker_iteration(
+    fn worker_iteration<S: TraceSink>(
         &mut self,
         w: usize,
         now: u64,
         mems: &mut [&mut Memory],
         mut engine: Option<&mut dyn PayloadEngine>,
-        profiler: &mut Profiler,
+        sink: &mut S,
         log: &mut Vec<String>,
     ) -> Result<u64> {
         self.stats.iterations += 1;
@@ -925,7 +1087,7 @@ impl<'a> Scheduler<'a> {
         batch.clear();
 
         // -- 1. acquire work ------------------------------------------------
-        let (acq_cost, acq_class) = self.acquire(w, now + cost, &mut batch);
+        let (acq_cost, acq_class, acq_tier) = self.acquire(w, now + cost, &mut batch, sink);
         cost += acq_cost;
 
         if batch.is_empty() {
@@ -934,13 +1096,15 @@ impl<'a> Scheduler<'a> {
             let ws = &mut self.workers[w];
             ws.backoff = policy.backoff.next(ws.backoff, now, dev);
             let dur = cost + ws.backoff;
-            profiler.record(TimelineEvent {
+            sink.iteration(&IterEvent {
                 worker: w as u32,
                 start: now,
                 busy: 0,
                 overhead: dur,
                 active_lanes: 0,
                 path_groups: 0,
+                tier: AcquireTier::Idle,
+                class: acq_class as u16,
             });
             return Ok(dur);
         }
@@ -1099,6 +1263,11 @@ impl<'a> Scheduler<'a> {
         let busy_cycles = exec_cycles + mem_cycles;
         self.scratch_lanes = lanes;
         cost += busy_cycles;
+        // Nominal timestamp for effect events (spawn/finish/join): the
+        // end of the executed segment. Join/finish costs accrue after it,
+        // but all stay below the iteration's end, so per-worker tracks
+        // remain monotone.
+        let t_eff = now + cost;
 
         // -- 3. apply effects ----------------------------------------------
         // spawned children grouped by target queue index (**Placement**)
@@ -1146,6 +1315,7 @@ impl<'a> Scheduler<'a> {
                 self.live_by_tenant[ti] += 1;
                 self.stats.spawns += 1;
                 self.tstats[ti].spawns += 1;
+                sink.task_spawn(t_eff, w as u32, child, ti as u16, s.func);
                 let cm = self.records.meta(child);
                 let q = policy
                     .placement
@@ -1158,6 +1328,7 @@ impl<'a> Scheduler<'a> {
                         join::prepare_join(&mut self.records, task, next_state, queue, dev);
                     cost += c;
                     if resume_now {
+                        sink.join_fire(t_eff, w as u32, task);
                         continuations.push((task, queue));
                     }
                 }
@@ -1190,7 +1361,9 @@ impl<'a> Scheduler<'a> {
                     self.tstats[ti].tasks_finished += 1;
                     self.live_tasks -= 1;
                     self.live_by_tenant[ti] -= 1;
+                    sink.task_finish(t_eff, w as u32, task, ti as u16);
                     if let FinishEffect::ResumeParent { parent, queue } = eff {
+                        sink.join_fire(t_eff, w as u32, parent);
                         continuations.push((parent, queue));
                     }
                 }
@@ -1215,14 +1388,14 @@ impl<'a> Scheduler<'a> {
             if ids.is_empty() {
                 continue;
             }
-            cost += self.push_with_spill(w, q, now + cost, ids, "spawned children")?;
+            cost += self.push_with_spill(w, q, now + cost, ids, "spawned children", sink)?;
         }
         for &(task, queue) in continuations.iter() {
             let m = self.records.meta(task);
             let q = policy
                 .placement
                 .place_continuation(queue as usize, nq, m.depth, m.priority);
-            cost += self.push_with_spill(w, q, now + cost, &[task], "a continuation")?;
+            cost += self.push_with_spill(w, q, now + cost, &[task], "a continuation", sink)?;
         }
 
         let batch_len = batch.len();
@@ -1245,13 +1418,15 @@ impl<'a> Scheduler<'a> {
         self.sm_ready[sm] = start + issue_demand / dev.issue_warps as u64;
         let dur = cost + stall;
 
-        profiler.record(TimelineEvent {
+        sink.iteration(&IterEvent {
             worker: w as u32,
             start: now,
             busy: busy_cycles,
             overhead: dur - busy_cycles,
             active_lanes: batch_len as u8,
             path_groups: groups as u8,
+            tier: acq_tier,
+            class: acq_class as u16,
         });
         Ok(dur)
     }
@@ -1276,7 +1451,12 @@ impl<'a> Scheduler<'a> {
     /// Deliver every fault due for worker `w` at `now`. Stalls and kills
     /// preempt the iteration; steal failures and drops only mutate state
     /// and let the iteration proceed.
-    fn deliver_faults(&mut self, w: usize, now: u64) -> Result<FaultAction> {
+    fn deliver_faults<S: TraceSink>(
+        &mut self,
+        w: usize,
+        now: u64,
+        sink: &mut S,
+    ) -> Result<FaultAction> {
         loop {
             let Some(ev) = self.faults.as_mut().and_then(|f| f.next_due(w, now)) else {
                 return Ok(FaultAction::Proceed);
@@ -1284,6 +1464,7 @@ impl<'a> Scheduler<'a> {
             match ev.kind {
                 FaultKind::Stall { cycles } => {
                     self.stats.faults_injected += 1;
+                    sink.fault(now, w as u32, "stall");
                     return Ok(FaultAction::Stall(cycles.max(1)));
                 }
                 FaultKind::Kill => {
@@ -1297,13 +1478,15 @@ impl<'a> Scheduler<'a> {
                     fs.live_workers -= 1;
                     self.stats.faults_injected += 1;
                     self.stats.workers_lost += 1;
-                    self.reclaim_worker(w, now)?;
+                    sink.fault(now, w as u32, "kill");
+                    self.reclaim_worker(w, now, sink)?;
                     return Ok(FaultAction::Park);
                 }
                 FaultKind::StealFail { count } => {
                     let fs = self.faults.as_mut().unwrap();
                     fs.steal_suppress[w] = fs.steal_suppress[w].saturating_add(count);
                     self.stats.faults_injected += 1;
+                    sink.fault(now, w as u32, "steal-fail");
                 }
                 FaultKind::Drop { queue } => {
                     // Counted only when an entry actually vanished; a drop
@@ -1313,6 +1496,7 @@ impl<'a> Scheduler<'a> {
                     let q = queue % self.cfg.num_queues;
                     if self.queues.drop_newest(w, q).is_some() {
                         self.stats.faults_injected += 1;
+                        sink.fault(now, w as u32, "drop");
                     }
                 }
             }
@@ -1323,7 +1507,7 @@ impl<'a> Scheduler<'a> {
     /// its queue classes, and (when no surviving peer shares its SM) its
     /// SM tier pool — and hand it to the next surviving worker. Recovery
     /// is host/driver intervention: it charges no simulated cycles.
-    fn reclaim_worker(&mut self, w: usize, now: u64) -> Result<()> {
+    fn reclaim_worker<S: TraceSink>(&mut self, w: usize, now: u64, sink: &mut S) -> Result<()> {
         let target = {
             let dead = &self.faults.as_ref().unwrap().dead;
             let n = self.workers.len();
@@ -1335,14 +1519,14 @@ impl<'a> Scheduler<'a> {
         let mut lost: Vec<TaskId> = std::mem::take(&mut self.workers[w].immediate);
         if !lost.is_empty() {
             self.stats.tasks_reexecuted += lost.len() as u64;
-            self.push_with_spill(target, 0, now, &lost, "reclaimed work")?;
+            self.push_with_spill(target, 0, now, &lost, "reclaimed work", sink)?;
         }
         for q in 0..self.cfg.num_queues {
             lost.clear();
             self.queues.drain_worker(w, q, &mut lost);
             if !lost.is_empty() {
                 self.stats.tasks_reexecuted += lost.len() as u64;
-                self.push_with_spill(target, q, now, &lost, "reclaimed work")?;
+                self.push_with_spill(target, q, now, &lost, "reclaimed work", sink)?;
             }
         }
         // A dead worker's SM pool is reachable only by same-SM peers; when
@@ -1361,7 +1545,8 @@ impl<'a> Scheduler<'a> {
                 if !lost.is_empty() {
                     self.stats.sm_pool_hits += lost.len() as u64;
                     self.stats.tasks_reexecuted += lost.len() as u64;
-                    self.push_with_spill(target, 0, now, &lost, "reclaimed work")?;
+                    sink.sm_pool_hit(now, target as u32, lost.len() as u32);
+                    self.push_with_spill(target, 0, now, &lost, "reclaimed work", sink)?;
                 }
             }
         }
@@ -1376,14 +1561,15 @@ impl<'a> Scheduler<'a> {
     /// [`Scheduler::evict_on_watchdog_trip`] opted into surfacing the
     /// deadlock as typed per-tenant Watchdog evictions (the service
     /// layer's retryable form of the same loss).
-    fn watchdog_trip(&mut self, now: u64) -> Result<()> {
+    fn watchdog_trip<S: TraceSink>(&mut self, now: u64, sink: &mut S) -> Result<()> {
         self.stats.watchdog_trips += 1;
+        sink.watchdog_trip(now, self.live_tasks);
         let lost = recovery::lost_tasks(&self.records);
         if self.faults.is_none() || lost.is_empty() {
             if self.evict_on_trip {
                 for t in 0..self.tstats.len() {
                     if self.live_by_tenant[t] > 0 {
-                        self.evict_tenant_as(t, now, EvictCause::Watchdog);
+                        self.evict_tenant_as(t, now, EvictCause::Watchdog, sink);
                     }
                 }
                 return Ok(());
@@ -1394,14 +1580,14 @@ impl<'a> Scheduler<'a> {
                 self.live_tasks
             );
         }
-        self.requeue_lost(&lost, now)
+        self.requeue_lost(&lost, now, sink)
     }
 
     /// Re-enqueue recovered tasks onto surviving workers (round-robin),
     /// routed by the run's **Placement** policy from each record's
     /// retained lineage: never-started tasks re-enter as fresh placements,
     /// suspended ones as continuations on their recorded join queue.
-    fn requeue_lost(&mut self, lost: &[TaskId], now: u64) -> Result<()> {
+    fn requeue_lost<S: TraceSink>(&mut self, lost: &[TaskId], now: u64, sink: &mut S) -> Result<()> {
         let nq = self.cfg.num_queues;
         let policy = self.policy;
         let n = self.workers.len();
@@ -1421,7 +1607,7 @@ impl<'a> Scheduler<'a> {
                     .place_continuation(join_queue as usize, nq, depth, priority)
             };
             let target = survivors[i % survivors.len()];
-            self.push_with_spill(target, q, now, &[task], "recovered work")?;
+            self.push_with_spill(target, q, now, &[task], "recovered work", sink)?;
         }
         self.stats.tasks_reexecuted += lost.len() as u64;
         Ok(())
@@ -1442,13 +1628,13 @@ impl<'a> Scheduler<'a> {
 
     /// Fire any armed per-tenant deadlines due at `now`, in slot order.
     /// Cold path: entered only when `set_tenant_deadline` armed one.
-    fn enforce_tenant_deadlines(&mut self, now: u64) {
+    fn enforce_tenant_deadlines<S: TraceSink>(&mut self, now: u64, sink: &mut S) {
         for t in 0..self.tenant_deadline.len() {
             if let Some(dl) = self.tenant_deadline[t] {
                 if now >= dl {
                     self.tenant_deadline[t] = None;
                     if self.live_by_tenant[t] > 0 {
-                        self.evict_tenant(t, now);
+                        self.evict_tenant_as(t, now, EvictCause::Deadline, sink);
                     }
                 }
             }
@@ -1550,6 +1736,7 @@ impl<'a> Scheduler<'a> {
         // keep later tenants' round-robin root spread identical to a
         // spawn_root_for in this slot
         self.roots_spawned += 1;
+        self.restored_any = true;
         // re-enqueue the runnable frontier: raw pushes (uncosted,
         // uncounted — host intervention), routed like recovered work
         let nq = self.cfg.num_queues;
@@ -1608,15 +1795,18 @@ impl<'a> Scheduler<'a> {
     /// intervention: it charges no simulated cycles and increments no
     /// fleet `RunStats` counters, so co-tenant accounting is untouched.
     pub fn evict_tenant(&mut self, t: usize, now: u64) {
-        self.evict_tenant_as(t, now, EvictCause::Deadline);
+        self.evict_tenant_as(t, now, EvictCause::Deadline, &mut NoTrace);
     }
 
     /// [`Scheduler::evict_tenant`] with an explicit typed cause (and, when
     /// checkpointing is enabled, a lineage capture before the records go).
-    fn evict_tenant_as(&mut self, t: usize, now: u64, cause: EvictCause) {
+    fn evict_tenant_as<S: TraceSink>(&mut self, t: usize, now: u64, cause: EvictCause, sink: &mut S) {
         let tenant = t as u16;
         if self.checkpoints_enabled {
             self.checkpoints[t] = checkpoint::capture(&self.records, tenant, self.roots[t]);
+            if let Some(ck) = self.checkpoints[t].as_ref() {
+                sink.checkpoint_capture(now, tenant, ck.tasks.len() as u32);
+            }
         }
         let dev = self.dev;
         {
@@ -1702,6 +1892,7 @@ impl<'a> Scheduler<'a> {
         self.tstats[t].evicted = true;
         self.tstats[t].evict_cause = Some(cause);
         self.tstats[t].completed_at = Some(now);
+        sink.tenant_evicted(now, tenant, cause.name());
     }
 
     /// First-class abort: discard all queued work, release every live
@@ -1710,6 +1901,14 @@ impl<'a> Scheduler<'a> {
     /// reports `drained = true` and no root result; every tenant with
     /// work still live is marked evicted.
     pub fn drain(&mut self) {
+        self.drain_with(0, &mut NoTrace);
+    }
+
+    /// [`Scheduler::drain`] with the run's observability sink (and the
+    /// drain time, so eviction events land at the right timestamp). The
+    /// run loop's fault-deadline path uses this; the public `drain`
+    /// keeps its historical unobserved signature.
+    fn drain_with<S: TraceSink>(&mut self, now: u64, sink: &mut S) {
         if self.checkpoints_enabled {
             // lineage capture precedes the record release, per tenant with
             // live work — the whole-run drain is just every tenant's
@@ -1718,18 +1917,21 @@ impl<'a> Scheduler<'a> {
                 if self.live_by_tenant[t] > 0 {
                     self.checkpoints[t] =
                         checkpoint::capture(&self.records, t as u16, self.roots[t]);
+                    if let Some(ck) = self.checkpoints[t].as_ref() {
+                        sink.checkpoint_capture(now, t as u16, ck.tasks.len() as u32);
+                    }
                 }
             }
         }
         for ws in &mut self.workers {
             ws.immediate.clear();
         }
-        let mut sink: Vec<TaskId> = Vec::new();
-        self.queues.drain_all(&mut sink);
-        self.sm_pool.drain_all(&mut sink);
-        sink.clear();
-        self.records.for_each_alive(|id, _| sink.push(id));
-        for id in sink {
+        let mut buf: Vec<TaskId> = Vec::new();
+        self.queues.drain_all(&mut buf);
+        self.sm_pool.drain_all(&mut buf);
+        buf.clear();
+        self.records.for_each_alive(|id, _| buf.push(id));
+        for id in buf {
             self.records.free(id);
         }
         for t in 0..self.tstats.len() {
@@ -1738,6 +1940,7 @@ impl<'a> Scheduler<'a> {
                 self.roots[t] = NO_TASK;
                 self.tstats[t].evicted = true;
                 self.tstats[t].evict_cause = Some(EvictCause::Drain);
+                sink.tenant_evicted(now, t as u16, EvictCause::Drain.name());
             }
         }
         self.live_tasks = 0;
@@ -1757,4 +1960,88 @@ enum FaultAction {
     Stall(u64),
     /// The worker is dead: park its clock permanently.
     Park,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coherent() -> RunStats {
+        RunStats {
+            tasks_finished: 10,
+            segments: 25,
+            spawns: 9,
+            steals_ok: 3,
+            steal_attempts: 7,
+            iterations: 40,
+            idle_iterations: 12,
+            sm_spills: 4,
+            sm_pool_hits: 4,
+            ..RunStats::default()
+        }
+    }
+
+    #[test]
+    fn coherent_stats_pass() {
+        assert!(coherent().coherence_violations(Some(1)).is_empty());
+        assert!(coherent().coherence_violations(None).is_empty());
+    }
+
+    #[test]
+    fn steals_ok_bounded_by_attempts() {
+        let s = RunStats {
+            steals_ok: 8,
+            ..coherent()
+        };
+        let v = s.coherence_violations(None);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("steals_ok"), "{v:?}");
+    }
+
+    #[test]
+    fn idle_iterations_bounded_by_iterations() {
+        let s = RunStats {
+            idle_iterations: 41,
+            ..coherent()
+        };
+        let v = s.coherence_violations(None);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("idle_iterations"), "{v:?}");
+    }
+
+    #[test]
+    fn finishes_bounded_by_segments() {
+        let s = RunStats {
+            segments: 9,
+            ..coherent()
+        };
+        let v = s.coherence_violations(None);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("segments"), "{v:?}");
+    }
+
+    #[test]
+    fn sm_pool_conserves_at_quiescence() {
+        let s = RunStats {
+            sm_pool_hits: 3,
+            ..coherent()
+        };
+        // only checked at clean quiescence
+        assert!(s.coherence_violations(None).is_empty());
+        let v = s.coherence_violations(Some(1));
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("sm_pool_hits"), "{v:?}");
+    }
+
+    #[test]
+    fn lineage_conserves_at_quiescence() {
+        let s = RunStats {
+            spawns: 5,
+            ..coherent()
+        };
+        assert!(s.coherence_violations(None).is_empty());
+        let v = s.coherence_violations(Some(1));
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("tasks_finished"), "{v:?}");
+    }
 }

@@ -32,9 +32,9 @@ use crate::compiler;
 use crate::ir::bytecode::Module;
 use crate::ir::lowered::LoweredModule;
 use crate::ir::types::Value;
+use crate::obs::trace::{NoTrace, TraceSink};
 use crate::sim::config::DeviceSpec;
 use crate::sim::memory::Memory;
-use crate::sim::profile::Profiler;
 use crate::util::error::{Context, Result};
 use crate::{anyhow, bail};
 
@@ -135,23 +135,27 @@ impl Session {
 
     /// Run `entry(args…)` to quiescence with default instrumentation.
     pub fn run(&mut self, entry: &str, args: &[Value]) -> Result<RunStats> {
-        let mut profiler = Profiler::disabled();
-        self.run_with(entry, args, None, &mut profiler)
+        self.run_with(entry, args, None, &mut NoTrace)
     }
 
-    /// Run with an optional XLA payload engine and a profiler.
-    pub fn run_with(
+    /// Run with an optional XLA payload engine and an observability
+    /// sink — a `Profiler` for the Fig. 6/9 timeline, an armed
+    /// `obs::Tracer`/`obs::MetricsRegistry` for the full event stream,
+    /// an `obs::Fanout` for both, or `NoTrace` for none. Sinks never
+    /// perturb the run: `RunStats` are byte-identical across all of
+    /// them (`tests/obs.rs`).
+    pub fn run_with<S: TraceSink>(
         &mut self,
         entry: &str,
         args: &[Value],
         engine: Option<&mut dyn PayloadEngine>,
-        profiler: &mut Profiler,
+        sink: &mut S,
     ) -> Result<RunStats> {
         // Borrows the session's cached lowering — `Scheduler::new` does no
         // decode/fuse/trace work, so repeated runs cost pool setup only.
         let mut sched = Scheduler::new(&self.lowered, &self.config, &self.device)?;
         sched.spawn_root(entry, args)?;
-        sched.run(&mut self.memory, engine, profiler)
+        sched.run(&mut self.memory, engine, sink)
     }
 }
 

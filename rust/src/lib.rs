@@ -45,6 +45,10 @@
 //!   synthetic trees, BFS).
 //! * [`bench`] — the sweep/statistics/reporting harness behind every
 //!   `cargo bench` target (one per paper figure/table).
+//! * [`obs`] — first-class observability: the `TraceSink` trait the
+//!   scheduler loop is monomorphized over (off = zero cost), Chrome
+//!   trace-event export, and the deterministic metrics registry with
+//!   per-round service snapshots.
 //! * [`util`] — PRNG, stats, CLI parsing and a small property-testing
 //!   framework (the registry in this environment has no proptest/criterion).
 
@@ -53,6 +57,7 @@ pub mod compiler;
 pub mod coordinator;
 pub mod host;
 pub mod ir;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod util;

@@ -47,13 +47,15 @@ fn main() -> Result<()> {
                  \n      [--policy default|recommended] [--memsys flat|modeled] \\\
                  \n      [--faults off|<spec>]  (spec: stall@T:wN:C kill@T:wN stealfail@T:wN:C\
                  \n                              drop@T:wN[:qQ] deadline@C rand:SEED[:N], ;-joined)\
+                 \n      [--trace out.json]     (Chrome trace-event JSON; load in Perfetto)\
                  \n  gtap service [--grid G] [--block B] [--jobs N] \\\
                  \n      [--admission fifo|fair|priority] [--fib-n N] [--tree-depth D] \\\
                  \n      [--bfs-n N] [--deadline C] [--cancel] [--seed S] \\\
                  \n      [--memsys flat|modeled] [--faults off|<spec>] \\\
                  \n      [--retry on|off] [--max-retries N] [--retry-budget N] \\\
                  \n      [--backoff-base C] [--quarantine-after N] \\\
-                 \n      [--shed-watermark N] [--checkpoint on|off]\
+                 \n      [--shed-watermark N] [--checkpoint on|off] \\\
+                 \n      [--trace out.json] [--metrics out.jsonl]\
                  \n                                     multi-tenant service-engine smoke\
                  \n  gtap devices                       device cost models (Table 2)\
                  \n  gtap config                        runtime defaults (Table 1)"
@@ -153,7 +155,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     let Some(bench) = args.positional.get(1).cloned() else {
         bail!("usage: gtap run <bench> …");
     };
-    let exec = build_exec(args)?;
+    let mut exec = build_exec(args)?;
+    if args.get("trace").is_some() {
+        exec = exec.traced();
+    }
     let epaq = args.flag("epaq");
     let t_host = std::time::Instant::now();
     let out = match bench.as_str() {
@@ -238,6 +243,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(report) = Profiler::memsys_report(&out.stats.memsys) {
         println!("  {report}");
     }
+    if let Some(report) = Profiler::memsys_class_report(&out.stats.memsys_by_class) {
+        println!("  {report}");
+    }
     if let Some(report) = Profiler::fault_report(
         out.stats.faults_injected,
         out.stats.workers_lost,
@@ -249,6 +257,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if let Some(r) = out.stats.root_result {
         println!("  result: {}", r.as_i64());
+    }
+    if let Some(path) = args.get("trace") {
+        let tr = out.trace.as_ref().expect("traced run carries a tracer");
+        std::fs::write(path, tr.to_chrome_trace())?;
+        println!("  trace: {} event(s) -> {path}", tr.len());
     }
     eprintln!("  (host wallclock {:?})", t_host.elapsed());
     Ok(())
@@ -360,9 +373,30 @@ fn cmd_service(args: &Args) -> Result<()> {
     const T_TREE: u16 = 1;
     const T_BFS: u16 = 2;
 
-    let run_schedule = || -> Result<(Vec<JobOutcome>, Vec<i64>, i64, u64, String)> {
+    /// One full submission schedule against a fresh engine, plus the
+    /// observability artifacts when armed.
+    struct ScheduleRun {
+        outs: Vec<JobOutcome>,
+        depths: Vec<i64>,
+        acc_val: i64,
+        tree_reexec: u64,
+        report: String,
+        trace_json: Option<String>,
+        metric_lines: Vec<String>,
+    }
+
+    // Observability is armed only on the first schedule run; the second
+    // (replay) run stays unarmed, so the byte-equality check below doubles
+    // as an end-to-end pin that tracing never perturbs outcomes.
+    let run_schedule = |observe: bool| -> Result<ScheduleRun> {
         let mut eng = ServiceEngine::new(cfg.clone(), DeviceSpec::h100(), admission)?;
         eng.set_resilience(resil);
+        if observe && args.get("trace").is_some() {
+            eng.enable_tracing();
+        }
+        if observe && args.get("metrics").is_some() {
+            eng.enable_metrics();
+        }
         let tf = eng.open_session("fib", &fib_src)?;
         let tt = eng.open_session("tree", &tree_src)?;
         let tb = eng.open_session("bfs", &bfs_src)?;
@@ -411,16 +445,57 @@ fn cmd_service(args: &Args) -> Result<()> {
         let depths = eng.memory(tb).read_i64s(dp, graph.n as u64);
         let acc_val = eng.memory(tt).read_i64s(acc, 1)[0];
         let tree_reexec = eng.accounting(T_TREE).tasks_reexecuted;
-        Ok((outs, depths, acc_val, tree_reexec, eng.report()))
+        let trace_json = eng.take_trace().map(|t| t.to_chrome_trace());
+        let metric_lines = eng
+            .take_metrics()
+            .iter()
+            .map(|s| s.to_json())
+            .collect::<Vec<_>>();
+        Ok(ScheduleRun {
+            outs,
+            depths,
+            acc_val,
+            tree_reexec,
+            report: eng.report(),
+            trace_json,
+            metric_lines,
+        })
     };
 
     let t_host = std::time::Instant::now();
-    let (outs, depths, acc_val, tree_reexec, report) = run_schedule()?;
-    let (outs2, depths2, acc2, reexec2, _) = run_schedule()?;
-    if outs != outs2 || depths != depths2 || acc_val != acc2 || tree_reexec != reexec2 {
+    let run = run_schedule(true)?;
+    let replay = run_schedule(false)?;
+    if run.outs != replay.outs
+        || run.depths != replay.depths
+        || run.acc_val != replay.acc_val
+        || run.tree_reexec != replay.tree_reexec
+    {
         bail!("replay mismatch: the same submission schedule produced different outcomes");
     }
+    let ScheduleRun {
+        outs,
+        depths,
+        acc_val,
+        tree_reexec,
+        report,
+        trace_json,
+        metric_lines,
+    } = run;
     print!("{report}");
+    if let Some(path) = args.get("trace") {
+        let json = trace_json.expect("tracing was armed on the first run");
+        std::fs::write(path, json)?;
+        println!("  trace -> {path}");
+    }
+    if let Some(path) = args.get("metrics") {
+        let mut body = String::new();
+        for line in &metric_lines {
+            body.push_str(line);
+            body.push('\n');
+        }
+        std::fs::write(path, body)?;
+        println!("  metrics: {} round snapshot(s) -> {path}", metric_lines.len());
+    }
 
     // fib: every completed job returns the closed form (idempotent under
     // fault re-execution, so faults don't gate this check)

@@ -1,0 +1,583 @@
+//! Typed metrics fed from the trace hooks: counters, gauges,
+//! fixed-bucket histograms, and interval time series — all integer
+//! (power-of-two bucket edges, parts-per-1024 rates), so snapshots are
+//! bit-deterministic across platforms.
+//!
+//! [`MetricsRegistry`] is itself a [`TraceSink`]: arm it on a run (or
+//! fan it out next to a [`Tracer`](super::trace::Tracer)) and it folds
+//! the event stream into queue-depth / steal-success-rate series and
+//! per-tier segment-latency histograms. [`MetricsSnapshot`] is the
+//! service-side face: one JSONL line per engine round, carrying the
+//! per-tenant resilience taxonomy (retries, backoff waits, quarantine
+//! opens, sheds, checkpointed re-executions).
+
+use crate::obs::trace::{AcquireTier, IterEvent, SampleRecord, TraceSink};
+use crate::sim::memsys::MemSysStats;
+
+/// Monotone event count.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counter(pub u64);
+
+impl Counter {
+    /// Add one.
+    #[inline]
+    pub fn inc(&mut self) {
+        self.0 += 1;
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&mut self, n: u64) {
+        self.0 += n;
+    }
+
+    /// Current value.
+    pub fn get(self) -> u64 {
+        self.0
+    }
+}
+
+/// Last-observed value (point-in-time, not monotone).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Gauge(pub u64);
+
+impl Gauge {
+    /// Overwrite with the latest observation.
+    #[inline]
+    pub fn set(&mut self, v: u64) {
+        self.0 = v;
+    }
+
+    /// Current value.
+    pub fn get(self) -> u64 {
+        self.0
+    }
+}
+
+/// Number of histogram buckets: bucket `i` holds values in
+/// `[2^(i-1), 2^i)` (bucket 0 holds 0), with the last bucket absorbing
+/// everything `>= 2^30`. Edges are integers — no floats anywhere.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Fixed power-of-two-bucket histogram over `u64` observations.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    /// Per-bucket observation counts.
+    pub counts: [u64; HIST_BUCKETS],
+    /// Total observations.
+    pub total: u64,
+    /// Sum of all observed values (exact, not bucketed).
+    pub sum: u64,
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Histogram { counts: [0; HIST_BUCKETS], total: 0, sum: 0 }
+    }
+
+    /// Bucket index for a value: 0 for 0, else `1 + floor(log2 v)`,
+    /// clamped to the last bucket.
+    #[inline]
+    pub fn bucket(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Record one observation.
+    #[inline]
+    pub fn observe(&mut self, v: u64) {
+        self.counts[Self::bucket(v)] += 1;
+        self.total += 1;
+        self.sum += v;
+    }
+
+    /// Inclusive upper edge of bucket `i` (`u64::MAX` for the last).
+    pub fn upper_edge(i: usize) -> u64 {
+        if i >= HIST_BUCKETS - 1 {
+            u64::MAX
+        } else if i == 0 {
+            0
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    /// Smallest bucket upper edge at or above quantile `q_num/q_den`
+    /// of the observations (a deterministic integer percentile proxy).
+    pub fn quantile_edge(&self, q_num: u64, q_den: u64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (self.total * q_num).div_ceil(q_den);
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::upper_edge(i);
+            }
+        }
+        u64::MAX
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One point of the interval time series, taken at an event-loop
+/// boundary. Rates are derived, not stored: steal success rate at a
+/// point is `steals_ok * 1024 / steal_attempts` (parts per 1024).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SeriesPoint {
+    /// Simulated time of the sample.
+    pub t: u64,
+    /// Raw sampled scheduler state.
+    pub s: SampleRecord,
+}
+
+/// Event-stream-fed metrics registry. Arm it as a [`TraceSink`] (it
+/// sets `SAMPLING`, so the scheduler delivers interval samples).
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    /// Tasks spawned (including host root spawns).
+    pub spawns: Counter,
+    /// Tasks finished.
+    pub finishes: Counter,
+    /// Steal attempts.
+    pub steal_attempts: Counter,
+    /// Successful steals.
+    pub steals_ok: Counter,
+    /// Join barriers fired.
+    pub joins: Counter,
+    /// Tasks spilled into SM pools.
+    pub sm_spills: Counter,
+    /// Tasks drained from SM pools.
+    pub sm_pool_hits: Counter,
+    /// Faults delivered.
+    pub faults: Counter,
+    /// Watchdog trips.
+    pub watchdog_trips: Counter,
+    /// Tenant evictions.
+    pub evictions: Counter,
+    /// Checkpoint captures.
+    pub checkpoints: Counter,
+    /// Last-sampled live task count.
+    pub live: Gauge,
+    /// Last-sampled queue depth.
+    pub queue_depth: Gauge,
+    /// Per-acquire-tier busy-cycle (segment latency) histograms,
+    /// indexed by [`AcquireTier::index`].
+    pub seg_latency: [Histogram; AcquireTier::COUNT],
+    /// Per-tier acquired-batch counts.
+    pub acquires: [Counter; AcquireTier::COUNT],
+    /// Interval samples (queue depth + steal counters over time).
+    pub series: Vec<SeriesPoint>,
+}
+
+impl MetricsRegistry {
+    /// Fresh, empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Steal success rate in parts per 1024 (integer; 1024 = 100%).
+    pub fn steal_success_permille(&self) -> u64 {
+        if self.steal_attempts.0 == 0 {
+            0
+        } else {
+            self.steals_ok.0 * 1024 / self.steal_attempts.0
+        }
+    }
+
+    /// Per-queue-class L1/L2 hit rates (parts per 1024) from
+    /// `RunStats::memsys_by_class`. Returns one row per class:
+    /// `(class, l1_permille, l2_permille, transactions)`.
+    pub fn memsys_class_rates(by_class: &[MemSysStats]) -> Vec<(usize, u64, u64, u64)> {
+        by_class
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                let l1t = m.l1_hits + m.l1_misses;
+                let l2t = m.l2_hits + m.l2_misses;
+                let l1 = if l1t == 0 { 0 } else { m.l1_hits * 1024 / l1t };
+                let l2 = if l2t == 0 { 0 } else { m.l2_hits * 1024 / l2t };
+                (i, l1, l2, m.transactions)
+            })
+            .collect()
+    }
+
+    /// Human-readable multi-line report (for `gtap run` footer).
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "obs: {} spawns, {} finishes, {} joins, steals {}/{} ({}‰ of 1024), sm pool {}/{} spill/hit\n",
+            self.spawns.0,
+            self.finishes.0,
+            self.joins.0,
+            self.steals_ok.0,
+            self.steal_attempts.0,
+            self.steal_success_permille(),
+            self.sm_spills.0,
+            self.sm_pool_hits.0,
+        ));
+        for tier in [
+            AcquireTier::Immediate,
+            AcquireTier::Own,
+            AcquireTier::SmPool,
+            AcquireTier::Steal,
+        ] {
+            let h = &self.seg_latency[tier.index()];
+            if h.total == 0 {
+                continue;
+            }
+            s.push_str(&format!(
+                "obs: tier {:<9} {:>7} segments, busy p50<={} p99<={} cycles\n",
+                tier.name(),
+                h.total,
+                h.quantile_edge(1, 2),
+                h.quantile_edge(99, 100),
+            ));
+        }
+        s.push_str(&format!("obs: {} samples, final queue depth {}, live {}", self.series.len(), self.queue_depth.0, self.live.0));
+        s
+    }
+
+    /// Serialize counters, histograms and the sample series as one
+    /// JSON object (used by `gtap run --metrics`-style dumps and CI
+    /// schema checks).
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(1024 + self.series.len() * 64);
+        s.push_str("{\"counters\":{");
+        let counters = [
+            ("spawns", self.spawns.0),
+            ("finishes", self.finishes.0),
+            ("steal_attempts", self.steal_attempts.0),
+            ("steals_ok", self.steals_ok.0),
+            ("joins", self.joins.0),
+            ("sm_spills", self.sm_spills.0),
+            ("sm_pool_hits", self.sm_pool_hits.0),
+            ("faults", self.faults.0),
+            ("watchdog_trips", self.watchdog_trips.0),
+            ("evictions", self.evictions.0),
+            ("checkpoints", self.checkpoints.0),
+        ];
+        for (i, (k, v)) in counters.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\"{k}\":{v}"));
+        }
+        s.push_str(&format!(
+            "}},\"steal_success_permille\":{},\"seg_latency\":[",
+            self.steal_success_permille()
+        ));
+        let mut first = true;
+        for tier in [
+            AcquireTier::Immediate,
+            AcquireTier::Own,
+            AcquireTier::SmPool,
+            AcquireTier::Steal,
+        ] {
+            let h = &self.seg_latency[tier.index()];
+            if !first {
+                s.push(',');
+            }
+            first = false;
+            s.push_str(&format!(
+                "{{\"tier\":\"{}\",\"total\":{},\"sum\":{},\"p50_edge\":{},\"p99_edge\":{}}}",
+                tier.name(),
+                h.total,
+                h.sum,
+                h.quantile_edge(1, 2),
+                h.quantile_edge(99, 100)
+            ));
+        }
+        s.push_str("],\"series\":[");
+        for (i, p) in self.series.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"t\":{},\"queued\":{},\"sm_pooled\":{},\"immediate\":{},\"live\":{},\"steal_attempts\":{},\"steals_ok\":{}}}",
+                p.t, p.s.queue_depth, p.s.sm_pooled, p.s.immediate, p.s.live_tasks,
+                p.s.steal_attempts, p.s.steals_ok
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+impl TraceSink for MetricsRegistry {
+    const SAMPLING: bool = true;
+
+    #[inline]
+    fn iteration(&mut self, ev: &IterEvent) {
+        if ev.busy > 0 {
+            self.seg_latency[ev.tier.index()].observe(ev.busy);
+        }
+    }
+    #[inline]
+    fn task_spawn(&mut self, _t: u64, _worker: u32, _task: u32, _tenant: u16, _func: u16) {
+        self.spawns.inc();
+    }
+    #[inline]
+    fn task_finish(&mut self, _t: u64, _worker: u32, _task: u32, _tenant: u16) {
+        self.finishes.inc();
+    }
+    #[inline]
+    fn task_acquire(&mut self, _t: u64, _worker: u32, _count: u32, tier: AcquireTier, _class: u16) {
+        self.acquires[tier.index()].inc();
+    }
+    #[inline]
+    fn steal_attempt(&mut self, _t: u64, _worker: u32, _victim: u32) {
+        self.steal_attempts.inc();
+    }
+    #[inline]
+    fn steal_ok(&mut self, _t: u64, _worker: u32, _victim: u32, amount: u32) {
+        let _ = amount;
+        self.steals_ok.inc();
+    }
+    #[inline]
+    fn join_fire(&mut self, _t: u64, _worker: u32, _task: u32) {
+        self.joins.inc();
+    }
+    #[inline]
+    fn sm_spill(&mut self, _t: u64, _worker: u32, count: u32) {
+        self.sm_spills.add(u64::from(count));
+    }
+    #[inline]
+    fn sm_pool_hit(&mut self, _t: u64, _worker: u32, count: u32) {
+        self.sm_pool_hits.add(u64::from(count));
+    }
+    #[inline]
+    fn fault(&mut self, _t: u64, _worker: u32, _kind: &'static str) {
+        self.faults.inc();
+    }
+    #[inline]
+    fn watchdog_trip(&mut self, _t: u64, _live: u64) {
+        self.watchdog_trips.inc();
+    }
+    #[inline]
+    fn checkpoint_capture(&mut self, _t: u64, _tenant: u16, _tasks: u32) {
+        self.checkpoints.inc();
+    }
+    #[inline]
+    fn tenant_evicted(&mut self, _t: u64, _tenant: u16, _cause: &'static str) {
+        self.evictions.inc();
+    }
+    #[inline]
+    fn sample(&mut self, t: u64, s: &SampleRecord) {
+        self.live.set(s.live_tasks);
+        self.queue_depth.set(s.queue_depth);
+        self.series.push(SeriesPoint { t, s: *s });
+    }
+}
+
+/// Per-tenant slice of one service round: deltas of the tenant's
+/// accounting since the previous snapshot, plus the PR 9 resilience
+/// state. All fields are integers; `to_json` needs no escaping beyond
+/// the tenant name.
+#[derive(Clone, Debug, Default)]
+pub struct TenantRound {
+    /// Tenant slot index.
+    pub tenant: u16,
+    /// Tenant display name.
+    pub name: String,
+    /// Whether this tenant had a job admitted this round.
+    pub admitted: bool,
+    /// Jobs completed this round.
+    pub completed: u64,
+    /// Jobs evicted this round.
+    pub evicted: u64,
+    /// Jobs terminally failed this round.
+    pub failed: u64,
+    /// Jobs shed (admission-control rejections) since last snapshot.
+    pub shed: u64,
+    /// Jobs cancelled this round.
+    pub cancelled: u64,
+    /// Retries scheduled this round.
+    pub retried: u64,
+    /// Tasks finished this round.
+    pub tasks_finished: u64,
+    /// Tasks spawned this round.
+    pub spawns: u64,
+    /// Segments executed this round.
+    pub segments: u64,
+    /// Tasks re-executed (non-checkpointed retry cost) this round.
+    pub tasks_reexecuted: u64,
+    /// Checkpoint restores performed for this tenant this round.
+    pub checkpoint_restores: u64,
+    /// Pending jobs currently gated behind a backoff `not_before`.
+    pub backing_off: u64,
+    /// True if the tenant is quarantined after this round.
+    pub quarantined: bool,
+}
+
+/// One service-engine round, streamed as a JSONL line via
+/// `gtap service --metrics <path>`.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    /// Round index (0-based, counting only rounds that ran).
+    pub round: u64,
+    /// Virtual clock at round start.
+    pub started: u64,
+    /// Virtual clock after the round's makespan was added.
+    pub ended: u64,
+    /// Fleet makespan of the round in simulated cycles.
+    pub cycles: u64,
+    /// Jobs admitted into the round.
+    pub admitted: u64,
+    /// Jobs still pending after the round.
+    pub pending_after: u64,
+    /// Cumulative backpressure rejections so far.
+    pub backpressure_events: u64,
+    /// Per-tenant deltas and resilience state.
+    pub tenants: Vec<TenantRound>,
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl MetricsSnapshot {
+    /// Serialize as a single JSON line (no trailing newline).
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(256 + self.tenants.len() * 256);
+        s.push_str(&format!(
+            "{{\"round\":{},\"started\":{},\"ended\":{},\"cycles\":{},\"admitted\":{},\"pending_after\":{},\"backpressure_events\":{},\"tenants\":[",
+            self.round,
+            self.started,
+            self.ended,
+            self.cycles,
+            self.admitted,
+            self.pending_after,
+            self.backpressure_events
+        ));
+        for (i, t) in self.tenants.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"tenant\":{},\"name\":\"{}\",\"admitted\":{},\"completed\":{},\"evicted\":{},\"failed\":{},\"shed\":{},\"cancelled\":{},\"retried\":{},\"tasks_finished\":{},\"spawns\":{},\"segments\":{},\"tasks_reexecuted\":{},\"checkpoint_restores\":{},\"backing_off\":{},\"quarantined\":{}}}",
+                t.tenant,
+                escape(&t.name),
+                t.admitted,
+                t.completed,
+                t.evicted,
+                t.failed,
+                t.shed,
+                t.cancelled,
+                t.retried,
+                t.tasks_finished,
+                t.spawns,
+                t.segments,
+                t.tasks_reexecuted,
+                t.checkpoint_restores,
+                t.backing_off,
+                t.quarantined
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_are_pow2() {
+        assert_eq!(Histogram::bucket(0), 0);
+        assert_eq!(Histogram::bucket(1), 1);
+        assert_eq!(Histogram::bucket(2), 2);
+        assert_eq!(Histogram::bucket(3), 2);
+        assert_eq!(Histogram::bucket(4), 3);
+        assert_eq!(Histogram::bucket(u64::MAX), HIST_BUCKETS - 1);
+        let mut h = Histogram::new();
+        h.observe(3);
+        h.observe(5);
+        h.observe(5);
+        assert_eq!(h.total, 3);
+        assert_eq!(h.sum, 13);
+        // p50 of {3,5,5} falls in the [4,7] bucket -> edge 7.
+        assert_eq!(h.quantile_edge(1, 2), 7);
+    }
+
+    #[test]
+    fn registry_folds_events() {
+        let mut m = MetricsRegistry::new();
+        m.task_spawn(0, 0, 1, 0, 0);
+        m.task_finish(5, 0, 1, 0);
+        m.steal_attempt(1, 0, 1);
+        m.steal_attempt(2, 0, 1);
+        m.steal_ok(2, 0, 1, 4);
+        m.iteration(&IterEvent {
+            worker: 0,
+            start: 0,
+            busy: 9,
+            overhead: 1,
+            active_lanes: 1,
+            path_groups: 1,
+            tier: AcquireTier::Steal,
+            class: 0,
+        });
+        assert_eq!(m.spawns.0, 1);
+        assert_eq!(m.finishes.0, 1);
+        assert_eq!(m.steal_success_permille(), 512);
+        assert_eq!(m.seg_latency[AcquireTier::Steal.index()].total, 1);
+        let json = m.to_json();
+        assert!(json.contains("\"steals_ok\":1"));
+    }
+
+    #[test]
+    fn snapshot_json_is_one_object() {
+        let snap = MetricsSnapshot {
+            round: 2,
+            started: 100,
+            ended: 250,
+            cycles: 150,
+            admitted: 3,
+            pending_after: 1,
+            backpressure_events: 0,
+            tenants: vec![TenantRound {
+                tenant: 0,
+                name: "fib".into(),
+                admitted: true,
+                completed: 1,
+                retried: 0,
+                quarantined: false,
+                ..Default::default()
+            }],
+        };
+        let j = snap.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"name\":\"fib\""));
+        assert!(j.contains("\"quarantined\":false"));
+        assert!(!j.contains('\n'));
+    }
+
+    #[test]
+    fn memsys_class_rates_are_integer() {
+        let a = MemSysStats { l1_hits: 3, l1_misses: 1, transactions: 4, ..Default::default() };
+        let rows = MetricsRegistry::memsys_class_rates(&[a]);
+        assert_eq!(rows, vec![(0, 768, 0, 4)]);
+    }
+}

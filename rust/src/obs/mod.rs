@@ -1,0 +1,32 @@
+//! First-class observability: structured event tracing, a typed
+//! metrics registry, and Chrome-trace/JSONL exporters.
+//!
+//! * [`trace`] — the [`TraceSink`](trace::TraceSink) trait the
+//!   scheduler event loop is generic over (monomorphized like
+//!   `BranchSink`/`NoProfile`, so the unarmed path compiles to
+//!   nothing), the armed [`Tracer`](trace::Tracer) with per-worker
+//!   tracks and Chrome trace-event JSON export, and the
+//!   [`Fanout`](trace::Fanout) combinator.
+//! * [`metrics`] — integer-deterministic counters/gauges/histograms
+//!   fed from the same hooks ([`MetricsRegistry`](metrics::MetricsRegistry)),
+//!   plus the per-round, per-tenant service
+//!   [`MetricsSnapshot`](metrics::MetricsSnapshot) streamed as JSONL
+//!   by `gtap service --metrics`.
+//!
+//! Contract (pinned by `tests/obs.rs`): observability charges **zero
+//! simulated cycles** — arming any sink yields byte-identical
+//! `RunStats` to the unarmed run on every golden pin.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{Counter, Gauge, Histogram, MetricsRegistry, MetricsSnapshot, TenantRound};
+pub use trace::{
+    AcquireTier, ChromeEvent, Fanout, IterEvent, NoTrace, SampleRecord, TraceEvent, TraceSink,
+    Tracer, HOST_WORKER,
+};
+
+/// Interval between scheduler-state samples, in event-loop iterations.
+/// Power of two so the armed check is a mask, and coarse enough that
+/// queue walks stay cheap even on armed runs.
+pub const SAMPLE_EVERY: u64 = 256;

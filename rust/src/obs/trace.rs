@@ -1,0 +1,774 @@
+//! Structured event tracing: the [`TraceSink`] trait and its implementors.
+//!
+//! The sink is monomorphized into the scheduler event loop exactly like
+//! `BranchSink`/`NoProfile` in `sim::profile`: every hook is an inlined
+//! default-empty trait method, so the unarmed path ([`NoTrace`], or a
+//! [`Profiler`] acting as a timeline-only sink) compiles to nothing —
+//! no branches, no allocation, no simulated cycles. When armed
+//! ([`Tracer`], [`MetricsRegistry`](super::metrics::MetricsRegistry))
+//! the same call sites record simulated-timestamped events onto
+//! per-worker tracks.
+//!
+//! The load-bearing contract (pinned by `tests/obs.rs`): a sink only
+//! *observes* the simulation. Arming one never changes `RunStats`,
+//! path hashes, or any scheduling decision — every hook fires after the
+//! costs it describes have already been charged.
+
+use crate::sim::profile::{Profiler, TimelineEvent};
+
+/// How a worker iteration obtained its batch. Mirrors the acquisition
+/// ladder in `Scheduler::acquire`: immediate buffer, own queue, SM-tier
+/// pool, then stealing; `Idle` means the ladder came up empty.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AcquireTier {
+    /// No work found; the iteration backed off.
+    Idle,
+    /// Served from the worker's immediate (register-resident) buffer.
+    Immediate,
+    /// Popped from the worker's own queue.
+    Own,
+    /// Pulled from the SM-tier shared-memory pool.
+    SmPool,
+    /// Stolen from a victim's queue.
+    Steal,
+}
+
+impl AcquireTier {
+    /// Stable lowercase name for JSON emission.
+    pub fn name(self) -> &'static str {
+        match self {
+            AcquireTier::Idle => "idle",
+            AcquireTier::Immediate => "immediate",
+            AcquireTier::Own => "own",
+            AcquireTier::SmPool => "sm-pool",
+            AcquireTier::Steal => "steal",
+        }
+    }
+
+    /// Dense index for per-tier histogram arrays.
+    pub fn index(self) -> usize {
+        match self {
+            AcquireTier::Idle => 0,
+            AcquireTier::Immediate => 1,
+            AcquireTier::Own => 2,
+            AcquireTier::SmPool => 3,
+            AcquireTier::Steal => 4,
+        }
+    }
+
+    /// Number of distinct tiers (for sizing per-tier arrays).
+    pub const COUNT: usize = 5;
+}
+
+/// One completed worker iteration: the superset of the profiler's
+/// [`TimelineEvent`] plus where the batch came from. `busy == 0` marks
+/// an idle iteration (overhead = loop + backoff cycles).
+#[derive(Clone, Copy, Debug)]
+pub struct IterEvent {
+    /// Worker (warp or block) index.
+    pub worker: u32,
+    /// Simulated cycle at which the iteration began.
+    pub start: u64,
+    /// Cycles spent executing segment bodies (0 when idle).
+    pub busy: u64,
+    /// Scheduling overhead cycles (loop, queue ops, stalls, backoff).
+    pub overhead: u64,
+    /// Lanes that carried a task this iteration.
+    pub active_lanes: u8,
+    /// Divergent path groups executed serially.
+    pub path_groups: u8,
+    /// How the batch was acquired.
+    pub tier: AcquireTier,
+    /// Queue class the batch was drawn from (EPAQ class or 0).
+    pub class: u16,
+}
+
+/// Scheduler-state sample taken at an event-loop boundary. Sampling is
+/// gated on [`TraceSink::SAMPLING`] because computing these aggregates
+/// walks the queues — the unarmed loop must never pay for it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SampleRecord {
+    /// Tasks resident in per-worker queues (all classes).
+    pub queue_depth: u64,
+    /// Tasks resident in SM-tier pools.
+    pub sm_pooled: u64,
+    /// Tasks held in immediate buffers.
+    pub immediate: u64,
+    /// Live (allocated, unfinished) tasks.
+    pub live_tasks: u64,
+    /// Cumulative steal attempts so far.
+    pub steal_attempts: u64,
+    /// Cumulative successful steals so far.
+    pub steals_ok: u64,
+    /// Cumulative queue pop operations so far.
+    pub pops: u64,
+    /// Cumulative queue push operations so far.
+    pub pushes: u64,
+    /// Cumulative finished tasks so far.
+    pub tasks_finished: u64,
+}
+
+/// Event hooks the scheduler drives. All methods default to empty
+/// bodies and are `#[inline]`, so an unarmed sink vanishes at
+/// monomorphization. Timestamps `t` are simulated cycles; a service
+/// tracer may offset them by a virtual-clock base so multi-round
+/// traces stay monotone.
+#[allow(unused_variables)]
+pub trait TraceSink {
+    /// True when the sink wants [`sample`](Self::sample) callbacks; the
+    /// scheduler computes queue-depth aggregates only when this is set,
+    /// keeping the unarmed loop free of the walk.
+    const SAMPLING: bool = false;
+
+    /// A worker iteration completed (busy or idle).
+    #[inline]
+    fn iteration(&mut self, ev: &IterEvent) {}
+    /// A child task was allocated and enqueued (worker `u32::MAX` =
+    /// host-side root spawn).
+    #[inline]
+    fn task_spawn(&mut self, t: u64, worker: u32, task: u32, tenant: u16, func: u16) {}
+    /// A task ran its final segment and was freed.
+    #[inline]
+    fn task_finish(&mut self, t: u64, worker: u32, task: u32, tenant: u16) {}
+    /// A worker acquired `count` tasks via `tier` from queue class
+    /// `class`.
+    #[inline]
+    fn task_acquire(&mut self, t: u64, worker: u32, count: u32, tier: AcquireTier, class: u16) {}
+    /// A steal was attempted against `victim` (fires before the outcome
+    /// is known).
+    #[inline]
+    fn steal_attempt(&mut self, t: u64, worker: u32, victim: u32) {}
+    /// A steal from `victim` succeeded, taking `amount` tasks.
+    #[inline]
+    fn steal_ok(&mut self, t: u64, worker: u32, victim: u32, amount: u32) {}
+    /// A join barrier fired and a parent resumed.
+    #[inline]
+    fn join_fire(&mut self, t: u64, worker: u32, task: u32) {}
+    /// `count` tasks spilled into an SM-tier pool.
+    #[inline]
+    fn sm_spill(&mut self, t: u64, worker: u32, count: u32) {}
+    /// `count` tasks were drained back out of an SM-tier pool.
+    #[inline]
+    fn sm_pool_hit(&mut self, t: u64, worker: u32, count: u32) {}
+    /// An injected fault was delivered to `worker` (`kind` is the
+    /// fault-plane name: stall/kill/steal-fail/drop).
+    #[inline]
+    fn fault(&mut self, t: u64, worker: u32, kind: &'static str) {}
+    /// The watchdog tripped with `live` tasks outstanding.
+    #[inline]
+    fn watchdog_trip(&mut self, t: u64, live: u64) {}
+    /// A tenant's live lineage (`tasks` frontier entries) was
+    /// checkpointed at eviction.
+    #[inline]
+    fn checkpoint_capture(&mut self, t: u64, tenant: u16, tasks: u32) {}
+    /// A tenant was evicted (`cause`: deadline/drain/watchdog).
+    #[inline]
+    fn tenant_evicted(&mut self, t: u64, tenant: u16, cause: &'static str) {}
+    /// Periodic scheduler-state sample; only delivered when
+    /// [`SAMPLING`](Self::SAMPLING) is true.
+    #[inline]
+    fn sample(&mut self, t: u64, s: &SampleRecord) {}
+}
+
+/// The unarmed sink: every hook is a no-op and `SAMPLING` is off, so
+/// the monomorphized event loop is exactly the pre-observability code.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoTrace;
+
+impl TraceSink for NoTrace {}
+
+/// The profiler consumes the event stream instead of keeping private
+/// scheduler hooks: the Fig. 6/9/11 timeline is now just the
+/// [`IterEvent`] projection. `SAMPLING` stays off — the profiler never
+/// needs queue walks, so profiled runs keep the unarmed loop shape.
+impl TraceSink for Profiler {
+    #[inline]
+    fn iteration(&mut self, ev: &IterEvent) {
+        self.record(TimelineEvent {
+            worker: ev.worker,
+            start: ev.start,
+            busy: ev.busy,
+            overhead: ev.overhead,
+            active_lanes: ev.active_lanes,
+            path_groups: ev.path_groups,
+        });
+    }
+}
+
+/// Fans every hook out to two sinks, e.g. a [`Profiler`] timeline plus
+/// an armed [`Tracer`]. `SAMPLING` is the OR of the halves.
+pub struct Fanout<'a, A, B>(pub &'a mut A, pub &'a mut B);
+
+impl<A: TraceSink, B: TraceSink> TraceSink for Fanout<'_, A, B> {
+    const SAMPLING: bool = A::SAMPLING || B::SAMPLING;
+
+    #[inline]
+    fn iteration(&mut self, ev: &IterEvent) {
+        self.0.iteration(ev);
+        self.1.iteration(ev);
+    }
+    #[inline]
+    fn task_spawn(&mut self, t: u64, worker: u32, task: u32, tenant: u16, func: u16) {
+        self.0.task_spawn(t, worker, task, tenant, func);
+        self.1.task_spawn(t, worker, task, tenant, func);
+    }
+    #[inline]
+    fn task_finish(&mut self, t: u64, worker: u32, task: u32, tenant: u16) {
+        self.0.task_finish(t, worker, task, tenant);
+        self.1.task_finish(t, worker, task, tenant);
+    }
+    #[inline]
+    fn task_acquire(&mut self, t: u64, worker: u32, count: u32, tier: AcquireTier, class: u16) {
+        self.0.task_acquire(t, worker, count, tier, class);
+        self.1.task_acquire(t, worker, count, tier, class);
+    }
+    #[inline]
+    fn steal_attempt(&mut self, t: u64, worker: u32, victim: u32) {
+        self.0.steal_attempt(t, worker, victim);
+        self.1.steal_attempt(t, worker, victim);
+    }
+    #[inline]
+    fn steal_ok(&mut self, t: u64, worker: u32, victim: u32, amount: u32) {
+        self.0.steal_ok(t, worker, victim, amount);
+        self.1.steal_ok(t, worker, victim, amount);
+    }
+    #[inline]
+    fn join_fire(&mut self, t: u64, worker: u32, task: u32) {
+        self.0.join_fire(t, worker, task);
+        self.1.join_fire(t, worker, task);
+    }
+    #[inline]
+    fn sm_spill(&mut self, t: u64, worker: u32, count: u32) {
+        self.0.sm_spill(t, worker, count);
+        self.1.sm_spill(t, worker, count);
+    }
+    #[inline]
+    fn sm_pool_hit(&mut self, t: u64, worker: u32, count: u32) {
+        self.0.sm_pool_hit(t, worker, count);
+        self.1.sm_pool_hit(t, worker, count);
+    }
+    #[inline]
+    fn fault(&mut self, t: u64, worker: u32, kind: &'static str) {
+        self.0.fault(t, worker, kind);
+        self.1.fault(t, worker, kind);
+    }
+    #[inline]
+    fn watchdog_trip(&mut self, t: u64, live: u64) {
+        self.0.watchdog_trip(t, live);
+        self.1.watchdog_trip(t, live);
+    }
+    #[inline]
+    fn checkpoint_capture(&mut self, t: u64, tenant: u16, tasks: u32) {
+        self.0.checkpoint_capture(t, tenant, tasks);
+        self.1.checkpoint_capture(t, tenant, tasks);
+    }
+    #[inline]
+    fn tenant_evicted(&mut self, t: u64, tenant: u16, cause: &'static str) {
+        self.0.tenant_evicted(t, tenant, cause);
+        self.1.tenant_evicted(t, tenant, cause);
+    }
+    #[inline]
+    fn sample(&mut self, t: u64, s: &SampleRecord) {
+        self.0.sample(t, s);
+        self.1.sample(t, s);
+    }
+}
+
+/// Worker id used for host-side events (root spawns, service events).
+pub const HOST_WORKER: u32 = u32::MAX;
+
+/// One recorded event. The enum mirrors the [`TraceSink`] hooks plus
+/// [`TraceEvent::Service`] for engine-level events (admission, retry,
+/// shed, quarantine) that the scheduler never sees.
+#[derive(Clone, Debug)]
+pub enum TraceEvent {
+    /// Completed worker iteration.
+    Iter(IterEvent),
+    /// Task allocated (worker == [`HOST_WORKER`] for root spawns).
+    Spawn { t: u64, worker: u32, task: u32, tenant: u16, func: u16 },
+    /// Task finished and freed.
+    Finish { t: u64, worker: u32, task: u32, tenant: u16 },
+    /// Batch acquired.
+    Acquire { t: u64, worker: u32, count: u32, tier: AcquireTier, class: u16 },
+    /// Steal attempted.
+    StealAttempt { t: u64, worker: u32, victim: u32 },
+    /// Steal succeeded.
+    StealOk { t: u64, worker: u32, victim: u32, amount: u32 },
+    /// Join fired, parent resumed.
+    JoinFire { t: u64, worker: u32, task: u32 },
+    /// Tasks spilled to an SM pool.
+    SmSpill { t: u64, worker: u32, count: u32 },
+    /// Tasks drained from an SM pool.
+    SmPoolHit { t: u64, worker: u32, count: u32 },
+    /// Fault delivered.
+    Fault { t: u64, worker: u32, kind: &'static str },
+    /// Watchdog tripped.
+    WatchdogTrip { t: u64, live: u64 },
+    /// Tenant lineage checkpointed.
+    CheckpointCapture { t: u64, tenant: u16, tasks: u32 },
+    /// Tenant checkpoint restored into a fresh round.
+    CheckpointRestore { t: u64, tenant: u16, tasks: u32 },
+    /// Tenant evicted.
+    TenantEvicted { t: u64, tenant: u16, cause: &'static str },
+    /// Periodic scheduler sample.
+    Sample { t: u64, s: SampleRecord },
+    /// Engine-level service event (admit/retry/shed/quarantine/...).
+    Service { t: u64, kind: &'static str, tenant: u16, job: u64, value: u64 },
+}
+
+impl TraceEvent {
+    /// Timestamp of the event (iteration events use their start).
+    pub fn ts(&self) -> u64 {
+        match *self {
+            TraceEvent::Iter(ev) => ev.start,
+            TraceEvent::Spawn { t, .. }
+            | TraceEvent::Finish { t, .. }
+            | TraceEvent::Acquire { t, .. }
+            | TraceEvent::StealAttempt { t, .. }
+            | TraceEvent::StealOk { t, .. }
+            | TraceEvent::JoinFire { t, .. }
+            | TraceEvent::SmSpill { t, .. }
+            | TraceEvent::SmPoolHit { t, .. }
+            | TraceEvent::Fault { t, .. }
+            | TraceEvent::WatchdogTrip { t, .. }
+            | TraceEvent::CheckpointCapture { t, .. }
+            | TraceEvent::CheckpointRestore { t, .. }
+            | TraceEvent::TenantEvicted { t, .. }
+            | TraceEvent::Sample { t, .. }
+            | TraceEvent::Service { t, .. } => t,
+        }
+    }
+}
+
+/// The armed sink: records every event with its simulated timestamp
+/// (offset by `time_base`, so a service engine can keep multi-round
+/// traces monotone on the virtual clock) and exports Chrome
+/// trace-event JSON.
+#[derive(Clone, Debug, Default)]
+pub struct Tracer {
+    base: u64,
+    events: Vec<TraceEvent>,
+}
+
+impl Tracer {
+    /// Fresh tracer with time base 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Offset added to every subsequently recorded timestamp. The
+    /// service engine sets this to the virtual clock at each round
+    /// start so per-round scheduler times (which restart at 0) line up
+    /// end-to-end.
+    pub fn set_time_base(&mut self, base: u64) {
+        self.base = base;
+    }
+
+    /// All recorded events, in recording order.
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Number of recorded events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Record an engine-level service event at an *absolute* virtual
+    /// time (no base offset — the engine already speaks virtual time).
+    pub fn push_service(&mut self, t: u64, kind: &'static str, tenant: u16, job: u64, value: u64) {
+        self.events.push(TraceEvent::Service { t, kind, tenant, job, value });
+    }
+
+    /// Record a checkpoint restore at an absolute virtual time (the
+    /// engine restores between rounds, where no scheduler exists).
+    pub fn push_restore(&mut self, t: u64, tenant: u16, tasks: u32) {
+        self.events.push(TraceEvent::CheckpointRestore { t, tenant, tasks });
+    }
+
+    /// Lower the recorded events to Chrome trace-event records, sorted
+    /// per track by `(tid, ts, phase-rank, seq)` so each track's
+    /// timestamps are monotone and `B`/`E` pairs are balanced in file
+    /// order (an `E` at time T sorts before a `B` at the same T).
+    pub fn chrome_events(&self) -> Vec<ChromeEvent> {
+        let mut out = Vec::with_capacity(self.events.len() * 2);
+        for ev in &self.events {
+            lower_event(ev, &mut out);
+        }
+        // Thread-name metadata for every track we actually used.
+        let mut tids: Vec<u64> = out.iter().map(|e| e.tid).collect();
+        tids.sort_unstable();
+        tids.dedup();
+        for tid in tids {
+            let label = if tid == u64::from(HOST_WORKER) {
+                "host/service".to_string()
+            } else {
+                format!("worker {tid}")
+            };
+            out.push(ChromeEvent {
+                name: "thread_name".into(),
+                ph: 'M',
+                ts: 0,
+                tid,
+                args: format!("{{\"name\":\"{label}\"}}"),
+            });
+        }
+        let mut seq: Vec<(usize, ChromeEvent)> = out.into_iter().enumerate().collect();
+        seq.sort_by_key(|(i, e)| (e.tid, e.ts, phase_rank(e.ph), *i));
+        seq.into_iter().map(|(_, e)| e).collect()
+    }
+
+    /// Serialize to Chrome trace-event JSON (the `{"traceEvents":[..]}`
+    /// object form Perfetto and `chrome://tracing` load directly).
+    /// Timestamps are simulated cycles reported in the `ts` field.
+    pub fn to_chrome_trace(&self) -> String {
+        let events = self.chrome_events();
+        let mut s = String::with_capacity(events.len() * 96 + 128);
+        s.push_str("{\"traceEvents\":[");
+        for (i, e) in events.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"name\":\"{}\",\"ph\":\"{}\",\"pid\":0,\"tid\":{},\"ts\":{},\"args\":{}}}",
+                e.name, e.ph, e.tid, e.ts, e.args
+            ));
+        }
+        s.push_str("],\"displayTimeUnit\":\"ns\",\"otherData\":{\"clock\":\"simulated-cycles\"}}");
+        s
+    }
+}
+
+impl TraceSink for Tracer {
+    const SAMPLING: bool = true;
+
+    #[inline]
+    fn iteration(&mut self, ev: &IterEvent) {
+        let mut ev = *ev;
+        ev.start += self.base;
+        self.events.push(TraceEvent::Iter(ev));
+    }
+    #[inline]
+    fn task_spawn(&mut self, t: u64, worker: u32, task: u32, tenant: u16, func: u16) {
+        self.events.push(TraceEvent::Spawn { t: t + self.base, worker, task, tenant, func });
+    }
+    #[inline]
+    fn task_finish(&mut self, t: u64, worker: u32, task: u32, tenant: u16) {
+        self.events.push(TraceEvent::Finish { t: t + self.base, worker, task, tenant });
+    }
+    #[inline]
+    fn task_acquire(&mut self, t: u64, worker: u32, count: u32, tier: AcquireTier, class: u16) {
+        self.events.push(TraceEvent::Acquire { t: t + self.base, worker, count, tier, class });
+    }
+    #[inline]
+    fn steal_attempt(&mut self, t: u64, worker: u32, victim: u32) {
+        self.events.push(TraceEvent::StealAttempt { t: t + self.base, worker, victim });
+    }
+    #[inline]
+    fn steal_ok(&mut self, t: u64, worker: u32, victim: u32, amount: u32) {
+        self.events.push(TraceEvent::StealOk { t: t + self.base, worker, victim, amount });
+    }
+    #[inline]
+    fn join_fire(&mut self, t: u64, worker: u32, task: u32) {
+        self.events.push(TraceEvent::JoinFire { t: t + self.base, worker, task });
+    }
+    #[inline]
+    fn sm_spill(&mut self, t: u64, worker: u32, count: u32) {
+        self.events.push(TraceEvent::SmSpill { t: t + self.base, worker, count });
+    }
+    #[inline]
+    fn sm_pool_hit(&mut self, t: u64, worker: u32, count: u32) {
+        self.events.push(TraceEvent::SmPoolHit { t: t + self.base, worker, count });
+    }
+    #[inline]
+    fn fault(&mut self, t: u64, worker: u32, kind: &'static str) {
+        self.events.push(TraceEvent::Fault { t: t + self.base, worker, kind });
+    }
+    #[inline]
+    fn watchdog_trip(&mut self, t: u64, live: u64) {
+        self.events.push(TraceEvent::WatchdogTrip { t: t + self.base, live });
+    }
+    #[inline]
+    fn checkpoint_capture(&mut self, t: u64, tenant: u16, tasks: u32) {
+        self.events.push(TraceEvent::CheckpointCapture { t: t + self.base, tenant, tasks });
+    }
+    #[inline]
+    fn tenant_evicted(&mut self, t: u64, tenant: u16, cause: &'static str) {
+        self.events.push(TraceEvent::TenantEvicted { t: t + self.base, tenant, cause });
+    }
+    #[inline]
+    fn sample(&mut self, t: u64, s: &SampleRecord) {
+        self.events.push(TraceEvent::Sample { t: t + self.base, s: *s });
+    }
+}
+
+/// One Chrome trace-event record, pre-serialization. `args` is a
+/// ready-made JSON object fragment (all values numeric or static
+/// strings, so no escaping is needed).
+#[derive(Clone, Debug)]
+pub struct ChromeEvent {
+    /// Event name (`segment`, `spawn`, `steal-ok`, ...).
+    pub name: String,
+    /// Chrome phase: `B`/`E` duration pair, `i` instant, `C` counter,
+    /// `M` metadata.
+    pub ph: char,
+    /// Timestamp (simulated cycles; service traces use virtual time).
+    pub ts: u64,
+    /// Track: worker index, or [`HOST_WORKER`] for host/service events.
+    pub tid: u64,
+    /// JSON object fragment for the `args` field.
+    pub args: String,
+}
+
+/// Sort rank making `E` precede instants/counters precede `B` at equal
+/// timestamps, so zero-length gaps still nest correctly.
+fn phase_rank(ph: char) -> u8 {
+    match ph {
+        'M' => 0,
+        'E' => 1,
+        'i' | 'C' => 2,
+        _ => 3, // 'B'
+    }
+}
+
+fn lower_event(ev: &TraceEvent, out: &mut Vec<ChromeEvent>) {
+    let host = u64::from(HOST_WORKER);
+    match *ev {
+        TraceEvent::Iter(ev) => {
+            // Idle iterations are elided: they dominate event count and
+            // carry no duration worth a slice.
+            if ev.busy == 0 {
+                return;
+            }
+            let args = format!(
+                "{{\"lanes\":{},\"groups\":{},\"overhead\":{},\"tier\":\"{}\",\"class\":{}}}",
+                ev.active_lanes,
+                ev.path_groups,
+                ev.overhead,
+                ev.tier.name(),
+                ev.class
+            );
+            out.push(ChromeEvent {
+                name: "segment".into(),
+                ph: 'B',
+                ts: ev.start,
+                tid: u64::from(ev.worker),
+                args,
+            });
+            out.push(ChromeEvent {
+                name: "segment".into(),
+                ph: 'E',
+                ts: ev.start + ev.busy,
+                tid: u64::from(ev.worker),
+                args: "{}".into(),
+            });
+        }
+        TraceEvent::Spawn { t, worker, task, tenant, func } => out.push(ChromeEvent {
+            name: "spawn".into(),
+            ph: 'i',
+            ts: t,
+            tid: u64::from(worker),
+            args: format!("{{\"task\":{task},\"tenant\":{tenant},\"func\":{func}}}"),
+        }),
+        TraceEvent::Finish { t, worker, task, tenant } => out.push(ChromeEvent {
+            name: "finish".into(),
+            ph: 'i',
+            ts: t,
+            tid: u64::from(worker),
+            args: format!("{{\"task\":{task},\"tenant\":{tenant}}}"),
+        }),
+        TraceEvent::Acquire { t, worker, count, tier, class } => out.push(ChromeEvent {
+            name: "acquire".into(),
+            ph: 'i',
+            ts: t,
+            tid: u64::from(worker),
+            args: format!("{{\"count\":{count},\"tier\":\"{}\",\"class\":{class}}}", tier.name()),
+        }),
+        TraceEvent::StealAttempt { t, worker, victim } => out.push(ChromeEvent {
+            name: "steal-attempt".into(),
+            ph: 'i',
+            ts: t,
+            tid: u64::from(worker),
+            args: format!("{{\"victim\":{victim}}}"),
+        }),
+        TraceEvent::StealOk { t, worker, victim, amount } => out.push(ChromeEvent {
+            name: "steal-ok".into(),
+            ph: 'i',
+            ts: t,
+            tid: u64::from(worker),
+            args: format!("{{\"victim\":{victim},\"amount\":{amount}}}"),
+        }),
+        TraceEvent::JoinFire { t, worker, task } => out.push(ChromeEvent {
+            name: "join".into(),
+            ph: 'i',
+            ts: t,
+            tid: u64::from(worker),
+            args: format!("{{\"task\":{task}}}"),
+        }),
+        TraceEvent::SmSpill { t, worker, count } => out.push(ChromeEvent {
+            name: "sm-spill".into(),
+            ph: 'i',
+            ts: t,
+            tid: u64::from(worker),
+            args: format!("{{\"count\":{count}}}"),
+        }),
+        TraceEvent::SmPoolHit { t, worker, count } => out.push(ChromeEvent {
+            name: "sm-pool-hit".into(),
+            ph: 'i',
+            ts: t,
+            tid: u64::from(worker),
+            args: format!("{{\"count\":{count}}}"),
+        }),
+        TraceEvent::Fault { t, worker, kind } => out.push(ChromeEvent {
+            name: format!("fault:{kind}"),
+            ph: 'i',
+            ts: t,
+            tid: u64::from(worker),
+            args: "{}".into(),
+        }),
+        TraceEvent::WatchdogTrip { t, live } => out.push(ChromeEvent {
+            name: "watchdog-trip".into(),
+            ph: 'i',
+            ts: t,
+            tid: host,
+            args: format!("{{\"live\":{live}}}"),
+        }),
+        TraceEvent::CheckpointCapture { t, tenant, tasks } => out.push(ChromeEvent {
+            name: "checkpoint-capture".into(),
+            ph: 'i',
+            ts: t,
+            tid: host,
+            args: format!("{{\"tenant\":{tenant},\"tasks\":{tasks}}}"),
+        }),
+        TraceEvent::CheckpointRestore { t, tenant, tasks } => out.push(ChromeEvent {
+            name: "checkpoint-restore".into(),
+            ph: 'i',
+            ts: t,
+            tid: host,
+            args: format!("{{\"tenant\":{tenant},\"tasks\":{tasks}}}"),
+        }),
+        TraceEvent::TenantEvicted { t, tenant, cause } => out.push(ChromeEvent {
+            name: "tenant-evicted".into(),
+            ph: 'i',
+            ts: t,
+            tid: host,
+            args: format!("{{\"tenant\":{tenant},\"cause\":\"{cause}\"}}"),
+        }),
+        TraceEvent::Sample { t, s } => {
+            out.push(ChromeEvent {
+                name: "queues".into(),
+                ph: 'C',
+                ts: t,
+                tid: host,
+                args: format!(
+                    "{{\"queued\":{},\"sm_pooled\":{},\"immediate\":{},\"live\":{}}}",
+                    s.queue_depth, s.sm_pooled, s.immediate, s.live_tasks
+                ),
+            });
+            out.push(ChromeEvent {
+                name: "steals".into(),
+                ph: 'C',
+                ts: t,
+                tid: host,
+                args: format!(
+                    "{{\"attempts\":{},\"ok\":{}}}",
+                    s.steal_attempts, s.steals_ok
+                ),
+            });
+        }
+        TraceEvent::Service { t, kind, tenant, job, value } => out.push(ChromeEvent {
+            name: format!("service:{kind}"),
+            ph: 'i',
+            ts: t,
+            tid: host,
+            args: format!("{{\"tenant\":{tenant},\"job\":{job},\"value\":{value}}}"),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_trace_is_not_sampling() {
+        assert!(!NoTrace::SAMPLING);
+        assert!(!<Profiler as TraceSink>::SAMPLING);
+        assert!(Tracer::SAMPLING);
+        assert!(<Fanout<'_, Profiler, Tracer> as TraceSink>::SAMPLING);
+        assert!(!<Fanout<'_, Profiler, NoTrace> as TraceSink>::SAMPLING);
+    }
+
+    #[test]
+    fn profiler_sink_records_timeline() {
+        let mut p = Profiler::enabled();
+        p.iteration(&IterEvent {
+            worker: 3,
+            start: 10,
+            busy: 7,
+            overhead: 2,
+            active_lanes: 4,
+            path_groups: 1,
+            tier: AcquireTier::Own,
+            class: 0,
+        });
+        assert_eq!(p.events.len(), 1);
+        assert_eq!(p.events[0].worker, 3);
+        assert_eq!(p.events[0].busy, 7);
+    }
+
+    #[test]
+    fn time_base_offsets_events() {
+        let mut tr = Tracer::new();
+        tr.set_time_base(100);
+        tr.task_spawn(5, 0, 1, 0, 0);
+        assert_eq!(tr.events()[0].ts(), 105);
+    }
+
+    #[test]
+    fn chrome_trace_is_sorted_and_balanced() {
+        let mut tr = Tracer::new();
+        tr.iteration(&IterEvent {
+            worker: 0,
+            start: 20,
+            busy: 5,
+            overhead: 1,
+            active_lanes: 1,
+            path_groups: 1,
+            tier: AcquireTier::Own,
+            class: 0,
+        });
+        tr.iteration(&IterEvent {
+            worker: 0,
+            start: 5,
+            busy: 15,
+            overhead: 1,
+            active_lanes: 1,
+            path_groups: 1,
+            tier: AcquireTier::Own,
+            class: 0,
+        });
+        let evs = tr.chrome_events();
+        let mut depth = 0i32;
+        let mut last_ts = 0;
+        for e in evs.iter().filter(|e| e.ph != 'M') {
+            assert!(e.ts >= last_ts, "timestamps must be monotone per track");
+            last_ts = e.ts;
+            match e.ph {
+                'B' => depth += 1,
+                'E' => depth -= 1,
+                _ => {}
+            }
+            assert!(depth >= 0);
+        }
+        assert_eq!(depth, 0, "B/E pairs must balance");
+        let json = tr.to_chrome_trace();
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with("}"));
+    }
+}

@@ -28,7 +28,8 @@ use crate::bail;
 use crate::coordinator::{EvictCause, GtapConfig, RunStats, Scheduler, TenantStats};
 use crate::ir::bytecode::Module;
 use crate::ir::types::Value;
-use crate::sim::profile::Profiler;
+use crate::obs::metrics::{MetricsSnapshot, TenantRound};
+use crate::obs::trace::{NoTrace, Tracer};
 use crate::sim::{DeviceSpec, Memory};
 use crate::util::error::{Context, Error, ErrorKind, Result};
 use crate::util::stats::fmt_count;
@@ -145,6 +146,18 @@ pub struct ServiceEngine {
     backpressure_events: u64,
     /// Fast path: skip the quarantine sweep until a breaker ever opens.
     any_quarantined: bool,
+    /// Armed event tracer (`gtap service --trace`). Rounds run with it as
+    /// the scheduler's sink, time-based to the virtual clock; engine-level
+    /// service events (admit/retry/shed/…) are appended at absolute time.
+    /// `None` keeps every round on the zero-cost `NoTrace` path.
+    tracer: Option<Tracer>,
+    /// Whether to assemble a [`MetricsSnapshot`] per round.
+    metrics_on: bool,
+    /// One snapshot per round that ran (JSONL via `gtap service --metrics`).
+    snaps: Vec<MetricsSnapshot>,
+    /// Accounting baseline from the previous snapshot, per tenant slot —
+    /// snapshots report per-round deltas, not cumulative totals.
+    last_acct: Vec<TenantAccounting>,
 }
 
 impl ServiceEngine {
@@ -165,7 +178,38 @@ impl ServiceEngine {
             fault_deadline_shift: 0,
             backpressure_events: 0,
             any_quarantined: false,
+            tracer: None,
+            metrics_on: false,
+            snaps: Vec::new(),
+            last_acct: Vec::new(),
         })
+    }
+
+    /// Arm structured event tracing: every subsequent round runs the
+    /// scheduler with a [`Tracer`] sink (time-based to the virtual clock),
+    /// and engine-level service events (admission, retry, shed,
+    /// quarantine, cancellation, backpressure) are interleaved at absolute
+    /// virtual time. Tracing observes only — outcomes stay byte-identical
+    /// (pinned by `tests/obs.rs`).
+    pub fn enable_tracing(&mut self) {
+        if self.tracer.is_none() {
+            self.tracer = Some(Tracer::new());
+        }
+    }
+
+    /// Arm per-round metrics snapshots (`gtap service --metrics`).
+    pub fn enable_metrics(&mut self) {
+        self.metrics_on = true;
+    }
+
+    /// Take the accumulated trace (disarms tracing until re-enabled).
+    pub fn take_trace(&mut self) -> Option<Tracer> {
+        self.tracer.take()
+    }
+
+    /// Drain the per-round metrics snapshots collected so far.
+    pub fn take_metrics(&mut self) -> Vec<MetricsSnapshot> {
+        std::mem::take(&mut self.snaps)
     }
 
     /// Arm the resilience policy (retry/backoff, quarantine, overload
@@ -291,6 +335,9 @@ impl ServiceEngine {
                 match victim {
                     Some(i) => {
                         let shed = self.pending.remove(i);
+                        if let Some(tr) = self.tracer.as_mut() {
+                            tr.push_service(self.clock, "shed", shed.tenant, shed.id, 0);
+                        }
                         let acct = &mut self.tenants[shed.tenant as usize].acct;
                         acct.jobs_failed += 1;
                         acct.jobs_shed += 1;
@@ -309,6 +356,15 @@ impl ServiceEngine {
                     }
                     None => {
                         self.backpressure_events += 1;
+                        if let Some(tr) = self.tracer.as_mut() {
+                            tr.push_service(
+                                self.clock,
+                                "backpressure",
+                                tenant,
+                                self.next_job,
+                                self.pending.len() as u64,
+                            );
+                        }
                         return Ok(SubmitResult::Backpressure {
                             pending: self.pending.len(),
                             watermark,
@@ -346,6 +402,9 @@ impl ServiceEngine {
                 .map(|c| c.is_cancelled())
                 .unwrap_or(false);
             if cancelled {
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.push_service(clock, "cancel", job.tenant, job.id, 0);
+                }
                 self.tenants[job.tenant as usize].acct.jobs_cancelled += 1;
                 self.outcomes.push(JobOutcome {
                     job: job.id,
@@ -376,6 +435,9 @@ impl ServiceEngine {
         let mut kept: Vec<Job> = Vec::with_capacity(self.pending.len());
         for job in self.pending.drain(..) {
             if self.tenants[job.tenant as usize].resil.quarantined {
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.push_service(clock, "quarantine-drop", job.tenant, job.id, 0);
+                }
                 self.tenants[job.tenant as usize].acct.jobs_failed += 1;
                 self.outcomes.push(JobOutcome {
                     job: job.id,
@@ -482,9 +544,17 @@ impl ServiceEngine {
                 sched.enable_checkpoints();
             }
         }
+        let mut round_restores = vec![0u64; self.tenants.len()];
         for (slot, job) in jobs.iter().enumerate() {
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.push_service(self.clock, "admit", job.tenant, job.id, u64::from(job.progress.attempt));
+            }
             if let Some(ck) = job.progress.checkpoint.as_ref() {
                 sched.restore_tenant(slot as u16, ck)?;
+                round_restores[job.tenant as usize] += 1;
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.push_restore(self.clock, job.tenant, ck.tasks.len() as u32);
+                }
             } else {
                 sched.spawn_root_for(slot as u16, &job.entry, &job.args, job.priority)?;
             }
@@ -512,8 +582,17 @@ impl ServiceEngine {
                     .expect("one slot per tenant per round")
             })
             .collect();
-        let mut prof = Profiler::disabled();
-        let run = sched.run_multi(&mut mems, None, &mut prof);
+        // Armed tracing rides the same generic sink slot the one-shot path
+        // uses; unarmed rounds monomorphize over `NoTrace` (zero cost).
+        // The tracer's time base is the virtual clock, so per-round
+        // scheduler timestamps (which restart at 0) land on one axis.
+        let run = match self.tracer.as_mut() {
+            Some(tr) => {
+                tr.set_time_base(self.clock);
+                sched.run_multi(&mut mems, None, tr)
+            }
+            None => sched.run_multi(&mut mems, None, &mut NoTrace),
+        };
         drop(mems);
         let (fleet, tstats, mut ckpts) = match run {
             Ok(fleet) => {
@@ -550,6 +629,7 @@ impl ServiceEngine {
 
         let started = self.clock;
         let clock_after = started.saturating_add(fleet.cycles);
+        let admitted_jobs = jobs.len() as u64;
         for (slot, mut job) in jobs.into_iter().enumerate() {
             let ts = tstats[slot].clone();
             let tenant = job.tenant as usize;
@@ -615,6 +695,9 @@ impl ServiceEngine {
                 tr.quarantined = true;
                 tr.quarantined_at = Some(clock_after);
                 self.any_quarantined = true;
+                if let Some(trc) = self.tracer.as_mut() {
+                    trc.push_service(clock_after, "quarantine", job.tenant, job.id, 0);
+                }
                 self.tenants[tenant].acct.jobs_failed += 1;
                 self.outcomes.push(JobOutcome {
                     job: job.id,
@@ -656,6 +739,15 @@ impl ServiceEngine {
             self.tenants[tenant].acct.jobs_retried += 1;
             job.progress.not_before =
                 clock_after.saturating_add(self.resil.backoff(job.progress.attempt));
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.push_service(
+                    clock_after,
+                    "retry",
+                    job.tenant,
+                    job.id,
+                    u64::from(job.progress.attempt),
+                );
+            }
             if ts.root_result.is_some() {
                 job.progress.carried_root_result = ts.root_result;
             }
@@ -671,8 +763,72 @@ impl ServiceEngine {
             self.pending.push(job);
         }
         self.clock = clock_after;
+        if self.metrics_on {
+            self.snapshot_round(started, clock_after, fleet.cycles, admitted_jobs, &round_restores);
+        }
         self.rounds += 1;
         Ok(true)
+    }
+
+    /// Assemble one per-round [`MetricsSnapshot`]: per-tenant deltas of
+    /// the cumulative accounting against the previous snapshot's baseline,
+    /// plus live resilience state (backoff gates, quarantine flags).
+    fn snapshot_round(
+        &mut self,
+        started: u64,
+        ended: u64,
+        cycles: u64,
+        admitted: u64,
+        round_restores: &[u64],
+    ) {
+        if self.last_acct.len() < self.tenants.len() {
+            self.last_acct
+                .resize(self.tenants.len(), TenantAccounting::default());
+        }
+        let mut backing_off = vec![0u64; self.tenants.len()];
+        for j in &self.pending {
+            if j.progress.not_before > self.clock {
+                backing_off[j.tenant as usize] += 1;
+            }
+        }
+        let tenants = self
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let a = &t.acct;
+                let p = &self.last_acct[i];
+                TenantRound {
+                    tenant: t.id,
+                    name: t.name.clone(),
+                    admitted: a.rounds_admitted > p.rounds_admitted,
+                    completed: a.jobs_completed - p.jobs_completed,
+                    evicted: a.jobs_evicted - p.jobs_evicted,
+                    failed: a.jobs_failed - p.jobs_failed,
+                    shed: a.jobs_shed - p.jobs_shed,
+                    cancelled: a.jobs_cancelled - p.jobs_cancelled,
+                    retried: a.jobs_retried - p.jobs_retried,
+                    tasks_finished: a.tasks_finished - p.tasks_finished,
+                    spawns: a.spawns - p.spawns,
+                    segments: a.segments - p.segments,
+                    tasks_reexecuted: a.tasks_reexecuted - p.tasks_reexecuted,
+                    checkpoint_restores: round_restores.get(i).copied().unwrap_or(0),
+                    backing_off: backing_off[i],
+                    quarantined: t.resil.quarantined,
+                }
+            })
+            .collect();
+        self.last_acct = self.tenants.iter().map(|t| t.acct.clone()).collect();
+        self.snaps.push(MetricsSnapshot {
+            round: self.rounds,
+            started,
+            ended,
+            cycles,
+            admitted,
+            pending_after: self.pending.len() as u64,
+            backpressure_events: self.backpressure_events,
+            tenants,
+        });
     }
 
     /// Serve rounds until no jobs are pending.

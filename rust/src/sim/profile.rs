@@ -240,6 +240,39 @@ impl Profiler {
         ))
     }
 
+    /// Per-queue-class memory-system breakdown for
+    /// `RunStats::memsys_by_class` (EPAQ runs under `--memsys modeled`):
+    /// one line per class with traffic share and hierarchy hit rates.
+    /// `None` when fewer than two classes saw traffic — the aggregate
+    /// [`memsys_report`](Self::memsys_report) already covers that case.
+    pub fn memsys_class_report(by_class: &[MemSysStats]) -> Option<String> {
+        let active = by_class.iter().filter(|m| m.transactions > 0).count();
+        if active < 2 {
+            return None;
+        }
+        let rate = |hits: u64, misses: u64| -> f64 {
+            let total = hits + misses;
+            if total == 0 {
+                0.0
+            } else {
+                100.0 * hits as f64 / total as f64
+            }
+        };
+        let mut out = String::from("memsys by queue class:");
+        for (class, m) in by_class.iter().enumerate() {
+            if m.transactions == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "\n    class {class}: {} transactions, L1 {:.1}% hit, L2 {:.1}% hit",
+                m.transactions,
+                rate(m.l1_hits, m.l1_misses),
+                rate(m.l2_hits, m.l2_misses),
+            ));
+        }
+        Some(out)
+    }
+
     /// Fault-plane summary line for a run's `RunStats` fault counters
     /// (`--faults <spec>`). Takes the scalars rather than the stats struct
     /// — the sim layer does not depend on the coordinator. `None` when all
@@ -369,6 +402,32 @@ mod tests {
         assert!(r.contains("10 transactions"), "{r}");
         assert!(r.contains("75.0% hit"), "{r}");
         assert!(r.contains("3 smem bank conflicts"), "{r}");
+    }
+
+    #[test]
+    fn memsys_class_report_needs_two_active_classes() {
+        assert!(Profiler::memsys_class_report(&[]).is_none());
+        let hot = MemSysStats {
+            transactions: 8,
+            l1_hits: 6,
+            l1_misses: 2,
+            ..Default::default()
+        };
+        assert!(
+            Profiler::memsys_class_report(&[hot, MemSysStats::default()]).is_none(),
+            "a single active class adds nothing over the aggregate line"
+        );
+        let cold = MemSysStats {
+            transactions: 4,
+            l1_hits: 1,
+            l1_misses: 3,
+            ..Default::default()
+        };
+        let r = Profiler::memsys_class_report(&[hot, cold]).unwrap();
+        assert!(r.contains("class 0: 8 transactions"), "{r}");
+        assert!(r.contains("class 1: 4 transactions"), "{r}");
+        assert!(r.contains("75.0% hit"), "{r}");
+        assert!(r.contains("25.0% hit"), "{r}");
     }
 
     #[test]

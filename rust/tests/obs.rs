@@ -1,0 +1,353 @@
+//! Observability contract suite (ARCHITECTURE.md "Observability").
+//!
+//! The load-bearing invariant: observability charges **zero simulated
+//! cycles**. Arming any sink — the Chrome-trace `Tracer`, the
+//! `MetricsRegistry`, or both fanned out — must leave `RunStats`
+//! byte-identical to the unarmed run on every workload × policy ×
+//! memory-model × fault-plan combination, because every hook fires
+//! after its costs were already charged and sampling only reads state.
+//!
+//! On top of byte-identity this suite pins trace well-formedness
+//! (monotone per-track timestamps, balanced `B`/`E` pairs, spawn/finish
+//! conservation on clean runs) and the service engine's per-round
+//! metrics snapshots (one per round; deltas sum back to the cumulative
+//! accounting).
+
+use std::collections::HashMap;
+
+use gtap::coordinator::{FaultPlan, Granularity, GtapConfig, RunStats, Session};
+use gtap::ir::types::Value;
+use gtap::obs::metrics::MetricsRegistry;
+use gtap::obs::trace::{Fanout, NoTrace, TraceEvent, TraceSink, Tracer};
+use gtap::runtime::service::{
+    AdmissionPolicy, ResilienceConfig, ServiceEngine, SubmitOpts,
+};
+use gtap::sim::profile::Profiler;
+use gtap::sim::{DeviceSpec, MemSysMode};
+use gtap::workloads::{bfs, fib, tree};
+
+/// Run one workload to completion under `cfg` with the given sink,
+/// building a fresh session each time (no state carries over between
+/// the unarmed and armed runs).
+fn run_wl<S: TraceSink>(wl: &str, cfg: &GtapConfig, epaq: bool, sink: &mut S) -> RunStats {
+    let dev = DeviceSpec::h100();
+    match wl {
+        "fib" => {
+            let mut s = Session::compile(&fib::source(0, epaq), cfg.clone(), dev).unwrap();
+            s.run_with("fib", &[Value::from_i64(12)], None, sink).unwrap()
+        }
+        "tree" => {
+            let mut s =
+                Session::compile(&tree::full_tree_source(4, 8), cfg.clone(), dev).unwrap();
+            let acc = s.alloc(1);
+            s.run_with(
+                "tree",
+                &[Value::from_i64(6), Value::from_i64(7), Value(acc)],
+                None,
+                sink,
+            )
+            .unwrap()
+        }
+        "bfs" => {
+            let g = bfs::CsrGraph::random(80, 3, 5);
+            let mut s = Session::compile(&bfs::source(), cfg.clone(), dev).unwrap();
+            let ro = s.alloc(g.row_offsets.len() as u64);
+            let ci = s.alloc(g.col_indices.len().max(1) as u64);
+            let dp = s.alloc(g.n as u64);
+            s.memory.write_i64s(ro, &g.row_offsets);
+            s.memory.write_i64s(ci, &g.col_indices);
+            s.memory.write_i64s(dp, &vec![i64::MAX; g.n]);
+            s.memory.store(dp, 0);
+            s.run_with(
+                "bfs",
+                &[Value::from_i64(0), Value(ro), Value(ci), Value(dp)],
+                None,
+                sink,
+            )
+            .unwrap()
+        }
+        other => panic!("unknown workload {other}"),
+    }
+}
+
+/// Base config per workload (bfs is the paper's block-level Program 5).
+fn base_cfg(wl: &str) -> GtapConfig {
+    match wl {
+        "bfs" => GtapConfig {
+            grid_size: 4,
+            block_size: 64,
+            granularity: Granularity::Block,
+            assume_no_taskwait: true,
+            ..Default::default()
+        },
+        _ => GtapConfig {
+            grid_size: 4,
+            block_size: 32,
+            ..Default::default()
+        },
+    }
+}
+
+/// Structural checks on an armed trace: per-track monotone timestamps,
+/// balanced `B`/`E` pairs (depth never negative, zero at the end), and
+/// — on clean runs (no faults, no eviction, no drain) — every spawn
+/// matched by exactly one finish.
+fn assert_well_formed(tr: &Tracer, stats: &RunStats, clean: bool, label: &str) {
+    let evs = tr.chrome_events();
+    assert!(!evs.is_empty(), "{label}: empty trace");
+    let mut last_ts: HashMap<u64, u64> = HashMap::new();
+    let mut depth: HashMap<u64, i64> = HashMap::new();
+    for e in &evs {
+        let l = last_ts.entry(e.tid).or_insert(0);
+        assert!(
+            e.ts >= *l,
+            "{label}: track {} goes backwards ({} after {})",
+            e.tid,
+            e.ts,
+            l
+        );
+        *l = e.ts;
+        match e.ph {
+            'B' => *depth.entry(e.tid).or_insert(0) += 1,
+            'E' => {
+                let d = depth.entry(e.tid).or_insert(0);
+                *d -= 1;
+                assert!(*d >= 0, "{label}: E without B on track {}", e.tid);
+            }
+            'i' | 'C' | 'M' => {}
+            other => panic!("{label}: unexpected phase {other:?}"),
+        }
+    }
+    for (tid, d) in depth {
+        assert_eq!(d, 0, "{label}: unbalanced B/E on track {tid}");
+    }
+    if clean {
+        let spawns = tr
+            .events()
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Spawn { .. }))
+            .count() as u64;
+        let finishes = tr
+            .events()
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Finish { .. }))
+            .count() as u64;
+        assert_eq!(
+            spawns, finishes,
+            "{label}: every spawn needs a matching finish on a clean run"
+        );
+        assert_eq!(finishes, stats.tasks_finished, "{label}: finish events vs counter");
+    }
+    // The JSON export is one object; deep validation happens in CI via
+    // `python3 -m json.tool`, here we pin the envelope.
+    let json = tr.to_chrome_trace();
+    assert!(json.starts_with("{\"traceEvents\":["), "{label}: bad envelope");
+    assert!(json.ends_with('}'), "{label}: bad envelope tail");
+    assert!(!json.contains('\n'), "{label}: trace JSON is a single line");
+}
+
+/// The tentpole sweep: tracing-on must be byte-identical to tracing-off
+/// across fib/tree/bfs × default/recommended/EPAQ × flat/modeled ×
+/// faults off/on, and every armed trace must be structurally sound.
+#[test]
+fn trace_on_is_byte_identical_across_the_matrix() {
+    let fault_plan = "stall@50:w0:40;kill@400:w1";
+    for wl in ["fib", "tree", "bfs"] {
+        for pol in ["default", "recommended", "epaq"] {
+            for ms in ["flat", "modeled"] {
+                for faults in [None, Some(fault_plan)] {
+                    let mut cfg = base_cfg(wl);
+                    let mut epaq = false;
+                    match pol {
+                        "default" => {}
+                        "recommended" => {
+                            cfg.policy = gtap::coordinator::PolicyConfig::recommended();
+                        }
+                        "epaq" => {
+                            cfg.num_queues = 3;
+                            epaq = wl == "fib";
+                        }
+                        _ => unreachable!(),
+                    }
+                    cfg.memsys = MemSysMode::parse(ms).unwrap();
+                    if let Some(sp) = faults {
+                        cfg.faults = FaultPlan::parse(sp).unwrap();
+                    }
+                    let label = format!(
+                        "{wl}/{pol}/{ms}/faults={}",
+                        if faults.is_some() { "on" } else { "off" }
+                    );
+                    let base = run_wl(wl, &cfg, epaq, &mut NoTrace);
+                    let mut tr = Tracer::new();
+                    let traced = run_wl(wl, &cfg, epaq, &mut tr);
+                    assert_eq!(base, traced, "{label}: tracing perturbed the run");
+                    let clean = faults.is_none() && !base.drained;
+                    assert_well_formed(&tr, &base, clean, &label);
+                }
+            }
+        }
+    }
+}
+
+/// A metrics registry (SAMPLING on, so the scheduler also walks queues
+/// for interval samples) must not perturb the run either, and its
+/// counters must agree with the scheduler's own `RunStats`.
+#[test]
+fn metrics_registry_is_byte_identical_and_coherent() {
+    let cfg = base_cfg("fib");
+    let base = run_wl("fib", &cfg, false, &mut NoTrace);
+    let mut m = MetricsRegistry::new();
+    let armed = run_wl("fib", &cfg, false, &mut m);
+    assert_eq!(base, armed, "metrics sampling perturbed the run");
+    assert_eq!(m.finishes.get(), base.tasks_finished);
+    assert_eq!(m.steals_ok.get(), base.steals_ok);
+    assert_eq!(m.steal_attempts.get(), base.steal_attempts);
+    assert_eq!(m.sm_spills.get(), base.sm_spills);
+    assert_eq!(m.sm_pool_hits.get(), base.sm_pool_hits);
+    assert!(!m.series.is_empty(), "interval sampling produced no points");
+    let json = m.to_json();
+    assert!(json.starts_with("{\"counters\":{"), "metrics JSON envelope");
+    assert!(json.contains("\"seg_latency\":["));
+}
+
+/// Profiler + Tracer fanned out together (the `Exec::traced().profiled()`
+/// path) still charges nothing.
+#[test]
+fn fanout_of_profiler_and_tracer_is_byte_identical() {
+    let cfg = base_cfg("tree");
+    let base = run_wl("tree", &cfg, false, &mut NoTrace);
+    let mut prof = Profiler::enabled();
+    let mut tr = Tracer::new();
+    let armed = run_wl("tree", &cfg, false, &mut Fanout(&mut prof, &mut tr));
+    assert_eq!(base, armed);
+    assert!(!prof.events.is_empty(), "profiler half saw the iterations");
+    assert!(!tr.is_empty(), "tracer half recorded events");
+}
+
+fn service_cfg() -> GtapConfig {
+    GtapConfig {
+        grid_size: 4,
+        block_size: 64,
+        granularity: Granularity::Block,
+        ..Default::default()
+    }
+}
+
+fn run_service(observe: bool, resil: Option<ResilienceConfig>, deadline: Option<u64>) -> ServiceEngine {
+    let mut eng = ServiceEngine::new(
+        service_cfg(),
+        DeviceSpec::h100(),
+        AdmissionPolicy::parse("fair").unwrap(),
+    )
+    .unwrap();
+    if let Some(r) = resil {
+        eng.set_resilience(r);
+    }
+    if observe {
+        eng.enable_tracing();
+        eng.enable_metrics();
+    }
+    let t = eng.open_session("fib", &fib::source(0, false)).unwrap();
+    for _ in 0..3 {
+        eng.submit(
+            t,
+            "fib",
+            &[Value::from_i64(10)],
+            SubmitOpts {
+                deadline,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    }
+    eng.run_to_idle().unwrap();
+    eng
+}
+
+/// Service rounds with tracing + metrics armed resolve byte-identically
+/// to unarmed rounds, and the metrics stream carries exactly one
+/// snapshot per round whose deltas sum back to the cumulative
+/// accounting.
+#[test]
+fn service_observability_is_transparent_and_snapshots_per_round() {
+    let mut armed = run_service(true, None, None);
+    let mut plain = run_service(false, None, None);
+    assert_eq!(armed.take_outcomes(), plain.take_outcomes());
+    assert!(plain.take_trace().is_none());
+    assert!(plain.take_metrics().is_empty());
+
+    let rounds = armed.rounds();
+    let acct = armed.accounting(0).clone();
+    let snaps = armed.take_metrics();
+    assert_eq!(snaps.len() as u64, rounds, "one snapshot per round");
+    for (i, s) in snaps.iter().enumerate() {
+        assert_eq!(s.round, i as u64);
+        assert_eq!(s.ended - s.started, s.cycles);
+        assert_eq!(s.tenants.len(), 1);
+        let j = s.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}') && !j.contains('\n'));
+        assert!(j.contains("\"name\":\"fib\""));
+    }
+    let sum = |f: fn(&gtap::obs::metrics::TenantRound) -> u64| -> u64 {
+        snaps.iter().map(|s| f(&s.tenants[0])).sum()
+    };
+    assert_eq!(sum(|t| t.completed), acct.jobs_completed);
+    assert_eq!(sum(|t| t.tasks_finished), acct.tasks_finished);
+    assert_eq!(sum(|t| t.spawns), acct.spawns);
+    assert_eq!(sum(|t| t.retried), 0);
+
+    let tr = armed.take_trace().expect("tracing was armed");
+    assert!(
+        tr.events()
+            .iter()
+            .any(|e| matches!(e, TraceEvent::Service { kind: "admit", .. })),
+        "service trace carries admission events"
+    );
+}
+
+/// The resilience taxonomy (retries, failures, quarantine) flows into
+/// the snapshots: a sub-startup deadline evicts every attempt with zero
+/// progress, so retry-on ends in quarantine and the per-round deltas
+/// still sum to the accounting.
+#[test]
+fn service_snapshots_carry_resilience_taxonomy() {
+    let resil = ResilienceConfig {
+        retry: true,
+        ..Default::default()
+    };
+    let mut armed = run_service(true, Some(resil), Some(0));
+    let mut plain = run_service(false, Some(resil), Some(0));
+    assert_eq!(armed.take_outcomes(), plain.take_outcomes());
+
+    let acct = armed.accounting(0).clone();
+    let snaps = armed.take_metrics();
+    assert!(!snaps.is_empty());
+    let sum = |f: fn(&gtap::obs::metrics::TenantRound) -> u64| -> u64 {
+        snaps.iter().map(|s| f(&s.tenants[0])).sum()
+    };
+    assert_eq!(sum(|t| t.retried), acct.jobs_retried);
+    // Quarantine sweeps can resolve pending jobs between rounds (and in
+    // run_to_idle's final sweep), outside any snapshot — so failures are
+    // bounded by, not equal to, the cumulative accounting.
+    assert!(sum(|t| t.failed) <= acct.jobs_failed);
+    assert_eq!(sum(|t| t.evicted), acct.jobs_evicted);
+    assert!(acct.jobs_retried > 0, "deadline evictions must retry");
+    assert!(
+        snaps.last().unwrap().tenants[0].quarantined,
+        "zero-progress deterministic failures open the breaker"
+    );
+    let tr = armed.take_trace().expect("tracing was armed");
+    let kinds: Vec<&str> = tr
+        .events()
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::Service { kind, .. } => Some(*kind),
+            _ => None,
+        })
+        .collect();
+    assert!(kinds.contains(&"retry"), "retry events traced: {kinds:?}");
+    assert!(
+        kinds.contains(&"quarantine"),
+        "quarantine event traced: {kinds:?}"
+    );
+}

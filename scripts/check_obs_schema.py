@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""Schema checks for the observability exporters (CI `observability` job).
+
+Usage:
+    check_obs_schema.py trace <out.json>      # Chrome trace-event file
+    check_obs_schema.py metrics <out.jsonl>   # service metrics JSONL
+
+Validates structure only — stdlib json, no dependencies. Exit code is
+the check.
+"""
+import json
+import sys
+
+TRACE_PHASES = {"B", "E", "i", "C", "M"}
+SNAPSHOT_KEYS = {
+    "round",
+    "started",
+    "ended",
+    "cycles",
+    "admitted",
+    "pending_after",
+    "backpressure_events",
+    "tenants",
+}
+TENANT_KEYS = {
+    "tenant",
+    "name",
+    "admitted",
+    "completed",
+    "evicted",
+    "failed",
+    "shed",
+    "cancelled",
+    "retried",
+    "tasks_finished",
+    "spawns",
+    "segments",
+    "tasks_reexecuted",
+    "checkpoint_restores",
+    "backing_off",
+    "quarantined",
+}
+
+
+def fail(msg):
+    print(f"check_obs_schema: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_trace(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        fail("not a Chrome trace-event object")
+    if doc.get("otherData", {}).get("clock") != "simulated-cycles":
+        fail("otherData.clock must be 'simulated-cycles'")
+    events = doc["traceEvents"]
+    if not events:
+        fail("empty traceEvents")
+    last_ts = {}
+    depth = {}
+    for i, e in enumerate(events):
+        for key in ("name", "ph", "pid", "tid", "ts", "args"):
+            if key not in e:
+                fail(f"event {i} missing {key!r}: {e}")
+        if e["ph"] not in TRACE_PHASES:
+            fail(f"event {i} has unknown phase {e['ph']!r}")
+        tid = e["tid"]
+        if e["ts"] < last_ts.get(tid, 0):
+            fail(f"track {tid} timestamps go backwards at event {i}")
+        last_ts[tid] = e["ts"]
+        if e["ph"] == "B":
+            depth[tid] = depth.get(tid, 0) + 1
+        elif e["ph"] == "E":
+            depth[tid] = depth.get(tid, 0) - 1
+            if depth[tid] < 0:
+                fail(f"track {tid} has E without B at event {i}")
+    open_tracks = {t: d for t, d in depth.items() if d != 0}
+    if open_tracks:
+        fail(f"unbalanced B/E pairs: {open_tracks}")
+    names = {e["name"] for e in events}
+    if "segment" not in names:
+        fail("no 'segment' slices recorded")
+    print(
+        f"check_obs_schema: trace OK — {len(events)} events on "
+        f"{len(last_ts)} tracks, {sorted(names)[:8]}..."
+    )
+
+
+def check_metrics(path):
+    with open(path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    if not lines:
+        fail("empty metrics file")
+    for i, ln in enumerate(lines):
+        snap = json.loads(ln)
+        missing = SNAPSHOT_KEYS - snap.keys()
+        if missing:
+            fail(f"snapshot {i} missing keys {sorted(missing)}")
+        if snap["round"] != i:
+            fail(f"snapshot {i} has round {snap['round']} (rounds must be dense)")
+        if snap["ended"] - snap["started"] != snap["cycles"]:
+            fail(f"snapshot {i}: ended - started != cycles")
+        if not snap["tenants"]:
+            fail(f"snapshot {i} has no tenant rounds")
+        for t in snap["tenants"]:
+            missing = TENANT_KEYS - t.keys()
+            if missing:
+                fail(f"snapshot {i} tenant {t.get('tenant')} missing {sorted(missing)}")
+            if not isinstance(t["quarantined"], bool) or not isinstance(t["admitted"], bool):
+                fail(f"snapshot {i} tenant {t.get('tenant')}: admitted/quarantined must be booleans")
+    tenants = {t["name"] for ln in lines for t in json.loads(ln)["tenants"]}
+    print(f"check_obs_schema: metrics OK — {len(lines)} round snapshot(s), tenants {sorted(tenants)}")
+
+
+def main():
+    if len(sys.argv) != 3 or sys.argv[1] not in ("trace", "metrics"):
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    if sys.argv[1] == "trace":
+        check_trace(sys.argv[2])
+    else:
+        check_metrics(sys.argv[2])
+
+
+if __name__ == "__main__":
+    main()
